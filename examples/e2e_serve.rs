@@ -1,0 +1,89 @@
+//! End-to-end driver: the full three-layer system on a real workload.
+//!
+//! Starts the coordinator service, registers a lung2-like matrix (the
+//! preprocessing pipeline transforms it and — when `artifacts/` is built —
+//! fits it to an AOT XLA executable), then fires a batch-heavy solve
+//! workload through the request loop and reports latency/throughput and
+//! correctness. This proves all layers compose: rust service -> batcher ->
+//! PJRT executable (JAX/Pallas-lowered HLO) -> residual validation.
+//!
+//!     make artifacts && cargo run --release --example e2e_serve
+//!
+//! Falls back to the native backend (with a note) if artifacts are absent.
+
+use sptrsv_gt::config::Config;
+use sptrsv_gt::coordinator::Service;
+use sptrsv_gt::sparse::generate::{self, GenOptions};
+use sptrsv_gt::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256);
+
+    let cfg = Config {
+        workers: 4,
+        strategy: "avgcost".into(),
+        use_xla: true, // falls back with a warning when artifacts are absent
+        batch_size: 8,
+        batch_deadline_us: 1000,
+        ..Default::default()
+    };
+    println!(
+        "coordinator: workers={} strategy={} batch={} deadline={}us",
+        cfg.workers, cfg.strategy, cfg.batch_size, cfg.batch_deadline_us
+    );
+    let svc = Service::start(cfg);
+    let h = svc.handle();
+
+    // Register both evaluation matrices; the service preprocesses them.
+    let lung = generate::lung2_like(&GenOptions::with_scale(0.02));
+    let torso = generate::torso2_like(&GenOptions::with_scale(0.01));
+    for (id, m) in [("lung2", &lung), ("torso2", &torso)] {
+        let info = h.register(id, m.clone(), None)?;
+        println!(
+            "registered {id}: {} rows, levels {} -> {}, {} rewritten, backend={}, prepare={:.1}ms",
+            m.nrows,
+            info.levels_before,
+            info.levels_after,
+            info.rows_rewritten,
+            info.backend,
+            info.prepare_ms
+        );
+    }
+
+    // Fire a mixed async workload (what the batcher exists for).
+    let mut rng = Rng::new(0xE2E);
+    let start = std::time::Instant::now();
+    let mut inflight = Vec::new();
+    for i in 0..requests {
+        let (id, m) = if i % 3 == 0 {
+            ("torso2", &torso)
+        } else {
+            ("lung2", &lung)
+        };
+        let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let rx = h.solve_async(id, b.clone())?;
+        inflight.push((id, b, rx));
+    }
+    let mut worst = 0.0f64;
+    for (id, b, rx) in inflight {
+        let x = rx.recv()?.map_err(anyhow::Error::msg)?;
+        let m = if id == "lung2" { &lung } else { &torso };
+        worst = worst.max(m.residual_inf(&x, &b));
+    }
+    let dt = start.elapsed();
+
+    println!(
+        "\n{requests} solves in {:?}: {:.1} solves/s, worst residual {:.3e}",
+        dt,
+        requests as f64 / dt.as_secs_f64(),
+        worst
+    );
+    println!("metrics: {}", h.metrics()?);
+    anyhow::ensure!(worst < 1e-8, "residual too large");
+    println!("e2e OK");
+    svc.shutdown();
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Regenerate Figs. 5 and 6: per-level cost series for the three
+//! strategies, as CSV plus terminal sparklines.
+//!
+//!     cargo run --release --example figures [scale] [out_dir]
+
+use sptrsv_gt::report::figures;
+use sptrsv_gt::sparse::generate::{self, GenOptions};
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let dir = std::env::args()
+        .nth(2)
+        .unwrap_or_else(|| "target/figures".to_string());
+    std::fs::create_dir_all(&dir)?;
+    let opts = GenOptions::with_scale(scale);
+
+    // Fig 5: lung2, log-scale y (the paper plots cost per level in log).
+    // Fig 6: torso2, linear y clipped at 8000 with the max annotated.
+    for (fig, name, m, log, clip) in [
+        (
+            "fig5",
+            "lung2-like",
+            generate::lung2_like(&opts),
+            true,
+            None,
+        ),
+        (
+            "fig6",
+            "torso2-like",
+            generate::torso2_like(&opts),
+            false,
+            Some(8000u64),
+        ),
+    ] {
+        let ss = figures::series(&m);
+        let path = format!("{dir}/{fig}_{name}.csv");
+        std::fs::write(&path, figures::to_csv(&ss))?;
+        println!("\n{fig} ({name}, scale {scale}) -> {path}");
+        for s in &ss {
+            println!(
+                "  {:<14} levels={:<5} avgLevelCost={:<12.2} max={}",
+                s.strategy,
+                s.level_costs.len(),
+                s.avg_level_cost,
+                s.max_level_cost
+            );
+            println!("    {}", figures::sparkline(&s.level_costs, 100, log, clip));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Reproduce the paper's Table I on the lung2/torso2 structural analogs.
+//!
+//!     cargo run --release --example reproduce_table1 [scale]
+//!
+//! scale defaults to 1.0 = paper-sized matrices (109k / 116k rows). The
+//! published values are printed alongside for shape comparison; see
+//! EXPERIMENTS.md for the recorded run.
+
+use sptrsv_gt::report::table1;
+use sptrsv_gt::sparse::generate::{self, GenOptions};
+
+fn main() {
+    let scale: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let opts = GenOptions::with_scale(scale);
+    for (name, m, paper) in [
+        (
+            "lung2-like",
+            generate::lung2_like(&opts),
+            &table1::PAPER_LUNG2,
+        ),
+        (
+            "torso2-like",
+            generate::torso2_like(&opts),
+            &table1::PAPER_TORSO2,
+        ),
+    ] {
+        println!(
+            "\n== {name} (scale {scale}): {} rows, {} nnz ==",
+            m.nrows,
+            m.nnz()
+        );
+        let start = std::time::Instant::now();
+        let cells = table1::run_matrix(&m, true);
+        print!("{}", table1::render(name, &cells, paper));
+        println!("(computed in {:?})", start.elapsed());
+    }
+}

@@ -1,0 +1,50 @@
+//! The §IV numerical-stability observation, quantified: sweep the
+//! rewriting distance on an ill-scaled matrix (diagonals spanning
+//! 1e-8..1e2, like lung2's raw values in Fig. 3) and measure how the
+//! folded-constant magnitude and the forward error grow.
+//!
+//!     cargo run --release --example stability_sweep
+
+use sptrsv_gt::solver::validate;
+use sptrsv_gt::sparse::generate::{self, GenOptions};
+use sptrsv_gt::transform::Strategy;
+use sptrsv_gt::util::rng::Rng;
+use sptrsv_gt::util::timer::Table;
+
+fn main() {
+    let opts = GenOptions {
+        ill_scaled: true,
+        scale: 1.0,
+        seed: 7,
+    };
+    let m = generate::tridiagonal(2000, &opts);
+    let mut rng = Rng::new(1);
+    let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
+
+    let mut t = Table::new(&[
+        "rewriting distance",
+        "levels after",
+        "max |folded const|",
+        "forward error",
+        "residual_inf",
+    ]);
+    for d in [2usize, 3, 5, 10, 20, 50, 100, 400] {
+        let strat = Strategy::parse(&format!("manual:{d}")).unwrap();
+        let tr = strat.apply(&m);
+        let q = validate::assess(&m, &tr, &b);
+        t.row(&[
+            d.to_string(),
+            tr.num_levels().to_string(),
+            format!("{:.3e}", q.max_bcoeff_magnitude),
+            format!("{:.3e}", q.forward_error),
+            format!("{:.3e}", q.residual_inf),
+        ]);
+    }
+    println!("ill-scaled tridiagonal, n = {}:", m.nrows);
+    print!("{}", t.render());
+    println!(
+        "\nPaper §IV: \"the rewriting distance should be kept small enough so\n\
+         that it does not cause wrong calculations\" — the growth above is\n\
+         that effect, reproduced and measured."
+    );
+}

@@ -1,0 +1,183 @@
+"""AOT compile path: lower the L2 model to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly.
+(See /opt/xla-example/load_hlo/ and gen_hlo.py there.)
+
+Exports a registry grid of statically-shaped executables plus a
+``manifest.json`` the Rust runtime uses to pick the smallest fitting shape:
+
+  step_*   — one level (Rust owns the level loop / barriers)
+  solve_*  — full solve as a scan over levels
+  batch_*  — full solve over B right-hand sides
+  resid_*  — ||Lx - b||_inf validation graph
+
+Run once by ``make artifacts``; never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model  # noqa: E402
+
+F64 = jnp.float64
+I32 = jnp.int32
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Shape registry. Small grid: artifacts must cover (a) the fat-level shapes a
+# transformed matrix produces, (b) the thin-chain shapes of untransformed
+# graphs, (c) a batched-RHS variant for the coordinator's batcher. The Rust
+# runtime falls back to the native solver when nothing fits.
+# ---------------------------------------------------------------------------
+
+STEP_SHAPES = [  # (R, K, N)
+    (8, 2, 8192),
+    (128, 4, 8192),
+    (4096, 4, 8192),
+]
+SOLVE_SHAPES = [  # (L, R, K, N)
+    # Transformed systems: few levels, very wide fat levels.
+    (4, 2560, 2, 4096),
+    (16, 4096, 4, 8192),
+    (16, 4096, 4, 16384),
+    (64, 512, 4, 8192),
+    # Untransformed thin chains (e.g. tridiagonal, lung2 tail).
+    (512, 8, 2, 8192),
+]
+BATCH_SHAPES = [  # (B, L, R, K, N)
+    (8, 4, 2560, 2, 4096),
+    (8, 16, 4096, 4, 8192),
+]
+
+
+def lower_step(r, k, n):
+    fn = lambda x, rows, vals, cols, b_ext, inv_diag: model.level_step_fn(
+        x, rows, vals, cols, b_ext, inv_diag
+    )
+    return jax.jit(fn).lower(
+        spec((n + 1,), F64),      # x
+        spec((r,), I32),          # rows
+        spec((r, k), F64),        # vals
+        spec((r, k), I32),        # cols
+        spec((n + 1,), F64),      # b_ext
+        spec((r,), F64),          # inv_diag
+    )
+
+
+def lower_solve(l, r, k, n):
+    fn = lambda rows, vals, cols, inv_diag, b: model.solve_fn(
+        rows, vals, cols, inv_diag, b
+    )
+    return jax.jit(fn).lower(
+        spec((l, r), I32),
+        spec((l, r, k), F64),
+        spec((l, r, k), I32),
+        spec((l, r), F64),
+        spec((n,), F64),
+    )
+
+
+def lower_batch(bsz, l, r, k, n):
+    fn = lambda rows, vals, cols, inv_diag, b: model.solve_batched_fn(
+        rows, vals, cols, inv_diag, b
+    )
+    return jax.jit(fn).lower(
+        spec((l, r), I32),
+        spec((l, r, k), F64),
+        spec((l, r, k), I32),
+        spec((l, r), F64),
+        spec((bsz, n), F64),
+    )
+
+
+def lower_resid(l, r, k, n):
+    fn = lambda rows, vals, cols, inv_diag, b, x: model.residual_fn(
+        rows, vals, cols, inv_diag, b, x
+    )
+    return jax.jit(fn).lower(
+        spec((l, r), I32),
+        spec((l, r, k), F64),
+        spec((l, r, k), I32),
+        spec((l, r), F64),
+        spec((n,), F64),
+        spec((n,), F64),
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="primary artifact path (Makefile stamp); its "
+                         "directory receives the whole registry")
+    args = ap.parse_args()
+    outdir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(outdir, exist_ok=True)
+
+    manifest = []
+
+    def emit(name, lowered, **meta):
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        manifest.append({"name": name, "file": fname, **meta})
+        print(f"  {fname}: {len(text)} chars")
+
+    for r, k, n in STEP_SHAPES:
+        emit(f"step_r{r}_k{k}_n{n}", lower_step(r, k, n),
+             entry="level_step", r=r, k=k, n=n)
+
+    for l, r, k, n in SOLVE_SHAPES:
+        emit(f"solve_l{l}_r{r}_k{k}_n{n}", lower_solve(l, r, k, n),
+             entry="solve", l=l, r=r, k=k, n=n)
+
+    for bsz, l, r, k, n in BATCH_SHAPES:
+        emit(f"batch_b{bsz}_l{l}_r{r}_k{k}_n{n}", lower_batch(bsz, l, r, k, n),
+             entry="solve_batched", b=bsz, l=l, r=r, k=k, n=n)
+
+    l, r, k, n = SOLVE_SHAPES[0]
+    emit(f"resid_l{l}_r{r}_k{k}_n{n}", lower_resid(l, r, k, n),
+         entry="residual", l=l, r=r, k=k, n=n)
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+    # Makefile stamp: --out names the primary artifact; make it the first
+    # solve executable so `make artifacts` dependency tracking works.
+    primary = os.path.join(outdir, f"solve_l{l}_r{r}_k{k}_n{n}.hlo.txt")
+    if os.path.abspath(args.out) != primary:
+        with open(primary) as src, open(args.out, "w") as dst:
+            dst.write(src.read())
+    print(f"wrote {len(manifest)} artifacts + manifest.json to {outdir}")
+
+
+if __name__ == "__main__":
+    main()

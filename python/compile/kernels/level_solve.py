@@ -1,0 +1,116 @@
+"""L1 — Pallas kernel: solve one level-set level of SpTRSV on a padded block.
+
+The level-set method computes, for every row ``i`` in a level,
+
+    x[i] = (b[i] - sum_j L[i][j] * x[j]) / L[i][i]        (j < i, j solved)
+
+Rows within a level are independent, so a level is a pure data-parallel
+gather + fused-multiply-accumulate + scale. The coordinator (Rust, L3) owns
+the level loop and the barriers; this kernel is the per-level hot spot.
+
+Padded representation (built by the Rust preprocessing pipeline):
+  vals     (R, K) f64 — off-diagonal coefficients, 0.0 on padding slots
+  cols     (R, K) i32 — column index of each coefficient, 0 on padding
+                        (harmless: the matching ``vals`` entry is 0)
+  b_lvl    (R,)   f64 — right-hand side gathered for the level's rows,
+                        0.0 on padded rows
+  inv_diag (R,)   f64 — 1 / L[i][i] per row, 0.0 on padded rows
+  x        (N1,)  f64 — current solution vector (N real slots + 1 dummy
+                        slot at index N that padded rows scatter into)
+
+Output:
+  x_lvl    (R,)   f64 — solved values for the level's rows (garbage 0.0 on
+                        padding, which the caller scatters into the dummy)
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): a level is memory-bound
+gather+FMA, not a matmul — it targets the VPU, not the MXU. BlockSpec tiles
+the R rows into VMEM-resident blocks of ``block_r`` rows while the gather
+source ``x`` stays in ANY/HBM memory space; K is kept whole per block (K is
+small: the padded indegree). On CPU we run interpret=True (the CPU PJRT
+plugin cannot execute Mosaic custom-calls); the structure is what carries
+to real hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_R = 128
+
+
+def _level_kernel(x_ref, vals_ref, cols_ref, b_ref, inv_diag_ref, o_ref):
+    """One grid step: solve ``block_r`` rows of the level.
+
+    x_ref is the full solution vector (not blocked): the gather indices are
+    data-dependent, so every block may touch any prefix of x.
+    """
+    vals = vals_ref[...]                      # (block_r, K)
+    cols = cols_ref[...]                      # (block_r, K)
+    gathered = x_ref[cols]                    # (block_r, K) gather from x
+    partial = jnp.sum(vals * gathered, axis=1)  # (block_r,)
+    o_ref[...] = (b_ref[...] - partial) * inv_diag_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def level_solve(
+    x: jax.Array,
+    vals: jax.Array,
+    cols: jax.Array,
+    b_lvl: jax.Array,
+    inv_diag: jax.Array,
+    *,
+    block_r: int = DEFAULT_BLOCK_R,
+    interpret: bool = True,
+) -> jax.Array:
+    """Solve one padded level; returns x_lvl of shape (R,).
+
+    R must be a multiple of ``block_r`` (the Rust side pads to the shape
+    registry's block shapes, so this holds by construction).
+    """
+    r, k = vals.shape
+    if r % block_r:
+        raise ValueError(f"R={r} not a multiple of block_r={block_r}")
+    grid = (r // block_r,)
+    return pl.pallas_call(
+        _level_kernel,
+        grid=grid,
+        in_specs=[
+            # x: full vector visible to every block (gather is data-dependent).
+            pl.BlockSpec(x.shape, lambda i: (0,)),
+            pl.BlockSpec((block_r, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_r,), lambda i: (i,)),
+            pl.BlockSpec((block_r,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_r,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r,), x.dtype),
+        interpret=interpret,
+    )(x, vals, cols, b_lvl, inv_diag)
+
+
+def level_step(
+    x: jax.Array,
+    rows: jax.Array,
+    vals: jax.Array,
+    cols: jax.Array,
+    b_ext: jax.Array,
+    inv_diag: jax.Array,
+    *,
+    block_r: int = DEFAULT_BLOCK_R,
+    interpret: bool = True,
+) -> jax.Array:
+    """Solve one level and scatter the result back into x.
+
+    rows  (R,) i32 — row index per slot, N (the dummy) on padding
+    b_ext (N1,) f64 — b with the dummy slot appended
+    Returns the updated x (N1,).
+    """
+    b_lvl = b_ext[rows]
+    x_lvl = level_solve(
+        x, vals, cols, b_lvl, inv_diag, block_r=block_r, interpret=interpret
+    )
+    return x.at[rows].set(x_lvl)

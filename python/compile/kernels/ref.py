@@ -1,0 +1,133 @@
+"""Pure-jnp / numpy oracles for the Pallas kernels and the padded solve.
+
+These are the CORE correctness signal: every kernel and the full scan model
+are asserted allclose against these references in python/tests/.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def level_solve_ref(x, vals, cols, b_lvl, inv_diag):
+    """Reference for kernels.level_solve: one padded level, pure jnp."""
+    gathered = x[cols]                          # (R, K)
+    partial = jnp.sum(vals * gathered, axis=1)  # (R,)
+    return (b_lvl - partial) * inv_diag
+
+
+def level_step_ref(x, rows, vals, cols, b_ext, inv_diag):
+    """Reference for kernels.level_step."""
+    x_lvl = level_solve_ref(x, vals, cols, b_ext[rows], inv_diag)
+    return x.at[rows].set(x_lvl)
+
+
+def solve_padded_ref(rows, vals, cols, inv_diag, b):
+    """Reference full solve over padded levels, pure jnp scan.
+
+    rows (L,R) i32, vals/cols (L,R,K), inv_diag (L,R), b (N,) -> x (N,)
+    Padded rows index the dummy slot N.
+    """
+    n = b.shape[0]
+    b_ext = jnp.concatenate([b, jnp.zeros((1,), b.dtype)])
+    x0 = jnp.zeros((n + 1,), b.dtype)
+
+    def body(x, lvl):
+        r, v, c, d = lvl
+        x = level_step_ref(x, r, v, c, b_ext, d)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x0, (rows, vals, cols, inv_diag))
+    return x[:n]
+
+
+def sptrsv_csr_ref(indptr, indices, data, b):
+    """Serial CSR forward substitution (Algorithm 1 of the paper), numpy.
+
+    The ground-truth solver for building test cases: no padding, no levels.
+    Assumes each row's last stored nonzero is the diagonal (sorted CSR of a
+    lower-triangular matrix with full diagonal).
+    """
+    n = len(indptr) - 1
+    x = np.zeros(n, dtype=np.float64)
+    for i in range(n):
+        s = 0.0
+        lo, hi = indptr[i], indptr[i + 1]
+        for j in range(lo, hi - 1):
+            s += data[j] * x[indices[j]]
+        x[i] = (b[i] - s) / data[hi - 1]
+    return x
+
+
+def build_padded_levels(indptr, indices, data, levels, pad_r, pad_k, pad_l=None):
+    """Build the padded-level representation from CSR + a level partition.
+
+    Mirrors what the Rust preprocessing pipeline produces; used by tests to
+    cross-check the python model against the serial reference.
+
+    levels: list of lists of row ids (topological level sets).
+    Returns dict of numpy arrays: rows (L,R), vals (L,R,K), cols (L,R,K),
+    inv_diag (L,R).
+    """
+    n = len(indptr) - 1
+    nlev = len(levels) if pad_l is None else pad_l
+    if pad_l is not None and len(levels) > pad_l:
+        raise ValueError(f"{len(levels)} levels exceed pad_l={pad_l}")
+    rows = np.full((nlev, pad_r), n, dtype=np.int32)
+    vals = np.zeros((nlev, pad_r, pad_k), dtype=np.float64)
+    cols = np.zeros((nlev, pad_r, pad_k), dtype=np.int32)
+    inv_diag = np.zeros((nlev, pad_r), dtype=np.float64)
+    for li, lev in enumerate(levels):
+        if len(lev) > pad_r:
+            raise ValueError(f"level {li} has {len(lev)} rows > pad_r={pad_r}")
+        for ri, i in enumerate(lev):
+            lo, hi = indptr[i], indptr[i + 1]
+            ndep = hi - 1 - lo
+            if ndep > pad_k:
+                raise ValueError(f"row {i} has {ndep} deps > pad_k={pad_k}")
+            rows[li, ri] = i
+            vals[li, ri, :ndep] = data[lo : hi - 1]
+            cols[li, ri, :ndep] = indices[lo : hi - 1]
+            inv_diag[li, ri] = 1.0 / data[hi - 1]
+    return {"rows": rows, "vals": vals, "cols": cols, "inv_diag": inv_diag}
+
+
+def random_lower_csr(rng, n, max_deps=3, density=0.7):
+    """Random well-conditioned lower-triangular CSR for tests."""
+    indptr = [0]
+    indices = []
+    data = []
+    for i in range(n):
+        ndep = 0
+        if i > 0 and rng.random() < density:
+            ndep = int(rng.integers(1, min(max_deps, i) + 1))
+        deps = sorted(rng.choice(i, size=ndep, replace=False)) if ndep else []
+        for j in deps:
+            indices.append(int(j))
+            data.append(float(rng.uniform(-1.0, 1.0)))
+        # dominant diagonal keeps the solve well-conditioned
+        indices.append(i)
+        data.append(float(rng.uniform(1.0, 2.0) * (1 + ndep)))
+        indptr.append(len(indices))
+    return (
+        np.asarray(indptr, dtype=np.int64),
+        np.asarray(indices, dtype=np.int32),
+        np.asarray(data, dtype=np.float64),
+    )
+
+
+def level_sets(indptr, indices):
+    """Anderson–Saad level-set construction (reference implementation)."""
+    n = len(indptr) - 1
+    lvl = np.zeros(n, dtype=np.int64)
+    for i in range(n):
+        m = 0
+        for j in range(indptr[i], indptr[i + 1] - 1):
+            m = max(m, lvl[indices[j]] + 1)
+        lvl[i] = m
+    out = [[] for _ in range(int(lvl.max()) + 1 if n else 0)]
+    for i in range(n):
+        out[int(lvl[i])].append(i)
+    return out

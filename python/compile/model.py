@@ -1,0 +1,89 @@
+"""L2 — JAX compute graph: padded-level-set SpTRSV built on the L1 kernel.
+
+Three entry points, each AOT-lowered to HLO text by ``aot.py`` and executed
+from the Rust runtime (Python is never on the request path):
+
+  * ``level_step_fn``   — one level: gather + kernel + scatter. The Rust
+                          coordinator owns the level loop and barriers (that
+                          IS the level-set method) and calls this once per
+                          level.
+  * ``solve_fn``        — the whole solve as ``lax.scan`` over padded
+                          levels, for matrices that fit a registry shape.
+  * ``solve_batched_fn``— same, with B right-hand sides solved at once
+                          (what the coordinator's RHS batcher feeds).
+
+All shapes are static per artifact; the shape registry in aot.py exports a
+small grid of (L, R, K, N[, B]) configurations and the Rust side pads its
+transformed level structure to the smallest fitting one.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.level_solve import level_solve
+
+jax.config.update("jax_enable_x64", True)
+
+
+def level_step_fn(x, rows, vals, cols, b_ext, inv_diag, *, block_r=None):
+    """One level of the solve: returns updated x (shape (N+1,)).
+
+    x     (N+1,) f64   rows (R,) i32   vals/cols (R,K)   b_ext (N+1,) f64
+    inv_diag (R,) f64. Padded rows index the dummy slot N.
+    """
+    r = rows.shape[0]
+    block_r = block_r or min(r, 128)
+    b_lvl = b_ext[rows]
+    x_lvl = level_solve(x, vals, cols, b_lvl, inv_diag, block_r=block_r)
+    return (x.at[rows].set(x_lvl),)
+
+
+def solve_fn(rows, vals, cols, inv_diag, b, *, block_r=None):
+    """Full SpTRSV as a scan over padded levels.
+
+    rows (L,R) i32, vals/cols (L,R,K) f64/i32, inv_diag (L,R) f64, b (N,).
+    Returns (x,) with x (N,) f64.
+    """
+    n = b.shape[0]
+    r = rows.shape[1]
+    block = block_r or min(r, 128)
+    b_ext = jnp.concatenate([b, jnp.zeros((1,), b.dtype)])
+    x0 = jnp.zeros((n + 1,), b.dtype)
+
+    def body(x, lvl):
+        rw, v, c, d = lvl
+        b_lvl = b_ext[rw]
+        x_lvl = level_solve(x, v, c, b_lvl, d, block_r=block)
+        return x.at[rw].set(x_lvl), None
+
+    x, _ = jax.lax.scan(body, x0, (rows, vals, cols, inv_diag))
+    return (x[:n],)
+
+
+def solve_batched_fn(rows, vals, cols, inv_diag, b, *, block_r=None):
+    """Batched-RHS SpTRSV: b (B, N) -> x (B, N).
+
+    The level structure is shared across the batch, so the solve is vmapped
+    over the RHS axis only — the gather indices are broadcast.
+    """
+    solve = lambda b1: solve_fn(rows, vals, cols, inv_diag, b1, block_r=block_r)[0]
+    return (jax.vmap(solve)(b),)
+
+
+def residual_fn(rows, vals, cols, inv_diag, b, x):
+    """||Lx - b||_inf over the padded representation (validation graph).
+
+    Computes, per real row, diag*x[i] + sum vals*x[cols] - b[i]; padded rows
+    (marked by inv_diag == 0) contribute 0.
+    """
+    x_ext = jnp.concatenate([x, jnp.zeros((1,), x.dtype)])
+    b_ext = jnp.concatenate([b, jnp.zeros((1,), b.dtype)])
+    gathered = x_ext[cols]                                # (L,R,K)
+    partial = jnp.sum(vals * gathered, axis=2)            # (L,R)
+    real = inv_diag != 0.0
+    diag = jnp.where(real, 1.0 / jnp.where(real, inv_diag, 1.0), 0.0)
+    lhs = diag * x_ext[rows] + partial                    # (L,R)
+    err = jnp.where(real, lhs - b_ext[rows], 0.0)
+    return (jnp.max(jnp.abs(err)),)

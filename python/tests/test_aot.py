@@ -1,0 +1,54 @@
+"""AOT path: lowering to HLO text must succeed for every registry shape
+and produce parseable artifacts + a consistent manifest."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+PYDIR = os.path.join(REPO, "python")
+
+
+def test_lowering_each_entry_kind():
+    sys.path.insert(0, PYDIR)
+    from compile import aot
+
+    for fn, label in [
+        (lambda: aot.lower_step(8, 2, 64), "step"),
+        (lambda: aot.lower_solve(4, 8, 2, 64), "solve"),
+        (lambda: aot.lower_batch(2, 4, 8, 2, 64), "batch"),
+        (lambda: aot.lower_resid(4, 8, 2, 64), "resid"),
+    ]:
+        text = aot.to_hlo_text(fn())
+        assert text.startswith("HloModule"), f"{label}: {text[:40]!r}"
+        assert "ENTRY" in text
+
+
+@pytest.mark.slow
+def test_aot_main_writes_manifest(tmp_path):
+    out = tmp_path / "model.hlo.txt"
+    env = dict(os.environ)
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out)],
+        cwd=PYDIR,
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert r.returncode == 0, r.stderr
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert len(manifest) >= 5
+    names = set()
+    for entry in manifest:
+        assert entry["entry"] in {"level_step", "solve", "solve_batched", "residual"}
+        p = tmp_path / entry["file"]
+        assert p.exists(), entry["file"]
+        head = p.read_text()[:64]
+        assert head.startswith("HloModule")
+        assert entry["name"] not in names
+        names.add(entry["name"])
+    assert out.exists()

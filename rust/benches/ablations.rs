@@ -1,0 +1,128 @@
+//! Bench: ablations over the design choices DESIGN.md calls out.
+//!
+//! 1. fixed vs updated avgLevelCost (the paper keeps it fixed — §III);
+//! 2. the §III.A row constraints: indegree < α, critical-path-only,
+//!    dependency span < β, rewriting-distance cap;
+//! 3. manual distance sweep (the grouping granularity of [12]).
+
+use sptrsv_gt::sparse::generate::{self, GenOptions};
+use sptrsv_gt::transform::avg_cost::{self, AvgCostOptions};
+use sptrsv_gt::transform::manual::{self, ManualOptions};
+use sptrsv_gt::transform::row_strategies::RowConstraints;
+use sptrsv_gt::util::timer::Table;
+
+fn row(
+    t: &mut Table,
+    name: &str,
+    tr: &sptrsv_gt::transform::TransformResult,
+    ms: f64,
+) {
+    t.row(&[
+        name.to_string(),
+        format!("{} -> {}", tr.stats.levels_before, tr.stats.levels_after),
+        format!("{:.1}%", tr.stats.levels_reduction_pct()),
+        format!("{:+.2}%", tr.stats.total_cost_change_pct()),
+        format!("{} ({:.1}%)", tr.stats.rows_rewritten, tr.stats.rows_rewritten_pct()),
+        format!("{}", tr.stats.substitutions_total),
+        format!("{ms:.1}"),
+    ]);
+}
+
+fn main() {
+    let scale: f64 = std::env::var("SPTRSV_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.1);
+    let opts = GenOptions::with_scale(scale);
+
+    for (name, m) in [
+        ("lung2-like", generate::lung2_like(&opts)),
+        ("torso2-like", generate::torso2_like(&opts)),
+    ] {
+        println!(
+            "== ablations on {name} (scale {scale}): {} rows ==",
+            m.nrows
+        );
+        let mut table = Table::new(&[
+            "variant",
+            "levels",
+            "reduction",
+            "total cost",
+            "rows rewritten",
+            "substitutions",
+            "time (ms)",
+        ]);
+
+        let mut run_avg = |label: &str, o: AvgCostOptions| {
+            let start = std::time::Instant::now();
+            let t = avg_cost::apply(&m, &o);
+            let ms = start.elapsed().as_secs_f64() * 1e3;
+            t.validate(&m).unwrap();
+            row(&mut table, label, &t, ms);
+        };
+
+        run_avg("avgcost (paper: fixed avg)", AvgCostOptions::default());
+        run_avg(
+            "avgcost + updated avg",
+            AvgCostOptions {
+                update_avg: true,
+                ..Default::default()
+            },
+        );
+        for alpha in [2usize, 4, 8] {
+            run_avg(
+                &format!("avgcost + indegree<{alpha}"),
+                AvgCostOptions {
+                    constraints: RowConstraints {
+                        max_indegree: Some(alpha),
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                },
+            );
+        }
+        run_avg(
+            "avgcost + critical-path-only",
+            AvgCostOptions {
+                constraints: RowConstraints {
+                    critical_path_only: true,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        for beta in [64u32, 1024] {
+            run_avg(
+                &format!("avgcost + dep-span<{beta}"),
+                AvgCostOptions {
+                    constraints: RowConstraints {
+                        max_dep_span: Some(beta),
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                },
+            );
+        }
+        for dmax in [5u32, 20] {
+            run_avg(
+                &format!("avgcost + distance<={dmax}"),
+                AvgCostOptions {
+                    constraints: RowConstraints {
+                        max_distance: Some(dmax),
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                },
+            );
+        }
+        for d in [5usize, 10, 20] {
+            let start = std::time::Instant::now();
+            let t = manual::apply(&m, &ManualOptions { distance: d });
+            let ms = start.elapsed().as_secs_f64() * 1e3;
+            t.validate(&m).unwrap();
+            row(&mut table, &format!("manual distance={d}"), &t, ms);
+        }
+        print!("{}", table.render());
+        println!();
+    }
+}

@@ -1,0 +1,49 @@
+//! Bench: regenerate the Fig 5 / Fig 6 per-level cost series and write
+//! the CSVs; times the series computation per strategy.
+//!
+//!     cargo bench --bench figures
+//!     SPTRSV_BENCH_SCALE=1.0 cargo bench --bench figures
+
+use sptrsv_gt::report::figures;
+use sptrsv_gt::sparse::generate::{self, GenOptions};
+use sptrsv_gt::util::timer::bench;
+
+fn main() {
+    let scale: f64 = std::env::var("SPTRSV_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.25);
+    let opts = GenOptions::with_scale(scale);
+    std::fs::create_dir_all("target/figures").ok();
+    println!("== figures bench (scale {scale}) ==\n");
+    for (fig, name, m, log, clip) in [
+        ("fig5", "lung2-like", generate::lung2_like(&opts), true, None),
+        (
+            "fig6",
+            "torso2-like",
+            generate::torso2_like(&opts),
+            false,
+            Some(8000u64),
+        ),
+    ] {
+        let mm = m.clone();
+        bench(&format!("{fig}/{name}/series"), move || {
+            std::hint::black_box(figures::series(&mm).len());
+        });
+        let ss = figures::series(&m);
+        let path = format!("target/figures/{fig}_{name}.csv");
+        std::fs::write(&path, figures::to_csv(&ss)).unwrap();
+        println!("\n{fig} ({name}) -> {path}");
+        for s in &ss {
+            println!(
+                "  {:<14} levels={:<5} avg={:<12.2} max={:<8} {}",
+                s.strategy,
+                s.level_costs.len(),
+                s.avg_level_cost,
+                s.max_level_cost,
+                figures::sparkline(&s.level_costs, 72, log, clip)
+            );
+        }
+        println!();
+    }
+}

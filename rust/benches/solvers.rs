@@ -1,0 +1,101 @@
+//! Bench: solver backends on both evaluation matrices, before and after
+//! transformation — the runtime consequence of the barrier reduction the
+//! paper's metrics predict (the paper itself reports no runtimes; this is
+//! the extra validation layer, see EXPERIMENTS.md).
+//!
+//! Backends: serial (Algorithm 1), level-set (barriers), sync-free
+//! (atomic counters), transformed executor (none/avgcost/manual), and the
+//! XLA solve when artifacts fit.
+
+use std::sync::Arc;
+
+use sptrsv_gt::runtime::{PaddedSystem, Registry, XlaSolver};
+use sptrsv_gt::solver::executor::TransformedSolver;
+use sptrsv_gt::solver::levelset::LevelSetSolver;
+use sptrsv_gt::solver::syncfree::SyncFreeSolver;
+use sptrsv_gt::sparse::generate::{self, GenOptions};
+use sptrsv_gt::transform::Strategy;
+use sptrsv_gt::util::rng::Rng;
+use sptrsv_gt::util::timer::bench;
+
+fn main() {
+    let scale: f64 = std::env::var("SPTRSV_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.1);
+    let workers: usize = std::env::var("SPTRSV_BENCH_WORKERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let opts = GenOptions::with_scale(scale);
+    let registry = Registry::load(std::path::Path::new("artifacts"))
+        .ok()
+        .map(Arc::new);
+
+    println!("== solvers bench (scale {scale}, {workers} workers) ==\n");
+    for (name, m) in [
+        ("lung2-like", generate::lung2_like(&opts)),
+        ("torso2-like", generate::torso2_like(&opts)),
+    ] {
+        let n = m.nrows;
+        let mut rng = Rng::new(13);
+        let b: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        println!("-- {name}: {} rows, {} nnz --", n, m.nnz());
+
+        {
+            let (m, b) = (m.clone(), b.clone());
+            let mut x = vec![0.0; n];
+            bench(&format!("{name}/serial"), move || {
+                sptrsv_gt::solver::serial::solve_into(&m, &b, &mut x);
+            });
+        }
+        {
+            let s = LevelSetSolver::from_matrix(m.clone(), workers);
+            let b = b.clone();
+            let mut x = vec![0.0; n];
+            println!("   (levelset barriers: {})", s.num_barriers());
+            bench(&format!("{name}/levelset"), move || {
+                s.solve_into(&b, &mut x);
+            });
+        }
+        {
+            // Busy-waiting threads beyond the physical cores livelock the
+            // scheduler; cap sync-free at the real parallelism (its whole
+            // premise is thousands of hardware threads — see paper §V).
+            let cores = std::thread::available_parallelism()
+                .map(|c| c.get())
+                .unwrap_or(1);
+            let s = SyncFreeSolver::from_matrix(m.clone(), workers.min(cores));
+            let b = b.clone();
+            let mut x = vec![0.0; n];
+            bench(&format!("{name}/syncfree"), move || {
+                s.solve_into(&b, &mut x);
+            });
+        }
+        for strat in ["none", "avgcost", "manual"] {
+            let t = Strategy::parse(strat).unwrap().apply(&m);
+            let s = TransformedSolver::from_parts(m.clone(), t, workers);
+            let b = b.clone();
+            let mut x = vec![0.0; n];
+            println!("   (transformed/{strat} barriers: {})", s.num_barriers());
+            bench(&format!("{name}/transformed/{strat}"), move || {
+                s.solve_into(&b, &mut x);
+            });
+        }
+        if let Some(reg) = &registry {
+            let t = Strategy::parse("avgcost").unwrap().apply(&m);
+            let req = PaddedSystem::requirements(&m, &t);
+            if let Some(meta) = reg.best_fit("solve", &req) {
+                let p = PaddedSystem::build(&m, &t, meta.pad_shape()).unwrap();
+                let solver = XlaSolver::new(Arc::clone(reg));
+                let b = b.clone();
+                bench(&format!("{name}/xla/avgcost"), move || {
+                    std::hint::black_box(solver.solve(&p, &b).unwrap());
+                });
+            } else {
+                println!("   (xla: no artifact fits {req:?})");
+            }
+        }
+        println!();
+    }
+}

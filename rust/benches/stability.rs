@@ -1,0 +1,79 @@
+//! Bench: the §IV numerical-stability observation — rewriting distance vs
+//! folded-constant magnitude vs forward error, on an ill-scaled matrix
+//! (Fig 3 middle's exploding constants, quantified).
+
+use sptrsv_gt::solver::validate;
+use sptrsv_gt::sparse::generate::{self, GenOptions};
+use sptrsv_gt::transform::Strategy;
+use sptrsv_gt::util::rng::Rng;
+use sptrsv_gt::util::timer::{bench, Table};
+
+fn main() {
+    let n: usize = std::env::var("SPTRSV_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2000);
+    let opts = GenOptions {
+        ill_scaled: true,
+        scale: 1.0,
+        seed: 7,
+    };
+    let m = generate::tridiagonal(n, &opts);
+    let mut rng = Rng::new(1);
+    let b: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+
+    println!("== stability bench (ill-scaled tridiagonal, n = {n}) ==\n");
+    let mut table = Table::new(&[
+        "distance",
+        "levels",
+        "max |const|",
+        "forward err",
+        "residual",
+    ]);
+    for d in [2usize, 3, 5, 10, 20, 50, 100, n / 4] {
+        let strat = Strategy::parse(&format!("manual:{d}")).unwrap();
+        let t = strat.apply(&m);
+        let q = validate::assess(&m, &t, &b);
+        table.row(&[
+            d.to_string(),
+            t.num_levels().to_string(),
+            format!("{:.3e}", q.max_bcoeff_magnitude),
+            format!("{:.3e}", q.forward_error),
+            format!("{:.3e}", q.residual_inf),
+        ]);
+        let (m2, s2) = (m.clone(), strat);
+        bench(&format!("transform/manual:{d}"), move || {
+            std::hint::black_box(s2.apply(&m2).stats.rows_rewritten);
+        });
+    }
+    println!("\n{}", table.render());
+    println!("expectation (paper §IV): |const| and error grow with distance;");
+    println!("a magnitude guard (RowConstraints::max_bcoeff_magnitude) caps it.");
+
+    // The guard ablation: avgcost needs thin-vs-fat contrast, so use the
+    // same ill-scaled chain behind a fat head and compare unguarded vs
+    // magnitude-guarded rewriting.
+    use sptrsv_gt::sparse::generate::{from_level_plan, LevelPlan};
+    let mut widths = vec![4000usize];
+    widths.extend(std::iter::repeat(1).take(n.min(1000)));
+    let m2 = from_level_plan(&LevelPlan { widths }, &opts, |_, _, _| 0, 0.0);
+    let b2: Vec<f64> = (0..m2.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    for (label, guard) in [("unguarded", None), ("guarded@1e12", Some(1e12))] {
+        let o = sptrsv_gt::transform::avg_cost::AvgCostOptions {
+            constraints: sptrsv_gt::transform::row_strategies::RowConstraints {
+                max_bcoeff_magnitude: guard,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let t = sptrsv_gt::transform::avg_cost::apply(&m2, &o);
+        let q = validate::assess(&m2, &t, &b2);
+        println!(
+            "avgcost {label:<13} levels {:>5}, rewritten {:>5}, max |const| {:.3e}, forward err {:.3e}",
+            t.num_levels(),
+            t.stats.rows_rewritten,
+            q.max_bcoeff_magnitude,
+            q.forward_error
+        );
+    }
+}

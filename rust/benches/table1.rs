@@ -1,0 +1,46 @@
+//! Bench: regenerate Table I (both matrices, all strategies) and time
+//! each transformation.
+//!
+//!     cargo bench --bench table1                 # scale 0.25 default
+//!     SPTRSV_BENCH_SCALE=1.0 cargo bench --bench table1   # paper-sized
+//!
+//! Reduction percentages and cost ratios are scale-robust; the default
+//! keeps the bench wall-clock friendly (see EXPERIMENTS.md for a recorded
+//! full-scale run).
+
+use sptrsv_gt::report::table1;
+use sptrsv_gt::sparse::generate::{self, GenOptions};
+use sptrsv_gt::transform::Strategy;
+use sptrsv_gt::util::timer::bench;
+
+fn scale() -> f64 {
+    std::env::var("SPTRSV_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.25)
+}
+
+fn main() {
+    let scale = scale();
+    let opts = GenOptions::with_scale(scale);
+    println!("== table1 bench (scale {scale}) ==\n");
+    for (name, m, paper) in [
+        ("lung2-like", generate::lung2_like(&opts), &table1::PAPER_LUNG2),
+        ("torso2-like", generate::torso2_like(&opts), &table1::PAPER_TORSO2),
+    ] {
+        println!("-- {name}: {} rows, {} nnz --", m.nrows, m.nnz());
+        // Time each strategy's transform separately.
+        for strat in ["avgcost", "manual"] {
+            let s = Strategy::parse(strat).unwrap();
+            let mm = m.clone();
+            bench(&format!("transform/{name}/{strat}"), move || {
+                let t = s.apply(&mm);
+                std::hint::black_box(t.stats.levels_after);
+            });
+        }
+        // And print the actual table (with code sizes).
+        let cells = table1::run_matrix(&m, true);
+        print!("{}", table1::render(name, &cells, paper));
+        println!();
+    }
+}

@@ -1,0 +1,46 @@
+//! Bench: transformation throughput — the preprocessing cost the paper
+//! worries about ("the cost of the graph transformation process needs to
+//! be taken into consideration"). Primary target of the §Perf pass.
+
+use sptrsv_gt::graph::Levels;
+use sptrsv_gt::sparse::generate::{self, GenOptions};
+use sptrsv_gt::transform::Strategy;
+use sptrsv_gt::util::timer::bench;
+
+fn main() {
+    println!("== transform perf ==\n");
+    for scale in [0.05f64, 0.1, 0.25] {
+        let opts = GenOptions::with_scale(scale);
+        for (name, m) in [
+            ("lung2-like", generate::lung2_like(&opts)),
+            ("torso2-like", generate::torso2_like(&opts)),
+        ] {
+            {
+                let mm = m.clone();
+                bench(&format!("levels/{name}/s{scale}"), move || {
+                    std::hint::black_box(Levels::build(&mm).num_levels());
+                });
+            }
+            for strat in ["avgcost", "manual"] {
+                let s = Strategy::parse(strat).unwrap();
+                let mm = m.clone();
+                let label = format!(
+                    "transform/{name}/s{scale}/{strat} ({} rows)",
+                    mm.nrows
+                );
+                let meas = bench(&label, move || {
+                    std::hint::black_box(s.apply(&mm).stats.rows_rewritten);
+                });
+                // Substitution throughput for the record.
+                let t = Strategy::parse(strat).unwrap().apply(&m);
+                let per_sub = meas.median.as_secs_f64()
+                    / t.stats.substitutions_total.max(1) as f64;
+                println!(
+                    "   -> {} substitutions, {:.1} ns/substitution",
+                    t.stats.substitutions_total,
+                    per_sub * 1e9
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Specialized code generation — the testbed of [12] that the paper uses
+//! for its experiments (Fig. 3, Fig. 4, and Table I's "size of code" row).
+//!
+//! Generates C code with one `void calculateN(double* x)` function per
+//! level (long levels split into one function per thread, as the paper
+//! describes), in two modes:
+//!
+//! * **rearranged** (default; what this paper adds over [12]) — every
+//!   equation is emitted in canonical Lx = b form, constants folded.
+//! * **unarranged** (Fig. 4; `--no-rearrange`) — rewritten rows are
+//!   emitted as nested substitution expressions, recomputing shared
+//!   subexpressions — the CPU-cycle waste the paper calls out.
+
+pub mod emit;
+
+pub use emit::{generate, CodegenOptions, GeneratedCode};

@@ -1,0 +1,159 @@
+//! Configuration system: a flat key = value file (TOML subset — strings,
+//! numbers, booleans; `#` comments) merged with CLI `--key value`
+//! overrides. Used by the coordinator/service and the bench harnesses.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::Error;
+use crate::util::cli::Args;
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// worker threads for the parallel solvers
+    pub workers: usize,
+    /// transformation strategy name (see `Strategy::parse`)
+    pub strategy: String,
+    /// directory with AOT artifacts + manifest.json
+    pub artifacts_dir: String,
+    /// batch size target for the RHS batcher
+    pub batch_size: usize,
+    /// max microseconds a request may wait for a batch to fill
+    pub batch_deadline_us: u64,
+    /// prefer the XLA backend when an artifact shape fits
+    pub use_xla: bool,
+    /// default RNG seed for generators
+    pub seed: u64,
+    /// any further key=value pairs (kept for extensions/ablations)
+    pub extra: BTreeMap<String, String>,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            strategy: "avgcost".to_string(),
+            artifacts_dir: "artifacts".to_string(),
+            batch_size: 8,
+            batch_deadline_us: 2_000,
+            use_xla: false,
+            seed: 0x5EED,
+            extra: BTreeMap::new(),
+        }
+    }
+}
+
+impl Config {
+    /// Parse the flat TOML-subset file.
+    pub fn from_file(path: &Path) -> Result<Config, Error> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Io(format!("read {}: {e}", path.display())))?;
+        let mut cfg = Config::default();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() || line.starts_with('[') {
+                continue; // section headers tolerated, ignored
+            }
+            let Some(eq) = line.find('=') else {
+                return Err(Error::Invalid(format!(
+                    "{}:{}: expected key = value",
+                    path.display(),
+                    ln + 1
+                )));
+            };
+            let key = line[..eq].trim();
+            let val = line[eq + 1..].trim().trim_matches('"');
+            cfg.set(key, val)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply CLI flags on top (flags win over file values).
+    pub fn merge_args(&mut self, args: &Args) -> Result<(), Error> {
+        for (k, v) in &args.flags {
+            // Only consume known config keys; other flags belong to the
+            // subcommands.
+            if matches!(
+                k.as_str(),
+                "workers" | "strategy" | "artifacts-dir" | "batch-size"
+                    | "batch-deadline-us" | "use-xla" | "seed"
+            ) {
+                self.set(&k.replace('-', "_"), v)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn set(&mut self, key: &str, val: &str) -> Result<(), Error> {
+        let bad = |k: &str, v: &str| Error::Invalid(format!("config {k}: bad value '{v}'"));
+        match key {
+            "workers" => self.workers = val.parse().map_err(|_| bad(key, val))?,
+            "strategy" => self.strategy = val.to_string(),
+            "artifacts_dir" => self.artifacts_dir = val.to_string(),
+            "batch_size" => self.batch_size = val.parse().map_err(|_| bad(key, val))?,
+            "batch_deadline_us" => {
+                self.batch_deadline_us = val.parse().map_err(|_| bad(key, val))?
+            }
+            "use_xla" => self.use_xla = matches!(val, "true" | "1" | "yes"),
+            "seed" => self.seed = val.parse().map_err(|_| bad(key, val))?,
+            other => {
+                self.extra.insert(other.to_string(), val.to_string());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = Config::default();
+        assert!(c.workers >= 1);
+        assert_eq!(c.strategy, "avgcost");
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let p = std::env::temp_dir().join(format!("sptrsv_cfg_{}.toml", std::process::id()));
+        std::fs::write(
+            &p,
+            "# comment\n[coordinator]\nworkers = 3\nstrategy = \"manual:5\"\nuse_xla = true\ncustom_knob = 7\n",
+        )
+        .unwrap();
+        let c = Config::from_file(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(c.workers, 3);
+        assert_eq!(c.strategy, "manual:5");
+        assert!(c.use_xla);
+        assert_eq!(c.extra.get("custom_knob").unwrap(), "7");
+    }
+
+    #[test]
+    fn args_override() {
+        let mut c = Config::default();
+        let args = Args::parse(
+            ["x", "--workers", "7", "--strategy", "none", "--other", "z"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        c.merge_args(&args).unwrap();
+        assert_eq!(c.workers, 7);
+        assert_eq!(c.strategy, "none");
+        assert!(!c.extra.contains_key("other")); // unknown flags left alone
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let mut c = Config::default();
+        assert!(c.set("workers", "many").is_err());
+        let p = std::env::temp_dir().join(format!("sptrsv_cfg_bad_{}.toml", std::process::id()));
+        std::fs::write(&p, "workers\n").unwrap();
+        assert!(Config::from_file(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

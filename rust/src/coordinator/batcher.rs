@@ -1,0 +1,145 @@
+//! RHS batching queue: requests for the same matrix are grouped up to the
+//! configured batch size, or flushed when the oldest request exceeds the
+//! batching deadline. The batched XLA executable then solves all
+//! right-hand sides in one call (vmapped scan — see model.py).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// One queued solve request.
+pub struct Pending<T> {
+    pub b: Vec<f64>,
+    pub token: T,
+    pub enqueued: Instant,
+}
+
+pub struct Batcher<T> {
+    queues: BTreeMap<String, Vec<Pending<T>>>,
+    pub batch_size: usize,
+    pub deadline: Duration,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(batch_size: usize, deadline: Duration) -> Batcher<T> {
+        Batcher {
+            queues: BTreeMap::new(),
+            batch_size: batch_size.max(1),
+            deadline,
+        }
+    }
+
+    pub fn push(&mut self, matrix_id: &str, b: Vec<f64>, token: T) {
+        self.queues
+            .entry(matrix_id.to_string())
+            .or_default()
+            .push(Pending {
+                b,
+                token,
+                enqueued: Instant::now(),
+            });
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queues.values().map(Vec::len).sum()
+    }
+
+    /// Matrices whose queue is ready: full batch, or deadline expired.
+    /// `force` flushes everything non-empty.
+    pub fn ready(&self, force: bool) -> Vec<String> {
+        let now = Instant::now();
+        self.queues
+            .iter()
+            .filter(|(_, q)| {
+                !q.is_empty()
+                    && (force
+                        || q.len() >= self.batch_size
+                        || q.iter()
+                            .any(|p| now.duration_since(p.enqueued) >= self.deadline))
+            })
+            .map(|(id, _)| id.clone())
+            .collect()
+    }
+
+    /// Take up to `batch_size` requests for a matrix (FIFO).
+    pub fn take(&mut self, matrix_id: &str) -> Vec<Pending<T>> {
+        match self.queues.get_mut(matrix_id) {
+            None => Vec::new(),
+            Some(q) => {
+                let n = q.len().min(self.batch_size);
+                q.drain(..n).collect()
+            }
+        }
+    }
+
+    /// Time until the oldest pending request hits its deadline (service
+    /// loop uses this for recv_timeout).
+    pub fn next_deadline(&self) -> Option<Duration> {
+        let now = Instant::now();
+        self.queues
+            .values()
+            .flat_map(|q| q.iter())
+            .map(|p| {
+                self.deadline
+                    .saturating_sub(now.duration_since(p.enqueued))
+            })
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_fill_and_flush() {
+        let mut b: Batcher<usize> = Batcher::new(3, Duration::from_secs(60));
+        b.push("m", vec![1.0], 0);
+        b.push("m", vec![2.0], 1);
+        assert!(b.ready(false).is_empty()); // not full, not expired
+        b.push("m", vec![3.0], 2);
+        assert_eq!(b.ready(false), vec!["m".to_string()]);
+        let taken = b.take("m");
+        assert_eq!(taken.len(), 3);
+        assert_eq!(taken[0].token, 0); // FIFO
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn deadline_forces_partial_batch() {
+        let mut b: Batcher<usize> = Batcher::new(8, Duration::from_millis(1));
+        b.push("m", vec![1.0], 0);
+        std::thread::sleep(Duration::from_millis(3));
+        assert_eq!(b.ready(false), vec!["m".to_string()]);
+        assert_eq!(b.take("m").len(), 1);
+    }
+
+    #[test]
+    fn force_flush() {
+        let mut b: Batcher<usize> = Batcher::new(8, Duration::from_secs(60));
+        b.push("a", vec![1.0], 0);
+        b.push("z", vec![2.0], 1);
+        let mut r = b.ready(true);
+        r.sort();
+        assert_eq!(r, vec!["a".to_string(), "z".to_string()]);
+    }
+
+    #[test]
+    fn take_caps_at_batch_size() {
+        let mut b: Batcher<usize> = Batcher::new(2, Duration::from_secs(60));
+        for i in 0..5 {
+            b.push("m", vec![i as f64], i);
+        }
+        assert_eq!(b.take("m").len(), 2);
+        assert_eq!(b.pending(), 3);
+        assert_eq!(b.take("missing").len(), 0);
+    }
+
+    #[test]
+    fn next_deadline_monotone() {
+        let mut b: Batcher<usize> = Batcher::new(8, Duration::from_millis(100));
+        assert!(b.next_deadline().is_none());
+        b.push("m", vec![1.0], 0);
+        let d = b.next_deadline().unwrap();
+        assert!(d <= Duration::from_millis(100));
+    }
+}

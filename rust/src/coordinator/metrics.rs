@@ -1,0 +1,153 @@
+//! Service metrics: request counters and a log2-bucketed latency
+//! histogram, lock-free on the hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+const BUCKETS: usize = 40; // 2^0 .. 2^39 microseconds
+
+pub struct Metrics {
+    pub solves: AtomicU64,
+    pub batched_solves: AtomicU64,
+    pub batches: AtomicU64,
+    pub errors: AtomicU64,
+    total_us: AtomicU64,
+    hist: [AtomicU64; BUCKETS],
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            solves: AtomicU64::new(0),
+            batched_solves: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            total_us: AtomicU64::new(0),
+            hist: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    pub fn record_solve(&self, latency: Duration, batched: bool) {
+        let us = latency.as_micros() as u64;
+        self.solves.fetch_add(1, Ordering::Relaxed);
+        if batched {
+            self.batched_solves.fetch_add(1, Ordering::Relaxed);
+        }
+        self.total_us.fetch_add(us, Ordering::Relaxed);
+        let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.hist[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let count = self.solves.load(Ordering::Relaxed);
+        let hist: Vec<u64> = self.hist.iter().map(|h| h.load(Ordering::Relaxed)).collect();
+        Snapshot {
+            solves: count,
+            batched_solves: self.batched_solves.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            mean_us: if count == 0 {
+                0.0
+            } else {
+                self.total_us.load(Ordering::Relaxed) as f64 / count as f64
+            },
+            p50_us: percentile(&hist, count, 0.50),
+            p95_us: percentile(&hist, count, 0.95),
+            p99_us: percentile(&hist, count, 0.99),
+        }
+    }
+}
+
+/// Upper bound of the log2 bucket containing the q-th percentile.
+fn percentile(hist: &[u64], count: u64, q: f64) -> u64 {
+    if count == 0 {
+        return 0;
+    }
+    let want = (count as f64 * q).ceil() as u64;
+    let mut seen = 0u64;
+    for (i, &c) in hist.iter().enumerate() {
+        seen += c;
+        if seen >= want {
+            return 1u64 << (i + 1);
+        }
+    }
+    1u64 << hist.len()
+}
+
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub solves: u64,
+    pub batched_solves: u64,
+    pub batches: u64,
+    pub errors: u64,
+    pub mean_us: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+}
+
+impl std::fmt::Display for Snapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "solves={} (batched {}), batches={}, errors={}, latency mean={:.0}us p50<{}us p95<{}us p99<{}us",
+            self.solves, self.batched_solves, self.batches, self.errors,
+            self.mean_us, self.p50_us, self.p95_us, self.p99_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        for i in 1..=100u64 {
+            m.record_solve(Duration::from_micros(i * 10), i % 2 == 0);
+        }
+        m.record_batch();
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.solves, 100);
+        assert_eq!(s.batched_solves, 50);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.errors, 1);
+        assert!((s.mean_us - 505.0).abs() < 1.0);
+        // p50 of 10..1000us is ~500us -> bucket upper bound 512us.
+        assert!(s.p50_us >= 256 && s.p50_us <= 1024, "{}", s.p50_us);
+        assert!(s.p95_us >= s.p50_us);
+        assert!(s.p99_us >= s.p95_us);
+    }
+
+    #[test]
+    fn empty_snapshot() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.solves, 0);
+        assert_eq!(s.mean_us, 0.0);
+        assert_eq!(s.p50_us, 0);
+    }
+
+    #[test]
+    fn percentile_edges() {
+        let mut hist = vec![0u64; 40];
+        hist[5] = 10;
+        assert_eq!(percentile(&hist, 10, 0.5), 64);
+        assert_eq!(percentile(&hist, 10, 1.0), 64);
+    }
+}

@@ -1,0 +1,21 @@
+//! L3 coordinator: the serving layer around the preprocessing
+//! contribution.
+//!
+//! The paper's contribution is a *preprocessing* transformation, so per
+//! DESIGN.md the coordinator is a thin-but-real service: it owns the
+//! preprocessing pipeline (levels → strategy → transformed system →
+//! padded artifacts), caches prepared matrices, batches right-hand sides,
+//! dispatches to the native or XLA backend, and reports metrics.
+//!
+//! * [`pipeline`] — prepare/caches matrices (the expensive offline step)
+//! * [`batcher`]  — RHS batching queue with a deadline
+//! * [`metrics`]  — counters + latency histogram
+//! * [`service`]  — the request loop (std mpsc; tokio is not vendored)
+
+pub mod batcher;
+pub mod metrics;
+pub mod pipeline;
+pub mod service;
+
+pub use pipeline::{Backend, Pipeline, Prepared};
+pub use service::{Service, SolveHandle};

@@ -1,0 +1,196 @@
+//! Preprocessing pipeline: matrix -> levels -> strategy -> transformed
+//! system -> (optionally) padded XLA system, cached per matrix id.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::Config;
+use crate::error::Error;
+use crate::runtime::backend::StagedSystem;
+use crate::runtime::{PaddedSystem, Registry, XlaSolver};
+use crate::solver::executor::TransformedSolver;
+use crate::solver::pool::Pool;
+use crate::sparse::Csr;
+use crate::transform::{Strategy, TransformResult};
+
+/// Which backend serves a prepared matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// rust level-set executor over the transformed system
+    Native,
+    /// AOT XLA executable (artifact shape fitted)
+    Xla,
+}
+
+/// A matrix after preprocessing: everything the request path needs.
+pub struct Prepared {
+    pub id: String,
+    pub m: Arc<Csr>,
+    pub t: Arc<TransformResult>,
+    pub native: TransformedSolver,
+    pub padded: Option<Arc<PaddedSystem>>,
+    /// system arrays pre-uploaded to the PJRT device (§Perf: avoids
+    /// re-transferring megabytes of structure per request)
+    pub staged: Option<StagedSystem>,
+    pub backend: Backend,
+    /// preprocessing wall-clock (the offline cost the paper discusses)
+    pub prepare_time: std::time::Duration,
+}
+
+pub struct Pipeline {
+    pub cfg: Config,
+    pool: Arc<Pool>,
+    pub registry: Option<Arc<Registry>>,
+    cache: BTreeMap<String, Arc<Prepared>>,
+}
+
+impl Pipeline {
+    pub fn new(cfg: Config) -> Pipeline {
+        let pool = Arc::new(Pool::new(cfg.workers));
+        // The registry is optional: without artifacts the coordinator
+        // serves everything natively.
+        let registry = if cfg.use_xla {
+            match Registry::load(Path::new(&cfg.artifacts_dir)) {
+                Ok(r) => Some(Arc::new(r)),
+                Err(e) => {
+                    eprintln!(
+                        "warning: XLA registry unavailable ({e}); native backend only"
+                    );
+                    None
+                }
+            }
+        } else {
+            None
+        };
+        Pipeline {
+            cfg,
+            pool,
+            registry,
+            cache: BTreeMap::new(),
+        }
+    }
+
+    pub fn xla_solver(&self) -> Option<XlaSolver> {
+        self.registry.as_ref().map(|r| XlaSolver::new(Arc::clone(r)))
+    }
+
+    /// Preprocess and cache a matrix under `id` using the configured
+    /// strategy (or `strategy_override`).
+    pub fn prepare(
+        &mut self,
+        id: &str,
+        m: Csr,
+        strategy_override: Option<&str>,
+    ) -> Result<Arc<Prepared>, Error> {
+        if let Some(p) = self.cache.get(id) {
+            return Ok(Arc::clone(p));
+        }
+        let start = Instant::now();
+        m.validate_lower_triangular()?;
+        let strat_name = strategy_override.unwrap_or(&self.cfg.strategy);
+        let strategy = Strategy::parse(strat_name).map_err(Error::Invalid)?;
+        let t = strategy.apply(&m);
+        t.validate(&m).map_err(Error::Invalid)?;
+
+        let m = Arc::new(m);
+        let t = Arc::new(t);
+        // Fit an XLA artifact if the registry is present, and stage the
+        // system arrays on the device.
+        let mut backend = Backend::Native;
+        let mut padded = None;
+        let mut staged = None;
+        if let Some(reg) = &self.registry {
+            let req = PaddedSystem::requirements(&m, &t);
+            if let Some(meta) = reg.best_fit("solve", &req) {
+                let p = PaddedSystem::build(&m, &t, meta.pad_shape())?;
+                let solver = XlaSolver::new(Arc::clone(reg));
+                staged = Some(solver.stage(&p)?);
+                padded = Some(Arc::new(p));
+                backend = Backend::Xla;
+            }
+        }
+        let native = TransformedSolver::new(Arc::clone(&m), Arc::clone(&t), Arc::clone(&self.pool));
+        let prepared = Arc::new(Prepared {
+            id: id.to_string(),
+            m,
+            t,
+            native,
+            padded,
+            staged,
+            backend,
+            prepare_time: start.elapsed(),
+        });
+        self.cache.insert(id.to_string(), Arc::clone(&prepared));
+        Ok(prepared)
+    }
+
+    pub fn get(&self, id: &str) -> Option<Arc<Prepared>> {
+        self.cache.get(id).cloned()
+    }
+
+    pub fn evict(&mut self, id: &str) -> bool {
+        self.cache.remove(id).is_some()
+    }
+
+    pub fn cached_ids(&self) -> Vec<String> {
+        self.cache.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate;
+
+    fn cfg() -> Config {
+        Config {
+            workers: 2,
+            use_xla: false,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn prepare_caches_and_solves() {
+        let mut pl = Pipeline::new(cfg());
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.03));
+        let n = m.nrows;
+        let p = pl.prepare("lung2", m, None).unwrap();
+        assert_eq!(p.backend, Backend::Native);
+        assert!(p.t.stats.levels_after < p.t.stats.levels_before);
+        // Cache hit returns the same Arc.
+        let p2 = pl.prepare("lung2", generate::tridiagonal(5, &Default::default()), None);
+        assert!(Arc::ptr_eq(&p, &p2.unwrap()));
+        // And it solves.
+        let b = vec![1.0; n];
+        let x = p.native.solve(&b);
+        assert!(p.m.residual_inf(&x, &b) < 1e-9);
+    }
+
+    #[test]
+    fn strategy_override() {
+        let mut pl = Pipeline::new(cfg());
+        let m = generate::tridiagonal(50, &Default::default());
+        let p = pl.prepare("tri", m, Some("manual:5")).unwrap();
+        assert_eq!(p.t.num_levels(), 10);
+    }
+
+    #[test]
+    fn invalid_matrix_rejected() {
+        let mut pl = Pipeline::new(cfg());
+        let bad = Csr::new(2, 2, vec![0, 1, 3], vec![0, 0, 1], vec![0.0, 1.0, 1.0]).unwrap();
+        assert!(pl.prepare("bad", bad, None).is_err());
+    }
+
+    #[test]
+    fn evict_and_ids() {
+        let mut pl = Pipeline::new(cfg());
+        pl.prepare("a", generate::tridiagonal(10, &Default::default()), None)
+            .unwrap();
+        assert_eq!(pl.cached_ids(), vec!["a"]);
+        assert!(pl.evict("a"));
+        assert!(!pl.evict("a"));
+    }
+}

@@ -1,0 +1,374 @@
+//! The request loop: an mpsc-driven service thread owning the pipeline,
+//! the batcher and the backends. Clients hold a cheap cloneable
+//! [`SolveHandle`].
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::Config;
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::metrics::{Metrics, Snapshot};
+use crate::coordinator::pipeline::{Backend, Pipeline, Prepared};
+use crate::error::Error;
+use crate::runtime::XlaSolver;
+use crate::sparse::Csr;
+
+type SolveReply = Sender<Result<Vec<f64>, String>>;
+
+enum Request {
+    Register {
+        id: String,
+        matrix: Box<Csr>,
+        strategy: Option<String>,
+        reply: Sender<Result<RegisterInfo, String>>,
+    },
+    Solve {
+        id: String,
+        b: Vec<f64>,
+        reply: SolveReply,
+        submitted: Instant,
+    },
+    Snapshot(Sender<Snapshot>),
+    Shutdown,
+}
+
+/// What `register` reports back (preprocessing summary).
+#[derive(Debug, Clone)]
+pub struct RegisterInfo {
+    pub levels_before: usize,
+    pub levels_after: usize,
+    pub rows_rewritten: usize,
+    pub backend: &'static str,
+    pub prepare_ms: f64,
+}
+
+#[derive(Clone)]
+pub struct SolveHandle {
+    tx: Sender<Request>,
+}
+
+impl SolveHandle {
+    pub fn register(
+        &self,
+        id: &str,
+        matrix: Csr,
+        strategy: Option<&str>,
+    ) -> Result<RegisterInfo, Error> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Register {
+                id: id.to_string(),
+                matrix: Box::new(matrix),
+                strategy: strategy.map(str::to_string),
+                reply: tx,
+            })
+            .map_err(|_| Error::Runtime("service stopped".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("service stopped".into()))?
+            .map_err(Error::Runtime)
+    }
+
+    /// Blocking solve (the caller's thread waits for the batch).
+    pub fn solve(&self, id: &str, b: Vec<f64>) -> Result<Vec<f64>, Error> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Solve {
+                id: id.to_string(),
+                b,
+                reply: tx,
+                submitted: Instant::now(),
+            })
+            .map_err(|_| Error::Runtime("service stopped".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("service stopped".into()))?
+            .map_err(Error::Runtime)
+    }
+
+    /// Fire-and-forget async solve; returns the receiving end.
+    pub fn solve_async(
+        &self,
+        id: &str,
+        b: Vec<f64>,
+    ) -> Result<Receiver<Result<Vec<f64>, String>>, Error> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Solve {
+                id: id.to_string(),
+                b,
+                reply: tx,
+                submitted: Instant::now(),
+            })
+            .map_err(|_| Error::Runtime("service stopped".into()))?;
+        Ok(rx)
+    }
+
+    pub fn metrics(&self) -> Result<Snapshot, Error> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Snapshot(tx))
+            .map_err(|_| Error::Runtime("service stopped".into()))?;
+        rx.recv().map_err(|_| Error::Runtime("service stopped".into()))
+    }
+}
+
+pub struct Service {
+    handle: SolveHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Service {
+    pub fn start(cfg: Config) -> Service {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let join = std::thread::Builder::new()
+            .name("sptrsv-service".into())
+            .spawn(move || service_loop(cfg, rx))
+            .expect("spawn service");
+        Service {
+            handle: SolveHandle { tx },
+            join: Some(join),
+        }
+    }
+
+    pub fn handle(&self) -> SolveHandle {
+        self.handle.clone()
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.handle.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+struct Waiting {
+    reply: SolveReply,
+    submitted: Instant,
+}
+
+fn service_loop(cfg: Config, rx: Receiver<Request>) {
+    let mut pipeline = Pipeline::new(cfg.clone());
+    let xla: Option<XlaSolver> = pipeline.xla_solver();
+    let metrics = Arc::new(Metrics::new());
+    let mut batcher: Batcher<Waiting> = Batcher::new(
+        cfg.batch_size,
+        Duration::from_micros(cfg.batch_deadline_us),
+    );
+    let mut prepared: BTreeMap<String, Arc<Prepared>> = BTreeMap::new();
+
+    loop {
+        // Wait for work, but never past the oldest batching deadline.
+        let req = match batcher.next_deadline() {
+            Some(d) => match rx.recv_timeout(d) {
+                Ok(r) => Some(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            },
+            None => match rx.recv() {
+                Ok(r) => Some(r),
+                Err(_) => return,
+            },
+        };
+
+        match req {
+            Some(Request::Shutdown) => {
+                flush(&mut batcher, &prepared, &xla, &metrics, true);
+                return;
+            }
+            Some(Request::Register {
+                id,
+                matrix,
+                strategy,
+                reply,
+            }) => {
+                let res = pipeline
+                    .prepare(&id, *matrix, strategy.as_deref())
+                    .map(|p| {
+                        prepared.insert(id.clone(), Arc::clone(&p));
+                        RegisterInfo {
+                            levels_before: p.t.stats.levels_before,
+                            levels_after: p.t.stats.levels_after,
+                            rows_rewritten: p.t.stats.rows_rewritten,
+                            backend: match p.backend {
+                                Backend::Native => "native",
+                                Backend::Xla => "xla",
+                            },
+                            prepare_ms: p.prepare_time.as_secs_f64() * 1e3,
+                        }
+                    })
+                    .map_err(|e| e.to_string());
+                let _ = reply.send(res);
+            }
+            Some(Request::Solve {
+                id,
+                b,
+                reply,
+                submitted,
+            }) => {
+                if !prepared.contains_key(&id) {
+                    metrics.record_error();
+                    let _ = reply.send(Err(format!("matrix '{id}' not registered")));
+                } else {
+                    batcher.push(&id, b, Waiting { reply, submitted });
+                }
+            }
+            Some(Request::Snapshot(tx)) => {
+                let _ = tx.send(metrics.snapshot());
+            }
+            None => {} // timeout: fall through to flush
+        }
+        flush(&mut batcher, &prepared, &xla, &metrics, false);
+    }
+}
+
+fn flush(
+    batcher: &mut Batcher<Waiting>,
+    prepared: &BTreeMap<String, Arc<Prepared>>,
+    xla: &Option<XlaSolver>,
+    metrics: &Metrics,
+    force: bool,
+) {
+    for id in batcher.ready(force) {
+        let Some(p) = prepared.get(&id) else { continue };
+        loop {
+            let batch = batcher.take(&id);
+            if batch.is_empty() {
+                break;
+            }
+            serve_batch(p, batch, xla, metrics);
+            if !force {
+                break;
+            }
+        }
+    }
+}
+
+fn serve_batch(
+    p: &Prepared,
+    batch: Vec<crate::coordinator::batcher::Pending<Waiting>>,
+    xla: &Option<XlaSolver>,
+    metrics: &Metrics,
+) {
+    // Try the staged batched XLA path when the batch size matches
+    // exactly; otherwise solve each RHS on the chosen backend.
+    if batch.len() > 1 {
+        if let (Backend::Xla, Some(solver), Some(padded), Some(staged)) =
+            (p.backend, xla, &p.padded, &p.staged)
+        {
+            if staged.batch_size() == Some(batch.len()) {
+                let bs: Vec<Vec<f64>> = batch.iter().map(|q| q.b.clone()).collect();
+                if let Ok(xs) = solver.solve_batched_staged(staged, padded, &bs) {
+                    metrics.record_batch();
+                    for (q, x) in batch.into_iter().zip(xs) {
+                        metrics.record_solve(q.token.submitted.elapsed(), true);
+                        let _ = q.token.reply.send(Ok(x));
+                    }
+                    return;
+                }
+            }
+        }
+    }
+    metrics.record_batch();
+    for q in batch {
+        let res = match (p.backend, xla, &p.padded, &p.staged) {
+            (Backend::Xla, Some(solver), Some(padded), Some(staged)) => solver
+                .solve_staged(staged, padded, &q.b)
+                .map_err(|e| e.to_string())
+                .or_else(|_| Ok::<_, String>(p.native.solve(&q.b))),
+            _ => Ok(p.native.solve(&q.b)),
+        };
+        if res.is_err() {
+            metrics.record_error();
+        }
+        metrics.record_solve(q.token.submitted.elapsed(), false);
+        let _ = q.token.reply.send(res);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate;
+
+    fn test_cfg() -> Config {
+        Config {
+            workers: 2,
+            use_xla: false,
+            batch_size: 4,
+            batch_deadline_us: 500,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn register_solve_roundtrip() {
+        let svc = Service::start(test_cfg());
+        let h = svc.handle();
+        let m = generate::random_lower(200, 3, 0.8, &Default::default());
+        let info = h.register("m", m.clone(), Some("avgcost")).unwrap();
+        assert!(info.levels_after <= info.levels_before);
+        let b = vec![1.0; 200];
+        let x = h.solve("m", b.clone()).unwrap();
+        assert!(m.residual_inf(&x, &b) < 1e-9);
+        let snap = h.metrics().unwrap();
+        assert_eq!(snap.solves, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn unregistered_matrix_errors() {
+        let svc = Service::start(test_cfg());
+        let h = svc.handle();
+        assert!(h.solve("ghost", vec![1.0]).is_err());
+        assert_eq!(h.metrics().unwrap().errors, 1);
+    }
+
+    #[test]
+    fn concurrent_async_solves_batch_up() {
+        let svc = Service::start(test_cfg());
+        let h = svc.handle();
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.02));
+        let n = m.nrows;
+        h.register("lung", m.clone(), None).unwrap();
+        let rxs: Vec<_> = (0..8)
+            .map(|i| {
+                let b = vec![(i + 1) as f64; n];
+                h.solve_async("lung", b).unwrap()
+            })
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let x = rx.recv().unwrap().unwrap();
+            let b = vec![(i + 1) as f64; n];
+            assert!(m.residual_inf(&x, &b) < 1e-9, "request {i}");
+        }
+        let snap = h.metrics().unwrap();
+        assert_eq!(snap.solves, 8);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn multiple_matrices() {
+        let svc = Service::start(test_cfg());
+        let h = svc.handle();
+        let m1 = generate::tridiagonal(50, &Default::default());
+        let m2 = generate::banded(80, 4, 0.5, &Default::default());
+        h.register("t", m1.clone(), Some("manual:5")).unwrap();
+        h.register("b", m2.clone(), Some("none")).unwrap();
+        let x1 = h.solve("t", vec![2.0; 50]).unwrap();
+        let x2 = h.solve("b", vec![3.0; 80]).unwrap();
+        assert!(m1.residual_inf(&x1, &vec![2.0; 50]) < 1e-10);
+        assert!(m2.residual_inf(&x2, &vec![3.0; 80]) < 1e-10);
+        svc.shutdown();
+    }
+}

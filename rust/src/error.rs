@@ -1,0 +1,13 @@
+//! Crate-wide error type.
+
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("invalid input: {0}")]
+    Invalid(String),
+    #[error("io error: {0}")]
+    Io(String),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("no artifact shape fits: {0}")]
+    NoFit(String),
+}

@@ -1,0 +1,158 @@
+//! Level analytics — the paper's cost model (§III).
+//!
+//! * cost(row)   = 2*nnz(row) - 1   (nnz includes the diagonal)
+//! * cost(level) = Σ cost(row)      = 2*Σnnz - n_rows_in_level
+//! * avgLevelCost = Σ cost(level) / num_levels
+//! * thin level  = level with cost < avgLevelCost
+//!
+//! The same statistics are computed for original matrices (from CSR) and
+//! for transformed systems (from explicit per-row costs), so Table I's
+//! before/after columns come from one code path.
+
+use crate::graph::Levels;
+use crate::sparse::Csr;
+
+#[derive(Debug, Clone)]
+pub struct LevelStats {
+    /// cost of each level, indexed like `Levels::levels`
+    pub level_costs: Vec<u64>,
+    /// rows per level
+    pub level_widths: Vec<usize>,
+    pub total_cost: u64,
+    pub avg_level_cost: f64,
+    pub num_levels: usize,
+}
+
+impl LevelStats {
+    /// Stats of an untransformed matrix under its level partition.
+    pub fn from_csr(m: &Csr, lv: &Levels) -> LevelStats {
+        let costs: Vec<u64> = (0..m.nrows).map(|i| m.row_cost(i) as u64).collect();
+        Self::from_row_costs(&costs, &lv.levels)
+    }
+
+    /// Stats from explicit per-row costs and a level partition (used for
+    /// transformed systems, where rewritten rows have rewritten costs).
+    pub fn from_row_costs(row_costs: &[u64], levels: &[Vec<u32>]) -> LevelStats {
+        let level_costs: Vec<u64> = levels
+            .iter()
+            .map(|rows| rows.iter().map(|&r| row_costs[r as usize]).sum())
+            .collect();
+        let level_widths: Vec<usize> = levels.iter().map(Vec::len).collect();
+        let total_cost: u64 = level_costs.iter().sum();
+        let num_levels = levels.len();
+        LevelStats {
+            total_cost,
+            avg_level_cost: if num_levels == 0 {
+                0.0
+            } else {
+                total_cost as f64 / num_levels as f64
+            },
+            level_costs,
+            level_widths,
+            num_levels,
+        }
+    }
+
+    /// Indices of thin levels: cost < avgLevelCost.
+    pub fn thin_levels(&self) -> Vec<usize> {
+        self.level_costs
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| (c as f64) < self.avg_level_cost)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Fraction of levels that are thin.
+    pub fn thin_fraction(&self) -> f64 {
+        if self.num_levels == 0 {
+            return 0.0;
+        }
+        self.thin_levels().len() as f64 / self.num_levels as f64
+    }
+
+    /// Max level cost (Fig 6 annotates this for the manual strategy).
+    pub fn max_level_cost(&self) -> u64 {
+        self.level_costs.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Degree of parallelism summary: average rows per level.
+    pub fn avg_width(&self) -> f64 {
+        if self.num_levels == 0 {
+            return 0.0;
+        }
+        self.level_widths.iter().sum::<usize>() as f64 / self.num_levels as f64
+    }
+}
+
+/// Paper row-cost model for an explicit dependency count (nnz = deps + 1
+/// diagonal): 2*nnz - 1.
+#[inline]
+pub fn row_cost_for_deps(ndeps: usize) -> u64 {
+    (2 * (ndeps + 1) - 1) as u64
+}
+
+/// Cost of a *rewritten* row: the diagonal division is folded into the
+/// constants during rewriting (paper §IV: "the division operation is
+/// removed ... reducing its cost by 1"), so a rewritten row with d
+/// remaining dependencies costs 2*(d+1) - 2 = 2d; a row rewritten all the
+/// way to level 0 (d = 0) costs 0 — it is a pure constant assignment.
+#[inline]
+pub fn rewritten_row_cost(ndeps: usize) -> u64 {
+    (2 * ndeps) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate;
+
+    #[test]
+    fn fig1_costs() {
+        let m = generate::fig1_example();
+        let lv = Levels::build(&m);
+        let st = LevelStats::from_csr(&m, &lv);
+        // level 0: three 0-dep rows, cost 1 each.
+        assert_eq!(st.level_costs[0], 3);
+        // level 1: row3 (1 dep, cost 3) + row4 (2 deps, cost 5) = 8.
+        assert_eq!(st.level_costs[1], 8);
+        // level 3: row7 (3 deps) = 7.
+        assert_eq!(st.level_costs[3], 7);
+        assert_eq!(st.total_cost, 3 + 8 + 6 + 7);
+        assert_eq!(st.num_levels, 4);
+    }
+
+    #[test]
+    fn thin_levels_follow_average() {
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
+        let lv = Levels::build(&m);
+        let st = LevelStats::from_csr(&m, &lv);
+        let thin = st.thin_levels();
+        // The chain levels dominate: ~94% of levels are thin.
+        assert!(st.thin_fraction() > 0.85, "{}", st.thin_fraction());
+        for &t in &thin {
+            assert!((st.level_costs[t] as f64) < st.avg_level_cost);
+        }
+    }
+
+    #[test]
+    fn cost_model_consistency() {
+        assert_eq!(row_cost_for_deps(0), 1);
+        assert_eq!(row_cost_for_deps(2), 5);
+        assert_eq!(rewritten_row_cost(0), 0);
+        assert_eq!(rewritten_row_cost(2), 4);
+        let m = generate::random_lower(100, 4, 0.8, &Default::default());
+        for i in 0..100 {
+            assert_eq!(m.row_cost(i) as u64, row_cost_for_deps(m.indegree(i)));
+        }
+    }
+
+    #[test]
+    fn total_cost_matches_formula() {
+        // total = 2*nnz - n (paper's definition summed over all levels)
+        let m = generate::torso2_like(&generate::GenOptions::with_scale(0.02));
+        let lv = Levels::build(&m);
+        let st = LevelStats::from_csr(&m, &lv);
+        assert_eq!(st.total_cost, (2 * m.nnz() - m.nrows) as u64);
+    }
+}

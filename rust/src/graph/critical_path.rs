@@ -1,0 +1,122 @@
+//! Critical path through DAG_L: the longest dependency chain, optionally
+//! weighted by row cost. Rows on the critical path are candidates for the
+//! §III.A row-granular strategy "rewrite if row is on critical path".
+
+use crate::sparse::Csr;
+
+#[derive(Debug, Clone)]
+pub struct CriticalPath {
+    /// longest-chain length (in rows) ending at each row, unweighted
+    pub depth: Vec<u32>,
+    /// whether the row lies on at least one maximum-length chain
+    pub on_critical: Vec<bool>,
+    /// number of rows in the longest chain == number of levels
+    pub length: u32,
+}
+
+impl CriticalPath {
+    pub fn compute(m: &Csr) -> CriticalPath {
+        let n = m.nrows;
+        let mut depth = vec![0u32; n];
+        for i in 0..n {
+            let mut d = 0u32;
+            for &j in m.row_deps(i) {
+                d = d.max(depth[j as usize] + 1);
+            }
+            depth[i] = d;
+        }
+        let length = depth.iter().copied().max().map_or(0, |d| d + 1);
+
+        // height[i]: longest chain length from i downward (to any sink).
+        // Iterate rows descending: when i is processed its own height is
+        // final (all rows depending on i have larger indices), so push it
+        // into i's dependencies.
+        let mut height = vec![0u32; n];
+        for i in (0..n).rev() {
+            let hi = height[i];
+            for &j in m.row_deps(i) {
+                let j = j as usize;
+                if height[j] < hi + 1 {
+                    height[j] = hi + 1;
+                }
+            }
+        }
+        let on_critical = (0..n)
+            .map(|i| depth[i] + height[i] + 1 == length)
+            .collect();
+        CriticalPath {
+            depth,
+            on_critical,
+            length,
+        }
+    }
+
+    pub fn critical_rows(&self) -> Vec<u32> {
+        self.on_critical
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c)
+            .map(|(i, _)| i as u32)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Levels;
+    use crate::sparse::generate;
+
+    #[test]
+    fn fig1_critical_path() {
+        let m = generate::fig1_example();
+        let cp = CriticalPath::compute(&m);
+        assert_eq!(cp.length, 4); // = number of levels
+        // 7 <- 6 <- 4 <- {1,2} is the unique 4-chain (through row 6).
+        assert!(cp.on_critical[7]);
+        assert!(cp.on_critical[6]);
+        assert!(cp.on_critical[4]);
+        assert!(cp.on_critical[1] && cp.on_critical[2]);
+        // Row 5 (7 doesn't depend on chains through 5): depth 2, height 0.
+        assert!(!cp.on_critical[5]);
+        // Row 0: depth 0, longest downward chain 0->3->5 or 0->3->7 = 3 rows
+        // => 0+2+1 = 3 < 4, not critical.
+        assert!(!cp.on_critical[0]);
+    }
+
+    #[test]
+    fn length_equals_num_levels() {
+        for seed in 0..5 {
+            let m = generate::random_lower(
+                200,
+                4,
+                0.8,
+                &generate::GenOptions {
+                    seed,
+                    ..Default::default()
+                },
+            );
+            let cp = CriticalPath::compute(&m);
+            let lv = Levels::build(&m);
+            assert_eq!(cp.length as usize, lv.num_levels());
+        }
+    }
+
+    #[test]
+    fn tridiagonal_everything_critical() {
+        let m = generate::tridiagonal(30, &Default::default());
+        let cp = CriticalPath::compute(&m);
+        assert_eq!(cp.length, 30);
+        assert!(cp.on_critical.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn depth_matches_level_of() {
+        let m = generate::torso2_like(&generate::GenOptions::with_scale(0.02));
+        let cp = CriticalPath::compute(&m);
+        let lv = Levels::build(&m);
+        for i in 0..m.nrows {
+            assert_eq!(cp.depth[i], lv.level_of[i]);
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Explicit DAG_L adjacency: children lists (who depends on me) and
+//! indegrees, for the sync-free solver and the critical-path analysis.
+
+use crate::sparse::Csr;
+
+/// Forward adjacency of the dependency DAG: nodes are rows; an edge
+/// j -> i means row i consumes x[j] (i.e. L[i][j] != 0, j < i).
+#[derive(Debug, Clone)]
+pub struct Dag {
+    /// CSR-style children lists: children of j are
+    /// `children[child_ptr[j]..child_ptr[j+1]]`.
+    pub child_ptr: Vec<usize>,
+    pub children: Vec<u32>,
+    /// Off-diagonal indegree of each row (== number of dependencies).
+    pub indegree: Vec<u32>,
+}
+
+impl Dag {
+    pub fn build(m: &Csr) -> Dag {
+        let n = m.nrows;
+        let mut indegree = vec![0u32; n];
+        let mut outdeg = vec![0usize; n];
+        for i in 0..n {
+            indegree[i] = m.indegree(i) as u32;
+            for &d in m.row_deps(i) {
+                outdeg[d as usize] += 1;
+            }
+        }
+        let mut child_ptr = Vec::with_capacity(n + 1);
+        let mut acc = 0usize;
+        child_ptr.push(0);
+        for &o in &outdeg {
+            acc += o;
+            child_ptr.push(acc);
+        }
+        let mut fill = child_ptr.clone();
+        let mut children = vec![0u32; acc];
+        for i in 0..n {
+            for &d in m.row_deps(i) {
+                let d = d as usize;
+                children[fill[d]] = i as u32;
+                fill[d] += 1;
+            }
+        }
+        Dag {
+            child_ptr,
+            children,
+            indegree,
+        }
+    }
+
+    pub fn children_of(&self, j: usize) -> &[u32] {
+        &self.children[self.child_ptr[j]..self.child_ptr[j + 1]]
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.children.len()
+    }
+
+    /// Indegree histogram: hist[d] = number of rows with d dependencies
+    /// (saturating at hist.len()-1).
+    pub fn indegree_histogram(&self, buckets: usize) -> Vec<usize> {
+        let mut h = vec![0usize; buckets];
+        for &d in &self.indegree {
+            let b = (d as usize).min(buckets - 1);
+            h[b] += 1;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate;
+
+    #[test]
+    fn fig1_adjacency() {
+        let m = generate::fig1_example();
+        let d = Dag::build(&m);
+        assert_eq!(d.children_of(0), &[3, 7]);
+        assert_eq!(d.children_of(4), &[6]);
+        assert_eq!(d.children_of(7), &[] as &[u32]);
+        assert_eq!(d.indegree[7], 3);
+        assert_eq!(d.num_edges(), 8);
+    }
+
+    #[test]
+    fn edges_match_offdiag_nnz() {
+        let m = generate::random_lower(300, 5, 0.8, &Default::default());
+        let d = Dag::build(&m);
+        assert_eq!(d.num_edges(), m.nnz() - m.nrows);
+        let from_hist: usize = d
+            .indegree_histogram(16)
+            .iter()
+            .enumerate()
+            .map(|(deg, cnt)| deg * cnt)
+            .sum();
+        assert_eq!(from_hist, d.num_edges());
+    }
+
+    #[test]
+    fn children_sorted_ascending() {
+        // Construction fills children in row order, so lists are ascending.
+        let m = generate::random_lower(100, 4, 0.9, &Default::default());
+        let d = Dag::build(&m);
+        for j in 0..m.nrows {
+            let c = d.children_of(j);
+            assert!(c.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Level-set construction (Anderson & Saad [14], Saltz [15]).
+//!
+//! `level(i) = 1 + max(level(j))` over the off-diagonal dependencies j of
+//! row i (0 if none). Rows within a level are mutually independent, so the
+//! level-set solver computes a level in parallel and synchronizes with a
+//! barrier between levels.
+
+use crate::sparse::Csr;
+
+/// A level partition of the rows of a lower-triangular matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Levels {
+    /// level index of each row
+    pub level_of: Vec<u32>,
+    /// rows in each level, ascending row order within a level
+    pub levels: Vec<Vec<u32>>,
+}
+
+impl Levels {
+    /// Build level sets from a validated lower-triangular CSR. O(nnz).
+    pub fn build(m: &Csr) -> Levels {
+        let n = m.nrows;
+        let mut level_of = vec![0u32; n];
+        let mut max_level = 0u32;
+        for i in 0..n {
+            let mut lvl = 0u32;
+            for &d in m.row_deps(i) {
+                lvl = lvl.max(level_of[d as usize] + 1);
+            }
+            level_of[i] = lvl;
+            max_level = max_level.max(lvl);
+        }
+        let nlevels = if n == 0 { 0 } else { max_level as usize + 1 };
+        let mut counts = vec![0usize; nlevels];
+        for &l in &level_of {
+            counts[l as usize] += 1;
+        }
+        let mut levels: Vec<Vec<u32>> = counts.iter().map(|&c| Vec::with_capacity(c)).collect();
+        for (i, &l) in level_of.iter().enumerate() {
+            levels[l as usize].push(i as u32);
+        }
+        Levels { level_of, levels }
+    }
+
+    pub fn num_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Synchronization barriers required = levels - 1 (paper §IV).
+    pub fn num_barriers(&self) -> usize {
+        self.num_levels().saturating_sub(1)
+    }
+
+    pub fn width(&self, l: usize) -> usize {
+        self.levels[l].len()
+    }
+
+    pub fn max_width(&self) -> usize {
+        self.levels.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Verify the partition is a valid topological level assignment for m:
+    /// every dependency lives in a strictly lower level, and level l > 0
+    /// rows have at least one dependency in level l-1 (tightness).
+    pub fn validate(&self, m: &Csr) -> Result<(), String> {
+        if self.level_of.len() != m.nrows {
+            return Err("level_of length mismatch".into());
+        }
+        for i in 0..m.nrows {
+            let li = self.level_of[i];
+            let mut tight = li == 0;
+            for &d in m.row_deps(i) {
+                let ld = self.level_of[d as usize];
+                if ld >= li {
+                    return Err(format!(
+                        "row {i} (level {li}) depends on row {d} (level {ld})"
+                    ));
+                }
+                if ld + 1 == li {
+                    tight = true;
+                }
+            }
+            if !tight {
+                return Err(format!("row {i} not tight at level {li}"));
+            }
+        }
+        let total: usize = self.levels.iter().map(Vec::len).sum();
+        if total != m.nrows {
+            return Err(format!("levels hold {total} rows, matrix has {}", m.nrows));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate;
+
+    #[test]
+    fn fig1_levels_match_paper() {
+        let m = generate::fig1_example();
+        let lv = Levels::build(&m);
+        assert_eq!(lv.num_levels(), 4);
+        assert_eq!(lv.levels[0], vec![0, 1, 2]);
+        assert_eq!(lv.levels[1], vec![3, 4]);
+        assert_eq!(lv.levels[2], vec![5, 6]);
+        assert_eq!(lv.levels[3], vec![7]);
+        assert_eq!(lv.num_barriers(), 3);
+        lv.validate(&m).unwrap();
+    }
+
+    #[test]
+    fn fig2_levels_match_paper() {
+        let m = generate::fig2_example();
+        let lv = Levels::build(&m);
+        assert_eq!(lv.num_levels(), 3);
+        assert_eq!(lv.levels[0], vec![0]);
+        assert_eq!(lv.levels[1], vec![1, 2]);
+        assert_eq!(lv.levels[2], vec![3]);
+    }
+
+    #[test]
+    fn tridiagonal_is_fully_serial() {
+        let m = generate::tridiagonal(50, &Default::default());
+        let lv = Levels::build(&m);
+        assert_eq!(lv.num_levels(), 50);
+        assert!(lv.levels.iter().all(|l| l.len() == 1));
+    }
+
+    #[test]
+    fn diagonal_matrix_is_one_level() {
+        let m = generate::banded(40, 3, 0.0, &Default::default());
+        let lv = Levels::build(&m);
+        assert_eq!(lv.num_levels(), 1);
+        assert_eq!(lv.width(0), 40);
+    }
+
+    #[test]
+    fn generated_plans_reproduce_levels() {
+        // The structured generators must reproduce their level plan exactly.
+        let o = generate::GenOptions::with_scale(0.05);
+        let m = generate::lung2_like(&o);
+        let plan = generate::lung2_plan(0.05);
+        let lv = Levels::build(&m);
+        assert_eq!(lv.num_levels(), plan.widths.len());
+        for (l, &w) in plan.widths.iter().enumerate() {
+            assert_eq!(lv.width(l), w, "level {l}");
+        }
+        lv.validate(&m).unwrap();
+
+        let m = generate::torso2_like(&generate::GenOptions::with_scale(0.03));
+        let plan = generate::torso2_plan(0.03);
+        let lv = Levels::build(&m);
+        assert_eq!(lv.num_levels(), plan.widths.len());
+        lv.validate(&m).unwrap();
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = crate::sparse::Csr::new(0, 0, vec![0], vec![], vec![]).unwrap();
+        let lv = Levels::build(&m);
+        assert_eq!(lv.num_levels(), 0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Dependency-graph substrate: DAG_L construction, Anderson–Saad level
+//! sets, level analytics (the paper's cost model) and critical paths.
+
+pub mod analyze;
+pub mod critical_path;
+pub mod dag;
+pub mod levels;
+
+pub use analyze::LevelStats;
+pub use dag::Dag;
+pub use levels::Levels;

@@ -1,0 +1,44 @@
+//! # sptrsv-gt — Graph-Transformation-Optimized Sparse Triangular Solve
+//!
+//! A full-stack reproduction of *"A Graph Transformation Strategy for
+//! Optimizing SpTRSV"* (Yılmaz & Yıldız, 2022): level-set SpTRSV whose
+//! dependency graph is transformed by **equation rewriting** so that thin
+//! levels — where parallel hardware idles — are merged into fat ones,
+//! cutting synchronization barriers while (for the cost-guided strategy)
+//! preserving total work.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L3 (this crate)** — matrices, level sets, the rewriting engine and
+//!   strategies, solver backends, specializing code generator, the PJRT
+//!   runtime and the serving coordinator.
+//! * **L2/L1 (python/compile, build-time only)** — JAX padded-level solve
+//!   over a Pallas level kernel, AOT-lowered to `artifacts/*.hlo.txt`.
+//!
+//! Quick start:
+//! ```no_run
+//! use sptrsv_gt::sparse::generate;
+//! use sptrsv_gt::transform::Strategy;
+//! use sptrsv_gt::solver::executor::TransformedSolver;
+//!
+//! let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
+//! let t = Strategy::parse("avgcost").unwrap().apply(&m);
+//! println!("levels {} -> {}", t.stats.levels_before, t.stats.levels_after);
+//! let solver = TransformedSolver::from_parts(m, t, 4);
+//! let b = vec![1.0; solver.m.nrows];
+//! let x = solver.solve(&b);
+//! # let _ = x;
+//! ```
+
+pub mod codegen;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod graph;
+pub mod report;
+pub mod runtime;
+pub mod solver;
+pub mod sparse;
+pub mod transform;
+pub mod util;
+
+pub use error::Error;

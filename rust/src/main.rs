@@ -1,0 +1,421 @@
+//! `sptrsv` — CLI for the graph-transformation SpTRSV stack.
+//!
+//! Subcommands:
+//!   gen        generate a synthetic matrix to a MatrixMarket file
+//!   analyze    level-set statistics of a matrix
+//!   transform  apply a rewriting strategy, print Table-I-style stats
+//!   solve      solve Lx=b on a chosen backend, report residual + timing
+//!   codegen    emit the specialized C code (Fig 3 / Fig 4)
+//!   table1     reproduce Table I on the lung2/torso2 analogs
+//!   figures    emit the Fig 5 / Fig 6 per-level cost CSVs
+//!   xla        check the AOT artifact registry and run an XLA solve
+//!   serve      start the coordinator and run a demo workload against it
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use sptrsv_gt::config::Config;
+use sptrsv_gt::coordinator::Service;
+use sptrsv_gt::graph::{analyze::LevelStats, Levels};
+use sptrsv_gt::report::{figures, table1};
+use sptrsv_gt::runtime::{PaddedSystem, Registry, XlaSolver};
+use sptrsv_gt::solver::executor::TransformedSolver;
+use sptrsv_gt::sparse::{generate, matrix_market, Csr};
+use sptrsv_gt::transform::Strategy;
+use sptrsv_gt::util::cli::Args;
+use sptrsv_gt::util::rng::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let r = match args.subcommand.as_str() {
+        "gen" => cmd_gen(&args),
+        "analyze" => cmd_analyze(&args),
+        "transform" => cmd_transform(&args),
+        "solve" => cmd_solve(&args),
+        "codegen" => cmd_codegen(&args),
+        "table1" => cmd_table1(&args),
+        "figures" => cmd_figures(&args),
+        "xla" => cmd_xla(&args),
+        "serve" => cmd_serve(&args),
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = "\
+sptrsv — graph-transformation SpTRSV (Yilmaz & Yildiz 2022 reproduction)
+
+USAGE: sptrsv <subcommand> [flags]
+
+  gen       --kind lung2|torso2|tridiagonal|banded|random [--scale F] [--n N]
+            [--seed S] [--ill-scaled] --out FILE.mtx
+  analyze   (--matrix FILE.mtx | --kind ... [--scale F])
+  transform (--matrix|--kind...) [--strategy none|avgcost|manual[:d]]
+  solve     (--matrix|--kind...) [--strategy S] [--backend serial|levelset|
+            syncfree|transformed|xla] [--workers W] [--repeat R]
+  codegen   (--matrix|--kind...) [--strategy S] [--no-rearrange] [--bake]
+            [--head N] [--out FILE.c]
+  table1    [--scale F] [--no-codegen]
+  figures   [--scale F] [--out-dir DIR]
+  xla       [--artifacts-dir DIR]   # registry check + XLA-vs-native solve
+  serve     [--requests N] [--batch-size B] [--use-xla]  # demo workload
+";
+
+/// Shared matrix loading: --matrix FILE or --kind generator.
+fn load_matrix(args: &Args) -> Result<(String, Csr)> {
+    if let Some(path) = args.flag("matrix") {
+        let m = matrix_market::read_path(Path::new(path))?;
+        let m = m.lower_triangular_part()?;
+        m.validate_lower_triangular()?;
+        return Ok((path.to_string(), m));
+    }
+    let kind = args.flag_or("kind", "lung2");
+    let opts = generate::GenOptions {
+        seed: args.u64_flag("seed", 0x5EED)?,
+        scale: args.f64_flag("scale", 0.1)?,
+        ill_scaled: args.bool_flag("ill-scaled"),
+    };
+    let n = args.usize_flag("n", 1000)?;
+    let m = match kind.as_str() {
+        "lung2" => generate::lung2_like(&opts),
+        "torso2" => generate::torso2_like(&opts),
+        "tridiagonal" => generate::tridiagonal(n, &opts),
+        "banded" => generate::banded(n, args.usize_flag("bandwidth", 8)?, 0.5, &opts),
+        "random" => generate::random_lower(n, args.usize_flag("max-deps", 4)?, 0.8, &opts),
+        "poisson" => {
+            let nx = args.usize_flag("nx", 128)?;
+            generate::poisson2d_ilu(nx, args.usize_flag("ny", nx)?, &opts)
+        }
+        other => bail!("unknown --kind '{other}'"),
+    };
+    Ok((format!("{kind}(scale={})", opts.scale), m))
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let (name, m) = load_matrix(args)?;
+    let out = args
+        .flag("out")
+        .context("gen requires --out FILE.mtx")?;
+    matrix_market::write_path(&m, Path::new(out))?;
+    println!(
+        "wrote {name}: {} rows, {} nnz -> {out}",
+        m.nrows,
+        m.nnz()
+    );
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let (name, m) = load_matrix(args)?;
+    let lv = Levels::build(&m);
+    let st = LevelStats::from_csr(&m, &lv);
+    println!("matrix {name}: {} rows, {} nnz", m.nrows, m.nnz());
+    println!(
+        "levels: {} ({} barriers), max width {}, avg width {:.1}",
+        st.num_levels,
+        lv.num_barriers(),
+        lv.max_width(),
+        st.avg_width()
+    );
+    println!(
+        "cost: total {}, avg/level {:.3}, max/level {}",
+        st.total_cost,
+        st.avg_level_cost,
+        st.max_level_cost()
+    );
+    let thin = st.thin_levels();
+    println!(
+        "thin levels (< avg): {} of {} ({:.0}%)",
+        thin.len(),
+        st.num_levels,
+        100.0 * st.thin_fraction()
+    );
+    println!(
+        "level-cost profile: {}",
+        figures::sparkline(&st.level_costs, 100, true, None)
+    );
+    Ok(())
+}
+
+fn cmd_transform(args: &Args) -> Result<()> {
+    let (name, m) = load_matrix(args)?;
+    let strat = Strategy::parse(&args.flag_or("strategy", "avgcost")).map_err(anyhow::Error::msg)?;
+    let start = std::time::Instant::now();
+    let t = strat.apply(&m);
+    let dt = start.elapsed();
+    t.validate(&m).map_err(anyhow::Error::msg)?;
+    let s = &t.stats;
+    println!("matrix {name}, strategy {}", strat.name());
+    println!(
+        "levels: {} -> {} ({:.1}% reduction), barriers {} -> {}",
+        s.levels_before,
+        s.levels_after,
+        s.levels_reduction_pct(),
+        s.levels_before.saturating_sub(1),
+        s.levels_after.saturating_sub(1)
+    );
+    println!(
+        "avg level cost: {:.3} -> {:.3} ({:.2}x)",
+        s.avg_level_cost_before,
+        s.avg_level_cost_after,
+        s.avg_cost_ratio()
+    );
+    println!(
+        "total level cost: {} -> {} ({:+.2}%)",
+        s.total_level_cost_before,
+        s.total_level_cost_after,
+        s.total_cost_change_pct()
+    );
+    println!(
+        "rows rewritten: {} ({:.2}%), substitutions {}, max |const| {:.3e}",
+        s.rows_rewritten,
+        s.rows_rewritten_pct(),
+        s.substitutions_total,
+        s.max_bcoeff_magnitude
+    );
+    println!("transform time: {dt:?}");
+    Ok(())
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let (name, m) = load_matrix(args)?;
+    let n = m.nrows;
+    let workers = args.usize_flag("workers", 4)?;
+    let repeat = args.usize_flag("repeat", 1)?.max(1);
+    let backend = args.flag_or("backend", "transformed");
+    let strat = Strategy::parse(&args.flag_or("strategy", "avgcost")).map_err(anyhow::Error::msg)?;
+    let mut rng = Rng::new(args.u64_flag("seed", 1)?);
+    let b: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+
+    let mut x = vec![0.0; n];
+    let start = std::time::Instant::now();
+    match backend.as_str() {
+        "serial" => {
+            for _ in 0..repeat {
+                sptrsv_gt::solver::serial::solve_into(&m, &b, &mut x);
+            }
+        }
+        "levelset" => {
+            let s = sptrsv_gt::solver::levelset::LevelSetSolver::from_matrix(m.clone(), workers);
+            for _ in 0..repeat {
+                s.solve_into(&b, &mut x);
+            }
+        }
+        "syncfree" => {
+            let s = sptrsv_gt::solver::syncfree::SyncFreeSolver::from_matrix(m.clone(), workers);
+            for _ in 0..repeat {
+                s.solve_into(&b, &mut x);
+            }
+        }
+        "transformed" => {
+            let t = strat.apply(&m);
+            let s = TransformedSolver::from_parts(m.clone(), t, workers);
+            for _ in 0..repeat {
+                s.solve_into(&b, &mut x);
+            }
+        }
+        "xla" => {
+            let dir = args.flag_or("artifacts-dir", "artifacts");
+            let reg = std::sync::Arc::new(Registry::load(Path::new(&dir))?);
+            let t = strat.apply(&m);
+            let req = PaddedSystem::requirements(&m, &t);
+            let meta = reg
+                .best_fit("solve", &req)
+                .with_context(|| format!("no artifact fits {req:?}"))?;
+            let p = PaddedSystem::build(&m, &t, meta.pad_shape())?;
+            let solver = XlaSolver::new(reg);
+            // Stage once (system arrays to device), then solve per-RHS.
+            let staged = solver.stage(&p)?;
+            for _ in 0..repeat {
+                x = solver.solve_staged(&staged, &p, &b)?;
+            }
+        }
+        other => bail!("unknown --backend '{other}'"),
+    }
+    let dt = start.elapsed() / repeat as u32;
+    println!(
+        "{name}: backend={backend} strategy={} n={n} time/solve={dt:?} residual={:.3e}",
+        strat.name(),
+        m.residual_inf(&x, &b)
+    );
+    Ok(())
+}
+
+fn cmd_codegen(args: &Args) -> Result<()> {
+    let (_, m) = load_matrix(args)?;
+    let strat = Strategy::parse(&args.flag_or("strategy", "avgcost")).map_err(anyhow::Error::msg)?;
+    let t = strat.apply(&m);
+    let bake = if args.bool_flag("bake") {
+        let mut rng = Rng::new(7);
+        Some((0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect())
+    } else {
+        None
+    };
+    let g = sptrsv_gt::codegen::generate(
+        &m,
+        &t,
+        &sptrsv_gt::codegen::CodegenOptions {
+            rearrange: !args.bool_flag("no-rearrange"),
+            bake_b: bake,
+            ..Default::default()
+        },
+    );
+    match args.flag("out") {
+        Some(path) => {
+            std::fs::write(path, &g.source)?;
+            println!(
+                "wrote {path}: {:.2} MB, {} functions",
+                g.size_mb(),
+                g.num_functions
+            );
+        }
+        None => {
+            let head = args.usize_flag("head", 30)?;
+            for line in g.source.lines().take(head) {
+                println!("{line}");
+            }
+            println!(
+                "... ({:.2} MB total, {} functions)",
+                g.size_mb(),
+                g.num_functions
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let scale = args.f64_flag("scale", 1.0)?;
+    let with_codegen = !args.bool_flag("no-codegen");
+    let opts = generate::GenOptions::with_scale(scale);
+    for (name, m, paper) in [
+        ("lung2-like", generate::lung2_like(&opts), &table1::PAPER_LUNG2),
+        ("torso2-like", generate::torso2_like(&opts), &table1::PAPER_TORSO2),
+    ] {
+        println!(
+            "\n== {name} (scale {scale}): {} rows, {} nnz ==",
+            m.nrows,
+            m.nnz()
+        );
+        let cells = table1::run_matrix(&m, with_codegen);
+        print!("{}", table1::render(name, &cells, paper));
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let scale = args.f64_flag("scale", 1.0)?;
+    let dir = args.flag_or("out-dir", "target/figures");
+    std::fs::create_dir_all(&dir)?;
+    let opts = generate::GenOptions::with_scale(scale);
+    for (fig, name, m, log, clip) in [
+        ("fig5", "lung2-like", generate::lung2_like(&opts), true, None),
+        ("fig6", "torso2-like", generate::torso2_like(&opts), false, Some(8000u64)),
+    ] {
+        let ss = figures::series(&m);
+        let path = format!("{dir}/{fig}_{name}.csv");
+        std::fs::write(&path, figures::to_csv(&ss))?;
+        println!("\n{fig} ({name}) -> {path}");
+        for s in &ss {
+            println!(
+                "  {:<14} levels={:<5} avg={:<10.2} {}",
+                s.strategy,
+                s.level_costs.len(),
+                s.avg_level_cost,
+                figures::sparkline(&s.level_costs, 80, log, clip)
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_xla(args: &Args) -> Result<()> {
+    let dir = args.flag_or("artifacts-dir", "artifacts");
+    let reg = std::sync::Arc::new(Registry::load(Path::new(&dir))?);
+    println!(
+        "registry: {} artifacts on {} ({} devices)",
+        reg.metas.len(),
+        reg.client.platform_name(),
+        reg.client.device_count()
+    );
+    for m in &reg.metas {
+        println!(
+            "  {:<32} entry={:<13} l={:?} r={} k={} n={} b={:?}",
+            m.name, m.entry, m.l, m.r, m.k, m.n, m.b
+        );
+    }
+    // Smoke: solve a generated system on XLA and compare to native.
+    let m = generate::lung2_like(&generate::GenOptions::with_scale(0.02));
+    let strat = Strategy::parse("avgcost").map_err(anyhow::Error::msg)?;
+    let t = strat.apply(&m);
+    let req = PaddedSystem::requirements(&m, &t);
+    let meta = reg
+        .best_fit("solve", &req)
+        .with_context(|| format!("no artifact fits {req:?}"))?;
+    println!("\nsmoke solve: fitting {:?} into '{}'", req, meta.name);
+    let p = PaddedSystem::build(&m, &t, meta.pad_shape())?;
+    let mut rng = Rng::new(3);
+    let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let solver = XlaSolver::new(std::sync::Arc::clone(&reg));
+    let x = solver.solve(&p, &b)?;
+    let resid = m.residual_inf(&x, &b);
+    let resid_xla = solver.residual(&p, &b, &x)?;
+    println!("native residual check: {resid:.3e}, xla residual graph: {resid_xla:.3e}");
+    anyhow::ensure!(resid < 1e-9, "XLA solve inaccurate: {resid:.3e}");
+    println!("xla OK");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = Config::default();
+    if let Some(path) = args.flag("config") {
+        cfg = Config::from_file(Path::new(path))?;
+    }
+    cfg.merge_args(args)?;
+    let requests = args.usize_flag("requests", 64)?;
+    println!(
+        "starting coordinator: workers={} strategy={} use_xla={} batch={}/{}us",
+        cfg.workers, cfg.strategy, cfg.use_xla, cfg.batch_size, cfg.batch_deadline_us
+    );
+    let svc = Service::start(cfg);
+    let h = svc.handle();
+    let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
+    let n = m.nrows;
+    let info = h.register("lung2", m.clone(), None)?;
+    println!(
+        "registered lung2-like: levels {} -> {}, {} rows rewritten, backend={}, prepare={:.1}ms",
+        info.levels_before, info.levels_after, info.rows_rewritten, info.backend, info.prepare_ms
+    );
+    let start = std::time::Instant::now();
+    let mut rng = Rng::new(11);
+    let rxs: Vec<_> = (0..requests)
+        .map(|_| {
+            let b: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            (b.clone(), h.solve_async("lung2", b).unwrap())
+        })
+        .collect();
+    let mut worst = 0.0f64;
+    for (b, rx) in rxs {
+        let x = rx.recv()?.map_err(anyhow::Error::msg)?;
+        worst = worst.max(m.residual_inf(&x, &b));
+    }
+    let dt = start.elapsed();
+    println!(
+        "{requests} solves in {dt:?} ({:.1} solves/s), worst residual {worst:.3e}",
+        requests as f64 / dt.as_secs_f64()
+    );
+    println!("metrics: {}", h.metrics()?);
+    svc.shutdown();
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! Figs. 5 and 6: per-level cost series for the three strategies, plus
+//! the CSV emitter the plotting harness (`examples/figures.rs`,
+//! `cargo bench --bench figures`) uses.
+
+use crate::sparse::Csr;
+use crate::transform::Strategy;
+
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub strategy: String,
+    pub level_costs: Vec<u64>,
+    pub avg_level_cost: f64,
+    pub max_level_cost: u64,
+}
+
+/// Compute the three series for one matrix.
+pub fn series(m: &Csr) -> Vec<Series> {
+    [
+        Strategy::None,
+        Strategy::AvgLevelCost(Default::default()),
+        Strategy::Manual(Default::default()),
+    ]
+    .iter()
+    .map(|s| {
+        let t = s.apply(m);
+        let level_costs = t.level_costs();
+        let max = level_costs.iter().copied().max().unwrap_or(0);
+        Series {
+            strategy: s.name().to_string(),
+            avg_level_cost: t.stats.total_level_cost_after as f64
+                / level_costs.len().max(1) as f64,
+            max_level_cost: max,
+            level_costs,
+        }
+    })
+    .collect()
+}
+
+/// CSV: `strategy,level,cost` rows (long format, one file per figure).
+pub fn to_csv(series: &[Series]) -> String {
+    let mut out = String::from("strategy,level,cost\n");
+    for s in series {
+        for (l, &c) in s.level_costs.iter().enumerate() {
+            out.push_str(&format!("{},{},{}\n", s.strategy, l, c));
+        }
+    }
+    out
+}
+
+/// Terminal sparkline rendering of a series (log scale like Fig 5 when
+/// `log` is set; linear clipped at `clip` like Fig 6 otherwise).
+pub fn sparkline(costs: &[u64], width: usize, log: bool, clip: Option<u64>) -> String {
+    const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if costs.is_empty() {
+        return String::new();
+    }
+    // Downsample to `width` buckets by max.
+    let w = width.min(costs.len()).max(1);
+    let mut buckets = vec![0u64; w];
+    for (i, &c) in costs.iter().enumerate() {
+        let b = i * w / costs.len();
+        let c = clip.map_or(c, |cl| c.min(cl));
+        buckets[b] = buckets[b].max(c);
+    }
+    let xform = |v: u64| -> f64 {
+        if log {
+            (v.max(1) as f64).ln()
+        } else {
+            v as f64
+        }
+    };
+    let max = buckets.iter().map(|&v| xform(v)).fold(0.0, f64::max).max(1e-9);
+    buckets
+        .iter()
+        .map(|&v| GLYPHS[((xform(v) / max) * 7.0).round() as usize])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate;
+
+    #[test]
+    fn series_shapes_match_table() {
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
+        let ss = series(&m);
+        assert_eq!(ss.len(), 3);
+        assert!(ss[1].level_costs.len() < ss[0].level_costs.len());
+        // Fat bumps survive every strategy (paper: "the bumps are the
+        // same"): max level cost of the originals persists or grows.
+        assert!(ss[1].max_level_cost >= ss[0].max_level_cost);
+    }
+
+    #[test]
+    fn csv_format() {
+        let m = generate::tridiagonal(20, &Default::default());
+        let ss = series(&m);
+        let csv = to_csv(&ss);
+        let mut lines = csv.lines();
+        assert_eq!(lines.next().unwrap(), "strategy,level,cost");
+        assert!(csv.contains("no-rewriting,0,"));
+        let rows = csv.lines().count() - 1;
+        let expect: usize = ss.iter().map(|s| s.level_costs.len()).sum();
+        assert_eq!(rows, expect);
+    }
+
+    #[test]
+    fn sparkline_renders() {
+        let s = sparkline(&[1, 2, 4, 8, 1000, 2, 1], 7, true, None);
+        assert_eq!(s.chars().count(), 7);
+        let clipped = sparkline(&[10, 8000, 20000], 3, false, Some(8000));
+        assert_eq!(clipped.chars().count(), 3);
+        assert_eq!(sparkline(&[], 10, false, None), "");
+    }
+}

@@ -1,0 +1,8 @@
+//! Report harnesses regenerating the paper's evaluation artifacts:
+//! Table I ([`table1`]) and the per-level cost series of Figs. 5/6
+//! ([`figures`]). The criterion-style wall-clock benches live in
+//! `rust/benches/`; these modules produce the *content* of the table and
+//! figures so benches, examples and the CLI share one implementation.
+
+pub mod figures;
+pub mod table1;

@@ -1,0 +1,242 @@
+//! Table I: comparison of strategies on lung2 / torso2 analogs.
+//!
+//! For each (matrix, strategy) cell we compute the paper's five metrics —
+//! number of levels, average level cost, total level cost, generated-code
+//! size, rows rewritten — and render them next to the published values.
+
+use crate::codegen::{self, CodegenOptions};
+use crate::sparse::Csr;
+use crate::transform::{Strategy, TransformResult};
+use crate::util::timer::Table;
+
+/// One Table I cell (a strategy applied to a matrix).
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub strategy: String,
+    pub num_levels: usize,
+    pub avg_level_cost: f64,
+    pub total_level_cost: u64,
+    pub code_size_mb: f64,
+    pub rows_rewritten: usize,
+    pub nrows: usize,
+}
+
+/// Published Table I values for the shape comparison printed alongside.
+#[derive(Debug, Clone, Copy)]
+pub struct PaperCell {
+    pub num_levels: usize,
+    pub avg_level_cost: f64,
+    pub total_level_cost: u64,
+    pub code_size_mb: Option<f64>,
+    pub rows_rewritten: Option<usize>,
+}
+
+pub const PAPER_LUNG2: [(&str, PaperCell); 3] = [
+    ("no-rewriting", PaperCell { num_levels: 479, avg_level_cost: 914.054, total_level_cost: 437_834, code_size_mb: Some(9.7), rows_rewritten: None }),
+    ("avgLevelCost", PaperCell { num_levels: 23, avg_level_cost: 18_938.06, total_level_cost: 435_588, code_size_mb: Some(8.6), rows_rewritten: Some(1304) }),
+    ("manual", PaperCell { num_levels: 67, avg_level_cost: 6520.42, total_level_cost: 436_868, code_size_mb: Some(9.5), rows_rewritten: Some(898) }),
+];
+
+pub const PAPER_TORSO2: [(&str, PaperCell); 3] = [
+    ("no-rewriting", PaperCell { num_levels: 513, avg_level_cost: 2014.559, total_level_cost: 1_035_484, code_size_mb: Some(21.0), rows_rewritten: None }),
+    ("avgLevelCost", PaperCell { num_levels: 341, avg_level_cost: 3086.443, total_level_cost: 1_052_477, code_size_mb: Some(21.0), rows_rewritten: Some(14_655) }),
+    ("manual", PaperCell { num_levels: 284, avg_level_cost: 5070.183, total_level_cost: 1_439_932, code_size_mb: None, rows_rewritten: Some(18_147) }),
+];
+
+/// Compute one cell. `with_codegen` controls whether the (expensive)
+/// code-size metric is materialized.
+pub fn cell(m: &Csr, strategy: &Strategy, with_codegen: bool) -> (Cell, TransformResult) {
+    let t = strategy.apply(m);
+    let code_size_mb = if with_codegen {
+        // The paper's testbed generates *specialized* code: the concrete
+        // right-hand side is baked into literal constants (Fig 3). Use a
+        // deterministic b so the metric is reproducible.
+        let opts = CodegenOptions {
+            bake_b: Some(vec![1.0; m.nrows]),
+            ..Default::default()
+        };
+        codegen::generate(m, &t, &opts).size_mb()
+    } else {
+        0.0
+    };
+    (
+        Cell {
+            strategy: strategy.name().to_string(),
+            num_levels: t.stats.levels_after,
+            avg_level_cost: t.stats.total_level_cost_after as f64
+                / t.stats.levels_after.max(1) as f64,
+            total_level_cost: t.stats.total_level_cost_after,
+            code_size_mb,
+            rows_rewritten: t.stats.rows_rewritten,
+            nrows: m.nrows,
+        },
+        t,
+    )
+}
+
+/// Run all three strategies on a matrix.
+pub fn run_matrix(m: &Csr, with_codegen: bool) -> Vec<Cell> {
+    [
+        Strategy::None,
+        Strategy::AvgLevelCost(Default::default()),
+        Strategy::Manual(Default::default()),
+    ]
+    .iter()
+    .map(|s| cell(m, s, with_codegen).0)
+    .collect()
+}
+
+/// Render one matrix block of Table I, measured vs paper.
+pub fn render(name: &str, cells: &[Cell], paper: &[(&str, PaperCell)]) -> String {
+    let base = &cells[0];
+    let mut t = Table::new(&[
+        &format!("{name} metric"),
+        "no rewriting",
+        "avgLevelCost",
+        "manual [12]",
+        "paper (no/avg/manual)",
+    ]);
+    let fmt_lv = |c: &Cell| {
+        if c.num_levels == base.num_levels {
+            format!("{}", c.num_levels)
+        } else {
+            format!(
+                "{} ({:.0}% -)",
+                c.num_levels,
+                100.0 * (1.0 - c.num_levels as f64 / base.num_levels as f64)
+            )
+        }
+    };
+    t.row(&[
+        "num. of levels".into(),
+        fmt_lv(&cells[0]),
+        fmt_lv(&cells[1]),
+        fmt_lv(&cells[2]),
+        format!(
+            "{} / {} / {}",
+            paper[0].1.num_levels, paper[1].1.num_levels, paper[2].1.num_levels
+        ),
+    ]);
+    let fmt_avg = |c: &Cell| {
+        if (c.avg_level_cost - base.avg_level_cost).abs() < 1e-9 {
+            format!("{:.3}", c.avg_level_cost)
+        } else {
+            format!(
+                "{:.2} ({:.2}x)",
+                c.avg_level_cost,
+                c.avg_level_cost / base.avg_level_cost
+            )
+        }
+    };
+    t.row(&[
+        "avg. level cost".into(),
+        fmt_avg(&cells[0]),
+        fmt_avg(&cells[1]),
+        fmt_avg(&cells[2]),
+        format!(
+            "{:.1} / {:.1} / {:.1}",
+            paper[0].1.avg_level_cost, paper[1].1.avg_level_cost, paper[2].1.avg_level_cost
+        ),
+    ]);
+    let fmt_tot = |c: &Cell| {
+        if c.total_level_cost == base.total_level_cost {
+            format!("{}", c.total_level_cost)
+        } else {
+            format!(
+                "{} ({:+.1}%)",
+                c.total_level_cost,
+                100.0 * (c.total_level_cost as f64 / base.total_level_cost as f64 - 1.0)
+            )
+        }
+    };
+    t.row(&[
+        "total level cost".into(),
+        fmt_tot(&cells[0]),
+        fmt_tot(&cells[1]),
+        fmt_tot(&cells[2]),
+        format!(
+            "{} / {} / {}",
+            paper[0].1.total_level_cost, paper[1].1.total_level_cost, paper[2].1.total_level_cost
+        ),
+    ]);
+    let fmt_sz = |c: &Cell| {
+        if c.code_size_mb == 0.0 {
+            "-".to_string()
+        } else {
+            format!("{:.2}", c.code_size_mb)
+        }
+    };
+    let fmt_paper_sz = |p: &PaperCell| match p.code_size_mb {
+        Some(v) => format!("{v}"),
+        None => "-".into(),
+    };
+    t.row(&[
+        "size of code (MB)".into(),
+        fmt_sz(&cells[0]),
+        fmt_sz(&cells[1]),
+        fmt_sz(&cells[2]),
+        format!(
+            "{} / {} / {}",
+            fmt_paper_sz(&paper[0].1),
+            fmt_paper_sz(&paper[1].1),
+            fmt_paper_sz(&paper[2].1)
+        ),
+    ]);
+    let fmt_rr = |c: &Cell| {
+        if c.rows_rewritten == 0 {
+            "-".to_string()
+        } else {
+            format!(
+                "{} ({:.1}%)",
+                c.rows_rewritten,
+                100.0 * c.rows_rewritten as f64 / c.nrows as f64
+            )
+        }
+    };
+    let fmt_paper_rr = |p: &PaperCell| match p.rows_rewritten {
+        Some(v) => format!("{v}"),
+        None => "-".into(),
+    };
+    t.row(&[
+        "num. rows rewritten".into(),
+        fmt_rr(&cells[0]),
+        fmt_rr(&cells[1]),
+        fmt_rr(&cells[2]),
+        format!(
+            "{} / {} / {}",
+            fmt_paper_rr(&paper[0].1),
+            fmt_paper_rr(&paper[1].1),
+            fmt_paper_rr(&paper[2].1)
+        ),
+    ]);
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate;
+
+    #[test]
+    fn cells_have_expected_shape() {
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
+        let cells = run_matrix(&m, false);
+        assert_eq!(cells.len(), 3);
+        assert_eq!(cells[0].rows_rewritten, 0);
+        assert!(cells[1].num_levels < cells[0].num_levels);
+        assert!(cells[2].num_levels < cells[0].num_levels);
+        // avgLevelCost compresses at least as much as manual (paper).
+        assert!(cells[1].num_levels <= cells[2].num_levels);
+    }
+
+    #[test]
+    fn render_includes_paper_columns() {
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.03));
+        let cells = run_matrix(&m, true);
+        let s = render("lung2-like", &cells, &PAPER_LUNG2);
+        assert!(s.contains("num. of levels"));
+        assert!(s.contains("479"));
+        assert!(s.contains("paper"));
+        assert!(cells[1].code_size_mb > 0.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` (`make artifacts`) and execute them from the
+//! rust hot path. Python never runs at request time.
+//!
+//! * [`registry`] — parses `artifacts/manifest.json`, loads + compiles
+//!   every artifact on the PJRT CPU client, and picks the smallest shape
+//!   that fits a padded system.
+//! * [`padded`]   — converts a [`crate::transform::TransformResult`] into
+//!   the padded-level representation the L1/L2 kernels consume (plus the
+//!   RHS functional `b' = W b` for rewritten rows).
+//! * [`backend`]  — the XLA-backed solver implementing solve / batched
+//!   solve / residual over the registry executables.
+
+pub mod backend;
+pub mod padded;
+pub mod registry;
+
+pub use backend::XlaSolver;
+pub use padded::PaddedSystem;
+pub use registry::{ArtifactMeta, Registry};

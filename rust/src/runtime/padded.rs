@@ -1,0 +1,238 @@
+//! Padded-level representation: the bridge between the (transformed)
+//! sparse system and the statically-shaped XLA executables.
+//!
+//! Layout (matching `python/compile/model.py`):
+//!   rows     (L, R) i32 — row id per slot, `n` (the dummy) on padding
+//!   vals     (L, R, K) f64 — dependency coefficients, 0 on padding
+//!   cols     (L, R, K) i32 — dependency columns, 0 on padding
+//!   inv_diag (L, R) f64 — 1/diag per row, 0 on padding
+//!
+//! For rewritten rows the equation is `x = (Σ w_m b[m] - Σ a_k x_k)` with
+//! the division folded, which fits the same kernel once the right-hand
+//! side is pre-mapped: `b'[i] = Σ w_m b[m]` (identity for original rows).
+//! The sparse map W is kept here and applied per request in O(nnz(W)).
+
+use crate::error::Error;
+use crate::sparse::Csr;
+use crate::transform::TransformResult;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PadShape {
+    pub l: usize,
+    pub r: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+#[derive(Debug)]
+pub struct PaddedSystem {
+    pub shape: PadShape,
+    /// real rows in the system (n <= shape.n)
+    pub nrows: usize,
+    pub rows: Vec<i32>,     // L*R
+    pub vals: Vec<f64>,     // L*R*K
+    pub cols: Vec<i32>,     // L*R*K
+    pub inv_diag: Vec<f64>, // L*R
+    /// RHS functional per row: None = identity (original row),
+    /// Some(w) = b'[i] = Σ w_m b[m]
+    bmap: Vec<Option<Vec<(u32, f64)>>>,
+}
+
+impl PaddedSystem {
+    /// Requirements of a system before padding: (levels, max level width,
+    /// max deps per row, n).
+    pub fn requirements(m: &Csr, t: &TransformResult) -> PadShape {
+        let l = t.levels.len();
+        let r = t.levels.iter().map(Vec::len).max().unwrap_or(0);
+        let mut k = 1;
+        for i in 0..m.nrows {
+            let nd = match &t.equations[i] {
+                Some(eq) => eq.ndeps(),
+                None => m.indegree(i),
+            };
+            k = k.max(nd);
+        }
+        PadShape {
+            l,
+            r,
+            k,
+            n: m.nrows,
+        }
+    }
+
+    /// Build the padded arrays for a target artifact shape. Fails if the
+    /// system does not fit.
+    pub fn build(m: &Csr, t: &TransformResult, shape: PadShape) -> Result<PaddedSystem, Error> {
+        let req = Self::requirements(m, t);
+        if req.l > shape.l || req.r > shape.r || req.k > shape.k || req.n > shape.n {
+            return Err(Error::NoFit(format!(
+                "system needs (l={},r={},k={},n={}), artifact offers (l={},r={},k={},n={})",
+                req.l, req.r, req.k, req.n, shape.l, shape.r, shape.k, shape.n
+            )));
+        }
+        let (l, r, k) = (shape.l, shape.r, shape.k);
+        let dummy = shape.n as i32; // padded rows scatter into slot N
+        let mut rows = vec![dummy; l * r];
+        let mut vals = vec![0.0; l * r * k];
+        let mut cols = vec![0i32; l * r * k];
+        let mut inv_diag = vec![0.0; l * r];
+        let mut bmap: Vec<Option<Vec<(u32, f64)>>> = vec![None; m.nrows];
+
+        for (li, level) in t.levels.iter().enumerate() {
+            for (ri, &row) in level.iter().enumerate() {
+                let i = row as usize;
+                let slot = li * r + ri;
+                rows[slot] = row as i32;
+                let base = slot * k;
+                match &t.equations[i] {
+                    None => {
+                        for (d, (&c, &v)) in
+                            m.row_deps(i).iter().zip(m.row_dep_vals(i)).enumerate()
+                        {
+                            cols[base + d] = c as i32;
+                            vals[base + d] = v;
+                        }
+                        inv_diag[slot] = 1.0 / m.diag(i);
+                    }
+                    Some(eq) => {
+                        for (d, &(c, a)) in eq.coeffs.iter().enumerate() {
+                            cols[base + d] = c as i32;
+                            vals[base + d] = a;
+                        }
+                        inv_diag[slot] = 1.0 / eq.diag; // 1.0 once folded
+                        bmap[i] = Some(eq.bcoeffs.clone());
+                    }
+                }
+            }
+        }
+        Ok(PaddedSystem {
+            shape,
+            nrows: m.nrows,
+            rows,
+            vals,
+            cols,
+            inv_diag,
+            bmap,
+        })
+    }
+
+    /// Apply the RHS functional: b -> b' (padded to shape.n with zeros).
+    pub fn map_rhs(&self, b: &[f64]) -> Vec<f64> {
+        assert_eq!(b.len(), self.nrows);
+        let mut out = vec![0.0; self.shape.n];
+        for i in 0..self.nrows {
+            out[i] = match &self.bmap[i] {
+                None => b[i],
+                Some(w) => w.iter().map(|&(m, wm)| wm * b[m as usize]).sum(),
+            };
+        }
+        out
+    }
+
+    /// Trim a shape.n-sized solution back to the real rows.
+    pub fn trim_solution(&self, x: Vec<f64>) -> Vec<f64> {
+        let mut x = x;
+        x.truncate(self.nrows);
+        x
+    }
+
+    /// VMEM-footprint estimate per level block (bytes) for the DESIGN.md
+    /// §Hardware-Adaptation roofline discussion: one (block_r x K) tile of
+    /// vals+cols, plus rows/b/inv_diag vectors.
+    pub fn vmem_per_block(&self, block_r: usize) -> usize {
+        let k = self.shape.k;
+        block_r * k * (8 + 4) + block_r * (8 + 8 + 4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate;
+    use crate::transform::Strategy;
+
+    fn fits(m: &Csr, t: &TransformResult) -> PaddedSystem {
+        let mut req = PaddedSystem::requirements(m, t);
+        req.n += 3; // leave padding slack to exercise the dummy slot
+        req.r += 2;
+        req.k += 1;
+        req.l += 1;
+        PaddedSystem::build(m, t, req).unwrap()
+    }
+
+    /// CPU-side emulation of the L2 scan (exactly what the HLO computes):
+    /// used to check the padded arrays are laid out correctly without
+    /// needing the PJRT client in unit tests.
+    fn emulate(p: &PaddedSystem, b: &[f64]) -> Vec<f64> {
+        let PadShape { l, r, k, n } = p.shape;
+        let bp = p.map_rhs(b);
+        let mut b_ext = bp.clone();
+        b_ext.push(0.0);
+        let mut x = vec![0.0; n + 1];
+        for li in 0..l {
+            let mut xl = vec![0.0; r];
+            for ri in 0..r {
+                let slot = li * r + ri;
+                let mut s = 0.0;
+                for d in 0..k {
+                    s += p.vals[slot * k + d] * x[p.cols[slot * k + d] as usize];
+                }
+                let row = p.rows[slot] as usize;
+                xl[ri] = (b_ext[row] - s) * p.inv_diag[slot];
+            }
+            for ri in 0..r {
+                x[p.rows[li * r + ri] as usize] = xl[ri];
+            }
+        }
+        x.truncate(p.nrows);
+        x
+    }
+
+    #[test]
+    fn emulated_padded_solve_matches_serial() {
+        for strat in ["none", "avgcost", "manual:5"] {
+            let m = generate::random_lower(150, 3, 0.8, &Default::default());
+            let t = Strategy::parse(strat).unwrap().apply(&m);
+            let p = fits(&m, &t);
+            let mut rng = crate::util::rng::Rng::new(11);
+            let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            let x = emulate(&p, &b);
+            let x_ref = crate::solver::serial::solve(&m, &b);
+            crate::util::prop::assert_allclose(&x, &x_ref, 1e-9, 1e-12)
+                .unwrap_or_else(|e| panic!("{strat}: {e}"));
+        }
+    }
+
+    #[test]
+    fn requirements_shrink_after_transform() {
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
+        let t0 = Strategy::None.apply(&m);
+        let t1 = Strategy::parse("avgcost").unwrap().apply(&m);
+        let r0 = PaddedSystem::requirements(&m, &t0);
+        let r1 = PaddedSystem::requirements(&m, &t1);
+        assert!(r1.l < r0.l, "levels {} -> {}", r0.l, r1.l);
+    }
+
+    #[test]
+    fn no_fit_is_detected() {
+        let m = generate::random_lower(100, 3, 0.8, &Default::default());
+        let t = Strategy::None.apply(&m);
+        let req = PaddedSystem::requirements(&m, &t);
+        let too_small = PadShape { n: 50, ..req };
+        assert!(matches!(
+            PaddedSystem::build(&m, &t, too_small),
+            Err(Error::NoFit(_))
+        ));
+    }
+
+    #[test]
+    fn map_rhs_identity_without_rewrites() {
+        let m = generate::random_lower(50, 2, 0.5, &Default::default());
+        let t = Strategy::None.apply(&m);
+        let p = fits(&m, &t);
+        let b: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let bp = p.map_rhs(&b);
+        assert_eq!(&bp[..50], &b[..]);
+        assert!(bp[50..].iter().all(|&v| v == 0.0));
+    }
+}

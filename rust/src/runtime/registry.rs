@@ -1,0 +1,199 @@
+//! Artifact registry: manifest parsing, PJRT compilation, shape fitting.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::Error;
+use crate::runtime::padded::PadShape;
+use crate::util::json::Json;
+
+/// One artifact's metadata row from manifest.json.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// "level_step" | "solve" | "solve_batched" | "residual"
+    pub entry: String,
+    pub l: Option<usize>,
+    pub r: usize,
+    pub k: usize,
+    pub n: usize,
+    pub b: Option<usize>,
+}
+
+impl ArtifactMeta {
+    fn from_json(v: &Json) -> Result<ArtifactMeta, Error> {
+        let s = |k: &str| -> Result<String, Error> {
+            v.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| Error::Invalid(format!("manifest entry missing '{k}'")))
+        };
+        let u = |k: &str| v.get(k).and_then(Json::as_usize);
+        Ok(ArtifactMeta {
+            name: s("name")?,
+            file: s("file")?,
+            entry: s("entry")?,
+            l: u("l"),
+            r: u("r").ok_or_else(|| Error::Invalid("manifest entry missing 'r'".into()))?,
+            k: u("k").ok_or_else(|| Error::Invalid("manifest entry missing 'k'".into()))?,
+            n: u("n").ok_or_else(|| Error::Invalid("manifest entry missing 'n'".into()))?,
+            b: u("b"),
+        })
+    }
+
+    pub fn pad_shape(&self) -> PadShape {
+        PadShape {
+            l: self.l.unwrap_or(1),
+            r: self.r,
+            k: self.k,
+            n: self.n,
+        }
+    }
+
+    /// Does a system with requirements `req` fit this artifact?
+    pub fn fits(&self, req: &PadShape) -> bool {
+        self.l.unwrap_or(usize::MAX) >= req.l
+            && self.r >= req.r
+            && self.k >= req.k
+            && self.n >= req.n
+    }
+
+    /// Padded-volume proxy used to pick the *smallest* fitting shape.
+    pub fn volume(&self) -> usize {
+        self.l.unwrap_or(1) * self.r * self.k * self.b.unwrap_or(1) + self.n
+    }
+}
+
+/// Loaded + compiled artifacts, ready to execute.
+pub struct Registry {
+    pub client: xla::PjRtClient,
+    pub metas: Vec<ArtifactMeta>,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    pub dir: PathBuf,
+}
+
+impl Registry {
+    /// Parse manifest.json only (no PJRT) — used by tests and tooling
+    /// that just needs shape metadata.
+    pub fn read_manifest(dir: &Path) -> Result<Vec<ArtifactMeta>, Error> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| Error::Io(format!("read manifest in {}: {e}", dir.display())))?;
+        let v = Json::parse(&text).map_err(|e| Error::Invalid(e.to_string()))?;
+        v.as_arr()
+            .ok_or_else(|| Error::Invalid("manifest is not an array".into()))?
+            .iter()
+            .map(ArtifactMeta::from_json)
+            .collect()
+    }
+
+    /// Load every artifact in `dir` and compile it on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Registry, Error> {
+        let metas = Self::read_manifest(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        let mut executables = BTreeMap::new();
+        for meta in &metas {
+            let path = dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::Io("non-utf8 path".into()))?,
+            )
+            .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compile {}: {e}", meta.name)))?;
+            executables.insert(meta.name.clone(), exe);
+        }
+        Ok(Registry {
+            client,
+            metas,
+            executables,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&xla::PjRtLoadedExecutable> {
+        self.executables.get(name)
+    }
+
+    /// Smallest fitting artifact of a given entry kind.
+    pub fn best_fit(&self, entry: &str, req: &PadShape) -> Option<&ArtifactMeta> {
+        self.metas
+            .iter()
+            .filter(|m| m.entry == entry && m.fits(req))
+            .min_by_key(|m| m.volume())
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.metas.iter().map(|m| m.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(entry: &str, l: usize, r: usize, k: usize, n: usize) -> ArtifactMeta {
+        ArtifactMeta {
+            name: format!("{entry}_{l}_{r}_{k}_{n}"),
+            file: String::new(),
+            entry: entry.to_string(),
+            l: Some(l),
+            r,
+            k,
+            n,
+            b: None,
+        }
+    }
+
+    #[test]
+    fn fits_logic() {
+        let m = meta("solve", 64, 256, 4, 8192);
+        assert!(m.fits(&PadShape { l: 10, r: 100, k: 4, n: 5000 }));
+        assert!(!m.fits(&PadShape { l: 65, r: 100, k: 4, n: 5000 }));
+        assert!(!m.fits(&PadShape { l: 10, r: 257, k: 4, n: 5000 }));
+        assert!(!m.fits(&PadShape { l: 10, r: 100, k: 5, n: 5000 }));
+        assert!(!m.fits(&PadShape { l: 10, r: 100, k: 4, n: 9000 }));
+    }
+
+    #[test]
+    fn manifest_parses_real_artifacts() {
+        // `make artifacts` must have produced a manifest in artifacts/.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let metas = Registry::read_manifest(&dir).unwrap();
+        assert!(metas.len() >= 5);
+        assert!(metas.iter().any(|m| m.entry == "solve"));
+        assert!(metas.iter().any(|m| m.entry == "level_step"));
+        assert!(metas.iter().any(|m| m.entry == "solve_batched"));
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest() {
+        let metas = vec![
+            meta("solve", 512, 8, 2, 8192),
+            meta("solve", 64, 256, 4, 8192),
+        ];
+        let reg_like = |req: &PadShape| -> Option<String> {
+            metas
+                .iter()
+                .filter(|m| m.entry == "solve" && m.fits(req))
+                .min_by_key(|m| m.volume())
+                .map(|m| m.name.clone())
+        };
+        // Thin chain fits the chain artifact (smaller volume).
+        let thin = PadShape { l: 400, r: 4, k: 2, n: 4000 };
+        assert_eq!(reg_like(&thin).unwrap(), "solve_512_8_2_8192");
+        // Fat short system only fits the wide artifact.
+        let fat = PadShape { l: 20, r: 200, k: 3, n: 4000 };
+        assert_eq!(reg_like(&fat).unwrap(), "solve_64_256_4_8192");
+        // Nothing fits.
+        let huge = PadShape { l: 20, r: 200, k: 3, n: 50_000 };
+        assert!(reg_like(&huge).is_none());
+    }
+}

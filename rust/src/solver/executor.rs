@@ -1,0 +1,260 @@
+//! Executor for *transformed* systems: the level-set execution model over
+//! a [`TransformResult`], where rewritten rows evaluate their folded
+//! equations (constants are linear functionals of b, so the executor is
+//! reusable across right-hand sides — the "preprocessing step + any
+//! SpTRSV implementation" usage the paper describes).
+
+use std::sync::Arc;
+
+use crate::solver::levelset::SharedVec;
+use crate::solver::pool::Pool;
+use crate::sparse::Csr;
+use crate::transform::TransformResult;
+
+/// Levels smaller than this are computed inline by the submitting thread:
+/// a pool rendezvous costs far more than a handful of rows (this is the
+/// same "thin levels waste parallel hardware" effect the paper targets,
+/// showing up inside the runtime).
+const INLINE_LEVEL_WIDTH: usize = 64;
+
+/// Flattened execution plan: the transformed system in CSR-like arrays.
+///
+/// Original and rewritten rows share one representation —
+/// `x[i] = (Σ w_m b[m] - Σ a_k x[k]) * inv_diag[i]` — so the hot loop has
+/// no branches and no pointer chasing through boxed equations. Built once
+/// per (matrix, transform); reused across right-hand sides. This was the
+/// top §Perf finding for L3: the boxed-equation path cost 4.5x on
+/// torso2/avgcost (see EXPERIMENTS.md §Perf).
+pub struct ExecPlan {
+    /// dependency arrays, rows concatenated in row-id order
+    indptr: Vec<usize>,
+    cols: Vec<u32>,
+    vals: Vec<f64>,
+    /// 1/diag for original rows; 1.0 for folded rewritten rows
+    inv_diag: Vec<f64>,
+    /// RHS functional b' = W b (identity rows: single (i, 1.0) entry)
+    bptr: Vec<usize>,
+    bcols: Vec<u32>,
+    bvals: Vec<f64>,
+}
+
+impl ExecPlan {
+    pub fn build(m: &Csr, t: &TransformResult) -> ExecPlan {
+        let n = m.nrows;
+        let mut plan = ExecPlan {
+            indptr: Vec::with_capacity(n + 1),
+            cols: Vec::new(),
+            vals: Vec::new(),
+            inv_diag: Vec::with_capacity(n),
+            bptr: Vec::with_capacity(n + 1),
+            bcols: Vec::new(),
+            bvals: Vec::new(),
+        };
+        plan.indptr.push(0);
+        plan.bptr.push(0);
+        for i in 0..n {
+            match &t.equations[i] {
+                None => {
+                    plan.cols.extend_from_slice(m.row_deps(i));
+                    plan.vals.extend_from_slice(m.row_dep_vals(i));
+                    plan.inv_diag.push(1.0 / m.diag(i));
+                    plan.bcols.push(i as u32);
+                    plan.bvals.push(1.0);
+                }
+                Some(eq) => {
+                    for &(c, a) in &eq.coeffs {
+                        plan.cols.push(c);
+                        plan.vals.push(a);
+                    }
+                    plan.inv_diag.push(1.0 / eq.diag);
+                    for &(mcol, w) in &eq.bcoeffs {
+                        plan.bcols.push(mcol);
+                        plan.bvals.push(w);
+                    }
+                }
+            }
+            plan.indptr.push(plan.cols.len());
+            plan.bptr.push(plan.bcols.len());
+        }
+        plan
+    }
+
+    #[inline]
+    pub fn solve_row(&self, i: usize, b: &[f64], x: &mut [f64]) {
+        let mut c = 0.0;
+        for k in self.bptr[i]..self.bptr[i + 1] {
+            c += self.bvals[k] * b[self.bcols[k] as usize];
+        }
+        let mut s = 0.0;
+        for k in self.indptr[i]..self.indptr[i + 1] {
+            s += self.vals[k] * x[self.cols[k] as usize];
+        }
+        x[i] = (c - s) * self.inv_diag[i];
+    }
+}
+
+pub struct TransformedSolver {
+    pub m: Arc<Csr>,
+    pub t: Arc<TransformResult>,
+    plan: Arc<ExecPlan>,
+    pool: Arc<Pool>,
+}
+
+impl TransformedSolver {
+    pub fn new(m: Arc<Csr>, t: Arc<TransformResult>, pool: Arc<Pool>) -> Self {
+        let plan = Arc::new(ExecPlan::build(&m, &t));
+        TransformedSolver { m, t, plan, pool }
+    }
+
+    pub fn from_parts(m: Csr, t: TransformResult, nworkers: usize) -> Self {
+        Self::new(
+            Arc::new(m),
+            Arc::new(t),
+            Arc::new(Pool::new(nworkers)),
+        )
+    }
+
+    /// Serial reference execution (used by tests and the stability
+    /// experiment, where thread scheduling must not perturb rounding).
+    pub fn solve_serial(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = vec![0.0; self.m.nrows];
+        for lvl in &self.t.levels {
+            for &r in lvl {
+                self.plan.solve_row(r as usize, b, &mut x);
+            }
+        }
+        x
+    }
+
+    /// Parallel level-set execution over the transformed levels.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = vec![0.0; self.m.nrows];
+        self.solve_into(b, &mut x);
+        x
+    }
+
+    pub fn solve_into(&self, b: &[f64], x: &mut [f64]) {
+        assert_eq!(b.len(), self.m.nrows);
+        let b: Arc<Vec<f64>> = Arc::new(b.to_vec());
+        let xs = Arc::new(SharedVec(x.as_mut_ptr(), x.len()));
+        for lvl in 0..self.t.levels.len() {
+            let rows = &self.t.levels[lvl];
+            if rows.len() < INLINE_LEVEL_WIDTH || self.pool.len() == 1 {
+                let x = unsafe { xs.slice() };
+                for &r in rows {
+                    self.plan.solve_row(r as usize, &b, x);
+                }
+                continue;
+            }
+            let t = Arc::clone(&self.t);
+            let plan = Arc::clone(&self.plan);
+            let bb = Arc::clone(&b);
+            let xx = Arc::clone(&xs);
+            self.pool.run(move |id, nw| {
+                let rows = &t.levels[lvl];
+                let x = unsafe { xx.slice() };
+                for k in Pool::chunk(rows.len(), id, nw) {
+                    plan.solve_row(rows[k] as usize, &bb, x);
+                }
+            });
+        }
+    }
+
+    pub fn num_barriers(&self) -> usize {
+        self.t.levels.len().saturating_sub(1)
+    }
+}
+
+/// Row evaluation used by the assessment path (solver::validate), kept
+/// equation-based so it exactly mirrors the transformed system's algebra.
+#[inline]
+pub fn solve_row(m: &Csr, t: &TransformResult, i: usize, b: &[f64], x: &mut [f64]) {
+    match &t.equations[i] {
+        Some(eq) => x[i] = eq.evaluate(x, b),
+        None => {
+            let lo = m.indptr[i];
+            let hi = m.indptr[i + 1];
+            let mut sum = 0.0;
+            for k in lo..hi - 1 {
+                sum += m.data[k] * x[m.indices[k] as usize];
+            }
+            x[i] = (b[i] - sum) / m.data[hi - 1];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate;
+    use crate::transform::Strategy;
+    use crate::util::prop::assert_allclose;
+    use crate::util::rng::Rng;
+
+    fn check_strategy(m: Csr, strat: &str, nworkers: usize, seed: u64) {
+        let t = Strategy::parse(strat).unwrap().apply(&m);
+        t.validate(&m).unwrap();
+        let mut rng = Rng::new(seed);
+        let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-5.0, 5.0)).collect();
+        let x_ref = crate::solver::serial::solve(&m, &b);
+        let s = TransformedSolver::from_parts(m, t, nworkers);
+        let xs = s.solve_serial(&b);
+        let xp = s.solve(&b);
+        assert_allclose(&xs, &x_ref, 1e-9, 1e-11).unwrap();
+        assert_allclose(&xp, &x_ref, 1e-9, 1e-11).unwrap();
+    }
+
+    #[test]
+    fn avgcost_transformed_solve_matches() {
+        check_strategy(
+            generate::lung2_like(&generate::GenOptions::with_scale(0.05)),
+            "avgcost",
+            4,
+            1,
+        );
+        check_strategy(
+            generate::torso2_like(&generate::GenOptions::with_scale(0.02)),
+            "avgcost",
+            3,
+            2,
+        );
+        check_strategy(generate::tridiagonal(150, &Default::default()), "avgcost", 2, 3);
+    }
+
+    #[test]
+    fn manual_transformed_solve_matches() {
+        check_strategy(
+            generate::lung2_like(&generate::GenOptions::with_scale(0.05)),
+            "manual",
+            4,
+            4,
+        );
+        check_strategy(
+            generate::random_lower(300, 4, 0.85, &Default::default()),
+            "manual:5",
+            3,
+            5,
+        );
+    }
+
+    #[test]
+    fn identity_strategy_equals_levelset() {
+        let m = generate::banded(200, 4, 0.5, &Default::default());
+        check_strategy(m, "none", 2, 6);
+    }
+
+    #[test]
+    fn fewer_barriers_after_transform() {
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
+        let t_none = Strategy::None.apply(&m);
+        let t_avg = Strategy::parse("avgcost").unwrap().apply(&m);
+        let s_none = TransformedSolver::from_parts(m.clone(), t_none, 1);
+        let s_avg = TransformedSolver::from_parts(m, t_avg, 1);
+        assert!(
+            s_avg.num_barriers() < s_none.num_barriers() / 2,
+            "{} vs {}",
+            s_avg.num_barriers(),
+            s_none.num_barriers()
+        );
+    }
+}

@@ -1,0 +1,22 @@
+//! SpTRSV solver backends.
+//!
+//! * [`serial`]   — Algorithm 1 of the paper: CSR forward substitution.
+//! * [`levelset`] — parallel level-set solver: rows of a level split
+//!   across worker threads, barrier between levels.
+//! * [`syncfree`] — synchronization-free solver: atomic dependency
+//!   counters, busy-waiting consumers (Liu et al. style), no barriers.
+//! * [`executor`] — evaluates a *transformed* system
+//!   ([`crate::transform::TransformResult`]): rewritten rows run their
+//!   folded equations, original rows run off the CSR; serial and
+//!   level-parallel variants.
+//! * [`pool`]     — the persistent worker pool + barrier the parallel
+//!   backends share.
+//! * [`validate`] — residual / forward-error checks shared by tests,
+//!   examples and the stability experiment.
+
+pub mod executor;
+pub mod levelset;
+pub mod pool;
+pub mod serial;
+pub mod syncfree;
+pub mod validate;

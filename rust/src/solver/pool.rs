@@ -1,0 +1,207 @@
+//! Persistent worker pool with a reusable barrier — the parallel substrate
+//! shared by the level-set solver, the sync-free solver and the
+//! transformed-system executor. (rayon is not in the vendored registry.)
+//!
+//! Workers park on a generation-counted run signal; `run()` hands every
+//! worker the same closure and returns when all workers finished. The
+//! closure receives `(worker_id, nworkers)` and partitions work itself.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Arc<dyn Fn(usize, usize) + Send + Sync>;
+
+struct Shared {
+    state: Mutex<State>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    generation: AtomicU64,
+    remaining: AtomicUsize,
+}
+
+struct State {
+    job: Option<Job>,
+    generation: u64,
+    shutdown: bool,
+}
+
+pub struct Pool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    nworkers: usize,
+}
+
+impl Pool {
+    /// A pool with `nworkers` threads (>= 1). Workers are created once and
+    /// reused across `run()` calls — no per-solve spawn cost.
+    pub fn new(nworkers: usize) -> Pool {
+        let nworkers = nworkers.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                job: None,
+                generation: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            generation: AtomicU64::new(0),
+            remaining: AtomicUsize::new(0),
+        });
+        let workers = (0..nworkers)
+            .map(|id| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("sptrsv-worker-{id}"))
+                    .spawn(move || worker_loop(sh, id, nworkers))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Pool {
+            shared,
+            workers,
+            nworkers,
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn len(&self) -> usize {
+        self.nworkers
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Run `job(worker_id, nworkers)` on every worker; returns when all
+    /// are done.
+    pub fn run(&self, job: impl Fn(usize, usize) + Send + Sync + 'static) {
+        self.run_arc(Arc::new(job));
+    }
+
+    pub fn run_arc(&self, job: Job) {
+        let mut st = self.shared.state.lock().unwrap();
+        self.shared
+            .remaining
+            .store(self.nworkers, Ordering::SeqCst);
+        st.job = Some(job);
+        st.generation += 1;
+        let gen = st.generation;
+        self.shared.generation.store(gen, Ordering::SeqCst);
+        self.shared.work_cv.notify_all();
+        while self.shared.remaining.load(Ordering::SeqCst) != 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+
+    /// Split `0..len` into `self.len()` contiguous chunks; chunk for
+    /// worker `id`.
+    pub fn chunk(len: usize, id: usize, nworkers: usize) -> std::ops::Range<usize> {
+        let per = len.div_ceil(nworkers);
+        let lo = (id * per).min(len);
+        let hi = ((id + 1) * per).min(len);
+        lo..hi
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>, id: usize, nworkers: usize) {
+    let mut seen_gen = 0u64;
+    loop {
+        let job = {
+            let mut st = sh.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.generation > seen_gen {
+                    seen_gen = st.generation;
+                    break st.job.clone().expect("job set with generation");
+                }
+                st = sh.work_cv.wait(st).unwrap();
+            }
+        };
+        job(id, nworkers);
+        if sh.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let _st = sh.state.lock().unwrap();
+            sh.done_cv.notify_all();
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64 as A64;
+
+    #[test]
+    fn all_workers_run_once_per_call() {
+        let pool = Pool::new(4);
+        let counter = Arc::new(A64::new(0));
+        for _ in 0..50 {
+            let c = Arc::clone(&counter);
+            pool.run(move |_, _| {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 200);
+    }
+
+    #[test]
+    fn chunks_cover_range_exactly() {
+        for len in [0usize, 1, 7, 64, 1001] {
+            for nw in [1usize, 2, 3, 8] {
+                let mut covered = vec![false; len];
+                for id in 0..nw {
+                    for i in Pool::chunk(len, id, nw) {
+                        assert!(!covered[i], "overlap at {i}");
+                        covered[i] = true;
+                    }
+                }
+                assert!(covered.iter().all(|&c| c), "len {len} nw {nw}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_sum_matches_serial() {
+        let pool = Pool::new(3);
+        let data: Vec<u64> = (0..10_000).collect();
+        let data = Arc::new(data);
+        let partial = Arc::new(Mutex::new(vec![0u64; 3]));
+        let (d, p) = (Arc::clone(&data), Arc::clone(&partial));
+        pool.run(move |id, nw| {
+            let r = Pool::chunk(d.len(), id, nw);
+            let s: u64 = d[r].iter().sum();
+            p.lock().unwrap()[id] = s;
+        });
+        let total: u64 = partial.lock().unwrap().iter().sum();
+        assert_eq!(total, 10_000 * 9_999 / 2);
+    }
+
+    #[test]
+    fn single_worker_pool() {
+        let pool = Pool::new(1);
+        let flag = Arc::new(A64::new(0));
+        let f = Arc::clone(&flag);
+        pool.run(move |id, nw| {
+            assert_eq!(id, 0);
+            assert_eq!(nw, 1);
+            f.store(7, Ordering::SeqCst);
+        });
+        assert_eq!(flag.load(Ordering::SeqCst), 7);
+    }
+}

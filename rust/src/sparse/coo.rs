@@ -1,0 +1,112 @@
+//! Coordinate (triplet) format — the interchange format of Matrix Market
+//! files; converted to CSR at the system boundary.
+
+use crate::error::Error;
+use crate::sparse::Csr;
+
+#[derive(Debug, Clone, Default)]
+pub struct Coo {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub entries: Vec<(u32, u32, f64)>, // (row, col, value)
+}
+
+impl Coo {
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Coo {
+            nrows,
+            ncols,
+            entries: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.nrows && c < self.ncols);
+        self.entries.push((r as u32, c as u32, v));
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Convert to CSR. Duplicate (r, c) entries are summed (Matrix Market
+    /// semantics); rows are sorted by column.
+    pub fn to_csr(&self) -> Result<Csr, Error> {
+        let mut entries = self.entries.clone();
+        entries.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        let mut indptr = Vec::with_capacity(self.nrows + 1);
+        let mut indices: Vec<u32> = Vec::with_capacity(entries.len());
+        let mut data: Vec<f64> = Vec::with_capacity(entries.len());
+        indptr.push(0);
+        let mut row = 0usize;
+        for (r, c, v) in entries {
+            let r = r as usize;
+            if r >= self.nrows {
+                return Err(Error::Invalid(format!("row {r} out of range")));
+            }
+            while row < r {
+                indptr.push(indices.len());
+                row += 1;
+            }
+            if let (Some(&lc), Some(lv)) = (indices.last(), data.last_mut()) {
+                if *indptr.last().unwrap() < indices.len() && lc == c {
+                    *lv += v; // duplicate: accumulate
+                    continue;
+                }
+            }
+            indices.push(c);
+            data.push(v);
+        }
+        while row < self.nrows {
+            indptr.push(indices.len());
+            row += 1;
+        }
+        Csr::new(self.nrows, self.ncols, indptr, indices, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn to_csr_sorts_and_fills_empty_rows() {
+        let mut m = Coo::new(4, 4);
+        m.push(2, 1, 4.0);
+        m.push(0, 0, 2.0);
+        m.push(2, 2, 5.0);
+        let c = m.to_csr().unwrap();
+        assert_eq!(c.indptr, vec![0, 1, 1, 3, 3]);
+        assert_eq!(c.indices, vec![0, 1, 2]);
+        assert_eq!(c.data, vec![2.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn duplicates_are_summed() {
+        let mut m = Coo::new(1, 1);
+        m.push(0, 0, 1.5);
+        m.push(0, 0, 2.5);
+        let c = m.to_csr().unwrap();
+        assert_eq!(c.data, vec![4.0]);
+        assert_eq!(c.nnz(), 1);
+    }
+
+    #[test]
+    fn unsorted_row_within_row() {
+        let mut m = Coo::new(2, 3);
+        m.push(1, 2, 3.0);
+        m.push(1, 0, 1.0);
+        m.push(1, 1, 2.0);
+        let c = m.to_csr().unwrap();
+        assert_eq!(c.row_cols(1), &[0, 1, 2]);
+        assert_eq!(c.row_vals(1), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = Coo::new(3, 3);
+        let c = m.to_csr().unwrap();
+        assert_eq!(c.nnz(), 0);
+        assert_eq!(c.indptr, vec![0, 0, 0, 0]);
+    }
+}

@@ -1,0 +1,357 @@
+//! Compressed Sparse Row storage and the lower-triangular invariants the
+//! solver stack relies on.
+
+use crate::error::Error;
+
+/// CSR matrix. For SpTRSV use the matrix must satisfy
+/// [`Csr::validate_lower_triangular`]: square, every row's column indices
+/// strictly ascending, all indices `<= row`, and the diagonal present (and
+/// therefore last) in every row with a nonzero value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub data: Vec<f64>,
+}
+
+impl Csr {
+    pub fn new(
+        nrows: usize,
+        ncols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        data: Vec<f64>,
+    ) -> Result<Self, Error> {
+        if indptr.len() != nrows + 1 {
+            return Err(Error::Invalid(format!(
+                "indptr length {} != nrows+1 {}",
+                indptr.len(),
+                nrows + 1
+            )));
+        }
+        if indices.len() != data.len() {
+            return Err(Error::Invalid("indices/data length mismatch".into()));
+        }
+        if *indptr.last().unwrap_or(&0) != indices.len() {
+            return Err(Error::Invalid("indptr tail != nnz".into()));
+        }
+        if indptr.windows(2).any(|w| w[0] > w[1]) {
+            return Err(Error::Invalid("indptr not monotone".into()));
+        }
+        if indices.iter().any(|&c| c as usize >= ncols) {
+            return Err(Error::Invalid("column index out of range".into()));
+        }
+        Ok(Csr {
+            nrows,
+            ncols,
+            indptr,
+            indices,
+            data,
+        })
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Column indices of row i (including the diagonal if stored).
+    #[inline]
+    pub fn row_cols(&self, i: usize) -> &[u32] {
+        &self.indices[self.indptr[i]..self.indptr[i + 1]]
+    }
+
+    #[inline]
+    pub fn row_vals(&self, i: usize) -> &[f64] {
+        &self.data[self.indptr[i]..self.indptr[i + 1]]
+    }
+
+    /// Off-diagonal dependencies of row i (all stored columns except the
+    /// last). Valid only on a validated lower-triangular matrix.
+    #[inline]
+    pub fn row_deps(&self, i: usize) -> &[u32] {
+        let lo = self.indptr[i];
+        let hi = self.indptr[i + 1];
+        &self.indices[lo..hi - 1]
+    }
+
+    #[inline]
+    pub fn row_dep_vals(&self, i: usize) -> &[f64] {
+        let lo = self.indptr[i];
+        let hi = self.indptr[i + 1];
+        &self.data[lo..hi - 1]
+    }
+
+    /// Diagonal value of row i (last stored entry).
+    #[inline]
+    pub fn diag(&self, i: usize) -> f64 {
+        self.data[self.indptr[i + 1] - 1]
+    }
+
+    /// Number of off-diagonal dependencies (indegree in DAG_L) of row i.
+    #[inline]
+    pub fn indegree(&self, i: usize) -> usize {
+        self.indptr[i + 1] - self.indptr[i] - 1
+    }
+
+    /// Paper cost model: FLOPs to compute row i = 2*nnz(row) - 1
+    /// (a multiply+add per dependency, plus subtract-free diagonal divide).
+    #[inline]
+    pub fn row_cost(&self, i: usize) -> usize {
+        2 * (self.indptr[i + 1] - self.indptr[i]) - 1
+    }
+
+    /// Check every lower-triangular SpTRSV invariant; cheap enough to call
+    /// at system boundaries (file load, generator output).
+    pub fn validate_lower_triangular(&self) -> Result<(), Error> {
+        if self.nrows != self.ncols {
+            return Err(Error::Invalid(format!(
+                "not square: {}x{}",
+                self.nrows, self.ncols
+            )));
+        }
+        for i in 0..self.nrows {
+            let cols = self.row_cols(i);
+            if cols.is_empty() {
+                return Err(Error::Invalid(format!("row {i}: empty (no diagonal)")));
+            }
+            if cols.windows(2).any(|w| w[0] >= w[1]) {
+                return Err(Error::Invalid(format!("row {i}: columns not ascending")));
+            }
+            if *cols.last().unwrap() as usize != i {
+                return Err(Error::Invalid(format!(
+                    "row {i}: diagonal missing or above-diagonal entry present"
+                )));
+            }
+            let d = self.diag(i);
+            if d == 0.0 || !d.is_finite() {
+                return Err(Error::Invalid(format!("row {i}: bad diagonal {d}")));
+            }
+        }
+        Ok(())
+    }
+
+    /// y = L * x (for residual checks).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.ncols);
+        let mut y = vec![0.0; self.nrows];
+        for i in 0..self.nrows {
+            let lo = self.indptr[i];
+            let hi = self.indptr[i + 1];
+            let mut acc = 0.0;
+            for k in lo..hi {
+                acc += self.data[k] * x[self.indices[k] as usize];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// ||Lx - b||_inf.
+    pub fn residual_inf(&self, x: &[f64], b: &[f64]) -> f64 {
+        self.matvec(x)
+            .iter()
+            .zip(b)
+            .map(|(yi, bi)| (yi - bi).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Extract the lower-triangular part (incl. diagonal) of a general
+    /// square CSR; rows missing a diagonal get a unit diagonal (the usual
+    /// convention when treating an L factor stored without it).
+    pub fn lower_triangular_part(&self) -> Result<Csr, Error> {
+        if self.nrows != self.ncols {
+            return Err(Error::Invalid("lower part of a non-square matrix".into()));
+        }
+        let mut indptr = Vec::with_capacity(self.nrows + 1);
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        indptr.push(0);
+        for i in 0..self.nrows {
+            let mut entries: Vec<(u32, f64)> = self
+                .row_cols(i)
+                .iter()
+                .zip(self.row_vals(i))
+                .filter(|(&c, _)| (c as usize) < i)
+                .map(|(&c, &v)| (c, v))
+                .collect();
+            entries.sort_unstable_by_key(|&(c, _)| c);
+            let diag = self
+                .row_cols(i)
+                .iter()
+                .zip(self.row_vals(i))
+                .find(|(&c, _)| c as usize == i)
+                .map(|(_, &v)| v)
+                .unwrap_or(1.0);
+            for (c, v) in entries {
+                indices.push(c);
+                data.push(v);
+            }
+            indices.push(i as u32);
+            data.push(diag);
+            indptr.push(indices.len());
+        }
+        Csr::new(self.nrows, self.ncols, indptr, indices, data)
+    }
+}
+
+/// Convenience builder used by generators and tests: rows given as
+/// `(deps, dep_vals, diag)` with deps strictly ascending.
+pub struct LowerBuilder {
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    data: Vec<f64>,
+}
+
+impl LowerBuilder {
+    pub fn new() -> Self {
+        LowerBuilder {
+            indptr: vec![0],
+            indices: Vec::new(),
+            data: Vec::new(),
+        }
+    }
+
+    pub fn with_capacity(nrows: usize, nnz: usize) -> Self {
+        let mut b = LowerBuilder::new();
+        b.indptr.reserve(nrows);
+        b.indices.reserve(nnz);
+        b.data.reserve(nnz);
+        b
+    }
+
+    /// Append the next row. `deps` must be strictly ascending and < row id.
+    pub fn row(&mut self, deps: &[(u32, f64)], diag: f64) -> &mut Self {
+        let i = self.indptr.len() - 1;
+        debug_assert!(deps.windows(2).all(|w| w[0].0 < w[1].0));
+        debug_assert!(deps.iter().all(|&(c, _)| (c as usize) < i));
+        for &(c, v) in deps {
+            self.indices.push(c);
+            self.data.push(v);
+        }
+        self.indices.push(i as u32);
+        self.data.push(diag);
+        self.indptr.push(self.indices.len());
+        self
+    }
+
+    pub fn finish(self) -> Csr {
+        let n = self.indptr.len() - 1;
+        let m = Csr {
+            nrows: n,
+            ncols: n,
+            indptr: self.indptr,
+            indices: self.indices,
+            data: self.data,
+        };
+        debug_assert!(m.validate_lower_triangular().is_ok());
+        m
+    }
+}
+
+impl Default for LowerBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Csr {
+        // L = [[2,0,0],[1,3,0],[0,4,5]]
+        let mut b = LowerBuilder::new();
+        b.row(&[], 2.0);
+        b.row(&[(0, 1.0)], 3.0);
+        b.row(&[(1, 4.0)], 5.0);
+        b.finish()
+    }
+
+    #[test]
+    fn builder_and_accessors() {
+        let m = small();
+        assert_eq!(m.nnz(), 5);
+        assert_eq!(m.diag(0), 2.0);
+        assert_eq!(m.diag(2), 5.0);
+        assert_eq!(m.row_deps(2), &[1]);
+        assert_eq!(m.row_dep_vals(1), &[1.0]);
+        assert_eq!(m.indegree(0), 0);
+        assert_eq!(m.indegree(2), 1);
+    }
+
+    #[test]
+    fn row_cost_matches_paper_model() {
+        let m = small();
+        assert_eq!(m.row_cost(0), 1); // 2*1-1
+        assert_eq!(m.row_cost(1), 3); // 2*2-1
+    }
+
+    #[test]
+    fn validate_accepts_good_matrix() {
+        small().validate_lower_triangular().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_zero_diag() {
+        let mut m = small();
+        let last = m.indptr[1] - 1;
+        m.data[last] = 0.0;
+        assert!(m.validate_lower_triangular().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_upper_entry() {
+        let m = Csr::new(2, 2, vec![0, 2, 3], vec![0, 1, 1], vec![1.0, 9.0, 1.0]).unwrap();
+        assert!(m.validate_lower_triangular().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unsorted() {
+        let m = Csr::new(
+            3,
+            3,
+            vec![0, 1, 2, 5],
+            vec![0, 1, 1, 0, 2],
+            vec![1.0; 5],
+        )
+        .unwrap();
+        assert!(m.validate_lower_triangular().is_err());
+    }
+
+    #[test]
+    fn new_rejects_inconsistent() {
+        assert!(Csr::new(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err()); // indptr len
+        assert!(Csr::new(1, 1, vec![0, 2], vec![0], vec![1.0]).is_err()); // tail
+        assert!(Csr::new(1, 1, vec![0, 1], vec![5], vec![1.0]).is_err()); // col range
+    }
+
+    #[test]
+    fn matvec_and_residual() {
+        let m = small();
+        let x = vec![1.0, 2.0, 3.0];
+        let y = m.matvec(&x);
+        assert_eq!(y, vec![2.0, 7.0, 23.0]);
+        assert_eq!(m.residual_inf(&x, &y), 0.0);
+        assert!(m.residual_inf(&x, &[0.0, 0.0, 0.0]) == 23.0);
+    }
+
+    #[test]
+    fn lower_part_extraction() {
+        // General matrix with an upper entry and a missing diagonal on row 0.
+        let g = Csr::new(
+            2,
+            2,
+            vec![0, 1, 3],
+            vec![1, 0, 1],
+            vec![7.0, 4.0, 3.0],
+        )
+        .unwrap();
+        let l = g.lower_triangular_part().unwrap();
+        l.validate_lower_triangular().unwrap();
+        assert_eq!(l.diag(0), 1.0); // filled-in unit diagonal
+        assert_eq!(l.diag(1), 3.0);
+        assert_eq!(l.row_deps(1), &[0]);
+    }
+}

@@ -1,0 +1,511 @@
+//! Synthetic workload generators.
+//!
+//! SuiteSparse is not reachable from this environment, so the two matrices
+//! of the paper's evaluation (lung2, torso2) are replaced by structural
+//! analogs (see DESIGN.md §3). The rewriting strategies operate purely on
+//! the dependency/level structure and the nnz counts, so generators that
+//! reproduce the published level profiles exercise identical code paths:
+//!
+//! * **lung2-like** — n=109,460; 479 levels, 453 of which ("94%") hold
+//!   exactly 2 rows (the near-serial thin chain); 26 fat levels in three
+//!   bump clusters; indegree ≤ 2 on chain rows; total level cost ≈ 437,834.
+//! * **torso2-like** — n=115,967; 513 levels with a triangular (linearly
+//!   decreasing) width profile; indegrees 2–6 (mean ≈ 4); total level cost
+//!   ≈ 1,035,484.
+//!
+//! All generators are deterministic in the seed and emit matrices ordered
+//! level-by-level (rows of level l precede rows of level l+1), which keeps
+//! them lower-triangular by construction.
+
+use crate::sparse::csr::{Csr, LowerBuilder};
+use crate::util::rng::Rng;
+
+/// Generator options shared by the structured generators.
+#[derive(Debug, Clone)]
+pub struct GenOptions {
+    pub seed: u64,
+    /// Scale factor on the matrix size (rows and level widths); 1.0 is the
+    /// paper-sized instance, smaller values give fast test instances with
+    /// the same shape.
+    pub scale: f64,
+    /// Well-conditioned values (default) vs. ill-scaled values spanning
+    /// ~1e-8..1e2 on the diagonal, mimicking lung2's raw scaling; used by
+    /// the numerical-stability experiment (paper §IV, Fig 3 middle).
+    pub ill_scaled: bool,
+}
+
+impl Default for GenOptions {
+    fn default() -> Self {
+        GenOptions {
+            seed: 0x5EED,
+            scale: 1.0,
+            ill_scaled: false,
+        }
+    }
+}
+
+impl GenOptions {
+    pub fn with_scale(scale: f64) -> Self {
+        GenOptions {
+            scale,
+            ..Default::default()
+        }
+    }
+}
+
+/// A level plan: the width of each level; the generator materializes rows
+/// so that the level-set construction of the result reproduces the plan
+/// exactly (each row in level l > 0 has at least one dependency in level
+/// l-1; level-0 rows have none).
+#[derive(Debug, Clone)]
+pub struct LevelPlan {
+    pub widths: Vec<usize>,
+}
+
+impl LevelPlan {
+    pub fn total_rows(&self) -> usize {
+        self.widths.iter().sum()
+    }
+}
+
+fn gen_values(rng: &mut Rng, ndeps: usize, ill_scaled: bool) -> (Vec<f64>, f64) {
+    let dep_vals: Vec<f64> = (0..ndeps)
+        .map(|_| {
+            let v = rng.uniform(-1.0, 1.0);
+            if ill_scaled {
+                v * 10f64.powf(rng.uniform(-4.0, 4.0))
+            } else {
+                v
+            }
+        })
+        .collect();
+    let diag = if ill_scaled {
+        let mag = 10f64.powf(rng.uniform(-8.0, 2.0));
+        if rng.chance(0.5) {
+            mag
+        } else {
+            -mag
+        }
+    } else {
+        // Diagonally dominant: keeps forward substitution well-conditioned.
+        rng.uniform(1.0, 2.0) * (1.0 + ndeps as f64)
+    };
+    (dep_vals, diag)
+}
+
+/// Materialize a level plan into a lower-triangular CSR.
+///
+/// `deps_for` decides, per row, how many dependencies it gets *in addition
+/// to* the mandatory one in the previous level (which pins its level);
+/// extra dependencies are drawn from earlier levels with geometric
+/// lookback (`lookback_p`), biased toward nearby levels — mimicking the
+/// banded locality of discretization matrices.
+pub fn from_level_plan(
+    plan: &LevelPlan,
+    opts: &GenOptions,
+    mut extra_deps_for: impl FnMut(&mut Rng, usize, usize) -> usize,
+    lookback_p: f64,
+) -> Csr {
+    let mut rng = Rng::new(opts.seed);
+    let nlevels = plan.widths.len();
+    // Row-id ranges per level.
+    let mut level_start = Vec::with_capacity(nlevels + 1);
+    let mut acc = 0usize;
+    for &w in &plan.widths {
+        level_start.push(acc);
+        acc += w;
+    }
+    level_start.push(acc);
+    let n = acc;
+
+    let mut b = LowerBuilder::with_capacity(n, n * 3);
+    let mut deps_buf: Vec<u32> = Vec::new();
+    // Localized dependency sampling: like the discretization matrices the
+    // paper evaluates, a row's dependencies cluster around its own
+    // relative position in earlier levels. This spatial locality is what
+    // keeps dependency unions overlapping under rewriting (torso2's total
+    // cost grows 40%, not unboundedly, under the blind manual strategy).
+    let local_pick = |rng: &mut Rng, lvl: usize, rel: f64, lo: usize, hi: usize| {
+        let w = hi - lo;
+        let _ = lvl;
+        let center = lo + ((rel * w as f64) as usize).min(w - 1);
+        let window = (w / 64).max(2);
+        let a = center.saturating_sub(window).max(lo);
+        let z = (center + window + 1).min(hi);
+        rng.range(a, z)
+    };
+    for lvl in 0..nlevels {
+        let width = plan.widths[lvl];
+        for r in 0..width {
+            let row = level_start[lvl] + r;
+            let rel = r as f64 / width as f64;
+            deps_buf.clear();
+            if lvl > 0 {
+                // Mandatory dependency in the previous level pins the level.
+                let prev_lo = level_start[lvl - 1];
+                let prev_hi = level_start[lvl];
+                deps_buf.push(local_pick(&mut rng, lvl, rel, prev_lo, prev_hi) as u32);
+                // Extra dependencies with geometric level lookback.
+                let extras = extra_deps_for(&mut rng, lvl, row);
+                for _ in 0..extras {
+                    let mut back = 1usize;
+                    while back < lvl && rng.chance(lookback_p) {
+                        back += 1;
+                    }
+                    let src = lvl - back;
+                    let dep =
+                        local_pick(&mut rng, src, rel, level_start[src], level_start[src + 1])
+                            as u32;
+                    if !deps_buf.contains(&dep) {
+                        deps_buf.push(dep);
+                    }
+                }
+                deps_buf.sort_unstable();
+            }
+            let (vals, diag) = gen_values(&mut rng, deps_buf.len(), opts.ill_scaled);
+            let entries: Vec<(u32, f64)> = deps_buf
+                .iter()
+                .copied()
+                .zip(vals.iter().copied())
+                .collect();
+            b.row(&entries, diag);
+        }
+    }
+    let m = b.finish();
+    debug_assert_eq!(m.nrows, n);
+    m
+}
+
+/// lung2 structural analog. `scale=1.0` reproduces the published profile:
+/// 479 levels, 453 thin levels of 2 rows, 26 fat levels (~4175 rows each)
+/// in three bump clusters, chain indegree <= 2.
+pub fn lung2_like(opts: &GenOptions) -> Csr {
+    let plan = lung2_plan(opts.scale);
+    // Thin-chain rows: exactly 1 extra dep (both rows of the previous thin
+    // level when possible) => indegree 2, and crucially the union of the
+    // previous level's dependencies stays of size <= 2, so rewriting does
+    // not grow indegrees — the paper's key observation for lung2.
+    let widths = plan.widths.clone();
+    from_level_plan(
+        &plan,
+        opts,
+        move |rng, lvl, _| {
+            if widths[lvl] <= 2 {
+                1 // thin chain: mandatory + 1 = 2 deps
+            } else if rng.chance(0.5) {
+                1 // fat rows: 1-2 deps, averaging 1.5
+            } else {
+                0
+            }
+        },
+        0.0, // no lookback: deps live in the previous level only
+    )
+}
+
+/// The lung2 level-width plan (three fat bumps inside a long thin chain).
+pub fn lung2_plan(scale: f64) -> LevelPlan {
+    let nlevels = ((479.0 * scale.max(0.02)).round() as usize).max(12);
+    let nthin = (nlevels as f64 * 453.0 / 479.0).round() as usize;
+    let nfat = nlevels - nthin;
+    let fat_rows_total = (108_554.0 * scale).round() as usize;
+    let fat_w = (fat_rows_total / nfat.max(1)).max(3);
+    // Bump positions: ~24%, ~52%, ~84% through the level sequence.
+    let bump_starts = [
+        nlevels * 24 / 100,
+        nlevels * 52 / 100,
+        nlevels * 84 / 100,
+    ];
+    let per_bump = [nfat / 3, nfat / 3, nfat - 2 * (nfat / 3)];
+    let mut widths = vec![2usize; nlevels];
+    for (b, &start) in bump_starts.iter().enumerate() {
+        for i in 0..per_bump[b] {
+            let idx = (start + i).min(nlevels - 1);
+            widths[idx] = fat_w;
+        }
+    }
+    LevelPlan { widths }
+}
+
+/// torso2 structural analog: triangular level-width profile (wide head,
+/// thin tail), indegree mean ~4 overall but declining toward the thin
+/// tail — the FD-discretization locality that keeps the paper's manual
+/// rewriting at +40% total cost rather than exploding.
+pub fn torso2_like(opts: &GenOptions) -> Csr {
+    let plan = torso2_plan(opts.scale);
+    let widths = plan.widths.clone();
+    let avg_w = plan.total_rows() / plan.widths.len().max(1);
+    from_level_plan(
+        &plan,
+        opts,
+        move |rng, lvl, _| {
+            if widths[lvl] < avg_w {
+                rng.range(0, 3) // thin tail: 1..=3 deps total
+            } else {
+                rng.range(2, 6) // wide head: 3..=7 deps total
+            }
+        },
+        0.2,
+    )
+}
+
+/// The torso2 level-width plan: width decreases linearly from ~450 to 2
+/// over ~513 levels (sums to ~115,967 rows at scale 1).
+pub fn torso2_plan(scale: f64) -> LevelPlan {
+    let nlevels = ((513.0 * scale.max(0.02)).round() as usize).max(10);
+    let n_target = (115_967.0 * scale).round() as usize;
+    // width(l) = w0 * (1 - l/nlevels) + 2, with w0 solving the sum.
+    let w0 = (2.0 * (n_target as f64 - 2.0 * nlevels as f64) / nlevels as f64).max(2.0);
+    let mut widths = Vec::with_capacity(nlevels);
+    for l in 0..nlevels {
+        let frac = 1.0 - l as f64 / nlevels as f64;
+        widths.push(((w0 * frac).round() as usize + 2).max(2));
+    }
+    LevelPlan { widths }
+}
+
+/// Tridiagonal lower factor: the fully serial worst case — every level has
+/// exactly one row, n levels in total.
+pub fn tridiagonal(n: usize, opts: &GenOptions) -> Csr {
+    let mut rng = Rng::new(opts.seed);
+    let mut b = LowerBuilder::with_capacity(n, 2 * n);
+    for i in 0..n {
+        let (vals, diag) = gen_values(&mut rng, usize::from(i > 0), opts.ill_scaled);
+        if i == 0 {
+            b.row(&[], diag);
+        } else {
+            b.row(&[((i - 1) as u32, vals[0])], diag);
+        }
+    }
+    b.finish()
+}
+
+/// Banded lower factor: each row depends on up to `bandwidth` previous rows
+/// with fill probability `fill`.
+pub fn banded(n: usize, bandwidth: usize, fill: f64, opts: &GenOptions) -> Csr {
+    let mut rng = Rng::new(opts.seed);
+    let mut b = LowerBuilder::with_capacity(n, n * (1 + (bandwidth as f64 * fill) as usize));
+    let mut deps: Vec<(u32, f64)> = Vec::new();
+    for i in 0..n {
+        deps.clear();
+        let lo = i.saturating_sub(bandwidth);
+        for j in lo..i {
+            if rng.chance(fill) {
+                deps.push((j as u32, 0.0));
+            }
+        }
+        let (vals, diag) = gen_values(&mut rng, deps.len(), opts.ill_scaled);
+        for (d, v) in deps.iter_mut().zip(vals) {
+            d.1 = v;
+        }
+        b.row(&deps, diag);
+    }
+    b.finish()
+}
+
+/// Uniformly random lower factor: each row has 0..=max_deps dependencies
+/// drawn anywhere below it. Used heavily by the property tests.
+pub fn random_lower(n: usize, max_deps: usize, density: f64, opts: &GenOptions) -> Csr {
+    let mut rng = Rng::new(opts.seed);
+    let mut b = LowerBuilder::with_capacity(n, n * (1 + max_deps));
+    for i in 0..n {
+        let ndeps = if i == 0 || !rng.chance(density) {
+            0
+        } else {
+            rng.range(1, max_deps.min(i) + 1)
+        };
+        let cols = rng.sample_distinct(i, ndeps);
+        let (vals, diag) = gen_values(&mut rng, ndeps, opts.ill_scaled);
+        let entries: Vec<(u32, f64)> = cols
+            .into_iter()
+            .map(|c| c as u32)
+            .zip(vals)
+            .collect();
+        b.row(&entries, diag);
+    }
+    b.finish()
+}
+
+/// Lower triangular factor of an ILU(0)-style factorization of the
+/// 5-point Poisson stencil on an nx x ny grid: cell (i,j) depends on
+/// (i-1,j) and (i,j-1). The level sets are the grid anti-diagonals —
+/// a real discretization workload with a triangular-then-shrinking level
+/// profile (the classic SpTRSV benchmark structure, cf. paper refs
+/// [14-18]).
+pub fn poisson2d_ilu(nx: usize, ny: usize, opts: &GenOptions) -> Csr {
+    let mut rng = Rng::new(opts.seed);
+    let idx = |i: usize, j: usize| (i * ny + j) as u32;
+    let mut b = LowerBuilder::with_capacity(nx * ny, 3 * nx * ny);
+    let mut deps: Vec<(u32, f64)> = Vec::new();
+    for i in 0..nx {
+        for j in 0..ny {
+            deps.clear();
+            if i > 0 {
+                deps.push((idx(i - 1, j), 0.0));
+            }
+            if j > 0 {
+                deps.push((idx(i, j - 1), 0.0));
+            }
+            deps.sort_unstable_by_key(|&(c, _)| c);
+            let (vals, diag) = gen_values(&mut rng, deps.len(), opts.ill_scaled);
+            for (d, v) in deps.iter_mut().zip(vals) {
+                d.1 = v;
+            }
+            b.row(&deps, diag);
+        }
+    }
+    b.finish()
+}
+
+/// The 8-row example matrix of the paper's Fig. 1 (dependency pattern
+/// only; values are synthesized well-conditioned). Used in unit tests to
+/// pin level-set behaviour to the paper's worked example.
+pub fn fig1_example() -> Csr {
+    let mut b = LowerBuilder::new();
+    // Levels from Fig 1: L0 = {0,1,2}, L1 = {3,4}, L2 = {5,6}, L3 = {7}.
+    b.row(&[], 2.0); // 0
+    b.row(&[], 3.0); // 1
+    b.row(&[], 4.0); // 2
+    b.row(&[(0, 1.0)], 2.5); // 3 <- 0
+    b.row(&[(1, 1.0), (2, -1.0)], 3.5); // 4 <- 1,2
+    b.row(&[(3, 0.5)], 2.0); // 5 <- 3
+    b.row(&[(4, 1.5)], 4.0); // 6 <- 4
+    b.row(&[(0, 1.0), (3, -0.5), (6, 2.0)], 5.0); // 7 <- 0,3,6
+    b.finish()
+}
+
+/// The 4-row chain of the paper's Fig. 2 (x3 -> x1 -> x0 rewriting example).
+pub fn fig2_example() -> Csr {
+    let mut b = LowerBuilder::new();
+    b.row(&[], 2.0); // 0            level 0
+    b.row(&[(0, 1.0)], 3.0); // 1 <- 0      level 1
+    b.row(&[(0, -1.0)], 2.0); // 2 <- 0     level 1
+    b.row(&[(1, 2.0)], 4.0); // 3 <- 1      level 2
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tridiagonal_structure() {
+        let m = tridiagonal(10, &GenOptions::default());
+        m.validate_lower_triangular().unwrap();
+        assert_eq!(m.indegree(0), 0);
+        for i in 1..10 {
+            assert_eq!(m.row_deps(i), &[(i - 1) as u32]);
+        }
+    }
+
+    #[test]
+    fn random_lower_valid_and_deterministic() {
+        let o = GenOptions::default();
+        let a = random_lower(200, 4, 0.8, &o);
+        let b = random_lower(200, 4, 0.8, &o);
+        a.validate_lower_triangular().unwrap();
+        assert_eq!(a, b);
+        let c = random_lower(200, 4, 0.8, &GenOptions { seed: 1, ..o });
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn banded_respects_bandwidth() {
+        let m = banded(100, 5, 0.6, &GenOptions::default());
+        m.validate_lower_triangular().unwrap();
+        for i in 0..100 {
+            for &d in m.row_deps(i) {
+                assert!(i - (d as usize) <= 5);
+            }
+        }
+    }
+
+    #[test]
+    fn lung2_like_small_profile() {
+        let o = GenOptions::with_scale(0.05);
+        let m = lung2_like(&o);
+        m.validate_lower_triangular().unwrap();
+        let plan = lung2_plan(0.05);
+        assert_eq!(m.nrows, plan.total_rows());
+        // Chain rows have indegree <= 2.
+        for i in 0..m.nrows {
+            assert!(m.indegree(i) <= 2);
+        }
+    }
+
+    #[test]
+    fn lung2_full_scale_counts() {
+        let plan = lung2_plan(1.0);
+        assert_eq!(plan.widths.len(), 479);
+        let thin = plan.widths.iter().filter(|&&w| w == 2).count();
+        assert_eq!(thin, 453);
+        // Published n = 109,460; we match within ~1%.
+        let n = plan.total_rows();
+        assert!(
+            (n as f64 - 109_460.0).abs() / 109_460.0 < 0.01,
+            "n = {n}"
+        );
+    }
+
+    #[test]
+    fn torso2_full_scale_counts() {
+        let plan = torso2_plan(1.0);
+        assert_eq!(plan.widths.len(), 513);
+        let n = plan.total_rows();
+        assert!(
+            (n as f64 - 115_967.0).abs() / 115_967.0 < 0.02,
+            "n = {n}"
+        );
+        // Triangular: first width much larger than last.
+        assert!(plan.widths[0] > 100 * plan.widths[plan.widths.len() - 1] / 2);
+    }
+
+    #[test]
+    fn torso2_like_small_valid() {
+        let m = torso2_like(&GenOptions::with_scale(0.03));
+        m.validate_lower_triangular().unwrap();
+        // Mean indegree should be near 4 (2..6 uniform-ish).
+        let total_deps: usize = (0..m.nrows).map(|i| m.indegree(i)).sum();
+        let mean = total_deps as f64 / m.nrows as f64;
+        assert!(mean > 1.5 && mean < 5.0, "mean indegree {mean}");
+    }
+
+    #[test]
+    fn ill_scaled_values_span_magnitudes() {
+        let m = tridiagonal(
+            500,
+            &GenOptions {
+                ill_scaled: true,
+                ..Default::default()
+            },
+        );
+        let mags: Vec<f64> = (0..500).map(|i| m.diag(i).abs().log10()).collect();
+        let min = mags.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = mags.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(max - min > 5.0, "magnitude span {min}..{max}");
+    }
+
+    #[test]
+    fn fig_examples_valid() {
+        fig1_example().validate_lower_triangular().unwrap();
+        fig2_example().validate_lower_triangular().unwrap();
+    }
+
+    #[test]
+    fn poisson2d_levels_are_antidiagonals() {
+        let m = poisson2d_ilu(7, 5, &GenOptions::default());
+        m.validate_lower_triangular().unwrap();
+        assert_eq!(m.nrows, 35);
+        let lv = crate::graph::Levels::build(&m);
+        // Level of cell (i, j) is i + j; count of levels = nx + ny - 1.
+        assert_eq!(lv.num_levels(), 7 + 5 - 1);
+        for i in 0..7 {
+            for j in 0..5 {
+                assert_eq!(lv.level_of[i * 5 + j] as usize, i + j);
+            }
+        }
+        // Widths rise to min(nx, ny) then fall — the diamond profile.
+        assert_eq!(lv.max_width(), 5);
+        assert_eq!(lv.width(0), 1);
+        assert_eq!(lv.width(10), 1);
+    }
+}

@@ -1,0 +1,227 @@
+//! Matrix Market (.mtx) reader/writer — the SuiteSparse interchange format.
+//!
+//! Supports `matrix coordinate real|integer|pattern general|symmetric`,
+//! which covers the collection's triangular-solve matrices (lung2, torso2
+//! are `coordinate real general`/`symmetric`). Pattern matrices get value
+//! 1.0. Symmetric files are expanded to both triangles.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use crate::error::Error;
+use crate::sparse::{Coo, Csr};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Field {
+    Real,
+    Integer,
+    Pattern,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Symmetry {
+    General,
+    Symmetric,
+    SkewSymmetric,
+}
+
+pub fn read_path(path: &Path) -> Result<Csr, Error> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| Error::Io(format!("open {}: {e}", path.display())))?;
+    read(std::io::BufReader::new(f))
+}
+
+pub fn read<R: BufRead>(mut r: R) -> Result<Csr, Error> {
+    let mut line = String::new();
+    r.read_line(&mut line)
+        .map_err(|e| Error::Io(e.to_string()))?;
+    let header: Vec<String> = line
+        .trim()
+        .to_ascii_lowercase()
+        .split_whitespace()
+        .map(str::to_string)
+        .collect();
+    if header.len() < 5 || header[0] != "%%matrixmarket" || header[1] != "matrix" {
+        return Err(Error::Invalid("not a MatrixMarket matrix file".into()));
+    }
+    if header[2] != "coordinate" {
+        return Err(Error::Invalid(format!(
+            "unsupported format '{}' (only coordinate)",
+            header[2]
+        )));
+    }
+    let field = match header[3].as_str() {
+        "real" => Field::Real,
+        "integer" => Field::Integer,
+        "pattern" => Field::Pattern,
+        f => return Err(Error::Invalid(format!("unsupported field '{f}'"))),
+    };
+    let symmetry = match header[4].as_str() {
+        "general" => Symmetry::General,
+        "symmetric" => Symmetry::Symmetric,
+        "skew-symmetric" => Symmetry::SkewSymmetric,
+        s => return Err(Error::Invalid(format!("unsupported symmetry '{s}'"))),
+    };
+
+    // Skip comments, read the size line.
+    let dims = loop {
+        line.clear();
+        if r.read_line(&mut line)
+            .map_err(|e| Error::Io(e.to_string()))?
+            == 0
+        {
+            return Err(Error::Invalid("missing size line".into()));
+        }
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        break t
+            .split_whitespace()
+            .map(|w| w.parse::<usize>())
+            .collect::<Result<Vec<_>, _>>()
+            .map_err(|e| Error::Invalid(format!("bad size line: {e}")))?;
+    };
+    if dims.len() != 3 {
+        return Err(Error::Invalid("size line needs 'rows cols nnz'".into()));
+    }
+    let (nrows, ncols, nnz) = (dims[0], dims[1], dims[2]);
+    let mut coo = Coo::new(nrows, ncols);
+    coo.entries.reserve(nnz);
+
+    let mut seen = 0usize;
+    while seen < nnz {
+        line.clear();
+        if r.read_line(&mut line)
+            .map_err(|e| Error::Io(e.to_string()))?
+            == 0
+        {
+            return Err(Error::Invalid(format!(
+                "file ended after {seen}/{nnz} entries"
+            )));
+        }
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let i: usize = it
+            .next()
+            .ok_or_else(|| Error::Invalid("short entry line".into()))?
+            .parse()
+            .map_err(|e| Error::Invalid(format!("bad row index: {e}")))?;
+        let j: usize = it
+            .next()
+            .ok_or_else(|| Error::Invalid("short entry line".into()))?
+            .parse()
+            .map_err(|e| Error::Invalid(format!("bad col index: {e}")))?;
+        let v = match field {
+            Field::Pattern => 1.0,
+            _ => it
+                .next()
+                .ok_or_else(|| Error::Invalid("missing value".into()))?
+                .parse::<f64>()
+                .map_err(|e| Error::Invalid(format!("bad value: {e}")))?,
+        };
+        if i == 0 || j == 0 || i > nrows || j > ncols {
+            return Err(Error::Invalid(format!("entry ({i},{j}) out of range")));
+        }
+        let (i, j) = (i - 1, j - 1); // 1-based on disk
+        coo.push(i, j, v);
+        match symmetry {
+            Symmetry::General => {}
+            Symmetry::Symmetric if i != j => coo.push(j, i, v),
+            Symmetry::SkewSymmetric if i != j => coo.push(j, i, -v),
+            _ => {}
+        }
+        seen += 1;
+    }
+    coo.to_csr()
+}
+
+/// Write a CSR matrix as `coordinate real general`.
+pub fn write_path(m: &Csr, path: &Path) -> Result<(), Error> {
+    let f = std::fs::File::create(path)
+        .map_err(|e| Error::Io(format!("create {}: {e}", path.display())))?;
+    let mut w = BufWriter::new(f);
+    (|| -> std::io::Result<()> {
+        writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+        writeln!(w, "% written by sptrsv-gt")?;
+        writeln!(w, "{} {} {}", m.nrows, m.ncols, m.nnz())?;
+        for i in 0..m.nrows {
+            for (c, v) in m.row_cols(i).iter().zip(m.row_vals(i)) {
+                writeln!(w, "{} {} {:.17e}", i + 1, *c as usize + 1, v)?;
+            }
+        }
+        w.flush()
+    })()
+    .map_err(|e| Error::Io(e.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::csr::LowerBuilder;
+    use std::io::Cursor;
+
+    #[test]
+    fn reads_general_real() {
+        let src = "%%MatrixMarket matrix coordinate real general\n\
+                   % comment\n\
+                   3 3 4\n\
+                   1 1 2.0\n2 1 1.0\n2 2 3.0\n3 3 5.0\n";
+        let m = read(Cursor::new(src)).unwrap();
+        assert_eq!(m.nrows, 3);
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.diag(1), 3.0);
+    }
+
+    #[test]
+    fn reads_symmetric_expands() {
+        let src = "%%MatrixMarket matrix coordinate real symmetric\n\
+                   2 2 2\n\
+                   1 1 1.0\n2 1 4.0\n";
+        let m = read(Cursor::new(src)).unwrap();
+        assert_eq!(m.nnz(), 3); // (0,0), (1,0), (0,1)
+        assert_eq!(m.row_cols(0), &[0, 1]);
+    }
+
+    #[test]
+    fn reads_pattern() {
+        let src = "%%MatrixMarket matrix coordinate pattern general\n2 2 2\n1 1\n2 2\n";
+        let m = read(Cursor::new(src)).unwrap();
+        assert_eq!(m.data, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn rejects_bad_header_and_ranges() {
+        assert!(read(Cursor::new("hello\n")).is_err());
+        assert!(read(Cursor::new(
+            "%%MatrixMarket matrix array real general\n2 2 1\n"
+        ))
+        .is_err());
+        assert!(read(Cursor::new(
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n5 1 1.0\n"
+        ))
+        .is_err());
+        assert!(read(Cursor::new(
+            "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n"
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn roundtrip_through_tempfile() {
+        let mut b = LowerBuilder::new();
+        b.row(&[], 2.0);
+        b.row(&[(0, -1.25)], 3.5);
+        b.row(&[(0, 0.5), (1, 4.0)], 5.0);
+        let m = b.finish();
+        let path = std::env::temp_dir().join(format!("sptrsv_mm_{}.mtx", std::process::id()));
+        write_path(&m, &path).unwrap();
+        let m2 = read_path(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(m, m2);
+        m2.validate_lower_triangular().unwrap();
+    }
+}

@@ -1,0 +1,16 @@
+//! Sparse-matrix substrate: storage formats, I/O, and synthetic workload
+//! generators.
+//!
+//! Everything downstream (level sets, the rewriting engine, the solvers)
+//! operates on [`csr::Csr`] lower-triangular matrices with a full diagonal
+//! stored as the last entry of each row — the same convention as the
+//! paper's Algorithm 1.
+
+pub mod coo;
+pub mod csr;
+pub mod generate;
+pub mod matrix_market;
+pub mod reorder;
+
+pub use coo::Coo;
+pub use csr::Csr;

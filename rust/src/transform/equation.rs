@@ -1,0 +1,341 @@
+//! Canonical row equations and the substitution algebra.
+//!
+//! A row i of Lx = b is the equation
+//!
+//! ```text
+//! x[i] = (b[i] - Σ_k a_k * x[k]) / d        (paper §II.A)
+//! ```
+//!
+//! Rewriting (paper §II.B) substitutes a dependency x[j] with row j's own
+//! equation. Crucially, the paper's §II.B *rearrangement* — group the
+//! multipliers of every remaining unknown and fold the constants — is
+//! built into the substitution here, so the equation always stays in
+//! canonical Lx = b form (this is what [12]'s prototype did NOT do, see
+//! Fig. 4, and what Table I's cost accounting assumes).
+//!
+//! Because the transformation is a *preprocessing* step reusable across
+//! right-hand sides, the constant term is kept symbolic: a sparse linear
+//! functional Σ w_m * b[m] over the RHS entries rather than a folded
+//! number. Baking a concrete b (what the paper's specializing code
+//! generator does) is then a trivial dot product at codegen time.
+
+/// One row equation in canonical form
+/// `x[row] = (Σ w_m b[m] - Σ a_k x[k]) / diag`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Equation {
+    pub row: u32,
+    /// coefficients a_k of the remaining unknowns, ascending by column;
+    /// never contains `row` itself; zero coefficients are dropped
+    pub coeffs: Vec<(u32, f64)>,
+    /// the symbolic constant: Σ w_m * b[m], ascending by index
+    pub bcoeffs: Vec<(u32, f64)>,
+    /// diagonal divisor d; 1.0 once the equation has been folded
+    pub diag: f64,
+    /// whether the division has been folded into the coefficients
+    /// (paper §IV: rewritten rows lose the division, cost -1)
+    pub folded: bool,
+    /// number of substitutions applied to obtain this equation
+    pub substitutions: u32,
+}
+
+impl Equation {
+    /// The original (unrewritten) equation of a matrix row.
+    pub fn original(row: u32, deps: &[u32], dep_vals: &[f64], diag: f64) -> Equation {
+        debug_assert_eq!(deps.len(), dep_vals.len());
+        Equation {
+            row,
+            coeffs: deps.iter().copied().zip(dep_vals.iter().copied()).collect(),
+            bcoeffs: vec![(row, 1.0)],
+            diag,
+            folded: false,
+            substitutions: 0,
+        }
+    }
+
+    /// Number of remaining dependencies (off-diagonal unknowns).
+    pub fn ndeps(&self) -> usize {
+        self.coeffs.len()
+    }
+
+    /// Paper cost model for this equation: 2*nnz-1 for an original row
+    /// (nnz = deps + diagonal), 2*deps for a folded/rewritten row (the
+    /// division was folded away).
+    pub fn cost(&self) -> u64 {
+        if self.folded {
+            2 * self.ndeps() as u64
+        } else {
+            (2 * (self.ndeps() + 1) - 1) as u64
+        }
+    }
+
+    /// Substitute the dependency on `dep.row` with `dep`'s equation and
+    /// rearrange back into canonical form. Returns false (and leaves self
+    /// untouched) if self does not depend on `dep.row`.
+    ///
+    /// Derivation: with f = a_j / d_j,
+    ///   x_i = (C_i - f*C_j  -  Σ_{k≠j} a_k x_k  +  Σ_l f*a'_l x_l) / d_i
+    /// i.e. bcoeffs -= f * dep.bcoeffs and coeffs[l] -= f * dep.coeffs[l].
+    pub fn substitute(&mut self, dep: &Equation) -> bool {
+        self.substitute_inner(dep, true)
+    }
+
+    /// Structure-only substitution: updates the unknown coefficients but
+    /// skips the b-functional algebra. This is what the paper's costMap
+    /// computes — the *cost* a row would have at an upper level — and is
+    /// roughly half the work; used for projections that may be rejected.
+    /// The resulting equation must NOT be committed (its bcoeffs are
+    /// stale).
+    pub fn substitute_structure(&mut self, dep: &Equation) -> bool {
+        self.substitute_inner(dep, false)
+    }
+
+    fn substitute_inner(&mut self, dep: &Equation, with_b: bool) -> bool {
+        let j = dep.row;
+        let Some(pos) = self.coeffs.iter().position(|&(c, _)| c == j) else {
+            return false;
+        };
+        let a_j = self.coeffs.remove(pos).1;
+        let f = a_j / dep.diag;
+        merge_scaled(&mut self.coeffs, &dep.coeffs, -f);
+        if with_b {
+            merge_scaled(&mut self.bcoeffs, &dep.bcoeffs, -f);
+        }
+        self.substitutions += 1;
+        true
+    }
+
+    /// Fold the diagonal division into the coefficients (the paper's
+    /// "division operation is removed" for rewritten rows): divide through
+    /// by d so the runtime evaluation is a pure fused multiply-add chain.
+    pub fn fold(&mut self) {
+        if self.folded {
+            return;
+        }
+        let d = self.diag;
+        for c in &mut self.coeffs {
+            c.1 /= d;
+        }
+        for c in &mut self.bcoeffs {
+            c.1 /= d;
+        }
+        self.diag = 1.0;
+        self.folded = true;
+    }
+
+    /// Largest |w| over the symbolic constant — the stability indicator
+    /// the paper observes exploding when rewriting is overdone (§IV).
+    pub fn max_bcoeff_magnitude(&self) -> f64 {
+        self.bcoeffs
+            .iter()
+            .map(|&(_, w)| w.abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Evaluate against a concrete solution prefix and RHS:
+    /// x_row = (Σ w_m b[m] - Σ a_k x[k]) / d.
+    pub fn evaluate(&self, x: &[f64], b: &[f64]) -> f64 {
+        let mut c = 0.0;
+        for &(m, w) in &self.bcoeffs {
+            c += w * b[m as usize];
+        }
+        let mut s = 0.0;
+        for &(k, a) in &self.coeffs {
+            s += a * x[k as usize];
+        }
+        (c - s) / self.diag
+    }
+
+    /// Bake a concrete RHS into a literal constant (specializing-codegen
+    /// mode, as in the paper's Fig. 3 snippets).
+    pub fn baked_constant(&self, b: &[f64]) -> f64 {
+        self.bcoeffs.iter().map(|&(m, w)| w * b[m as usize]).sum()
+    }
+}
+
+/// acc += scale * src over sparse (index, value) vectors sorted by index;
+/// exact zeros produced by cancellation are dropped (the paper's
+/// "dependency disabled" case).
+fn merge_scaled(acc: &mut Vec<(u32, f64)>, src: &[(u32, f64)], scale: f64) {
+    if src.is_empty() {
+        return;
+    }
+    let mut out = Vec::with_capacity(acc.len() + src.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < acc.len() || j < src.len() {
+        match (acc.get(i), src.get(j)) {
+            (Some(&(ci, vi)), Some(&(cj, vj))) => {
+                if ci < cj {
+                    out.push((ci, vi));
+                    i += 1;
+                } else if cj < ci {
+                    out.push((cj, scale * vj));
+                    j += 1;
+                } else {
+                    let v = vi + scale * vj;
+                    if v != 0.0 {
+                        out.push((ci, v));
+                    }
+                    i += 1;
+                    j += 1;
+                }
+            }
+            (Some(&(ci, vi)), None) => {
+                out.push((ci, vi));
+                i += 1;
+            }
+            (None, Some(&(cj, vj))) => {
+                out.push((cj, scale * vj));
+                j += 1;
+            }
+            (None, None) => unreachable!(),
+        }
+    }
+    *acc = out;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Fig. 2 worked example:
+    ///   x0 = b0/d0;  x1 = (b1 - v10 x0)/d1;  x3 = (b3 - v31 x1)/d3.
+    /// Substituting x1 into x3 and then x0 must reproduce the formula in
+    /// §II.B:
+    ///   x3 = (b3 - v31*((b1 - v10*(b0/d0))/d1)) / d3.
+    #[test]
+    fn fig2_double_substitution() {
+        let (d0, d1, d3) = (2.0, 3.0, 4.0);
+        let (v10, v31) = (1.0, 2.0);
+        let e0 = Equation::original(0, &[], &[], d0);
+        let e1 = Equation::original(1, &[0], &[v10], d1);
+        let mut e3 = Equation::original(3, &[1], &[v31], d3);
+
+        assert!(e3.substitute(&e1));
+        // After one substitution: depends on x0 only (level 2 -> 1).
+        assert_eq!(e3.coeffs.len(), 1);
+        assert_eq!(e3.coeffs[0].0, 0);
+
+        assert!(e3.substitute(&e0));
+        // After two: no unknowns left (level 1 -> 0).
+        assert!(e3.coeffs.is_empty());
+        assert_eq!(e3.substitutions, 2);
+
+        // Check numerically against the nested formula for a concrete b.
+        let b = [5.0, 7.0, 0.0, 11.0];
+        let nested = (b[3] - v31 * ((b[1] - v10 * (b[0] / d0)) / d1)) / d3;
+        let x = [b[0] / d0, (b[1] - v10 * (b[0] / d0)) / d1, 0.0, 0.0];
+        assert!((e3.evaluate(&x, &b) - nested).abs() < 1e-15);
+
+        // Rearranged constant: x3 = b3' / d3 with all of b folded.
+        e3.fold();
+        assert_eq!(e3.cost(), 0); // pure constant assignment
+        assert!((e3.evaluate(&x, &b) - nested).abs() < 1e-15);
+    }
+
+    #[test]
+    fn substitution_preserves_semantics_randomly() {
+        use crate::util::rng::Rng;
+        // Build a random chain x0..x4, substitute everything into x4, and
+        // compare evaluate() against the forward-substitution solution.
+        crate::util::prop::check("subst-semantics", 200, |rng: &mut Rng, _| {
+            let n = 5usize;
+            let mut eqs: Vec<Equation> = Vec::new();
+            for i in 0..n {
+                let ndeps = if i == 0 { 0 } else { rng.range(0, i.min(3) + 1) };
+                let deps: Vec<u32> = rng
+                    .sample_distinct(i, ndeps)
+                    .into_iter()
+                    .map(|d| d as u32)
+                    .collect();
+                let vals: Vec<f64> = deps.iter().map(|_| rng.uniform(-2.0, 2.0)).collect();
+                let diag = rng.uniform(1.0, 3.0);
+                eqs.push(Equation::original(i as u32, &deps, &vals, diag));
+            }
+            let b: Vec<f64> = (0..n).map(|_| rng.uniform(-5.0, 5.0)).collect();
+            // Ground truth by forward substitution.
+            let mut x = vec![0.0; n];
+            for i in 0..n {
+                x[i] = eqs[i].evaluate(&x, &b);
+            }
+            // Fully substitute the last equation; it must evaluate to the
+            // same x[4] with NO dependence on x.
+            let mut last = eqs[n - 1].clone();
+            while let Some(&(j, _)) = last.coeffs.last() {
+                let dep = eqs[j as usize].clone();
+                assert!(last.substitute(&dep));
+            }
+            let got = last.evaluate(&[0.0; 5], &b);
+            if (got - x[n - 1]).abs() > 1e-9 * x[n - 1].abs().max(1.0) {
+                return Err(format!("{} vs {}", got, x[n - 1]));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn substitute_missing_dep_is_noop() {
+        let e0 = Equation::original(0, &[], &[], 1.0);
+        let mut e2 = Equation::original(2, &[1], &[1.0], 2.0);
+        let before = e2.clone();
+        assert!(!e2.substitute(&e0));
+        assert_eq!(e2, before);
+    }
+
+    #[test]
+    fn cancellation_drops_dependency() {
+        // x2 depends on x1 and x0; x1 depends on x0 such that the x0 terms
+        // cancel exactly after substitution.
+        let e1 = Equation::original(1, &[0], &[2.0], 1.0); // x1 = b1 - 2 x0
+        let mut e2 = Equation::original(2, &[0, 1], &[-2.0, 1.0], 1.0);
+        // x2 = b2 - (-2 x0 + 1 x1) ; substituting x1: coeff0 = -2 - 1*(-2) = 0...
+        // merge: coeffs0' = -2 + (-1)*(2)*(1/1)?  verify via arithmetic below.
+        assert!(e2.substitute(&e1));
+        // coeff for x0: -2 - (1/1)*2 = -4?  No cancellation here; check the
+        // engineered case instead:
+        let e1b = Equation::original(1, &[0], &[-2.0], 1.0);
+        let mut e2b = Equation::original(2, &[0, 1], &[-2.0, 1.0], 1.0);
+        assert!(e2b.substitute(&e1b));
+        // coeff for x0: -2 - (1)*(-2) = 0 -> dropped.
+        assert!(e2b.coeffs.is_empty(), "{:?}", e2b.coeffs);
+        let _ = e2;
+    }
+
+    #[test]
+    fn fold_preserves_value_and_cost_drop() {
+        let mut e = Equation::original(3, &[0, 1], &[2.0, -1.0], 4.0);
+        let x = [1.0, 2.0, 0.0, 0.0];
+        let b = [0.0, 0.0, 0.0, 8.0];
+        let before = e.evaluate(&x, &b);
+        assert_eq!(e.cost(), 5); // 2*3-1
+        e.fold();
+        assert_eq!(e.diag, 1.0);
+        assert_eq!(e.cost(), 4); // division folded: 2*ndeps
+        assert!((e.evaluate(&x, &b) - before).abs() < 1e-15);
+        assert!(e.folded);
+        e.fold(); // idempotent
+        assert!((e.evaluate(&x, &b) - before).abs() < 1e-15);
+    }
+
+    #[test]
+    fn merge_scaled_cases() {
+        let mut a = vec![(1u32, 1.0), (3, 2.0)];
+        merge_scaled(&mut a, &[(0, 1.0), (3, 2.0), (5, -1.0)], 0.5);
+        assert_eq!(a, vec![(0, 0.5), (1, 1.0), (3, 3.0), (5, -0.5)]);
+        let mut b = vec![(2u32, 4.0)];
+        merge_scaled(&mut b, &[(2, 2.0)], -2.0);
+        assert!(b.is_empty()); // exact cancellation drops the entry
+        let mut c: Vec<(u32, f64)> = vec![];
+        merge_scaled(&mut c, &[], 3.0);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn bcoeff_magnitude_tracks_growth() {
+        // Tiny diagonals blow up the folded constants — the §IV stability
+        // observation.
+        let e0 = Equation::original(0, &[], &[], 1e-8);
+        let mut e1 = Equation::original(1, &[0], &[1.0], 1.0);
+        assert!(e1.substitute(&e0));
+        assert!(e1.max_bcoeff_magnitude() >= 1e8);
+    }
+}

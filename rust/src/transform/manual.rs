@@ -1,0 +1,163 @@
+//! The manual strategy of the previous work [12]: levels are hand-picked
+//! and "every 9 levels is rewritten to the 10th" — a fixed rewriting
+//! distance with no cost projection and no stopping criterion.
+//!
+//! Level selection: the paper's operator picks "the levels with the
+//! fewest rows" by examining the graph (lung2), falling back to
+//! cost < avgLevelCost for torso2 where widths are similar. We model the
+//! by-eye selection as *width <= average width* (which also covers
+//! uniform chains, where no level is strictly below the average cost),
+//! chunked in groups of `distance`, the first level of each chunk being
+//! the target. Being blind to the cost map is what makes this strategy
+//! inflate the total cost on connected matrices (torso2: +40% in
+//! Table I).
+
+use crate::graph::analyze::LevelStats;
+use crate::graph::Levels;
+use crate::sparse::Csr;
+use crate::transform::plan::TransformResult;
+use crate::transform::rewrite::Rewriter;
+
+#[derive(Debug, Clone)]
+pub struct ManualOptions {
+    /// group size: every `distance - 1` levels rewritten into the next
+    /// ("every 9 levels is rewritten to the 10th" => distance = 10)
+    pub distance: usize,
+}
+
+impl Default for ManualOptions {
+    fn default() -> Self {
+        ManualOptions { distance: 10 }
+    }
+}
+
+pub fn apply(m: &Csr, opts: &ManualOptions) -> TransformResult {
+    assert!(opts.distance >= 2, "distance must be >= 2");
+    let lv = Levels::build(m);
+    let before = LevelStats::from_csr(m, &lv);
+    if before.num_levels < 2 {
+        return TransformResult::identity(m);
+    }
+    // "Levels with the fewest rows", modeled as width <= average width.
+    let avg_width = before.avg_width();
+    let thin: Vec<usize> = before
+        .level_widths
+        .iter()
+        .enumerate()
+        .filter(|&(_, &w)| w as f64 <= avg_width)
+        .map(|(i, _)| i)
+        .collect();
+    if thin.len() < 2 {
+        return TransformResult::identity(m);
+    }
+    let mut rw = Rewriter::new(m, lv.level_of.clone());
+    // "The levels close to each other are prioritized to form groups to
+    // cut on the rewriting cost": groups never straddle a fat level, so
+    // chunk maximal runs of CONSECUTIVE thin levels.
+    let mut runs: Vec<Vec<usize>> = Vec::new();
+    for &l in &thin {
+        match runs.last_mut() {
+            Some(run) if *run.last().unwrap() + 1 == l => run.push(l),
+            _ => runs.push(vec![l]),
+        }
+    }
+    for run in runs {
+        for chunk in run.chunks(opts.distance) {
+            let target = chunk[0] as u32;
+            for &s in &chunk[1..] {
+                // Whole source levels are rewritten unconditionally.
+                for &row in &lv.levels[s] {
+                    rw.rewrite_to(row, target);
+                }
+            }
+        }
+    }
+    TransformResult::from_rewriter(m, rw, &before)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate;
+
+    #[test]
+    fn tridiagonal_groups_of_ten() {
+        let m = generate::tridiagonal(100, &Default::default());
+        let t = apply(&m, &ManualOptions::default());
+        t.validate(&m).unwrap();
+        // 100 thin levels in chunks of 10 -> 10 levels remain.
+        assert_eq!(t.num_levels(), 10);
+        assert_eq!(t.stats.rows_rewritten, 90);
+    }
+
+    #[test]
+    fn distance_controls_grouping() {
+        let m = generate::tridiagonal(60, &Default::default());
+        for d in [2usize, 5, 20] {
+            let t = apply(&m, &ManualOptions { distance: d });
+            t.validate(&m).unwrap();
+            assert_eq!(t.num_levels(), 60usize.div_ceil(d), "distance {d}");
+        }
+    }
+
+    #[test]
+    fn lung2_like_reduction_shallower_than_avgcost() {
+        // Paper Table I: manual removes 86% of lung2 levels vs 95% for
+        // avgLevelCost.
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.1));
+        let manual = apply(&m, &ManualOptions::default());
+        let auto =
+            crate::transform::avg_cost::apply(&m, &Default::default());
+        manual.validate(&m).unwrap();
+        assert!(manual.stats.levels_reduction_pct() > 50.0);
+        assert!(
+            auto.num_levels() <= manual.num_levels(),
+            "avgcost {} vs manual {}",
+            auto.num_levels(),
+            manual.num_levels()
+        );
+    }
+
+    #[test]
+    fn torso2_like_total_cost_inflates() {
+        // The blind strategy grows indegrees on connected matrices:
+        // paper reports +40% total cost on torso2 (vs +0.2% for avgcost).
+        let m = generate::torso2_like(&generate::GenOptions::with_scale(0.05));
+        let manual = apply(&m, &ManualOptions::default());
+        let auto = crate::transform::avg_cost::apply(&m, &Default::default());
+        manual.validate(&m).unwrap();
+        assert!(
+            manual.stats.total_cost_change_pct() > auto.stats.total_cost_change_pct(),
+            "manual {:.1}% vs auto {:.1}%",
+            manual.stats.total_cost_change_pct(),
+            auto.stats.total_cost_change_pct()
+        );
+    }
+
+    #[test]
+    fn semantics_preserved() {
+        let m = generate::random_lower(250, 3, 0.85, &Default::default());
+        let t = apply(&m, &ManualOptions { distance: 5 });
+        t.validate(&m).unwrap();
+        let mut rng = crate::util::rng::Rng::new(5);
+        let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        let x_ref = crate::solver::serial::solve(&m, &b);
+        let mut x = vec![0.0; m.nrows];
+        for lvl in &t.levels {
+            for &r in lvl {
+                let i = r as usize;
+                x[i] = match &t.equations[i] {
+                    Some(eq) => eq.evaluate(&x, &b),
+                    None => {
+                        let mut s = 0.0;
+                        for (&c, &v) in m.row_deps(i).iter().zip(m.row_dep_vals(i)) {
+                            s += v * x[c as usize];
+                        }
+                        (b[i] - s) / m.diag(i)
+                    }
+                };
+            }
+        }
+        crate::util::prop::assert_allclose(&x, &x_ref, 1e-9, 1e-12).unwrap();
+    }
+}

@@ -1,0 +1,29 @@
+//! The paper's contribution: dependency-graph transformation by equation
+//! rewriting (§II.B, §III).
+//!
+//! * [`equation`] — canonical row equations and the substitution/
+//!   rearrangement algebra (rewriting *with* rearrangement into Lx = b
+//!   form, fixing the Fig-4 waste of the manual prototype).
+//! * [`rewrite`]  — the [`rewrite::Rewriter`] engine: tracks current
+//!   levels and rewritten equations, projects row costs at target levels
+//!   (the paper's costMap) and commits rewrites.
+//! * [`avg_cost`] — the naive automatic strategy (§III): fill thin target
+//!   levels up to avgLevelCost.
+//! * [`manual`]   — the manual strategy of [12]: every `distance-1` thin
+//!   levels rewritten into the next, blindly.
+//! * [`row_strategies`] — §III.A row-granular constraints (indegree < α,
+//!   critical-path membership, dependency span < β, max distance).
+//! * [`plan`]     — [`plan::TransformResult`]: the transformed system
+//!   consumed by the solvers, the code generator and the XLA padding.
+
+pub mod avg_cost;
+pub mod equation;
+pub mod manual;
+pub mod plan;
+pub mod rewrite;
+pub mod row_strategies;
+pub mod strategy;
+
+pub use equation::Equation;
+pub use plan::{TransformResult, TransformStats};
+pub use strategy::Strategy;

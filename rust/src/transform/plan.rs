@@ -1,0 +1,219 @@
+//! The output of a transformation strategy: the transformed system the
+//! solvers, the code generator and the XLA padding all consume.
+
+use crate::graph::analyze::LevelStats;
+use crate::graph::Levels;
+use crate::sparse::Csr;
+use crate::transform::equation::Equation;
+use crate::transform::rewrite::{RewriteRecord, Rewriter};
+
+/// Summary statistics — the columns of the paper's Table I.
+#[derive(Debug, Clone)]
+pub struct TransformStats {
+    pub levels_before: usize,
+    pub levels_after: usize,
+    pub avg_level_cost_before: f64,
+    pub avg_level_cost_after: f64,
+    pub total_level_cost_before: u64,
+    pub total_level_cost_after: u64,
+    pub rows_rewritten: usize,
+    pub nrows: usize,
+    /// worst |folded b-coefficient| — the §IV numerical-stability indicator
+    pub max_bcoeff_magnitude: f64,
+    /// total substitutions performed (transformation cost)
+    pub substitutions_total: u64,
+}
+
+impl TransformStats {
+    pub fn levels_reduction_pct(&self) -> f64 {
+        100.0 * (1.0 - self.levels_after as f64 / self.levels_before as f64)
+    }
+
+    pub fn avg_cost_ratio(&self) -> f64 {
+        self.avg_level_cost_after / self.avg_level_cost_before
+    }
+
+    pub fn total_cost_change_pct(&self) -> f64 {
+        100.0 * (self.total_level_cost_after as f64 / self.total_level_cost_before as f64 - 1.0)
+    }
+
+    pub fn rows_rewritten_pct(&self) -> f64 {
+        100.0 * self.rows_rewritten as f64 / self.nrows as f64
+    }
+}
+
+/// A transformed system: per-row equations (original rows borrow from the
+/// matrix at evaluation time) plus the compacted level partition.
+pub struct TransformResult {
+    /// compacted levels (empty source levels removed), each ascending
+    pub levels: Vec<Vec<u32>>,
+    /// level index of each row in the compacted numbering
+    pub level_of: Vec<u32>,
+    /// rewritten equations; None = row is original
+    pub equations: Vec<Option<Box<Equation>>>,
+    /// per-row cost under the paper's model
+    pub row_costs: Vec<u64>,
+    pub stats: TransformStats,
+    /// rewrite log (row, from, to, substitutions)
+    pub log: Vec<RewriteRecord>,
+}
+
+impl TransformResult {
+    /// Identity transform: no rewriting (the Table I baseline column).
+    pub fn identity(m: &Csr) -> TransformResult {
+        let lv = Levels::build(m);
+        let st = LevelStats::from_csr(m, &lv);
+        let row_costs: Vec<u64> = (0..m.nrows).map(|i| m.row_cost(i) as u64).collect();
+        TransformResult {
+            level_of: lv.level_of.clone(),
+            levels: lv.levels,
+            equations: vec![None; m.nrows],
+            row_costs,
+            stats: TransformStats {
+                levels_before: st.num_levels,
+                levels_after: st.num_levels,
+                avg_level_cost_before: st.avg_level_cost,
+                avg_level_cost_after: st.avg_level_cost,
+                total_level_cost_before: st.total_cost,
+                total_level_cost_after: st.total_cost,
+                rows_rewritten: 0,
+                nrows: m.nrows,
+                max_bcoeff_magnitude: 1.0,
+                substitutions_total: 0,
+            },
+            log: Vec::new(),
+        }
+    }
+
+    /// Finalize a rewriter into a result: compact empty levels, recompute
+    /// stats under the paper's cost model.
+    pub fn from_rewriter(m: &Csr, rw: Rewriter<'_>, before: &LevelStats) -> TransformResult {
+        let row_costs = rw.row_costs();
+        let level_of_raw = rw.level_of.clone();
+        let rows_rewritten = rw.rows_rewritten();
+        let max_mag = rw.max_bcoeff_magnitude;
+        let subs = rw.substitutions_total;
+        let log = rw.log.clone();
+        let equations = rw.into_equations();
+
+        // Compact: old level index -> new index over non-empty levels.
+        let max_lvl = level_of_raw.iter().copied().max().unwrap_or(0) as usize;
+        let mut occupied = vec![false; max_lvl + 1];
+        for &l in &level_of_raw {
+            occupied[l as usize] = true;
+        }
+        let mut remap = vec![u32::MAX; max_lvl + 1];
+        let mut next = 0u32;
+        for (old, &occ) in occupied.iter().enumerate() {
+            if occ {
+                remap[old] = next;
+                next += 1;
+            }
+        }
+        let nlevels = next as usize;
+        let mut levels: Vec<Vec<u32>> = vec![Vec::new(); nlevels];
+        let mut level_of = vec![0u32; m.nrows];
+        for i in 0..m.nrows {
+            let nl = remap[level_of_raw[i] as usize];
+            level_of[i] = nl;
+            levels[nl as usize].push(i as u32);
+        }
+        let st_after = LevelStats::from_row_costs(&row_costs, &levels);
+
+        TransformResult {
+            levels,
+            level_of,
+            equations,
+            row_costs,
+            stats: TransformStats {
+                levels_before: before.num_levels,
+                levels_after: st_after.num_levels,
+                avg_level_cost_before: before.avg_level_cost,
+                avg_level_cost_after: st_after.avg_level_cost,
+                total_level_cost_before: before.total_cost,
+                total_level_cost_after: st_after.total_cost,
+                rows_rewritten,
+                nrows: m.nrows,
+                max_bcoeff_magnitude: max_mag,
+                substitutions_total: subs,
+            },
+            log,
+        }
+    }
+
+    pub fn num_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Per-level costs of the transformed system (Fig 5 / Fig 6 series).
+    pub fn level_costs(&self) -> Vec<u64> {
+        self.levels
+            .iter()
+            .map(|rows| rows.iter().map(|&r| self.row_costs[r as usize]).sum())
+            .collect()
+    }
+
+    /// Validate the level invariant of the transformed system against the
+    /// matrix: every remaining dependency of every row (rewritten or not)
+    /// is at a strictly lower level.
+    pub fn validate(&self, m: &Csr) -> Result<(), String> {
+        for i in 0..m.nrows {
+            let li = self.level_of[i];
+            let check = |deps: &mut dyn Iterator<Item = u32>| -> Result<(), String> {
+                for c in deps {
+                    if self.level_of[c as usize] >= li {
+                        return Err(format!(
+                            "row {i} (level {li}) depends on row {c} (level {})",
+                            self.level_of[c as usize]
+                        ));
+                    }
+                }
+                Ok(())
+            };
+            match &self.equations[i] {
+                Some(eq) => check(&mut eq.coeffs.iter().map(|&(c, _)| c))?,
+                None => check(&mut m.row_deps(i).iter().copied())?,
+            }
+        }
+        let total: usize = self.levels.iter().map(Vec::len).sum();
+        if total != m.nrows {
+            return Err(format!("levels hold {total} of {} rows", m.nrows));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate;
+
+    #[test]
+    fn identity_stats() {
+        let m = generate::fig1_example();
+        let t = TransformResult::identity(&m);
+        assert_eq!(t.num_levels(), 4);
+        assert_eq!(t.stats.rows_rewritten, 0);
+        assert_eq!(t.stats.levels_reduction_pct(), 0.0);
+        assert_eq!(t.stats.total_level_cost_before, 24);
+        t.validate(&m).unwrap();
+        assert_eq!(t.level_costs(), vec![3, 8, 6, 7]);
+    }
+
+    #[test]
+    fn compaction_removes_empty_levels() {
+        let m = generate::fig2_example();
+        let lv = crate::graph::Levels::build(&m);
+        let before = LevelStats::from_csr(&m, &lv);
+        let mut rw = Rewriter::new(&m, lv.level_of);
+        rw.rewrite_to(3, 0); // empties level 2
+        let t = TransformResult::from_rewriter(&m, rw, &before);
+        assert_eq!(t.stats.levels_before, 3);
+        assert_eq!(t.stats.levels_after, 2);
+        assert_eq!(t.levels[0], vec![0, 3]);
+        assert_eq!(t.levels[1], vec![1, 2]);
+        t.validate(&m).unwrap();
+        assert_eq!(t.stats.rows_rewritten, 1);
+        assert!(t.stats.levels_reduction_pct() > 33.0);
+    }
+}

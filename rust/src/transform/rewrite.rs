@@ -1,0 +1,300 @@
+//! The rewriting engine: tracks the current level of every row and the
+//! equations of rewritten rows, projects the cost of placing a row at a
+//! target level (the paper's *costMap*), and commits rewrites.
+//!
+//! Invariant maintained throughout: for every row, every remaining
+//! dependency lives at a strictly lower *current* level — so the final
+//! `level_of` is a valid topological level assignment of the transformed
+//! system.
+
+use crate::sparse::Csr;
+use crate::transform::equation::Equation;
+
+/// The rewriting distance of one rewrite: how many levels the row moved up
+/// (paper §III — a key component of the transformation cost).
+#[derive(Debug, Clone, Copy)]
+pub struct RewriteRecord {
+    pub row: u32,
+    pub from_level: u32,
+    pub to_level: u32,
+    pub substitutions: u32,
+}
+
+pub struct Rewriter<'a> {
+    m: &'a Csr,
+    /// current level of every row (mutated by commits)
+    pub level_of: Vec<u32>,
+    /// equations of rewritten rows (None = original, read from the matrix)
+    rewritten: Vec<Option<Box<Equation>>>,
+    /// log of committed rewrites
+    pub log: Vec<RewriteRecord>,
+    /// worst |bcoeff| seen across committed rewrites (stability indicator)
+    pub max_bcoeff_magnitude: f64,
+    /// total substitution operations performed, including projections that
+    /// were not committed (the transformation cost the paper discusses)
+    pub substitutions_total: u64,
+}
+
+impl<'a> Rewriter<'a> {
+    pub fn new(m: &'a Csr, level_of: Vec<u32>) -> Rewriter<'a> {
+        assert_eq!(level_of.len(), m.nrows);
+        Rewriter {
+            m,
+            level_of,
+            rewritten: vec![None; m.nrows],
+            log: Vec::new(),
+            max_bcoeff_magnitude: 0.0,
+            substitutions_total: 0,
+        }
+    }
+
+    pub fn matrix(&self) -> &Csr {
+        self.m
+    }
+
+    /// The current equation of a row (original rows are materialized on
+    /// the fly and not cached — only rewritten rows carry state).
+    pub fn equation_of(&self, row: u32) -> Equation {
+        match &self.rewritten[row as usize] {
+            Some(eq) => (**eq).clone(),
+            None => {
+                let i = row as usize;
+                Equation::original(row, self.m.row_deps(i), self.m.row_dep_vals(i), self.m.diag(i))
+            }
+        }
+    }
+
+    pub fn is_rewritten(&self, row: u32) -> bool {
+        self.rewritten[row as usize].is_some()
+    }
+
+    pub fn rows_rewritten(&self) -> usize {
+        self.log.len()
+    }
+
+    /// Project (without committing) the equation row would have at
+    /// `target` level: substitute every dependency whose *current* level
+    /// is >= target, highest level first. This is the costMap entry
+    /// (row, cost-at-target) of §III.
+    pub fn project(&mut self, row: u32, target: u32) -> Equation {
+        self.project_with_budget(row, target, u64::MAX)
+            .expect("unbounded projection cannot abort")
+    }
+
+    /// Budgeted projection: abort (returning None) as soon as the
+    /// projected cost exceeds `max_cost`. This is how the §III algorithm
+    /// "stops when the cost of the target level reaches avgLevelCost"
+    /// without paying for a full expansion it is about to reject — the
+    /// key to keeping the costMap pass near-linear on matrices whose
+    /// rewriting would cascade through fat levels.
+    pub fn project_with_budget(
+        &mut self,
+        row: u32,
+        target: u32,
+        max_cost: u64,
+    ) -> Option<Equation> {
+        self.project_inner(row, target, max_cost, true)
+    }
+
+    /// Structure-only budgeted projection — the paper's costMap entry:
+    /// the *cost* the row would have at `target`, skipping the
+    /// b-functional algebra (about half the merge work). The returned
+    /// equation must not be committed; re-project fully on acceptance.
+    pub fn project_cost(&mut self, row: u32, target: u32, max_cost: u64) -> Option<Equation> {
+        self.project_inner(row, target, max_cost, false)
+    }
+
+    fn project_inner(
+        &mut self,
+        row: u32,
+        target: u32,
+        max_cost: u64,
+        with_b: bool,
+    ) -> Option<Equation> {
+        let mut eq = self.equation_of(row);
+        loop {
+            // A folded row costs 2*ndeps and substitution can only add
+            // dependencies below the target, so this lower bound is safe.
+            if 2 * (eq.ndeps() as u64) > max_cost {
+                return None;
+            }
+            // Highest-level remaining dependency at/above the target.
+            let next = eq
+                .coeffs
+                .iter()
+                .map(|&(c, _)| c)
+                .filter(|&c| self.level_of[c as usize] >= target)
+                .max_by_key(|&c| self.level_of[c as usize]);
+            let Some(j) = next else { break };
+            let dep = self.equation_of(j);
+            let ok = if with_b {
+                eq.substitute(&dep)
+            } else {
+                eq.substitute_structure(&dep)
+            };
+            debug_assert!(ok);
+            self.substitutions_total += 1;
+        }
+        Some(eq)
+    }
+
+    /// Commit a projected equation: the row moves to `target`, its
+    /// equation is folded (division removed — the §II.B rearrangement).
+    pub fn commit(&mut self, mut eq: Equation, target: u32) {
+        let row = eq.row;
+        debug_assert!(
+            eq.coeffs
+                .iter()
+                .all(|&(c, _)| self.level_of[c as usize] < target),
+            "commit would violate the level invariant"
+        );
+        eq.fold();
+        let from = self.level_of[row as usize];
+        self.max_bcoeff_magnitude = self.max_bcoeff_magnitude.max(eq.max_bcoeff_magnitude());
+        self.log.push(RewriteRecord {
+            row,
+            from_level: from,
+            to_level: target,
+            substitutions: eq.substitutions,
+        });
+        self.level_of[row as usize] = target;
+        self.rewritten[row as usize] = Some(Box::new(eq));
+    }
+
+    /// Convenience: project + commit.
+    pub fn rewrite_to(&mut self, row: u32, target: u32) -> u64 {
+        let eq = self.project(row, target);
+        let cost = eq.cost();
+        self.commit(eq, target);
+        cost
+    }
+
+    /// Per-row cost vector under the current state (original rows use the
+    /// matrix cost model, rewritten rows their folded equation cost).
+    pub fn row_costs(&self) -> Vec<u64> {
+        (0..self.m.nrows)
+            .map(|i| match &self.rewritten[i] {
+                Some(eq) => eq.cost(),
+                None => self.m.row_cost(i) as u64,
+            })
+            .collect()
+    }
+
+    /// Extract all rewritten equations (row -> equation).
+    pub fn into_equations(self) -> Vec<Option<Box<Equation>>> {
+        self.rewritten
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Levels;
+    use crate::sparse::generate;
+
+    fn setup(m: &Csr) -> Rewriter<'_> {
+        let lv = Levels::build(m);
+        Rewriter::new(m, lv.level_of)
+    }
+
+    #[test]
+    fn fig2_rewrite_row3_to_level1_then_0() {
+        // Paper Fig 2: row 3 (level 2) -> level 1 (one substitution,
+        // depends on row 0 only) -> level 0 (constant).
+        let m = generate::fig2_example();
+        let mut rw = setup(&m);
+        let eq = rw.project(3, 1);
+        assert_eq!(eq.ndeps(), 1);
+        assert_eq!(eq.coeffs[0].0, 0); // now depends on row 0
+        assert_eq!(eq.substitutions, 1);
+
+        let eq0 = rw.project(3, 0);
+        assert_eq!(eq0.ndeps(), 0); // constant
+        assert_eq!(eq0.substitutions, 2);
+        rw.commit(eq0, 0);
+        assert_eq!(rw.level_of[3], 0);
+        assert!(rw.is_rewritten(3));
+        assert_eq!(rw.rows_rewritten(), 1);
+        assert_eq!(rw.log[0].from_level, 2);
+        assert_eq!(rw.log[0].to_level, 0);
+    }
+
+    #[test]
+    fn projection_does_not_mutate() {
+        let m = generate::fig1_example();
+        let mut rw = setup(&m);
+        let before = rw.level_of.clone();
+        let _ = rw.project(7, 0);
+        assert_eq!(rw.level_of, before);
+        assert!(!rw.is_rewritten(7));
+        assert!(rw.substitutions_total > 0);
+    }
+
+    #[test]
+    fn rewrite_chain_through_rewritten_dep() {
+        // After moving row 3 to level 0, moving row 5 (depends on 3) to
+        // level 0 must substitute 3's REWRITTEN (constant) equation.
+        let m = generate::fig1_example();
+        let mut rw = setup(&m);
+        rw.rewrite_to(3, 0);
+        let eq5 = rw.project(5, 0);
+        assert_eq!(eq5.ndeps(), 0, "{:?}", eq5.coeffs);
+        rw.commit(eq5, 0);
+        // Semantics: full solve must still agree with forward substitution.
+        let b: Vec<f64> = (0..8).map(|i| i as f64 + 1.0).collect();
+        let mut x_ref = vec![0.0; 8];
+        for i in 0..8 {
+            let e = Equation::original(
+                i as u32,
+                m.row_deps(i),
+                m.row_dep_vals(i),
+                m.diag(i),
+            );
+            x_ref[i] = e.evaluate(&x_ref, &b);
+        }
+        let e3 = rw.equation_of(3);
+        let e5 = rw.equation_of(5);
+        assert!((e3.evaluate(&[0.0; 8], &b) - x_ref[3]).abs() < 1e-12);
+        assert!((e5.evaluate(&[0.0; 8], &b) - x_ref[5]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_costs_reflect_rewrites() {
+        let m = generate::fig2_example();
+        let mut rw = setup(&m);
+        let before = rw.row_costs();
+        assert_eq!(before, vec![1, 3, 3, 3]);
+        rw.rewrite_to(3, 0);
+        let after = rw.row_costs();
+        assert_eq!(after, vec![1, 3, 3, 0]); // row 3 is a folded constant
+    }
+
+    #[test]
+    fn level_invariant_holds_after_many_rewrites() {
+        let m = generate::random_lower(150, 3, 0.8, &Default::default());
+        let mut rw = setup(&m);
+        // Move every row of levels >= 2 down to level 1, then check the
+        // invariant directly.
+        let max_level = *rw.level_of.iter().max().unwrap();
+        if max_level < 2 {
+            return;
+        }
+        let candidates: Vec<u32> = (0..m.nrows as u32)
+            .filter(|&r| rw.level_of[r as usize] >= 2)
+            .collect();
+        for r in candidates {
+            rw.rewrite_to(r, 1);
+        }
+        for i in 0..m.nrows {
+            let eq = rw.equation_of(i as u32);
+            for &(c, _) in &eq.coeffs {
+                assert!(
+                    rw.level_of[c as usize] < rw.level_of[i],
+                    "row {i} level {} dep {c} level {}",
+                    rw.level_of[i],
+                    rw.level_of[c as usize]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Row-granular rewriting constraints (§III.A).
+//!
+//! The paper's naive algorithm rewrites whole levels; §III.A sketches
+//! row-level constraints that "unfold new possibilities":
+//!   1. rewrite only if the row's indegree < α,
+//!   2. rewrite only if the row is on the critical path,
+//!   3. rewrite only if the span between dependency indices < β (spatial
+//!      locality of the x-vector accesses),
+//! plus the rewriting-distance cap discussed under Limitations.
+//!
+//! These compose as a filter consulted by the strategies before each
+//! rewrite; the ablation bench sweeps them.
+
+use crate::graph::critical_path::CriticalPath;
+use crate::sparse::Csr;
+use crate::transform::equation::Equation;
+
+/// Constraints applied per candidate rewrite. `None` disables a check.
+#[derive(Debug, Clone, Default)]
+pub struct RowConstraints {
+    /// rewrite only rows whose *projected* indegree stays < α
+    pub max_indegree: Option<usize>,
+    /// rewrite only rows on the critical path
+    pub critical_path_only: bool,
+    /// rewrite only rows whose projected dependency index span < β
+    pub max_dep_span: Option<u32>,
+    /// cap on levels moved in one rewrite (rewriting distance)
+    pub max_distance: Option<u32>,
+    /// refuse rewrites whose folded constants exceed this magnitude
+    /// (numerical-stability guard, §IV observation)
+    pub max_bcoeff_magnitude: Option<f64>,
+}
+
+impl RowConstraints {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Evaluate all constraints for placing `eq` (the projected equation
+    /// of `row`) at `target`, given the row's current level.
+    pub fn allows(
+        &self,
+        eq: &Equation,
+        current_level: u32,
+        target: u32,
+        critical: Option<&CriticalPath>,
+    ) -> bool {
+        if let Some(alpha) = self.max_indegree {
+            if eq.ndeps() >= alpha {
+                return false;
+            }
+        }
+        if self.critical_path_only {
+            match critical {
+                Some(cp) => {
+                    if !cp.on_critical[eq.row as usize] {
+                        return false;
+                    }
+                }
+                None => return false,
+            }
+        }
+        if let Some(beta) = self.max_dep_span {
+            if let (Some(&(lo, _)), Some(&(hi, _))) = (eq.coeffs.first(), eq.coeffs.last()) {
+                if hi - lo >= beta {
+                    return false;
+                }
+            }
+        }
+        if let Some(dmax) = self.max_distance {
+            if current_level.saturating_sub(target) > dmax {
+                return false;
+            }
+        }
+        if let Some(mmax) = self.max_bcoeff_magnitude {
+            // Compare against the magnitude the row will have once the
+            // commit folds the division by its own diagonal.
+            let fold_scale = if eq.folded { 1.0 } else { eq.diag.abs() };
+            if eq.max_bcoeff_magnitude() / fold_scale > mmax {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Whether any constraint requires the critical path to be computed.
+    pub fn needs_critical_path(&self) -> bool {
+        self.critical_path_only
+    }
+
+    pub fn critical_path_for(&self, m: &Csr) -> Option<CriticalPath> {
+        if self.needs_critical_path() {
+            Some(CriticalPath::compute(m))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate;
+
+    fn eq_with_deps(deps: &[u32]) -> Equation {
+        let vals = vec![1.0; deps.len()];
+        Equation::original(10, deps, &vals, 2.0)
+    }
+
+    #[test]
+    fn default_allows_everything() {
+        let c = RowConstraints::none();
+        assert!(c.allows(&eq_with_deps(&[0, 1, 2, 3]), 9, 0, None));
+    }
+
+    #[test]
+    fn indegree_alpha() {
+        let c = RowConstraints {
+            max_indegree: Some(3),
+            ..Default::default()
+        };
+        assert!(c.allows(&eq_with_deps(&[0, 1]), 5, 1, None));
+        assert!(!c.allows(&eq_with_deps(&[0, 1, 2]), 5, 1, None));
+    }
+
+    #[test]
+    fn dep_span_beta() {
+        let c = RowConstraints {
+            max_dep_span: Some(4),
+            ..Default::default()
+        };
+        assert!(c.allows(&eq_with_deps(&[5, 8]), 5, 1, None)); // span 3
+        assert!(!c.allows(&eq_with_deps(&[1, 8]), 5, 1, None)); // span 7
+        assert!(c.allows(&eq_with_deps(&[]), 5, 1, None)); // no deps
+    }
+
+    #[test]
+    fn distance_cap() {
+        let c = RowConstraints {
+            max_distance: Some(10),
+            ..Default::default()
+        };
+        assert!(c.allows(&eq_with_deps(&[0]), 11, 1, None));
+        assert!(!c.allows(&eq_with_deps(&[0]), 20, 1, None));
+    }
+
+    #[test]
+    fn critical_path_constraint() {
+        let m = generate::fig1_example();
+        let cp = CriticalPath::compute(&m);
+        let c = RowConstraints {
+            critical_path_only: true,
+            ..Default::default()
+        };
+        let mut eq7 = eq_with_deps(&[0]);
+        eq7.row = 7; // on critical path
+        let mut eq5 = eq_with_deps(&[0]);
+        eq5.row = 5; // not critical
+        assert!(c.allows(&eq7, 3, 1, Some(&cp)));
+        assert!(!c.allows(&eq5, 2, 1, Some(&cp)));
+        // without a computed critical path the constraint refuses
+        assert!(!c.allows(&eq7, 3, 1, None));
+    }
+
+    #[test]
+    fn magnitude_guard() {
+        let c = RowConstraints {
+            max_bcoeff_magnitude: Some(1e6),
+            ..Default::default()
+        };
+        let e0 = Equation::original(0, &[], &[], 1e-8);
+        let mut e1 = Equation::original(1, &[0], &[1.0], 1.0);
+        e1.substitute(&e0);
+        assert!(!c.allows(&e1, 1, 0, None));
+    }
+}

@@ -1,0 +1,152 @@
+//! Flag/positional argument parser for the `sptrsv` binary (clap is not in
+//! the vendored registry).
+//!
+//! Grammar: `sptrsv <subcommand> [positionals] [--flag[=value] | --flag value]`.
+//! Flags may appear anywhere after the subcommand; `--` ends flag parsing.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positionals: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut it = raw.into_iter().peekable();
+        let subcommand = it.next().unwrap_or_default();
+        let mut positionals = Vec::new();
+        let mut flags = BTreeMap::new();
+        let mut no_more_flags = false;
+        while let Some(a) = it.next() {
+            if no_more_flags || !a.starts_with("--") {
+                positionals.push(a);
+                continue;
+            }
+            if a == "--" {
+                no_more_flags = true;
+                continue;
+            }
+            let body = &a[2..];
+            if let Some(eq) = body.find('=') {
+                flags.insert(body[..eq].to_string(), body[eq + 1..].to_string());
+            } else {
+                // `--flag value` when the next token isn't itself a flag,
+                // `--flag` (boolean) otherwise.
+                match it.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        let v = it.next().unwrap();
+                        flags.insert(body.to_string(), v);
+                    }
+                    _ => {
+                        flags.insert(body.to_string(), "true".to_string());
+                    }
+                }
+            }
+        }
+        Args {
+            subcommand,
+            positionals,
+            flags,
+        }
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn bool_flag(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_flag(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn u64_flag(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse(&["solve", "matrix.mtx", "out.txt"]);
+        assert_eq!(a.subcommand, "solve");
+        assert_eq!(a.positionals, vec!["matrix.mtx", "out.txt"]);
+    }
+
+    #[test]
+    fn flag_forms() {
+        let a = parse(&["gen", "--kind=lung2", "--n", "1000", "--verbose"]);
+        assert_eq!(a.flag("kind"), Some("lung2"));
+        assert_eq!(a.usize_flag("n", 0).unwrap(), 1000);
+        assert!(a.bool_flag("verbose"));
+        assert!(!a.bool_flag("quiet"));
+    }
+
+    #[test]
+    fn double_dash_ends_flags() {
+        let a = parse(&["x", "--a", "1", "--", "--not-a-flag"]);
+        assert_eq!(a.flag("a"), Some("1"));
+        assert_eq!(a.positionals, vec!["--not-a-flag"]);
+    }
+
+    #[test]
+    fn numeric_flag_errors() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.usize_flag("n", 0).is_err());
+        assert!(a.f64_flag("n", 0.0).is_err());
+    }
+
+    #[test]
+    fn boolean_flag_before_another_flag() {
+        let a = parse(&["x", "--fast", "--n", "3"]);
+        assert!(a.bool_flag("fast"));
+        assert_eq!(a.usize_flag("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["x"]);
+        assert_eq!(a.flag_or("mode", "auto"), "auto");
+        assert_eq!(a.f64_flag("alpha", 2.5).unwrap(), 2.5);
+    }
+}

@@ -1,0 +1,17 @@
+//! Self-contained utility substrate.
+//!
+//! The build is fully offline against the vendored registry, which does not
+//! carry `rand`, `serde`/`serde_json`, `clap`, `rayon` or `criterion`; the
+//! pieces of those we need are implemented here instead:
+//!
+//! * [`rng`]   — deterministic SplitMix64 RNG (matrix generators, tests)
+//! * [`json`]  — minimal JSON reader/writer (artifact manifest, reports)
+//! * [`timer`] — measurement harness used by `cargo bench` benches
+//! * [`prop`]  — tiny property-based-testing runner (seeded case sweeps)
+//! * [`cli`]   — flag/positional argument parser for the `sptrsv` binary
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod timer;

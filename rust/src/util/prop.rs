@@ -1,0 +1,73 @@
+//! Tiny property-based-testing runner (proptest is not in the vendored
+//! registry).
+//!
+//! A property is a closure taking a seeded [`crate::util::rng::Rng`]; the
+//! runner sweeps `cases` seeds and reports the first failing seed, so a
+//! failure is reproducible by re-running with that seed. No shrinking —
+//! generators are expected to scale case size with the seed index so early
+//! failures are small.
+
+use crate::util::rng::Rng;
+
+/// Run `prop` for seeds `0..cases`. Panics with the failing seed on error.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng, u64) -> Result<(), String>,
+{
+    for case in 0..cases {
+        // Decorrelate consecutive seeds.
+        let mut rng = Rng::new(0xC0FFEE ^ (case.wrapping_mul(0x9E3779B97F4A7C15)));
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!("property '{name}' failed at case {case}: {msg}");
+        }
+    }
+}
+
+/// Assert two f64 slices are element-wise close (abs or rel tolerance).
+pub fn assert_allclose(a: &[f64], b: &[f64], rtol: f64, atol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!(
+                "mismatch at index {i}: {x} vs {y} (diff {:.3e}, tol {:.3e})",
+                (x - y).abs(),
+                tol
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("u64-roundtrip", 50, |rng, _| {
+            let v = rng.next_u64();
+            if v == v {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at case")]
+    fn check_reports_failure() {
+        check("always-false", 3, |_, _| Err("boom".into()));
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0 + 1e-12, 2.0], 1e-9, 0.0).is_ok());
+        assert!(assert_allclose(&[1.0], &[1.1], 1e-9, 0.0).is_err());
+        assert!(assert_allclose(&[1.0], &[1.0, 2.0], 1e-9, 0.0).is_err());
+        assert!(assert_allclose(&[0.0], &[1e-13], 0.0, 1e-12).is_ok());
+    }
+}

@@ -1,0 +1,173 @@
+//! Measurement harness for the `cargo bench` benches (criterion is not in
+//! the vendored registry, so the benches use `harness = false` plus this).
+//!
+//! Reports min / median / mean / p95 over a fixed wall-clock budget with a
+//! warmup phase, and offers a text-table printer used by the Table I /
+//! figure harnesses.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+}
+
+impl Measurement {
+    pub fn throughput_per_sec(&self) -> f64 {
+        1.0 / self.median.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for Measurement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} iters={:<6} min={:>12?} median={:>12?} mean={:>12?} p95={:>12?}",
+            self.name, self.iters, self.min, self.median, self.mean, self.p95
+        )
+    }
+}
+
+/// Benchmark `f`, first warming up for `warmup`, then sampling for at least
+/// `budget` wall-clock time (at least 3 iterations regardless).
+pub fn bench_with<F: FnMut()>(
+    name: &str,
+    warmup: Duration,
+    budget: Duration,
+    mut f: F,
+) -> Measurement {
+    // Warmup.
+    let wstart = Instant::now();
+    while wstart.elapsed() < warmup {
+        f();
+    }
+    // Sample.
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 3 {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    samples.sort_unstable();
+    let iters = samples.len();
+    let total: Duration = samples.iter().sum();
+    let p95_idx = ((iters as f64 * 0.95) as usize).min(iters - 1);
+    Measurement {
+        name: name.to_string(),
+        iters,
+        min: samples[0],
+        median: samples[iters / 2],
+        mean: total / iters as u32,
+        p95: samples[p95_idx],
+    }
+}
+
+/// Benchmark with default warmup (0.2 s) and budget (1 s), printing the
+/// measurement as it completes.
+pub fn bench<F: FnMut()>(name: &str, f: F) -> Measurement {
+    let m = bench_with(name, Duration::from_millis(200), Duration::from_secs(1), f);
+    println!("{m}");
+    m
+}
+
+/// Fixed-width text table used by the report harnesses.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let sep = |out: &mut String| {
+            for w in &widths {
+                out.push('+');
+                out.push_str(&"-".repeat(w + 2));
+            }
+            out.push_str("+\n");
+        };
+        sep(&mut out);
+        for (c, h) in self.headers.iter().enumerate() {
+            out.push_str(&format!("| {:<width$} ", h, width = widths[c]));
+        }
+        out.push_str("|\n");
+        sep(&mut out);
+        for row in &self.rows {
+            for (c, cell) in row.iter().enumerate() {
+                out.push_str(&format!("| {:<width$} ", cell, width = widths[c]));
+            }
+            out.push_str("|\n");
+        }
+        sep(&mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_orders_stats() {
+        let mut x = 0u64;
+        let m = bench_with(
+            "noop",
+            Duration::from_millis(1),
+            Duration::from_millis(10),
+            || {
+                x = x.wrapping_add(1);
+                std::hint::black_box(x);
+            },
+        );
+        assert!(m.iters >= 3);
+        assert!(m.min <= m.median);
+        assert!(m.median <= m.p95 || m.iters < 20);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["metric", "value"]);
+        t.row(&["num. of levels".into(), "479".into()]);
+        t.row(&["avg".into(), "914.054".into()]);
+        let s = t.render();
+        assert!(s.contains("| num. of levels | 479"));
+        let first = s.lines().next().unwrap().len();
+        assert!(s.lines().all(|l| l.len() == first));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,52 @@
+//! End-to-end: the whole pipeline exactly as the e2e example runs it,
+//! asserted for CI — generator -> coordinator -> (XLA | native) backend ->
+//! batched solves -> residual checks -> metrics.
+
+use sptrsv_gt::config::Config;
+use sptrsv_gt::coordinator::Service;
+use sptrsv_gt::sparse::generate::{self, GenOptions};
+use sptrsv_gt::util::rng::Rng;
+
+#[test]
+fn mixed_workload_end_to_end() {
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let use_xla = artifacts.join("manifest.json").exists();
+    let svc = Service::start(Config {
+        workers: 2,
+        strategy: "avgcost".into(),
+        use_xla,
+        artifacts_dir: artifacts.to_str().unwrap().to_string(),
+        batch_size: 8,
+        batch_deadline_us: 500,
+        ..Default::default()
+    });
+    let h = svc.handle();
+
+    let lung = generate::lung2_like(&GenOptions::with_scale(0.02));
+    let torso = generate::torso2_like(&GenOptions::with_scale(0.01));
+    let tri = generate::tridiagonal(400, &Default::default());
+    h.register("lung", lung.clone(), None).unwrap();
+    h.register("torso", torso.clone(), None).unwrap();
+    h.register("tri", tri.clone(), Some("manual:10")).unwrap();
+
+    let mats: [(&str, &sptrsv_gt::sparse::Csr); 3] =
+        [("lung", &lung), ("torso", &torso), ("tri", &tri)];
+    let mut rng = Rng::new(77);
+    let mut inflight = Vec::new();
+    for i in 0..48 {
+        let (id, m) = mats[i % 3];
+        let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        inflight.push((id, b.clone(), h.solve_async(id, b).unwrap()));
+    }
+    for (id, b, rx) in inflight {
+        let x = rx.recv().unwrap().unwrap();
+        let m = mats.iter().find(|(n, _)| *n == id).unwrap().1;
+        let r = m.residual_inf(&x, &b);
+        assert!(r < 1e-8, "{id}: residual {r}");
+    }
+    let snap = h.metrics().unwrap();
+    assert_eq!(snap.solves, 48);
+    assert_eq!(snap.errors, 0);
+    assert!(snap.batches > 0);
+    svc.shutdown();
+}

@@ -1,0 +1,188 @@
+//! Integration tests across modules: generator -> levels -> transform ->
+//! solvers -> codegen -> coordinator, on realistic matrices.
+
+use sptrsv_gt::codegen::{self, CodegenOptions};
+use sptrsv_gt::config::Config;
+use sptrsv_gt::coordinator::Service;
+use sptrsv_gt::graph::{analyze::LevelStats, Levels};
+use sptrsv_gt::report::{figures, table1};
+use sptrsv_gt::solver::executor::TransformedSolver;
+use sptrsv_gt::solver::levelset::LevelSetSolver;
+use sptrsv_gt::solver::syncfree::SyncFreeSolver;
+use sptrsv_gt::sparse::generate::{self, GenOptions};
+use sptrsv_gt::sparse::matrix_market;
+use sptrsv_gt::transform::Strategy;
+use sptrsv_gt::util::prop::assert_allclose;
+use sptrsv_gt::util::rng::Rng;
+
+/// The full Table I pipeline at reduced scale: every metric must have the
+/// paper's qualitative shape.
+#[test]
+fn table1_shape_lung2() {
+    let m = generate::lung2_like(&GenOptions::with_scale(0.1));
+    let cells = table1::run_matrix(&m, true);
+    let (none, avg, man) = (&cells[0], &cells[1], &cells[2]);
+    // Strong level reduction, avgcost > manual.
+    assert!(avg.num_levels < none.num_levels / 4);
+    assert!(man.num_levels < none.num_levels / 2);
+    assert!(avg.num_levels <= man.num_levels);
+    // Average level cost multiplies accordingly.
+    assert!(avg.avg_level_cost > 4.0 * none.avg_level_cost);
+    // Total cost approximately preserved (paper: ~1% lower).
+    let drift =
+        (avg.total_level_cost as f64 / none.total_level_cost as f64 - 1.0).abs();
+    assert!(drift < 0.05, "total cost drift {drift}");
+    // Code size in the same ballpark as the original.
+    assert!(avg.code_size_mb > 0.0 && avg.code_size_mb < 2.0 * none.code_size_mb);
+    // Few rows rewritten (paper: ~1%).
+    assert!((avg.rows_rewritten as f64) < 0.1 * m.nrows as f64);
+}
+
+#[test]
+fn table1_shape_torso2() {
+    let m = generate::torso2_like(&GenOptions::with_scale(0.05));
+    let cells = table1::run_matrix(&m, false);
+    let (none, avg, man) = (&cells[0], &cells[1], &cells[2]);
+    // Milder reduction than lung2 (paper: 34% / 45% vs 95% / 86%).
+    assert!(avg.num_levels < none.num_levels);
+    assert!(man.num_levels < none.num_levels);
+    let red_avg = 1.0 - avg.num_levels as f64 / none.num_levels as f64;
+    assert!(red_avg < 0.9, "torso2 reduction {red_avg} too strong");
+    // Manual inflates total cost more than avgcost (paper: +40% vs +0.2%).
+    assert!(man.total_level_cost >= avg.total_level_cost);
+    // More rows rewritten than lung2, relatively (paper: 13-16%).
+    assert!(man.rows_rewritten > avg.rows_rewritten / 2);
+}
+
+/// All four solver backends agree on all strategies.
+#[test]
+fn solver_backends_agree() {
+    let m = generate::torso2_like(&GenOptions::with_scale(0.02));
+    let mut rng = Rng::new(5);
+    let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-2.0, 2.0)).collect();
+    let x_serial = sptrsv_gt::solver::serial::solve(&m, &b);
+    let x_level = LevelSetSolver::from_matrix(m.clone(), 3).solve(&b);
+    let x_sync = SyncFreeSolver::from_matrix(m.clone(), 3).solve(&b);
+    assert_allclose(&x_level, &x_serial, 1e-12, 1e-14).unwrap();
+    assert_allclose(&x_sync, &x_serial, 1e-12, 1e-14).unwrap();
+    for strat in ["none", "avgcost", "manual:7"] {
+        let t = Strategy::parse(strat).unwrap().apply(&m);
+        let s = TransformedSolver::from_parts(m.clone(), t, 3);
+        let x = s.solve(&b);
+        assert_allclose(&x, &x_serial, 1e-8, 1e-10)
+            .unwrap_or_else(|e| panic!("{strat}: {e}"));
+    }
+}
+
+/// Matrix Market roundtrip preserves solutions end-to-end.
+#[test]
+fn matrix_market_roundtrip_solve() {
+    let m = generate::lung2_like(&GenOptions::with_scale(0.02));
+    let path = std::env::temp_dir().join(format!("sptrsv_it_{}.mtx", std::process::id()));
+    matrix_market::write_path(&m, &path).unwrap();
+    let m2 = matrix_market::read_path(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(m, m2);
+    let b = vec![1.0; m.nrows];
+    let x1 = sptrsv_gt::solver::serial::solve(&m, &b);
+    let x2 = sptrsv_gt::solver::serial::solve(&m2, &b);
+    assert_eq!(x1, x2);
+}
+
+/// Codegen Fig-3 reproduction: the three snippets differ as published.
+#[test]
+fn fig3_codegen_variants() {
+    let m = generate::lung2_like(&GenOptions::with_scale(0.05));
+    let mut rng = Rng::new(7);
+    let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let bake = CodegenOptions {
+        bake_b: Some(b),
+        ..Default::default()
+    };
+    let g_none = codegen::generate(&m, &Strategy::None.apply(&m), &bake);
+    let t_avg = Strategy::parse("avgcost").unwrap().apply(&m);
+    let g_avg = codegen::generate(&m, &t_avg, &bake);
+    let t_man = Strategy::parse("manual").unwrap().apply(&m);
+    let g_man = codegen::generate(&m, &t_man, &bake);
+    // Paper: code shrinks slightly for avgcost (fewer divisions/levels).
+    assert!(g_avg.size_bytes < g_none.size_bytes);
+    assert!(g_man.size_bytes < g_none.size_bytes * 11 / 10);
+    // Fewer functions after rewriting (levels merged).
+    assert!(g_avg.num_functions < g_none.num_functions);
+}
+
+/// Figures 5/6 series: bumps (fat levels) survive all strategies.
+#[test]
+fn figures_series_properties() {
+    let m = generate::lung2_like(&GenOptions::with_scale(0.05));
+    let ss = figures::series(&m);
+    assert_eq!(ss.len(), 3);
+    let csv = figures::to_csv(&ss);
+    assert!(csv.lines().count() > ss[1].level_costs.len());
+    // avgLevelCost raises the average the most (paper Fig 5 annotations).
+    assert!(ss[1].avg_level_cost > ss[0].avg_level_cost);
+    assert!(ss[1].avg_level_cost >= ss[2].avg_level_cost * 0.8);
+}
+
+/// Coordinator serves mixed workloads with correct results end-to-end.
+#[test]
+fn coordinator_end_to_end_native() {
+    let svc = Service::start(Config {
+        workers: 2,
+        use_xla: false,
+        batch_size: 4,
+        batch_deadline_us: 200,
+        ..Default::default()
+    });
+    let h = svc.handle();
+    let m = generate::torso2_like(&GenOptions::with_scale(0.01));
+    let n = m.nrows;
+    let info = h.register("t2", m.clone(), Some("avgcost")).unwrap();
+    assert!(info.levels_after <= info.levels_before);
+    let mut rng = Rng::new(3);
+    let reqs: Vec<_> = (0..16)
+        .map(|_| {
+            let b: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            (b.clone(), h.solve_async("t2", b).unwrap())
+        })
+        .collect();
+    for (b, rx) in reqs {
+        let x = rx.recv().unwrap().unwrap();
+        assert!(m.residual_inf(&x, &b) < 1e-9);
+    }
+    let snap = h.metrics().unwrap();
+    assert_eq!(snap.solves, 16);
+    assert!(snap.errors == 0);
+    svc.shutdown();
+}
+
+/// Transform must be idempotent in effect: re-applying a strategy to an
+/// already-chubby system changes little.
+#[test]
+fn transform_stability_under_reapplication() {
+    let m = generate::lung2_like(&GenOptions::with_scale(0.05));
+    let t1 = Strategy::parse("avgcost").unwrap().apply(&m);
+    // The *structure* after transform has few thin levels left: applying
+    // the same criterion to the new stats finds little to do.
+    let st = LevelStats::from_row_costs(&t1.row_costs, &t1.levels);
+    let thin = st.thin_levels();
+    assert!(
+        thin.len() <= t1.levels.len() / 2 + 1,
+        "{} of {} levels still thin",
+        thin.len(),
+        t1.levels.len()
+    );
+}
+
+/// Level construction is consistent between the Levels builder and the
+/// transform result for the identity strategy.
+#[test]
+fn identity_transform_levels_match_builder() {
+    let m = generate::random_lower(500, 4, 0.8, &Default::default());
+    let lv = Levels::build(&m);
+    let t = Strategy::None.apply(&m);
+    assert_eq!(t.levels.len(), lv.num_levels());
+    for (a, b) in t.levels.iter().zip(&lv.levels) {
+        assert_eq!(a, b);
+    }
+}

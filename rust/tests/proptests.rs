@@ -1,0 +1,242 @@
+//! Property-based tests over the coordinator-side invariants: level
+//! validity, semantic preservation of rewriting, cost-model bookkeeping,
+//! batching FIFO order, and solver agreement — swept across random
+//! matrices and strategies.
+
+use sptrsv_gt::graph::{analyze::LevelStats, Dag, Levels};
+use sptrsv_gt::runtime::PaddedSystem;
+use sptrsv_gt::solver::executor::TransformedSolver;
+use sptrsv_gt::sparse::generate::{self, GenOptions};
+use sptrsv_gt::transform::Strategy;
+use sptrsv_gt::util::prop::{assert_allclose, check};
+use sptrsv_gt::util::rng::Rng;
+
+fn random_matrix(rng: &mut Rng, case: u64) -> sptrsv_gt::sparse::Csr {
+    let n = 20 + (case as usize % 10) * 40 + rng.below(50);
+    let max_deps = 1 + rng.below(5);
+    let density = rng.uniform(0.3, 0.95);
+    generate::random_lower(
+        n,
+        max_deps,
+        density,
+        &GenOptions {
+            seed: rng.next_u64(),
+            ..Default::default()
+        },
+    )
+}
+
+fn random_strategy(rng: &mut Rng) -> Strategy {
+    match rng.below(3) {
+        0 => Strategy::None,
+        1 => Strategy::AvgLevelCost(Default::default()),
+        _ => Strategy::Manual(sptrsv_gt::transform::manual::ManualOptions {
+            distance: 2 + rng.below(12),
+        }),
+    }
+}
+
+/// Any strategy on any matrix yields a valid topological level structure.
+#[test]
+fn prop_transform_levels_valid() {
+    check("transform-levels-valid", 60, |rng, case| {
+        let m = random_matrix(rng, case);
+        let t = random_strategy(rng).apply(&m);
+        t.validate(&m)?;
+        // Level-of and levels agree.
+        for (l, rows) in t.levels.iter().enumerate() {
+            for &r in rows {
+                if t.level_of[r as usize] as usize != l {
+                    return Err(format!("row {r} level mismatch"));
+                }
+            }
+        }
+        // No empty levels survive compaction.
+        if t.levels.iter().any(Vec::is_empty) {
+            return Err("empty level survived".into());
+        }
+        Ok(())
+    });
+}
+
+/// The transformed system solves to the serial solution (semantics).
+#[test]
+fn prop_transform_preserves_solution() {
+    check("transform-preserves-solution", 40, |rng, case| {
+        let m = random_matrix(rng, case);
+        let t = random_strategy(rng).apply(&m);
+        let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        let x_ref = sptrsv_gt::solver::serial::solve(&m, &b);
+        let s = TransformedSolver::from_parts(m, t, 1 + rng.below(4));
+        assert_allclose(&s.solve(&b), &x_ref, 1e-8, 1e-10)
+    });
+}
+
+/// Paper cost-model bookkeeping: total cost of the identity equals
+/// 2*nnz - n; each level's cost equals the sum of its row costs.
+#[test]
+fn prop_cost_bookkeeping() {
+    check("cost-bookkeeping", 60, |rng, case| {
+        let m = random_matrix(rng, case);
+        let t = random_strategy(rng).apply(&m);
+        let st = LevelStats::from_row_costs(&t.row_costs, &t.levels);
+        if st.total_cost != t.stats.total_level_cost_after {
+            return Err(format!(
+                "total {} != stats {}",
+                st.total_cost, t.stats.total_level_cost_after
+            ));
+        }
+        if t.stats.rows_rewritten != t.log.len() {
+            return Err("rewrite log length mismatch".into());
+        }
+        // Rewrites only move rows upward.
+        for rec in &t.log {
+            if rec.to_level >= rec.from_level {
+                return Err(format!("rewrite {rec:?} not upward"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Level-set structure invariants vs the DAG: level = longest dep chain.
+#[test]
+fn prop_levels_equal_critical_depth() {
+    check("levels-equal-depth", 60, |rng, case| {
+        let m = random_matrix(rng, case);
+        let lv = Levels::build(&m);
+        lv.validate(&m)?;
+        let cp = sptrsv_gt::graph::critical_path::CriticalPath::compute(&m);
+        for i in 0..m.nrows {
+            if cp.depth[i] != lv.level_of[i] {
+                return Err(format!("row {i}: depth != level"));
+            }
+        }
+        if cp.length as usize != lv.num_levels() {
+            return Err("critical path length != num levels".into());
+        }
+        // DAG edge count == off-diagonal nnz.
+        let dag = Dag::build(&m);
+        if dag.num_edges() != m.nnz() - m.nrows {
+            return Err("edge count mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+/// Padded-system layout: emulating the scan semantics on the padded
+/// arrays reproduces the serial solution for arbitrary fitting shapes.
+#[test]
+fn prop_padded_layout_correct() {
+    check("padded-layout", 30, |rng, case| {
+        let m = random_matrix(rng, case);
+        let t = random_strategy(rng).apply(&m);
+        let mut shape = PaddedSystem::requirements(&m, &t);
+        shape.l += rng.below(4);
+        shape.r += rng.below(8);
+        shape.k += rng.below(3);
+        shape.n += rng.below(16);
+        let p = PaddedSystem::build(&m, &t, shape).map_err(|e| e.to_string())?;
+        let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        // Emulate the L2 scan on CPU.
+        let bp = p.map_rhs(&b);
+        let mut b_ext = bp.clone();
+        b_ext.push(0.0);
+        let mut x = vec![0.0; shape.n + 1];
+        for li in 0..shape.l {
+            let mut xl = vec![0.0; shape.r];
+            for ri in 0..shape.r {
+                let slot = li * shape.r + ri;
+                let mut s = 0.0;
+                for d in 0..shape.k {
+                    s += p.vals[slot * shape.k + d] * x[p.cols[slot * shape.k + d] as usize];
+                }
+                xl[ri] = (b_ext[p.rows[slot] as usize] - s) * p.inv_diag[slot];
+            }
+            for ri in 0..shape.r {
+                x[p.rows[li * shape.r + ri] as usize] = xl[ri];
+            }
+        }
+        let x_ref = sptrsv_gt::solver::serial::solve(&m, &b);
+        assert_allclose(&x[..m.nrows], &x_ref, 1e-8, 1e-10)
+    });
+}
+
+/// Batcher: FIFO order, no loss, no duplication under random operations.
+#[test]
+fn prop_batcher_fifo_no_loss() {
+    use sptrsv_gt::coordinator::batcher::Batcher;
+    use std::time::Duration;
+    check("batcher-fifo", 60, |rng, _| {
+        let mut b: Batcher<u64> = Batcher::new(1 + rng.below(6), Duration::from_secs(60));
+        let mut next_token = 0u64;
+        let mut taken: Vec<u64> = Vec::new();
+        let ids = ["a", "b", "c"];
+        for _ in 0..rng.below(60) + 5 {
+            if rng.chance(0.7) {
+                let id = ids[rng.below(3)];
+                b.push(id, vec![0.0], next_token);
+                next_token += 1;
+            } else {
+                let id = ids[rng.below(3)];
+                for p in b.take(id) {
+                    taken.push(p.token);
+                }
+            }
+        }
+        for id in ids {
+            loop {
+                let batch = b.take(id);
+                if batch.is_empty() {
+                    break;
+                }
+                taken.extend(batch.iter().map(|p| p.token));
+            }
+        }
+        if b.pending() != 0 {
+            return Err("tokens lost in queues".into());
+        }
+        taken.sort_unstable();
+        let expect: Vec<u64> = (0..next_token).collect();
+        if taken != expect {
+            return Err(format!("lost/duplicated tokens: {} vs {}", taken.len(), next_token));
+        }
+        Ok(())
+    });
+}
+
+/// Equation algebra: substituting in any order gives the same equation
+/// (the rearrangement is canonical).
+#[test]
+fn prop_substitution_order_independent() {
+    use sptrsv_gt::transform::Equation;
+    check("substitution-order", 60, |rng, _| {
+        // x3 depends on x1, x2; both depend on x0.
+        let e0 = Equation::original(0, &[], &[], rng.uniform(0.5, 2.0));
+        let e1 = Equation::original(1, &[0], &[rng.uniform(-2.0, 2.0)], rng.uniform(0.5, 2.0));
+        let e2 = Equation::original(2, &[0], &[rng.uniform(-2.0, 2.0)], rng.uniform(0.5, 2.0));
+        let base = Equation::original(
+            3,
+            &[1, 2],
+            &[rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0)],
+            rng.uniform(0.5, 2.0),
+        );
+        let mut a = base.clone();
+        a.substitute(&e1);
+        a.substitute(&e2);
+        a.substitute(&e0);
+        let mut b = base.clone();
+        b.substitute(&e2);
+        b.substitute(&e1);
+        b.substitute(&e0);
+        if a.coeffs.len() != b.coeffs.len() || a.bcoeffs.len() != b.bcoeffs.len() {
+            return Err("structure differs by order".into());
+        }
+        for (x, y) in a.bcoeffs.iter().zip(&b.bcoeffs) {
+            if x.0 != y.0 || (x.1 - y.1).abs() > 1e-12 * x.1.abs().max(1.0) {
+                return Err(format!("bcoeff {x:?} vs {y:?}"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,123 @@
+//! XLA runtime integration: requires `make artifacts` (the tests skip
+//! with a note when artifacts are missing, so `cargo test` stays green in
+//! a fresh checkout; `make test` always builds artifacts first).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use sptrsv_gt::runtime::{PaddedSystem, Registry, XlaSolver};
+use sptrsv_gt::sparse::generate::{self, GenOptions};
+use sptrsv_gt::transform::Strategy;
+use sptrsv_gt::util::prop::assert_allclose;
+use sptrsv_gt::util::rng::Rng;
+
+fn registry() -> Option<Arc<Registry>> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping XLA test: run `make artifacts` first");
+        return None;
+    }
+    Some(Arc::new(Registry::load(&dir).expect("load registry")))
+}
+
+#[test]
+fn xla_solve_matches_serial_transformed() {
+    let Some(reg) = registry() else { return };
+    let solver = XlaSolver::new(Arc::clone(&reg));
+    for (name, m) in [
+        ("lung2", generate::lung2_like(&GenOptions::with_scale(0.02))),
+        ("tridiagonal", generate::tridiagonal(500, &Default::default())),
+    ] {
+        for strat in ["none", "avgcost"] {
+            let t = Strategy::parse(strat).unwrap().apply(&m);
+            let req = PaddedSystem::requirements(&m, &t);
+            let Some(meta) = reg.best_fit("solve", &req) else {
+                eprintln!("skip {name}/{strat}: no fit for {req:?}");
+                continue;
+            };
+            let p = PaddedSystem::build(&m, &t, meta.pad_shape()).unwrap();
+            let mut rng = Rng::new(9);
+            let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let x = solver.solve(&p, &b).unwrap();
+            let x_ref = sptrsv_gt::solver::serial::solve(&m, &b);
+            assert_allclose(&x, &x_ref, 1e-9, 1e-11)
+                .unwrap_or_else(|e| panic!("{name}/{strat}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn xla_batched_solve() {
+    let Some(reg) = registry() else { return };
+    let solver = XlaSolver::new(Arc::clone(&reg));
+    let m = generate::lung2_like(&GenOptions::with_scale(0.02));
+    let t = Strategy::parse("avgcost").unwrap().apply(&m);
+    // The batched artifact is exact-shape; fit against the batch entry.
+    let req = PaddedSystem::requirements(&m, &t);
+    let meta = reg
+        .metas
+        .iter()
+        .find(|a| a.entry == "solve_batched" && a.fits(&req))
+        .expect("batched artifact fits");
+    let bsz = meta.b.unwrap();
+    let p = PaddedSystem::build(&m, &t, meta.pad_shape()).unwrap();
+    let mut rng = Rng::new(4);
+    let bs: Vec<Vec<f64>> = (0..bsz)
+        .map(|_| (0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect())
+        .collect();
+    let xs = solver.solve_batched(&p, &bs).unwrap();
+    assert_eq!(xs.len(), bsz);
+    for (b, x) in bs.iter().zip(&xs) {
+        let x_ref = sptrsv_gt::solver::serial::solve(&m, b);
+        assert_allclose(x, &x_ref, 1e-9, 1e-11).unwrap();
+    }
+}
+
+#[test]
+fn xla_residual_graph() {
+    let Some(reg) = registry() else { return };
+    let solver = XlaSolver::new(Arc::clone(&reg));
+    let m = generate::lung2_like(&GenOptions::with_scale(0.02));
+    let t = Strategy::parse("avgcost").unwrap().apply(&m);
+    let meta = reg
+        .metas
+        .iter()
+        .find(|a| a.entry == "residual" && a.fits(&PaddedSystem::requirements(&m, &t)))
+        .expect("residual artifact");
+    let p = PaddedSystem::build(&m, &t, meta.pad_shape()).unwrap();
+    let mut rng = Rng::new(5);
+    let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let x = sptrsv_gt::solver::serial::solve(&m, &b);
+    // Residual of the true solution ~ 0; of a corrupted one, large.
+    // (Measured against the TRANSFORMED system's b' = W b.)
+    let r_good = solver.residual(&p, &b, &x).unwrap();
+    assert!(r_good < 1e-9, "{r_good}");
+    let mut x_bad = x.clone();
+    x_bad[0] += 1.0;
+    let r_bad = solver.residual(&p, &b, &x_bad).unwrap();
+    assert!(r_bad > 1e-3, "{r_bad}");
+}
+
+#[test]
+fn coordinator_uses_xla_backend() {
+    let Some(_reg) = registry() else { return };
+    use sptrsv_gt::config::Config;
+    use sptrsv_gt::coordinator::Service;
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let svc = Service::start(Config {
+        workers: 2,
+        use_xla: true,
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        batch_size: 4,
+        batch_deadline_us: 200,
+        ..Default::default()
+    });
+    let h = svc.handle();
+    let m = generate::lung2_like(&GenOptions::with_scale(0.02));
+    let info = h.register("lung", m.clone(), None).unwrap();
+    assert_eq!(info.backend, "xla");
+    let b = vec![1.0; m.nrows];
+    let x = h.solve("lung", b.clone()).unwrap();
+    assert!(m.residual_inf(&x, &b) < 1e-9);
+    svc.shutdown();
+}
