@@ -1,0 +1,131 @@
+//! Bench: the strategy-portfolio autotuner against every fixed strategy
+//! on the three built-in generator families.
+//!
+//!     cargo bench --bench tuner_perf
+//!     SPTRSV_BENCH_SCALE=0.2 SPTRSV_BENCH_WORKERS=8 cargo bench --bench tuner_perf
+//!
+//! For each matrix the harness measures the per-solve time of each fixed
+//! strategy, then lets `auto` decide (cost model + race + plan cache) and
+//! measures the tuned plan the same way. `auto` must land within 5% of
+//! the best fixed strategy; a second `choose` on the same structure must
+//! come from the plan cache.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sptrsv_gt::solver::executor::TransformedSolver;
+use sptrsv_gt::solver::pool::Pool;
+use sptrsv_gt::sparse::generate::{self, GenOptions};
+use sptrsv_gt::sparse::Csr;
+use sptrsv_gt::transform::{Strategy, TransformResult};
+use sptrsv_gt::tuner::{PlanSource, Tuner, TunerOptions};
+use sptrsv_gt::util::rng::Rng;
+use sptrsv_gt::util::timer::Table;
+
+const FIXED: [&str; 4] = ["none", "avgcost", "manual:10", "guarded:20"];
+
+/// Best-of-N per-solve time (µs) of a prepared plan, on a shared pool.
+fn measure_us(m: &Arc<Csr>, t: TransformResult, pool: &Arc<Pool>, b: &[f64]) -> f64 {
+    let solver = TransformedSolver::new(Arc::clone(m), Arc::new(t), Arc::clone(pool));
+    let mut x = vec![0.0; m.nrows];
+    solver.solve_into(b, &mut x); // warm-up
+    let mut best = f64::INFINITY;
+    let budget = Duration::from_millis(250);
+    let start = Instant::now();
+    let mut iters = 0u32;
+    while start.elapsed() < budget || iters < 5 {
+        let s0 = Instant::now();
+        solver.solve_into(b, &mut x);
+        best = best.min(s0.elapsed().as_secs_f64() * 1e6);
+        iters += 1;
+        if iters >= 10_000 {
+            break;
+        }
+    }
+    best
+}
+
+fn main() {
+    let scale: f64 = std::env::var("SPTRSV_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.1);
+    let workers: usize = std::env::var("SPTRSV_BENCH_WORKERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let opts = GenOptions::with_scale(scale);
+    let n_tri = ((4000.0 * scale).round() as usize).max(200);
+
+    println!("== tuner bench (scale {scale}, {workers} workers) ==\n");
+    let mut failures = 0usize;
+    for (name, m) in [
+        ("lung2-like", generate::lung2_like(&opts)),
+        ("torso2-like", generate::torso2_like(&opts)),
+        ("tridiagonal", generate::tridiagonal(n_tri, &opts)),
+    ] {
+        println!("-- {name}: {} rows, {} nnz --", m.nrows, m.nnz());
+        let mc = Arc::new(m);
+        let pool = Arc::new(Pool::new(workers));
+        let mut rng = Rng::new(0x7E57_BE11C);
+        let b: Vec<f64> = (0..mc.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
+
+        let mut table = Table::new(&["strategy", "levels", "solve (us)", "vs best"]);
+        let mut best_fixed = f64::INFINITY;
+        let mut rows: Vec<(String, usize, f64)> = Vec::new();
+        for s in FIXED {
+            let t = Strategy::parse(s).unwrap().apply(&mc);
+            let levels = t.num_levels();
+            let us = measure_us(&mc, t, &pool, &b);
+            best_fixed = best_fixed.min(us);
+            rows.push((s.to_string(), levels, us));
+        }
+
+        let mut tuner = Tuner::new(TunerOptions {
+            workers,
+            // Race a wider shortlist than the serving default: the bench
+            // asserts a 5% window, so give the model's runner-up a lane.
+            top_k: 3,
+            ..Default::default()
+        });
+        let plan = tuner.choose_arc(&mc).unwrap();
+        let auto_label = format!("auto -> {}", plan.strategy_name);
+        let auto_levels = plan.transform.num_levels();
+        let auto_us = measure_us(&mc, plan.transform, &pool, &b);
+        rows.push((auto_label, auto_levels, auto_us));
+
+        for (s, levels, us) in &rows {
+            table.row(&[
+                s.clone(),
+                levels.to_string(),
+                format!("{us:.1}"),
+                format!("{:.2}x", us / best_fixed),
+            ]);
+        }
+        print!("{}", table.render());
+
+        // Acceptance: auto within 5% of the best fixed strategy (plus a
+        // microsecond of absolute slack for timer noise on tiny solves).
+        let ok = auto_us <= best_fixed * 1.05 + 1.0;
+        println!(
+            "auto {:.1}us vs best fixed {:.1}us -> {}",
+            auto_us,
+            best_fixed,
+            if ok { "PASS (within 5%)" } else { "FAIL (worse than 5%)" }
+        );
+        if !ok {
+            failures += 1;
+        }
+
+        // Re-choosing the same structure must hit the plan cache.
+        let again = tuner.choose_arc(&mc).unwrap();
+        assert_eq!(again.source, PlanSource::CacheHit);
+        let (hits, misses) = tuner.cache_stats();
+        println!("plan cache: hits={hits} misses={misses}\n");
+    }
+    if failures > 0 {
+        eprintln!("{failures} matrix family(ies) exceeded the 5% window");
+        std::process::exit(1);
+    }
+    println!("tuner bench OK: auto within 5% of best fixed everywhere");
+}

@@ -24,6 +24,13 @@ pub struct Config {
     pub use_xla: bool,
     /// default RNG seed for generators
     pub seed: u64,
+    /// tuner plan-cache spill file for the `auto` strategy ("" = memory
+    /// only)
+    pub tuner_cache: String,
+    /// how many cost-model favourites the tuner races empirically
+    pub tuner_top_k: usize,
+    /// timed solves per raced candidate
+    pub tuner_race_solves: usize,
     /// any further key=value pairs (kept for extensions/ablations)
     pub extra: BTreeMap<String, String>,
 }
@@ -40,6 +47,9 @@ impl Default for Config {
             batch_deadline_us: 2_000,
             use_xla: false,
             seed: 0x5EED,
+            tuner_cache: String::new(),
+            tuner_top_k: 2,
+            tuner_race_solves: 3,
             extra: BTreeMap::new(),
         }
     }
@@ -78,7 +88,8 @@ impl Config {
             if matches!(
                 k.as_str(),
                 "workers" | "strategy" | "artifacts-dir" | "batch-size"
-                    | "batch-deadline-us" | "use-xla" | "seed"
+                    | "batch-deadline-us" | "use-xla" | "seed" | "tuner-cache"
+                    | "tuner-top-k" | "tuner-race-solves"
             ) {
                 self.set(&k.replace('-', "_"), v)?;
             }
@@ -98,6 +109,11 @@ impl Config {
             }
             "use_xla" => self.use_xla = matches!(val, "true" | "1" | "yes"),
             "seed" => self.seed = val.parse().map_err(|_| bad(key, val))?,
+            "tuner_cache" => self.tuner_cache = val.to_string(),
+            "tuner_top_k" => self.tuner_top_k = val.parse().map_err(|_| bad(key, val))?,
+            "tuner_race_solves" => {
+                self.tuner_race_solves = val.parse().map_err(|_| bad(key, val))?
+            }
             other => {
                 self.extra.insert(other.to_string(), val.to_string());
             }
@@ -115,6 +131,28 @@ mod tests {
         let c = Config::default();
         assert!(c.workers >= 1);
         assert_eq!(c.strategy, "avgcost");
+        assert!(c.tuner_cache.is_empty());
+        assert!(c.tuner_top_k >= 1);
+    }
+
+    #[test]
+    fn tuner_keys_parse() {
+        let mut c = Config::default();
+        c.set("tuner_cache", "/tmp/plans.json").unwrap();
+        c.set("tuner_top_k", "3").unwrap();
+        c.set("tuner_race_solves", "5").unwrap();
+        assert_eq!(c.tuner_cache, "/tmp/plans.json");
+        assert_eq!(c.tuner_top_k, 3);
+        assert_eq!(c.tuner_race_solves, 5);
+        assert!(c.set("tuner_top_k", "lots").is_err());
+        let args = Args::parse(
+            ["serve", "--tuner-cache", "p.json", "--tuner-top-k", "4"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        c.merge_args(&args).unwrap();
+        assert_eq!(c.tuner_cache, "p.json");
+        assert_eq!(c.tuner_top_k, 4);
     }
 
     #[test]

@@ -1,7 +1,11 @@
 //! Service metrics: request counters and a log2-bucketed latency
-//! histogram, lock-free on the hot path.
+//! histogram, lock-free on the hot path. Tuner events (registration-time
+//! only, never on the solve path) additionally keep per-strategy win
+//! counts behind a mutex.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
 
 const BUCKETS: usize = 40; // 2^0 .. 2^39 microseconds
@@ -11,8 +15,14 @@ pub struct Metrics {
     pub batched_solves: AtomicU64,
     pub batches: AtomicU64,
     pub errors: AtomicU64,
+    /// `auto` registrations answered from the fingerprint plan cache
+    pub tuner_cache_hits: AtomicU64,
+    /// `auto` registrations that ran the cost model + race
+    pub tuner_cache_misses: AtomicU64,
     total_us: AtomicU64,
     hist: [AtomicU64; BUCKETS],
+    /// strategy name -> times the tuner picked it
+    strategy_wins: Mutex<BTreeMap<String, u64>>,
 }
 
 impl Default for Metrics {
@@ -28,9 +38,24 @@ impl Metrics {
             batched_solves: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            tuner_cache_hits: AtomicU64::new(0),
+            tuner_cache_misses: AtomicU64::new(0),
             total_us: AtomicU64::new(0),
             hist: std::array::from_fn(|_| AtomicU64::new(0)),
+            strategy_wins: Mutex::new(BTreeMap::new()),
         }
+    }
+
+    /// Record one tuner decision: whether the plan cache answered it and
+    /// which strategy won.
+    pub fn record_tuner_choice(&self, strategy: &str, cache_hit: bool) {
+        if cache_hit {
+            self.tuner_cache_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.tuner_cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut wins = self.strategy_wins.lock().unwrap();
+        *wins.entry(strategy.to_string()).or_insert(0) += 1;
     }
 
     pub fn record_solve(&self, latency: Duration, batched: bool) {
@@ -60,6 +85,15 @@ impl Metrics {
             batched_solves: self.batched_solves.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            tuner_cache_hits: self.tuner_cache_hits.load(Ordering::Relaxed),
+            tuner_cache_misses: self.tuner_cache_misses.load(Ordering::Relaxed),
+            strategy_wins: self
+                .strategy_wins
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), *v))
+                .collect(),
             mean_us: if count == 0 {
                 0.0
             } else {
@@ -94,6 +128,10 @@ pub struct Snapshot {
     pub batched_solves: u64,
     pub batches: u64,
     pub errors: u64,
+    pub tuner_cache_hits: u64,
+    pub tuner_cache_misses: u64,
+    /// (strategy, times chosen) pairs, sorted by strategy name
+    pub strategy_wins: Vec<(String, u64)>,
     pub mean_us: f64,
     pub p50_us: u64,
     pub p95_us: u64,
@@ -107,7 +145,25 @@ impl std::fmt::Display for Snapshot {
             "solves={} (batched {}), batches={}, errors={}, latency mean={:.0}us p50<{}us p95<{}us p99<{}us",
             self.solves, self.batched_solves, self.batches, self.errors,
             self.mean_us, self.p50_us, self.p95_us, self.p99_us
-        )
+        )?;
+        if self.tuner_cache_hits + self.tuner_cache_misses > 0 {
+            write!(
+                f,
+                ", tuner cache hit/miss={}/{}",
+                self.tuner_cache_hits, self.tuner_cache_misses
+            )?;
+            if !self.strategy_wins.is_empty() {
+                write!(f, " wins[")?;
+                for (i, (s, n)) in self.strategy_wins.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, " ")?;
+                    }
+                    write!(f, "{s}={n}")?;
+                }
+                write!(f, "]")?;
+            }
+        }
+        Ok(())
     }
 }
 
@@ -141,6 +197,28 @@ mod tests {
         assert_eq!(s.solves, 0);
         assert_eq!(s.mean_us, 0.0);
         assert_eq!(s.p50_us, 0);
+        assert_eq!(s.tuner_cache_hits, 0);
+        assert!(s.strategy_wins.is_empty());
+        // Without tuner activity the rendering is unchanged.
+        assert!(!s.to_string().contains("tuner"));
+    }
+
+    #[test]
+    fn tuner_choice_accounting() {
+        let m = Metrics::new();
+        m.record_tuner_choice("avgcost", false);
+        m.record_tuner_choice("avgcost", true);
+        m.record_tuner_choice("manual:10", false);
+        let s = m.snapshot();
+        assert_eq!(s.tuner_cache_hits, 1);
+        assert_eq!(s.tuner_cache_misses, 2);
+        assert_eq!(
+            s.strategy_wins,
+            vec![("avgcost".to_string(), 2), ("manual:10".to_string(), 1)]
+        );
+        let text = s.to_string();
+        assert!(text.contains("tuner cache hit/miss=1/2"), "{text}");
+        assert!(text.contains("avgcost=2"), "{text}");
     }
 
     #[test]

@@ -1,8 +1,13 @@
 //! Preprocessing pipeline: matrix -> levels -> strategy -> transformed
 //! system -> (optionally) padded XLA system, cached per matrix id.
+//!
+//! When the configured (or per-register) strategy is `auto`, the pipeline
+//! consults its persistent [`Tuner`]: the matrix fingerprint is looked up
+//! in the plan cache, and only unknown structures pay for the cost-model
+//! shortlist + race.
 
 use std::collections::BTreeMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -14,6 +19,7 @@ use crate::solver::executor::TransformedSolver;
 use crate::solver::pool::Pool;
 use crate::sparse::Csr;
 use crate::transform::{Strategy, TransformResult};
+use crate::tuner::{PlanSource, Tuner, TunerOptions};
 
 /// Which backend serves a prepared matrix.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -22,6 +28,18 @@ pub enum Backend {
     Native,
     /// AOT XLA executable (artifact shape fitted)
     Xla,
+}
+
+/// How the tuner decided a prepared matrix's strategy (None when the
+/// strategy was fixed by name).
+#[derive(Debug, Clone)]
+pub struct TunedInfo {
+    /// strategy the tuner picked, in `Strategy::parse` syntax
+    pub strategy: String,
+    /// whether the fingerprint plan cache answered the decision
+    pub cache_hit: bool,
+    /// hex sparsity fingerprint
+    pub fingerprint: String,
 }
 
 /// A matrix after preprocessing: everything the request path needs.
@@ -35,6 +53,10 @@ pub struct Prepared {
     /// re-transferring megabytes of structure per request)
     pub staged: Option<StagedSystem>,
     pub backend: Backend,
+    /// strategy that produced `t` (the tuner's pick under `auto`)
+    pub strategy_name: String,
+    /// tuner decision details when the strategy was `auto`
+    pub tuned: Option<TunedInfo>,
     /// preprocessing wall-clock (the offline cost the paper discusses)
     pub prepare_time: std::time::Duration,
 }
@@ -44,11 +66,24 @@ pub struct Pipeline {
     pool: Arc<Pool>,
     pub registry: Option<Arc<Registry>>,
     cache: BTreeMap<String, Arc<Prepared>>,
+    /// persistent strategy autotuner consulted for `auto` registrations
+    pub tuner: Tuner,
 }
 
 impl Pipeline {
     pub fn new(cfg: Config) -> Pipeline {
         let pool = Arc::new(Pool::new(cfg.workers));
+        let tuner = Tuner::new(TunerOptions {
+            top_k: cfg.tuner_top_k.max(1),
+            race_solves: cfg.tuner_race_solves.max(1),
+            workers: cfg.workers.max(1),
+            cache_path: if cfg.tuner_cache.is_empty() {
+                None
+            } else {
+                Some(PathBuf::from(&cfg.tuner_cache))
+            },
+            ..Default::default()
+        });
         // The registry is optional: without artifacts the coordinator
         // serves everything natively.
         let registry = if cfg.use_xla {
@@ -69,6 +104,7 @@ impl Pipeline {
             pool,
             registry,
             cache: BTreeMap::new(),
+            tuner,
         }
     }
 
@@ -89,12 +125,27 @@ impl Pipeline {
         }
         let start = Instant::now();
         m.validate_lower_triangular()?;
+        // Arc the matrix up front: the tuner's race lanes and the solver
+        // share it by reference count instead of copying.
+        let m = Arc::new(m);
         let strat_name = strategy_override.unwrap_or(&self.cfg.strategy);
+        // Parse first so Strategy::parse stays the single source of truth
+        // for strategy-name syntax; only then route Auto to the shared
+        // tuner (Strategy::Auto::apply would build a throwaway one).
         let strategy = Strategy::parse(strat_name).map_err(Error::Invalid)?;
-        let t = strategy.apply(&m);
+        let (strategy_name, t, tuned) = if matches!(strategy, Strategy::Auto) {
+            let plan = self.tuner.choose_arc(&m)?;
+            let info = TunedInfo {
+                strategy: plan.strategy_name.clone(),
+                cache_hit: plan.source == PlanSource::CacheHit,
+                fingerprint: plan.fingerprint.to_hex(),
+            };
+            (plan.strategy_name, plan.transform, Some(info))
+        } else {
+            (strat_name.to_string(), strategy.apply(&m), None)
+        };
         t.validate(&m).map_err(Error::Invalid)?;
 
-        let m = Arc::new(m);
         let t = Arc::new(t);
         // Fit an XLA artifact if the registry is present, and stage the
         // system arrays on the device.
@@ -120,6 +171,8 @@ impl Pipeline {
             padded,
             staged,
             backend,
+            strategy_name,
+            tuned,
             prepare_time: start.elapsed(),
         });
         self.cache.insert(id.to_string(), Arc::clone(&prepared));
@@ -167,6 +220,32 @@ mod tests {
         let b = vec![1.0; n];
         let x = p.native.solve(&b);
         assert!(p.m.residual_inf(&x, &b) < 1e-9);
+    }
+
+    #[test]
+    fn auto_strategy_consults_tuner_and_plan_cache() {
+        let mut pl = Pipeline::new(cfg());
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.02));
+        let n = m.nrows;
+        let p1 = pl.prepare("a", m.clone(), Some("auto")).unwrap();
+        let t1 = p1.tuned.as_ref().expect("auto decision recorded");
+        assert!(!t1.cache_hit);
+        assert_eq!(t1.strategy, p1.strategy_name);
+        assert_eq!(t1.fingerprint.len(), 16);
+        // Same structure under a new id: the fingerprint cache answers.
+        let p2 = pl.prepare("b", m.clone(), Some("auto")).unwrap();
+        let t2 = p2.tuned.as_ref().unwrap();
+        assert!(t2.cache_hit);
+        assert_eq!(t2.strategy, t1.strategy);
+        assert_eq!(p2.t.stats.levels_after, p1.t.stats.levels_after);
+        // And the plan solves correctly.
+        let b = vec![1.0; n];
+        let x = p2.native.solve(&b);
+        assert!(p2.m.residual_inf(&x, &b) < 1e-9);
+        // Fixed-name registrations carry no tuner decision.
+        let p3 = pl.prepare("c", m, Some("none")).unwrap();
+        assert!(p3.tuned.is_none());
+        assert_eq!(p3.strategy_name, "none");
     }
 
     #[test]

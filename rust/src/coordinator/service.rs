@@ -41,6 +41,12 @@ pub struct RegisterInfo {
     pub levels_after: usize,
     pub rows_rewritten: usize,
     pub backend: &'static str,
+    /// strategy that prepared the matrix (the tuner's pick under `auto`)
+    pub strategy: String,
+    /// Some(hit?) when the tuner decided *for this registration*; None
+    /// for fixed strategies and for same-id re-registrations, which
+    /// return the memoized preparation without consulting the tuner
+    pub tuner_cache_hit: Option<bool>,
     pub prepare_ms: f64,
 }
 
@@ -192,9 +198,18 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                 strategy,
                 reply,
             }) => {
+                // A same-id re-registration returns the memoized
+                // preparation; only fresh preparations count as tuner
+                // decisions in the metrics.
+                let fresh = !prepared.contains_key(&id);
                 let res = pipeline
                     .prepare(&id, *matrix, strategy.as_deref())
                     .map(|p| {
+                        if fresh {
+                            if let Some(tuned) = &p.tuned {
+                                metrics.record_tuner_choice(&tuned.strategy, tuned.cache_hit);
+                            }
+                        }
                         prepared.insert(id.clone(), Arc::clone(&p));
                         RegisterInfo {
                             levels_before: p.t.stats.levels_before,
@@ -203,6 +218,12 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                             backend: match p.backend {
                                 Backend::Native => "native",
                                 Backend::Xla => "xla",
+                            },
+                            strategy: p.strategy_name.clone(),
+                            tuner_cache_hit: if fresh {
+                                p.tuned.as_ref().map(|t| t.cache_hit)
+                            } else {
+                                None
                             },
                             prepare_ms: p.prepare_time.as_secs_f64() * 1e3,
                         }
@@ -323,6 +344,35 @@ mod tests {
         assert!(m.residual_inf(&x, &b) < 1e-9);
         let snap = h.metrics().unwrap();
         assert_eq!(snap.solves, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn auto_registration_hits_plan_cache_and_reports_metrics() {
+        let svc = Service::start(test_cfg());
+        let h = svc.handle();
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.02));
+        let n = m.nrows;
+        let i1 = h.register("m1", m.clone(), Some("auto")).unwrap();
+        assert_eq!(i1.tuner_cache_hit, Some(false));
+        assert!(!i1.strategy.is_empty());
+        // Same structure, new id: answered from the fingerprint cache.
+        let i2 = h.register("m2", m.clone(), Some("auto")).unwrap();
+        assert_eq!(i2.tuner_cache_hit, Some(true));
+        assert_eq!(i2.strategy, i1.strategy);
+        // Same-id re-registration returns the memoized preparation: no
+        // tuner consult, no metrics movement, no stale cache-hit claim.
+        let i3 = h.register("m1", m.clone(), Some("auto")).unwrap();
+        assert_eq!(i3.tuner_cache_hit, None);
+        assert_eq!(i3.strategy, i1.strategy);
+        let ones = vec![1.0; n];
+        let x = h.solve("m2", ones.clone()).unwrap();
+        assert!(m.residual_inf(&x, &ones) < 1e-9);
+        let snap = h.metrics().unwrap();
+        assert_eq!(snap.tuner_cache_hits, 1);
+        assert_eq!(snap.tuner_cache_misses, 1);
+        let total_wins: u64 = snap.strategy_wins.iter().map(|(_, n)| n).sum();
+        assert_eq!(total_wins, 2);
         svc.shutdown();
     }
 

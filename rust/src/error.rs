@@ -10,4 +10,8 @@ pub enum Error {
     Runtime(String),
     #[error("no artifact shape fits: {0}")]
     NoFit(String),
+    /// Matrix Market file did not parse; `line` is the 1-based line number
+    /// of the offending content so operators can fix the file directly.
+    #[error("matrix market parse error at line {line}: {msg}")]
+    MatrixMarket { line: usize, msg: String },
 }

@@ -28,6 +28,43 @@
 //! let x = solver.solve(&b);
 //! # let _ = x;
 //! ```
+//!
+//! ## Tuning
+//!
+//! Strategy choice is structure-dependent (lung2's thin chain loves
+//! `avgcost`; a uniform chain needs `manual`; a wide shallow matrix is
+//! best left alone), so the crate ships a portfolio autotuner
+//! ([`tuner`]): it fingerprints the sparsity structure, predicts
+//! per-strategy cost from a structural feature vector, races the top
+//! candidates on real warm-up solves, and caches the winner by
+//! fingerprint (optionally spilled to a JSON file) so re-registering a
+//! known structure skips analysis entirely.
+//!
+//! The quickest route is the `auto` strategy name, accepted everywhere a
+//! strategy is (CLI `--strategy auto`, `Config::strategy`,
+//! `Service::register`):
+//!
+//! ```no_run
+//! use sptrsv_gt::sparse::generate;
+//! use sptrsv_gt::tuner::{Tuner, TunerOptions};
+//!
+//! let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
+//! // One-off: Strategy::parse("auto").unwrap().apply(&m) does the same
+//! // with a throwaway tuner; hold a Tuner to keep the plan cache warm.
+//! let mut tuner = Tuner::new(TunerOptions::default());
+//! let plan = tuner.choose(&m).unwrap();
+//! println!(
+//!     "picked {} ({} levels, cache {:?})",
+//!     plan.strategy_name,
+//!     plan.transform.num_levels(),
+//!     plan.source
+//! );
+//! ```
+//!
+//! The coordinator consults a persistent tuner on `register` when the
+//! strategy is `auto` and reports cache hit/miss and per-strategy win
+//! counts in its metrics; `sptrsv tune --kind lung2` prints the whole
+//! decision (features, predictions, race) for one matrix.
 
 pub mod codegen;
 pub mod config;
@@ -39,6 +76,7 @@ pub mod runtime;
 pub mod solver;
 pub mod sparse;
 pub mod transform;
+pub mod tuner;
 pub mod util;
 
 pub use error::Error;

@@ -5,6 +5,7 @@
 //!   analyze    level-set statistics of a matrix
 //!   transform  apply a rewriting strategy, print Table-I-style stats
 //!   solve      solve Lx=b on a chosen backend, report residual + timing
+//!   tune       run the strategy autotuner on a matrix, print the decision
 //!   codegen    emit the specialized C code (Fig 3 / Fig 4)
 //!   table1     reproduce Table I on the lung2/torso2 analogs
 //!   figures    emit the Fig 5 / Fig 6 per-level cost CSVs
@@ -33,6 +34,7 @@ fn main() {
         "analyze" => cmd_analyze(&args),
         "transform" => cmd_transform(&args),
         "solve" => cmd_solve(&args),
+        "tune" => cmd_tune(&args),
         "codegen" => cmd_codegen(&args),
         "table1" => cmd_table1(&args),
         "figures" => cmd_figures(&args),
@@ -61,9 +63,12 @@ USAGE: sptrsv <subcommand> [flags]
   gen       --kind lung2|torso2|tridiagonal|banded|random [--scale F] [--n N]
             [--seed S] [--ill-scaled] --out FILE.mtx
   analyze   (--matrix FILE.mtx | --kind ... [--scale F])
-  transform (--matrix|--kind...) [--strategy none|avgcost|manual[:d]]
+  transform (--matrix|--kind...) [--strategy none|avgcost|manual[:d]|
+            guarded[:d[:m]]|auto]
   solve     (--matrix|--kind...) [--strategy S] [--backend serial|levelset|
             syncfree|transformed|xla] [--workers W] [--repeat R]
+  tune      (--matrix|--kind...) [--top-k K] [--race-solves N] [--workers W]
+            [--cache FILE.json]   # portfolio autotuner decision for a matrix
   codegen   (--matrix|--kind...) [--strategy S] [--no-rearrange] [--bake]
             [--head N] [--out FILE.c]
   table1    [--scale F] [--no-codegen]
@@ -219,7 +224,19 @@ fn cmd_solve(args: &Args) -> Result<()> {
             }
         }
         "transformed" => {
-            let t = strat.apply(&m);
+            // `auto` must tune at the worker count the solve will run
+            // with, so build the tuner explicitly instead of letting
+            // Strategy::Auto::apply fall back to machine defaults.
+            let t = match &strat {
+                Strategy::Auto => {
+                    let mut tuner = sptrsv_gt::tuner::Tuner::new(sptrsv_gt::tuner::TunerOptions {
+                        workers,
+                        ..Default::default()
+                    });
+                    tuner.choose(&m)?.transform
+                }
+                s => s.apply(&m),
+            };
             let s = TransformedSolver::from_parts(m.clone(), t, workers);
             for _ in 0..repeat {
                 s.solve_into(&b, &mut x);
@@ -248,6 +265,65 @@ fn cmd_solve(args: &Args) -> Result<()> {
         "{name}: backend={backend} strategy={} n={n} time/solve={dt:?} residual={:.3e}",
         strat.name(),
         m.residual_inf(&x, &b)
+    );
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let (name, m) = load_matrix(args)?;
+    let defaults = sptrsv_gt::tuner::TunerOptions::default();
+    let opts = sptrsv_gt::tuner::TunerOptions {
+        top_k: args.usize_flag("top-k", defaults.top_k)?,
+        race_solves: args.usize_flag("race-solves", defaults.race_solves)?,
+        workers: args.usize_flag("workers", defaults.workers)?,
+        cache_path: args.flag("cache").map(std::path::PathBuf::from),
+        ..defaults
+    };
+    let mut tuner = sptrsv_gt::tuner::Tuner::new(opts);
+    let plan = tuner.choose(&m)?;
+    println!("matrix {name}: {} rows, {} nnz", m.nrows, m.nnz());
+    if let Some(f) = &plan.features {
+        println!(
+            "features: levels={} (thin {:.0}%), width mean={:.1} p95={} max={}, \
+             avg indegree={:.2}, total cost={}",
+            f.num_levels,
+            100.0 * f.thin_cost_fraction(),
+            f.mean_level_width,
+            f.p95_level_width,
+            f.max_level_width,
+            f.avg_indegree,
+            f.total_cost
+        );
+    }
+    println!("fingerprint: {}", plan.fingerprint);
+    if !plan.predictions.is_empty() {
+        println!("cost-model predictions (lower is better):");
+        for (s, c) in &plan.predictions {
+            println!("  {s:<12} {c:>14.1}");
+        }
+    }
+    if let Some(race) = &plan.race {
+        println!("race results:");
+        for lane in &race.lanes {
+            println!(
+                "  {:<12} transform={:>8.2}ms solve={:>10.1}us levels={:<6} cost={}",
+                lane.strategy,
+                lane.transform_ms,
+                lane.solve_us,
+                lane.levels_after,
+                lane.total_cost_after
+            );
+        }
+    }
+    let how = match plan.source {
+        sptrsv_gt::tuner::PlanSource::CacheHit => "plan cache hit",
+        sptrsv_gt::tuner::PlanSource::Raced => "cost model + race",
+    };
+    println!(
+        "chosen: {} via {how} -> {} levels ({} barriers)",
+        plan.strategy_name,
+        plan.transform.num_levels(),
+        plan.transform.num_levels().saturating_sub(1)
     );
     Ok(())
 }
@@ -394,8 +470,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n = m.nrows;
     let info = h.register("lung2", m.clone(), None)?;
     println!(
-        "registered lung2-like: levels {} -> {}, {} rows rewritten, backend={}, prepare={:.1}ms",
-        info.levels_before, info.levels_after, info.rows_rewritten, info.backend, info.prepare_ms
+        "registered lung2-like: strategy={}, levels {} -> {}, {} rows rewritten, \
+         backend={}, prepare={:.1}ms",
+        info.strategy,
+        info.levels_before,
+        info.levels_after,
+        info.rows_rewritten,
+        info.backend,
+        info.prepare_ms
     );
     let start = std::time::Instant::now();
     let mut rng = Rng::new(11);

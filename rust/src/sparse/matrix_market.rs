@@ -31,10 +31,28 @@ pub fn read_path(path: &Path) -> Result<Csr, Error> {
     read(std::io::BufReader::new(f))
 }
 
+/// Parse error carrying the 1-based line number of the offending content.
+fn perr(line: usize, msg: String) -> Error {
+    Error::MatrixMarket { line, msg }
+}
+
 pub fn read<R: BufRead>(mut r: R) -> Result<Csr, Error> {
     let mut line = String::new();
-    r.read_line(&mut line)
-        .map_err(|e| Error::Io(e.to_string()))?;
+    let mut lineno = 0usize;
+    // Reads one line; returns false at EOF.
+    let mut next_line = |line: &mut String, lineno: &mut usize| -> Result<bool, Error> {
+        line.clear();
+        let n = r.read_line(line).map_err(|e| Error::Io(e.to_string()))?;
+        if n == 0 {
+            return Ok(false);
+        }
+        *lineno += 1;
+        Ok(true)
+    };
+
+    if !next_line(&mut line, &mut lineno)? {
+        return Err(perr(1, "empty file (missing %%MatrixMarket header)".into()));
+    }
     let header: Vec<String> = line
         .trim()
         .to_ascii_lowercase()
@@ -42,35 +60,36 @@ pub fn read<R: BufRead>(mut r: R) -> Result<Csr, Error> {
         .map(str::to_string)
         .collect();
     if header.len() < 5 || header[0] != "%%matrixmarket" || header[1] != "matrix" {
-        return Err(Error::Invalid("not a MatrixMarket matrix file".into()));
+        return Err(perr(
+            lineno,
+            "not a MatrixMarket matrix file (expected \
+             '%%MatrixMarket matrix coordinate <field> <symmetry>')"
+                .into(),
+        ));
     }
     if header[2] != "coordinate" {
-        return Err(Error::Invalid(format!(
-            "unsupported format '{}' (only coordinate)",
-            header[2]
-        )));
+        return Err(perr(
+            lineno,
+            format!("unsupported format '{}' (only coordinate)", header[2]),
+        ));
     }
     let field = match header[3].as_str() {
         "real" => Field::Real,
         "integer" => Field::Integer,
         "pattern" => Field::Pattern,
-        f => return Err(Error::Invalid(format!("unsupported field '{f}'"))),
+        f => return Err(perr(lineno, format!("unsupported field '{f}'"))),
     };
     let symmetry = match header[4].as_str() {
         "general" => Symmetry::General,
         "symmetric" => Symmetry::Symmetric,
         "skew-symmetric" => Symmetry::SkewSymmetric,
-        s => return Err(Error::Invalid(format!("unsupported symmetry '{s}'"))),
+        s => return Err(perr(lineno, format!("unsupported symmetry '{s}'"))),
     };
 
-    // Skip comments, read the size line.
+    // Skip comment/blank lines, read the size line.
     let dims = loop {
-        line.clear();
-        if r.read_line(&mut line)
-            .map_err(|e| Error::Io(e.to_string()))?
-            == 0
-        {
-            return Err(Error::Invalid("missing size line".into()));
+        if !next_line(&mut line, &mut lineno)? {
+            return Err(perr(lineno + 1, "missing size line".into()));
         }
         let t = line.trim();
         if t.is_empty() || t.starts_with('%') {
@@ -80,10 +99,10 @@ pub fn read<R: BufRead>(mut r: R) -> Result<Csr, Error> {
             .split_whitespace()
             .map(|w| w.parse::<usize>())
             .collect::<Result<Vec<_>, _>>()
-            .map_err(|e| Error::Invalid(format!("bad size line: {e}")))?;
+            .map_err(|e| perr(lineno, format!("bad size line: {e}")))?;
     };
     if dims.len() != 3 {
-        return Err(Error::Invalid("size line needs 'rows cols nnz'".into()));
+        return Err(perr(lineno, "size line needs 'rows cols nnz'".into()));
     }
     let (nrows, ncols, nnz) = (dims[0], dims[1], dims[2]);
     let mut coo = Coo::new(nrows, ncols);
@@ -91,40 +110,52 @@ pub fn read<R: BufRead>(mut r: R) -> Result<Csr, Error> {
 
     let mut seen = 0usize;
     while seen < nnz {
-        line.clear();
-        if r.read_line(&mut line)
-            .map_err(|e| Error::Io(e.to_string()))?
-            == 0
-        {
-            return Err(Error::Invalid(format!(
-                "file ended after {seen}/{nnz} entries"
-            )));
+        if !next_line(&mut line, &mut lineno)? {
+            return Err(perr(
+                lineno + 1,
+                format!("file ended after {seen}/{nnz} entries"),
+            ));
         }
         let t = line.trim();
         if t.is_empty() || t.starts_with('%') {
-            continue;
+            continue; // comments/blanks are tolerated between entries
         }
         let mut it = t.split_whitespace();
         let i: usize = it
             .next()
-            .ok_or_else(|| Error::Invalid("short entry line".into()))?
+            .ok_or_else(|| perr(lineno, "short entry line".into()))?
             .parse()
-            .map_err(|e| Error::Invalid(format!("bad row index: {e}")))?;
+            .map_err(|e| perr(lineno, format!("bad row index: {e}")))?;
         let j: usize = it
             .next()
-            .ok_or_else(|| Error::Invalid("short entry line".into()))?
+            .ok_or_else(|| perr(lineno, "short entry line (missing column index)".into()))?
             .parse()
-            .map_err(|e| Error::Invalid(format!("bad col index: {e}")))?;
+            .map_err(|e| perr(lineno, format!("bad col index: {e}")))?;
         let v = match field {
             Field::Pattern => 1.0,
             _ => it
                 .next()
-                .ok_or_else(|| Error::Invalid("missing value".into()))?
+                .ok_or_else(|| perr(lineno, "missing value".into()))?
                 .parse::<f64>()
-                .map_err(|e| Error::Invalid(format!("bad value: {e}")))?,
+                .map_err(|e| perr(lineno, format!("bad value: {e}")))?,
         };
-        if i == 0 || j == 0 || i > nrows || j > ncols {
-            return Err(Error::Invalid(format!("entry ({i},{j}) out of range")));
+        if it.next().is_some() {
+            return Err(perr(
+                lineno,
+                format!("trailing tokens after entry ({i},{j})"),
+            ));
+        }
+        if i == 0 || j == 0 {
+            return Err(perr(
+                lineno,
+                format!("entry ({i},{j}): Matrix Market indices are 1-based, 0 is invalid"),
+            ));
+        }
+        if i > nrows || j > ncols {
+            return Err(perr(
+                lineno,
+                format!("entry ({i},{j}) out of range for a {nrows}x{ncols} matrix"),
+            ));
         }
         let (i, j) = (i - 1, j - 1); // 1-based on disk
         coo.push(i, j, v);
@@ -191,6 +222,84 @@ mod tests {
         let src = "%%MatrixMarket matrix coordinate pattern general\n2 2 2\n1 1\n2 2\n";
         let m = read(Cursor::new(src)).unwrap();
         assert_eq!(m.data, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn tolerates_blank_and_comment_lines_everywhere() {
+        let src = "%%MatrixMarket matrix coordinate real general\n\
+                   % a comment before the size line\n\
+                   \n\
+                   3 3 4\n\
+                   \n\
+                   1 1 2.0\n\
+                   % comment between entries\n\
+                   2 1 1.0\n\
+                   \n\
+                   2 2 3.0\n\
+                   3 3 5.0\n\
+                   \n\
+                   % trailing comment\n";
+        let m = read(Cursor::new(src)).unwrap();
+        assert_eq!(m.nrows, 3);
+        assert_eq!(m.nnz(), 4);
+        m.validate_lower_triangular().unwrap();
+    }
+
+    #[test]
+    fn zero_index_is_a_1_based_violation() {
+        let src = "%%MatrixMarket matrix coordinate real general\n2 2 1\n0 1 1.0\n";
+        match read(Cursor::new(src)) {
+            Err(crate::error::Error::MatrixMarket { line, msg }) => {
+                assert_eq!(line, 3);
+                assert!(msg.contains("1-based"), "{msg}");
+            }
+            other => panic!("expected MatrixMarket error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        // Out-of-range entry on line 5 (after a comment line).
+        let src = "%%MatrixMarket matrix coordinate real general\n\
+                   % c\n\
+                   2 2 2\n\
+                   1 1 1.0\n\
+                   9 1 1.0\n";
+        match read(Cursor::new(src)) {
+            Err(crate::error::Error::MatrixMarket { line, msg }) => {
+                assert_eq!(line, 5);
+                assert!(msg.contains("out of range"), "{msg}");
+            }
+            other => panic!("expected MatrixMarket error, got {other:?}"),
+        }
+        // Bad value token.
+        let src = "%%MatrixMarket matrix coordinate real general\n1 1 1\n1 1 zebra\n";
+        match read(Cursor::new(src)) {
+            Err(crate::error::Error::MatrixMarket { line, .. }) => assert_eq!(line, 3),
+            other => panic!("expected MatrixMarket error, got {other:?}"),
+        }
+        // Truncated file: reported just past the last line.
+        let src = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n";
+        match read(Cursor::new(src)) {
+            Err(crate::error::Error::MatrixMarket { line, msg }) => {
+                assert_eq!(line, 4);
+                assert!(msg.contains("1/2"), "{msg}");
+            }
+            other => panic!("expected MatrixMarket error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_trailing_tokens_and_empty_file() {
+        let src = "%%MatrixMarket matrix coordinate real general\n1 1 1\n1 1 2.0 extra\n";
+        assert!(matches!(
+            read(Cursor::new(src)),
+            Err(crate::error::Error::MatrixMarket { line: 3, .. })
+        ));
+        assert!(matches!(
+            read(Cursor::new("")),
+            Err(crate::error::Error::MatrixMarket { line: 1, .. })
+        ));
     }
 
     #[test]

@@ -14,6 +14,9 @@ pub enum Strategy {
     AvgLevelCost(AvgCostOptions),
     /// the manual fixed-distance strategy of [12]
     Manual(ManualOptions),
+    /// pick a strategy per matrix via the portfolio autotuner
+    /// (`crate::tuner`): fingerprint -> plan cache -> cost model -> race
+    Auto,
 }
 
 impl Strategy {
@@ -22,6 +25,7 @@ impl Strategy {
             Strategy::None => "no-rewriting",
             Strategy::AvgLevelCost(_) => "avgLevelCost",
             Strategy::Manual(_) => "manual",
+            Strategy::Auto => "auto",
         }
     }
 
@@ -30,6 +34,17 @@ impl Strategy {
             Strategy::None => TransformResult::identity(m),
             Strategy::AvgLevelCost(o) => avg_cost::apply(m, o),
             Strategy::Manual(o) => manual::apply(m, o),
+            // Standalone `auto` runs a fresh default tuner (no shared
+            // cache). The coordinator pipeline instead holds a persistent
+            // `Tuner` so decisions amortize across registrations.
+            Strategy::Auto => {
+                match crate::tuner::Tuner::new(Default::default()).choose(m) {
+                    Ok(plan) => plan.transform,
+                    // Tuning cannot decide (e.g. empty portfolio): fall
+                    // back to the paper's automatic strategy.
+                    Err(_) => avg_cost::apply(m, &Default::default()),
+                }
+            }
         }
     }
 
@@ -52,7 +67,7 @@ impl Strategy {
     }
 
     /// Parse a CLI name:
-    /// `none | avgcost | manual[:distance] | guarded[:distance[:mag]]`.
+    /// `none | avgcost | manual[:distance] | guarded[:distance[:mag]] | auto`.
     pub fn parse(s: &str) -> Result<Strategy, String> {
         let s = s.trim();
         if s.eq_ignore_ascii_case("none") || s.eq_ignore_ascii_case("no-rewriting") {
@@ -60,6 +75,9 @@ impl Strategy {
         }
         if s.eq_ignore_ascii_case("avgcost") || s.eq_ignore_ascii_case("avglevelcost") {
             return Ok(Strategy::AvgLevelCost(Default::default()));
+        }
+        if s.eq_ignore_ascii_case("auto") {
+            return Ok(Strategy::Auto);
         }
         if let Some(rest) = s.strip_prefix("guarded") {
             let mut parts = rest.trim_start_matches(':').split(':');
@@ -90,7 +108,7 @@ impl Strategy {
             return Ok(Strategy::Manual(ManualOptions { distance }));
         }
         Err(format!(
-            "unknown strategy '{s}' (expected none | avgcost | manual[:d])"
+            "unknown strategy '{s}' (expected none | avgcost | manual[:d] | guarded[:d[:m]] | auto)"
         ))
     }
 }
@@ -114,9 +132,20 @@ mod tests {
             Strategy::Manual(o) => assert_eq!(o.distance, 10),
             _ => panic!(),
         }
+        assert!(matches!(Strategy::parse("auto").unwrap(), Strategy::Auto));
+        assert!(matches!(Strategy::parse("AUTO").unwrap(), Strategy::Auto));
         assert!(Strategy::parse("bogus").is_err());
         assert!(Strategy::parse("manual:x").is_err());
         assert!(Strategy::parse("guarded:x").is_err());
+    }
+
+    #[test]
+    fn auto_applies_a_valid_plan() {
+        let m = crate::sparse::generate::tridiagonal(60, &Default::default());
+        let t = Strategy::Auto.apply(&m);
+        t.validate(&m).unwrap();
+        assert!(t.num_levels() <= 60);
+        assert_eq!(Strategy::Auto.name(), "auto");
     }
 
     #[test]

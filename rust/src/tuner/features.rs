@@ -1,0 +1,194 @@
+//! Structural feature extraction: the compact description of a matrix the
+//! cost model predicts from.
+//!
+//! Everything here is O(nnz) and derived purely from the sparsity
+//! structure and the level partition — no values — so features are stable
+//! under value perturbation, matching the fingerprint's invariance.
+
+use crate::graph::analyze::LevelStats;
+use crate::graph::Levels;
+use crate::sparse::Csr;
+use crate::util::json::Json;
+
+/// Feature vector of one matrix under its level-set partition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatrixFeatures {
+    pub nrows: usize,
+    pub nnz: usize,
+    /// number of levels in DAG_L (== critical-path length in rows)
+    pub num_levels: usize,
+    pub critical_path_len: usize,
+    pub mean_level_width: f64,
+    pub p95_level_width: usize,
+    pub max_level_width: usize,
+    /// mean off-diagonal dependencies per row
+    pub avg_indegree: f64,
+    /// paper cost model: total level cost = 2*nnz - n
+    pub total_cost: u64,
+    pub avg_level_cost: f64,
+    /// levels with cost < avgLevelCost (the avgcost strategy's criterion)
+    pub thin_cost_levels: usize,
+    /// mean cost of those thin levels (0 when there are none)
+    pub mean_thin_level_cost: f64,
+    /// levels with width <= avg width (the manual strategy's criterion)
+    pub thin_width_levels: usize,
+    /// summed cost of the width-thin levels
+    pub thin_width_cost: u64,
+}
+
+impl MatrixFeatures {
+    /// Extract features from a matrix and its (already built) level sets.
+    pub fn extract(m: &Csr, lv: &Levels) -> MatrixFeatures {
+        let st = LevelStats::from_csr(m, lv);
+        let nrows = m.nrows;
+        let nnz = m.nnz();
+        let num_levels = st.num_levels;
+
+        let mut widths = st.level_widths.clone();
+        widths.sort_unstable();
+        let p95_level_width = if widths.is_empty() {
+            0
+        } else {
+            let idx = ((widths.len() as f64 * 0.95).ceil() as usize)
+                .clamp(1, widths.len())
+                - 1;
+            widths[idx]
+        };
+        let max_level_width = widths.last().copied().unwrap_or(0);
+
+        let thin_cost: Vec<usize> = st.thin_levels();
+        let thin_cost_sum: u64 = thin_cost.iter().map(|&l| st.level_costs[l]).sum();
+        let mean_thin_level_cost = if thin_cost.is_empty() {
+            0.0
+        } else {
+            thin_cost_sum as f64 / thin_cost.len() as f64
+        };
+
+        let avg_width = st.avg_width();
+        let mut thin_width_levels = 0usize;
+        let mut thin_width_cost = 0u64;
+        for (l, &w) in st.level_widths.iter().enumerate() {
+            if w as f64 <= avg_width {
+                thin_width_levels += 1;
+                thin_width_cost += st.level_costs[l];
+            }
+        }
+
+        MatrixFeatures {
+            nrows,
+            nnz,
+            num_levels,
+            critical_path_len: num_levels,
+            mean_level_width: avg_width,
+            p95_level_width,
+            max_level_width,
+            // saturating: a structurally invalid matrix (empty rows) must
+            // not underflow here — downstream validation rejects it.
+            avg_indegree: if nrows == 0 {
+                0.0
+            } else {
+                nnz.saturating_sub(nrows) as f64 / nrows as f64
+            },
+            total_cost: st.total_cost,
+            avg_level_cost: st.avg_level_cost,
+            thin_cost_levels: thin_cost.len(),
+            mean_thin_level_cost,
+            thin_width_levels,
+            thin_width_cost,
+        }
+    }
+
+    /// Convenience: build the level sets and extract in one step.
+    pub fn of(m: &Csr) -> MatrixFeatures {
+        let lv = Levels::build(m);
+        Self::extract(m, &lv)
+    }
+
+    /// Fraction of levels below the average cost (the paper's thin-level
+    /// share: ~94% for lung2).
+    pub fn thin_cost_fraction(&self) -> f64 {
+        if self.num_levels == 0 {
+            0.0
+        } else {
+            self.thin_cost_levels as f64 / self.num_levels as f64
+        }
+    }
+
+    /// JSON rendering for the `tune` CLI and persisted reports.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("nrows", Json::Num(self.nrows as f64)),
+            ("nnz", Json::Num(self.nnz as f64)),
+            ("num_levels", Json::Num(self.num_levels as f64)),
+            ("mean_level_width", Json::Num(self.mean_level_width)),
+            ("p95_level_width", Json::Num(self.p95_level_width as f64)),
+            ("max_level_width", Json::Num(self.max_level_width as f64)),
+            ("avg_indegree", Json::Num(self.avg_indegree)),
+            ("total_cost", Json::Num(self.total_cost as f64)),
+            ("avg_level_cost", Json::Num(self.avg_level_cost)),
+            ("thin_cost_levels", Json::Num(self.thin_cost_levels as f64)),
+            ("thin_width_levels", Json::Num(self.thin_width_levels as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate::{self, GenOptions};
+
+    #[test]
+    fn tridiagonal_features() {
+        let m = generate::tridiagonal(100, &Default::default());
+        let f = MatrixFeatures::of(&m);
+        assert_eq!(f.nrows, 100);
+        assert_eq!(f.num_levels, 100);
+        assert_eq!(f.critical_path_len, 100);
+        assert_eq!(f.max_level_width, 1);
+        assert_eq!(f.p95_level_width, 1);
+        // Uniform chain: no level is strictly below the average cost
+        // (levels 1..n cost 3, level 0 costs 1 — only level 0 is thin).
+        assert!(f.thin_cost_levels <= 1);
+        // Every level has width == avg width, so all are width-thin.
+        assert_eq!(f.thin_width_levels, 100);
+        assert!((f.avg_indegree - 0.99).abs() < 0.011);
+        assert_eq!(f.total_cost, (2 * m.nnz() - m.nrows) as u64);
+    }
+
+    #[test]
+    fn lung2_like_is_mostly_thin() {
+        let m = generate::lung2_like(&GenOptions::with_scale(0.05));
+        let f = MatrixFeatures::of(&m);
+        assert!(f.thin_cost_fraction() > 0.85, "{}", f.thin_cost_fraction());
+        assert!(f.mean_thin_level_cost < f.avg_level_cost);
+        assert!(f.max_level_width > 100 * 2);
+        assert!(f.avg_indegree <= 2.0);
+    }
+
+    #[test]
+    fn features_stable_under_value_perturbation() {
+        let m = generate::torso2_like(&GenOptions::with_scale(0.02));
+        let mut m2 = m.clone();
+        for v in &mut m2.data {
+            *v *= 1.5;
+        }
+        assert_eq!(MatrixFeatures::of(&m), MatrixFeatures::of(&m2));
+    }
+
+    #[test]
+    fn empty_matrix_features() {
+        let m = Csr::new(0, 0, vec![0], vec![], vec![]).unwrap();
+        let f = MatrixFeatures::of(&m);
+        assert_eq!(f.num_levels, 0);
+        assert_eq!(f.thin_cost_fraction(), 0.0);
+        assert_eq!(f.avg_indegree, 0.0);
+    }
+
+    #[test]
+    fn json_rendering_contains_keys() {
+        let m = generate::tridiagonal(10, &Default::default());
+        let s = MatrixFeatures::of(&m).to_json().to_string();
+        assert!(s.contains("\"num_levels\":10"));
+        assert!(s.contains("\"nrows\":10"));
+    }
+}

@@ -1,0 +1,107 @@
+//! Stable sparsity-structure fingerprints.
+//!
+//! The plan cache is keyed by *structure*, not values: SpTRSV strategy
+//! choice depends only on the dependency graph, and serving workloads
+//! re-register the same factor with refreshed numerical values (new
+//! factorization, scaled systems). The fingerprint therefore hashes
+//! dimensions, row lengths and column indices — never `data` — so a
+//! value-perturbed re-registration hits the cached plan.
+//!
+//! FNV-1a 64-bit: tiny, dependency-free, and fully deterministic across
+//! platforms (unlike `DefaultHasher`, whose output is unspecified and
+//! would invalidate the on-disk cache between toolchains).
+
+use std::fmt;
+
+use crate::sparse::Csr;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// A 64-bit structural fingerprint of a sparse matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint(pub u64);
+
+impl Fingerprint {
+    /// Fingerprint of a CSR matrix's sparsity structure.
+    pub fn of(m: &Csr) -> Fingerprint {
+        let mut h = FNV_OFFSET;
+        h = fnv_u64(h, m.nrows as u64);
+        h = fnv_u64(h, m.ncols as u64);
+        h = fnv_u64(h, m.nnz() as u64);
+        for w in m.indptr.windows(2) {
+            h = fnv_u64(h, (w[1] - w[0]) as u64);
+        }
+        for &c in &m.indices {
+            h = fnv_u64(h, c as u64);
+        }
+        Fingerprint(h)
+    }
+
+    pub fn to_hex(self) -> String {
+        format!("{:016x}", self.0)
+    }
+
+    pub fn from_hex(s: &str) -> Option<Fingerprint> {
+        u64::from_str_radix(s.trim(), 16).ok().map(Fingerprint)
+    }
+}
+
+impl fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
+/// Fold one u64 (little-endian bytes) into an FNV-1a state.
+#[inline]
+fn fnv_u64(mut h: u64, v: u64) -> u64 {
+    for b in v.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate::{self, GenOptions};
+
+    #[test]
+    fn stable_across_value_perturbation() {
+        let m = generate::lung2_like(&GenOptions::with_scale(0.03));
+        let mut m2 = m.clone();
+        for v in &mut m2.data {
+            *v = *v * 1.0001 + 0.5;
+        }
+        assert_ne!(m.data, m2.data);
+        assert_eq!(Fingerprint::of(&m), Fingerprint::of(&m2));
+    }
+
+    #[test]
+    fn sensitive_to_structure() {
+        let a = generate::tridiagonal(50, &Default::default());
+        let b = generate::tridiagonal(51, &Default::default());
+        assert_ne!(Fingerprint::of(&a), Fingerprint::of(&b));
+        let c = generate::banded(50, 3, 0.5, &Default::default());
+        assert_ne!(Fingerprint::of(&a), Fingerprint::of(&c));
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let m = generate::tridiagonal(10, &Default::default());
+        let fp = Fingerprint::of(&m);
+        assert_eq!(Fingerprint::from_hex(&fp.to_hex()), Some(fp));
+        assert_eq!(fp.to_hex().len(), 16);
+        assert!(Fingerprint::from_hex("not-hex").is_none());
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let o = GenOptions::with_scale(0.02);
+        let a = Fingerprint::of(&generate::torso2_like(&o));
+        let b = Fingerprint::of(&generate::torso2_like(&o));
+        assert_eq!(a, b);
+    }
+}

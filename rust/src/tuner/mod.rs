@@ -1,0 +1,376 @@
+//! Strategy-portfolio autotuner: pick the best transformation strategy
+//! per matrix, automatically.
+//!
+//! The paper closes by noting its results "provide several hints on how
+//! to craft a collection of strategies"; this subsystem operationalizes
+//! that: the fixed `Strategy` portfolio (`none | avgcost | manual |
+//! guarded`) becomes a self-tuning choice made per sparsity structure.
+//!
+//! Decision path of [`Tuner::choose`]:
+//!
+//! 1. [`fingerprint`] — hash the sparsity structure; a [`plan_cache`] hit
+//!    returns the previously raced winner immediately (analysis cost is
+//!    paid once per structure, amortized across re-registrations).
+//! 2. [`features`]   — extract the structural feature vector (level
+//!    widths, thin-level shares, indegrees, critical path).
+//! 3. [`cost_model`] — closed-form per-strategy cost prediction shortlists
+//!    the `top_k` candidates; measured timings continually recalibrate it.
+//! 4. [`race`]       — the shortlist runs real transforms + a few warm-up
+//!    solves; the measured winner becomes the plan and is cached.
+
+pub mod cost_model;
+pub mod features;
+pub mod fingerprint;
+pub mod plan_cache;
+pub mod race;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::error::Error;
+use crate::sparse::Csr;
+use crate::transform::{Strategy, TransformResult};
+
+pub use cost_model::{CostModel, PlanEstimate};
+pub use features::MatrixFeatures;
+pub use fingerprint::Fingerprint;
+pub use plan_cache::{CachedPlan, PlanCache};
+pub use race::{RaceOptions, RaceOutcome};
+
+/// The default strategy portfolio: the paper's three columns plus the
+/// guarded variant of §III.A.
+pub const DEFAULT_CANDIDATES: [&str; 4] = ["none", "avgcost", "manual:10", "guarded:20"];
+
+#[derive(Debug, Clone)]
+pub struct TunerOptions {
+    /// strategy names eligible for selection (`auto` is ignored)
+    pub candidates: Vec<String>,
+    /// how many cost-model favourites to race empirically
+    pub top_k: usize,
+    /// timed solves per raced candidate
+    pub race_solves: usize,
+    /// worker threads used by raced solves (and by the cost model's
+    /// parallelism term)
+    pub workers: usize,
+    /// plan cache capacity (entries)
+    pub cache_capacity: usize,
+    /// JSON spill path; None keeps the cache in memory only
+    pub cache_path: Option<PathBuf>,
+    /// RHS seed for racing
+    pub seed: u64,
+}
+
+impl Default for TunerOptions {
+    fn default() -> Self {
+        TunerOptions {
+            candidates: DEFAULT_CANDIDATES.iter().map(|s| s.to_string()).collect(),
+            top_k: 2,
+            race_solves: 3,
+            // Match the machine rather than a fixed guess: races measure
+            // at the parallelism the solves will actually run with.
+            // Callers with a known worker count should still set this.
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .min(8),
+            cache_capacity: 64,
+            cache_path: None,
+            seed: 0x7E57,
+        }
+    }
+}
+
+/// How a [`TunedPlan`] was decided.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanSource {
+    /// fingerprint found in the plan cache; no analysis ran
+    CacheHit,
+    /// cost model shortlisted, race measured
+    Raced,
+}
+
+/// The tuner's decision for one matrix, ready to serve.
+pub struct TunedPlan {
+    pub fingerprint: Fingerprint,
+    /// winning strategy in `Strategy::parse` syntax
+    pub strategy_name: String,
+    pub strategy: Strategy,
+    pub source: PlanSource,
+    /// structural feature vector; None on a cache hit, where no feature
+    /// analysis runs (applying the cached strategy still builds its own
+    /// level sets — that cost is inherent to producing a transform)
+    pub features: Option<MatrixFeatures>,
+    /// cost-model predictions, best first (empty on a cache hit)
+    pub predictions: Vec<(String, f64)>,
+    /// race report (None on a cache hit)
+    pub race: Option<RaceOutcome>,
+    /// the winning transform, ready for the executor
+    pub transform: TransformResult,
+}
+
+pub struct Tuner {
+    pub opts: TunerOptions,
+    pub model: CostModel,
+    pub cache: PlanCache,
+}
+
+impl Tuner {
+    pub fn new(opts: TunerOptions) -> Tuner {
+        let model = CostModel::new(opts.workers);
+        let cache = match &opts.cache_path {
+            Some(path) => PlanCache::with_disk(opts.cache_capacity, path),
+            None => PlanCache::new(opts.cache_capacity),
+        };
+        Tuner { opts, model, cache }
+    }
+
+    /// (hits, misses) observed by the plan cache so far.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.cache.hits, self.cache.misses)
+    }
+
+    /// Decide a strategy for `m`: plan-cache lookup, else cost-model
+    /// shortlist + race, then cache the winner.
+    ///
+    /// This entry point copies the matrix once on a cache miss (the race
+    /// lanes share it by Arc); callers that already hold an `Arc<Csr>`
+    /// should use [`Tuner::choose_arc`], which never copies.
+    pub fn choose(&mut self, m: &Csr) -> Result<TunedPlan, Error> {
+        let fingerprint = Fingerprint::of(m);
+        if m.nrows == 0 {
+            return Ok(self.empty_plan(fingerprint, m));
+        }
+        if let Some(plan) = self.try_cached(fingerprint, m) {
+            return Ok(plan);
+        }
+        self.tune(&Arc::new(m.clone()), fingerprint)
+    }
+
+    /// [`Tuner::choose`] without the defensive copy: the cache-miss race
+    /// shares `m` by reference count.
+    pub fn choose_arc(&mut self, m: &Arc<Csr>) -> Result<TunedPlan, Error> {
+        let fingerprint = Fingerprint::of(m);
+        if m.nrows == 0 {
+            return Ok(self.empty_plan(fingerprint, m));
+        }
+        if let Some(plan) = self.try_cached(fingerprint, m) {
+            return Ok(plan);
+        }
+        self.tune(m, fingerprint)
+    }
+
+    /// Degenerate (empty) matrix: nothing to tune.
+    fn empty_plan(&self, fingerprint: Fingerprint, m: &Csr) -> TunedPlan {
+        TunedPlan {
+            fingerprint,
+            strategy_name: "none".to_string(),
+            strategy: Strategy::None,
+            source: PlanSource::Raced,
+            features: None,
+            predictions: Vec::new(),
+            race: None,
+            transform: TransformResult::identity(m),
+        }
+    }
+
+    /// Plan-cache lookup. An unparseable cached strategy (stale format,
+    /// hand-edited file) must not brick its fingerprint: warn, return
+    /// None so the caller re-tunes, and let the fresh put() overwrite it.
+    fn try_cached(&mut self, fingerprint: Fingerprint, m: &Csr) -> Option<TunedPlan> {
+        let cached = self.cache.get(fingerprint)?;
+        match Strategy::parse(&cached.strategy) {
+            Ok(strategy) => {
+                let transform = strategy.apply(m);
+                Some(TunedPlan {
+                    fingerprint,
+                    strategy_name: cached.strategy,
+                    strategy,
+                    source: PlanSource::CacheHit,
+                    features: None,
+                    predictions: Vec::new(),
+                    race: None,
+                    transform,
+                })
+            }
+            Err(e) => {
+                eprintln!(
+                    "warning: tuner plan cache entry for {fingerprint} unusable \
+                     ({e}); re-tuning"
+                );
+                None
+            }
+        }
+    }
+
+    /// Cache-miss path: extract features, shortlist by predicted cost
+    /// (skipping candidates whose estimated plan shape duplicates one
+    /// already shortlisted — e.g. `guarded` degenerates to `avgcost`),
+    /// race, record, cache.
+    fn tune(&mut self, m: &Arc<Csr>, fingerprint: Fingerprint) -> Result<TunedPlan, Error> {
+        let features = MatrixFeatures::of(m);
+        let predictions = self.model.rank(&features, &self.opts.candidates);
+        if predictions.is_empty() {
+            return Err(Error::Invalid(
+                "tuner: no usable candidate strategies".to_string(),
+            ));
+        }
+        let top_k = self.opts.top_k.max(1);
+        let mut shortlist: Vec<String> = Vec::with_capacity(top_k);
+        let mut seen: Vec<PlanEstimate> = Vec::with_capacity(top_k);
+        for (s, _) in &predictions {
+            if shortlist.len() >= top_k {
+                break;
+            }
+            let Some(est) = self.model.estimate(&features, s) else {
+                continue;
+            };
+            if seen.contains(&est) {
+                continue; // same predicted plan shape: racing it adds nothing
+            }
+            seen.push(est);
+            shortlist.push(s.clone());
+        }
+        if shortlist.is_empty() {
+            shortlist.push(predictions[0].0.clone());
+        }
+        let race_opts = RaceOptions {
+            solves: self.opts.race_solves,
+            workers: self.opts.workers,
+            seed: self.opts.seed,
+        };
+        let mut outcome = race::race(m, &shortlist, &race_opts).map_err(Error::Runtime)?;
+
+        // Feed measurements back into the model's calibration, against
+        // the UNCALIBRATED prediction (see CostModel::record).
+        for lane in &outcome.lanes {
+            if let Some(raw) = self.model.predict_raw(&features, &lane.strategy) {
+                self.model.record(&lane.strategy, raw, lane.solve_us);
+            }
+        }
+
+        let winner = outcome.winner;
+        let strategy_name = outcome.lanes[winner].strategy.clone();
+        let strategy = Strategy::parse(&strategy_name).map_err(Error::Invalid)?;
+        let transform = match outcome.lanes[winner].transform.take() {
+            Some(t) => t,
+            // The race could not reclaim its Arc (never expected, but
+            // cheap to recover from): apply the winner again.
+            None => strategy.apply(m),
+        };
+
+        self.cache.put(
+            fingerprint,
+            CachedPlan {
+                strategy: strategy_name.clone(),
+                solve_us: outcome.lanes[winner].solve_us,
+                timings: outcome
+                    .lanes
+                    .iter()
+                    .map(|l| (l.strategy.clone(), l.solve_us))
+                    .collect(),
+                nrows: m.nrows,
+            },
+        );
+
+        Ok(TunedPlan {
+            fingerprint,
+            strategy_name,
+            strategy,
+            source: PlanSource::Raced,
+            features: Some(features),
+            predictions,
+            race: Some(outcome),
+            transform,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate::{self, GenOptions};
+
+    fn quick_opts() -> TunerOptions {
+        TunerOptions {
+            race_solves: 1,
+            workers: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn choose_then_cache_hit() {
+        let m = generate::lung2_like(&GenOptions::with_scale(0.03));
+        let mut tuner = Tuner::new(quick_opts());
+        let p1 = tuner.choose(&m).unwrap();
+        assert_eq!(p1.source, PlanSource::Raced);
+        assert!(!p1.predictions.is_empty());
+        p1.transform.validate(&m).unwrap();
+        // guarded degenerates to avgcost under the estimate, so the
+        // shortlist dedup must never race both.
+        let lanes: Vec<&str> = p1
+            .race
+            .as_ref()
+            .unwrap()
+            .lanes
+            .iter()
+            .map(|l| l.strategy.as_str())
+            .collect();
+        assert!(
+            !(lanes.contains(&"avgcost") && lanes.contains(&"guarded:20")),
+            "duplicate plan shapes raced: {lanes:?}"
+        );
+        let p2 = tuner.choose(&m).unwrap();
+        assert_eq!(p2.source, PlanSource::CacheHit);
+        assert_eq!(p2.strategy_name, p1.strategy_name);
+        assert_eq!(
+            p2.transform.stats.levels_after,
+            p1.transform.stats.levels_after
+        );
+        assert_eq!(tuner.cache_stats(), (1, 1));
+    }
+
+    #[test]
+    fn tridiagonal_chooses_a_barrier_reducing_plan() {
+        let m = generate::tridiagonal(300, &Default::default());
+        let mut tuner = Tuner::new(quick_opts());
+        let p = tuner.choose(&m).unwrap();
+        // The model shortlists manual (the only strategy that helps a
+        // uniform chain); whatever wins the race must not be worse than
+        // the baseline's 300 levels.
+        assert!(p.transform.num_levels() <= 300);
+        assert_eq!(p.features.as_ref().map(|f| f.num_levels), Some(300));
+    }
+
+    #[test]
+    fn unusable_cache_entry_self_heals() {
+        let m = generate::tridiagonal(80, &Default::default());
+        let mut tuner = Tuner::new(quick_opts());
+        tuner.cache.put(
+            Fingerprint::of(&m),
+            CachedPlan {
+                strategy: "not-a-strategy".to_string(),
+                solve_us: 1.0,
+                timings: Vec::new(),
+                nrows: 80,
+            },
+        );
+        // The poisoned entry must not brick `auto`: choose re-races and
+        // overwrites it.
+        let p = tuner.choose(&m).unwrap();
+        assert_eq!(p.source, PlanSource::Raced);
+        p.transform.validate(&m).unwrap();
+        let p2 = tuner.choose(&m).unwrap();
+        assert_eq!(p2.source, PlanSource::CacheHit);
+        assert_eq!(p2.strategy_name, p.strategy_name);
+    }
+
+    #[test]
+    fn empty_matrix_is_served_without_racing() {
+        let m = crate::sparse::Csr::new(0, 0, vec![0], vec![], vec![]).unwrap();
+        let mut tuner = Tuner::new(quick_opts());
+        let p = tuner.choose(&m).unwrap();
+        assert_eq!(p.strategy_name, "none");
+        assert_eq!(p.transform.num_levels(), 0);
+    }
+}

@@ -1,0 +1,334 @@
+//! Fingerprint-keyed plan cache: in-memory LRU with optional JSON
+//! spill-to-disk.
+//!
+//! Re-registering a known sparsity structure (same factor, refreshed
+//! values; a service restart; another replica warming from a shared
+//! volume) skips the cost-model + racing analysis entirely and goes
+//! straight to the recorded winning strategy. The disk format is the
+//! crate's own minimal JSON (`util::json`), so the cache file is
+//! greppable and survives toolchain changes (the fingerprint is
+//! platform-stable FNV, not `DefaultHasher`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::Error;
+use crate::tuner::fingerprint::Fingerprint;
+use crate::util::json::Json;
+
+/// A tuning decision worth remembering.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CachedPlan {
+    /// winning strategy, in `Strategy::parse` syntax
+    pub strategy: String,
+    /// winner's best per-solve time when raced, microseconds
+    pub solve_us: f64,
+    /// every raced candidate's (strategy, best solve µs)
+    pub timings: Vec<(String, f64)>,
+    /// rows of the fingerprinted matrix (sanity check / observability)
+    pub nrows: usize,
+}
+
+pub struct PlanCache {
+    capacity: usize,
+    path: Option<PathBuf>,
+    /// fingerprint -> (LRU stamp, plan); higher stamp = more recent
+    entries: BTreeMap<u64, (u64, CachedPlan)>,
+    clock: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl PlanCache {
+    /// In-memory-only cache holding at most `capacity` plans.
+    pub fn new(capacity: usize) -> PlanCache {
+        PlanCache {
+            capacity: capacity.max(1),
+            path: None,
+            entries: BTreeMap::new(),
+            clock: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Cache backed by a JSON file: loads existing entries (a corrupt or
+    /// missing file starts empty with a warning) and saves after every
+    /// insertion.
+    pub fn with_disk(capacity: usize, path: &Path) -> PlanCache {
+        let mut cache = PlanCache::new(capacity);
+        cache.path = Some(path.to_path_buf());
+        if path.exists() {
+            match load_entries(path) {
+                Ok(entries) => {
+                    cache.clock = entries.values().map(|&(s, _)| s).max().unwrap_or(0);
+                    cache.entries = entries;
+                    cache.trim();
+                }
+                Err(e) => {
+                    eprintln!("warning: ignoring tuner plan cache {}: {e}", path.display());
+                }
+            }
+        }
+        cache
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Look up a fingerprint, refreshing its recency on a hit.
+    pub fn get(&mut self, fp: Fingerprint) -> Option<CachedPlan> {
+        self.clock += 1;
+        let now = self.clock;
+        match self.entries.get_mut(&fp.0) {
+            Some(entry) => {
+                entry.0 = now;
+                self.hits += 1;
+                Some(entry.1.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or replace) a plan; evicts least-recently-used entries past
+    /// capacity and spills to disk when a path is configured.
+    pub fn put(&mut self, fp: Fingerprint, plan: CachedPlan) {
+        self.clock += 1;
+        let now = self.clock;
+        self.entries.insert(fp.0, (now, plan));
+        self.trim();
+        if let Err(e) = self.save() {
+            eprintln!("warning: tuner plan cache save failed: {e}");
+        }
+    }
+
+    fn trim(&mut self) {
+        while self.entries.len() > self.capacity {
+            let oldest = self
+                .entries
+                .iter()
+                .min_by_key(|(_, (stamp, _))| *stamp)
+                .map(|(k, _)| *k);
+            match oldest {
+                Some(k) => {
+                    self.entries.remove(&k);
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Write the cache to its configured path (no-op without one).
+    ///
+    /// The spill file is a *union*: entries already on disk that this
+    /// process does not know (another replica writing the same shared
+    /// volume, or entries this process LRU-evicted from memory) are
+    /// preserved rather than clobbered. Same-fingerprint conflicts are
+    /// last-writer-wins; there is deliberately no cross-process locking.
+    pub fn save(&self) -> Result<(), Error> {
+        let Some(path) = &self.path else { return Ok(()) };
+        let mut merged: BTreeMap<u64, (u64, CachedPlan)> = if path.exists() {
+            load_entries(path).unwrap_or_default()
+        } else {
+            BTreeMap::new()
+        };
+        for (fp, entry) in &self.entries {
+            merged.insert(*fp, entry.clone());
+        }
+        let mut items = Vec::with_capacity(merged.len());
+        for (fp, (stamp, plan)) in &merged {
+            let timings = plan
+                .timings
+                .iter()
+                .map(|(s, us)| Json::Arr(vec![Json::Str(s.clone()), Json::Num(*us)]))
+                .collect();
+            items.push(Json::obj(vec![
+                ("fingerprint", Json::Str(format!("{fp:016x}"))),
+                ("strategy", Json::Str(plan.strategy.clone())),
+                ("solve_us", Json::Num(plan.solve_us)),
+                ("nrows", Json::Num(plan.nrows as f64)),
+                ("stamp", Json::Num(*stamp as f64)),
+                ("timings", Json::Arr(timings)),
+            ]));
+        }
+        let root = Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("entries", Json::Arr(items)),
+        ]);
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .map_err(|e| Error::Io(format!("create {}: {e}", dir.display())))?;
+            }
+        }
+        // Write-then-rename: a reader (another replica warming from a
+        // shared volume, or this process crashing mid-save) must never
+        // observe a truncated file.
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(format!(".tmp.{}", std::process::id()));
+        let tmp = std::path::PathBuf::from(tmp);
+        std::fs::write(&tmp, root.to_string())
+            .map_err(|e| Error::Io(format!("write {}: {e}", tmp.display())))?;
+        std::fs::rename(&tmp, path).map_err(|e| {
+            std::fs::remove_file(&tmp).ok();
+            Error::Io(format!("rename {} -> {}: {e}", tmp.display(), path.display()))
+        })
+    }
+}
+
+fn load_entries(path: &Path) -> Result<BTreeMap<u64, (u64, CachedPlan)>, Error> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Io(format!("read {}: {e}", path.display())))?;
+    let root = Json::parse(&text).map_err(|e| Error::Invalid(e.to_string()))?;
+    let items = root
+        .get("entries")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Invalid("plan cache: missing 'entries' array".into()))?;
+    let mut entries = BTreeMap::new();
+    for item in items {
+        // Skip malformed rows rather than discarding the whole cache.
+        let Some(fp) = item
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .and_then(Fingerprint::from_hex)
+        else {
+            continue;
+        };
+        let Some(strategy) = item.get("strategy").and_then(Json::as_str) else {
+            continue;
+        };
+        let solve_us = item.get("solve_us").and_then(Json::as_f64).unwrap_or(0.0);
+        let nrows = item.get("nrows").and_then(Json::as_usize).unwrap_or(0);
+        let stamp = item.get("stamp").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        let mut timings = Vec::new();
+        if let Some(arr) = item.get("timings").and_then(Json::as_arr) {
+            for pair in arr {
+                if let Some(p) = pair.as_arr() {
+                    if let (Some(s), Some(us)) =
+                        (p.first().and_then(Json::as_str), p.get(1).and_then(Json::as_f64))
+                    {
+                        timings.push((s.to_string(), us));
+                    }
+                }
+            }
+        }
+        entries.insert(
+            fp.0,
+            (
+                stamp,
+                CachedPlan {
+                    strategy: strategy.to_string(),
+                    solve_us,
+                    timings,
+                    nrows,
+                },
+            ),
+        );
+    }
+    Ok(entries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(strategy: &str, us: f64) -> CachedPlan {
+        CachedPlan {
+            strategy: strategy.to_string(),
+            solve_us: us,
+            timings: vec![("none".into(), us * 2.0), (strategy.to_string(), us)],
+            nrows: 100,
+        }
+    }
+
+    fn fp(v: u64) -> Fingerprint {
+        Fingerprint(v)
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let mut c = PlanCache::new(4);
+        assert!(c.get(fp(1)).is_none());
+        c.put(fp(1), plan("avgcost", 10.0));
+        let got = c.get(fp(1)).unwrap();
+        assert_eq!(got.strategy, "avgcost");
+        assert_eq!((c.hits, c.misses), (1, 1));
+        assert_eq!(c.len(), 1);
+        assert!(!c.is_empty());
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut c = PlanCache::new(2);
+        c.put(fp(1), plan("a", 1.0));
+        c.put(fp(2), plan("b", 1.0));
+        assert!(c.get(fp(1)).is_some()); // 1 is now more recent than 2
+        c.put(fp(3), plan("c", 1.0)); // evicts 2
+        assert!(c.get(fp(2)).is_none());
+        assert!(c.get(fp(1)).is_some());
+        assert!(c.get(fp(3)).is_some());
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn disk_roundtrip() {
+        let path = std::env::temp_dir().join(format!(
+            "sptrsv_plan_cache_{}.json",
+            std::process::id()
+        ));
+        std::fs::remove_file(&path).ok();
+        {
+            let mut c = PlanCache::with_disk(8, &path);
+            c.put(fp(0xDEAD), plan("manual:10", 42.5));
+            c.put(fp(0xBEEF), plan("avgcost", 7.25));
+        }
+        let mut c2 = PlanCache::with_disk(8, &path);
+        assert_eq!(c2.len(), 2);
+        let got = c2.get(fp(0xDEAD)).unwrap();
+        assert_eq!(got.strategy, "manual:10");
+        assert_eq!(got.solve_us, 42.5);
+        assert_eq!(got.timings.len(), 2);
+        assert_eq!(got.nrows, 100);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn save_merges_with_other_writers() {
+        let path = std::env::temp_dir().join(format!(
+            "sptrsv_plan_cache_merge_{}.json",
+            std::process::id()
+        ));
+        std::fs::remove_file(&path).ok();
+        // Two replicas sharing one spill file, each tuning a different
+        // structure: neither save may clobber the other's entry.
+        let mut a = PlanCache::with_disk(8, &path);
+        let mut b = PlanCache::with_disk(8, &path);
+        a.put(fp(1), plan("avgcost", 1.0));
+        b.put(fp(2), plan("manual:10", 2.0));
+        let mut fresh = PlanCache::with_disk(8, &path);
+        assert_eq!(fresh.len(), 2);
+        assert_eq!(fresh.get(fp(1)).unwrap().strategy, "avgcost");
+        assert_eq!(fresh.get(fp(2)).unwrap().strategy, "manual:10");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_file_starts_empty() {
+        let path = std::env::temp_dir().join(format!(
+            "sptrsv_plan_cache_bad_{}.json",
+            std::process::id()
+        ));
+        std::fs::write(&path, "{ not json").unwrap();
+        let c = PlanCache::with_disk(4, &path);
+        assert!(c.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,167 @@
+//! Empirical strategy racing: apply each shortlisted strategy for real,
+//! warm it up, and time a few solves on the actual executor.
+//!
+//! The cost model shortlists; the race decides. This mirrors how analysis
+//! cost is amortized in serving (Li 2017): the transform + a handful of
+//! warm-up solves are paid once per new sparsity structure, then the
+//! winning plan is cached by fingerprint and reused for every later
+//! registration of that structure.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::solver::executor::TransformedSolver;
+use crate::solver::pool::Pool;
+use crate::sparse::Csr;
+use crate::transform::{Strategy, TransformResult};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct RaceOptions {
+    /// timed solves per candidate (after one warm-up solve)
+    pub solves: usize,
+    pub workers: usize,
+    /// seed for the right-hand side used by every lane
+    pub seed: u64,
+}
+
+impl Default for RaceOptions {
+    fn default() -> Self {
+        RaceOptions {
+            solves: 3,
+            workers: 4,
+            seed: 0x7E57,
+        }
+    }
+}
+
+/// One raced candidate.
+pub struct Lane {
+    pub strategy: String,
+    /// wall-clock of Strategy::apply (the analysis cost)
+    pub transform_ms: f64,
+    /// best-of-N per-solve time, microseconds
+    pub solve_us: f64,
+    pub levels_after: usize,
+    pub total_cost_after: u64,
+    /// the applied transform; `take()`n by the tuner for the winner
+    pub transform: Option<TransformResult>,
+}
+
+pub struct RaceOutcome {
+    pub lanes: Vec<Lane>,
+    /// index into `lanes` of the fastest candidate
+    pub winner: usize,
+}
+
+impl RaceOutcome {
+    pub fn winner_lane(&self) -> &Lane {
+        &self.lanes[self.winner]
+    }
+}
+
+/// Race `candidates` (strategy names) on `m`. Unparseable names are
+/// skipped; errors only if no candidate survives. Takes the matrix by
+/// Arc so large factors are never deep-copied onto the tuning path.
+pub fn race(m: &Arc<Csr>, candidates: &[String], opts: &RaceOptions) -> Result<RaceOutcome, String> {
+    let solves = opts.solves.max(1);
+    // One pool shared by every lane: thread spawn cost must not skew the
+    // comparison toward whichever lane runs first.
+    let pool = Arc::new(Pool::new(opts.workers));
+    let mut rng = Rng::new(opts.seed);
+    let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
+
+    let mut lanes: Vec<Lane> = Vec::with_capacity(candidates.len());
+    for name in candidates {
+        let strategy = match Strategy::parse(name) {
+            Ok(Strategy::Auto) | Err(_) => continue, // never race the tuner itself
+            Ok(s) => s,
+        };
+        let t0 = Instant::now();
+        let t = strategy.apply(m);
+        let transform_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let levels_after = t.stats.levels_after;
+        let total_cost_after = t.stats.total_level_cost_after;
+
+        let solver = TransformedSolver::new(Arc::clone(m), Arc::new(t), Arc::clone(&pool));
+        let mut x = vec![0.0; m.nrows];
+        solver.solve_into(&b, &mut x); // warm-up: page in the plan
+        let mut best = f64::INFINITY;
+        for _ in 0..solves {
+            let s0 = Instant::now();
+            solver.solve_into(&b, &mut x);
+            best = best.min(s0.elapsed().as_secs_f64() * 1e6);
+        }
+        // Reclaim the transform from the solver for the tuner to reuse:
+        // once the solver is dropped, the lane's Arc is the sole owner.
+        let t_arc = Arc::clone(&solver.t);
+        drop(solver);
+        let transform = Arc::try_unwrap(t_arc).ok();
+        lanes.push(Lane {
+            strategy: name.clone(),
+            transform_ms,
+            solve_us: best,
+            levels_after,
+            total_cost_after,
+            transform,
+        });
+    }
+    if lanes.is_empty() {
+        return Err("no raceable candidate strategies".to_string());
+    }
+    let winner = lanes
+        .iter()
+        .enumerate()
+        .min_by(|a, b| {
+            a.1.solve_us
+                .partial_cmp(&b.1.solve_us)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    Ok(RaceOutcome { lanes, winner })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate::{self, GenOptions};
+
+    fn names(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn race_produces_a_winner_with_valid_plans() {
+        let m = Arc::new(generate::lung2_like(&GenOptions::with_scale(0.03)));
+        let opts = RaceOptions {
+            solves: 2,
+            workers: 2,
+            ..Default::default()
+        };
+        let out = race(&m, &names(&["none", "avgcost"]), &opts).unwrap();
+        assert_eq!(out.lanes.len(), 2);
+        for lane in &out.lanes {
+            assert!(lane.solve_us.is_finite() && lane.solve_us >= 0.0);
+            let t = lane.transform.as_ref().expect("transform reclaimed");
+            t.validate(&m).unwrap();
+        }
+        let w = out.winner_lane();
+        assert!(w.strategy == "none" || w.strategy == "avgcost");
+    }
+
+    #[test]
+    fn unparseable_and_auto_candidates_are_skipped() {
+        let m = Arc::new(generate::tridiagonal(60, &Default::default()));
+        let opts = RaceOptions {
+            solves: 1,
+            workers: 1,
+            ..Default::default()
+        };
+        let out = race(&m, &names(&["auto", "nonsense", "manual:5"]), &opts).unwrap();
+        assert_eq!(out.lanes.len(), 1);
+        assert_eq!(out.lanes[0].strategy, "manual:5");
+        assert_eq!(out.lanes[0].levels_after, 12);
+        assert!(race(&m, &names(&["auto", "nope"]), &opts).is_err());
+    }
+}

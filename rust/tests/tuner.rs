@@ -1,0 +1,223 @@
+//! Integration tests for the strategy-portfolio autotuner: fingerprint
+//! stability, plan-cache behaviour (memory and disk), cost-model /
+//! measured-ordering agreement, and the `auto` strategy end-to-end
+//! through the coordinator.
+
+use sptrsv_gt::config::Config;
+use sptrsv_gt::coordinator::Service;
+use sptrsv_gt::sparse::generate::{self, GenOptions};
+use sptrsv_gt::sparse::Csr;
+use sptrsv_gt::transform::Strategy;
+use sptrsv_gt::tuner::cost_model::{plan_cost, CostModel};
+use sptrsv_gt::tuner::{Fingerprint, MatrixFeatures, PlanSource, Tuner, TunerOptions};
+use sptrsv_gt::util::rng::Rng;
+
+fn quick_opts() -> TunerOptions {
+    TunerOptions {
+        race_solves: 2,
+        workers: 2,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn fingerprint_stable_across_value_perturbation() {
+    let m = generate::torso2_like(&GenOptions::with_scale(0.02));
+    let fp = Fingerprint::of(&m);
+    // Same structure, perturbed values (a refreshed factorization).
+    let mut m2 = m.clone();
+    let mut rng = Rng::new(99);
+    for v in &mut m2.data {
+        *v *= 1.0 + 0.01 * rng.uniform(-1.0, 1.0);
+    }
+    assert_ne!(m.data, m2.data);
+    assert_eq!(Fingerprint::of(&m2), fp);
+    // A structurally different matrix fingerprints differently.
+    let other = generate::torso2_like(&GenOptions {
+        seed: 1,
+        ..GenOptions::with_scale(0.02)
+    });
+    assert_ne!(Fingerprint::of(&other), fp);
+}
+
+#[test]
+fn cache_hit_returns_identical_plan() {
+    let m = generate::lung2_like(&GenOptions::with_scale(0.03));
+    let mut tuner = Tuner::new(quick_opts());
+    let p1 = tuner.choose(&m).unwrap();
+    assert_eq!(p1.source, PlanSource::Raced);
+    // Re-registration of the same structure with perturbed values.
+    let mut m2 = m.clone();
+    for v in &mut m2.data {
+        *v *= 1.001;
+    }
+    let p2 = tuner.choose(&m2).unwrap();
+    assert_eq!(p2.source, PlanSource::CacheHit);
+    assert_eq!(p2.fingerprint, p1.fingerprint);
+    assert_eq!(p2.strategy_name, p1.strategy_name);
+    // Identical plan shape: same level partition sizes.
+    assert_eq!(p2.transform.num_levels(), p1.transform.num_levels());
+    let widths1: Vec<usize> = p1.transform.levels.iter().map(Vec::len).collect();
+    let widths2: Vec<usize> = p2.transform.levels.iter().map(Vec::len).collect();
+    assert_eq!(widths1, widths2);
+    assert_eq!(tuner.cache_stats(), (1, 1));
+    // The cached plan still solves the perturbed system correctly.
+    p2.transform.validate(&m2).unwrap();
+}
+
+#[test]
+fn plan_cache_survives_restart_via_disk_spill() {
+    let path = std::env::temp_dir().join(format!(
+        "sptrsv_tuner_it_{}.json",
+        std::process::id()
+    ));
+    std::fs::remove_file(&path).ok();
+    let m = generate::lung2_like(&GenOptions::with_scale(0.03));
+    let chosen = {
+        let mut tuner = Tuner::new(TunerOptions {
+            cache_path: Some(path.clone()),
+            ..quick_opts()
+        });
+        let p = tuner.choose(&m).unwrap();
+        assert_eq!(p.source, PlanSource::Raced);
+        p.strategy_name
+    };
+    // A fresh tuner (fresh process, same cache file) skips the race.
+    let mut tuner2 = Tuner::new(TunerOptions {
+        cache_path: Some(path.clone()),
+        ..quick_opts()
+    });
+    let p = tuner2.choose(&m).unwrap();
+    assert_eq!(p.source, PlanSource::CacheHit);
+    assert_eq!(p.strategy_name, chosen);
+    std::fs::remove_file(&path).ok();
+}
+
+/// The cost model predicts from features alone (before any transform
+/// runs). For every candidate pair whose *actual* post-transform cost —
+/// the same level/work formula applied to the really-transformed stats —
+/// differs by a wide margin, the model must order the pair the same way.
+/// Near-ties are skipped: the race, not the model, settles those.
+#[test]
+fn cost_model_ranking_agrees_with_measured_ordering() {
+    let workers = 4;
+    let candidates = ["none", "avgcost", "manual:10", "guarded:20"];
+    let matrices: Vec<(&str, Csr)> = vec![
+        ("lung2-like", generate::lung2_like(&GenOptions::with_scale(0.05))),
+        ("torso2-like", generate::torso2_like(&GenOptions::with_scale(0.03))),
+        ("tridiagonal", generate::tridiagonal(400, &Default::default())),
+    ];
+    let model = CostModel::new(workers);
+    let mut pairs_checked = 0usize;
+    for (name, m) in &matrices {
+        let f = MatrixFeatures::of(m);
+        let predicted: Vec<f64> = candidates
+            .iter()
+            .map(|s| model.predict(&f, s).unwrap())
+            .collect();
+        let actual: Vec<f64> = candidates
+            .iter()
+            .map(|s| {
+                let t = Strategy::parse(s).unwrap().apply(m);
+                plan_cost(
+                    t.stats.levels_after,
+                    t.stats.total_level_cost_after as f64,
+                    m.nrows,
+                    workers,
+                )
+            })
+            .collect();
+        for a in 0..candidates.len() {
+            for b in (a + 1)..candidates.len() {
+                let (lo, hi) = if actual[a] < actual[b] { (a, b) } else { (b, a) };
+                if actual[hi] < actual[lo] * 1.3 {
+                    continue; // near-tie: the race decides, not the model
+                }
+                pairs_checked += 1;
+                assert!(
+                    predicted[lo] < predicted[hi],
+                    "{name}: model ranks {} ({:.0}) above {} ({:.0}) but measured \
+                     order is {:.0} vs {:.0}",
+                    candidates[hi],
+                    predicted[hi],
+                    candidates[lo],
+                    predicted[lo],
+                    actual[lo],
+                    actual[hi]
+                );
+            }
+        }
+    }
+    assert!(pairs_checked >= 3, "only {pairs_checked} decisive pairs");
+}
+
+#[test]
+fn auto_strategy_end_to_end_through_service() {
+    let svc = Service::start(Config {
+        workers: 2,
+        strategy: "auto".into(), // config default, no per-register override
+        use_xla: false,
+        batch_size: 4,
+        batch_deadline_us: 200,
+        ..Default::default()
+    });
+    let h = svc.handle();
+    let lung = generate::lung2_like(&GenOptions::with_scale(0.02));
+    let tri = generate::tridiagonal(300, &Default::default());
+    let n = lung.nrows;
+
+    let i1 = h.register("lung", lung.clone(), None).unwrap();
+    assert_eq!(i1.tuner_cache_hit, Some(false));
+    let i2 = h.register("lung-again", lung.clone(), None).unwrap();
+    assert_eq!(i2.tuner_cache_hit, Some(true));
+    assert_eq!(i2.strategy, i1.strategy);
+    let i3 = h.register("tri", tri.clone(), None).unwrap();
+    assert_eq!(i3.tuner_cache_hit, Some(false));
+
+    let mut rng = Rng::new(17);
+    for id in ["lung", "lung-again"] {
+        let b: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let x = h.solve(id, b.clone()).unwrap();
+        assert!(lung.residual_inf(&x, &b) < 1e-9, "{id}");
+    }
+    let b = vec![2.0; 300];
+    let x = h.solve("tri", b.clone()).unwrap();
+    assert!(tri.residual_inf(&x, &b) < 1e-9);
+
+    let snap = h.metrics().unwrap();
+    assert_eq!(snap.tuner_cache_hits, 1);
+    assert_eq!(snap.tuner_cache_misses, 2);
+    let total_wins: u64 = snap.strategy_wins.iter().map(|(_, n)| n).sum();
+    assert_eq!(total_wins, 3);
+    assert!(snap.to_string().contains("tuner cache hit/miss=1/2"));
+    svc.shutdown();
+}
+
+#[test]
+fn auto_plans_solve_correctly_on_random_structures() {
+    for seed in 0..3u64 {
+        let m = generate::random_lower(
+            250,
+            4,
+            0.85,
+            &GenOptions {
+                seed,
+                ..Default::default()
+            },
+        );
+        let mut tuner = Tuner::new(quick_opts());
+        let plan = tuner.choose(&m).unwrap();
+        plan.transform.validate(&m).unwrap();
+        let mut rng = Rng::new(seed + 1000);
+        let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let x_ref = sptrsv_gt::solver::serial::solve(&m, &b);
+        let solver = sptrsv_gt::solver::executor::TransformedSolver::from_parts(
+            m.clone(),
+            plan.transform,
+            2,
+        );
+        let x = solver.solve(&b);
+        sptrsv_gt::util::prop::assert_allclose(&x, &x_ref, 1e-9, 1e-11)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    }
+}
