@@ -12,8 +12,9 @@
 //! Falls back to the native backend (with a note) if artifacts are absent.
 
 use sptrsv_gt::config::Config;
-use sptrsv_gt::coordinator::Service;
+use sptrsv_gt::coordinator::{Service, SolveOptions};
 use sptrsv_gt::sparse::generate::{self, GenOptions};
+use sptrsv_gt::transform::StrategySpec;
 use sptrsv_gt::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -24,7 +25,7 @@ fn main() -> anyhow::Result<()> {
 
     let cfg = Config {
         workers: 4,
-        strategy: "avgcost".into(),
+        strategy: StrategySpec::parse("avgcost").map_err(anyhow::Error::msg)?,
         use_xla: true, // falls back with a warning when artifacts are absent
         batch_size: 8,
         batch_deadline_us: 1000,
@@ -41,7 +42,7 @@ fn main() -> anyhow::Result<()> {
     let lung = generate::lung2_like(&GenOptions::with_scale(0.02));
     let torso = generate::torso2_like(&GenOptions::with_scale(0.01));
     for (id, m) in [("lung2", &lung), ("torso2", &torso)] {
-        let info = h.register(id, m.clone(), None)?;
+        let info = h.register(id, m.clone(), StrategySpec::Default)?;
         println!(
             "registered {id}: {} rows, levels {} -> {}, {} rewritten, backend={}, prepare={:.1}ms",
             m.nrows,
@@ -64,12 +65,12 @@ fn main() -> anyhow::Result<()> {
             ("lung2", &lung)
         };
         let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
-        let rx = h.solve_async(id, b.clone())?;
-        inflight.push((id, b, rx));
+        let ticket = h.solve_async(id, b.clone(), SolveOptions::default())?;
+        inflight.push((id, b, ticket));
     }
     let mut worst = 0.0f64;
-    for (id, b, rx) in inflight {
-        let x = rx.recv()?.map_err(anyhow::Error::msg)?;
+    for (id, b, ticket) in inflight {
+        let x = ticket.wait()?;
         let m = if id == "lung2" { &lung } else { &torso };
         worst = worst.max(m.residual_inf(&x, &b));
     }

@@ -1,0 +1,112 @@
+//! Tour of the typed v2 coordinator client API.
+//!
+//! Demonstrates everything the `SolveHandle` surface can express:
+//! strategies parsed once at the edge (`StrategySpec`), typed failures
+//! (`ServiceError`), async `SolveTicket`s (`wait` / `wait_timeout` /
+//! `try_get` / `cancel`), per-request `SolveOptions` (deadline + lane
+//! priority), multi-RHS blocks (`solve_many`), and `max_pending`
+//! admission control — finishing with the metrics snapshot where the
+//! rejections, cancellations and deadline misses are all visible.
+//!
+//!     cargo run --release --example serve_v2
+
+use std::time::Duration;
+
+use sptrsv_gt::config::Config;
+use sptrsv_gt::coordinator::{Service, SolveOptions};
+use sptrsv_gt::error::ServiceError;
+use sptrsv_gt::sparse::generate::{self, GenOptions};
+use sptrsv_gt::transform::StrategySpec;
+use sptrsv_gt::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config {
+        workers: 4,
+        strategy: StrategySpec::parse("auto").map_err(anyhow::Error::msg)?,
+        batch_size: 8,
+        batch_deadline_us: 2_000,
+        max_pending: 1_024,
+        use_xla: false,
+        ..Default::default()
+    };
+    let batch_size = cfg.batch_size;
+    let svc = Service::start(cfg);
+    let h = svc.handle();
+
+    // Registration: the strategy was parsed above, at the edge — a typo
+    // would have failed there, not inside the service thread.
+    let m = generate::lung2_like(&GenOptions::with_scale(0.03));
+    let n = m.nrows;
+    let info = h.register("lung2", m.clone(), StrategySpec::Default)?;
+    println!(
+        "registered: strategy={} (tuner cache hit: {:?}), levels {} -> {}, backend={}",
+        info.strategy, info.tuner_cache_hit, info.levels_before, info.levels_after,
+        info.backend
+    );
+
+    let mut rng = Rng::new(0x5EED);
+    let mut rhs = || -> Vec<f64> { (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect() };
+
+    // 1. Interactive request with a latency budget: dispatched ahead of
+    //    batch-lane work, dropped (typed) if it could not run in time.
+    let b = rhs();
+    let ticket = h.solve_async(
+        "lung2",
+        b.clone(),
+        SolveOptions::interactive().deadline(Duration::from_millis(250)),
+    )?;
+    // Poll while it is in flight (try_get / wait_timeout never block past
+    // their budget), then settle.
+    if ticket.try_get().is_none() {
+        println!("interactive request in flight after {:?}", ticket.elapsed());
+    }
+    match ticket.wait() {
+        Ok(x) => println!(
+            "interactive solve ok: residual {:.3e}",
+            m.residual_inf(&x, &b)
+        ),
+        Err(ServiceError::DeadlineExceeded) => println!("interactive solve missed its deadline"),
+        Err(e) => return Err(e.into()),
+    }
+
+    // 2. A fire-and-forget request, cancelled before dispatch: the
+    //    service drops it instead of burning a solve on it.
+    let cancelled = h.solve_async("lung2", rhs(), SolveOptions::default())?;
+    cancelled.cancel();
+    match cancelled.wait() {
+        Err(ServiceError::Cancelled) => println!("cancelled request was dropped before dispatch"),
+        other => println!("cancel raced dispatch: {:?}", other.map(|x| x.len())),
+    }
+
+    // 3. An already-expired deadline: rejected as DeadlineExceeded, never
+    //    solved late.
+    let late = h.solve_async("lung2", rhs(), SolveOptions::new().deadline(Duration::ZERO))?;
+    assert_eq!(late.wait(), Err(ServiceError::DeadlineExceeded));
+    println!("zero-budget request rejected as DeadlineExceeded");
+
+    // 4. Multi-RHS block sized to the batcher: lands as exactly one batch
+    //    (with XLA artifacts staged, this is the vmapped batched path).
+    let bs: Vec<Vec<f64>> = (0..batch_size).map(|_| rhs()).collect();
+    let xs = h.solve_many("lung2", bs.clone(), SolveOptions::default())?.wait()?;
+    let worst = bs
+        .iter()
+        .zip(&xs)
+        .map(|(b, x)| m.residual_inf(x, b))
+        .fold(0.0f64, f64::max);
+    println!(
+        "solve_many: {} right-hand sides in one block, worst residual {worst:.3e}",
+        xs.len()
+    );
+    anyhow::ensure!(worst < 1e-8, "residual too large");
+
+    // 5. Typed failure for an unknown matrix — no string matching needed.
+    assert_eq!(
+        h.solve("ghost", vec![1.0; 4]),
+        Err(ServiceError::NotRegistered("ghost".into()))
+    );
+    println!("unknown id rejected as NotRegistered");
+
+    println!("metrics: {}", h.metrics()?);
+    svc.shutdown();
+    Ok(())
+}

@@ -1,25 +1,31 @@
 //! Configuration system: a flat key = value file (TOML subset — strings,
-//! numbers, booleans; `#` comments) merged with CLI `--key value`
-//! overrides. Used by the coordinator/service and the bench harnesses.
+//! numbers, booleans; `#` comments outside quotes) merged with CLI
+//! `--key value` overrides. Used by the coordinator/service and the bench
+//! harnesses.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::error::Error;
+use crate::transform::StrategySpec;
 use crate::util::cli::Args;
 
 #[derive(Debug, Clone)]
 pub struct Config {
     /// worker threads for the parallel solvers
     pub workers: usize,
-    /// transformation strategy name (see `Strategy::parse`)
-    pub strategy: String,
+    /// default transformation strategy, parsed once at config time (see
+    /// `Strategy::parse` for the accepted names)
+    pub strategy: StrategySpec,
     /// directory with AOT artifacts + manifest.json
     pub artifacts_dir: String,
-    /// batch size target for the RHS batcher
+    /// batch size target for the RHS batcher (counted in right-hand sides)
     pub batch_size: usize,
     /// max microseconds a request may wait for a batch to fill
     pub batch_deadline_us: u64,
+    /// admission control: max queued right-hand sides before new requests
+    /// are rejected `Overloaded` (0 = unbounded)
+    pub max_pending: usize,
     /// prefer the XLA backend when an artifact shape fits
     pub use_xla: bool,
     /// default RNG seed for generators
@@ -41,10 +47,11 @@ impl Default for Config {
             workers: std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(1),
-            strategy: "avgcost".to_string(),
+            strategy: StrategySpec::parse("avgcost").expect("builtin strategy"),
             artifacts_dir: "artifacts".to_string(),
             batch_size: 8,
             batch_deadline_us: 2_000,
+            max_pending: 4_096,
             use_xla: false,
             seed: 0x5EED,
             tuner_cache: String::new(),
@@ -55,6 +62,31 @@ impl Default for Config {
     }
 }
 
+/// Strip a `#` comment, ignoring `#` inside a double-quoted value (the
+/// old `split('#')` truncated quoted strings like `"plans#v2.json"`).
+fn strip_comment(line: &str) -> &str {
+    let mut in_quotes = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_quotes = !in_quotes,
+            '#' if !in_quotes => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Remove exactly one pair of surrounding double quotes. `trim_matches('"')`
+/// would also eat quotes that belong to the value itself.
+fn unquote(val: &str) -> &str {
+    let v = val.trim();
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        &v[1..v.len() - 1]
+    } else {
+        v
+    }
+}
+
 impl Config {
     /// Parse the flat TOML-subset file.
     pub fn from_file(path: &Path) -> Result<Config, Error> {
@@ -62,7 +94,7 @@ impl Config {
             .map_err(|e| Error::Io(format!("read {}: {e}", path.display())))?;
         let mut cfg = Config::default();
         for (ln, raw) in text.lines().enumerate() {
-            let line = raw.split('#').next().unwrap_or("").trim();
+            let line = strip_comment(raw).trim();
             if line.is_empty() || line.starts_with('[') {
                 continue; // section headers tolerated, ignored
             }
@@ -74,7 +106,7 @@ impl Config {
                 )));
             };
             let key = line[..eq].trim();
-            let val = line[eq + 1..].trim().trim_matches('"');
+            let val = unquote(&line[eq + 1..]);
             cfg.set(key, val)?;
         }
         Ok(cfg)
@@ -88,8 +120,8 @@ impl Config {
             if matches!(
                 k.as_str(),
                 "workers" | "strategy" | "artifacts-dir" | "batch-size"
-                    | "batch-deadline-us" | "use-xla" | "seed" | "tuner-cache"
-                    | "tuner-top-k" | "tuner-race-solves"
+                    | "batch-deadline-us" | "max-pending" | "use-xla" | "seed"
+                    | "tuner-cache" | "tuner-top-k" | "tuner-race-solves"
             ) {
                 self.set(&k.replace('-', "_"), v)?;
             }
@@ -101,12 +133,15 @@ impl Config {
         let bad = |k: &str, v: &str| Error::Invalid(format!("config {k}: bad value '{v}'"));
         match key {
             "workers" => self.workers = val.parse().map_err(|_| bad(key, val))?,
-            "strategy" => self.strategy = val.to_string(),
+            "strategy" => {
+                self.strategy = StrategySpec::parse(val).map_err(Error::Invalid)?
+            }
             "artifacts_dir" => self.artifacts_dir = val.to_string(),
             "batch_size" => self.batch_size = val.parse().map_err(|_| bad(key, val))?,
             "batch_deadline_us" => {
                 self.batch_deadline_us = val.parse().map_err(|_| bad(key, val))?
             }
+            "max_pending" => self.max_pending = val.parse().map_err(|_| bad(key, val))?,
             "use_xla" => self.use_xla = matches!(val, "true" | "1" | "yes"),
             "seed" => self.seed = val.parse().map_err(|_| bad(key, val))?,
             "tuner_cache" => self.tuner_cache = val.to_string(),
@@ -130,9 +165,10 @@ mod tests {
     fn defaults_sane() {
         let c = Config::default();
         assert!(c.workers >= 1);
-        assert_eq!(c.strategy, "avgcost");
+        assert_eq!(c.strategy.as_str(), "avgcost");
         assert!(c.tuner_cache.is_empty());
         assert!(c.tuner_top_k >= 1);
+        assert!(c.max_pending > 0);
     }
 
     #[test]
@@ -160,28 +196,75 @@ mod tests {
         let p = std::env::temp_dir().join(format!("sptrsv_cfg_{}.toml", std::process::id()));
         std::fs::write(
             &p,
-            "# comment\n[coordinator]\nworkers = 3\nstrategy = \"manual:5\"\nuse_xla = true\ncustom_knob = 7\n",
+            "# comment\n[coordinator]\nworkers = 3\nstrategy = \"manual:5\"\nuse_xla = true\nmax_pending = 64\ncustom_knob = 7\n",
         )
         .unwrap();
         let c = Config::from_file(&p).unwrap();
         std::fs::remove_file(&p).ok();
         assert_eq!(c.workers, 3);
-        assert_eq!(c.strategy, "manual:5");
+        assert_eq!(c.strategy.as_str(), "manual:5");
         assert!(c.use_xla);
+        assert_eq!(c.max_pending, 64);
         assert_eq!(c.extra.get("custom_knob").unwrap(), "7");
+    }
+
+    #[test]
+    fn hash_inside_quoted_value_is_not_a_comment() {
+        // Regression: split('#') used to truncate the value at the hash.
+        let p = std::env::temp_dir().join(format!(
+            "sptrsv_cfg_hash_{}.toml",
+            std::process::id()
+        ));
+        std::fs::write(
+            &p,
+            "tuner_cache = \"/tmp/plans#v2.json\"  # real comment\nworkers = 2 # also real\n",
+        )
+        .unwrap();
+        let c = Config::from_file(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(c.tuner_cache, "/tmp/plans#v2.json");
+        assert_eq!(c.workers, 2);
+    }
+
+    #[test]
+    fn interior_quotes_survive_unquoting() {
+        // Regression: trim_matches('"') mangled values containing quotes.
+        let p = std::env::temp_dir().join(format!(
+            "sptrsv_cfg_quote_{}.toml",
+            std::process::id()
+        ));
+        std::fs::write(&p, "label = \"he said \"hi\"\"\n").unwrap();
+        let c = Config::from_file(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(c.extra.get("label").unwrap(), "he said \"hi\"");
+        // And a bare unquoted value is left alone entirely.
+        assert_eq!(unquote("plain"), "plain");
+        assert_eq!(unquote("\""), "\"");
+    }
+
+    #[test]
+    fn strategy_is_validated_at_config_time() {
+        let mut c = Config::default();
+        assert!(c.set("strategy", "nonsense").is_err());
+        c.set("strategy", "auto").unwrap();
+        assert_eq!(c.strategy.as_str(), "auto");
     }
 
     #[test]
     fn args_override() {
         let mut c = Config::default();
         let args = Args::parse(
-            ["x", "--workers", "7", "--strategy", "none", "--other", "z"]
-                .iter()
-                .map(|s| s.to_string()),
+            [
+                "x", "--workers", "7", "--strategy", "none", "--max-pending", "9",
+                "--other", "z",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
         );
         c.merge_args(&args).unwrap();
         assert_eq!(c.workers, 7);
-        assert_eq!(c.strategy, "none");
+        assert_eq!(c.strategy.as_str(), "none");
+        assert_eq!(c.max_pending, 9);
         assert!(!c.extra.contains_key("other")); // unknown flags left alone
     }
 

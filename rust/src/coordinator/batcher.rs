@@ -2,19 +2,57 @@
 //! configured batch size, or flushed when the oldest request exceeds the
 //! batching deadline. The batched XLA executable then solves all
 //! right-hand sides in one call (vmapped scan — see model.py).
+//!
+//! v2 surface: every queued request is a *block* of one or more
+//! right-hand sides (so `solve_many` lands in the batcher as a unit and
+//! hits the batched backend deliberately), each matrix keeps **two lanes**
+//! ([`Lane::Interactive`] dispatches before [`Lane::Batch`]), and requests
+//! may carry an absolute deadline that tightens the flush timer — an
+//! expired request is surfaced by `ready`/`take` so the service can reply
+//! `DeadlineExceeded` instead of solving late.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
 
-/// One queued solve request.
+/// Scheduling priority of a request. Interactive requests dispatch before
+/// batch requests whenever both lanes hold work for the same flush.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Lane {
+    /// latency-sensitive: dispatched first
+    Interactive,
+    /// throughput work: fills whatever batch capacity remains
+    #[default]
+    Batch,
+}
+
+const LANES: usize = 2;
+
+fn lane_index(lane: Lane) -> usize {
+    match lane {
+        Lane::Interactive => 0,
+        Lane::Batch => 1,
+    }
+}
+
+/// One queued solve request: a block of right-hand sides submitted
+/// together (a single `solve` is a block of one).
 pub struct Pending<T> {
-    pub b: Vec<f64>,
+    /// the block's right-hand sides; never split across batches
+    pub rhs: Vec<Vec<f64>>,
     pub token: T,
     pub enqueued: Instant,
+    pub lane: Lane,
+    /// absolute drop-dead time; the batcher flushes the request *by* this
+    /// instant so the service can reject it if it is already late
+    pub deadline: Option<Instant>,
 }
 
 pub struct Batcher<T> {
-    queues: BTreeMap<String, Vec<Pending<T>>>,
+    /// matrix id -> [interactive queue, batch queue]
+    queues: BTreeMap<String, [VecDeque<Pending<T>>; LANES]>,
+    /// running per-lane RHS counts, so admission control and the depth
+    /// gauges are O(1) instead of a scan of every queue per request
+    lane_rhs: [usize; LANES],
     pub batch_size: usize,
     pub deadline: Duration,
 }
@@ -23,65 +61,128 @@ impl<T> Batcher<T> {
     pub fn new(batch_size: usize, deadline: Duration) -> Batcher<T> {
         Batcher {
             queues: BTreeMap::new(),
+            lane_rhs: [0; LANES],
             batch_size: batch_size.max(1),
             deadline,
         }
     }
 
-    pub fn push(&mut self, matrix_id: &str, b: Vec<f64>, token: T) {
-        self.queues
+    pub fn push(
+        &mut self,
+        matrix_id: &str,
+        rhs: Vec<Vec<f64>>,
+        lane: Lane,
+        deadline: Option<Instant>,
+        token: T,
+    ) {
+        self.lane_rhs[lane_index(lane)] += rhs.len();
+        let lanes = self
+            .queues
             .entry(matrix_id.to_string())
-            .or_default()
-            .push(Pending {
-                b,
-                token,
-                enqueued: Instant::now(),
-            });
+            .or_insert_with(|| [VecDeque::new(), VecDeque::new()]);
+        lanes[lane_index(lane)].push_back(Pending {
+            rhs,
+            token,
+            enqueued: Instant::now(),
+            lane,
+            deadline,
+        });
     }
 
+    /// Total queued right-hand sides across all matrices and lanes (the
+    /// quantity `max_pending` admission control caps).
     pub fn pending(&self) -> usize {
-        self.queues.values().map(Vec::len).sum()
+        self.lane_rhs.iter().sum()
     }
 
-    /// Matrices whose queue is ready: full batch, or deadline expired.
-    /// `force` flushes everything non-empty.
-    pub fn ready(&self, force: bool) -> Vec<String> {
-        let now = Instant::now();
-        self.queues
-            .iter()
-            .filter(|(_, q)| {
-                !q.is_empty()
-                    && (force
-                        || q.len() >= self.batch_size
-                        || q.iter()
-                            .any(|p| now.duration_since(p.enqueued) >= self.deadline))
-            })
-            .map(|(id, _)| id.clone())
-            .collect()
+    /// Queued right-hand sides in one lane across all matrices.
+    pub fn lane_depth(&self, lane: Lane) -> usize {
+        self.lane_rhs[lane_index(lane)]
     }
 
-    /// Take up to `batch_size` requests for a matrix (FIFO).
-    pub fn take(&mut self, matrix_id: &str) -> Vec<Pending<T>> {
-        match self.queues.get_mut(matrix_id) {
-            None => Vec::new(),
-            Some(q) => {
-                let n = q.len().min(self.batch_size);
-                q.drain(..n).collect()
+    /// The instant a request must be flushed by: its batching deadline,
+    /// tightened by the request's own deadline when that is sooner.
+    ///
+    /// A deadline-capped request is dispatched one batching deadline
+    /// *early*: flushing exactly at the request deadline would always
+    /// arrive at dispatch already expired. A deadline too tight to wait
+    /// at all (including one already expired) flushes immediately — the
+    /// dispatch-time check then serves it just in time or rejects it.
+    fn flush_by(&self, p: &Pending<T>) -> Instant {
+        let batch_due = p.enqueued + self.deadline;
+        match p.deadline {
+            Some(d) => {
+                let early = d
+                    .checked_sub(self.deadline)
+                    .map_or(p.enqueued, |e| e.max(p.enqueued));
+                batch_due.min(early)
             }
+            None => batch_due,
         }
     }
 
-    /// Time until the oldest pending request hits its deadline (service
-    /// loop uses this for recv_timeout).
+    /// Matrices whose queue is ready: full batch (counted in right-hand
+    /// sides), or some request's flush-by instant has passed. `force`
+    /// flushes everything non-empty. Matrices with interactive work are
+    /// listed first (interactive-first dispatch across matrices too).
+    pub fn ready(&self, force: bool) -> Vec<String> {
+        let now = Instant::now();
+        let mut ids: Vec<(bool, String)> = Vec::new();
+        for (id, lanes) in &self.queues {
+            let total: usize = lanes.iter().flatten().map(|p| p.rhs.len()).sum();
+            if total == 0 {
+                continue;
+            }
+            let due = force
+                || total >= self.batch_size
+                || lanes.iter().flatten().any(|p| now >= self.flush_by(p));
+            if due {
+                ids.push((lanes[0].is_empty(), id.clone()));
+            }
+        }
+        // Stable sort: interactive-bearing matrices first, BTreeMap
+        // (name) order within each class.
+        ids.sort_by_key(|(no_interactive, _)| *no_interactive);
+        ids.into_iter().map(|(_, id)| id).collect()
+    }
+
+    /// Take up to `batch_size` right-hand sides for a matrix, interactive
+    /// lane first, FIFO within a lane. Blocks are never split: a block
+    /// larger than the batch size is returned alone, and a block that
+    /// would overflow the batch stays queued for the next one.
+    pub fn take(&mut self, matrix_id: &str) -> Vec<Pending<T>> {
+        let Some(lanes) = self.queues.get_mut(matrix_id) else {
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        let mut taken = 0usize;
+        'lanes: for (lane, q) in lanes.iter_mut().enumerate() {
+            while let Some(first) = q.front() {
+                let k = first.rhs.len();
+                if !out.is_empty() && taken + k > self.batch_size {
+                    break 'lanes;
+                }
+                let p = q.pop_front().expect("front() was Some");
+                self.lane_rhs[lane] -= k;
+                taken += k;
+                out.push(p);
+                if taken >= self.batch_size {
+                    break 'lanes;
+                }
+            }
+        }
+        out
+    }
+
+    /// Time until the next pending request hits its flush-by instant (the
+    /// service loop uses this for recv_timeout). Zero when something is
+    /// already overdue.
     pub fn next_deadline(&self) -> Option<Duration> {
         let now = Instant::now();
         self.queues
             .values()
-            .flat_map(|q| q.iter())
-            .map(|p| {
-                self.deadline
-                    .saturating_sub(now.duration_since(p.enqueued))
-            })
+            .flat_map(|lanes| lanes.iter().flatten())
+            .map(|p| self.flush_by(p).saturating_duration_since(now))
             .min()
     }
 }
@@ -90,13 +191,17 @@ impl<T> Batcher<T> {
 mod tests {
     use super::*;
 
+    fn one(b: f64) -> Vec<Vec<f64>> {
+        vec![vec![b]]
+    }
+
     #[test]
     fn batches_fill_and_flush() {
         let mut b: Batcher<usize> = Batcher::new(3, Duration::from_secs(60));
-        b.push("m", vec![1.0], 0);
-        b.push("m", vec![2.0], 1);
+        b.push("m", one(1.0), Lane::Batch, None, 0);
+        b.push("m", one(2.0), Lane::Batch, None, 1);
         assert!(b.ready(false).is_empty()); // not full, not expired
-        b.push("m", vec![3.0], 2);
+        b.push("m", one(3.0), Lane::Batch, None, 2);
         assert_eq!(b.ready(false), vec!["m".to_string()]);
         let taken = b.take("m");
         assert_eq!(taken.len(), 3);
@@ -107,7 +212,7 @@ mod tests {
     #[test]
     fn deadline_forces_partial_batch() {
         let mut b: Batcher<usize> = Batcher::new(8, Duration::from_millis(1));
-        b.push("m", vec![1.0], 0);
+        b.push("m", one(1.0), Lane::Batch, None, 0);
         std::thread::sleep(Duration::from_millis(3));
         assert_eq!(b.ready(false), vec!["m".to_string()]);
         assert_eq!(b.take("m").len(), 1);
@@ -116,8 +221,8 @@ mod tests {
     #[test]
     fn force_flush() {
         let mut b: Batcher<usize> = Batcher::new(8, Duration::from_secs(60));
-        b.push("a", vec![1.0], 0);
-        b.push("z", vec![2.0], 1);
+        b.push("a", one(1.0), Lane::Batch, None, 0);
+        b.push("z", one(2.0), Lane::Batch, None, 1);
         let mut r = b.ready(true);
         r.sort();
         assert_eq!(r, vec!["a".to_string(), "z".to_string()]);
@@ -127,7 +232,7 @@ mod tests {
     fn take_caps_at_batch_size() {
         let mut b: Batcher<usize> = Batcher::new(2, Duration::from_secs(60));
         for i in 0..5 {
-            b.push("m", vec![i as f64], i);
+            b.push("m", one(i as f64), Lane::Batch, None, i);
         }
         assert_eq!(b.take("m").len(), 2);
         assert_eq!(b.pending(), 3);
@@ -135,10 +240,94 @@ mod tests {
     }
 
     #[test]
+    fn force_flush_drains_multi_batch_queues() {
+        let mut b: Batcher<usize> = Batcher::new(3, Duration::from_secs(60));
+        for i in 0..7 {
+            b.push("m", one(i as f64), Lane::Batch, None, i);
+        }
+        assert_eq!(b.ready(true), vec!["m".to_string()]);
+        // Draining a deep queue takes several batches, each capped.
+        let sizes: Vec<usize> = std::iter::from_fn(|| {
+            let t = b.take("m");
+            (!t.is_empty()).then_some(t.len())
+        })
+        .collect();
+        assert_eq!(sizes, vec![3, 3, 1]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn interactive_lane_dispatches_first() {
+        let mut b: Batcher<usize> = Batcher::new(3, Duration::from_secs(60));
+        b.push("m", one(1.0), Lane::Batch, None, 0);
+        b.push("m", one(2.0), Lane::Batch, None, 1);
+        // Submitted last, dispatched first.
+        b.push("m", one(3.0), Lane::Interactive, None, 2);
+        assert_eq!(b.lane_depth(Lane::Interactive), 1);
+        assert_eq!(b.lane_depth(Lane::Batch), 2);
+        let taken = b.take("m");
+        assert_eq!(taken.len(), 3);
+        assert_eq!(taken[0].token, 2);
+        assert_eq!(taken[0].lane, Lane::Interactive);
+        assert_eq!(taken[1].token, 0);
+    }
+
+    #[test]
+    fn interactive_matrices_flush_before_batch_matrices() {
+        let mut b: Batcher<usize> = Batcher::new(8, Duration::from_secs(60));
+        b.push("aaa", one(1.0), Lane::Batch, None, 0);
+        b.push("zzz", one(2.0), Lane::Interactive, None, 1);
+        assert_eq!(
+            b.ready(true),
+            vec!["zzz".to_string(), "aaa".to_string()]
+        );
+    }
+
+    #[test]
+    fn request_deadline_tightens_flush_across_matrices() {
+        let mut b: Batcher<usize> = Batcher::new(8, Duration::from_millis(100));
+        b.push("slow", one(1.0), Lane::Batch, None, 0);
+        b.push(
+            "urgent",
+            one(2.0),
+            Lane::Batch,
+            Some(Instant::now() + Duration::from_millis(1)),
+            1,
+        );
+        // The tight per-request deadline, not the 100ms batch deadline,
+        // drives the wakeup...
+        assert!(b.next_deadline().unwrap() <= Duration::from_millis(1));
+        std::thread::sleep(Duration::from_millis(3));
+        // ...and only the urgent matrix is due once it passes.
+        assert_eq!(b.ready(false), vec!["urgent".to_string()]);
+    }
+
+    #[test]
+    fn blocks_are_never_split() {
+        let mut b: Batcher<usize> = Batcher::new(4, Duration::from_secs(60));
+        b.push("m", vec![vec![1.0]; 3], Lane::Batch, None, 0);
+        b.push("m", vec![vec![2.0]; 2], Lane::Batch, None, 1);
+        assert_eq!(b.pending(), 5);
+        assert_eq!(b.ready(false), vec!["m".to_string()]); // 5 >= 4
+        // The 2-RHS block would overflow the 4-RHS batch: it waits.
+        let t1 = b.take("m");
+        assert_eq!(t1.len(), 1);
+        assert_eq!(t1[0].rhs.len(), 3);
+        let t2 = b.take("m");
+        assert_eq!(t2.len(), 1);
+        assert_eq!(t2[0].rhs.len(), 2);
+        // An oversized block is returned alone rather than split.
+        b.push("m", vec![vec![3.0]; 9], Lane::Batch, None, 2);
+        let t3 = b.take("m");
+        assert_eq!(t3.len(), 1);
+        assert_eq!(t3[0].rhs.len(), 9);
+    }
+
+    #[test]
     fn next_deadline_monotone() {
         let mut b: Batcher<usize> = Batcher::new(8, Duration::from_millis(100));
         assert!(b.next_deadline().is_none());
-        b.push("m", vec![1.0], 0);
+        b.push("m", one(1.0), Lane::Batch, None, 0);
         let d = b.next_deadline().unwrap();
         assert!(d <= Duration::from_millis(100));
     }

@@ -15,12 +15,22 @@ pub struct Metrics {
     pub batched_solves: AtomicU64,
     pub batches: AtomicU64,
     pub errors: AtomicU64,
+    /// requests refused by admission control (`max_pending`)
+    pub rejections: AtomicU64,
+    /// requests dropped before dispatch because their ticket was cancelled
+    pub cancellations: AtomicU64,
+    /// requests dropped before dispatch because their deadline had expired
+    pub deadline_misses: AtomicU64,
     /// `auto` registrations answered from the fingerprint plan cache
     pub tuner_cache_hits: AtomicU64,
     /// `auto` registrations that ran the cost model + race
     pub tuner_cache_misses: AtomicU64,
     total_us: AtomicU64,
     hist: [AtomicU64; BUCKETS],
+    /// gauge: queued right-hand sides in the interactive lane
+    lane_interactive: AtomicU64,
+    /// gauge: queued right-hand sides in the batch lane
+    lane_batch: AtomicU64,
     /// strategy name -> times the tuner picked it
     strategy_wins: Mutex<BTreeMap<String, u64>>,
 }
@@ -38,10 +48,15 @@ impl Metrics {
             batched_solves: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            rejections: AtomicU64::new(0),
+            cancellations: AtomicU64::new(0),
+            deadline_misses: AtomicU64::new(0),
             tuner_cache_hits: AtomicU64::new(0),
             tuner_cache_misses: AtomicU64::new(0),
             total_us: AtomicU64::new(0),
             hist: std::array::from_fn(|_| AtomicU64::new(0)),
+            lane_interactive: AtomicU64::new(0),
+            lane_batch: AtomicU64::new(0),
             strategy_wins: Mutex::new(BTreeMap::new()),
         }
     }
@@ -77,6 +92,27 @@ impl Metrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Admission control turned a request away (`Overloaded`).
+    pub fn record_rejection(&self) {
+        self.rejections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A queued request was dropped because its ticket was cancelled.
+    pub fn record_cancellation(&self) {
+        self.cancellations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A queued request was dropped because its deadline had expired.
+    pub fn record_deadline_miss(&self) {
+        self.deadline_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Gauge update: queued right-hand sides per lane after a flush.
+    pub fn set_lane_depths(&self, interactive: u64, batch: u64) {
+        self.lane_interactive.store(interactive, Ordering::Relaxed);
+        self.lane_batch.store(batch, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let count = self.solves.load(Ordering::Relaxed);
         let hist: Vec<u64> = self.hist.iter().map(|h| h.load(Ordering::Relaxed)).collect();
@@ -85,6 +121,11 @@ impl Metrics {
             batched_solves: self.batched_solves.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            rejections: self.rejections.load(Ordering::Relaxed),
+            cancellations: self.cancellations.load(Ordering::Relaxed),
+            deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
+            lane_interactive_depth: self.lane_interactive.load(Ordering::Relaxed),
+            lane_batch_depth: self.lane_batch.load(Ordering::Relaxed),
             tuner_cache_hits: self.tuner_cache_hits.load(Ordering::Relaxed),
             tuner_cache_misses: self.tuner_cache_misses.load(Ordering::Relaxed),
             strategy_wins: self
@@ -128,6 +169,16 @@ pub struct Snapshot {
     pub batched_solves: u64,
     pub batches: u64,
     pub errors: u64,
+    /// requests refused by `max_pending` admission control
+    pub rejections: u64,
+    /// requests dropped before dispatch via ticket cancellation
+    pub cancellations: u64,
+    /// requests dropped before dispatch with an expired deadline
+    pub deadline_misses: u64,
+    /// gauge: interactive-lane queue depth at the last flush
+    pub lane_interactive_depth: u64,
+    /// gauge: batch-lane queue depth at the last flush
+    pub lane_batch_depth: u64,
     pub tuner_cache_hits: u64,
     pub tuner_cache_misses: u64,
     /// (strategy, times chosen) pairs, sorted by strategy name
@@ -142,8 +193,12 @@ impl std::fmt::Display for Snapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "solves={} (batched {}), batches={}, errors={}, latency mean={:.0}us p50<{}us p95<{}us p99<{}us",
+            "solves={} (batched {}), batches={}, errors={}, rejected={}, \
+             cancelled={}, deadline_missed={}, depth i/b={}/{}, \
+             latency mean={:.0}us p50<{}us p95<{}us p99<{}us",
             self.solves, self.batched_solves, self.batches, self.errors,
+            self.rejections, self.cancellations, self.deadline_misses,
+            self.lane_interactive_depth, self.lane_batch_depth,
             self.mean_us, self.p50_us, self.p95_us, self.p99_us
         )?;
         if self.tuner_cache_hits + self.tuner_cache_misses > 0 {
@@ -219,6 +274,30 @@ mod tests {
         let text = s.to_string();
         assert!(text.contains("tuner cache hit/miss=1/2"), "{text}");
         assert!(text.contains("avgcost=2"), "{text}");
+    }
+
+    #[test]
+    fn admission_and_lane_accounting() {
+        let m = Metrics::new();
+        m.record_rejection();
+        m.record_cancellation();
+        m.record_cancellation();
+        m.record_deadline_miss();
+        m.set_lane_depths(3, 7);
+        let s = m.snapshot();
+        assert_eq!(s.rejections, 1);
+        assert_eq!(s.cancellations, 2);
+        assert_eq!(s.deadline_misses, 1);
+        assert_eq!(s.lane_interactive_depth, 3);
+        assert_eq!(s.lane_batch_depth, 7);
+        let text = s.to_string();
+        assert!(text.contains("rejected=1"), "{text}");
+        assert!(text.contains("cancelled=2"), "{text}");
+        assert!(text.contains("deadline_missed=1"), "{text}");
+        assert!(text.contains("depth i/b=3/7"), "{text}");
+        // Gauges overwrite rather than accumulate.
+        m.set_lane_depths(0, 0);
+        assert_eq!(m.snapshot().lane_interactive_depth, 0);
     }
 
     #[test]

@@ -7,9 +7,16 @@
 //! padded artifacts), caches prepared matrices, batches right-hand sides,
 //! dispatches to the native or XLA backend, and reports metrics.
 //!
+//! The client surface is fully typed (v2): strategies cross as
+//! [`crate::transform::StrategySpec`], failures as
+//! [`crate::error::ServiceError`], async solves as [`SolveTicket`]s with
+//! deadline/priority [`SolveOptions`], multi-RHS blocks via
+//! [`SolveHandle::solve_many`], and admission is bounded by the
+//! `max_pending` config key.
+//!
 //! * [`pipeline`] — prepare/caches matrices (the expensive offline step)
-//! * [`batcher`]  — RHS batching queue with a deadline
-//! * [`metrics`]  — counters + latency histogram
+//! * [`batcher`]  — per-lane RHS batching queue with deadlines
+//! * [`metrics`]  — counters + latency histogram + lane gauges
 //! * [`service`]  — the request loop (std mpsc; tokio is not vendored)
 
 pub mod batcher;
@@ -17,5 +24,9 @@ pub mod metrics;
 pub mod pipeline;
 pub mod service;
 
+pub use batcher::Lane;
+pub use metrics::{Metrics, Snapshot};
 pub use pipeline::{Backend, Pipeline, Prepared};
-pub use service::{Service, SolveHandle};
+pub use service::{
+    BlockTicket, RegisterInfo, Service, SolveHandle, SolveOptions, SolveTicket, Ticket,
+};

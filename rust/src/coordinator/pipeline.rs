@@ -18,7 +18,7 @@ use crate::runtime::{PaddedSystem, Registry, XlaSolver};
 use crate::solver::executor::TransformedSolver;
 use crate::solver::pool::Pool;
 use crate::sparse::Csr;
-use crate::transform::{Strategy, TransformResult};
+use crate::transform::{Strategy, StrategySpec, TransformResult};
 use crate::tuner::{PlanSource, Tuner, TunerOptions};
 
 /// Which backend serves a prepared matrix.
@@ -82,6 +82,9 @@ impl Pipeline {
             } else {
                 Some(PathBuf::from(&cfg.tuner_cache))
             },
+            // Race on the serving pool: a cache miss must not pay (or be
+            // skewed by) spawning a throwaway thread pool.
+            pool: Some(Arc::clone(&pool)),
             ..Default::default()
         });
         // The registry is optional: without artifacts the coordinator
@@ -112,13 +115,15 @@ impl Pipeline {
         self.registry.as_ref().map(|r| XlaSolver::new(Arc::clone(r)))
     }
 
-    /// Preprocess and cache a matrix under `id` using the configured
-    /// strategy (or `strategy_override`).
+    /// Preprocess and cache a matrix under `id`. The strategy arrives as
+    /// an already-parsed [`StrategySpec`]: `Default` defers to the
+    /// configured service-wide strategy, so no strategy-name string ever
+    /// reaches this layer.
     pub fn prepare(
         &mut self,
         id: &str,
         m: Csr,
-        strategy_override: Option<&str>,
+        spec: &StrategySpec,
     ) -> Result<Arc<Prepared>, Error> {
         if let Some(p) = self.cache.get(id) {
             return Ok(Arc::clone(p));
@@ -128,11 +133,9 @@ impl Pipeline {
         // Arc the matrix up front: the tuner's race lanes and the solver
         // share it by reference count instead of copying.
         let m = Arc::new(m);
-        let strat_name = strategy_override.unwrap_or(&self.cfg.strategy);
-        // Parse first so Strategy::parse stays the single source of truth
-        // for strategy-name syntax; only then route Auto to the shared
-        // tuner (Strategy::Auto::apply would build a throwaway one).
-        let strategy = Strategy::parse(strat_name).map_err(Error::Invalid)?;
+        let (strat_name, strategy) = spec.resolve(&self.cfg.strategy);
+        // Route Auto to the shared tuner (Strategy::Auto::apply would
+        // build a throwaway one with a cold plan cache).
         let (strategy_name, t, tuned) = if matches!(strategy, Strategy::Auto) {
             let plan = self.tuner.choose_arc(&m)?;
             let info = TunedInfo {
@@ -142,7 +145,7 @@ impl Pipeline {
             };
             (plan.strategy_name, plan.transform, Some(info))
         } else {
-            (strat_name.to_string(), strategy.apply(&m), None)
+            (strat_name, strategy.apply(&m), None)
         };
         t.validate(&m).map_err(Error::Invalid)?;
 
@@ -205,16 +208,24 @@ mod tests {
         }
     }
 
+    fn spec(s: &str) -> StrategySpec {
+        StrategySpec::parse(s).unwrap()
+    }
+
     #[test]
     fn prepare_caches_and_solves() {
         let mut pl = Pipeline::new(cfg());
         let m = generate::lung2_like(&generate::GenOptions::with_scale(0.03));
         let n = m.nrows;
-        let p = pl.prepare("lung2", m, None).unwrap();
+        let p = pl.prepare("lung2", m, &StrategySpec::Default).unwrap();
         assert_eq!(p.backend, Backend::Native);
         assert!(p.t.stats.levels_after < p.t.stats.levels_before);
         // Cache hit returns the same Arc.
-        let p2 = pl.prepare("lung2", generate::tridiagonal(5, &Default::default()), None);
+        let p2 = pl.prepare(
+            "lung2",
+            generate::tridiagonal(5, &Default::default()),
+            &StrategySpec::Default,
+        );
         assert!(Arc::ptr_eq(&p, &p2.unwrap()));
         // And it solves.
         let b = vec![1.0; n];
@@ -225,15 +236,18 @@ mod tests {
     #[test]
     fn auto_strategy_consults_tuner_and_plan_cache() {
         let mut pl = Pipeline::new(cfg());
+        // The tuner races on the pipeline's own worker pool instead of
+        // spawning a throwaway one per cache miss.
+        assert!(pl.tuner.opts.pool.is_some());
         let m = generate::lung2_like(&generate::GenOptions::with_scale(0.02));
         let n = m.nrows;
-        let p1 = pl.prepare("a", m.clone(), Some("auto")).unwrap();
+        let p1 = pl.prepare("a", m.clone(), &spec("auto")).unwrap();
         let t1 = p1.tuned.as_ref().expect("auto decision recorded");
         assert!(!t1.cache_hit);
         assert_eq!(t1.strategy, p1.strategy_name);
         assert_eq!(t1.fingerprint.len(), 16);
         // Same structure under a new id: the fingerprint cache answers.
-        let p2 = pl.prepare("b", m.clone(), Some("auto")).unwrap();
+        let p2 = pl.prepare("b", m.clone(), &spec("auto")).unwrap();
         let t2 = p2.tuned.as_ref().unwrap();
         assert!(t2.cache_hit);
         assert_eq!(t2.strategy, t1.strategy);
@@ -243,7 +257,7 @@ mod tests {
         let x = p2.native.solve(&b);
         assert!(p2.m.residual_inf(&x, &b) < 1e-9);
         // Fixed-name registrations carry no tuner decision.
-        let p3 = pl.prepare("c", m, Some("none")).unwrap();
+        let p3 = pl.prepare("c", m, &spec("none")).unwrap();
         assert!(p3.tuned.is_none());
         assert_eq!(p3.strategy_name, "none");
     }
@@ -252,7 +266,7 @@ mod tests {
     fn strategy_override() {
         let mut pl = Pipeline::new(cfg());
         let m = generate::tridiagonal(50, &Default::default());
-        let p = pl.prepare("tri", m, Some("manual:5")).unwrap();
+        let p = pl.prepare("tri", m, &spec("manual:5")).unwrap();
         assert_eq!(p.t.num_levels(), 10);
     }
 
@@ -260,14 +274,18 @@ mod tests {
     fn invalid_matrix_rejected() {
         let mut pl = Pipeline::new(cfg());
         let bad = Csr::new(2, 2, vec![0, 1, 3], vec![0, 0, 1], vec![0.0, 1.0, 1.0]).unwrap();
-        assert!(pl.prepare("bad", bad, None).is_err());
+        assert!(pl.prepare("bad", bad, &StrategySpec::Default).is_err());
     }
 
     #[test]
     fn evict_and_ids() {
         let mut pl = Pipeline::new(cfg());
-        pl.prepare("a", generate::tridiagonal(10, &Default::default()), None)
-            .unwrap();
+        pl.prepare(
+            "a",
+            generate::tridiagonal(10, &Default::default()),
+            &StrategySpec::Default,
+        )
+        .unwrap();
         assert_eq!(pl.cached_ids(), vec!["a"]);
         assert!(pl.evict("a"));
         assert!(!pl.evict("a"));

@@ -1,34 +1,176 @@
 //! The request loop: an mpsc-driven service thread owning the pipeline,
 //! the batcher and the backends. Clients hold a cheap cloneable
 //! [`SolveHandle`].
+//!
+//! This is the typed v2 client surface: strategies cross the boundary as
+//! [`StrategySpec`] (parsed once at the edge), failures as
+//! [`ServiceError`] (never `String`), async solves as [`SolveTicket`]s
+//! with `wait`/`wait_timeout`/`try_get`/`cancel`, scheduling intent as
+//! [`SolveOptions`] (deadline + [`Lane`] priority), multi-RHS blocks via
+//! [`SolveHandle::solve_many`], and admission control via the
+//! `max_pending` config key (`Overloaded` rejections instead of an
+//! unbounded queue).
 
 use std::collections::BTreeMap;
-use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::config::Config;
-use crate::coordinator::batcher::Batcher;
+use crate::coordinator::batcher::{Batcher, Lane, Pending};
 use crate::coordinator::metrics::{Metrics, Snapshot};
 use crate::coordinator::pipeline::{Backend, Pipeline, Prepared};
-use crate::error::Error;
+use crate::error::ServiceError;
 use crate::runtime::XlaSolver;
 use crate::sparse::Csr;
+use crate::transform::StrategySpec;
 
-type SolveReply = Sender<Result<Vec<f64>, String>>;
+/// Per-request scheduling options, builder style:
+///
+/// ```
+/// use std::time::Duration;
+/// use sptrsv_gt::coordinator::{Lane, SolveOptions};
+///
+/// let opts = SolveOptions::new()
+///     .deadline(Duration::from_millis(20))
+///     .priority(Lane::Interactive);
+/// # let _ = opts;
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct SolveOptions {
+    /// drop the request (replying `DeadlineExceeded`) if it has not been
+    /// dispatched within this budget of its submission
+    pub deadline: Option<Duration>,
+    /// scheduling lane; [`Lane::Batch`] unless set
+    pub lane: Lane,
+}
+
+impl SolveOptions {
+    pub fn new() -> SolveOptions {
+        SolveOptions::default()
+    }
+
+    /// Latency budget measured from submission.
+    pub fn deadline(mut self, budget: Duration) -> SolveOptions {
+        self.deadline = Some(budget);
+        self
+    }
+
+    /// Scheduling lane (interactive dispatches before batch).
+    pub fn priority(mut self, lane: Lane) -> SolveOptions {
+        self.lane = lane;
+        self
+    }
+
+    /// Shorthand for `SolveOptions::new().priority(Lane::Interactive)`.
+    pub fn interactive() -> SolveOptions {
+        SolveOptions::new().priority(Lane::Interactive)
+    }
+}
+
+/// Handle to one in-flight request. Dropping a ticket cancels the request
+/// (a queued solve whose ticket is gone is dropped before dispatch and
+/// never counted as a served solve).
+pub struct Ticket<R> {
+    rx: Receiver<Result<R, ServiceError>>,
+    cancel: Arc<AtomicBool>,
+    submitted: Instant,
+}
+
+/// Ticket for a single right-hand side ([`SolveHandle::solve_async`]).
+pub type SolveTicket = Ticket<Vec<f64>>;
+/// Ticket for a multi-RHS block ([`SolveHandle::solve_many`]).
+pub type BlockTicket = Ticket<Vec<Vec<f64>>>;
+
+impl<R> Ticket<R> {
+    /// Block until the result (or a typed failure) arrives.
+    pub fn wait(self) -> Result<R, ServiceError> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(ServiceError::Shutdown),
+        }
+    }
+
+    /// Block up to `timeout`; `None` means still pending.
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<Result<R, ServiceError>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => Some(r),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => Some(Err(ServiceError::Shutdown)),
+        }
+    }
+
+    /// Non-blocking poll; `None` means still pending.
+    pub fn try_get(&self) -> Option<Result<R, ServiceError>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => Some(Err(ServiceError::Shutdown)),
+        }
+    }
+
+    /// Cancel the request. If it is still queued it is dropped before
+    /// dispatch, replied `Cancelled`, and counted in the cancellation
+    /// metrics; a request already dispatched completes normally.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    /// When the request was submitted (latency accounting).
+    pub fn submitted(&self) -> Instant {
+        self.submitted
+    }
+
+    /// Time since submission.
+    pub fn elapsed(&self) -> Duration {
+        self.submitted.elapsed()
+    }
+}
+
+impl<R> Drop for Ticket<R> {
+    fn drop(&mut self) {
+        // An abandoned ticket is a cancellation: the service must not burn
+        // a solve on a result nobody can receive.
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+}
+
+/// Reply channel of one queued request: a single solution vector or a
+/// multi-RHS block. Both carry [`ServiceError`], never `String`.
+enum Reply {
+    One(Sender<Result<Vec<f64>, ServiceError>>),
+    Many(Sender<Result<Vec<Vec<f64>>, ServiceError>>),
+}
+
+impl Reply {
+    fn send_err(self, e: ServiceError) {
+        match self {
+            Reply::One(tx) => {
+                let _ = tx.send(Err(e));
+            }
+            Reply::Many(tx) => {
+                let _ = tx.send(Err(e));
+            }
+        }
+    }
+}
 
 enum Request {
     Register {
         id: String,
         matrix: Box<Csr>,
-        strategy: Option<String>,
-        reply: Sender<Result<RegisterInfo, String>>,
+        strategy: StrategySpec,
+        reply: Sender<Result<RegisterInfo, ServiceError>>,
     },
     Solve {
         id: String,
-        b: Vec<f64>,
-        reply: SolveReply,
+        rhs: Vec<Vec<f64>>,
+        reply: Reply,
         submitted: Instant,
+        deadline: Option<Instant>,
+        lane: Lane,
+        cancelled: Arc<AtomicBool>,
     },
     Snapshot(Sender<Snapshot>),
     Shutdown,
@@ -56,66 +198,99 @@ pub struct SolveHandle {
 }
 
 impl SolveHandle {
+    /// Preprocess and register a matrix under `id`. The strategy arrives
+    /// pre-parsed: pass [`StrategySpec::Default`] to use the service's
+    /// configured strategy, or `StrategySpec::parse("auto")?` etc.
     pub fn register(
         &self,
         id: &str,
         matrix: Csr,
-        strategy: Option<&str>,
-    ) -> Result<RegisterInfo, Error> {
+        strategy: StrategySpec,
+    ) -> Result<RegisterInfo, ServiceError> {
         let (tx, rx) = mpsc::channel();
         self.tx
             .send(Request::Register {
                 id: id.to_string(),
                 matrix: Box::new(matrix),
-                strategy: strategy.map(str::to_string),
+                strategy,
                 reply: tx,
             })
-            .map_err(|_| Error::Runtime("service stopped".into()))?;
-        rx.recv()
-            .map_err(|_| Error::Runtime("service stopped".into()))?
-            .map_err(Error::Runtime)
+            .map_err(|_| ServiceError::Shutdown)?;
+        rx.recv().map_err(|_| ServiceError::Shutdown)?
     }
 
-    /// Blocking solve (the caller's thread waits for the batch).
-    pub fn solve(&self, id: &str, b: Vec<f64>) -> Result<Vec<f64>, Error> {
-        let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Solve {
-                id: id.to_string(),
-                b,
-                reply: tx,
-                submitted: Instant::now(),
-            })
-            .map_err(|_| Error::Runtime("service stopped".into()))?;
-        rx.recv()
-            .map_err(|_| Error::Runtime("service stopped".into()))?
-            .map_err(Error::Runtime)
+    /// Blocking solve with default options (batch lane, no deadline).
+    pub fn solve(&self, id: &str, b: Vec<f64>) -> Result<Vec<f64>, ServiceError> {
+        self.solve_async(id, b, SolveOptions::default())?.wait()
     }
 
-    /// Fire-and-forget async solve; returns the receiving end.
+    /// Blocking solve with explicit [`SolveOptions`].
+    pub fn solve_with(
+        &self,
+        id: &str,
+        b: Vec<f64>,
+        opts: SolveOptions,
+    ) -> Result<Vec<f64>, ServiceError> {
+        self.solve_async(id, b, opts)?.wait()
+    }
+
+    /// Asynchronous solve: returns a [`SolveTicket`] immediately.
     pub fn solve_async(
         &self,
         id: &str,
         b: Vec<f64>,
-    ) -> Result<Receiver<Result<Vec<f64>, String>>, Error> {
+        opts: SolveOptions,
+    ) -> Result<SolveTicket, ServiceError> {
         let (tx, rx) = mpsc::channel();
+        let (cancel, submitted) = self.submit(id, vec![b], Reply::One(tx), &opts)?;
+        Ok(Ticket { rx, cancel, submitted })
+    }
+
+    /// Submit a block of right-hand sides as **one unit**: the block lands
+    /// in the batcher unsplit, so a block sized to the configured
+    /// `batch_size` hits the staged batched-XLA path deliberately rather
+    /// than by coincidence of arrival timing. Solutions come back in
+    /// submission order.
+    pub fn solve_many(
+        &self,
+        id: &str,
+        bs: Vec<Vec<f64>>,
+        opts: SolveOptions,
+    ) -> Result<BlockTicket, ServiceError> {
+        let (tx, rx) = mpsc::channel();
+        let (cancel, submitted) = self.submit(id, bs, Reply::Many(tx), &opts)?;
+        Ok(Ticket { rx, cancel, submitted })
+    }
+
+    fn submit(
+        &self,
+        id: &str,
+        rhs: Vec<Vec<f64>>,
+        reply: Reply,
+        opts: &SolveOptions,
+    ) -> Result<(Arc<AtomicBool>, Instant), ServiceError> {
+        let submitted = Instant::now();
+        let cancelled = Arc::new(AtomicBool::new(false));
         self.tx
             .send(Request::Solve {
                 id: id.to_string(),
-                b,
-                reply: tx,
-                submitted: Instant::now(),
+                rhs,
+                reply,
+                submitted,
+                deadline: opts.deadline.and_then(|d| submitted.checked_add(d)),
+                lane: opts.lane,
+                cancelled: Arc::clone(&cancelled),
             })
-            .map_err(|_| Error::Runtime("service stopped".into()))?;
-        Ok(rx)
+            .map_err(|_| ServiceError::Shutdown)?;
+        Ok((cancelled, submitted))
     }
 
-    pub fn metrics(&self) -> Result<Snapshot, Error> {
+    pub fn metrics(&self) -> Result<Snapshot, ServiceError> {
         let (tx, rx) = mpsc::channel();
         self.tx
             .send(Request::Snapshot(tx))
-            .map_err(|_| Error::Runtime("service stopped".into()))?;
-        rx.recv().map_err(|_| Error::Runtime("service stopped".into()))
+            .map_err(|_| ServiceError::Shutdown)?;
+        rx.recv().map_err(|_| ServiceError::Shutdown)
     }
 }
 
@@ -159,11 +334,13 @@ impl Drop for Service {
 }
 
 struct Waiting {
-    reply: SolveReply,
+    reply: Reply,
     submitted: Instant,
+    cancelled: Arc<AtomicBool>,
 }
 
 fn service_loop(cfg: Config, rx: Receiver<Request>) {
+    let max_pending = cfg.max_pending;
     let mut pipeline = Pipeline::new(cfg.clone());
     let xla: Option<XlaSolver> = pipeline.xla_solver();
     let metrics = Arc::new(Metrics::new());
@@ -178,8 +355,8 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
         let req = match batcher.next_deadline() {
             Some(d) => match rx.recv_timeout(d) {
                 Ok(r) => Some(r),
-                Err(mpsc::RecvTimeoutError::Timeout) => None,
-                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => return,
             },
             None => match rx.recv() {
                 Ok(r) => Some(r),
@@ -203,7 +380,7 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                 // decisions in the metrics.
                 let fresh = !prepared.contains_key(&id);
                 let res = pipeline
-                    .prepare(&id, *matrix, strategy.as_deref())
+                    .prepare(&id, *matrix, &strategy)
                     .map(|p| {
                         if fresh {
                             if let Some(tuned) = &p.tuned {
@@ -228,20 +405,65 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                             prepare_ms: p.prepare_time.as_secs_f64() * 1e3,
                         }
                     })
-                    .map_err(|e| e.to_string());
+                    .map_err(|e| ServiceError::Backend(e.to_string()));
                 let _ = reply.send(res);
             }
             Some(Request::Solve {
                 id,
-                b,
+                rhs,
                 reply,
                 submitted,
+                deadline,
+                lane,
+                cancelled,
             }) => {
-                if !prepared.contains_key(&id) {
-                    metrics.record_error();
-                    let _ = reply.send(Err(format!("matrix '{id}' not registered")));
-                } else {
-                    batcher.push(&id, b, Waiting { reply, submitted });
+                let nrows = prepared.get(&id).map(|p| p.m.nrows);
+                let pending = batcher.pending();
+                match nrows {
+                    None => {
+                        metrics.record_error();
+                        reply.send_err(ServiceError::NotRegistered(id));
+                    }
+                    Some(_) if rhs.is_empty() => {
+                        // An empty block is vacuously solved.
+                        if let Reply::Many(tx) = reply {
+                            let _ = tx.send(Ok(Vec::new()));
+                        }
+                    }
+                    // Validate here, not in the backend: a wrong-length
+                    // right-hand side must come back as a typed error,
+                    // never panic the service thread mid-dispatch.
+                    Some(n) if rhs.iter().any(|b| b.len() != n) => {
+                        metrics.record_error();
+                        let got = rhs
+                            .iter()
+                            .map(Vec::len)
+                            .find(|&len| len != n)
+                            .unwrap_or(0);
+                        reply.send_err(ServiceError::InvalidRequest(format!(
+                            "rhs length {got} does not match the {n} rows of '{id}'"
+                        )));
+                    }
+                    Some(_) if max_pending > 0 && pending + rhs.len() > max_pending => {
+                        metrics.record_rejection();
+                        reply.send_err(ServiceError::Overloaded {
+                            pending,
+                            max_pending,
+                        });
+                    }
+                    Some(_) => {
+                        batcher.push(
+                            &id,
+                            rhs,
+                            lane,
+                            deadline,
+                            Waiting {
+                                reply,
+                                submitted,
+                                cancelled,
+                            },
+                        );
+                    }
                 }
             }
             Some(Request::Snapshot(tx)) => {
@@ -250,9 +472,16 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
             None => {} // timeout: fall through to flush
         }
         flush(&mut batcher, &prepared, &xla, &metrics, false);
+        metrics.set_lane_depths(
+            batcher.lane_depth(Lane::Interactive) as u64,
+            batcher.lane_depth(Lane::Batch) as u64,
+        );
     }
 }
 
+/// Drain every due queue. Unlike v1, which served at most one batch per
+/// matrix per wakeup, this keeps taking until nothing is due — a deep
+/// backlog drains in consecutive batches instead of one per deadline tick.
 fn flush(
     batcher: &mut Batcher<Waiting>,
     prepared: &BTreeMap<String, Arc<Prepared>>,
@@ -260,40 +489,71 @@ fn flush(
     metrics: &Metrics,
     force: bool,
 ) {
-    for id in batcher.ready(force) {
-        let Some(p) = prepared.get(&id) else { continue };
-        loop {
+    loop {
+        let ready = batcher.ready(force);
+        if ready.is_empty() {
+            return;
+        }
+        for id in ready {
             let batch = batcher.take(&id);
             if batch.is_empty() {
-                break;
+                continue;
             }
-            serve_batch(p, batch, xla, metrics);
-            if !force {
-                break;
+            match prepared.get(&id) {
+                Some(p) => dispatch(p, batch, xla, metrics),
+                // Unreachable (push checks registration), but never leave
+                // entries behind: that would spin this loop forever.
+                None => {
+                    for q in batch {
+                        q.token.reply.send_err(ServiceError::NotRegistered(id.clone()));
+                    }
+                }
             }
         }
     }
 }
 
-fn serve_batch(
+/// Serve one taken batch: weed out cancelled/expired requests, try the
+/// staged batched-XLA path on an exact size match, otherwise solve per
+/// right-hand side.
+fn dispatch(
     p: &Prepared,
-    batch: Vec<crate::coordinator::batcher::Pending<Waiting>>,
+    batch: Vec<Pending<Waiting>>,
     xla: &Option<XlaSolver>,
     metrics: &Metrics,
 ) {
-    // Try the staged batched XLA path when the batch size matches
-    // exactly; otherwise solve each RHS on the chosen backend.
-    if batch.len() > 1 {
+    let now = Instant::now();
+    let mut live: Vec<Pending<Waiting>> = Vec::with_capacity(batch.len());
+    for q in batch {
+        if q.token.cancelled.load(Ordering::Relaxed) {
+            metrics.record_cancellation();
+            q.token.reply.send_err(ServiceError::Cancelled);
+        } else if q.deadline.is_some_and(|d| now >= d) {
+            metrics.record_deadline_miss();
+            q.token.reply.send_err(ServiceError::DeadlineExceeded);
+        } else {
+            live.push(q);
+        }
+    }
+    if live.is_empty() {
+        return;
+    }
+
+    let total: usize = live.iter().map(|q| q.rhs.len()).sum();
+    if total > 1 {
         if let (Backend::Xla, Some(solver), Some(padded), Some(staged)) =
             (p.backend, xla, &p.padded, &p.staged)
         {
-            if staged.batch_size() == Some(batch.len()) {
-                let bs: Vec<Vec<f64>> = batch.iter().map(|q| q.b.clone()).collect();
+            if staged.batch_size() == Some(total) {
+                let bs: Vec<Vec<f64>> =
+                    live.iter().flat_map(|q| q.rhs.iter().cloned()).collect();
                 if let Ok(xs) = solver.solve_batched_staged(staged, padded, &bs) {
                     metrics.record_batch();
-                    for (q, x) in batch.into_iter().zip(xs) {
-                        metrics.record_solve(q.token.submitted.elapsed(), true);
-                        let _ = q.token.reply.send(Ok(x));
+                    let mut xs = xs.into_iter();
+                    for q in live {
+                        let k = q.rhs.len();
+                        let outs: Vec<Vec<f64>> = xs.by_ref().take(k).collect();
+                        deliver(q, outs, true, metrics);
                     }
                     return;
                 }
@@ -301,19 +561,40 @@ fn serve_batch(
         }
     }
     metrics.record_batch();
-    for q in batch {
-        let res = match (p.backend, xla, &p.padded, &p.staged) {
-            (Backend::Xla, Some(solver), Some(padded), Some(staged)) => solver
-                .solve_staged(staged, padded, &q.b)
-                .map_err(|e| e.to_string())
-                .or_else(|_| Ok::<_, String>(p.native.solve(&q.b))),
-            _ => Ok(p.native.solve(&q.b)),
-        };
-        if res.is_err() {
-            metrics.record_error();
+    for q in live {
+        let outs: Vec<Vec<f64>> = q.rhs.iter().map(|b| solve_rhs(p, xla, b)).collect();
+        deliver(q, outs, false, metrics);
+    }
+}
+
+/// One right-hand side on the prepared backend (XLA staged with native
+/// fallback, or native outright).
+fn solve_rhs(p: &Prepared, xla: &Option<XlaSolver>, b: &[f64]) -> Vec<f64> {
+    match (p.backend, xla, &p.padded, &p.staged) {
+        (Backend::Xla, Some(solver), Some(padded), Some(staged)) => solver
+            .solve_staged(staged, padded, b)
+            .unwrap_or_else(|_| p.native.solve(b)),
+        _ => p.native.solve(b),
+    }
+}
+
+/// Send a block's solutions back and account for them. A receiver that
+/// disappeared between the cancellation sweep and delivery is not a served
+/// request: nothing is recorded for it.
+fn deliver(q: Pending<Waiting>, outs: Vec<Vec<f64>>, batched: bool, metrics: &Metrics) {
+    let k = outs.len();
+    let latency = q.token.submitted.elapsed();
+    let delivered = match q.token.reply {
+        Reply::One(tx) => {
+            let x = outs.into_iter().next().unwrap_or_default();
+            tx.send(Ok(x)).is_ok()
         }
-        metrics.record_solve(q.token.submitted.elapsed(), false);
-        let _ = q.token.reply.send(res);
+        Reply::Many(tx) => tx.send(Ok(outs)).is_ok(),
+    };
+    if delivered {
+        for _ in 0..k {
+            metrics.record_solve(latency, batched);
+        }
     }
 }
 
@@ -321,6 +602,10 @@ fn serve_batch(
 mod tests {
     use super::*;
     use crate::sparse::generate;
+
+    fn spec(s: &str) -> StrategySpec {
+        StrategySpec::parse(s).unwrap()
+    }
 
     fn test_cfg() -> Config {
         Config {
@@ -337,7 +622,7 @@ mod tests {
         let svc = Service::start(test_cfg());
         let h = svc.handle();
         let m = generate::random_lower(200, 3, 0.8, &Default::default());
-        let info = h.register("m", m.clone(), Some("avgcost")).unwrap();
+        let info = h.register("m", m.clone(), spec("avgcost")).unwrap();
         assert!(info.levels_after <= info.levels_before);
         let b = vec![1.0; 200];
         let x = h.solve("m", b.clone()).unwrap();
@@ -353,16 +638,16 @@ mod tests {
         let h = svc.handle();
         let m = generate::lung2_like(&generate::GenOptions::with_scale(0.02));
         let n = m.nrows;
-        let i1 = h.register("m1", m.clone(), Some("auto")).unwrap();
+        let i1 = h.register("m1", m.clone(), spec("auto")).unwrap();
         assert_eq!(i1.tuner_cache_hit, Some(false));
         assert!(!i1.strategy.is_empty());
         // Same structure, new id: answered from the fingerprint cache.
-        let i2 = h.register("m2", m.clone(), Some("auto")).unwrap();
+        let i2 = h.register("m2", m.clone(), spec("auto")).unwrap();
         assert_eq!(i2.tuner_cache_hit, Some(true));
         assert_eq!(i2.strategy, i1.strategy);
         // Same-id re-registration returns the memoized preparation: no
         // tuner consult, no metrics movement, no stale cache-hit claim.
-        let i3 = h.register("m1", m.clone(), Some("auto")).unwrap();
+        let i3 = h.register("m1", m.clone(), spec("auto")).unwrap();
         assert_eq!(i3.tuner_cache_hit, None);
         assert_eq!(i3.strategy, i1.strategy);
         let ones = vec![1.0; n];
@@ -377,10 +662,13 @@ mod tests {
     }
 
     #[test]
-    fn unregistered_matrix_errors() {
+    fn unregistered_matrix_is_a_typed_error() {
         let svc = Service::start(test_cfg());
         let h = svc.handle();
-        assert!(h.solve("ghost", vec![1.0]).is_err());
+        assert_eq!(
+            h.solve("ghost", vec![1.0]),
+            Err(ServiceError::NotRegistered("ghost".into()))
+        );
         assert_eq!(h.metrics().unwrap().errors, 1);
     }
 
@@ -390,15 +678,15 @@ mod tests {
         let h = svc.handle();
         let m = generate::lung2_like(&generate::GenOptions::with_scale(0.02));
         let n = m.nrows;
-        h.register("lung", m.clone(), None).unwrap();
-        let rxs: Vec<_> = (0..8)
+        h.register("lung", m.clone(), StrategySpec::Default).unwrap();
+        let tickets: Vec<SolveTicket> = (0..8)
             .map(|i| {
                 let b = vec![(i + 1) as f64; n];
-                h.solve_async("lung", b).unwrap()
+                h.solve_async("lung", b, SolveOptions::default()).unwrap()
             })
             .collect();
-        for (i, rx) in rxs.into_iter().enumerate() {
-            let x = rx.recv().unwrap().unwrap();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let x = t.wait().unwrap();
             let b = vec![(i + 1) as f64; n];
             assert!(m.residual_inf(&x, &b) < 1e-9, "request {i}");
         }
@@ -413,12 +701,196 @@ mod tests {
         let h = svc.handle();
         let m1 = generate::tridiagonal(50, &Default::default());
         let m2 = generate::banded(80, 4, 0.5, &Default::default());
-        h.register("t", m1.clone(), Some("manual:5")).unwrap();
-        h.register("b", m2.clone(), Some("none")).unwrap();
+        h.register("t", m1.clone(), spec("manual:5")).unwrap();
+        h.register("b", m2.clone(), spec("none")).unwrap();
         let x1 = h.solve("t", vec![2.0; 50]).unwrap();
         let x2 = h.solve("b", vec![3.0; 80]).unwrap();
         assert!(m1.residual_inf(&x1, &vec![2.0; 50]) < 1e-10);
         assert!(m2.residual_inf(&x2, &vec![3.0; 80]) < 1e-10);
         svc.shutdown();
+    }
+
+    #[test]
+    fn wrong_length_rhs_is_a_typed_error_not_a_panic() {
+        let svc = Service::start(test_cfg());
+        let h = svc.handle();
+        let m = generate::tridiagonal(50, &Default::default());
+        h.register("t", m.clone(), spec("none")).unwrap();
+        // Single solve with the wrong length: typed rejection.
+        assert!(matches!(
+            h.solve("t", vec![1.0; 7]),
+            Err(ServiceError::InvalidRequest(_))
+        ));
+        // One bad vector poisons the whole block, before it is queued.
+        let bs = vec![vec![1.0; 50], vec![1.0; 49]];
+        assert!(matches!(
+            h.solve_many("t", bs, SolveOptions::default()).unwrap().wait(),
+            Err(ServiceError::InvalidRequest(_))
+        ));
+        // The service thread survived and still serves good requests.
+        let x = h.solve("t", vec![1.0; 50]).unwrap();
+        assert!(m.residual_inf(&x, &vec![1.0; 50]) < 1e-10);
+        let snap = h.metrics().unwrap();
+        assert_eq!(snap.errors, 2);
+        assert_eq!(snap.solves, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_is_rejected_not_solved() {
+        let svc = Service::start(test_cfg());
+        let h = svc.handle();
+        let m = generate::tridiagonal(50, &Default::default());
+        h.register("t", m, spec("none")).unwrap();
+        // A zero budget has expired by dispatch time, always.
+        let t = h
+            .solve_async(
+                "t",
+                vec![1.0; 50],
+                SolveOptions::new().deadline(Duration::ZERO),
+            )
+            .unwrap();
+        assert_eq!(t.wait(), Err(ServiceError::DeadlineExceeded));
+        let snap = h.metrics().unwrap();
+        assert_eq!(snap.deadline_misses, 1);
+        assert_eq!(snap.solves, 0, "expired request must not be solved");
+        // A generous deadline still solves normally.
+        let x = h
+            .solve_with(
+                "t",
+                vec![1.0; 50],
+                SolveOptions::interactive().deadline(Duration::from_secs(10)),
+            )
+            .unwrap();
+        assert_eq!(x.len(), 50);
+        assert_eq!(h.metrics().unwrap().solves, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn cancelled_ticket_is_observable_in_metrics() {
+        let svc = Service::start(Config {
+            // Long batching deadline: the cancel always lands before the
+            // flush that would have dispatched the request.
+            batch_deadline_us: 50_000,
+            ..test_cfg()
+        });
+        let h = svc.handle();
+        let m = generate::tridiagonal(40, &Default::default());
+        h.register("t", m, spec("none")).unwrap();
+        let t = h
+            .solve_async("t", vec![1.0; 40], SolveOptions::default())
+            .unwrap();
+        t.cancel();
+        assert_eq!(t.wait(), Err(ServiceError::Cancelled));
+        let snap = h.metrics().unwrap();
+        assert_eq!(snap.cancellations, 1);
+        assert_eq!(snap.solves, 0, "cancelled request must not be solved");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn dropped_ticket_does_not_count_as_solve() {
+        let svc = Service::start(Config {
+            // Wide enough that the drop always lands before the flush.
+            batch_deadline_us: 20_000,
+            ..test_cfg()
+        });
+        let h = svc.handle();
+        let m = generate::tridiagonal(40, &Default::default());
+        h.register("t", m, spec("none")).unwrap();
+        drop(
+            h.solve_async("t", vec![1.0; 40], SolveOptions::default())
+                .unwrap(),
+        );
+        // Wait out the batching deadline (generously) so the service has
+        // flushed the abandoned request.
+        std::thread::sleep(Duration::from_millis(100));
+        let snap = h.metrics().unwrap();
+        assert_eq!(snap.solves, 0);
+        assert_eq!(snap.cancellations, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn solve_many_lands_as_one_batch() {
+        let svc = Service::start(test_cfg()); // batch_size 4
+        let h = svc.handle();
+        let m = generate::tridiagonal(60, &Default::default());
+        h.register("t", m.clone(), spec("manual:5")).unwrap();
+        let bs: Vec<Vec<f64>> = (1..=4).map(|i| vec![i as f64; 60]).collect();
+        let t = h.solve_many("t", bs.clone(), SolveOptions::default()).unwrap();
+        let xs = t.wait().unwrap();
+        assert_eq!(xs.len(), 4);
+        for (b, x) in bs.iter().zip(&xs) {
+            assert!(m.residual_inf(x, b) < 1e-10);
+        }
+        let snap = h.metrics().unwrap();
+        assert_eq!(snap.batches, 1, "a batch-sized block is exactly one batch");
+        assert_eq!(snap.solves, 4);
+        // An empty block is vacuously solved without touching the queue.
+        let empty = h
+            .solve_many("t", Vec::new(), SolveOptions::default())
+            .unwrap();
+        assert_eq!(empty.wait().unwrap(), Vec::<Vec<f64>>::new());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn admission_control_rejects_over_max_pending() {
+        let svc = Service::start(Config {
+            max_pending: 2,
+            batch_size: 100,                 // nothing fills
+            batch_deadline_us: 60_000_000,   // nothing expires mid-test
+            ..test_cfg()
+        });
+        let h = svc.handle();
+        let m = generate::tridiagonal(30, &Default::default());
+        h.register("t", m, spec("none")).unwrap();
+        let _t1 = h
+            .solve_async("t", vec![1.0; 30], SolveOptions::default())
+            .unwrap();
+        let _t2 = h
+            .solve_async("t", vec![2.0; 30], SolveOptions::interactive())
+            .unwrap();
+        let t3 = h
+            .solve_async("t", vec![3.0; 30], SolveOptions::default())
+            .unwrap();
+        assert_eq!(
+            t3.wait(),
+            Err(ServiceError::Overloaded {
+                pending: 2,
+                max_pending: 2
+            })
+        );
+        let snap = h.metrics().unwrap();
+        assert_eq!(snap.rejections, 1);
+        // The lane-depth gauges see the two admitted requests.
+        assert_eq!(snap.lane_interactive_depth, 1);
+        assert_eq!(snap.lane_batch_depth, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_force_flushes_pending_work() {
+        let svc = Service::start(Config {
+            batch_size: 100,
+            batch_deadline_us: 60_000_000,
+            ..test_cfg()
+        });
+        let h = svc.handle();
+        let m = generate::tridiagonal(30, &Default::default());
+        h.register("t", m.clone(), spec("none")).unwrap();
+        let tickets: Vec<SolveTicket> = (0..3)
+            .map(|_| {
+                h.solve_async("t", vec![1.0; 30], SolveOptions::default())
+                    .unwrap()
+            })
+            .collect();
+        svc.shutdown(); // force flush serves the queue before exiting
+        for t in tickets {
+            let x = t.wait().unwrap();
+            assert!(m.residual_inf(&x, &vec![1.0; 30]) < 1e-10);
+        }
     }
 }

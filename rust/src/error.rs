@@ -1,4 +1,5 @@
-//! Crate-wide error type.
+//! Crate-wide error type, plus the typed error surface of the serving
+//! coordinator.
 
 #[derive(Debug, thiserror::Error)]
 pub enum Error {
@@ -14,4 +15,42 @@ pub enum Error {
     /// of the offending content so operators can fix the file directly.
     #[error("matrix market parse error at line {line}: {msg}")]
     MatrixMarket { line: usize, msg: String },
+    /// Typed failure from the serving coordinator (see [`ServiceError`]).
+    #[error("service error: {0}")]
+    Service(#[from] ServiceError),
+}
+
+/// Everything that can go wrong between a `SolveHandle` and the service
+/// thread. This replaces the stringly `Result<_, String>` that used to
+/// cross the request channel: callers can now match on the failure class
+/// (shed load on `Overloaded`, retry elsewhere on `Shutdown`, account for
+/// `DeadlineExceeded`) instead of substring-probing a message.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum ServiceError {
+    /// a solve was requested for a matrix id that was never registered
+    #[error("matrix '{0}' is not registered")]
+    NotRegistered(String),
+    /// the request is malformed (e.g. a right-hand side whose length does
+    /// not match the registered matrix); rejected before it can reach a
+    /// backend
+    #[error("invalid request: {0}")]
+    InvalidRequest(String),
+    /// admission control rejected the request: the batcher already holds
+    /// `pending` right-hand sides against a `max_pending` cap
+    #[error("service overloaded: {pending} pending right-hand sides (max_pending = {max_pending})")]
+    Overloaded { pending: usize, max_pending: usize },
+    /// the request's deadline expired before it was dispatched; the solve
+    /// was dropped instead of being served late
+    #[error("deadline exceeded before dispatch")]
+    DeadlineExceeded,
+    /// the ticket was cancelled (explicitly, or by dropping it) before
+    /// dispatch
+    #[error("request cancelled")]
+    Cancelled,
+    /// the backend failed to prepare or solve
+    #[error("backend failure: {0}")]
+    Backend(String),
+    /// the service thread has stopped
+    #[error("service stopped")]
+    Shutdown,
 }

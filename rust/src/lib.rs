@@ -14,7 +14,7 @@
 //! * **L2/L1 (python/compile, build-time only)** — JAX padded-level solve
 //!   over a Pallas level kernel, AOT-lowered to `artifacts/*.hlo.txt`.
 //!
-//! Quick start:
+//! Quick start — library use (transform once, solve many):
 //! ```no_run
 //! use sptrsv_gt::sparse::generate;
 //! use sptrsv_gt::transform::Strategy;
@@ -29,6 +29,78 @@
 //! # let _ = x;
 //! ```
 //!
+//! ## Serving
+//!
+//! The coordinator ([`coordinator`]) wraps the same pipeline in a typed
+//! service API (v2): strategies cross the boundary as
+//! [`transform::StrategySpec`] (parsed once at the edge), failures as
+//! [`error::ServiceError`] (match on `Overloaded`, `DeadlineExceeded`,
+//! `Cancelled`, … — never strings), async solves as
+//! [`coordinator::SolveTicket`]s with `wait`/`wait_timeout`/`try_get`/
+//! `cancel`, and per-request scheduling via
+//! [`coordinator::SolveOptions`] (deadline + interactive/batch
+//! [`coordinator::Lane`]). Multi-RHS blocks go through
+//! [`coordinator::SolveHandle::solve_many`] and land in the batcher as
+//! one unit, so a block sized to `batch_size` hits the staged batched-XLA
+//! path deliberately.
+//!
+//! ```no_run
+//! use std::time::Duration;
+//! use sptrsv_gt::config::Config;
+//! use sptrsv_gt::coordinator::{Lane, Service, SolveOptions};
+//! use sptrsv_gt::sparse::generate;
+//! use sptrsv_gt::transform::StrategySpec;
+//!
+//! let svc = Service::start(Config::default());
+//! let h = svc.handle();
+//! let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
+//! let n = m.nrows;
+//! h.register("lung2", m, StrategySpec::parse("auto").unwrap()).unwrap();
+//!
+//! // Blocking solve on the batch lane.
+//! let x = h.solve("lung2", vec![1.0; n]).unwrap();
+//!
+//! // Async solve with a latency budget on the interactive lane; an
+//! // expired budget comes back as ServiceError::DeadlineExceeded
+//! // instead of a late solution.
+//! let ticket = h
+//!     .solve_async(
+//!         "lung2",
+//!         vec![1.0; n],
+//!         SolveOptions::new()
+//!             .priority(Lane::Interactive)
+//!             .deadline(Duration::from_millis(50)),
+//!     )
+//!     .unwrap();
+//! match ticket.wait() {
+//!     Ok(x) => println!("{} entries", x.len()),
+//!     Err(e) => eprintln!("dropped: {e}"),
+//! }
+//!
+//! // A block of right-hand sides, batched as one unit.
+//! let block: Vec<Vec<f64>> = (0..8).map(|_| vec![1.0; n]).collect();
+//! let xs = h
+//!     .solve_many("lung2", block, SolveOptions::default())
+//!     .unwrap()
+//!     .wait()
+//!     .unwrap();
+//! # let _ = (x, xs);
+//! svc.shutdown();
+//! ```
+//!
+//! Admission is bounded: when the queue already holds `max_pending`
+//! right-hand sides, new requests are rejected with
+//! `ServiceError::Overloaded` instead of growing an unbounded backlog,
+//! and the metrics snapshot reports rejections, cancellations, deadline
+//! misses and per-lane queue depth. See `examples/serve_v2.rs` for the
+//! full tour.
+//!
+//! Config keys (`Config` / flat `key = value` file / CLI `--key value`):
+//! `workers`, `strategy` (any `Strategy::parse` name, validated at config
+//! time), `artifacts_dir`, `batch_size` (right-hand sides per batch),
+//! `batch_deadline_us`, `max_pending` (admission cap, 0 = unbounded),
+//! `use_xla`, `seed`, `tuner_cache`, `tuner_top_k`, `tuner_race_solves`.
+//!
 //! ## Tuning
 //!
 //! Strategy choice is structure-dependent (lung2's thin chain loves
@@ -38,11 +110,13 @@
 //! per-strategy cost from a structural feature vector, races the top
 //! candidates on real warm-up solves, and caches the winner by
 //! fingerprint (optionally spilled to a JSON file) so re-registering a
-//! known structure skips analysis entirely.
+//! known structure skips analysis entirely. Spilled entries carry a
+//! schema version ([`tuner::PLAN_SCHEMA_VERSION`]); plans raced by an
+//! older solver are dropped on load rather than trusted stale.
 //!
 //! The quickest route is the `auto` strategy name, accepted everywhere a
-//! strategy is (CLI `--strategy auto`, `Config::strategy`,
-//! `Service::register`):
+//! strategy is (CLI `--strategy auto`, `Config::strategy`, any
+//! [`transform::StrategySpec`] handed to `register`):
 //!
 //! ```no_run
 //! use sptrsv_gt::sparse::generate;
@@ -62,9 +136,11 @@
 //! ```
 //!
 //! The coordinator consults a persistent tuner on `register` when the
-//! strategy is `auto` and reports cache hit/miss and per-strategy win
-//! counts in its metrics; `sptrsv tune --kind lung2` prints the whole
-//! decision (features, predictions, race) for one matrix.
+//! strategy resolves to `auto` — racing candidates on the pipeline's own
+//! worker pool, not a throwaway one — and reports cache hit/miss and
+//! per-strategy win counts in its metrics; `sptrsv tune --kind lung2`
+//! prints the whole decision (features, predictions, race) for one
+//! matrix.
 
 pub mod codegen;
 pub mod config;
@@ -79,4 +155,4 @@ pub mod transform;
 pub mod tuner;
 pub mod util;
 
-pub use error::Error;
+pub use error::{Error, ServiceError};

@@ -17,13 +17,13 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use sptrsv_gt::config::Config;
-use sptrsv_gt::coordinator::Service;
+use sptrsv_gt::coordinator::{Service, SolveOptions};
 use sptrsv_gt::graph::{analyze::LevelStats, Levels};
 use sptrsv_gt::report::{figures, table1};
 use sptrsv_gt::runtime::{PaddedSystem, Registry, XlaSolver};
 use sptrsv_gt::solver::executor::TransformedSolver;
 use sptrsv_gt::sparse::{generate, matrix_market, Csr};
-use sptrsv_gt::transform::Strategy;
+use sptrsv_gt::transform::{Strategy, StrategySpec};
 use sptrsv_gt::util::cli::Args;
 use sptrsv_gt::util::rng::Rng;
 
@@ -74,7 +74,9 @@ USAGE: sptrsv <subcommand> [flags]
   table1    [--scale F] [--no-codegen]
   figures   [--scale F] [--out-dir DIR]
   xla       [--artifacts-dir DIR]   # registry check + XLA-vs-native solve
-  serve     [--requests N] [--batch-size B] [--use-xla]  # demo workload
+  serve     [--requests N] [--batch-size B] [--max-pending P] [--use-xla]
+            # demo workload: mixed interactive/batch lanes + one multi-RHS
+            # block through the coordinator, then the metrics snapshot
 ";
 
 /// Shared matrix loading: --matrix FILE or --kind generator.
@@ -461,14 +463,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.merge_args(args)?;
     let requests = args.usize_flag("requests", 64)?;
     println!(
-        "starting coordinator: workers={} strategy={} use_xla={} batch={}/{}us",
-        cfg.workers, cfg.strategy, cfg.use_xla, cfg.batch_size, cfg.batch_deadline_us
+        "starting coordinator: workers={} strategy={} use_xla={} batch={}/{}us \
+         max_pending={}",
+        cfg.workers, cfg.strategy, cfg.use_xla, cfg.batch_size, cfg.batch_deadline_us,
+        cfg.max_pending
     );
+    let batch_size = cfg.batch_size;
     let svc = Service::start(cfg);
     let h = svc.handle();
     let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
     let n = m.nrows;
-    let info = h.register("lung2", m.clone(), None)?;
+    let info = h.register("lung2", m.clone(), StrategySpec::Default)?;
     println!(
         "registered lung2-like: strategy={}, levels {} -> {}, {} rows rewritten, \
          backend={}, prepare={:.1}ms",
@@ -481,21 +486,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let start = std::time::Instant::now();
     let mut rng = Rng::new(11);
-    let rxs: Vec<_> = (0..requests)
-        .map(|_| {
+    // Mixed-lane async workload: every fourth request rides the
+    // interactive lane, the rest fill batches.
+    let tickets: Vec<_> = (0..requests)
+        .map(|i| {
             let b: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
-            (b.clone(), h.solve_async("lung2", b).unwrap())
+            let opts = if i % 4 == 0 {
+                SolveOptions::interactive()
+            } else {
+                SolveOptions::default()
+            };
+            (b.clone(), h.solve_async("lung2", b, opts).unwrap())
         })
         .collect();
     let mut worst = 0.0f64;
-    for (b, rx) in rxs {
-        let x = rx.recv()?.map_err(anyhow::Error::msg)?;
+    for (b, t) in tickets {
+        let x = t.wait()?;
         worst = worst.max(m.residual_inf(&x, &b));
     }
+    // One multi-RHS block sized to the batcher: lands as a single batch.
+    let bs: Vec<Vec<f64>> = (0..batch_size)
+        .map(|_| (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect())
+        .collect();
+    let xs = h.solve_many("lung2", bs.clone(), SolveOptions::default())?.wait()?;
+    for (b, x) in bs.iter().zip(&xs) {
+        worst = worst.max(m.residual_inf(x, b));
+    }
     let dt = start.elapsed();
+    let total = requests + batch_size;
     println!(
-        "{requests} solves in {dt:?} ({:.1} solves/s), worst residual {worst:.3e}",
-        requests as f64 / dt.as_secs_f64()
+        "{total} solves in {dt:?} ({:.1} solves/s), worst residual {worst:.3e}",
+        total as f64 / dt.as_secs_f64()
     );
     println!("metrics: {}", h.metrics()?);
     svc.shutdown();

@@ -32,6 +32,12 @@ pub struct Pool {
     nworkers: usize,
 }
 
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool").field("workers", &self.nworkers).finish()
+    }
+}
+
 impl Pool {
     /// A pool with `nworkers` threads (>= 1). Workers are created once and
     /// reused across `run()` calls — no per-solve spawn cost.

@@ -26,4 +26,4 @@ pub mod strategy;
 
 pub use equation::Equation;
 pub use plan::{TransformResult, TransformStats};
-pub use strategy::Strategy;
+pub use strategy::{Strategy, StrategySpec};

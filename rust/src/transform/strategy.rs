@@ -113,6 +113,73 @@ impl Strategy {
     }
 }
 
+/// A strategy request as it crosses an API boundary: either "use the
+/// service default" or a concrete strategy that was parsed **once, at the
+/// edge** via [`Strategy::parse`]. This is the typed replacement for the
+/// `Option<&str>` that used to travel through `SolveHandle::register`,
+/// `Pipeline::prepare` and `Config` — a bad strategy name now fails at the
+/// call site that wrote it, not deep inside the service thread.
+#[derive(Debug, Clone, Default)]
+pub enum StrategySpec {
+    /// defer to the configured service-wide default strategy
+    #[default]
+    Default,
+    /// a concrete strategy plus the source text it was parsed from (kept
+    /// for display and metrics labels)
+    Named(String, Strategy),
+}
+
+impl StrategySpec {
+    /// Parse a spec: the empty string and `default` defer to the service
+    /// default; anything else must be a valid [`Strategy::parse`] name.
+    pub fn parse(s: &str) -> Result<StrategySpec, String> {
+        let t = s.trim();
+        if t.is_empty() || t.eq_ignore_ascii_case("default") {
+            return Ok(StrategySpec::Default);
+        }
+        let strategy = Strategy::parse(t)?;
+        Ok(StrategySpec::Named(t.to_string(), strategy))
+    }
+
+    /// The source text (`"default"` for the deferring variant).
+    pub fn as_str(&self) -> &str {
+        match self {
+            StrategySpec::Default => "default",
+            StrategySpec::Named(name, _) => name,
+        }
+    }
+
+    /// Resolve to a concrete `(name, strategy)` pair, deferring to
+    /// `fallback` (the service's configured default) and, should that
+    /// itself defer, to the paper's automatic strategy.
+    pub fn resolve(&self, fallback: &StrategySpec) -> (String, Strategy) {
+        match self {
+            StrategySpec::Named(n, s) => (n.clone(), s.clone()),
+            StrategySpec::Default => match fallback {
+                StrategySpec::Named(n, s) => (n.clone(), s.clone()),
+                StrategySpec::Default => (
+                    "avgcost".to_string(),
+                    Strategy::AvgLevelCost(Default::default()),
+                ),
+            },
+        }
+    }
+}
+
+impl std::fmt::Display for StrategySpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for StrategySpec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<StrategySpec, String> {
+        StrategySpec::parse(s)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -177,6 +244,45 @@ mod tests {
             assert!(rec.from_level - rec.to_level <= 5);
         }
         assert!(t.stats.max_bcoeff_magnitude <= 1e12);
+    }
+
+    #[test]
+    fn spec_parses_at_the_edge() {
+        assert!(matches!(
+            StrategySpec::parse("default").unwrap(),
+            StrategySpec::Default
+        ));
+        assert!(matches!(
+            StrategySpec::parse("").unwrap(),
+            StrategySpec::Default
+        ));
+        match StrategySpec::parse(" manual:4 ").unwrap() {
+            StrategySpec::Named(name, Strategy::Manual(o)) => {
+                assert_eq!(name, "manual:4");
+                assert_eq!(o.distance, 4);
+            }
+            other => panic!("{other:?}"),
+        }
+        // Bad names fail synchronously, before any service is involved.
+        assert!(StrategySpec::parse("bogus").is_err());
+        assert_eq!(StrategySpec::parse("auto").unwrap().as_str(), "auto");
+        assert_eq!(StrategySpec::Default.to_string(), "default");
+    }
+
+    #[test]
+    fn spec_resolution_chain() {
+        let cfg_default = StrategySpec::parse("manual:3").unwrap();
+        let (n, s) = StrategySpec::Default.resolve(&cfg_default);
+        assert_eq!(n, "manual:3");
+        assert!(matches!(s, Strategy::Manual(_)));
+        // A named spec wins over the fallback.
+        let (n, s) = StrategySpec::parse("none").unwrap().resolve(&cfg_default);
+        assert_eq!(n, "none");
+        assert!(matches!(s, Strategy::None));
+        // Default-on-default lands on the paper's automatic strategy.
+        let (n, s) = StrategySpec::Default.resolve(&StrategySpec::Default);
+        assert_eq!(n, "avgcost");
+        assert!(matches!(s, Strategy::AvgLevelCost(_)));
     }
 
     #[test]

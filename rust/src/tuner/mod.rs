@@ -28,13 +28,14 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::error::Error;
+use crate::solver::pool::Pool;
 use crate::sparse::Csr;
 use crate::transform::{Strategy, TransformResult};
 
 pub use cost_model::{CostModel, PlanEstimate};
 pub use features::MatrixFeatures;
 pub use fingerprint::Fingerprint;
-pub use plan_cache::{CachedPlan, PlanCache};
+pub use plan_cache::{CachedPlan, PlanCache, PLAN_SCHEMA_VERSION};
 pub use race::{RaceOptions, RaceOutcome};
 
 /// The default strategy portfolio: the paper's three columns plus the
@@ -58,6 +59,9 @@ pub struct TunerOptions {
     pub cache_path: Option<PathBuf>,
     /// RHS seed for racing
     pub seed: u64,
+    /// worker pool shared with the caller (the serving pipeline threads
+    /// its own pool through here); None spawns a throwaway pool per race
+    pub pool: Option<Arc<Pool>>,
 }
 
 impl Default for TunerOptions {
@@ -76,6 +80,7 @@ impl Default for TunerOptions {
             cache_capacity: 64,
             cache_path: None,
             seed: 0x7E57,
+            pool: None,
         }
     }
 }
@@ -237,6 +242,7 @@ impl Tuner {
             solves: self.opts.race_solves,
             workers: self.opts.workers,
             seed: self.opts.seed,
+            pool: self.opts.pool.clone(),
         };
         let mut outcome = race::race(m, &shortlist, &race_opts).map_err(Error::Runtime)?;
 

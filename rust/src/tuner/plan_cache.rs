@@ -16,6 +16,13 @@ use crate::error::Error;
 use crate::tuner::fingerprint::Fingerprint;
 use crate::util::json::Json;
 
+/// Schema/solver version stamped on every spilled plan entry. Entries
+/// written under a different version are dropped on load: a raced
+/// decision is only as good as the executor that timed it, so bump this
+/// whenever the solver, executor or strategy semantics change in a way
+/// that invalidates previously cached winners.
+pub const PLAN_SCHEMA_VERSION: u64 = 2;
+
 /// A tuning decision worth remembering.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CachedPlan {
@@ -156,11 +163,12 @@ impl PlanCache {
                 ("solve_us", Json::Num(plan.solve_us)),
                 ("nrows", Json::Num(plan.nrows as f64)),
                 ("stamp", Json::Num(*stamp as f64)),
+                ("schema", Json::Num(PLAN_SCHEMA_VERSION as f64)),
                 ("timings", Json::Arr(timings)),
             ]));
         }
         let root = Json::obj(vec![
-            ("version", Json::Num(1.0)),
+            ("version", Json::Num(PLAN_SCHEMA_VERSION as f64)),
             ("entries", Json::Arr(items)),
         ]);
         if let Some(dir) = path.parent() {
@@ -194,6 +202,13 @@ fn load_entries(path: &Path) -> Result<BTreeMap<u64, (u64, CachedPlan)>, Error> 
         .ok_or_else(|| Error::Invalid("plan cache: missing 'entries' array".into()))?;
     let mut entries = BTreeMap::new();
     for item in items {
+        // Drop entries stamped by a different solver/schema version: a
+        // decision raced on an old executor may no longer be the winner.
+        // (Entries from before versioning carry no stamp and read as 0.)
+        let schema = item.get("schema").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        if schema != PLAN_SCHEMA_VERSION {
+            continue;
+        }
         // Skip malformed rows rather than discarding the whole cache.
         let Some(fp) = item
             .get("fingerprint")
@@ -317,6 +332,39 @@ mod tests {
         assert_eq!(fresh.len(), 2);
         assert_eq!(fresh.get(fp(1)).unwrap().strategy, "avgcost");
         assert_eq!(fresh.get(fp(2)).unwrap().strategy, "manual:10");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn stale_schema_entries_dropped_on_load() {
+        let path = std::env::temp_dir().join(format!(
+            "sptrsv_plan_cache_schema_{}.json",
+            std::process::id()
+        ));
+        // One entry from the current solver version, one from a stale one
+        // (and one pre-versioning entry with no stamp at all).
+        let text = format!(
+            r#"{{"version": {v}, "entries": [
+  {{"fingerprint": "00000000000000aa", "strategy": "avgcost", "solve_us": 1.5,
+    "nrows": 10, "stamp": 1, "schema": {v}, "timings": []}},
+  {{"fingerprint": "00000000000000bb", "strategy": "manual:10", "solve_us": 2.5,
+    "nrows": 10, "stamp": 2, "schema": 1, "timings": []}},
+  {{"fingerprint": "00000000000000cc", "strategy": "none", "solve_us": 3.5,
+    "nrows": 10, "stamp": 3, "timings": []}}
+]}}"#,
+            v = PLAN_SCHEMA_VERSION
+        );
+        std::fs::write(&path, text).unwrap();
+        let mut c = PlanCache::with_disk(8, &path);
+        assert_eq!(c.len(), 1, "only the current-version entry survives");
+        assert_eq!(c.get(fp(0xAA)).unwrap().strategy, "avgcost");
+        assert!(c.get(fp(0xBB)).is_none());
+        assert!(c.get(fp(0xCC)).is_none());
+        // Re-saving persists only current-version entries: the stale ones
+        // are gone from the file too.
+        c.put(fp(0xDD), plan("guarded:20", 4.0));
+        let reread = PlanCache::with_disk(8, &path);
+        assert_eq!(reread.len(), 2);
         std::fs::remove_file(&path).ok();
     }
 

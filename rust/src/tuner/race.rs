@@ -20,9 +20,13 @@ use crate::util::rng::Rng;
 pub struct RaceOptions {
     /// timed solves per candidate (after one warm-up solve)
     pub solves: usize,
+    /// worker threads when `pool` is None (a throwaway pool is spawned)
     pub workers: usize,
     /// seed for the right-hand side used by every lane
     pub seed: u64,
+    /// run raced solves on this shared pool (the serving pipeline's) so a
+    /// plan-cache miss pays no thread spawn/teardown cost
+    pub pool: Option<Arc<Pool>>,
 }
 
 impl Default for RaceOptions {
@@ -31,6 +35,7 @@ impl Default for RaceOptions {
             solves: 3,
             workers: 4,
             seed: 0x7E57,
+            pool: None,
         }
     }
 }
@@ -66,8 +71,13 @@ impl RaceOutcome {
 pub fn race(m: &Arc<Csr>, candidates: &[String], opts: &RaceOptions) -> Result<RaceOutcome, String> {
     let solves = opts.solves.max(1);
     // One pool shared by every lane: thread spawn cost must not skew the
-    // comparison toward whichever lane runs first.
-    let pool = Arc::new(Pool::new(opts.workers));
+    // comparison toward whichever lane runs first. Callers that already
+    // run a pool (the serving pipeline) lend it via `opts.pool` so the
+    // race measures at the exact parallel substrate serving will use.
+    let pool = match &opts.pool {
+        Some(p) => Arc::clone(p),
+        None => Arc::new(Pool::new(opts.workers)),
+    };
     let mut rng = Rng::new(opts.seed);
     let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
 
@@ -148,6 +158,23 @@ mod tests {
         }
         let w = out.winner_lane();
         assert!(w.strategy == "none" || w.strategy == "avgcost");
+    }
+
+    #[test]
+    fn race_runs_on_a_shared_pool() {
+        let m = Arc::new(generate::tridiagonal(80, &Default::default()));
+        let pool = Arc::new(Pool::new(2));
+        let opts = RaceOptions {
+            solves: 1,
+            pool: Some(Arc::clone(&pool)),
+            ..Default::default()
+        };
+        let out = race(&m, &names(&["none", "manual:5"]), &opts).unwrap();
+        assert_eq!(out.lanes.len(), 2);
+        // The lender keeps sole ownership once the race is done: no
+        // worker threads were spawned or leaked by the race itself.
+        drop(opts);
+        assert_eq!(Arc::strong_count(&pool), 1);
     }
 
     #[test]

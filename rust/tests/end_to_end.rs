@@ -2,9 +2,12 @@
 //! asserted for CI — generator -> coordinator -> (XLA | native) backend ->
 //! batched solves -> residual checks -> metrics.
 
+use std::time::Duration;
+
 use sptrsv_gt::config::Config;
-use sptrsv_gt::coordinator::Service;
+use sptrsv_gt::coordinator::{Lane, Service, SolveOptions};
 use sptrsv_gt::sparse::generate::{self, GenOptions};
+use sptrsv_gt::transform::StrategySpec;
 use sptrsv_gt::util::rng::Rng;
 
 #[test]
@@ -13,7 +16,7 @@ fn mixed_workload_end_to_end() {
     let use_xla = artifacts.join("manifest.json").exists();
     let svc = Service::start(Config {
         workers: 2,
-        strategy: "avgcost".into(),
+        strategy: StrategySpec::parse("avgcost").unwrap(),
         use_xla,
         artifacts_dir: artifacts.to_str().unwrap().to_string(),
         batch_size: 8,
@@ -25,9 +28,10 @@ fn mixed_workload_end_to_end() {
     let lung = generate::lung2_like(&GenOptions::with_scale(0.02));
     let torso = generate::torso2_like(&GenOptions::with_scale(0.01));
     let tri = generate::tridiagonal(400, &Default::default());
-    h.register("lung", lung.clone(), None).unwrap();
-    h.register("torso", torso.clone(), None).unwrap();
-    h.register("tri", tri.clone(), Some("manual:10")).unwrap();
+    h.register("lung", lung.clone(), StrategySpec::Default).unwrap();
+    h.register("torso", torso.clone(), StrategySpec::Default).unwrap();
+    h.register("tri", tri.clone(), StrategySpec::parse("manual:10").unwrap())
+        .unwrap();
 
     let mats: [(&str, &sptrsv_gt::sparse::Csr); 3] =
         [("lung", &lung), ("torso", &torso), ("tri", &tri)];
@@ -36,17 +40,41 @@ fn mixed_workload_end_to_end() {
     for i in 0..48 {
         let (id, m) = mats[i % 3];
         let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
-        inflight.push((id, b.clone(), h.solve_async(id, b).unwrap()));
+        // Mixed lanes and a generous deadline, exercising the full v2
+        // request path end to end.
+        let opts = if i % 5 == 0 {
+            SolveOptions::new()
+                .priority(Lane::Interactive)
+                .deadline(Duration::from_secs(30))
+        } else {
+            SolveOptions::default()
+        };
+        inflight.push((id, b.clone(), h.solve_async(id, b, opts).unwrap()));
     }
-    for (id, b, rx) in inflight {
-        let x = rx.recv().unwrap().unwrap();
+    for (id, b, ticket) in inflight {
+        let x = ticket.wait().unwrap();
         let m = mats.iter().find(|(n, _)| *n == id).unwrap().1;
         let r = m.residual_inf(&x, &b);
         assert!(r < 1e-8, "{id}: residual {r}");
     }
+
+    // A multi-RHS block through the same service, batched as one unit.
+    let bs: Vec<Vec<f64>> = (0..8)
+        .map(|_| (0..lung.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect())
+        .collect();
+    let xs = h
+        .solve_many("lung", bs.clone(), SolveOptions::default())
+        .unwrap()
+        .wait()
+        .unwrap();
+    for (b, x) in bs.iter().zip(&xs) {
+        assert!(lung.residual_inf(x, b) < 1e-8);
+    }
+
     let snap = h.metrics().unwrap();
-    assert_eq!(snap.solves, 48);
+    assert_eq!(snap.solves, 56);
     assert_eq!(snap.errors, 0);
+    assert_eq!(snap.deadline_misses, 0);
     assert!(snap.batches > 0);
     svc.shutdown();
 }

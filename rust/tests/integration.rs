@@ -3,7 +3,8 @@
 
 use sptrsv_gt::codegen::{self, CodegenOptions};
 use sptrsv_gt::config::Config;
-use sptrsv_gt::coordinator::Service;
+use sptrsv_gt::coordinator::{Service, SolveOptions};
+use sptrsv_gt::transform::StrategySpec;
 use sptrsv_gt::graph::{analyze::LevelStats, Levels};
 use sptrsv_gt::report::{figures, table1};
 use sptrsv_gt::solver::executor::TransformedSolver;
@@ -137,17 +138,19 @@ fn coordinator_end_to_end_native() {
     let h = svc.handle();
     let m = generate::torso2_like(&GenOptions::with_scale(0.01));
     let n = m.nrows;
-    let info = h.register("t2", m.clone(), Some("avgcost")).unwrap();
+    let info = h
+        .register("t2", m.clone(), StrategySpec::parse("avgcost").unwrap())
+        .unwrap();
     assert!(info.levels_after <= info.levels_before);
     let mut rng = Rng::new(3);
     let reqs: Vec<_> = (0..16)
         .map(|_| {
             let b: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
-            (b.clone(), h.solve_async("t2", b).unwrap())
+            (b.clone(), h.solve_async("t2", b, SolveOptions::default()).unwrap())
         })
         .collect();
-    for (b, rx) in reqs {
-        let x = rx.recv().unwrap().unwrap();
+    for (b, ticket) in reqs {
+        let x = ticket.wait().unwrap();
         assert!(m.residual_inf(&x, &b) < 1e-9);
     }
     let snap = h.metrics().unwrap();

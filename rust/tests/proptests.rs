@@ -162,10 +162,11 @@ fn prop_padded_layout_correct() {
     });
 }
 
-/// Batcher: FIFO order, no loss, no duplication under random operations.
+/// Batcher: no loss, no duplication under random operations across both
+/// lanes and multi-RHS blocks.
 #[test]
 fn prop_batcher_fifo_no_loss() {
-    use sptrsv_gt::coordinator::batcher::Batcher;
+    use sptrsv_gt::coordinator::batcher::{Batcher, Lane};
     use std::time::Duration;
     check("batcher-fifo", 60, |rng, _| {
         let mut b: Batcher<u64> = Batcher::new(1 + rng.below(6), Duration::from_secs(60));
@@ -175,7 +176,13 @@ fn prop_batcher_fifo_no_loss() {
         for _ in 0..rng.below(60) + 5 {
             if rng.chance(0.7) {
                 let id = ids[rng.below(3)];
-                b.push(id, vec![0.0], next_token);
+                let lane = if rng.chance(0.3) {
+                    Lane::Interactive
+                } else {
+                    Lane::Batch
+                };
+                let block = vec![vec![0.0]; 1 + rng.below(3)];
+                b.push(id, block, lane, None, next_token);
                 next_token += 1;
             } else {
                 let id = ids[rng.below(3)];

@@ -114,7 +114,9 @@ fn coordinator_uses_xla_backend() {
     });
     let h = svc.handle();
     let m = generate::lung2_like(&GenOptions::with_scale(0.02));
-    let info = h.register("lung", m.clone(), None).unwrap();
+    let info = h
+        .register("lung", m.clone(), sptrsv_gt::transform::StrategySpec::Default)
+        .unwrap();
     assert_eq!(info.backend, "xla");
     let b = vec![1.0; m.nrows];
     let x = h.solve("lung", b.clone()).unwrap();

@@ -7,7 +7,7 @@ use sptrsv_gt::config::Config;
 use sptrsv_gt::coordinator::Service;
 use sptrsv_gt::sparse::generate::{self, GenOptions};
 use sptrsv_gt::sparse::Csr;
-use sptrsv_gt::transform::Strategy;
+use sptrsv_gt::transform::{Strategy, StrategySpec};
 use sptrsv_gt::tuner::cost_model::{plan_cost, CostModel};
 use sptrsv_gt::tuner::{Fingerprint, MatrixFeatures, PlanSource, Tuner, TunerOptions};
 use sptrsv_gt::util::rng::Rng;
@@ -155,7 +155,8 @@ fn cost_model_ranking_agrees_with_measured_ordering() {
 fn auto_strategy_end_to_end_through_service() {
     let svc = Service::start(Config {
         workers: 2,
-        strategy: "auto".into(), // config default, no per-register override
+        // config default, no per-register override
+        strategy: StrategySpec::parse("auto").unwrap(),
         use_xla: false,
         batch_size: 4,
         batch_deadline_us: 200,
@@ -166,12 +167,14 @@ fn auto_strategy_end_to_end_through_service() {
     let tri = generate::tridiagonal(300, &Default::default());
     let n = lung.nrows;
 
-    let i1 = h.register("lung", lung.clone(), None).unwrap();
+    let i1 = h.register("lung", lung.clone(), StrategySpec::Default).unwrap();
     assert_eq!(i1.tuner_cache_hit, Some(false));
-    let i2 = h.register("lung-again", lung.clone(), None).unwrap();
+    let i2 = h
+        .register("lung-again", lung.clone(), StrategySpec::Default)
+        .unwrap();
     assert_eq!(i2.tuner_cache_hit, Some(true));
     assert_eq!(i2.strategy, i1.strategy);
-    let i3 = h.register("tri", tri.clone(), None).unwrap();
+    let i3 = h.register("tri", tri.clone(), StrategySpec::Default).unwrap();
     assert_eq!(i3.tuner_cache_hit, Some(false));
 
     let mut rng = Rng::new(17);
