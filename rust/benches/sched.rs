@@ -1,0 +1,148 @@
+//! Bench gate: scheduled elastic execution against the level-set
+//! executor on the generator families the scheduler targets — skewed
+//! thin-level (lung2-like), banded, and the pure serial chain
+//! (tridiagonal), plus torso2-like as a wide control.
+//!
+//!     cargo bench --bench sched
+//!     SPTRSV_SCHED_SMOKE=1 cargo bench --bench sched   # CI: few iters, no gate
+//!     SPTRSV_BENCH_SCALE=0.2 SPTRSV_BENCH_WORKERS=8 cargo bench --bench sched
+//!
+//! Full mode enforces the acceptance criterion: on the thin-level and
+//! serial-chain matrices, scheduled execution must be **no worse than
+//! level-set** (small multiplicative + absolute slack for timer noise).
+//! Smoke mode runs the identical pipeline — schedule construction,
+//! validation, elastic execution, correctness check — with a tiny budget
+//! and reports timings without failing on them, so CI exercises the path
+//! on every push without gating on shared-runner jitter.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sptrsv_gt::sched::{SchedOptions, ScheduledSolver};
+use sptrsv_gt::solver::executor::TransformedSolver;
+use sptrsv_gt::solver::pool::Pool;
+use sptrsv_gt::sparse::generate::{self, GenOptions};
+use sptrsv_gt::sparse::Csr;
+use sptrsv_gt::transform::Strategy;
+use sptrsv_gt::util::prop::assert_allclose;
+use sptrsv_gt::util::rng::Rng;
+use sptrsv_gt::util::timer::Table;
+
+/// Best-of-N microseconds of `solve_into` within a wall-clock budget.
+fn measure_us(mut solve: impl FnMut(), budget: Duration) -> f64 {
+    let mut best = f64::INFINITY;
+    let start = Instant::now();
+    let mut iters = 0u32;
+    while start.elapsed() < budget || iters < 3 {
+        let s0 = Instant::now();
+        solve();
+        best = best.min(s0.elapsed().as_secs_f64() * 1e6);
+        iters += 1;
+        if iters >= 10_000 {
+            break;
+        }
+    }
+    best
+}
+
+fn main() {
+    let smoke = std::env::var("SPTRSV_SCHED_SMOKE").is_ok_and(|v| v != "0");
+    let scale: f64 = std::env::var("SPTRSV_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if smoke { 0.03 } else { 0.1 });
+    let workers: usize = std::env::var("SPTRSV_BENCH_WORKERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let budget = if smoke {
+        Duration::from_millis(20)
+    } else {
+        Duration::from_millis(250)
+    };
+    let opts = GenOptions::with_scale(scale);
+    let n_tri = ((4000.0 * scale).round() as usize).max(200);
+
+    println!(
+        "== sched bench (scale {scale}, {workers} workers{}) ==\n",
+        if smoke { ", SMOKE" } else { "" }
+    );
+    // (name, matrix, gated): the gate covers the thin-level and
+    // serial-chain families the acceptance criterion names.
+    let cases: Vec<(&str, Csr, bool)> = vec![
+        ("lung2-like (thin)", generate::lung2_like(&opts), true),
+        ("tridiagonal (chain)", generate::tridiagonal(n_tri, &opts), true),
+        (
+            "banded",
+            generate::banded(n_tri, 6, 0.5, &opts),
+            false,
+        ),
+        ("torso2-like (wide)", generate::torso2_like(&opts), false),
+    ];
+
+    let mut failures = 0usize;
+    let mut table = Table::new(&[
+        "matrix", "rows", "levels", "blocks", "cut", "levelset (us)", "sched (us)", "ratio",
+    ]);
+    for (name, m, gated) in cases {
+        let t_ls = Strategy::None.apply(&m);
+        let t_sc = Strategy::parse("scheduled").unwrap().apply(&m);
+        let levels = t_ls.num_levels();
+        let mc = Arc::new(m);
+        let pool = Arc::new(Pool::new(workers));
+        let mut rng = Rng::new(0x5CED);
+        let b: Vec<f64> = (0..mc.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
+
+        let levelset =
+            TransformedSolver::new(Arc::clone(&mc), Arc::new(t_ls), Arc::clone(&pool));
+        let sched = ScheduledSolver::new(
+            Arc::clone(&mc),
+            Arc::new(t_sc),
+            Arc::clone(&pool),
+            &SchedOptions::default(),
+        );
+        sched
+            .schedule
+            .validate(&sched.m, &sched.t)
+            .expect("schedule invariants");
+        // Correctness first: both executors agree with the serial solver.
+        let x_ref = sptrsv_gt::solver::serial::solve(&mc, &b);
+        assert_allclose(&levelset.solve(&b), &x_ref, 1e-9, 1e-11).unwrap();
+        assert_allclose(&sched.solve(&b), &x_ref, 1e-9, 1e-11).unwrap();
+
+        let mut x = vec![0.0; mc.nrows];
+        let ls_us = measure_us(|| levelset.solve_into(&b, &mut x), budget);
+        let sc_us = measure_us(|| sched.solve_into(&b, &mut x), budget);
+        let st = sched.stats();
+        table.row(&[
+            name.to_string(),
+            mc.nrows.to_string(),
+            levels.to_string(),
+            st.num_blocks.to_string(),
+            st.cut_edges.to_string(),
+            format!("{ls_us:.1}"),
+            format!("{sc_us:.1}"),
+            format!("{:.2}x", sc_us / ls_us),
+        ]);
+
+        // Acceptance gate: no worse than level-set, within timer noise.
+        let ok = sc_us <= ls_us * 1.05 + 2.0;
+        if gated && !smoke && !ok {
+            eprintln!("FAIL {name}: scheduled {sc_us:.1}us vs level-set {ls_us:.1}us");
+            failures += 1;
+        }
+    }
+    print!("{}", table.render());
+    if failures > 0 {
+        eprintln!("\n{failures} gated matrix family(ies) regressed vs level-set");
+        std::process::exit(1);
+    }
+    println!(
+        "\nsched bench OK{}",
+        if smoke {
+            " (smoke: timings informational)"
+        } else {
+            ": scheduled no worse than level-set on gated families"
+        }
+    );
+}

@@ -24,18 +24,15 @@ use sptrsv_gt::util::timer::Table;
 
 const FIXED: [&str; 4] = ["none", "avgcost", "manual:10", "guarded:20"];
 
-/// Best-of-N per-solve time (µs) of a prepared plan, on a shared pool.
-fn measure_us(m: &Arc<Csr>, t: TransformResult, pool: &Arc<Pool>, b: &[f64]) -> f64 {
-    let solver = TransformedSolver::new(Arc::clone(m), Arc::new(t), Arc::clone(pool));
-    let mut x = vec![0.0; m.nrows];
-    solver.solve_into(b, &mut x); // warm-up
+/// Best-of-N wall-clock (µs) of `solve` within a fixed budget.
+fn best_of(mut solve: impl FnMut()) -> f64 {
     let mut best = f64::INFINITY;
     let budget = Duration::from_millis(250);
     let start = Instant::now();
     let mut iters = 0u32;
     while start.elapsed() < budget || iters < 5 {
         let s0 = Instant::now();
-        solver.solve_into(b, &mut x);
+        solve();
         best = best.min(s0.elapsed().as_secs_f64() * 1e6);
         iters += 1;
         if iters >= 10_000 {
@@ -43,6 +40,14 @@ fn measure_us(m: &Arc<Csr>, t: TransformResult, pool: &Arc<Pool>, b: &[f64]) -> 
         }
     }
     best
+}
+
+/// Best-of-N per-solve time (µs) of a prepared plan, on a shared pool.
+fn measure_us(m: &Arc<Csr>, t: TransformResult, pool: &Arc<Pool>, b: &[f64]) -> f64 {
+    let solver = TransformedSolver::new(Arc::clone(m), Arc::new(t), Arc::clone(pool));
+    let mut x = vec![0.0; m.nrows];
+    solver.solve_into(b, &mut x); // warm-up
+    best_of(|| solver.solve_into(b, &mut x))
 }
 
 fn main() {
@@ -91,7 +96,20 @@ fn main() {
         let plan = tuner.choose_arc(&mc).unwrap();
         let auto_label = format!("auto -> {}", plan.strategy_name);
         let auto_levels = plan.transform.num_levels();
-        let auto_us = measure_us(&mc, plan.transform, &pool, &b);
+        // Time the tuned plan on the backend its strategy actually uses
+        // (an execution-strategy winner would misprice on the level-set
+        // executor).
+        let auto_solver = sptrsv_gt::solver::ExecSolver::build(
+            Arc::clone(&mc),
+            Arc::new(plan.transform),
+            &plan.strategy,
+            Arc::clone(&pool),
+            Default::default(),
+        )
+        .unwrap();
+        let mut x = vec![0.0; mc.nrows];
+        auto_solver.solve_into(&b, &mut x); // warm-up
+        let auto_us = best_of(|| auto_solver.solve_into(&b, &mut x));
         rows.push((auto_label, auto_levels, auto_us));
 
         for (s, levels, us) in &rows {

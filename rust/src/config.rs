@@ -37,6 +37,14 @@ pub struct Config {
     pub tuner_top_k: usize,
     /// timed solves per raced candidate
     pub tuner_race_solves: usize,
+    /// seconds before a spilled plan-cache entry expires and is dropped
+    /// on load (0 = never expire by age)
+    pub tuner_cache_ttl: u64,
+    /// work-units target per coarsened block for `--strategy scheduled`
+    pub sched_block_target: usize,
+    /// elastic lookahead window in blocks for `--strategy scheduled`
+    /// (0 = strict in-order point-to-point waits)
+    pub sched_stale_window: usize,
     /// any further key=value pairs (kept for extensions/ablations)
     pub extra: BTreeMap<String, String>,
 }
@@ -57,6 +65,9 @@ impl Default for Config {
             tuner_cache: String::new(),
             tuner_top_k: 2,
             tuner_race_solves: 3,
+            tuner_cache_ttl: 0,
+            sched_block_target: crate::sched::DEFAULT_BLOCK_TARGET,
+            sched_stale_window: crate::sched::DEFAULT_STALE_WINDOW,
             extra: BTreeMap::new(),
         }
     }
@@ -122,6 +133,7 @@ impl Config {
                 "workers" | "strategy" | "artifacts-dir" | "batch-size"
                     | "batch-deadline-us" | "max-pending" | "use-xla" | "seed"
                     | "tuner-cache" | "tuner-top-k" | "tuner-race-solves"
+                    | "tuner-cache-ttl" | "sched-block-target" | "sched-stale-window"
             ) {
                 self.set(&k.replace('-', "_"), v)?;
             }
@@ -148,6 +160,15 @@ impl Config {
             "tuner_top_k" => self.tuner_top_k = val.parse().map_err(|_| bad(key, val))?,
             "tuner_race_solves" => {
                 self.tuner_race_solves = val.parse().map_err(|_| bad(key, val))?
+            }
+            "tuner_cache_ttl" => {
+                self.tuner_cache_ttl = val.parse().map_err(|_| bad(key, val))?
+            }
+            "sched_block_target" => {
+                self.sched_block_target = val.parse().map_err(|_| bad(key, val))?
+            }
+            "sched_stale_window" => {
+                self.sched_stale_window = val.parse().map_err(|_| bad(key, val))?
             }
             other => {
                 self.extra.insert(other.to_string(), val.to_string());
@@ -177,10 +198,13 @@ mod tests {
         c.set("tuner_cache", "/tmp/plans.json").unwrap();
         c.set("tuner_top_k", "3").unwrap();
         c.set("tuner_race_solves", "5").unwrap();
+        c.set("tuner_cache_ttl", "86400").unwrap();
         assert_eq!(c.tuner_cache, "/tmp/plans.json");
         assert_eq!(c.tuner_top_k, 3);
         assert_eq!(c.tuner_race_solves, 5);
+        assert_eq!(c.tuner_cache_ttl, 86_400);
         assert!(c.set("tuner_top_k", "lots").is_err());
+        assert!(c.set("tuner_cache_ttl", "soon").is_err());
         let args = Args::parse(
             ["serve", "--tuner-cache", "p.json", "--tuner-top-k", "4"]
                 .iter()
@@ -248,6 +272,33 @@ mod tests {
         assert!(c.set("strategy", "nonsense").is_err());
         c.set("strategy", "auto").unwrap();
         assert_eq!(c.strategy.as_str(), "auto");
+        c.set("strategy", "scheduled").unwrap();
+        assert_eq!(c.strategy.as_str(), "scheduled");
+    }
+
+    #[test]
+    fn sched_keys_parse_and_merge() {
+        let mut c = Config::default();
+        assert_eq!(c.sched_block_target, crate::sched::DEFAULT_BLOCK_TARGET);
+        assert_eq!(c.sched_stale_window, crate::sched::DEFAULT_STALE_WINDOW);
+        c.set("sched_block_target", "128").unwrap();
+        c.set("sched_stale_window", "0").unwrap();
+        assert_eq!(c.sched_block_target, 128);
+        assert_eq!(c.sched_stale_window, 0);
+        assert!(c.set("sched_block_target", "big").is_err());
+        let args = Args::parse(
+            [
+                "serve", "--strategy", "scheduled", "--sched-block-target", "512",
+                "--sched-stale-window", "8", "--tuner-cache-ttl", "60",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        c.merge_args(&args).unwrap();
+        assert_eq!(c.strategy.as_str(), "scheduled");
+        assert_eq!(c.sched_block_target, 512);
+        assert_eq!(c.sched_stale_window, 8);
+        assert_eq!(c.tuner_cache_ttl, 60);
     }
 
     #[test]

@@ -31,6 +31,14 @@ pub struct Metrics {
     lane_interactive: AtomicU64,
     /// gauge: queued right-hand sides in the batch lane
     lane_batch: AtomicU64,
+    /// gauge: coarsened blocks across all scheduled-backend matrices
+    sched_blocks: AtomicU64,
+    /// gauge: cross-worker block edges (static point-to-point waits)
+    sched_cut_edges: AtomicU64,
+    /// counter mirror: blocked ready-scans observed by elastic execution
+    elastic_waits: AtomicU64,
+    /// counter mirror: blocks executed out of order via the lookahead
+    elastic_ooo: AtomicU64,
     /// strategy name -> times the tuner picked it
     strategy_wins: Mutex<BTreeMap<String, u64>>,
 }
@@ -57,8 +65,22 @@ impl Metrics {
             hist: std::array::from_fn(|_| AtomicU64::new(0)),
             lane_interactive: AtomicU64::new(0),
             lane_batch: AtomicU64::new(0),
+            sched_blocks: AtomicU64::new(0),
+            sched_cut_edges: AtomicU64::new(0),
+            elastic_waits: AtomicU64::new(0),
+            elastic_ooo: AtomicU64::new(0),
             strategy_wins: Mutex::new(BTreeMap::new()),
         }
+    }
+
+    /// Gauge update: scheduled-backend totals (blocks + static cut) and
+    /// the cumulative elastic execution counters, aggregated over every
+    /// prepared matrix served by the scheduled backend.
+    pub fn set_sched(&self, blocks: u64, cut_edges: u64, waits: u64, ooo: u64) {
+        self.sched_blocks.store(blocks, Ordering::Relaxed);
+        self.sched_cut_edges.store(cut_edges, Ordering::Relaxed);
+        self.elastic_waits.store(waits, Ordering::Relaxed);
+        self.elastic_ooo.store(ooo, Ordering::Relaxed);
     }
 
     /// Record one tuner decision: whether the plan cache answered it and
@@ -126,6 +148,10 @@ impl Metrics {
             deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
             lane_interactive_depth: self.lane_interactive.load(Ordering::Relaxed),
             lane_batch_depth: self.lane_batch.load(Ordering::Relaxed),
+            sched_blocks: self.sched_blocks.load(Ordering::Relaxed),
+            sched_cut_edges: self.sched_cut_edges.load(Ordering::Relaxed),
+            elastic_waits: self.elastic_waits.load(Ordering::Relaxed),
+            elastic_ooo: self.elastic_ooo.load(Ordering::Relaxed),
             tuner_cache_hits: self.tuner_cache_hits.load(Ordering::Relaxed),
             tuner_cache_misses: self.tuner_cache_misses.load(Ordering::Relaxed),
             strategy_wins: self
@@ -179,6 +205,14 @@ pub struct Snapshot {
     pub lane_interactive_depth: u64,
     /// gauge: batch-lane queue depth at the last flush
     pub lane_batch_depth: u64,
+    /// gauge: coarsened blocks across scheduled-backend matrices
+    pub sched_blocks: u64,
+    /// gauge: cross-worker block edges (static point-to-point waits)
+    pub sched_cut_edges: u64,
+    /// cumulative blocked ready-scans in elastic execution
+    pub elastic_waits: u64,
+    /// cumulative out-of-order block executions (lookahead hits)
+    pub elastic_ooo: u64,
     pub tuner_cache_hits: u64,
     pub tuner_cache_misses: u64,
     /// (strategy, times chosen) pairs, sorted by strategy name
@@ -201,6 +235,13 @@ impl std::fmt::Display for Snapshot {
             self.lane_interactive_depth, self.lane_batch_depth,
             self.mean_us, self.p50_us, self.p95_us, self.p99_us
         )?;
+        if self.sched_blocks > 0 {
+            write!(
+                f,
+                ", sched blocks={} cut={} waits={} ooo={}",
+                self.sched_blocks, self.sched_cut_edges, self.elastic_waits, self.elastic_ooo
+            )?;
+        }
         if self.tuner_cache_hits + self.tuner_cache_misses > 0 {
             write!(
                 f,
@@ -298,6 +339,23 @@ mod tests {
         // Gauges overwrite rather than accumulate.
         m.set_lane_depths(0, 0);
         assert_eq!(m.snapshot().lane_interactive_depth, 0);
+    }
+
+    #[test]
+    fn sched_gauges_render_only_when_present() {
+        let m = Metrics::new();
+        assert!(!m.snapshot().to_string().contains("sched"));
+        m.set_sched(12, 5, 100, 7);
+        let s = m.snapshot();
+        assert_eq!(s.sched_blocks, 12);
+        assert_eq!(s.sched_cut_edges, 5);
+        assert_eq!(s.elastic_waits, 100);
+        assert_eq!(s.elastic_ooo, 7);
+        let text = s.to_string();
+        assert!(text.contains("sched blocks=12 cut=5 waits=100 ooo=7"), "{text}");
+        // Gauges overwrite.
+        m.set_sched(1, 0, 0, 0);
+        assert_eq!(m.snapshot().sched_blocks, 1);
     }
 
     #[test]

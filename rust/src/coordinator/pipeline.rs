@@ -15,7 +15,8 @@ use crate::config::Config;
 use crate::error::Error;
 use crate::runtime::backend::StagedSystem;
 use crate::runtime::{PaddedSystem, Registry, XlaSolver};
-use crate::solver::executor::TransformedSolver;
+use crate::sched::SchedOptions;
+use crate::solver::dispatch::ExecSolver;
 use crate::solver::pool::Pool;
 use crate::sparse::Csr;
 use crate::transform::{Strategy, StrategySpec, TransformResult};
@@ -47,7 +48,10 @@ pub struct Prepared {
     pub id: String,
     pub m: Arc<Csr>,
     pub t: Arc<TransformResult>,
-    pub native: TransformedSolver,
+    /// the execution backend the strategy calls for: level-set executor,
+    /// coarsened schedule, sync-free, or reordered (see
+    /// [`crate::solver::ExecSolver`])
+    pub native: ExecSolver,
     pub padded: Option<Arc<PaddedSystem>>,
     /// system arrays pre-uploaded to the PJRT device (§Perf: avoids
     /// re-transferring megabytes of structure per request)
@@ -59,6 +63,15 @@ pub struct Prepared {
     pub tuned: Option<TunedInfo>,
     /// preprocessing wall-clock (the offline cost the paper discusses)
     pub prepare_time: std::time::Duration,
+}
+
+/// The config's scheduling knobs as the `SchedOptions` fallback every
+/// schedule-building site shares (tuner race and serving executor alike).
+fn sched_fallback(cfg: &Config) -> SchedOptions {
+    SchedOptions {
+        block_target: Some(cfg.sched_block_target),
+        stale_window: Some(cfg.sched_stale_window),
+    }
 }
 
 pub struct Pipeline {
@@ -82,6 +95,11 @@ impl Pipeline {
             } else {
                 Some(PathBuf::from(&cfg.tuner_cache))
             },
+            cache_ttl_secs: cfg.tuner_cache_ttl,
+            // Race scheduled candidates with the same knobs serving will
+            // build with — a plan decided at one block target must not be
+            // served at another.
+            sched: sched_fallback(&cfg),
             // Race on the serving pool: a cache miss must not pay (or be
             // skewed by) spawning a throwaway thread pool.
             pool: Some(Arc::clone(&pool)),
@@ -135,27 +153,34 @@ impl Pipeline {
         let m = Arc::new(m);
         let (strat_name, strategy) = spec.resolve(&self.cfg.strategy);
         // Route Auto to the shared tuner (Strategy::Auto::apply would
-        // build a throwaway one with a cold plan cache).
-        let (strategy_name, t, tuned) = if matches!(strategy, Strategy::Auto) {
+        // build a throwaway one with a cold plan cache). The resolved
+        // `exec_strategy` also decides the execution backend below.
+        let (strategy_name, exec_strategy, t, tuned) = if matches!(strategy, Strategy::Auto) {
             let plan = self.tuner.choose_arc(&m)?;
             let info = TunedInfo {
                 strategy: plan.strategy_name.clone(),
                 cache_hit: plan.source == PlanSource::CacheHit,
                 fingerprint: plan.fingerprint.to_hex(),
             };
-            (plan.strategy_name, plan.transform, Some(info))
+            (plan.strategy_name, plan.strategy, plan.transform, Some(info))
         } else {
-            (strat_name, strategy.apply(&m), None)
+            (strat_name, strategy.clone(), strategy.apply(&m), None)
         };
         t.validate(&m).map_err(Error::Invalid)?;
 
         let t = Arc::new(t);
         // Fit an XLA artifact if the registry is present, and stage the
-        // system arrays on the device.
+        // system arrays on the device. Execution strategies keep their
+        // own backend: the padded level solve would silently discard the
+        // schedule / sync-free / reordering they were chosen for.
+        let xla_eligible = matches!(
+            exec_strategy,
+            Strategy::None | Strategy::AvgLevelCost(_) | Strategy::Manual(_)
+        );
         let mut backend = Backend::Native;
         let mut padded = None;
         let mut staged = None;
-        if let Some(reg) = &self.registry {
+        if let (Some(reg), true) = (&self.registry, xla_eligible) {
             let req = PaddedSystem::requirements(&m, &t);
             if let Some(meta) = reg.best_fit("solve", &req) {
                 let p = PaddedSystem::build(&m, &t, meta.pad_shape())?;
@@ -165,7 +190,14 @@ impl Pipeline {
                 backend = Backend::Xla;
             }
         }
-        let native = TransformedSolver::new(Arc::clone(&m), Arc::clone(&t), Arc::clone(&self.pool));
+        // Scheduling knobs the strategy left unset come from the config.
+        let native = ExecSolver::build(
+            Arc::clone(&m),
+            Arc::clone(&t),
+            &exec_strategy,
+            Arc::clone(&self.pool),
+            sched_fallback(&self.cfg),
+        )?;
         let prepared = Arc::new(Prepared {
             id: id.to_string(),
             m,
@@ -268,6 +300,49 @@ mod tests {
         let m = generate::tridiagonal(50, &Default::default());
         let p = pl.prepare("tri", m, &spec("manual:5")).unwrap();
         assert_eq!(p.t.num_levels(), 10);
+    }
+
+    #[test]
+    fn scheduled_strategy_builds_the_scheduled_backend() {
+        let mut pl = Pipeline::new(Config {
+            sched_block_target: 32,
+            sched_stale_window: 2,
+            ..cfg()
+        });
+        let m = generate::tridiagonal(120, &Default::default());
+        let p = pl.prepare("tri", m, &spec("scheduled")).unwrap();
+        assert_eq!(p.backend, Backend::Native);
+        assert_eq!(p.native.mode(), "scheduled");
+        let sched = p.native.scheduled().expect("scheduled solver");
+        // A pure chain collapses into one block with no cross-worker
+        // edges — the schedule-level win over 119 barriers.
+        assert_eq!(sched.stats().num_blocks, 1);
+        assert_eq!(sched.stats().cut_edges, 0);
+        assert_eq!(sched.stats().levelset_barriers, 119);
+        let b = vec![1.0; 120];
+        let x = p.native.solve(&b);
+        assert!(p.m.residual_inf(&x, &b) < 1e-10);
+        // No rewriting happened: scheduled is an execution strategy.
+        assert_eq!(p.t.stats.rows_rewritten, 0);
+        assert_eq!(p.strategy_name, "scheduled");
+    }
+
+    #[test]
+    fn execution_strategies_prepare_and_solve() {
+        let mut pl = Pipeline::new(cfg());
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.03));
+        let n = m.nrows;
+        for (id, s, mode) in [
+            ("sf", "syncfree", "syncfree"),
+            ("ro", "reorder", "reordered"),
+            ("sc", "scheduled:64:1", "scheduled"),
+        ] {
+            let p = pl.prepare(id, m.clone(), &spec(s)).unwrap();
+            assert_eq!(p.native.mode(), mode, "{s}");
+            let b = vec![1.0; n];
+            let x = p.native.solve(&b);
+            assert!(p.m.residual_inf(&x, &b) < 1e-9, "{s}");
+        }
     }
 
     #[test]

@@ -467,6 +467,21 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                 }
             }
             Some(Request::Snapshot(tx)) => {
+                // Fold the scheduled-backend observability into the gauges
+                // before snapshotting: blocks + static cut per schedule,
+                // cumulative elastic wait/lookahead counters per solver.
+                let (mut blocks, mut cut, mut waits, mut ooo) = (0u64, 0u64, 0u64, 0u64);
+                for p in prepared.values() {
+                    if let Some(s) = p.native.scheduled() {
+                        let st = s.stats();
+                        blocks += st.num_blocks as u64;
+                        cut += st.cut_edges as u64;
+                        let (w, o) = s.wait_counters();
+                        waits += w;
+                        ooo += o;
+                    }
+                }
+                metrics.set_sched(blocks, cut, waits, ooo);
                 let _ = tx.send(metrics.snapshot());
             }
             None => {} // timeout: fall through to flush
@@ -692,6 +707,26 @@ mod tests {
         }
         let snap = h.metrics().unwrap();
         assert_eq!(snap.solves, 8);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn scheduled_strategy_serves_and_reports_sched_metrics() {
+        let svc = Service::start(test_cfg());
+        let h = svc.handle();
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.02));
+        let n = m.nrows;
+        let info = h.register("sched", m.clone(), spec("scheduled")).unwrap();
+        assert_eq!(info.strategy, "scheduled");
+        assert_eq!(info.rows_rewritten, 0, "scheduled never rewrites");
+        assert_eq!(info.backend, "native");
+        let b = vec![1.0; n];
+        let x = h.solve("sched", b.clone()).unwrap();
+        assert!(m.residual_inf(&x, &b) < 1e-9);
+        let snap = h.metrics().unwrap();
+        assert_eq!(snap.solves, 1);
+        assert!(snap.sched_blocks > 0, "schedule stats surfaced");
+        assert!(snap.to_string().contains("sched blocks="));
         svc.shutdown();
     }
 

@@ -99,7 +99,49 @@
 //! `workers`, `strategy` (any `Strategy::parse` name, validated at config
 //! time), `artifacts_dir`, `batch_size` (right-hand sides per batch),
 //! `batch_deadline_us`, `max_pending` (admission cap, 0 = unbounded),
-//! `use_xla`, `seed`, `tuner_cache`, `tuner_top_k`, `tuner_race_solves`.
+//! `use_xla`, `seed`, `tuner_cache`, `tuner_top_k`, `tuner_race_solves`,
+//! `tuner_cache_ttl` (seconds before a spilled plan expires, 0 = never),
+//! `sched_block_target`, `sched_stale_window` (see Scheduling below).
+//!
+//! ## Scheduling
+//!
+//! Level-set execution pays one global barrier per level — exactly where
+//! the paper's matrices hurt, thin and skewed levels. The [`sched`]
+//! subsystem instead compiles the (possibly transformed) dependency DAG
+//! into a **static schedule**: rows are coarsened into supernode blocks
+//! (serial chains collapse whole; thin levels group up to a work-balance
+//! target), blocks are placed on workers by greedy ETF list scheduling
+//! that trades load balance against the cross-worker edge cut, and the
+//! [`sched::ScheduledSolver`] executes the result with **elastic**
+//! point-to-point waits: per-block atomic done flags plus a lookahead
+//! window that fills stalls with later ready blocks, one pool rendezvous
+//! per solve instead of one per level.
+//!
+//! ```no_run
+//! use sptrsv_gt::sched::{SchedOptions, ScheduledSolver};
+//! use sptrsv_gt::sparse::generate;
+//! use sptrsv_gt::transform::Strategy;
+//!
+//! let m = generate::tridiagonal(10_000, &Default::default());
+//! let t = Strategy::parse("scheduled").unwrap().apply(&m); // no rewriting
+//! let s = ScheduledSolver::from_parts(m, t, 4, &SchedOptions::default());
+//! let st = s.stats();
+//! println!(
+//!     "{} blocks, {} point-to-point waits vs {} barriers",
+//!     st.num_blocks, st.cut_edges, st.levelset_barriers
+//! );
+//! let x = s.solve(&vec![1.0; 10_000]);
+//! # let _ = x;
+//! ```
+//!
+//! `--strategy scheduled[:block_target[:stale_window]]` selects it from
+//! the CLI, config and service alike; unset knobs fall back to the
+//! `sched_block_target` / `sched_stale_window` config keys. The tuner
+//! portfolio includes `scheduled` (plus the `syncfree` and `reorder`
+//! execution strategies), so `--strategy auto` will race it whenever the
+//! schedule-aware cost model shortlists it, and the coordinator metrics
+//! report blocks, cut edges and elastic wait counters for every
+//! scheduled matrix being served.
 //!
 //! ## Tuning
 //!
@@ -149,6 +191,7 @@ pub mod error;
 pub mod graph;
 pub mod report;
 pub mod runtime;
+pub mod sched;
 pub mod solver;
 pub mod sparse;
 pub mod transform;

@@ -21,7 +21,6 @@ use sptrsv_gt::coordinator::{Service, SolveOptions};
 use sptrsv_gt::graph::{analyze::LevelStats, Levels};
 use sptrsv_gt::report::{figures, table1};
 use sptrsv_gt::runtime::{PaddedSystem, Registry, XlaSolver};
-use sptrsv_gt::solver::executor::TransformedSolver;
 use sptrsv_gt::sparse::{generate, matrix_market, Csr};
 use sptrsv_gt::transform::{Strategy, StrategySpec};
 use sptrsv_gt::util::cli::Args;
@@ -64,9 +63,10 @@ USAGE: sptrsv <subcommand> [flags]
             [--seed S] [--ill-scaled] --out FILE.mtx
   analyze   (--matrix FILE.mtx | --kind ... [--scale F])
   transform (--matrix|--kind...) [--strategy none|avgcost|manual[:d]|
-            guarded[:d[:m]]|auto]
+            guarded[:d[:m]]|scheduled[:t[:w]]|syncfree|reorder|auto]
   solve     (--matrix|--kind...) [--strategy S] [--backend serial|levelset|
-            syncfree|transformed|xla] [--workers W] [--repeat R]
+            syncfree|transformed|scheduled|xla] [--workers W] [--repeat R]
+            [--sched-block-target T] [--sched-stale-window W]
   tune      (--matrix|--kind...) [--top-k K] [--race-solves N] [--workers W]
             [--cache FILE.json]   # portfolio autotuner decision for a matrix
   codegen   (--matrix|--kind...) [--strategy S] [--no-rearrange] [--bake]
@@ -78,6 +78,24 @@ USAGE: sptrsv <subcommand> [flags]
             # demo workload: mixed interactive/batch lanes + one multi-RHS
             # block through the coordinator, then the metrics snapshot
 ";
+
+/// Scheduling knobs from the CLI: unset flags stay `None` so the crate
+/// (or config) defaults apply.
+fn sched_flags(args: &Args) -> Result<sptrsv_gt::sched::SchedOptions> {
+    let parse = |name: &str| -> Result<Option<usize>> {
+        match args.flag(name) {
+            Some(v) => Ok(Some(
+                v.parse::<usize>()
+                    .with_context(|| format!("bad --{name} '{v}'"))?,
+            )),
+            None => Ok(None),
+        }
+    };
+    Ok(sptrsv_gt::sched::SchedOptions {
+        block_target: parse("sched-block-target")?,
+        stale_window: parse("sched-stale-window")?,
+    })
+}
 
 /// Shared matrix loading: --matrix FILE or --kind generator.
 fn load_matrix(args: &Args) -> Result<(String, Csr)> {
@@ -228,18 +246,48 @@ fn cmd_solve(args: &Args) -> Result<()> {
         "transformed" => {
             // `auto` must tune at the worker count the solve will run
             // with, so build the tuner explicitly instead of letting
-            // Strategy::Auto::apply fall back to machine defaults.
-            let t = match &strat {
+            // Strategy::Auto::apply fall back to machine defaults. The
+            // tuner's pick (which may itself be an execution strategy)
+            // then decides the backend through ExecSolver.
+            let (exec_strat, t) = match &strat {
                 Strategy::Auto => {
                     let mut tuner = sptrsv_gt::tuner::Tuner::new(sptrsv_gt::tuner::TunerOptions {
                         workers,
                         ..Default::default()
                     });
-                    tuner.choose(&m)?.transform
+                    let plan = tuner.choose(&m)?;
+                    (plan.strategy, plan.transform)
                 }
-                s => s.apply(&m),
+                s => (s.clone(), s.apply(&m)),
             };
-            let s = TransformedSolver::from_parts(m.clone(), t, workers);
+            let s = sptrsv_gt::solver::ExecSolver::build(
+                std::sync::Arc::new(m.clone()),
+                std::sync::Arc::new(t),
+                &exec_strat,
+                std::sync::Arc::new(sptrsv_gt::solver::pool::Pool::new(workers)),
+                sched_flags(args)?,
+            )?;
+            for _ in 0..repeat {
+                s.solve_into(&b, &mut x);
+            }
+        }
+        "scheduled" => {
+            // Force scheduled execution over whatever transform the
+            // --strategy flag produced (the paper's rewriting composes
+            // with the coarsened schedule).
+            let t = strat.apply(&m);
+            let s = sptrsv_gt::sched::ScheduledSolver::from_parts(
+                m.clone(),
+                t,
+                workers,
+                &sched_flags(args)?,
+            );
+            let st = s.stats();
+            println!(
+                "schedule: {} blocks ({} chains), cut {} vs {} barriers, max load {}",
+                st.num_blocks, st.chain_blocks, st.cut_edges, st.levelset_barriers,
+                st.max_worker_load
+            );
             for _ in 0..repeat {
                 s.solve_into(&b, &mut x);
             }
@@ -279,6 +327,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
         race_solves: args.usize_flag("race-solves", defaults.race_solves)?,
         workers: args.usize_flag("workers", defaults.workers)?,
         cache_path: args.flag("cache").map(std::path::PathBuf::from),
+        sched: sched_flags(args)?,
         ..defaults
     };
     let mut tuner = sptrsv_gt::tuner::Tuner::new(opts);

@@ -1,0 +1,403 @@
+//! DAG coarsening: merge rows of a (possibly transformed) dependency DAG
+//! into supernode blocks, so the scheduler reasons about thousands of
+//! blocks instead of millions of rows (Böhnlein et al., arXiv:2503.05408,
+//! make the same move: an explicit coarsened schedule beats raw level
+//! sets whenever levels are thin or skewed).
+//!
+//! Two merges, both provably acyclic:
+//!
+//! * **Chain collapsing** — a maximal path where every interior row has
+//!   exactly one dependency and its dependency has exactly one child is
+//!   one block. External in-edges can only enter the chain's head and
+//!   external out-edges only leave its tail, so contracting the path
+//!   cannot create a cycle. This turns a serial-chain matrix
+//!   (tridiagonal) into a handful of blocks with no synchronization at
+//!   all.
+//! * **Level-local grouping** — rows left as singletons are grouped with
+//!   same-level neighbours until a block reaches the work-balance target.
+//!   Rows of one level are mutually independent, so the merged block has
+//!   no internal edges and its in/out edges stay at one level.
+//!
+//! Acyclicity of the block DAG follows from a single invariant: every
+//! block receives external edges only at its minimum ("head") level and
+//! emits them only at its maximum ("tail") level, and a row-level edge
+//! always ends at a strictly higher level. Any path through blocks
+//! therefore strictly increases the head level — no cycles, and sorting
+//! blocks by head level is a topological order.
+
+use crate::sparse::Csr;
+use crate::transform::TransformResult;
+
+/// Minimum work a grouped block aims for even when `cost/workers` is
+/// smaller: below this, splitting a level across workers costs more in
+/// point-to-point waits than the parallelism returns (cf. the level-set
+/// executor's 64-row inline threshold).
+pub const MERGE_FLOOR_COST: u64 = 64;
+
+/// Knobs for [`coarsen`].
+#[derive(Debug, Clone, Copy)]
+pub struct CoarsenOptions {
+    /// work-units target per block (paper cost model units, 2*nnz-1 per
+    /// original row)
+    pub block_target: usize,
+    /// workers the schedule is built for: fat levels are split into at
+    /// least this many blocks even when the target would allow fewer
+    pub workers: usize,
+}
+
+impl Default for CoarsenOptions {
+    fn default() -> Self {
+        CoarsenOptions {
+            block_target: crate::sched::DEFAULT_BLOCK_TARGET,
+            workers: 4,
+        }
+    }
+}
+
+/// One coarsened block: rows in execution (ascending) order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Block {
+    pub rows: Vec<u32>,
+    /// summed row cost (paper cost model)
+    pub cost: u64,
+    /// level of the block's head row (its external in-edge level)
+    pub level: u32,
+}
+
+/// The coarsened dependency DAG: blocks in topological (head-level,
+/// head-row) order plus CSR adjacency in both directions.
+#[derive(Debug, Clone)]
+pub struct CoarseDag {
+    pub blocks: Vec<Block>,
+    /// block index of each row
+    pub block_of: Vec<u32>,
+    /// predecessors of block b: `preds[pred_ptr[b]..pred_ptr[b+1]]`
+    pub pred_ptr: Vec<usize>,
+    pub preds: Vec<u32>,
+    /// successors of block b: `succs[succ_ptr[b]..succ_ptr[b+1]]`
+    pub succ_ptr: Vec<usize>,
+    pub succs: Vec<u32>,
+    /// blocks produced by chain collapsing (multi-row, multi-level)
+    pub chain_blocks: usize,
+}
+
+impl CoarseDag {
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.preds.len()
+    }
+
+    pub fn preds_of(&self, b: usize) -> &[u32] {
+        &self.preds[self.pred_ptr[b]..self.pred_ptr[b + 1]]
+    }
+
+    pub fn succs_of(&self, b: usize) -> &[u32] {
+        &self.succs[self.succ_ptr[b]..self.succ_ptr[b + 1]]
+    }
+}
+
+/// Visit the dependencies of row `i` in the transformed system: the
+/// folded equation's remaining unknowns for rewritten rows, the CSR
+/// off-diagonals otherwise.
+pub fn for_each_dep(m: &Csr, t: &TransformResult, i: usize, mut f: impl FnMut(u32)) {
+    match &t.equations[i] {
+        Some(eq) => {
+            for &(c, _) in &eq.coeffs {
+                f(c);
+            }
+        }
+        None => {
+            for &c in m.row_deps(i) {
+                f(c);
+            }
+        }
+    }
+}
+
+/// Coarsen the transformed dependency DAG of `(m, t)` into blocks.
+pub fn coarsen(m: &Csr, t: &TransformResult, opts: &CoarsenOptions) -> CoarseDag {
+    let n = m.nrows;
+    let workers = opts.workers.max(1);
+
+    // Row-level degrees of the transformed DAG.
+    let mut child_count = vec![0u32; n];
+    let mut dep_count = vec![0u32; n];
+    let mut only_dep = vec![u32::MAX; n];
+    for i in 0..n {
+        for_each_dep(m, t, i, |c| {
+            child_count[c as usize] += 1;
+            dep_count[i] += 1;
+            only_dep[i] = c;
+        });
+    }
+
+    // Phase 1 — chain collapsing. A row continues its dependency's chain
+    // iff it is that row's only child and that row is its only dependency.
+    const UNASSIGNED: u32 = u32::MAX;
+    let mut block_of = vec![UNASSIGNED; n];
+    let mut blocks: Vec<Block> = Vec::new();
+    for i in 0..n {
+        let continuation = dep_count[i] == 1 && child_count[only_dep[i] as usize] == 1;
+        if continuation {
+            let b = block_of[only_dep[i] as usize] as usize;
+            blocks[b].rows.push(i as u32);
+            blocks[b].cost += t.row_costs[i];
+            block_of[i] = b as u32;
+        } else {
+            block_of[i] = blocks.len() as u32;
+            blocks.push(Block {
+                rows: vec![i as u32],
+                cost: t.row_costs[i],
+                level: t.level_of[i],
+            });
+        }
+    }
+    let chain_blocks = blocks.iter().filter(|b| b.rows.len() > 1).count();
+
+    // Phase 2 — level-local grouping of the remaining singletons. The
+    // per-level target balances two regimes: a fat level is tightened to
+    // ~cost/workers so it still splits into enough blocks for every
+    // worker, while a thin level is floored at MERGE_FLOOR_COST so its
+    // handful of tiny rows merges into one block instead of paying a
+    // point-to-point wait per row (the schedule-level analogue of the
+    // level-set executor's inline-thin-level heuristic).
+    for rows in &t.levels {
+        let singles: Vec<u32> = rows
+            .iter()
+            .copied()
+            .filter(|&r| blocks[block_of[r as usize] as usize].rows.len() == 1)
+            .collect();
+        if singles.len() < 2 {
+            continue;
+        }
+        let level_cost: u64 = singles.iter().map(|&r| t.row_costs[r as usize]).sum();
+        let target = (opts.block_target as u64)
+            .min(level_cost.div_ceil(workers as u64).max(MERGE_FLOOR_COST))
+            .max(1);
+        let mut host: Option<u32> = None; // block absorbing the current run
+        for &r in &singles {
+            match host {
+                Some(h) if blocks[h as usize].cost < target => {
+                    // Absorb r's singleton block into the host.
+                    let victim = block_of[r as usize] as usize;
+                    blocks[victim].rows.clear();
+                    blocks[victim].cost = 0;
+                    blocks[h as usize].rows.push(r);
+                    blocks[h as usize].cost += t.row_costs[r as usize];
+                    block_of[r as usize] = h;
+                }
+                _ => host = Some(block_of[r as usize]),
+            }
+        }
+    }
+
+    // Compact away the absorbed (now empty) blocks, then order the
+    // survivors topologically: (head level, head row) — deterministic and,
+    // per the module-level invariant, a valid topological order.
+    let mut order: Vec<usize> = (0..blocks.len()).filter(|&b| !blocks[b].rows.is_empty()).collect();
+    order.sort_by_key(|&b| (blocks[b].level, blocks[b].rows[0]));
+    let mut remap = vec![u32::MAX; blocks.len()];
+    for (new, &old) in order.iter().enumerate() {
+        remap[old] = new as u32;
+    }
+    let blocks: Vec<Block> = order.iter().map(|&b| blocks[b].clone()).collect();
+    for bo in &mut block_of {
+        *bo = remap[*bo as usize];
+    }
+
+    // Block DAG edges: distinct-block row dependencies, deduplicated.
+    let nb = blocks.len();
+    let mut pairs: Vec<(u32, u32)> = Vec::new(); // (from, to)
+    for i in 0..n {
+        let bi = block_of[i];
+        for_each_dep(m, t, i, |c| {
+            let bc = block_of[c as usize];
+            if bc != bi {
+                pairs.push((bc, bi));
+            }
+        });
+    }
+    pairs.sort_unstable();
+    pairs.dedup();
+
+    let mut succ_ptr = vec![0usize; nb + 1];
+    let mut pred_ptr = vec![0usize; nb + 1];
+    for &(from, to) in &pairs {
+        succ_ptr[from as usize + 1] += 1;
+        pred_ptr[to as usize + 1] += 1;
+    }
+    for b in 0..nb {
+        succ_ptr[b + 1] += succ_ptr[b];
+        pred_ptr[b + 1] += pred_ptr[b];
+    }
+    let mut succs = vec![0u32; pairs.len()];
+    let mut preds = vec![0u32; pairs.len()];
+    let mut sfill = succ_ptr.clone();
+    let mut pfill = pred_ptr.clone();
+    for &(from, to) in &pairs {
+        succs[sfill[from as usize]] = to;
+        sfill[from as usize] += 1;
+        preds[pfill[to as usize]] = from;
+        pfill[to as usize] += 1;
+    }
+
+    CoarseDag {
+        blocks,
+        block_of,
+        pred_ptr,
+        preds,
+        succ_ptr,
+        succs,
+        chain_blocks,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate;
+    use crate::transform::Strategy;
+
+    fn coarse(m: &Csr, target: usize, workers: usize) -> CoarseDag {
+        let t = Strategy::None.apply(m);
+        coarsen(
+            m,
+            &t,
+            &CoarsenOptions {
+                block_target: target,
+                workers,
+            },
+        )
+    }
+
+    /// Every row lands in exactly one block, blocks partition the rows,
+    /// and block ids are consistent with `block_of`.
+    fn validate(m: &Csr, d: &CoarseDag) {
+        let mut seen = vec![false; m.nrows];
+        for (b, blk) in d.blocks.iter().enumerate() {
+            assert!(!blk.rows.is_empty());
+            assert!(blk.rows.windows(2).all(|w| w[0] < w[1]), "rows ascending");
+            for &r in &blk.rows {
+                assert!(!seen[r as usize], "row {r} in two blocks");
+                seen[r as usize] = true;
+                assert_eq!(d.block_of[r as usize], b as u32);
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "rows missing from blocks");
+        // Edges are topological in block order: pred index < succ index.
+        for b in 0..d.num_blocks() {
+            for &p in d.preds_of(b) {
+                assert!((p as usize) < b, "pred {p} !< block {b}");
+            }
+            for &s in d.succs_of(b) {
+                assert!((s as usize) > b, "succ {s} !> block {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn serial_chain_collapses_to_one_block() {
+        let m = generate::tridiagonal(120, &Default::default());
+        let d = coarse(&m, 64, 4);
+        validate(&m, &d);
+        assert_eq!(d.num_blocks(), 1, "a pure chain is one block");
+        assert_eq!(d.chain_blocks, 1);
+        assert_eq!(d.num_edges(), 0);
+        assert_eq!(d.blocks[0].rows.len(), 120);
+    }
+
+    #[test]
+    fn dense_level_splits_across_workers() {
+        // Diagonal-only matrix: one dense level, no dependencies.
+        let m = generate::banded(200, 3, 0.0, &Default::default());
+        let d = coarse(&m, 1_000_000, 4);
+        validate(&m, &d);
+        // The huge target is tightened to max(level_cost/workers,
+        // MERGE_FLOOR_COST): the 200-cost level still yields >= 4 blocks.
+        assert!(d.num_blocks() >= 4, "{} blocks", d.num_blocks());
+        assert_eq!(d.num_edges(), 0);
+    }
+
+    #[test]
+    fn block_target_bounds_grouped_blocks() {
+        let m = generate::banded(300, 3, 0.0, &Default::default());
+        let d = coarse(&m, 10, 2);
+        validate(&m, &d);
+        // Cost per row is 1 (diagonal only): blocks of ~10 rows.
+        for blk in &d.blocks {
+            assert!(blk.cost <= 20, "block cost {} way past target", blk.cost);
+        }
+        assert!(d.num_blocks() >= 25);
+    }
+
+    #[test]
+    fn thin_levels_merge_instead_of_splitting() {
+        // lung2's signature shape: hundreds of 2-wide levels. Each thin
+        // level must come out as ONE block (a point-to-point wait per row
+        // would out-cost the rows), compressing far below row count.
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
+        let d = coarse(&m, 256, 4);
+        validate(&m, &d);
+        assert!(
+            d.num_blocks() * 4 < m.nrows,
+            "{} blocks for {} rows",
+            d.num_blocks(),
+            m.nrows
+        );
+    }
+
+    #[test]
+    fn structured_matrices_coarsen_validly() {
+        for m in [
+            generate::lung2_like(&generate::GenOptions::with_scale(0.05)),
+            generate::torso2_like(&generate::GenOptions::with_scale(0.03)),
+            generate::random_lower(400, 4, 0.8, &Default::default()),
+            generate::poisson2d_ilu(20, 20, &Default::default()),
+        ] {
+            let d = coarse(&m, 128, 4);
+            validate(&m, &d);
+            assert!(d.num_blocks() <= m.nrows);
+            assert!(d.num_blocks() < m.nrows, "coarsening merged nothing");
+        }
+    }
+
+    #[test]
+    fn transformed_system_coarsens_over_folded_deps() {
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
+        let t = Strategy::parse("avgcost").unwrap().apply(&m);
+        let d = coarsen(
+            &m,
+            &t,
+            &CoarsenOptions {
+                block_target: 128,
+                workers: 4,
+            },
+        );
+        // Same partition/edge invariants hold over rewritten equations.
+        let mut seen = vec![false; m.nrows];
+        for blk in &d.blocks {
+            for &r in &blk.rows {
+                assert!(!seen[r as usize]);
+                seen[r as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        for b in 0..d.num_blocks() {
+            for &p in d.preds_of(b) {
+                assert!((p as usize) < b);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = Csr::new(0, 0, vec![0], vec![], vec![]).unwrap();
+        let t = Strategy::None.apply(&m);
+        let d = coarsen(&m, &t, &Default::default());
+        assert_eq!(d.num_blocks(), 0);
+        assert_eq!(d.num_edges(), 0);
+    }
+}

@@ -1,0 +1,335 @@
+//! Elastic schedule execution: point-to-point waits instead of global
+//! level barriers.
+//!
+//! Each worker walks its ordered block list. A block runs once every
+//! predecessor block's done flag is set (Acquire/Release on per-block
+//! atomics — the only synchronization in the hot path; there is a single
+//! pool rendezvous per solve instead of one per level). When the frontier
+//! block is still waiting, the worker may run any *later* block of its
+//! list whose dependencies are already satisfied, up to a configurable
+//! lookahead window — the stale-synchronous "elasticity" of Steiner et
+//! al.: useful work fills the stall instead of a spin.
+//!
+//! Safety: every row is written by exactly one block on one worker, and a
+//! block's rows are only read by consumers after its done flag is
+//! published with Release and observed with Acquire. Within a worker,
+//! program order covers same-worker dependencies (which the ready check
+//! also verifies explicitly, so out-of-order lookahead stays correct).
+//!
+//! Deadlock freedom: worker lists follow the global topological block
+//! order, so the globally earliest unexecuted block is always at its
+//! worker's frontier — and the frontier is always scanned.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::sched::SchedOptions;
+use crate::sched::schedule::{Schedule, ScheduleStats};
+use crate::solver::executor::ExecPlan;
+use crate::solver::levelset::SharedVec;
+use crate::solver::pool::Pool;
+use crate::sparse::Csr;
+use crate::transform::TransformResult;
+
+/// Cumulative execution counters ("barrier vs elastic" observability).
+struct ExecCounters {
+    /// failed ready-scans while a frontier block waited on another worker
+    waits: AtomicU64,
+    /// blocks executed out of order from the lookahead window
+    ooo: AtomicU64,
+}
+
+/// Executes a [`Schedule`] over a transformed system, reusable across
+/// right-hand sides. Concurrent `solve_into` calls on one solver are not
+/// supported (they share the pool barrier and the done flags), matching
+/// the other solver backends.
+pub struct ScheduledSolver {
+    pub m: Arc<Csr>,
+    pub t: Arc<TransformResult>,
+    plan: Arc<ExecPlan>,
+    pub schedule: Arc<Schedule>,
+    pool: Arc<Pool>,
+    done: Arc<Vec<AtomicU32>>,
+    counters: Arc<ExecCounters>,
+    stale_window: usize,
+}
+
+impl ScheduledSolver {
+    /// Build a schedule for `pool.len()` workers and wrap it in an
+    /// executor. `opts` fields left `None` fall back to the crate
+    /// defaults (the coordinator fills them from config instead).
+    pub fn new(
+        m: Arc<Csr>,
+        t: Arc<TransformResult>,
+        pool: Arc<Pool>,
+        opts: &SchedOptions,
+    ) -> ScheduledSolver {
+        let schedule = Schedule::build(&m, &t, pool.len(), opts.block_target());
+        let plan = Arc::new(ExecPlan::build(&m, &t));
+        let done = Arc::new(
+            (0..schedule.blocks.len())
+                .map(|_| AtomicU32::new(0))
+                .collect::<Vec<_>>(),
+        );
+        ScheduledSolver {
+            m,
+            t,
+            plan,
+            schedule: Arc::new(schedule),
+            pool,
+            done,
+            counters: Arc::new(ExecCounters {
+                waits: AtomicU64::new(0),
+                ooo: AtomicU64::new(0),
+            }),
+            stale_window: opts.stale_window(),
+        }
+    }
+
+    pub fn from_parts(m: Csr, t: TransformResult, nworkers: usize, opts: &SchedOptions) -> Self {
+        Self::new(
+            Arc::new(m),
+            Arc::new(t),
+            Arc::new(Pool::new(nworkers)),
+            opts,
+        )
+    }
+
+    pub fn stats(&self) -> ScheduleStats {
+        self.schedule.stats
+    }
+
+    /// Cumulative (blocked-scan, out-of-order-execution) counters across
+    /// all solves so far.
+    pub fn wait_counters(&self) -> (u64, u64) {
+        (
+            self.counters.waits.load(Ordering::Relaxed),
+            self.counters.ooo.load(Ordering::Relaxed),
+        )
+    }
+
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = vec![0.0; self.m.nrows];
+        self.solve_into(b, &mut x);
+        x
+    }
+
+    pub fn solve_into(&self, b: &[f64], x: &mut [f64]) {
+        assert_eq!(b.len(), self.m.nrows);
+        assert_eq!(x.len(), self.m.nrows);
+        assert!(
+            self.schedule.nworkers <= self.pool.len(),
+            "schedule built for more workers than the pool has"
+        );
+        // A schedule where at most one worker holds blocks (a collapsed
+        // serial chain, or a 1-thread pool) runs inline on the calling
+        // thread: the pool rendezvous would be pure overhead — the same
+        // thin-work observation behind the level-set executor's inline
+        // path. In-order execution of one list is topological, so no
+        // done flags are needed either.
+        let active = self
+            .schedule
+            .worker_lists
+            .iter()
+            .filter(|l| !l.is_empty())
+            .count();
+        if active <= 1 {
+            for list in &self.schedule.worker_lists {
+                for &blk in list {
+                    for &r in &self.schedule.blocks[blk as usize].rows {
+                        self.plan.solve_row(r as usize, b, x);
+                    }
+                }
+            }
+            return;
+        }
+        // Reset the per-block flags; pool.run's lock publishes the stores
+        // to every worker before any block executes.
+        for f in self.done.iter() {
+            f.store(0, Ordering::Relaxed);
+        }
+        let b: Arc<Vec<f64>> = Arc::new(b.to_vec());
+        let xs = Arc::new(SharedVec(x.as_mut_ptr(), x.len()));
+        let sched = Arc::clone(&self.schedule);
+        let plan = Arc::clone(&self.plan);
+        let done = Arc::clone(&self.done);
+        let counters = Arc::clone(&self.counters);
+        let window = self.stale_window;
+        self.pool.run(move |id, _nw| {
+            if id >= sched.nworkers {
+                return;
+            }
+            let list = &sched.worker_lists[id];
+            let x = unsafe { xs.slice() };
+            let mut executed = vec![false; list.len()];
+            let mut next = 0usize; // frontier: first unexecuted position
+            let mut local_waits = 0u64;
+            let mut local_ooo = 0u64;
+            while next < list.len() {
+                if executed[next] {
+                    next += 1;
+                    continue;
+                }
+                let hi = (next + 1 + window).min(list.len());
+                let mut progressed = false;
+                for k in next..hi {
+                    if executed[k] {
+                        continue;
+                    }
+                    let blk = list[k] as usize;
+                    let ready = sched
+                        .preds_of(blk)
+                        .iter()
+                        .all(|&p| done[p as usize].load(Ordering::Acquire) != 0);
+                    if !ready {
+                        continue;
+                    }
+                    for &r in &sched.blocks[blk].rows {
+                        plan.solve_row(r as usize, &b, x);
+                    }
+                    done[blk].store(1, Ordering::Release);
+                    executed[k] = true;
+                    if k == next {
+                        next += 1;
+                    } else {
+                        local_ooo += 1;
+                    }
+                    progressed = true;
+                    break;
+                }
+                if !progressed {
+                    local_waits += 1;
+                    std::hint::spin_loop();
+                }
+            }
+            if local_waits > 0 {
+                counters.waits.fetch_add(local_waits, Ordering::Relaxed);
+            }
+            if local_ooo > 0 {
+                counters.ooo.fetch_add(local_ooo, Ordering::Relaxed);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate;
+    use crate::transform::Strategy;
+    use crate::util::prop::assert_allclose;
+    use crate::util::rng::Rng;
+
+    fn check(m: Csr, strat: &str, nworkers: usize, opts: SchedOptions, seed: u64) {
+        let t = Strategy::parse(strat).unwrap().apply(&m);
+        let mut rng = Rng::new(seed);
+        let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-5.0, 5.0)).collect();
+        let x_ref = crate::solver::serial::solve(&m, &b);
+        let s = ScheduledSolver::from_parts(m, t, nworkers, &opts);
+        s.schedule.validate(&s.m, &s.t).unwrap();
+        let x = s.solve(&b);
+        assert_allclose(&x, &x_ref, 1e-9, 1e-11).unwrap();
+    }
+
+    #[test]
+    fn matches_serial_identity_transform() {
+        check(
+            generate::random_lower(400, 5, 0.8, &Default::default()),
+            "none",
+            4,
+            SchedOptions::default(),
+            1,
+        );
+        check(
+            generate::lung2_like(&generate::GenOptions::with_scale(0.05)),
+            "none",
+            3,
+            SchedOptions::default(),
+            2,
+        );
+        check(
+            generate::tridiagonal(200, &Default::default()),
+            "none",
+            8,
+            SchedOptions::default(),
+            3,
+        );
+    }
+
+    #[test]
+    fn matches_serial_over_rewritten_systems() {
+        check(
+            generate::lung2_like(&generate::GenOptions::with_scale(0.05)),
+            "avgcost",
+            4,
+            SchedOptions::default(),
+            4,
+        );
+        check(
+            generate::torso2_like(&generate::GenOptions::with_scale(0.02)),
+            "manual:5",
+            3,
+            SchedOptions::default(),
+            5,
+        );
+    }
+
+    #[test]
+    fn strict_window_zero_and_wide_window_agree() {
+        let m = generate::random_lower(300, 4, 0.8, &Default::default());
+        let t = Strategy::None.apply(&m);
+        let mut rng = Rng::new(9);
+        let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let strict = ScheduledSolver::from_parts(
+            m.clone(),
+            t,
+            4,
+            &SchedOptions {
+                stale_window: Some(0),
+                ..Default::default()
+            },
+        );
+        let elastic = ScheduledSolver::from_parts(
+            m,
+            Strategy::None.apply(&strict.m),
+            4,
+            &SchedOptions {
+                stale_window: Some(16),
+                ..Default::default()
+            },
+        );
+        // Same values regardless of elasticity: execution order never
+        // changes a row's arithmetic, only who computes it when.
+        assert_eq!(strict.solve(&b), elastic.solve(&b));
+    }
+
+    #[test]
+    fn reusable_and_deterministic_across_solves() {
+        let m = generate::banded(300, 5, 0.6, &Default::default());
+        let t = Strategy::None.apply(&m);
+        let s = ScheduledSolver::from_parts(m, t, 3, &SchedOptions::default());
+        let b = vec![1.0; 300];
+        let x1 = s.solve(&b);
+        let x2 = s.solve(&b);
+        assert_eq!(x1, x2);
+        // Counters only ever grow.
+        let (w1, o1) = s.wait_counters();
+        s.solve(&b);
+        let (w2, o2) = s.wait_counters();
+        assert!(w2 >= w1 && o2 >= o1);
+    }
+
+    #[test]
+    fn single_worker_runs_in_list_order() {
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.03));
+        let t = Strategy::None.apply(&m);
+        let mut rng = Rng::new(11);
+        let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let x_ref = crate::solver::serial::solve(&m, &b);
+        let s = ScheduledSolver::from_parts(m, t, 1, &SchedOptions::default());
+        assert_allclose(&s.solve(&b), &x_ref, 1e-12, 1e-14).unwrap();
+        let (waits, ooo) = s.wait_counters();
+        assert_eq!(waits, 0, "one worker never waits");
+        assert_eq!(ooo, 0, "one worker never reorders");
+    }
+}

@@ -1,0 +1,110 @@
+//! Static DAG scheduling: turn a (transformed) dependency DAG into an
+//! executable schedule instead of consuming it through level-set
+//! barriers.
+//!
+//! The paper's graph transformation raises the parallelism *available*
+//! in DAG_L; this subsystem changes how that parallelism is *consumed*.
+//! Level sets synchronize with one global barrier per level — wasteful
+//! exactly where the paper's matrices are hard (thin or skewed levels).
+//! Following Böhnlein et al. (arXiv:2503.05408, explicit coarsened
+//! schedules) and Steiner et al. (elastic/stale-synchronous execution),
+//! the pipeline here is:
+//!
+//! * [`coarsen`]   — merge rows into supernode blocks: chain collapsing
+//!   plus level-local grouping under a work-balance target.
+//! * [`partition`] — greedy ETF list scheduling of blocks onto workers,
+//!   trading per-worker load against the cross-worker edge cut.
+//! * [`schedule`]  — the [`schedule::Schedule`]: per-worker ordered block
+//!   lists + block predecessor lists, deterministic for fixed inputs.
+//! * [`elastic`]   — [`elastic::ScheduledSolver`]: executes a schedule on
+//!   the shared worker pool with relaxed point-to-point waits (per-block
+//!   atomic done flags) and a lookahead window that fills stalls with
+//!   later ready blocks.
+//!
+//! Entry points: `--strategy scheduled` (CLI/config/service),
+//! `Strategy::Scheduled` in code, or the `scheduled` tuner candidate.
+
+pub mod coarsen;
+pub mod elastic;
+pub mod partition;
+pub mod schedule;
+
+pub use coarsen::{Block, CoarseDag, CoarsenOptions};
+pub use elastic::ScheduledSolver;
+pub use partition::{Partition, PartitionOptions};
+pub use schedule::{Schedule, ScheduleStats};
+
+/// Default work-units per coarsened block (`sched_block_target`).
+pub const DEFAULT_BLOCK_TARGET: usize = 256;
+/// Default lookahead window in blocks (`sched_stale_window`).
+pub const DEFAULT_STALE_WINDOW: usize = 4;
+
+/// Scheduling knobs as they travel with [`crate::transform::Strategy::Scheduled`].
+/// `None` fields defer to the coordinator config (`sched_block_target`,
+/// `sched_stale_window`) or, standalone, to the crate defaults.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SchedOptions {
+    /// work-units target per coarsened block
+    pub block_target: Option<usize>,
+    /// how many blocks past a blocked frontier a worker may look ahead
+    /// (0 = strict in-order execution with point-to-point waits)
+    pub stale_window: Option<usize>,
+}
+
+impl SchedOptions {
+    pub fn block_target(&self) -> usize {
+        self.block_target.unwrap_or(DEFAULT_BLOCK_TARGET).max(1)
+    }
+
+    pub fn stale_window(&self) -> usize {
+        self.stale_window.unwrap_or(DEFAULT_STALE_WINDOW)
+    }
+
+    /// Fill unset fields from `fallback` (the coordinator threads its
+    /// config defaults through here).
+    pub fn or(self, fallback: SchedOptions) -> SchedOptions {
+        SchedOptions {
+            block_target: self.block_target.or(fallback.block_target),
+            stale_window: self.stale_window.or(fallback.stale_window),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn options_resolution() {
+        let d = SchedOptions::default();
+        assert_eq!(d.block_target(), DEFAULT_BLOCK_TARGET);
+        assert_eq!(d.stale_window(), DEFAULT_STALE_WINDOW);
+        let explicit = SchedOptions {
+            block_target: Some(32),
+            stale_window: Some(0),
+        };
+        assert_eq!(explicit.block_target(), 32);
+        assert_eq!(explicit.stale_window(), 0);
+        // `or` keeps explicit values, fills gaps from the fallback.
+        let cfg = SchedOptions {
+            block_target: Some(512),
+            stale_window: Some(9),
+        };
+        let merged = SchedOptions {
+            block_target: Some(32),
+            stale_window: None,
+        }
+        .or(cfg);
+        assert_eq!(merged.block_target(), 32);
+        assert_eq!(merged.stale_window(), 9);
+        // A zero target is clamped rather than dividing by zero later.
+        assert_eq!(
+            SchedOptions {
+                block_target: Some(0),
+                stale_window: None
+            }
+            .block_target(),
+            1
+        );
+    }
+}

@@ -1,0 +1,210 @@
+//! Block-to-worker assignment: greedy ETF (earliest-task-first) list
+//! scheduling over the coarsened DAG.
+//!
+//! Blocks are visited in the coarse DAG's topological order; each is
+//! placed on the worker where it can *start earliest*, modelling a fixed
+//! communication delay on every cross-worker dependency edge. Ties break
+//! toward the lighter-loaded, then lower-numbered worker, so the
+//! partition is deterministic. The edge cut (dependency edges whose
+//! endpoints land on different workers) is the number of point-to-point
+//! waits the elastic executor will perform — the quantity this placement
+//! trades against per-worker load balance.
+
+use crate::sched::coarsen::CoarseDag;
+
+/// Knobs for [`partition`].
+#[derive(Debug, Clone, Copy)]
+pub struct PartitionOptions {
+    pub workers: usize,
+    /// modelled cost of a cross-worker dependency edge, in the same
+    /// abstract work units as block cost (a point-to-point wait is much
+    /// cheaper than a full barrier — cf. `tuner::cost_model::SYNC_COST`)
+    pub comm_cost: f64,
+}
+
+impl Default for PartitionOptions {
+    fn default() -> Self {
+        PartitionOptions {
+            workers: 4,
+            comm_cost: 8.0,
+        }
+    }
+}
+
+/// The placement: worker per block plus the balance/cut summary.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub worker_of: Vec<u32>,
+    /// summed block cost per worker
+    pub loads: Vec<u64>,
+    /// dependency edges crossing workers
+    pub cut_edges: usize,
+    /// modelled finish time of the last block (ETF makespan estimate)
+    pub makespan: f64,
+}
+
+impl Partition {
+    pub fn max_load(&self) -> u64 {
+        self.loads.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Greedy ETF placement of `dag`'s blocks onto `opts.workers` workers.
+pub fn partition(dag: &CoarseDag, opts: &PartitionOptions) -> Partition {
+    let workers = opts.workers.max(1);
+    let nb = dag.num_blocks();
+    let mut worker_of = vec![0u32; nb];
+    let mut loads = vec![0u64; workers];
+    let mut ready = vec![0.0f64; workers]; // per-worker earliest free time
+    let mut finish = vec![0.0f64; nb];
+    let mut makespan = 0.0f64;
+
+    for b in 0..nb {
+        // Earliest start on each worker: the worker frees up, and every
+        // predecessor has finished (plus the communication delay when the
+        // predecessor lives elsewhere).
+        let mut best_w = 0usize;
+        let mut best_start = f64::INFINITY;
+        for w in 0..workers {
+            let mut start = ready[w];
+            for &p in dag.preds_of(b) {
+                let p = p as usize;
+                let arrival = if worker_of[p] as usize == w {
+                    finish[p]
+                } else {
+                    finish[p] + opts.comm_cost
+                };
+                start = start.max(arrival);
+            }
+            let better = start < best_start
+                || (start == best_start && loads[w] < loads[best_w]);
+            if better {
+                best_start = start;
+                best_w = w;
+            }
+        }
+        let cost = dag.blocks[b].cost as f64;
+        worker_of[b] = best_w as u32;
+        finish[b] = best_start + cost;
+        ready[best_w] = finish[b];
+        loads[best_w] += dag.blocks[b].cost;
+        makespan = makespan.max(finish[b]);
+    }
+
+    let mut cut_edges = 0usize;
+    for b in 0..nb {
+        for &p in dag.preds_of(b) {
+            if worker_of[p as usize] != worker_of[b] {
+                cut_edges += 1;
+            }
+        }
+    }
+
+    Partition {
+        worker_of,
+        loads,
+        cut_edges,
+        makespan,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::coarsen::{coarsen, CoarsenOptions};
+    use crate::sparse::generate;
+    use crate::transform::Strategy;
+
+    fn coarse(m: &crate::sparse::Csr, target: usize, workers: usize) -> CoarseDag {
+        let t = Strategy::None.apply(m);
+        coarsen(
+            m,
+            &t,
+            &CoarsenOptions {
+                block_target: target,
+                workers,
+            },
+        )
+    }
+
+    #[test]
+    fn chain_stays_on_one_worker() {
+        let m = generate::tridiagonal(100, &Default::default());
+        let d = coarse(&m, 64, 4);
+        let p = partition(&d, &PartitionOptions::default());
+        assert_eq!(p.worker_of.len(), 1);
+        assert_eq!(p.cut_edges, 0);
+        assert_eq!(p.max_load(), d.blocks[0].cost);
+        // Three workers idle: only one carries load.
+        assert_eq!(p.loads.iter().filter(|&&l| l > 0).count(), 1);
+    }
+
+    #[test]
+    fn independent_blocks_balance_across_workers() {
+        // Diagonal-only: every block independent — ETF must spread them.
+        let m = generate::banded(400, 3, 0.0, &Default::default());
+        let d = coarse(&m, 25, 4);
+        let p = partition(
+            &d,
+            &PartitionOptions {
+                workers: 4,
+                ..Default::default()
+            },
+        );
+        assert_eq!(p.cut_edges, 0);
+        let min = p.loads.iter().copied().min().unwrap();
+        let max = p.max_load();
+        assert!(max <= min + 2 * 25, "imbalanced: {:?}", p.loads);
+        assert!(p.loads.iter().all(|&l| l > 0), "idle worker: {:?}", p.loads);
+    }
+
+    #[test]
+    fn deterministic_placement() {
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.04));
+        let d = coarse(&m, 96, 3);
+        let o = PartitionOptions {
+            workers: 3,
+            ..Default::default()
+        };
+        let p1 = partition(&d, &o);
+        let p2 = partition(&d, &o);
+        assert_eq!(p1.worker_of, p2.worker_of);
+        assert_eq!(p1.loads, p2.loads);
+        assert_eq!(p1.cut_edges, p2.cut_edges);
+    }
+
+    #[test]
+    fn single_worker_has_no_cut() {
+        let m = generate::torso2_like(&generate::GenOptions::with_scale(0.02));
+        let d = coarse(&m, 64, 1);
+        let p = partition(
+            &d,
+            &PartitionOptions {
+                workers: 1,
+                ..Default::default()
+            },
+        );
+        assert_eq!(p.cut_edges, 0);
+        assert_eq!(p.loads.len(), 1);
+        assert_eq!(p.loads[0], d.blocks.iter().map(|b| b.cost).sum::<u64>());
+    }
+
+    #[test]
+    fn cut_counts_cross_worker_edges_exactly() {
+        let m = generate::random_lower(300, 4, 0.8, &Default::default());
+        let d = coarse(&m, 48, 3);
+        let p = partition(
+            &d,
+            &PartitionOptions {
+                workers: 3,
+                ..Default::default()
+            },
+        );
+        let manual: usize = (0..d.num_blocks())
+            .flat_map(|b| d.preds_of(b).iter().map(move |&q| (q, b)))
+            .filter(|&(q, b)| p.worker_of[q as usize] != p.worker_of[b])
+            .count();
+        assert_eq!(p.cut_edges, manual);
+        assert!(p.makespan > 0.0);
+    }
+}

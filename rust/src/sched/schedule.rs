@@ -1,0 +1,220 @@
+//! The executable schedule: coarsen + partition folded into the exact
+//! data the elastic executor consumes — per-worker ordered block lists
+//! and the block-predecessor lists behind the point-to-point waits.
+//!
+//! Construction is deterministic: the coarse DAG orders blocks by (head
+//! level, head row), ETF breaks ties by load then worker id, and every
+//! per-worker list inherits the global topological order. The same
+//! matrix, transform and options always produce the identical schedule
+//! (asserted by `rust/tests/proptests.rs`).
+
+use crate::sched::coarsen::{self, Block, CoarsenOptions};
+use crate::sched::partition::{self, PartitionOptions};
+use crate::sparse::Csr;
+use crate::transform::TransformResult;
+
+/// Summary of a built schedule (also surfaced through the coordinator
+/// metrics: blocks + cut edges against the level-set barrier count).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScheduleStats {
+    pub num_blocks: usize,
+    /// blocks produced by chain collapsing
+    pub chain_blocks: usize,
+    /// dependency edges crossing workers = point-to-point waits
+    pub cut_edges: usize,
+    /// heaviest per-worker summed block cost
+    pub max_worker_load: u64,
+    /// total work (paper cost model) across all blocks
+    pub total_cost: u64,
+    /// barriers the level-set executor would have used instead
+    pub levelset_barriers: usize,
+    pub workers: usize,
+}
+
+/// A static schedule for one (matrix, transform, worker-count) triple.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub nworkers: usize,
+    pub blocks: Vec<Block>,
+    pub worker_of: Vec<u32>,
+    /// block ids per worker, in execution (global topological) order
+    pub worker_lists: Vec<Vec<u32>>,
+    /// predecessors of block b: `preds[pred_ptr[b]..pred_ptr[b+1]]`
+    pub pred_ptr: Vec<usize>,
+    pub preds: Vec<u32>,
+    pub stats: ScheduleStats,
+}
+
+impl Schedule {
+    /// Build a schedule for executing the transformed system `(m, t)` on
+    /// `workers` threads with the given coarsening target.
+    pub fn build(m: &Csr, t: &TransformResult, workers: usize, block_target: usize) -> Schedule {
+        let workers = workers.max(1);
+        let dag = coarsen::coarsen(
+            m,
+            t,
+            &CoarsenOptions {
+                block_target: block_target.max(1),
+                workers,
+            },
+        );
+        let part = partition::partition(
+            &dag,
+            &PartitionOptions {
+                workers,
+                ..Default::default()
+            },
+        );
+        let mut worker_lists: Vec<Vec<u32>> = vec![Vec::new(); workers];
+        for (b, &w) in part.worker_of.iter().enumerate() {
+            worker_lists[w as usize].push(b as u32);
+        }
+        let stats = ScheduleStats {
+            num_blocks: dag.num_blocks(),
+            chain_blocks: dag.chain_blocks,
+            cut_edges: part.cut_edges,
+            max_worker_load: part.max_load(),
+            total_cost: dag.blocks.iter().map(|b| b.cost).sum(),
+            levelset_barriers: t.num_levels().saturating_sub(1),
+            workers,
+        };
+        Schedule {
+            nworkers: workers,
+            blocks: dag.blocks,
+            worker_of: part.worker_of,
+            worker_lists,
+            pred_ptr: dag.pred_ptr,
+            preds: dag.preds,
+            stats,
+        }
+    }
+
+    pub fn preds_of(&self, b: usize) -> &[u32] {
+        &self.preds[self.pred_ptr[b]..self.pred_ptr[b + 1]]
+    }
+
+    /// Verify the schedule's execution invariants against `(m, t)`:
+    /// blocks partition the rows, per-worker lists are topologically
+    /// ordered, and every cross-block row dependency has a matching block
+    /// edge. Used by tests; O(nnz).
+    pub fn validate(&self, m: &Csr, t: &TransformResult) -> Result<(), String> {
+        let mut block_of = vec![u32::MAX; m.nrows];
+        for (b, blk) in self.blocks.iter().enumerate() {
+            for &r in &blk.rows {
+                if block_of[r as usize] != u32::MAX {
+                    return Err(format!("row {r} in two blocks"));
+                }
+                block_of[r as usize] = b as u32;
+            }
+        }
+        if block_of.iter().any(|&b| b == u32::MAX) {
+            return Err("row missing from schedule".into());
+        }
+        for list in &self.worker_lists {
+            if list.windows(2).any(|w| w[0] >= w[1]) {
+                return Err("worker list not topologically ordered".into());
+            }
+        }
+        for i in 0..m.nrows {
+            let bi = block_of[i];
+            let mut err = None;
+            coarsen::for_each_dep(m, t, i, |c| {
+                let bc = block_of[c as usize];
+                if bc != bi && err.is_none() {
+                    if bc > bi {
+                        err = Some(format!("edge {bc} -> {bi} not topological"));
+                    } else if !self.preds_of(bi as usize).contains(&bc) {
+                        err = Some(format!("missing block edge {bc} -> {bi}"));
+                    }
+                }
+            });
+            if let Some(e) = err {
+                return Err(e);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate;
+    use crate::transform::Strategy;
+
+    #[test]
+    fn build_and_validate_across_structures() {
+        for (m, strat) in [
+            (generate::tridiagonal(150, &Default::default()), "none"),
+            (
+                generate::lung2_like(&generate::GenOptions::with_scale(0.05)),
+                "none",
+            ),
+            (
+                generate::lung2_like(&generate::GenOptions::with_scale(0.05)),
+                "avgcost",
+            ),
+            (
+                generate::random_lower(300, 4, 0.8, &Default::default()),
+                "manual:5",
+            ),
+        ] {
+            let t = Strategy::parse(strat).unwrap().apply(&m);
+            let s = Schedule::build(&m, &t, 4, 128);
+            s.validate(&m, &t).unwrap();
+            assert_eq!(s.stats.num_blocks, s.blocks.len());
+            assert_eq!(
+                s.stats.total_cost,
+                t.row_costs.iter().sum::<u64>(),
+                "coarsening must preserve total work"
+            );
+            let listed: usize = s.worker_lists.iter().map(Vec::len).sum();
+            assert_eq!(listed, s.blocks.len());
+        }
+    }
+
+    #[test]
+    fn chain_schedule_has_no_waits() {
+        let m = generate::tridiagonal(200, &Default::default());
+        let t = Strategy::None.apply(&m);
+        let s = Schedule::build(&m, &t, 8, 64);
+        assert_eq!(s.stats.num_blocks, 1);
+        assert_eq!(s.stats.cut_edges, 0);
+        assert_eq!(s.stats.levelset_barriers, 199);
+        assert_eq!(s.stats.chain_blocks, 1);
+    }
+
+    #[test]
+    fn stats_compare_against_levelset_barriers() {
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
+        let t = Strategy::None.apply(&m);
+        let s = Schedule::build(&m, &t, 4, 128);
+        // The whole point: far fewer synchronization points than barriers
+        // would imply, because most edges stay worker-local.
+        assert!(s.stats.num_blocks < m.nrows / 2);
+        assert!(s.stats.levelset_barriers > 0);
+        assert!(s.stats.max_worker_load <= s.stats.total_cost);
+    }
+
+    #[test]
+    fn deterministic_construction() {
+        let m = generate::torso2_like(&generate::GenOptions::with_scale(0.02));
+        let t = Strategy::parse("avgcost").unwrap().apply(&m);
+        let a = Schedule::build(&m, &t, 3, 96);
+        let b = Schedule::build(&m, &t, 3, 96);
+        assert_eq!(a.blocks, b.blocks);
+        assert_eq!(a.worker_of, b.worker_of);
+        assert_eq!(a.worker_lists, b.worker_lists);
+        assert_eq!(a.preds, b.preds);
+        assert_eq!(a.stats, b.stats);
+    }
+
+    #[test]
+    fn empty_matrix_schedule() {
+        let m = Csr::new(0, 0, vec![0], vec![], vec![]).unwrap();
+        let t = Strategy::None.apply(&m);
+        let s = Schedule::build(&m, &t, 4, 64);
+        assert_eq!(s.stats.num_blocks, 0);
+        s.validate(&m, &t).unwrap();
+    }
+}

@@ -1,0 +1,196 @@
+//! Execution-mode dispatch: one enum over every way the crate can
+//! execute a prepared system, so the serving pipeline, the tuner race and
+//! the CLI all build and time solvers through a single entry point.
+//!
+//! A [`crate::transform::Strategy`] now decides two things: how the
+//! system is *rewritten* (the transform) and how it is *executed*. The
+//! rewriting strategies (`none`/`avgcost`/`manual`/`guarded`) all execute
+//! on the level-set [`TransformedSolver`]; the execution strategies map
+//! to their own backends:
+//!
+//! * `scheduled` — [`ScheduledSolver`]: coarsened static schedule with
+//!   elastic point-to-point waits (see [`crate::sched`]).
+//! * `syncfree`  — [`SyncFreeSolver`]: atomic dependency counters, no
+//!   barriers at all.
+//! * `reorder`   — [`ReorderedSolver`]: level-sorted symmetric
+//!   permutation for locality, level-set execution over the permuted
+//!   system, solutions mapped back.
+
+use std::sync::Arc;
+
+use crate::error::Error;
+use crate::graph::{Dag, Levels};
+use crate::sched::{SchedOptions, ScheduledSolver};
+use crate::solver::executor::TransformedSolver;
+use crate::solver::pool::Pool;
+use crate::solver::syncfree::SyncFreeSolver;
+use crate::sparse::reorder::{self, Permutation};
+use crate::sparse::Csr;
+use crate::transform::{Strategy, TransformResult};
+
+/// Level-set execution over the level-sorted permutation `P L Pᵀ`:
+/// `x = Pᵀ solve(P L Pᵀ, P b)`. The permuted system's levels are
+/// contiguous id ranges, so level solves stream consecutive memory.
+pub struct ReorderedSolver {
+    pub perm: Permutation,
+    inner: TransformedSolver,
+}
+
+impl ReorderedSolver {
+    pub fn build(m: &Arc<Csr>, pool: Arc<Pool>) -> Result<ReorderedSolver, Error> {
+        let lv = Levels::build(m);
+        let perm = reorder::level_sort(&lv);
+        let pm = reorder::permute_symmetric(m, &perm)?;
+        let t = TransformResult::identity(&pm);
+        let inner = TransformedSolver::new(Arc::new(pm), Arc::new(t), pool);
+        Ok(ReorderedSolver { perm, inner })
+    }
+
+    pub fn solve_into(&self, b: &[f64], x: &mut [f64]) {
+        let pb = self.perm.apply(b);
+        let px = self.inner.solve(&pb);
+        for (new, &old) in self.perm.perm.iter().enumerate() {
+            x[old as usize] = px[new];
+        }
+    }
+}
+
+/// A built execution backend for one prepared `(matrix, transform)`.
+pub enum ExecSolver {
+    Transformed(TransformedSolver),
+    Scheduled(ScheduledSolver),
+    SyncFree(SyncFreeSolver),
+    Reordered(ReorderedSolver),
+}
+
+impl ExecSolver {
+    /// Build the executor the strategy calls for. `sched_fallback` fills
+    /// any `SchedOptions` fields the strategy left unset (the coordinator
+    /// passes its config defaults; standalone callers pass
+    /// `SchedOptions::default()`).
+    pub fn build(
+        m: Arc<Csr>,
+        t: Arc<TransformResult>,
+        strategy: &Strategy,
+        pool: Arc<Pool>,
+        sched_fallback: SchedOptions,
+    ) -> Result<ExecSolver, Error> {
+        Ok(match strategy {
+            Strategy::Scheduled(o) => {
+                ExecSolver::Scheduled(ScheduledSolver::new(m, t, pool, &o.or(sched_fallback)))
+            }
+            Strategy::Syncfree => {
+                let dag = Dag::build(&m);
+                ExecSolver::SyncFree(SyncFreeSolver::new(m, Arc::new(dag), pool))
+            }
+            Strategy::Reorder => ExecSolver::Reordered(ReorderedSolver::build(&m, pool)?),
+            _ => ExecSolver::Transformed(TransformedSolver::new(m, t, pool)),
+        })
+    }
+
+    pub fn solve_into(&self, b: &[f64], x: &mut [f64]) {
+        match self {
+            ExecSolver::Transformed(s) => s.solve_into(b, x),
+            ExecSolver::Scheduled(s) => s.solve_into(b, x),
+            ExecSolver::SyncFree(s) => s.solve_into(b, x),
+            ExecSolver::Reordered(s) => s.solve_into(b, x),
+        }
+    }
+
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = match self {
+            ExecSolver::Transformed(s) => s.m.nrows,
+            ExecSolver::Scheduled(s) => s.m.nrows,
+            ExecSolver::SyncFree(s) => s.m.nrows,
+            ExecSolver::Reordered(s) => s.perm.perm.len(),
+        };
+        let mut x = vec![0.0; n];
+        self.solve_into(b, &mut x);
+        x
+    }
+
+    /// Execution-mode label for logs and metrics.
+    pub fn mode(&self) -> &'static str {
+        match self {
+            ExecSolver::Transformed(_) => "levelset",
+            ExecSolver::Scheduled(_) => "scheduled",
+            ExecSolver::SyncFree(_) => "syncfree",
+            ExecSolver::Reordered(_) => "reordered",
+        }
+    }
+
+    /// The scheduled backend, when that is what this is (the coordinator
+    /// aggregates schedule stats and elastic wait counters from here).
+    pub fn scheduled(&self) -> Option<&ScheduledSolver> {
+        match self {
+            ExecSolver::Scheduled(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate;
+    use crate::util::prop::assert_allclose;
+    use crate::util::rng::Rng;
+
+    fn check(strat: &str, m: Csr, seed: u64) {
+        let strategy = Strategy::parse(strat).unwrap();
+        let t = strategy.apply(&m);
+        let mut rng = Rng::new(seed);
+        let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        let x_ref = crate::solver::serial::solve(&m, &b);
+        let s = ExecSolver::build(
+            Arc::new(m),
+            Arc::new(t),
+            &strategy,
+            Arc::new(Pool::new(3)),
+            SchedOptions::default(),
+        )
+        .unwrap();
+        assert_allclose(&s.solve(&b), &x_ref, 1e-9, 1e-11).unwrap();
+    }
+
+    #[test]
+    fn every_mode_matches_serial() {
+        let gen = || generate::lung2_like(&generate::GenOptions::with_scale(0.04));
+        check("none", gen(), 1);
+        check("avgcost", gen(), 2);
+        check("scheduled", gen(), 3);
+        check("syncfree", gen(), 4);
+        check("reorder", gen(), 5);
+    }
+
+    #[test]
+    fn modes_are_labelled() {
+        let m = Arc::new(generate::tridiagonal(40, &Default::default()));
+        let pool = Arc::new(Pool::new(2));
+        for (name, mode) in [
+            ("none", "levelset"),
+            ("scheduled", "scheduled"),
+            ("syncfree", "syncfree"),
+            ("reorder", "reordered"),
+        ] {
+            let strategy = Strategy::parse(name).unwrap();
+            let t = Arc::new(strategy.apply(&m));
+            let s = ExecSolver::build(
+                Arc::clone(&m),
+                t,
+                &strategy,
+                Arc::clone(&pool),
+                SchedOptions::default(),
+            )
+            .unwrap();
+            assert_eq!(s.mode(), mode);
+            assert_eq!(s.scheduled().is_some(), mode == "scheduled");
+        }
+    }
+
+    #[test]
+    fn reordered_solver_roundtrips_permutation() {
+        let m = generate::poisson2d_ilu(15, 15, &Default::default());
+        check("reorder", m, 9);
+    }
+}

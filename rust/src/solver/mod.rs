@@ -9,14 +9,22 @@
 //!   ([`crate::transform::TransformResult`]): rewritten rows run their
 //!   folded equations, original rows run off the CSR; serial and
 //!   level-parallel variants.
+//! * [`dispatch`] — [`dispatch::ExecSolver`]: one enum over every
+//!   execution mode (level-set, scheduled/elastic, sync-free, reordered)
+//!   so the pipeline, the tuner race and the CLI share one builder.
 //! * [`pool`]     — the persistent worker pool + barrier the parallel
 //!   backends share.
 //! * [`validate`] — residual / forward-error checks shared by tests,
 //!   examples and the stability experiment.
+//!
+//! The scheduled backend itself lives in [`crate::sched`].
 
+pub mod dispatch;
 pub mod executor;
 pub mod levelset;
 pub mod pool;
 pub mod serial;
 pub mod syncfree;
 pub mod validate;
+
+pub use dispatch::{ExecSolver, ReorderedSolver};

@@ -1,6 +1,7 @@
 //! Strategy dispatch: the three columns of Table I plus the §III.A
 //! row-granular extensions, behind one enum.
 
+use crate::sched::SchedOptions;
 use crate::sparse::Csr;
 use crate::transform::avg_cost::{self, AvgCostOptions};
 use crate::transform::manual::{self, ManualOptions};
@@ -14,6 +15,15 @@ pub enum Strategy {
     AvgLevelCost(AvgCostOptions),
     /// the manual fixed-distance strategy of [12]
     Manual(ManualOptions),
+    /// no rewriting; execute via a coarsened static schedule with elastic
+    /// point-to-point waits (`crate::sched`) instead of level barriers
+    Scheduled(SchedOptions),
+    /// no rewriting; execute on the synchronization-free solver (atomic
+    /// dependency counters, no barriers)
+    Syncfree,
+    /// no rewriting; level-sorted symmetric permutation for locality,
+    /// level-set execution over the permuted system
+    Reorder,
     /// pick a strategy per matrix via the portfolio autotuner
     /// (`crate::tuner`): fingerprint -> plan cache -> cost model -> race
     Auto,
@@ -25,13 +35,23 @@ impl Strategy {
             Strategy::None => "no-rewriting",
             Strategy::AvgLevelCost(_) => "avgLevelCost",
             Strategy::Manual(_) => "manual",
+            Strategy::Scheduled(_) => "scheduled",
+            Strategy::Syncfree => "syncfree",
+            Strategy::Reorder => "reorder",
             Strategy::Auto => "auto",
         }
     }
 
+    /// Apply the *rewriting* side of the strategy. Execution-mode
+    /// strategies (`Scheduled`/`Syncfree`/`Reorder`) leave the system
+    /// unrewritten — their effect lives in how
+    /// [`crate::solver::ExecSolver`] executes the result.
     pub fn apply(&self, m: &Csr) -> TransformResult {
         match self {
-            Strategy::None => TransformResult::identity(m),
+            Strategy::None
+            | Strategy::Scheduled(_)
+            | Strategy::Syncfree
+            | Strategy::Reorder => TransformResult::identity(m),
             Strategy::AvgLevelCost(o) => avg_cost::apply(m, o),
             Strategy::Manual(o) => manual::apply(m, o),
             // Standalone `auto` runs a fresh default tuner (no shared
@@ -67,7 +87,9 @@ impl Strategy {
     }
 
     /// Parse a CLI name:
-    /// `none | avgcost | manual[:distance] | guarded[:distance[:mag]] | auto`.
+    /// `none | avgcost | manual[:distance] | guarded[:distance[:mag]] |
+    /// scheduled[:block_target[:stale_window]] | syncfree | reorder |
+    /// auto`.
     pub fn parse(s: &str) -> Result<Strategy, String> {
         let s = s.trim();
         if s.eq_ignore_ascii_case("none") || s.eq_ignore_ascii_case("no-rewriting") {
@@ -78,6 +100,33 @@ impl Strategy {
         }
         if s.eq_ignore_ascii_case("auto") {
             return Ok(Strategy::Auto);
+        }
+        if s.eq_ignore_ascii_case("syncfree") || s.eq_ignore_ascii_case("sync-free") {
+            return Ok(Strategy::Syncfree);
+        }
+        if s.eq_ignore_ascii_case("reorder") || s.eq_ignore_ascii_case("level-sort") {
+            return Ok(Strategy::Reorder);
+        }
+        if let Some(rest) = s.strip_prefix("scheduled").or_else(|| s.strip_prefix("sched")) {
+            let mut parts = rest.trim_start_matches(':').split(':');
+            let block_target = match parts.next() {
+                None | Some("") => None,
+                Some(v) => Some(
+                    v.parse::<usize>()
+                        .map_err(|_| format!("bad scheduled block target '{v}'"))?,
+                ),
+            };
+            let stale_window = match parts.next() {
+                None | Some("") => None,
+                Some(v) => Some(
+                    v.parse::<usize>()
+                        .map_err(|_| format!("bad scheduled stale window '{v}'"))?,
+                ),
+            };
+            return Ok(Strategy::Scheduled(SchedOptions {
+                block_target,
+                stale_window,
+            }));
         }
         if let Some(rest) = s.strip_prefix("guarded") {
             let mut parts = rest.trim_start_matches(':').split(':');
@@ -108,7 +157,8 @@ impl Strategy {
             return Ok(Strategy::Manual(ManualOptions { distance }));
         }
         Err(format!(
-            "unknown strategy '{s}' (expected none | avgcost | manual[:d] | guarded[:d[:m]] | auto)"
+            "unknown strategy '{s}' (expected none | avgcost | manual[:d] | guarded[:d[:m]] | \
+             scheduled[:t[:w]] | syncfree | reorder | auto)"
         ))
     }
 }
@@ -204,6 +254,49 @@ mod tests {
         assert!(Strategy::parse("bogus").is_err());
         assert!(Strategy::parse("manual:x").is_err());
         assert!(Strategy::parse("guarded:x").is_err());
+    }
+
+    #[test]
+    fn parse_execution_strategies() {
+        assert!(matches!(
+            Strategy::parse("syncfree").unwrap(),
+            Strategy::Syncfree
+        ));
+        assert!(matches!(
+            Strategy::parse("reorder").unwrap(),
+            Strategy::Reorder
+        ));
+        match Strategy::parse("scheduled").unwrap() {
+            Strategy::Scheduled(o) => {
+                assert_eq!(o.block_target, None);
+                assert_eq!(o.stale_window, None);
+            }
+            other => panic!("{other:?}"),
+        }
+        match Strategy::parse("scheduled:128:2").unwrap() {
+            Strategy::Scheduled(o) => {
+                assert_eq!(o.block_target, Some(128));
+                assert_eq!(o.stale_window, Some(2));
+            }
+            other => panic!("{other:?}"),
+        }
+        match Strategy::parse("sched:64").unwrap() {
+            Strategy::Scheduled(o) => {
+                assert_eq!(o.block_target, Some(64));
+                assert_eq!(o.stale_window, None);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(Strategy::parse("scheduled:x").is_err());
+        assert!(Strategy::parse("scheduled:1:y").is_err());
+        assert_eq!(Strategy::parse("scheduled").unwrap().name(), "scheduled");
+        // Execution strategies leave the system unrewritten.
+        let m = crate::sparse::generate::tridiagonal(30, &Default::default());
+        for s in ["scheduled", "syncfree", "reorder"] {
+            let t = Strategy::parse(s).unwrap().apply(&m);
+            assert_eq!(t.stats.rows_rewritten, 0, "{s}");
+            assert_eq!(t.num_levels(), 30, "{s}");
+        }
     }
 
     #[test]

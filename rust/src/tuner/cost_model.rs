@@ -15,12 +15,33 @@
 
 use std::collections::BTreeMap;
 
+use crate::sched::SchedOptions;
 use crate::transform::Strategy;
 use crate::tuner::features::MatrixFeatures;
 
 /// Modelled cost of one level-set synchronization, in the same abstract
 /// work units as the paper's row cost (2*nnz-1 flops-equivalents).
 pub const SYNC_COST: f64 = 60.0;
+
+/// Modelled cost of one elastic point-to-point wait (a cross-worker block
+/// edge in a schedule): far cheaper than a full barrier.
+pub const WAIT_COST: f64 = 8.0;
+
+/// Modelled per-block dispatch overhead of scheduled execution (ready
+/// check + done-flag publish).
+pub const BLOCK_COST: f64 = 2.0;
+
+/// Modelled per-edge cost of the sync-free solver's atomic counter
+/// traffic.
+pub const ATOMIC_COST: f64 = 2.0;
+
+/// Modelled per-row cost of permuting b in / x out for the reordering
+/// strategy.
+pub const PERM_COST: f64 = 0.5;
+
+/// Work multiplier the level-sorted reordering is credited with (the
+/// locality gain of contiguous levels).
+pub const REORDER_LOCALITY: f64 = 0.97;
 
 /// Estimated shape of a transformed system.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -64,6 +85,27 @@ impl CostModel {
         match Strategy::parse(strategy).ok()? {
             Strategy::None => Some(base),
             Strategy::Auto => None,
+            // Scheduled execution removes levels from the cost picture:
+            // the "plan shape" is its estimated block count at unchanged
+            // total work (see `sched_shape`).
+            Strategy::Scheduled(o) => {
+                let (blocks, _, _) = self.sched_shape(f, &o);
+                Some(PlanEstimate {
+                    levels: blocks as usize,
+                    work: f.total_cost as f64,
+                })
+            }
+            // Sync-free execution has no level structure at all.
+            Strategy::Syncfree => Some(PlanEstimate {
+                levels: 1,
+                work: f.total_cost as f64,
+            }),
+            // Reordering keeps the levels, trims the work by the modelled
+            // locality gain.
+            Strategy::Reorder => Some(PlanEstimate {
+                levels: f.num_levels,
+                work: f.total_cost as f64 * REORDER_LOCALITY,
+            }),
             Strategy::AvgLevelCost(_) => {
                 // avgcost merges cost-thin levels into targets until each
                 // target reaches avgLevelCost; with fewer than 2 thin
@@ -102,11 +144,52 @@ impl CostModel {
         }
     }
 
+    /// Estimated schedule shape for the scheduled strategy:
+    /// `(blocks, usable parallelism, cross-worker edge cut)`. Blocks come
+    /// from the coarsening target; the usable parallelism is capped by
+    /// the mean level width (a serial chain collapses onto one worker);
+    /// the cut scales with how many block edges must cross workers at
+    /// that parallelism.
+    fn sched_shape(&self, f: &MatrixFeatures, o: &SchedOptions) -> (f64, f64, f64) {
+        let target = o.block_target() as f64;
+        let blocks = (f.total_cost as f64 / target)
+            .ceil()
+            .clamp(1.0, f.nrows.max(1) as f64);
+        let p = (self.workers as f64)
+            .min(f.mean_level_width.max(1.0))
+            .max(1.0);
+        let cut = blocks * f.avg_indegree.min(4.0) * (p - 1.0) / p;
+        (blocks, p, cut)
+    }
+
     /// Closed-form prediction without the calibration multiplier. This is
     /// what measured timings must be recorded against — recording against
     /// the calibrated value would make the feedback loop converge to the
     /// square root of the model error instead of cancelling it.
     pub fn predict_raw(&self, f: &MatrixFeatures, strategy: &str) -> Option<f64> {
+        // Execution strategies replace the barrier-per-level cost shape
+        // of `plan_cost` with their own synchronization model.
+        match Strategy::parse(strategy).ok()? {
+            Strategy::Scheduled(o) => {
+                let (blocks, p, cut) = self.sched_shape(f, &o);
+                return Some(f.total_cost as f64 / p + blocks * BLOCK_COST + cut * WAIT_COST);
+            }
+            Strategy::Syncfree => {
+                let p = (self.workers as f64)
+                    .min(f.mean_level_width.max(1.0))
+                    .max(1.0);
+                let edges = f.nnz.saturating_sub(f.nrows) as f64;
+                return Some(f.total_cost as f64 / p + edges * ATOMIC_COST);
+            }
+            Strategy::Reorder => {
+                let est = self.estimate(f, strategy)?;
+                return Some(
+                    plan_cost(est.levels, est.work, f.nrows, self.workers)
+                        + f.nrows as f64 * PERM_COST,
+                );
+            }
+            _ => {}
+        }
         let est = self.estimate(f, strategy)?;
         Some(plan_cost(est.levels, est.work, f.nrows, self.workers))
     }
@@ -242,6 +325,51 @@ mod tests {
         }
         let cal = cm.calibration("none");
         assert!((cal - 10.0).abs() < 0.5, "calibration {cal}, want ~10");
+    }
+
+    #[test]
+    fn scheduled_wins_the_serial_chain() {
+        // A uniform chain is the scheduled strategy's home game: chains
+        // collapse into blocks with no barriers and (at parallelism 1) no
+        // cross-worker waits, so the model must rank it ahead of every
+        // barrier-paying strategy.
+        let f = feats(&generate::tridiagonal(400, &Default::default()));
+        let cm = CostModel::new(4);
+        let sched = cm.predict(&f, "scheduled").unwrap();
+        for other in ["none", "avgcost", "manual:10", "syncfree"] {
+            let c = cm.predict(&f, other).unwrap();
+            assert!(sched < c, "scheduled {sched} not < {other} {c}");
+        }
+    }
+
+    #[test]
+    fn execution_strategies_have_estimates_and_predictions() {
+        let f = feats(&generate::lung2_like(&GenOptions::with_scale(0.05)));
+        let cm = CostModel::new(4);
+        for s in ["scheduled", "scheduled:64:2", "syncfree", "reorder"] {
+            let est = cm.estimate(&f, s).expect(s);
+            assert!(est.levels >= 1, "{s}");
+            assert!(est.work > 0.0, "{s}");
+            assert!(cm.predict(&f, s).unwrap().is_finite(), "{s}");
+        }
+        // The three execution strategies estimate distinct plan shapes,
+        // so the shortlist dedup never collapses them together.
+        let sched = cm.estimate(&f, "scheduled").unwrap();
+        let syncfree = cm.estimate(&f, "syncfree").unwrap();
+        let reorder = cm.estimate(&f, "reorder").unwrap();
+        assert_ne!(sched, syncfree);
+        assert_ne!(sched, reorder);
+        assert_ne!(syncfree, reorder);
+        // Reorder keeps the level structure: it differs from `none` only
+        // by the modelled locality gain minus the per-solve permutation
+        // cost, so the two predictions stay within one permutation pass
+        // of each other (the race, not the seed model, settles the call).
+        let none = cm.predict(&f, "none").unwrap();
+        let re = cm.predict(&f, "reorder").unwrap();
+        assert!(
+            (re - none).abs() <= f.nrows as f64 * PERM_COST + 1.0,
+            "reorder {re} vs none {none}"
+        );
     }
 
     #[test]

@@ -38,9 +38,19 @@ pub use fingerprint::Fingerprint;
 pub use plan_cache::{CachedPlan, PlanCache, PLAN_SCHEMA_VERSION};
 pub use race::{RaceOptions, RaceOutcome};
 
-/// The default strategy portfolio: the paper's three columns plus the
-/// guarded variant of §III.A.
-pub const DEFAULT_CANDIDATES: [&str; 4] = ["none", "avgcost", "manual:10", "guarded:20"];
+/// The default strategy portfolio: the paper's three columns, the
+/// guarded variant of §III.A, and the execution strategies — the
+/// coarsened static schedule, the sync-free solver and the level-sorted
+/// reordering (ROADMAP "widen the portfolio").
+pub const DEFAULT_CANDIDATES: [&str; 7] = [
+    "none",
+    "avgcost",
+    "manual:10",
+    "guarded:20",
+    "scheduled",
+    "syncfree",
+    "reorder",
+];
 
 #[derive(Debug, Clone)]
 pub struct TunerOptions {
@@ -57,6 +67,13 @@ pub struct TunerOptions {
     pub cache_capacity: usize,
     /// JSON spill path; None keeps the cache in memory only
     pub cache_path: Option<PathBuf>,
+    /// seconds before a spilled same-schema plan expires and is dropped
+    /// on load (0 = plans never expire by age)
+    pub cache_ttl_secs: u64,
+    /// scheduling knobs raced `scheduled` candidates run with — the
+    /// coordinator passes its config defaults so the race measures the
+    /// exact schedule serving would build
+    pub sched: crate::sched::SchedOptions,
     /// RHS seed for racing
     pub seed: u64,
     /// worker pool shared with the caller (the serving pipeline threads
@@ -79,6 +96,8 @@ impl Default for TunerOptions {
                 .min(8),
             cache_capacity: 64,
             cache_path: None,
+            cache_ttl_secs: 0,
+            sched: Default::default(),
             seed: 0x7E57,
             pool: None,
         }
@@ -123,7 +142,9 @@ impl Tuner {
     pub fn new(opts: TunerOptions) -> Tuner {
         let model = CostModel::new(opts.workers);
         let cache = match &opts.cache_path {
-            Some(path) => PlanCache::with_disk(opts.cache_capacity, path),
+            Some(path) => {
+                PlanCache::with_disk_ttl(opts.cache_capacity, path, opts.cache_ttl_secs)
+            }
             None => PlanCache::new(opts.cache_capacity),
         };
         Tuner { opts, model, cache }
@@ -229,10 +250,22 @@ impl Tuner {
             let Some(est) = self.model.estimate(&features, s) else {
                 continue;
             };
-            if seen.contains(&est) {
-                continue; // same predicted plan shape: racing it adds nothing
+            // "Same predicted plan shape => racing adds nothing" only
+            // holds between candidates that execute on the level-set
+            // executor. Execution strategies (scheduled/syncfree/reorder)
+            // run on their own backends, so an estimate that happens to
+            // equal another candidate's does NOT make their race
+            // redundant — they bypass the dedup entirely.
+            let dedupable = !matches!(
+                Strategy::parse(s),
+                Ok(Strategy::Scheduled(_) | Strategy::Syncfree | Strategy::Reorder)
+            );
+            if dedupable {
+                if seen.contains(&est) {
+                    continue;
+                }
+                seen.push(est);
             }
-            seen.push(est);
             shortlist.push(s.clone());
         }
         if shortlist.is_empty() {
@@ -242,6 +275,7 @@ impl Tuner {
             solves: self.opts.race_solves,
             workers: self.opts.workers,
             seed: self.opts.seed,
+            sched: self.opts.sched,
             pool: self.opts.pool.clone(),
         };
         let mut outcome = race::race(m, &shortlist, &race_opts).map_err(Error::Runtime)?;
@@ -275,6 +309,7 @@ impl Tuner {
                     .map(|l| (l.strategy.clone(), l.solve_us))
                     .collect(),
                 nrows: m.nrows,
+                created_unix: plan_cache::now_unix(),
             },
         );
 
@@ -359,6 +394,7 @@ mod tests {
                 solve_us: 1.0,
                 timings: Vec::new(),
                 nrows: 80,
+                created_unix: plan_cache::now_unix(),
             },
         );
         // The poisoned entry must not brick `auto`: choose re-races and
@@ -369,6 +405,31 @@ mod tests {
         let p2 = tuner.choose(&m).unwrap();
         assert_eq!(p2.source, PlanSource::CacheHit);
         assert_eq!(p2.strategy_name, p.strategy_name);
+    }
+
+    #[test]
+    fn execution_strategies_bypass_shape_dedup() {
+        // On a tiny chain, `scheduled` and `syncfree` estimate the same
+        // plan shape ({1 block/level, same work}) — but they execute on
+        // different backends, so BOTH must reach the race.
+        let m = generate::tridiagonal(20, &Default::default());
+        let mut tuner = Tuner::new(TunerOptions {
+            candidates: vec!["scheduled".to_string(), "syncfree".to_string()],
+            top_k: 2,
+            race_solves: 1,
+            workers: 2,
+            ..Default::default()
+        });
+        let p = tuner.choose(&m).unwrap();
+        let lanes: Vec<&str> = p
+            .race
+            .as_ref()
+            .expect("raced")
+            .lanes
+            .iter()
+            .map(|l| l.strategy.as_str())
+            .collect();
+        assert_eq!(lanes.len(), 2, "dedup swallowed a backend: {lanes:?}");
     }
 
     #[test]

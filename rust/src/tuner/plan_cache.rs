@@ -34,11 +34,25 @@ pub struct CachedPlan {
     pub timings: Vec<(String, f64)>,
     /// rows of the fingerprinted matrix (sanity check / observability)
     pub nrows: usize,
+    /// wall-clock seconds (unix) when the plan was raced; drives the
+    /// `tuner_cache_ttl` age expiry on load
+    pub created_unix: u64,
+}
+
+/// Current wall-clock as unix seconds (0 if the clock is before the
+/// epoch, which only breaks age expiry, never correctness).
+pub fn now_unix() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
 }
 
 pub struct PlanCache {
     capacity: usize,
     path: Option<PathBuf>,
+    /// age limit for loaded entries, seconds; 0 = no age expiry
+    ttl_secs: u64,
     /// fingerprint -> (LRU stamp, plan); higher stamp = more recent
     entries: BTreeMap<u64, (u64, CachedPlan)>,
     clock: u64,
@@ -52,6 +66,7 @@ impl PlanCache {
         PlanCache {
             capacity: capacity.max(1),
             path: None,
+            ttl_secs: 0,
             entries: BTreeMap::new(),
             clock: 0,
             hits: 0,
@@ -61,13 +76,28 @@ impl PlanCache {
 
     /// Cache backed by a JSON file: loads existing entries (a corrupt or
     /// missing file starts empty with a warning) and saves after every
-    /// insertion.
+    /// insertion. Spilled plans never expire by age.
     pub fn with_disk(capacity: usize, path: &Path) -> PlanCache {
+        Self::with_disk_ttl(capacity, path, 0)
+    }
+
+    /// [`PlanCache::with_disk`] with age expiry: same-schema entries older
+    /// than `ttl_secs` are dropped on load (a raced decision goes stale as
+    /// the machine, load mix and calibration drift — `tuner_cache_ttl`
+    /// bounds how long a win is trusted). `ttl_secs == 0` disables expiry.
+    pub fn with_disk_ttl(capacity: usize, path: &Path, ttl_secs: u64) -> PlanCache {
         let mut cache = PlanCache::new(capacity);
         cache.path = Some(path.to_path_buf());
+        cache.ttl_secs = ttl_secs;
         if path.exists() {
             match load_entries(path) {
-                Ok(entries) => {
+                Ok(mut entries) => {
+                    if ttl_secs > 0 {
+                        let now = now_unix();
+                        entries.retain(|_, (_, plan)| {
+                            now.saturating_sub(plan.created_unix) <= ttl_secs
+                        });
+                    }
                     cache.clock = entries.values().map(|&(s, _)| s).max().unwrap_or(0);
                     cache.entries = entries;
                     cache.trim();
@@ -164,6 +194,7 @@ impl PlanCache {
                 ("nrows", Json::Num(plan.nrows as f64)),
                 ("stamp", Json::Num(*stamp as f64)),
                 ("schema", Json::Num(PLAN_SCHEMA_VERSION as f64)),
+                ("created", Json::Num(plan.created_unix as f64)),
                 ("timings", Json::Arr(timings)),
             ]));
         }
@@ -223,6 +254,7 @@ fn load_entries(path: &Path) -> Result<BTreeMap<u64, (u64, CachedPlan)>, Error> 
         let solve_us = item.get("solve_us").and_then(Json::as_f64).unwrap_or(0.0);
         let nrows = item.get("nrows").and_then(Json::as_usize).unwrap_or(0);
         let stamp = item.get("stamp").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        let created_unix = item.get("created").and_then(Json::as_f64).unwrap_or(0.0) as u64;
         let mut timings = Vec::new();
         if let Some(arr) = item.get("timings").and_then(Json::as_arr) {
             for pair in arr {
@@ -244,6 +276,7 @@ fn load_entries(path: &Path) -> Result<BTreeMap<u64, (u64, CachedPlan)>, Error> 
                     solve_us,
                     timings,
                     nrows,
+                    created_unix,
                 },
             ),
         );
@@ -261,6 +294,7 @@ mod tests {
             solve_us: us,
             timings: vec![("none".into(), us * 2.0), (strategy.to_string(), us)],
             nrows: 100,
+            created_unix: now_unix(),
         }
     }
 
@@ -365,6 +399,35 @@ mod tests {
         c.put(fp(0xDD), plan("guarded:20", 4.0));
         let reread = PlanCache::with_disk(8, &path);
         assert_eq!(reread.len(), 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn ttl_expires_old_entries_on_load() {
+        let path = std::env::temp_dir().join(format!(
+            "sptrsv_plan_cache_ttl_{}.json",
+            std::process::id()
+        ));
+        std::fs::remove_file(&path).ok();
+        {
+            let mut c = PlanCache::with_disk(8, &path);
+            let mut old = plan("manual:10", 5.0);
+            old.created_unix = now_unix().saturating_sub(10_000);
+            c.put(fp(1), old);
+            c.put(fp(2), plan("avgcost", 3.0)); // fresh
+        }
+        // Without a TTL both entries survive a reload.
+        let c = PlanCache::with_disk(8, &path);
+        assert_eq!(c.len(), 2);
+        // With a 1-hour TTL only the fresh entry survives; the stale one
+        // is dropped on load.
+        let mut c = PlanCache::with_disk_ttl(8, &path, 3600);
+        assert_eq!(c.len(), 1);
+        assert!(c.get(fp(1)).is_none());
+        assert_eq!(c.get(fp(2)).unwrap().strategy, "avgcost");
+        // A TTL far wider than the age keeps everything.
+        let c = PlanCache::with_disk_ttl(8, &path, 100_000);
+        assert_eq!(c.len(), 2);
         std::fs::remove_file(&path).ok();
     }
 

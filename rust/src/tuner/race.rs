@@ -10,7 +10,8 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::solver::executor::TransformedSolver;
+use crate::sched::SchedOptions;
+use crate::solver::dispatch::ExecSolver;
 use crate::solver::pool::Pool;
 use crate::sparse::Csr;
 use crate::transform::{Strategy, TransformResult};
@@ -24,6 +25,10 @@ pub struct RaceOptions {
     pub workers: usize,
     /// seed for the right-hand side used by every lane
     pub seed: u64,
+    /// scheduling knobs for `scheduled` lanes (filled where a candidate
+    /// leaves them unset), so the race measures the exact schedule the
+    /// caller would serve with
+    pub sched: SchedOptions,
     /// run raced solves on this shared pool (the serving pipeline's) so a
     /// plan-cache miss pays no thread spawn/teardown cost
     pub pool: Option<Arc<Pool>>,
@@ -35,6 +40,7 @@ impl Default for RaceOptions {
             solves: 3,
             workers: 4,
             seed: 0x7E57,
+            sched: SchedOptions::default(),
             pool: None,
         }
     }
@@ -88,12 +94,27 @@ pub fn race(m: &Arc<Csr>, candidates: &[String], opts: &RaceOptions) -> Result<R
             Ok(s) => s,
         };
         let t0 = Instant::now();
-        let t = strategy.apply(m);
-        let transform_ms = t0.elapsed().as_secs_f64() * 1e3;
-        let levels_after = t.stats.levels_after;
-        let total_cost_after = t.stats.total_level_cost_after;
+        let t_arc = Arc::new(strategy.apply(m));
+        let levels_after = t_arc.stats.levels_after;
+        let total_cost_after = t_arc.stats.total_level_cost_after;
 
-        let solver = TransformedSolver::new(Arc::clone(m), Arc::new(t), Arc::clone(&pool));
+        // Each lane runs on the backend its strategy actually uses
+        // (level-set executor, coarsened schedule, sync-free, reordered)
+        // — racing everything on the level-set executor would misprice
+        // the execution strategies. Schedule/permutation construction is
+        // part of the lane's analysis cost, so the transform clock covers
+        // the build too.
+        let solver = match ExecSolver::build(
+            Arc::clone(m),
+            Arc::clone(&t_arc),
+            &strategy,
+            Arc::clone(&pool),
+            opts.sched,
+        ) {
+            Ok(s) => s,
+            Err(_) => continue, // unraceable here (e.g. permutation failed)
+        };
+        let transform_ms = t0.elapsed().as_secs_f64() * 1e3;
         let mut x = vec![0.0; m.nrows];
         solver.solve_into(&b, &mut x); // warm-up: page in the plan
         let mut best = f64::INFINITY;
@@ -104,7 +125,6 @@ pub fn race(m: &Arc<Csr>, candidates: &[String], opts: &RaceOptions) -> Result<R
         }
         // Reclaim the transform from the solver for the tuner to reuse:
         // once the solver is dropped, the lane's Arc is the sole owner.
-        let t_arc = Arc::clone(&solver.t);
         drop(solver);
         let transform = Arc::try_unwrap(t_arc).ok();
         lanes.push(Lane {
@@ -175,6 +195,31 @@ mod tests {
         // worker threads were spawned or leaked by the race itself.
         drop(opts);
         assert_eq!(Arc::strong_count(&pool), 1);
+    }
+
+    #[test]
+    fn execution_strategies_race_on_their_own_backends() {
+        let m = Arc::new(generate::lung2_like(&GenOptions::with_scale(0.03)));
+        let opts = RaceOptions {
+            solves: 1,
+            workers: 2,
+            ..Default::default()
+        };
+        let out = race(
+            &m,
+            &names(&["scheduled:64:2", "syncfree", "reorder"]),
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(out.lanes.len(), 3);
+        for lane in &out.lanes {
+            assert!(lane.solve_us.is_finite() && lane.solve_us >= 0.0);
+            // Execution strategies never rewrite: the reclaimed transform
+            // is the identity.
+            let t = lane.transform.as_ref().expect("transform reclaimed");
+            assert_eq!(t.stats.rows_rewritten, 0);
+            t.validate(&m).unwrap();
+        }
     }
 
     #[test]

@@ -247,3 +247,84 @@ fn prop_substitution_order_independent() {
         Ok(())
     });
 }
+
+/// Scheduler: elastic execution of a coarsened schedule matches the
+/// serial solver on arbitrary lower-triangular matrices, across worker
+/// counts, block targets and staleness windows — including the
+/// unit-diagonal, serial-chain and dense-level corner shapes the
+/// coarsening special-cases.
+#[test]
+fn prop_scheduled_matches_serial() {
+    use sptrsv_gt::sched::{SchedOptions, ScheduledSolver};
+
+    check("scheduled-matches-serial", 40, |rng, case| {
+        let mut m = match case % 4 {
+            // Serial chain: collapses to one block, fully sequential.
+            0 => generate::tridiagonal(30 + rng.below(200), &Default::default()),
+            // Dense level(s): a shallow banded matrix, wide levels.
+            1 => generate::banded(50 + rng.below(200), 2 + rng.below(6), 0.3, &Default::default()),
+            // General random structure.
+            _ => random_matrix(rng, case),
+        };
+        if case % 3 == 0 {
+            // Unit diagonal: the folded inverse is exact, results must
+            // still track the serial solver bit-for-bit close.
+            for i in 0..m.nrows {
+                let d = m.indptr[i + 1] - 1;
+                m.data[d] = 1.0;
+            }
+        }
+        let t = random_strategy(rng).apply(&m);
+        let opts = SchedOptions {
+            block_target: Some(1 + rng.below(300)),
+            stale_window: Some(rng.below(9)),
+        };
+        let workers = 1 + rng.below(6);
+        let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-4.0, 4.0)).collect();
+        let x_ref = sptrsv_gt::solver::serial::solve(&m, &b);
+        let s = ScheduledSolver::from_parts(m, t, workers, &opts);
+        s.schedule.validate(&s.m, &s.t).map_err(|e| format!("schedule invalid: {e}"))?;
+        let x = s.solve(&b);
+        assert_allclose(&x, &x_ref, 1e-9, 1e-11)?;
+        // A second solve on the same solver must be bitwise identical:
+        // thread timing may reorder who computes a row, never its value.
+        if s.solve(&b) != x {
+            return Err("scheduled solve not deterministic across runs".into());
+        }
+        Ok(())
+    });
+}
+
+/// Schedule construction is a pure function of (matrix, transform,
+/// workers, block target): two builds agree structurally, and the block
+/// partition always covers every row exactly once.
+#[test]
+fn prop_schedule_construction_deterministic() {
+    use sptrsv_gt::sched::Schedule;
+
+    check("schedule-deterministic", 40, |rng, case| {
+        let m = random_matrix(rng, case);
+        let t = random_strategy(rng).apply(&m);
+        let workers = 1 + rng.below(6);
+        let target = 1 + rng.below(400);
+        let a = Schedule::build(&m, &t, workers, target);
+        let b = Schedule::build(&m, &t, workers, target);
+        if a.blocks != b.blocks
+            || a.worker_of != b.worker_of
+            || a.worker_lists != b.worker_lists
+            || a.preds != b.preds
+            || a.stats != b.stats
+        {
+            return Err("schedule construction not deterministic".into());
+        }
+        a.validate(&m, &t)?;
+        let rows_scheduled: usize = a.blocks.iter().map(|blk| blk.rows.len()).sum();
+        if rows_scheduled != m.nrows {
+            return Err(format!("{rows_scheduled} rows scheduled of {}", m.nrows));
+        }
+        if a.stats.total_cost != t.row_costs.iter().sum::<u64>() {
+            return Err("coarsening changed total work".into());
+        }
+        Ok(())
+    });
+}

@@ -224,3 +224,33 @@ fn auto_plans_solve_correctly_on_random_structures() {
             .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
     }
 }
+
+#[test]
+fn widened_portfolio_races_execution_strategies() {
+    use std::sync::Arc;
+
+    let m = generate::tridiagonal(300, &Default::default());
+    let mut tuner = Tuner::new(quick_opts());
+    let p = tuner.choose(&m).unwrap();
+    let names: Vec<&str> = p.predictions.iter().map(|(s, _)| s.as_str()).collect();
+    for s in ["scheduled", "syncfree", "reorder"] {
+        assert!(names.contains(&s), "{s} missing from {names:?}");
+    }
+    // A pure serial chain is the coarsened schedule's home game: the
+    // schedule-aware cost model must rank it first (chains collapse into
+    // blocks with no barriers and no cross-worker waits).
+    assert_eq!(names[0], "scheduled");
+    // Whatever the race measured fastest, the tuned plan must solve
+    // correctly on the backend its strategy calls for.
+    let solver = sptrsv_gt::solver::ExecSolver::build(
+        Arc::new(m.clone()),
+        Arc::new(p.transform),
+        &p.strategy,
+        Arc::new(sptrsv_gt::solver::pool::Pool::new(2)),
+        Default::default(),
+    )
+    .unwrap();
+    let b = vec![1.0; 300];
+    let x = solver.solve(&b);
+    assert!(m.residual_inf(&x, &b) < 1e-9);
+}
