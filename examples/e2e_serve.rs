@@ -14,7 +14,7 @@
 use sptrsv_gt::config::Config;
 use sptrsv_gt::coordinator::{Service, SolveOptions};
 use sptrsv_gt::sparse::generate::{self, GenOptions};
-use sptrsv_gt::transform::StrategySpec;
+use sptrsv_gt::transform::PlanSpec;
 use sptrsv_gt::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -25,15 +25,15 @@ fn main() -> anyhow::Result<()> {
 
     let cfg = Config {
         workers: 4,
-        strategy: StrategySpec::parse("avgcost").map_err(anyhow::Error::msg)?,
+        plan: PlanSpec::parse("avgcost").map_err(anyhow::Error::msg)?,
         use_xla: true, // falls back with a warning when artifacts are absent
         batch_size: 8,
         batch_deadline_us: 1000,
         ..Default::default()
     };
     println!(
-        "coordinator: workers={} strategy={} batch={} deadline={}us",
-        cfg.workers, cfg.strategy, cfg.batch_size, cfg.batch_deadline_us
+        "coordinator: workers={} plan={} batch={} deadline={}us",
+        cfg.workers, cfg.plan, cfg.batch_size, cfg.batch_deadline_us
     );
     let svc = Service::start(cfg);
     let h = svc.handle();
@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
     let lung = generate::lung2_like(&GenOptions::with_scale(0.02));
     let torso = generate::torso2_like(&GenOptions::with_scale(0.01));
     for (id, m) in [("lung2", &lung), ("torso2", &torso)] {
-        let info = h.register(id, m.clone(), StrategySpec::Default)?;
+        let info = h.register(id, m.clone(), PlanSpec::Default)?;
         println!(
             "registered {id}: {} rows, levels {} -> {}, {} rewritten, backend={}, prepare={:.1}ms",
             m.nrows,

@@ -13,7 +13,7 @@ use sptrsv_gt::graph::{analyze::LevelStats, Levels};
 use sptrsv_gt::solver::executor::TransformedSolver;
 use sptrsv_gt::sparse::generate::{self, GenOptions};
 use sptrsv_gt::sparse::reorder;
-use sptrsv_gt::transform::Strategy;
+use sptrsv_gt::transform::SolvePlan;
 use sptrsv_gt::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // 3. Guarded rewriting: distance-capped + magnitude-capped avgcost.
-    let t = Strategy::parse("guarded:20:1e12")
+    let t = SolvePlan::parse("guarded:20:1e12")
         .map_err(anyhow::Error::msg)?
         .apply(&pm);
     println!(

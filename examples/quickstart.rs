@@ -6,7 +6,7 @@
 use sptrsv_gt::graph::{analyze::LevelStats, Levels};
 use sptrsv_gt::solver::executor::TransformedSolver;
 use sptrsv_gt::sparse::generate::{self, GenOptions};
-use sptrsv_gt::transform::Strategy;
+use sptrsv_gt::transform::SolvePlan;
 use sptrsv_gt::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
 
     // 2. Transform: rewrite thin levels upward until targets reach the
     //    average level cost (the paper's naive automatic strategy).
-    let strategy = Strategy::parse("avgcost").map_err(anyhow::Error::msg)?;
+    let strategy = SolvePlan::parse("avgcost").map_err(anyhow::Error::msg)?;
     let t = strategy.apply(&m);
     println!(
         "transformed: {} -> {} levels ({:.0}% fewer barriers), {} rows rewritten ({:.1}%), total cost {:+.2}%",

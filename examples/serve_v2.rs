@@ -1,12 +1,18 @@
-//! Tour of the typed v2 coordinator client API.
+//! Tour of the typed coordinator client API.
 //!
-//! Demonstrates everything the `SolveHandle` surface can express:
-//! strategies parsed once at the edge (`StrategySpec`), typed failures
-//! (`ServiceError`), async `SolveTicket`s (`wait` / `wait_timeout` /
-//! `try_get` / `cancel`), per-request `SolveOptions` (deadline + lane
-//! priority), multi-RHS blocks (`solve_many`), and `max_pending`
-//! admission control — finishing with the metrics snapshot where the
-//! rejections, cancellations and deadline misses are all visible.
+//! Demonstrates everything the `SolveHandle` surface can express: solve
+//! plans parsed once at the edge (`PlanSpec` and the two-axis
+//! `rewrite+exec` grammar — `avgcost+scheduled` rewrites with the
+//! paper's avgLevelCost strategy AND serves on the coarsened static
+//! schedule; legacy single names like `avgcost` or `scheduled` still
+//! parse to their old pairings, and `auto` races the cross product),
+//! typed failures (`ServiceError`), async `SolveTicket`s (`wait` /
+//! `wait_timeout` / `try_get` / `cancel` — cancel wakes the service so
+//! queue capacity frees immediately), per-request `SolveOptions`
+//! (deadline + lane priority), multi-RHS blocks (`solve_many`), and
+//! `max_pending` admission control — finishing with the metrics snapshot
+//! where the rejections, cancellations, cancel wakeups and deadline
+//! misses are all visible.
 //!
 //!     cargo run --release --example serve_v2
 
@@ -16,13 +22,16 @@ use sptrsv_gt::config::Config;
 use sptrsv_gt::coordinator::{Service, SolveOptions};
 use sptrsv_gt::error::ServiceError;
 use sptrsv_gt::sparse::generate::{self, GenOptions};
-use sptrsv_gt::transform::StrategySpec;
+use sptrsv_gt::transform::PlanSpec;
 use sptrsv_gt::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     let cfg = Config {
         workers: 4,
-        strategy: StrategySpec::parse("auto").map_err(anyhow::Error::msg)?,
+        // The service-wide default: let the tuner race the rewrite x exec
+        // cross product per registered structure. Any concrete plan works
+        // here too, e.g. PlanSpec::parse("guarded:5+syncfree").
+        plan: PlanSpec::parse("auto").map_err(anyhow::Error::msg)?,
         batch_size: 8,
         batch_deadline_us: 2_000,
         max_pending: 1_024,
@@ -33,16 +42,33 @@ fn main() -> anyhow::Result<()> {
     let svc = Service::start(cfg);
     let h = svc.handle();
 
-    // Registration: the strategy was parsed above, at the edge — a typo
+    // Registration: the plan was parsed above, at the edge — a typo
     // would have failed there, not inside the service thread.
     let m = generate::lung2_like(&GenOptions::with_scale(0.03));
     let n = m.nrows;
-    let info = h.register("lung2", m.clone(), StrategySpec::Default)?;
+    let info = h.register("lung2", m.clone(), PlanSpec::Default)?;
     println!(
-        "registered: strategy={} (tuner cache hit: {:?}), levels {} -> {}, backend={}",
-        info.strategy, info.tuner_cache_hit, info.levels_before, info.levels_after,
+        "registered: plan={} (tuner cache hit: {:?}), levels {} -> {}, backend={}",
+        info.plan, info.tuner_cache_hit, info.levels_before, info.levels_after,
         info.backend
     );
+
+    // A second matrix pinned to an explicitly composed plan: the manual
+    // fixed-distance rewrite consumed by the static scheduler (avgcost
+    // would be a no-op here — a uniform chain has no cost-thin levels).
+    let tri = generate::tridiagonal(2_000, &Default::default());
+    let info2 = h.register(
+        "tri",
+        tri.clone(),
+        PlanSpec::parse("manual:10+scheduled").map_err(anyhow::Error::msg)?,
+    )?;
+    println!(
+        "registered: plan={} (composed), levels {} -> {}",
+        info2.plan, info2.levels_before, info2.levels_after
+    );
+    let bt = vec![1.0; tri.nrows];
+    let xt = h.solve("tri", bt.clone())?;
+    anyhow::ensure!(tri.residual_inf(&xt, &bt) < 1e-8);
 
     let mut rng = Rng::new(0x5EED);
     let mut rhs = || -> Vec<f64> { (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect() };
@@ -70,7 +96,9 @@ fn main() -> anyhow::Result<()> {
     }
 
     // 2. A fire-and-forget request, cancelled before dispatch: the
-    //    service drops it instead of burning a solve on it.
+    //    cancel wakes the service, which sweeps the request out and
+    //    reclaims its queue capacity immediately (see `cancel_wakeups`
+    //    in the final metrics line).
     let cancelled = h.solve_async("lung2", rhs(), SolveOptions::default())?;
     cancelled.cancel();
     match cancelled.wait() {

@@ -7,7 +7,7 @@
 
 use sptrsv_gt::solver::validate;
 use sptrsv_gt::sparse::generate::{self, GenOptions};
-use sptrsv_gt::transform::Strategy;
+use sptrsv_gt::transform::SolvePlan;
 use sptrsv_gt::util::rng::Rng;
 use sptrsv_gt::util::timer::Table;
 
@@ -29,7 +29,7 @@ fn main() {
         "residual_inf",
     ]);
     for d in [2usize, 3, 5, 10, 20, 50, 100, 400] {
-        let strat = Strategy::parse(&format!("manual:{d}")).unwrap();
+        let strat = SolvePlan::parse(&format!("manual:{d}")).unwrap();
         let tr = strat.apply(&m);
         let q = validate::assess(&m, &tr, &b);
         t.row(&[

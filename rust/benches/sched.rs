@@ -23,7 +23,7 @@ use sptrsv_gt::solver::executor::TransformedSolver;
 use sptrsv_gt::solver::pool::Pool;
 use sptrsv_gt::sparse::generate::{self, GenOptions};
 use sptrsv_gt::sparse::Csr;
-use sptrsv_gt::transform::Strategy;
+use sptrsv_gt::transform::{Rewrite, SolvePlan};
 use sptrsv_gt::util::prop::assert_allclose;
 use sptrsv_gt::util::rng::Rng;
 use sptrsv_gt::util::timer::Table;
@@ -85,8 +85,8 @@ fn main() {
         "matrix", "rows", "levels", "blocks", "cut", "levelset (us)", "sched (us)", "ratio",
     ]);
     for (name, m, gated) in cases {
-        let t_ls = Strategy::None.apply(&m);
-        let t_sc = Strategy::parse("scheduled").unwrap().apply(&m);
+        let t_ls = Rewrite::None.apply(&m);
+        let t_sc = SolvePlan::parse("scheduled").unwrap().apply(&m);
         let levels = t_ls.num_levels();
         let mc = Arc::new(m);
         let pool = Arc::new(Pool::new(workers));

@@ -14,7 +14,7 @@ use sptrsv_gt::solver::executor::TransformedSolver;
 use sptrsv_gt::solver::levelset::LevelSetSolver;
 use sptrsv_gt::solver::syncfree::SyncFreeSolver;
 use sptrsv_gt::sparse::generate::{self, GenOptions};
-use sptrsv_gt::transform::Strategy;
+use sptrsv_gt::transform::SolvePlan;
 use sptrsv_gt::util::rng::Rng;
 use sptrsv_gt::util::timer::bench;
 
@@ -73,7 +73,7 @@ fn main() {
             });
         }
         for strat in ["none", "avgcost", "manual"] {
-            let t = Strategy::parse(strat).unwrap().apply(&m);
+            let t = SolvePlan::parse(strat).unwrap().apply(&m);
             let s = TransformedSolver::from_parts(m.clone(), t, workers);
             let b = b.clone();
             let mut x = vec![0.0; n];
@@ -83,7 +83,7 @@ fn main() {
             });
         }
         if let Some(reg) = &registry {
-            let t = Strategy::parse("avgcost").unwrap().apply(&m);
+            let t = SolvePlan::parse("avgcost").unwrap().apply(&m);
             let req = PaddedSystem::requirements(&m, &t);
             if let Some(meta) = reg.best_fit("solve", &req) {
                 let p = PaddedSystem::build(&m, &t, meta.pad_shape()).unwrap();

@@ -4,7 +4,7 @@
 
 use sptrsv_gt::solver::validate;
 use sptrsv_gt::sparse::generate::{self, GenOptions};
-use sptrsv_gt::transform::Strategy;
+use sptrsv_gt::transform::SolvePlan;
 use sptrsv_gt::util::rng::Rng;
 use sptrsv_gt::util::timer::{bench, Table};
 
@@ -31,7 +31,7 @@ fn main() {
         "residual",
     ]);
     for d in [2usize, 3, 5, 10, 20, 50, 100, n / 4] {
-        let strat = Strategy::parse(&format!("manual:{d}")).unwrap();
+        let strat = SolvePlan::parse(&format!("manual:{d}")).unwrap();
         let t = strat.apply(&m);
         let q = validate::assess(&m, &t, &b);
         table.row(&[

@@ -10,7 +10,7 @@
 
 use sptrsv_gt::report::table1;
 use sptrsv_gt::sparse::generate::{self, GenOptions};
-use sptrsv_gt::transform::Strategy;
+use sptrsv_gt::transform::SolvePlan;
 use sptrsv_gt::util::timer::bench;
 
 fn scale() -> f64 {
@@ -31,7 +31,7 @@ fn main() {
         println!("-- {name}: {} rows, {} nnz --", m.nrows, m.nnz());
         // Time each strategy's transform separately.
         for strat in ["avgcost", "manual"] {
-            let s = Strategy::parse(strat).unwrap();
+            let s = SolvePlan::parse(strat).unwrap();
             let mm = m.clone();
             bench(&format!("transform/{name}/{strat}"), move || {
                 let t = s.apply(&mm);

@@ -4,7 +4,7 @@
 
 use sptrsv_gt::graph::Levels;
 use sptrsv_gt::sparse::generate::{self, GenOptions};
-use sptrsv_gt::transform::Strategy;
+use sptrsv_gt::transform::SolvePlan;
 use sptrsv_gt::util::timer::bench;
 
 fn main() {
@@ -22,7 +22,7 @@ fn main() {
                 });
             }
             for strat in ["avgcost", "manual"] {
-                let s = Strategy::parse(strat).unwrap();
+                let s = SolvePlan::parse(strat).unwrap();
                 let mm = m.clone();
                 let label = format!(
                     "transform/{name}/s{scale}/{strat} ({} rows)",
@@ -32,7 +32,7 @@ fn main() {
                     std::hint::black_box(s.apply(&mm).stats.rows_rewritten);
                 });
                 // Substitution throughput for the record.
-                let t = Strategy::parse(strat).unwrap().apply(&m);
+                let t = SolvePlan::parse(strat).unwrap().apply(&m);
                 let per_sub = meas.median.as_secs_f64()
                     / t.stats.substitutions_total.max(1) as f64;
                 println!(

@@ -17,7 +17,7 @@ use sptrsv_gt::solver::executor::TransformedSolver;
 use sptrsv_gt::solver::pool::Pool;
 use sptrsv_gt::sparse::generate::{self, GenOptions};
 use sptrsv_gt::sparse::Csr;
-use sptrsv_gt::transform::{Strategy, TransformResult};
+use sptrsv_gt::transform::{SolvePlan, TransformResult};
 use sptrsv_gt::tuner::{PlanSource, Tuner, TunerOptions};
 use sptrsv_gt::util::rng::Rng;
 use sptrsv_gt::util::timer::Table;
@@ -75,11 +75,11 @@ fn main() {
         let mut rng = Rng::new(0x7E57_BE11C);
         let b: Vec<f64> = (0..mc.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
 
-        let mut table = Table::new(&["strategy", "levels", "solve (us)", "vs best"]);
+        let mut table = Table::new(&["plan", "levels", "solve (us)", "vs best"]);
         let mut best_fixed = f64::INFINITY;
         let mut rows: Vec<(String, usize, f64)> = Vec::new();
         for s in FIXED {
-            let t = Strategy::parse(s).unwrap().apply(&mc);
+            let t = SolvePlan::parse(s).unwrap().apply(&mc);
             let levels = t.num_levels();
             let us = measure_us(&mc, t, &pool, &b);
             best_fixed = best_fixed.min(us);
@@ -94,15 +94,15 @@ fn main() {
             ..Default::default()
         });
         let plan = tuner.choose_arc(&mc).unwrap();
-        let auto_label = format!("auto -> {}", plan.strategy_name);
+        let auto_label = format!("auto -> {}", plan.plan_name);
         let auto_levels = plan.transform.num_levels();
-        // Time the tuned plan on the backend its strategy actually uses
-        // (an execution-strategy winner would misprice on the level-set
-        // executor).
+        // Time the tuned plan on the backend its exec axis actually
+        // uses (a scheduled/syncfree/reordered winner would misprice on
+        // the level-set executor).
         let auto_solver = sptrsv_gt::solver::ExecSolver::build(
             Arc::clone(&mc),
             Arc::new(plan.transform),
-            &plan.strategy,
+            &plan.plan.exec,
             Arc::clone(&pool),
             Default::default(),
         )

@@ -7,16 +7,18 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::error::Error;
-use crate::transform::StrategySpec;
+use crate::transform::PlanSpec;
 use crate::util::cli::Args;
 
 #[derive(Debug, Clone)]
 pub struct Config {
     /// worker threads for the parallel solvers
     pub workers: usize,
-    /// default transformation strategy, parsed once at config time (see
-    /// `Strategy::parse` for the accepted names)
-    pub strategy: StrategySpec,
+    /// default solve plan, parsed once at config time (see
+    /// `SolvePlan::parse` for the `rewrite+exec` grammar and the accepted
+    /// legacy single names; `auto` defers to the tuner). Set by the
+    /// `plan` config key, with `strategy` kept as an alias.
+    pub plan: PlanSpec,
     /// directory with AOT artifacts + manifest.json
     pub artifacts_dir: String,
     /// batch size target for the RHS batcher (counted in right-hand sides)
@@ -55,7 +57,7 @@ impl Default for Config {
             workers: std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(1),
-            strategy: StrategySpec::parse("avgcost").expect("builtin strategy"),
+            plan: PlanSpec::parse("avgcost").expect("builtin plan"),
             artifacts_dir: "artifacts".to_string(),
             batch_size: 8,
             batch_deadline_us: 2_000,
@@ -130,7 +132,7 @@ impl Config {
             // subcommands.
             if matches!(
                 k.as_str(),
-                "workers" | "strategy" | "artifacts-dir" | "batch-size"
+                "workers" | "plan" | "strategy" | "artifacts-dir" | "batch-size"
                     | "batch-deadline-us" | "max-pending" | "use-xla" | "seed"
                     | "tuner-cache" | "tuner-top-k" | "tuner-race-solves"
                     | "tuner-cache-ttl" | "sched-block-target" | "sched-stale-window"
@@ -145,8 +147,10 @@ impl Config {
         let bad = |k: &str, v: &str| Error::Invalid(format!("config {k}: bad value '{v}'"));
         match key {
             "workers" => self.workers = val.parse().map_err(|_| bad(key, val))?,
-            "strategy" => {
-                self.strategy = StrategySpec::parse(val).map_err(Error::Invalid)?
+            // `strategy` predates the solve-plan split and stays as an
+            // alias for `plan`.
+            "plan" | "strategy" => {
+                self.plan = PlanSpec::parse(val).map_err(Error::Invalid)?
             }
             "artifacts_dir" => self.artifacts_dir = val.to_string(),
             "batch_size" => self.batch_size = val.parse().map_err(|_| bad(key, val))?,
@@ -186,7 +190,7 @@ mod tests {
     fn defaults_sane() {
         let c = Config::default();
         assert!(c.workers >= 1);
-        assert_eq!(c.strategy.as_str(), "avgcost");
+        assert_eq!(c.plan.as_str(), "avgcost");
         assert!(c.tuner_cache.is_empty());
         assert!(c.tuner_top_k >= 1);
         assert!(c.max_pending > 0);
@@ -226,7 +230,7 @@ mod tests {
         let c = Config::from_file(&p).unwrap();
         std::fs::remove_file(&p).ok();
         assert_eq!(c.workers, 3);
-        assert_eq!(c.strategy.as_str(), "manual:5");
+        assert_eq!(c.plan.as_str(), "manual:5");
         assert!(c.use_xla);
         assert_eq!(c.max_pending, 64);
         assert_eq!(c.extra.get("custom_knob").unwrap(), "7");
@@ -267,13 +271,25 @@ mod tests {
     }
 
     #[test]
-    fn strategy_is_validated_at_config_time() {
+    fn plan_is_validated_at_config_time() {
         let mut c = Config::default();
-        assert!(c.set("strategy", "nonsense").is_err());
-        c.set("strategy", "auto").unwrap();
-        assert_eq!(c.strategy.as_str(), "auto");
+        assert!(c.set("plan", "nonsense").is_err());
+        assert!(c.set("strategy", "avgcost+bogus").is_err());
+        c.set("plan", "auto").unwrap();
+        assert_eq!(c.plan.as_str(), "auto");
+        c.set("plan", "avgcost+scheduled").unwrap();
+        assert_eq!(c.plan.as_str(), "avgcost+scheduled");
+        // The legacy `strategy` key stays an alias for `plan`.
         c.set("strategy", "scheduled").unwrap();
-        assert_eq!(c.strategy.as_str(), "scheduled");
+        assert_eq!(c.plan.as_str(), "scheduled");
+        // And the --plan CLI flag carries composed plans.
+        let args = Args::parse(
+            ["serve", "--plan", "guarded:5+syncfree"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        c.merge_args(&args).unwrap();
+        assert_eq!(c.plan.as_str(), "guarded:5+syncfree");
     }
 
     #[test]
@@ -295,7 +311,7 @@ mod tests {
             .map(|s| s.to_string()),
         );
         c.merge_args(&args).unwrap();
-        assert_eq!(c.strategy.as_str(), "scheduled");
+        assert_eq!(c.plan.as_str(), "scheduled");
         assert_eq!(c.sched_block_target, 512);
         assert_eq!(c.sched_stale_window, 8);
         assert_eq!(c.tuner_cache_ttl, 60);
@@ -314,7 +330,7 @@ mod tests {
         );
         c.merge_args(&args).unwrap();
         assert_eq!(c.workers, 7);
-        assert_eq!(c.strategy.as_str(), "none");
+        assert_eq!(c.plan.as_str(), "none");
         assert_eq!(c.max_pending, 9);
         assert!(!c.extra.contains_key("other")); // unknown flags left alone
     }

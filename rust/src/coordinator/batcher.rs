@@ -212,6 +212,30 @@ impl<T> Batcher<T> {
         out
     }
 
+    /// Remove every queued request whose token the predicate marks dead
+    /// (cancelled tickets), returning them so the caller can reply and
+    /// account for them. Queue capacity (`pending`/`lane_depth`) is
+    /// reclaimed immediately — this is what the service's cancel wakeup
+    /// runs, instead of waiting for the next flush to weed the entries.
+    pub fn sweep<F: Fn(&T) -> bool>(&mut self, dead: F) -> Vec<Pending<T>> {
+        let mut out = Vec::new();
+        for lanes in self.queues.values_mut() {
+            for (lane, q) in lanes.iter_mut().enumerate() {
+                let keys: Vec<EdfKey> = q
+                    .iter()
+                    .filter(|(_, p)| dead(&p.token))
+                    .map(|(k, _)| *k)
+                    .collect();
+                for k in keys {
+                    let p = q.remove(&k).expect("swept key present");
+                    self.lane_rhs[lane] -= p.rhs.len();
+                    out.push(p);
+                }
+            }
+        }
+        out
+    }
+
     /// Time until the next pending request hits its flush-by instant (the
     /// service loop uses this for recv_timeout). Zero when something is
     /// already overdue.
@@ -430,6 +454,29 @@ mod tests {
         let t3 = b.take("m");
         assert_eq!(t3.len(), 1);
         assert_eq!(t3[0].rhs.len(), 9);
+    }
+
+    #[test]
+    fn sweep_reclaims_capacity_immediately() {
+        let mut b: Batcher<usize> = Batcher::new(8, Duration::from_secs(60));
+        b.push("m", one(1.0), Lane::Batch, None, 0);
+        b.push("m", vec![vec![2.0]; 3], Lane::Interactive, None, 1);
+        b.push("z", one(3.0), Lane::Batch, None, 2);
+        assert_eq!(b.pending(), 5);
+        // Tokens 1 and 2 are "cancelled": swept out of every queue/lane.
+        let removed = b.sweep(|&t| t != 0);
+        let mut tokens: Vec<usize> = removed.iter().map(|p| p.token).collect();
+        tokens.sort_unstable();
+        assert_eq!(tokens, vec![1, 2]);
+        assert_eq!(b.pending(), 1, "capacity reclaimed without a flush");
+        assert_eq!(b.lane_depth(Lane::Interactive), 0);
+        assert_eq!(b.lane_depth(Lane::Batch), 1);
+        // The surviving request still dispatches normally.
+        let taken = b.take("m");
+        assert_eq!(taken.len(), 1);
+        assert_eq!(taken[0].token, 0);
+        // An all-alive sweep is a no-op.
+        assert!(b.sweep(|_| false).is_empty());
     }
 
     #[test]

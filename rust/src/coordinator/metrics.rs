@@ -1,7 +1,7 @@
 //! Service metrics: request counters and a log2-bucketed latency
 //! histogram, lock-free on the hot path. Tuner events (registration-time
-//! only, never on the solve path) additionally keep per-strategy win
-//! counts behind a mutex.
+//! only, never on the solve path) additionally keep per-plan win counts
+//! behind a mutex.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -21,6 +21,10 @@ pub struct Metrics {
     pub cancellations: AtomicU64,
     /// requests dropped before dispatch because their deadline had expired
     pub deadline_misses: AtomicU64,
+    /// service-side wakeups triggered by `SolveTicket::cancel`/drop so
+    /// queue capacity is reclaimed immediately instead of at the next
+    /// flush
+    pub cancel_wakeups: AtomicU64,
     /// `auto` registrations answered from the fingerprint plan cache
     pub tuner_cache_hits: AtomicU64,
     /// `auto` registrations that ran the cost model + race
@@ -39,8 +43,8 @@ pub struct Metrics {
     elastic_waits: AtomicU64,
     /// counter mirror: blocks executed out of order via the lookahead
     elastic_ooo: AtomicU64,
-    /// strategy name -> times the tuner picked it
-    strategy_wins: Mutex<BTreeMap<String, u64>>,
+    /// plan name -> times the tuner picked it
+    plan_wins: Mutex<BTreeMap<String, u64>>,
 }
 
 impl Default for Metrics {
@@ -59,6 +63,7 @@ impl Metrics {
             rejections: AtomicU64::new(0),
             cancellations: AtomicU64::new(0),
             deadline_misses: AtomicU64::new(0),
+            cancel_wakeups: AtomicU64::new(0),
             tuner_cache_hits: AtomicU64::new(0),
             tuner_cache_misses: AtomicU64::new(0),
             total_us: AtomicU64::new(0),
@@ -69,7 +74,7 @@ impl Metrics {
             sched_cut_edges: AtomicU64::new(0),
             elastic_waits: AtomicU64::new(0),
             elastic_ooo: AtomicU64::new(0),
-            strategy_wins: Mutex::new(BTreeMap::new()),
+            plan_wins: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -84,15 +89,15 @@ impl Metrics {
     }
 
     /// Record one tuner decision: whether the plan cache answered it and
-    /// which strategy won.
-    pub fn record_tuner_choice(&self, strategy: &str, cache_hit: bool) {
+    /// which plan won.
+    pub fn record_tuner_choice(&self, plan: &str, cache_hit: bool) {
         if cache_hit {
             self.tuner_cache_hits.fetch_add(1, Ordering::Relaxed);
         } else {
             self.tuner_cache_misses.fetch_add(1, Ordering::Relaxed);
         }
-        let mut wins = self.strategy_wins.lock().unwrap();
-        *wins.entry(strategy.to_string()).or_insert(0) += 1;
+        let mut wins = self.plan_wins.lock().unwrap();
+        *wins.entry(plan.to_string()).or_insert(0) += 1;
     }
 
     pub fn record_solve(&self, latency: Duration, batched: bool) {
@@ -129,6 +134,12 @@ impl Metrics {
         self.deadline_misses.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A ticket cancellation woke the service for an immediate queue
+    /// sweep (capacity reclaimed now, not at the next flush).
+    pub fn record_cancel_wakeup(&self) {
+        self.cancel_wakeups.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Gauge update: queued right-hand sides per lane after a flush.
     pub fn set_lane_depths(&self, interactive: u64, batch: u64) {
         self.lane_interactive.store(interactive, Ordering::Relaxed);
@@ -146,6 +157,7 @@ impl Metrics {
             rejections: self.rejections.load(Ordering::Relaxed),
             cancellations: self.cancellations.load(Ordering::Relaxed),
             deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
+            cancel_wakeups: self.cancel_wakeups.load(Ordering::Relaxed),
             lane_interactive_depth: self.lane_interactive.load(Ordering::Relaxed),
             lane_batch_depth: self.lane_batch.load(Ordering::Relaxed),
             sched_blocks: self.sched_blocks.load(Ordering::Relaxed),
@@ -154,8 +166,8 @@ impl Metrics {
             elastic_ooo: self.elastic_ooo.load(Ordering::Relaxed),
             tuner_cache_hits: self.tuner_cache_hits.load(Ordering::Relaxed),
             tuner_cache_misses: self.tuner_cache_misses.load(Ordering::Relaxed),
-            strategy_wins: self
-                .strategy_wins
+            plan_wins: self
+                .plan_wins
                 .lock()
                 .unwrap()
                 .iter()
@@ -201,6 +213,8 @@ pub struct Snapshot {
     pub cancellations: u64,
     /// requests dropped before dispatch with an expired deadline
     pub deadline_misses: u64,
+    /// cancellation-triggered service wakeups (immediate queue sweeps)
+    pub cancel_wakeups: u64,
     /// gauge: interactive-lane queue depth at the last flush
     pub lane_interactive_depth: u64,
     /// gauge: batch-lane queue depth at the last flush
@@ -215,8 +229,8 @@ pub struct Snapshot {
     pub elastic_ooo: u64,
     pub tuner_cache_hits: u64,
     pub tuner_cache_misses: u64,
-    /// (strategy, times chosen) pairs, sorted by strategy name
-    pub strategy_wins: Vec<(String, u64)>,
+    /// (plan, times chosen) pairs, sorted by plan name
+    pub plan_wins: Vec<(String, u64)>,
     pub mean_us: f64,
     pub p50_us: u64,
     pub p95_us: u64,
@@ -235,6 +249,9 @@ impl std::fmt::Display for Snapshot {
             self.lane_interactive_depth, self.lane_batch_depth,
             self.mean_us, self.p50_us, self.p95_us, self.p99_us
         )?;
+        if self.cancel_wakeups > 0 {
+            write!(f, ", cancel_wakeups={}", self.cancel_wakeups)?;
+        }
         if self.sched_blocks > 0 {
             write!(
                 f,
@@ -248,9 +265,9 @@ impl std::fmt::Display for Snapshot {
                 ", tuner cache hit/miss={}/{}",
                 self.tuner_cache_hits, self.tuner_cache_misses
             )?;
-            if !self.strategy_wins.is_empty() {
+            if !self.plan_wins.is_empty() {
                 write!(f, " wins[")?;
-                for (i, (s, n)) in self.strategy_wins.iter().enumerate() {
+                for (i, (s, n)) in self.plan_wins.iter().enumerate() {
                     if i > 0 {
                         write!(f, " ")?;
                     }
@@ -294,7 +311,7 @@ mod tests {
         assert_eq!(s.mean_us, 0.0);
         assert_eq!(s.p50_us, 0);
         assert_eq!(s.tuner_cache_hits, 0);
-        assert!(s.strategy_wins.is_empty());
+        assert!(s.plan_wins.is_empty());
         // Without tuner activity the rendering is unchanged.
         assert!(!s.to_string().contains("tuner"));
     }
@@ -302,19 +319,22 @@ mod tests {
     #[test]
     fn tuner_choice_accounting() {
         let m = Metrics::new();
-        m.record_tuner_choice("avgcost", false);
-        m.record_tuner_choice("avgcost", true);
-        m.record_tuner_choice("manual:10", false);
+        m.record_tuner_choice("avgcost+scheduled", false);
+        m.record_tuner_choice("avgcost+scheduled", true);
+        m.record_tuner_choice("manual:10+levelset", false);
         let s = m.snapshot();
         assert_eq!(s.tuner_cache_hits, 1);
         assert_eq!(s.tuner_cache_misses, 2);
         assert_eq!(
-            s.strategy_wins,
-            vec![("avgcost".to_string(), 2), ("manual:10".to_string(), 1)]
+            s.plan_wins,
+            vec![
+                ("avgcost+scheduled".to_string(), 2),
+                ("manual:10+levelset".to_string(), 1)
+            ]
         );
         let text = s.to_string();
         assert!(text.contains("tuner cache hit/miss=1/2"), "{text}");
-        assert!(text.contains("avgcost=2"), "{text}");
+        assert!(text.contains("avgcost+scheduled=2"), "{text}");
     }
 
     #[test]
@@ -324,17 +344,20 @@ mod tests {
         m.record_cancellation();
         m.record_cancellation();
         m.record_deadline_miss();
+        m.record_cancel_wakeup();
         m.set_lane_depths(3, 7);
         let s = m.snapshot();
         assert_eq!(s.rejections, 1);
         assert_eq!(s.cancellations, 2);
         assert_eq!(s.deadline_misses, 1);
+        assert_eq!(s.cancel_wakeups, 1);
         assert_eq!(s.lane_interactive_depth, 3);
         assert_eq!(s.lane_batch_depth, 7);
         let text = s.to_string();
         assert!(text.contains("rejected=1"), "{text}");
         assert!(text.contains("cancelled=2"), "{text}");
         assert!(text.contains("deadline_missed=1"), "{text}");
+        assert!(text.contains("cancel_wakeups=1"), "{text}");
         assert!(text.contains("depth i/b=3/7"), "{text}");
         // Gauges overwrite rather than accumulate.
         m.set_lane_depths(0, 0);

@@ -3,14 +3,17 @@
 //!
 //! The paper's contribution is a *preprocessing* transformation, so per
 //! DESIGN.md the coordinator is a thin-but-real service: it owns the
-//! preprocessing pipeline (levels → strategy → transformed system →
-//! padded artifacts), caches prepared matrices, batches right-hand sides,
+//! preprocessing pipeline (levels → solve plan → transformed system →
+//! execution backend / padded artifacts), caches prepared matrices,
+//! batches right-hand sides,
 //! dispatches to the native or XLA backend, and reports metrics.
 //!
-//! The client surface is fully typed (v2): strategies cross as
-//! [`crate::transform::StrategySpec`], failures as
+//! The client surface is fully typed: solve plans cross as
+//! [`crate::transform::PlanSpec`] (the two-axis `rewrite+exec` grammar,
+//! parsed once at the edge), failures as
 //! [`crate::error::ServiceError`], async solves as [`SolveTicket`]s with
-//! deadline/priority [`SolveOptions`], multi-RHS blocks via
+//! deadline/priority [`SolveOptions`] (cancellation wakes the service
+//! for an immediate queue sweep), multi-RHS blocks via
 //! [`SolveHandle::solve_many`], and admission is bounded by the
 //! `max_pending` config key.
 //!

@@ -1,10 +1,11 @@
-//! Preprocessing pipeline: matrix -> levels -> strategy -> transformed
-//! system -> (optionally) padded XLA system, cached per matrix id.
+//! Preprocessing pipeline: matrix -> levels -> solve plan -> transformed
+//! system -> execution backend -> (optionally) padded XLA system, cached
+//! per matrix id.
 //!
-//! When the configured (or per-register) strategy is `auto`, the pipeline
+//! When the configured (or per-register) plan is `auto`, the pipeline
 //! consults its persistent [`Tuner`]: the matrix fingerprint is looked up
 //! in the plan cache, and only unknown structures pay for the cost-model
-//! shortlist + race.
+//! shortlist + race over the rewrite × exec cross product.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -19,24 +20,25 @@ use crate::sched::SchedOptions;
 use crate::solver::dispatch::ExecSolver;
 use crate::solver::pool::Pool;
 use crate::sparse::Csr;
-use crate::transform::{Strategy, StrategySpec, TransformResult};
+use crate::transform::{Exec, PlanSpec, ResolvedPlan, SolvePlan, TransformResult};
 use crate::tuner::{PlanSource, Tuner, TunerOptions};
 
 /// Which backend serves a prepared matrix.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
-    /// rust level-set executor over the transformed system
+    /// rust execution backend over the transformed system (whichever the
+    /// plan's exec axis picked)
     Native,
     /// AOT XLA executable (artifact shape fitted)
     Xla,
 }
 
-/// How the tuner decided a prepared matrix's strategy (None when the
-/// strategy was fixed by name).
+/// How the tuner decided a prepared matrix's plan (None when the plan was
+/// fixed by name).
 #[derive(Debug, Clone)]
 pub struct TunedInfo {
-    /// strategy the tuner picked, in `Strategy::parse` syntax
-    pub strategy: String,
+    /// plan the tuner picked, in `SolvePlan::parse` syntax
+    pub plan: String,
     /// whether the fingerprint plan cache answered the decision
     pub cache_hit: bool,
     /// hex sparsity fingerprint
@@ -48,8 +50,8 @@ pub struct Prepared {
     pub id: String,
     pub m: Arc<Csr>,
     pub t: Arc<TransformResult>,
-    /// the execution backend the strategy calls for: level-set executor,
-    /// coarsened schedule, sync-free, or reordered (see
+    /// the execution backend the plan's exec axis calls for: level-set
+    /// executor, coarsened schedule, sync-free, or reordered (see
     /// [`crate::solver::ExecSolver`])
     pub native: ExecSolver,
     pub padded: Option<Arc<PaddedSystem>>,
@@ -57,9 +59,13 @@ pub struct Prepared {
     /// re-transferring megabytes of structure per request)
     pub staged: Option<StagedSystem>,
     pub backend: Backend,
-    /// strategy that produced `t` (the tuner's pick under `auto`)
-    pub strategy_name: String,
-    /// tuner decision details when the strategy was `auto`
+    /// the plan that produced `t` and `native` (the tuner's pick under
+    /// `auto`)
+    pub plan: SolvePlan,
+    /// plan label for logs/metrics (source text for named plans, the
+    /// canonical winner name under `auto`)
+    pub plan_name: String,
+    /// tuner decision details when the plan was `auto`
     pub tuned: Option<TunedInfo>,
     /// preprocessing wall-clock (the offline cost the paper discusses)
     pub prepare_time: std::time::Duration,
@@ -79,7 +85,7 @@ pub struct Pipeline {
     pool: Arc<Pool>,
     pub registry: Option<Arc<Registry>>,
     cache: BTreeMap<String, Arc<Prepared>>,
-    /// persistent strategy autotuner consulted for `auto` registrations
+    /// persistent plan autotuner consulted for `auto` registrations
     pub tuner: Tuner,
 }
 
@@ -133,15 +139,15 @@ impl Pipeline {
         self.registry.as_ref().map(|r| XlaSolver::new(Arc::clone(r)))
     }
 
-    /// Preprocess and cache a matrix under `id`. The strategy arrives as
-    /// an already-parsed [`StrategySpec`]: `Default` defers to the
-    /// configured service-wide strategy, so no strategy-name string ever
+    /// Preprocess and cache a matrix under `id`. The plan arrives as an
+    /// already-parsed [`PlanSpec`]: `Default` defers to the configured
+    /// service-wide plan, `Auto` to the tuner — no plan-name string ever
     /// reaches this layer.
     pub fn prepare(
         &mut self,
         id: &str,
         m: Csr,
-        spec: &StrategySpec,
+        spec: &PlanSpec,
     ) -> Result<Arc<Prepared>, Error> {
         if let Some(p) = self.cache.get(id) {
             return Ok(Arc::clone(p));
@@ -151,32 +157,30 @@ impl Pipeline {
         // Arc the matrix up front: the tuner's race lanes and the solver
         // share it by reference count instead of copying.
         let m = Arc::new(m);
-        let (strat_name, strategy) = spec.resolve(&self.cfg.strategy);
-        // Route Auto to the shared tuner (Strategy::Auto::apply would
-        // build a throwaway one with a cold plan cache). The resolved
-        // `exec_strategy` also decides the execution backend below.
-        let (strategy_name, exec_strategy, t, tuned) = if matches!(strategy, Strategy::Auto) {
-            let plan = self.tuner.choose_arc(&m)?;
-            let info = TunedInfo {
-                strategy: plan.strategy_name.clone(),
-                cache_hit: plan.source == PlanSource::CacheHit,
-                fingerprint: plan.fingerprint.to_hex(),
-            };
-            (plan.strategy_name, plan.strategy, plan.transform, Some(info))
-        } else {
-            (strat_name, strategy.clone(), strategy.apply(&m), None)
+        let (plan_name, plan, t, tuned) = match spec.resolve(&self.cfg.plan) {
+            ResolvedPlan::Auto => {
+                let tp = self.tuner.choose_arc(&m)?;
+                let info = TunedInfo {
+                    plan: tp.plan_name.clone(),
+                    cache_hit: tp.source == PlanSource::CacheHit,
+                    fingerprint: tp.fingerprint.to_hex(),
+                };
+                (tp.plan_name, tp.plan, tp.transform, Some(info))
+            }
+            ResolvedPlan::Fixed(name, plan) => {
+                let t = plan.apply(&m);
+                (name, plan, t, None)
+            }
         };
         t.validate(&m).map_err(Error::Invalid)?;
 
         let t = Arc::new(t);
         // Fit an XLA artifact if the registry is present, and stage the
-        // system arrays on the device. Execution strategies keep their
-        // own backend: the padded level solve would silently discard the
-        // schedule / sync-free / reordering they were chosen for.
-        let xla_eligible = matches!(
-            exec_strategy,
-            Strategy::None | Strategy::AvgLevelCost(_) | Strategy::Manual(_)
-        );
+        // system arrays on the device. Only level-set execution is
+        // XLA-eligible: the padded level solve would silently discard the
+        // schedule / sync-free counters / reordering other exec axes were
+        // chosen for. The rewrite axis composes either way.
+        let xla_eligible = matches!(plan.exec, Exec::Levelset);
         let mut backend = Backend::Native;
         let mut padded = None;
         let mut staged = None;
@@ -190,11 +194,11 @@ impl Pipeline {
                 backend = Backend::Xla;
             }
         }
-        // Scheduling knobs the strategy left unset come from the config.
+        // Scheduling knobs the plan left unset come from the config.
         let native = ExecSolver::build(
             Arc::clone(&m),
             Arc::clone(&t),
-            &exec_strategy,
+            &plan.exec,
             Arc::clone(&self.pool),
             sched_fallback(&self.cfg),
         )?;
@@ -206,7 +210,8 @@ impl Pipeline {
             padded,
             staged,
             backend,
-            strategy_name,
+            plan,
+            plan_name,
             tuned,
             prepare_time: start.elapsed(),
         });
@@ -240,8 +245,8 @@ mod tests {
         }
     }
 
-    fn spec(s: &str) -> StrategySpec {
-        StrategySpec::parse(s).unwrap()
+    fn spec(s: &str) -> PlanSpec {
+        PlanSpec::parse(s).unwrap()
     }
 
     #[test]
@@ -249,14 +254,14 @@ mod tests {
         let mut pl = Pipeline::new(cfg());
         let m = generate::lung2_like(&generate::GenOptions::with_scale(0.03));
         let n = m.nrows;
-        let p = pl.prepare("lung2", m, &StrategySpec::Default).unwrap();
+        let p = pl.prepare("lung2", m, &PlanSpec::Default).unwrap();
         assert_eq!(p.backend, Backend::Native);
         assert!(p.t.stats.levels_after < p.t.stats.levels_before);
         // Cache hit returns the same Arc.
         let p2 = pl.prepare(
             "lung2",
             generate::tridiagonal(5, &Default::default()),
-            &StrategySpec::Default,
+            &PlanSpec::Default,
         );
         assert!(Arc::ptr_eq(&p, &p2.unwrap()));
         // And it solves.
@@ -266,7 +271,7 @@ mod tests {
     }
 
     #[test]
-    fn auto_strategy_consults_tuner_and_plan_cache() {
+    fn auto_plan_consults_tuner_and_plan_cache() {
         let mut pl = Pipeline::new(cfg());
         // The tuner races on the pipeline's own worker pool instead of
         // spawning a throwaway one per cache miss.
@@ -276,13 +281,15 @@ mod tests {
         let p1 = pl.prepare("a", m.clone(), &spec("auto")).unwrap();
         let t1 = p1.tuned.as_ref().expect("auto decision recorded");
         assert!(!t1.cache_hit);
-        assert_eq!(t1.strategy, p1.strategy_name);
+        assert_eq!(t1.plan, p1.plan_name);
         assert_eq!(t1.fingerprint.len(), 16);
+        // The tuned decision is a full two-axis plan.
+        assert_eq!(SolvePlan::parse(&t1.plan).unwrap(), p1.plan);
         // Same structure under a new id: the fingerprint cache answers.
         let p2 = pl.prepare("b", m.clone(), &spec("auto")).unwrap();
         let t2 = p2.tuned.as_ref().unwrap();
         assert!(t2.cache_hit);
-        assert_eq!(t2.strategy, t1.strategy);
+        assert_eq!(t2.plan, t1.plan);
         assert_eq!(p2.t.stats.levels_after, p1.t.stats.levels_after);
         // And the plan solves correctly.
         let b = vec![1.0; n];
@@ -291,11 +298,11 @@ mod tests {
         // Fixed-name registrations carry no tuner decision.
         let p3 = pl.prepare("c", m, &spec("none")).unwrap();
         assert!(p3.tuned.is_none());
-        assert_eq!(p3.strategy_name, "none");
+        assert_eq!(p3.plan_name, "none");
     }
 
     #[test]
-    fn strategy_override() {
+    fn plan_override() {
         let mut pl = Pipeline::new(cfg());
         let m = generate::tridiagonal(50, &Default::default());
         let p = pl.prepare("tri", m, &spec("manual:5")).unwrap();
@@ -303,7 +310,7 @@ mod tests {
     }
 
     #[test]
-    fn scheduled_strategy_builds_the_scheduled_backend() {
+    fn scheduled_plan_builds_the_scheduled_backend() {
         let mut pl = Pipeline::new(Config {
             sched_block_target: 32,
             sched_stale_window: 2,
@@ -322,13 +329,31 @@ mod tests {
         let b = vec![1.0; 120];
         let x = p.native.solve(&b);
         assert!(p.m.residual_inf(&x, &b) < 1e-10);
-        // No rewriting happened: scheduled is an execution strategy.
+        // No rewriting happened: the legacy name pairs with `none`.
         assert_eq!(p.t.stats.rows_rewritten, 0);
-        assert_eq!(p.strategy_name, "scheduled");
+        assert_eq!(p.plan_name, "scheduled");
     }
 
     #[test]
-    fn execution_strategies_prepare_and_solve() {
+    fn composed_plan_prepares_rewrite_and_backend() {
+        // The redesign's point: one registration carries BOTH axes.
+        let mut pl = Pipeline::new(cfg());
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.03));
+        let n = m.nrows;
+        let p = pl.prepare("c", m, &spec("avgcost+scheduled")).unwrap();
+        assert_eq!(p.native.mode(), "scheduled");
+        assert!(p.t.stats.rows_rewritten > 0, "rewrite axis ran");
+        assert!(p.t.num_levels() < p.t.stats.levels_before);
+        // The schedule was built over the *transformed* levels.
+        let sched = p.native.scheduled().unwrap();
+        assert_eq!(sched.t.num_levels(), p.t.num_levels());
+        let b = vec![1.0; n];
+        let x = p.native.solve(&b);
+        assert!(p.m.residual_inf(&x, &b) < 1e-9);
+    }
+
+    #[test]
+    fn execution_plans_prepare_and_solve() {
         let mut pl = Pipeline::new(cfg());
         let m = generate::lung2_like(&generate::GenOptions::with_scale(0.03));
         let n = m.nrows;
@@ -336,6 +361,8 @@ mod tests {
             ("sf", "syncfree", "syncfree"),
             ("ro", "reorder", "reordered"),
             ("sc", "scheduled:64:1", "scheduled"),
+            ("c1", "avgcost+syncfree", "syncfree"),
+            ("c2", "guarded:5+reorder", "reordered"),
         ] {
             let p = pl.prepare(id, m.clone(), &spec(s)).unwrap();
             assert_eq!(p.native.mode(), mode, "{s}");
@@ -349,7 +376,7 @@ mod tests {
     fn invalid_matrix_rejected() {
         let mut pl = Pipeline::new(cfg());
         let bad = Csr::new(2, 2, vec![0, 1, 3], vec![0, 0, 1], vec![0.0, 1.0, 1.0]).unwrap();
-        assert!(pl.prepare("bad", bad, &StrategySpec::Default).is_err());
+        assert!(pl.prepare("bad", bad, &PlanSpec::Default).is_err());
     }
 
     #[test]
@@ -358,7 +385,7 @@ mod tests {
         pl.prepare(
             "a",
             generate::tridiagonal(10, &Default::default()),
-            &StrategySpec::Default,
+            &PlanSpec::Default,
         )
         .unwrap();
         assert_eq!(pl.cached_ids(), vec!["a"]);

@@ -2,15 +2,18 @@
 //! the batcher and the backends. Clients hold a cheap cloneable
 //! [`SolveHandle`].
 //!
-//! This is the typed v2 client surface: strategies cross the boundary as
-//! [`StrategySpec`] (parsed once at the edge), failures as
-//! [`ServiceError`] (never `String`), async solves as [`SolveTicket`]s
-//! with `wait`/`wait_timeout`/`try_get`/`cancel`, scheduling intent as
-//! [`SolveOptions`] (deadline + [`Lane`] priority), multi-RHS blocks via
+//! This is the typed client surface: solve plans cross the boundary as
+//! [`PlanSpec`] (parsed once at the edge — the `rewrite+exec` grammar,
+//! legacy single names, `auto`), failures as [`ServiceError`] (never
+//! `String`), async solves as [`SolveTicket`]s with
+//! `wait`/`wait_timeout`/`try_get`/`cancel` (cancel wakes the service
+//! for an immediate queue sweep), scheduling intent as [`SolveOptions`]
+//! (deadline + [`Lane`] priority), multi-RHS blocks via
 //! [`SolveHandle::solve_many`], and admission control via the
 //! `max_pending` config key (`Overloaded` rejections instead of an
 //! unbounded queue).
 
+use std::cell::Cell;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
@@ -24,7 +27,7 @@ use crate::coordinator::pipeline::{Backend, Pipeline, Prepared};
 use crate::error::ServiceError;
 use crate::runtime::XlaSolver;
 use crate::sparse::Csr;
-use crate::transform::StrategySpec;
+use crate::transform::PlanSpec;
 
 /// Per-request scheduling options, builder style:
 ///
@@ -71,10 +74,17 @@ impl SolveOptions {
 
 /// Handle to one in-flight request. Dropping a ticket cancels the request
 /// (a queued solve whose ticket is gone is dropped before dispatch and
-/// never counted as a served solve).
+/// never counted as a served solve). Cancellation — explicit or by drop —
+/// also **wakes the service** so the queued request is swept out and its
+/// queue capacity reclaimed immediately, instead of at the next flush.
 pub struct Ticket<R> {
     rx: Receiver<Result<R, ServiceError>>,
     cancel: Arc<AtomicBool>,
+    /// channel back to the service, used to nudge it awake on cancel
+    nudge: Sender<Request>,
+    /// set once a result (or typed failure) was received — a delivered
+    /// ticket's drop must not wake the service for nothing
+    got: Cell<bool>,
     submitted: Instant,
 }
 
@@ -86,35 +96,52 @@ pub type BlockTicket = Ticket<Vec<Vec<f64>>>;
 impl<R> Ticket<R> {
     /// Block until the result (or a typed failure) arrives.
     pub fn wait(self) -> Result<R, ServiceError> {
-        match self.rx.recv() {
+        let r = match self.rx.recv() {
             Ok(r) => r,
             Err(_) => Err(ServiceError::Shutdown),
-        }
+        };
+        self.got.set(true);
+        r
     }
 
     /// Block up to `timeout`; `None` means still pending.
     pub fn wait_timeout(&self, timeout: Duration) -> Option<Result<R, ServiceError>> {
-        match self.rx.recv_timeout(timeout) {
+        let r = match self.rx.recv_timeout(timeout) {
             Ok(r) => Some(r),
             Err(RecvTimeoutError::Timeout) => None,
             Err(RecvTimeoutError::Disconnected) => Some(Err(ServiceError::Shutdown)),
+        };
+        if r.is_some() {
+            self.got.set(true);
         }
+        r
     }
 
     /// Non-blocking poll; `None` means still pending.
     pub fn try_get(&self) -> Option<Result<R, ServiceError>> {
-        match self.rx.try_recv() {
+        let r = match self.rx.try_recv() {
             Ok(r) => Some(r),
             Err(TryRecvError::Empty) => None,
             Err(TryRecvError::Disconnected) => Some(Err(ServiceError::Shutdown)),
+        };
+        if r.is_some() {
+            self.got.set(true);
         }
+        r
     }
 
-    /// Cancel the request. If it is still queued it is dropped before
+    /// Cancel the request. If it is still queued it is swept out before
     /// dispatch, replied `Cancelled`, and counted in the cancellation
-    /// metrics; a request already dispatched completes normally.
+    /// metrics; a request already dispatched completes normally. The
+    /// first cancel also wakes the service so the queue slot is reclaimed
+    /// immediately (observable as `cancel_wakeups` in the metrics) — a
+    /// cancelled request frees `max_pending` capacity right away instead
+    /// of at the next flush.
     pub fn cancel(&self) {
-        self.cancel.store(true, Ordering::Relaxed);
+        if !self.cancel.swap(true, Ordering::Relaxed) {
+            // Best-effort: a service that is already gone needs no nudge.
+            let _ = self.nudge.send(Request::CancelWakeup);
+        }
     }
 
     /// When the request was submitted (latency accounting).
@@ -131,8 +158,11 @@ impl<R> Ticket<R> {
 impl<R> Drop for Ticket<R> {
     fn drop(&mut self) {
         // An abandoned ticket is a cancellation: the service must not burn
-        // a solve on a result nobody can receive.
-        self.cancel.store(true, Ordering::Relaxed);
+        // a solve on a result nobody can receive. A ticket whose result
+        // was already delivered is not abandoned — no wakeup for those.
+        if !self.got.get() {
+            self.cancel();
+        }
     }
 }
 
@@ -160,7 +190,7 @@ enum Request {
     Register {
         id: String,
         matrix: Box<Csr>,
-        strategy: StrategySpec,
+        plan: PlanSpec,
         reply: Sender<Result<RegisterInfo, ServiceError>>,
     },
     Solve {
@@ -172,6 +202,9 @@ enum Request {
         lane: Lane,
         cancelled: Arc<AtomicBool>,
     },
+    /// a ticket was cancelled: sweep the queues now so capacity frees up
+    /// immediately instead of at the next flush
+    CancelWakeup,
     Snapshot(Sender<Snapshot>),
     Shutdown,
 }
@@ -183,8 +216,9 @@ pub struct RegisterInfo {
     pub levels_after: usize,
     pub rows_rewritten: usize,
     pub backend: &'static str,
-    /// strategy that prepared the matrix (the tuner's pick under `auto`)
-    pub strategy: String,
+    /// solve plan that prepared the matrix (the tuner's pick under
+    /// `auto`)
+    pub plan: String,
     /// Some(hit?) when the tuner decided *for this registration*; None
     /// for fixed strategies and for same-id re-registrations, which
     /// return the memoized preparation without consulting the tuner
@@ -198,21 +232,22 @@ pub struct SolveHandle {
 }
 
 impl SolveHandle {
-    /// Preprocess and register a matrix under `id`. The strategy arrives
-    /// pre-parsed: pass [`StrategySpec::Default`] to use the service's
-    /// configured strategy, or `StrategySpec::parse("auto")?` etc.
+    /// Preprocess and register a matrix under `id`. The plan arrives
+    /// pre-parsed: pass [`PlanSpec::Default`] to use the service's
+    /// configured plan, [`PlanSpec::Auto`] for the tuner, or
+    /// `PlanSpec::parse("avgcost+scheduled")?` etc.
     pub fn register(
         &self,
         id: &str,
         matrix: Csr,
-        strategy: StrategySpec,
+        plan: PlanSpec,
     ) -> Result<RegisterInfo, ServiceError> {
         let (tx, rx) = mpsc::channel();
         self.tx
             .send(Request::Register {
                 id: id.to_string(),
                 matrix: Box::new(matrix),
-                strategy,
+                plan,
                 reply: tx,
             })
             .map_err(|_| ServiceError::Shutdown)?;
@@ -243,7 +278,13 @@ impl SolveHandle {
     ) -> Result<SolveTicket, ServiceError> {
         let (tx, rx) = mpsc::channel();
         let (cancel, submitted) = self.submit(id, vec![b], Reply::One(tx), &opts)?;
-        Ok(Ticket { rx, cancel, submitted })
+        Ok(Ticket {
+            rx,
+            cancel,
+            nudge: self.tx.clone(),
+            got: Cell::new(false),
+            submitted,
+        })
     }
 
     /// Submit a block of right-hand sides as **one unit**: the block lands
@@ -259,7 +300,13 @@ impl SolveHandle {
     ) -> Result<BlockTicket, ServiceError> {
         let (tx, rx) = mpsc::channel();
         let (cancel, submitted) = self.submit(id, bs, Reply::Many(tx), &opts)?;
-        Ok(Ticket { rx, cancel, submitted })
+        Ok(Ticket {
+            rx,
+            cancel,
+            nudge: self.tx.clone(),
+            got: Cell::new(false),
+            submitted,
+        })
     }
 
     fn submit(
@@ -372,7 +419,7 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
             Some(Request::Register {
                 id,
                 matrix,
-                strategy,
+                plan,
                 reply,
             }) => {
                 // A same-id re-registration returns the memoized
@@ -380,11 +427,11 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                 // decisions in the metrics.
                 let fresh = !prepared.contains_key(&id);
                 let res = pipeline
-                    .prepare(&id, *matrix, &strategy)
+                    .prepare(&id, *matrix, &plan)
                     .map(|p| {
                         if fresh {
                             if let Some(tuned) = &p.tuned {
-                                metrics.record_tuner_choice(&tuned.strategy, tuned.cache_hit);
+                                metrics.record_tuner_choice(&tuned.plan, tuned.cache_hit);
                             }
                         }
                         prepared.insert(id.clone(), Arc::clone(&p));
@@ -396,7 +443,7 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                                 Backend::Native => "native",
                                 Backend::Xla => "xla",
                             },
-                            strategy: p.strategy_name.clone(),
+                            plan: p.plan_name.clone(),
                             tuner_cache_hit: if fresh {
                                 p.tuned.as_ref().map(|t| t.cache_hit)
                             } else {
@@ -464,6 +511,17 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                             },
                         );
                     }
+                }
+            }
+            Some(Request::CancelWakeup) => {
+                // Reclaim the cancelled requests' queue capacity now:
+                // reply, count, and let the gauge update below see the
+                // shrunken queues. (dispatch() still weeds any cancel
+                // that races past this sweep.)
+                metrics.record_cancel_wakeup();
+                for q in batcher.sweep(|w: &Waiting| w.cancelled.load(Ordering::Relaxed)) {
+                    metrics.record_cancellation();
+                    q.token.reply.send_err(ServiceError::Cancelled);
                 }
             }
             Some(Request::Snapshot(tx)) => {
@@ -618,8 +676,8 @@ mod tests {
     use super::*;
     use crate::sparse::generate;
 
-    fn spec(s: &str) -> StrategySpec {
-        StrategySpec::parse(s).unwrap()
+    fn spec(s: &str) -> PlanSpec {
+        PlanSpec::parse(s).unwrap()
     }
 
     fn test_cfg() -> Config {
@@ -655,25 +713,32 @@ mod tests {
         let n = m.nrows;
         let i1 = h.register("m1", m.clone(), spec("auto")).unwrap();
         assert_eq!(i1.tuner_cache_hit, Some(false));
-        assert!(!i1.strategy.is_empty());
+        assert!(!i1.plan.is_empty());
+        // The tuner's decision is a full two-axis plan name.
+        sptrsv_gt_plan_parses(&i1.plan);
         // Same structure, new id: answered from the fingerprint cache.
         let i2 = h.register("m2", m.clone(), spec("auto")).unwrap();
         assert_eq!(i2.tuner_cache_hit, Some(true));
-        assert_eq!(i2.strategy, i1.strategy);
+        assert_eq!(i2.plan, i1.plan);
         // Same-id re-registration returns the memoized preparation: no
         // tuner consult, no metrics movement, no stale cache-hit claim.
         let i3 = h.register("m1", m.clone(), spec("auto")).unwrap();
         assert_eq!(i3.tuner_cache_hit, None);
-        assert_eq!(i3.strategy, i1.strategy);
+        assert_eq!(i3.plan, i1.plan);
         let ones = vec![1.0; n];
         let x = h.solve("m2", ones.clone()).unwrap();
         assert!(m.residual_inf(&x, &ones) < 1e-9);
         let snap = h.metrics().unwrap();
         assert_eq!(snap.tuner_cache_hits, 1);
         assert_eq!(snap.tuner_cache_misses, 1);
-        let total_wins: u64 = snap.strategy_wins.iter().map(|(_, n)| n).sum();
+        let total_wins: u64 = snap.plan_wins.iter().map(|(_, n)| n).sum();
         assert_eq!(total_wins, 2);
         svc.shutdown();
+    }
+
+    fn sptrsv_gt_plan_parses(name: &str) {
+        crate::transform::SolvePlan::parse(name)
+            .unwrap_or_else(|e| panic!("tuned plan '{name}' unparseable: {e}"));
     }
 
     #[test]
@@ -693,7 +758,7 @@ mod tests {
         let h = svc.handle();
         let m = generate::lung2_like(&generate::GenOptions::with_scale(0.02));
         let n = m.nrows;
-        h.register("lung", m.clone(), StrategySpec::Default).unwrap();
+        h.register("lung", m.clone(), PlanSpec::Default).unwrap();
         let tickets: Vec<SolveTicket> = (0..8)
             .map(|i| {
                 let b = vec![(i + 1) as f64; n];
@@ -711,14 +776,14 @@ mod tests {
     }
 
     #[test]
-    fn scheduled_strategy_serves_and_reports_sched_metrics() {
+    fn scheduled_plan_serves_and_reports_sched_metrics() {
         let svc = Service::start(test_cfg());
         let h = svc.handle();
         let m = generate::lung2_like(&generate::GenOptions::with_scale(0.02));
         let n = m.nrows;
         let info = h.register("sched", m.clone(), spec("scheduled")).unwrap();
-        assert_eq!(info.strategy, "scheduled");
-        assert_eq!(info.rows_rewritten, 0, "scheduled never rewrites");
+        assert_eq!(info.plan, "scheduled");
+        assert_eq!(info.rows_rewritten, 0, "legacy scheduled pairs with none");
         assert_eq!(info.backend, "native");
         let b = vec![1.0; n];
         let x = h.solve("sched", b.clone()).unwrap();
@@ -727,6 +792,26 @@ mod tests {
         assert_eq!(snap.solves, 1);
         assert!(snap.sched_blocks > 0, "schedule stats surfaced");
         assert!(snap.to_string().contains("sched blocks="));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn composed_plan_serves_through_the_service() {
+        let svc = Service::start(test_cfg());
+        let h = svc.handle();
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.02));
+        let n = m.nrows;
+        let info = h
+            .register("comp", m.clone(), spec("avgcost+scheduled"))
+            .unwrap();
+        assert_eq!(info.plan, "avgcost+scheduled");
+        assert!(info.rows_rewritten > 0, "rewrite axis ran");
+        assert!(info.levels_after < info.levels_before);
+        let b = vec![1.0; n];
+        let x = h.solve("comp", b.clone()).unwrap();
+        assert!(m.residual_inf(&x, &b) < 1e-9);
+        let snap = h.metrics().unwrap();
+        assert!(snap.sched_blocks > 0, "exec axis ran on the scheduled backend");
         svc.shutdown();
     }
 
@@ -821,6 +906,45 @@ mod tests {
         let snap = h.metrics().unwrap();
         assert_eq!(snap.cancellations, 1);
         assert_eq!(snap.solves, 0, "cancelled request must not be solved");
+        assert!(snap.cancel_wakeups >= 1, "cancel woke the service");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn cancel_wakes_service_and_reclaims_capacity_immediately() {
+        // One admission slot, a batching deadline far beyond the test:
+        // without the cancel wakeup the slot would stay occupied until
+        // the (minute-long) flush and the second request would bounce
+        // Overloaded.
+        let svc = Service::start(Config {
+            max_pending: 1,
+            batch_size: 100,
+            batch_deadline_us: 60_000_000,
+            ..test_cfg()
+        });
+        let h = svc.handle();
+        let m = generate::tridiagonal(30, &Default::default());
+        h.register("t", m, spec("none")).unwrap();
+        let t1 = h
+            .solve_async("t", vec![1.0; 30], SolveOptions::default())
+            .unwrap();
+        t1.cancel();
+        // The sweep replies Cancelled without waiting for any flush.
+        assert_eq!(
+            t1.wait_timeout(Duration::from_secs(5)),
+            Some(Err(ServiceError::Cancelled))
+        );
+        // Capacity is back: the next request is admitted (no Overloaded
+        // reply arrives), not rejected.
+        let t2 = h
+            .solve_async("t", vec![2.0; 30], SolveOptions::default())
+            .unwrap();
+        assert_eq!(t2.wait_timeout(Duration::from_millis(200)), None);
+        let snap = h.metrics().unwrap();
+        assert_eq!(snap.cancellations, 1);
+        assert_eq!(snap.rejections, 0, "slot was reclaimed before t2 arrived");
+        assert!(snap.cancel_wakeups >= 1);
+        assert_eq!(snap.lane_batch_depth, 1, "only t2 still queued");
         svc.shutdown();
     }
 

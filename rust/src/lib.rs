@@ -17,11 +17,11 @@
 //! Quick start — library use (transform once, solve many):
 //! ```no_run
 //! use sptrsv_gt::sparse::generate;
-//! use sptrsv_gt::transform::Strategy;
+//! use sptrsv_gt::transform::SolvePlan;
 //! use sptrsv_gt::solver::executor::TransformedSolver;
 //!
 //! let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
-//! let t = Strategy::parse("avgcost").unwrap().apply(&m);
+//! let t = SolvePlan::parse("avgcost").unwrap().apply(&m);
 //! println!("levels {} -> {}", t.stats.levels_before, t.stats.levels_after);
 //! let solver = TransformedSolver::from_parts(m, t, 4);
 //! let b = vec![1.0; solver.m.nrows];
@@ -29,15 +29,52 @@
 //! # let _ = x;
 //! ```
 //!
+//! ## Solve plans
+//!
+//! Everything the crate does with a matrix is described by a
+//! [`transform::SolvePlan`] — two independent axes, composed freely:
+//!
+//! * **[`transform::Rewrite`]** (what the paper contributes): `none`,
+//!   `avgcost` (§III), `guarded:d:m` (§III.A constraints), `manual:d`
+//!   (the fixed-distance strategy of [12]).
+//! * **[`transform::Exec`]** (how the result is consumed): `levelset`
+//!   barriers, `scheduled[:t[:w]]` (coarsened static schedule + elastic
+//!   waits), `syncfree` (atomic dependency counters), `reorder`
+//!   (level-sorted permutation for locality).
+//!
+//! The plan grammar joins them with `+`: `avgcost+scheduled` schedules
+//! the rewritten system, `guarded:5+syncfree` runs the guarded rewrite on
+//! the sync-free solver. Every pre-split single name keeps parsing to its
+//! old pairing (`scheduled` ≡ `none+scheduled`, `avgcost` ≡
+//! `avgcost+levelset`), and `auto` asks the tuner to race the cross
+//! product. [`transform::PlanSpec`] is the parsed-once-at-the-edge
+//! request type every API boundary takes (`StrategySpec` remains as an
+//! alias).
+//!
+//! ```
+//! use sptrsv_gt::transform::{Exec, PlanSpec, Rewrite, SolvePlan};
+//!
+//! let plan = SolvePlan::parse("avgcost+scheduled").unwrap();
+//! assert!(matches!(plan.rewrite, Rewrite::AvgLevelCost(_)));
+//! assert!(matches!(plan.exec, Exec::Scheduled(_)));
+//! // Legacy names normalize onto the two axes.
+//! assert_eq!(SolvePlan::parse("syncfree").unwrap().to_string(), "none+syncfree");
+//! // `auto` is a spec (a tuner request), not a concrete plan.
+//! assert!(matches!(PlanSpec::parse("auto").unwrap(), PlanSpec::Auto));
+//! ```
+//!
 //! ## Serving
 //!
 //! The coordinator ([`coordinator`]) wraps the same pipeline in a typed
-//! service API (v2): strategies cross the boundary as
-//! [`transform::StrategySpec`] (parsed once at the edge), failures as
+//! service API: solve plans cross the boundary as
+//! [`transform::PlanSpec`] (parsed once at the edge — composed plans,
+//! legacy names and `auto` alike), failures as
 //! [`error::ServiceError`] (match on `Overloaded`, `DeadlineExceeded`,
 //! `Cancelled`, … — never strings), async solves as
 //! [`coordinator::SolveTicket`]s with `wait`/`wait_timeout`/`try_get`/
-//! `cancel`, and per-request scheduling via
+//! `cancel` (cancellation wakes the service so the queued request's
+//! `max_pending` capacity is reclaimed immediately, visible as the
+//! `cancel_wakeups` metric), and per-request scheduling via
 //! [`coordinator::SolveOptions`] (deadline + interactive/batch
 //! [`coordinator::Lane`]). Multi-RHS blocks go through
 //! [`coordinator::SolveHandle::solve_many`] and land in the batcher as
@@ -49,13 +86,15 @@
 //! use sptrsv_gt::config::Config;
 //! use sptrsv_gt::coordinator::{Lane, Service, SolveOptions};
 //! use sptrsv_gt::sparse::generate;
-//! use sptrsv_gt::transform::StrategySpec;
+//! use sptrsv_gt::transform::PlanSpec;
 //!
 //! let svc = Service::start(Config::default());
 //! let h = svc.handle();
 //! let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
 //! let n = m.nrows;
-//! h.register("lung2", m, StrategySpec::parse("auto").unwrap()).unwrap();
+//! // A composed plan: avgLevelCost rewriting served on the coarsened
+//! // static schedule. `PlanSpec::Auto` would let the tuner pick instead.
+//! h.register("lung2", m, PlanSpec::parse("avgcost+scheduled").unwrap()).unwrap();
 //!
 //! // Blocking solve on the batch lane.
 //! let x = h.solve("lung2", vec![1.0; n]).unwrap();
@@ -96,20 +135,22 @@
 //! full tour.
 //!
 //! Config keys (`Config` / flat `key = value` file / CLI `--key value`):
-//! `workers`, `strategy` (any `Strategy::parse` name, validated at config
-//! time), `artifacts_dir`, `batch_size` (right-hand sides per batch),
-//! `batch_deadline_us`, `max_pending` (admission cap, 0 = unbounded),
-//! `use_xla`, `seed`, `tuner_cache`, `tuner_top_k`, `tuner_race_solves`,
-//! `tuner_cache_ttl` (seconds before a spilled plan expires, 0 = never),
+//! `workers`, `plan` (any `SolvePlan::parse` name — the `rewrite+exec`
+//! grammar, a legacy single name, or `auto`; validated at config time;
+//! the pre-split `strategy` key remains an alias), `artifacts_dir`,
+//! `batch_size` (right-hand sides per batch), `batch_deadline_us`,
+//! `max_pending` (admission cap, 0 = unbounded), `use_xla`, `seed`,
+//! `tuner_cache`, `tuner_top_k`, `tuner_race_solves`, `tuner_cache_ttl`
+//! (seconds before a spilled plan expires, 0 = never),
 //! `sched_block_target`, `sched_stale_window` (see Scheduling below).
 //!
 //! ## Scheduling
 //!
 //! Level-set execution pays one global barrier per level — exactly where
 //! the paper's matrices hurt, thin and skewed levels. The [`sched`]
-//! subsystem instead compiles the (possibly transformed) dependency DAG
-//! into a **static schedule**: rows are coarsened into supernode blocks
-//! (serial chains collapse whole; thin levels group up to a work-balance
+//! subsystem instead compiles the transformed dependency DAG into a
+//! **static schedule**: rows are coarsened into supernode blocks (serial
+//! chains collapse whole; thin levels group up to a work-balance
 //! target), blocks are placed on workers by greedy ETF list scheduling
 //! that trades load balance against the cross-worker edge cut, and the
 //! [`sched::ScheduledSolver`] executes the result with **elastic**
@@ -117,72 +158,80 @@
 //! window that fills stalls with later ready blocks, one pool rendezvous
 //! per solve instead of one per level.
 //!
+//! As an [`transform::Exec`] axis it composes with any rewrite: the
+//! schedule is always built over the *transformed* levels, so
+//! `avgcost+scheduled` coarsens the merged-level system the rewrite
+//! produced.
+//!
 //! ```no_run
 //! use sptrsv_gt::sched::{SchedOptions, ScheduledSolver};
 //! use sptrsv_gt::sparse::generate;
-//! use sptrsv_gt::transform::Strategy;
+//! use sptrsv_gt::transform::SolvePlan;
 //!
-//! let m = generate::tridiagonal(10_000, &Default::default());
-//! let t = Strategy::parse("scheduled").unwrap().apply(&m); // no rewriting
+//! let m = generate::lung2_like(&generate::GenOptions::with_scale(0.5));
+//! let plan = SolvePlan::parse("avgcost+scheduled").unwrap();
+//! let t = plan.apply(&m); // the rewrite axis
 //! let s = ScheduledSolver::from_parts(m, t, 4, &SchedOptions::default());
 //! let st = s.stats();
 //! println!(
 //!     "{} blocks, {} point-to-point waits vs {} barriers",
 //!     st.num_blocks, st.cut_edges, st.levelset_barriers
 //! );
-//! let x = s.solve(&vec![1.0; 10_000]);
-//! # let _ = x;
+//! # let _ = st;
 //! ```
 //!
-//! `--strategy scheduled[:block_target[:stale_window]]` selects it from
-//! the CLI, config and service alike; unset knobs fall back to the
-//! `sched_block_target` / `sched_stale_window` config keys. The tuner
-//! portfolio includes `scheduled` (plus the `syncfree` and `reorder`
-//! execution strategies), so `--strategy auto` will race it whenever the
-//! schedule-aware cost model shortlists it, and the coordinator metrics
-//! report blocks, cut edges and elastic wait counters for every
-//! scheduled matrix being served.
+//! `--plan REWRITE+scheduled[:block_target[:stale_window]]` selects it
+//! from the CLI, config and service alike; unset knobs fall back to the
+//! `sched_block_target` / `sched_stale_window` config keys. The tuner's
+//! cross product races `scheduled` under every rewrite, and the
+//! coordinator metrics report blocks, cut edges and elastic wait
+//! counters for every scheduled matrix being served.
 //!
 //! ## Tuning
 //!
-//! Strategy choice is structure-dependent (lung2's thin chain loves
-//! `avgcost`; a uniform chain needs `manual`; a wide shallow matrix is
-//! best left alone), so the crate ships a portfolio autotuner
-//! ([`tuner`]): it fingerprints the sparsity structure, predicts
-//! per-strategy cost from a structural feature vector, races the top
-//! candidates on real warm-up solves, and caches the winner by
-//! fingerprint (optionally spilled to a JSON file) so re-registering a
-//! known structure skips analysis entirely. Spilled entries carry a
-//! schema version ([`tuner::PLAN_SCHEMA_VERSION`]); plans raced by an
-//! older solver are dropped on load rather than trusted stale.
+//! Plan choice is structure-dependent (lung2's thin chain loves
+//! `avgcost`; a uniform chain wants `manual` rewriting or barrier-free
+//! execution; a wide shallow matrix is best left alone), so the crate
+//! ships a portfolio autotuner ([`tuner`]) over the **full rewrite ×
+//! exec cross product** (16 candidates by default): it fingerprints the
+//! sparsity structure, predicts per-plan cost by composing the rewrite's
+//! estimated shape with the exec's synchronization model, prunes to a
+//! `top_k` shortlist so the race never runs all 16 lanes, races the
+//! shortlist on each plan's own backend, and caches the winning plan by
+//! fingerprint (optionally spilled to a JSON file). Spilled entries
+//! carry a schema version ([`tuner::PLAN_SCHEMA_VERSION`]); plans raced
+//! by an older solver are dropped on load rather than trusted stale, and
+//! the cost model's EWMA calibration is persisted next to the plan cache
+//! so restarts keep the refined coefficients too.
 //!
-//! The quickest route is the `auto` strategy name, accepted everywhere a
-//! strategy is (CLI `--strategy auto`, `Config::strategy`, any
-//! [`transform::StrategySpec`] handed to `register`):
+//! The quickest route is the `auto` spec, accepted everywhere a plan is
+//! (CLI `--plan auto`, `Config::plan`, any [`transform::PlanSpec`]
+//! handed to `register`):
 //!
 //! ```no_run
 //! use sptrsv_gt::sparse::generate;
 //! use sptrsv_gt::tuner::{Tuner, TunerOptions};
 //!
 //! let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
-//! // One-off: Strategy::parse("auto").unwrap().apply(&m) does the same
-//! // with a throwaway tuner; hold a Tuner to keep the plan cache warm.
+//! // One-off: tuner::process_choose(&m) uses a lazily initialized
+//! // process-wide tuner (repeat calls hit its plan cache); hold your own
+//! // Tuner to control options.
 //! let mut tuner = Tuner::new(TunerOptions::default());
 //! let plan = tuner.choose(&m).unwrap();
 //! println!(
 //!     "picked {} ({} levels, cache {:?})",
-//!     plan.strategy_name,
+//!     plan.plan_name,
 //!     plan.transform.num_levels(),
 //!     plan.source
 //! );
 //! ```
 //!
 //! The coordinator consults a persistent tuner on `register` when the
-//! strategy resolves to `auto` — racing candidates on the pipeline's own
+//! plan resolves to `auto` — racing candidates on the pipeline's own
 //! worker pool, not a throwaway one — and reports cache hit/miss and
-//! per-strategy win counts in its metrics; `sptrsv tune --kind lung2`
-//! prints the whole decision (features, predictions, race) for one
-//! matrix.
+//! per-plan win counts in its metrics; `sptrsv tune --kind lung2` prints
+//! the whole decision (features, cross-product predictions, race) for
+//! one matrix.
 
 pub mod codegen;
 pub mod config;

@@ -22,7 +22,7 @@ use sptrsv_gt::graph::{analyze::LevelStats, Levels};
 use sptrsv_gt::report::{figures, table1};
 use sptrsv_gt::runtime::{PaddedSystem, Registry, XlaSolver};
 use sptrsv_gt::sparse::{generate, matrix_market, Csr};
-use sptrsv_gt::transform::{Strategy, StrategySpec};
+use sptrsv_gt::transform::{Exec, PlanSpec, SolvePlan};
 use sptrsv_gt::util::cli::Args;
 use sptrsv_gt::util::rng::Rng;
 
@@ -62,14 +62,14 @@ USAGE: sptrsv <subcommand> [flags]
   gen       --kind lung2|torso2|tridiagonal|banded|random [--scale F] [--n N]
             [--seed S] [--ill-scaled] --out FILE.mtx
   analyze   (--matrix FILE.mtx | --kind ... [--scale F])
-  transform (--matrix|--kind...) [--strategy none|avgcost|manual[:d]|
-            guarded[:d[:m]]|scheduled[:t[:w]]|syncfree|reorder|auto]
-  solve     (--matrix|--kind...) [--strategy S] [--backend serial|levelset|
-            syncfree|transformed|scheduled|xla] [--workers W] [--repeat R]
-            [--sched-block-target T] [--sched-stale-window W]
+  transform (--matrix|--kind...) [--plan P]   # rewrite axis of the plan
+  solve     (--matrix|--kind...) [--plan P] [--backend serial|plan|
+            transformed|levelset|syncfree|scheduled|reorder|xla]
+            [--workers W] [--repeat R] [--check] [--sched-block-target T]
+            [--sched-stale-window W]
   tune      (--matrix|--kind...) [--top-k K] [--race-solves N] [--workers W]
             [--cache FILE.json]   # portfolio autotuner decision for a matrix
-  codegen   (--matrix|--kind...) [--strategy S] [--no-rearrange] [--bake]
+  codegen   (--matrix|--kind...) [--plan P] [--no-rearrange] [--bake]
             [--head N] [--out FILE.c]
   table1    [--scale F] [--no-codegen]
   figures   [--scale F] [--out-dir DIR]
@@ -77,6 +77,14 @@ USAGE: sptrsv <subcommand> [flags]
   serve     [--requests N] [--batch-size B] [--max-pending P] [--use-xla]
             # demo workload: mixed interactive/batch lanes + one multi-RHS
             # block through the coordinator, then the metrics snapshot
+
+PLANS (-P): REWRITE+EXEC, e.g. avgcost+scheduled, guarded:5+syncfree,
+  manual:4+reorder — REWRITE in none|avgcost|manual[:d]|guarded[:d[:m]],
+  EXEC in levelset|scheduled[:t[:w]]|syncfree|reorder. Legacy single names
+  still parse (avgcost = avgcost+levelset, scheduled = none+scheduled, ...)
+  and `auto` asks the tuner. --strategy stays as an alias for --plan;
+  `solve --backend levelset|syncfree|scheduled|reorder` overrides only the
+  exec axis (the --plan rewrite still applies; --plan none for raw runs).
 ";
 
 /// Scheduling knobs from the CLI: unset flags stay `None` so the crate
@@ -95,6 +103,55 @@ fn sched_flags(args: &Args) -> Result<sptrsv_gt::sched::SchedOptions> {
         block_target: parse("sched-block-target")?,
         stale_window: parse("sched-stale-window")?,
     })
+}
+
+/// The plan spec from the CLI: `--plan`, with `--strategy` kept as a
+/// pre-split alias. `default_plan` is the subcommand's fallback.
+fn plan_flag(args: &Args, default_plan: &str) -> Result<PlanSpec> {
+    let text = args
+        .flag("plan")
+        .or_else(|| args.flag("strategy"))
+        .unwrap_or(default_plan);
+    PlanSpec::parse(text).map_err(anyhow::Error::msg)
+}
+
+/// Resolve a CLI plan spec to a concrete (label, plan, transform) for
+/// `m`. `auto` consults a tuner — the lazily initialized process-wide
+/// one by default (repeated resolutions reuse its plan cache instead of
+/// re-racing), or a dedicated tuner when the subcommand knows the worker
+/// count the solve will run at — falling back to the paper's automatic
+/// strategy with a warning if tuning cannot decide. The tuner's
+/// already-built transform is returned as-is, never re-applied.
+fn resolve_plan(
+    spec: &PlanSpec,
+    m: &Csr,
+    workers: Option<usize>,
+) -> (String, SolvePlan, sptrsv_gt::transform::TransformResult) {
+    match spec.resolve(&PlanSpec::Default) {
+        sptrsv_gt::transform::ResolvedPlan::Fixed(name, plan) => {
+            let t = plan.apply(m);
+            (name, plan, t)
+        }
+        sptrsv_gt::transform::ResolvedPlan::Auto => {
+            let chosen = match workers {
+                Some(w) => sptrsv_gt::tuner::Tuner::new(sptrsv_gt::tuner::TunerOptions {
+                    workers: w,
+                    ..Default::default()
+                })
+                .choose(m),
+                None => sptrsv_gt::tuner::process_choose(m),
+            };
+            match chosen {
+                Ok(tp) => (format!("auto -> {}", tp.plan_name), tp.plan, tp.transform),
+                Err(e) => {
+                    eprintln!("warning: tuner could not decide ({e}); using avgcost");
+                    let plan = SolvePlan::parse("avgcost").unwrap();
+                    let t = plan.apply(m);
+                    ("avgcost".to_string(), plan, t)
+                }
+            }
+        }
+    }
 }
 
 /// Shared matrix loading: --matrix FILE or --kind generator.
@@ -175,13 +232,15 @@ fn cmd_analyze(args: &Args) -> Result<()> {
 
 fn cmd_transform(args: &Args) -> Result<()> {
     let (name, m) = load_matrix(args)?;
-    let strat = Strategy::parse(&args.flag_or("strategy", "avgcost")).map_err(anyhow::Error::msg)?;
+    let spec = plan_flag(args, "avgcost")?;
+    // Under `auto` the clock covers the tuner's decision too — that IS
+    // the offline analysis cost the paper discusses.
     let start = std::time::Instant::now();
-    let t = strat.apply(&m);
+    let (plan_name, plan, t) = resolve_plan(&spec, &m, None);
     let dt = start.elapsed();
     t.validate(&m).map_err(anyhow::Error::msg)?;
     let s = &t.stats;
-    println!("matrix {name}, strategy {}", strat.name());
+    println!("matrix {name}, plan {plan_name} (rewrite {})", plan.rewrite);
     println!(
         "levels: {} -> {} ({:.1}% reduction), barriers {} -> {}",
         s.levels_before,
@@ -218,76 +277,55 @@ fn cmd_solve(args: &Args) -> Result<()> {
     let n = m.nrows;
     let workers = args.usize_flag("workers", 4)?;
     let repeat = args.usize_flag("repeat", 1)?.max(1);
-    let backend = args.flag_or("backend", "transformed");
-    let strat = Strategy::parse(&args.flag_or("strategy", "avgcost")).map_err(anyhow::Error::msg)?;
+    let backend = args.flag_or("backend", "plan");
+    let spec = plan_flag(args, "avgcost")?;
     let mut rng = Rng::new(args.u64_flag("seed", 1)?);
     let b: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
 
     let mut x = vec![0.0; n];
+    let mut plan_label = spec.to_string();
     let start = std::time::Instant::now();
     match backend.as_str() {
         "serial" => {
+            plan_label = "serial".to_string();
             for _ in 0..repeat {
                 sptrsv_gt::solver::serial::solve_into(&m, &b, &mut x);
             }
         }
-        "levelset" => {
-            let s = sptrsv_gt::solver::levelset::LevelSetSolver::from_matrix(m.clone(), workers);
-            for _ in 0..repeat {
-                s.solve_into(&b, &mut x);
+        // The composed path: resolve the plan (tuning `auto` at the
+        // worker count the solve will run with), apply the rewrite axis,
+        // and build whatever backend the exec axis names. `transformed`
+        // is the pre-split alias; the backend names override only the
+        // exec axis, composing with the plan's rewrite — e.g.
+        // `solve --plan avgcost --backend scheduled` schedules the
+        // rewritten system and `--backend levelset` runs the rewritten
+        // system on level-set barriers (use `--plan none` for the raw
+        // baseline).
+        "plan" | "transformed" | "levelset" | "syncfree" | "scheduled" | "reorder" => {
+            let (resolved_name, mut plan, t) = resolve_plan(&spec, &m, Some(workers));
+            match backend.as_str() {
+                "levelset" => plan.exec = Exec::Levelset,
+                "syncfree" => plan.exec = Exec::Syncfree,
+                "reorder" => plan.exec = Exec::Reorder,
+                "scheduled" => plan.exec = Exec::Scheduled(sched_flags(args)?),
+                _ => {}
             }
-        }
-        "syncfree" => {
-            let s = sptrsv_gt::solver::syncfree::SyncFreeSolver::from_matrix(m.clone(), workers);
-            for _ in 0..repeat {
-                s.solve_into(&b, &mut x);
-            }
-        }
-        "transformed" => {
-            // `auto` must tune at the worker count the solve will run
-            // with, so build the tuner explicitly instead of letting
-            // Strategy::Auto::apply fall back to machine defaults. The
-            // tuner's pick (which may itself be an execution strategy)
-            // then decides the backend through ExecSolver.
-            let (exec_strat, t) = match &strat {
-                Strategy::Auto => {
-                    let mut tuner = sptrsv_gt::tuner::Tuner::new(sptrsv_gt::tuner::TunerOptions {
-                        workers,
-                        ..Default::default()
-                    });
-                    let plan = tuner.choose(&m)?;
-                    (plan.strategy, plan.transform)
-                }
-                s => (s.clone(), s.apply(&m)),
-            };
+            plan_label = format!("{resolved_name} [{}]", plan.exec);
             let s = sptrsv_gt::solver::ExecSolver::build(
                 std::sync::Arc::new(m.clone()),
                 std::sync::Arc::new(t),
-                &exec_strat,
+                &plan.exec,
                 std::sync::Arc::new(sptrsv_gt::solver::pool::Pool::new(workers)),
                 sched_flags(args)?,
             )?;
-            for _ in 0..repeat {
-                s.solve_into(&b, &mut x);
+            if let Some(sched) = s.scheduled() {
+                let st = sched.stats();
+                println!(
+                    "schedule: {} blocks ({} chains), cut {} vs {} barriers, max load {}",
+                    st.num_blocks, st.chain_blocks, st.cut_edges, st.levelset_barriers,
+                    st.max_worker_load
+                );
             }
-        }
-        "scheduled" => {
-            // Force scheduled execution over whatever transform the
-            // --strategy flag produced (the paper's rewriting composes
-            // with the coarsened schedule).
-            let t = strat.apply(&m);
-            let s = sptrsv_gt::sched::ScheduledSolver::from_parts(
-                m.clone(),
-                t,
-                workers,
-                &sched_flags(args)?,
-            );
-            let st = s.stats();
-            println!(
-                "schedule: {} blocks ({} chains), cut {} vs {} barriers, max load {}",
-                st.num_blocks, st.chain_blocks, st.cut_edges, st.levelset_barriers,
-                st.max_worker_load
-            );
             for _ in 0..repeat {
                 s.solve_into(&b, &mut x);
             }
@@ -295,7 +333,8 @@ fn cmd_solve(args: &Args) -> Result<()> {
         "xla" => {
             let dir = args.flag_or("artifacts-dir", "artifacts");
             let reg = std::sync::Arc::new(Registry::load(Path::new(&dir))?);
-            let t = strat.apply(&m);
+            let (resolved_name, _plan, t) = resolve_plan(&spec, &m, Some(workers));
+            plan_label = resolved_name;
             let req = PaddedSystem::requirements(&m, &t);
             let meta = reg
                 .best_fit("solve", &req)
@@ -311,11 +350,19 @@ fn cmd_solve(args: &Args) -> Result<()> {
         other => bail!("unknown --backend '{other}'"),
     }
     let dt = start.elapsed() / repeat as u32;
+    let residual = m.residual_inf(&x, &b);
     println!(
-        "{name}: backend={backend} strategy={} n={n} time/solve={dt:?} residual={:.3e}",
-        strat.name(),
-        m.residual_inf(&x, &b)
+        "{name}: backend={backend} plan={plan_label} n={n} time/solve={dt:?} residual={residual:.3e}"
     );
+    if args.bool_flag("check") {
+        // CI smoke gate: the solve must match the serial reference.
+        let x_ref = sptrsv_gt::solver::serial::solve(&m, &b);
+        sptrsv_gt::util::prop::assert_allclose(&x, &x_ref, 1e-9, 1e-11)
+            .map_err(anyhow::Error::msg)
+            .context("--check: solution does not match the serial reference")?;
+        anyhow::ensure!(residual < 1e-9, "--check: residual {residual:.3e} too large");
+        println!("check OK (matches serial within 1e-9/1e-11)");
+    }
     Ok(())
 }
 
@@ -348,17 +395,18 @@ fn cmd_tune(args: &Args) -> Result<()> {
     }
     println!("fingerprint: {}", plan.fingerprint);
     if !plan.predictions.is_empty() {
-        println!("cost-model predictions (lower is better):");
+        println!("cost-model predictions over the rewrite x exec cross product \
+                  (lower is better):");
         for (s, c) in &plan.predictions {
-            println!("  {s:<12} {c:>14.1}");
+            println!("  {s:<24} {c:>14.1}");
         }
     }
     if let Some(race) = &plan.race {
         println!("race results:");
         for lane in &race.lanes {
             println!(
-                "  {:<12} transform={:>8.2}ms solve={:>10.1}us levels={:<6} cost={}",
-                lane.strategy,
+                "  {:<24} transform={:>8.2}ms solve={:>10.1}us levels={:<6} cost={}",
+                lane.plan,
                 lane.transform_ms,
                 lane.solve_us,
                 lane.levels_after,
@@ -372,7 +420,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
     };
     println!(
         "chosen: {} via {how} -> {} levels ({} barriers)",
-        plan.strategy_name,
+        plan.plan_name,
         plan.transform.num_levels(),
         plan.transform.num_levels().saturating_sub(1)
     );
@@ -381,8 +429,8 @@ fn cmd_tune(args: &Args) -> Result<()> {
 
 fn cmd_codegen(args: &Args) -> Result<()> {
     let (_, m) = load_matrix(args)?;
-    let strat = Strategy::parse(&args.flag_or("strategy", "avgcost")).map_err(anyhow::Error::msg)?;
-    let t = strat.apply(&m);
+    let spec = plan_flag(args, "avgcost")?;
+    let (_, _plan, t) = resolve_plan(&spec, &m, None);
     let bake = if args.bool_flag("bake") {
         let mut rng = Rng::new(7);
         Some((0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect())
@@ -484,8 +532,8 @@ fn cmd_xla(args: &Args) -> Result<()> {
     }
     // Smoke: solve a generated system on XLA and compare to native.
     let m = generate::lung2_like(&generate::GenOptions::with_scale(0.02));
-    let strat = Strategy::parse("avgcost").map_err(anyhow::Error::msg)?;
-    let t = strat.apply(&m);
+    let plan = SolvePlan::parse("avgcost").map_err(anyhow::Error::msg)?;
+    let t = plan.apply(&m);
     let req = PaddedSystem::requirements(&m, &t);
     let meta = reg
         .best_fit("solve", &req)
@@ -512,9 +560,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.merge_args(args)?;
     let requests = args.usize_flag("requests", 64)?;
     println!(
-        "starting coordinator: workers={} strategy={} use_xla={} batch={}/{}us \
+        "starting coordinator: workers={} plan={} use_xla={} batch={}/{}us \
          max_pending={}",
-        cfg.workers, cfg.strategy, cfg.use_xla, cfg.batch_size, cfg.batch_deadline_us,
+        cfg.workers, cfg.plan, cfg.use_xla, cfg.batch_size, cfg.batch_deadline_us,
         cfg.max_pending
     );
     let batch_size = cfg.batch_size;
@@ -522,11 +570,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let h = svc.handle();
     let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
     let n = m.nrows;
-    let info = h.register("lung2", m.clone(), StrategySpec::Default)?;
+    let info = h.register("lung2", m.clone(), PlanSpec::Default)?;
     println!(
-        "registered lung2-like: strategy={}, levels {} -> {}, {} rows rewritten, \
+        "registered lung2-like: plan={}, levels {} -> {}, {} rows rewritten, \
          backend={}, prepare={:.1}ms",
-        info.strategy,
+        info.plan,
         info.levels_before,
         info.levels_after,
         info.rows_rewritten,

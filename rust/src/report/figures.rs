@@ -3,7 +3,7 @@
 //! `cargo bench --bench figures`) uses.
 
 use crate::sparse::Csr;
-use crate::transform::Strategy;
+use crate::transform::Rewrite;
 
 #[derive(Debug, Clone)]
 pub struct Series {
@@ -16,17 +16,17 @@ pub struct Series {
 /// Compute the three series for one matrix.
 pub fn series(m: &Csr) -> Vec<Series> {
     [
-        Strategy::None,
-        Strategy::AvgLevelCost(Default::default()),
-        Strategy::Manual(Default::default()),
+        ("no-rewriting", Rewrite::None),
+        ("avgLevelCost", Rewrite::AvgLevelCost(Default::default())),
+        ("manual", Rewrite::Manual(Default::default())),
     ]
     .iter()
-    .map(|s| {
+    .map(|(name, s)| {
         let t = s.apply(m);
         let level_costs = t.level_costs();
         let max = level_costs.iter().copied().max().unwrap_or(0);
         Series {
-            strategy: s.name().to_string(),
+            strategy: name.to_string(),
             avg_level_cost: t.stats.total_level_cost_after as f64
                 / level_costs.len().max(1) as f64,
             max_level_cost: max,

@@ -6,7 +6,7 @@
 
 use crate::codegen::{self, CodegenOptions};
 use crate::sparse::Csr;
-use crate::transform::{Strategy, TransformResult};
+use crate::transform::{Rewrite, TransformResult};
 use crate::util::timer::Table;
 
 /// One Table I cell (a strategy applied to a matrix).
@@ -45,7 +45,7 @@ pub const PAPER_TORSO2: [(&str, PaperCell); 3] = [
 
 /// Compute one cell. `with_codegen` controls whether the (expensive)
 /// code-size metric is materialized.
-pub fn cell(m: &Csr, strategy: &Strategy, with_codegen: bool) -> (Cell, TransformResult) {
+pub fn cell(m: &Csr, strategy: &Rewrite, with_codegen: bool) -> (Cell, TransformResult) {
     let t = strategy.apply(m);
     let code_size_mb = if with_codegen {
         // The paper's testbed generates *specialized* code: the concrete
@@ -77,9 +77,9 @@ pub fn cell(m: &Csr, strategy: &Strategy, with_codegen: bool) -> (Cell, Transfor
 /// Run all three strategies on a matrix.
 pub fn run_matrix(m: &Csr, with_codegen: bool) -> Vec<Cell> {
     [
-        Strategy::None,
-        Strategy::AvgLevelCost(Default::default()),
-        Strategy::Manual(Default::default()),
+        Rewrite::None,
+        Rewrite::AvgLevelCost(Default::default()),
+        Rewrite::Manual(Default::default()),
     ]
     .iter()
     .map(|s| cell(m, s, with_codegen).0)

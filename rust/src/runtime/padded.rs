@@ -149,7 +149,7 @@ impl PaddedSystem {
 mod tests {
     use super::*;
     use crate::sparse::generate;
-    use crate::transform::Strategy;
+    use crate::transform::{Rewrite, SolvePlan};
 
     fn fits(m: &Csr, t: &TransformResult) -> PaddedSystem {
         let mut req = PaddedSystem::requirements(m, t);
@@ -192,7 +192,7 @@ mod tests {
     fn emulated_padded_solve_matches_serial() {
         for strat in ["none", "avgcost", "manual:5"] {
             let m = generate::random_lower(150, 3, 0.8, &Default::default());
-            let t = Strategy::parse(strat).unwrap().apply(&m);
+            let t = SolvePlan::parse(strat).unwrap().apply(&m);
             let p = fits(&m, &t);
             let mut rng = crate::util::rng::Rng::new(11);
             let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-2.0, 2.0)).collect();
@@ -206,8 +206,8 @@ mod tests {
     #[test]
     fn requirements_shrink_after_transform() {
         let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
-        let t0 = Strategy::None.apply(&m);
-        let t1 = Strategy::parse("avgcost").unwrap().apply(&m);
+        let t0 = Rewrite::None.apply(&m);
+        let t1 = SolvePlan::parse("avgcost").unwrap().apply(&m);
         let r0 = PaddedSystem::requirements(&m, &t0);
         let r1 = PaddedSystem::requirements(&m, &t1);
         assert!(r1.l < r0.l, "levels {} -> {}", r0.l, r1.l);
@@ -216,7 +216,7 @@ mod tests {
     #[test]
     fn no_fit_is_detected() {
         let m = generate::random_lower(100, 3, 0.8, &Default::default());
-        let t = Strategy::None.apply(&m);
+        let t = Rewrite::None.apply(&m);
         let req = PaddedSystem::requirements(&m, &t);
         let too_small = PadShape { n: 50, ..req };
         assert!(matches!(
@@ -228,7 +228,7 @@ mod tests {
     #[test]
     fn map_rhs_identity_without_rewrites() {
         let m = generate::random_lower(50, 2, 0.5, &Default::default());
-        let t = Strategy::None.apply(&m);
+        let t = Rewrite::None.apply(&m);
         let p = fits(&m, &t);
         let b: Vec<f64> = (0..50).map(|i| i as f64).collect();
         let bp = p.map_rhs(&b);

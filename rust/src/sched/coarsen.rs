@@ -259,10 +259,10 @@ pub fn coarsen(m: &Csr, t: &TransformResult, opts: &CoarsenOptions) -> CoarseDag
 mod tests {
     use super::*;
     use crate::sparse::generate;
-    use crate::transform::Strategy;
+    use crate::transform::{Rewrite, SolvePlan};
 
     fn coarse(m: &Csr, target: usize, workers: usize) -> CoarseDag {
-        let t = Strategy::None.apply(m);
+        let t = Rewrite::None.apply(m);
         coarsen(
             m,
             &t,
@@ -367,7 +367,7 @@ mod tests {
     #[test]
     fn transformed_system_coarsens_over_folded_deps() {
         let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
-        let t = Strategy::parse("avgcost").unwrap().apply(&m);
+        let t = SolvePlan::parse("avgcost").unwrap().apply(&m);
         let d = coarsen(
             &m,
             &t,
@@ -395,7 +395,7 @@ mod tests {
     #[test]
     fn empty_matrix() {
         let m = Csr::new(0, 0, vec![0], vec![], vec![]).unwrap();
-        let t = Strategy::None.apply(&m);
+        let t = Rewrite::None.apply(&m);
         let d = coarsen(&m, &t, &Default::default());
         assert_eq!(d.num_blocks(), 0);
         assert_eq!(d.num_edges(), 0);

@@ -216,12 +216,12 @@ impl ScheduledSolver {
 mod tests {
     use super::*;
     use crate::sparse::generate;
-    use crate::transform::Strategy;
+    use crate::transform::{Rewrite, SolvePlan};
     use crate::util::prop::assert_allclose;
     use crate::util::rng::Rng;
 
     fn check(m: Csr, strat: &str, nworkers: usize, opts: SchedOptions, seed: u64) {
-        let t = Strategy::parse(strat).unwrap().apply(&m);
+        let t = SolvePlan::parse(strat).unwrap().apply(&m);
         let mut rng = Rng::new(seed);
         let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-5.0, 5.0)).collect();
         let x_ref = crate::solver::serial::solve(&m, &b);
@@ -277,7 +277,7 @@ mod tests {
     #[test]
     fn strict_window_zero_and_wide_window_agree() {
         let m = generate::random_lower(300, 4, 0.8, &Default::default());
-        let t = Strategy::None.apply(&m);
+        let t = Rewrite::None.apply(&m);
         let mut rng = Rng::new(9);
         let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
         let strict = ScheduledSolver::from_parts(
@@ -291,7 +291,7 @@ mod tests {
         );
         let elastic = ScheduledSolver::from_parts(
             m,
-            Strategy::None.apply(&strict.m),
+            Rewrite::None.apply(&strict.m),
             4,
             &SchedOptions {
                 stale_window: Some(16),
@@ -306,7 +306,7 @@ mod tests {
     #[test]
     fn reusable_and_deterministic_across_solves() {
         let m = generate::banded(300, 5, 0.6, &Default::default());
-        let t = Strategy::None.apply(&m);
+        let t = Rewrite::None.apply(&m);
         let s = ScheduledSolver::from_parts(m, t, 3, &SchedOptions::default());
         let b = vec![1.0; 300];
         let x1 = s.solve(&b);
@@ -322,7 +322,7 @@ mod tests {
     #[test]
     fn single_worker_runs_in_list_order() {
         let m = generate::lung2_like(&generate::GenOptions::with_scale(0.03));
-        let t = Strategy::None.apply(&m);
+        let t = Rewrite::None.apply(&m);
         let mut rng = Rng::new(11);
         let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-2.0, 2.0)).collect();
         let x_ref = crate::solver::serial::solve(&m, &b);

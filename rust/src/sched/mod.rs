@@ -21,8 +21,11 @@
 //!   atomic done flags) and a lookahead window that fills stalls with
 //!   later ready blocks.
 //!
-//! Entry points: `--strategy scheduled` (CLI/config/service),
-//! `Strategy::Scheduled` in code, or the `scheduled` tuner candidate.
+//! Entry points: any plan with a `scheduled` exec axis
+//! (`--plan avgcost+scheduled`, config `plan = "scheduled"`,
+//! `Exec::Scheduled` in code), or the scheduled tuner candidates — the
+//! schedule is always built over the *transformed* levels, so it
+//! composes with every rewrite.
 
 pub mod coarsen;
 pub mod elastic;
@@ -39,9 +42,10 @@ pub const DEFAULT_BLOCK_TARGET: usize = 256;
 /// Default lookahead window in blocks (`sched_stale_window`).
 pub const DEFAULT_STALE_WINDOW: usize = 4;
 
-/// Scheduling knobs as they travel with [`crate::transform::Strategy::Scheduled`].
-/// `None` fields defer to the coordinator config (`sched_block_target`,
-/// `sched_stale_window`) or, standalone, to the crate defaults.
+/// Scheduling knobs as they travel with
+/// [`crate::transform::Exec::Scheduled`]. `None` fields defer to the
+/// coordinator config (`sched_block_target`, `sched_stale_window`) or,
+/// standalone, to the crate defaults.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct SchedOptions {
     /// work-units target per coarsened block

@@ -113,10 +113,10 @@ mod tests {
     use super::*;
     use crate::sched::coarsen::{coarsen, CoarsenOptions};
     use crate::sparse::generate;
-    use crate::transform::Strategy;
+    use crate::transform::Rewrite;
 
     fn coarse(m: &crate::sparse::Csr, target: usize, workers: usize) -> CoarseDag {
-        let t = Strategy::None.apply(m);
+        let t = Rewrite::None.apply(m);
         coarsen(
             m,
             &t,

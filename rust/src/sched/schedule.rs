@@ -140,7 +140,7 @@ impl Schedule {
 mod tests {
     use super::*;
     use crate::sparse::generate;
-    use crate::transform::Strategy;
+    use crate::transform::{Rewrite, SolvePlan};
 
     #[test]
     fn build_and_validate_across_structures() {
@@ -159,7 +159,7 @@ mod tests {
                 "manual:5",
             ),
         ] {
-            let t = Strategy::parse(strat).unwrap().apply(&m);
+            let t = SolvePlan::parse(strat).unwrap().apply(&m);
             let s = Schedule::build(&m, &t, 4, 128);
             s.validate(&m, &t).unwrap();
             assert_eq!(s.stats.num_blocks, s.blocks.len());
@@ -176,7 +176,7 @@ mod tests {
     #[test]
     fn chain_schedule_has_no_waits() {
         let m = generate::tridiagonal(200, &Default::default());
-        let t = Strategy::None.apply(&m);
+        let t = Rewrite::None.apply(&m);
         let s = Schedule::build(&m, &t, 8, 64);
         assert_eq!(s.stats.num_blocks, 1);
         assert_eq!(s.stats.cut_edges, 0);
@@ -187,7 +187,7 @@ mod tests {
     #[test]
     fn stats_compare_against_levelset_barriers() {
         let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
-        let t = Strategy::None.apply(&m);
+        let t = Rewrite::None.apply(&m);
         let s = Schedule::build(&m, &t, 4, 128);
         // The whole point: far fewer synchronization points than barriers
         // would imply, because most edges stay worker-local.
@@ -199,7 +199,7 @@ mod tests {
     #[test]
     fn deterministic_construction() {
         let m = generate::torso2_like(&generate::GenOptions::with_scale(0.02));
-        let t = Strategy::parse("avgcost").unwrap().apply(&m);
+        let t = SolvePlan::parse("avgcost").unwrap().apply(&m);
         let a = Schedule::build(&m, &t, 3, 96);
         let b = Schedule::build(&m, &t, 3, 96);
         assert_eq!(a.blocks, b.blocks);
@@ -212,7 +212,7 @@ mod tests {
     #[test]
     fn empty_matrix_schedule() {
         let m = Csr::new(0, 0, vec![0], vec![], vec![]).unwrap();
-        let t = Strategy::None.apply(&m);
+        let t = Rewrite::None.apply(&m);
         let s = Schedule::build(&m, &t, 4, 64);
         assert_eq!(s.stats.num_blocks, 0);
         s.validate(&m, &t).unwrap();

@@ -2,52 +2,91 @@
 //! execute a prepared system, so the serving pipeline, the tuner race and
 //! the CLI all build and time solvers through a single entry point.
 //!
-//! A [`crate::transform::Strategy`] now decides two things: how the
-//! system is *rewritten* (the transform) and how it is *executed*. The
-//! rewriting strategies (`none`/`avgcost`/`manual`/`guarded`) all execute
-//! on the level-set [`TransformedSolver`]; the execution strategies map
-//! to their own backends:
+//! A [`crate::transform::SolvePlan`] carries two independent axes: the
+//! [`crate::transform::Rewrite`] produced the [`TransformResult`] handed
+//! in here, and the [`Exec`] picks the backend that consumes it. Every
+//! backend executes the *transformed* system, so the axes compose — the
+//! paper's rewriting with any execution discipline:
 //!
-//! * `scheduled` — [`ScheduledSolver`]: coarsened static schedule with
-//!   elastic point-to-point waits (see [`crate::sched`]).
-//! * `syncfree`  — [`SyncFreeSolver`]: atomic dependency counters, no
-//!   barriers at all.
+//! * `levelset`  — [`TransformedSolver`]: one barrier per transformed
+//!   level.
+//! * `scheduled` — [`ScheduledSolver`]: coarsened static schedule built
+//!   over the transformed levels, elastic point-to-point waits
+//!   (see [`crate::sched`]).
+//! * `syncfree`  — [`SyncFreeSolver`]: atomic dependency counters over
+//!   the transformed dependency graph, no barriers at all.
 //! * `reorder`   — [`ReorderedSolver`]: level-sorted symmetric
-//!   permutation for locality, level-set execution over the permuted
-//!   system, solutions mapped back.
+//!   permutation of the *rewritten* system for locality, level-set
+//!   execution over the permuted system, solutions mapped back.
 
 use std::sync::Arc;
 
 use crate::error::Error;
-use crate::graph::{Dag, Levels};
 use crate::sched::{SchedOptions, ScheduledSolver};
 use crate::solver::executor::TransformedSolver;
 use crate::solver::pool::Pool;
 use crate::solver::syncfree::SyncFreeSolver;
 use crate::sparse::reorder::{self, Permutation};
 use crate::sparse::Csr;
-use crate::transform::{Strategy, TransformResult};
+use crate::transform::{Exec, TransformResult};
 
-/// Level-set execution over the level-sorted permutation `P L Pᵀ`:
-/// `x = Pᵀ solve(P L Pᵀ, P b)`. The permuted system's levels are
-/// contiguous id ranges, so level solves stream consecutive memory.
+/// Level-set execution over the level-sorted permutation of the
+/// *rewritten* system `L'`: solve `(P L' Pᵀ)(P x) = P (W b)` and map the
+/// solution back. The permutation is computed from the **transformed**
+/// levels, so a rewrite that merges levels also merges the contiguous id
+/// ranges the permuted level solves stream through — this is where the
+/// paper's transformation and the related-work locality optimization
+/// finally compose.
 pub struct ReorderedSolver {
     pub perm: Permutation,
+    t: Arc<TransformResult>,
+    /// identity rewrites skip the `W b` fold (it is the identity)
+    has_rewrites: bool,
     inner: TransformedSolver,
 }
 
 impl ReorderedSolver {
-    pub fn build(m: &Arc<Csr>, pool: Arc<Pool>) -> Result<ReorderedSolver, Error> {
-        let lv = Levels::build(m);
-        let perm = reorder::level_sort(&lv);
-        let pm = reorder::permute_symmetric(m, &perm)?;
-        let t = TransformResult::identity(&pm);
-        let inner = TransformedSolver::new(Arc::new(pm), Arc::new(t), pool);
-        Ok(ReorderedSolver { perm, inner })
+    pub fn build(
+        m: &Arc<Csr>,
+        t: Arc<TransformResult>,
+        pool: Arc<Pool>,
+    ) -> Result<ReorderedSolver, Error> {
+        // Level-sort over the *transformed* level partition (which is a
+        // topological order of the rewritten system L', though not
+        // necessarily of the raw matrix once rows have moved up).
+        let mut order = Vec::with_capacity(m.nrows);
+        for lvl in &t.levels {
+            order.extend_from_slice(lvl);
+        }
+        let perm = Permutation::from_new_to_old(order)?;
+        let has_rewrites = t.stats.rows_rewritten > 0;
+        let pm = if has_rewrites {
+            let lt = t.to_matrix(m);
+            reorder::permute_symmetric(&lt, &perm)?
+        } else {
+            reorder::permute_symmetric(m, &perm)?
+        };
+        let pt = TransformResult::identity(&pm);
+        let inner = TransformedSolver::new(Arc::new(pm), Arc::new(pt), pool);
+        Ok(ReorderedSolver {
+            perm,
+            t,
+            has_rewrites,
+            inner,
+        })
     }
 
     pub fn solve_into(&self, b: &[f64], x: &mut [f64]) {
-        let pb = self.perm.apply(b);
+        // c = W b (identity for unrewritten systems), then permute in,
+        // solve the contiguous-level system, and scatter back out.
+        let folded;
+        let c: &[f64] = if self.has_rewrites {
+            folded = self.t.apply_rhs(b);
+            &folded
+        } else {
+            b
+        };
+        let pb = self.perm.apply(c);
         let px = self.inner.solve(&pb);
         for (new, &old) in self.perm.perm.iter().enumerate() {
             x[old as usize] = px[new];
@@ -64,27 +103,25 @@ pub enum ExecSolver {
 }
 
 impl ExecSolver {
-    /// Build the executor the strategy calls for. `sched_fallback` fills
-    /// any `SchedOptions` fields the strategy left unset (the coordinator
-    /// passes its config defaults; standalone callers pass
+    /// Build the executor the plan's exec axis calls for, over the
+    /// transform its rewrite axis produced. `sched_fallback` fills any
+    /// `SchedOptions` fields the plan left unset (the coordinator passes
+    /// its config defaults; standalone callers pass
     /// `SchedOptions::default()`).
     pub fn build(
         m: Arc<Csr>,
         t: Arc<TransformResult>,
-        strategy: &Strategy,
+        exec: &Exec,
         pool: Arc<Pool>,
         sched_fallback: SchedOptions,
     ) -> Result<ExecSolver, Error> {
-        Ok(match strategy {
-            Strategy::Scheduled(o) => {
+        Ok(match exec {
+            Exec::Levelset => ExecSolver::Transformed(TransformedSolver::new(m, t, pool)),
+            Exec::Scheduled(o) => {
                 ExecSolver::Scheduled(ScheduledSolver::new(m, t, pool, &o.or(sched_fallback)))
             }
-            Strategy::Syncfree => {
-                let dag = Dag::build(&m);
-                ExecSolver::SyncFree(SyncFreeSolver::new(m, Arc::new(dag), pool))
-            }
-            Strategy::Reorder => ExecSolver::Reordered(ReorderedSolver::build(&m, pool)?),
-            _ => ExecSolver::Transformed(TransformedSolver::new(m, t, pool)),
+            Exec::Syncfree => ExecSolver::SyncFree(SyncFreeSolver::new(m, t, pool)),
+            Exec::Reorder => ExecSolver::Reordered(ReorderedSolver::build(&m, t, pool)?),
         })
     }
 
@@ -133,24 +170,26 @@ impl ExecSolver {
 mod tests {
     use super::*;
     use crate::sparse::generate;
+    use crate::transform::SolvePlan;
     use crate::util::prop::assert_allclose;
     use crate::util::rng::Rng;
 
-    fn check(strat: &str, m: Csr, seed: u64) {
-        let strategy = Strategy::parse(strat).unwrap();
-        let t = strategy.apply(&m);
+    fn check(plan_name: &str, m: Csr, seed: u64) {
+        let plan = SolvePlan::parse(plan_name).unwrap();
+        let t = plan.apply(&m);
         let mut rng = Rng::new(seed);
         let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-3.0, 3.0)).collect();
         let x_ref = crate::solver::serial::solve(&m, &b);
         let s = ExecSolver::build(
             Arc::new(m),
             Arc::new(t),
-            &strategy,
+            &plan.exec,
             Arc::new(Pool::new(3)),
             SchedOptions::default(),
         )
         .unwrap();
-        assert_allclose(&s.solve(&b), &x_ref, 1e-9, 1e-11).unwrap();
+        assert_allclose(&s.solve(&b), &x_ref, 1e-9, 1e-11)
+            .unwrap_or_else(|e| panic!("{plan_name}: {e}"));
     }
 
     #[test]
@@ -163,6 +202,41 @@ mod tests {
         check("reorder", gen(), 5);
     }
 
+    /// The whole point of the plan split: every rewrite composes with
+    /// every exec, and the composed solve is still exact.
+    #[test]
+    fn composed_plans_match_serial() {
+        let gen = || generate::lung2_like(&generate::GenOptions::with_scale(0.04));
+        check("avgcost+scheduled", gen(), 11);
+        check("avgcost+syncfree", gen(), 12);
+        check("avgcost+reorder", gen(), 13);
+        check("guarded:5+syncfree", gen(), 14);
+        check("manual:5+reorder", gen(), 15);
+        check("manual:5+scheduled:64:2", gen(), 16);
+        check("guarded:8+reorder", generate::tridiagonal(120, &Default::default()), 17);
+    }
+
+    #[test]
+    fn reorder_permutes_the_rewritten_levels() {
+        // After an avgcost rewrite the reorder backend must sort by the
+        // *transformed* levels: the permuted system has as many levels as
+        // the transform produced, not as the raw matrix had.
+        let m = Arc::new(generate::lung2_like(&generate::GenOptions::with_scale(0.05)));
+        let plan = SolvePlan::parse("avgcost+reorder").unwrap();
+        let t = Arc::new(plan.apply(&m));
+        assert!(t.num_levels() < t.stats.levels_before);
+        let s = ReorderedSolver::build(&m, Arc::clone(&t), Arc::new(Pool::new(2))).unwrap();
+        assert_eq!(s.inner.t.num_levels(), t.num_levels());
+        // And the permuted levels are contiguous id ranges.
+        let mut next = 0u32;
+        for lvl in &s.inner.t.levels {
+            for &r in lvl {
+                assert_eq!(r, next);
+                next += 1;
+            }
+        }
+    }
+
     #[test]
     fn modes_are_labelled() {
         let m = Arc::new(generate::tridiagonal(40, &Default::default()));
@@ -173,12 +247,12 @@ mod tests {
             ("syncfree", "syncfree"),
             ("reorder", "reordered"),
         ] {
-            let strategy = Strategy::parse(name).unwrap();
-            let t = Arc::new(strategy.apply(&m));
+            let plan = SolvePlan::parse(name).unwrap();
+            let t = Arc::new(plan.apply(&m));
             let s = ExecSolver::build(
                 Arc::clone(&m),
                 t,
-                &strategy,
+                &plan.exec,
                 Arc::clone(&pool),
                 SchedOptions::default(),
             )
@@ -192,5 +266,7 @@ mod tests {
     fn reordered_solver_roundtrips_permutation() {
         let m = generate::poisson2d_ilu(15, 15, &Default::default());
         check("reorder", m, 9);
+        let m = generate::poisson2d_ilu(15, 15, &Default::default());
+        check("guarded:10+reorder", m, 10);
     }
 }

@@ -187,12 +187,12 @@ pub fn solve_row(m: &Csr, t: &TransformResult, i: usize, b: &[f64], x: &mut [f64
 mod tests {
     use super::*;
     use crate::sparse::generate;
-    use crate::transform::Strategy;
+    use crate::transform::{Rewrite, SolvePlan};
     use crate::util::prop::assert_allclose;
     use crate::util::rng::Rng;
 
     fn check_strategy(m: Csr, strat: &str, nworkers: usize, seed: u64) {
-        let t = Strategy::parse(strat).unwrap().apply(&m);
+        let t = SolvePlan::parse(strat).unwrap().apply(&m);
         t.validate(&m).unwrap();
         let mut rng = Rng::new(seed);
         let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-5.0, 5.0)).collect();
@@ -246,8 +246,8 @@ mod tests {
     #[test]
     fn fewer_barriers_after_transform() {
         let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
-        let t_none = Strategy::None.apply(&m);
-        let t_avg = Strategy::parse("avgcost").unwrap().apply(&m);
+        let t_none = Rewrite::None.apply(&m);
+        let t_avg = SolvePlan::parse("avgcost").unwrap().apply(&m);
         let s_none = TransformedSolver::from_parts(m.clone(), t_none, 1);
         let s_avg = TransformedSolver::from_parts(m, t_avg, 1);
         assert!(

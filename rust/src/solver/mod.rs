@@ -4,7 +4,9 @@
 //! * [`levelset`] — parallel level-set solver: rows of a level split
 //!   across worker threads, barrier between levels.
 //! * [`syncfree`] — synchronization-free solver: atomic dependency
-//!   counters, busy-waiting consumers (Liu et al. style), no barriers.
+//!   counters, busy-waiting consumers (Liu et al. style), no barriers;
+//!   runs over the *transformed* dependency graph, so it composes with
+//!   any rewrite axis.
 //! * [`executor`] — evaluates a *transformed* system
 //!   ([`crate::transform::TransformResult`]): rewritten rows run their
 //!   folded equations, original rows run off the CSR; serial and

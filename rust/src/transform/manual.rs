@@ -18,7 +18,7 @@ use crate::sparse::Csr;
 use crate::transform::plan::TransformResult;
 use crate::transform::rewrite::Rewriter;
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ManualOptions {
     /// group size: every `distance - 1` levels rewritten into the next
     /// ("every 9 levels is rewritten to the 10th" => distance = 10)

@@ -15,6 +15,8 @@
 //!   critical-path membership, dependency span < β, max distance).
 //! * [`plan`]     — [`plan::TransformResult`]: the transformed system
 //!   consumed by the solvers, the code generator and the XLA padding.
+//! * [`solve_plan`] — the two-axis [`SolvePlan`] surface
+//!   ([`Rewrite`] × [`Exec`]) and the edge-parsed [`PlanSpec`].
 
 pub mod avg_cost;
 pub mod equation;
@@ -22,8 +24,13 @@ pub mod manual;
 pub mod plan;
 pub mod rewrite;
 pub mod row_strategies;
-pub mod strategy;
+pub mod solve_plan;
 
 pub use equation::Equation;
 pub use plan::{TransformResult, TransformStats};
-pub use strategy::{Strategy, StrategySpec};
+pub use solve_plan::{Exec, PlanSpec, ResolvedPlan, Rewrite, SolvePlan};
+
+/// Renamed to [`PlanSpec`] when the strategy surface split into the
+/// rewrite × exec axes; the alias keeps `StrategySpec`-era call sites
+/// compiling (`Default`, `Auto`, `parse`, `as_str` are unchanged).
+pub type StrategySpec = PlanSpec;

@@ -145,6 +145,55 @@ impl TransformResult {
         self.levels.len()
     }
 
+    /// Materialize the transformed system as an explicit lower-triangular
+    /// matrix `L'` in the original row numbering: rewritten rows
+    /// contribute their folded equation (`eq.coeffs`, `eq.diag`), original
+    /// rows their matrix row. Substitution only ever introduces columns
+    /// from strictly earlier rows, so `L'` is lower triangular with a full
+    /// diagonal, and the transformed solve is exactly
+    /// `L' x = W b` with `W` the RHS functional of [`Self::apply_rhs`].
+    /// With no rewrites this reproduces `m` value-for-value.
+    ///
+    /// This is what lets execution backends that operate on a *matrix*
+    /// (the level-sorted reordering) compose with rewriting.
+    pub fn to_matrix(&self, m: &Csr) -> Csr {
+        let mut b = crate::sparse::csr::LowerBuilder::with_capacity(m.nrows, m.nnz());
+        let mut deps: Vec<(u32, f64)> = Vec::new();
+        for i in 0..m.nrows {
+            deps.clear();
+            match &self.equations[i] {
+                None => {
+                    deps.extend(
+                        m.row_deps(i)
+                            .iter()
+                            .copied()
+                            .zip(m.row_dep_vals(i).iter().copied()),
+                    );
+                    b.row(&deps, m.diag(i));
+                }
+                Some(eq) => {
+                    deps.extend(eq.coeffs.iter().copied());
+                    deps.sort_unstable_by_key(|&(c, _)| c);
+                    b.row(&deps, eq.diag);
+                }
+            }
+        }
+        b.finish()
+    }
+
+    /// Apply the RHS functional `W` of the transformed system:
+    /// `c = W b`, where original rows pass `b[i]` through and rewritten
+    /// rows fold their b-coefficients. Solving [`Self::to_matrix`]'s `L'`
+    /// against `c` yields the original solution `x`.
+    pub fn apply_rhs(&self, b: &[f64]) -> Vec<f64> {
+        (0..b.len())
+            .map(|i| match &self.equations[i] {
+                None => b[i],
+                Some(eq) => eq.bcoeffs.iter().map(|&(m, w)| w * b[m as usize]).sum(),
+            })
+            .collect()
+    }
+
     /// Per-level costs of the transformed system (Fig 5 / Fig 6 series).
     pub fn level_costs(&self) -> Vec<u64> {
         self.levels
@@ -198,6 +247,32 @@ mod tests {
         assert_eq!(t.stats.total_level_cost_before, 24);
         t.validate(&m).unwrap();
         assert_eq!(t.level_costs(), vec![3, 8, 6, 7]);
+    }
+
+    #[test]
+    fn identity_materializes_to_the_same_matrix() {
+        let m = generate::torso2_like(&generate::GenOptions::with_scale(0.02));
+        let t = TransformResult::identity(&m);
+        assert_eq!(t.to_matrix(&m), m);
+        let b: Vec<f64> = (0..m.nrows).map(|i| (i % 7) as f64 - 3.0).collect();
+        assert_eq!(t.apply_rhs(&b), b);
+    }
+
+    #[test]
+    fn rewritten_system_materializes_equivalently() {
+        // Solving L' x = W b must reproduce the original solution.
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
+        let t = crate::transform::SolvePlan::parse("avgcost")
+            .unwrap()
+            .apply(&m);
+        assert!(t.stats.rows_rewritten > 0);
+        let lt = t.to_matrix(&m);
+        lt.validate_lower_triangular().unwrap();
+        let b: Vec<f64> = (0..m.nrows).map(|i| ((i * 37) % 11) as f64 - 5.0).collect();
+        let x_ref = crate::solver::serial::solve(&m, &b);
+        let c = t.apply_rhs(&b);
+        let x = crate::solver::serial::solve(&lt, &c);
+        crate::util::prop::assert_allclose(&x, &x_ref, 1e-9, 1e-11).unwrap();
     }
 
     #[test]

@@ -16,7 +16,7 @@ use crate::sparse::Csr;
 use crate::transform::equation::Equation;
 
 /// Constraints applied per candidate rewrite. `None` disables a check.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RowConstraints {
     /// rewrite only rows whose *projected* indegree stays < α
     pub max_indegree: Option<usize>,

@@ -1,0 +1,724 @@
+//! The two-axis solve-plan surface: **what to rewrite** × **how to
+//! execute**, composed freely.
+//!
+//! The paper's graph transformation (avgLevelCost rewriting) and the
+//! execution discipline (level-set barriers, static schedules, sync-free
+//! counters, level-sorted reordering) are independent levers. The old
+//! `Strategy` enum fused them — `scheduled`/`syncfree`/`reorder` were
+//! hardwired to the identity transform — so "schedule over a rewritten
+//! system" was unreachable through the public API. A [`SolvePlan`] keeps
+//! the axes separate:
+//!
+//! * [`Rewrite`] — the transformation axis: `none`, the paper's
+//!   `avgcost`, the guarded §III.A variant (`guarded:d:m`), or the blind
+//!   `manual:d` strategy of [12].
+//! * [`Exec`] — the execution axis: `levelset` barriers, a coarsened
+//!   static `scheduled[:t[:w]]` schedule with elastic waits, the
+//!   `syncfree` atomic-counter solver, or `reorder` (level-sorted
+//!   symmetric permutation, level-set execution over the permuted
+//!   system).
+//!
+//! The plan grammar joins the axes with `+` (`avgcost+scheduled`,
+//! `guarded:5+syncfree`); every **legacy single name keeps parsing** to
+//! exactly its pre-redesign pairing (`scheduled` ≡ `none+scheduled`,
+//! `avgcost` ≡ `avgcost+levelset`, …). [`PlanSpec`] supersedes the old
+//! `StrategySpec` as the parsed-once-at-the-edge request type; `auto`
+//! lives there (it is a request to consult the tuner, not a plan).
+
+use crate::sched::SchedOptions;
+use crate::sparse::Csr;
+use crate::transform::avg_cost::{self, AvgCostOptions};
+use crate::transform::manual::{self, ManualOptions};
+use crate::transform::plan::TransformResult;
+
+/// The transformation axis of a [`SolvePlan`]: how the dependency graph
+/// is rewritten before anything executes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Rewrite {
+    /// no rewriting — the baseline level-set system
+    None,
+    /// the paper's automatic avgLevelCost strategy (§III); with the
+    /// §III.A constraints switched on this is the `guarded` variant
+    AvgLevelCost(AvgCostOptions),
+    /// the manual fixed-distance strategy of [12]
+    Manual(ManualOptions),
+}
+
+impl Rewrite {
+    /// Apply the rewrite to a matrix, producing the transformed system
+    /// every execution backend consumes.
+    pub fn apply(&self, m: &Csr) -> TransformResult {
+        match self {
+            Rewrite::None => TransformResult::identity(m),
+            Rewrite::AvgLevelCost(o) => avg_cost::apply(m, o),
+            Rewrite::Manual(o) => manual::apply(m, o),
+        }
+    }
+
+    /// The paper's stated next goal ("incorporate the constraints
+    /// discussed in the paper into the algorithm"): avgLevelCost with the
+    /// §III.A guards on — a rewriting-distance cap (keeps the
+    /// transformation cost near-linear and the locality bounded) and a
+    /// folded-constant magnitude cap (prevents the §IV numerical-
+    /// stability failure mode). See `cargo bench --bench ablations` for
+    /// the measured trade-off.
+    pub fn guarded(max_distance: u32, max_magnitude: f64) -> Rewrite {
+        Rewrite::AvgLevelCost(AvgCostOptions {
+            constraints: crate::transform::row_strategies::RowConstraints {
+                max_distance: Some(max_distance),
+                max_bcoeff_magnitude: Some(max_magnitude),
+                ..Default::default()
+            },
+            ..Default::default()
+        })
+    }
+
+    /// Human label in the paper's Table I vocabulary (`no-rewriting`,
+    /// `avgLevelCost`, `manual`); use [`Display`](std::fmt::Display) for
+    /// the canonical grammar form instead.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Rewrite::None => "no-rewriting",
+            Rewrite::AvgLevelCost(_) => "avgLevelCost",
+            Rewrite::Manual(_) => "manual",
+        }
+    }
+
+    /// Parse one rewrite name:
+    /// `none | avgcost | manual[:distance] | guarded[:distance[:mag]]`.
+    pub fn parse(s: &str) -> Result<Rewrite, String> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("none") || s.eq_ignore_ascii_case("no-rewriting") {
+            return Ok(Rewrite::None);
+        }
+        if s.eq_ignore_ascii_case("avgcost") || s.eq_ignore_ascii_case("avglevelcost") {
+            return Ok(Rewrite::AvgLevelCost(Default::default()));
+        }
+        if let Some(rest) = s.strip_prefix("guarded") {
+            // One separating colon, as for `scheduled`: `guarded::1e6`
+            // keeps the default distance and caps only the magnitude.
+            let rest = rest.strip_prefix(':').unwrap_or(rest);
+            let mut parts = rest.split(':');
+            let d = match parts.next() {
+                None | Some("") => 20,
+                Some(v) => v
+                    .parse::<u32>()
+                    .map_err(|_| format!("bad guarded distance '{v}'"))?,
+            };
+            let mag = match parts.next() {
+                None | Some("") => 1e12,
+                Some(v) => v
+                    .parse::<f64>()
+                    .map_err(|_| format!("bad guarded magnitude '{v}'"))?,
+            };
+            return Ok(Rewrite::guarded(d, mag));
+        }
+        if let Some(rest) = s
+            .strip_prefix("manual")
+            .map(|r| r.strip_prefix(':').unwrap_or(r))
+        {
+            let distance = if rest.is_empty() {
+                10
+            } else {
+                rest.parse::<usize>()
+                    .map_err(|_| format!("bad manual distance '{rest}'"))?
+            };
+            return Ok(Rewrite::Manual(ManualOptions { distance }));
+        }
+        Err(format!(
+            "unknown rewrite '{s}' (expected none | avgcost | manual[:d] | guarded[:d[:m]])"
+        ))
+    }
+}
+
+impl std::fmt::Display for Rewrite {
+    /// Canonical grammar form; `parse(display(r)) == r` for every value
+    /// the grammar can construct.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Rewrite::None => f.write_str("none"),
+            Rewrite::Manual(o) => write!(f, "manual:{}", o.distance),
+            Rewrite::AvgLevelCost(o) => {
+                let c = &o.constraints;
+                let guarded_shape = !o.update_avg
+                    && c.max_indegree.is_none()
+                    && !c.critical_path_only
+                    && c.max_dep_span.is_none();
+                match (guarded_shape, c.max_distance, c.max_bcoeff_magnitude) {
+                    (true, Some(d), Some(m)) => write!(f, "guarded:{d}:{m}"),
+                    (true, None, None) => f.write_str("avgcost"),
+                    // Not expressible in the grammar (programmatic
+                    // constraint mixes): fall back to the family name.
+                    _ => f.write_str("avgcost"),
+                }
+            }
+        }
+    }
+}
+
+/// The execution axis of a [`SolvePlan`]: how the (possibly rewritten)
+/// system is consumed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Exec {
+    /// level-set execution: one barrier per level of the transformed
+    /// system ([`crate::solver::executor::TransformedSolver`])
+    Levelset,
+    /// coarsened static schedule with elastic point-to-point waits,
+    /// built over the transformed levels ([`crate::sched`])
+    Scheduled(SchedOptions),
+    /// synchronization-free execution: atomic dependency counters over
+    /// the transformed dependency graph, no barriers
+    Syncfree,
+    /// level-sorted symmetric permutation of the rewritten system for
+    /// locality; level-set execution over the permuted system
+    Reorder,
+}
+
+impl Exec {
+    /// Parse one execution name:
+    /// `levelset | scheduled[:block_target[:stale_window]] | syncfree |
+    /// reorder`.
+    pub fn parse(s: &str) -> Result<Exec, String> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("levelset") || s.eq_ignore_ascii_case("level-set") {
+            return Ok(Exec::Levelset);
+        }
+        if s.eq_ignore_ascii_case("syncfree") || s.eq_ignore_ascii_case("sync-free") {
+            return Ok(Exec::Syncfree);
+        }
+        if s.eq_ignore_ascii_case("reorder") || s.eq_ignore_ascii_case("level-sort") {
+            return Ok(Exec::Reorder);
+        }
+        if let Some(rest) = s.strip_prefix("scheduled").or_else(|| s.strip_prefix("sched")) {
+            // Strip exactly one separating colon: `scheduled::3` means
+            // "block target unset, stale window 3". (The pre-split
+            // parser collapsed ALL leading colons, silently reading
+            // `scheduled::3` as a block target — an undocumented
+            // accident; the documented forms `scheduled`, `scheduled:t`,
+            // `scheduled:t:w` parse unchanged.)
+            let rest = rest.strip_prefix(':').unwrap_or(rest);
+            let mut parts = rest.split(':');
+            let block_target = match parts.next() {
+                None | Some("") => None,
+                Some(v) => Some(
+                    v.parse::<usize>()
+                        .map_err(|_| format!("bad scheduled block target '{v}'"))?,
+                ),
+            };
+            let stale_window = match parts.next() {
+                None | Some("") => None,
+                Some(v) => Some(
+                    v.parse::<usize>()
+                        .map_err(|_| format!("bad scheduled stale window '{v}'"))?,
+                ),
+            };
+            return Ok(Exec::Scheduled(SchedOptions {
+                block_target,
+                stale_window,
+            }));
+        }
+        Err(format!(
+            "unknown exec '{s}' (expected levelset | scheduled[:t[:w]] | syncfree | reorder)"
+        ))
+    }
+
+    /// Execution-mode label for logs and metrics.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Exec::Levelset => "levelset",
+            Exec::Scheduled(_) => "scheduled",
+            Exec::Syncfree => "syncfree",
+            Exec::Reorder => "reorder",
+        }
+    }
+}
+
+impl std::fmt::Display for Exec {
+    /// Canonical grammar form; round-trips through [`Exec::parse`].
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Exec::Levelset => f.write_str("levelset"),
+            Exec::Syncfree => f.write_str("syncfree"),
+            Exec::Reorder => f.write_str("reorder"),
+            Exec::Scheduled(o) => match (o.block_target, o.stale_window) {
+                (None, None) => f.write_str("scheduled"),
+                (Some(t), None) => write!(f, "scheduled:{t}"),
+                (Some(t), Some(w)) => write!(f, "scheduled:{t}:{w}"),
+                (None, Some(w)) => write!(f, "scheduled::{w}"),
+            },
+        }
+    }
+}
+
+/// A complete solve plan: one value from each axis. This is the currency
+/// every subsystem trades in — the pipeline prepares it, the executor
+/// builds it, the tuner races over the cross product, the plan cache
+/// remembers it, metrics label by it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SolvePlan {
+    pub rewrite: Rewrite,
+    pub exec: Exec,
+}
+
+impl SolvePlan {
+    pub fn new(rewrite: Rewrite, exec: Exec) -> SolvePlan {
+        SolvePlan { rewrite, exec }
+    }
+
+    /// The do-nothing plan: identity transform, level-set execution.
+    pub fn baseline() -> SolvePlan {
+        SolvePlan::new(Rewrite::None, Exec::Levelset)
+    }
+
+    /// Apply the plan's *rewrite* axis. The exec axis decides how the
+    /// result is consumed — see [`crate::solver::ExecSolver::build`].
+    pub fn apply(&self, m: &Csr) -> TransformResult {
+        self.rewrite.apply(m)
+    }
+
+    /// Canonical plan name (`rewrite+exec`), used for cache keys,
+    /// metrics labels and calibration entries.
+    pub fn name(&self) -> String {
+        self.to_string()
+    }
+
+    /// Parse a plan:
+    ///
+    /// * combined: `REWRITE+EXEC` — `avgcost+scheduled`,
+    ///   `guarded:5+syncfree`, `manual:4+reorder`, `none+levelset`, …
+    /// * legacy single names, mapped to their pre-redesign pairing:
+    ///   `none | avgcost | manual[:d] | guarded[:d[:m]]` pair with
+    ///   `levelset`; `levelset | scheduled[:t[:w]] | syncfree | reorder`
+    ///   pair with the identity rewrite.
+    ///
+    /// `auto` is **not** a plan (it is a [`PlanSpec`] — a request to
+    /// consult the tuner) and is rejected here.
+    pub fn parse(s: &str) -> Result<SolvePlan, String> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("auto") {
+            return Err(
+                "'auto' is not a concrete plan; use PlanSpec::parse (the tuner picks the plan)"
+                    .to_string(),
+            );
+        }
+        // The exec half never contains '+' (its knobs are integers), so
+        // the last '+' separates the axes — even if a guarded magnitude
+        // was spelled '1e+6'. A '+' can also belong to a *legacy* name's
+        // float exponent with no exec half at all ('guarded:5:1e+6'), so
+        // a failed composed split falls through to the whole-string
+        // legacy parse instead of erroring.
+        if let Some(pos) = s.rfind('+') {
+            if let (Ok(rewrite), Ok(exec)) = (Rewrite::parse(&s[..pos]), Exec::parse(&s[pos + 1..]))
+            {
+                return Ok(SolvePlan { rewrite, exec });
+            }
+        }
+        if let Ok(rewrite) = Rewrite::parse(s) {
+            return Ok(SolvePlan {
+                rewrite,
+                exec: Exec::Levelset,
+            });
+        }
+        if let Ok(exec) = Exec::parse(s) {
+            return Ok(SolvePlan {
+                rewrite: Rewrite::None,
+                exec,
+            });
+        }
+        Err(format!(
+            "unknown plan '{s}' (expected REWRITE+EXEC with rewrite in \
+             none | avgcost | manual[:d] | guarded[:d[:m]] and exec in \
+             levelset | scheduled[:t[:w]] | syncfree | reorder, or a legacy \
+             single name from either axis)"
+        ))
+    }
+}
+
+impl std::fmt::Display for SolvePlan {
+    /// Canonical two-axis form, always `rewrite+exec` (legacy single
+    /// names normalize: `scheduled` displays as `none+scheduled`).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}+{}", self.rewrite, self.exec)
+    }
+}
+
+impl std::str::FromStr for SolvePlan {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<SolvePlan, String> {
+        SolvePlan::parse(s)
+    }
+}
+
+impl From<Rewrite> for SolvePlan {
+    fn from(rewrite: Rewrite) -> SolvePlan {
+        SolvePlan {
+            rewrite,
+            exec: Exec::Levelset,
+        }
+    }
+}
+
+impl From<Exec> for SolvePlan {
+    fn from(exec: Exec) -> SolvePlan {
+        SolvePlan {
+            rewrite: Rewrite::None,
+            exec,
+        }
+    }
+}
+
+/// A plan request as it crosses an API boundary: "use the service
+/// default", "let the tuner decide", or a concrete plan that was parsed
+/// **once, at the edge**. This supersedes the old `StrategySpec` — a bad
+/// plan name fails at the call site that wrote it, never deep inside the
+/// service thread.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub enum PlanSpec {
+    /// defer to the configured service-wide default plan
+    #[default]
+    Default,
+    /// consult the portfolio autotuner ([`crate::tuner`]): fingerprint ->
+    /// plan cache -> cost model -> race over the rewrite × exec cross
+    /// product
+    Auto,
+    /// a concrete plan plus the source text it was parsed from (kept for
+    /// display and metrics labels)
+    Named(String, SolvePlan),
+}
+
+/// What a [`PlanSpec`] resolves to once the service default has been
+/// folded in: either a fixed plan or a tuner consultation.
+#[derive(Debug, Clone)]
+pub enum ResolvedPlan {
+    /// consult the tuner for this matrix
+    Auto,
+    /// serve this plan, labelled with its source text
+    Fixed(String, SolvePlan),
+}
+
+impl PlanSpec {
+    /// Parse a spec: the empty string and `default` defer to the service
+    /// default, `auto` defers to the tuner; anything else must be a valid
+    /// [`SolvePlan::parse`] name.
+    pub fn parse(s: &str) -> Result<PlanSpec, String> {
+        let t = s.trim();
+        if t.is_empty() || t.eq_ignore_ascii_case("default") {
+            return Ok(PlanSpec::Default);
+        }
+        if t.eq_ignore_ascii_case("auto") {
+            return Ok(PlanSpec::Auto);
+        }
+        let plan = SolvePlan::parse(t)?;
+        Ok(PlanSpec::Named(t.to_string(), plan))
+    }
+
+    /// The source text (`"default"` / `"auto"` for the deferring
+    /// variants).
+    pub fn as_str(&self) -> &str {
+        match self {
+            PlanSpec::Default => "default",
+            PlanSpec::Auto => "auto",
+            PlanSpec::Named(name, _) => name,
+        }
+    }
+
+    /// Resolve against `fallback` (the service's configured default):
+    /// a named plan wins, `auto` stays a tuner consultation, and
+    /// default-on-default lands on the paper's automatic strategy under
+    /// level-set execution.
+    pub fn resolve(&self, fallback: &PlanSpec) -> ResolvedPlan {
+        match self {
+            PlanSpec::Named(n, p) => ResolvedPlan::Fixed(n.clone(), p.clone()),
+            PlanSpec::Auto => ResolvedPlan::Auto,
+            PlanSpec::Default => match fallback {
+                PlanSpec::Named(n, p) => ResolvedPlan::Fixed(n.clone(), p.clone()),
+                PlanSpec::Auto => ResolvedPlan::Auto,
+                PlanSpec::Default => ResolvedPlan::Fixed(
+                    "avgcost".to_string(),
+                    SolvePlan::from(Rewrite::AvgLevelCost(Default::default())),
+                ),
+            },
+        }
+    }
+}
+
+impl std::fmt::Display for PlanSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for PlanSpec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<PlanSpec, String> {
+        PlanSpec::parse(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_rewrite_names() {
+        assert_eq!(Rewrite::parse("none").unwrap(), Rewrite::None);
+        assert!(matches!(
+            Rewrite::parse("avgcost").unwrap(),
+            Rewrite::AvgLevelCost(_)
+        ));
+        match Rewrite::parse("manual:4").unwrap() {
+            Rewrite::Manual(o) => assert_eq!(o.distance, 4),
+            _ => panic!(),
+        }
+        match Rewrite::parse("manual").unwrap() {
+            Rewrite::Manual(o) => assert_eq!(o.distance, 10),
+            _ => panic!(),
+        }
+        assert!(Rewrite::parse("bogus").is_err());
+        assert!(Rewrite::parse("manual:x").is_err());
+        assert!(Rewrite::parse("guarded:x").is_err());
+        assert!(Rewrite::parse("scheduled").is_err(), "exec name on rewrite axis");
+    }
+
+    #[test]
+    fn parse_guarded() {
+        match Rewrite::parse("guarded").unwrap() {
+            Rewrite::AvgLevelCost(o) => {
+                assert_eq!(o.constraints.max_distance, Some(20));
+                assert_eq!(o.constraints.max_bcoeff_magnitude, Some(1e12));
+            }
+            _ => panic!(),
+        }
+        match Rewrite::parse("guarded:5:1e6").unwrap() {
+            Rewrite::AvgLevelCost(o) => {
+                assert_eq!(o.constraints.max_distance, Some(5));
+                assert_eq!(o.constraints.max_bcoeff_magnitude, Some(1e6));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parse_exec_names() {
+        assert_eq!(Exec::parse("levelset").unwrap(), Exec::Levelset);
+        assert_eq!(Exec::parse("syncfree").unwrap(), Exec::Syncfree);
+        assert_eq!(Exec::parse("reorder").unwrap(), Exec::Reorder);
+        match Exec::parse("scheduled:128:2").unwrap() {
+            Exec::Scheduled(o) => {
+                assert_eq!(o.block_target, Some(128));
+                assert_eq!(o.stale_window, Some(2));
+            }
+            other => panic!("{other:?}"),
+        }
+        match Exec::parse("sched:64").unwrap() {
+            Exec::Scheduled(o) => {
+                assert_eq!(o.block_target, Some(64));
+                assert_eq!(o.stale_window, None);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(Exec::parse("scheduled:x").is_err());
+        assert!(Exec::parse("scheduled:1:y").is_err());
+        assert!(Exec::parse("avgcost").is_err(), "rewrite name on exec axis");
+        assert_eq!(Exec::parse("scheduled").unwrap().name(), "scheduled");
+    }
+
+    #[test]
+    fn parse_composed_plans() {
+        let p = SolvePlan::parse("avgcost+scheduled").unwrap();
+        assert!(matches!(p.rewrite, Rewrite::AvgLevelCost(_)));
+        assert!(matches!(p.exec, Exec::Scheduled(_)));
+        let p = SolvePlan::parse("guarded:5+syncfree").unwrap();
+        assert!(matches!(p.rewrite, Rewrite::AvgLevelCost(_)));
+        assert_eq!(p.exec, Exec::Syncfree);
+        let p = SolvePlan::parse("manual:4+reorder").unwrap();
+        assert!(matches!(p.rewrite, Rewrite::Manual(_)));
+        assert_eq!(p.exec, Exec::Reorder);
+        let p = SolvePlan::parse("none+scheduled:32:1").unwrap();
+        assert_eq!(p.rewrite, Rewrite::None);
+        assert!(matches!(p.exec, Exec::Scheduled(_)));
+        // The last '+' separates the axes, so an exponent's sign survives.
+        let p = SolvePlan::parse("guarded:5:1e+6+syncfree").unwrap();
+        match &p.rewrite {
+            Rewrite::AvgLevelCost(o) => {
+                assert_eq!(o.constraints.max_bcoeff_magnitude, Some(1e6))
+            }
+            _ => panic!(),
+        }
+        // And a legacy single name whose only '+' is the exponent's sign
+        // still parses whole (pre-split Strategy::parse accepted it).
+        let p = SolvePlan::parse("guarded:5:1e+6").unwrap();
+        match &p.rewrite {
+            Rewrite::AvgLevelCost(o) => {
+                assert_eq!(o.constraints.max_bcoeff_magnitude, Some(1e6))
+            }
+            _ => panic!(),
+        }
+        assert_eq!(p.exec, Exec::Levelset);
+        // Both halves must be valid.
+        assert!(SolvePlan::parse("avgcost+bogus").is_err());
+        assert!(SolvePlan::parse("bogus+syncfree").is_err());
+        assert!(SolvePlan::parse("scheduled+avgcost").is_err(), "axes swapped");
+        assert!(SolvePlan::parse("auto").is_err(), "auto is a spec, not a plan");
+    }
+
+    /// Every legacy single name parses to exactly its pre-redesign
+    /// pairing — the backward-compatibility table of the API redesign.
+    #[test]
+    fn legacy_names_map_to_their_old_pairings() {
+        for (legacy, canonical) in [
+            ("none", "none+levelset"),
+            ("no-rewriting", "none+levelset"),
+            ("avgcost", "avgcost+levelset"),
+            ("avglevelcost", "avgcost+levelset"),
+            ("manual", "manual:10+levelset"),
+            ("manual:4", "manual:4+levelset"),
+            ("guarded", "guarded:20:1000000000000+levelset"),
+            ("guarded:5:1e6", "guarded:5:1000000+levelset"),
+            ("levelset", "none+levelset"),
+            ("scheduled", "none+scheduled"),
+            ("sched:64", "none+scheduled:64"),
+            ("scheduled:128:2", "none+scheduled:128:2"),
+            ("syncfree", "none+syncfree"),
+            ("sync-free", "none+syncfree"),
+            ("reorder", "none+reorder"),
+            ("level-sort", "none+reorder"),
+        ] {
+            let plan = SolvePlan::parse(legacy).unwrap_or_else(|e| panic!("{legacy}: {e}"));
+            assert_eq!(plan.to_string(), canonical, "legacy '{legacy}'");
+            // And the canonical form parses back to the same plan.
+            assert_eq!(SolvePlan::parse(canonical).unwrap(), plan);
+        }
+    }
+
+    #[test]
+    fn display_roundtrips() {
+        for s in [
+            "none+levelset",
+            "avgcost+levelset",
+            "manual:7+scheduled:64:2",
+            "guarded:5:1000000+syncfree",
+            "none+scheduled::3",
+            "avgcost+reorder",
+        ] {
+            let p = SolvePlan::parse(s).unwrap();
+            assert_eq!(p.to_string(), s);
+            assert_eq!(SolvePlan::parse(&p.to_string()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn apply_runs_the_rewrite_axis_only() {
+        let m = crate::sparse::generate::tridiagonal(30, &Default::default());
+        // Execution-only plans leave the system unrewritten.
+        for s in ["scheduled", "syncfree", "reorder", "none+scheduled:16"] {
+            let t = SolvePlan::parse(s).unwrap().apply(&m);
+            assert_eq!(t.stats.rows_rewritten, 0, "{s}");
+            assert_eq!(t.num_levels(), 30, "{s}");
+        }
+        // The rewrite axis transforms regardless of the exec axis.
+        let t = SolvePlan::parse("manual:3+syncfree").unwrap().apply(&m);
+        assert_eq!(t.num_levels(), 10);
+        let ml = crate::sparse::generate::lung2_like(
+            &crate::sparse::generate::GenOptions::with_scale(0.05),
+        );
+        let t1 = SolvePlan::parse("avgcost+scheduled").unwrap().apply(&ml);
+        assert!(t1.num_levels() < t1.stats.levels_before);
+    }
+
+    #[test]
+    fn guarded_respects_both_limits() {
+        use crate::sparse::generate::{self, GenOptions};
+        let m = generate::lung2_like(&GenOptions::with_scale(0.05));
+        let t = Rewrite::guarded(5, 1e12).apply(&m);
+        t.validate(&m).unwrap();
+        assert!(t.stats.rows_rewritten > 0);
+        for rec in &t.log {
+            assert!(rec.from_level - rec.to_level <= 5);
+        }
+        assert!(t.stats.max_bcoeff_magnitude <= 1e12);
+    }
+
+    #[test]
+    fn spec_parses_at_the_edge() {
+        assert!(matches!(PlanSpec::parse("default").unwrap(), PlanSpec::Default));
+        assert!(matches!(PlanSpec::parse("").unwrap(), PlanSpec::Default));
+        assert!(matches!(PlanSpec::parse("auto").unwrap(), PlanSpec::Auto));
+        assert!(matches!(PlanSpec::parse("AUTO").unwrap(), PlanSpec::Auto));
+        match PlanSpec::parse(" manual:4 ").unwrap() {
+            PlanSpec::Named(name, p) => {
+                assert_eq!(name, "manual:4");
+                assert!(matches!(p.rewrite, Rewrite::Manual(_)));
+                assert_eq!(p.exec, Exec::Levelset);
+            }
+            other => panic!("{other:?}"),
+        }
+        match PlanSpec::parse("avgcost+scheduled").unwrap() {
+            PlanSpec::Named(name, p) => {
+                assert_eq!(name, "avgcost+scheduled");
+                assert!(matches!(p.exec, Exec::Scheduled(_)));
+            }
+            other => panic!("{other:?}"),
+        }
+        // Bad names fail synchronously, before any service is involved.
+        assert!(PlanSpec::parse("bogus").is_err());
+        assert!(PlanSpec::parse("avgcost+bogus").is_err());
+        assert_eq!(PlanSpec::parse("auto").unwrap().as_str(), "auto");
+        assert_eq!(PlanSpec::Default.to_string(), "default");
+    }
+
+    #[test]
+    fn spec_resolution_chain() {
+        let cfg_default = PlanSpec::parse("manual:3").unwrap();
+        match PlanSpec::Default.resolve(&cfg_default) {
+            ResolvedPlan::Fixed(n, p) => {
+                assert_eq!(n, "manual:3");
+                assert!(matches!(p.rewrite, Rewrite::Manual(_)));
+            }
+            other => panic!("{other:?}"),
+        }
+        // A named spec wins over the fallback.
+        match PlanSpec::parse("none").unwrap().resolve(&cfg_default) {
+            ResolvedPlan::Fixed(n, p) => {
+                assert_eq!(n, "none");
+                assert_eq!(p, SolvePlan::baseline());
+            }
+            other => panic!("{other:?}"),
+        }
+        // Auto stays a tuner consultation, directly or via the default.
+        assert!(matches!(
+            PlanSpec::Auto.resolve(&cfg_default),
+            ResolvedPlan::Auto
+        ));
+        assert!(matches!(
+            PlanSpec::Default.resolve(&PlanSpec::Auto),
+            ResolvedPlan::Auto
+        ));
+        // Default-on-default lands on the paper's automatic strategy.
+        match PlanSpec::Default.resolve(&PlanSpec::Default) {
+            ResolvedPlan::Fixed(n, p) => {
+                assert_eq!(n, "avgcost");
+                assert!(matches!(p.rewrite, Rewrite::AvgLevelCost(_)));
+                assert_eq!(p.exec, Exec::Levelset);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn apply_dispatches() {
+        let m = crate::sparse::generate::tridiagonal(30, &Default::default());
+        let t0 = Rewrite::None.apply(&m);
+        let t2 = SolvePlan::parse("manual:3").unwrap().apply(&m);
+        assert_eq!(t0.num_levels(), 30);
+        assert_eq!(t2.num_levels(), 10);
+        // avgcost needs thin levels to exist (see avg_cost tests).
+        let ml = crate::sparse::generate::lung2_like(
+            &crate::sparse::generate::GenOptions::with_scale(0.05),
+        );
+        let t1 = SolvePlan::parse("avgcost").unwrap().apply(&ml);
+        assert!(t1.num_levels() < t1.stats.levels_before);
+    }
+}

@@ -1,0 +1,166 @@
+//! Persistence for the cost model's EWMA calibration, alongside the plan
+//! cache.
+//!
+//! The plan cache remembers *decisions*; the calibration table remembers
+//! how far the closed-form model was off per plan. Spilling only the
+//! former meant every restart re-learned the multipliers from scratch —
+//! the ROADMAP's "persist cost-model calibration" follow-up. The table is
+//! written next to the plan-cache file (`plans.json` →
+//! `plans.calib.json`) in the crate's minimal JSON, stamped with
+//! [`PLAN_SCHEMA_VERSION`]: multipliers learned against an older solver
+//! or plan grammar are dropped on load rather than trusted stale.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::Error;
+use crate::tuner::plan_cache::PLAN_SCHEMA_VERSION;
+use crate::util::json::Json;
+
+/// Sibling path for the calibration table of a plan-cache spill file:
+/// the full cache filename plus `.calib.json`. Appending (rather than
+/// replacing the extension) keeps the mapping injective — `plans.v1` and
+/// `plans.v2` must not share one calibration file.
+pub fn path_for(cache_path: &Path) -> PathBuf {
+    let mut os = cache_path.as_os_str().to_owned();
+    os.push(".calib.json");
+    PathBuf::from(os)
+}
+
+/// Load a persisted calibration table. Returns an empty table when the
+/// file is absent, unparseable (with a warning) or stamped by a different
+/// schema version.
+pub fn load(path: &Path) -> BTreeMap<String, f64> {
+    if !path.exists() {
+        return BTreeMap::new();
+    }
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("warning: ignoring tuner calibration {}: {e}", path.display());
+            return BTreeMap::new();
+        }
+    };
+    let root = match Json::parse(&text) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("warning: ignoring tuner calibration {}: {e}", path.display());
+            return BTreeMap::new();
+        }
+    };
+    let version = root.get("version").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    if version != PLAN_SCHEMA_VERSION {
+        return BTreeMap::new();
+    }
+    let mut table = BTreeMap::new();
+    if let Some(entries) = root.get("entries").and_then(Json::as_arr) {
+        for pair in entries {
+            if let Some(p) = pair.as_arr() {
+                if let (Some(plan), Some(mult)) = (
+                    p.first().and_then(Json::as_str),
+                    p.get(1).and_then(Json::as_f64),
+                ) {
+                    if mult.is_finite() && mult > 0.0 {
+                        table.insert(plan.to_string(), mult);
+                    }
+                }
+            }
+        }
+    }
+    table
+}
+
+/// Atomically write the calibration table (write-then-rename, like the
+/// plan cache: a concurrent reader never observes a truncated file).
+pub fn save(path: &Path, table: &BTreeMap<String, f64>) -> Result<(), Error> {
+    let entries: Vec<Json> = table
+        .iter()
+        .map(|(plan, mult)| Json::Arr(vec![Json::Str(plan.clone()), Json::Num(*mult)]))
+        .collect();
+    let root = Json::obj(vec![
+        ("version", Json::Num(PLAN_SCHEMA_VERSION as f64)),
+        ("entries", Json::Arr(entries)),
+    ]);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| Error::Io(format!("create {}: {e}", dir.display())))?;
+        }
+    }
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(format!(".tmp.{}", std::process::id()));
+    let tmp = PathBuf::from(tmp);
+    std::fs::write(&tmp, root.to_string())
+        .map_err(|e| Error::Io(format!("write {}: {e}", tmp.display())))?;
+    std::fs::rename(&tmp, path).map_err(|e| {
+        std::fs::remove_file(&tmp).ok();
+        Error::Io(format!("rename {} -> {}: {e}", tmp.display(), path.display()))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sibling_path() {
+        assert_eq!(
+            path_for(Path::new("/var/cache/plans.json")),
+            PathBuf::from("/var/cache/plans.json.calib.json")
+        );
+        assert_eq!(
+            path_for(Path::new("plans")),
+            PathBuf::from("plans.calib.json")
+        );
+        // Injective: caches differing only in extension get distinct
+        // calibration files.
+        assert_ne!(
+            path_for(Path::new("plans.v1")),
+            path_for(Path::new("plans.v2"))
+        );
+    }
+
+    #[test]
+    fn roundtrip_and_schema_guard() {
+        let path = std::env::temp_dir().join(format!(
+            "sptrsv_calib_{}.calib.json",
+            std::process::id()
+        ));
+        std::fs::remove_file(&path).ok();
+        assert!(load(&path).is_empty(), "absent file loads empty");
+        let mut table = BTreeMap::new();
+        table.insert("avgcost+scheduled".to_string(), 2.5);
+        table.insert("none+levelset".to_string(), 0.8);
+        save(&path, &table).unwrap();
+        assert_eq!(load(&path), table);
+        // A stale schema version is dropped wholesale.
+        let stale = format!(
+            r#"{{"version": {}, "entries": [["none+levelset", 3.0]]}}"#,
+            PLAN_SCHEMA_VERSION - 1
+        );
+        std::fs::write(&path, stale).unwrap();
+        assert!(load(&path).is_empty());
+        // Corrupt files warn and load empty instead of failing the tuner.
+        std::fs::write(&path, "{ not json").unwrap();
+        assert!(load(&path).is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_multipliers_filtered_on_load() {
+        let path = std::env::temp_dir().join(format!(
+            "sptrsv_calib_bad_{}.calib.json",
+            std::process::id()
+        ));
+        let text = format!(
+            r#"{{"version": {PLAN_SCHEMA_VERSION}, "entries": [
+  ["good+levelset", 1.5], ["zero+levelset", 0.0], ["neg+levelset", -2.0]
+]}}"#
+        );
+        std::fs::write(&path, text).unwrap();
+        let table = load(&path);
+        assert_eq!(table.len(), 1);
+        assert_eq!(table.get("good+levelset"), Some(&1.5));
+        std::fs::remove_file(&path).ok();
+    }
+}

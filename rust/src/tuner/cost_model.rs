@@ -1,22 +1,28 @@
-//! Per-strategy solve-cost prediction from structural features.
+//! Per-plan solve-cost prediction from structural features, composed
+//! along the two plan axes.
 //!
-//! The model is deliberately closed-form: a level-set solve costs one
-//! synchronization per level plus the level work divided by the usable
-//! parallelism ([`plan_cost`]). Each strategy's effect is estimated from
-//! the features alone ([`CostModel::estimate`]) — how many thin levels it
-//! merges and how much it inflates total work — seeded from the paper's
-//! Table I observations (avgcost preserves work; the blind manual
-//! strategy inflates rewritten rows roughly by the mean indegree).
+//! A [`crate::transform::SolvePlan`] is a rewrite × exec pair, and the
+//! model prices it the same way: the **rewrite axis** predicts the shape
+//! of the transformed system — how many thin levels it merges and how
+//! much it inflates total work ([`CostModel::estimate`], seeded from the
+//! paper's Table I observations: avgcost preserves work; the blind manual
+//! strategy inflates rewritten rows roughly by the mean indegree) — and
+//! the **exec axis** prices consuming that estimated shape: level-set
+//! barriers ([`plan_cost`]), a coarsened schedule's block dispatch +
+//! cross-worker waits, the sync-free solver's atomic counter traffic, or
+//! the reordering's locality gain minus its permutation pass.
 //!
 //! Predictions are only used to *shortlist* candidates for the empirical
 //! race; they are refined over time by [`CostModel::record`], which keeps
-//! a per-strategy EWMA multiplier of measured/predicted so systematic
-//! model error cancels out of the ranking.
+//! a per-plan EWMA multiplier of measured/predicted so systematic model
+//! error cancels out of the ranking. The calibration table is persisted
+//! alongside the plan cache (see [`crate::tuner::calibration`]) so a
+//! restart keeps the refined coefficients, not just the decisions.
 
 use std::collections::BTreeMap;
 
 use crate::sched::SchedOptions;
-use crate::transform::Strategy;
+use crate::transform::{Exec, Rewrite, SolvePlan};
 use crate::tuner::features::MatrixFeatures;
 
 /// Modelled cost of one level-set synchronization, in the same abstract
@@ -36,14 +42,14 @@ pub const BLOCK_COST: f64 = 2.0;
 pub const ATOMIC_COST: f64 = 2.0;
 
 /// Modelled per-row cost of permuting b in / x out for the reordering
-/// strategy.
+/// execution.
 pub const PERM_COST: f64 = 0.5;
 
 /// Work multiplier the level-sorted reordering is credited with (the
 /// locality gain of contiguous levels).
 pub const REORDER_LOCALITY: f64 = 0.97;
 
-/// Estimated shape of a transformed system.
+/// Estimated shape of a transformed system (the rewrite axis's output).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PlanEstimate {
     pub levels: usize,
@@ -62,7 +68,7 @@ pub fn plan_cost(levels: usize, work: f64, nrows: usize, workers: usize) -> f64 
 
 pub struct CostModel {
     pub workers: usize,
-    /// per-strategy EWMA of measured/predicted (1.0 = model exact)
+    /// per-plan EWMA of measured/predicted (1.0 = model exact)
     calibration: BTreeMap<String, f64>,
 }
 
@@ -74,59 +80,44 @@ impl CostModel {
         }
     }
 
-    /// Estimate the post-transform (levels, work) for a named strategy.
-    /// Returns None for names the model cannot interpret (including
-    /// `auto`, which would be self-referential).
-    pub fn estimate(&self, f: &MatrixFeatures, strategy: &str) -> Option<PlanEstimate> {
+    /// Estimate the post-rewrite (levels, work) shape of a plan — the
+    /// **rewrite axis** only; the exec axis does not change the
+    /// transformed system, only how it is consumed. Returns None for
+    /// names the model cannot interpret (including `auto`, which would be
+    /// self-referential).
+    pub fn estimate(&self, f: &MatrixFeatures, plan: &str) -> Option<PlanEstimate> {
+        let p = SolvePlan::parse(plan).ok()?;
+        Some(self.rewrite_estimate(f, &p.rewrite))
+    }
+
+    fn rewrite_estimate(&self, f: &MatrixFeatures, rewrite: &Rewrite) -> PlanEstimate {
         let base = PlanEstimate {
             levels: f.num_levels,
             work: f.total_cost as f64,
         };
-        match Strategy::parse(strategy).ok()? {
-            Strategy::None => Some(base),
-            Strategy::Auto => None,
-            // Scheduled execution removes levels from the cost picture:
-            // the "plan shape" is its estimated block count at unchanged
-            // total work (see `sched_shape`).
-            Strategy::Scheduled(o) => {
-                let (blocks, _, _) = self.sched_shape(f, &o);
-                Some(PlanEstimate {
-                    levels: blocks as usize,
-                    work: f.total_cost as f64,
-                })
-            }
-            // Sync-free execution has no level structure at all.
-            Strategy::Syncfree => Some(PlanEstimate {
-                levels: 1,
-                work: f.total_cost as f64,
-            }),
-            // Reordering keeps the levels, trims the work by the modelled
-            // locality gain.
-            Strategy::Reorder => Some(PlanEstimate {
-                levels: f.num_levels,
-                work: f.total_cost as f64 * REORDER_LOCALITY,
-            }),
-            Strategy::AvgLevelCost(_) => {
+        match rewrite {
+            Rewrite::None => base,
+            Rewrite::AvgLevelCost(_) => {
                 // avgcost merges cost-thin levels into targets until each
                 // target reaches avgLevelCost; with fewer than 2 thin
                 // levels it is a no-op (the uniform-chain limitation).
                 if f.thin_cost_levels < 2 {
-                    return Some(base);
+                    return base;
                 }
                 let group = (f.avg_level_cost / f.mean_thin_level_cost.max(1.0))
                     .clamp(1.0, f.thin_cost_levels as f64);
                 let merged = (f.thin_cost_levels as f64 / group).ceil() as usize;
-                Some(PlanEstimate {
+                PlanEstimate {
                     levels: f.num_levels - f.thin_cost_levels + merged,
                     // Cost-guided rewriting approximately preserves work
                     // (Table I: -1.1% on lung2, +0.2% on torso2).
                     work: f.total_cost as f64,
-                })
+                }
             }
-            Strategy::Manual(o) => {
+            Rewrite::Manual(o) => {
                 // Every `distance` width-thin levels collapse into one.
                 if f.thin_width_levels < 2 {
-                    return Some(base);
+                    return base;
                 }
                 let d = o.distance.max(2);
                 let merged = f.thin_width_levels.div_ceil(d);
@@ -136,68 +127,87 @@ impl CostModel {
                 // indegree ~4; chains with indegree 1 stay flat).
                 let moved = f.thin_width_cost as f64 * (d as f64 - 1.0) / d as f64;
                 let inflation = (f.avg_indegree - 1.0).max(0.0);
-                Some(PlanEstimate {
+                PlanEstimate {
                     levels: f.num_levels - f.thin_width_levels + merged,
                     work: f.total_cost as f64 + moved * inflation,
-                })
+                }
             }
         }
     }
 
-    /// Estimated schedule shape for the scheduled strategy:
+    /// Mean level width of the estimated post-rewrite partition. Kept
+    /// equal to the measured feature when the rewrite is a no-op so
+    /// legacy predictions are bit-identical.
+    fn mean_width(&self, f: &MatrixFeatures, est: &PlanEstimate) -> f64 {
+        if est.levels == f.num_levels {
+            f.mean_level_width.max(1.0)
+        } else {
+            (f.nrows as f64 / est.levels.max(1) as f64).max(1.0)
+        }
+    }
+
+    /// Estimated schedule shape over an estimated rewrite:
     /// `(blocks, usable parallelism, cross-worker edge cut)`. Blocks come
-    /// from the coarsening target; the usable parallelism is capped by
-    /// the mean level width (a serial chain collapses onto one worker);
-    /// the cut scales with how many block edges must cross workers at
-    /// that parallelism.
-    fn sched_shape(&self, f: &MatrixFeatures, o: &SchedOptions) -> (f64, f64, f64) {
+    /// from the coarsening target applied to the post-rewrite work; the
+    /// usable parallelism is capped by the post-rewrite mean level width
+    /// (a serial chain collapses onto one worker); the cut scales with
+    /// how many block edges must cross workers at that parallelism.
+    fn sched_shape(
+        &self,
+        f: &MatrixFeatures,
+        est: &PlanEstimate,
+        o: &SchedOptions,
+    ) -> (f64, f64, f64) {
         let target = o.block_target() as f64;
-        let blocks = (f.total_cost as f64 / target)
-            .ceil()
-            .clamp(1.0, f.nrows.max(1) as f64);
-        let p = (self.workers as f64)
-            .min(f.mean_level_width.max(1.0))
-            .max(1.0);
+        let blocks = (est.work / target).ceil().clamp(1.0, f.nrows.max(1) as f64);
+        let p = (self.workers as f64).min(self.mean_width(f, est)).max(1.0);
         let cut = blocks * f.avg_indegree.min(4.0) * (p - 1.0) / p;
         (blocks, p, cut)
     }
 
-    /// Closed-form prediction without the calibration multiplier. This is
-    /// what measured timings must be recorded against — recording against
-    /// the calibrated value would make the feedback loop converge to the
-    /// square root of the model error instead of cancelling it.
-    pub fn predict_raw(&self, f: &MatrixFeatures, strategy: &str) -> Option<f64> {
-        // Execution strategies replace the barrier-per-level cost shape
-        // of `plan_cost` with their own synchronization model.
-        match Strategy::parse(strategy).ok()? {
-            Strategy::Scheduled(o) => {
-                let (blocks, p, cut) = self.sched_shape(f, &o);
-                return Some(f.total_cost as f64 / p + blocks * BLOCK_COST + cut * WAIT_COST);
+    /// Closed-form prediction without the calibration multiplier: the
+    /// rewrite axis's estimated shape priced by the exec axis's
+    /// synchronization model. This is what measured timings must be
+    /// recorded against — recording against the calibrated value would
+    /// make the feedback loop converge to the square root of the model
+    /// error instead of cancelling it.
+    pub fn predict_raw(&self, f: &MatrixFeatures, plan: &str) -> Option<f64> {
+        let p = SolvePlan::parse(plan).ok()?;
+        let est = self.rewrite_estimate(f, &p.rewrite);
+        Some(match &p.exec {
+            Exec::Levelset => plan_cost(est.levels, est.work, f.nrows, self.workers),
+            Exec::Scheduled(o) => {
+                let (blocks, par, cut) = self.sched_shape(f, &est, o);
+                est.work / par + blocks * BLOCK_COST + cut * WAIT_COST
             }
-            Strategy::Syncfree => {
-                let p = (self.workers as f64)
-                    .min(f.mean_level_width.max(1.0))
-                    .max(1.0);
-                let edges = f.nnz.saturating_sub(f.nrows) as f64;
-                return Some(f.total_cost as f64 / p + edges * ATOMIC_COST);
+            Exec::Syncfree => {
+                let par = (self.workers as f64).min(self.mean_width(f, &est)).max(1.0);
+                // Counter traffic scales with the transformed edge count,
+                // approximated by the raw edge count times the rewrite's
+                // work inflation.
+                let inflation = if f.total_cost > 0 {
+                    est.work / f.total_cost as f64
+                } else {
+                    1.0
+                };
+                let edges = f.nnz.saturating_sub(f.nrows) as f64 * inflation;
+                est.work / par + edges * ATOMIC_COST
             }
-            Strategy::Reorder => {
-                let est = self.estimate(f, strategy)?;
-                return Some(
-                    plan_cost(est.levels, est.work, f.nrows, self.workers)
-                        + f.nrows as f64 * PERM_COST,
-                );
+            Exec::Reorder => {
+                plan_cost(
+                    est.levels,
+                    est.work * REORDER_LOCALITY,
+                    f.nrows,
+                    self.workers,
+                ) + f.nrows as f64 * PERM_COST
             }
-            _ => {}
-        }
-        let est = self.estimate(f, strategy)?;
-        Some(plan_cost(est.levels, est.work, f.nrows, self.workers))
+        })
     }
 
     /// Predicted solve cost (abstract units; lower is better), including
     /// the empirical calibration multiplier.
-    pub fn predict(&self, f: &MatrixFeatures, strategy: &str) -> Option<f64> {
-        Some(self.predict_raw(f, strategy)? * self.calibration(strategy))
+    pub fn predict(&self, f: &MatrixFeatures, plan: &str) -> Option<f64> {
+        Some(self.predict_raw(f, plan)? * self.calibration(plan))
     }
 
     /// All candidates with predictions, best first. Unknown names are
@@ -212,25 +222,35 @@ impl CostModel {
         out
     }
 
-    /// Fold a measured timing back into the per-strategy calibration.
+    /// Fold a measured timing back into the per-plan calibration.
     /// `predicted` must be the UNCALIBRATED prediction ([`Self::predict_raw`]);
     /// `measured` may be in any fixed unit (the race reports µs) — only
-    /// the measured/predicted ratio matters and it cancels across
-    /// strategies.
-    pub fn record(&mut self, strategy: &str, predicted: f64, measured: f64) {
+    /// the measured/predicted ratio matters and it cancels across plans.
+    pub fn record(&mut self, plan: &str, predicted: f64, measured: f64) {
         if predicted <= 0.0 || measured <= 0.0 || !predicted.is_finite() || !measured.is_finite() {
             return;
         }
         let ratio = (measured / predicted).clamp(1e-6, 1e6);
-        let m = self
-            .calibration
-            .entry(strategy.to_string())
-            .or_insert(ratio);
+        let m = self.calibration.entry(plan.to_string()).or_insert(ratio);
         *m = 0.7 * *m + 0.3 * ratio;
     }
 
-    pub fn calibration(&self, strategy: &str) -> f64 {
-        self.calibration.get(strategy).copied().unwrap_or(1.0)
+    pub fn calibration(&self, plan: &str) -> f64 {
+        self.calibration.get(plan).copied().unwrap_or(1.0)
+    }
+
+    /// The full calibration table (plan name -> EWMA multiplier), for
+    /// persistence alongside the plan cache.
+    pub fn calibration_table(&self) -> &BTreeMap<String, f64> {
+        &self.calibration
+    }
+
+    /// Seed one calibration multiplier (restoring a persisted table).
+    /// Non-finite or non-positive multipliers are ignored.
+    pub fn set_calibration(&mut self, plan: &str, multiplier: f64) {
+        if multiplier.is_finite() && multiplier > 0.0 {
+            self.calibration.insert(plan.to_string(), multiplier);
+        }
     }
 }
 
@@ -308,6 +328,15 @@ mod tests {
         // Bad samples are ignored.
         cm.record("none", 0.0, 1.0);
         cm.record("none", 1.0, -5.0);
+        // The table round-trips through set_calibration (persistence).
+        let table = cm.calibration_table().clone();
+        let mut cm2 = CostModel::new(2);
+        for (plan, mult) in &table {
+            cm2.set_calibration(plan, *mult);
+        }
+        assert_eq!(cm2.predict(&f, "none").unwrap(), after);
+        cm2.set_calibration("none", f64::NAN); // ignored
+        assert_eq!(cm2.predict(&f, "none").unwrap(), after);
     }
 
     #[test]
@@ -329,10 +358,10 @@ mod tests {
 
     #[test]
     fn scheduled_wins_the_serial_chain() {
-        // A uniform chain is the scheduled strategy's home game: chains
+        // A uniform chain is the scheduled exec's home game: chains
         // collapse into blocks with no barriers and (at parallelism 1) no
         // cross-worker waits, so the model must rank it ahead of every
-        // barrier-paying strategy.
+        // barrier-paying plan.
         let f = feats(&generate::tridiagonal(400, &Default::default()));
         let cm = CostModel::new(4);
         let sched = cm.predict(&f, "scheduled").unwrap();
@@ -342,33 +371,44 @@ mod tests {
         }
     }
 
+    /// Composition: the prediction for a composed plan combines the
+    /// rewrite's estimated shape with the exec's synchronization model.
     #[test]
-    fn execution_strategies_have_estimates_and_predictions() {
+    fn composed_plans_price_both_axes() {
         let f = feats(&generate::lung2_like(&GenOptions::with_scale(0.05)));
         let cm = CostModel::new(4);
-        for s in ["scheduled", "scheduled:64:2", "syncfree", "reorder"] {
-            let est = cm.estimate(&f, s).expect(s);
-            assert!(est.levels >= 1, "{s}");
-            assert!(est.work > 0.0, "{s}");
-            assert!(cm.predict(&f, s).unwrap().is_finite(), "{s}");
+        // avgcost merges levels, so avgcost+levelset pays fewer barriers
+        // than none+levelset...
+        let base = cm.predict(&f, "none+levelset").unwrap();
+        let avg_ls = cm.predict(&f, "avgcost+levelset").unwrap();
+        assert!(avg_ls < base);
+        // ...and avgcost+reorder inherits the merged-level shape too: it
+        // must beat none+reorder by the same barrier savings.
+        let re = cm.predict(&f, "none+reorder").unwrap();
+        let avg_re = cm.predict(&f, "avgcost+reorder").unwrap();
+        assert!(avg_re < re, "avgcost+reorder {avg_re} vs none+reorder {re}");
+        // The legacy single names predict identically to their pairings.
+        assert_eq!(cm.predict(&f, "avgcost"), cm.predict(&f, "avgcost+levelset"));
+        assert_eq!(cm.predict(&f, "scheduled"), cm.predict(&f, "none+scheduled"));
+        assert_eq!(cm.predict(&f, "syncfree"), cm.predict(&f, "none+syncfree"));
+        assert_eq!(cm.predict(&f, "reorder"), cm.predict(&f, "none+reorder"));
+        // Every cross-product member is priceable and finite.
+        for rw in ["none", "avgcost", "manual:10", "guarded:20"] {
+            for ex in ["levelset", "scheduled", "syncfree", "reorder"] {
+                let plan = format!("{rw}+{ex}");
+                assert!(
+                    cm.predict(&f, &plan).unwrap().is_finite(),
+                    "{plan} not priceable"
+                );
+            }
         }
-        // The three execution strategies estimate distinct plan shapes,
-        // so the shortlist dedup never collapses them together.
-        let sched = cm.estimate(&f, "scheduled").unwrap();
-        let syncfree = cm.estimate(&f, "syncfree").unwrap();
-        let reorder = cm.estimate(&f, "reorder").unwrap();
-        assert_ne!(sched, syncfree);
-        assert_ne!(sched, reorder);
-        assert_ne!(syncfree, reorder);
-        // Reorder keeps the level structure: it differs from `none` only
+        // Reorder keeps the level structure: it differs from levelset only
         // by the modelled locality gain minus the per-solve permutation
         // cost, so the two predictions stay within one permutation pass
         // of each other (the race, not the seed model, settles the call).
-        let none = cm.predict(&f, "none").unwrap();
-        let re = cm.predict(&f, "reorder").unwrap();
         assert!(
-            (re - none).abs() <= f.nrows as f64 * PERM_COST + 1.0,
-            "reorder {re} vs none {none}"
+            (re - base).abs() <= f.nrows as f64 * PERM_COST + 1.0,
+            "reorder {re} vs none {base}"
         );
     }
 

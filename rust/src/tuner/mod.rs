@@ -1,10 +1,13 @@
-//! Strategy-portfolio autotuner: pick the best transformation strategy
-//! per matrix, automatically.
+//! Plan-portfolio autotuner: pick the best solve plan per matrix,
+//! automatically, over the full rewrite × exec cross product.
 //!
 //! The paper closes by noting its results "provide several hints on how
 //! to craft a collection of strategies"; this subsystem operationalizes
-//! that: the fixed `Strategy` portfolio (`none | avgcost | manual |
-//! guarded`) becomes a self-tuning choice made per sparsity structure.
+//! that. Since the solve-plan split, the portfolio is the **cross
+//! product** of the rewrite axis (`none | avgcost | manual | guarded`)
+//! and the execution axis (`levelset | scheduled | syncfree | reorder`)
+//! — 16 candidates — pruned to a `top_k` shortlist by the composed cost
+//! model so the race never runs all 16 lanes.
 //!
 //! Decision path of [`Tuner::choose`]:
 //!
@@ -13,11 +16,15 @@
 //!    paid once per structure, amortized across re-registrations).
 //! 2. [`features`]   — extract the structural feature vector (level
 //!    widths, thin-level shares, indegrees, critical path).
-//! 3. [`cost_model`] — closed-form per-strategy cost prediction shortlists
-//!    the `top_k` candidates; measured timings continually recalibrate it.
+//! 3. [`cost_model`] — per-plan cost prediction (rewrite-shape × exec
+//!    synchronization model) shortlists the `top_k` candidates; measured
+//!    timings continually recalibrate it, and the calibration table is
+//!    persisted next to the plan cache ([`calibration`]).
 //! 4. [`race`]       — the shortlist runs real transforms + a few warm-up
-//!    solves; the measured winner becomes the plan and is cached.
+//!    solves on each plan's own backend; the measured winner becomes the
+//!    plan and is cached.
 
+pub mod calibration;
 pub mod cost_model;
 pub mod features;
 pub mod fingerprint;
@@ -25,12 +32,12 @@ pub mod plan_cache;
 pub mod race;
 
 use std::path::PathBuf;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::error::Error;
 use crate::solver::pool::Pool;
 use crate::sparse::Csr;
-use crate::transform::{Strategy, TransformResult};
+use crate::transform::{Exec, SolvePlan, TransformResult};
 
 pub use cost_model::{CostModel, PlanEstimate};
 pub use features::MatrixFeatures;
@@ -38,25 +45,31 @@ pub use fingerprint::Fingerprint;
 pub use plan_cache::{CachedPlan, PlanCache, PLAN_SCHEMA_VERSION};
 pub use race::{RaceOptions, RaceOutcome};
 
-/// The default strategy portfolio: the paper's three columns, the
-/// guarded variant of §III.A, and the execution strategies — the
-/// coarsened static schedule, the sync-free solver and the level-sorted
-/// reordering (ROADMAP "widen the portfolio").
-pub const DEFAULT_CANDIDATES: [&str; 7] = [
-    "none",
-    "avgcost",
-    "manual:10",
-    "guarded:20",
-    "scheduled",
-    "syncfree",
-    "reorder",
-];
+/// Rewrite-axis members of the default portfolio.
+pub const DEFAULT_REWRITES: [&str; 4] = ["none", "avgcost", "manual:10", "guarded:20"];
+
+/// Exec-axis members of the default portfolio.
+pub const DEFAULT_EXECS: [&str; 4] = ["levelset", "scheduled", "syncfree", "reorder"];
+
+/// The default candidate portfolio: the full rewrite × exec cross
+/// product, in canonical `rewrite+exec` names. The cost model prunes this
+/// to `top_k` lanes before anything is raced.
+pub fn default_candidates() -> Vec<String> {
+    let mut out = Vec::with_capacity(DEFAULT_REWRITES.len() * DEFAULT_EXECS.len());
+    for rw in DEFAULT_REWRITES {
+        for ex in DEFAULT_EXECS {
+            out.push(format!("{rw}+{ex}"));
+        }
+    }
+    out
+}
 
 #[derive(Debug, Clone)]
 pub struct TunerOptions {
-    /// strategy names eligible for selection (`auto` is ignored)
+    /// plan names eligible for selection (`auto` is ignored)
     pub candidates: Vec<String>,
-    /// how many cost-model favourites to race empirically
+    /// how many cost-model favourites to race empirically (the pruning
+    /// that keeps the 16-lane cross product affordable)
     pub top_k: usize,
     /// timed solves per raced candidate
     pub race_solves: usize,
@@ -65,7 +78,8 @@ pub struct TunerOptions {
     pub workers: usize,
     /// plan cache capacity (entries)
     pub cache_capacity: usize,
-    /// JSON spill path; None keeps the cache in memory only
+    /// JSON spill path; None keeps the cache (and calibration) in memory
+    /// only
     pub cache_path: Option<PathBuf>,
     /// seconds before a spilled same-schema plan expires and is dropped
     /// on load (0 = plans never expire by age)
@@ -84,7 +98,7 @@ pub struct TunerOptions {
 impl Default for TunerOptions {
     fn default() -> Self {
         TunerOptions {
-            candidates: DEFAULT_CANDIDATES.iter().map(|s| s.to_string()).collect(),
+            candidates: default_candidates(),
             top_k: 2,
             race_solves: 3,
             // Match the machine rather than a fixed guess: races measure
@@ -116,12 +130,12 @@ pub enum PlanSource {
 /// The tuner's decision for one matrix, ready to serve.
 pub struct TunedPlan {
     pub fingerprint: Fingerprint,
-    /// winning strategy in `Strategy::parse` syntax
-    pub strategy_name: String,
-    pub strategy: Strategy,
+    /// winning plan in `SolvePlan::parse` syntax
+    pub plan_name: String,
+    pub plan: SolvePlan,
     pub source: PlanSource,
     /// structural feature vector; None on a cache hit, where no feature
-    /// analysis runs (applying the cached strategy still builds its own
+    /// analysis runs (applying the cached plan still builds its own
     /// level sets — that cost is inherent to producing a transform)
     pub features: Option<MatrixFeatures>,
     /// cost-model predictions, best first (empty on a cache hit)
@@ -138,11 +152,41 @@ pub struct Tuner {
     pub cache: PlanCache,
 }
 
+/// Lazily initialized process-wide tuner backing standalone `auto`
+/// resolution (CLI `transform --plan auto`, library callers without a
+/// serving pipeline). The old `Strategy::Auto.apply()` built a throwaway
+/// tuner — cold cache, default pool — on **every** call, re-racing per
+/// invocation; this keeps one warm tuner per process. The coordinator
+/// pipeline still holds its own tuner (configured cache path, shared
+/// worker pool).
+static PROCESS_TUNER: OnceLock<Mutex<Tuner>> = OnceLock::new();
+
+/// Decide a plan for `m` on the shared process-wide tuner (default
+/// options, in-memory plan cache). Repeated calls on the same structure
+/// hit the cache instead of re-racing.
+pub fn process_choose(m: &Csr) -> Result<TunedPlan, Error> {
+    PROCESS_TUNER
+        .get_or_init(|| Mutex::new(Tuner::new(TunerOptions::default())))
+        .lock()
+        // A panic inside one tuning run must not brick every later
+        // standalone `auto` in the process: the tuner holds no invariant
+        // a mid-panic leaves broken (worst case a stale cache entry), so
+        // recover the poisoned lock and keep serving.
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+        .choose(m)
+}
+
 impl Tuner {
     pub fn new(opts: TunerOptions) -> Tuner {
-        let model = CostModel::new(opts.workers);
+        let mut model = CostModel::new(opts.workers);
         let cache = match &opts.cache_path {
             Some(path) => {
+                // Restore the persisted calibration next to the plan
+                // cache: restarts keep the refined coefficients, not just
+                // the decisions.
+                for (plan, mult) in calibration::load(&calibration::path_for(path)) {
+                    model.set_calibration(&plan, mult);
+                }
                 PlanCache::with_disk_ttl(opts.cache_capacity, path, opts.cache_ttl_secs)
             }
             None => PlanCache::new(opts.cache_capacity),
@@ -155,7 +199,7 @@ impl Tuner {
         (self.cache.hits, self.cache.misses)
     }
 
-    /// Decide a strategy for `m`: plan-cache lookup, else cost-model
+    /// Decide a plan for `m`: plan-cache lookup, else cost-model
     /// shortlist + race, then cache the winner.
     ///
     /// This entry point copies the matrix once on a cache miss (the race
@@ -189,8 +233,8 @@ impl Tuner {
     fn empty_plan(&self, fingerprint: Fingerprint, m: &Csr) -> TunedPlan {
         TunedPlan {
             fingerprint,
-            strategy_name: "none".to_string(),
-            strategy: Strategy::None,
+            plan_name: "none".to_string(),
+            plan: SolvePlan::baseline(),
             source: PlanSource::Raced,
             features: None,
             predictions: Vec::new(),
@@ -199,18 +243,18 @@ impl Tuner {
         }
     }
 
-    /// Plan-cache lookup. An unparseable cached strategy (stale format,
+    /// Plan-cache lookup. An unparseable cached plan (stale format,
     /// hand-edited file) must not brick its fingerprint: warn, return
     /// None so the caller re-tunes, and let the fresh put() overwrite it.
     fn try_cached(&mut self, fingerprint: Fingerprint, m: &Csr) -> Option<TunedPlan> {
         let cached = self.cache.get(fingerprint)?;
-        match Strategy::parse(&cached.strategy) {
-            Ok(strategy) => {
-                let transform = strategy.apply(m);
+        match SolvePlan::parse(&cached.plan) {
+            Ok(plan) => {
+                let transform = plan.apply(m);
                 Some(TunedPlan {
                     fingerprint,
-                    strategy_name: cached.strategy,
-                    strategy,
+                    plan_name: cached.plan,
+                    plan,
                     source: PlanSource::CacheHit,
                     features: None,
                     predictions: Vec::new(),
@@ -228,21 +272,25 @@ impl Tuner {
         }
     }
 
-    /// Cache-miss path: extract features, shortlist by predicted cost
-    /// (skipping candidates whose estimated plan shape duplicates one
-    /// already shortlisted — e.g. `guarded` degenerates to `avgcost`),
-    /// race, record, cache.
+    /// Cache-miss path: extract features, shortlist by predicted cost,
+    /// race, record, cache. Shortlisting dedups on the
+    /// **(exec axis, estimated rewrite shape)** key: two candidates with
+    /// the same execution backend whose rewrites are predicted to produce
+    /// the same system (e.g. `guarded` degenerating to `avgcost`, or
+    /// `none` ≡ `avgcost` on a uniform chain) would race identical
+    /// configurations, so only the better-ranked one runs — while the
+    /// same rewrite under *different* backends always keeps both lanes.
     fn tune(&mut self, m: &Arc<Csr>, fingerprint: Fingerprint) -> Result<TunedPlan, Error> {
         let features = MatrixFeatures::of(m);
         let predictions = self.model.rank(&features, &self.opts.candidates);
         if predictions.is_empty() {
             return Err(Error::Invalid(
-                "tuner: no usable candidate strategies".to_string(),
+                "tuner: no usable candidate plans".to_string(),
             ));
         }
         let top_k = self.opts.top_k.max(1);
         let mut shortlist: Vec<String> = Vec::with_capacity(top_k);
-        let mut seen: Vec<PlanEstimate> = Vec::with_capacity(top_k);
+        let mut seen: Vec<(String, PlanEstimate)> = Vec::with_capacity(top_k);
         for (s, _) in &predictions {
             if shortlist.len() >= top_k {
                 break;
@@ -250,22 +298,16 @@ impl Tuner {
             let Some(est) = self.model.estimate(&features, s) else {
                 continue;
             };
-            // "Same predicted plan shape => racing adds nothing" only
-            // holds between candidates that execute on the level-set
-            // executor. Execution strategies (scheduled/syncfree/reorder)
-            // run on their own backends, so an estimate that happens to
-            // equal another candidate's does NOT make their race
-            // redundant — they bypass the dedup entirely.
-            let dedupable = !matches!(
-                Strategy::parse(s),
-                Ok(Strategy::Scheduled(_) | Strategy::Syncfree | Strategy::Reorder)
-            );
-            if dedupable {
-                if seen.contains(&est) {
-                    continue;
-                }
-                seen.push(est);
+            // rank() already filtered unparseable names.
+            let Ok(plan) = SolvePlan::parse(s) else { continue };
+            // The dedup key carries the exec axis *with its knobs*: a
+            // `scheduled:64` lane and a `scheduled:256` lane build
+            // different schedules even over the same rewrite.
+            let exec_key = exec_dedup_key(&plan.exec);
+            if seen.iter().any(|(k, e)| *k == exec_key && *e == est) {
+                continue;
             }
+            seen.push((exec_key, est));
             shortlist.push(s.clone());
         }
         if shortlist.is_empty() {
@@ -283,30 +325,37 @@ impl Tuner {
         // Feed measurements back into the model's calibration, against
         // the UNCALIBRATED prediction (see CostModel::record).
         for lane in &outcome.lanes {
-            if let Some(raw) = self.model.predict_raw(&features, &lane.strategy) {
-                self.model.record(&lane.strategy, raw, lane.solve_us);
+            if let Some(raw) = self.model.predict_raw(&features, &lane.plan) {
+                self.model.record(&lane.plan, raw, lane.solve_us);
+            }
+        }
+        // Persist the refreshed calibration next to the plan cache.
+        if let Some(cache_path) = &self.opts.cache_path {
+            let path = calibration::path_for(cache_path);
+            if let Err(e) = calibration::save(&path, self.model.calibration_table()) {
+                eprintln!("warning: tuner calibration save failed: {e}");
             }
         }
 
         let winner = outcome.winner;
-        let strategy_name = outcome.lanes[winner].strategy.clone();
-        let strategy = Strategy::parse(&strategy_name).map_err(Error::Invalid)?;
+        let plan_name = outcome.lanes[winner].plan.clone();
+        let plan = SolvePlan::parse(&plan_name).map_err(Error::Invalid)?;
         let transform = match outcome.lanes[winner].transform.take() {
             Some(t) => t,
             // The race could not reclaim its Arc (never expected, but
             // cheap to recover from): apply the winner again.
-            None => strategy.apply(m),
+            None => plan.apply(m),
         };
 
         self.cache.put(
             fingerprint,
             CachedPlan {
-                strategy: strategy_name.clone(),
+                plan: plan_name.clone(),
                 solve_us: outcome.lanes[winner].solve_us,
                 timings: outcome
                     .lanes
                     .iter()
-                    .map(|l| (l.strategy.clone(), l.solve_us))
+                    .map(|l| (l.plan.clone(), l.solve_us))
                     .collect(),
                 nrows: m.nrows,
                 created_unix: plan_cache::now_unix(),
@@ -315,8 +364,8 @@ impl Tuner {
 
         Ok(TunedPlan {
             fingerprint,
-            strategy_name,
-            strategy,
+            plan_name,
+            plan,
             source: PlanSource::Raced,
             features: Some(features),
             predictions,
@@ -324,6 +373,11 @@ impl Tuner {
             transform,
         })
     }
+}
+
+/// Canonical dedup key for an exec axis, knobs included.
+fn exec_dedup_key(exec: &Exec) -> String {
+    exec.to_string()
 }
 
 #[cfg(test)]
@@ -340,6 +394,18 @@ mod tests {
     }
 
     #[test]
+    fn default_portfolio_is_the_cross_product() {
+        let c = default_candidates();
+        assert_eq!(c.len(), 16);
+        assert!(c.contains(&"avgcost+scheduled".to_string()));
+        assert!(c.contains(&"guarded:20+syncfree".to_string()));
+        assert!(c.contains(&"none+levelset".to_string()));
+        for name in &c {
+            SolvePlan::parse(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
     fn choose_then_cache_hit() {
         let m = generate::lung2_like(&GenOptions::with_scale(0.03));
         let mut tuner = Tuner::new(quick_opts());
@@ -348,22 +414,22 @@ mod tests {
         assert!(!p1.predictions.is_empty());
         p1.transform.validate(&m).unwrap();
         // guarded degenerates to avgcost under the estimate, so the
-        // shortlist dedup must never race both.
+        // shortlist dedup must never race both under one backend.
         let lanes: Vec<&str> = p1
             .race
             .as_ref()
             .unwrap()
             .lanes
             .iter()
-            .map(|l| l.strategy.as_str())
+            .map(|l| l.plan.as_str())
             .collect();
         assert!(
-            !(lanes.contains(&"avgcost") && lanes.contains(&"guarded:20")),
+            !(lanes.contains(&"avgcost+levelset") && lanes.contains(&"guarded:20+levelset")),
             "duplicate plan shapes raced: {lanes:?}"
         );
         let p2 = tuner.choose(&m).unwrap();
         assert_eq!(p2.source, PlanSource::CacheHit);
-        assert_eq!(p2.strategy_name, p1.strategy_name);
+        assert_eq!(p2.plan_name, p1.plan_name);
         assert_eq!(
             p2.transform.stats.levels_after,
             p1.transform.stats.levels_after
@@ -376,9 +442,9 @@ mod tests {
         let m = generate::tridiagonal(300, &Default::default());
         let mut tuner = Tuner::new(quick_opts());
         let p = tuner.choose(&m).unwrap();
-        // The model shortlists manual (the only strategy that helps a
-        // uniform chain); whatever wins the race must not be worse than
-        // the baseline's 300 levels.
+        // The model shortlists barrier-reducing plans (manual rewriting
+        // or barrier-free execution); whatever wins the race must not be
+        // worse than the baseline's 300 levels.
         assert!(p.transform.num_levels() <= 300);
         assert_eq!(p.features.as_ref().map(|f| f.num_levels), Some(300));
     }
@@ -390,7 +456,7 @@ mod tests {
         tuner.cache.put(
             Fingerprint::of(&m),
             CachedPlan {
-                strategy: "not-a-strategy".to_string(),
+                plan: "not-a-plan".to_string(),
                 solve_us: 1.0,
                 timings: Vec::new(),
                 nrows: 80,
@@ -404,17 +470,17 @@ mod tests {
         p.transform.validate(&m).unwrap();
         let p2 = tuner.choose(&m).unwrap();
         assert_eq!(p2.source, PlanSource::CacheHit);
-        assert_eq!(p2.strategy_name, p.strategy_name);
+        assert_eq!(p2.plan_name, p.plan_name);
     }
 
     #[test]
-    fn execution_strategies_bypass_shape_dedup() {
-        // On a tiny chain, `scheduled` and `syncfree` estimate the same
-        // plan shape ({1 block/level, same work}) — but they execute on
+    fn same_rewrite_different_backends_bypass_shape_dedup() {
+        // On a tiny chain every rewrite is a no-op, so all candidates
+        // share one estimated shape — but different exec axes execute on
         // different backends, so BOTH must reach the race.
         let m = generate::tridiagonal(20, &Default::default());
         let mut tuner = Tuner::new(TunerOptions {
-            candidates: vec!["scheduled".to_string(), "syncfree".to_string()],
+            candidates: vec!["none+scheduled".to_string(), "none+syncfree".to_string()],
             top_k: 2,
             race_solves: 1,
             workers: 2,
@@ -427,9 +493,82 @@ mod tests {
             .expect("raced")
             .lanes
             .iter()
-            .map(|l| l.strategy.as_str())
+            .map(|l| l.plan.as_str())
             .collect();
         assert_eq!(lanes.len(), 2, "dedup swallowed a backend: {lanes:?}");
+    }
+
+    #[test]
+    fn same_backend_same_shape_dedups_across_rewrites() {
+        // On a uniform chain avgcost is a predicted no-op: avgcost+X and
+        // none+X estimate the same system under the same backend, so only
+        // the better-ranked lane races.
+        let m = generate::tridiagonal(40, &Default::default());
+        let mut tuner = Tuner::new(TunerOptions {
+            candidates: vec![
+                "none+syncfree".to_string(),
+                "avgcost+syncfree".to_string(),
+            ],
+            top_k: 2,
+            race_solves: 1,
+            workers: 2,
+            ..Default::default()
+        });
+        let p = tuner.choose(&m).unwrap();
+        assert_eq!(
+            p.race.as_ref().unwrap().lanes.len(),
+            1,
+            "duplicate (rewrite shape, backend) lanes raced"
+        );
+    }
+
+    #[test]
+    fn calibration_persists_alongside_the_plan_cache() {
+        let dir = std::env::temp_dir();
+        let cache_path = dir.join(format!("sptrsv_tuner_calib_{}.json", std::process::id()));
+        let calib_path = calibration::path_for(&cache_path);
+        std::fs::remove_file(&cache_path).ok();
+        std::fs::remove_file(&calib_path).ok();
+        let m = generate::lung2_like(&GenOptions::with_scale(0.02));
+        let expected = {
+            let mut tuner = Tuner::new(TunerOptions {
+                cache_path: Some(cache_path.clone()),
+                ..quick_opts()
+            });
+            let p = tuner.choose(&m).unwrap();
+            assert_eq!(p.source, PlanSource::Raced);
+            assert!(calib_path.exists(), "calibration not spilled");
+            tuner.model.calibration_table().clone()
+        };
+        assert!(!expected.is_empty(), "race recorded no calibration");
+        // A fresh tuner (fresh process, same spill dir) starts with the
+        // refined coefficients, not the closed-form seeds.
+        let tuner2 = Tuner::new(TunerOptions {
+            cache_path: Some(cache_path.clone()),
+            ..quick_opts()
+        });
+        for (plan, mult) in &expected {
+            assert_eq!(
+                tuner2.model.calibration(plan),
+                *mult,
+                "calibration for {plan} not restored"
+            );
+        }
+        std::fs::remove_file(&cache_path).ok();
+        std::fs::remove_file(&calib_path).ok();
+    }
+
+    #[test]
+    fn process_tuner_is_shared_and_caches() {
+        let m = generate::tridiagonal(64, &Default::default());
+        let p1 = process_choose(&m).unwrap();
+        p1.transform.validate(&m).unwrap();
+        // The second standalone call answers from the shared cache
+        // instead of re-racing (the old Strategy::Auto::apply re-raced
+        // every time).
+        let p2 = process_choose(&m).unwrap();
+        assert_eq!(p2.source, PlanSource::CacheHit);
+        assert_eq!(p2.plan_name, p1.plan_name);
     }
 
     #[test]
@@ -437,7 +576,7 @@ mod tests {
         let m = crate::sparse::Csr::new(0, 0, vec![0], vec![], vec![]).unwrap();
         let mut tuner = Tuner::new(quick_opts());
         let p = tuner.choose(&m).unwrap();
-        assert_eq!(p.strategy_name, "none");
+        assert_eq!(p.plan_name, "none");
         assert_eq!(p.transform.num_levels(), 0);
     }
 }

@@ -4,7 +4,7 @@
 //! Re-registering a known sparsity structure (same factor, refreshed
 //! values; a service restart; another replica warming from a shared
 //! volume) skips the cost-model + racing analysis entirely and goes
-//! straight to the recorded winning strategy. The disk format is the
+//! straight to the recorded winning plan. The disk format is the
 //! crate's own minimal JSON (`util::json`), so the cache file is
 //! greppable and survives toolchain changes (the fingerprint is
 //! platform-stable FNV, not `DefaultHasher`).
@@ -19,18 +19,20 @@ use crate::util::json::Json;
 /// Schema/solver version stamped on every spilled plan entry. Entries
 /// written under a different version are dropped on load: a raced
 /// decision is only as good as the executor that timed it, so bump this
-/// whenever the solver, executor or strategy semantics change in a way
-/// that invalidates previously cached winners.
-pub const PLAN_SCHEMA_VERSION: u64 = 2;
+/// whenever the solver, executor or plan semantics change in a way that
+/// invalidates previously cached winners. v3: decisions are two-axis
+/// solve plans (`rewrite+exec` grammar); v2-era single-strategy entries
+/// are dropped.
+pub const PLAN_SCHEMA_VERSION: u64 = 3;
 
 /// A tuning decision worth remembering.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CachedPlan {
-    /// winning strategy, in `Strategy::parse` syntax
-    pub strategy: String,
+    /// winning plan, in `SolvePlan::parse` syntax
+    pub plan: String,
     /// winner's best per-solve time when raced, microseconds
     pub solve_us: f64,
-    /// every raced candidate's (strategy, best solve µs)
+    /// every raced candidate's (plan, best solve µs)
     pub timings: Vec<(String, f64)>,
     /// rows of the fingerprinted matrix (sanity check / observability)
     pub nrows: usize,
@@ -189,7 +191,7 @@ impl PlanCache {
                 .collect();
             items.push(Json::obj(vec![
                 ("fingerprint", Json::Str(format!("{fp:016x}"))),
-                ("strategy", Json::Str(plan.strategy.clone())),
+                ("plan", Json::Str(plan.plan.clone())),
                 ("solve_us", Json::Num(plan.solve_us)),
                 ("nrows", Json::Num(plan.nrows as f64)),
                 ("stamp", Json::Num(*stamp as f64)),
@@ -248,7 +250,7 @@ fn load_entries(path: &Path) -> Result<BTreeMap<u64, (u64, CachedPlan)>, Error> 
         else {
             continue;
         };
-        let Some(strategy) = item.get("strategy").and_then(Json::as_str) else {
+        let Some(plan) = item.get("plan").and_then(Json::as_str) else {
             continue;
         };
         let solve_us = item.get("solve_us").and_then(Json::as_f64).unwrap_or(0.0);
@@ -272,7 +274,7 @@ fn load_entries(path: &Path) -> Result<BTreeMap<u64, (u64, CachedPlan)>, Error> 
             (
                 stamp,
                 CachedPlan {
-                    strategy: strategy.to_string(),
+                    plan: plan.to_string(),
                     solve_us,
                     timings,
                     nrows,
@@ -288,11 +290,11 @@ fn load_entries(path: &Path) -> Result<BTreeMap<u64, (u64, CachedPlan)>, Error> 
 mod tests {
     use super::*;
 
-    fn plan(strategy: &str, us: f64) -> CachedPlan {
+    fn plan(winner: &str, us: f64) -> CachedPlan {
         CachedPlan {
-            strategy: strategy.to_string(),
+            plan: winner.to_string(),
             solve_us: us,
-            timings: vec![("none".into(), us * 2.0), (strategy.to_string(), us)],
+            timings: vec![("none+levelset".into(), us * 2.0), (winner.to_string(), us)],
             nrows: 100,
             created_unix: now_unix(),
         }
@@ -306,9 +308,9 @@ mod tests {
     fn hit_miss_accounting() {
         let mut c = PlanCache::new(4);
         assert!(c.get(fp(1)).is_none());
-        c.put(fp(1), plan("avgcost", 10.0));
+        c.put(fp(1), plan("avgcost+levelset", 10.0));
         let got = c.get(fp(1)).unwrap();
-        assert_eq!(got.strategy, "avgcost");
+        assert_eq!(got.plan, "avgcost+levelset");
         assert_eq!((c.hits, c.misses), (1, 1));
         assert_eq!(c.len(), 1);
         assert!(!c.is_empty());
@@ -336,13 +338,13 @@ mod tests {
         std::fs::remove_file(&path).ok();
         {
             let mut c = PlanCache::with_disk(8, &path);
-            c.put(fp(0xDEAD), plan("manual:10", 42.5));
-            c.put(fp(0xBEEF), plan("avgcost", 7.25));
+            c.put(fp(0xDEAD), plan("manual:10+scheduled", 42.5));
+            c.put(fp(0xBEEF), plan("avgcost+levelset", 7.25));
         }
         let mut c2 = PlanCache::with_disk(8, &path);
         assert_eq!(c2.len(), 2);
         let got = c2.get(fp(0xDEAD)).unwrap();
-        assert_eq!(got.strategy, "manual:10");
+        assert_eq!(got.plan, "manual:10+scheduled");
         assert_eq!(got.solve_us, 42.5);
         assert_eq!(got.timings.len(), 2);
         assert_eq!(got.nrows, 100);
@@ -360,12 +362,12 @@ mod tests {
         // structure: neither save may clobber the other's entry.
         let mut a = PlanCache::with_disk(8, &path);
         let mut b = PlanCache::with_disk(8, &path);
-        a.put(fp(1), plan("avgcost", 1.0));
-        b.put(fp(2), plan("manual:10", 2.0));
+        a.put(fp(1), plan("avgcost+levelset", 1.0));
+        b.put(fp(2), plan("manual:10+syncfree", 2.0));
         let mut fresh = PlanCache::with_disk(8, &path);
         assert_eq!(fresh.len(), 2);
-        assert_eq!(fresh.get(fp(1)).unwrap().strategy, "avgcost");
-        assert_eq!(fresh.get(fp(2)).unwrap().strategy, "manual:10");
+        assert_eq!(fresh.get(fp(1)).unwrap().plan, "avgcost+levelset");
+        assert_eq!(fresh.get(fp(2)).unwrap().plan, "manual:10+syncfree");
         std::fs::remove_file(&path).ok();
     }
 
@@ -379,11 +381,11 @@ mod tests {
         // (and one pre-versioning entry with no stamp at all).
         let text = format!(
             r#"{{"version": {v}, "entries": [
-  {{"fingerprint": "00000000000000aa", "strategy": "avgcost", "solve_us": 1.5,
+  {{"fingerprint": "00000000000000aa", "plan": "avgcost+scheduled", "solve_us": 1.5,
     "nrows": 10, "stamp": 1, "schema": {v}, "timings": []}},
-  {{"fingerprint": "00000000000000bb", "strategy": "manual:10", "solve_us": 2.5,
-    "nrows": 10, "stamp": 2, "schema": 1, "timings": []}},
-  {{"fingerprint": "00000000000000cc", "strategy": "none", "solve_us": 3.5,
+  {{"fingerprint": "00000000000000bb", "plan": "manual:10", "solve_us": 2.5,
+    "nrows": 10, "stamp": 2, "schema": 2, "timings": []}},
+  {{"fingerprint": "00000000000000cc", "plan": "none", "solve_us": 3.5,
     "nrows": 10, "stamp": 3, "timings": []}}
 ]}}"#,
             v = PLAN_SCHEMA_VERSION
@@ -391,12 +393,12 @@ mod tests {
         std::fs::write(&path, text).unwrap();
         let mut c = PlanCache::with_disk(8, &path);
         assert_eq!(c.len(), 1, "only the current-version entry survives");
-        assert_eq!(c.get(fp(0xAA)).unwrap().strategy, "avgcost");
+        assert_eq!(c.get(fp(0xAA)).unwrap().plan, "avgcost+scheduled");
         assert!(c.get(fp(0xBB)).is_none());
         assert!(c.get(fp(0xCC)).is_none());
         // Re-saving persists only current-version entries: the stale ones
         // are gone from the file too.
-        c.put(fp(0xDD), plan("guarded:20", 4.0));
+        c.put(fp(0xDD), plan("guarded:20+levelset", 4.0));
         let reread = PlanCache::with_disk(8, &path);
         assert_eq!(reread.len(), 2);
         std::fs::remove_file(&path).ok();
@@ -411,10 +413,10 @@ mod tests {
         std::fs::remove_file(&path).ok();
         {
             let mut c = PlanCache::with_disk(8, &path);
-            let mut old = plan("manual:10", 5.0);
+            let mut old = plan("manual:10+levelset", 5.0);
             old.created_unix = now_unix().saturating_sub(10_000);
             c.put(fp(1), old);
-            c.put(fp(2), plan("avgcost", 3.0)); // fresh
+            c.put(fp(2), plan("avgcost+levelset", 3.0)); // fresh
         }
         // Without a TTL both entries survive a reload.
         let c = PlanCache::with_disk(8, &path);
@@ -424,7 +426,7 @@ mod tests {
         let mut c = PlanCache::with_disk_ttl(8, &path, 3600);
         assert_eq!(c.len(), 1);
         assert!(c.get(fp(1)).is_none());
-        assert_eq!(c.get(fp(2)).unwrap().strategy, "avgcost");
+        assert_eq!(c.get(fp(2)).unwrap().plan, "avgcost+levelset");
         // A TTL far wider than the age keeps everything.
         let c = PlanCache::with_disk_ttl(8, &path, 100_000);
         assert_eq!(c.len(), 2);

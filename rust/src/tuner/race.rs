@@ -1,5 +1,5 @@
-//! Empirical strategy racing: apply each shortlisted strategy for real,
-//! warm it up, and time a few solves on the actual executor.
+//! Empirical plan racing: apply each shortlisted plan's rewrite for
+//! real, build its execution backend, warm it up, and time a few solves.
 //!
 //! The cost model shortlists; the race decides. This mirrors how analysis
 //! cost is amortized in serving (Li 2017): the transform + a handful of
@@ -14,7 +14,7 @@ use crate::sched::SchedOptions;
 use crate::solver::dispatch::ExecSolver;
 use crate::solver::pool::Pool;
 use crate::sparse::Csr;
-use crate::transform::{Strategy, TransformResult};
+use crate::transform::{SolvePlan, TransformResult};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
@@ -48,8 +48,9 @@ impl Default for RaceOptions {
 
 /// One raced candidate.
 pub struct Lane {
-    pub strategy: String,
-    /// wall-clock of Strategy::apply (the analysis cost)
+    /// the candidate's plan name, verbatim
+    pub plan: String,
+    /// wall-clock of the rewrite + backend build (the analysis cost)
     pub transform_ms: f64,
     /// best-of-N per-solve time, microseconds
     pub solve_us: f64,
@@ -71,9 +72,10 @@ impl RaceOutcome {
     }
 }
 
-/// Race `candidates` (strategy names) on `m`. Unparseable names are
-/// skipped; errors only if no candidate survives. Takes the matrix by
-/// Arc so large factors are never deep-copied onto the tuning path.
+/// Race `candidates` (plan names) on `m`. Unparseable names — including
+/// `auto`, which is a request to run this very machinery — are skipped;
+/// errors only if no candidate survives. Takes the matrix by Arc so large
+/// factors are never deep-copied onto the tuning path.
 pub fn race(m: &Arc<Csr>, candidates: &[String], opts: &RaceOptions) -> Result<RaceOutcome, String> {
     let solves = opts.solves.max(1);
     // One pool shared by every lane: thread spawn cost must not skew the
@@ -89,25 +91,24 @@ pub fn race(m: &Arc<Csr>, candidates: &[String], opts: &RaceOptions) -> Result<R
 
     let mut lanes: Vec<Lane> = Vec::with_capacity(candidates.len());
     for name in candidates {
-        let strategy = match Strategy::parse(name) {
-            Ok(Strategy::Auto) | Err(_) => continue, // never race the tuner itself
-            Ok(s) => s,
+        let Ok(plan) = SolvePlan::parse(name) else {
+            continue; // unknown names and `auto` never race
         };
         let t0 = Instant::now();
-        let t_arc = Arc::new(strategy.apply(m));
+        let t_arc = Arc::new(plan.apply(m));
         let levels_after = t_arc.stats.levels_after;
         let total_cost_after = t_arc.stats.total_level_cost_after;
 
-        // Each lane runs on the backend its strategy actually uses
-        // (level-set executor, coarsened schedule, sync-free, reordered)
-        // — racing everything on the level-set executor would misprice
-        // the execution strategies. Schedule/permutation construction is
-        // part of the lane's analysis cost, so the transform clock covers
-        // the build too.
+        // Each lane runs on the backend its exec axis calls for
+        // (level-set executor, coarsened schedule, sync-free, reordered),
+        // over the system its rewrite axis produced — racing everything
+        // on the level-set executor would misprice the composition.
+        // Schedule/permutation construction is part of the lane's
+        // analysis cost, so the transform clock covers the build too.
         let solver = match ExecSolver::build(
             Arc::clone(m),
             Arc::clone(&t_arc),
-            &strategy,
+            &plan.exec,
             Arc::clone(&pool),
             opts.sched,
         ) {
@@ -128,7 +129,7 @@ pub fn race(m: &Arc<Csr>, candidates: &[String], opts: &RaceOptions) -> Result<R
         drop(solver);
         let transform = Arc::try_unwrap(t_arc).ok();
         lanes.push(Lane {
-            strategy: name.clone(),
+            plan: name.clone(),
             transform_ms,
             solve_us: best,
             levels_after,
@@ -137,7 +138,7 @@ pub fn race(m: &Arc<Csr>, candidates: &[String], opts: &RaceOptions) -> Result<R
         });
     }
     if lanes.is_empty() {
-        return Err("no raceable candidate strategies".to_string());
+        return Err("no raceable candidate plans".to_string());
     }
     let winner = lanes
         .iter()
@@ -177,7 +178,7 @@ mod tests {
             t.validate(&m).unwrap();
         }
         let w = out.winner_lane();
-        assert!(w.strategy == "none" || w.strategy == "avgcost");
+        assert!(w.plan == "none" || w.plan == "avgcost");
     }
 
     #[test]
@@ -198,7 +199,7 @@ mod tests {
     }
 
     #[test]
-    fn execution_strategies_race_on_their_own_backends() {
+    fn composed_plans_race_on_their_own_backends() {
         let m = Arc::new(generate::lung2_like(&GenOptions::with_scale(0.03)));
         let opts = RaceOptions {
             solves: 1,
@@ -207,15 +208,32 @@ mod tests {
         };
         let out = race(
             &m,
-            &names(&["scheduled:64:2", "syncfree", "reorder"]),
+            &names(&["avgcost+scheduled:64:2", "avgcost+syncfree", "guarded:5+reorder"]),
             &opts,
         )
         .unwrap();
         assert_eq!(out.lanes.len(), 3);
         for lane in &out.lanes {
             assert!(lane.solve_us.is_finite() && lane.solve_us >= 0.0);
-            // Execution strategies never rewrite: the reclaimed transform
-            // is the identity.
+            // Composed lanes really ran their rewrite axis: the reclaimed
+            // transform is the rewritten system, not the identity.
+            let t = lane.transform.as_ref().expect("transform reclaimed");
+            assert!(t.stats.rows_rewritten > 0, "{}", lane.plan);
+            t.validate(&m).unwrap();
+        }
+    }
+
+    #[test]
+    fn execution_only_plans_keep_the_identity_transform() {
+        let m = Arc::new(generate::lung2_like(&GenOptions::with_scale(0.03)));
+        let opts = RaceOptions {
+            solves: 1,
+            workers: 2,
+            ..Default::default()
+        };
+        let out = race(&m, &names(&["scheduled:64:2", "syncfree", "reorder"]), &opts).unwrap();
+        assert_eq!(out.lanes.len(), 3);
+        for lane in &out.lanes {
             let t = lane.transform.as_ref().expect("transform reclaimed");
             assert_eq!(t.stats.rows_rewritten, 0);
             t.validate(&m).unwrap();
@@ -232,7 +250,7 @@ mod tests {
         };
         let out = race(&m, &names(&["auto", "nonsense", "manual:5"]), &opts).unwrap();
         assert_eq!(out.lanes.len(), 1);
-        assert_eq!(out.lanes[0].strategy, "manual:5");
+        assert_eq!(out.lanes[0].plan, "manual:5");
         assert_eq!(out.lanes[0].levels_after, 12);
         assert!(race(&m, &names(&["auto", "nope"]), &opts).is_err());
     }

@@ -7,7 +7,7 @@ use std::time::Duration;
 use sptrsv_gt::config::Config;
 use sptrsv_gt::coordinator::{Lane, Service, SolveOptions};
 use sptrsv_gt::sparse::generate::{self, GenOptions};
-use sptrsv_gt::transform::StrategySpec;
+use sptrsv_gt::transform::PlanSpec;
 use sptrsv_gt::util::rng::Rng;
 
 #[test]
@@ -16,7 +16,7 @@ fn mixed_workload_end_to_end() {
     let use_xla = artifacts.join("manifest.json").exists();
     let svc = Service::start(Config {
         workers: 2,
-        strategy: StrategySpec::parse("avgcost").unwrap(),
+        plan: PlanSpec::parse("avgcost").unwrap(),
         use_xla,
         artifacts_dir: artifacts.to_str().unwrap().to_string(),
         batch_size: 8,
@@ -28,9 +28,9 @@ fn mixed_workload_end_to_end() {
     let lung = generate::lung2_like(&GenOptions::with_scale(0.02));
     let torso = generate::torso2_like(&GenOptions::with_scale(0.01));
     let tri = generate::tridiagonal(400, &Default::default());
-    h.register("lung", lung.clone(), StrategySpec::Default).unwrap();
-    h.register("torso", torso.clone(), StrategySpec::Default).unwrap();
-    h.register("tri", tri.clone(), StrategySpec::parse("manual:10").unwrap())
+    h.register("lung", lung.clone(), PlanSpec::Default).unwrap();
+    h.register("torso", torso.clone(), PlanSpec::Default).unwrap();
+    h.register("tri", tri.clone(), PlanSpec::parse("manual:10").unwrap())
         .unwrap();
 
     let mats: [(&str, &sptrsv_gt::sparse::Csr); 3] =

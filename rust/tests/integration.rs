@@ -4,7 +4,7 @@
 use sptrsv_gt::codegen::{self, CodegenOptions};
 use sptrsv_gt::config::Config;
 use sptrsv_gt::coordinator::{Service, SolveOptions};
-use sptrsv_gt::transform::StrategySpec;
+use sptrsv_gt::transform::PlanSpec;
 use sptrsv_gt::graph::{analyze::LevelStats, Levels};
 use sptrsv_gt::report::{figures, table1};
 use sptrsv_gt::solver::executor::TransformedSolver;
@@ -12,7 +12,7 @@ use sptrsv_gt::solver::levelset::LevelSetSolver;
 use sptrsv_gt::solver::syncfree::SyncFreeSolver;
 use sptrsv_gt::sparse::generate::{self, GenOptions};
 use sptrsv_gt::sparse::matrix_market;
-use sptrsv_gt::transform::Strategy;
+use sptrsv_gt::transform::{Rewrite, SolvePlan};
 use sptrsv_gt::util::prop::assert_allclose;
 use sptrsv_gt::util::rng::Rng;
 
@@ -67,7 +67,7 @@ fn solver_backends_agree() {
     assert_allclose(&x_level, &x_serial, 1e-12, 1e-14).unwrap();
     assert_allclose(&x_sync, &x_serial, 1e-12, 1e-14).unwrap();
     for strat in ["none", "avgcost", "manual:7"] {
-        let t = Strategy::parse(strat).unwrap().apply(&m);
+        let t = SolvePlan::parse(strat).unwrap().apply(&m);
         let s = TransformedSolver::from_parts(m.clone(), t, 3);
         let x = s.solve(&b);
         assert_allclose(&x, &x_serial, 1e-8, 1e-10)
@@ -100,10 +100,10 @@ fn fig3_codegen_variants() {
         bake_b: Some(b),
         ..Default::default()
     };
-    let g_none = codegen::generate(&m, &Strategy::None.apply(&m), &bake);
-    let t_avg = Strategy::parse("avgcost").unwrap().apply(&m);
+    let g_none = codegen::generate(&m, &Rewrite::None.apply(&m), &bake);
+    let t_avg = SolvePlan::parse("avgcost").unwrap().apply(&m);
     let g_avg = codegen::generate(&m, &t_avg, &bake);
-    let t_man = Strategy::parse("manual").unwrap().apply(&m);
+    let t_man = SolvePlan::parse("manual").unwrap().apply(&m);
     let g_man = codegen::generate(&m, &t_man, &bake);
     // Paper: code shrinks slightly for avgcost (fewer divisions/levels).
     assert!(g_avg.size_bytes < g_none.size_bytes);
@@ -139,7 +139,7 @@ fn coordinator_end_to_end_native() {
     let m = generate::torso2_like(&GenOptions::with_scale(0.01));
     let n = m.nrows;
     let info = h
-        .register("t2", m.clone(), StrategySpec::parse("avgcost").unwrap())
+        .register("t2", m.clone(), PlanSpec::parse("avgcost").unwrap())
         .unwrap();
     assert!(info.levels_after <= info.levels_before);
     let mut rng = Rng::new(3);
@@ -164,7 +164,7 @@ fn coordinator_end_to_end_native() {
 #[test]
 fn transform_stability_under_reapplication() {
     let m = generate::lung2_like(&GenOptions::with_scale(0.05));
-    let t1 = Strategy::parse("avgcost").unwrap().apply(&m);
+    let t1 = SolvePlan::parse("avgcost").unwrap().apply(&m);
     // The *structure* after transform has few thin levels left: applying
     // the same criterion to the new stats finds little to do.
     let st = LevelStats::from_row_costs(&t1.row_costs, &t1.levels);
@@ -183,7 +183,7 @@ fn transform_stability_under_reapplication() {
 fn identity_transform_levels_match_builder() {
     let m = generate::random_lower(500, 4, 0.8, &Default::default());
     let lv = Levels::build(&m);
-    let t = Strategy::None.apply(&m);
+    let t = Rewrite::None.apply(&m);
     assert_eq!(t.levels.len(), lv.num_levels());
     for (a, b) in t.levels.iter().zip(&lv.levels) {
         assert_eq!(a, b);

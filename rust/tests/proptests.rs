@@ -7,7 +7,7 @@ use sptrsv_gt::graph::{analyze::LevelStats, Dag, Levels};
 use sptrsv_gt::runtime::PaddedSystem;
 use sptrsv_gt::solver::executor::TransformedSolver;
 use sptrsv_gt::sparse::generate::{self, GenOptions};
-use sptrsv_gt::transform::Strategy;
+use sptrsv_gt::transform::{Rewrite, SolvePlan};
 use sptrsv_gt::util::prop::{assert_allclose, check};
 use sptrsv_gt::util::rng::Rng;
 
@@ -26,13 +26,38 @@ fn random_matrix(rng: &mut Rng, case: u64) -> sptrsv_gt::sparse::Csr {
     )
 }
 
-fn random_strategy(rng: &mut Rng) -> Strategy {
+fn random_rewrite(rng: &mut Rng) -> Rewrite {
     match rng.below(3) {
-        0 => Strategy::None,
-        1 => Strategy::AvgLevelCost(Default::default()),
-        _ => Strategy::Manual(sptrsv_gt::transform::manual::ManualOptions {
+        0 => Rewrite::None,
+        1 => Rewrite::AvgLevelCost(Default::default()),
+        _ => Rewrite::Manual(sptrsv_gt::transform::manual::ManualOptions {
             distance: 2 + rng.below(12),
         }),
+    }
+}
+
+/// A random valid plan string straight from the grammar (legacy single
+/// names and composed `rewrite+exec` forms alike).
+fn random_plan_text(rng: &mut Rng) -> String {
+    let rewrite = match rng.below(5) {
+        0 => "none".to_string(),
+        1 => "avgcost".to_string(),
+        2 => format!("manual:{}", 2 + rng.below(30)),
+        3 => format!("guarded:{}", 1 + rng.below(40)),
+        _ => format!("guarded:{}:{}", 1 + rng.below(40), 10u64.pow(rng.below(13) as u32)),
+    };
+    let exec = match rng.below(6) {
+        0 => "levelset".to_string(),
+        1 => "scheduled".to_string(),
+        2 => format!("scheduled:{}", 1 + rng.below(1000)),
+        3 => format!("scheduled:{}:{}", 1 + rng.below(1000), rng.below(16)),
+        4 => format!("scheduled::{}", rng.below(16)),
+        _ => ["syncfree", "reorder"][rng.below(2)].to_string(),
+    };
+    match rng.below(3) {
+        0 => rewrite,            // legacy rewrite name
+        1 => exec,               // legacy exec name
+        _ => format!("{rewrite}+{exec}"),
     }
 }
 
@@ -41,7 +66,7 @@ fn random_strategy(rng: &mut Rng) -> Strategy {
 fn prop_transform_levels_valid() {
     check("transform-levels-valid", 60, |rng, case| {
         let m = random_matrix(rng, case);
-        let t = random_strategy(rng).apply(&m);
+        let t = random_rewrite(rng).apply(&m);
         t.validate(&m)?;
         // Level-of and levels agree.
         for (l, rows) in t.levels.iter().enumerate() {
@@ -64,7 +89,7 @@ fn prop_transform_levels_valid() {
 fn prop_transform_preserves_solution() {
     check("transform-preserves-solution", 40, |rng, case| {
         let m = random_matrix(rng, case);
-        let t = random_strategy(rng).apply(&m);
+        let t = random_rewrite(rng).apply(&m);
         let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-3.0, 3.0)).collect();
         let x_ref = sptrsv_gt::solver::serial::solve(&m, &b);
         let s = TransformedSolver::from_parts(m, t, 1 + rng.below(4));
@@ -78,7 +103,7 @@ fn prop_transform_preserves_solution() {
 fn prop_cost_bookkeeping() {
     check("cost-bookkeeping", 60, |rng, case| {
         let m = random_matrix(rng, case);
-        let t = random_strategy(rng).apply(&m);
+        let t = random_rewrite(rng).apply(&m);
         let st = LevelStats::from_row_costs(&t.row_costs, &t.levels);
         if st.total_cost != t.stats.total_level_cost_after {
             return Err(format!(
@@ -130,7 +155,7 @@ fn prop_levels_equal_critical_depth() {
 fn prop_padded_layout_correct() {
     check("padded-layout", 30, |rng, case| {
         let m = random_matrix(rng, case);
-        let t = random_strategy(rng).apply(&m);
+        let t = random_rewrite(rng).apply(&m);
         let mut shape = PaddedSystem::requirements(&m, &t);
         shape.l += rng.below(4);
         shape.r += rng.below(8);
@@ -248,6 +273,72 @@ fn prop_substitution_order_independent() {
     });
 }
 
+/// Plan grammar: `parse -> display -> parse` is the identity, for every
+/// string the grammar can produce. (Display emits the canonical two-axis
+/// form, so one extra display round verifies canonicalization is a fixed
+/// point.)
+#[test]
+fn prop_plan_grammar_roundtrip() {
+    check("plan-grammar-roundtrip", 400, |rng, _| {
+        let text = random_plan_text(rng);
+        let plan = SolvePlan::parse(&text).map_err(|e| format!("{text}: {e}"))?;
+        let canonical = plan.to_string();
+        let reparsed =
+            SolvePlan::parse(&canonical).map_err(|e| format!("display '{canonical}': {e}"))?;
+        if reparsed != plan {
+            return Err(format!("'{text}' -> '{canonical}' reparsed differently"));
+        }
+        if reparsed.to_string() != canonical {
+            return Err(format!("display of '{canonical}' not a fixed point"));
+        }
+        Ok(())
+    });
+}
+
+/// Every composed (rewrite, exec) pair solves to the serial solution on
+/// the paper-shaped and chain-shaped generators — the acceptance matrix
+/// of the solve-plan redesign.
+#[test]
+fn prop_composed_pairs_match_serial() {
+    use sptrsv_gt::solver::ExecSolver;
+    use std::sync::Arc;
+
+    let rewrites = ["none", "avgcost", "manual:6", "guarded:5"];
+    let execs = ["levelset", "scheduled:64:2", "syncfree", "reorder"];
+    let mut rng = Rng::new(0xC0_FFEE);
+    for (gi, m) in [
+        generate::lung2_like(&GenOptions::with_scale(0.04)),
+        generate::tridiagonal(150, &Default::default()),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        let x_ref = sptrsv_gt::solver::serial::solve(&m, &b);
+        let ma = Arc::new(m);
+        let pool = Arc::new(sptrsv_gt::solver::pool::Pool::new(3));
+        for rw in rewrites {
+            for ex in execs {
+                let name = format!("{rw}+{ex}");
+                let plan = SolvePlan::parse(&name).unwrap();
+                let t = plan.apply(&ma);
+                t.validate(&ma).unwrap_or_else(|e| panic!("{name}: {e}"));
+                let s = ExecSolver::build(
+                    Arc::clone(&ma),
+                    Arc::new(t),
+                    &plan.exec,
+                    Arc::clone(&pool),
+                    Default::default(),
+                )
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+                let x = s.solve(&b);
+                assert_allclose(&x, &x_ref, 1e-9, 1e-11)
+                    .unwrap_or_else(|e| panic!("generator {gi}, {name}: {e}"));
+            }
+        }
+    }
+}
+
 /// Scheduler: elastic execution of a coarsened schedule matches the
 /// serial solver on arbitrary lower-triangular matrices, across worker
 /// counts, block targets and staleness windows — including the
@@ -274,7 +365,7 @@ fn prop_scheduled_matches_serial() {
                 m.data[d] = 1.0;
             }
         }
-        let t = random_strategy(rng).apply(&m);
+        let t = random_rewrite(rng).apply(&m);
         let opts = SchedOptions {
             block_target: Some(1 + rng.below(300)),
             stale_window: Some(rng.below(9)),
@@ -304,7 +395,7 @@ fn prop_schedule_construction_deterministic() {
 
     check("schedule-deterministic", 40, |rng, case| {
         let m = random_matrix(rng, case);
-        let t = random_strategy(rng).apply(&m);
+        let t = random_rewrite(rng).apply(&m);
         let workers = 1 + rng.below(6);
         let target = 1 + rng.below(400);
         let a = Schedule::build(&m, &t, workers, target);

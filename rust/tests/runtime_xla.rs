@@ -7,7 +7,7 @@ use std::sync::Arc;
 
 use sptrsv_gt::runtime::{PaddedSystem, Registry, XlaSolver};
 use sptrsv_gt::sparse::generate::{self, GenOptions};
-use sptrsv_gt::transform::Strategy;
+use sptrsv_gt::transform::SolvePlan;
 use sptrsv_gt::util::prop::assert_allclose;
 use sptrsv_gt::util::rng::Rng;
 
@@ -29,7 +29,7 @@ fn xla_solve_matches_serial_transformed() {
         ("tridiagonal", generate::tridiagonal(500, &Default::default())),
     ] {
         for strat in ["none", "avgcost"] {
-            let t = Strategy::parse(strat).unwrap().apply(&m);
+            let t = SolvePlan::parse(strat).unwrap().apply(&m);
             let req = PaddedSystem::requirements(&m, &t);
             let Some(meta) = reg.best_fit("solve", &req) else {
                 eprintln!("skip {name}/{strat}: no fit for {req:?}");
@@ -51,7 +51,7 @@ fn xla_batched_solve() {
     let Some(reg) = registry() else { return };
     let solver = XlaSolver::new(Arc::clone(&reg));
     let m = generate::lung2_like(&GenOptions::with_scale(0.02));
-    let t = Strategy::parse("avgcost").unwrap().apply(&m);
+    let t = SolvePlan::parse("avgcost").unwrap().apply(&m);
     // The batched artifact is exact-shape; fit against the batch entry.
     let req = PaddedSystem::requirements(&m, &t);
     let meta = reg
@@ -78,7 +78,7 @@ fn xla_residual_graph() {
     let Some(reg) = registry() else { return };
     let solver = XlaSolver::new(Arc::clone(&reg));
     let m = generate::lung2_like(&GenOptions::with_scale(0.02));
-    let t = Strategy::parse("avgcost").unwrap().apply(&m);
+    let t = SolvePlan::parse("avgcost").unwrap().apply(&m);
     let meta = reg
         .metas
         .iter()
@@ -115,7 +115,7 @@ fn coordinator_uses_xla_backend() {
     let h = svc.handle();
     let m = generate::lung2_like(&GenOptions::with_scale(0.02));
     let info = h
-        .register("lung", m.clone(), sptrsv_gt::transform::StrategySpec::Default)
+        .register("lung", m.clone(), sptrsv_gt::transform::PlanSpec::Default)
         .unwrap();
     assert_eq!(info.backend, "xla");
     let b = vec![1.0; m.nrows];

@@ -1,13 +1,13 @@
-//! Integration tests for the strategy-portfolio autotuner: fingerprint
+//! Integration tests for the plan-portfolio autotuner: fingerprint
 //! stability, plan-cache behaviour (memory and disk), cost-model /
-//! measured-ordering agreement, and the `auto` strategy end-to-end
-//! through the coordinator.
+//! measured-ordering agreement over the rewrite × exec cross product,
+//! and `auto` end-to-end through the coordinator.
 
 use sptrsv_gt::config::Config;
 use sptrsv_gt::coordinator::Service;
 use sptrsv_gt::sparse::generate::{self, GenOptions};
 use sptrsv_gt::sparse::Csr;
-use sptrsv_gt::transform::{Strategy, StrategySpec};
+use sptrsv_gt::transform::{Exec, PlanSpec, Rewrite, SolvePlan};
 use sptrsv_gt::tuner::cost_model::{plan_cost, CostModel};
 use sptrsv_gt::tuner::{Fingerprint, MatrixFeatures, PlanSource, Tuner, TunerOptions};
 use sptrsv_gt::util::rng::Rng;
@@ -54,7 +54,7 @@ fn cache_hit_returns_identical_plan() {
     let p2 = tuner.choose(&m2).unwrap();
     assert_eq!(p2.source, PlanSource::CacheHit);
     assert_eq!(p2.fingerprint, p1.fingerprint);
-    assert_eq!(p2.strategy_name, p1.strategy_name);
+    assert_eq!(p2.plan_name, p1.plan_name);
     // Identical plan shape: same level partition sizes.
     assert_eq!(p2.transform.num_levels(), p1.transform.num_levels());
     let widths1: Vec<usize> = p1.transform.levels.iter().map(Vec::len).collect();
@@ -80,7 +80,7 @@ fn plan_cache_survives_restart_via_disk_spill() {
         });
         let p = tuner.choose(&m).unwrap();
         assert_eq!(p.source, PlanSource::Raced);
-        p.strategy_name
+        p.plan_name
     };
     // A fresh tuner (fresh process, same cache file) skips the race.
     let mut tuner2 = Tuner::new(TunerOptions {
@@ -89,8 +89,9 @@ fn plan_cache_survives_restart_via_disk_spill() {
     });
     let p = tuner2.choose(&m).unwrap();
     assert_eq!(p.source, PlanSource::CacheHit);
-    assert_eq!(p.strategy_name, chosen);
+    assert_eq!(p.plan_name, chosen);
     std::fs::remove_file(&path).ok();
+    std::fs::remove_file(sptrsv_gt::tuner::calibration::path_for(&path)).ok();
 }
 
 /// The cost model predicts from features alone (before any transform
@@ -118,7 +119,7 @@ fn cost_model_ranking_agrees_with_measured_ordering() {
         let actual: Vec<f64> = candidates
             .iter()
             .map(|s| {
-                let t = Strategy::parse(s).unwrap().apply(m);
+                let t = SolvePlan::parse(s).unwrap().apply(m);
                 plan_cost(
                     t.stats.levels_after,
                     t.stats.total_level_cost_after as f64,
@@ -156,7 +157,7 @@ fn auto_strategy_end_to_end_through_service() {
     let svc = Service::start(Config {
         workers: 2,
         // config default, no per-register override
-        strategy: StrategySpec::parse("auto").unwrap(),
+        plan: PlanSpec::parse("auto").unwrap(),
         use_xla: false,
         batch_size: 4,
         batch_deadline_us: 200,
@@ -167,14 +168,16 @@ fn auto_strategy_end_to_end_through_service() {
     let tri = generate::tridiagonal(300, &Default::default());
     let n = lung.nrows;
 
-    let i1 = h.register("lung", lung.clone(), StrategySpec::Default).unwrap();
+    let i1 = h.register("lung", lung.clone(), PlanSpec::Default).unwrap();
     assert_eq!(i1.tuner_cache_hit, Some(false));
+    // The decision crossing the service boundary is a parseable plan.
+    SolvePlan::parse(&i1.plan).unwrap();
     let i2 = h
-        .register("lung-again", lung.clone(), StrategySpec::Default)
+        .register("lung-again", lung.clone(), PlanSpec::Default)
         .unwrap();
     assert_eq!(i2.tuner_cache_hit, Some(true));
-    assert_eq!(i2.strategy, i1.strategy);
-    let i3 = h.register("tri", tri.clone(), StrategySpec::Default).unwrap();
+    assert_eq!(i2.plan, i1.plan);
+    let i3 = h.register("tri", tri.clone(), PlanSpec::Default).unwrap();
     assert_eq!(i3.tuner_cache_hit, Some(false));
 
     let mut rng = Rng::new(17);
@@ -190,7 +193,7 @@ fn auto_strategy_end_to_end_through_service() {
     let snap = h.metrics().unwrap();
     assert_eq!(snap.tuner_cache_hits, 1);
     assert_eq!(snap.tuner_cache_misses, 2);
-    let total_wins: u64 = snap.strategy_wins.iter().map(|(_, n)| n).sum();
+    let total_wins: u64 = snap.plan_wins.iter().map(|(_, n)| n).sum();
     assert_eq!(total_wins, 3);
     assert!(snap.to_string().contains("tuner cache hit/miss=1/2"));
     svc.shutdown();
@@ -226,26 +229,32 @@ fn auto_plans_solve_correctly_on_random_structures() {
 }
 
 #[test]
-fn widened_portfolio_races_execution_strategies() {
+fn cross_product_portfolio_prices_every_pair() {
     use std::sync::Arc;
 
     let m = generate::tridiagonal(300, &Default::default());
     let mut tuner = Tuner::new(quick_opts());
     let p = tuner.choose(&m).unwrap();
     let names: Vec<&str> = p.predictions.iter().map(|(s, _)| s.as_str()).collect();
-    for s in ["scheduled", "syncfree", "reorder"] {
+    // All 16 cross-product members are priced (none dropped as unknown).
+    assert_eq!(names.len(), 16, "{names:?}");
+    for s in ["none+scheduled", "avgcost+syncfree", "guarded:20+reorder"] {
         assert!(names.contains(&s), "{s} missing from {names:?}");
     }
     // A pure serial chain is the coarsened schedule's home game: the
-    // schedule-aware cost model must rank it first (chains collapse into
-    // blocks with no barriers and no cross-worker waits).
-    assert_eq!(names[0], "scheduled");
+    // composed cost model must rank a scheduled plan first (chains
+    // collapse into blocks with no barriers and no cross-worker waits).
+    assert!(
+        names[0].ends_with("+scheduled"),
+        "expected a scheduled plan first, got {}",
+        names[0]
+    );
     // Whatever the race measured fastest, the tuned plan must solve
-    // correctly on the backend its strategy calls for.
+    // correctly on the backend its exec axis calls for.
     let solver = sptrsv_gt::solver::ExecSolver::build(
         Arc::new(m.clone()),
         Arc::new(p.transform),
-        &p.strategy,
+        &p.plan.exec,
         Arc::new(sptrsv_gt::solver::pool::Pool::new(2)),
         Default::default(),
     )
@@ -253,4 +262,45 @@ fn widened_portfolio_races_execution_strategies() {
     let b = vec![1.0; 300];
     let x = solver.solve(&b);
     assert!(m.residual_inf(&x, &b) < 1e-9);
+}
+
+/// Acceptance: the race over a (pruned) cross product returns a composed
+/// plan when one wins on a thin-level matrix, and the winner solves
+/// correctly on its composed backend.
+#[test]
+fn race_returns_a_composed_plan_when_one_wins() {
+    use std::sync::Arc;
+
+    let m = generate::lung2_like(&GenOptions::with_scale(0.03));
+    // A candidate set where every lane is composed: whichever wins, the
+    // tuner must hand back a two-axis plan (rewrite != none AND a
+    // non-levelset backend) — unreachable through the old fused enum.
+    let mut tuner = Tuner::new(TunerOptions {
+        candidates: vec![
+            "avgcost+scheduled".to_string(),
+            "avgcost+syncfree".to_string(),
+        ],
+        top_k: 2,
+        race_solves: 1,
+        workers: 2,
+        ..Default::default()
+    });
+    let p = tuner.choose(&m).unwrap();
+    assert_eq!(p.source, PlanSource::Raced);
+    assert!(matches!(p.plan.rewrite, Rewrite::AvgLevelCost(_)));
+    assert!(matches!(p.plan.exec, Exec::Scheduled(_) | Exec::Syncfree));
+    assert!(p.transform.stats.rows_rewritten > 0, "rewrite axis ran");
+    let solver = sptrsv_gt::solver::ExecSolver::build(
+        Arc::new(m.clone()),
+        Arc::new(p.transform),
+        &p.plan.exec,
+        Arc::new(sptrsv_gt::solver::pool::Pool::new(2)),
+        Default::default(),
+    )
+    .unwrap();
+    let mut rng = Rng::new(42);
+    let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let x = solver.solve(&b);
+    let x_ref = sptrsv_gt::solver::serial::solve(&m, &b);
+    sptrsv_gt::util::prop::assert_allclose(&x, &x_ref, 1e-9, 1e-11).unwrap();
 }
