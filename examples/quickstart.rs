@@ -1,12 +1,14 @@
-//! Quickstart: generate a matrix, inspect its level structure, transform
-//! it with the paper's avgLevelCost strategy, and solve.
+//! Quickstart: the two-phase lifecycle. Generate a matrix, **analyze**
+//! it once (plan resolution + rewrite + schedule), solve many times,
+//! then **refresh** the numeric values in place — the structural work is
+//! never repeated.
 //!
 //!     cargo run --release --example quickstart
 
+use sptrsv_gt::analysis::{analyze, AnalyzeOptions};
 use sptrsv_gt::graph::{analyze::LevelStats, Levels};
-use sptrsv_gt::solver::executor::TransformedSolver;
 use sptrsv_gt::sparse::generate::{self, GenOptions};
-use sptrsv_gt::transform::SolvePlan;
+use sptrsv_gt::transform::PlanSpec;
 use sptrsv_gt::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -24,30 +26,53 @@ fn main() -> anyhow::Result<()> {
         st.avg_level_cost
     );
 
-    // 2. Transform: rewrite thin levels upward until targets reach the
-    //    average level cost (the paper's naive automatic strategy).
-    let strategy = SolvePlan::parse("avgcost").map_err(anyhow::Error::msg)?;
-    let t = strategy.apply(&m);
+    // 2. Analyze ONCE: the paper's avgLevelCost rewrite composed with
+    //    the coarsened static schedule, packaged as a reusable artifact.
+    let spec = PlanSpec::parse("avgcost+scheduled").map_err(anyhow::Error::msg)?;
+    let mut a = analyze(&m, &spec, &AnalyzeOptions::default())?;
+    let ts = &a.transform().stats;
     println!(
-        "transformed: {} -> {} levels ({:.0}% fewer barriers), {} rows rewritten ({:.1}%), total cost {:+.2}%",
-        t.stats.levels_before,
-        t.stats.levels_after,
-        t.stats.levels_reduction_pct(),
-        t.stats.rows_rewritten,
-        t.stats.rows_rewritten_pct(),
-        t.stats.total_cost_change_pct(),
+        "analyzed ({}): {} -> {} levels ({:.0}% fewer barriers), {} rows rewritten ({:.1}%)",
+        a.plan_name(),
+        ts.levels_before,
+        ts.levels_after,
+        ts.levels_reduction_pct(),
+        ts.rows_rewritten,
+        ts.rows_rewritten_pct(),
     );
+    if let Some(s) = a.schedule() {
+        println!(
+            "schedule: {} blocks, {} cross-worker edges vs {} barriers",
+            s.stats.num_blocks, s.stats.cut_edges, s.stats.levelset_barriers
+        );
+    }
 
-    // 3. Solve with the level-parallel executor and verify the residual
-    //    against the ORIGINAL system.
+    // 3. Solve many: the analysis is reusable across right-hand sides,
+    //    and residuals are checked against the ORIGINAL system.
     let mut rng = Rng::new(42);
     let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
-    let solver = TransformedSolver::from_parts(m.clone(), t, 4);
-    let x = solver.solve(&b);
+    let x = a.solve(&b);
+    println!("solved: ||Lx-b||_inf = {:.3e}", m.residual_inf(&x, &b));
+
+    // 4. Refresh values (same sparsity pattern — a new factorization):
+    //    only the numerics are replayed; the rewrite decisions, levels
+    //    and schedule are reused untouched.
+    let mut m2 = m.clone();
+    for v in &mut m2.data {
+        *v *= 1.1;
+    }
+    let before = a.rebuilds();
+    a.refresh_values(&m2)?;
+    let after = a.rebuilds();
+    let x2 = a.solve(&b);
     println!(
-        "solved: ||Lx-b||_inf = {:.3e} across {} barriers",
-        m.residual_inf(&x, &b),
-        solver.num_barriers()
+        "refreshed values: ||L'x-b||_inf = {:.3e} (coarsening passes {} -> {}, \
+         placement {} -> {}: structural work never re-ran)",
+        m2.residual_inf(&x2, &b),
+        before.coarsen_passes,
+        after.coarsen_passes,
+        before.placement_passes,
+        after.placement_passes,
     );
     Ok(())
 }

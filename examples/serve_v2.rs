@@ -9,17 +9,21 @@
 //! typed failures (`ServiceError`), async `SolveTicket`s (`wait` /
 //! `wait_timeout` / `try_get` / `cancel` — cancel wakes the service so
 //! queue capacity frees immediately), per-request `SolveOptions`
-//! (deadline + lane priority), multi-RHS blocks (`solve_many`), and
-//! `max_pending` admission control — finishing with the metrics snapshot
-//! where the rejections, cancellations, cancel wakeups and deadline
-//! misses are all visible.
+//! (deadline + lane priority), multi-RHS blocks (`solve_many`),
+//! registration returning a `MatrixHandle` over the service-side shared
+//! analysis (with `update_values` refreshing numerics in place behind
+//! the batcher), per-matrix `max_pending` overrides via
+//! `RegisterOptions`, and global admission control — finishing with the
+//! metrics snapshot where the rejections (global and per-matrix),
+//! cancellations, cancel wakeups, deadline misses and value refreshes
+//! are all visible.
 //!
 //!     cargo run --release --example serve_v2
 
 use std::time::Duration;
 
 use sptrsv_gt::config::Config;
-use sptrsv_gt::coordinator::{Service, SolveOptions};
+use sptrsv_gt::coordinator::{RegisterOptions, Service, SolveOptions};
 use sptrsv_gt::error::ServiceError;
 use sptrsv_gt::sparse::generate::{self, GenOptions};
 use sptrsv_gt::transform::PlanSpec;
@@ -43,32 +47,56 @@ fn main() -> anyhow::Result<()> {
     let h = svc.handle();
 
     // Registration: the plan was parsed above, at the edge — a typo
-    // would have failed there, not inside the service thread.
+    // would have failed there, not inside the service thread. The
+    // returned MatrixHandle is the per-matrix surface (it derefs to the
+    // RegisterInfo snapshot for the summary fields).
     let m = generate::lung2_like(&GenOptions::with_scale(0.03));
     let n = m.nrows;
-    let info = h.register("lung2", m.clone(), PlanSpec::Default)?;
+    let lung2 = h.register("lung2", m.clone(), PlanSpec::Default)?;
     println!(
         "registered: plan={} (tuner cache hit: {:?}), levels {} -> {}, backend={}",
-        info.plan, info.tuner_cache_hit, info.levels_before, info.levels_after,
-        info.backend
+        lung2.plan, lung2.tuner_cache_hit, lung2.levels_before, lung2.levels_after,
+        lung2.backend
     );
 
-    // A second matrix pinned to an explicitly composed plan: the manual
+    // A second matrix pinned to an explicitly composed plan AND a
+    // per-matrix admission cap (RegisterOptions): the manual
     // fixed-distance rewrite consumed by the static scheduler (avgcost
-    // would be a no-op here — a uniform chain has no cost-thin levels).
+    // would be a no-op here — a uniform chain has no cost-thin levels),
+    // and at most 64 queued right-hand sides for this id regardless of
+    // the roomier global max_pending.
     let tri = generate::tridiagonal(2_000, &Default::default());
-    let info2 = h.register(
+    let tri_handle = h.register_with(
         "tri",
         tri.clone(),
-        PlanSpec::parse("manual:10+scheduled").map_err(anyhow::Error::msg)?,
+        RegisterOptions::new()
+            .plan(PlanSpec::parse("manual:10+scheduled").map_err(anyhow::Error::msg)?)
+            .max_pending(64),
     )?;
     println!(
-        "registered: plan={} (composed), levels {} -> {}",
-        info2.plan, info2.levels_before, info2.levels_after
+        "registered: plan={} (composed, per-matrix max_pending=64), levels {} -> {}",
+        tri_handle.plan, tri_handle.levels_before, tri_handle.levels_after
     );
     let bt = vec![1.0; tri.nrows];
-    let xt = h.solve("tri", bt.clone())?;
+    let xt = tri_handle.solve(bt.clone())?;
     anyhow::ensure!(tri.residual_inf(&xt, &bt) < 1e-8);
+
+    // A same-pattern value refresh (new factorization, same sparsity):
+    // the analysis keeps its rewrite decisions and schedule — only the
+    // numerics are replayed — and every clone of the handle sees the new
+    // values once queued work has drained against the old ones.
+    let mut tri2 = tri.clone();
+    for v in &mut tri2.data {
+        *v *= 1.5;
+    }
+    let refreshed = tri_handle.update_values(tri2.clone())?;
+    let xt2 = tri_handle.solve(bt.clone())?;
+    anyhow::ensure!(tri2.residual_inf(&xt2, &bt) < 1e-8);
+    println!(
+        "refreshed tri values in {:.2}ms (source={})",
+        refreshed.prepare_ms,
+        refreshed.source.as_str()
+    );
 
     let mut rng = Rng::new(0x5EED);
     let mut rhs = || -> Vec<f64> { (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect() };

@@ -1,0 +1,126 @@
+//! Bench: the analyze/execute split's amortization story — what one
+//! full analysis costs versus the reuse paths that replace it:
+//!
+//! * `analyze`        — the one-time structural cost (rewrite +
+//!   coarsening + placement + backend build)
+//! * `refresh_values` — the same-pattern value-update path (numeric
+//!   replay only; the dominant scenario in preconditioned iterative
+//!   solves)
+//! * `load`           — restoring a persisted analysis from disk
+//! * `solve`          — one execution, for scale
+//!
+//!     cargo bench --bench analysis
+//!     SPTRSV_ANALYSIS_SMOKE=1 cargo bench --bench analysis   # CI: tiny, no gate
+//!
+//! Full mode enforces the acceptance shape: `refresh_values` must not
+//! re-pay the structural passes (counter-asserted, always) and must be
+//! cheaper than a from-scratch `analyze` on the scheduled plans, where
+//! skipping coarsening + placement is the whole point (generous slack
+//! for timer noise; smoke mode reports timings without gating).
+
+use std::time::Instant;
+
+use sptrsv_gt::analysis::{analyze, Analysis, AnalyzeOptions};
+use sptrsv_gt::sparse::generate::{self, GenOptions};
+use sptrsv_gt::transform::PlanSpec;
+use sptrsv_gt::util::rng::Rng;
+
+fn main() {
+    let smoke = std::env::var("SPTRSV_ANALYSIS_SMOKE").is_ok_and(|v| v != "0");
+    let scale: f64 = std::env::var("SPTRSV_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if smoke { 0.03 } else { 0.2 });
+    let workers: usize = std::env::var("SPTRSV_BENCH_WORKERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let opts = AnalyzeOptions {
+        workers,
+        ..Default::default()
+    };
+    println!("analysis amortization (scale {scale}, {workers} workers, smoke={smoke})");
+    println!(
+        "{:<28} {:>12} {:>12} {:>12} {:>12}",
+        "matrix/plan", "analyze ms", "refresh ms", "load ms", "solve us"
+    );
+
+    let mats = [
+        ("lung2-like", generate::lung2_like(&GenOptions::with_scale(scale))),
+        (
+            "tridiagonal",
+            generate::tridiagonal(if smoke { 2_000 } else { 40_000 }, &Default::default()),
+        ),
+    ];
+    let mut failures = Vec::new();
+    for (mname, m) in &mats {
+        for plan in ["avgcost+levelset", "avgcost+scheduled", "manual:10+scheduled"] {
+            let spec = PlanSpec::parse(plan).unwrap();
+
+            let t0 = Instant::now();
+            let mut a = analyze(m, &spec, &opts).unwrap();
+            let analyze_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+            // Same-pattern value perturbation -> refresh.
+            let mut m2 = m.clone();
+            let mut rng = Rng::new(7);
+            for v in &mut m2.data {
+                *v *= 1.0 + 0.05 * rng.uniform(-1.0, 1.0);
+            }
+            let before = a.rebuilds();
+            let t0 = Instant::now();
+            a.refresh_values(&m2).unwrap();
+            let refresh_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let after = a.rebuilds();
+            assert_eq!(after.coarsen_passes, before.coarsen_passes, "{mname}/{plan}");
+            assert_eq!(after.placement_passes, before.placement_passes, "{mname}/{plan}");
+            assert_eq!(after.rewrite_passes, before.rewrite_passes, "{mname}/{plan}");
+
+            // Persist + reload.
+            let path = std::env::temp_dir().join(format!(
+                "sptrsv_bench_analysis_{}.json",
+                std::process::id()
+            ));
+            a.save(&path).unwrap();
+            let t0 = Instant::now();
+            let loaded = Analysis::load(&path, &m2, &opts).unwrap();
+            let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+            std::fs::remove_file(&path).ok();
+            assert_eq!(loaded.rebuilds().coarsen_passes, 0, "{mname}/{plan}");
+            assert_eq!(loaded.rebuilds().placement_passes, 0, "{mname}/{plan}");
+
+            let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let t0 = Instant::now();
+            let x = a.solve(&b);
+            let solve_us = t0.elapsed().as_secs_f64() * 1e6;
+            assert!(
+                m2.residual_inf(&x, &b) < 1e-8,
+                "{mname}/{plan}: refreshed solve inaccurate"
+            );
+
+            println!(
+                "{:<28} {:>12.2} {:>12.2} {:>12.2} {:>12.1}",
+                format!("{mname}/{plan}"),
+                analyze_ms,
+                refresh_ms,
+                load_ms,
+                solve_us
+            );
+            // Timing gate (full mode, scheduled plans only): the refresh
+            // must beat re-analyzing, with wide slack for timer noise.
+            if !smoke && plan.contains("scheduled") && refresh_ms > analyze_ms * 1.25 + 2.0 {
+                failures.push(format!(
+                    "{mname}/{plan}: refresh {refresh_ms:.2}ms vs analyze {analyze_ms:.2}ms"
+                ));
+            }
+        }
+    }
+    if failures.is_empty() {
+        println!("analysis bench OK");
+    } else {
+        for f in &failures {
+            eprintln!("FAIL: {f}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -101,7 +101,7 @@ fn main() {
         // the level-set executor).
         let auto_solver = sptrsv_gt::solver::ExecSolver::build(
             Arc::clone(&mc),
-            Arc::new(plan.transform),
+            Arc::clone(&plan.transform),
             &plan.plan.exec,
             Arc::clone(&pool),
             Default::default(),

@@ -1,0 +1,155 @@
+//! Directory-backed analysis cache: persisted analyses keyed by
+//! `(structural fingerprint, canonical plan)`, stored next to the tuner's
+//! plan cache so a service restart — or another replica sharing the
+//! volume — re-registers known structures without re-running rewrite
+//! analysis, coarsening or ETF placement.
+//!
+//! Filenames embed both key halves (`<fingerprint>.<plan>.analysis.json`
+//! with non-filename-safe plan characters mapped to `_`); since distinct
+//! plans can collide after sanitization, the load path re-verifies the
+//! plan string recorded *inside* the file before trusting it.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::error::Error;
+use crate::solver::pool::Pool;
+use crate::sparse::Csr;
+use crate::transform::SolvePlan;
+use crate::tuner::Fingerprint;
+
+use super::{persist, Analysis, AnalyzeOptions};
+use crate::sched::SchedOptions;
+
+pub struct AnalysisCache {
+    dir: PathBuf,
+}
+
+impl AnalysisCache {
+    pub fn new(dir: &Path) -> AnalysisCache {
+        AnalysisCache {
+            dir: dir.to_path_buf(),
+        }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Cache file for one `(fingerprint, plan)` key.
+    pub fn path_for(&self, fp: Fingerprint, plan: &SolvePlan) -> PathBuf {
+        let sanitized: String = plan
+            .to_string()
+            .chars()
+            .map(|c| {
+                if c.is_ascii_alphanumeric() || matches!(c, '+' | '-' | '.' | '_') {
+                    c
+                } else {
+                    '_'
+                }
+            })
+            .collect();
+        self.dir.join(format!("{fp}.{sanitized}.analysis.json"))
+    }
+
+    /// Try to restore a persisted analysis for `(m, plan)`, where `fp`
+    /// is `m`'s (caller-computed) structural fingerprint. Returns None
+    /// on any miss — absent file, schema/fingerprint mismatch, or a
+    /// sanitization collision where the file's recorded plan differs —
+    /// warning only when a present file is unusable.
+    pub fn load(
+        &self,
+        m: Arc<Csr>,
+        fp: Fingerprint,
+        plan: &SolvePlan,
+        pool: &Arc<Pool>,
+        sched: SchedOptions,
+    ) -> Option<Analysis> {
+        let path = self.path_for(fp, plan);
+        if !path.exists() {
+            return None;
+        }
+        let opts = AnalyzeOptions {
+            workers: pool.len(),
+            pool: Some(Arc::clone(pool)),
+            sched,
+        };
+        match persist::load(&path, m, &opts) {
+            Ok(a) if a.plan() == plan => Some(a),
+            Ok(a) => {
+                eprintln!(
+                    "warning: analysis cache {} holds plan {} (wanted {plan}); ignoring",
+                    path.display(),
+                    a.plan()
+                );
+                None
+            }
+            Err(e) => {
+                eprintln!(
+                    "warning: ignoring analysis cache {}: {e}",
+                    path.display()
+                );
+                None
+            }
+        }
+    }
+
+    /// Persist `a` under its `(fingerprint, plan)` key.
+    pub fn save(&self, a: &Analysis) -> Result<(), Error> {
+        persist::save(a, &self.path_for(a.fingerprint(), a.plan()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate::{self, GenOptions};
+    use crate::transform::PlanSpec;
+
+    #[test]
+    fn cache_roundtrip_and_miss_paths() {
+        let dir = std::env::temp_dir().join(format!("sptrsv_acache_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cache = AnalysisCache::new(&dir);
+        let pool = Arc::new(Pool::new(2));
+        let m = Arc::new(generate::lung2_like(&GenOptions::with_scale(0.03)));
+        let plan = SolvePlan::parse("avgcost+scheduled").unwrap();
+
+        let fp = Fingerprint::of(&m);
+        // Cold: miss.
+        assert!(cache
+            .load(Arc::clone(&m), fp, &plan, &pool, SchedOptions::default())
+            .is_none());
+
+        let a = super::super::analyze_arc(
+            Arc::clone(&m),
+            &PlanSpec::parse("avgcost+scheduled").unwrap(),
+            &super::super::AnalyzeOptions {
+                pool: Some(Arc::clone(&pool)),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        cache.save(&a).unwrap();
+
+        // Warm: the load pays zero coarsening/placement.
+        let warm = cache
+            .load(Arc::clone(&m), fp, &plan, &pool, SchedOptions::default())
+            .expect("cache hit");
+        assert_eq!(warm.rebuilds().coarsen_passes, 0);
+        assert_eq!(warm.rebuilds().placement_passes, 0);
+        let b = vec![1.0; m.nrows];
+        assert!(m.residual_inf(&warm.solve(&b), &b) < 1e-9);
+
+        // A different plan for the same structure is a distinct key.
+        let other = SolvePlan::parse("avgcost+syncfree").unwrap();
+        assert!(cache
+            .load(Arc::clone(&m), fp, &other, &pool, SchedOptions::default())
+            .is_none());
+        assert_ne!(
+            cache.path_for(a.fingerprint(), &plan),
+            cache.path_for(a.fingerprint(), &other)
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

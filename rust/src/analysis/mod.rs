@@ -1,0 +1,604 @@
+//! The first-class analysis artifact: the paper's one-time
+//! graph-transformation cost made **explicit, reusable and persistable**.
+//!
+//! Production SpTRSV APIs split an *analysis* phase (inspect the
+//! structure, build whatever the executor needs) from an *execution*
+//! phase precisely so the analysis cost amortizes over repeated solves
+//! (Li, cuSPARSE's `csrsv2_analysis`; Böhnlein et al. persist schedules
+//! across runs). This crate's pipeline used to fuse the two: every
+//! registration re-ran rewrite + coarsening + placement, and a numeric
+//! value update — the dominant scenario in preconditioned iterative
+//! solves, where the sparsity pattern is fixed across refactorizations —
+//! threw all structure-derived work away. An [`Analysis`] owns:
+//!
+//! * the resolved [`SolvePlan`] (and the label it was requested under),
+//! * the applied [`TransformResult`] (the rewrite axis's output),
+//! * the built [`Schedule`] when the exec axis is `scheduled`,
+//! * the structural [`Fingerprint`] guarding same-pattern reuse,
+//! * the ready-to-run [`ExecSolver`].
+//!
+//! Lifecycle:
+//!
+//! * [`analyze`] — pay the full analysis once (tuner consulted for
+//!   `auto`; its race donates the winning lane's already-built transform
+//!   and backend instead of discarding them).
+//! * [`Analysis::solve`] / [`Analysis::solve_many`] — execute, any
+//!   number of times.
+//! * [`Analysis::refresh_values`] — same-pattern value update: verifies
+//!   the fingerprint, re-derives the folded equations by the
+//!   [`renumeric`] replay and rebuilds the numeric solver **without**
+//!   re-running rewrite analysis, coarsening or ETF placement (the
+//!   [`BuildCounters`] expose exactly which passes ran).
+//! * [`Analysis::save`] / [`Analysis::load`] — schema-stamped
+//!   persistence of the structural artifacts (plan + transform skeleton +
+//!   schedule); loading re-numerics against the given matrix, so a known
+//!   structure skips coarsening and placement entirely — even across
+//!   processes.
+
+pub mod cache;
+pub mod persist;
+pub mod renumeric;
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::error::Error;
+use crate::sched::{SchedOptions, Schedule, ScheduledSolver};
+use crate::solver::dispatch::ExecSolver;
+use crate::solver::pool::Pool;
+use crate::sparse::Csr;
+use crate::transform::{Exec, PlanSpec, ResolvedPlan, Rewrite, SolvePlan, TransformResult};
+use crate::tuner::{Fingerprint, TunedPlan, Tuner, TunerOptions};
+
+pub use cache::AnalysisCache;
+pub use renumeric::StructuralTransform;
+
+/// Knobs for [`analyze`]: the parallel substrate and the scheduling
+/// fallbacks. Callers embedded in the coordinator pass the serving pool
+/// and config defaults; standalone callers can rely on the defaults.
+#[derive(Debug, Clone, Default)]
+pub struct AnalyzeOptions {
+    /// worker threads when no pool is lent (0 = one per available core,
+    /// capped at 8 — the tuner's convention)
+    pub workers: usize,
+    /// run on this shared pool instead of spawning one
+    pub pool: Option<Arc<Pool>>,
+    /// fallback scheduling knobs for plans that leave them unset
+    pub sched: SchedOptions,
+}
+
+impl AnalyzeOptions {
+    fn resolve_pool(&self) -> Arc<Pool> {
+        match &self.pool {
+            Some(p) => Arc::clone(p),
+            None => {
+                let w = if self.workers > 0 {
+                    self.workers
+                } else {
+                    std::thread::available_parallelism()
+                        .map(|n| n.get())
+                        .unwrap_or(4)
+                        .min(8)
+                };
+                Arc::new(Pool::new(w))
+            }
+        }
+    }
+}
+
+/// How many structural passes an [`Analysis`] has paid for, cumulatively.
+/// `refresh_values` must leave `rewrite`/`coarsen`/`placement` flat (it
+/// only bumps `renumeric`), and an analysis loaded from disk starts with
+/// zero coarsening and placement — these counters are the proof.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BuildCounters {
+    /// full rewrite-analysis passes (costMap projection + commits)
+    pub rewrite_passes: u64,
+    /// chain-collapsing / level-grouping coarsening passes
+    pub coarsen_passes: u64,
+    /// greedy ETF block-placement passes
+    pub placement_passes: u64,
+    /// value-only numeric replays ([`renumeric`])
+    pub renumeric_passes: u64,
+}
+
+impl std::ops::Add for BuildCounters {
+    type Output = BuildCounters;
+
+    fn add(self, o: BuildCounters) -> BuildCounters {
+        BuildCounters {
+            rewrite_passes: self.rewrite_passes + o.rewrite_passes,
+            coarsen_passes: self.coarsen_passes + o.coarsen_passes,
+            placement_passes: self.placement_passes + o.placement_passes,
+            renumeric_passes: self.renumeric_passes + o.renumeric_passes,
+        }
+    }
+}
+
+/// A fully prepared `(matrix, plan)` ready to solve — see the module docs
+/// for the lifecycle.
+pub struct Analysis {
+    m: Arc<Csr>,
+    plan: SolvePlan,
+    plan_name: String,
+    fingerprint: Fingerprint,
+    t: Arc<TransformResult>,
+    /// the static schedule, when the exec axis is `scheduled` (shared
+    /// with the solver; survives value refreshes untouched)
+    schedule: Option<Arc<Schedule>>,
+    solver: ExecSolver,
+    pool: Arc<Pool>,
+    sched: SchedOptions,
+    counters: BuildCounters,
+    prepare_time: Duration,
+}
+
+/// A guarded rewrite caps the folded b-coefficient magnitude (the §IV
+/// numerical-stability guard). The structural *decisions* are value-free,
+/// but the cap is about the VALUES — so every value-only replay (a
+/// refresh, or a load against a new refactorization) must re-check it: a
+/// refactorization whose diagonals shrank can push the replayed folds
+/// past a cap a fresh analysis would have rejected. Violations demand a
+/// re-analysis, not a silently less-stable serve.
+pub(crate) fn check_guard_cap(plan: &SolvePlan, t: &TransformResult) -> Result<(), Error> {
+    if let Rewrite::AvgLevelCost(o) = &plan.rewrite {
+        if let Some(cap) = o.constraints.max_bcoeff_magnitude {
+            let got = t.stats.max_bcoeff_magnitude;
+            if got > cap {
+                return Err(Error::Invalid(format!(
+                    "value replay violates the guarded magnitude cap \
+                     (|b-coefficient| {got:.3e} > {cap:.3e}); the new values \
+                     need a fresh analysis"
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Run the analysis phase for `m` under `spec`. `auto` consults a tuner
+/// configured on the same pool and scheduling knobs; the race's winning
+/// lane donates its already-built transform and execution backend to the
+/// returned analysis instead of discarding them.
+pub fn analyze(m: &Csr, spec: &PlanSpec, opts: &AnalyzeOptions) -> Result<Analysis, Error> {
+    analyze_arc(Arc::new(m.clone()), spec, opts)
+}
+
+/// [`analyze`] without the defensive copy for callers already holding an
+/// `Arc<Csr>`.
+pub fn analyze_arc(
+    m: Arc<Csr>,
+    spec: &PlanSpec,
+    opts: &AnalyzeOptions,
+) -> Result<Analysis, Error> {
+    let start = Instant::now();
+    m.validate_lower_triangular()?;
+    let pool = opts.resolve_pool();
+    match spec.resolve(&PlanSpec::Default) {
+        ResolvedPlan::Auto => {
+            // Fully default options route through the lazily-initialized
+            // process-wide tuner: repeated `analyze(auto)` calls on the
+            // same structure answer from its plan cache instead of
+            // re-racing per call (its default worker count matches
+            // `resolve_pool`'s, so donated schedules always fit the
+            // pool). Custom pools/knobs get a dedicated tuner configured
+            // to match them exactly.
+            let default_opts =
+                opts.workers == 0 && opts.pool.is_none() && opts.sched == SchedOptions::default();
+            let tp = if default_opts {
+                crate::tuner::process_choose(&m)?
+            } else {
+                let mut tuner = Tuner::new(TunerOptions {
+                    workers: pool.len(),
+                    sched: opts.sched,
+                    pool: Some(Arc::clone(&pool)),
+                    ..Default::default()
+                });
+                tuner.choose_arc(&m)?
+            };
+            Analysis::from_tuned(m, tp, pool, opts.sched, start)
+        }
+        ResolvedPlan::Fixed(name, plan) => {
+            let fp = Fingerprint::of(&m);
+            Analysis::build(m, fp, name, plan, pool, opts.sched, start)
+        }
+    }
+}
+
+impl Analysis {
+    /// Full fresh build: apply the rewrite, build the schedule when the
+    /// plan calls for one, wrap the backend. The caller passes the
+    /// already-computed `fingerprint` — the O(nnz) structural hash is
+    /// paid once per registration, not once per layer.
+    pub(crate) fn build(
+        m: Arc<Csr>,
+        fingerprint: Fingerprint,
+        plan_name: String,
+        plan: SolvePlan,
+        pool: Arc<Pool>,
+        sched: SchedOptions,
+        start: Instant,
+    ) -> Result<Analysis, Error> {
+        let t = Arc::new(plan.apply(&m));
+        t.validate(&m).map_err(Error::Invalid)?;
+        let mut counters = BuildCounters {
+            rewrite_passes: u64::from(plan.rewrite != Rewrite::None),
+            ..Default::default()
+        };
+        let schedule = match &plan.exec {
+            Exec::Scheduled(o) => {
+                let o = o.or(sched);
+                counters.coarsen_passes += 1;
+                counters.placement_passes += 1;
+                Some(Arc::new(Schedule::build(&m, &t, pool.len(), o.block_target())))
+            }
+            _ => None,
+        };
+        let solver = ExecSolver::build_with(
+            Arc::clone(&m),
+            Arc::clone(&t),
+            &plan.exec,
+            Arc::clone(&pool),
+            sched,
+            schedule.clone(),
+        )?;
+        Ok(Analysis {
+            m,
+            plan,
+            plan_name,
+            fingerprint,
+            t,
+            schedule,
+            solver,
+            pool,
+            sched,
+            counters,
+            prepare_time: start.elapsed(),
+        })
+    }
+
+    /// Adopt a tuner decision: the race already applied the winning
+    /// rewrite and built the winning backend on the caller's pool — reuse
+    /// both rather than re-deriving them.
+    pub(crate) fn from_tuned(
+        m: Arc<Csr>,
+        tp: TunedPlan,
+        pool: Arc<Pool>,
+        sched: SchedOptions,
+        start: Instant,
+    ) -> Result<Analysis, Error> {
+        let TunedPlan {
+            fingerprint,
+            plan_name,
+            plan,
+            transform: t,
+            solver,
+            ..
+        } = tp;
+        t.validate(&m).map_err(Error::Invalid)?;
+        let mut counters = BuildCounters {
+            rewrite_passes: u64::from(plan.rewrite != Rewrite::None),
+            ..Default::default()
+        };
+        let (solver, schedule) = match solver {
+            Some(s) => {
+                let schedule = s.scheduled().map(|ss| Arc::clone(&ss.schedule));
+                if schedule.is_some() {
+                    counters.coarsen_passes += 1;
+                    counters.placement_passes += 1;
+                }
+                (s, schedule)
+            }
+            None => {
+                // Plan-cache hit: the tuner applied the cached plan but
+                // built no backend — do it here.
+                let schedule = match &plan.exec {
+                    Exec::Scheduled(o) => {
+                        let o = o.or(sched);
+                        counters.coarsen_passes += 1;
+                        counters.placement_passes += 1;
+                        Some(Arc::new(Schedule::build(&m, &t, pool.len(), o.block_target())))
+                    }
+                    _ => None,
+                };
+                let s = ExecSolver::build_with(
+                    Arc::clone(&m),
+                    Arc::clone(&t),
+                    &plan.exec,
+                    Arc::clone(&pool),
+                    sched,
+                    schedule.clone(),
+                )?;
+                (s, schedule)
+            }
+        };
+        Ok(Analysis {
+            m,
+            plan,
+            plan_name,
+            fingerprint,
+            t,
+            schedule,
+            solver,
+            pool,
+            sched,
+            counters,
+            prepare_time: start.elapsed(),
+        })
+    }
+
+    pub fn matrix(&self) -> &Arc<Csr> {
+        &self.m
+    }
+
+    pub fn plan(&self) -> &SolvePlan {
+        &self.plan
+    }
+
+    /// Label the analysis was requested under (source text for named
+    /// plans, the canonical winner name under `auto`).
+    pub fn plan_name(&self) -> &str {
+        &self.plan_name
+    }
+
+    pub fn fingerprint(&self) -> Fingerprint {
+        self.fingerprint
+    }
+
+    pub fn transform(&self) -> &Arc<TransformResult> {
+        &self.t
+    }
+
+    /// The static schedule, when the plan's exec axis is `scheduled`.
+    pub fn schedule(&self) -> Option<&Arc<Schedule>> {
+        self.schedule.as_ref()
+    }
+
+    pub fn solver(&self) -> &ExecSolver {
+        &self.solver
+    }
+
+    /// The scheduled backend, when that is what this analysis runs on.
+    pub fn scheduled(&self) -> Option<&ScheduledSolver> {
+        self.solver.scheduled()
+    }
+
+    /// Structural passes this analysis has paid for so far (see
+    /// [`BuildCounters`]).
+    pub fn rebuilds(&self) -> BuildCounters {
+        self.counters
+    }
+
+    /// Wall-clock of the most recent build/refresh (the offline cost the
+    /// paper discusses).
+    pub fn prepare_time(&self) -> Duration {
+        self.prepare_time
+    }
+
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        self.solver.solve(b)
+    }
+
+    pub fn solve_into(&self, b: &[f64], x: &mut [f64]) {
+        self.solver.solve_into(b, x)
+    }
+
+    pub fn solve_many(&self, bs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        bs.iter().map(|b| self.solver.solve(b)).collect()
+    }
+
+    /// Same-pattern value update, in place: checks the structural
+    /// fingerprint, replays the numerics ([`renumeric`]) and rebuilds the
+    /// numeric solver. The schedule, the rewrite decisions and the level
+    /// structure are all reused — `rebuilds()` shows only the
+    /// `renumeric_passes` counter moving.
+    pub fn refresh_values(&mut self, m: &Csr) -> Result<(), Error> {
+        *self = self.refreshed(m)?;
+        Ok(())
+    }
+
+    /// [`Analysis::refresh_values`] as a pure function: build the
+    /// refreshed analysis next to this one (the coordinator uses this to
+    /// swap a shared `Arc<Analysis>` while in-flight solves drain against
+    /// the old one).
+    pub fn refreshed(&self, m: &Csr) -> Result<Analysis, Error> {
+        let start = Instant::now();
+        let fp = Fingerprint::of(m);
+        if fp != self.fingerprint {
+            return Err(Error::Invalid(format!(
+                "refresh_values: sparsity pattern changed (fingerprint {fp}, analysis has {})",
+                self.fingerprint
+            )));
+        }
+        let m = Arc::new(m.clone());
+        let t = Arc::new(
+            renumeric::renumeric(&m, &StructuralTransform::of(&self.t))
+                .map_err(Error::Invalid)?,
+        );
+        check_guard_cap(&self.plan, &t)?;
+        let solver = ExecSolver::build_with(
+            Arc::clone(&m),
+            Arc::clone(&t),
+            &self.plan.exec,
+            Arc::clone(&self.pool),
+            self.sched,
+            self.schedule.clone(),
+        )?;
+        Ok(Analysis {
+            m,
+            plan: self.plan.clone(),
+            plan_name: self.plan_name.clone(),
+            fingerprint: self.fingerprint,
+            t,
+            schedule: self.schedule.clone(),
+            solver,
+            pool: Arc::clone(&self.pool),
+            sched: self.sched,
+            counters: BuildCounters {
+                renumeric_passes: self.counters.renumeric_passes + 1,
+                ..self.counters
+            },
+            prepare_time: start.elapsed(),
+        })
+    }
+
+    /// Persist the structural artifacts (plan + transform skeleton +
+    /// schedule) as schema-stamped JSON. Values are **not** stored — a
+    /// load re-numerics against whatever same-pattern matrix it is given,
+    /// so one file serves every refactorization of the structure.
+    pub fn save(&self, path: &Path) -> Result<(), Error> {
+        persist::save(self, path)
+    }
+
+    /// Restore an analysis from [`Analysis::save`] output for `m`, which
+    /// must have the same sparsity structure (fingerprint-checked). The
+    /// rewrite analysis, coarsening and ETF placement are all skipped;
+    /// only the [`renumeric`] value replay runs.
+    pub fn load(path: &Path, m: &Csr, opts: &AnalyzeOptions) -> Result<Analysis, Error> {
+        persist::load(path, Arc::new(m.clone()), opts)
+    }
+
+    /// [`Analysis::load`] without the matrix copy.
+    pub fn load_arc(path: &Path, m: Arc<Csr>, opts: &AnalyzeOptions) -> Result<Analysis, Error> {
+        persist::load(path, m, opts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate::{self, GenOptions};
+    use crate::util::prop::assert_allclose;
+    use crate::util::rng::Rng;
+
+    fn perturb(m: &Csr, seed: u64) -> Csr {
+        let mut m2 = m.clone();
+        let mut rng = Rng::new(seed);
+        for v in &mut m2.data {
+            *v *= 1.0 + 0.1 * rng.uniform(-1.0, 1.0);
+        }
+        m2
+    }
+
+    fn opts() -> AnalyzeOptions {
+        AnalyzeOptions {
+            workers: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn analyze_then_solve() {
+        let m = generate::lung2_like(&GenOptions::with_scale(0.04));
+        let a = analyze(&m, &PlanSpec::parse("avgcost+scheduled").unwrap(), &opts()).unwrap();
+        assert_eq!(a.plan_name(), "avgcost+scheduled");
+        assert!(a.schedule().is_some());
+        assert!(a.transform().stats.rows_rewritten > 0);
+        let c = a.rebuilds();
+        assert_eq!(c.rewrite_passes, 1);
+        assert_eq!(c.coarsen_passes, 1);
+        assert_eq!(c.placement_passes, 1);
+        assert_eq!(c.renumeric_passes, 0);
+        let b = vec![1.0; m.nrows];
+        let x = a.solve(&b);
+        assert!(m.residual_inf(&x, &b) < 1e-9);
+        let xs = a.solve_many(&[b.clone(), b.clone()]);
+        assert_eq!(xs.len(), 2);
+        assert_eq!(xs[0], x);
+    }
+
+    #[test]
+    fn refresh_values_skips_structural_work() {
+        let m = generate::lung2_like(&GenOptions::with_scale(0.04));
+        let mut a =
+            analyze(&m, &PlanSpec::parse("avgcost+scheduled").unwrap(), &opts()).unwrap();
+        let before = a.rebuilds();
+        let sched_before = Arc::as_ptr(a.schedule().unwrap());
+        let m2 = perturb(&m, 7);
+        a.refresh_values(&m2).unwrap();
+        let after = a.rebuilds();
+        // The structural counters stay flat; only the replay ran.
+        assert_eq!(after.rewrite_passes, before.rewrite_passes);
+        assert_eq!(after.coarsen_passes, before.coarsen_passes);
+        assert_eq!(after.placement_passes, before.placement_passes);
+        assert_eq!(after.renumeric_passes, before.renumeric_passes + 1);
+        // The schedule object itself is reused, not rebuilt.
+        assert_eq!(Arc::as_ptr(a.schedule().unwrap()), sched_before);
+        // And the refreshed analysis solves the NEW system.
+        let b = vec![1.0; m2.nrows];
+        let x = a.solve(&b);
+        assert!(m2.residual_inf(&x, &b) < 1e-9);
+        // Within 1e-12 of a from-scratch analysis of the new values.
+        let fresh =
+            analyze(&m2, &PlanSpec::parse("avgcost+scheduled").unwrap(), &opts()).unwrap();
+        assert_allclose(&x, &fresh.solve(&b), 1e-12, 1e-12).unwrap();
+    }
+
+    #[test]
+    fn refresh_reenforces_the_guarded_magnitude_cap() {
+        // Build under a guarded rewrite whose cap the original values
+        // satisfy, then refresh with a refactorization whose shrunken
+        // diagonals push the replayed folds far past the cap: the refresh
+        // must refuse (a fresh analysis would have rejected those
+        // rewrites), leaving the analysis serving the old values.
+        let m = generate::lung2_like(&GenOptions::with_scale(0.04));
+        let mut a = analyze(&m, &PlanSpec::parse("guarded:20:1e6").unwrap(), &opts()).unwrap();
+        assert!(a.transform().stats.rows_rewritten > 0);
+        assert!(a.transform().stats.max_bcoeff_magnitude <= 1e6);
+        let mut m2 = m.clone();
+        // Shrink every diagonal by 1e8: substitution divides by the
+        // dependency diagonal, so the replayed b-coefficients explode.
+        for i in 0..m2.nrows {
+            let d = m2.indptr[i + 1] - 1;
+            m2.data[d] *= 1e-8;
+        }
+        let err = a.refresh_values(&m2).unwrap_err();
+        assert!(
+            err.to_string().contains("guarded magnitude cap"),
+            "unexpected error: {err}"
+        );
+        // The analysis is untouched: it still solves the ORIGINAL system.
+        let b = vec![1.0; m.nrows];
+        assert!(m.residual_inf(&a.solve(&b), &b) < 1e-9);
+    }
+
+    #[test]
+    fn refresh_rejects_changed_pattern() {
+        let m = generate::tridiagonal(50, &Default::default());
+        let mut a = analyze(&m, &PlanSpec::parse("manual:5").unwrap(), &opts()).unwrap();
+        let other = generate::tridiagonal(51, &Default::default());
+        assert!(a.refresh_values(&other).is_err());
+        // The analysis is untouched and still solves.
+        let b = vec![1.0; 50];
+        assert!(m.residual_inf(&a.solve(&b), &b) < 1e-10);
+    }
+
+    #[test]
+    fn auto_spec_consults_the_tuner_and_adopts_its_artifacts() {
+        let m = generate::lung2_like(&GenOptions::with_scale(0.03));
+        let a = analyze(&m, &PlanSpec::Auto, &opts()).unwrap();
+        // The tuned plan parses and the backend matches its exec axis.
+        let plan = SolvePlan::parse(a.plan_name()).unwrap();
+        assert_eq!(&plan, a.plan());
+        assert_eq!(a.solver().scheduled().is_some(), a.schedule().is_some());
+        let b = vec![1.0; m.nrows];
+        assert!(m.residual_inf(&a.solve(&b), &b) < 1e-9);
+    }
+
+    #[test]
+    fn every_exec_axis_refreshes() {
+        let m = generate::lung2_like(&GenOptions::with_scale(0.03));
+        let mut rng = Rng::new(11);
+        let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        for plan in ["avgcost+levelset", "avgcost+scheduled", "avgcost+syncfree", "avgcost+reorder"] {
+            let mut a = analyze(&m, &PlanSpec::parse(plan).unwrap(), &opts()).unwrap();
+            let m2 = perturb(&m, 23);
+            a.refresh_values(&m2).unwrap();
+            let x = a.solve(&b);
+            assert!(m2.residual_inf(&x, &b) < 1e-9, "{plan}");
+            let x_ref = crate::solver::serial::solve(&m2, &b);
+            assert_allclose(&x, &x_ref, 1e-9, 1e-11).unwrap_or_else(|e| panic!("{plan}: {e}"));
+        }
+    }
+}

@@ -1,0 +1,477 @@
+//! Schema-stamped serialization of an [`Analysis`]'s **structural**
+//! artifacts: the resolved plan, the transform skeleton (levels +
+//! rewrite decisions) and the built schedule.
+//!
+//! Matrix *values* are deliberately not stored: loading re-numerics the
+//! folded equations against whatever same-pattern matrix is supplied
+//! ([`super::renumeric`]), so one file serves every refactorization of a
+//! structure — the same reason the tuner's plan cache keys on the
+//! structural fingerprint. The format is the crate's own minimal JSON
+//! (`util::json`): greppable, diffable, and stable across toolchains.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::error::Error;
+use crate::sched::schedule::{Schedule, ScheduleStats};
+use crate::sched::Block;
+use crate::solver::dispatch::ExecSolver;
+use crate::sparse::Csr;
+use crate::transform::rewrite::RewriteRecord;
+use crate::transform::{Exec, Rewrite, SolvePlan};
+use crate::tuner::Fingerprint;
+use crate::util::json::Json;
+
+use super::renumeric::{renumeric, StructuralTransform};
+use super::{Analysis, AnalyzeOptions, BuildCounters};
+
+/// Format version stamped on every analysis file. Files written under a
+/// different version are rejected on load (the caller falls back to a
+/// fresh [`super::analyze`]): a persisted schedule is only as good as the
+/// executor that will run it, so bump this whenever the transform replay,
+/// schedule layout or solver semantics change incompatibly.
+pub const ANALYSIS_SCHEMA_VERSION: u64 = 1;
+
+const KIND: &str = "sptrsv-analysis";
+
+fn u32s(v: &[u32]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn usizes(v: &[usize]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn parse_u32s(j: &Json, what: &str) -> Result<Vec<u32>, Error> {
+    j.as_arr()
+        .ok_or_else(|| Error::Invalid(format!("analysis file: {what} is not an array")))?
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .map(|n| n as u32)
+                .ok_or_else(|| Error::Invalid(format!("analysis file: bad entry in {what}")))
+        })
+        .collect()
+}
+
+fn parse_usizes(j: &Json, what: &str) -> Result<Vec<usize>, Error> {
+    Ok(parse_u32s(j, what)?.into_iter().map(|x| x as usize).collect())
+}
+
+fn get<'a>(j: &'a Json, key: &str) -> Result<&'a Json, Error> {
+    j.get(key)
+        .ok_or_else(|| Error::Invalid(format!("analysis file: missing '{key}'")))
+}
+
+/// Serialize `a`'s structural artifacts to `path` (write-then-rename, so
+/// a concurrent reader never observes a truncated file).
+pub fn save(a: &Analysis, path: &Path) -> Result<(), Error> {
+    let t = &a.t;
+    let rewritten: Vec<u32> = (0..t.equations.len() as u32)
+        .filter(|&i| t.equations[i as usize].is_some())
+        .collect();
+    let log: Vec<Json> = t
+        .log
+        .iter()
+        .map(|r| {
+            Json::Arr(vec![
+                Json::Num(r.row as f64),
+                Json::Num(r.from_level as f64),
+                Json::Num(r.to_level as f64),
+                Json::Num(r.substitutions as f64),
+            ])
+        })
+        .collect();
+    let mut root = vec![
+        ("kind", Json::Str(KIND.to_string())),
+        ("version", Json::Num(ANALYSIS_SCHEMA_VERSION as f64)),
+        ("fingerprint", Json::Str(a.fingerprint.to_hex())),
+        ("plan", Json::Str(a.plan.to_string())),
+        ("plan_name", Json::Str(a.plan_name.clone())),
+        ("nrows", Json::Num(a.m.nrows as f64)),
+        (
+            "levels",
+            Json::Arr(t.levels.iter().map(|l| u32s(l)).collect()),
+        ),
+        ("rewritten", u32s(&rewritten)),
+        ("log", Json::Arr(log)),
+        ("levels_before", Json::Num(t.stats.levels_before as f64)),
+        (
+            "avg_level_cost_before",
+            Json::Num(t.stats.avg_level_cost_before),
+        ),
+        (
+            "total_level_cost_before",
+            Json::Num(t.stats.total_level_cost_before as f64),
+        ),
+    ];
+    if let Some(s) = &a.schedule {
+        let blocks: Vec<Json> = s
+            .blocks
+            .iter()
+            .map(|b| {
+                Json::obj(vec![
+                    ("rows", u32s(&b.rows)),
+                    ("cost", Json::Num(b.cost as f64)),
+                    ("level", Json::Num(b.level as f64)),
+                ])
+            })
+            .collect();
+        let st = &s.stats;
+        root.push((
+            "schedule",
+            Json::obj(vec![
+                ("nworkers", Json::Num(s.nworkers as f64)),
+                ("blocks", Json::Arr(blocks)),
+                ("worker_of", u32s(&s.worker_of)),
+                ("pred_ptr", usizes(&s.pred_ptr)),
+                ("preds", u32s(&s.preds)),
+                (
+                    "stats",
+                    Json::obj(vec![
+                        ("num_blocks", Json::Num(st.num_blocks as f64)),
+                        ("chain_blocks", Json::Num(st.chain_blocks as f64)),
+                        ("cut_edges", Json::Num(st.cut_edges as f64)),
+                        ("max_worker_load", Json::Num(st.max_worker_load as f64)),
+                        ("total_cost", Json::Num(st.total_cost as f64)),
+                        (
+                            "levelset_barriers",
+                            Json::Num(st.levelset_barriers as f64),
+                        ),
+                        ("workers", Json::Num(st.workers as f64)),
+                    ]),
+                ),
+            ]),
+        ));
+    }
+    let text = Json::obj(root).to_string();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| Error::Io(format!("create {}: {e}", dir.display())))?;
+        }
+    }
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(format!(".tmp.{}", std::process::id()));
+    let tmp = std::path::PathBuf::from(tmp);
+    std::fs::write(&tmp, text).map_err(|e| Error::Io(format!("write {}: {e}", tmp.display())))?;
+    std::fs::rename(&tmp, path).map_err(|e| {
+        std::fs::remove_file(&tmp).ok();
+        Error::Io(format!("rename {} -> {}: {e}", tmp.display(), path.display()))
+    })
+}
+
+/// Deserialize an analysis for `m`: verify the schema and the structural
+/// fingerprint, replay the numerics against `m`'s values, and adopt the
+/// persisted schedule when it fits the pool (rebuilding it — counted —
+/// only when the pool has fewer workers than the schedule was placed
+/// for).
+pub fn load(path: &Path, m: Arc<Csr>, opts: &AnalyzeOptions) -> Result<Analysis, Error> {
+    let start = Instant::now();
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Io(format!("read {}: {e}", path.display())))?;
+    let root = Json::parse(&text).map_err(|e| Error::Invalid(format!("analysis file: {e}")))?;
+    if root.get("kind").and_then(Json::as_str) != Some(KIND) {
+        return Err(Error::Invalid(format!(
+            "{} is not an analysis file",
+            path.display()
+        )));
+    }
+    let version = get(&root, "version")?.as_f64().unwrap_or(0.0) as u64;
+    if version != ANALYSIS_SCHEMA_VERSION {
+        return Err(Error::Invalid(format!(
+            "analysis file schema v{version}, this build reads v{ANALYSIS_SCHEMA_VERSION}"
+        )));
+    }
+    let fp_str = get(&root, "fingerprint")?
+        .as_str()
+        .ok_or_else(|| Error::Invalid("analysis file: bad fingerprint".into()))?;
+    let fingerprint = Fingerprint::from_hex(fp_str)
+        .ok_or_else(|| Error::Invalid("analysis file: bad fingerprint".into()))?;
+    let actual = Fingerprint::of(&m);
+    if fingerprint != actual {
+        return Err(Error::Invalid(format!(
+            "analysis was saved for structure {fingerprint}, matrix has {actual}"
+        )));
+    }
+    let nrows = get(&root, "nrows")?.as_usize().unwrap_or(0);
+    if nrows != m.nrows {
+        return Err(Error::Invalid(format!(
+            "analysis was saved for {nrows} rows, matrix has {}",
+            m.nrows
+        )));
+    }
+    let plan_str = get(&root, "plan")?
+        .as_str()
+        .ok_or_else(|| Error::Invalid("analysis file: bad plan".into()))?;
+    let plan = SolvePlan::parse(plan_str).map_err(Error::Invalid)?;
+    let plan_name = root
+        .get("plan_name")
+        .and_then(Json::as_str)
+        .unwrap_or(plan_str)
+        .to_string();
+
+    // Transform skeleton -> renumeric replay against m's values.
+    let levels: Vec<Vec<u32>> = get(&root, "levels")?
+        .as_arr()
+        .ok_or_else(|| Error::Invalid("analysis file: levels is not an array".into()))?
+        .iter()
+        .map(|l| parse_u32s(l, "levels"))
+        .collect::<Result<_, _>>()?;
+    let mut level_of = vec![u32::MAX; m.nrows];
+    for (lvl, rows) in levels.iter().enumerate() {
+        for &r in rows {
+            let ru = r as usize;
+            if ru >= m.nrows || level_of[ru] != u32::MAX {
+                return Err(Error::Invalid(format!(
+                    "analysis file: row {r} out of range or in two levels"
+                )));
+            }
+            level_of[ru] = lvl as u32;
+        }
+    }
+    if level_of.iter().any(|&l| l == u32::MAX) {
+        return Err(Error::Invalid("analysis file: levels do not cover all rows".into()));
+    }
+    let mut rewritten = vec![false; m.nrows];
+    for r in parse_u32s(get(&root, "rewritten")?, "rewritten")? {
+        let ru = r as usize;
+        if ru >= m.nrows {
+            return Err(Error::Invalid(format!("analysis file: rewritten row {r} out of range")));
+        }
+        rewritten[ru] = true;
+    }
+    let mut log = Vec::new();
+    if let Some(arr) = root.get("log").and_then(Json::as_arr) {
+        for rec in arr {
+            let f = parse_u32s(rec, "log")?;
+            if f.len() == 4 {
+                log.push(RewriteRecord {
+                    row: f[0],
+                    from_level: f[1],
+                    to_level: f[2],
+                    substitutions: f[3],
+                });
+            }
+        }
+    }
+    let skeleton = StructuralTransform {
+        levels,
+        level_of,
+        rewritten,
+        log,
+        levels_before: get(&root, "levels_before")?.as_usize().unwrap_or(0),
+        avg_level_cost_before: root
+            .get("avg_level_cost_before")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0),
+        total_level_cost_before: root
+            .get("total_level_cost_before")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0) as u64,
+    };
+    let t = Arc::new(renumeric(&m, &skeleton).map_err(Error::Invalid)?);
+    t.validate(&m).map_err(|e| {
+        Error::Invalid(format!("analysis file: replayed transform invalid: {e}"))
+    })?;
+    // The guarded rewrite's magnitude cap is a property of the VALUES:
+    // re-check it against the matrix this load replayed onto.
+    super::check_guard_cap(&plan, &t)?;
+
+    let pool = opts.resolve_pool();
+    let mut counters = BuildCounters {
+        renumeric_passes: 1,
+        ..Default::default()
+    };
+    let schedule = match (&plan.exec, root.get("schedule")) {
+        (Exec::Scheduled(_), Some(sj)) if !matches!(sj, Json::Null) => {
+            let s = load_schedule(sj)?;
+            if s.nworkers <= pool.len() {
+                s.validate(&m, &t).map_err(|e| {
+                    Error::Invalid(format!("analysis file: persisted schedule invalid: {e}"))
+                })?;
+                Some(Arc::new(s))
+            } else {
+                // A schedule placed for more workers than this pool has
+                // cannot execute here: rebuild (and count it honestly).
+                counters.coarsen_passes += 1;
+                counters.placement_passes += 1;
+                let o = match &plan.exec {
+                    Exec::Scheduled(o) => o.or(opts.sched),
+                    _ => unreachable!(),
+                };
+                Some(Arc::new(Schedule::build(&m, &t, pool.len(), o.block_target())))
+            }
+        }
+        (Exec::Scheduled(o), _) => {
+            // Scheduled plan but no persisted schedule (hand-edited or
+            // older file): rebuild.
+            counters.coarsen_passes += 1;
+            counters.placement_passes += 1;
+            let o = o.or(opts.sched);
+            Some(Arc::new(Schedule::build(&m, &t, pool.len(), o.block_target())))
+        }
+        _ => None,
+    };
+    // A hand-edited file could pair the identity plan with rewritten
+    // rows; the replayed transform would be self-consistent but lie
+    // about its plan — reject instead of serving the mismatch.
+    if plan.rewrite == Rewrite::None && t.stats.rows_rewritten > 0 {
+        return Err(Error::Invalid(
+            "analysis file: identity plan but rewritten rows recorded".into(),
+        ));
+    }
+    let solver = ExecSolver::build_with(
+        Arc::clone(&m),
+        Arc::clone(&t),
+        &plan.exec,
+        Arc::clone(&pool),
+        opts.sched,
+        schedule.clone(),
+    )?;
+    let fingerprint = actual;
+    Ok(Analysis {
+        m,
+        plan,
+        plan_name,
+        fingerprint,
+        t,
+        schedule,
+        solver,
+        pool,
+        sched: opts.sched,
+        counters,
+        prepare_time: start.elapsed(),
+    })
+}
+
+fn load_schedule(j: &Json) -> Result<Schedule, Error> {
+    let blocks: Vec<Block> = get(j, "blocks")?
+        .as_arr()
+        .ok_or_else(|| Error::Invalid("analysis file: schedule.blocks not an array".into()))?
+        .iter()
+        .map(|b| {
+            Ok(Block {
+                rows: parse_u32s(get(b, "rows")?, "block rows")?,
+                cost: get(b, "cost")?.as_f64().unwrap_or(0.0) as u64,
+                level: get(b, "level")?.as_f64().unwrap_or(0.0) as u32,
+            })
+        })
+        .collect::<Result<_, Error>>()?;
+    let nworkers = get(j, "nworkers")?.as_usize().unwrap_or(1).max(1);
+    let worker_of = parse_u32s(get(j, "worker_of")?, "worker_of")?;
+    let pred_ptr = parse_usizes(get(j, "pred_ptr")?, "pred_ptr")?;
+    let preds = parse_u32s(get(j, "preds")?, "preds")?;
+    if worker_of.len() != blocks.len()
+        || pred_ptr.len() != blocks.len() + 1
+        || pred_ptr.last().copied().unwrap_or(0) != preds.len()
+        || worker_of.iter().any(|&w| w as usize >= nworkers)
+    {
+        return Err(Error::Invalid("analysis file: schedule arrays inconsistent".into()));
+    }
+    let mut worker_lists: Vec<Vec<u32>> = vec![Vec::new(); nworkers];
+    for (b, &w) in worker_of.iter().enumerate() {
+        worker_lists[w as usize].push(b as u32);
+    }
+    let sj = get(j, "stats")?;
+    let stats = ScheduleStats {
+        num_blocks: get(sj, "num_blocks")?.as_usize().unwrap_or(blocks.len()),
+        chain_blocks: get(sj, "chain_blocks")?.as_usize().unwrap_or(0),
+        cut_edges: get(sj, "cut_edges")?.as_usize().unwrap_or(0),
+        max_worker_load: get(sj, "max_worker_load")?.as_f64().unwrap_or(0.0) as u64,
+        total_cost: get(sj, "total_cost")?.as_f64().unwrap_or(0.0) as u64,
+        levelset_barriers: get(sj, "levelset_barriers")?.as_usize().unwrap_or(0),
+        workers: get(sj, "workers")?.as_usize().unwrap_or(nworkers),
+    };
+    Ok(Schedule {
+        nworkers,
+        blocks,
+        worker_of,
+        worker_lists,
+        pred_ptr,
+        preds,
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate::{self, GenOptions};
+    use crate::transform::PlanSpec;
+    use crate::util::prop::assert_allclose;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("sptrsv_{name}_{}.json", std::process::id()))
+    }
+
+    fn opts() -> AnalyzeOptions {
+        AnalyzeOptions {
+            workers: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_skips_structural_passes() {
+        let path = tmp("analysis_roundtrip");
+        let m = generate::lung2_like(&GenOptions::with_scale(0.04));
+        let a = super::super::analyze(
+            &m,
+            &PlanSpec::parse("avgcost+scheduled").unwrap(),
+            &opts(),
+        )
+        .unwrap();
+        a.save(&path).unwrap();
+        let loaded = Analysis::load(&path, &m, &opts()).unwrap();
+        // The acceptance criterion: a persisted schedule means NO
+        // coarsening and NO placement on re-load.
+        let c = loaded.rebuilds();
+        assert_eq!(c.coarsen_passes, 0, "coarsening re-ran on load");
+        assert_eq!(c.placement_passes, 0, "placement re-ran on load");
+        assert_eq!(c.rewrite_passes, 0, "rewrite analysis re-ran on load");
+        assert_eq!(c.renumeric_passes, 1);
+        // Identical schedule shape, identical solves.
+        assert_eq!(loaded.schedule().unwrap().stats, a.schedule().unwrap().stats);
+        let mut rng = Rng::new(5);
+        let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        assert_allclose(&loaded.solve(&b), &a.solve(&b), 1e-12, 1e-12).unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_renumerics_against_new_values() {
+        let path = tmp("analysis_newvals");
+        let m = generate::lung2_like(&GenOptions::with_scale(0.04));
+        let a = super::super::analyze(&m, &PlanSpec::parse("avgcost").unwrap(), &opts()).unwrap();
+        a.save(&path).unwrap();
+        // Same pattern, new values: the load replays numerics against the
+        // matrix it is GIVEN, so the solve is exact for the new system.
+        let mut m2 = m.clone();
+        let mut rng = Rng::new(9);
+        for v in &mut m2.data {
+            *v *= 1.0 + 0.2 * rng.uniform(-1.0, 1.0);
+        }
+        let loaded = Analysis::load(&path, &m2, &opts()).unwrap();
+        let b = vec![1.0; m2.nrows];
+        assert!(m2.residual_inf(&loaded.solve(&b), &b) < 1e-9);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_mismatched_structure_and_garbage() {
+        let path = tmp("analysis_reject");
+        let m = generate::tridiagonal(40, &Default::default());
+        let a = super::super::analyze(&m, &PlanSpec::parse("manual:5").unwrap(), &opts()).unwrap();
+        a.save(&path).unwrap();
+        let other = generate::tridiagonal(41, &Default::default());
+        assert!(Analysis::load(&path, &other, &opts()).is_err());
+        std::fs::write(&path, "{ not json").unwrap();
+        assert!(Analysis::load(&path, &m, &opts()).is_err());
+        std::fs::write(&path, r#"{"kind": "something-else", "version": 1}"#).unwrap();
+        assert!(Analysis::load(&path, &m, &opts()).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,225 @@
+//! Value-only refresh of a transformed system: replay the recorded
+//! rewrite *decisions* against fresh matrix values, skipping every piece
+//! of structural analysis (level building, costMap projection, coarsening,
+//! placement).
+//!
+//! The key observation: once the transformed level assignment is fixed,
+//! the folded equation of a rewritten row is determined by pure algebra —
+//! it is the elimination of every variable at levels >= the row's target
+//! level from the row's original equation, and Gaussian elimination of a
+//! fixed variable set is order-independent in exact arithmetic. So a
+//! same-pattern value update (the dominant scenario in preconditioned
+//! iterative solves, where each refactorization keeps the sparsity
+//! pattern) re-derives the numerics in one ascending sweep:
+//!
+//! * original rows need nothing — their values are read from the matrix
+//!   at evaluation time;
+//! * each rewritten row starts from its fresh original equation and
+//!   substitutes any remaining dependency whose (final, structural) level
+//!   is at or above the row's target level, using the already-refreshed
+//!   equations of those dependencies (dependencies have strictly smaller
+//!   row indices, so the ascending sweep always finds them final).
+//!
+//! Termination: every substitution replaces a level->=target dependency
+//! with dependencies at strictly lower levels, and levels are bounded
+//! below. Validity: the remaining dependencies are all below the target
+//! level, which is exactly the invariant `TransformResult::validate`
+//! checks. Note the replay substitutes the *final*-level dependency set —
+//! during the original rewrite a dependency may have sat at a higher
+//! level when the row was committed and moved down afterwards, in which
+//! case the replay keeps it symbolic instead of eliminating it. Both
+//! forms are exact reformulations of the same row of `Lx = b`, so solves
+//! agree to rounding; the replayed form is never *more* work.
+
+use crate::graph::analyze::LevelStats;
+use crate::sparse::Csr;
+use crate::transform::equation::Equation;
+use crate::transform::plan::{TransformResult, TransformStats};
+use crate::transform::rewrite::RewriteRecord;
+
+/// The structural skeleton of a transform: everything `renumeric` needs
+/// that does **not** depend on matrix values. Extracted from a live
+/// [`TransformResult`] (value refresh) or deserialized from a persisted
+/// analysis (cache load).
+pub struct StructuralTransform {
+    /// compacted levels of the transformed system
+    pub levels: Vec<Vec<u32>>,
+    /// level of each row in the compacted numbering
+    pub level_of: Vec<u32>,
+    /// which rows carry a rewritten equation
+    pub rewritten: Vec<bool>,
+    /// the original rewrite log (decisions; replayed counts may differ)
+    pub log: Vec<RewriteRecord>,
+    /// pre-transform stats of the raw matrix (structural; carried along
+    /// so a refresh does not rebuild the raw level sets)
+    pub levels_before: usize,
+    pub avg_level_cost_before: f64,
+    pub total_level_cost_before: u64,
+}
+
+impl StructuralTransform {
+    /// Strip a live transform down to its structural skeleton.
+    pub fn of(t: &TransformResult) -> StructuralTransform {
+        StructuralTransform {
+            levels: t.levels.clone(),
+            level_of: t.level_of.clone(),
+            rewritten: t.equations.iter().map(Option::is_some).collect(),
+            log: t.log.clone(),
+            levels_before: t.stats.levels_before,
+            avg_level_cost_before: t.stats.avg_level_cost_before,
+            total_level_cost_before: t.stats.total_level_cost_before,
+        }
+    }
+}
+
+/// Re-derive a full [`TransformResult`] from a structural skeleton and
+/// fresh matrix values. No level building, no costMap, no coarsening —
+/// one ascending substitution sweep over the rewritten rows only.
+pub fn renumeric(m: &Csr, s: &StructuralTransform) -> Result<TransformResult, String> {
+    let n = m.nrows;
+    if s.level_of.len() != n || s.rewritten.len() != n {
+        return Err(format!(
+            "renumeric: skeleton is for {} rows, matrix has {n}",
+            s.level_of.len()
+        ));
+    }
+    let mut equations: Vec<Option<Box<Equation>>> = vec![None; n];
+    let mut max_mag = 0.0f64;
+    let mut substitutions: u64 = 0;
+    for i in 0..n {
+        if !s.rewritten[i] {
+            continue;
+        }
+        let target = s.level_of[i];
+        let mut eq = Equation::original(i as u32, m.row_deps(i), m.row_dep_vals(i), m.diag(i));
+        loop {
+            // Mirror the rewriter's order (highest-level dependency
+            // first) so the replayed rounding matches a fresh transform
+            // as closely as possible.
+            let next = eq
+                .coeffs
+                .iter()
+                .map(|&(c, _)| c)
+                .filter(|&c| s.level_of[c as usize] >= target)
+                .max_by_key(|&c| s.level_of[c as usize]);
+            let Some(j) = next else { break };
+            let dep_owned;
+            let dep: &Equation = match &equations[j as usize] {
+                Some(e) => e,
+                None => {
+                    let ju = j as usize;
+                    dep_owned =
+                        Equation::original(j, m.row_deps(ju), m.row_dep_vals(ju), m.diag(ju));
+                    &dep_owned
+                }
+            };
+            if !eq.substitute(dep) {
+                return Err(format!("renumeric: row {i} lost dependency {j} mid-replay"));
+            }
+            substitutions += 1;
+        }
+        eq.fold();
+        max_mag = max_mag.max(eq.max_bcoeff_magnitude());
+        equations[i] = Some(Box::new(eq));
+    }
+
+    let row_costs: Vec<u64> = (0..n)
+        .map(|i| match &equations[i] {
+            Some(eq) => eq.cost(),
+            None => m.row_cost(i) as u64,
+        })
+        .collect();
+    let st_after = LevelStats::from_row_costs(&row_costs, &s.levels);
+    let rows_rewritten = s.rewritten.iter().filter(|&&r| r).count();
+    Ok(TransformResult {
+        levels: s.levels.clone(),
+        level_of: s.level_of.clone(),
+        equations,
+        row_costs,
+        stats: TransformStats {
+            levels_before: s.levels_before,
+            levels_after: st_after.num_levels,
+            avg_level_cost_before: s.avg_level_cost_before,
+            avg_level_cost_after: st_after.avg_level_cost,
+            total_level_cost_before: s.total_level_cost_before,
+            total_level_cost_after: st_after.total_cost,
+            rows_rewritten,
+            nrows: n,
+            max_bcoeff_magnitude: if rows_rewritten == 0 { 1.0 } else { max_mag },
+            substitutions_total: substitutions,
+        },
+        log: s.log.clone(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate;
+    use crate::transform::SolvePlan;
+    use crate::util::prop::assert_allclose;
+    use crate::util::rng::Rng;
+
+    fn perturb(m: &Csr, seed: u64) -> Csr {
+        let mut m2 = m.clone();
+        let mut rng = Rng::new(seed);
+        for v in &mut m2.data {
+            *v *= 1.0 + 0.1 * rng.uniform(-1.0, 1.0);
+        }
+        m2
+    }
+
+    #[test]
+    fn identity_skeleton_replays_to_identity() {
+        let m = generate::tridiagonal(60, &Default::default());
+        let t = TransformResult::identity(&m);
+        let m2 = perturb(&m, 1);
+        let t2 = renumeric(&m2, &StructuralTransform::of(&t)).unwrap();
+        assert_eq!(t2.stats.rows_rewritten, 0);
+        assert_eq!(t2.levels, t.levels);
+        t2.validate(&m2).unwrap();
+    }
+
+    #[test]
+    fn replay_matches_fresh_transform_solve() {
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
+        let plan = SolvePlan::parse("avgcost").unwrap();
+        let t = plan.apply(&m);
+        assert!(t.stats.rows_rewritten > 0);
+        let m2 = perturb(&m, 2);
+        let replayed = renumeric(&m2, &StructuralTransform::of(&t)).unwrap();
+        replayed.validate(&m2).unwrap();
+        assert_eq!(replayed.stats.rows_rewritten, t.stats.rows_rewritten);
+        assert_eq!(replayed.levels, t.levels);
+        // Solving the replayed system against the NEW matrix matches the
+        // serial reference on the new values.
+        let mut rng = Rng::new(3);
+        let b: Vec<f64> = (0..m2.nrows).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let x_ref = crate::solver::serial::solve(&m2, &b);
+        let s = crate::solver::executor::TransformedSolver::from_parts(m2, replayed, 2);
+        assert_allclose(&s.solve(&b), &x_ref, 1e-9, 1e-11).unwrap();
+    }
+
+    #[test]
+    fn replay_on_same_values_is_equivalent() {
+        // Same values in = a system algebraically identical to the
+        // original transform (solves agree far below the 1e-12 gate).
+        let m = generate::torso2_like(&generate::GenOptions::with_scale(0.02));
+        let t = SolvePlan::parse("avgcost").unwrap().apply(&m);
+        let replayed = renumeric(&m, &StructuralTransform::of(&t)).unwrap();
+        let mut rng = Rng::new(4);
+        let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let s1 =
+            crate::solver::executor::TransformedSolver::from_parts(m.clone(), t, 1);
+        let s2 = crate::solver::executor::TransformedSolver::from_parts(m, replayed, 1);
+        assert_allclose(&s1.solve_serial(&b), &s2.solve_serial(&b), 1e-12, 1e-13).unwrap();
+    }
+
+    #[test]
+    fn wrong_sized_skeleton_is_rejected() {
+        let m = generate::tridiagonal(10, &Default::default());
+        let t = TransformResult::identity(&m);
+        let small = generate::tridiagonal(5, &Default::default());
+        assert!(renumeric(&small, &StructuralTransform::of(&t)).is_err());
+    }
+}

@@ -35,6 +35,11 @@ pub struct Config {
     /// tuner plan-cache spill file for the `auto` strategy ("" = memory
     /// only)
     pub tuner_cache: String,
+    /// directory for persisted analyses (plan + transform skeleton +
+    /// schedule, keyed by structural fingerprint; typically a sibling of
+    /// `tuner_cache`): re-registering a known structure skips rewrite
+    /// analysis, coarsening and ETF placement ("" = disabled)
+    pub analysis_cache: String,
     /// how many cost-model favourites the tuner races empirically
     pub tuner_top_k: usize,
     /// timed solves per raced candidate
@@ -65,6 +70,7 @@ impl Default for Config {
             use_xla: false,
             seed: 0x5EED,
             tuner_cache: String::new(),
+            analysis_cache: String::new(),
             tuner_top_k: 2,
             tuner_race_solves: 3,
             tuner_cache_ttl: 0,
@@ -134,8 +140,9 @@ impl Config {
                 k.as_str(),
                 "workers" | "plan" | "strategy" | "artifacts-dir" | "batch-size"
                     | "batch-deadline-us" | "max-pending" | "use-xla" | "seed"
-                    | "tuner-cache" | "tuner-top-k" | "tuner-race-solves"
-                    | "tuner-cache-ttl" | "sched-block-target" | "sched-stale-window"
+                    | "tuner-cache" | "analysis-cache" | "tuner-top-k"
+                    | "tuner-race-solves" | "tuner-cache-ttl" | "sched-block-target"
+                    | "sched-stale-window"
             ) {
                 self.set(&k.replace('-', "_"), v)?;
             }
@@ -161,6 +168,7 @@ impl Config {
             "use_xla" => self.use_xla = matches!(val, "true" | "1" | "yes"),
             "seed" => self.seed = val.parse().map_err(|_| bad(key, val))?,
             "tuner_cache" => self.tuner_cache = val.to_string(),
+            "analysis_cache" => self.analysis_cache = val.to_string(),
             "tuner_top_k" => self.tuner_top_k = val.parse().map_err(|_| bad(key, val))?,
             "tuner_race_solves" => {
                 self.tuner_race_solves = val.parse().map_err(|_| bad(key, val))?
@@ -194,6 +202,21 @@ mod tests {
         assert!(c.tuner_cache.is_empty());
         assert!(c.tuner_top_k >= 1);
         assert!(c.max_pending > 0);
+    }
+
+    #[test]
+    fn analysis_cache_key_parses_and_merges() {
+        let mut c = Config::default();
+        assert!(c.analysis_cache.is_empty(), "disabled by default");
+        c.set("analysis_cache", "/tmp/analyses").unwrap();
+        assert_eq!(c.analysis_cache, "/tmp/analyses");
+        let args = Args::parse(
+            ["serve", "--analysis-cache", "cache/dir"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        c.merge_args(&args).unwrap();
+        assert_eq!(c.analysis_cache, "cache/dir");
     }
 
     #[test]

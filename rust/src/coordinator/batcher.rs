@@ -122,6 +122,22 @@ impl<T> Batcher<T> {
         self.lane_rhs[lane_index(lane)]
     }
 
+    /// Queued right-hand sides for one matrix across both lanes (the
+    /// quantity a per-matrix `max_pending` override caps). O(queue
+    /// length) for that matrix only.
+    pub fn matrix_pending(&self, matrix_id: &str) -> usize {
+        self.queues
+            .get(matrix_id)
+            .map(|lanes| {
+                lanes
+                    .iter()
+                    .flat_map(LaneQueue::values)
+                    .map(|p| p.rhs.len())
+                    .sum()
+            })
+            .unwrap_or(0)
+    }
+
     /// The instant a request must be flushed by: its batching deadline,
     /// tightened by the request's own deadline when that is sooner.
     ///
@@ -477,6 +493,21 @@ mod tests {
         assert_eq!(taken[0].token, 0);
         // An all-alive sweep is a no-op.
         assert!(b.sweep(|_| false).is_empty());
+    }
+
+    #[test]
+    fn matrix_pending_counts_both_lanes_per_id() {
+        let mut b: Batcher<usize> = Batcher::new(8, Duration::from_secs(60));
+        assert_eq!(b.matrix_pending("m"), 0);
+        b.push("m", vec![vec![1.0]; 2], Lane::Batch, None, 0);
+        b.push("m", one(2.0), Lane::Interactive, None, 1);
+        b.push("z", one(3.0), Lane::Batch, None, 2);
+        assert_eq!(b.matrix_pending("m"), 3);
+        assert_eq!(b.matrix_pending("z"), 1);
+        assert_eq!(b.pending(), 4);
+        b.take("m");
+        assert_eq!(b.matrix_pending("m"), 0);
+        assert_eq!(b.matrix_pending("z"), 1);
     }
 
     #[test]

@@ -29,6 +29,21 @@ pub struct Metrics {
     pub tuner_cache_hits: AtomicU64,
     /// `auto` registrations that ran the cost model + race
     pub tuner_cache_misses: AtomicU64,
+    /// registrations restored from the persistent analysis cache (zero
+    /// rewrite/coarsening/placement passes)
+    pub analysis_cache_hits: AtomicU64,
+    /// registrations that had an analysis cache configured but built fresh
+    pub analysis_cache_misses: AtomicU64,
+    /// same-pattern value refreshes applied via `update_values`
+    pub value_refreshes: AtomicU64,
+    /// gauge: cumulative rewrite-analysis passes paid by the pipeline
+    rewrite_passes: AtomicU64,
+    /// gauge: cumulative coarsening passes paid by the pipeline
+    coarsen_passes: AtomicU64,
+    /// gauge: cumulative ETF placement passes paid by the pipeline
+    placement_passes: AtomicU64,
+    /// gauge: cumulative value-only numeric replays paid by the pipeline
+    renumeric_passes: AtomicU64,
     total_us: AtomicU64,
     hist: [AtomicU64; BUCKETS],
     /// gauge: queued right-hand sides in the interactive lane
@@ -45,6 +60,9 @@ pub struct Metrics {
     elastic_ooo: AtomicU64,
     /// plan name -> times the tuner picked it
     plan_wins: Mutex<BTreeMap<String, u64>>,
+    /// matrix id -> admission rejections charged to it (global cap and
+    /// per-matrix cap alike; registration-time only map growth)
+    matrix_rejections: Mutex<BTreeMap<String, u64>>,
 }
 
 impl Default for Metrics {
@@ -66,6 +84,13 @@ impl Metrics {
             cancel_wakeups: AtomicU64::new(0),
             tuner_cache_hits: AtomicU64::new(0),
             tuner_cache_misses: AtomicU64::new(0),
+            analysis_cache_hits: AtomicU64::new(0),
+            analysis_cache_misses: AtomicU64::new(0),
+            value_refreshes: AtomicU64::new(0),
+            rewrite_passes: AtomicU64::new(0),
+            coarsen_passes: AtomicU64::new(0),
+            placement_passes: AtomicU64::new(0),
+            renumeric_passes: AtomicU64::new(0),
             total_us: AtomicU64::new(0),
             hist: std::array::from_fn(|_| AtomicU64::new(0)),
             lane_interactive: AtomicU64::new(0),
@@ -75,7 +100,33 @@ impl Metrics {
             elastic_waits: AtomicU64::new(0),
             elastic_ooo: AtomicU64::new(0),
             plan_wins: Mutex::new(BTreeMap::new()),
+            matrix_rejections: Mutex::new(BTreeMap::new()),
         }
+    }
+
+    /// Record one analysis-cache outcome for a fresh registration (only
+    /// meaningful when a cache directory is configured).
+    pub fn record_analysis_cache(&self, hit: bool) {
+        if hit {
+            self.analysis_cache_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.analysis_cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// A registered matrix had its numeric values refreshed in place.
+    pub fn record_value_refresh(&self) {
+        self.value_refreshes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Gauge update: the pipeline's cumulative structural-pass counters
+    /// (rewrite / coarsen / placement / renumeric), mirrored at snapshot
+    /// time so "the warm cache really skipped the work" is observable.
+    pub fn set_rebuilds(&self, rewrite: u64, coarsen: u64, placement: u64, renumeric: u64) {
+        self.rewrite_passes.store(rewrite, Ordering::Relaxed);
+        self.coarsen_passes.store(coarsen, Ordering::Relaxed);
+        self.placement_passes.store(placement, Ordering::Relaxed);
+        self.renumeric_passes.store(renumeric, Ordering::Relaxed);
     }
 
     /// Gauge update: scheduled-backend totals (blocks + static cut) and
@@ -119,9 +170,13 @@ impl Metrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Admission control turned a request away (`Overloaded`).
-    pub fn record_rejection(&self) {
+    /// Admission control turned a request away (`Overloaded`). The
+    /// rejection is also charged to the matrix id it targeted, so noisy
+    /// tenants are identifiable per handle.
+    pub fn record_rejection(&self, matrix_id: &str) {
         self.rejections.fetch_add(1, Ordering::Relaxed);
+        let mut per = self.matrix_rejections.lock().unwrap();
+        *per.entry(matrix_id.to_string()).or_insert(0) += 1;
     }
 
     /// A queued request was dropped because its ticket was cancelled.
@@ -166,8 +221,22 @@ impl Metrics {
             elastic_ooo: self.elastic_ooo.load(Ordering::Relaxed),
             tuner_cache_hits: self.tuner_cache_hits.load(Ordering::Relaxed),
             tuner_cache_misses: self.tuner_cache_misses.load(Ordering::Relaxed),
+            analysis_cache_hits: self.analysis_cache_hits.load(Ordering::Relaxed),
+            analysis_cache_misses: self.analysis_cache_misses.load(Ordering::Relaxed),
+            value_refreshes: self.value_refreshes.load(Ordering::Relaxed),
+            rewrite_passes: self.rewrite_passes.load(Ordering::Relaxed),
+            coarsen_passes: self.coarsen_passes.load(Ordering::Relaxed),
+            placement_passes: self.placement_passes.load(Ordering::Relaxed),
+            renumeric_passes: self.renumeric_passes.load(Ordering::Relaxed),
             plan_wins: self
                 .plan_wins
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), *v))
+                .collect(),
+            rejections_by_matrix: self
+                .matrix_rejections
                 .lock()
                 .unwrap()
                 .iter()
@@ -229,8 +298,24 @@ pub struct Snapshot {
     pub elastic_ooo: u64,
     pub tuner_cache_hits: u64,
     pub tuner_cache_misses: u64,
+    /// registrations restored from the persistent analysis cache
+    pub analysis_cache_hits: u64,
+    /// fresh builds despite a configured analysis cache
+    pub analysis_cache_misses: u64,
+    /// same-pattern value refreshes applied via `update_values`
+    pub value_refreshes: u64,
+    /// gauge: cumulative rewrite-analysis passes paid by the pipeline
+    pub rewrite_passes: u64,
+    /// gauge: cumulative coarsening passes paid by the pipeline
+    pub coarsen_passes: u64,
+    /// gauge: cumulative ETF placement passes paid by the pipeline
+    pub placement_passes: u64,
+    /// gauge: cumulative value-only numeric replays paid by the pipeline
+    pub renumeric_passes: u64,
     /// (plan, times chosen) pairs, sorted by plan name
     pub plan_wins: Vec<(String, u64)>,
+    /// (matrix id, admission rejections charged to it), sorted by id
+    pub rejections_by_matrix: Vec<(String, u64)>,
     pub mean_us: f64,
     pub p50_us: u64,
     pub p95_us: u64,
@@ -251,6 +336,38 @@ impl std::fmt::Display for Snapshot {
         )?;
         if self.cancel_wakeups > 0 {
             write!(f, ", cancel_wakeups={}", self.cancel_wakeups)?;
+        }
+        if self.value_refreshes > 0 {
+            write!(f, ", value_refreshes={}", self.value_refreshes)?;
+        }
+        if self.analysis_cache_hits + self.analysis_cache_misses > 0 {
+            write!(
+                f,
+                ", analysis cache hit/miss={}/{}",
+                self.analysis_cache_hits, self.analysis_cache_misses
+            )?;
+        }
+        if self.rewrite_passes + self.coarsen_passes + self.placement_passes + self.renumeric_passes
+            > 0
+        {
+            write!(
+                f,
+                ", passes rewrite={} coarsen={} place={} renumeric={}",
+                self.rewrite_passes,
+                self.coarsen_passes,
+                self.placement_passes,
+                self.renumeric_passes
+            )?;
+        }
+        if !self.rejections_by_matrix.is_empty() {
+            write!(f, ", rejected[")?;
+            for (i, (id, n)) in self.rejections_by_matrix.iter().enumerate() {
+                if i > 0 {
+                    write!(f, " ")?;
+                }
+                write!(f, "{id}={n}")?;
+            }
+            write!(f, "]")?;
         }
         if self.sched_blocks > 0 {
             write!(
@@ -340,7 +457,7 @@ mod tests {
     #[test]
     fn admission_and_lane_accounting() {
         let m = Metrics::new();
-        m.record_rejection();
+        m.record_rejection("noisy");
         m.record_cancellation();
         m.record_cancellation();
         m.record_deadline_miss();
@@ -353,8 +470,10 @@ mod tests {
         assert_eq!(s.cancel_wakeups, 1);
         assert_eq!(s.lane_interactive_depth, 3);
         assert_eq!(s.lane_batch_depth, 7);
+        assert_eq!(s.rejections_by_matrix, vec![("noisy".to_string(), 1)]);
         let text = s.to_string();
         assert!(text.contains("rejected=1"), "{text}");
+        assert!(text.contains("rejected[noisy=1]"), "{text}");
         assert!(text.contains("cancelled=2"), "{text}");
         assert!(text.contains("deadline_missed=1"), "{text}");
         assert!(text.contains("cancel_wakeups=1"), "{text}");
@@ -379,6 +498,35 @@ mod tests {
         // Gauges overwrite.
         m.set_sched(1, 0, 0, 0);
         assert_eq!(m.snapshot().sched_blocks, 1);
+    }
+
+    #[test]
+    fn analysis_lifecycle_accounting() {
+        let m = Metrics::new();
+        // Without analysis activity the rendering is unchanged.
+        assert!(!m.snapshot().to_string().contains("analysis"));
+        m.record_analysis_cache(true);
+        m.record_analysis_cache(false);
+        m.record_value_refresh();
+        m.set_rebuilds(2, 1, 1, 3);
+        let s = m.snapshot();
+        assert_eq!(s.analysis_cache_hits, 1);
+        assert_eq!(s.analysis_cache_misses, 1);
+        assert_eq!(s.value_refreshes, 1);
+        assert_eq!(
+            (s.rewrite_passes, s.coarsen_passes, s.placement_passes, s.renumeric_passes),
+            (2, 1, 1, 3)
+        );
+        let text = s.to_string();
+        assert!(text.contains("analysis cache hit/miss=1/1"), "{text}");
+        assert!(text.contains("value_refreshes=1"), "{text}");
+        assert!(
+            text.contains("passes rewrite=2 coarsen=1 place=1 renumeric=3"),
+            "{text}"
+        );
+        // Gauges overwrite rather than accumulate.
+        m.set_rebuilds(0, 0, 0, 0);
+        assert_eq!(m.snapshot().coarsen_passes, 0);
     }
 
     #[test]

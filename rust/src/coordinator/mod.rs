@@ -10,12 +10,16 @@
 //!
 //! The client surface is fully typed: solve plans cross as
 //! [`crate::transform::PlanSpec`] (the two-axis `rewrite+exec` grammar,
-//! parsed once at the edge), failures as
+//! parsed once at the edge), registrations return a [`MatrixHandle`]
+//! backed by the service-resident shared [`crate::analysis::Analysis`]
+//! (with [`MatrixHandle::update_values`] refreshing numerics in place
+//! behind the batcher), failures as
 //! [`crate::error::ServiceError`], async solves as [`SolveTicket`]s with
 //! deadline/priority [`SolveOptions`] (cancellation wakes the service
 //! for an immediate queue sweep), multi-RHS blocks via
 //! [`SolveHandle::solve_many`], and admission is bounded by the
-//! `max_pending` config key.
+//! `max_pending` config key plus per-matrix
+//! [`RegisterOptions::max_pending`] overrides.
 //!
 //! * [`pipeline`] — prepare/caches matrices (the expensive offline step)
 //! * [`batcher`]  — per-lane RHS batching queue with deadlines
@@ -29,7 +33,8 @@ pub mod service;
 
 pub use batcher::Lane;
 pub use metrics::{Metrics, Snapshot};
-pub use pipeline::{Backend, Pipeline, Prepared};
+pub use pipeline::{AnalysisSource, Backend, Pipeline, Prepared};
 pub use service::{
-    BlockTicket, RegisterInfo, Service, SolveHandle, SolveOptions, SolveTicket, Ticket,
+    BlockTicket, MatrixHandle, RegisterInfo, RegisterOptions, Service, SolveHandle,
+    SolveOptions, SolveTicket, Ticket,
 };

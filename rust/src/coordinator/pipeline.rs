@@ -1,27 +1,31 @@
-//! Preprocessing pipeline: matrix -> levels -> solve plan -> transformed
-//! system -> execution backend -> (optionally) padded XLA system, cached
-//! per matrix id.
+//! Preprocessing pipeline: matrix -> [`Analysis`] (levels -> solve plan
+//! -> transformed system -> execution backend) -> (optionally) padded XLA
+//! system, cached per matrix id.
 //!
-//! When the configured (or per-register) plan is `auto`, the pipeline
-//! consults its persistent [`Tuner`]: the matrix fingerprint is looked up
-//! in the plan cache, and only unknown structures pay for the cost-model
-//! shortlist + race over the rewrite × exec cross product.
+//! Since the analyze/execute split, the pipeline *consumes analyses*
+//! instead of re-deriving transforms: the expensive structural work lives
+//! in [`crate::analysis`], the tuner's race donates its winning lane's
+//! already-built artifacts, a same-pattern value update
+//! ([`Pipeline::update_values`]) replays only the numerics, and — when
+//! the `analysis_cache` config key names a directory — persisted analyses
+//! let a known structure skip rewrite analysis, coarsening and ETF
+//! placement entirely, even across restarts.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::analysis::{Analysis, AnalysisCache, BuildCounters};
 use crate::config::Config;
 use crate::error::Error;
 use crate::runtime::backend::StagedSystem;
 use crate::runtime::{PaddedSystem, Registry, XlaSolver};
 use crate::sched::SchedOptions;
-use crate::solver::dispatch::ExecSolver;
 use crate::solver::pool::Pool;
 use crate::sparse::Csr;
-use crate::transform::{Exec, PlanSpec, ResolvedPlan, SolvePlan, TransformResult};
-use crate::tuner::{PlanSource, Tuner, TunerOptions};
+use crate::transform::{Exec, PlanSpec, ResolvedPlan, SolvePlan};
+use crate::tuner::{Fingerprint, PlanSource, Tuner, TunerOptions};
 
 /// Which backend serves a prepared matrix.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -31,6 +35,32 @@ pub enum Backend {
     Native,
     /// AOT XLA executable (artifact shape fitted)
     Xla,
+}
+
+/// Where a preparation's structural work came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AnalysisSource {
+    /// full analysis ran in this process (rewrite and, for scheduled
+    /// plans, coarsening + placement)
+    Fresh,
+    /// restored from the persistent analysis cache: zero rewrite /
+    /// coarsening / placement passes, numerics replayed only
+    DiskCache,
+    /// a same-pattern value refresh of an existing preparation
+    Refreshed,
+    /// a same-id re-registration returned the memoized preparation
+    Memoized,
+}
+
+impl AnalysisSource {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AnalysisSource::Fresh => "fresh",
+            AnalysisSource::DiskCache => "disk-cache",
+            AnalysisSource::Refreshed => "refreshed",
+            AnalysisSource::Memoized => "memoized",
+        }
+    }
 }
 
 /// How the tuner decided a prepared matrix's plan (None when the plan was
@@ -45,30 +75,44 @@ pub struct TunedInfo {
     pub fingerprint: String,
 }
 
-/// A matrix after preprocessing: everything the request path needs.
+/// A matrix after preprocessing: everything the request path needs. The
+/// structural heart is the shared [`Analysis`]; the pipeline adds the
+/// XLA fit on top.
 pub struct Prepared {
     pub id: String,
-    pub m: Arc<Csr>,
-    pub t: Arc<TransformResult>,
-    /// the execution backend the plan's exec axis calls for: level-set
-    /// executor, coarsened schedule, sync-free, or reordered (see
-    /// [`crate::solver::ExecSolver`])
-    pub native: ExecSolver,
+    /// the analysis artifact every registration of this id shares
+    pub analysis: Arc<Analysis>,
     pub padded: Option<Arc<PaddedSystem>>,
     /// system arrays pre-uploaded to the PJRT device (§Perf: avoids
     /// re-transferring megabytes of structure per request)
     pub staged: Option<StagedSystem>,
     pub backend: Backend,
-    /// the plan that produced `t` and `native` (the tuner's pick under
-    /// `auto`)
-    pub plan: SolvePlan,
-    /// plan label for logs/metrics (source text for named plans, the
-    /// canonical winner name under `auto`)
-    pub plan_name: String,
     /// tuner decision details when the plan was `auto`
     pub tuned: Option<TunedInfo>,
+    /// where the structural work came from
+    pub source: AnalysisSource,
     /// preprocessing wall-clock (the offline cost the paper discusses)
     pub prepare_time: std::time::Duration,
+}
+
+impl Prepared {
+    pub fn m(&self) -> &Arc<Csr> {
+        self.analysis.matrix()
+    }
+
+    pub fn plan(&self) -> &SolvePlan {
+        self.analysis.plan()
+    }
+
+    pub fn plan_name(&self) -> &str {
+        self.analysis.plan_name()
+    }
+
+    /// The native execution backend (always present; the XLA path falls
+    /// back to it).
+    pub fn native(&self) -> &crate::solver::dispatch::ExecSolver {
+        self.analysis.solver()
+    }
 }
 
 /// The config's scheduling knobs as the `SchedOptions` fallback every
@@ -87,6 +131,10 @@ pub struct Pipeline {
     cache: BTreeMap<String, Arc<Prepared>>,
     /// persistent plan autotuner consulted for `auto` registrations
     pub tuner: Tuner,
+    /// persisted-analysis cache (`analysis_cache` config key)
+    analysis_cache: Option<AnalysisCache>,
+    /// cumulative structural passes paid by this pipeline's preparations
+    counters: BuildCounters,
 }
 
 impl Pipeline {
@@ -126,17 +174,37 @@ impl Pipeline {
         } else {
             None
         };
+        let analysis_cache = if cfg.analysis_cache.is_empty() {
+            None
+        } else {
+            Some(AnalysisCache::new(Path::new(&cfg.analysis_cache)))
+        };
         Pipeline {
             cfg,
             pool,
             registry,
             cache: BTreeMap::new(),
             tuner,
+            analysis_cache,
+            counters: BuildCounters::default(),
         }
     }
 
     pub fn xla_solver(&self) -> Option<XlaSolver> {
         self.registry.as_ref().map(|r| XlaSolver::new(Arc::clone(r)))
+    }
+
+    /// Cumulative structural passes (rewrite / coarsen / placement /
+    /// renumeric) paid by every preparation this pipeline has built —
+    /// surfaced through the metrics snapshot so "the warm cache really
+    /// skipped the work" is observable, not asserted.
+    pub fn rebuild_counters(&self) -> BuildCounters {
+        self.counters
+    }
+
+    /// Whether a persistent analysis cache is configured.
+    pub fn has_analysis_cache(&self) -> bool {
+        self.analysis_cache.is_some()
     }
 
     /// Preprocess and cache a matrix under `id`. The plan arrives as an
@@ -157,62 +225,143 @@ impl Pipeline {
         // Arc the matrix up front: the tuner's race lanes and the solver
         // share it by reference count instead of copying.
         let m = Arc::new(m);
-        let (plan_name, plan, t, tuned) = match spec.resolve(&self.cfg.plan) {
+        let fingerprint = Fingerprint::of(&m);
+        let resolved = spec.resolve(&self.cfg.plan);
+
+        // When the plan is already known — fixed by name, or answered by
+        // a (non-counting) peek at the tuner's fingerprint cache — a
+        // persisted analysis can skip ALL structural work.
+        let mut warm: Option<(Arc<Analysis>, Option<TunedInfo>)> = None;
+        if let Some(cache) = &self.analysis_cache {
+            let known: Option<(String, SolvePlan, bool)> = match &resolved {
+                ResolvedPlan::Fixed(name, plan) => Some((name.clone(), plan.clone(), false)),
+                ResolvedPlan::Auto => self
+                    .tuner
+                    .peek_cached_plan(fingerprint)
+                    .and_then(|name| SolvePlan::parse(&name).ok().map(|p| (name, p, true))),
+            };
+            if let Some((name, plan, via_tuner)) = known {
+                if let Some(analysis) = cache.load(
+                    Arc::clone(&m),
+                    fingerprint,
+                    &plan,
+                    &self.pool,
+                    sched_fallback(&self.cfg),
+                ) {
+                    let tuned = via_tuner.then(|| TunedInfo {
+                        plan: name,
+                        cache_hit: true,
+                        fingerprint: fingerprint.to_hex(),
+                    });
+                    warm = Some((Arc::new(analysis), tuned));
+                }
+            }
+        }
+        if let Some((analysis, tuned)) = warm {
+            return self.finish(id, analysis, tuned, AnalysisSource::DiskCache, start);
+        }
+
+        // Full path: fixed plans build directly; `auto` consults the
+        // tuner, whose race donates the winning lane's artifacts.
+        let (analysis, tuned) = match resolved {
             ResolvedPlan::Auto => {
                 let tp = self.tuner.choose_arc(&m)?;
-                let info = TunedInfo {
+                let tuned = TunedInfo {
                     plan: tp.plan_name.clone(),
                     cache_hit: tp.source == PlanSource::CacheHit,
                     fingerprint: tp.fingerprint.to_hex(),
                 };
-                (tp.plan_name, tp.plan, tp.transform, Some(info))
+                let a = Analysis::from_tuned(
+                    Arc::clone(&m),
+                    tp,
+                    Arc::clone(&self.pool),
+                    sched_fallback(&self.cfg),
+                    start,
+                )?;
+                (a, Some(tuned))
             }
             ResolvedPlan::Fixed(name, plan) => {
-                let t = plan.apply(&m);
-                (name, plan, t, None)
+                let a = Analysis::build(
+                    Arc::clone(&m),
+                    fingerprint,
+                    name,
+                    plan,
+                    Arc::clone(&self.pool),
+                    sched_fallback(&self.cfg),
+                    start,
+                )?;
+                (a, None)
             }
         };
-        t.validate(&m).map_err(Error::Invalid)?;
+        if let Some(cache) = &self.analysis_cache {
+            if let Err(e) = cache.save(&analysis) {
+                eprintln!("warning: analysis cache save failed: {e}");
+            }
+        }
+        self.finish(id, Arc::new(analysis), tuned, AnalysisSource::Fresh, start)
+    }
 
-        let t = Arc::new(t);
+    /// Same-pattern value update for a registered matrix: the analysis is
+    /// refreshed next to the old one (callers drain in-flight work
+    /// against the old `Arc<Analysis>` first), the XLA fit is redone on
+    /// the new values, and the cache entry is swapped.
+    pub fn update_values(&mut self, id: &str, m: Csr) -> Result<Arc<Prepared>, Error> {
+        let start = Instant::now();
+        let Some(old) = self.cache.get(id).cloned() else {
+            return Err(Error::Invalid(format!("matrix '{id}' is not registered")));
+        };
+        let analysis = Arc::new(old.analysis.refreshed(&m)?);
+        // The refresh pays exactly one renumeric pass on top of whatever
+        // the original build paid.
+        self.counters.renumeric_passes += 1;
+        self.cache.remove(id);
+        self.finish(id, analysis, old.tuned.clone(), AnalysisSource::Refreshed, start)
+    }
+
+    /// Wrap an analysis into a served [`Prepared`]: account its build
+    /// passes, fit an XLA artifact when possible, cache it under `id`.
+    fn finish(
+        &mut self,
+        id: &str,
+        analysis: Arc<Analysis>,
+        tuned: Option<TunedInfo>,
+        source: AnalysisSource,
+        start: Instant,
+    ) -> Result<Arc<Prepared>, Error> {
+        if source != AnalysisSource::Refreshed {
+            // Refresh accounts its single renumeric pass at the call
+            // site; everything else contributes its full build record.
+            self.counters = self.counters + analysis.rebuilds();
+        }
         // Fit an XLA artifact if the registry is present, and stage the
         // system arrays on the device. Only level-set execution is
         // XLA-eligible: the padded level solve would silently discard the
         // schedule / sync-free counters / reordering other exec axes were
         // chosen for. The rewrite axis composes either way.
-        let xla_eligible = matches!(plan.exec, Exec::Levelset);
+        let xla_eligible = matches!(analysis.plan().exec, Exec::Levelset);
         let mut backend = Backend::Native;
         let mut padded = None;
         let mut staged = None;
         if let (Some(reg), true) = (&self.registry, xla_eligible) {
-            let req = PaddedSystem::requirements(&m, &t);
+            let m = analysis.matrix();
+            let t = analysis.transform();
+            let req = PaddedSystem::requirements(m, t);
             if let Some(meta) = reg.best_fit("solve", &req) {
-                let p = PaddedSystem::build(&m, &t, meta.pad_shape())?;
+                let p = PaddedSystem::build(m, t, meta.pad_shape())?;
                 let solver = XlaSolver::new(Arc::clone(reg));
                 staged = Some(solver.stage(&p)?);
                 padded = Some(Arc::new(p));
                 backend = Backend::Xla;
             }
         }
-        // Scheduling knobs the plan left unset come from the config.
-        let native = ExecSolver::build(
-            Arc::clone(&m),
-            Arc::clone(&t),
-            &plan.exec,
-            Arc::clone(&self.pool),
-            sched_fallback(&self.cfg),
-        )?;
         let prepared = Arc::new(Prepared {
             id: id.to_string(),
-            m,
-            t,
-            native,
+            analysis,
             padded,
             staged,
             backend,
-            plan,
-            plan_name,
             tuned,
+            source,
             prepare_time: start.elapsed(),
         });
         self.cache.insert(id.to_string(), Arc::clone(&prepared));
@@ -236,6 +385,7 @@ impl Pipeline {
 mod tests {
     use super::*;
     use crate::sparse::generate;
+    use crate::util::rng::Rng;
 
     fn cfg() -> Config {
         Config {
@@ -256,7 +406,8 @@ mod tests {
         let n = m.nrows;
         let p = pl.prepare("lung2", m, &PlanSpec::Default).unwrap();
         assert_eq!(p.backend, Backend::Native);
-        assert!(p.t.stats.levels_after < p.t.stats.levels_before);
+        assert_eq!(p.source, AnalysisSource::Fresh);
+        assert!(p.analysis.transform().stats.levels_after < p.analysis.transform().stats.levels_before);
         // Cache hit returns the same Arc.
         let p2 = pl.prepare(
             "lung2",
@@ -266,8 +417,8 @@ mod tests {
         assert!(Arc::ptr_eq(&p, &p2.unwrap()));
         // And it solves.
         let b = vec![1.0; n];
-        let x = p.native.solve(&b);
-        assert!(p.m.residual_inf(&x, &b) < 1e-9);
+        let x = p.native().solve(&b);
+        assert!(p.m().residual_inf(&x, &b) < 1e-9);
     }
 
     #[test]
@@ -281,24 +432,27 @@ mod tests {
         let p1 = pl.prepare("a", m.clone(), &spec("auto")).unwrap();
         let t1 = p1.tuned.as_ref().expect("auto decision recorded");
         assert!(!t1.cache_hit);
-        assert_eq!(t1.plan, p1.plan_name);
+        assert_eq!(t1.plan, p1.plan_name());
         assert_eq!(t1.fingerprint.len(), 16);
         // The tuned decision is a full two-axis plan.
-        assert_eq!(SolvePlan::parse(&t1.plan).unwrap(), p1.plan);
+        assert_eq!(&SolvePlan::parse(&t1.plan).unwrap(), p1.plan());
         // Same structure under a new id: the fingerprint cache answers.
         let p2 = pl.prepare("b", m.clone(), &spec("auto")).unwrap();
         let t2 = p2.tuned.as_ref().unwrap();
         assert!(t2.cache_hit);
         assert_eq!(t2.plan, t1.plan);
-        assert_eq!(p2.t.stats.levels_after, p1.t.stats.levels_after);
+        assert_eq!(
+            p2.analysis.transform().stats.levels_after,
+            p1.analysis.transform().stats.levels_after
+        );
         // And the plan solves correctly.
         let b = vec![1.0; n];
-        let x = p2.native.solve(&b);
-        assert!(p2.m.residual_inf(&x, &b) < 1e-9);
+        let x = p2.native().solve(&b);
+        assert!(p2.m().residual_inf(&x, &b) < 1e-9);
         // Fixed-name registrations carry no tuner decision.
         let p3 = pl.prepare("c", m, &spec("none")).unwrap();
         assert!(p3.tuned.is_none());
-        assert_eq!(p3.plan_name, "none");
+        assert_eq!(p3.plan_name(), "none");
     }
 
     #[test]
@@ -306,7 +460,7 @@ mod tests {
         let mut pl = Pipeline::new(cfg());
         let m = generate::tridiagonal(50, &Default::default());
         let p = pl.prepare("tri", m, &spec("manual:5")).unwrap();
-        assert_eq!(p.t.num_levels(), 10);
+        assert_eq!(p.analysis.transform().num_levels(), 10);
     }
 
     #[test]
@@ -319,19 +473,24 @@ mod tests {
         let m = generate::tridiagonal(120, &Default::default());
         let p = pl.prepare("tri", m, &spec("scheduled")).unwrap();
         assert_eq!(p.backend, Backend::Native);
-        assert_eq!(p.native.mode(), "scheduled");
-        let sched = p.native.scheduled().expect("scheduled solver");
+        assert_eq!(p.native().mode(), "scheduled");
+        let sched = p.native().scheduled().expect("scheduled solver");
         // A pure chain collapses into one block with no cross-worker
         // edges — the schedule-level win over 119 barriers.
         assert_eq!(sched.stats().num_blocks, 1);
         assert_eq!(sched.stats().cut_edges, 0);
         assert_eq!(sched.stats().levelset_barriers, 119);
         let b = vec![1.0; 120];
-        let x = p.native.solve(&b);
-        assert!(p.m.residual_inf(&x, &b) < 1e-10);
+        let x = p.native().solve(&b);
+        assert!(p.m().residual_inf(&x, &b) < 1e-10);
         // No rewriting happened: the legacy name pairs with `none`.
-        assert_eq!(p.t.stats.rows_rewritten, 0);
-        assert_eq!(p.plan_name, "scheduled");
+        assert_eq!(p.analysis.transform().stats.rows_rewritten, 0);
+        assert_eq!(p.plan_name(), "scheduled");
+        // The build paid one coarsening and one placement pass — visible
+        // in the pipeline's cumulative counters.
+        let c = pl.rebuild_counters();
+        assert_eq!(c.coarsen_passes, 1);
+        assert_eq!(c.placement_passes, 1);
     }
 
     #[test]
@@ -341,15 +500,15 @@ mod tests {
         let m = generate::lung2_like(&generate::GenOptions::with_scale(0.03));
         let n = m.nrows;
         let p = pl.prepare("c", m, &spec("avgcost+scheduled")).unwrap();
-        assert_eq!(p.native.mode(), "scheduled");
-        assert!(p.t.stats.rows_rewritten > 0, "rewrite axis ran");
-        assert!(p.t.num_levels() < p.t.stats.levels_before);
+        assert_eq!(p.native().mode(), "scheduled");
+        assert!(p.analysis.transform().stats.rows_rewritten > 0, "rewrite axis ran");
+        assert!(p.analysis.transform().num_levels() < p.analysis.transform().stats.levels_before);
         // The schedule was built over the *transformed* levels.
-        let sched = p.native.scheduled().unwrap();
-        assert_eq!(sched.t.num_levels(), p.t.num_levels());
+        let sched = p.native().scheduled().unwrap();
+        assert_eq!(sched.t.num_levels(), p.analysis.transform().num_levels());
         let b = vec![1.0; n];
-        let x = p.native.solve(&b);
-        assert!(p.m.residual_inf(&x, &b) < 1e-9);
+        let x = p.native().solve(&b);
+        assert!(p.m().residual_inf(&x, &b) < 1e-9);
     }
 
     #[test]
@@ -365,11 +524,84 @@ mod tests {
             ("c2", "guarded:5+reorder", "reordered"),
         ] {
             let p = pl.prepare(id, m.clone(), &spec(s)).unwrap();
-            assert_eq!(p.native.mode(), mode, "{s}");
+            assert_eq!(p.native().mode(), mode, "{s}");
             let b = vec![1.0; n];
-            let x = p.native.solve(&b);
-            assert!(p.m.residual_inf(&x, &b) < 1e-9, "{s}");
+            let x = p.native().solve(&b);
+            assert!(p.m().residual_inf(&x, &b) < 1e-9, "{s}");
         }
+    }
+
+    #[test]
+    fn update_values_refreshes_in_place_without_structural_work() {
+        let mut pl = Pipeline::new(cfg());
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.03));
+        let n = m.nrows;
+        let p = pl.prepare("m", m.clone(), &spec("avgcost+scheduled")).unwrap();
+        let before = pl.rebuild_counters();
+        let sched_ptr = Arc::as_ptr(p.analysis.schedule().unwrap());
+
+        // Same pattern, new values (a refreshed factorization).
+        let mut m2 = m.clone();
+        let mut rng = Rng::new(3);
+        for v in &mut m2.data {
+            *v *= 1.0 + 0.1 * rng.uniform(-1.0, 1.0);
+        }
+        let p2 = pl.update_values("m", m2.clone()).unwrap();
+        assert_eq!(p2.source, AnalysisSource::Refreshed);
+        // No structural pass ran; one numeric replay did.
+        let after = pl.rebuild_counters();
+        assert_eq!(after.rewrite_passes, before.rewrite_passes);
+        assert_eq!(after.coarsen_passes, before.coarsen_passes);
+        assert_eq!(after.placement_passes, before.placement_passes);
+        assert_eq!(after.renumeric_passes, before.renumeric_passes + 1);
+        // The very schedule object survived the refresh.
+        assert_eq!(Arc::as_ptr(p2.analysis.schedule().unwrap()), sched_ptr);
+        // And the refreshed preparation solves the NEW system.
+        let b = vec![1.0; n];
+        let x = p2.native().solve(&b);
+        assert!(m2.residual_inf(&x, &b) < 1e-9);
+        // The old Arc still solves the OLD system (in-flight requests
+        // taken before the swap drain against it).
+        let x_old = p.native().solve(&b);
+        assert!(m.residual_inf(&x_old, &b) < 1e-9);
+
+        // Pattern changes are rejected, unknown ids are rejected.
+        assert!(pl
+            .update_values("m", generate::tridiagonal(7, &Default::default()))
+            .is_err());
+        assert!(pl.update_values("ghost", m).is_err());
+    }
+
+    #[test]
+    fn analysis_cache_round_trips_across_pipelines() {
+        let dir = std::env::temp_dir().join(format!("sptrsv_plcache_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cache_cfg = Config {
+            analysis_cache: dir.to_str().unwrap().to_string(),
+            ..cfg()
+        };
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.03));
+        let n = m.nrows;
+        {
+            let mut pl = Pipeline::new(cache_cfg.clone());
+            let p = pl.prepare("a", m.clone(), &spec("avgcost+scheduled")).unwrap();
+            assert_eq!(p.source, AnalysisSource::Fresh);
+            assert!(pl.rebuild_counters().coarsen_passes > 0);
+        }
+        // A fresh pipeline (fresh process) warm-loads the persisted
+        // analysis: zero structural passes, correct solves.
+        let mut pl2 = Pipeline::new(cache_cfg);
+        let p = pl2.prepare("b", m.clone(), &spec("avgcost+scheduled")).unwrap();
+        assert_eq!(p.source, AnalysisSource::DiskCache);
+        let c = pl2.rebuild_counters();
+        assert_eq!(c.rewrite_passes, 0);
+        assert_eq!(c.coarsen_passes, 0);
+        assert_eq!(c.placement_passes, 0);
+        assert_eq!(c.renumeric_passes, 1);
+        let b = vec![1.0; n];
+        let x = p.native().solve(&b);
+        assert!(m.residual_inf(&x, &b) < 1e-9);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -23,8 +23,8 @@ use std::time::{Duration, Instant};
 use crate::config::Config;
 use crate::coordinator::batcher::{Batcher, Lane, Pending};
 use crate::coordinator::metrics::{Metrics, Snapshot};
-use crate::coordinator::pipeline::{Backend, Pipeline, Prepared};
-use crate::error::ServiceError;
+use crate::coordinator::pipeline::{AnalysisSource, Backend, Pipeline, Prepared};
+use crate::error::{Error, ServiceError};
 use crate::runtime::XlaSolver;
 use crate::sparse::Csr;
 use crate::transform::PlanSpec;
@@ -186,11 +186,60 @@ impl Reply {
     }
 }
 
+/// Per-registration options. The plan is the headline choice; the rest
+/// are per-matrix serving policies layered on top of the global config.
+///
+/// ```
+/// use sptrsv_gt::coordinator::RegisterOptions;
+/// use sptrsv_gt::transform::PlanSpec;
+///
+/// let opts = RegisterOptions::new()
+///     .plan(PlanSpec::parse("avgcost+scheduled").unwrap())
+///     .max_pending(64);
+/// # let _ = opts;
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct RegisterOptions {
+    /// solve plan; [`PlanSpec::Default`] defers to the configured
+    /// service-wide plan
+    pub plan: PlanSpec,
+    /// per-matrix admission cap, counted in queued right-hand sides for
+    /// this id only; `None` leaves only the global `max_pending` cap.
+    /// Rejections are charged to the matrix in the metrics.
+    pub max_pending: Option<usize>,
+}
+
+impl RegisterOptions {
+    pub fn new() -> RegisterOptions {
+        RegisterOptions::default()
+    }
+
+    pub fn plan(mut self, plan: PlanSpec) -> RegisterOptions {
+        self.plan = plan;
+        self
+    }
+
+    /// Cap this matrix's queued right-hand sides (admission control per
+    /// handle, on top of the global `max_pending`).
+    pub fn max_pending(mut self, cap: usize) -> RegisterOptions {
+        self.max_pending = Some(cap);
+        self
+    }
+}
+
 enum Request {
     Register {
         id: String,
         matrix: Box<Csr>,
-        plan: PlanSpec,
+        opts: RegisterOptions,
+        reply: Sender<Result<RegisterInfo, ServiceError>>,
+    },
+    /// same-pattern numeric refresh of a registered matrix: queued work
+    /// for the id drains against the old analysis first, then the
+    /// pipeline swaps in the re-numeric'd one
+    UpdateValues {
+        id: String,
+        matrix: Box<Csr>,
         reply: Sender<Result<RegisterInfo, ServiceError>>,
     },
     Solve {
@@ -209,7 +258,7 @@ enum Request {
     Shutdown,
 }
 
-/// What `register` reports back (preprocessing summary).
+/// What `register` / `update_values` report back (preprocessing summary).
 #[derive(Debug, Clone)]
 pub struct RegisterInfo {
     pub levels_before: usize,
@@ -223,7 +272,78 @@ pub struct RegisterInfo {
     /// for fixed strategies and for same-id re-registrations, which
     /// return the memoized preparation without consulting the tuner
     pub tuner_cache_hit: Option<bool>,
+    /// where the structural work came from: a fresh analysis, the
+    /// persistent analysis cache (zero coarsening/placement), a value
+    /// refresh, or the memoized same-id preparation
+    pub source: AnalysisSource,
     pub prepare_ms: f64,
+}
+
+/// A registered matrix, as the client holds it: the typed per-matrix
+/// surface over the service-resident shared `Arc<Analysis>`. Cheap to
+/// clone; all clones address the same server-side analysis, and
+/// [`MatrixHandle::update_values`] swaps that analysis in place for every
+/// holder at once (in-flight solves drain against the old one first).
+///
+/// Derefs to the registration-time [`RegisterInfo`] snapshot for
+/// convenience (`handle.levels_after`, `handle.plan`, ...).
+#[derive(Clone)]
+pub struct MatrixHandle {
+    id: String,
+    handle: SolveHandle,
+    info: Arc<RegisterInfo>,
+}
+
+impl MatrixHandle {
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    /// The registration-time preprocessing summary.
+    pub fn info(&self) -> &RegisterInfo {
+        &self.info
+    }
+
+    /// Blocking solve with default options (batch lane, no deadline).
+    pub fn solve(&self, b: Vec<f64>) -> Result<Vec<f64>, ServiceError> {
+        self.handle.solve(&self.id, b)
+    }
+
+    /// Blocking solve with explicit [`SolveOptions`].
+    pub fn solve_with(&self, b: Vec<f64>, opts: SolveOptions) -> Result<Vec<f64>, ServiceError> {
+        self.handle.solve_with(&self.id, b, opts)
+    }
+
+    /// Asynchronous solve: returns a [`SolveTicket`] immediately.
+    pub fn solve_async(
+        &self,
+        b: Vec<f64>,
+        opts: SolveOptions,
+    ) -> Result<SolveTicket, ServiceError> {
+        self.handle.solve_async(&self.id, b, opts)
+    }
+
+    /// Submit a block of right-hand sides as one unit.
+    pub fn solve_many(
+        &self,
+        bs: Vec<Vec<f64>>,
+        opts: SolveOptions,
+    ) -> Result<BlockTicket, ServiceError> {
+        self.handle.solve_many(&self.id, bs, opts)
+    }
+
+    /// Same-pattern numeric refresh: see [`SolveHandle::update_values`].
+    pub fn update_values(&self, matrix: Csr) -> Result<RegisterInfo, ServiceError> {
+        self.handle.update_values(&self.id, matrix)
+    }
+}
+
+impl std::ops::Deref for MatrixHandle {
+    type Target = RegisterInfo;
+
+    fn deref(&self) -> &RegisterInfo {
+        &self.info
+    }
 }
 
 #[derive(Clone)]
@@ -235,19 +355,55 @@ impl SolveHandle {
     /// Preprocess and register a matrix under `id`. The plan arrives
     /// pre-parsed: pass [`PlanSpec::Default`] to use the service's
     /// configured plan, [`PlanSpec::Auto`] for the tuner, or
-    /// `PlanSpec::parse("avgcost+scheduled")?` etc.
+    /// `PlanSpec::parse("avgcost+scheduled")?` etc. Returns a
+    /// [`MatrixHandle`] addressing the service-side shared analysis.
     pub fn register(
         &self,
         id: &str,
         matrix: Csr,
         plan: PlanSpec,
-    ) -> Result<RegisterInfo, ServiceError> {
+    ) -> Result<MatrixHandle, ServiceError> {
+        self.register_with(id, matrix, RegisterOptions::new().plan(plan))
+    }
+
+    /// [`SolveHandle::register`] with the full [`RegisterOptions`]
+    /// surface (per-matrix admission cap, ...).
+    pub fn register_with(
+        &self,
+        id: &str,
+        matrix: Csr,
+        opts: RegisterOptions,
+    ) -> Result<MatrixHandle, ServiceError> {
         let (tx, rx) = mpsc::channel();
         self.tx
             .send(Request::Register {
                 id: id.to_string(),
                 matrix: Box::new(matrix),
-                plan,
+                opts,
+                reply: tx,
+            })
+            .map_err(|_| ServiceError::Shutdown)?;
+        let info = rx.recv().map_err(|_| ServiceError::Shutdown)??;
+        Ok(MatrixHandle {
+            id: id.to_string(),
+            handle: self.clone(),
+            info: Arc::new(info),
+        })
+    }
+
+    /// Refresh a registered matrix's numeric values in place. The
+    /// sparsity pattern must match the registration
+    /// (fingerprint-checked, `InvalidRequest` otherwise). Queued solves
+    /// for the id are dispatched against the **old** values first — a
+    /// request submitted before the update never sees the new numerics —
+    /// then the analysis is re-numeric'd without re-running rewrite
+    /// analysis, coarsening or placement.
+    pub fn update_values(&self, id: &str, matrix: Csr) -> Result<RegisterInfo, ServiceError> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Request::UpdateValues {
+                id: id.to_string(),
+                matrix: Box::new(matrix),
                 reply: tx,
             })
             .map_err(|_| ServiceError::Shutdown)?;
@@ -386,6 +542,28 @@ struct Waiting {
     cancelled: Arc<AtomicBool>,
 }
 
+/// Build a [`RegisterInfo`] from a preparation.
+fn register_info(p: &Prepared, fresh: bool, source: AnalysisSource) -> RegisterInfo {
+    let stats = &p.analysis.transform().stats;
+    RegisterInfo {
+        levels_before: stats.levels_before,
+        levels_after: stats.levels_after,
+        rows_rewritten: stats.rows_rewritten,
+        backend: match p.backend {
+            Backend::Native => "native",
+            Backend::Xla => "xla",
+        },
+        plan: p.plan_name().to_string(),
+        tuner_cache_hit: if fresh {
+            p.tuned.as_ref().map(|t| t.cache_hit)
+        } else {
+            None
+        },
+        source,
+        prepare_ms: p.prepare_time.as_secs_f64() * 1e3,
+    }
+}
+
 fn service_loop(cfg: Config, rx: Receiver<Request>) {
     let max_pending = cfg.max_pending;
     let mut pipeline = Pipeline::new(cfg.clone());
@@ -396,6 +574,8 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
         Duration::from_micros(cfg.batch_deadline_us),
     );
     let mut prepared: BTreeMap<String, Arc<Prepared>> = BTreeMap::new();
+    // Per-matrix admission caps (RegisterOptions::max_pending overrides).
+    let mut matrix_caps: BTreeMap<String, usize> = BTreeMap::new();
 
     loop {
         // Wait for work, but never past the oldest batching deadline.
@@ -419,7 +599,7 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
             Some(Request::Register {
                 id,
                 matrix,
-                plan,
+                opts,
                 reply,
             }) => {
                 // A same-id re-registration returns the memoized
@@ -427,33 +607,75 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                 // decisions in the metrics.
                 let fresh = !prepared.contains_key(&id);
                 let res = pipeline
-                    .prepare(&id, *matrix, &plan)
+                    .prepare(&id, *matrix, &opts.plan)
                     .map(|p| {
                         if fresh {
                             if let Some(tuned) = &p.tuned {
                                 metrics.record_tuner_choice(&tuned.plan, tuned.cache_hit);
                             }
+                            if pipeline.has_analysis_cache() {
+                                metrics.record_analysis_cache(
+                                    p.source == AnalysisSource::DiskCache,
+                                );
+                            }
+                        }
+                        // Cap bookkeeping: a fresh registration states the
+                        // matrix's policy outright; a memoized same-id
+                        // re-registration only changes the cap when it
+                        // explicitly carries one (a defensive re-register
+                        // with plain defaults must not silently drop a
+                        // previously configured cap).
+                        match (opts.max_pending, fresh) {
+                            (Some(cap), _) => {
+                                matrix_caps.insert(id.clone(), cap);
+                            }
+                            (None, true) => {
+                                matrix_caps.remove(&id);
+                            }
+                            (None, false) => {}
                         }
                         prepared.insert(id.clone(), Arc::clone(&p));
-                        RegisterInfo {
-                            levels_before: p.t.stats.levels_before,
-                            levels_after: p.t.stats.levels_after,
-                            rows_rewritten: p.t.stats.rows_rewritten,
-                            backend: match p.backend {
-                                Backend::Native => "native",
-                                Backend::Xla => "xla",
-                            },
-                            plan: p.plan_name.clone(),
-                            tuner_cache_hit: if fresh {
-                                p.tuned.as_ref().map(|t| t.cache_hit)
-                            } else {
-                                None
-                            },
-                            prepare_ms: p.prepare_time.as_secs_f64() * 1e3,
-                        }
+                        let source = if fresh {
+                            p.source
+                        } else {
+                            AnalysisSource::Memoized
+                        };
+                        register_info(&p, fresh, source)
                     })
                     .map_err(|e| ServiceError::Backend(e.to_string()));
                 let _ = reply.send(res);
+            }
+            Some(Request::UpdateValues { id, matrix, reply }) => {
+                if !prepared.contains_key(&id) {
+                    let _ = reply.send(Err(ServiceError::NotRegistered(id)));
+                } else {
+                    // Drain every queued request for this id against the
+                    // OLD analysis first: work admitted before the update
+                    // must never see the new numerics mid-batch.
+                    if let Some(old) = prepared.get(&id) {
+                        loop {
+                            let batch = batcher.take(&id);
+                            if batch.is_empty() {
+                                break;
+                            }
+                            dispatch(old, batch, &xla, &metrics);
+                        }
+                    }
+                    let res = pipeline
+                        .update_values(&id, *matrix)
+                        .map(|p| {
+                            metrics.record_value_refresh();
+                            prepared.insert(id.clone(), Arc::clone(&p));
+                            register_info(&p, false, AnalysisSource::Refreshed)
+                        })
+                        .map_err(|e| match e {
+                            // Pattern mismatch (and kin) is the caller's
+                            // bug, not a backend failure.
+                            Error::Invalid(msg) => ServiceError::InvalidRequest(msg),
+                            other => ServiceError::Backend(other.to_string()),
+                        });
+                    let _ = reply.send(res);
+                }
             }
             Some(Request::Solve {
                 id,
@@ -464,8 +686,11 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                 lane,
                 cancelled,
             }) => {
-                let nrows = prepared.get(&id).map(|p| p.m.nrows);
+                let nrows = prepared.get(&id).map(|p| p.m().nrows);
                 let pending = batcher.pending();
+                // Per-matrix cap, when the registration set one.
+                let cap = matrix_caps.get(&id).copied().filter(|&c| c > 0);
+                let matrix_pending = cap.map(|_| batcher.matrix_pending(&id));
                 match nrows {
                     None => {
                         metrics.record_error();
@@ -492,10 +717,21 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                         )));
                     }
                     Some(_) if max_pending > 0 && pending + rhs.len() > max_pending => {
-                        metrics.record_rejection();
+                        metrics.record_rejection(&id);
                         reply.send_err(ServiceError::Overloaded {
                             pending,
                             max_pending,
+                        });
+                    }
+                    Some(_)
+                        if cap.is_some_and(|c| {
+                            matrix_pending.unwrap_or(0) + rhs.len() > c
+                        }) =>
+                    {
+                        metrics.record_rejection(&id);
+                        reply.send_err(ServiceError::Overloaded {
+                            pending: matrix_pending.unwrap_or(0),
+                            max_pending: cap.unwrap_or(0),
                         });
                     }
                     Some(_) => {
@@ -530,7 +766,7 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                 // cumulative elastic wait/lookahead counters per solver.
                 let (mut blocks, mut cut, mut waits, mut ooo) = (0u64, 0u64, 0u64, 0u64);
                 for p in prepared.values() {
-                    if let Some(s) = p.native.scheduled() {
+                    if let Some(s) = p.native().scheduled() {
                         let st = s.stats();
                         blocks += st.num_blocks as u64;
                         cut += st.cut_edges as u64;
@@ -540,6 +776,15 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                     }
                 }
                 metrics.set_sched(blocks, cut, waits, ooo);
+                // Mirror the pipeline's cumulative structural-pass
+                // counters: a warm analysis cache is *observably* free.
+                let c = pipeline.rebuild_counters();
+                metrics.set_rebuilds(
+                    c.rewrite_passes,
+                    c.coarsen_passes,
+                    c.placement_passes,
+                    c.renumeric_passes,
+                );
                 let _ = tx.send(metrics.snapshot());
             }
             None => {} // timeout: fall through to flush
@@ -646,8 +891,8 @@ fn solve_rhs(p: &Prepared, xla: &Option<XlaSolver>, b: &[f64]) -> Vec<f64> {
     match (p.backend, xla, &p.padded, &p.staged) {
         (Backend::Xla, Some(solver), Some(padded), Some(staged)) => solver
             .solve_staged(staged, padded, b)
-            .unwrap_or_else(|_| p.native.solve(b)),
-        _ => p.native.solve(b),
+            .unwrap_or_else(|_| p.native().solve(b)),
+        _ => p.native().solve(b),
     }
 }
 
@@ -1028,6 +1273,179 @@ mod tests {
         assert_eq!(snap.lane_interactive_depth, 1);
         assert_eq!(snap.lane_batch_depth, 1);
         svc.shutdown();
+    }
+
+    #[test]
+    fn update_values_refreshes_behind_the_batcher() {
+        let svc = Service::start(test_cfg());
+        let h = svc.handle();
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.02));
+        let n = m.nrows;
+        let handle = h
+            .register("m", m.clone(), spec("avgcost+scheduled"))
+            .unwrap();
+        assert_eq!(handle.source, crate::coordinator::AnalysisSource::Fresh);
+        assert_eq!(handle.id(), "m");
+        let b = vec![1.0; n];
+        let x = handle.solve(b.clone()).unwrap();
+        assert!(m.residual_inf(&x, &b) < 1e-9);
+
+        // Refresh with perturbed values: same pattern, new numerics.
+        let mut m2 = m.clone();
+        for v in &mut m2.data {
+            *v *= 1.25;
+        }
+        let info = handle.update_values(m2.clone()).unwrap();
+        assert_eq!(info.source, crate::coordinator::AnalysisSource::Refreshed);
+        assert_eq!(info.plan, handle.plan, "plan survives the refresh");
+        // Solves now target the refreshed system, through the same handle.
+        let x2 = handle.solve(b.clone()).unwrap();
+        assert!(m2.residual_inf(&x2, &b) < 1e-9);
+        assert!(m.residual_inf(&x2, &b) > 1e-3, "values really changed");
+
+        // A changed sparsity pattern is the caller's error, typed.
+        let other = generate::tridiagonal(n, &Default::default());
+        assert!(matches!(
+            handle.update_values(other),
+            Err(ServiceError::InvalidRequest(_))
+        ));
+        // Unknown ids are NotRegistered.
+        assert_eq!(
+            h.update_values("ghost", m.clone()),
+            Err(ServiceError::NotRegistered("ghost".into()))
+        );
+
+        let snap = h.metrics().unwrap();
+        assert_eq!(snap.value_refreshes, 1);
+        // The refresh paid a renumeric pass but no structural pass beyond
+        // the original registration's.
+        assert_eq!(snap.renumeric_passes, 1);
+        assert_eq!(snap.coarsen_passes, 1);
+        assert_eq!(snap.placement_passes, 1);
+        assert!(snap.to_string().contains("value_refreshes=1"));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn queued_solves_drain_against_old_values_before_a_refresh() {
+        // A minute-long batching deadline: queued work only dispatches
+        // when something forces it — here, the update_values drain.
+        let svc = Service::start(Config {
+            batch_size: 100,
+            batch_deadline_us: 60_000_000,
+            ..test_cfg()
+        });
+        let h = svc.handle();
+        let m = generate::tridiagonal(40, &Default::default());
+        let handle = h.register("t", m.clone(), spec("none")).unwrap();
+        let b = vec![1.0; 40];
+        let t1 = handle.solve_async(b.clone(), SolveOptions::default()).unwrap();
+        // Scale the whole system by 4: solutions under the new values
+        // differ from the old by 4x.
+        let mut m2 = m.clone();
+        for v in &mut m2.data {
+            *v *= 4.0;
+        }
+        handle.update_values(m2.clone()).unwrap();
+        // The queued request was served against the OLD matrix.
+        let x1 = t1.wait().unwrap();
+        assert!(m.residual_inf(&x1, &b) < 1e-10, "pre-update request saw new values");
+        // A request submitted after the update sees the new matrix.
+        let x2 = handle.solve(b.clone()).unwrap();
+        assert!(m2.residual_inf(&x2, &b) < 1e-10);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn per_matrix_max_pending_overrides_and_is_charged_to_the_matrix() {
+        let svc = Service::start(Config {
+            max_pending: 100, // generous global cap
+            batch_size: 100,
+            batch_deadline_us: 60_000_000,
+            ..test_cfg()
+        });
+        let h = svc.handle();
+        let m = generate::tridiagonal(30, &Default::default());
+        let capped = h
+            .register_with(
+                "capped",
+                m.clone(),
+                RegisterOptions::new()
+                    .plan(spec("none"))
+                    .max_pending(1),
+            )
+            .unwrap();
+        let free = h.register("free", m.clone(), spec("none")).unwrap();
+
+        let _q1 = capped
+            .solve_async(vec![1.0; 30], SolveOptions::default())
+            .unwrap();
+        // Second request for the capped matrix bounces with the
+        // per-matrix numbers, well under the global cap.
+        let q2 = capped
+            .solve_async(vec![2.0; 30], SolveOptions::default())
+            .unwrap();
+        assert_eq!(
+            q2.wait(),
+            Err(ServiceError::Overloaded {
+                pending: 1,
+                max_pending: 1
+            })
+        );
+        // The uncapped matrix is unaffected.
+        let f1 = free
+            .solve_async(vec![3.0; 30], SolveOptions::default())
+            .unwrap();
+        assert_eq!(f1.wait_timeout(Duration::from_millis(100)), None);
+
+        let snap = h.metrics().unwrap();
+        assert_eq!(snap.rejections, 1);
+        assert_eq!(snap.rejections_by_matrix, vec![("capped".to_string(), 1)]);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn warm_analysis_cache_registration_skips_coarsening_and_placement() {
+        let dir = std::env::temp_dir().join(format!(
+            "sptrsv_svc_acache_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = Config {
+            analysis_cache: dir.to_str().unwrap().to_string(),
+            ..test_cfg()
+        };
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.02));
+        let n = m.nrows;
+        {
+            let svc = Service::start(cfg.clone());
+            let h = svc.handle();
+            let info = h.register("cold", m.clone(), spec("avgcost+scheduled")).unwrap();
+            assert_eq!(info.source, crate::coordinator::AnalysisSource::Fresh);
+            let snap = h.metrics().unwrap();
+            assert_eq!(snap.analysis_cache_misses, 1);
+            assert!(snap.coarsen_passes > 0);
+            svc.shutdown();
+        }
+        // A fresh service (restart) re-registers the known structure:
+        // zero coarsening, zero placement, zero rewrite analysis — the
+        // counter-asserted acceptance criterion.
+        let svc = Service::start(cfg);
+        let h = svc.handle();
+        let handle = h.register("warm", m.clone(), spec("avgcost+scheduled")).unwrap();
+        assert_eq!(handle.source, crate::coordinator::AnalysisSource::DiskCache);
+        let b = vec![1.0; n];
+        let x = handle.solve(b.clone()).unwrap();
+        assert!(m.residual_inf(&x, &b) < 1e-9);
+        let snap = h.metrics().unwrap();
+        assert_eq!(snap.analysis_cache_hits, 1);
+        assert_eq!(snap.coarsen_passes, 0, "warm registration coarsened");
+        assert_eq!(snap.placement_passes, 0, "warm registration placed");
+        assert_eq!(snap.rewrite_passes, 0, "warm registration rewrote");
+        assert_eq!(snap.renumeric_passes, 1);
+        assert!(snap.to_string().contains("analysis cache hit/miss=1/0"));
+        svc.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

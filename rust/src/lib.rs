@@ -14,18 +14,18 @@
 //! * **L2/L1 (python/compile, build-time only)** — JAX padded-level solve
 //!   over a Pallas level kernel, AOT-lowered to `artifacts/*.hlo.txt`.
 //!
-//! Quick start — library use (transform once, solve many):
+//! Quick start — library use (analyze once, solve many):
 //! ```no_run
+//! use sptrsv_gt::analysis::{analyze, AnalyzeOptions};
 //! use sptrsv_gt::sparse::generate;
-//! use sptrsv_gt::transform::SolvePlan;
-//! use sptrsv_gt::solver::executor::TransformedSolver;
+//! use sptrsv_gt::transform::PlanSpec;
 //!
 //! let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
-//! let t = SolvePlan::parse("avgcost").unwrap().apply(&m);
-//! println!("levels {} -> {}", t.stats.levels_before, t.stats.levels_after);
-//! let solver = TransformedSolver::from_parts(m, t, 4);
-//! let b = vec![1.0; solver.m.nrows];
-//! let x = solver.solve(&b);
+//! let spec = PlanSpec::parse("avgcost+scheduled").unwrap();
+//! let a = analyze(&m, &spec, &AnalyzeOptions::default()).unwrap();
+//! let st = &a.transform().stats;
+//! println!("levels {} -> {}", st.levels_before, st.levels_after);
+//! let x = a.solve(&vec![1.0; m.nrows]);
 //! # let _ = x;
 //! ```
 //!
@@ -63,6 +63,61 @@
 //! assert!(matches!(PlanSpec::parse("auto").unwrap(), PlanSpec::Auto));
 //! ```
 //!
+//! ## Analysis lifecycle
+//!
+//! The paper's whole premise is a one-time graph-transformation cost
+//! amortized over repeated solves. The [`analysis`] module makes that
+//! lifecycle first class — analysis and execution are separate phases,
+//! as in production SpTRSV APIs (cuSPARSE's `csrsv2_analysis`; Böhnlein
+//! et al.'s persisted schedules):
+//!
+//! * **Analyze once** — [`analysis::analyze`] resolves the plan (the
+//!   tuner under `auto`, whose race *donates* the winning lane's
+//!   already-built transform and backend) and returns an
+//!   [`analysis::Analysis`] owning the [`transform::SolvePlan`], the
+//!   [`transform::TransformResult`], the built [`sched::Schedule`] when
+//!   the exec axis is `scheduled`, the structural fingerprint, and the
+//!   ready-to-run [`solver::ExecSolver`].
+//! * **Solve many** — [`analysis::Analysis::solve`] /
+//!   [`analysis::Analysis::solve_many`].
+//! * **Refresh values** — [`analysis::Analysis::refresh_values`] is the
+//!   same-pattern value-update path (the dominant scenario in
+//!   preconditioned iterative solves, where refactorizations keep the
+//!   sparsity pattern): it fingerprint-checks the new matrix, replays
+//!   only the numerics of the recorded rewrite decisions, and rebuilds
+//!   the numeric solver — rewrite analysis, coarsening and ETF placement
+//!   never re-run. [`analysis::Analysis::rebuilds`] exposes the pass
+//!   counters that prove it.
+//! * **Persist** — [`analysis::Analysis::save`] /
+//!   [`analysis::Analysis::load`] serialize the *structural* artifacts
+//!   (schema-stamped JSON; values are re-derived from the matrix given
+//!   at load), so a known structure skips all structural work even
+//!   across processes. The coordinator does this automatically when the
+//!   `analysis_cache` config key names a directory (kept next to the
+//!   tuner's plan cache), and `sptrsv analyze --save` /
+//!   `sptrsv solve --analysis FILE` expose it from the CLI.
+//!
+//! ```no_run
+//! use sptrsv_gt::analysis::{analyze, AnalyzeOptions};
+//! use sptrsv_gt::transform::PlanSpec;
+//! use sptrsv_gt::sparse::generate;
+//!
+//! let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
+//! let spec = PlanSpec::parse("avgcost+scheduled").unwrap();
+//! let mut a = analyze(&m, &spec, &AnalyzeOptions::default()).unwrap();
+//! let x = a.solve(&vec![1.0; m.nrows]);
+//!
+//! // New factorization, same sparsity: numerics only.
+//! let mut m2 = m.clone();
+//! for v in &mut m2.data { *v *= 1.1; }
+//! a.refresh_values(&m2).unwrap();
+//! assert_eq!(a.rebuilds().coarsen_passes, 1, "coarsened once, ever");
+//!
+//! // Persist for the next process.
+//! a.save(std::path::Path::new("lung2.analysis.json")).unwrap();
+//! # let _ = x;
+//! ```
+//!
 //! ## Serving
 //!
 //! The coordinator ([`coordinator`]) wraps the same pipeline in a typed
@@ -94,7 +149,13 @@
 //! let n = m.nrows;
 //! // A composed plan: avgLevelCost rewriting served on the coarsened
 //! // static schedule. `PlanSpec::Auto` would let the tuner pick instead.
-//! h.register("lung2", m, PlanSpec::parse("avgcost+scheduled").unwrap()).unwrap();
+//! // Registration returns a MatrixHandle over the service-side shared
+//! // analysis; `handle.update_values(new_matrix)` refreshes numerics in
+//! // place (in-flight solves drain against the old values first).
+//! let handle = h
+//!     .register("lung2", m, PlanSpec::parse("avgcost+scheduled").unwrap())
+//!     .unwrap();
+//! # let _ = handle;
 //!
 //! // Blocking solve on the batch lane.
 //! let x = h.solve("lung2", vec![1.0; n]).unwrap();
@@ -129,10 +190,13 @@
 //!
 //! Admission is bounded: when the queue already holds `max_pending`
 //! right-hand sides, new requests are rejected with
-//! `ServiceError::Overloaded` instead of growing an unbounded backlog,
-//! and the metrics snapshot reports rejections, cancellations, deadline
-//! misses and per-lane queue depth. See `examples/serve_v2.rs` for the
-//! full tour.
+//! `ServiceError::Overloaded` instead of growing an unbounded backlog —
+//! and [`coordinator::RegisterOptions::max_pending`] caps one matrix's
+//! queue on top of the global cap, with rejections charged per matrix in
+//! the metrics. The snapshot reports rejections (global and per-matrix),
+//! cancellations, deadline misses, per-lane queue depth, value
+//! refreshes, analysis-cache hits and the cumulative structural-pass
+//! counters. See `examples/serve_v2.rs` for the full tour.
 //!
 //! Config keys (`Config` / flat `key = value` file / CLI `--key value`):
 //! `workers`, `plan` (any `SolvePlan::parse` name — the `rewrite+exec`
@@ -140,8 +204,10 @@
 //! the pre-split `strategy` key remains an alias), `artifacts_dir`,
 //! `batch_size` (right-hand sides per batch), `batch_deadline_us`,
 //! `max_pending` (admission cap, 0 = unbounded), `use_xla`, `seed`,
-//! `tuner_cache`, `tuner_top_k`, `tuner_race_solves`, `tuner_cache_ttl`
-//! (seconds before a spilled plan expires, 0 = never),
+//! `tuner_cache`, `analysis_cache` (directory of persisted analyses —
+//! re-registering a known structure skips rewrite analysis, coarsening
+//! and placement; "" = disabled), `tuner_top_k`, `tuner_race_solves`,
+//! `tuner_cache_ttl` (seconds before a spilled plan expires, 0 = never),
 //! `sched_block_target`, `sched_stale_window` (see Scheduling below).
 //!
 //! ## Scheduling
@@ -193,11 +259,16 @@
 //! `avgcost`; a uniform chain wants `manual` rewriting or barrier-free
 //! execution; a wide shallow matrix is best left alone), so the crate
 //! ships a portfolio autotuner ([`tuner`]) over the **full rewrite ×
-//! exec cross product** (16 candidates by default): it fingerprints the
-//! sparsity structure, predicts per-plan cost by composing the rewrite's
-//! estimated shape with the exec's synchronization model, prunes to a
-//! `top_k` shortlist so the race never runs all 16 lanes, races the
-//! shortlist on each plan's own backend, and caches the winning plan by
+//! exec cross product**, with each `scheduled` member expanded into a
+//! neighborhood of the configured `sched_block_target` /
+//! `sched_stale_window` shape (the knobs travel inside the plan name, so
+//! the cached winner is served at exactly the shape that won): it
+//! fingerprints the sparsity structure, predicts per-plan cost by
+//! composing the rewrite's estimated shape with the exec's
+//! synchronization model, prunes to a `top_k` shortlist so the race
+//! never runs the whole portfolio, races the shortlist on each plan's
+//! own backend (the winning lane's built artifacts are donated to the
+//! returned analysis, not discarded), and caches the winning plan by
 //! fingerprint (optionally spilled to a JSON file). Spilled entries
 //! carry a schema version ([`tuner::PLAN_SCHEMA_VERSION`]); plans raced
 //! by an older solver are dropped on load rather than trusted stale, and
@@ -233,6 +304,7 @@
 //! the whole decision (features, cross-product predictions, race) for
 //! one matrix.
 
+pub mod analysis;
 pub mod codegen;
 pub mod config;
 pub mod coordinator;

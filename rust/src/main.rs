@@ -62,9 +62,13 @@ USAGE: sptrsv <subcommand> [flags]
   gen       --kind lung2|torso2|tridiagonal|banded|random [--scale F] [--n N]
             [--seed S] [--ill-scaled] --out FILE.mtx
   analyze   (--matrix FILE.mtx | --kind ... [--scale F])
+            [--plan P --save FILE.json]   # persist the full analysis
+            # (plan + transform + schedule); `solve --analysis` reloads it
   transform (--matrix|--kind...) [--plan P]   # rewrite axis of the plan
   solve     (--matrix|--kind...) [--plan P] [--backend serial|plan|
             transformed|levelset|syncfree|scheduled|reorder|xla]
+            [--analysis FILE.json]   # reuse a saved analysis: skips
+            # rewrite analysis, coarsening and placement entirely
             [--workers W] [--repeat R] [--check] [--sched-block-target T]
             [--sched-stale-window W]
   tune      (--matrix|--kind...) [--top-k K] [--race-solves N] [--workers W]
@@ -75,8 +79,11 @@ USAGE: sptrsv <subcommand> [flags]
   figures   [--scale F] [--out-dir DIR]
   xla       [--artifacts-dir DIR]   # registry check + XLA-vs-native solve
   serve     [--requests N] [--batch-size B] [--max-pending P] [--use-xla]
-            # demo workload: mixed interactive/batch lanes + one multi-RHS
-            # block through the coordinator, then the metrics snapshot
+            [--analysis-cache DIR]   # persisted analyses: re-registering
+            # a known structure skips coarsening + placement
+            # demo workload: mixed interactive/batch lanes, one multi-RHS
+            # block, and a value refresh through the coordinator, then
+            # the metrics snapshot
 
 PLANS (-P): REWRITE+EXEC, e.g. avgcost+scheduled, guarded:5+syncfree,
   manual:4+reorder — REWRITE in none|avgcost|manual[:d]|guarded[:d[:m]],
@@ -126,10 +133,10 @@ fn resolve_plan(
     spec: &PlanSpec,
     m: &Csr,
     workers: Option<usize>,
-) -> (String, SolvePlan, sptrsv_gt::transform::TransformResult) {
+) -> (String, SolvePlan, std::sync::Arc<sptrsv_gt::transform::TransformResult>) {
     match spec.resolve(&PlanSpec::Default) {
         sptrsv_gt::transform::ResolvedPlan::Fixed(name, plan) => {
-            let t = plan.apply(m);
+            let t = std::sync::Arc::new(plan.apply(m));
             (name, plan, t)
         }
         sptrsv_gt::transform::ResolvedPlan::Auto => {
@@ -146,7 +153,7 @@ fn resolve_plan(
                 Err(e) => {
                     eprintln!("warning: tuner could not decide ({e}); using avgcost");
                     let plan = SolvePlan::parse("avgcost").unwrap();
-                    let t = plan.apply(m);
+                    let t = std::sync::Arc::new(plan.apply(m));
                     ("avgcost".to_string(), plan, t)
                 }
             }
@@ -200,6 +207,40 @@ fn cmd_gen(args: &Args) -> Result<()> {
 
 fn cmd_analyze(args: &Args) -> Result<()> {
     let (name, m) = load_matrix(args)?;
+    // Two-phase lifecycle: with --save, run the FULL analysis phase
+    // (plan resolution, rewrite, schedule) and persist the structural
+    // artifacts; `solve --analysis FILE` then skips all of it.
+    if let Some(out) = args.flag("save") {
+        let spec = plan_flag(args, "avgcost")?;
+        let opts = sptrsv_gt::analysis::AnalyzeOptions {
+            workers: args.usize_flag("workers", 4)?,
+            sched: sched_flags(args)?,
+            ..Default::default()
+        };
+        let start = std::time::Instant::now();
+        let a = sptrsv_gt::analysis::analyze(&m, &spec, &opts)?;
+        let dt = start.elapsed();
+        a.save(Path::new(out))?;
+        let st = &a.transform().stats;
+        println!(
+            "analyzed {name}: plan={} levels {} -> {}, {} rows rewritten, analysis {dt:?}",
+            a.plan_name(),
+            st.levels_before,
+            st.levels_after,
+            st.rows_rewritten
+        );
+        if let Some(s) = a.schedule() {
+            println!(
+                "schedule: {} blocks, cut {} vs {} barriers",
+                s.stats.num_blocks, s.stats.cut_edges, s.stats.levelset_barriers
+            );
+        }
+        println!(
+            "saved analysis (fingerprint {}) -> {out}",
+            a.fingerprint()
+        );
+        return Ok(());
+    }
     let lv = Levels::build(&m);
     let st = LevelStats::from_csr(&m, &lv);
     println!("matrix {name}: {} rows, {} nnz", m.nrows, m.nnz());
@@ -283,6 +324,49 @@ fn cmd_solve(args: &Args) -> Result<()> {
     let b: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
 
     let mut x = vec![0.0; n];
+
+    // A saved analysis sidesteps the whole analysis phase: the plan, the
+    // rewritten system and the schedule come from the file (values are
+    // re-numeric'd against THIS matrix), and only execution remains.
+    if let Some(path) = args.flag("analysis") {
+        let opts = sptrsv_gt::analysis::AnalyzeOptions {
+            workers,
+            sched: sched_flags(args)?,
+            ..Default::default()
+        };
+        let load_start = std::time::Instant::now();
+        let a = sptrsv_gt::analysis::Analysis::load(Path::new(path), &m, &opts)?;
+        let load_dt = load_start.elapsed();
+        let c = a.rebuilds();
+        let start = std::time::Instant::now();
+        for _ in 0..repeat {
+            a.solve_into(&b, &mut x);
+        }
+        let dt = start.elapsed() / repeat as u32;
+        let residual = m.residual_inf(&x, &b);
+        println!(
+            "{name}: analysis={path} plan={} load={load_dt:?} (rewrite/coarsen/place \
+             passes {}/{}/{}) n={n} time/solve={dt:?} residual={residual:.3e}",
+            a.plan_name(),
+            c.rewrite_passes,
+            c.coarsen_passes,
+            c.placement_passes
+        );
+        if args.bool_flag("check") {
+            let x_ref = sptrsv_gt::solver::serial::solve(&m, &b);
+            sptrsv_gt::util::prop::assert_allclose(&x, &x_ref, 1e-9, 1e-11)
+                .map_err(anyhow::Error::msg)
+                .context("--check: solution does not match the serial reference")?;
+            anyhow::ensure!(residual < 1e-9, "--check: residual {residual:.3e} too large");
+            anyhow::ensure!(
+                c.coarsen_passes == 0 && c.placement_passes == 0 && c.rewrite_passes == 0,
+                "--check: loading the analysis re-ran structural work"
+            );
+            println!("check OK (matches serial; zero structural passes on load)");
+        }
+        return Ok(());
+    }
+
     let mut plan_label = spec.to_string();
     let start = std::time::Instant::now();
     match backend.as_str() {
@@ -313,7 +397,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
             plan_label = format!("{resolved_name} [{}]", plan.exec);
             let s = sptrsv_gt::solver::ExecSolver::build(
                 std::sync::Arc::new(m.clone()),
-                std::sync::Arc::new(t),
+                t,
                 &plan.exec,
                 std::sync::Arc::new(sptrsv_gt::solver::pool::Pool::new(workers)),
                 sched_flags(args)?,
@@ -561,25 +645,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let requests = args.usize_flag("requests", 64)?;
     println!(
         "starting coordinator: workers={} plan={} use_xla={} batch={}/{}us \
-         max_pending={}",
+         max_pending={} analysis_cache={}",
         cfg.workers, cfg.plan, cfg.use_xla, cfg.batch_size, cfg.batch_deadline_us,
-        cfg.max_pending
+        cfg.max_pending,
+        if cfg.analysis_cache.is_empty() { "off" } else { &cfg.analysis_cache }
     );
     let batch_size = cfg.batch_size;
     let svc = Service::start(cfg);
     let h = svc.handle();
     let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
     let n = m.nrows;
-    let info = h.register("lung2", m.clone(), PlanSpec::Default)?;
+    let handle = h.register("lung2", m.clone(), PlanSpec::Default)?;
     println!(
         "registered lung2-like: plan={}, levels {} -> {}, {} rows rewritten, \
-         backend={}, prepare={:.1}ms",
-        info.plan,
-        info.levels_before,
-        info.levels_after,
-        info.rows_rewritten,
-        info.backend,
-        info.prepare_ms
+         backend={}, analysis={}, prepare={:.1}ms",
+        handle.plan,
+        handle.levels_before,
+        handle.levels_after,
+        handle.rows_rewritten,
+        handle.backend,
+        handle.source.as_str(),
+        handle.prepare_ms
     );
     let start = std::time::Instant::now();
     let mut rng = Rng::new(11);
@@ -609,8 +695,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for (b, x) in bs.iter().zip(&xs) {
         worst = worst.max(m.residual_inf(x, b));
     }
+    // A same-pattern value refresh (the preconditioned-iterative-solve
+    // scenario: new factorization, same sparsity): numerics replayed in
+    // place, no structural work re-run.
+    let mut m2 = m.clone();
+    for v in &mut m2.data {
+        *v *= 1.1;
+    }
+    let refreshed = handle.update_values(m2.clone())?;
+    println!(
+        "refreshed values in {:.1}ms (analysis={})",
+        refreshed.prepare_ms,
+        refreshed.source.as_str()
+    );
+    let b2: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let x2 = handle.solve(b2.clone())?;
+    worst = worst.max(m2.residual_inf(&x2, &b2));
     let dt = start.elapsed();
-    let total = requests + batch_size;
+    let total = requests + batch_size + 1;
     println!(
         "{total} solves in {dt:?} ({:.1} solves/s), worst residual {worst:.3e}",
         total as f64 / dt.as_secs_f64()

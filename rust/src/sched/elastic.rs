@@ -64,7 +64,22 @@ impl ScheduledSolver {
         pool: Arc<Pool>,
         opts: &SchedOptions,
     ) -> ScheduledSolver {
-        let schedule = Schedule::build(&m, &t, pool.len(), opts.block_target());
+        let schedule = Arc::new(Schedule::build(&m, &t, pool.len(), opts.block_target()));
+        Self::with_schedule(m, t, pool, schedule, opts)
+    }
+
+    /// Wrap an **already-built** schedule in an executor: the analysis
+    /// layer reuses this to re-numeric a solver (value refresh, or a
+    /// schedule loaded from disk) without re-running coarsening or ETF
+    /// placement. The schedule must have been built for this `(m, t)`
+    /// structure and for no more workers than `pool` has.
+    pub fn with_schedule(
+        m: Arc<Csr>,
+        t: Arc<TransformResult>,
+        pool: Arc<Pool>,
+        schedule: Arc<Schedule>,
+        opts: &SchedOptions,
+    ) -> ScheduledSolver {
         let plan = Arc::new(ExecPlan::build(&m, &t));
         let done = Arc::new(
             (0..schedule.blocks.len())
@@ -75,7 +90,7 @@ impl ScheduledSolver {
             m,
             t,
             plan,
-            schedule: Arc::new(schedule),
+            schedule,
             pool,
             done,
             counters: Arc::new(ExecCounters {

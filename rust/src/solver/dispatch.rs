@@ -115,10 +115,30 @@ impl ExecSolver {
         pool: Arc<Pool>,
         sched_fallback: SchedOptions,
     ) -> Result<ExecSolver, Error> {
+        Self::build_with(m, t, exec, pool, sched_fallback, None)
+    }
+
+    /// [`ExecSolver::build`] with an optional **pre-built schedule** for
+    /// the scheduled exec axis: the analysis layer passes the schedule it
+    /// already owns (a value refresh, or one deserialized from the
+    /// analysis cache) so rebuilding the numeric solver never re-runs
+    /// coarsening or ETF placement. Ignored for the other exec axes.
+    pub fn build_with(
+        m: Arc<Csr>,
+        t: Arc<TransformResult>,
+        exec: &Exec,
+        pool: Arc<Pool>,
+        sched_fallback: SchedOptions,
+        schedule: Option<Arc<crate::sched::Schedule>>,
+    ) -> Result<ExecSolver, Error> {
         Ok(match exec {
             Exec::Levelset => ExecSolver::Transformed(TransformedSolver::new(m, t, pool)),
             Exec::Scheduled(o) => {
-                ExecSolver::Scheduled(ScheduledSolver::new(m, t, pool, &o.or(sched_fallback)))
+                let opts = o.or(sched_fallback);
+                ExecSolver::Scheduled(match schedule {
+                    Some(s) => ScheduledSolver::with_schedule(m, t, pool, s, &opts),
+                    None => ScheduledSolver::new(m, t, pool, &opts),
+                })
             }
             Exec::Syncfree => ExecSolver::SyncFree(SyncFreeSolver::new(m, t, pool)),
             Exec::Reorder => ExecSolver::Reordered(ReorderedSolver::build(&m, t, pool)?),

@@ -5,9 +5,12 @@
 //! to craft a collection of strategies"; this subsystem operationalizes
 //! that. Since the solve-plan split, the portfolio is the **cross
 //! product** of the rewrite axis (`none | avgcost | manual | guarded`)
-//! and the execution axis (`levelset | scheduled | syncfree | reorder`)
-//! — 16 candidates — pruned to a `top_k` shortlist by the composed cost
-//! model so the race never runs all 16 lanes.
+//! and the execution axis (`levelset | scheduled | syncfree | reorder`),
+//! with each default-shape `scheduled` member expanded into a
+//! neighborhood of the configured `sched_block_target` /
+//! `sched_stale_window` point ([`expand_exec_knobs`]) — all pruned to a
+//! `top_k` shortlist by the composed cost model so the race never runs
+//! the full portfolio.
 //!
 //! Decision path of [`Tuner::choose`]:
 //!
@@ -35,6 +38,8 @@ use std::path::PathBuf;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::error::Error;
+use crate::sched::SchedOptions;
+use crate::solver::dispatch::ExecSolver;
 use crate::solver::pool::Pool;
 use crate::sparse::Csr;
 use crate::transform::{Exec, SolvePlan, TransformResult};
@@ -59,6 +64,72 @@ pub fn default_candidates() -> Vec<String> {
     for rw in DEFAULT_REWRITES {
         for ex in DEFAULT_EXECS {
             out.push(format!("{rw}+{ex}"));
+        }
+    }
+    out
+}
+
+/// The schedule shapes the tuner explores for a default-shape `scheduled`
+/// candidate: a neighborhood of the configured
+/// `(sched_block_target, sched_stale_window)` point — the configured
+/// shape itself, half and double the block target, and the flipped
+/// elasticity (strict in-order when a window is configured, a small
+/// window when it is zero). The knobs travel **inside** the plan name
+/// (`scheduled:t:w`), so the cached winner is always served at exactly
+/// the shape that won the race.
+pub fn sched_shape_neighborhood(sched: &SchedOptions) -> Vec<(usize, usize)> {
+    let t = sched.block_target();
+    let w = sched.stale_window();
+    let mut shapes = vec![
+        (t, w),
+        ((t / 2).max(1), w),
+        (t.saturating_mul(2).max(2), w),
+        (t, if w == 0 { 2 } else { 0 }),
+    ];
+    let mut seen = Vec::new();
+    shapes.retain(|s| {
+        if seen.contains(s) {
+            false
+        } else {
+            seen.push(*s);
+            true
+        }
+    });
+    shapes
+}
+
+/// Expand every default-shape `scheduled` candidate (no explicit knobs)
+/// into the [`sched_shape_neighborhood`] of the configured scheduling
+/// point. Candidates that already carry explicit knobs, and every
+/// non-scheduled candidate, pass through unchanged; duplicates are
+/// dropped.
+pub fn expand_exec_knobs(candidates: &[String], sched: &SchedOptions) -> Vec<String> {
+    let shapes = sched_shape_neighborhood(sched);
+    let mut out: Vec<String> = Vec::with_capacity(candidates.len() + shapes.len() * 4);
+    for name in candidates {
+        let expanded = match SolvePlan::parse(name) {
+            Ok(plan) => match plan.exec {
+                Exec::Scheduled(o) if o.block_target.is_none() && o.stale_window.is_none() => {
+                    Some(plan.rewrite)
+                }
+                _ => None,
+            },
+            Err(_) => None,
+        };
+        match expanded {
+            Some(rewrite) => {
+                for &(t, w) in &shapes {
+                    let composed = format!("{rewrite}+scheduled:{t}:{w}");
+                    if !out.contains(&composed) {
+                        out.push(composed);
+                    }
+                }
+            }
+            None => {
+                if !out.contains(name) {
+                    out.push(name.clone());
+                }
+            }
         }
     }
     out
@@ -142,8 +213,14 @@ pub struct TunedPlan {
     pub predictions: Vec<(String, f64)>,
     /// race report (None on a cache hit)
     pub race: Option<RaceOutcome>,
-    /// the winning transform, ready for the executor
-    pub transform: TransformResult,
+    /// the winning transform, ready for the executor (shared with the
+    /// donated solver when one is present)
+    pub transform: Arc<TransformResult>,
+    /// the race's winning backend, donated instead of discarded: the
+    /// analysis layer serves on this very solver, so a cache miss builds
+    /// each schedule/permutation exactly once. None on a plan-cache hit
+    /// (nothing was raced).
+    pub solver: Option<ExecSolver>,
 }
 
 pub struct Tuner {
@@ -177,7 +254,13 @@ pub fn process_choose(m: &Csr) -> Result<TunedPlan, Error> {
 }
 
 impl Tuner {
-    pub fn new(opts: TunerOptions) -> Tuner {
+    pub fn new(mut opts: TunerOptions) -> Tuner {
+        // Exec knobs enter the cross product: default-shape `scheduled`
+        // candidates expand into the configured scheduling point's
+        // neighborhood, so the race explores block-target/window shapes
+        // instead of only the config default (the cost model prunes the
+        // wider portfolio back down to `top_k` lanes).
+        opts.candidates = expand_exec_knobs(&opts.candidates, &opts.sched);
         let mut model = CostModel::new(opts.workers);
         let cache = match &opts.cache_path {
             Some(path) => {
@@ -229,6 +312,14 @@ impl Tuner {
         self.tune(m, fingerprint)
     }
 
+    /// A cached decision's plan name for a fingerprint, without applying
+    /// the plan, bumping the LRU recency or counting a hit/miss. The
+    /// serving pipeline peeks here so an analysis-cache probe can be
+    /// keyed by `(fingerprint, plan)` before any transform work runs.
+    pub fn peek_cached_plan(&self, fingerprint: Fingerprint) -> Option<String> {
+        self.cache.peek(fingerprint).map(|c| c.plan.clone())
+    }
+
     /// Degenerate (empty) matrix: nothing to tune.
     fn empty_plan(&self, fingerprint: Fingerprint, m: &Csr) -> TunedPlan {
         TunedPlan {
@@ -239,7 +330,8 @@ impl Tuner {
             features: None,
             predictions: Vec::new(),
             race: None,
-            transform: TransformResult::identity(m),
+            transform: Arc::new(TransformResult::identity(m)),
+            solver: None,
         }
     }
 
@@ -250,7 +342,7 @@ impl Tuner {
         let cached = self.cache.get(fingerprint)?;
         match SolvePlan::parse(&cached.plan) {
             Ok(plan) => {
-                let transform = plan.apply(m);
+                let transform = Arc::new(plan.apply(m));
                 Some(TunedPlan {
                     fingerprint,
                     plan_name: cached.plan,
@@ -260,6 +352,7 @@ impl Tuner {
                     predictions: Vec::new(),
                     race: None,
                     transform,
+                    solver: None,
                 })
             }
             Err(e) => {
@@ -340,12 +433,10 @@ impl Tuner {
         let winner = outcome.winner;
         let plan_name = outcome.lanes[winner].plan.clone();
         let plan = SolvePlan::parse(&plan_name).map_err(Error::Invalid)?;
-        let transform = match outcome.lanes[winner].transform.take() {
-            Some(t) => t,
-            // The race could not reclaim its Arc (never expected, but
-            // cheap to recover from): apply the winner again.
-            None => plan.apply(m),
-        };
+        // Donate the winning lane's already-built artifacts: the
+        // transform Arc it raced with and the backend it raced on.
+        let transform = Arc::clone(&outcome.lanes[winner].transform);
+        let solver = outcome.lanes[winner].solver.take();
 
         self.cache.put(
             fingerprint,
@@ -371,6 +462,7 @@ impl Tuner {
             predictions,
             race: Some(outcome),
             transform,
+            solver,
         })
     }
 }
@@ -403,6 +495,68 @@ mod tests {
         for name in &c {
             SolvePlan::parse(name).unwrap_or_else(|e| panic!("{name}: {e}"));
         }
+    }
+
+    #[test]
+    fn tuner_expands_sched_candidates_around_the_configured_shape() {
+        let sched = SchedOptions {
+            block_target: Some(128),
+            stale_window: Some(4),
+        };
+        let shapes = sched_shape_neighborhood(&sched);
+        assert!(shapes.contains(&(128, 4)), "{shapes:?}");
+        assert!(shapes.contains(&(64, 4)) && shapes.contains(&(256, 4)), "{shapes:?}");
+        assert!(shapes.contains(&(128, 0)), "elasticity flip missing: {shapes:?}");
+
+        let tuner = Tuner::new(TunerOptions {
+            sched,
+            ..quick_opts()
+        });
+        let c = &tuner.opts.candidates;
+        // Default-shape scheduled members became explicit-knob variants...
+        assert!(!c.iter().any(|s| s.ends_with("+scheduled")), "{c:?}");
+        assert!(c.contains(&"avgcost+scheduled:128:4".to_string()), "{c:?}");
+        assert!(c.contains(&"none+scheduled:64:4".to_string()), "{c:?}");
+        // ...every candidate still parses, and the non-scheduled members
+        // of the cross product pass through untouched.
+        for name in c {
+            SolvePlan::parse(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        assert!(c.contains(&"guarded:20+syncfree".to_string()));
+        assert_eq!(c.len(), 12 + 4 * shapes.len());
+
+        // A candidate that already pins its knobs is not expanded.
+        let kept = expand_exec_knobs(&["avgcost+scheduled:32:1".to_string()], &sched);
+        assert_eq!(kept, vec!["avgcost+scheduled:32:1".to_string()]);
+
+        // Zero-window configs explore a small window instead.
+        let strict = sched_shape_neighborhood(&SchedOptions {
+            block_target: Some(64),
+            stale_window: Some(0),
+        });
+        assert!(strict.contains(&(64, 2)), "{strict:?}");
+    }
+
+    #[test]
+    fn raced_winner_donates_its_transform_and_backend() {
+        let m = generate::lung2_like(&GenOptions::with_scale(0.03));
+        let mut tuner = Tuner::new(quick_opts());
+        let p = tuner.choose(&m).unwrap();
+        assert_eq!(p.source, PlanSource::Raced);
+        let solver = p.solver.as_ref().expect("winning backend donated");
+        // The donated backend matches the winning plan's exec axis and
+        // runs the winning transform.
+        assert_eq!(solver.scheduled().is_some(), matches!(p.plan.exec, Exec::Scheduled(_)));
+        let b = vec![1.0; m.nrows];
+        assert!(m.residual_inf(&solver.solve(&b), &b) < 1e-9);
+        // A cache hit donates no backend (nothing was raced).
+        let p2 = tuner.choose(&m).unwrap();
+        assert_eq!(p2.source, PlanSource::CacheHit);
+        assert!(p2.solver.is_none());
+        // peek never disturbs the stats the real lookups accumulated.
+        let stats = tuner.cache_stats();
+        assert_eq!(tuner.peek_cached_plan(p.fingerprint), Some(p.plan_name.clone()));
+        assert_eq!(tuner.cache_stats(), stats);
     }
 
     #[test]
@@ -479,8 +633,10 @@ mod tests {
         // share one estimated shape — but different exec axes execute on
         // different backends, so BOTH must reach the race.
         let m = generate::tridiagonal(20, &Default::default());
+        // Pinned knobs keep the scheduled candidate out of the shape
+        // expansion: this test is about the dedup, not the neighborhood.
         let mut tuner = Tuner::new(TunerOptions {
-            candidates: vec!["none+scheduled".to_string(), "none+syncfree".to_string()],
+            candidates: vec!["none+scheduled:256:4".to_string(), "none+syncfree".to_string()],
             top_k: 2,
             race_solves: 1,
             workers: 2,

@@ -120,6 +120,14 @@ impl PlanCache {
         self.entries.is_empty()
     }
 
+    /// Non-mutating probe: the entry for a fingerprint without bumping
+    /// LRU recency or the hit/miss stats (used by the pipeline's
+    /// analysis-cache key lookup, which must not skew the accounting of
+    /// the real `get` that may follow).
+    pub fn peek(&self, fp: Fingerprint) -> Option<&CachedPlan> {
+        self.entries.get(&fp.0).map(|(_, plan)| plan)
+    }
+
     /// Look up a fingerprint, refreshing its recency on a hit.
     pub fn get(&mut self, fp: Fingerprint) -> Option<CachedPlan> {
         self.clock += 1;

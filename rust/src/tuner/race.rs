@@ -56,8 +56,13 @@ pub struct Lane {
     pub solve_us: f64,
     pub levels_after: usize,
     pub total_cost_after: u64,
-    /// the applied transform; `take()`n by the tuner for the winner
-    pub transform: Option<TransformResult>,
+    /// the applied transform, shared with the lane's solver
+    pub transform: Arc<TransformResult>,
+    /// the lane's built execution backend. Kept only for the winning
+    /// lane — the analysis layer adopts it instead of rebuilding the
+    /// same transform + schedule it just raced; losers are dropped when
+    /// the race settles.
+    pub solver: Option<ExecSolver>,
 }
 
 pub struct RaceOutcome {
@@ -124,17 +129,14 @@ pub fn race(m: &Arc<Csr>, candidates: &[String], opts: &RaceOptions) -> Result<R
             solver.solve_into(&b, &mut x);
             best = best.min(s0.elapsed().as_secs_f64() * 1e6);
         }
-        // Reclaim the transform from the solver for the tuner to reuse:
-        // once the solver is dropped, the lane's Arc is the sole owner.
-        drop(solver);
-        let transform = Arc::try_unwrap(t_arc).ok();
         lanes.push(Lane {
             plan: name.clone(),
             transform_ms,
             solve_us: best,
             levels_after,
             total_cost_after,
-            transform,
+            transform: t_arc,
+            solver: Some(solver),
         });
     }
     if lanes.is_empty() {
@@ -150,6 +152,13 @@ pub fn race(m: &Arc<Csr>, candidates: &[String], opts: &RaceOptions) -> Result<R
         })
         .map(|(i, _)| i)
         .unwrap_or(0);
+    // Only the winner's backend is worth keeping (the analysis layer
+    // adopts it); the losing lanes' solvers free their memory now.
+    for (i, lane) in lanes.iter_mut().enumerate() {
+        if i != winner {
+            lane.solver = None;
+        }
+    }
     Ok(RaceOutcome { lanes, winner })
 }
 
@@ -172,10 +181,11 @@ mod tests {
         };
         let out = race(&m, &names(&["none", "avgcost"]), &opts).unwrap();
         assert_eq!(out.lanes.len(), 2);
-        for lane in &out.lanes {
+        for (i, lane) in out.lanes.iter().enumerate() {
             assert!(lane.solve_us.is_finite() && lane.solve_us >= 0.0);
-            let t = lane.transform.as_ref().expect("transform reclaimed");
-            t.validate(&m).unwrap();
+            lane.transform.validate(&m).unwrap();
+            // Only the winner keeps its built backend for donation.
+            assert_eq!(lane.solver.is_some(), i == out.winner, "{}", lane.plan);
         }
         let w = out.winner_lane();
         assert!(w.plan == "none" || w.plan == "avgcost");
@@ -192,9 +202,11 @@ mod tests {
         };
         let out = race(&m, &names(&["none", "manual:5"]), &opts).unwrap();
         assert_eq!(out.lanes.len(), 2);
-        // The lender keeps sole ownership once the race is done: no
-        // worker threads were spawned or leaked by the race itself.
+        // The lender keeps sole ownership once the race outcome (whose
+        // winning lane's donated backend also runs on the shared pool) is
+        // dropped: no worker threads were spawned or leaked by the race.
         drop(opts);
+        drop(out);
         assert_eq!(Arc::strong_count(&pool), 1);
     }
 
@@ -215,11 +227,10 @@ mod tests {
         assert_eq!(out.lanes.len(), 3);
         for lane in &out.lanes {
             assert!(lane.solve_us.is_finite() && lane.solve_us >= 0.0);
-            // Composed lanes really ran their rewrite axis: the reclaimed
+            // Composed lanes really ran their rewrite axis: the lane's
             // transform is the rewritten system, not the identity.
-            let t = lane.transform.as_ref().expect("transform reclaimed");
-            assert!(t.stats.rows_rewritten > 0, "{}", lane.plan);
-            t.validate(&m).unwrap();
+            assert!(lane.transform.stats.rows_rewritten > 0, "{}", lane.plan);
+            lane.transform.validate(&m).unwrap();
         }
     }
 
@@ -234,9 +245,8 @@ mod tests {
         let out = race(&m, &names(&["scheduled:64:2", "syncfree", "reorder"]), &opts).unwrap();
         assert_eq!(out.lanes.len(), 3);
         for lane in &out.lanes {
-            let t = lane.transform.as_ref().expect("transform reclaimed");
-            assert_eq!(t.stats.rows_rewritten, 0);
-            t.validate(&m).unwrap();
+            assert_eq!(lane.transform.stats.rows_rewritten, 0);
+            lane.transform.validate(&m).unwrap();
         }
     }
 

@@ -419,3 +419,108 @@ fn prop_schedule_construction_deterministic() {
         Ok(())
     });
 }
+
+/// Analyze/execute split acceptance: for every one of the 16 composed
+/// (rewrite, exec) pairs, refreshing an analysis with same-pattern
+/// perturbed values matches a from-scratch analysis of the new matrix
+/// within 1e-12 — while the structural rebuild counters stay flat (only
+/// the renumeric replay runs).
+#[test]
+fn prop_refresh_values_matches_fresh_analyze_all_16_plans() {
+    use sptrsv_gt::analysis::{analyze, AnalyzeOptions};
+    use sptrsv_gt::transform::PlanSpec;
+
+    let rewrites = ["none", "avgcost", "manual:6", "guarded:5"];
+    let execs = ["levelset", "scheduled:64:2", "syncfree", "reorder"];
+    let opts = AnalyzeOptions {
+        workers: 2,
+        ..Default::default()
+    };
+    check("refresh-matches-fresh", 4, |rng, case| {
+        // Well-conditioned generators: the 1e-12 refresh-vs-fresh gate
+        // measures replay fidelity, not amplification of an
+        // ill-conditioned system's intrinsic rounding.
+        let m = match case % 3 {
+            0 => generate::lung2_like(&GenOptions::with_scale(0.02)),
+            1 => generate::tridiagonal(120 + rng.below(80), &Default::default()),
+            _ => generate::poisson2d_ilu(12 + rng.below(6), 12, &Default::default()),
+        };
+        // Same pattern, perturbed values: a refreshed factorization.
+        let mut m2 = m.clone();
+        for v in &mut m2.data {
+            *v *= 1.0 + 0.1 * rng.uniform(-1.0, 1.0);
+        }
+        let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        for rw in rewrites {
+            for ex in execs {
+                let name = format!("{rw}+{ex}");
+                let spec = PlanSpec::parse(&name).unwrap();
+                let mut a = analyze(&m, &spec, &opts).map_err(|e| format!("{name}: {e}"))?;
+                let before = a.rebuilds();
+                a.refresh_values(&m2).map_err(|e| format!("{name}: {e}"))?;
+                let after = a.rebuilds();
+                // Structural counters flat; exactly one numeric replay.
+                if after.rewrite_passes != before.rewrite_passes
+                    || after.coarsen_passes != before.coarsen_passes
+                    || after.placement_passes != before.placement_passes
+                    || after.renumeric_passes != before.renumeric_passes + 1
+                {
+                    return Err(format!(
+                        "{name}: counters moved {before:?} -> {after:?}"
+                    ));
+                }
+                let fresh = analyze(&m2, &spec, &opts).map_err(|e| format!("{name}: {e}"))?;
+                assert_allclose(&a.solve(&b), &fresh.solve(&b), 1e-12, 1e-12)
+                    .map_err(|e| format!("{name}: refresh != fresh: {e}"))?;
+                // Both are exact solutions of the NEW system.
+                let x_ref = sptrsv_gt::solver::serial::solve(&m2, &b);
+                assert_allclose(&a.solve(&b), &x_ref, 1e-9, 1e-11)
+                    .map_err(|e| format!("{name}: refresh vs serial: {e}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Persistence acceptance: save -> load -> solve is deterministic (two
+/// independent loads produce bitwise-identical solutions) and agrees
+/// with the original in-memory analysis within 1e-12.
+#[test]
+fn prop_analysis_save_load_roundtrip_deterministic() {
+    use sptrsv_gt::analysis::{analyze, Analysis, AnalyzeOptions};
+    use sptrsv_gt::transform::PlanSpec;
+
+    let opts = AnalyzeOptions {
+        workers: 2,
+        ..Default::default()
+    };
+    check("analysis-save-load-roundtrip", 12, |rng, case| {
+        let m = random_matrix(rng, case);
+        let name = random_plan_text(rng);
+        let spec = PlanSpec::parse(&name).unwrap();
+        let a = analyze(&m, &spec, &opts).map_err(|e| format!("{name}: {e}"))?;
+        let path = std::env::temp_dir().join(format!(
+            "sptrsv_prop_analysis_{}_{case}.json",
+            std::process::id()
+        ));
+        a.save(&path).map_err(|e| format!("{name}: save: {e}"))?;
+        let l1 = Analysis::load(&path, &m, &opts).map_err(|e| format!("{name}: load: {e}"))?;
+        let l2 = Analysis::load(&path, &m, &opts).map_err(|e| format!("{name}: load2: {e}"))?;
+        std::fs::remove_file(&path).ok();
+        // Loading pays no structural pass.
+        let c = l1.rebuilds();
+        if c.rewrite_passes + c.coarsen_passes + c.placement_passes != 0 {
+            return Err(format!("{name}: load re-ran structural work: {c:?}"));
+        }
+        let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        let x1 = l1.solve(&b);
+        // Determinism: independent loads solve bitwise identically (and
+        // a repeat solve on one load too).
+        if x1 != l2.solve(&b) || x1 != l1.solve(&b) {
+            return Err(format!("{name}: load -> solve not deterministic"));
+        }
+        assert_allclose(&x1, &a.solve(&b), 1e-9, 1e-11)
+            .map_err(|e| format!("{name}: loaded != original: {e}"))?;
+        Ok(())
+    });
+}

@@ -217,10 +217,10 @@ fn auto_plans_solve_correctly_on_random_structures() {
         let mut rng = Rng::new(seed + 1000);
         let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-2.0, 2.0)).collect();
         let x_ref = sptrsv_gt::solver::serial::solve(&m, &b);
-        let solver = sptrsv_gt::solver::executor::TransformedSolver::from_parts(
-            m.clone(),
+        let solver = sptrsv_gt::solver::executor::TransformedSolver::new(
+            std::sync::Arc::new(m.clone()),
             plan.transform,
-            2,
+            std::sync::Arc::new(sptrsv_gt::solver::pool::Pool::new(2)),
         );
         let x = solver.solve(&b);
         sptrsv_gt::util::prop::assert_allclose(&x, &x_ref, 1e-9, 1e-11)
@@ -236,16 +236,19 @@ fn cross_product_portfolio_prices_every_pair() {
     let mut tuner = Tuner::new(quick_opts());
     let p = tuner.choose(&m).unwrap();
     let names: Vec<&str> = p.predictions.iter().map(|(s, _)| s.as_str()).collect();
-    // All 16 cross-product members are priced (none dropped as unknown).
-    assert_eq!(names.len(), 16, "{names:?}");
-    for s in ["none+scheduled", "avgcost+syncfree", "guarded:20+reorder"] {
+    // The whole portfolio is priced (none dropped as unknown): the 12
+    // non-scheduled cross-product members plus the scheduled members
+    // expanded into the configured shape neighborhood.
+    let shapes = sptrsv_gt::tuner::sched_shape_neighborhood(&Default::default()).len();
+    assert_eq!(names.len(), 12 + 4 * shapes, "{names:?}");
+    for s in ["avgcost+syncfree", "guarded:20+reorder", "none+scheduled:256:4"] {
         assert!(names.contains(&s), "{s} missing from {names:?}");
     }
     // A pure serial chain is the coarsened schedule's home game: the
     // composed cost model must rank a scheduled plan first (chains
     // collapse into blocks with no barriers and no cross-worker waits).
     assert!(
-        names[0].ends_with("+scheduled"),
+        names[0].contains("+scheduled"),
         "expected a scheduled plan first, got {}",
         names[0]
     );
@@ -253,7 +256,7 @@ fn cross_product_portfolio_prices_every_pair() {
     // correctly on the backend its exec axis calls for.
     let solver = sptrsv_gt::solver::ExecSolver::build(
         Arc::new(m.clone()),
-        Arc::new(p.transform),
+        p.transform,
         &p.plan.exec,
         Arc::new(sptrsv_gt::solver::pool::Pool::new(2)),
         Default::default(),
@@ -292,7 +295,7 @@ fn race_returns_a_composed_plan_when_one_wins() {
     assert!(p.transform.stats.rows_rewritten > 0, "rewrite axis ran");
     let solver = sptrsv_gt::solver::ExecSolver::build(
         Arc::new(m.clone()),
-        Arc::new(p.transform),
+        p.transform,
         &p.plan.exec,
         Arc::new(sptrsv_gt::solver::pool::Pool::new(2)),
         Default::default(),
