@@ -48,6 +48,7 @@ use crate::sched::{SchedOptions, Schedule, ScheduledSolver};
 use crate::solver::dispatch::ExecSolver;
 use crate::solver::pool::Pool;
 use crate::sparse::Csr;
+use crate::trace::PhaseTimes;
 use crate::transform::{Exec, PlanSpec, ResolvedPlan, Rewrite, SolvePlan, TransformResult};
 use crate::tuner::{Fingerprint, TunedPlan, Tuner, TunerOptions};
 
@@ -132,6 +133,11 @@ pub struct Analysis {
     sched: SchedOptions,
     counters: BuildCounters,
     prepare_time: Duration,
+    /// wall-clock split of the passes behind `counters`, for the same
+    /// build/refresh window as `prepare_time` (zeros when the work was
+    /// donated by a tuner race, whose lanes are timed competitively, not
+    /// per phase)
+    phase_times: PhaseTimes,
 }
 
 /// A guarded rewrite caps the folded b-coefficient magnitude (the §IV
@@ -220,7 +226,12 @@ impl Analysis {
         sched: SchedOptions,
         start: Instant,
     ) -> Result<Analysis, Error> {
+        let t0 = Instant::now();
         let t = Arc::new(plan.apply(&m));
+        let mut phase_times = PhaseTimes {
+            rewrite_us: t0.elapsed().as_micros() as u64,
+            ..Default::default()
+        };
         t.validate(&m).map_err(Error::Invalid)?;
         let mut counters = BuildCounters {
             rewrite_passes: u64::from(plan.rewrite != Rewrite::None),
@@ -231,7 +242,11 @@ impl Analysis {
                 let o = o.or(sched);
                 counters.coarsen_passes += 1;
                 counters.placement_passes += 1;
-                Some(Arc::new(Schedule::build(&m, &t, pool.len(), o.block_target())))
+                let (s, coarsen, placement) =
+                    Schedule::build_timed(&m, &t, pool.len(), o.block_target());
+                phase_times.coarsen_us = coarsen.as_micros() as u64;
+                phase_times.placement_us = placement.as_micros() as u64;
+                Some(Arc::new(s))
             }
             _ => None,
         };
@@ -255,6 +270,7 @@ impl Analysis {
             sched,
             counters,
             prepare_time: start.elapsed(),
+            phase_times,
         })
     }
 
@@ -281,8 +297,12 @@ impl Analysis {
             rewrite_passes: u64::from(plan.rewrite != Rewrite::None),
             ..Default::default()
         };
+        let mut phase_times = PhaseTimes::default();
         let (solver, schedule) = match solver {
             Some(s) => {
+                // Donated by the race: the passes ran inside the winning
+                // lane, timed competitively rather than per phase — the
+                // counters still record them, the phase clocks stay zero.
                 let schedule = s.scheduled().map(|ss| Arc::clone(&ss.schedule));
                 if schedule.is_some() {
                     counters.coarsen_passes += 1;
@@ -298,7 +318,11 @@ impl Analysis {
                         let o = o.or(sched);
                         counters.coarsen_passes += 1;
                         counters.placement_passes += 1;
-                        Some(Arc::new(Schedule::build(&m, &t, pool.len(), o.block_target())))
+                        let (s, coarsen, placement) =
+                            Schedule::build_timed(&m, &t, pool.len(), o.block_target());
+                        phase_times.coarsen_us = coarsen.as_micros() as u64;
+                        phase_times.placement_us = placement.as_micros() as u64;
+                        Some(Arc::new(s))
                     }
                     _ => None,
                 };
@@ -325,6 +349,7 @@ impl Analysis {
             sched,
             counters,
             prepare_time: start.elapsed(),
+            phase_times,
         })
     }
 
@@ -370,6 +395,14 @@ impl Analysis {
         self.counters
     }
 
+    /// Wall-clock split of the most recent build/refresh across the
+    /// analysis phases (rewrite / coarsen / placement / renumeric). All
+    /// zeros when the artifacts were donated by a tuner race, whose lanes
+    /// are timed competitively rather than per phase.
+    pub fn phase_times(&self) -> PhaseTimes {
+        self.phase_times
+    }
+
     /// Wall-clock of the most recent build/refresh (the offline cost the
     /// paper discusses).
     pub fn prepare_time(&self) -> Duration {
@@ -412,10 +445,12 @@ impl Analysis {
             )));
         }
         let m = Arc::new(m.clone());
+        let t0 = Instant::now();
         let t = Arc::new(
             renumeric::renumeric(&m, &StructuralTransform::of(&self.t))
                 .map_err(Error::Invalid)?,
         );
+        let renumeric_us = t0.elapsed().as_micros() as u64;
         check_guard_cap(&self.plan, &t)?;
         let solver = ExecSolver::build_with(
             Arc::clone(&m),
@@ -440,6 +475,11 @@ impl Analysis {
                 ..self.counters
             },
             prepare_time: start.elapsed(),
+            // per-window clocks: a refresh pays only the value replay
+            phase_times: PhaseTimes {
+                renumeric_us,
+                ..Default::default()
+            },
         })
     }
 
@@ -525,6 +565,13 @@ mod tests {
         assert_eq!(after.renumeric_passes, before.renumeric_passes + 1);
         // The schedule object itself is reused, not rebuilt.
         assert_eq!(Arc::as_ptr(a.schedule().unwrap()), sched_before);
+        // Phase clocks are per-window: a refresh charges no structural
+        // phase any time (the replay itself may round to 0µs, so only the
+        // structural clocks are asserted).
+        let pt = a.phase_times();
+        assert_eq!(pt.rewrite_us, 0);
+        assert_eq!(pt.coarsen_us, 0);
+        assert_eq!(pt.placement_us, 0);
         // And the refreshed analysis solves the NEW system.
         let b = vec![1.0; m2.nrows];
         let x = a.solve(&b);

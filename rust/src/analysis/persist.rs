@@ -18,6 +18,7 @@ use crate::sched::schedule::{Schedule, ScheduleStats};
 use crate::sched::Block;
 use crate::solver::dispatch::ExecSolver;
 use crate::sparse::Csr;
+use crate::trace::PhaseTimes;
 use crate::transform::rewrite::RewriteRecord;
 use crate::transform::{Exec, Rewrite, SolvePlan};
 use crate::tuner::Fingerprint;
@@ -271,7 +272,12 @@ pub fn load(path: &Path, m: Arc<Csr>, opts: &AnalyzeOptions) -> Result<Analysis,
             .and_then(Json::as_f64)
             .unwrap_or(0.0) as u64,
     };
+    let t0 = Instant::now();
     let t = Arc::new(renumeric(&m, &skeleton).map_err(Error::Invalid)?);
+    let mut phase_times = PhaseTimes {
+        renumeric_us: t0.elapsed().as_micros() as u64,
+        ..Default::default()
+    };
     t.validate(&m).map_err(|e| {
         Error::Invalid(format!("analysis file: replayed transform invalid: {e}"))
     })?;
@@ -301,7 +307,11 @@ pub fn load(path: &Path, m: Arc<Csr>, opts: &AnalyzeOptions) -> Result<Analysis,
                     Exec::Scheduled(o) => o.or(opts.sched),
                     _ => unreachable!(),
                 };
-                Some(Arc::new(Schedule::build(&m, &t, pool.len(), o.block_target())))
+                let (s, coarsen, placement) =
+                    Schedule::build_timed(&m, &t, pool.len(), o.block_target());
+                phase_times.coarsen_us = coarsen.as_micros() as u64;
+                phase_times.placement_us = placement.as_micros() as u64;
+                Some(Arc::new(s))
             }
         }
         (Exec::Scheduled(o), _) => {
@@ -310,7 +320,11 @@ pub fn load(path: &Path, m: Arc<Csr>, opts: &AnalyzeOptions) -> Result<Analysis,
             counters.coarsen_passes += 1;
             counters.placement_passes += 1;
             let o = o.or(opts.sched);
-            Some(Arc::new(Schedule::build(&m, &t, pool.len(), o.block_target())))
+            let (s, coarsen, placement) =
+                Schedule::build_timed(&m, &t, pool.len(), o.block_target());
+            phase_times.coarsen_us = coarsen.as_micros() as u64;
+            phase_times.placement_us = placement.as_micros() as u64;
+            Some(Arc::new(s))
         }
         _ => None,
     };
@@ -343,6 +357,7 @@ pub fn load(path: &Path, m: Arc<Csr>, opts: &AnalyzeOptions) -> Result<Analysis,
         sched: opts.sched,
         counters,
         prepare_time: start.elapsed(),
+        phase_times,
     })
 }
 

@@ -1,0 +1,424 @@
+//! Workload-replay bench harness: drive the **coordinator service** (not
+//! the raw solvers) under a [`scenario::Scenario`] manifest and emit a
+//! schema-stamped `BENCH_<name>.json` trajectory.
+//!
+//! The solver micro-benches under `rust/benches/` time kernels in
+//! isolation; this harness measures the serving stack the way it is
+//! deployed — admission control, per-lane EDF batching, deadline drops,
+//! ticket lifecycle, value refreshes — by replaying deterministic traffic
+//! through the v2 ticket API with tracing forced on. The emitted report
+//! carries per-lane p50/p95/p99 ticket latency, throughput, the
+//! deadline-miss rate, tuner/analysis cache hit rates, elastic wait
+//! counters and the per-phase (rewrite / coarsen / placement / renumeric
+//! / execute / wait) time breakdown from the [`crate::trace`] module.
+//!
+//! CI runs `sptrsv bench --scenario scenarios/smoke.json` and archives
+//! the artifact; a checked-in `scenarios/BENCH_SCHEMA` file pins
+//! [`BENCH_SCHEMA_VERSION`] so emitter drift without a schema bump fails
+//! the build (and the unit test below).
+
+pub mod scenario;
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use crate::config::Config;
+use crate::coordinator::{
+    BlockTicket, MatrixHandle, Service, Snapshot, SolveOptions, SolveTicket,
+};
+use crate::error::{Error, ServiceError};
+use crate::sparse::Csr;
+use crate::trace::TraceReport;
+use crate::transform::PlanSpec;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+pub use scenario::{MatrixSpec, Scenario};
+
+/// Version stamped into every `BENCH_*.json` under `schema_version`.
+/// `scenarios/BENCH_SCHEMA` pins the same number; CI fails when the two
+/// disagree, so changing the report shape REQUIRES bumping both — that
+/// is the drift guard, not a formality. History:
+///
+/// * 1 — initial shape: scenario echo, request/solve counts, throughput,
+///   per-lane + combined latency, deadline-miss rate, cache hit rates,
+///   elastic counters, per-phase time breakdown, per-matrix trace, full
+///   metrics snapshot.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+const KIND: &str = "sptrsv-bench";
+
+/// What a bench run hands back: the report as written, where it was
+/// written, and the raw metrics snapshot (for `--metrics-json`).
+pub struct BenchOutcome {
+    pub path: PathBuf,
+    pub report: Json,
+    pub snapshot: Snapshot,
+}
+
+/// Client-side tally of ticket outcomes (the service's metrics are the
+/// authority; these catch replies the service never counts, like
+/// `Overloaded` rejections observed at wait time).
+#[derive(Debug, Clone, Copy, Default)]
+struct Outcomes {
+    ok: u64,
+    deadline_missed: u64,
+    rejected: u64,
+    failed: u64,
+}
+
+impl Outcomes {
+    fn count(&mut self, r: Result<(), ServiceError>) {
+        match r {
+            Ok(()) => self.ok += 1,
+            Err(ServiceError::DeadlineExceeded) => self.deadline_missed += 1,
+            Err(ServiceError::Overloaded { .. }) => self.rejected += 1,
+            Err(_) => self.failed += 1,
+        }
+    }
+}
+
+enum AnyTicket {
+    One(SolveTicket),
+    Block(BlockTicket),
+}
+
+impl AnyTicket {
+    fn wait(self) -> Result<(), ServiceError> {
+        match self {
+            AnyTicket::One(t) => t.wait().map(|_| ()),
+            AnyTicket::Block(t) => t.wait().map(|_| ()),
+        }
+    }
+}
+
+/// Weighted matrix pick, deterministic in the rng stream.
+fn pick<'a>(
+    mats: &'a [(MatrixHandle, Csr, f64)],
+    rng: &mut Rng,
+) -> &'a (MatrixHandle, Csr, f64) {
+    let total: f64 = mats.iter().map(|(_, _, w)| w).sum();
+    let mut at = rng.uniform(0.0, total);
+    for m in mats {
+        at -= m.2;
+        if at <= 0.0 {
+            return m;
+        }
+    }
+    mats.last().expect("scenario has matrices")
+}
+
+/// Run `sc` against a freshly started service configured by `cfg` (with
+/// tracing forced on) and write `BENCH_<name>.json` into
+/// `cfg.bench_out_dir`. `cfg.bench_requests`, when non-zero, overrides
+/// the scenario's request count.
+pub fn run(sc: &Scenario, cfg: &Config) -> Result<BenchOutcome, Error> {
+    let mut cfg = cfg.clone();
+    // The harness exists to produce the phase breakdown: tracing is not
+    // optional here, whatever the config says.
+    cfg.trace_enabled = true;
+    let requests = if cfg.bench_requests > 0 {
+        cfg.bench_requests
+    } else {
+        sc.requests
+    };
+    let out_dir = PathBuf::from(&cfg.bench_out_dir);
+    let svc = Service::start(cfg);
+    let h = svc.handle();
+
+    // Register the scenario's matrices; generation is deterministic in
+    // (scenario seed, matrix index).
+    let mut mats: Vec<(MatrixHandle, Csr, f64)> = Vec::with_capacity(sc.matrices.len());
+    for (i, ms) in sc.matrices.iter().enumerate() {
+        let m = ms.generate(sc.seed.wrapping_add(i as u64))?;
+        let plan = if ms.plan.is_empty() {
+            PlanSpec::Default
+        } else {
+            PlanSpec::parse(&ms.plan).map_err(Error::Invalid)?
+        };
+        let handle = h
+            .register(&ms.id, m.clone(), plan)
+            .map_err(|e| Error::Invalid(format!("bench: register '{}': {e}", ms.id)))?;
+        mats.push((handle, m, ms.weight));
+    }
+
+    // Replay. One rng drives every decision, so a scenario replays the
+    // identical request trajectory on every run.
+    let mut rng = Rng::new(sc.seed);
+    let mut outcomes = Outcomes::default();
+    let mut tickets: Vec<AnyTicket> = Vec::with_capacity(requests);
+    let mut refreshes = 0u64;
+    let started = Instant::now();
+    for i in 0..requests {
+        let (handle, m, _) = pick(&mats, &mut rng);
+        let mut opts = SolveOptions::new();
+        if rng.chance(sc.interactive_fraction) {
+            opts = opts.priority(crate::coordinator::Lane::Interactive);
+        }
+        if rng.chance(sc.deadline_fraction) {
+            let us = rng.uniform(sc.deadline_min_us as f64, sc.deadline_max_us as f64);
+            opts = opts.deadline(Duration::from_micros(us as u64));
+        }
+        let rhs = |rng: &mut Rng| -> Vec<f64> {
+            (0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect()
+        };
+        let submitted = if sc.block_size > 1 {
+            let bs: Vec<Vec<f64>> = (0..sc.block_size).map(|_| rhs(&mut rng)).collect();
+            handle.solve_many(bs, opts).map(AnyTicket::Block)
+        } else {
+            handle.solve_async(rhs(&mut rng), opts).map(AnyTicket::One)
+        };
+        match submitted {
+            Ok(t) => tickets.push(t),
+            Err(e) => outcomes.count(Err(e)),
+        }
+        // Value-refresh cadence: same pattern, perturbed numerics.
+        if sc.refresh_every > 0 && (i + 1) % sc.refresh_every == 0 {
+            let (handle, m, _) = pick(&mats, &mut rng);
+            let mut m2 = m.clone();
+            for v in &mut m2.data {
+                *v *= 1.0 + 0.05 * rng.uniform(-1.0, 1.0);
+            }
+            handle
+                .update_values(m2)
+                .map_err(|e| Error::Invalid(format!("bench: refresh '{}': {e}", handle.id())))?;
+            refreshes += 1;
+        }
+        if sc.gap_us > 0 && (i + 1) % sc.burst == 0 {
+            std::thread::sleep(Duration::from_micros(sc.gap_us));
+        }
+    }
+    for t in tickets {
+        outcomes.count(t.wait());
+    }
+    let wall = started.elapsed();
+
+    let snapshot = h
+        .metrics()
+        .map_err(|e| Error::Invalid(format!("bench: metrics snapshot: {e}")))?;
+    let trace = h
+        .trace_report()
+        .map_err(|e| Error::Invalid(format!("bench: trace report: {e}")))?;
+    svc.shutdown();
+
+    let report = build_report(sc, requests, refreshes, wall, &outcomes, &snapshot, &trace);
+    std::fs::create_dir_all(&out_dir)
+        .map_err(|e| Error::Io(format!("create {}: {e}", out_dir.display())))?;
+    let path = out_dir.join(format!("BENCH_{}.json", sc.name));
+    std::fs::write(&path, format!("{report}\n"))
+        .map_err(|e| Error::Io(format!("write {}: {e}", path.display())))?;
+    Ok(BenchOutcome {
+        path,
+        report,
+        snapshot,
+    })
+}
+
+fn rate(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+fn build_report(
+    sc: &Scenario,
+    requests: usize,
+    refreshes: u64,
+    wall: Duration,
+    outcomes: &Outcomes,
+    snap: &Snapshot,
+    trace: &TraceReport,
+) -> Json {
+    let totals = trace.totals();
+    let phases = Json::obj(
+        totals
+            .phases_us()
+            .iter()
+            .map(|&(p, us)| (p.as_str(), Json::Num(us as f64)))
+            .collect(),
+    );
+    let wall_s = wall.as_secs_f64().max(1e-9);
+    Json::obj(vec![
+        ("schema_version", Json::Num(BENCH_SCHEMA_VERSION as f64)),
+        ("kind", Json::Str(KIND.to_string())),
+        ("scenario", Json::Str(sc.name.clone())),
+        ("seed", Json::Num(sc.seed as f64)),
+        ("requests", Json::Num(requests as f64)),
+        ("refreshes", Json::Num(refreshes as f64)),
+        ("wall_ms", Json::Num(wall.as_secs_f64() * 1e3)),
+        ("solves", Json::Num(snap.solves as f64)),
+        ("throughput_rps", Json::Num(snap.solves as f64 / wall_s)),
+        (
+            "deadline_miss_rate",
+            Json::Num(rate(snap.deadline_misses, requests as u64)),
+        ),
+        (
+            "tickets",
+            Json::obj(vec![
+                ("ok", Json::Num(outcomes.ok as f64)),
+                (
+                    "deadline_missed",
+                    Json::Num(outcomes.deadline_missed as f64),
+                ),
+                ("rejected", Json::Num(outcomes.rejected as f64)),
+                ("failed", Json::Num(outcomes.failed as f64)),
+            ]),
+        ),
+        (
+            "latency_us",
+            Json::obj(vec![
+                ("interactive", snap.interactive.to_json()),
+                ("batch", snap.batch.to_json()),
+                (
+                    "combined",
+                    Json::obj(vec![
+                        ("solves", Json::Num(snap.solves as f64)),
+                        ("mean_us", Json::Num(snap.mean_us)),
+                        ("p50_us", Json::Num(snap.p50_us as f64)),
+                        ("p95_us", Json::Num(snap.p95_us as f64)),
+                        ("p99_us", Json::Num(snap.p99_us as f64)),
+                    ]),
+                ),
+            ]),
+        ),
+        (
+            "cache",
+            Json::obj(vec![
+                ("tuner_hits", Json::Num(snap.tuner_cache_hits as f64)),
+                ("tuner_misses", Json::Num(snap.tuner_cache_misses as f64)),
+                (
+                    "tuner_hit_rate",
+                    Json::Num(rate(
+                        snap.tuner_cache_hits,
+                        snap.tuner_cache_hits + snap.tuner_cache_misses,
+                    )),
+                ),
+                ("analysis_hits", Json::Num(snap.analysis_cache_hits as f64)),
+                (
+                    "analysis_misses",
+                    Json::Num(snap.analysis_cache_misses as f64),
+                ),
+                (
+                    "analysis_hit_rate",
+                    Json::Num(rate(
+                        snap.analysis_cache_hits,
+                        snap.analysis_cache_hits + snap.analysis_cache_misses,
+                    )),
+                ),
+            ]),
+        ),
+        (
+            "elastic",
+            Json::obj(vec![
+                ("waits", Json::Num(snap.elastic_waits as f64)),
+                ("ooo", Json::Num(snap.elastic_ooo as f64)),
+            ]),
+        ),
+        ("phases_us", phases),
+        ("trace", trace.to_json()),
+        ("metrics", snap.to_json()),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The drift guard's test half: the checked-in schema pin must match
+    /// the constant. CI enforces the same equality against the *emitted*
+    /// file, so a report-shape change forces an explicit double bump.
+    #[test]
+    fn checked_in_schema_pin_matches_the_emitter() {
+        let pinned: u64 = include_str!(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/scenarios/BENCH_SCHEMA"
+        ))
+        .trim()
+        .parse()
+        .expect("scenarios/BENCH_SCHEMA holds a bare integer");
+        assert_eq!(
+            pinned, BENCH_SCHEMA_VERSION,
+            "BENCH report shape changed? bump BENCH_SCHEMA_VERSION *and* \
+             scenarios/BENCH_SCHEMA together"
+        );
+    }
+
+    #[test]
+    fn smoke_scenario_file_parses_and_is_ci_sized() {
+        let sc = Scenario::load(std::path::Path::new(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/scenarios/smoke.json"
+        )))
+        .unwrap();
+        assert_eq!(sc.name, "smoke");
+        assert!(sc.requests <= 128, "smoke must stay CI-fast");
+        assert!(!sc.matrices.is_empty());
+        assert!(sc.refresh_every > 0, "smoke exercises value refreshes");
+        assert!(sc.interactive_fraction > 0.0, "smoke exercises both lanes");
+    }
+
+    #[test]
+    fn replay_emits_a_schema_stamped_report() {
+        let sc = Scenario::parse(
+            r#"{
+                "name": "unit",
+                "seed": 3,
+                "requests": 10,
+                "matrices": [
+                    {"id": "tri", "kind": "tridiagonal", "n": 60, "plan": "none"},
+                    {"id": "sch", "kind": "lung2", "scale": 0.02,
+                     "plan": "avgcost+scheduled", "weight": 2}
+                ],
+                "interactive_fraction": 0.5,
+                "refresh_every": 5
+            }"#,
+        )
+        .unwrap();
+        let dir = std::env::temp_dir().join(format!("sptrsv_bench_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = Config {
+            workers: 2,
+            use_xla: false,
+            bench_out_dir: dir.to_str().unwrap().to_string(),
+            ..Default::default()
+        };
+        let out = run(&sc, &cfg).unwrap();
+        assert!(out.path.ends_with("BENCH_unit.json"));
+        // The written file is the report, verbatim.
+        let text = std::fs::read_to_string(&out.path).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j, out.report);
+        assert_eq!(
+            j.get("schema_version").and_then(Json::as_f64),
+            Some(BENCH_SCHEMA_VERSION as f64)
+        );
+        assert_eq!(j.get("kind").and_then(Json::as_str), Some(KIND));
+        // Every acceptance-criterion field is present and coherent.
+        assert_eq!(j.get("requests").and_then(Json::as_f64), Some(10.0));
+        assert!(j.get("throughput_rps").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(j.get("deadline_miss_rate").and_then(Json::as_f64).is_some());
+        let lat = j.get("latency_us").unwrap();
+        for lane in ["interactive", "batch", "combined"] {
+            let l = lat.get(lane).unwrap();
+            for k in ["p50_us", "p95_us", "p99_us"] {
+                assert!(l.get(k).and_then(Json::as_f64).is_some(), "{lane}.{k}");
+            }
+        }
+        assert!(j.get("cache").unwrap().get("tuner_hit_rate").is_some());
+        assert!(j.get("cache").unwrap().get("analysis_hit_rate").is_some());
+        let phases = j.get("phases_us").unwrap();
+        for p in ["rewrite", "coarsen", "placement", "renumeric", "execute", "wait"] {
+            assert!(phases.get(p).and_then(Json::as_f64).is_some(), "{p}");
+        }
+        // The replay actually drove solves through both the trace and the
+        // metrics: 10 requests, all delivered.
+        assert_eq!(out.snapshot.solves, 10);
+        assert_eq!(j.get("refreshes").and_then(Json::as_f64), Some(2.0));
+        let totals = j.get("trace").unwrap().get("totals").unwrap();
+        let spans = totals.get("spans").and_then(Json::as_f64).unwrap();
+        assert!(spans > 0.0, "tracing was forced on");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,327 @@
+//! Scenario manifests for the workload-replay bench harness.
+//!
+//! A scenario is a small JSON file (parsed with the crate's own
+//! `util::json`, like every other artifact) describing the traffic the
+//! bench replays through the coordinator's ticket API: which matrices to
+//! register (family × size × plan × traffic weight), the lane mix, the
+//! deadline distribution, the arrival pattern, the per-request block
+//! size and the value-refresh cadence. Checked-in manifests live in
+//! `scenarios/`; `scenarios/smoke.json` is the CI gate.
+//!
+//! ```json
+//! {
+//!   "name": "smoke",
+//!   "seed": 7,
+//!   "requests": 40,
+//!   "matrices": [
+//!     {"id": "lung", "kind": "lung2", "scale": 0.02,
+//!      "plan": "avgcost+scheduled", "weight": 2},
+//!     {"id": "tri", "kind": "tridiagonal", "n": 200, "plan": "none"}
+//!   ],
+//!   "interactive_fraction": 0.25,
+//!   "deadline": {"fraction": 0.5, "min_us": 2000, "max_us": 50000},
+//!   "arrival": {"gap_us": 100, "burst": 4},
+//!   "block_size": 1,
+//!   "refresh_every": 16
+//! }
+//! ```
+//!
+//! Every field except `name` and `matrices` has a default; unknown keys
+//! are rejected nowhere (forward compatibility), missing required keys
+//! are typed errors.
+
+use std::path::Path;
+
+use crate::error::Error;
+use crate::sparse::{generate, Csr};
+use crate::util::json::Json;
+
+/// One matrix the scenario registers and sends traffic to.
+#[derive(Debug, Clone)]
+pub struct MatrixSpec {
+    /// registration id (must be unique within the scenario)
+    pub id: String,
+    /// generator family: `lung2 | torso2 | tridiagonal | banded | random
+    /// | poisson` (the same names `sptrsv gen --kind` accepts)
+    pub kind: String,
+    /// row count for the sized generators (`poisson` reads it as the
+    /// grid side, giving n² rows)
+    pub n: usize,
+    /// scale for the `lung2`/`torso2` analogs
+    pub scale: f64,
+    /// bandwidth for `banded`
+    pub bandwidth: usize,
+    /// dependency cap for `random`
+    pub max_deps: usize,
+    /// solve plan spec text; empty = the service's configured default
+    pub plan: String,
+    /// relative share of the replayed traffic
+    pub weight: f64,
+}
+
+impl MatrixSpec {
+    /// Generate the matrix this spec describes (deterministic in `seed`).
+    pub fn generate(&self, seed: u64) -> Result<Csr, Error> {
+        let opts = generate::GenOptions {
+            seed,
+            scale: self.scale,
+            ..Default::default()
+        };
+        let m = match self.kind.as_str() {
+            "lung2" => generate::lung2_like(&opts),
+            "torso2" => generate::torso2_like(&opts),
+            "tridiagonal" => generate::tridiagonal(self.n, &opts),
+            "banded" => generate::banded(self.n, self.bandwidth, 0.5, &opts),
+            "random" => generate::random_lower(self.n, self.max_deps, 0.8, &opts),
+            "poisson" => generate::poisson2d_ilu(self.n, self.n, &opts),
+            other => {
+                return Err(Error::Invalid(format!(
+                    "scenario matrix '{}': unknown kind '{other}'",
+                    self.id
+                )))
+            }
+        };
+        Ok(m)
+    }
+}
+
+/// A parsed scenario manifest. See the module docs for the JSON shape.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub seed: u64,
+    /// requests replayed (tickets submitted), before any CLI override
+    pub requests: usize,
+    pub matrices: Vec<MatrixSpec>,
+    /// share of requests riding the interactive lane, in `[0, 1]`
+    pub interactive_fraction: f64,
+    /// share of requests carrying a deadline, in `[0, 1]`
+    pub deadline_fraction: f64,
+    /// deadline budgets drawn uniformly from `[min_us, max_us]`
+    pub deadline_min_us: u64,
+    pub deadline_max_us: u64,
+    /// arrival pattern: send `burst` requests back-to-back, then pause
+    /// `gap_us` (0 = open loop, as fast as the client can submit)
+    pub gap_us: u64,
+    pub burst: usize,
+    /// right-hand sides per request (>1 submits multi-RHS blocks)
+    pub block_size: usize,
+    /// every k-th request also refreshes one matrix's values in place
+    /// (0 = never) — the preconditioned-iterative-solve cadence
+    pub refresh_every: usize,
+}
+
+fn f64_or(j: &Json, key: &str, default: f64) -> f64 {
+    j.get(key).and_then(Json::as_f64).unwrap_or(default)
+}
+
+fn usize_or(j: &Json, key: &str, default: usize) -> usize {
+    j.get(key).and_then(Json::as_usize).unwrap_or(default)
+}
+
+fn str_or<'a>(j: &'a Json, key: &str, default: &'a str) -> &'a str {
+    j.get(key).and_then(Json::as_str).unwrap_or(default)
+}
+
+impl Scenario {
+    /// Parse a manifest from JSON text.
+    pub fn parse(text: &str) -> Result<Scenario, Error> {
+        let root = Json::parse(text)
+            .map_err(|e| Error::Invalid(format!("scenario: bad JSON: {e}")))?;
+        let name = root
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Invalid("scenario: missing 'name'".into()))?
+            .to_string();
+        if name.is_empty()
+            || !name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+        {
+            return Err(Error::Invalid(format!(
+                "scenario: name '{name}' must be non-empty [A-Za-z0-9_-] \
+                 (it names the BENCH output file)"
+            )));
+        }
+        let mats = root
+            .get("matrices")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Invalid("scenario: missing 'matrices' array".into()))?;
+        if mats.is_empty() {
+            return Err(Error::Invalid("scenario: 'matrices' is empty".into()));
+        }
+        let mut matrices = Vec::with_capacity(mats.len());
+        for (i, mj) in mats.iter().enumerate() {
+            let id = mj
+                .get("id")
+                .and_then(Json::as_str)
+                .ok_or_else(|| {
+                    Error::Invalid(format!("scenario: matrices[{i}] missing 'id'"))
+                })?
+                .to_string();
+            if matrices.iter().any(|m: &MatrixSpec| m.id == id) {
+                return Err(Error::Invalid(format!(
+                    "scenario: duplicate matrix id '{id}'"
+                )));
+            }
+            matrices.push(MatrixSpec {
+                id,
+                kind: str_or(mj, "kind", "lung2").to_string(),
+                n: usize_or(mj, "n", 500),
+                scale: f64_or(mj, "scale", 0.02),
+                bandwidth: usize_or(mj, "bandwidth", 8),
+                max_deps: usize_or(mj, "max_deps", 4),
+                plan: str_or(mj, "plan", "").to_string(),
+                weight: f64_or(mj, "weight", 1.0).max(0.0),
+            });
+        }
+        if matrices.iter().all(|m| m.weight == 0.0) {
+            return Err(Error::Invalid(
+                "scenario: every matrix has weight 0".into(),
+            ));
+        }
+        let deadline = root.get("deadline").cloned().unwrap_or(Json::Null);
+        let arrival = root.get("arrival").cloned().unwrap_or(Json::Null);
+        let sc = Scenario {
+            name,
+            seed: f64_or(&root, "seed", 0x5EED as f64) as u64,
+            requests: usize_or(&root, "requests", 64),
+            matrices,
+            interactive_fraction: f64_or(&root, "interactive_fraction", 0.0)
+                .clamp(0.0, 1.0),
+            deadline_fraction: f64_or(&deadline, "fraction", 0.0).clamp(0.0, 1.0),
+            deadline_min_us: f64_or(&deadline, "min_us", 1_000.0) as u64,
+            deadline_max_us: f64_or(&deadline, "max_us", 100_000.0) as u64,
+            gap_us: f64_or(&arrival, "gap_us", 0.0) as u64,
+            burst: usize_or(&arrival, "burst", 1).max(1),
+            block_size: usize_or(&root, "block_size", 1).max(1),
+            refresh_every: usize_or(&root, "refresh_every", 0),
+        };
+        if sc.deadline_max_us < sc.deadline_min_us {
+            return Err(Error::Invalid(format!(
+                "scenario: deadline max_us {} < min_us {}",
+                sc.deadline_max_us, sc.deadline_min_us
+            )));
+        }
+        Ok(sc)
+    }
+
+    /// Read and parse a manifest file.
+    pub fn load(path: &Path) -> Result<Scenario, Error> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Io(format!("read {}: {e}", path.display())))?;
+        Scenario::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SMOKE: &str = r#"{
+        "name": "t",
+        "seed": 9,
+        "requests": 12,
+        "matrices": [
+            {"id": "a", "kind": "tridiagonal", "n": 50, "plan": "none", "weight": 3},
+            {"id": "b", "kind": "lung2", "scale": 0.02, "plan": "avgcost+scheduled"}
+        ],
+        "interactive_fraction": 0.5,
+        "deadline": {"fraction": 0.25, "min_us": 500, "max_us": 2000},
+        "arrival": {"gap_us": 10, "burst": 2},
+        "block_size": 2,
+        "refresh_every": 6
+    }"#;
+
+    #[test]
+    fn parses_full_manifest() {
+        let sc = Scenario::parse(SMOKE).unwrap();
+        assert_eq!(sc.name, "t");
+        assert_eq!(sc.seed, 9);
+        assert_eq!(sc.requests, 12);
+        assert_eq!(sc.matrices.len(), 2);
+        assert_eq!(sc.matrices[0].id, "a");
+        assert_eq!(sc.matrices[0].n, 50);
+        assert_eq!(sc.matrices[0].weight, 3.0);
+        assert_eq!(sc.matrices[1].weight, 1.0, "weight defaults to 1");
+        assert_eq!(sc.interactive_fraction, 0.5);
+        assert_eq!(sc.deadline_fraction, 0.25);
+        assert_eq!((sc.deadline_min_us, sc.deadline_max_us), (500, 2000));
+        assert_eq!((sc.gap_us, sc.burst), (10, 2));
+        assert_eq!(sc.block_size, 2);
+        assert_eq!(sc.refresh_every, 6);
+    }
+
+    #[test]
+    fn defaults_fill_optional_fields() {
+        let sc = Scenario::parse(
+            r#"{"name": "min", "matrices": [{"id": "m"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(sc.requests, 64);
+        assert_eq!(sc.matrices[0].kind, "lung2");
+        assert_eq!(sc.interactive_fraction, 0.0);
+        assert_eq!(sc.deadline_fraction, 0.0);
+        assert_eq!(sc.burst, 1);
+        assert_eq!(sc.block_size, 1);
+        assert_eq!(sc.refresh_every, 0);
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(Scenario::parse("not json").is_err());
+        assert!(Scenario::parse(r#"{"matrices": [{"id": "m"}]}"#).is_err());
+        assert!(Scenario::parse(r#"{"name": "x", "matrices": []}"#).is_err());
+        assert!(Scenario::parse(r#"{"name": "x"}"#).is_err());
+        assert!(Scenario::parse(
+            r#"{"name": "bad name!", "matrices": [{"id": "m"}]}"#
+        )
+        .is_err());
+        assert!(Scenario::parse(
+            r#"{"name": "x", "matrices": [{"id": "m"}, {"id": "m"}]}"#
+        )
+        .is_err());
+        assert!(Scenario::parse(
+            r#"{"name": "x", "matrices": [{"id": "m"}],
+                "deadline": {"min_us": 100, "max_us": 5}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn generates_every_kind() {
+        for (kind, n) in [
+            ("lung2", 0),
+            ("torso2", 0),
+            ("tridiagonal", 40),
+            ("banded", 40),
+            ("random", 40),
+            ("poisson", 6),
+        ] {
+            let spec = MatrixSpec {
+                id: kind.to_string(),
+                kind: kind.to_string(),
+                n,
+                scale: 0.02,
+                bandwidth: 4,
+                max_deps: 3,
+                plan: String::new(),
+                weight: 1.0,
+            };
+            let m = spec.generate(1).unwrap();
+            assert!(m.nrows > 0, "{kind}");
+            m.validate_lower_triangular().unwrap();
+        }
+        let bad = MatrixSpec {
+            id: "x".into(),
+            kind: "mystery".into(),
+            n: 10,
+            scale: 0.02,
+            bandwidth: 4,
+            max_deps: 3,
+            plan: String::new(),
+            weight: 1.0,
+        };
+        assert!(bad.generate(1).is_err());
+    }
+}

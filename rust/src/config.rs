@@ -52,6 +52,13 @@ pub struct Config {
     /// elastic lookahead window in blocks for `--strategy scheduled`
     /// (0 = strict in-order point-to-point waits)
     pub sched_stale_window: usize,
+    /// record per-solve phase spans in the service's tracer (off by
+    /// default; `sptrsv bench` forces it on for its report)
+    pub trace_enabled: bool,
+    /// directory `sptrsv bench` writes its `BENCH_*.json` files into
+    pub bench_out_dir: String,
+    /// override the scenario's request count (0 = use the scenario value)
+    pub bench_requests: usize,
     /// any further key=value pairs (kept for extensions/ablations)
     pub extra: BTreeMap<String, String>,
 }
@@ -76,6 +83,9 @@ impl Default for Config {
             tuner_cache_ttl: 0,
             sched_block_target: crate::sched::DEFAULT_BLOCK_TARGET,
             sched_stale_window: crate::sched::DEFAULT_STALE_WINDOW,
+            trace_enabled: false,
+            bench_out_dir: "bench-out".to_string(),
+            bench_requests: 0,
             extra: BTreeMap::new(),
         }
     }
@@ -142,7 +152,8 @@ impl Config {
                     | "batch-deadline-us" | "max-pending" | "use-xla" | "seed"
                     | "tuner-cache" | "analysis-cache" | "tuner-top-k"
                     | "tuner-race-solves" | "tuner-cache-ttl" | "sched-block-target"
-                    | "sched-stale-window"
+                    | "sched-stale-window" | "trace-enabled" | "bench-out-dir"
+                    | "bench-requests"
             ) {
                 self.set(&k.replace('-', "_"), v)?;
             }
@@ -181,6 +192,11 @@ impl Config {
             }
             "sched_stale_window" => {
                 self.sched_stale_window = val.parse().map_err(|_| bad(key, val))?
+            }
+            "trace_enabled" => self.trace_enabled = matches!(val, "true" | "1" | "yes"),
+            "bench_out_dir" => self.bench_out_dir = val.to_string(),
+            "bench_requests" => {
+                self.bench_requests = val.parse().map_err(|_| bad(key, val))?
             }
             other => {
                 self.extra.insert(other.to_string(), val.to_string());
@@ -338,6 +354,33 @@ mod tests {
         assert_eq!(c.sched_block_target, 512);
         assert_eq!(c.sched_stale_window, 8);
         assert_eq!(c.tuner_cache_ttl, 60);
+    }
+
+    #[test]
+    fn trace_and_bench_keys_parse_and_merge() {
+        let mut c = Config::default();
+        assert!(!c.trace_enabled, "tracing is off by default");
+        assert_eq!(c.bench_out_dir, "bench-out");
+        assert_eq!(c.bench_requests, 0);
+        c.set("trace_enabled", "true").unwrap();
+        c.set("bench_out_dir", "/tmp/bench").unwrap();
+        c.set("bench_requests", "64").unwrap();
+        assert!(c.trace_enabled);
+        assert_eq!(c.bench_out_dir, "/tmp/bench");
+        assert_eq!(c.bench_requests, 64);
+        assert!(c.set("bench_requests", "lots").is_err());
+        let args = Args::parse(
+            [
+                "bench", "--trace-enabled", "false", "--bench-out-dir", "out",
+                "--bench-requests", "8",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        c.merge_args(&args).unwrap();
+        assert!(!c.trace_enabled);
+        assert_eq!(c.bench_out_dir, "out");
+        assert_eq!(c.bench_requests, 8);
     }
 
     #[test]

@@ -1,14 +1,31 @@
-//! Service metrics: request counters and a log2-bucketed latency
-//! histogram, lock-free on the hot path. Tuner events (registration-time
+//! Service metrics: request counters and per-lane log2-bucketed latency
+//! histograms, lock-free on the hot path. Tuner events (registration-time
 //! only, never on the solve path) additionally keep per-plan win counts
 //! behind a mutex.
+//!
+//! Latency is tracked per [`Lane`] so interactive tail latency is never
+//! masked by batch traffic; [`Snapshot`] carries both lanes plus the
+//! combined view (summed histograms), and `Display` renders the combined
+//! line as before. [`Snapshot::to_json`] serializes everything for the
+//! `--metrics-json` dump and the BENCH emitter.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::coordinator::batcher::Lane;
+use crate::util::json::Json;
+
 const BUCKETS: usize = 40; // 2^0 .. 2^39 microseconds
+const LANES: usize = 2;
+
+fn lane_idx(lane: Lane) -> usize {
+    match lane {
+        Lane::Interactive => 0,
+        Lane::Batch => 1,
+    }
+}
 
 pub struct Metrics {
     pub solves: AtomicU64,
@@ -44,8 +61,10 @@ pub struct Metrics {
     placement_passes: AtomicU64,
     /// gauge: cumulative value-only numeric replays paid by the pipeline
     renumeric_passes: AtomicU64,
-    total_us: AtomicU64,
-    hist: [AtomicU64; BUCKETS],
+    /// summed latency per lane (interactive, batch)
+    total_us: [AtomicU64; LANES],
+    /// log2 latency histogram per lane (interactive, batch)
+    hist: [[AtomicU64; BUCKETS]; LANES],
     /// gauge: queued right-hand sides in the interactive lane
     lane_interactive: AtomicU64,
     /// gauge: queued right-hand sides in the batch lane
@@ -91,8 +110,8 @@ impl Metrics {
             coarsen_passes: AtomicU64::new(0),
             placement_passes: AtomicU64::new(0),
             renumeric_passes: AtomicU64::new(0),
-            total_us: AtomicU64::new(0),
-            hist: std::array::from_fn(|_| AtomicU64::new(0)),
+            total_us: std::array::from_fn(|_| AtomicU64::new(0)),
+            hist: std::array::from_fn(|_| std::array::from_fn(|_| AtomicU64::new(0))),
             lane_interactive: AtomicU64::new(0),
             lane_batch: AtomicU64::new(0),
             sched_blocks: AtomicU64::new(0),
@@ -151,15 +170,17 @@ impl Metrics {
         *wins.entry(plan.to_string()).or_insert(0) += 1;
     }
 
-    pub fn record_solve(&self, latency: Duration, batched: bool) {
+    /// Record one delivered solve into its lane's histogram.
+    pub fn record_solve(&self, latency: Duration, batched: bool, lane: Lane) {
         let us = latency.as_micros() as u64;
         self.solves.fetch_add(1, Ordering::Relaxed);
         if batched {
             self.batched_solves.fetch_add(1, Ordering::Relaxed);
         }
-        self.total_us.fetch_add(us, Ordering::Relaxed);
+        let li = lane_idx(lane);
+        self.total_us[li].fetch_add(us, Ordering::Relaxed);
         let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
-        self.hist[bucket].fetch_add(1, Ordering::Relaxed);
+        self.hist[li][bucket].fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_batch(&self) {
@@ -202,10 +223,23 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> Snapshot {
-        let count = self.solves.load(Ordering::Relaxed);
-        let hist: Vec<u64> = self.hist.iter().map(|h| h.load(Ordering::Relaxed)).collect();
+        let lane_hist: Vec<Vec<u64>> = self
+            .hist
+            .iter()
+            .map(|h| h.iter().map(|b| b.load(Ordering::Relaxed)).collect())
+            .collect();
+        let lane_total: Vec<u64> = self
+            .total_us
+            .iter()
+            .map(|t| t.load(Ordering::Relaxed))
+            .collect();
+        let lane = |li: usize| LaneLatency::from_hist(&lane_hist[li], lane_total[li]);
+        let combined_hist: Vec<u64> = (0..BUCKETS)
+            .map(|b| lane_hist.iter().map(|h| h[b]).sum())
+            .collect();
+        let combined = LaneLatency::from_hist(&combined_hist, lane_total.iter().sum());
         Snapshot {
-            solves: count,
+            solves: self.solves.load(Ordering::Relaxed),
             batched_solves: self.batched_solves.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
@@ -242,14 +276,12 @@ impl Metrics {
                 .iter()
                 .map(|(k, v)| (k.clone(), *v))
                 .collect(),
-            mean_us: if count == 0 {
-                0.0
-            } else {
-                self.total_us.load(Ordering::Relaxed) as f64 / count as f64
-            },
-            p50_us: percentile(&hist, count, 0.50),
-            p95_us: percentile(&hist, count, 0.95),
-            p99_us: percentile(&hist, count, 0.99),
+            interactive: lane(lane_idx(Lane::Interactive)),
+            batch: lane(lane_idx(Lane::Batch)),
+            mean_us: combined.mean_us,
+            p50_us: combined.p50_us,
+            p95_us: combined.p95_us,
+            p99_us: combined.p99_us,
         }
     }
 }
@@ -268,6 +300,44 @@ fn percentile(hist: &[u64], count: u64, q: f64) -> u64 {
         }
     }
     1u64 << hist.len()
+}
+
+/// Latency summary for one lane (or the combined view): count, mean and
+/// log2-bucket percentile upper bounds.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LaneLatency {
+    pub solves: u64,
+    pub mean_us: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+}
+
+impl LaneLatency {
+    fn from_hist(hist: &[u64], total_us: u64) -> LaneLatency {
+        let solves: u64 = hist.iter().sum();
+        LaneLatency {
+            solves,
+            mean_us: if solves == 0 {
+                0.0
+            } else {
+                total_us as f64 / solves as f64
+            },
+            p50_us: percentile(hist, solves, 0.50),
+            p95_us: percentile(hist, solves, 0.95),
+            p99_us: percentile(hist, solves, 0.99),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("solves", Json::Num(self.solves as f64)),
+            ("mean_us", Json::Num(self.mean_us)),
+            ("p50_us", Json::Num(self.p50_us as f64)),
+            ("p95_us", Json::Num(self.p95_us as f64)),
+            ("p99_us", Json::Num(self.p99_us as f64)),
+        ])
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -316,10 +386,87 @@ pub struct Snapshot {
     pub plan_wins: Vec<(String, u64)>,
     /// (matrix id, admission rejections charged to it), sorted by id
     pub rejections_by_matrix: Vec<(String, u64)>,
+    /// interactive-lane latency summary
+    pub interactive: LaneLatency,
+    /// batch-lane latency summary
+    pub batch: LaneLatency,
+    /// combined mean across both lanes
     pub mean_us: f64,
+    /// combined (both-lane) percentile bounds
     pub p50_us: u64,
     pub p95_us: u64,
     pub p99_us: u64,
+}
+
+impl Snapshot {
+    /// Serialize every field (both lanes, combined view, per-plan wins,
+    /// per-matrix rejections) for `--metrics-json` and the BENCH emitter.
+    pub fn to_json(&self) -> Json {
+        let counts = |pairs: &[(String, u64)]| {
+            Json::Obj(
+                pairs
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                    .collect(),
+            )
+        };
+        Json::obj(vec![
+            ("solves", Json::Num(self.solves as f64)),
+            ("batched_solves", Json::Num(self.batched_solves as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("rejections", Json::Num(self.rejections as f64)),
+            ("cancellations", Json::Num(self.cancellations as f64)),
+            ("deadline_misses", Json::Num(self.deadline_misses as f64)),
+            ("cancel_wakeups", Json::Num(self.cancel_wakeups as f64)),
+            (
+                "lane_interactive_depth",
+                Json::Num(self.lane_interactive_depth as f64),
+            ),
+            ("lane_batch_depth", Json::Num(self.lane_batch_depth as f64)),
+            ("sched_blocks", Json::Num(self.sched_blocks as f64)),
+            ("sched_cut_edges", Json::Num(self.sched_cut_edges as f64)),
+            ("elastic_waits", Json::Num(self.elastic_waits as f64)),
+            ("elastic_ooo", Json::Num(self.elastic_ooo as f64)),
+            ("tuner_cache_hits", Json::Num(self.tuner_cache_hits as f64)),
+            (
+                "tuner_cache_misses",
+                Json::Num(self.tuner_cache_misses as f64),
+            ),
+            (
+                "analysis_cache_hits",
+                Json::Num(self.analysis_cache_hits as f64),
+            ),
+            (
+                "analysis_cache_misses",
+                Json::Num(self.analysis_cache_misses as f64),
+            ),
+            ("value_refreshes", Json::Num(self.value_refreshes as f64)),
+            ("rewrite_passes", Json::Num(self.rewrite_passes as f64)),
+            ("coarsen_passes", Json::Num(self.coarsen_passes as f64)),
+            ("placement_passes", Json::Num(self.placement_passes as f64)),
+            ("renumeric_passes", Json::Num(self.renumeric_passes as f64)),
+            ("plan_wins", counts(&self.plan_wins)),
+            ("rejections_by_matrix", counts(&self.rejections_by_matrix)),
+            (
+                "latency_us",
+                Json::obj(vec![
+                    ("interactive", self.interactive.to_json()),
+                    ("batch", self.batch.to_json()),
+                    (
+                        "combined",
+                        Json::obj(vec![
+                            ("solves", Json::Num(self.solves as f64)),
+                            ("mean_us", Json::Num(self.mean_us)),
+                            ("p50_us", Json::Num(self.p50_us as f64)),
+                            ("p95_us", Json::Num(self.p95_us as f64)),
+                            ("p99_us", Json::Num(self.p99_us as f64)),
+                        ]),
+                    ),
+                ]),
+            ),
+        ])
+    }
 }
 
 impl std::fmt::Display for Snapshot {
@@ -334,6 +481,15 @@ impl std::fmt::Display for Snapshot {
             self.lane_interactive_depth, self.lane_batch_depth,
             self.mean_us, self.p50_us, self.p95_us, self.p99_us
         )?;
+        // Surface the interactive tail whenever both lanes carried
+        // traffic — the combined line alone would mask it.
+        if self.interactive.solves > 0 && self.batch.solves > 0 {
+            write!(
+                f,
+                ", interactive p50<{}us p99<{}us",
+                self.interactive.p50_us, self.interactive.p99_us
+            )?;
+        }
         if self.cancel_wakeups > 0 {
             write!(f, ", cancel_wakeups={}", self.cancel_wakeups)?;
         }
@@ -405,7 +561,7 @@ mod tests {
     fn records_and_snapshots() {
         let m = Metrics::new();
         for i in 1..=100u64 {
-            m.record_solve(Duration::from_micros(i * 10), i % 2 == 0);
+            m.record_solve(Duration::from_micros(i * 10), i % 2 == 0, Lane::Batch);
         }
         m.record_batch();
         m.record_error();
@@ -419,6 +575,10 @@ mod tests {
         assert!(s.p50_us >= 256 && s.p50_us <= 1024, "{}", s.p50_us);
         assert!(s.p95_us >= s.p50_us);
         assert!(s.p99_us >= s.p95_us);
+        // All traffic rode the batch lane; the combined view equals it.
+        assert_eq!(s.interactive.solves, 0);
+        assert_eq!(s.batch.solves, 100);
+        assert_eq!(s.batch.p99_us, s.p99_us);
     }
 
     #[test]
@@ -427,10 +587,38 @@ mod tests {
         assert_eq!(s.solves, 0);
         assert_eq!(s.mean_us, 0.0);
         assert_eq!(s.p50_us, 0);
+        assert_eq!(s.interactive, LaneLatency::default());
+        assert_eq!(s.batch, LaneLatency::default());
         assert_eq!(s.tuner_cache_hits, 0);
         assert!(s.plan_wins.is_empty());
         // Without tuner activity the rendering is unchanged.
         assert!(!s.to_string().contains("tuner"));
+    }
+
+    #[test]
+    fn lanes_keep_separate_histograms() {
+        let m = Metrics::new();
+        // Fast interactive traffic under a pile of slow batch solves: the
+        // per-lane split must keep the interactive tail visible.
+        for _ in 0..90 {
+            m.record_solve(Duration::from_micros(60_000), true, Lane::Batch);
+        }
+        for _ in 0..10 {
+            m.record_solve(Duration::from_micros(100), false, Lane::Interactive);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.interactive.solves, 10);
+        assert_eq!(s.batch.solves, 90);
+        assert_eq!(s.interactive.p99_us, 128);
+        assert!(s.batch.p50_us >= 65_536);
+        // The combined view is dominated by the batch lane (the masking
+        // the split exists to undo)...
+        assert!(s.p99_us >= 65_536);
+        // ...and the mean splits correctly per lane.
+        assert!((s.interactive.mean_us - 100.0).abs() < 1e-9);
+        assert!((s.batch.mean_us - 60_000.0).abs() < 1e-9);
+        let text = s.to_string();
+        assert!(text.contains("interactive p50<128us p99<128us"), "{text}");
     }
 
     #[test]
@@ -535,5 +723,77 @@ mod tests {
         hist[5] = 10;
         assert_eq!(percentile(&hist, 10, 0.5), 64);
         assert_eq!(percentile(&hist, 10, 1.0), 64);
+    }
+
+    #[test]
+    fn percentile_empty_histogram_is_zero() {
+        let hist = vec![0u64; 40];
+        assert_eq!(percentile(&hist, 0, 0.5), 0);
+        assert_eq!(percentile(&hist, 0, 0.99), 0);
+        assert_eq!(percentile(&hist, 0, 1.0), 0);
+    }
+
+    #[test]
+    fn percentile_single_bucket_answers_every_quantile() {
+        let mut hist = vec![0u64; 40];
+        hist[0] = 1;
+        // One sub-microsecond sample: every quantile lands in bucket 0,
+        // whose upper bound is 2us.
+        for q in [0.01, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(percentile(&hist, 1, q), 2, "q={q}");
+        }
+    }
+
+    #[test]
+    fn percentile_saturating_top_bucket() {
+        let mut hist = vec![0u64; 40];
+        hist[39] = 5;
+        // Samples clamped into the last bucket report its upper bound
+        // (2^40us), and a count larger than the histogram's mass falls
+        // through to the same overflow bound instead of panicking.
+        assert_eq!(percentile(&hist, 5, 0.5), 1u64 << 40);
+        assert_eq!(percentile(&hist, 5, 1.0), 1u64 << 40);
+        assert_eq!(percentile(&hist, 10, 1.0), 1u64 << 40);
+        // A clamped record_solve lands there too.
+        let m = Metrics::new();
+        m.record_solve(Duration::from_secs(10_000_000), false, Lane::Batch);
+        assert_eq!(m.snapshot().p99_us, 1u64 << 40);
+    }
+
+    #[test]
+    fn snapshot_serializes_to_json() {
+        let m = Metrics::new();
+        m.record_solve(Duration::from_micros(100), false, Lane::Interactive);
+        m.record_solve(Duration::from_micros(3000), true, Lane::Batch);
+        m.record_tuner_choice("avgcost+scheduled", true);
+        m.record_rejection("noisy");
+        m.set_sched(4, 2, 9, 1);
+        let j = m.snapshot().to_json();
+        assert_eq!(j.get("solves").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("elastic_waits").unwrap().as_f64(), Some(9.0));
+        let lat = j.get("latency_us").unwrap();
+        assert_eq!(
+            lat.get("interactive").unwrap().get("solves").unwrap().as_f64(),
+            Some(1.0)
+        );
+        assert_eq!(
+            lat.get("interactive").unwrap().get("p99_us").unwrap().as_f64(),
+            Some(128.0)
+        );
+        assert_eq!(
+            lat.get("combined").unwrap().get("solves").unwrap().as_f64(),
+            Some(2.0)
+        );
+        assert_eq!(
+            j.get("plan_wins").unwrap().get("avgcost+scheduled").unwrap().as_f64(),
+            Some(1.0)
+        );
+        assert_eq!(
+            j.get("rejections_by_matrix").unwrap().get("noisy").unwrap().as_f64(),
+            Some(1.0)
+        );
+        // The dump round-trips through the crate's own parser.
+        let s = j.to_string();
+        assert_eq!(Json::parse(&s).unwrap(), j);
     }
 }

@@ -32,7 +32,7 @@ pub mod pipeline;
 pub mod service;
 
 pub use batcher::Lane;
-pub use metrics::{Metrics, Snapshot};
+pub use metrics::{LaneLatency, Metrics, Snapshot};
 pub use pipeline::{AnalysisSource, Backend, Pipeline, Prepared};
 pub use service::{
     BlockTicket, MatrixHandle, RegisterInfo, RegisterOptions, Service, SolveHandle,

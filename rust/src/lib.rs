@@ -208,7 +208,10 @@
 //! re-registering a known structure skips rewrite analysis, coarsening
 //! and placement; "" = disabled), `tuner_top_k`, `tuner_race_solves`,
 //! `tuner_cache_ttl` (seconds before a spilled plan expires, 0 = never),
-//! `sched_block_target`, `sched_stale_window` (see Scheduling below).
+//! `sched_block_target`, `sched_stale_window` (see Scheduling below),
+//! `trace_enabled` (record per-solve phase spans, see Observability
+//! below), `bench_out_dir` and `bench_requests` (the `sptrsv bench`
+//! output directory and request-count override).
 //!
 //! ## Scheduling
 //!
@@ -303,8 +306,41 @@
 //! per-plan win counts in its metrics; `sptrsv tune --kind lung2` prints
 //! the whole decision (features, cross-product predictions, race) for
 //! one matrix.
+//!
+//! ## Observability
+//!
+//! Three layers, cheapest first:
+//!
+//! * **Metrics** — the service's always-on counters and per-lane log2
+//!   latency histograms. [`coordinator::SolveHandle::metrics`] returns a
+//!   serializable [`coordinator::Snapshot`] (combined *and* per-lane
+//!   p50/p95/p99 via [`coordinator::LaneLatency`]); `sptrsv serve
+//!   --metrics-json FILE` and `sptrsv bench --metrics-json FILE` dump it
+//!   as JSON. The observed elastic wait/out-of-order counters also feed
+//!   back into the tuner's cost model after each snapshot (the
+//!   calibration hook), so `auto` decisions price synchronization by what
+//!   this machine measured rather than by static constants.
+//! * **Phase tracing** — with the `trace_enabled` config key, the service
+//!   records per-solve and per-registration spans ([`trace`]): the
+//!   analyze split (rewrite / coarsen / placement / renumeric, carried on
+//!   every [`analysis::Analysis`] as [`analysis::Analysis::phase_times`]),
+//!   the batcher wait, execution, and the elastic stall counters — folded
+//!   into per-matrix aggregates behind a fixed-size ring, drained with
+//!   [`coordinator::SolveHandle::trace_report`]. Off (the default) it
+//!   costs one relaxed atomic load per record site.
+//! * **Bench trajectories** — `sptrsv bench --scenario FILE.json` replays
+//!   a deterministic workload manifest ([`bench::Scenario`]: matrix mix,
+//!   lane mix, deadline distribution, arrival pattern, value-refresh
+//!   cadence) through the coordinator with tracing forced on, and emits a
+//!   `BENCH_<name>.json` stamped with [`bench::BENCH_SCHEMA_VERSION`]
+//!   (pinned by `scenarios/BENCH_SCHEMA`; CI fails on drift without a
+//!   bump): throughput, per-lane latency percentiles, deadline-miss rate,
+//!   cache hit rates, elastic counters and the per-phase time breakdown.
+//!   `scenarios/smoke.json` is the CI smoke scenario and the manifest
+//!   format's reference example.
 
 pub mod analysis;
+pub mod bench;
 pub mod codegen;
 pub mod config;
 pub mod coordinator;
@@ -315,6 +351,7 @@ pub mod runtime;
 pub mod sched;
 pub mod solver;
 pub mod sparse;
+pub mod trace;
 pub mod transform;
 pub mod tuner;
 pub mod util;

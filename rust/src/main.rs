@@ -11,11 +11,14 @@
 //!   figures    emit the Fig 5 / Fig 6 per-level cost CSVs
 //!   xla        check the AOT artifact registry and run an XLA solve
 //!   serve      start the coordinator and run a demo workload against it
+//!   bench      replay a scenario manifest through the coordinator and
+//!              emit a schema-stamped BENCH_*.json trajectory
 
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use sptrsv_gt::bench;
 use sptrsv_gt::config::Config;
 use sptrsv_gt::coordinator::{Service, SolveOptions};
 use sptrsv_gt::graph::{analyze::LevelStats, Levels};
@@ -39,6 +42,7 @@ fn main() {
         "figures" => cmd_figures(&args),
         "xla" => cmd_xla(&args),
         "serve" => cmd_serve(&args),
+        "bench" => cmd_bench(&args),
         "" | "help" | "--help" => {
             print!("{}", HELP);
             Ok(())
@@ -81,9 +85,16 @@ USAGE: sptrsv <subcommand> [flags]
   serve     [--requests N] [--batch-size B] [--max-pending P] [--use-xla]
             [--analysis-cache DIR]   # persisted analyses: re-registering
             # a known structure skips coarsening + placement
+            [--metrics-json FILE]   # also dump the final metrics snapshot
             # demo workload: mixed interactive/batch lanes, one multi-RHS
             # block, and a value refresh through the coordinator, then
             # the metrics snapshot
+  bench     --scenario FILE.json [--bench-out-dir DIR] [--bench-requests N]
+            [--metrics-json FILE] [--config FILE] [--workers W] [--use-xla]
+            # replay the manifest (matrix mix, lanes, deadlines, arrival
+            # pattern, value refreshes) through the coordinator with phase
+            # tracing forced on; emits DIR/BENCH_<name>.json stamped with
+            # the schema version pinned in scenarios/BENCH_SCHEMA
 
 PLANS (-P): REWRITE+EXEC, e.g. avgcost+scheduled, guarded:5+syncfree,
   manual:4+reorder — REWRITE in none|avgcost|manual[:d]|guarded[:d[:m]],
@@ -717,7 +728,54 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "{total} solves in {dt:?} ({:.1} solves/s), worst residual {worst:.3e}",
         total as f64 / dt.as_secs_f64()
     );
-    println!("metrics: {}", h.metrics()?);
+    let snap = h.metrics()?;
+    println!("metrics: {snap}");
+    if let Some(path) = args.flag("metrics-json") {
+        std::fs::write(path, format!("{}\n", snap.to_json()))
+            .with_context(|| format!("writing --metrics-json {path}"))?;
+        println!("metrics snapshot written to {path}");
+    }
     svc.shutdown();
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let mut cfg = Config::default();
+    if let Some(path) = args.flag("config") {
+        cfg = Config::from_file(Path::new(path))?;
+    }
+    cfg.merge_args(args)?;
+    let path = args
+        .flag("scenario")
+        .context("bench needs --scenario FILE.json (see scenarios/smoke.json)")?;
+    let sc = bench::Scenario::load(Path::new(path))?;
+    let requests = if cfg.bench_requests > 0 {
+        cfg.bench_requests
+    } else {
+        sc.requests
+    };
+    println!(
+        "replaying scenario '{}': {} requests over {} matrices \
+         (interactive {:.0}%, deadlines {:.0}%, refresh every {}), workers={}",
+        sc.name,
+        requests,
+        sc.matrices.len(),
+        100.0 * sc.interactive_fraction,
+        100.0 * sc.deadline_fraction,
+        sc.refresh_every,
+        cfg.workers,
+    );
+    let out = bench::run(&sc, &cfg)?;
+    let snap = &out.snapshot;
+    println!("bench metrics: {snap}");
+    println!(
+        "deadline misses {} / rejections {} / interactive p99 {}us / batch p99 {}us",
+        snap.deadline_misses, snap.rejections, snap.interactive.p99_us, snap.batch.p99_us
+    );
+    if let Some(mpath) = args.flag("metrics-json") {
+        std::fs::write(mpath, format!("{}\n", snap.to_json()))
+            .with_context(|| format!("writing --metrics-json {mpath}"))?;
+    }
+    println!("BENCH trajectory written to {}", out.path.display());
     Ok(())
 }

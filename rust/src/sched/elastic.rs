@@ -37,6 +37,10 @@ struct ExecCounters {
     waits: AtomicU64,
     /// blocks executed out of order from the lookahead window
     ooo: AtomicU64,
+    /// waits delta of the most recent solve (per-solve trace attribution)
+    last_waits: AtomicU64,
+    /// ooo delta of the most recent solve
+    last_ooo: AtomicU64,
 }
 
 /// Executes a [`Schedule`] over a transformed system, reusable across
@@ -96,6 +100,8 @@ impl ScheduledSolver {
             counters: Arc::new(ExecCounters {
                 waits: AtomicU64::new(0),
                 ooo: AtomicU64::new(0),
+                last_waits: AtomicU64::new(0),
+                last_ooo: AtomicU64::new(0),
             }),
             stale_window: opts.stale_window(),
         }
@@ -120,6 +126,17 @@ impl ScheduledSolver {
         (
             self.counters.waits.load(Ordering::Relaxed),
             self.counters.ooo.load(Ordering::Relaxed),
+        )
+    }
+
+    /// The (blocked-scan, out-of-order) deltas of the most recent solve —
+    /// what the coordinator attributes to that solve's trace spans.
+    /// Meaningful between a `solve`/`solve_into` return and the next call
+    /// (concurrent solves on one solver are unsupported anyway).
+    pub fn last_solve_counters(&self) -> (u64, u64) {
+        (
+            self.counters.last_waits.load(Ordering::Relaxed),
+            self.counters.last_ooo.load(Ordering::Relaxed),
         )
     }
 
@@ -156,8 +173,11 @@ impl ScheduledSolver {
                     }
                 }
             }
+            self.counters.last_waits.store(0, Ordering::Relaxed);
+            self.counters.last_ooo.store(0, Ordering::Relaxed);
             return;
         }
+        let (waits_before, ooo_before) = self.wait_counters();
         // Reset the per-block flags; pool.run's lock publishes the stores
         // to every worker before any block executes.
         for f in self.done.iter() {
@@ -224,6 +244,15 @@ impl ScheduledSolver {
                 counters.ooo.fetch_add(local_ooo, Ordering::Relaxed);
             }
         });
+        // pool.run is a rendezvous: every worker's fetch_add has landed,
+        // so the cumulative delta is exactly this solve's contribution.
+        let (waits_after, ooo_after) = self.wait_counters();
+        self.counters
+            .last_waits
+            .store(waits_after - waits_before, Ordering::Relaxed);
+        self.counters
+            .last_ooo
+            .store(ooo_after - ooo_before, Ordering::Relaxed);
     }
 }
 
@@ -327,11 +356,13 @@ mod tests {
         let x1 = s.solve(&b);
         let x2 = s.solve(&b);
         assert_eq!(x1, x2);
-        // Counters only ever grow.
+        // Counters only ever grow, and the per-solve delta accounts for
+        // exactly the growth of the last solve.
         let (w1, o1) = s.wait_counters();
         s.solve(&b);
         let (w2, o2) = s.wait_counters();
         assert!(w2 >= w1 && o2 >= o1);
+        assert_eq!(s.last_solve_counters(), (w2 - w1, o2 - o1));
     }
 
     #[test]
@@ -346,5 +377,6 @@ mod tests {
         let (waits, ooo) = s.wait_counters();
         assert_eq!(waits, 0, "one worker never waits");
         assert_eq!(ooo, 0, "one worker never reorders");
+        assert_eq!(s.last_solve_counters(), (0, 0));
     }
 }

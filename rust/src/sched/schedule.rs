@@ -49,7 +49,22 @@ impl Schedule {
     /// Build a schedule for executing the transformed system `(m, t)` on
     /// `workers` threads with the given coarsening target.
     pub fn build(m: &Csr, t: &TransformResult, workers: usize, block_target: usize) -> Schedule {
+        Self::build_timed(m, t, workers, block_target).0
+    }
+
+    /// [`Self::build`] plus the wall-clock split of its two passes:
+    /// `(schedule, coarsen time, placement time)`. The timings feed the
+    /// analysis phase tracers; they live outside the schedule (and its
+    /// stats) because construction is deterministic and comparable while
+    /// timings are neither.
+    pub fn build_timed(
+        m: &Csr,
+        t: &TransformResult,
+        workers: usize,
+        block_target: usize,
+    ) -> (Schedule, std::time::Duration, std::time::Duration) {
         let workers = workers.max(1);
+        let t0 = std::time::Instant::now();
         let dag = coarsen::coarsen(
             m,
             t,
@@ -58,6 +73,8 @@ impl Schedule {
                 workers,
             },
         );
+        let coarsen_time = t0.elapsed();
+        let t1 = std::time::Instant::now();
         let part = partition::partition(
             &dag,
             &PartitionOptions {
@@ -65,6 +82,7 @@ impl Schedule {
                 ..Default::default()
             },
         );
+        let placement_time = t1.elapsed();
         let mut worker_lists: Vec<Vec<u32>> = vec![Vec::new(); workers];
         for (b, &w) in part.worker_of.iter().enumerate() {
             worker_lists[w as usize].push(b as u32);
@@ -78,15 +96,19 @@ impl Schedule {
             levelset_barriers: t.num_levels().saturating_sub(1),
             workers,
         };
-        Schedule {
-            nworkers: workers,
-            blocks: dag.blocks,
-            worker_of: part.worker_of,
-            worker_lists,
-            pred_ptr: dag.pred_ptr,
-            preds: dag.preds,
-            stats,
-        }
+        (
+            Schedule {
+                nworkers: workers,
+                blocks: dag.blocks,
+                worker_of: part.worker_of,
+                worker_lists,
+                pred_ptr: dag.pred_ptr,
+                preds: dag.preds,
+                stats,
+            },
+            coarsen_time,
+            placement_time,
+        )
     }
 
     pub fn preds_of(&self, b: usize) -> &[u32] {

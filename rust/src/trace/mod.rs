@@ -1,0 +1,439 @@
+//! Per-solve and per-registration phase tracing.
+//!
+//! The serving stack reports *what* it did through [`crate::coordinator::Metrics`];
+//! this module records *where the time went*. Call sites push [`Span`]s —
+//! a `(matrix, phase, duration)` triple — into a fixed-capacity ring
+//! buffer owned by the coordinator service, which drains it into
+//! per-matrix [`PhaseTotals`] after every message. Two levels only:
+//!
+//! * **off** (`trace_enabled = false`, the default): every record call is
+//!   a single relaxed atomic load and an early return — no allocation,
+//!   no lock, nothing retained.
+//! * **on** (`trace_enabled = true`, forced by `sptrsv bench`): spans are
+//!   buffered and folded into aggregates; a full ring folds the oldest
+//!   span on push, so nothing is ever silently dropped.
+//!
+//! Phases cover the whole lifecycle the ISSUE's papers care about:
+//! analyze passes (rewrite / coarsen / placement / renumeric, wall-clock
+//! timers threaded through [`crate::analysis::Analysis`]), the batcher
+//! queue wait (admission → dispatch), and execution (dispatch → done),
+//! with the elastic executor's stall/lookahead counters attributed
+//! per matrix alongside the time totals.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Default ring capacity; the service drains after every message, so the
+/// ring only fills under sustained bursts (at which point the oldest
+/// spans fold into the aggregates instead of being lost).
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// A traced lifecycle phase. The first four are analyze-side passes
+/// (mirroring [`crate::analysis::BuildCounters`]); `Wait` is the batcher
+/// queue wait from admission to dispatch; `Execute` is dispatch to done
+/// (including the pool rendezvous and the numeric solve).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    Rewrite,
+    Coarsen,
+    Placement,
+    Renumeric,
+    Execute,
+    Wait,
+}
+
+impl Phase {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Phase::Rewrite => "rewrite",
+            Phase::Coarsen => "coarsen",
+            Phase::Placement => "placement",
+            Phase::Renumeric => "renumeric",
+            Phase::Execute => "execute",
+            Phase::Wait => "wait",
+        }
+    }
+}
+
+/// Wall-clock split of one analysis build/refresh, recorded where the
+/// work happens (rewrite in `Analysis::build`, coarsen/placement in
+/// `Schedule::build_timed`, renumeric in the refresh path). Kept outside
+/// [`crate::sched::ScheduleStats`] on purpose: schedules are
+/// deterministic and comparable, timings are neither.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseTimes {
+    pub rewrite_us: u64,
+    pub coarsen_us: u64,
+    pub placement_us: u64,
+    pub renumeric_us: u64,
+}
+
+impl PhaseTimes {
+    pub fn is_zero(&self) -> bool {
+        *self == PhaseTimes::default()
+    }
+}
+
+/// One recorded span. Durations are measured at the call site (the
+/// coordinator already holds the relevant `Instant`s), so the tracer
+/// itself never reads a clock.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub matrix: String,
+    pub phase: Phase,
+    pub dur: Duration,
+}
+
+/// Per-matrix aggregate the ring drains into: summed microseconds per
+/// phase plus the elastic executor's counters for the same solves.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseTotals {
+    pub rewrite_us: u64,
+    pub coarsen_us: u64,
+    pub placement_us: u64,
+    pub renumeric_us: u64,
+    pub execute_us: u64,
+    pub wait_us: u64,
+    /// spans folded into this aggregate
+    pub spans: u64,
+    /// elastic frontier stalls attributed to this matrix's solves
+    pub elastic_waits: u64,
+    /// elastic out-of-order (lookahead) block executions
+    pub elastic_ooo: u64,
+}
+
+impl PhaseTotals {
+    fn add_span(&mut self, phase: Phase, dur: Duration) {
+        let us = dur.as_micros() as u64;
+        match phase {
+            Phase::Rewrite => self.rewrite_us += us,
+            Phase::Coarsen => self.coarsen_us += us,
+            Phase::Placement => self.placement_us += us,
+            Phase::Renumeric => self.renumeric_us += us,
+            Phase::Execute => self.execute_us += us,
+            Phase::Wait => self.wait_us += us,
+        }
+        self.spans += 1;
+    }
+
+    /// Phase microseconds as `(phase, us)` pairs in breakdown order.
+    pub fn phases_us(&self) -> [(Phase, u64); 6] {
+        [
+            (Phase::Rewrite, self.rewrite_us),
+            (Phase::Coarsen, self.coarsen_us),
+            (Phase::Placement, self.placement_us),
+            (Phase::Renumeric, self.renumeric_us),
+            (Phase::Execute, self.execute_us),
+            (Phase::Wait, self.wait_us),
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = self
+            .phases_us()
+            .iter()
+            .map(|&(p, us)| (p.as_str(), Json::Num(us as f64)))
+            .collect();
+        pairs.push(("spans", Json::Num(self.spans as f64)));
+        pairs.push(("elastic_waits", Json::Num(self.elastic_waits as f64)));
+        pairs.push(("elastic_ooo", Json::Num(self.elastic_ooo as f64)));
+        Json::obj(pairs)
+    }
+}
+
+impl std::ops::Add for PhaseTotals {
+    type Output = PhaseTotals;
+    fn add(self, o: PhaseTotals) -> PhaseTotals {
+        PhaseTotals {
+            rewrite_us: self.rewrite_us + o.rewrite_us,
+            coarsen_us: self.coarsen_us + o.coarsen_us,
+            placement_us: self.placement_us + o.placement_us,
+            renumeric_us: self.renumeric_us + o.renumeric_us,
+            execute_us: self.execute_us + o.execute_us,
+            wait_us: self.wait_us + o.wait_us,
+            spans: self.spans + o.spans,
+            elastic_waits: self.elastic_waits + o.elastic_waits,
+            elastic_ooo: self.elastic_ooo + o.elastic_ooo,
+        }
+    }
+}
+
+/// Drained view of the tracer: per-matrix totals plus their sum, as
+/// handed out by `SolveHandle::trace_report`.
+#[derive(Debug, Clone, Default)]
+pub struct TraceReport {
+    pub matrices: Vec<(String, PhaseTotals)>,
+}
+
+impl TraceReport {
+    /// Sum across matrices — the BENCH per-phase breakdown.
+    pub fn totals(&self) -> PhaseTotals {
+        self.matrices
+            .iter()
+            .fold(PhaseTotals::default(), |acc, (_, t)| acc + *t)
+    }
+
+    pub fn get(&self, matrix: &str) -> Option<&PhaseTotals> {
+        self.matrices
+            .iter()
+            .find(|(id, _)| id == matrix)
+            .map(|(_, t)| t)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("totals", self.totals().to_json()),
+            (
+                "matrices",
+                Json::Obj(
+                    self.matrices
+                        .iter()
+                        .map(|(id, t)| (id.clone(), t.to_json()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+struct Ring {
+    buf: Vec<Span>,
+    capacity: usize,
+    aggregates: BTreeMap<String, PhaseTotals>,
+}
+
+impl Ring {
+    fn fold(&mut self) {
+        for span in self.buf.drain(..) {
+            self.aggregates
+                .entry(span.matrix)
+                .or_default()
+                .add_span(span.phase, span.dur);
+        }
+    }
+}
+
+/// The recorder. One per service; shared by reference with the dispatch
+/// path. All record calls are no-ops (one relaxed load) while disabled.
+pub struct Tracer {
+    enabled: AtomicBool,
+    ring: Mutex<Ring>,
+}
+
+impl Tracer {
+    pub fn new(enabled: bool, capacity: usize) -> Tracer {
+        Tracer {
+            enabled: AtomicBool::new(enabled),
+            ring: Mutex::new(Ring {
+                buf: Vec::new(),
+                capacity: capacity.max(1),
+                aggregates: BTreeMap::new(),
+            }),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Record one span. When the ring is full the whole buffer folds into
+    /// the aggregates first — bounded memory, nothing dropped.
+    pub fn record(&self, matrix: &str, phase: Phase, dur: Duration) {
+        if !self.enabled() {
+            return;
+        }
+        let mut ring = self.ring.lock().unwrap_or_else(|p| p.into_inner());
+        if ring.buf.len() >= ring.capacity {
+            ring.fold();
+        }
+        ring.buf.push(Span {
+            matrix: matrix.to_string(),
+            phase,
+            dur,
+        });
+    }
+
+    /// Record the analyze-side wall-clock split in one call (zero
+    /// entries are skipped, so a memo hit records nothing).
+    pub fn record_phases(&self, matrix: &str, t: PhaseTimes) {
+        if !self.enabled() || t.is_zero() {
+            return;
+        }
+        for (phase, us) in [
+            (Phase::Rewrite, t.rewrite_us),
+            (Phase::Coarsen, t.coarsen_us),
+            (Phase::Placement, t.placement_us),
+            (Phase::Renumeric, t.renumeric_us),
+        ] {
+            if us > 0 {
+                self.record(matrix, phase, Duration::from_micros(us));
+            }
+        }
+    }
+
+    /// Attribute an elastic execution's stall/lookahead counter deltas to
+    /// `matrix` (counts, not time — they ride the aggregates directly).
+    pub fn record_elastic(&self, matrix: &str, waits: u64, ooo: u64) {
+        if !self.enabled() || (waits == 0 && ooo == 0) {
+            return;
+        }
+        let mut ring = self.ring.lock().unwrap_or_else(|p| p.into_inner());
+        let agg = ring.aggregates.entry(matrix.to_string()).or_default();
+        agg.elastic_waits += waits;
+        agg.elastic_ooo += ooo;
+    }
+
+    /// Fold buffered spans into the aggregates. The service calls this
+    /// after each message; push also folds on overflow.
+    pub fn drain(&self) {
+        if !self.enabled() {
+            return;
+        }
+        self.ring.lock().unwrap_or_else(|p| p.into_inner()).fold();
+    }
+
+    /// Drain and snapshot the per-matrix aggregates.
+    pub fn report(&self) -> TraceReport {
+        let mut ring = self.ring.lock().unwrap_or_else(|p| p.into_inner());
+        ring.fold();
+        TraceReport {
+            matrices: ring
+                .aggregates
+                .iter()
+                .map(|(id, t)| (id.clone(), *t))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::new(false, 8);
+        t.record("a", Phase::Execute, Duration::from_micros(10));
+        t.record_elastic("a", 5, 2);
+        t.record_phases(
+            "a",
+            PhaseTimes {
+                rewrite_us: 1,
+                ..Default::default()
+            },
+        );
+        assert!(t.report().matrices.is_empty());
+    }
+
+    #[test]
+    fn spans_aggregate_per_phase_and_matrix() {
+        let t = Tracer::new(true, 64);
+        t.record("a", Phase::Wait, Duration::from_micros(5));
+        t.record("a", Phase::Wait, Duration::from_micros(7));
+        t.record("a", Phase::Execute, Duration::from_micros(100));
+        t.record("b", Phase::Execute, Duration::from_micros(40));
+        t.record_elastic("b", 3, 1);
+        let r = t.report();
+        let a = r.get("a").unwrap();
+        assert_eq!(a.wait_us, 12);
+        assert_eq!(a.execute_us, 100);
+        assert_eq!(a.spans, 3);
+        assert_eq!(a.elastic_waits, 0);
+        let b = r.get("b").unwrap();
+        assert_eq!(b.execute_us, 40);
+        assert_eq!((b.elastic_waits, b.elastic_ooo), (3, 1));
+        // The sum covers both matrices.
+        assert_eq!(r.totals().execute_us, 140);
+        assert_eq!(r.totals().spans, 4);
+    }
+
+    #[test]
+    fn full_ring_folds_instead_of_dropping() {
+        let t = Tracer::new(true, 4);
+        for i in 0..37 {
+            t.record("m", Phase::Execute, Duration::from_micros(i));
+        }
+        let r = t.report();
+        let m = r.get("m").unwrap();
+        assert_eq!(m.spans, 37, "overflow must fold, not drop");
+        assert_eq!(m.execute_us, (0..37).sum::<u64>());
+    }
+
+    #[test]
+    fn record_phases_skips_zero_entries() {
+        let t = Tracer::new(true, 16);
+        t.record_phases(
+            "m",
+            PhaseTimes {
+                rewrite_us: 3,
+                coarsen_us: 0,
+                placement_us: 9,
+                renumeric_us: 0,
+            },
+        );
+        let r = t.report();
+        let m = r.get("m").unwrap();
+        assert_eq!(m.rewrite_us, 3);
+        assert_eq!(m.placement_us, 9);
+        assert_eq!(m.spans, 2, "zero phases must not add empty spans");
+        // A memo hit (all zeros) records nothing at all.
+        t.record_phases("memo", PhaseTimes::default());
+        assert!(t.report().get("memo").is_none());
+    }
+
+    #[test]
+    fn concurrent_solves_do_not_cross_matrices() {
+        // The satellite regression: spans recorded from many threads for
+        // different matrices must land in their own aggregates with
+        // nothing lost or misattributed, even while the ring overflows.
+        let t = Arc::new(Tracer::new(true, 8));
+        let threads: Vec<_> = (0..4)
+            .map(|w| {
+                let t = Arc::clone(&t);
+                thread::spawn(move || {
+                    let id = format!("m{w}");
+                    for _ in 0..200 {
+                        t.record(&id, Phase::Execute, Duration::from_micros(w + 1));
+                        t.record(&id, Phase::Wait, Duration::from_micros(1));
+                    }
+                    t.record_elastic(&id, w, 2 * w);
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().unwrap();
+        }
+        let r = t.report();
+        assert_eq!(r.matrices.len(), 4);
+        for w in 0..4u64 {
+            let m = r.get(&format!("m{w}")).unwrap();
+            assert_eq!(m.execute_us, 200 * (w + 1));
+            assert_eq!(m.wait_us, 200);
+            assert_eq!(m.spans, 400);
+            assert_eq!((m.elastic_waits, m.elastic_ooo), (w, 2 * w));
+        }
+        assert_eq!(r.totals().spans, 1600);
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let t = Tracer::new(true, 16);
+        t.record("m", Phase::Coarsen, Duration::from_micros(11));
+        let j = t.report().to_json();
+        assert_eq!(
+            j.get("totals").unwrap().get("coarsen").unwrap().as_f64(),
+            Some(11.0)
+        );
+        let m = j.get("matrices").unwrap().get("m").unwrap();
+        assert_eq!(m.get("spans").unwrap().as_f64(), Some(1.0));
+        // Round-trips through the writer/parser.
+        let s = j.to_string();
+        assert_eq!(crate::util::json::Json::parse(&s).unwrap(), j);
+    }
+}

@@ -70,6 +70,13 @@ pub struct CostModel {
     pub workers: usize,
     /// per-plan EWMA of measured/predicted (1.0 = model exact)
     calibration: BTreeMap<String, f64>,
+    /// effective per-wait cost of scheduled execution; starts at
+    /// [`WAIT_COST`] and tracks observed elastic stall rates
+    /// ([`Self::calibrate_sched`])
+    wait_cost: f64,
+    /// effective per-block dispatch cost of scheduled execution; starts
+    /// at [`BLOCK_COST`]
+    block_cost: f64,
 }
 
 impl CostModel {
@@ -77,6 +84,8 @@ impl CostModel {
         CostModel {
             workers: workers.max(1),
             calibration: BTreeMap::new(),
+            wait_cost: WAIT_COST,
+            block_cost: BLOCK_COST,
         }
     }
 
@@ -178,7 +187,7 @@ impl CostModel {
             Exec::Levelset => plan_cost(est.levels, est.work, f.nrows, self.workers),
             Exec::Scheduled(o) => {
                 let (blocks, par, cut) = self.sched_shape(f, &est, o);
-                est.work / par + blocks * BLOCK_COST + cut * WAIT_COST
+                est.work / par + blocks * self.block_cost + cut * self.wait_cost
             }
             Exec::Syncfree => {
                 let par = (self.workers as f64).min(self.mean_width(f, &est)).max(1.0);
@@ -251,6 +260,39 @@ impl CostModel {
         if multiplier.is_finite() && multiplier > 0.0 {
             self.calibration.insert(plan.to_string(), multiplier);
         }
+    }
+
+    /// Current effective `(wait_cost, block_cost)` of the scheduled-exec
+    /// arm (the seeds are [`WAIT_COST`] / [`BLOCK_COST`]).
+    pub fn sched_costs(&self) -> (f64, f64) {
+        (self.wait_cost, self.block_cost)
+    }
+
+    /// Fold **measured** elastic execution counters back into the
+    /// scheduled-exec cost terms (the coordinator calls this with the
+    /// metrics it aggregates at snapshot time, closing the loop the
+    /// static seeds could only guess at).
+    ///
+    /// `waits` is the cumulative count of blocked frontier ready-scans,
+    /// `ooo` the lookahead fills, over schedules totalling `blocks`
+    /// coarsened blocks. The seed `WAIT_COST` assumes roughly one stall
+    /// per block; the observed waits-per-block rate scales the term
+    /// toward reality, clamped to one decade each way so a single
+    /// pathological run cannot zero it out or blow it up. Lookahead fills
+    /// convert would-be stalls into extra dispatches, so the fill ratio
+    /// surcharges `block_cost` instead. Both move by the same 0.7/0.3
+    /// EWMA as the per-plan calibration; counters are cumulative, so
+    /// repeated feeding converges rather than compounds.
+    pub fn calibrate_sched(&mut self, waits: u64, ooo: u64, blocks: u64) {
+        if blocks == 0 {
+            return;
+        }
+        let waits_per_block = waits as f64 / blocks as f64;
+        let target_wait = (WAIT_COST * waits_per_block).clamp(WAIT_COST / 10.0, WAIT_COST * 10.0);
+        let fills = (ooo as f64 / (waits + ooo).max(1) as f64).clamp(0.0, 1.0);
+        let target_block = BLOCK_COST * (1.0 + fills);
+        self.wait_cost = 0.7 * self.wait_cost + 0.3 * target_wait;
+        self.block_cost = 0.7 * self.block_cost + 0.3 * target_block;
     }
 }
 
@@ -410,6 +452,37 @@ mod tests {
             (re - base).abs() <= f.nrows as f64 * PERM_COST + 1.0,
             "reorder {re} vs none {base}"
         );
+    }
+
+    #[test]
+    fn calibrate_sched_tracks_observed_stall_rates() {
+        let f = feats(&generate::lung2_like(&GenOptions::with_scale(0.05)));
+        let mut cm = CostModel::new(4);
+        assert_eq!(cm.sched_costs(), (WAIT_COST, BLOCK_COST));
+        let before = cm.predict(&f, "avgcost+scheduled").unwrap();
+        // Observed: 5 stalls per block, half of them absorbed by the
+        // lookahead. The wait term must rise toward 5x its seed and the
+        // prediction with it; repeated cumulative feeds converge.
+        for _ in 0..30 {
+            cm.calibrate_sched(500, 500, 100);
+        }
+        let (w, b) = cm.sched_costs();
+        assert!((w - WAIT_COST * 5.0).abs() < WAIT_COST * 0.1, "wait_cost {w}");
+        assert!((b - BLOCK_COST * 1.5).abs() < BLOCK_COST * 0.1, "block_cost {b}");
+        let after = cm.predict(&f, "avgcost+scheduled").unwrap();
+        assert!(after > before, "stall-heavy feedback must raise the price");
+        // Only the scheduled arm reprices: the barrier model is untouched.
+        assert_eq!(cm.predict(&f, "none+levelset"), CostModel::new(4).predict(&f, "none+levelset"));
+        // A stall-free observation walks the terms back down.
+        for _ in 0..60 {
+            cm.calibrate_sched(0, 0, 100);
+        }
+        let (w2, _) = cm.sched_costs();
+        assert!(w2 < w / 2.0, "stall-free feedback must relax wait_cost: {w2}");
+        // Degenerate input (no blocks) is a no-op.
+        let costs = cm.sched_costs();
+        cm.calibrate_sched(10, 10, 0);
+        assert_eq!(cm.sched_costs(), costs);
     }
 
     #[test]
