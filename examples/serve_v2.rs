@@ -18,12 +18,19 @@
 //! cancellations, cancel wakeups, deadline misses and value refreshes
 //! are all visible.
 //!
+//! Two further tours follow the in-process one: the **sharded executor**
+//! (`executor = "sharded:2"`) serving the same client API from a pool of
+//! shard worker processes (skipped with a note when the `sptrsv` CLI is
+//! not built yet — run `cargo build --release` first), and **tenant
+//! quotas + shed policies** (`tenant_max_pending`, `ShedPolicy`) turning
+//! queue pressure into typed `Overloaded` rejections.
+//!
 //!     cargo run --release --example serve_v2
 
 use std::time::Duration;
 
 use sptrsv_gt::config::Config;
-use sptrsv_gt::coordinator::{RegisterOptions, Service, SolveOptions};
+use sptrsv_gt::coordinator::{RegisterOptions, Service, ShedPolicy, SolveOptions};
 use sptrsv_gt::error::ServiceError;
 use sptrsv_gt::sparse::generate::{self, GenOptions};
 use sptrsv_gt::transform::PlanSpec;
@@ -163,6 +170,131 @@ fn main() -> anyhow::Result<()> {
     println!("unknown id rejected as NotRegistered");
 
     println!("metrics: {}", h.metrics()?);
+    svc.shutdown();
+
+    sharded_tour()?;
+    quota_tour()?;
+    Ok(())
+}
+
+/// The identical client API, served by a pool of shard worker processes.
+///
+/// `executor = "sharded:2"` makes the service spawn two children running
+/// the hidden `sptrsv shard-worker` subcommand and route every matrix to
+/// a home shard by structural fingerprint (rendezvous hashing, so pool
+/// resizes barely move the mapping). Each worker owns its own analysis +
+/// tuner caches; a crashed worker is respawned and re-registered warm
+/// without disturbing the survivors, and its in-flight tickets resolve
+/// to `ServiceError::Backend` instead of hanging.
+fn sharded_tour() -> anyhow::Result<()> {
+    // The worker binary is the sptrsv CLI itself, built as a sibling of
+    // this example under target/<profile>/.
+    let bin = std::env::current_exe()
+        .ok()
+        .and_then(|p| Some(p.parent()?.parent()?.join("sptrsv")))
+        .filter(|p| p.is_file());
+    let Some(bin) = bin else {
+        println!("\nsharded tour skipped: sptrsv CLI not built (run `cargo build --release`)");
+        return Ok(());
+    };
+    println!("\n-- sharded executor (process-per-shard, executor = sharded:2) --");
+    let cfg = Config {
+        workers: 2,
+        use_xla: false,
+        executor: "sharded:2".to_string(),
+        shard_worker_bin: bin.display().to_string(),
+        ..Default::default()
+    };
+    let svc = Service::start(cfg);
+    let h = svc.handle();
+
+    let a = generate::lung2_like(&GenOptions::with_scale(0.02));
+    let t = generate::tridiagonal(1_000, &Default::default());
+    let ha = h.register(
+        "lung2",
+        a.clone(),
+        PlanSpec::parse("avgcost+scheduled").map_err(anyhow::Error::msg)?,
+    )?;
+    let ht = h.register(
+        "tri",
+        t.clone(),
+        PlanSpec::parse("none+levelset").map_err(anyhow::Error::msg)?,
+    )?;
+    println!(
+        "registered lung2 (plan={}) and tri (plan={}) across the pool",
+        ha.plan, ht.plan
+    );
+
+    let ba = vec![1.0; a.nrows];
+    let xa = ha.solve(ba.clone())?;
+    anyhow::ensure!(a.residual_inf(&xa, &ba) < 1e-8);
+    let bt = vec![1.0; t.nrows];
+    let xt = ht.solve(bt.clone())?;
+    anyhow::ensure!(t.residual_inf(&xt, &bt) < 1e-8);
+
+    // Typed errors survive the wire hop unchanged.
+    assert_eq!(
+        h.solve("ghost", vec![1.0; 4]),
+        Err(ServiceError::NotRegistered("ghost".into()))
+    );
+
+    let snap = h.metrics()?;
+    println!(
+        "both residuals ok; shard health: crashes={} respawns={} re-registered={}",
+        snap.shard_crashes, snap.shard_respawns, snap.shard_reregistered
+    );
+    svc.shutdown();
+    Ok(())
+}
+
+/// Tenant quotas and per-matrix shed policies: queue pressure becomes a
+/// typed `Overloaded` the moment a tenant's queued right-hand sides
+/// would exceed `tenant_max_pending`, and a matrix registered with
+/// `ShedPolicy::DropOldest` sheds its queue head (resolving that ticket
+/// as `Overloaded`) instead of bouncing new arrivals.
+fn quota_tour() -> anyhow::Result<()> {
+    println!("\n-- tenant quotas + shed policy --");
+    let cfg = Config {
+        workers: 1,
+        use_xla: false,
+        // A big batch and a slow deadline keep requests queued long
+        // enough to showcase admission control deterministically.
+        batch_size: 64,
+        batch_deadline_us: 200_000,
+        tenant_max_pending: 1,
+        ..Default::default()
+    };
+    let svc = Service::start(cfg);
+    let h = svc.handle();
+
+    let m = generate::tridiagonal(300, &Default::default());
+    h.register_with(
+        "billing",
+        m.clone(),
+        RegisterOptions::new()
+            .plan(PlanSpec::parse("none").map_err(anyhow::Error::msg)?)
+            .tenant("acme")
+            .shed_policy(ShedPolicy::DropOldest)
+            .max_pending(32),
+    )?;
+
+    // First request occupies tenant acme's whole quota; the second is
+    // rejected at admission, before it ever costs a worker anything.
+    let b = vec![1.0; 300];
+    let t1 = h.solve_async("billing", b.clone(), SolveOptions::default())?;
+    let t2 = h.solve_async("billing", b.clone(), SolveOptions::default())?;
+    match t2.wait() {
+        Err(ServiceError::Overloaded {
+            pending,
+            max_pending,
+        }) => println!("tenant 'acme' over quota ({pending}/{max_pending}) -> rejected"),
+        other => println!("quota raced the batch deadline: {:?}", other.map(|x| x.len())),
+    }
+    let x = t1.wait()?;
+    anyhow::ensure!(m.residual_inf(&x, &b) < 1e-8);
+
+    let snap = h.metrics()?;
+    println!("rejections by tenant: {:?}", snap.rejections_by_tenant);
     svc.shutdown();
     Ok(())
 }

@@ -8,9 +8,17 @@
 //! with non-filename-safe plan characters mapped to `_`); since distinct
 //! plans can collide after sanitization, the load path re-verifies the
 //! plan string recorded *inside* the file before trusting it.
+//!
+//! The directory can be bounded ([`AnalysisCache::with_limits`], wired to
+//! the `analysis_cache_cap` / `analysis_cache_ttl` config keys): every
+//! save first drops entries older than the TTL, then evicts
+//! least-recently-used entries beyond the cap. Recency is the file mtime
+//! — a successful load *touches* its entry, so hot analyses survive the
+//! LRU scan without any sidecar index.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::{Duration, SystemTime};
 
 use crate::error::Error;
 use crate::solver::pool::Pool;
@@ -23,12 +31,28 @@ use crate::sched::SchedOptions;
 
 pub struct AnalysisCache {
     dir: PathBuf,
+    /// maximum entries kept after a save (0 = unbounded)
+    cap: usize,
+    /// maximum entry age kept after a save (None = never expires)
+    ttl: Option<Duration>,
 }
 
 impl AnalysisCache {
     pub fn new(dir: &Path) -> AnalysisCache {
         AnalysisCache {
             dir: dir.to_path_buf(),
+            cap: 0,
+            ttl: None,
+        }
+    }
+
+    /// A bounded cache: at most `cap` entries (0 = unbounded) no older
+    /// than `ttl` (zero = never expires), enforced on every save.
+    pub fn with_limits(dir: &Path, cap: usize, ttl: Duration) -> AnalysisCache {
+        AnalysisCache {
+            dir: dir.to_path_buf(),
+            cap,
+            ttl: (!ttl.is_zero()).then_some(ttl),
         }
     }
 
@@ -75,7 +99,12 @@ impl AnalysisCache {
             sched,
         };
         match persist::load(&path, m, &opts) {
-            Ok(a) if a.plan() == plan => Some(a),
+            Ok(a) if a.plan() == plan => {
+                // LRU touch: bump the entry's mtime so hot analyses
+                // outlive colder ones in the eviction scan.
+                touch(&path);
+                Some(a)
+            }
             Ok(a) => {
                 eprintln!(
                     "warning: analysis cache {} holds plan {} (wanted {plan}); ignoring",
@@ -94,9 +123,73 @@ impl AnalysisCache {
         }
     }
 
-    /// Persist `a` under its `(fingerprint, plan)` key.
+    /// Persist `a` under its `(fingerprint, plan)` key, then enforce the
+    /// TTL and LRU cap over the whole directory. The just-written entry
+    /// carries the newest mtime, so it always survives its own save.
     pub fn save(&self, a: &Analysis) -> Result<(), Error> {
-        persist::save(a, &self.path_for(a.fingerprint(), a.plan()))
+        persist::save(a, &self.path_for(a.fingerprint(), a.plan()))?;
+        self.enforce_limits();
+        Ok(())
+    }
+
+    /// Drop TTL-expired entries, then the least-recently-used entries
+    /// beyond the cap. Ties on mtime break by path, so the scan is
+    /// deterministic. Unreadable entries or a missing directory are
+    /// skipped silently — eviction is best-effort.
+    fn enforce_limits(&self) {
+        if self.cap == 0 && self.ttl.is_none() {
+            return;
+        }
+        let Ok(entries) = std::fs::read_dir(&self.dir) else {
+            return;
+        };
+        let mut files: Vec<(SystemTime, PathBuf)> = entries
+            .flatten()
+            .filter_map(|e| {
+                let path = e.path();
+                if !path
+                    .file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.ends_with(".analysis.json"))
+                {
+                    return None;
+                }
+                let mtime = e.metadata().ok()?.modified().ok()?;
+                Some((mtime, path))
+            })
+            .collect();
+        if let Some(ttl) = self.ttl {
+            let now = SystemTime::now();
+            files.retain(|(mtime, path)| {
+                let expired = now
+                    .duration_since(*mtime)
+                    .is_ok_and(|age| age > ttl);
+                if expired {
+                    std::fs::remove_file(path).ok();
+                }
+                !expired
+            });
+        }
+        if self.cap > 0 && files.len() > self.cap {
+            files.sort();
+            let excess = files.len() - self.cap;
+            for (_, path) in files.into_iter().take(excess) {
+                std::fs::remove_file(&path).ok();
+            }
+        }
+    }
+}
+
+/// Best-effort mtime bump without platform-specific utimes: rewrite the
+/// file's first byte in place.
+fn touch(path: &Path) {
+    use std::io::{Read, Seek, SeekFrom, Write};
+    let Ok(mut f) = std::fs::OpenOptions::new().read(true).write(true).open(path) else {
+        return;
+    };
+    let mut b = [0u8; 1];
+    if f.read_exact(&mut b).is_ok() && f.seek(SeekFrom::Start(0)).is_ok() {
+        f.write_all(&b).ok();
     }
 }
 
@@ -150,6 +243,93 @@ mod tests {
             cache.path_for(a.fingerprint(), &plan),
             cache.path_for(a.fingerprint(), &other)
         );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn entries(dir: &Path) -> usize {
+        std::fs::read_dir(dir)
+            .map(|rd| {
+                rd.flatten()
+                    .filter(|e| {
+                        e.file_name()
+                            .to_str()
+                            .is_some_and(|n| n.ends_with(".analysis.json"))
+                    })
+                    .count()
+            })
+            .unwrap_or(0)
+    }
+
+    fn build(n: usize, pool: &Arc<Pool>) -> (Arc<Csr>, Analysis) {
+        let m = Arc::new(generate::tridiagonal(n, &Default::default()));
+        let a = super::super::analyze_arc(
+            Arc::clone(&m),
+            &PlanSpec::parse("none").unwrap(),
+            &super::super::AnalyzeOptions {
+                pool: Some(Arc::clone(pool)),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        (m, a)
+    }
+
+    #[test]
+    fn lru_cap_evicts_oldest_and_load_touches() {
+        let dir = std::env::temp_dir().join(format!("sptrsv_acache_lru_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cache = AnalysisCache::with_limits(&dir, 2, Duration::ZERO);
+        let pool = Arc::new(Pool::new(1));
+        let plan = SolvePlan::parse("none").unwrap();
+
+        // Three distinct structures; sleeps keep the mtimes ordered.
+        let (m1, a1) = build(11, &pool);
+        let (m2, a2) = build(12, &pool);
+        let (_m3, a3) = build(13, &pool);
+        cache.save(&a1).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        cache.save(&a2).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        cache.save(&a3).unwrap();
+        // Cap 2: the oldest entry (a1) was evicted by a3's save.
+        assert_eq!(entries(&dir), 2);
+        assert!(!cache.path_for(a1.fingerprint(), &plan).exists());
+        assert!(cache
+            .load(Arc::clone(&m1), Fingerprint::of(&m1), &plan, &pool, SchedOptions::default())
+            .is_none());
+
+        // Loading a2 touches it; the next save evicts a3, not a2.
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(cache
+            .load(Arc::clone(&m2), Fingerprint::of(&m2), &plan, &pool, SchedOptions::default())
+            .is_some());
+        std::thread::sleep(Duration::from_millis(30));
+        let (_, a4) = build(14, &pool);
+        cache.save(&a4).unwrap();
+        assert_eq!(entries(&dir), 2);
+        assert!(cache.path_for(a2.fingerprint(), &plan).exists(), "touched entry survives");
+        assert!(!cache.path_for(a3.fingerprint(), &plan).exists(), "untouched entry evicted");
+        assert!(cache.path_for(a4.fingerprint(), &plan).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ttl_expires_stale_entries_on_save() {
+        let dir = std::env::temp_dir().join(format!("sptrsv_acache_ttl_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cache = AnalysisCache::with_limits(&dir, 0, Duration::from_millis(50));
+        let pool = Arc::new(Pool::new(1));
+        let plan = SolvePlan::parse("none").unwrap();
+        let (_, a1) = build(21, &pool);
+        cache.save(&a1).unwrap();
+        assert_eq!(entries(&dir), 1);
+        std::thread::sleep(Duration::from_millis(120));
+        let (_, a2) = build(22, &pool);
+        cache.save(&a2).unwrap();
+        // a1 aged past the TTL and was dropped by a2's save.
+        assert_eq!(entries(&dir), 1);
+        assert!(!cache.path_for(a1.fingerprint(), &plan).exists());
+        assert!(cache.path_for(a2.fingerprint(), &plan).exists());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -44,7 +44,11 @@ pub use scenario::{MatrixSpec, Scenario};
 ///   per-lane + combined latency, deadline-miss rate, cache hit rates,
 ///   elastic counters, per-phase time breakdown, per-matrix trace, full
 ///   metrics snapshot.
-pub const BENCH_SCHEMA_VERSION: u64 = 1;
+/// * 2 — `elastic` gains `steals` (work-stealing counter); new `shards`
+///   object (`crashes` / `respawns` / `reregistered`) reporting the
+///   sharded executor's fault-containment tallies (all zero under the
+///   in-process tier).
+pub const BENCH_SCHEMA_VERSION: u64 = 2;
 
 const KIND: &str = "sptrsv-bench";
 
@@ -314,6 +318,15 @@ fn build_report(
             Json::obj(vec![
                 ("waits", Json::Num(snap.elastic_waits as f64)),
                 ("ooo", Json::Num(snap.elastic_ooo as f64)),
+                ("steals", Json::Num(snap.elastic_steals as f64)),
+            ]),
+        ),
+        (
+            "shards",
+            Json::obj(vec![
+                ("crashes", Json::Num(snap.shard_crashes as f64)),
+                ("respawns", Json::Num(snap.shard_respawns as f64)),
+                ("reregistered", Json::Num(snap.shard_reregistered as f64)),
             ]),
         ),
         ("phases_us", phases),
@@ -411,6 +424,13 @@ mod tests {
         let phases = j.get("phases_us").unwrap();
         for p in ["rewrite", "coarsen", "placement", "renumeric", "execute", "wait"] {
             assert!(phases.get(p).and_then(Json::as_f64).is_some(), "{p}");
+        }
+        // Schema-2 additions: the steals counter and the shard tallies
+        // (zero under the in-process executor, but present).
+        assert!(j.get("elastic").unwrap().get("steals").is_some());
+        let shards = j.get("shards").unwrap();
+        for k in ["crashes", "respawns", "reregistered"] {
+            assert_eq!(shards.get(k).and_then(Json::as_f64), Some(0.0), "{k}");
         }
         // The replay actually drove solves through both the trace and the
         // metrics: 10 requests, all delivered.

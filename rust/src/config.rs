@@ -52,6 +52,29 @@ pub struct Config {
     /// elastic lookahead window in blocks for `--strategy scheduled`
     /// (0 = strict in-order point-to-point waits)
     pub sched_stale_window: usize,
+    /// analysis-cache directory bound: max entries kept after a save
+    /// (0 = unbounded)
+    pub analysis_cache_cap: usize,
+    /// analysis-cache entry TTL in seconds; older entries are dropped at
+    /// the next save (0 = never expire by age)
+    pub analysis_cache_ttl: u64,
+    /// which executor tier serves prepared analyses: `inprocess` (the
+    /// default single-process pipeline) or `sharded:N` (N child worker
+    /// processes, matrices routed by structural fingerprint)
+    pub executor: String,
+    /// per-tenant admission quota: max queued right-hand sides charged to
+    /// one tenant before its requests are rejected `Overloaded`
+    /// (0 = no tenant quotas)
+    pub tenant_max_pending: usize,
+    /// binary spawned as `shard-worker` by the sharded executor
+    /// ("" = this executable)
+    pub shard_worker_bin: String,
+    /// milliseconds the supervisor waits on a shard reply before declaring
+    /// the worker hung and respawning it
+    pub shard_timeout_ms: u64,
+    /// fault-injection knob for tests/CI: SIGKILL the routed shard's
+    /// worker right before the Nth solve dispatch (0 = disabled)
+    pub chaos_kill_shard_after: usize,
     /// record per-solve phase spans in the service's tracer (off by
     /// default; `sptrsv bench` forces it on for its report)
     pub trace_enabled: bool,
@@ -83,6 +106,13 @@ impl Default for Config {
             tuner_cache_ttl: 0,
             sched_block_target: crate::sched::DEFAULT_BLOCK_TARGET,
             sched_stale_window: crate::sched::DEFAULT_STALE_WINDOW,
+            analysis_cache_cap: 0,
+            analysis_cache_ttl: 0,
+            executor: "inprocess".to_string(),
+            tenant_max_pending: 0,
+            shard_worker_bin: String::new(),
+            shard_timeout_ms: 30_000,
+            chaos_kill_shard_after: 0,
             trace_enabled: false,
             bench_out_dir: "bench-out".to_string(),
             bench_requests: 0,
@@ -152,13 +182,23 @@ impl Config {
                     | "batch-deadline-us" | "max-pending" | "use-xla" | "seed"
                     | "tuner-cache" | "analysis-cache" | "tuner-top-k"
                     | "tuner-race-solves" | "tuner-cache-ttl" | "sched-block-target"
-                    | "sched-stale-window" | "trace-enabled" | "bench-out-dir"
+                    | "sched-stale-window" | "analysis-cache-cap"
+                    | "analysis-cache-ttl" | "executor" | "tenant-max-pending"
+                    | "shard-worker-bin" | "shard-timeout-ms"
+                    | "chaos-kill-shard-after" | "trace-enabled" | "bench-out-dir"
                     | "bench-requests"
             ) {
                 self.set(&k.replace('-', "_"), v)?;
             }
         }
         Ok(())
+    }
+
+    /// Shard count requested by the `executor` key (`None` = in-process).
+    pub fn shard_count(&self) -> Option<usize> {
+        self.executor
+            .strip_prefix("sharded:")
+            .and_then(|n| n.parse().ok())
     }
 
     fn set(&mut self, key: &str, val: &str) -> Result<(), Error> {
@@ -192,6 +232,37 @@ impl Config {
             }
             "sched_stale_window" => {
                 self.sched_stale_window = val.parse().map_err(|_| bad(key, val))?
+            }
+            "analysis_cache_cap" => {
+                self.analysis_cache_cap = val.parse().map_err(|_| bad(key, val))?
+            }
+            "analysis_cache_ttl" => {
+                self.analysis_cache_ttl = val.parse().map_err(|_| bad(key, val))?
+            }
+            "executor" => {
+                // Validate at config time like `plan`: a typo must fail
+                // here, not inside the service thread.
+                let ok = val == "inprocess"
+                    || val
+                        .strip_prefix("sharded:")
+                        .and_then(|n| n.parse::<usize>().ok())
+                        .is_some_and(|n| n >= 1);
+                if !ok {
+                    return Err(Error::Invalid(format!(
+                        "config executor: '{val}' (expected inprocess or sharded:N)"
+                    )));
+                }
+                self.executor = val.to_string();
+            }
+            "tenant_max_pending" => {
+                self.tenant_max_pending = val.parse().map_err(|_| bad(key, val))?
+            }
+            "shard_worker_bin" => self.shard_worker_bin = val.to_string(),
+            "shard_timeout_ms" => {
+                self.shard_timeout_ms = val.parse().map_err(|_| bad(key, val))?
+            }
+            "chaos_kill_shard_after" => {
+                self.chaos_kill_shard_after = val.parse().map_err(|_| bad(key, val))?
             }
             "trace_enabled" => self.trace_enabled = matches!(val, "true" | "1" | "yes"),
             "bench_out_dir" => self.bench_out_dir = val.to_string(),
@@ -381,6 +452,64 @@ mod tests {
         assert!(!c.trace_enabled);
         assert_eq!(c.bench_out_dir, "out");
         assert_eq!(c.bench_requests, 8);
+    }
+
+    #[test]
+    fn executor_and_quota_keys_parse_and_merge() {
+        let mut c = Config::default();
+        assert_eq!(c.executor, "inprocess");
+        assert_eq!(c.shard_count(), None);
+        assert_eq!(c.tenant_max_pending, 0);
+        assert_eq!(c.shard_timeout_ms, 30_000);
+        assert_eq!(c.chaos_kill_shard_after, 0);
+        c.set("executor", "sharded:3").unwrap();
+        assert_eq!(c.shard_count(), Some(3));
+        // Typos fail at config time, like a bad plan.
+        assert!(c.set("executor", "distributed").is_err());
+        assert!(c.set("executor", "sharded:0").is_err());
+        assert!(c.set("executor", "sharded:two").is_err());
+        c.set("tenant_max_pending", "16").unwrap();
+        c.set("shard_worker_bin", "/usr/bin/sptrsv").unwrap();
+        c.set("shard_timeout_ms", "5000").unwrap();
+        c.set("chaos_kill_shard_after", "7").unwrap();
+        assert_eq!(c.tenant_max_pending, 16);
+        assert_eq!(c.shard_worker_bin, "/usr/bin/sptrsv");
+        assert_eq!(c.shard_timeout_ms, 5_000);
+        assert_eq!(c.chaos_kill_shard_after, 7);
+        let args = Args::parse(
+            [
+                "serve", "--executor", "sharded:2", "--tenant-max-pending", "8",
+                "--shard-timeout-ms", "1000", "--chaos-kill-shard-after", "2",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        c.merge_args(&args).unwrap();
+        assert_eq!(c.executor, "sharded:2");
+        assert_eq!(c.shard_count(), Some(2));
+        assert_eq!(c.tenant_max_pending, 8);
+        assert_eq!(c.shard_timeout_ms, 1_000);
+        assert_eq!(c.chaos_kill_shard_after, 2);
+    }
+
+    #[test]
+    fn analysis_cache_bounds_parse_and_merge() {
+        let mut c = Config::default();
+        assert_eq!(c.analysis_cache_cap, 0);
+        assert_eq!(c.analysis_cache_ttl, 0);
+        c.set("analysis_cache_cap", "32").unwrap();
+        c.set("analysis_cache_ttl", "3600").unwrap();
+        assert_eq!(c.analysis_cache_cap, 32);
+        assert_eq!(c.analysis_cache_ttl, 3_600);
+        assert!(c.set("analysis_cache_cap", "big").is_err());
+        let args = Args::parse(
+            ["serve", "--analysis-cache-cap", "4", "--analysis-cache-ttl", "60"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        c.merge_args(&args).unwrap();
+        assert_eq!(c.analysis_cache_cap, 4);
+        assert_eq!(c.analysis_cache_ttl, 60);
     }
 
     #[test]

@@ -228,6 +228,24 @@ impl<T> Batcher<T> {
         out
     }
 
+    /// Remove the *oldest-admitted* queued request for one matrix across
+    /// both lanes (minimum admission sequence number, regardless of lane
+    /// or deadline), returning it so the caller can reply. This is the
+    /// `drop-oldest` load-shedding primitive: when a per-matrix cap
+    /// trips, the service evicts stale queued work to admit fresh work
+    /// instead of bouncing the newcomer.
+    pub fn pop_oldest(&mut self, matrix_id: &str) -> Option<Pending<T>> {
+        let lanes = self.queues.get_mut(matrix_id)?;
+        let (lane, key) = lanes
+            .iter()
+            .enumerate()
+            .flat_map(|(lane, q)| q.keys().map(move |k| (lane, *k)))
+            .min_by_key(|&(_, k)| k.2)?;
+        let p = lanes[lane].remove(&key).expect("min key present");
+        self.lane_rhs[lane] -= p.rhs.len();
+        Some(p)
+    }
+
     /// Remove every queued request whose token the predicate marks dead
     /// (cancelled tickets), returning them so the caller can reply and
     /// account for them. Queue capacity (`pending`/`lane_depth`) is
@@ -493,6 +511,31 @@ mod tests {
         assert_eq!(taken[0].token, 0);
         // An all-alive sweep is a no-op.
         assert!(b.sweep(|_| false).is_empty());
+    }
+
+    #[test]
+    fn pop_oldest_removes_earliest_admission_across_lanes() {
+        let mut b: Batcher<usize> = Batcher::new(8, Duration::from_secs(60));
+        let now = Instant::now();
+        // Oldest admission is a *batch*-lane request with a relaxed
+        // deadline; EDF would dispatch token 2 first, but shedding is by
+        // admission age, not urgency.
+        b.push("m", one(1.0), Lane::Batch, Some(now + Duration::from_secs(5)), 0);
+        b.push("m", vec![vec![2.0]; 2], Lane::Interactive, None, 1);
+        b.push("m", one(3.0), Lane::Batch, Some(now + Duration::from_millis(1)), 2);
+        b.push("z", one(4.0), Lane::Batch, None, 3);
+        let shed = b.pop_oldest("m").expect("non-empty queue");
+        assert_eq!(shed.token, 0);
+        assert_eq!(b.matrix_pending("m"), 3);
+        let shed = b.pop_oldest("m").expect("non-empty queue");
+        assert_eq!(shed.token, 1, "interactive lane sheds too");
+        assert_eq!(b.lane_depth(Lane::Interactive), 0);
+        assert_eq!(b.matrix_pending("m"), 1);
+        // Other matrices are untouched; an empty id yields None.
+        assert_eq!(b.matrix_pending("z"), 1);
+        assert!(b.pop_oldest("missing").is_none());
+        // The survivor still dispatches.
+        assert_eq!(b.take("m")[0].token, 2);
     }
 
     #[test]

@@ -77,11 +77,21 @@ pub struct Metrics {
     elastic_waits: AtomicU64,
     /// counter mirror: blocks executed out of order via the lookahead
     elastic_ooo: AtomicU64,
+    /// counter mirror: blocks executed via work stealing
+    elastic_steals: AtomicU64,
+    /// gauge: shard worker processes respawned after a crash/timeout
+    shard_respawns: AtomicU64,
+    /// gauge: shard worker deaths/timeouts detected by the supervisor
+    shard_crashes: AtomicU64,
+    /// gauge: matrices re-registered onto a respawned shard
+    shard_reregistered: AtomicU64,
     /// plan name -> times the tuner picked it
     plan_wins: Mutex<BTreeMap<String, u64>>,
     /// matrix id -> admission rejections charged to it (global cap and
     /// per-matrix cap alike; registration-time only map growth)
     matrix_rejections: Mutex<BTreeMap<String, u64>>,
+    /// tenant -> admission rejections charged to its quota
+    tenant_rejections: Mutex<BTreeMap<String, u64>>,
 }
 
 impl Default for Metrics {
@@ -118,8 +128,13 @@ impl Metrics {
             sched_cut_edges: AtomicU64::new(0),
             elastic_waits: AtomicU64::new(0),
             elastic_ooo: AtomicU64::new(0),
+            elastic_steals: AtomicU64::new(0),
+            shard_respawns: AtomicU64::new(0),
+            shard_crashes: AtomicU64::new(0),
+            shard_reregistered: AtomicU64::new(0),
             plan_wins: Mutex::new(BTreeMap::new()),
             matrix_rejections: Mutex::new(BTreeMap::new()),
+            tenant_rejections: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -151,11 +166,30 @@ impl Metrics {
     /// Gauge update: scheduled-backend totals (blocks + static cut) and
     /// the cumulative elastic execution counters, aggregated over every
     /// prepared matrix served by the scheduled backend.
-    pub fn set_sched(&self, blocks: u64, cut_edges: u64, waits: u64, ooo: u64) {
+    pub fn set_sched(&self, blocks: u64, cut_edges: u64, waits: u64, ooo: u64, steals: u64) {
         self.sched_blocks.store(blocks, Ordering::Relaxed);
         self.sched_cut_edges.store(cut_edges, Ordering::Relaxed);
         self.elastic_waits.store(waits, Ordering::Relaxed);
         self.elastic_ooo.store(ooo, Ordering::Relaxed);
+        self.elastic_steals.store(steals, Ordering::Relaxed);
+    }
+
+    /// Gauge update: shard-tier fault-containment counters (crashes
+    /// detected, workers respawned, matrices re-registered warm), mirrored
+    /// from the sharded executor at snapshot time. All zero under the
+    /// in-process executor.
+    pub fn set_shards(&self, respawns: u64, crashes: u64, reregistered: u64) {
+        self.shard_respawns.store(respawns, Ordering::Relaxed);
+        self.shard_crashes.store(crashes, Ordering::Relaxed);
+        self.shard_reregistered.store(reregistered, Ordering::Relaxed);
+    }
+
+    /// A request was refused by its tenant's pending quota. The global
+    /// rejection counter is charged by the caller via
+    /// [`Self::record_rejection`]; this only grows the per-tenant map.
+    pub fn record_tenant_rejection(&self, tenant: &str) {
+        let mut per = self.tenant_rejections.lock().unwrap();
+        *per.entry(tenant.to_string()).or_insert(0) += 1;
     }
 
     /// Record one tuner decision: whether the plan cache answered it and
@@ -253,6 +287,10 @@ impl Metrics {
             sched_cut_edges: self.sched_cut_edges.load(Ordering::Relaxed),
             elastic_waits: self.elastic_waits.load(Ordering::Relaxed),
             elastic_ooo: self.elastic_ooo.load(Ordering::Relaxed),
+            elastic_steals: self.elastic_steals.load(Ordering::Relaxed),
+            shard_respawns: self.shard_respawns.load(Ordering::Relaxed),
+            shard_crashes: self.shard_crashes.load(Ordering::Relaxed),
+            shard_reregistered: self.shard_reregistered.load(Ordering::Relaxed),
             tuner_cache_hits: self.tuner_cache_hits.load(Ordering::Relaxed),
             tuner_cache_misses: self.tuner_cache_misses.load(Ordering::Relaxed),
             analysis_cache_hits: self.analysis_cache_hits.load(Ordering::Relaxed),
@@ -271,6 +309,13 @@ impl Metrics {
                 .collect(),
             rejections_by_matrix: self
                 .matrix_rejections
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), *v))
+                .collect(),
+            rejections_by_tenant: self
+                .tenant_rejections
                 .lock()
                 .unwrap()
                 .iter()
@@ -366,6 +411,14 @@ pub struct Snapshot {
     pub elastic_waits: u64,
     /// cumulative out-of-order block executions (lookahead hits)
     pub elastic_ooo: u64,
+    /// cumulative blocks executed via work stealing
+    pub elastic_steals: u64,
+    /// shard worker processes respawned after a crash/timeout
+    pub shard_respawns: u64,
+    /// shard worker deaths/timeouts detected by the supervisor
+    pub shard_crashes: u64,
+    /// matrices re-registered warm onto a respawned shard
+    pub shard_reregistered: u64,
     pub tuner_cache_hits: u64,
     pub tuner_cache_misses: u64,
     /// registrations restored from the persistent analysis cache
@@ -386,6 +439,8 @@ pub struct Snapshot {
     pub plan_wins: Vec<(String, u64)>,
     /// (matrix id, admission rejections charged to it), sorted by id
     pub rejections_by_matrix: Vec<(String, u64)>,
+    /// (tenant, quota rejections charged to it), sorted by tenant
+    pub rejections_by_tenant: Vec<(String, u64)>,
     /// interactive-lane latency summary
     pub interactive: LaneLatency,
     /// batch-lane latency summary
@@ -428,6 +483,13 @@ impl Snapshot {
             ("sched_cut_edges", Json::Num(self.sched_cut_edges as f64)),
             ("elastic_waits", Json::Num(self.elastic_waits as f64)),
             ("elastic_ooo", Json::Num(self.elastic_ooo as f64)),
+            ("elastic_steals", Json::Num(self.elastic_steals as f64)),
+            ("shard_respawns", Json::Num(self.shard_respawns as f64)),
+            ("shard_crashes", Json::Num(self.shard_crashes as f64)),
+            (
+                "shard_reregistered",
+                Json::Num(self.shard_reregistered as f64),
+            ),
             ("tuner_cache_hits", Json::Num(self.tuner_cache_hits as f64)),
             (
                 "tuner_cache_misses",
@@ -448,6 +510,7 @@ impl Snapshot {
             ("renumeric_passes", Json::Num(self.renumeric_passes as f64)),
             ("plan_wins", counts(&self.plan_wins)),
             ("rejections_by_matrix", counts(&self.rejections_by_matrix)),
+            ("rejections_by_tenant", counts(&self.rejections_by_tenant)),
             (
                 "latency_us",
                 Json::obj(vec![
@@ -525,11 +588,32 @@ impl std::fmt::Display for Snapshot {
             }
             write!(f, "]")?;
         }
+        if !self.rejections_by_tenant.is_empty() {
+            write!(f, ", tenant_rejected[")?;
+            for (i, (id, n)) in self.rejections_by_tenant.iter().enumerate() {
+                if i > 0 {
+                    write!(f, " ")?;
+                }
+                write!(f, "{id}={n}")?;
+            }
+            write!(f, "]")?;
+        }
         if self.sched_blocks > 0 {
             write!(
                 f,
-                ", sched blocks={} cut={} waits={} ooo={}",
-                self.sched_blocks, self.sched_cut_edges, self.elastic_waits, self.elastic_ooo
+                ", sched blocks={} cut={} waits={} ooo={} steals={}",
+                self.sched_blocks,
+                self.sched_cut_edges,
+                self.elastic_waits,
+                self.elastic_ooo,
+                self.elastic_steals
+            )?;
+        }
+        if self.shard_crashes + self.shard_respawns + self.shard_reregistered > 0 {
+            write!(
+                f,
+                ", shards crashes={} respawns={} reregistered={}",
+                self.shard_crashes, self.shard_respawns, self.shard_reregistered
             )?;
         }
         if self.tuner_cache_hits + self.tuner_cache_misses > 0 {
@@ -675,17 +759,62 @@ mod tests {
     fn sched_gauges_render_only_when_present() {
         let m = Metrics::new();
         assert!(!m.snapshot().to_string().contains("sched"));
-        m.set_sched(12, 5, 100, 7);
+        m.set_sched(12, 5, 100, 7, 3);
         let s = m.snapshot();
         assert_eq!(s.sched_blocks, 12);
         assert_eq!(s.sched_cut_edges, 5);
         assert_eq!(s.elastic_waits, 100);
         assert_eq!(s.elastic_ooo, 7);
+        assert_eq!(s.elastic_steals, 3);
         let text = s.to_string();
-        assert!(text.contains("sched blocks=12 cut=5 waits=100 ooo=7"), "{text}");
+        assert!(
+            text.contains("sched blocks=12 cut=5 waits=100 ooo=7 steals=3"),
+            "{text}"
+        );
         // Gauges overwrite.
-        m.set_sched(1, 0, 0, 0);
+        m.set_sched(1, 0, 0, 0, 0);
         assert_eq!(m.snapshot().sched_blocks, 1);
+    }
+
+    #[test]
+    fn shard_gauges_render_only_when_present() {
+        let m = Metrics::new();
+        assert!(!m.snapshot().to_string().contains("shards"));
+        m.set_shards(1, 2, 3);
+        let s = m.snapshot();
+        assert_eq!(
+            (s.shard_respawns, s.shard_crashes, s.shard_reregistered),
+            (1, 2, 3)
+        );
+        let text = s.to_string();
+        assert!(
+            text.contains("shards crashes=2 respawns=1 reregistered=3"),
+            "{text}"
+        );
+        // Gauges overwrite.
+        m.set_shards(0, 0, 0);
+        assert_eq!(m.snapshot().shard_respawns, 0);
+    }
+
+    #[test]
+    fn tenant_rejections_accumulate_and_render() {
+        let m = Metrics::new();
+        assert!(!m.snapshot().to_string().contains("tenant_rejected"));
+        m.record_tenant_rejection("acme");
+        m.record_tenant_rejection("acme");
+        m.record_tenant_rejection("zed");
+        let s = m.snapshot();
+        assert_eq!(
+            s.rejections_by_tenant,
+            vec![("acme".to_string(), 2), ("zed".to_string(), 1)]
+        );
+        let text = s.to_string();
+        assert!(text.contains("tenant_rejected[acme=2 zed=1]"), "{text}");
+        let j = s.to_json();
+        assert_eq!(
+            j.get("rejections_by_tenant").unwrap().get("acme").unwrap().as_f64(),
+            Some(2.0)
+        );
     }
 
     #[test]
@@ -767,10 +896,13 @@ mod tests {
         m.record_solve(Duration::from_micros(3000), true, Lane::Batch);
         m.record_tuner_choice("avgcost+scheduled", true);
         m.record_rejection("noisy");
-        m.set_sched(4, 2, 9, 1);
+        m.set_sched(4, 2, 9, 1, 6);
+        m.set_shards(1, 1, 2);
         let j = m.snapshot().to_json();
         assert_eq!(j.get("solves").unwrap().as_f64(), Some(2.0));
         assert_eq!(j.get("elastic_waits").unwrap().as_f64(), Some(9.0));
+        assert_eq!(j.get("elastic_steals").unwrap().as_f64(), Some(6.0));
+        assert_eq!(j.get("shard_respawns").unwrap().as_f64(), Some(1.0));
         let lat = j.get("latency_us").unwrap();
         assert_eq!(
             lat.get("interactive").unwrap().get("solves").unwrap().as_f64(),

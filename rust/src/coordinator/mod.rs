@@ -35,6 +35,6 @@ pub use batcher::Lane;
 pub use metrics::{LaneLatency, Metrics, Snapshot};
 pub use pipeline::{AnalysisSource, Backend, Pipeline, Prepared};
 pub use service::{
-    BlockTicket, MatrixHandle, RegisterInfo, RegisterOptions, Service, SolveHandle,
-    SolveOptions, SolveTicket, Ticket,
+    BlockTicket, MatrixHandle, RegisterInfo, RegisterOptions, Service, ShedPolicy,
+    SolveHandle, SolveOptions, SolveTicket, Ticket,
 };

@@ -177,7 +177,11 @@ impl Pipeline {
         let analysis_cache = if cfg.analysis_cache.is_empty() {
             None
         } else {
-            Some(AnalysisCache::new(Path::new(&cfg.analysis_cache)))
+            Some(AnalysisCache::with_limits(
+                Path::new(&cfg.analysis_cache),
+                cfg.analysis_cache_cap,
+                std::time::Duration::from_secs(cfg.analysis_cache_ttl),
+            ))
         };
         Pipeline {
             cfg,

@@ -1,6 +1,7 @@
-//! The request loop: an mpsc-driven service thread owning the pipeline,
-//! the batcher and the backends. Clients hold a cheap cloneable
-//! [`SolveHandle`].
+//! The request loop: an mpsc-driven service thread owning the batcher,
+//! the admission policies and an [`Executor`] (the tier where prepared
+//! analyses live and solves run — in-process, or a pool of shard worker
+//! processes). Clients hold a cheap cloneable [`SolveHandle`].
 //!
 //! This is the typed client surface: solve plans cross the boundary as
 //! [`PlanSpec`] (parsed once at the edge — the `rewrite+exec` grammar,
@@ -8,10 +9,11 @@
 //! `String`), async solves as [`SolveTicket`]s with
 //! `wait`/`wait_timeout`/`try_get`/`cancel` (cancel wakes the service
 //! for an immediate queue sweep), scheduling intent as [`SolveOptions`]
-//! (deadline + [`Lane`] priority), multi-RHS blocks via
-//! [`SolveHandle::solve_many`], and admission control via the
+//! (deadline + [`Lane`] priority + tenant attribution), multi-RHS blocks
+//! via [`SolveHandle::solve_many`], and admission control via the
 //! `max_pending` config key (`Overloaded` rejections instead of an
-//! unbounded queue).
+//! unbounded queue), per-tenant `tenant_max_pending` quotas, and
+//! per-matrix caps with a choice of [`ShedPolicy`] under burst arrivals.
 
 use std::cell::Cell;
 use std::collections::BTreeMap;
@@ -23,9 +25,9 @@ use std::time::{Duration, Instant};
 use crate::config::Config;
 use crate::coordinator::batcher::{Batcher, Lane, Pending};
 use crate::coordinator::metrics::{Metrics, Snapshot};
-use crate::coordinator::pipeline::{AnalysisSource, Backend, Pipeline, Prepared};
-use crate::error::{Error, ServiceError};
-use crate::runtime::XlaSolver;
+use crate::coordinator::pipeline::AnalysisSource;
+use crate::error::ServiceError;
+use crate::exec_tier::{self, Executor};
 use crate::sparse::Csr;
 use crate::trace::{Phase, TraceReport, Tracer, DEFAULT_RING_CAPACITY};
 use crate::transform::PlanSpec;
@@ -48,6 +50,11 @@ pub struct SolveOptions {
     pub deadline: Option<Duration>,
     /// scheduling lane; [`Lane::Batch`] unless set
     pub lane: Lane,
+    /// tenant this request's queue usage is charged to; falls back to
+    /// the matrix's registered tenant ([`RegisterOptions::tenant`]) when
+    /// unset. Quota rejections under `tenant_max_pending` are reported
+    /// per tenant in the metrics snapshot.
+    pub tenant: Option<String>,
 }
 
 impl SolveOptions {
@@ -70,6 +77,13 @@ impl SolveOptions {
     /// Shorthand for `SolveOptions::new().priority(Lane::Interactive)`.
     pub fn interactive() -> SolveOptions {
         SolveOptions::new().priority(Lane::Interactive)
+    }
+
+    /// Charge this request's queue usage to `tenant` (overriding the
+    /// matrix's registered tenant, if any).
+    pub fn tenant(mut self, tenant: &str) -> SolveOptions {
+        self.tenant = Some(tenant.to_string());
+        self
     }
 }
 
@@ -187,16 +201,33 @@ impl Reply {
     }
 }
 
+/// What happens when a request would push a matrix past its per-matrix
+/// admission cap ([`RegisterOptions::max_pending`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShedPolicy {
+    /// bounce the arriving request with `Overloaded` (the default — the
+    /// queue's contents are sacred, latecomers pay)
+    #[default]
+    RejectNewest,
+    /// shed the oldest queued requests for this matrix (by admission
+    /// order, across both lanes) until the newcomer fits — freshest work
+    /// wins, stale queue heads pay. Shed requests resolve `Overloaded`
+    /// and count as rejections charged to the matrix.
+    DropOldest,
+}
+
 /// Per-registration options. The plan is the headline choice; the rest
 /// are per-matrix serving policies layered on top of the global config.
 ///
 /// ```
-/// use sptrsv_gt::coordinator::RegisterOptions;
+/// use sptrsv_gt::coordinator::{RegisterOptions, ShedPolicy};
 /// use sptrsv_gt::transform::PlanSpec;
 ///
 /// let opts = RegisterOptions::new()
 ///     .plan(PlanSpec::parse("avgcost+scheduled").unwrap())
-///     .max_pending(64);
+///     .max_pending(64)
+///     .shed_policy(ShedPolicy::DropOldest)
+///     .tenant("acme");
 /// # let _ = opts;
 /// ```
 #[derive(Debug, Clone, Default)]
@@ -208,6 +239,13 @@ pub struct RegisterOptions {
     /// this id only; `None` leaves only the global `max_pending` cap.
     /// Rejections are charged to the matrix in the metrics.
     pub max_pending: Option<usize>,
+    /// what to do when the per-matrix cap trips; stated outright on
+    /// every registration (reject-newest unless set)
+    pub shed_policy: ShedPolicy,
+    /// tenant whose `tenant_max_pending` quota this matrix's requests
+    /// are charged to by default; a request's own
+    /// [`SolveOptions::tenant`] overrides it
+    pub tenant: Option<String>,
 }
 
 impl RegisterOptions {
@@ -224,6 +262,18 @@ impl RegisterOptions {
     /// handle, on top of the global `max_pending`).
     pub fn max_pending(mut self, cap: usize) -> RegisterOptions {
         self.max_pending = Some(cap);
+        self
+    }
+
+    /// Load-shedding policy when the per-matrix cap trips.
+    pub fn shed_policy(mut self, policy: ShedPolicy) -> RegisterOptions {
+        self.shed_policy = policy;
+        self
+    }
+
+    /// Default tenant for this matrix's requests.
+    pub fn tenant(mut self, tenant: &str) -> RegisterOptions {
+        self.tenant = Some(tenant.to_string());
         self
     }
 }
@@ -251,6 +301,7 @@ enum Request {
         deadline: Option<Instant>,
         lane: Lane,
         cancelled: Arc<AtomicBool>,
+        tenant: Option<String>,
     },
     /// a ticket was cancelled: sweep the queues now so capacity frees up
     /// immediately instead of at the next flush
@@ -486,6 +537,7 @@ impl SolveHandle {
                 deadline: opts.deadline.and_then(|d| submitted.checked_add(d)),
                 lane: opts.lane,
                 cancelled: Arc::clone(&cancelled),
+                tenant: opts.tenant.clone(),
             })
             .map_err(|_| ServiceError::Shutdown)?;
         Ok((cancelled, submitted))
@@ -554,43 +606,50 @@ struct Waiting {
     reply: Reply,
     submitted: Instant,
     cancelled: Arc<AtomicBool>,
+    /// effective tenant this request's queue usage is charged to
+    /// (request override, else the matrix's registered tenant)
+    tenant: Option<String>,
 }
 
-/// Build a [`RegisterInfo`] from a preparation.
-fn register_info(p: &Prepared, fresh: bool, source: AnalysisSource) -> RegisterInfo {
-    let stats = &p.analysis.transform().stats;
-    RegisterInfo {
-        levels_before: stats.levels_before,
-        levels_after: stats.levels_after,
-        rows_rewritten: stats.rows_rewritten,
-        backend: match p.backend {
-            Backend::Native => "native",
-            Backend::Xla => "xla",
-        },
-        plan: p.plan_name().to_string(),
-        tuner_cache_hit: if fresh {
-            p.tuned.as_ref().map(|t| t.cache_hit)
-        } else {
-            None
-        },
-        source,
-        prepare_ms: p.prepare_time.as_secs_f64() * 1e3,
+/// The service loop's per-matrix bookkeeping: the executor owns the
+/// prepared analysis; the loop owns the admission policy.
+struct MatrixMeta {
+    nrows: usize,
+    /// per-matrix admission cap ([`RegisterOptions::max_pending`])
+    cap: Option<usize>,
+    /// what happens when the cap trips
+    shed: ShedPolicy,
+    /// default tenant for this matrix's requests
+    tenant: Option<String>,
+}
+
+/// Return `n` queued right-hand sides' worth of quota to `tenant`.
+fn release_tenant(tp: &mut BTreeMap<String, usize>, tenant: &Option<String>, n: usize) {
+    if let Some(t) = tenant {
+        if let Some(c) = tp.get_mut(t) {
+            *c = c.saturating_sub(n);
+            if *c == 0 {
+                tp.remove(t);
+            }
+        }
     }
 }
 
 fn service_loop(cfg: Config, rx: Receiver<Request>) {
     let max_pending = cfg.max_pending;
+    let tenant_cap = cfg.tenant_max_pending;
     let tracer = Tracer::new(cfg.trace_enabled, DEFAULT_RING_CAPACITY);
-    let mut pipeline = Pipeline::new(cfg.clone());
-    let xla: Option<XlaSolver> = pipeline.xla_solver();
     let metrics = Arc::new(Metrics::new());
+    // Where prepared analyses live and solves run: in this process, or
+    // routed across a pool of shard worker processes.
+    let mut executor = exec_tier::make_executor(&cfg);
     let mut batcher: Batcher<Waiting> = Batcher::new(
         cfg.batch_size,
         Duration::from_micros(cfg.batch_deadline_us),
     );
-    let mut prepared: BTreeMap<String, Arc<Prepared>> = BTreeMap::new();
-    // Per-matrix admission caps (RegisterOptions::max_pending overrides).
-    let mut matrix_caps: BTreeMap<String, usize> = BTreeMap::new();
+    let mut matrices: BTreeMap<String, MatrixMeta> = BTreeMap::new();
+    // Queued right-hand sides currently charged to each tenant.
+    let mut tenant_pending: BTreeMap<String, usize> = BTreeMap::new();
 
     loop {
         // Wait for work, but never past the oldest batching deadline.
@@ -608,7 +667,15 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
 
         match req {
             Some(Request::Shutdown) => {
-                flush(&mut batcher, &prepared, &xla, &metrics, &tracer, true);
+                flush(
+                    &mut batcher,
+                    executor.as_mut(),
+                    &metrics,
+                    &tracer,
+                    &mut tenant_pending,
+                    true,
+                );
+                executor.shutdown();
                 return;
             }
             Some(Request::Register {
@@ -617,82 +684,74 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                 opts,
                 reply,
             }) => {
-                // A same-id re-registration returns the memoized
-                // preparation; only fresh preparations count as tuner
-                // decisions in the metrics.
-                let fresh = !prepared.contains_key(&id);
-                let res = pipeline
-                    .prepare(&id, *matrix, &opts.plan)
-                    .map(|p| {
-                        if fresh {
-                            if let Some(tuned) = &p.tuned {
-                                metrics.record_tuner_choice(&tuned.plan, tuned.cache_hit);
-                            }
-                            if pipeline.has_analysis_cache() {
-                                metrics.record_analysis_cache(
-                                    p.source == AnalysisSource::DiskCache,
-                                );
-                            }
-                        }
-                        // Cap bookkeeping: a fresh registration states the
-                        // matrix's policy outright; a memoized same-id
-                        // re-registration only changes the cap when it
-                        // explicitly carries one (a defensive re-register
-                        // with plain defaults must not silently drop a
-                        // previously configured cap).
-                        match (opts.max_pending, fresh) {
-                            (Some(cap), _) => {
-                                matrix_caps.insert(id.clone(), cap);
-                            }
-                            (None, true) => {
-                                matrix_caps.remove(&id);
-                            }
-                            (None, false) => {}
-                        }
-                        prepared.insert(id.clone(), Arc::clone(&p));
-                        // A memo hit returns all-zero phase clocks and
-                        // records nothing.
-                        tracer.record_phases(&id, p.analysis.phase_times());
-                        let source = if fresh {
-                            p.source
-                        } else {
-                            AnalysisSource::Memoized
-                        };
-                        register_info(&p, fresh, source)
-                    })
-                    .map_err(|e| ServiceError::Backend(e.to_string()));
+                let fresh = !matrices.contains_key(&id);
+                let res = executor.register(&id, *matrix, &opts.plan).map(|out| {
+                    if let Some((plan, hit)) = &out.tuned {
+                        metrics.record_tuner_choice(plan, *hit);
+                    }
+                    if let Some(hit) = out.analysis_cache_hit {
+                        metrics.record_analysis_cache(hit);
+                    }
+                    // A memo hit returns all-zero phase clocks and
+                    // records nothing.
+                    tracer.record_phases(&id, out.phase_times);
+                    // Policy bookkeeping: a fresh registration states the
+                    // matrix's policy outright; a memoized same-id
+                    // re-registration only changes the cap/tenant when it
+                    // explicitly carries one (a defensive re-register
+                    // with plain defaults must not silently drop a
+                    // previously configured cap).
+                    let meta = matrices.entry(id.clone()).or_insert(MatrixMeta {
+                        nrows: out.nrows,
+                        cap: None,
+                        shed: ShedPolicy::RejectNewest,
+                        tenant: None,
+                    });
+                    meta.nrows = out.nrows;
+                    match (opts.max_pending, fresh) {
+                        (Some(cap), _) => meta.cap = Some(cap),
+                        (None, true) => meta.cap = None,
+                        (None, false) => {}
+                    }
+                    match (&opts.tenant, fresh) {
+                        (Some(t), _) => meta.tenant = Some(t.clone()),
+                        (None, true) => meta.tenant = None,
+                        (None, false) => {}
+                    }
+                    meta.shed = opts.shed_policy;
+                    out.info
+                });
                 let _ = reply.send(res);
             }
             Some(Request::UpdateValues { id, matrix, reply }) => {
-                if !prepared.contains_key(&id) {
+                if !matrices.contains_key(&id) {
                     let _ = reply.send(Err(ServiceError::NotRegistered(id)));
                 } else {
                     // Drain every queued request for this id against the
                     // OLD analysis first: work admitted before the update
                     // must never see the new numerics mid-batch.
-                    if let Some(old) = prepared.get(&id) {
-                        loop {
-                            let batch = batcher.take(&id);
-                            if batch.is_empty() {
-                                break;
-                            }
-                            dispatch(old, batch, &xla, &metrics, &tracer);
+                    loop {
+                        let batch = batcher.take(&id);
+                        if batch.is_empty() {
+                            break;
                         }
+                        dispatch(
+                            executor.as_mut(),
+                            &id,
+                            batch,
+                            &metrics,
+                            &tracer,
+                            &mut tenant_pending,
+                        );
                     }
-                    let res = pipeline
-                        .update_values(&id, *matrix)
-                        .map(|p| {
-                            metrics.record_value_refresh();
-                            prepared.insert(id.clone(), Arc::clone(&p));
-                            tracer.record_phases(&id, p.analysis.phase_times());
-                            register_info(&p, false, AnalysisSource::Refreshed)
-                        })
-                        .map_err(|e| match e {
-                            // Pattern mismatch (and kin) is the caller's
-                            // bug, not a backend failure.
-                            Error::Invalid(msg) => ServiceError::InvalidRequest(msg),
-                            other => ServiceError::Backend(other.to_string()),
-                        });
+                    let res = executor.update_values(&id, *matrix).map(|out| {
+                        metrics.record_value_refresh();
+                        tracer.record_phases(&id, out.phase_times);
+                        if let Some(meta) = matrices.get_mut(&id) {
+                            meta.nrows = out.nrows;
+                        }
+                        out.info
+                    });
                     let _ = reply.send(res);
                 }
             }
@@ -704,13 +763,10 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                 deadline,
                 lane,
                 cancelled,
+                tenant,
             }) => {
-                let nrows = prepared.get(&id).map(|p| p.m().nrows);
                 let pending = batcher.pending();
-                // Per-matrix cap, when the registration set one.
-                let cap = matrix_caps.get(&id).copied().filter(|&c| c > 0);
-                let matrix_pending = cap.map(|_| batcher.matrix_pending(&id));
-                match nrows {
+                match matrices.get(&id) {
                     None => {
                         metrics.record_error();
                         reply.send_err(ServiceError::NotRegistered(id));
@@ -724,8 +780,9 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                     // Validate here, not in the backend: a wrong-length
                     // right-hand side must come back as a typed error,
                     // never panic the service thread mid-dispatch.
-                    Some(n) if rhs.iter().any(|b| b.len() != n) => {
+                    Some(meta) if rhs.iter().any(|b| b.len() != meta.nrows) => {
                         metrics.record_error();
+                        let n = meta.nrows;
                         let got = rhs
                             .iter()
                             .map(Vec::len)
@@ -742,18 +799,109 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                             max_pending,
                         });
                     }
-                    Some(_)
-                        if cap.is_some_and(|c| {
-                            matrix_pending.unwrap_or(0) + rhs.len() > c
-                        }) =>
+                    // Tenant quota: the request's own tenant (or the
+                    // matrix's registered one) may not hold more than
+                    // `tenant_max_pending` queued right-hand sides across
+                    // all matrices. Checked before the per-matrix cap so
+                    // a quota breach is reported as the tenant's, not the
+                    // matrix's shed policy.
+                    Some(meta)
+                        if tenant_cap > 0 && {
+                            let t = tenant.as_ref().or(meta.tenant.as_ref());
+                            t.is_some_and(|t| {
+                                tenant_pending.get(t).copied().unwrap_or(0) + rhs.len()
+                                    > tenant_cap
+                            })
+                        } =>
                     {
+                        let t = tenant
+                            .as_ref()
+                            .or(meta.tenant.as_ref())
+                            .cloned()
+                            .unwrap_or_default();
+                        let used = tenant_pending.get(&t).copied().unwrap_or(0);
                         metrics.record_rejection(&id);
+                        metrics.record_tenant_rejection(&t);
                         reply.send_err(ServiceError::Overloaded {
-                            pending: matrix_pending.unwrap_or(0),
-                            max_pending: cap.unwrap_or(0),
+                            pending: used,
+                            max_pending: tenant_cap,
                         });
                     }
-                    Some(_) => {
+                    // Per-matrix cap, when the registration set one:
+                    // resolve the overflow by the matrix's shed policy.
+                    Some(meta)
+                        if meta.cap.is_some_and(|c| {
+                            c > 0 && batcher.matrix_pending(&id) + rhs.len() > c
+                        }) =>
+                    {
+                        let cap = meta.cap.unwrap_or(0);
+                        match meta.shed {
+                            ShedPolicy::RejectNewest => {
+                                metrics.record_rejection(&id);
+                                reply.send_err(ServiceError::Overloaded {
+                                    pending: batcher.matrix_pending(&id),
+                                    max_pending: cap,
+                                });
+                            }
+                            ShedPolicy::DropOldest => {
+                                // Shed queue heads until the newcomer fits;
+                                // each shed request resolves Overloaded and
+                                // returns its tenant quota.
+                                while batcher.matrix_pending(&id) + rhs.len() > cap {
+                                    match batcher.pop_oldest(&id) {
+                                        Some(p) => {
+                                            metrics.record_rejection(&id);
+                                            release_tenant(
+                                                &mut tenant_pending,
+                                                &p.token.tenant,
+                                                p.rhs.len(),
+                                            );
+                                            p.token.reply.send_err(
+                                                ServiceError::Overloaded {
+                                                    pending: cap,
+                                                    max_pending: cap,
+                                                },
+                                            );
+                                        }
+                                        None => break,
+                                    }
+                                }
+                                if batcher.matrix_pending(&id) + rhs.len() > cap {
+                                    // A block bigger than the cap itself:
+                                    // shedding the whole queue cannot make
+                                    // room, bounce the newcomer after all.
+                                    metrics.record_rejection(&id);
+                                    reply.send_err(ServiceError::Overloaded {
+                                        pending: batcher.matrix_pending(&id),
+                                        max_pending: cap,
+                                    });
+                                } else {
+                                    let eff = tenant.or_else(|| meta.tenant.clone());
+                                    if let Some(t) = &eff {
+                                        *tenant_pending.entry(t.clone()).or_insert(0) +=
+                                            rhs.len();
+                                    }
+                                    batcher.push(
+                                        &id,
+                                        rhs,
+                                        lane,
+                                        deadline,
+                                        Waiting {
+                                            reply,
+                                            submitted,
+                                            cancelled,
+                                            tenant: eff,
+                                        },
+                                    );
+                                }
+                            }
+                        }
+                    }
+                    Some(meta) => {
+                        let eff = tenant.or_else(|| meta.tenant.clone());
+                        if let Some(t) = &eff {
+                            *tenant_pending.entry(t.clone()).or_insert(0) += rhs.len();
+                        }
                         batcher.push(
                             &id,
                             rhs,
@@ -763,6 +911,7 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                                 reply,
                                 submitted,
                                 cancelled,
+                                tenant: eff,
                             },
                         );
                     }
@@ -776,39 +925,31 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                 metrics.record_cancel_wakeup();
                 for q in batcher.sweep(|w: &Waiting| w.cancelled.load(Ordering::Relaxed)) {
                     metrics.record_cancellation();
+                    release_tenant(&mut tenant_pending, &q.token.tenant, q.rhs.len());
                     q.token.reply.send_err(ServiceError::Cancelled);
                 }
             }
             Some(Request::Snapshot(tx)) => {
-                // Fold the scheduled-backend observability into the gauges
-                // before snapshotting: blocks + static cut per schedule,
-                // cumulative elastic wait/lookahead counters per solver.
-                let (mut blocks, mut cut, mut waits, mut ooo) = (0u64, 0u64, 0u64, 0u64);
-                for p in prepared.values() {
-                    if let Some(s) = p.native().scheduled() {
-                        let st = s.stats();
-                        blocks += st.num_blocks as u64;
-                        cut += st.cut_edges as u64;
-                        let (w, o) = s.wait_counters();
-                        waits += w;
-                        ooo += o;
-                    }
-                }
-                metrics.set_sched(blocks, cut, waits, ooo);
-                // Feed the observed stall counters back into the tuner's
-                // cost model: future `auto` decisions price waits by what
-                // this machine actually measured, not by the static
-                // constants (the calibrate hook; EWMA + clamps inside).
-                pipeline.tuner.model.calibrate_sched(waits, ooo, blocks);
-                // Mirror the pipeline's cumulative structural-pass
-                // counters: a warm analysis cache is *observably* free.
-                let c = pipeline.rebuild_counters();
-                metrics.set_rebuilds(
-                    c.rewrite_passes,
-                    c.coarsen_passes,
-                    c.placement_passes,
-                    c.renumeric_passes,
+                // Fold the executor's observability into the gauges before
+                // snapshotting: schedule blocks + static cut, cumulative
+                // elastic counters, structural-pass counters (a warm
+                // analysis cache is *observably* free), and — under the
+                // sharded executor — the crash/respawn/re-register tallies.
+                let g = executor.gauges();
+                metrics.set_sched(
+                    g.sched_blocks,
+                    g.sched_cut,
+                    g.elastic_waits,
+                    g.elastic_ooo,
+                    g.elastic_steals,
                 );
+                metrics.set_rebuilds(
+                    g.rebuilds.rewrite_passes,
+                    g.rebuilds.coarsen_passes,
+                    g.rebuilds.placement_passes,
+                    g.rebuilds.renumeric_passes,
+                );
+                metrics.set_shards(g.shard_respawns, g.shard_crashes, g.shard_reregistered);
                 let _ = tx.send(metrics.snapshot());
             }
             Some(Request::TraceReport(tx)) => {
@@ -816,7 +957,14 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
             }
             None => {} // timeout: fall through to flush
         }
-        flush(&mut batcher, &prepared, &xla, &metrics, &tracer, false);
+        flush(
+            &mut batcher,
+            executor.as_mut(),
+            &metrics,
+            &tracer,
+            &mut tenant_pending,
+            false,
+        );
         // Fold any spans the dispatches just pushed; the ring stays
         // near-empty outside bursts.
         tracer.drain();
@@ -832,10 +980,10 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
 /// backlog drains in consecutive batches instead of one per deadline tick.
 fn flush(
     batcher: &mut Batcher<Waiting>,
-    prepared: &BTreeMap<String, Arc<Prepared>>,
-    xla: &Option<XlaSolver>,
+    executor: &mut dyn Executor,
     metrics: &Metrics,
     tracer: &Tracer,
+    tenant_pending: &mut BTreeMap<String, usize>,
     force: bool,
 ) {
     loop {
@@ -848,30 +996,30 @@ fn flush(
             if batch.is_empty() {
                 continue;
             }
-            match prepared.get(&id) {
-                Some(p) => dispatch(p, batch, xla, metrics, tracer),
-                // Unreachable (push checks registration), but never leave
-                // entries behind: that would spin this loop forever.
-                None => {
-                    for q in batch {
-                        q.token.reply.send_err(ServiceError::NotRegistered(id.clone()));
-                    }
-                }
-            }
+            dispatch(executor, &id, batch, metrics, tracer, tenant_pending);
         }
     }
 }
 
-/// Serve one taken batch: weed out cancelled/expired requests, try the
-/// staged batched-XLA path on an exact size match, otherwise solve per
-/// right-hand side.
+/// Serve one taken batch: weed out cancelled/expired requests, hand the
+/// live block to the executor (which batches internally when the staged
+/// path matches), and resolve **every** ticket — an executor failure
+/// (backend error, dead shard) resolves the whole batch `Backend`, it
+/// never leaves a ticket hanging.
 fn dispatch(
-    p: &Prepared,
+    executor: &mut dyn Executor,
+    id: &str,
     batch: Vec<Pending<Waiting>>,
-    xla: &Option<XlaSolver>,
     metrics: &Metrics,
     tracer: &Tracer,
+    tenant_pending: &mut BTreeMap<String, usize>,
 ) {
+    // Queued-RHS accounting ends at take: whatever happens below, these
+    // right-hand sides no longer occupy tenant quota.
+    for q in &batch {
+        release_tenant(tenant_pending, &q.token.tenant, q.rhs.len());
+    }
+
     let now = Instant::now();
     let mut live: Vec<Pending<Waiting>> = Vec::with_capacity(batch.len());
     for q in batch {
@@ -890,63 +1038,41 @@ fn dispatch(
     }
 
     // Trace the batcher wait (admission to this dispatch) per request,
-    // then bracket the execution; the elastic counters are sampled
-    // before/after so the stalls this batch caused land on this matrix.
+    // then bracket the execution; the executor samples the elastic
+    // counters around the block so the stalls it caused land on this
+    // matrix.
     if tracer.enabled() {
         for q in &live {
-            tracer.record(&p.id, Phase::Wait, now.saturating_duration_since(q.enqueued));
+            tracer.record(id, Phase::Wait, now.saturating_duration_since(q.enqueued));
         }
     }
-    let elastic_before = p.native().scheduled().map(|s| s.wait_counters());
     let exec_start = Instant::now();
 
-    let total: usize = live.iter().map(|q| q.rhs.len()).sum();
-    let mut served_batched = false;
-    if total > 1 {
-        if let (Backend::Xla, Some(solver), Some(padded), Some(staged)) =
-            (p.backend, xla, &p.padded, &p.staged)
-        {
-            if staged.batch_size() == Some(total) {
-                let bs: Vec<Vec<f64>> =
-                    live.iter().flat_map(|q| q.rhs.iter().cloned()).collect();
-                if let Ok(xs) = solver.solve_batched_staged(staged, padded, &bs) {
-                    metrics.record_batch();
-                    let mut xs = xs.into_iter();
-                    for q in live.drain(..) {
-                        let k = q.rhs.len();
-                        let outs: Vec<Vec<f64>> = xs.by_ref().take(k).collect();
-                        deliver(q, outs, true, metrics);
-                    }
-                    served_batched = true;
-                }
+    let rhs: Vec<Vec<f64>> = live.iter().flat_map(|q| q.rhs.iter().cloned()).collect();
+    match executor.solve_block(id, &rhs) {
+        Ok(out) => {
+            metrics.record_batch();
+            let mut xs = out.xs.into_iter();
+            for q in live {
+                let k = q.rhs.len();
+                let outs: Vec<Vec<f64>> = xs.by_ref().take(k).collect();
+                deliver(q, outs, out.batched, metrics);
+            }
+            if tracer.enabled() {
+                tracer.record(id, Phase::Execute, exec_start.elapsed());
+                let (w, o, s) = out.elastic;
+                tracer.record_elastic(id, w, o, s);
             }
         }
-    }
-    if !served_batched {
-        metrics.record_batch();
-        for q in live {
-            let outs: Vec<Vec<f64>> = q.rhs.iter().map(|b| solve_rhs(p, xla, b)).collect();
-            deliver(q, outs, false, metrics);
+        Err(e) => {
+            metrics.record_error();
+            if tracer.enabled() {
+                tracer.record(id, Phase::Execute, exec_start.elapsed());
+            }
+            for q in live {
+                q.token.reply.send_err(e.clone());
+            }
         }
-    }
-
-    if tracer.enabled() {
-        tracer.record(&p.id, Phase::Execute, exec_start.elapsed());
-        if let (Some(s), Some((w0, o0))) = (p.native().scheduled(), elastic_before) {
-            let (w1, o1) = s.wait_counters();
-            tracer.record_elastic(&p.id, w1.saturating_sub(w0), o1.saturating_sub(o0));
-        }
-    }
-}
-
-/// One right-hand side on the prepared backend (XLA staged with native
-/// fallback, or native outright).
-fn solve_rhs(p: &Prepared, xla: &Option<XlaSolver>, b: &[f64]) -> Vec<f64> {
-    match (p.backend, xla, &p.padded, &p.staged) {
-        (Backend::Xla, Some(solver), Some(padded), Some(staged)) => solver
-            .solve_staged(staged, padded, b)
-            .unwrap_or_else(|_| p.native().solve(b)),
-        _ => p.native().solve(b),
     }
 }
 
@@ -1457,6 +1583,152 @@ mod tests {
         assert_eq!(snap.rejections, 1);
         assert_eq!(snap.rejections_by_matrix, vec![("capped".to_string(), 1)]);
         svc.shutdown();
+    }
+
+    #[test]
+    fn tenant_quota_caps_queued_work_and_reports_per_tenant() {
+        let svc = Service::start(Config {
+            tenant_max_pending: 2,
+            batch_size: 100,               // nothing fills
+            batch_deadline_us: 60_000_000, // nothing expires mid-test
+            ..test_cfg()
+        });
+        let h = svc.handle();
+        let m = generate::tridiagonal(30, &Default::default());
+        let acme = h
+            .register_with(
+                "acme-m",
+                m.clone(),
+                RegisterOptions::new().plan(spec("none")).tenant("acme"),
+            )
+            .unwrap();
+
+        // Two queued right-hand sides fill acme's quota...
+        let t1 = acme
+            .solve_async(vec![1.0; 30], SolveOptions::default())
+            .unwrap();
+        let t2 = acme
+            .solve_async(vec![2.0; 30], SolveOptions::default())
+            .unwrap();
+        // ...and the third bounces with the tenant's numbers.
+        let t3 = acme
+            .solve_async(vec![3.0; 30], SolveOptions::default())
+            .unwrap();
+        assert_eq!(
+            t3.wait(),
+            Err(ServiceError::Overloaded {
+                pending: 2,
+                max_pending: 2
+            })
+        );
+        // A per-request tenant override is charged to its own quota, so
+        // it is admitted even though acme is full.
+        let z = acme
+            .solve_async(vec![4.0; 30], SolveOptions::new().tenant("zen"))
+            .unwrap();
+        assert_eq!(z.wait_timeout(Duration::from_millis(50)), None);
+
+        let snap = h.metrics().unwrap();
+        assert_eq!(snap.rejections, 1);
+        assert_eq!(snap.rejections_by_tenant, vec![("acme".to_string(), 1)]);
+
+        // Shutdown force-flushes: the admitted requests still resolve.
+        svc.shutdown();
+        assert!(t1.wait().is_ok());
+        assert!(t2.wait().is_ok());
+        assert!(z.wait().is_ok());
+    }
+
+    #[test]
+    fn drop_oldest_sheds_queue_heads_under_burst_arrivals() {
+        let svc = Service::start(Config {
+            batch_size: 100,
+            batch_deadline_us: 60_000_000,
+            ..test_cfg()
+        });
+        let h = svc.handle();
+        let m = generate::tridiagonal(30, &Default::default());
+        let cap2 = h
+            .register_with(
+                "bursty",
+                m.clone(),
+                RegisterOptions::new()
+                    .plan(spec("none"))
+                    .max_pending(2)
+                    .shed_policy(ShedPolicy::DropOldest),
+            )
+            .unwrap();
+
+        // Burst of three: under drop-oldest the FIRST request is shed to
+        // make room for the third, instead of the third bouncing.
+        let t1 = cap2
+            .solve_async(vec![1.0; 30], SolveOptions::default())
+            .unwrap();
+        let t2 = cap2
+            .solve_async(vec![2.0; 30], SolveOptions::default())
+            .unwrap();
+        let t3 = cap2
+            .solve_async(vec![3.0; 30], SolveOptions::default())
+            .unwrap();
+        assert_eq!(
+            t1.wait(),
+            Err(ServiceError::Overloaded {
+                pending: 2,
+                max_pending: 2
+            })
+        );
+
+        let snap = h.metrics().unwrap();
+        assert_eq!(snap.rejections, 1);
+        assert_eq!(snap.rejections_by_matrix, vec![("bursty".to_string(), 1)]);
+
+        // The survivors are the two freshest; both serve on shutdown.
+        svc.shutdown();
+        let b2 = vec![2.0; 30];
+        let x2 = t2.wait().unwrap();
+        assert!(m.residual_inf(&x2, &b2) < 1e-9);
+        assert!(t3.wait().is_ok());
+    }
+
+    #[test]
+    fn reject_newest_bounces_the_burst_tail_by_default() {
+        let svc = Service::start(Config {
+            batch_size: 100,
+            batch_deadline_us: 60_000_000,
+            ..test_cfg()
+        });
+        let h = svc.handle();
+        let m = generate::tridiagonal(30, &Default::default());
+        // Default policy: no shed_policy stated.
+        let cap2 = h
+            .register_with(
+                "bursty",
+                m.clone(),
+                RegisterOptions::new().plan(spec("none")).max_pending(2),
+            )
+            .unwrap();
+
+        let t1 = cap2
+            .solve_async(vec![1.0; 30], SolveOptions::default())
+            .unwrap();
+        let t2 = cap2
+            .solve_async(vec![2.0; 30], SolveOptions::default())
+            .unwrap();
+        let t3 = cap2
+            .solve_async(vec![3.0; 30], SolveOptions::default())
+            .unwrap();
+        // The latecomer pays; the queue's contents survive.
+        assert_eq!(
+            t3.wait(),
+            Err(ServiceError::Overloaded {
+                pending: 2,
+                max_pending: 2
+            })
+        );
+
+        svc.shutdown();
+        assert!(t1.wait().is_ok());
+        assert!(t2.wait().is_ok());
     }
 
     #[test]

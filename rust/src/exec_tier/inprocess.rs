@@ -1,0 +1,270 @@
+//! The in-process executor: today's single-process pipeline behind the
+//! [`Executor`] trait. Prepared analyses live in this struct, solves run
+//! on the pipeline's worker pool, and the staged batched-XLA path is
+//! taken when a dispatched block exactly matches the staged batch size —
+//! byte-for-byte the behavior the service loop had before the tier
+//! split. It is also the entire body of a `shard-worker` process, which
+//! wraps one of these in the stdio protocol loop.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::analysis::BuildCounters;
+use crate::config::Config;
+use crate::coordinator::pipeline::{AnalysisSource, Backend, Pipeline, Prepared};
+use crate::coordinator::RegisterInfo;
+use crate::error::{Error, ServiceError};
+use crate::runtime::XlaSolver;
+use crate::sparse::Csr;
+use crate::transform::PlanSpec;
+
+use super::{ExecGauges, Executor, RegisterOutcome, SolveOutcome};
+
+pub struct InProcessExecutor {
+    pipeline: Pipeline,
+    xla: Option<XlaSolver>,
+    prepared: BTreeMap<String, Arc<Prepared>>,
+}
+
+impl InProcessExecutor {
+    pub fn new(cfg: Config) -> InProcessExecutor {
+        let mut pipeline = Pipeline::new(cfg);
+        let xla = pipeline.xla_solver();
+        InProcessExecutor {
+            pipeline,
+            xla,
+            prepared: BTreeMap::new(),
+        }
+    }
+
+    /// Cumulative structural-pass counters (no calibration side effects,
+    /// unlike [`Executor::gauges`]).
+    pub fn rebuild_counters(&self) -> BuildCounters {
+        self.pipeline.rebuild_counters()
+    }
+
+    fn outcome(&self, p: &Arc<Prepared>, fresh: bool, source: AnalysisSource) -> RegisterOutcome {
+        RegisterOutcome {
+            info: register_info(p, fresh, source),
+            nrows: p.m().nrows,
+            phase_times: p.analysis.phase_times(),
+            tuned: if fresh {
+                p.tuned.as_ref().map(|t| (t.plan.clone(), t.cache_hit))
+            } else {
+                None
+            },
+            analysis_cache_hit: (fresh && self.pipeline.has_analysis_cache())
+                .then(|| p.source == AnalysisSource::DiskCache),
+        }
+    }
+}
+
+impl Executor for InProcessExecutor {
+    fn register(
+        &mut self,
+        id: &str,
+        m: Csr,
+        spec: &PlanSpec,
+    ) -> Result<RegisterOutcome, ServiceError> {
+        // A same-id re-registration returns the memoized preparation;
+        // only fresh preparations count as tuner decisions.
+        let fresh = !self.prepared.contains_key(id);
+        let p = self
+            .pipeline
+            .prepare(id, m, spec)
+            .map_err(|e| ServiceError::Backend(e.to_string()))?;
+        self.prepared.insert(id.to_string(), Arc::clone(&p));
+        let source = if fresh { p.source } else { AnalysisSource::Memoized };
+        Ok(self.outcome(&p, fresh, source))
+    }
+
+    fn update_values(&mut self, id: &str, m: Csr) -> Result<RegisterOutcome, ServiceError> {
+        if !self.prepared.contains_key(id) {
+            return Err(ServiceError::NotRegistered(id.to_string()));
+        }
+        let p = self.pipeline.update_values(id, m).map_err(|e| match e {
+            // Pattern mismatch (and kin) is the caller's bug, not a
+            // backend failure.
+            Error::Invalid(msg) => ServiceError::InvalidRequest(msg),
+            other => ServiceError::Backend(other.to_string()),
+        })?;
+        self.prepared.insert(id.to_string(), Arc::clone(&p));
+        Ok(self.outcome(&p, false, AnalysisSource::Refreshed))
+    }
+
+    fn solve_block(&mut self, id: &str, rhs: &[Vec<f64>]) -> Result<SolveOutcome, ServiceError> {
+        let p = self
+            .prepared
+            .get(id)
+            .ok_or_else(|| ServiceError::NotRegistered(id.to_string()))?;
+        // Sample the elastic counters around the block so the stalls it
+        // caused are attributable to this matrix.
+        let elastic_before = p.native().scheduled().map(|s| s.elastic_counters());
+
+        let total = rhs.len();
+        let mut served = None;
+        if total > 1 {
+            if let (Backend::Xla, Some(solver), Some(padded), Some(staged)) =
+                (p.backend, &self.xla, &p.padded, &p.staged)
+            {
+                if staged.batch_size() == Some(total) {
+                    if let Ok(xs) = solver.solve_batched_staged(staged, padded, rhs) {
+                        served = Some(xs);
+                    }
+                }
+            }
+        }
+        let batched = served.is_some();
+        let xs = served.unwrap_or_else(|| {
+            rhs.iter().map(|b| solve_rhs(p, &self.xla, b)).collect()
+        });
+
+        let elastic = match (p.native().scheduled(), elastic_before) {
+            (Some(s), Some((w0, o0, s0))) => {
+                let (w1, o1, s1) = s.elastic_counters();
+                (
+                    w1.saturating_sub(w0),
+                    o1.saturating_sub(o0),
+                    s1.saturating_sub(s0),
+                )
+            }
+            _ => (0, 0, 0),
+        };
+        Ok(SolveOutcome { xs, batched, elastic })
+    }
+
+    fn gauges(&mut self) -> ExecGauges {
+        // Blocks + static cut per schedule, cumulative elastic counters
+        // per solver.
+        let mut g = ExecGauges::default();
+        for p in self.prepared.values() {
+            if let Some(s) = p.native().scheduled() {
+                let st = s.stats();
+                g.sched_blocks += st.num_blocks as u64;
+                g.sched_cut += st.cut_edges as u64;
+                let (w, o, st) = s.elastic_counters();
+                g.elastic_waits += w;
+                g.elastic_ooo += o;
+                g.elastic_steals += st;
+            }
+        }
+        // Feed the observed stall counters back into the tuner's cost
+        // model: future `auto` decisions price waits by what this machine
+        // actually measured (the calibrate hook; EWMA + clamps inside).
+        self.pipeline
+            .tuner
+            .model
+            .calibrate_sched(g.elastic_waits, g.elastic_ooo, g.sched_blocks);
+        g.rebuilds = self.pipeline.rebuild_counters();
+        g
+    }
+
+    fn shutdown(&mut self) {}
+}
+
+/// One right-hand side on the prepared backend (XLA staged with native
+/// fallback, or native outright).
+fn solve_rhs(p: &Prepared, xla: &Option<XlaSolver>, b: &[f64]) -> Vec<f64> {
+    match (p.backend, xla, &p.padded, &p.staged) {
+        (Backend::Xla, Some(solver), Some(padded), Some(staged)) => solver
+            .solve_staged(staged, padded, b)
+            .unwrap_or_else(|_| p.native().solve(b)),
+        _ => p.native().solve(b),
+    }
+}
+
+/// Build a [`RegisterInfo`] from a preparation.
+fn register_info(p: &Prepared, fresh: bool, source: AnalysisSource) -> RegisterInfo {
+    let stats = &p.analysis.transform().stats;
+    RegisterInfo {
+        levels_before: stats.levels_before,
+        levels_after: stats.levels_after,
+        rows_rewritten: stats.rows_rewritten,
+        backend: match p.backend {
+            Backend::Native => "native",
+            Backend::Xla => "xla",
+        },
+        plan: p.plan_name().to_string(),
+        tuner_cache_hit: if fresh {
+            p.tuned.as_ref().map(|t| t.cache_hit)
+        } else {
+            None
+        },
+        source,
+        prepare_ms: p.prepare_time.as_secs_f64() * 1e3,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate::{self, GenOptions};
+
+    fn cfg() -> Config {
+        Config {
+            workers: 2,
+            use_xla: false,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn register_solve_update_through_the_trait() {
+        let mut ex = InProcessExecutor::new(cfg());
+        let m = generate::random_lower(120, 3, 0.8, &Default::default());
+        let out = ex
+            .register("m", m.clone(), &PlanSpec::parse("avgcost").unwrap())
+            .unwrap();
+        assert_eq!(out.nrows, 120);
+        assert_eq!(out.info.source, AnalysisSource::Fresh);
+        assert!(out.analysis_cache_hit.is_none(), "no cache configured");
+
+        let b = vec![1.0; 120];
+        let sol = ex.solve_block("m", &[b.clone(), b.clone()]).unwrap();
+        assert_eq!(sol.xs.len(), 2);
+        assert!(!sol.batched, "native path");
+        assert!(m.residual_inf(&sol.xs[0], &b) < 1e-9);
+
+        // Same-id re-registration is memoized, not a fresh tuner call.
+        let again = ex
+            .register("m", m.clone(), &PlanSpec::parse("avgcost").unwrap())
+            .unwrap();
+        assert_eq!(again.info.source, AnalysisSource::Memoized);
+        assert!(again.tuned.is_none());
+
+        // Value refresh pays exactly one more renumeric pass.
+        let before = ex.rebuild_counters().renumeric_passes;
+        let mut m2 = m.clone();
+        for v in &mut m2.data {
+            *v *= 2.0;
+        }
+        let up = ex.update_values("m", m2.clone()).unwrap();
+        assert_eq!(up.info.source, AnalysisSource::Refreshed);
+        assert_eq!(ex.rebuild_counters().renumeric_passes, before + 1);
+        let sol = ex.solve_block("m", &[b.clone()]).unwrap();
+        assert!(m2.residual_inf(&sol.xs[0], &b) < 1e-9);
+
+        assert!(matches!(
+            ex.solve_block("nope", &[b]),
+            Err(ServiceError::NotRegistered(_))
+        ));
+        assert!(matches!(
+            ex.update_values("nope", m),
+            Err(ServiceError::NotRegistered(_))
+        ));
+    }
+
+    #[test]
+    fn gauges_fold_schedule_stats() {
+        let mut ex = InProcessExecutor::new(cfg());
+        let m = generate::lung2_like(&GenOptions::with_scale(0.05));
+        ex.register("s", m.clone(), &PlanSpec::parse("avgcost+scheduled").unwrap())
+            .unwrap();
+        let b = vec![1.0; m.nrows];
+        ex.solve_block("s", &[b]).unwrap();
+        let g = ex.gauges();
+        assert!(g.sched_blocks > 0);
+        assert_eq!(g.shard_respawns, 0);
+        assert!(g.rebuilds.rewrite_passes >= 1);
+    }
+}

@@ -1,0 +1,136 @@
+//! Executor tier: *where* a prepared analysis runs.
+//!
+//! The coordinator's service loop owns admission, batching, tickets and
+//! metrics; everything below the batcher — preparing analyses, holding
+//! them, and solving against them — is abstracted behind the [`Executor`]
+//! trait so the same service loop can serve from two very different
+//! placements:
+//!
+//! * [`InProcessExecutor`] — the original single-process pipeline: the
+//!   analyses live in the service thread's address space and solves run
+//!   on its worker pool (XLA staged batching included).
+//! * [`ShardPoolExecutor`] — a pool of N child worker processes (the
+//!   hidden `sptrsv shard-worker` subcommand), each running its own
+//!   in-process executor behind a length-prefixed JSON-over-stdio
+//!   protocol ([`protocol`]). Matrices are routed to shards by structural
+//!   fingerprint with rendezvous hashing ([`rendezvous`]), so resizing
+//!   the pool moves the minimal set of matrices, and each shard keeps a
+//!   shared-nothing analysis/tuner cache. A worker that dies or hangs is
+//!   detected by reply timeout, killed, respawned, and its roster
+//!   re-registered — warm from the shard's analysis-cache subdirectory
+//!   when one is configured, so a crash costs zero structural passes.
+//!   In-flight requests on the dead shard resolve to
+//!   [`ServiceError::Backend`] instead of hanging, and
+//!   crash/respawn/re-register counts surface in the metrics snapshot.
+//!
+//! The `executor` config key selects the tier (`inprocess` or
+//! `sharded:N`); [`make_executor`] is the single construction point the
+//! service uses.
+
+pub mod inprocess;
+pub mod protocol;
+pub mod rendezvous;
+pub mod shard;
+pub mod worker;
+
+pub use inprocess::InProcessExecutor;
+pub use shard::ShardPoolExecutor;
+
+use crate::analysis::BuildCounters;
+use crate::config::Config;
+use crate::coordinator::RegisterInfo;
+use crate::error::ServiceError;
+use crate::sparse::Csr;
+use crate::trace::PhaseTimes;
+use crate::transform::PlanSpec;
+
+/// What a registration (or value refresh) reports back through the tier:
+/// the client-facing [`RegisterInfo`] plus the bookkeeping the service
+/// needs for validation, metrics and tracing.
+#[derive(Debug, Clone)]
+pub struct RegisterOutcome {
+    pub info: RegisterInfo,
+    /// row count, kept service-side so RHS validation never crosses the
+    /// tier boundary
+    pub nrows: usize,
+    /// analyze-phase wall clocks for the tracer
+    pub phase_times: PhaseTimes,
+    /// `Some((plan, cache_hit))` when the tuner decided for this
+    /// registration (fresh `auto` registrations only)
+    pub tuned: Option<(String, bool)>,
+    /// `Some(hit)` when a persistent analysis cache is configured and
+    /// this was a fresh registration
+    pub analysis_cache_hit: Option<bool>,
+}
+
+/// One dispatched batch's results.
+#[derive(Debug, Clone)]
+pub struct SolveOutcome {
+    /// solutions, one per submitted right-hand side, in order
+    pub xs: Vec<Vec<f64>>,
+    /// whether the staged batched-XLA path served the whole batch
+    pub batched: bool,
+    /// elastic `(waits, ooo, steals)` deltas attributable to this call
+    pub elastic: (u64, u64, u64),
+}
+
+/// Executor-side observability, polled at snapshot time.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecGauges {
+    pub sched_blocks: u64,
+    pub sched_cut: u64,
+    /// cumulative elastic counters across every served matrix
+    pub elastic_waits: u64,
+    pub elastic_ooo: u64,
+    pub elastic_steals: u64,
+    /// cumulative structural passes paid by the tier (summed across
+    /// shards, and across worker generations when a shard respawned)
+    pub rebuilds: BuildCounters,
+    pub shard_crashes: u64,
+    pub shard_respawns: u64,
+    pub shard_reregistered: u64,
+}
+
+/// Where a prepared analysis runs. Implementations own the prepared-state
+/// lifetime; the service loop above owns queues, tickets and policy.
+pub trait Executor: Send {
+    /// Prepare `m` under `id` (memoized per id, like the pipeline).
+    fn register(
+        &mut self,
+        id: &str,
+        m: Csr,
+        spec: &PlanSpec,
+    ) -> Result<RegisterOutcome, ServiceError>;
+
+    /// Same-pattern numeric refresh of a registered matrix.
+    fn update_values(&mut self, id: &str, m: Csr) -> Result<RegisterOutcome, ServiceError>;
+
+    /// Solve one dispatched batch of right-hand sides against `id`'s
+    /// prepared analysis. An error applies to the whole batch (the
+    /// service replies it to every ticket — a dead shard must resolve
+    /// tickets, never hang them).
+    fn solve_block(&mut self, id: &str, rhs: &[Vec<f64>]) -> Result<SolveOutcome, ServiceError>;
+
+    /// Fold executor-side gauges (schedule stats, elastic counters,
+    /// structural-pass totals, shard health) for the metrics snapshot.
+    fn gauges(&mut self) -> ExecGauges;
+
+    /// Release resources (child processes for the sharded tier).
+    fn shutdown(&mut self);
+}
+
+/// Build the executor the `executor` config key names. A shard pool that
+/// fails to start (missing worker binary, spawn failure) degrades to the
+/// in-process tier with a warning instead of taking the service down.
+pub fn make_executor(cfg: &Config) -> Box<dyn Executor> {
+    match cfg.shard_count() {
+        Some(n) => match ShardPoolExecutor::start(cfg.clone(), n) {
+            Ok(p) => Box::new(p),
+            Err(e) => {
+                eprintln!("warning: sharded executor unavailable ({e}); serving in-process");
+                Box::new(InProcessExecutor::new(cfg.clone()))
+            }
+        },
+        None => Box::new(InProcessExecutor::new(cfg.clone())),
+    }
+}

@@ -1,0 +1,524 @@
+//! Wire protocol between the shard supervisor and `shard-worker` child
+//! processes: 4-byte big-endian length-prefixed JSON frames over the
+//! child's stdin/stdout, reusing the crate's own [`Json`] reader/writer.
+//!
+//! Requests are objects tagged with an `"op"` key (`register`, `update`,
+//! `solve`, `gauges`, `shutdown`); every response carries `"ok"` —
+//! `false` responses map back to a typed [`ServiceError`] via a `"kind"`
+//! discriminant so shard-side admission errors (not-registered, invalid
+//! request) survive the hop instead of collapsing into `Backend`.
+//!
+//! Framing and the frame codec are generic over `Read`/`Write` so the
+//! whole protocol — including the worker's serve loop — unit-tests over
+//! in-memory buffers without spawning a process.
+
+use std::io::{self, Read, Write};
+
+use crate::analysis::BuildCounters;
+use crate::coordinator::{AnalysisSource, RegisterInfo};
+use crate::error::ServiceError;
+use crate::sparse::Csr;
+use crate::trace::PhaseTimes;
+use crate::util::json::Json;
+
+use super::{ExecGauges, RegisterOutcome, SolveOutcome};
+
+/// Upper bound on a single frame; a length prefix beyond this is treated
+/// as stream corruption rather than an allocation request.
+const MAX_FRAME: u32 = 1 << 30;
+
+/// Write one length-prefixed frame and flush (the reader on the other
+/// side blocks on the full frame, so every write must flush).
+pub fn write_frame<W: Write>(w: &mut W, msg: &Json) -> io::Result<()> {
+    let body = msg.to_string();
+    let len = u32::try_from(body.len())
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidInput, "frame too large"))?;
+    w.write_all(&len.to_be_bytes())?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
+/// Read one frame. `Ok(None)` is a clean EOF at a frame boundary (the
+/// peer closed the stream); EOF mid-frame or an unparseable body is an
+/// error.
+pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<Json>> {
+    let mut len = [0u8; 4];
+    match r.read_exact(&mut len) {
+        Ok(()) => {}
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e),
+    }
+    let len = u32::from_be_bytes(len);
+    if len > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds limit"),
+        ));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    let text = String::from_utf8(body)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+    Json::parse(&text)
+        .map(Some)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))
+}
+
+// ---------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------
+
+pub fn register_req(op: &str, id: &str, m: &Csr, plan: &str) -> Json {
+    Json::obj(vec![
+        ("op", Json::Str(op.to_string())),
+        ("id", Json::Str(id.to_string())),
+        ("plan", Json::Str(plan.to_string())),
+        ("matrix", csr_to_json(m)),
+    ])
+}
+
+pub fn solve_req(id: &str, rhs: &[Vec<f64>]) -> Json {
+    Json::obj(vec![
+        ("op", Json::Str("solve".to_string())),
+        ("id", Json::Str(id.to_string())),
+        ("rhs", Json::Arr(rhs.iter().map(|b| num_arr(b)).collect())),
+    ])
+}
+
+pub fn gauges_req() -> Json {
+    Json::obj(vec![("op", Json::Str("gauges".to_string()))])
+}
+
+pub fn shutdown_req() -> Json {
+    Json::obj(vec![("op", Json::Str("shutdown".to_string()))])
+}
+
+// ---------------------------------------------------------------------
+// Matrix codec
+// ---------------------------------------------------------------------
+
+pub fn csr_to_json(m: &Csr) -> Json {
+    Json::obj(vec![
+        ("nrows", Json::Num(m.nrows as f64)),
+        ("ncols", Json::Num(m.ncols as f64)),
+        (
+            "indptr",
+            Json::Arr(m.indptr.iter().map(|&v| Json::Num(v as f64)).collect()),
+        ),
+        (
+            "indices",
+            Json::Arr(m.indices.iter().map(|&v| Json::Num(v as f64)).collect()),
+        ),
+        ("data", num_arr(&m.data)),
+    ])
+}
+
+pub fn csr_from_json(j: &Json) -> Result<Csr, String> {
+    let nrows = j
+        .get("nrows")
+        .and_then(Json::as_usize)
+        .ok_or("matrix missing nrows")?;
+    let ncols = j
+        .get("ncols")
+        .and_then(Json::as_usize)
+        .ok_or("matrix missing ncols")?;
+    let indptr: Vec<usize> = usize_vec(j.get("indptr")).ok_or("matrix missing indptr")?;
+    let indices: Vec<u32> = usize_vec(j.get("indices"))
+        .ok_or("matrix missing indices")?
+        .into_iter()
+        .map(|v| v as u32)
+        .collect();
+    let data = f64_vec(j.get("data")).ok_or("matrix missing data")?;
+    Csr::new(nrows, ncols, indptr, indices, data).map_err(|e| e.to_string())
+}
+
+// ---------------------------------------------------------------------
+// Responses
+// ---------------------------------------------------------------------
+
+/// Encode a service error for the wire.
+pub fn err_response(e: &ServiceError) -> Json {
+    let kind = match e {
+        ServiceError::NotRegistered(_) => "not_registered",
+        ServiceError::InvalidRequest(_) => "invalid",
+        _ => "backend",
+    };
+    let msg = match e {
+        ServiceError::NotRegistered(id) => id.clone(),
+        other => other.to_string(),
+    };
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("kind", Json::Str(kind.to_string())),
+        ("err", Json::Str(msg)),
+    ])
+}
+
+/// Decode a `"ok":false` response back to the typed error.
+pub fn response_error(j: &Json) -> ServiceError {
+    let msg = j
+        .get("err")
+        .and_then(Json::as_str)
+        .unwrap_or("malformed shard error")
+        .to_string();
+    match j.get("kind").and_then(Json::as_str) {
+        Some("not_registered") => ServiceError::NotRegistered(msg),
+        Some("invalid") => ServiceError::InvalidRequest(msg),
+        _ => ServiceError::Backend(msg),
+    }
+}
+
+/// Encode a registration outcome plus the worker's cumulative
+/// structural-pass counters (the supervisor tracks them per generation
+/// so totals stay monotone across respawns).
+pub fn register_response(out: &RegisterOutcome, rebuilds: BuildCounters) -> Json {
+    let info = &out.info;
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        (
+            "info",
+            Json::obj(vec![
+                ("levels_before", Json::Num(info.levels_before as f64)),
+                ("levels_after", Json::Num(info.levels_after as f64)),
+                ("rows_rewritten", Json::Num(info.rows_rewritten as f64)),
+                ("backend", Json::Str(info.backend.to_string())),
+                ("plan", Json::Str(info.plan.clone())),
+                ("tuner_cache_hit", opt_bool(info.tuner_cache_hit)),
+                ("source", Json::Str(info.source.as_str().to_string())),
+                ("prepare_ms", Json::Num(info.prepare_ms)),
+            ]),
+        ),
+        ("nrows", Json::Num(out.nrows as f64)),
+        (
+            "phase_us",
+            u64_arr(&[
+                out.phase_times.rewrite_us,
+                out.phase_times.coarsen_us,
+                out.phase_times.placement_us,
+                out.phase_times.renumeric_us,
+            ]),
+        ),
+        (
+            "tuned",
+            match &out.tuned {
+                Some((plan, hit)) => {
+                    Json::Arr(vec![Json::Str(plan.clone()), Json::Bool(*hit)])
+                }
+                None => Json::Null,
+            },
+        ),
+        (
+            "acache_hit",
+            match out.analysis_cache_hit {
+                Some(h) => Json::Bool(h),
+                None => Json::Null,
+            },
+        ),
+        ("rebuilds", counters_arr(rebuilds)),
+    ])
+}
+
+/// Decode a registration response. Returns the outcome plus the worker's
+/// cumulative rebuild counters.
+pub fn register_from_response(j: &Json) -> Result<(RegisterOutcome, BuildCounters), String> {
+    let info = j.get("info").ok_or("response missing info")?;
+    let backend: &'static str = match info.get("backend").and_then(Json::as_str) {
+        Some("xla") => "xla",
+        _ => "native",
+    };
+    let source = match info.get("source").and_then(Json::as_str) {
+        Some("disk-cache") => AnalysisSource::DiskCache,
+        Some("refreshed") => AnalysisSource::Refreshed,
+        Some("memoized") => AnalysisSource::Memoized,
+        _ => AnalysisSource::Fresh,
+    };
+    let phase = u64_vec(j.get("phase_us")).ok_or("response missing phase_us")?;
+    if phase.len() != 4 {
+        return Err("phase_us must have 4 entries".to_string());
+    }
+    let tuned = match j.get("tuned") {
+        Some(Json::Arr(a)) if a.len() == 2 => {
+            let plan = a[0].as_str().ok_or("tuned plan must be a string")?;
+            let Json::Bool(hit) = a[1] else {
+                return Err("tuned hit must be a bool".to_string());
+            };
+            Some((plan.to_string(), hit))
+        }
+        _ => None,
+    };
+    let acache_hit = match j.get("acache_hit") {
+        Some(Json::Bool(h)) => Some(*h),
+        _ => None,
+    };
+    let out = RegisterOutcome {
+        info: RegisterInfo {
+            levels_before: get_usize(info, "levels_before")?,
+            levels_after: get_usize(info, "levels_after")?,
+            rows_rewritten: get_usize(info, "rows_rewritten")?,
+            backend,
+            plan: info
+                .get("plan")
+                .and_then(Json::as_str)
+                .ok_or("info missing plan")?
+                .to_string(),
+            tuner_cache_hit: match info.get("tuner_cache_hit") {
+                Some(Json::Bool(h)) => Some(*h),
+                _ => None,
+            },
+            source,
+            prepare_ms: info
+                .get("prepare_ms")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+        },
+        nrows: get_usize(j, "nrows")?,
+        phase_times: PhaseTimes {
+            rewrite_us: phase[0],
+            coarsen_us: phase[1],
+            placement_us: phase[2],
+            renumeric_us: phase[3],
+        },
+        tuned,
+        analysis_cache_hit: acache_hit,
+    };
+    let rebuilds = counters_from(j.get("rebuilds")).ok_or("response missing rebuilds")?;
+    Ok((out, rebuilds))
+}
+
+pub fn solve_response(out: &SolveOutcome) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("xs", Json::Arr(out.xs.iter().map(|x| num_arr(x)).collect())),
+        ("batched", Json::Bool(out.batched)),
+        (
+            "elastic",
+            u64_arr(&[out.elastic.0, out.elastic.1, out.elastic.2]),
+        ),
+    ])
+}
+
+pub fn solve_from_response(j: &Json) -> Result<SolveOutcome, String> {
+    let xs = j
+        .get("xs")
+        .and_then(Json::as_arr)
+        .ok_or("response missing xs")?
+        .iter()
+        .map(|x| f64_vec(Some(x)).ok_or("xs row must be numeric"))
+        .collect::<Result<Vec<_>, _>>()?;
+    let batched = matches!(j.get("batched"), Some(Json::Bool(true)));
+    let e = u64_vec(j.get("elastic")).ok_or("response missing elastic")?;
+    if e.len() != 3 {
+        return Err("elastic must have 3 entries".to_string());
+    }
+    Ok(SolveOutcome {
+        xs,
+        batched,
+        elastic: (e[0], e[1], e[2]),
+    })
+}
+
+/// Encode the worker's gauges (the shard-health fields stay supervisor-
+/// side and are always zero here).
+pub fn gauges_response(g: &ExecGauges) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("sched_blocks", Json::Num(g.sched_blocks as f64)),
+        ("sched_cut", Json::Num(g.sched_cut as f64)),
+        (
+            "elastic",
+            u64_arr(&[g.elastic_waits, g.elastic_ooo, g.elastic_steals]),
+        ),
+        ("rebuilds", counters_arr(g.rebuilds)),
+    ])
+}
+
+pub fn gauges_from_response(j: &Json) -> Result<ExecGauges, String> {
+    let e = u64_vec(j.get("elastic")).ok_or("response missing elastic")?;
+    if e.len() != 3 {
+        return Err("elastic must have 3 entries".to_string());
+    }
+    Ok(ExecGauges {
+        sched_blocks: get_u64(j, "sched_blocks")?,
+        sched_cut: get_u64(j, "sched_cut")?,
+        elastic_waits: e[0],
+        elastic_ooo: e[1],
+        elastic_steals: e[2],
+        rebuilds: counters_from(j.get("rebuilds")).ok_or("response missing rebuilds")?,
+        ..ExecGauges::default()
+    })
+}
+
+pub fn ok_response() -> Json {
+    Json::obj(vec![("ok", Json::Bool(true))])
+}
+
+pub fn is_ok(j: &Json) -> bool {
+    matches!(j.get("ok"), Some(Json::Bool(true)))
+}
+
+// ---------------------------------------------------------------------
+// Scalar helpers
+// ---------------------------------------------------------------------
+
+fn num_arr(v: &[f64]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
+}
+
+fn u64_arr(v: &[u64]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn counters_arr(c: BuildCounters) -> Json {
+    u64_arr(&[
+        c.rewrite_passes,
+        c.coarsen_passes,
+        c.placement_passes,
+        c.renumeric_passes,
+    ])
+}
+
+fn counters_from(j: Option<&Json>) -> Option<BuildCounters> {
+    let v = u64_vec(j)?;
+    (v.len() == 4).then(|| BuildCounters {
+        rewrite_passes: v[0],
+        coarsen_passes: v[1],
+        placement_passes: v[2],
+        renumeric_passes: v[3],
+    })
+}
+
+fn opt_bool(b: Option<bool>) -> Json {
+    match b {
+        Some(v) => Json::Bool(v),
+        None => Json::Null,
+    }
+}
+
+pub(super) fn f64_vec(j: Option<&Json>) -> Option<Vec<f64>> {
+    j?.as_arr()?.iter().map(Json::as_f64).collect()
+}
+
+fn u64_vec(j: Option<&Json>) -> Option<Vec<u64>> {
+    j?.as_arr()?
+        .iter()
+        .map(|v| v.as_f64().map(|n| n as u64))
+        .collect()
+}
+
+fn usize_vec(j: Option<&Json>) -> Option<Vec<usize>> {
+    j?.as_arr()?.iter().map(Json::as_usize).collect()
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<usize, String> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| format!("response missing {key}"))
+}
+
+fn get_u64(j: &Json, key: &str) -> Result<u64, String> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .map(|n| n as u64)
+        .ok_or_else(|| format!("response missing {key}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frames_roundtrip_and_eof_is_clean() {
+        let mut buf = Vec::new();
+        let a = register_req("register", "m1", &tiny(), "auto");
+        let b = solve_req("m1", &[vec![1.0, 2.5], vec![3.0, -4.0]]);
+        write_frame(&mut buf, &a).unwrap();
+        write_frame(&mut buf, &b).unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap(), Some(a));
+        assert_eq!(read_frame(&mut r).unwrap(), Some(b));
+        assert_eq!(read_frame(&mut r).unwrap(), None, "clean EOF");
+        // EOF mid-frame is corruption, not a clean close.
+        let mut trunc = Vec::new();
+        write_frame(&mut trunc, &gauges_req()).unwrap();
+        trunc.truncate(trunc.len() - 2);
+        let mut r = Cursor::new(trunc);
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn matrix_codec_roundtrips() {
+        let m = tiny();
+        let back = csr_from_json(&csr_to_json(&m)).unwrap();
+        assert_eq!(back.nrows, m.nrows);
+        assert_eq!(back.indptr, m.indptr);
+        assert_eq!(back.indices, m.indices);
+        assert_eq!(back.data, m.data);
+        assert!(csr_from_json(&Json::obj(vec![("nrows", Json::Num(1.0))])).is_err());
+    }
+
+    #[test]
+    fn error_kinds_survive_the_wire() {
+        for e in [
+            ServiceError::NotRegistered("m9".to_string()),
+            ServiceError::InvalidRequest("bad rhs".to_string()),
+            ServiceError::Backend("boom".to_string()),
+        ] {
+            let j = err_response(&e);
+            assert!(!is_ok(&j));
+            assert_eq!(response_error(&j), e);
+        }
+        // Untyped errors collapse to Backend with their display text.
+        let j = err_response(&ServiceError::Shutdown);
+        assert!(matches!(response_error(&j), ServiceError::Backend(_)));
+    }
+
+    #[test]
+    fn solve_and_gauges_responses_roundtrip() {
+        let out = SolveOutcome {
+            xs: vec![vec![1.0, 2.0], vec![-0.5, 1e-9]],
+            batched: true,
+            elastic: (7, 3, 2),
+        };
+        let back = solve_from_response(&solve_response(&out)).unwrap();
+        assert_eq!(back.xs, out.xs);
+        assert!(back.batched);
+        assert_eq!(back.elastic, (7, 3, 2));
+
+        let g = ExecGauges {
+            sched_blocks: 12,
+            sched_cut: 5,
+            elastic_waits: 9,
+            elastic_ooo: 4,
+            elastic_steals: 1,
+            rebuilds: BuildCounters {
+                rewrite_passes: 2,
+                coarsen_passes: 1,
+                placement_passes: 1,
+                renumeric_passes: 3,
+            },
+            ..ExecGauges::default()
+        };
+        let back = gauges_from_response(&gauges_response(&g)).unwrap();
+        assert_eq!(back.sched_blocks, 12);
+        assert_eq!(back.sched_cut, 5);
+        assert_eq!(
+            (back.elastic_waits, back.elastic_ooo, back.elastic_steals),
+            (9, 4, 1)
+        );
+        assert_eq!(back.rebuilds.coarsen_passes, 1);
+        assert_eq!(back.rebuilds.renumeric_passes, 3);
+        assert_eq!(back.shard_crashes, 0, "shard health is supervisor-side");
+    }
+
+    fn tiny() -> Csr {
+        Csr::new(
+            2,
+            2,
+            vec![0, 1, 3],
+            vec![0, 0, 1],
+            vec![2.0, -1.0, 4.0],
+        )
+        .unwrap()
+    }
+}

@@ -1,0 +1,96 @@
+//! Rendezvous (highest-random-weight) routing of matrices to shards.
+//!
+//! Each matrix's structural [`Fingerprint`] is scored against every shard
+//! index; the shard with the highest score wins. Unlike `fp % n`, growing
+//! or shrinking the pool by one shard only remaps the matrices that move
+//! to (or lived on) the changed shard — everything else keeps its home,
+//! which is what makes warm respawn and pool resizing cheap.
+
+use crate::tuner::Fingerprint;
+
+/// FNV-1a over the concatenated little-endian bytes of `(a, b)`. The
+/// fingerprint module keeps its own FNV helper private, so the router
+/// carries the (tiny) mix itself.
+fn mix(a: u64, b: u64) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for byte in a.to_le_bytes().into_iter().chain(b.to_le_bytes()) {
+        h ^= u64::from(byte);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Home shard for `fp` in a pool of `nshards` (>= 1). Ties break toward
+/// the lower shard index, so routing is a pure function of the inputs.
+pub fn route(fp: Fingerprint, nshards: usize) -> usize {
+    let mut best = 0usize;
+    let mut best_score = mix(fp.0, 0);
+    for shard in 1..nshards {
+        let score = mix(fp.0, shard as u64);
+        if score > best_score {
+            best = shard;
+            best_score = score;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fps(n: u64) -> impl Iterator<Item = Fingerprint> {
+        // Spread the probe keys; consecutive integers would share most
+        // of their byte patterns.
+        (0..n).map(|i| Fingerprint(i.wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ 0x5bd1))
+    }
+
+    #[test]
+    fn routes_are_stable_and_in_range() {
+        for fp in fps(200) {
+            for n in 1..6 {
+                let k = route(fp, n);
+                assert!(k < n);
+                assert_eq!(k, route(fp, n), "pure function of (fp, n)");
+            }
+            assert_eq!(route(fp, 1), 0);
+        }
+    }
+
+    #[test]
+    fn spreads_load_across_shards() {
+        let n = 4;
+        let mut counts = vec![0usize; n];
+        for fp in fps(400) {
+            counts[route(fp, n)] += 1;
+        }
+        for (shard, &c) in counts.iter().enumerate() {
+            assert!(c > 0, "shard {shard} received nothing: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn adding_a_shard_only_moves_keys_onto_it() {
+        for fp in fps(300) {
+            let before = route(fp, 3);
+            let after = route(fp, 4);
+            assert!(
+                after == before || after == 3,
+                "{fp:?} moved {before} -> {after} when shard 3 was added"
+            );
+        }
+    }
+
+    #[test]
+    fn removing_a_shard_only_moves_its_own_keys() {
+        for fp in fps(300) {
+            let before = route(fp, 4);
+            let after = route(fp, 3);
+            if before < 3 {
+                assert_eq!(after, before, "{fp:?} moved off a surviving shard");
+            } else {
+                assert!(after < 3);
+            }
+        }
+    }
+}

@@ -1,0 +1,430 @@
+//! The sharded executor: N child worker processes, each a hidden
+//! `sptrsv shard-worker` running an [`super::InProcessExecutor`] behind
+//! the stdio frame protocol, supervised from the service thread.
+//!
+//! * **Routing** — a matrix's home shard is a pure function of its
+//!   structural fingerprint ([`super::rendezvous`]); value refreshes and
+//!   solves follow the registration's home. Each shard gets its own
+//!   `shard-<k>` subdirectory of the analysis/tuner cache roots, so
+//!   shards share nothing at runtime.
+//! * **Fault containment** — every request is a write + reply with a
+//!   `shard_timeout_ms` deadline. A timeout, stream error or EOF marks
+//!   the worker dead: it is killed, counted, respawned, and every
+//!   matrix homed on it is re-registered from the supervisor's roster —
+//!   against the shard's analysis-cache subdirectory when one is
+//!   configured, so the respawn pays zero structural passes. The failed
+//!   in-flight request surfaces as [`ServiceError::Backend`]; nothing
+//!   ever hangs on a dead shard.
+//! * **Monotone counters** — structural-pass and elastic counters are
+//!   cumulative *per worker generation*; the supervisor retires a dead
+//!   generation's last-seen values into running totals so the metrics
+//!   snapshot never moves backwards across a respawn.
+//!
+//! The `chaos_kill_shard_after` config key kills the routed shard right
+//! before the Nth solve dispatch — the deterministic crash the failure
+//! tests and the CI chaos rerun are built on.
+
+use std::collections::BTreeMap;
+use std::io::BufReader;
+use std::process::{Child, ChildStdin, Command, Stdio};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::config::Config;
+use crate::error::ServiceError;
+use crate::sparse::Csr;
+use crate::transform::PlanSpec;
+use crate::tuner::Fingerprint;
+use crate::util::json::Json;
+
+use super::{protocol, rendezvous, ExecGauges, Executor, RegisterOutcome, SolveOutcome};
+
+struct Shard {
+    child: Child,
+    stdin: ChildStdin,
+    /// frames (or the stream error that ended them) pumped by the
+    /// reader thread; a disconnect means the worker's stdout closed
+    rx: Receiver<std::io::Result<Json>>,
+    /// last-seen cumulative counters for this worker generation
+    last_rebuilds: crate::analysis::BuildCounters,
+    last_elastic: (u64, u64, u64),
+}
+
+struct RosterEntry {
+    matrix: Arc<Csr>,
+    plan: String,
+    shard: usize,
+}
+
+pub struct ShardPoolExecutor {
+    cfg: Config,
+    nshards: usize,
+    /// `None` = down and respawn failed; requests answer Backend
+    shards: Vec<Option<Shard>>,
+    /// everything registered, by id: enough to rebuild a shard from
+    /// scratch (or warm, via its analysis-cache subdirectory)
+    roster: BTreeMap<String, RosterEntry>,
+    crashes: u64,
+    respawns: u64,
+    reregistered: u64,
+    /// counters retired from dead worker generations
+    retired_rebuilds: crate::analysis::BuildCounters,
+    retired_elastic: (u64, u64, u64),
+    /// solves left before the chaos hook kills the routed shard
+    chaos_countdown: Option<usize>,
+}
+
+impl ShardPoolExecutor {
+    pub fn start(cfg: Config, nshards: usize) -> Result<ShardPoolExecutor, ServiceError> {
+        let mut shards = Vec::with_capacity(nshards);
+        for k in 0..nshards {
+            match spawn_shard(&cfg, k) {
+                Ok(s) => shards.push(Some(s)),
+                Err(e) => {
+                    for s in shards.iter_mut().flatten() {
+                        let _ = s.child.kill();
+                        let _ = s.child.wait();
+                    }
+                    return Err(ServiceError::Backend(format!(
+                        "spawning shard worker {k}: {e}"
+                    )));
+                }
+            }
+        }
+        let chaos_countdown = (cfg.chaos_kill_shard_after > 0).then_some(cfg.chaos_kill_shard_after);
+        Ok(ShardPoolExecutor {
+            cfg,
+            nshards,
+            shards,
+            roster: BTreeMap::new(),
+            crashes: 0,
+            respawns: 0,
+            reregistered: 0,
+            retired_rebuilds: Default::default(),
+            retired_elastic: (0, 0, 0),
+            chaos_countdown,
+        })
+    }
+
+    /// One request/reply round trip against shard `k`. Any failure —
+    /// down shard, broken pipe, stream error, timeout — comes back as a
+    /// description for the crash path.
+    fn call(&mut self, k: usize, req: &Json) -> Result<Json, String> {
+        let timeout = Duration::from_millis(self.cfg.shard_timeout_ms.max(1));
+        let Some(shard) = self.shards[k].as_mut() else {
+            return Err(format!("shard {k} is down"));
+        };
+        if let Err(e) = protocol::write_frame(&mut shard.stdin, req) {
+            return Err(format!("shard {k} write failed: {e}"));
+        }
+        match shard.rx.recv_timeout(timeout) {
+            Ok(Ok(frame)) => Ok(frame),
+            Ok(Err(e)) => Err(format!("shard {k} stream error: {e}")),
+            Err(RecvTimeoutError::Timeout) => Err(format!(
+                "shard {k} unresponsive after {}ms",
+                timeout.as_millis()
+            )),
+            Err(RecvTimeoutError::Disconnected) => Err(format!("shard {k} exited")),
+        }
+    }
+
+    /// Kill + retire the dead worker, respawn it, and re-register its
+    /// share of the roster. Counts every step for the metrics snapshot.
+    fn crash(&mut self, k: usize, why: &str) {
+        eprintln!("warning: shard {k} failed ({why}); respawning");
+        self.crashes += 1;
+        self.retire(k);
+        match spawn_shard(&self.cfg, k) {
+            Ok(s) => {
+                self.shards[k] = Some(s);
+                self.respawns += 1;
+                self.reregister(k);
+            }
+            Err(e) => eprintln!("warning: shard {k} respawn failed: {e}"),
+        }
+    }
+
+    /// Fold the dead generation's last-seen counters into the running
+    /// totals and drop the process.
+    fn retire(&mut self, k: usize) {
+        if let Some(mut s) = self.shards[k].take() {
+            let _ = s.child.kill();
+            let _ = s.child.wait();
+            self.retired_rebuilds = self.retired_rebuilds + s.last_rebuilds;
+            self.retired_elastic.0 += s.last_elastic.0;
+            self.retired_elastic.1 += s.last_elastic.1;
+            self.retired_elastic.2 += s.last_elastic.2;
+        }
+    }
+
+    /// Replay shard `k`'s roster into a fresh worker. With a configured
+    /// analysis cache the shard's subdirectory still holds the analyses,
+    /// so this is a warm load — zero coarsening/placement passes.
+    fn reregister(&mut self, k: usize) {
+        let ids: Vec<String> = self
+            .roster
+            .iter()
+            .filter(|(_, e)| e.shard == k)
+            .map(|(id, _)| id.clone())
+            .collect();
+        for id in ids {
+            let (m, plan) = {
+                let e = &self.roster[&id];
+                (Arc::clone(&e.matrix), e.plan.clone())
+            };
+            let req = protocol::register_req("register", &id, &m, &plan);
+            match self.call(k, &req) {
+                Ok(resp) if protocol::is_ok(&resp) => {
+                    if let Ok((_, rebuilds)) = protocol::register_from_response(&resp) {
+                        if let Some(s) = self.shards[k].as_mut() {
+                            s.last_rebuilds = rebuilds;
+                        }
+                    }
+                    self.reregistered += 1;
+                }
+                Ok(resp) => eprintln!(
+                    "warning: re-registering '{id}' on shard {k}: {}",
+                    protocol::response_error(&resp)
+                ),
+                Err(why) => {
+                    // The freshly respawned worker died too; give up on
+                    // this shard instead of recursing into crash().
+                    eprintln!("warning: shard {k} died re-registering '{id}' ({why})");
+                    self.crashes += 1;
+                    self.retire(k);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Shared call path: round trip, decode the ok flag, run the crash
+    /// path on transport failure.
+    fn request(&mut self, k: usize, req: &Json, what: &str) -> Result<Json, ServiceError> {
+        match self.call(k, req) {
+            Ok(resp) if protocol::is_ok(&resp) => Ok(resp),
+            Ok(resp) => Err(protocol::response_error(&resp)),
+            Err(why) => {
+                self.crash(k, &why);
+                Err(ServiceError::Backend(format!("{what}: {why}")))
+            }
+        }
+    }
+}
+
+impl Executor for ShardPoolExecutor {
+    fn register(
+        &mut self,
+        id: &str,
+        m: Csr,
+        spec: &PlanSpec,
+    ) -> Result<RegisterOutcome, ServiceError> {
+        let k = rendezvous::route(Fingerprint::of(&m), self.nshards);
+        let plan = spec.as_str().to_string();
+        let m = Arc::new(m);
+        let req = protocol::register_req("register", id, &m, &plan);
+        let resp = self.request(k, &req, "register")?;
+        let (out, rebuilds) =
+            protocol::register_from_response(&resp).map_err(ServiceError::Backend)?;
+        if let Some(s) = self.shards[k].as_mut() {
+            s.last_rebuilds = rebuilds;
+        }
+        self.roster.insert(
+            id.to_string(),
+            RosterEntry {
+                matrix: m,
+                plan,
+                shard: k,
+            },
+        );
+        Ok(out)
+    }
+
+    fn update_values(&mut self, id: &str, m: Csr) -> Result<RegisterOutcome, ServiceError> {
+        let Some(k) = self.roster.get(id).map(|e| e.shard) else {
+            return Err(ServiceError::NotRegistered(id.to_string()));
+        };
+        let m = Arc::new(m);
+        let req = protocol::register_req("update", id, &m, "");
+        let resp = self.request(k, &req, "update_values")?;
+        let (out, rebuilds) =
+            protocol::register_from_response(&resp).map_err(ServiceError::Backend)?;
+        if let Some(s) = self.shards[k].as_mut() {
+            s.last_rebuilds = rebuilds;
+        }
+        // A later crash must re-register the *refreshed* numerics.
+        if let Some(e) = self.roster.get_mut(id) {
+            e.matrix = m;
+        }
+        Ok(out)
+    }
+
+    fn solve_block(&mut self, id: &str, rhs: &[Vec<f64>]) -> Result<SolveOutcome, ServiceError> {
+        let Some(k) = self.roster.get(id).map(|e| e.shard) else {
+            return Err(ServiceError::NotRegistered(id.to_string()));
+        };
+        // Deterministic fault injection for tests and the CI chaos
+        // rerun: kill the routed worker right before dispatch.
+        if let Some(n) = self.chaos_countdown {
+            if n <= 1 {
+                self.chaos_countdown = None;
+                eprintln!("warning: chaos hook killing shard {k}");
+                if let Some(s) = self.shards[k].as_mut() {
+                    let _ = s.child.kill();
+                }
+            } else {
+                self.chaos_countdown = Some(n - 1);
+            }
+        }
+        let req = protocol::solve_req(id, rhs);
+        let resp = self.request(k, &req, "solve")?;
+        protocol::solve_from_response(&resp).map_err(ServiceError::Backend)
+    }
+
+    fn gauges(&mut self) -> ExecGauges {
+        let mut g = ExecGauges::default();
+        for k in 0..self.nshards {
+            if self.shards[k].is_none() {
+                continue;
+            }
+            match self.call(k, &protocol::gauges_req()) {
+                Ok(resp) if protocol::is_ok(&resp) => {
+                    match protocol::gauges_from_response(&resp) {
+                        Ok(sg) => {
+                            g.sched_blocks += sg.sched_blocks;
+                            g.sched_cut += sg.sched_cut;
+                            if let Some(s) = self.shards[k].as_mut() {
+                                s.last_rebuilds = sg.rebuilds;
+                                s.last_elastic =
+                                    (sg.elastic_waits, sg.elastic_ooo, sg.elastic_steals);
+                            }
+                        }
+                        Err(e) => eprintln!("warning: shard {k} gauges: {e}"),
+                    }
+                }
+                Ok(resp) => eprintln!(
+                    "warning: shard {k} gauges: {}",
+                    protocol::response_error(&resp)
+                ),
+                Err(why) => self.crash(k, &why),
+            }
+        }
+        g.rebuilds = self.retired_rebuilds;
+        let (mut w, mut o, mut st) = self.retired_elastic;
+        for s in self.shards.iter().flatten() {
+            g.rebuilds = g.rebuilds + s.last_rebuilds;
+            w += s.last_elastic.0;
+            o += s.last_elastic.1;
+            st += s.last_elastic.2;
+        }
+        g.elastic_waits = w;
+        g.elastic_ooo = o;
+        g.elastic_steals = st;
+        g.shard_crashes = self.crashes;
+        g.shard_respawns = self.respawns;
+        g.shard_reregistered = self.reregistered;
+        g
+    }
+
+    fn shutdown(&mut self) {
+        for k in 0..self.nshards {
+            if let Some(shard) = self.shards[k].as_mut() {
+                // Best effort: ask politely, then reap. The worker exits
+                // on shutdown or when its stdin closes.
+                let _ = protocol::write_frame(&mut shard.stdin, &protocol::shutdown_req());
+            }
+            if let Some(mut s) = self.shards[k].take() {
+                let _ = s.child.kill();
+                let _ = s.child.wait();
+            }
+        }
+    }
+}
+
+impl Drop for ShardPoolExecutor {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Launch the hidden worker subcommand with the slice of the parent's
+/// configuration a shard needs, giving it per-shard cache directories so
+/// shards share nothing at runtime.
+fn spawn_shard(cfg: &Config, k: usize) -> std::io::Result<Shard> {
+    let bin = if cfg.shard_worker_bin.is_empty() {
+        std::env::current_exe()?
+    } else {
+        std::path::PathBuf::from(&cfg.shard_worker_bin)
+    };
+    let mut cmd = Command::new(bin);
+    cmd.arg("shard-worker")
+        .arg("--workers")
+        .arg(cfg.workers.to_string())
+        .arg("--plan")
+        .arg(cfg.plan.as_str())
+        .arg("--seed")
+        .arg(cfg.seed.to_string())
+        .arg("--use-xla")
+        .arg(if cfg.use_xla { "true" } else { "false" })
+        .arg("--sched-block-target")
+        .arg(cfg.sched_block_target.to_string())
+        .arg("--sched-stale-window")
+        .arg(cfg.sched_stale_window.to_string())
+        .arg("--tuner-top-k")
+        .arg(cfg.tuner_top_k.to_string())
+        .arg("--tuner-race-solves")
+        .arg(cfg.tuner_race_solves.to_string())
+        .arg("--tuner-cache-ttl")
+        .arg(cfg.tuner_cache_ttl.to_string());
+    if !cfg.artifacts_dir.is_empty() {
+        cmd.arg("--artifacts-dir").arg(&cfg.artifacts_dir);
+    }
+    if !cfg.tuner_cache.is_empty() {
+        cmd.arg("--tuner-cache")
+            .arg(format!("{}/shard-{k}", cfg.tuner_cache));
+    }
+    if !cfg.analysis_cache.is_empty() {
+        cmd.arg("--analysis-cache")
+            .arg(format!("{}/shard-{k}", cfg.analysis_cache))
+            .arg("--analysis-cache-cap")
+            .arg(cfg.analysis_cache_cap.to_string())
+            .arg("--analysis-cache-ttl")
+            .arg(cfg.analysis_cache_ttl.to_string());
+    }
+    let mut child = cmd
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()?;
+    let stdin = child.stdin.take().expect("piped stdin");
+    let stdout = child.stdout.take().expect("piped stdout");
+    let (tx, rx) = mpsc::channel();
+    std::thread::Builder::new()
+        .name(format!("shard-{k}-reader"))
+        .spawn(move || {
+            let mut r = BufReader::new(stdout);
+            loop {
+                match protocol::read_frame(&mut r) {
+                    Ok(Some(frame)) => {
+                        if tx.send(Ok(frame)).is_err() {
+                            return;
+                        }
+                    }
+                    // Clean EOF: drop the sender so recv sees Disconnected.
+                    Ok(None) => return,
+                    Err(e) => {
+                        let _ = tx.send(Err(e));
+                        return;
+                    }
+                }
+            }
+        })?;
+    Ok(Shard {
+        child,
+        stdin,
+        rx,
+        last_rebuilds: Default::default(),
+        last_elastic: (0, 0, 0),
+    })
+}

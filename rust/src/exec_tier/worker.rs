@@ -1,0 +1,183 @@
+//! The shard-worker side of the protocol: one [`InProcessExecutor`]
+//! served over stdin/stdout frames. This is the entire body of the
+//! hidden `sptrsv shard-worker` subcommand.
+//!
+//! The loop is generic over `Read`/`Write`, so a full worker session —
+//! register, solve, error paths, gauges, shutdown — unit-tests over
+//! in-memory buffers without spawning a process.
+//!
+//! Nothing here may print to stdout: that stream carries frames. All
+//! diagnostics go to stderr (inherited from the supervisor).
+
+use std::io::{self, BufReader, BufWriter, Read, Write};
+
+use crate::config::Config;
+use crate::error::ServiceError;
+use crate::transform::PlanSpec;
+use crate::util::json::Json;
+
+use super::inprocess::InProcessExecutor;
+use super::protocol;
+use super::Executor;
+
+/// Serve frames on this process's stdin/stdout until shutdown or EOF
+/// (the supervisor closing our stdin is a normal exit).
+pub fn serve(cfg: Config) -> io::Result<()> {
+    let mut exec = InProcessExecutor::new(cfg);
+    let stdin = io::stdin();
+    let stdout = io::stdout();
+    let mut r = BufReader::new(stdin.lock());
+    let mut w = BufWriter::new(stdout.lock());
+    run_loop(&mut exec, &mut r, &mut w)
+}
+
+/// One worker session: read a frame, apply it to the executor, answer.
+pub fn run_loop<R: Read, W: Write>(
+    exec: &mut InProcessExecutor,
+    r: &mut R,
+    w: &mut W,
+) -> io::Result<()> {
+    loop {
+        let Some(req) = protocol::read_frame(r)? else {
+            return Ok(());
+        };
+        let op = req.get("op").and_then(Json::as_str).unwrap_or("");
+        let resp = match op {
+            "register" | "update" => handle_register(exec, &req, op),
+            "solve" => handle_solve(exec, &req),
+            "gauges" => protocol::gauges_response(&exec.gauges()),
+            "shutdown" => {
+                protocol::write_frame(w, &protocol::ok_response())?;
+                return Ok(());
+            }
+            other => invalid(format!("unknown op '{other}'")),
+        };
+        protocol::write_frame(w, &resp)?;
+    }
+}
+
+fn invalid(msg: String) -> Json {
+    protocol::err_response(&ServiceError::InvalidRequest(msg))
+}
+
+fn handle_register(exec: &mut InProcessExecutor, req: &Json, op: &str) -> Json {
+    let Some(id) = req.get("id").and_then(Json::as_str) else {
+        return invalid(format!("{op} without id"));
+    };
+    let m = match req.get("matrix") {
+        Some(j) => match protocol::csr_from_json(j) {
+            Ok(m) => m,
+            Err(e) => return invalid(format!("{op} '{id}': {e}")),
+        },
+        None => return invalid(format!("{op} '{id}' without matrix")),
+    };
+    let res = if op == "register" {
+        let plan = req.get("plan").and_then(Json::as_str).unwrap_or("");
+        match PlanSpec::parse(plan) {
+            Ok(spec) => exec.register(id, m, &spec),
+            Err(e) => return invalid(format!("register '{id}': {e}")),
+        }
+    } else {
+        exec.update_values(id, m)
+    };
+    match res {
+        Ok(out) => protocol::register_response(&out, exec.rebuild_counters()),
+        Err(e) => protocol::err_response(&e),
+    }
+}
+
+fn handle_solve(exec: &mut InProcessExecutor, req: &Json) -> Json {
+    let Some(id) = req.get("id").and_then(Json::as_str) else {
+        return invalid("solve without id".to_string());
+    };
+    let rhs: Option<Vec<Vec<f64>>> = req.get("rhs").and_then(Json::as_arr).and_then(|rows| {
+        rows.iter()
+            .map(|row| protocol::f64_vec(Some(row)))
+            .collect::<Option<Vec<_>>>()
+    });
+    let Some(rhs) = rhs else {
+        return invalid(format!("solve '{id}' with malformed rhs"));
+    };
+    match exec.solve_block(id, &rhs) {
+        Ok(out) => protocol::solve_response(&out),
+        Err(e) => protocol::err_response(&e),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate;
+    use std::io::Cursor;
+
+    #[test]
+    fn worker_session_over_in_memory_buffers() {
+        let m = generate::random_lower(60, 2, 0.8, &Default::default());
+        let b = vec![1.0; 60];
+        let mut reqs = Vec::new();
+        for frame in [
+            protocol::register_req("register", "a", &m, "avgcost"),
+            protocol::solve_req("a", &[b.clone(), b.clone()]),
+            protocol::solve_req("ghost", &[b.clone()]),
+            Json::obj(vec![("op", Json::Str("launder".into()))]),
+            protocol::gauges_req(),
+            protocol::shutdown_req(),
+        ] {
+            protocol::write_frame(&mut reqs, &frame).unwrap();
+        }
+
+        let mut exec = InProcessExecutor::new(Config {
+            workers: 1,
+            use_xla: false,
+            ..Default::default()
+        });
+        let mut out = Vec::new();
+        run_loop(&mut exec, &mut Cursor::new(reqs), &mut out).unwrap();
+
+        let mut r = Cursor::new(out);
+        let mut next = || protocol::read_frame(&mut r).unwrap();
+
+        let reg = next().expect("register response");
+        assert!(protocol::is_ok(&reg));
+        let (outc, rebuilds) = protocol::register_from_response(&reg).unwrap();
+        assert_eq!(outc.nrows, 60);
+        assert_eq!(outc.info.plan, "avgcost");
+        assert_eq!(rebuilds.rewrite_passes, 1);
+
+        let sol = next().expect("solve response");
+        let sol = protocol::solve_from_response(&sol).unwrap();
+        assert_eq!(sol.xs.len(), 2);
+        assert!(m.residual_inf(&sol.xs[0], &b) < 1e-9);
+
+        let ghost = next().expect("error response");
+        assert!(matches!(
+            protocol::response_error(&ghost),
+            ServiceError::NotRegistered(id) if id == "ghost"
+        ));
+
+        let laundered = next().expect("unknown-op response");
+        assert!(matches!(
+            protocol::response_error(&laundered),
+            ServiceError::InvalidRequest(_)
+        ));
+
+        let gauges = next().expect("gauges response");
+        let g = protocol::gauges_from_response(&gauges).unwrap();
+        assert_eq!(g.rebuilds.rewrite_passes, 1);
+
+        assert!(protocol::is_ok(&next().expect("shutdown ack")));
+        assert_eq!(next(), None, "loop ended at shutdown");
+    }
+
+    #[test]
+    fn clean_eof_ends_the_loop() {
+        let mut exec = InProcessExecutor::new(Config {
+            workers: 1,
+            use_xla: false,
+            ..Default::default()
+        });
+        let mut out = Vec::new();
+        run_loop(&mut exec, &mut Cursor::new(Vec::new()), &mut out).unwrap();
+        assert!(out.is_empty());
+    }
+}

@@ -193,10 +193,48 @@
 //! `ServiceError::Overloaded` instead of growing an unbounded backlog —
 //! and [`coordinator::RegisterOptions::max_pending`] caps one matrix's
 //! queue on top of the global cap, with rejections charged per matrix in
-//! the metrics. The snapshot reports rejections (global and per-matrix),
+//! the metrics and the overflow resolved by the matrix's
+//! [`coordinator::ShedPolicy`] (`RejectNewest` bounces the latecomer;
+//! `DropOldest` sheds queue heads so the freshest work wins). Tenants are
+//! first class: [`coordinator::RegisterOptions::tenant`] names the
+//! account a matrix's requests are charged to (overridable per request
+//! via [`coordinator::SolveOptions::tenant`]), and the
+//! `tenant_max_pending` config key caps each tenant's queued right-hand
+//! sides across all matrices, with quota rejections reported per tenant.
+//! The snapshot reports rejections (global, per-matrix and per-tenant),
 //! cancellations, deadline misses, per-lane queue depth, value
 //! refreshes, analysis-cache hits and the cumulative structural-pass
 //! counters. See `examples/serve_v2.rs` for the full tour.
+//!
+//! ## Sharded serving
+//!
+//! The service loop itself never touches a prepared analysis: everything
+//! below the batcher sits behind the [`exec_tier::Executor`] trait, and
+//! the `executor` config key picks the tier.
+//!
+//! * `executor = inprocess` (default) — [`exec_tier::InProcessExecutor`],
+//!   the single-process pipeline exactly as before.
+//! * `executor = sharded:N` — [`exec_tier::ShardPoolExecutor`] spawns N
+//!   child worker processes (the hidden `sptrsv shard-worker`
+//!   subcommand; `shard_worker_bin` overrides the binary, defaulting to
+//!   the current executable) speaking a length-prefixed JSON protocol
+//!   over stdin/stdout. Matrices are routed to shards by structural
+//!   fingerprint with **rendezvous hashing**, so changing N moves the
+//!   minimal set of matrices; each shard keeps shared-nothing tuner and
+//!   analysis caches under `<cache>/shard-K`.
+//!
+//! Fault containment is the point of the tier: one matrix's crash
+//! (a poisoned solve, an OOM kill) takes down one shard, not the
+//! service. A worker that dies or stops answering within
+//! `shard_timeout_ms` is killed and respawned, its in-flight requests
+//! resolve to `ServiceError::Backend` (tickets never hang), and its
+//! roster re-registers on the fresh worker — warm from the shard's
+//! analysis cache when one is configured, so recovery costs zero
+//! coarsening or placement passes. The metrics snapshot carries
+//! `shard_crashes` / `shard_respawns` / `shard_reregistered`, and the
+//! `chaos_kill_shard_after` config key kills a worker on purpose after
+//! that many solve dispatches for drills. A pool that fails to start
+//! degrades to the in-process tier with a warning.
 //!
 //! Config keys (`Config` / flat `key = value` file / CLI `--key value`):
 //! `workers`, `plan` (any `SolvePlan::parse` name — the `rewrite+exec`
@@ -209,6 +247,12 @@
 //! and placement; "" = disabled), `tuner_top_k`, `tuner_race_solves`,
 //! `tuner_cache_ttl` (seconds before a spilled plan expires, 0 = never),
 //! `sched_block_target`, `sched_stale_window` (see Scheduling below),
+//! `analysis_cache_cap` and `analysis_cache_ttl` (LRU entry cap and
+//! max age in seconds for the analysis cache, 0 = unbounded/never),
+//! `executor` (`inprocess` or `sharded:N`, see Sharded serving above),
+//! `tenant_max_pending` (per-tenant admission quota, 0 = unbounded),
+//! `shard_worker_bin`, `shard_timeout_ms` (supervisor reply timeout),
+//! `chaos_kill_shard_after` (fault-injection drill, 0 = off),
 //! `trace_enabled` (record per-solve phase spans, see Observability
 //! below), `bench_out_dir` and `bench_requests` (the `sptrsv bench`
 //! output directory and request-count override).
@@ -345,6 +389,7 @@ pub mod codegen;
 pub mod config;
 pub mod coordinator;
 pub mod error;
+pub mod exec_tier;
 pub mod graph;
 pub mod report;
 pub mod runtime;

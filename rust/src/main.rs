@@ -43,6 +43,9 @@ fn main() {
         "xla" => cmd_xla(&args),
         "serve" => cmd_serve(&args),
         "bench" => cmd_bench(&args),
+        // Hidden: the child process the sharded executor spawns. Speaks
+        // length-prefixed JSON frames on stdin/stdout; not in HELP.
+        "shard-worker" => cmd_shard_worker(&args),
         "" | "help" | "--help" => {
             print!("{}", HELP);
             Ok(())
@@ -83,6 +86,9 @@ USAGE: sptrsv <subcommand> [flags]
   figures   [--scale F] [--out-dir DIR]
   xla       [--artifacts-dir DIR]   # registry check + XLA-vs-native solve
   serve     [--requests N] [--batch-size B] [--max-pending P] [--use-xla]
+            [--executor inprocess|sharded:N]   # process-per-shard serving
+            # with rendezvous routing, per-shard caches and fault
+            # containment (--tenant-max-pending caps each tenant's queue)
             [--analysis-cache DIR]   # persisted analyses: re-registering
             # a known structure skips coarsening + placement
             [--metrics-json FILE]   # also dump the final metrics snapshot
@@ -656,10 +662,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let requests = args.usize_flag("requests", 64)?;
     println!(
         "starting coordinator: workers={} plan={} use_xla={} batch={}/{}us \
-         max_pending={} analysis_cache={}",
+         max_pending={} analysis_cache={} executor={}",
         cfg.workers, cfg.plan, cfg.use_xla, cfg.batch_size, cfg.batch_deadline_us,
         cfg.max_pending,
-        if cfg.analysis_cache.is_empty() { "off" } else { &cfg.analysis_cache }
+        if cfg.analysis_cache.is_empty() { "off" } else { &cfg.analysis_cache },
+        cfg.executor
     );
     let batch_size = cfg.batch_size;
     let svc = Service::start(cfg);
@@ -736,6 +743,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("metrics snapshot written to {path}");
     }
     svc.shutdown();
+    Ok(())
+}
+
+fn cmd_shard_worker(args: &Args) -> Result<()> {
+    let mut cfg = Config::default();
+    if let Some(path) = args.flag("config") {
+        cfg = Config::from_file(Path::new(path))?;
+    }
+    cfg.merge_args(args)?;
+    // stdout belongs to the frame protocol from here on; the supervisor
+    // inherits stderr for diagnostics.
+    sptrsv_gt::exec_tier::worker::serve(cfg).context("shard-worker protocol loop")?;
     Ok(())
 }
 

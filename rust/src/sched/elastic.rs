@@ -10,15 +10,23 @@
 //! lookahead window — the stale-synchronous "elasticity" of Steiner et
 //! al.: useful work fills the stall instead of a spin.
 //!
-//! Safety: every row is written by exactly one block on one worker, and a
-//! block's rows are only read by consumers after its done flag is
-//! published with Release and observed with Acquire. Within a worker,
-//! program order covers same-worker dependencies (which the ready check
-//! also verifies explicitly, so out-of-order lookahead stays correct).
+//! When even the lookahead window is exhausted, the worker *steals*: it
+//! picks the most-loaded peer (largest count of unexecuted blocks) and
+//! executes the first ready block of that peer's ordered list. A
+//! per-block claim flag (compare-exchange) keeps owner and thief from
+//! running the same block; the owner later observes the stolen block's
+//! done flag and skips it. Steals are counted separately from waits.
+//!
+//! Safety: every block is executed by exactly one thread (the claim CAS
+//! winner), and a block's rows are only read by consumers after its done
+//! flag is published with Release and observed with Acquire. Same-worker
+//! dependencies are verified by the explicit ready check (program order
+//! alone no longer covers them once blocks can be stolen).
 //!
 //! Deadlock freedom: worker lists follow the global topological block
 //! order, so the globally earliest unexecuted block is always at its
-//! worker's frontier — and the frontier is always scanned.
+//! worker's frontier — and the frontier is always scanned. Stealing only
+//! adds execution opportunities; it never blocks the frontier scan.
 
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -37,10 +45,14 @@ struct ExecCounters {
     waits: AtomicU64,
     /// blocks executed out of order from the lookahead window
     ooo: AtomicU64,
+    /// blocks executed on behalf of a stalled peer (work stealing)
+    steals: AtomicU64,
     /// waits delta of the most recent solve (per-solve trace attribution)
     last_waits: AtomicU64,
     /// ooo delta of the most recent solve
     last_ooo: AtomicU64,
+    /// steals delta of the most recent solve
+    last_steals: AtomicU64,
 }
 
 /// Executes a [`Schedule`] over a transformed system, reusable across
@@ -54,6 +66,12 @@ pub struct ScheduledSolver {
     pub schedule: Arc<Schedule>,
     pool: Arc<Pool>,
     done: Arc<Vec<AtomicU32>>,
+    /// per-block execution claims: a block runs on whichever thread
+    /// (owner or thief) wins the compare-exchange
+    claim: Arc<Vec<AtomicU32>>,
+    /// per-worker count of not-yet-executed blocks (victim selection for
+    /// work stealing; heuristic, so Relaxed everywhere)
+    remaining: Arc<Vec<AtomicU64>>,
     counters: Arc<ExecCounters>,
     stale_window: usize,
 }
@@ -90,6 +108,16 @@ impl ScheduledSolver {
                 .map(|_| AtomicU32::new(0))
                 .collect::<Vec<_>>(),
         );
+        let claim = Arc::new(
+            (0..schedule.blocks.len())
+                .map(|_| AtomicU32::new(0))
+                .collect::<Vec<_>>(),
+        );
+        let remaining = Arc::new(
+            (0..schedule.nworkers)
+                .map(|_| AtomicU64::new(0))
+                .collect::<Vec<_>>(),
+        );
         ScheduledSolver {
             m,
             t,
@@ -97,11 +125,15 @@ impl ScheduledSolver {
             schedule,
             pool,
             done,
+            claim,
+            remaining,
             counters: Arc::new(ExecCounters {
                 waits: AtomicU64::new(0),
                 ooo: AtomicU64::new(0),
+                steals: AtomicU64::new(0),
                 last_waits: AtomicU64::new(0),
                 last_ooo: AtomicU64::new(0),
+                last_steals: AtomicU64::new(0),
             }),
             stale_window: opts.stale_window(),
         }
@@ -140,6 +172,27 @@ impl ScheduledSolver {
         )
     }
 
+    /// Cumulative blocks executed via work stealing across all solves.
+    pub fn steal_count(&self) -> u64 {
+        self.counters.steals.load(Ordering::Relaxed)
+    }
+
+    /// The steals delta of the most recent solve (see
+    /// [`Self::last_solve_counters`] for the validity window).
+    pub fn last_solve_steals(&self) -> u64 {
+        self.counters.last_steals.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative (waits, out-of-order, steals) counters in one read —
+    /// what the coordinator samples around a dispatch.
+    pub fn elastic_counters(&self) -> (u64, u64, u64) {
+        (
+            self.counters.waits.load(Ordering::Relaxed),
+            self.counters.ooo.load(Ordering::Relaxed),
+            self.counters.steals.load(Ordering::Relaxed),
+        )
+    }
+
     pub fn solve(&self, b: &[f64]) -> Vec<f64> {
         let mut x = vec![0.0; self.m.nrows];
         self.solve_into(b, &mut x);
@@ -175,19 +228,28 @@ impl ScheduledSolver {
             }
             self.counters.last_waits.store(0, Ordering::Relaxed);
             self.counters.last_ooo.store(0, Ordering::Relaxed);
+            self.counters.last_steals.store(0, Ordering::Relaxed);
             return;
         }
-        let (waits_before, ooo_before) = self.wait_counters();
+        let (waits_before, ooo_before, steals_before) = self.elastic_counters();
         // Reset the per-block flags; pool.run's lock publishes the stores
         // to every worker before any block executes.
         for f in self.done.iter() {
             f.store(0, Ordering::Relaxed);
+        }
+        for c in self.claim.iter() {
+            c.store(0, Ordering::Relaxed);
+        }
+        for (w, r) in self.remaining.iter().enumerate() {
+            r.store(self.schedule.worker_lists[w].len() as u64, Ordering::Relaxed);
         }
         let b: Arc<Vec<f64>> = Arc::new(b.to_vec());
         let xs = Arc::new(SharedVec(x.as_mut_ptr(), x.len()));
         let sched = Arc::clone(&self.schedule);
         let plan = Arc::clone(&self.plan);
         let done = Arc::clone(&self.done);
+        let claim = Arc::clone(&self.claim);
+        let remaining = Arc::clone(&self.remaining);
         let counters = Arc::clone(&self.counters);
         let window = self.stale_window;
         self.pool.run(move |id, _nw| {
@@ -196,10 +258,21 @@ impl ScheduledSolver {
             }
             let list = &sched.worker_lists[id];
             let x = unsafe { xs.slice() };
+            // Execute one ready block (claim-exclusive): solve its rows,
+            // publish its done flag and retire it from its owner's
+            // remaining count.
+            let mut execute = |blk: usize| {
+                for &r in &sched.blocks[blk].rows {
+                    plan.solve_row(r as usize, &b, x);
+                }
+                done[blk].store(1, Ordering::Release);
+                remaining[sched.worker_of[blk] as usize].fetch_sub(1, Ordering::Relaxed);
+            };
             let mut executed = vec![false; list.len()];
             let mut next = 0usize; // frontier: first unexecuted position
             let mut local_waits = 0u64;
             let mut local_ooo = 0u64;
+            let mut local_steals = 0u64;
             while next < list.len() {
                 if executed[next] {
                     next += 1;
@@ -212,6 +285,17 @@ impl ScheduledSolver {
                         continue;
                     }
                     let blk = list[k] as usize;
+                    // A thief may have run this block already: observing
+                    // its done flag retires it locally (free progress,
+                    // neither a wait nor an out-of-order execution).
+                    if done[blk].load(Ordering::Acquire) != 0 {
+                        executed[k] = true;
+                        if k == next {
+                            next += 1;
+                        }
+                        progressed = true;
+                        break;
+                    }
                     let ready = sched
                         .preds_of(blk)
                         .iter()
@@ -219,10 +303,16 @@ impl ScheduledSolver {
                     if !ready {
                         continue;
                     }
-                    for &r in &sched.blocks[blk].rows {
-                        plan.solve_row(r as usize, &b, x);
+                    // Claim before executing: a thief may be racing us.
+                    // On a lost race the thief publishes done shortly;
+                    // the next scan retires the block above.
+                    if claim[blk]
+                        .compare_exchange(0, 1, Ordering::Relaxed, Ordering::Relaxed)
+                        .is_err()
+                    {
+                        continue;
                     }
-                    done[blk].store(1, Ordering::Release);
+                    execute(blk);
                     executed[k] = true;
                     if k == next {
                         next += 1;
@@ -231,6 +321,40 @@ impl ScheduledSolver {
                     }
                     progressed = true;
                     break;
+                }
+                if !progressed {
+                    // Lookahead exhausted: steal the first ready block
+                    // from the most-loaded peer's ordered list instead of
+                    // spinning empty-handed.
+                    let victim = (0..sched.nworkers)
+                        .filter(|&w| w != id)
+                        .max_by_key(|&w| remaining[w].load(Ordering::Relaxed))
+                        .filter(|&w| remaining[w].load(Ordering::Relaxed) > 0);
+                    if let Some(v) = victim {
+                        for &vb in &sched.worker_lists[v] {
+                            let blk = vb as usize;
+                            if done[blk].load(Ordering::Acquire) != 0 {
+                                continue;
+                            }
+                            let ready = sched
+                                .preds_of(blk)
+                                .iter()
+                                .all(|&p| done[p as usize].load(Ordering::Acquire) != 0);
+                            if !ready {
+                                continue;
+                            }
+                            if claim[blk]
+                                .compare_exchange(0, 1, Ordering::Relaxed, Ordering::Relaxed)
+                                .is_err()
+                            {
+                                continue;
+                            }
+                            execute(blk);
+                            local_steals += 1;
+                            progressed = true;
+                            break;
+                        }
+                    }
                 }
                 if !progressed {
                     local_waits += 1;
@@ -243,16 +367,22 @@ impl ScheduledSolver {
             if local_ooo > 0 {
                 counters.ooo.fetch_add(local_ooo, Ordering::Relaxed);
             }
+            if local_steals > 0 {
+                counters.steals.fetch_add(local_steals, Ordering::Relaxed);
+            }
         });
         // pool.run is a rendezvous: every worker's fetch_add has landed,
         // so the cumulative delta is exactly this solve's contribution.
-        let (waits_after, ooo_after) = self.wait_counters();
+        let (waits_after, ooo_after, steals_after) = self.elastic_counters();
         self.counters
             .last_waits
             .store(waits_after - waits_before, Ordering::Relaxed);
         self.counters
             .last_ooo
             .store(ooo_after - ooo_before, Ordering::Relaxed);
+        self.counters
+            .last_steals
+            .store(steals_after - steals_before, Ordering::Relaxed);
     }
 }
 
@@ -359,10 +489,43 @@ mod tests {
         // Counters only ever grow, and the per-solve delta accounts for
         // exactly the growth of the last solve.
         let (w1, o1) = s.wait_counters();
+        let t1 = s.steal_count();
         s.solve(&b);
         let (w2, o2) = s.wait_counters();
-        assert!(w2 >= w1 && o2 >= o1);
+        let t2 = s.steal_count();
+        assert!(w2 >= w1 && o2 >= o1 && t2 >= t1);
         assert_eq!(s.last_solve_counters(), (w2 - w1, o2 - o1));
+        assert_eq!(s.last_solve_steals(), t2 - t1);
+        assert_eq!(s.elastic_counters(), (w2, o2, t2));
+    }
+
+    #[test]
+    fn stealing_path_preserves_correctness_and_accounting() {
+        // A zero-width lookahead window exhausts instantly whenever the
+        // frontier stalls, so every stall takes the steal path first.
+        // Results must stay exact (stealing changes who computes a row,
+        // never its arithmetic) and the steal counter must account its
+        // per-solve delta like waits/ooo do.
+        let m = generate::lung2_like(&generate::GenOptions::with_scale(0.05));
+        let t = Rewrite::None.apply(&m);
+        let mut rng = Rng::new(21);
+        let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        let x_ref = crate::solver::serial::solve(&m, &b);
+        let s = ScheduledSolver::from_parts(
+            m,
+            t,
+            4,
+            &SchedOptions {
+                stale_window: Some(0),
+                ..Default::default()
+            },
+        );
+        for _ in 0..3 {
+            let before = s.steal_count();
+            let x = s.solve(&b);
+            assert_allclose(&x, &x_ref, 1e-9, 1e-11).unwrap();
+            assert_eq!(s.last_solve_steals(), s.steal_count() - before);
+        }
     }
 
     #[test]

@@ -104,6 +104,8 @@ pub struct PhaseTotals {
     pub elastic_waits: u64,
     /// elastic out-of-order (lookahead) block executions
     pub elastic_ooo: u64,
+    /// elastic blocks executed via work stealing
+    pub elastic_steals: u64,
 }
 
 impl PhaseTotals {
@@ -141,6 +143,7 @@ impl PhaseTotals {
         pairs.push(("spans", Json::Num(self.spans as f64)));
         pairs.push(("elastic_waits", Json::Num(self.elastic_waits as f64)));
         pairs.push(("elastic_ooo", Json::Num(self.elastic_ooo as f64)));
+        pairs.push(("elastic_steals", Json::Num(self.elastic_steals as f64)));
         Json::obj(pairs)
     }
 }
@@ -158,6 +161,7 @@ impl std::ops::Add for PhaseTotals {
             spans: self.spans + o.spans,
             elastic_waits: self.elastic_waits + o.elastic_waits,
             elastic_ooo: self.elastic_ooo + o.elastic_ooo,
+            elastic_steals: self.elastic_steals + o.elastic_steals,
         }
     }
 }
@@ -275,16 +279,18 @@ impl Tracer {
         }
     }
 
-    /// Attribute an elastic execution's stall/lookahead counter deltas to
-    /// `matrix` (counts, not time — they ride the aggregates directly).
-    pub fn record_elastic(&self, matrix: &str, waits: u64, ooo: u64) {
-        if !self.enabled() || (waits == 0 && ooo == 0) {
+    /// Attribute an elastic execution's stall/lookahead/steal counter
+    /// deltas to `matrix` (counts, not time — they ride the aggregates
+    /// directly).
+    pub fn record_elastic(&self, matrix: &str, waits: u64, ooo: u64, steals: u64) {
+        if !self.enabled() || (waits == 0 && ooo == 0 && steals == 0) {
             return;
         }
         let mut ring = self.ring.lock().unwrap_or_else(|p| p.into_inner());
         let agg = ring.aggregates.entry(matrix.to_string()).or_default();
         agg.elastic_waits += waits;
         agg.elastic_ooo += ooo;
+        agg.elastic_steals += steals;
     }
 
     /// Fold buffered spans into the aggregates. The service calls this
@@ -320,7 +326,7 @@ mod tests {
     fn disabled_tracer_records_nothing() {
         let t = Tracer::new(false, 8);
         t.record("a", Phase::Execute, Duration::from_micros(10));
-        t.record_elastic("a", 5, 2);
+        t.record_elastic("a", 5, 2, 1);
         t.record_phases(
             "a",
             PhaseTimes {
@@ -338,7 +344,7 @@ mod tests {
         t.record("a", Phase::Wait, Duration::from_micros(7));
         t.record("a", Phase::Execute, Duration::from_micros(100));
         t.record("b", Phase::Execute, Duration::from_micros(40));
-        t.record_elastic("b", 3, 1);
+        t.record_elastic("b", 3, 1, 2);
         let r = t.report();
         let a = r.get("a").unwrap();
         assert_eq!(a.wait_us, 12);
@@ -347,7 +353,7 @@ mod tests {
         assert_eq!(a.elastic_waits, 0);
         let b = r.get("b").unwrap();
         assert_eq!(b.execute_us, 40);
-        assert_eq!((b.elastic_waits, b.elastic_ooo), (3, 1));
+        assert_eq!((b.elastic_waits, b.elastic_ooo, b.elastic_steals), (3, 1, 2));
         // The sum covers both matrices.
         assert_eq!(r.totals().execute_us, 140);
         assert_eq!(r.totals().spans, 4);
@@ -402,7 +408,7 @@ mod tests {
                         t.record(&id, Phase::Execute, Duration::from_micros(w + 1));
                         t.record(&id, Phase::Wait, Duration::from_micros(1));
                     }
-                    t.record_elastic(&id, w, 2 * w);
+                    t.record_elastic(&id, w, 2 * w, 3 * w);
                 })
             })
             .collect();
@@ -416,7 +422,10 @@ mod tests {
             assert_eq!(m.execute_us, 200 * (w + 1));
             assert_eq!(m.wait_us, 200);
             assert_eq!(m.spans, 400);
-            assert_eq!((m.elastic_waits, m.elastic_ooo), (w, 2 * w));
+            assert_eq!(
+                (m.elastic_waits, m.elastic_ooo, m.elastic_steals),
+                (w, 2 * w, 3 * w)
+            );
         }
         assert_eq!(r.totals().spans, 1600);
     }

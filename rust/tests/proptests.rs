@@ -524,3 +524,48 @@ fn prop_analysis_save_load_roundtrip_deterministic() {
         Ok(())
     });
 }
+
+/// Rendezvous routing stays put under shard-count changes of one: adding
+/// a shard only pulls keys onto the newcomer, removing the last shard
+/// only evicts its own keys, and every route is a pure function of
+/// `(fingerprint, nshards)`.
+#[test]
+fn prop_rendezvous_routing_stable_under_pool_resize() {
+    use sptrsv_gt::exec_tier::rendezvous::route;
+    use sptrsv_gt::tuner::Fingerprint;
+
+    check("rendezvous-resize-stability", 200, |rng, _case| {
+        let fp = Fingerprint(rng.next_u64());
+        let n = 1 + rng.below(15);
+        let home = route(fp, n);
+        if home >= n {
+            return Err(format!("{fp:?}: route {home} out of range for {n}"));
+        }
+        if route(fp, n) != home {
+            return Err(format!("{fp:?}: route not deterministic at {n}"));
+        }
+        // Grow by one: either unmoved, or moved onto the new shard `n`.
+        let grown = route(fp, n + 1);
+        if grown != home && grown != n {
+            return Err(format!(
+                "{fp:?}: grow {n}->{} moved {home} -> {grown} (not the new shard)",
+                n + 1
+            ));
+        }
+        // Shrink by one (when possible): survivors keep their home, and
+        // only keys that lived on the removed top shard relocate.
+        if n > 1 {
+            let shrunk = route(fp, n - 1);
+            if home < n - 1 && shrunk != home {
+                return Err(format!(
+                    "{fp:?}: shrink {n}->{} moved a surviving key {home} -> {shrunk}",
+                    n - 1
+                ));
+            }
+            if shrunk >= n - 1 {
+                return Err(format!("{fp:?}: shrink route {shrunk} out of range"));
+            }
+        }
+        Ok(())
+    });
+}

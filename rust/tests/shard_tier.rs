@@ -1,0 +1,159 @@
+//! Integration tests for the sharded executor tier: real `shard-worker`
+//! child processes (the test binary's own `sptrsv` build, via
+//! `CARGO_BIN_EXE_sptrsv`), driven through the public `Service` API.
+//!
+//! The failure-path tests are the heart: a worker killed mid-serving must
+//! resolve its in-flight tickets with `ServiceError::Backend` (never hang
+//! them), respawn exactly once, and re-register its roster **warm** from
+//! the shard's analysis-cache subdirectory — observable as flat
+//! coarsen/placement counters across the crash.
+
+use std::time::Duration;
+
+use sptrsv_gt::config::Config;
+use sptrsv_gt::coordinator::{Service, SolveOptions};
+use sptrsv_gt::error::ServiceError;
+use sptrsv_gt::sparse::generate::{self, GenOptions};
+use sptrsv_gt::transform::PlanSpec;
+
+/// A config that serves through two real shard worker processes.
+fn sharded_cfg() -> Config {
+    Config {
+        workers: 1,
+        use_xla: false,
+        batch_size: 4,
+        batch_deadline_us: 500,
+        executor: "sharded:2".to_string(),
+        // The integration-test harness does not run inside the sptrsv
+        // binary, so current_exe() would point at the test runner; name
+        // the built CLI explicitly.
+        shard_worker_bin: env!("CARGO_BIN_EXE_sptrsv").to_string(),
+        shard_timeout_ms: 20_000,
+        ..Default::default()
+    }
+}
+
+fn spec(s: &str) -> PlanSpec {
+    PlanSpec::parse(s).unwrap()
+}
+
+#[test]
+fn sharded_pool_serves_multiple_matrices_and_refreshes() {
+    let svc = Service::start(sharded_cfg());
+    let h = svc.handle();
+
+    let a = generate::random_lower(80, 3, 0.8, &Default::default());
+    let b = generate::tridiagonal(50, &Default::default());
+    let ha = h.register("a", a.clone(), spec("avgcost")).unwrap();
+    let hb = h.register("b", b.clone(), spec("none")).unwrap();
+    assert_eq!(ha.backend, "native");
+
+    let rhs_a = vec![1.0; 80];
+    let xa = ha.solve(rhs_a.clone()).unwrap();
+    assert!(a.residual_inf(&xa, &rhs_a) < 1e-9);
+    let rhs_b = vec![2.0; 50];
+    let xb = hb.solve(rhs_b.clone()).unwrap();
+    assert!(b.residual_inf(&xb, &rhs_b) < 1e-9);
+
+    // Same-pattern value refresh crosses the wire and sticks.
+    let mut a2 = a.clone();
+    for v in &mut a2.data {
+        *v *= 1.5;
+    }
+    let info = ha.update_values(a2.clone()).unwrap();
+    assert_eq!(info.source.as_str(), "refreshed");
+    let xa2 = ha.solve(rhs_a.clone()).unwrap();
+    assert!(a2.residual_inf(&xa2, &rhs_a) < 1e-9);
+
+    // Typed errors survive the protocol: unknown id, wrong-length rhs.
+    assert!(matches!(
+        h.solve("ghost", vec![1.0; 80]),
+        Err(ServiceError::NotRegistered(id)) if id == "ghost"
+    ));
+    assert!(matches!(
+        ha.solve(vec![1.0; 3]),
+        Err(ServiceError::InvalidRequest(_))
+    ));
+
+    // A healthy pool reports structural work but zero shard incidents.
+    let snap = h.metrics().unwrap();
+    assert!(snap.rewrite_passes >= 1, "avgcost paid a rewrite pass");
+    assert_eq!(snap.shard_crashes, 0);
+    assert_eq!(snap.shard_respawns, 0);
+    svc.shutdown();
+}
+
+#[test]
+fn killed_worker_resolves_tickets_respawns_once_and_reregisters_warm() {
+    let cache = std::env::temp_dir().join(format!(
+        "sptrsv_shard_chaos_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&cache).ok();
+    let cfg = Config {
+        analysis_cache: cache.to_str().unwrap().to_string(),
+        // Kill the routed worker right before the first solve dispatch.
+        chaos_kill_shard_after: 1,
+        ..sharded_cfg()
+    };
+    let svc = Service::start(cfg);
+    let h = svc.handle();
+
+    let m = generate::lung2_like(&GenOptions::with_scale(0.03));
+    let n = m.nrows;
+    // A scheduled plan pays real coarsening + placement passes, so a cold
+    // re-register after the crash would be visible in the counters.
+    let handle = h.register("m", m.clone(), spec("avgcost+scheduled")).unwrap();
+    let before = h.metrics().unwrap();
+    assert!(before.coarsen_passes >= 1, "fresh analysis coarsened");
+    assert!(before.placement_passes >= 1, "fresh analysis placed");
+
+    // The chaos hook kills the worker before this dispatch; the ticket
+    // must come back as a typed Backend failure, not hang.
+    let t = handle
+        .solve_async(vec![1.0; n], SolveOptions::default())
+        .unwrap();
+    match t.wait_timeout(Duration::from_secs(30)) {
+        Some(Err(ServiceError::Backend(_))) => {}
+        other => panic!("expected Backend failure for the killed shard, got {other:?}"),
+    }
+
+    // The supervisor already respawned and re-registered; the next solve
+    // lands on the fresh worker and succeeds.
+    let rhs = vec![1.0; n];
+    let x = handle.solve(rhs.clone()).unwrap();
+    assert!(m.residual_inf(&x, &rhs) < 1e-9);
+
+    let after = h.metrics().unwrap();
+    assert_eq!(after.shard_crashes, 1, "exactly one crash");
+    assert_eq!(after.shard_respawns, 1, "exactly one respawn");
+    assert_eq!(after.shard_reregistered, 1, "roster of one re-registered");
+    // Warm re-registration from the shard's analysis-cache subdirectory:
+    // recovery paid ZERO additional coarsening or placement passes.
+    assert_eq!(after.coarsen_passes, before.coarsen_passes, "coarsen flat");
+    assert_eq!(
+        after.placement_passes, before.placement_passes,
+        "placement flat"
+    );
+    assert_eq!(after.rewrite_passes, before.rewrite_passes, "rewrite flat");
+
+    svc.shutdown();
+    std::fs::remove_dir_all(&cache).ok();
+}
+
+#[test]
+fn unstartable_pool_degrades_to_in_process_serving() {
+    let cfg = Config {
+        shard_worker_bin: "/nonexistent/sptrsv-worker".to_string(),
+        ..sharded_cfg()
+    };
+    // make_executor warns and falls back; the service still serves.
+    let svc = Service::start(cfg);
+    let h = svc.handle();
+    let m = generate::tridiagonal(40, &Default::default());
+    h.register("t", m.clone(), spec("none")).unwrap();
+    let b = vec![1.0; 40];
+    let x = h.solve("t", b.clone()).unwrap();
+    assert!(m.residual_inf(&x, &b) < 1e-9);
+    svc.shutdown();
+}
