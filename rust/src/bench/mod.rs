@@ -48,7 +48,13 @@ pub use scenario::{MatrixSpec, Scenario};
 ///   object (`crashes` / `respawns` / `reregistered`) reporting the
 ///   sharded executor's fault-containment tallies (all zero under the
 ///   in-process tier).
-pub const BENCH_SCHEMA_VERSION: u64 = 2;
+/// * 3 — new top-level `lane_hist_log2us` object: the raw per-lane log2
+///   latency histogram buckets (`interactive` / `batch`, each an array
+///   of bucket counts where bucket i covers `[2^i, 2^(i+1))` µs), so
+///   trajectories carry the full latency distribution rather than just
+///   three percentiles; the embedded `metrics` snapshot gains
+///   `shard_health` and `lane_hist`.
+pub const BENCH_SCHEMA_VERSION: u64 = 3;
 
 const KIND: &str = "sptrsv-bench";
 
@@ -209,7 +215,9 @@ pub fn run(sc: &Scenario, cfg: &Config) -> Result<BenchOutcome, Error> {
     std::fs::create_dir_all(&out_dir)
         .map_err(|e| Error::Io(format!("create {}: {e}", out_dir.display())))?;
     let path = out_dir.join(format!("BENCH_{}.json", sc.name));
-    std::fs::write(&path, format!("{report}\n"))
+    // Atomic publication: CI and dashboards read this path the moment
+    // the bench exits; they must never observe a torn file.
+    crate::util::fs::write_atomic(&path, &format!("{report}\n"))
         .map_err(|e| Error::Io(format!("write {}: {e}", path.display())))?;
     Ok(BenchOutcome {
         path,
@@ -286,6 +294,25 @@ fn build_report(
                     ]),
                 ),
             ]),
+        ),
+        // Schema 3: the raw per-lane distributions behind the
+        // percentiles above — bucket i counts solves in [2^i, 2^(i+1)) µs.
+        (
+            "lane_hist_log2us",
+            Json::obj(
+                ["interactive", "batch"]
+                    .iter()
+                    .zip(snap.lane_hist.iter())
+                    .map(|(name, hist)| {
+                        (
+                            *name,
+                            Json::Arr(
+                                hist.iter().map(|&c| Json::Num(c as f64)).collect(),
+                            ),
+                        )
+                    })
+                    .collect(),
+            ),
         ),
         (
             "cache",
@@ -431,6 +458,17 @@ mod tests {
         let shards = j.get("shards").unwrap();
         for k in ["crashes", "respawns", "reregistered"] {
             assert_eq!(shards.get(k).and_then(Json::as_f64), Some(0.0), "{k}");
+        }
+        // Schema-3 addition: raw per-lane log2 histograms, whose counts
+        // must agree with the per-lane solve totals.
+        let hist = j.get("lane_hist_log2us").unwrap();
+        for (lane, solves) in [
+            ("interactive", out.snapshot.interactive.solves),
+            ("batch", out.snapshot.batch.solves),
+        ] {
+            let buckets = hist.get(lane).and_then(Json::as_arr).unwrap();
+            let total: f64 = buckets.iter().filter_map(Json::as_f64).sum();
+            assert_eq!(total, solves as f64, "{lane} histogram mass");
         }
         // The replay actually drove solves through both the trace and the
         // metrics: 10 requests, all delivered.

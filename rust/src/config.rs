@@ -78,6 +78,13 @@ pub struct Config {
     /// record per-solve phase spans in the service's tracer (off by
     /// default; `sptrsv bench` forces it on for its report)
     pub trace_enabled: bool,
+    /// append every shaping-relevant request the service sees (register /
+    /// solve / solve_many / update_values / cancel sweeps) to the
+    /// `journal_path` JSONL traffic journal, replayable with
+    /// `sptrsv replay --journal FILE`
+    pub journal_enabled: bool,
+    /// where the traffic journal is appended when `journal_enabled`
+    pub journal_path: String,
     /// directory `sptrsv bench` writes its `BENCH_*.json` files into
     pub bench_out_dir: String,
     /// override the scenario's request count (0 = use the scenario value)
@@ -114,6 +121,8 @@ impl Default for Config {
             shard_timeout_ms: 30_000,
             chaos_kill_shard_after: 0,
             trace_enabled: false,
+            journal_enabled: false,
+            journal_path: "sptrsv-journal.jsonl".to_string(),
             bench_out_dir: "bench-out".to_string(),
             bench_requests: 0,
             extra: BTreeMap::new(),
@@ -185,8 +194,8 @@ impl Config {
                     | "sched-stale-window" | "analysis-cache-cap"
                     | "analysis-cache-ttl" | "executor" | "tenant-max-pending"
                     | "shard-worker-bin" | "shard-timeout-ms"
-                    | "chaos-kill-shard-after" | "trace-enabled" | "bench-out-dir"
-                    | "bench-requests"
+                    | "chaos-kill-shard-after" | "trace-enabled" | "journal-enabled"
+                    | "journal-path" | "bench-out-dir" | "bench-requests"
             ) {
                 self.set(&k.replace('-', "_"), v)?;
             }
@@ -265,6 +274,10 @@ impl Config {
                 self.chaos_kill_shard_after = val.parse().map_err(|_| bad(key, val))?
             }
             "trace_enabled" => self.trace_enabled = matches!(val, "true" | "1" | "yes"),
+            "journal_enabled" => {
+                self.journal_enabled = matches!(val, "true" | "1" | "yes")
+            }
+            "journal_path" => self.journal_path = val.to_string(),
             "bench_out_dir" => self.bench_out_dir = val.to_string(),
             "bench_requests" => {
                 self.bench_requests = val.parse().map_err(|_| bad(key, val))?
@@ -452,6 +465,27 @@ mod tests {
         assert!(!c.trace_enabled);
         assert_eq!(c.bench_out_dir, "out");
         assert_eq!(c.bench_requests, 8);
+    }
+
+    #[test]
+    fn journal_keys_parse_and_merge() {
+        let mut c = Config::default();
+        assert!(!c.journal_enabled, "journaling is off by default");
+        assert_eq!(c.journal_path, "sptrsv-journal.jsonl");
+        c.set("journal_enabled", "true").unwrap();
+        c.set("journal_path", "/tmp/traffic.jsonl").unwrap();
+        assert!(c.journal_enabled);
+        assert_eq!(c.journal_path, "/tmp/traffic.jsonl");
+        let args = Args::parse(
+            [
+                "serve", "--journal-enabled", "false", "--journal-path", "j.jsonl",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        c.merge_args(&args).unwrap();
+        assert!(!c.journal_enabled);
+        assert_eq!(c.journal_path, "j.jsonl");
     }
 
     #[test]

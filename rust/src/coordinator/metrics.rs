@@ -27,6 +27,18 @@ fn lane_idx(lane: Lane) -> usize {
     }
 }
 
+/// Liveness of one shard worker process, as seen by the supervisor: set
+/// from the executor's gauges at snapshot time. `last_frame_age_ms` is
+/// the time since the worker last answered a frame; `inflight` counts
+/// frames written but not yet answered (a worker wedged mid-solve shows
+/// a growing age with `inflight > 0`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardHealth {
+    pub up: bool,
+    pub last_frame_age_ms: u64,
+    pub inflight: u64,
+}
+
 pub struct Metrics {
     pub solves: AtomicU64,
     pub batched_solves: AtomicU64,
@@ -85,6 +97,9 @@ pub struct Metrics {
     shard_crashes: AtomicU64,
     /// gauge: matrices re-registered onto a respawned shard
     shard_reregistered: AtomicU64,
+    /// per-shard worker health, mirrored from the sharded executor at
+    /// snapshot time (empty under the in-process executor)
+    shard_health: Mutex<Vec<ShardHealth>>,
     /// plan name -> times the tuner picked it
     plan_wins: Mutex<BTreeMap<String, u64>>,
     /// matrix id -> admission rejections charged to it (global cap and
@@ -132,6 +147,7 @@ impl Metrics {
             shard_respawns: AtomicU64::new(0),
             shard_crashes: AtomicU64::new(0),
             shard_reregistered: AtomicU64::new(0),
+            shard_health: Mutex::new(Vec::new()),
             plan_wins: Mutex::new(BTreeMap::new()),
             matrix_rejections: Mutex::new(BTreeMap::new()),
             tenant_rejections: Mutex::new(BTreeMap::new()),
@@ -182,6 +198,13 @@ impl Metrics {
         self.shard_respawns.store(respawns, Ordering::Relaxed);
         self.shard_crashes.store(crashes, Ordering::Relaxed);
         self.shard_reregistered.store(reregistered, Ordering::Relaxed);
+    }
+
+    /// Gauge update: per-shard worker liveness (indexed by shard),
+    /// mirrored from the sharded executor at snapshot time. Cleared to
+    /// empty under the in-process executor.
+    pub fn set_shard_health(&self, health: Vec<ShardHealth>) {
+        *self.shard_health.lock().unwrap() = health;
     }
 
     /// A request was refused by its tenant's pending quota. The global
@@ -321,12 +344,14 @@ impl Metrics {
                 .iter()
                 .map(|(k, v)| (k.clone(), *v))
                 .collect(),
+            shard_health: self.shard_health.lock().unwrap().clone(),
             interactive: lane(lane_idx(Lane::Interactive)),
             batch: lane(lane_idx(Lane::Batch)),
             mean_us: combined.mean_us,
             p50_us: combined.p50_us,
             p95_us: combined.p95_us,
             p99_us: combined.p99_us,
+            lane_hist,
         }
     }
 }
@@ -441,6 +466,8 @@ pub struct Snapshot {
     pub rejections_by_matrix: Vec<(String, u64)>,
     /// (tenant, quota rejections charged to it), sorted by tenant
     pub rejections_by_tenant: Vec<(String, u64)>,
+    /// per-shard worker liveness, indexed by shard (empty in-process)
+    pub shard_health: Vec<ShardHealth>,
     /// interactive-lane latency summary
     pub interactive: LaneLatency,
     /// batch-lane latency summary
@@ -451,6 +478,11 @@ pub struct Snapshot {
     pub p50_us: u64,
     pub p95_us: u64,
     pub p99_us: u64,
+    /// raw log2 latency bucket counts per lane, `[interactive, batch]`,
+    /// each `BUCKETS` long — the exact histograms the percentiles above
+    /// were computed from, exported so BENCH trajectories can carry the
+    /// full distribution instead of three pre-cooked quantiles
+    pub lane_hist: Vec<Vec<u64>>,
 }
 
 impl Snapshot {
@@ -511,6 +543,43 @@ impl Snapshot {
             ("plan_wins", counts(&self.plan_wins)),
             ("rejections_by_matrix", counts(&self.rejections_by_matrix)),
             ("rejections_by_tenant", counts(&self.rejections_by_tenant)),
+            (
+                "shard_health",
+                Json::Arr(
+                    self.shard_health
+                        .iter()
+                        .enumerate()
+                        .map(|(i, h)| {
+                            Json::obj(vec![
+                                ("shard", Json::Num(i as f64)),
+                                ("up", Json::Bool(h.up)),
+                                (
+                                    "last_frame_age_ms",
+                                    Json::Num(h.last_frame_age_ms as f64),
+                                ),
+                                ("inflight", Json::Num(h.inflight as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "lane_hist",
+                Json::obj(
+                    ["interactive", "batch"]
+                        .iter()
+                        .zip(self.lane_hist.iter())
+                        .map(|(name, hist)| {
+                            (
+                                *name,
+                                Json::Arr(
+                                    hist.iter().map(|&c| Json::Num(c as f64)).collect(),
+                                ),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
             (
                 "latency_us",
                 Json::obj(vec![
@@ -615,6 +684,20 @@ impl std::fmt::Display for Snapshot {
                 ", shards crashes={} respawns={} reregistered={}",
                 self.shard_crashes, self.shard_respawns, self.shard_reregistered
             )?;
+        }
+        if !self.shard_health.is_empty() {
+            write!(f, ", shard_health[")?;
+            for (i, h) in self.shard_health.iter().enumerate() {
+                if i > 0 {
+                    write!(f, " ")?;
+                }
+                if h.up {
+                    write!(f, "{i}:age={}ms inflight={}", h.last_frame_age_ms, h.inflight)?;
+                } else {
+                    write!(f, "{i}:down")?;
+                }
+            }
+            write!(f, "]")?;
         }
         if self.tuner_cache_hits + self.tuner_cache_misses > 0 {
             write!(
@@ -794,6 +877,69 @@ mod tests {
         // Gauges overwrite.
         m.set_shards(0, 0, 0);
         assert_eq!(m.snapshot().shard_respawns, 0);
+    }
+
+    #[test]
+    fn shard_health_gauges_render_and_serialize() {
+        let m = Metrics::new();
+        assert!(!m.snapshot().to_string().contains("shard_health"));
+        m.set_shard_health(vec![
+            ShardHealth {
+                up: true,
+                last_frame_age_ms: 12,
+                inflight: 1,
+            },
+            ShardHealth {
+                up: false,
+                ..Default::default()
+            },
+        ]);
+        let s = m.snapshot();
+        assert_eq!(s.shard_health.len(), 2);
+        assert!(s.shard_health[0].up);
+        assert!(!s.shard_health[1].up);
+        let text = s.to_string();
+        assert!(
+            text.contains("shard_health[0:age=12ms inflight=1 1:down]"),
+            "{text}"
+        );
+        let j = s.to_json();
+        let arr = match j.get("shard_health").unwrap() {
+            Json::Arr(a) => a,
+            other => panic!("expected array, got {other:?}"),
+        };
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("up"), Some(&Json::Bool(true)));
+        assert_eq!(arr[0].get("inflight").unwrap().as_f64(), Some(1.0));
+        assert_eq!(arr[1].get("up"), Some(&Json::Bool(false)));
+        // Gauges overwrite: clearing empties the rendering again.
+        m.set_shard_health(Vec::new());
+        assert!(m.snapshot().shard_health.is_empty());
+    }
+
+    #[test]
+    fn snapshot_exports_raw_lane_histograms() {
+        let m = Metrics::new();
+        m.record_solve(Duration::from_micros(100), false, Lane::Interactive);
+        m.record_solve(Duration::from_micros(100), false, Lane::Interactive);
+        m.record_solve(Duration::from_micros(3000), true, Lane::Batch);
+        let s = m.snapshot();
+        assert_eq!(s.lane_hist.len(), 2);
+        assert_eq!(s.lane_hist[0].len(), BUCKETS);
+        // 100us lands in bucket 6 (2^6=64 <= 100 < 128), 3000us in
+        // bucket 11 (2048 <= 3000 < 4096).
+        assert_eq!(s.lane_hist[0][6], 2);
+        assert_eq!(s.lane_hist[1][11], 1);
+        assert_eq!(s.lane_hist[0].iter().sum::<u64>(), s.interactive.solves);
+        assert_eq!(s.lane_hist[1].iter().sum::<u64>(), s.batch.solves);
+        let j = s.to_json();
+        let hist = j.get("lane_hist").unwrap();
+        let inter = match hist.get("interactive").unwrap() {
+            Json::Arr(a) => a,
+            other => panic!("expected array, got {other:?}"),
+        };
+        assert_eq!(inter.len(), BUCKETS);
+        assert_eq!(inter[6].as_f64(), Some(2.0));
     }
 
     #[test]

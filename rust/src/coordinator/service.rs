@@ -24,12 +24,13 @@ use std::time::{Duration, Instant};
 
 use crate::config::Config;
 use crate::coordinator::batcher::{Batcher, Lane, Pending};
-use crate::coordinator::metrics::{Metrics, Snapshot};
+use crate::coordinator::metrics::{Metrics, ShardHealth, Snapshot};
 use crate::coordinator::pipeline::AnalysisSource;
 use crate::error::ServiceError;
-use crate::exec_tier::{self, Executor};
+use crate::exec_tier::{self, ExecGauges, Executor};
 use crate::sparse::Csr;
-use crate::trace::{Phase, TraceReport, Tracer, DEFAULT_RING_CAPACITY};
+use crate::telemetry::journal::{Event, Journal};
+use crate::trace::{Phase, PhaseTotals, TraceReport, Tracer, DEFAULT_RING_CAPACITY};
 use crate::transform::PlanSpec;
 
 /// Per-request scheduling options, builder style:
@@ -638,8 +639,13 @@ fn release_tenant(tp: &mut BTreeMap<String, usize>, tenant: &Option<String>, n: 
 fn service_loop(cfg: Config, rx: Receiver<Request>) {
     let max_pending = cfg.max_pending;
     let tenant_cap = cfg.tenant_max_pending;
+    let sharded = cfg.shard_count().is_some();
     let tracer = Tracer::new(cfg.trace_enabled, DEFAULT_RING_CAPACITY);
     let metrics = Arc::new(Metrics::new());
+    // Live-traffic journal (`journal_enabled`): every shaping-relevant
+    // request is appended as one JSONL event, on a bounded writer that
+    // drops rather than ever blocking this loop.
+    let journal = Journal::from_config(&cfg);
     // Where prepared analyses live and solves run: in this process, or
     // routed across a pool of shard worker processes.
     let mut executor = exec_tier::make_executor(&cfg);
@@ -650,6 +656,11 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
     let mut matrices: BTreeMap<String, MatrixMeta> = BTreeMap::new();
     // Queued right-hand sides currently charged to each tenant.
     let mut tenant_pending: BTreeMap<String, usize> = BTreeMap::new();
+    // Per-matrix watermark of worker-side trace totals already folded
+    // into the coordinator tracer — the solve path advances it with each
+    // propagated delta; the gauges path folds only the excess above it
+    // (work whose delta was lost, e.g. a shard that crashed mid-batch).
+    let mut trace_seen: BTreeMap<String, PhaseTotals> = BTreeMap::new();
 
     loop {
         // Wait for work, but never past the oldest batching deadline.
@@ -673,6 +684,7 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                     &metrics,
                     &tracer,
                     &mut tenant_pending,
+                    &mut trace_seen,
                     true,
                 );
                 executor.shutdown();
@@ -685,6 +697,7 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                 reply,
             }) => {
                 let fresh = !matrices.contains_key(&id);
+                let (nrows, nnz) = (matrix.nrows, matrix.nnz());
                 let res = executor.register(&id, *matrix, &opts.plan).map(|out| {
                     if let Some((plan, hit)) = &out.tuned {
                         metrics.record_tuner_choice(plan, *hit);
@@ -721,6 +734,9 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                     meta.shed = opts.shed_policy;
                     out.info
                 });
+                if let (Some(j), Ok(info)) = (&journal, &res) {
+                    j.record(Event::register(&id, nrows, nnz, &info.plan));
+                }
                 let _ = reply.send(res);
             }
             Some(Request::UpdateValues { id, matrix, reply }) => {
@@ -742,6 +758,7 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                             &metrics,
                             &tracer,
                             &mut tenant_pending,
+                            &mut trace_seen,
                         );
                     }
                     let res = executor.update_values(&id, *matrix).map(|out| {
@@ -752,6 +769,9 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                         }
                         out.info
                     });
+                    if let (Some(j), Ok(_)) = (&journal, &res) {
+                        j.record(Event::update(&id));
+                    }
                     let _ = reply.send(res);
                 }
             }
@@ -765,6 +785,19 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                 cancelled,
                 tenant,
             }) => {
+                // Journal the offered load as it arrives (before any
+                // admission decision): replay reproduces what clients
+                // asked for, not what this run happened to admit.
+                if let Some(j) = &journal {
+                    let wait = deadline.map(|d| d.saturating_duration_since(submitted));
+                    j.record(Event::solve(
+                        &id,
+                        rhs.len(),
+                        matches!(lane, Lane::Interactive),
+                        wait.map(|w| w.as_micros() as u64),
+                        tenant.as_deref(),
+                    ));
+                }
                 let pending = batcher.pending();
                 match matrices.get(&id) {
                     None => {
@@ -923,6 +956,9 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                 // shrunken queues. (dispatch() still weeds any cancel
                 // that races past this sweep.)
                 metrics.record_cancel_wakeup();
+                if let Some(j) = &journal {
+                    j.record(Event::cancel());
+                }
                 for q in batcher.sweep(|w: &Waiting| w.cancelled.load(Ordering::Relaxed)) {
                     metrics.record_cancellation();
                     release_tenant(&mut tenant_pending, &q.token.tenant, q.rhs.len());
@@ -950,9 +986,28 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                     g.rebuilds.renumeric_passes,
                 );
                 metrics.set_shards(g.shard_respawns, g.shard_crashes, g.shard_reregistered);
+                metrics.set_shard_health(
+                    g.shard_liveness
+                        .iter()
+                        .map(|l| ShardHealth {
+                            up: l.up,
+                            last_frame_age_ms: l.last_frame_age_ms,
+                            inflight: l.inflight,
+                        })
+                        .collect(),
+                );
+                reconcile_trace(&tracer, &mut trace_seen, &g);
                 let _ = tx.send(metrics.snapshot());
             }
             Some(Request::TraceReport(tx)) => {
+                // Under the sharded executor, pull the workers' cumulative
+                // totals first so execution attributed since the last poll
+                // (including anything whose solve delta was lost to a
+                // crash) lands in this report.
+                if sharded && tracer.enabled() {
+                    let g = executor.gauges();
+                    reconcile_trace(&tracer, &mut trace_seen, &g);
+                }
                 let _ = tx.send(tracer.report());
             }
             None => {} // timeout: fall through to flush
@@ -963,6 +1018,7 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
             &metrics,
             &tracer,
             &mut tenant_pending,
+            &mut trace_seen,
             false,
         );
         // Fold any spans the dispatches just pushed; the ring stays
@@ -984,6 +1040,7 @@ fn flush(
     metrics: &Metrics,
     tracer: &Tracer,
     tenant_pending: &mut BTreeMap<String, usize>,
+    trace_seen: &mut BTreeMap<String, PhaseTotals>,
     force: bool,
 ) {
     loop {
@@ -996,7 +1053,40 @@ fn flush(
             if batch.is_empty() {
                 continue;
             }
-            dispatch(executor, &id, batch, metrics, tracer, tenant_pending);
+            dispatch(
+                executor,
+                &id,
+                batch,
+                metrics,
+                tracer,
+                tenant_pending,
+                trace_seen,
+            );
+        }
+    }
+}
+
+/// Fold the part of the workers' cumulative per-matrix trace totals the
+/// coordinator tracer has not seen yet. The executor's `trace_totals`
+/// are monotone (the supervisor retires a crashed shard's last-polled
+/// totals before respawning), so the excess over the `trace_seen`
+/// watermark is exactly the work whose solve-response delta never
+/// arrived; folding only that excess makes the two propagation channels
+/// — per-solve deltas and cumulative gauges — safe to run together.
+fn reconcile_trace(
+    tracer: &Tracer,
+    trace_seen: &mut BTreeMap<String, PhaseTotals>,
+    g: &ExecGauges,
+) {
+    if !tracer.enabled() {
+        return;
+    }
+    for (id, cum) in &g.trace_totals {
+        let seen = trace_seen.entry(id.clone()).or_default();
+        let missing = cum.saturating_sub(seen);
+        if !missing.is_zero() {
+            tracer.fold_totals(id, missing);
+            *seen = *seen + missing;
         }
     }
 }
@@ -1006,6 +1096,15 @@ fn flush(
 /// path matches), and resolve **every** ticket — an executor failure
 /// (backend error, dead shard) resolves the whole batch `Backend`, it
 /// never leaves a ticket hanging.
+///
+/// Execute-phase attribution depends on where the solve ran. The
+/// in-process executor returns no trace delta and the coordinator's own
+/// bracket around `solve_block` is the measurement. A shard worker
+/// measures execution in its own process and sends the delta back on
+/// the solve response; that delta is folded into the coordinator tracer
+/// (and into `trace_seen`, the per-matrix watermark the gauges
+/// reconciliation subtracts against) **instead of** the bracket, which
+/// over a process boundary would conflate execution with frame I/O.
 fn dispatch(
     executor: &mut dyn Executor,
     id: &str,
@@ -1013,6 +1112,7 @@ fn dispatch(
     metrics: &Metrics,
     tracer: &Tracer,
     tenant_pending: &mut BTreeMap<String, usize>,
+    trace_seen: &mut BTreeMap<String, PhaseTotals>,
 ) {
     // Queued-RHS accounting ends at take: whatever happens below, these
     // right-hand sides no longer occupy tenant quota.
@@ -1059,9 +1159,22 @@ fn dispatch(
                 deliver(q, outs, out.batched, metrics);
             }
             if tracer.enabled() {
-                tracer.record(id, Phase::Execute, exec_start.elapsed());
-                let (w, o, s) = out.elastic;
-                tracer.record_elastic(id, w, o, s);
+                match out.trace {
+                    // Worker-measured delta: fold it verbatim and advance
+                    // the reconciliation watermark so the next gauges poll
+                    // does not fold the same work again.
+                    Some(delta) => {
+                        tracer.fold_totals(id, delta);
+                        let seen = trace_seen.entry(id.to_string()).or_default();
+                        *seen = *seen + delta;
+                    }
+                    // In-process: the coordinator's bracket IS execution.
+                    None => {
+                        tracer.record(id, Phase::Execute, exec_start.elapsed());
+                        let (w, o, s) = out.elastic;
+                        tracer.record_elastic(id, w, o, s);
+                    }
+                }
             }
         }
         Err(e) => {

@@ -130,7 +130,14 @@ impl Executor for InProcessExecutor {
             }
             _ => (0, 0, 0),
         };
-        Ok(SolveOutcome { xs, batched, elastic })
+        // The coordinator brackets in-process execution itself; only
+        // shard workers attach a measured trace delta.
+        Ok(SolveOutcome {
+            xs,
+            batched,
+            elastic,
+            trace: None,
+        })
     }
 
     fn gauges(&mut self) -> ExecGauges {

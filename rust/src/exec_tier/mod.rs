@@ -41,7 +41,7 @@ use crate::config::Config;
 use crate::coordinator::RegisterInfo;
 use crate::error::ServiceError;
 use crate::sparse::Csr;
-use crate::trace::PhaseTimes;
+use crate::trace::{PhaseTimes, PhaseTotals};
 use crate::transform::PlanSpec;
 
 /// What a registration (or value refresh) reports back through the tier:
@@ -72,10 +72,30 @@ pub struct SolveOutcome {
     pub batched: bool,
     /// elastic `(waits, ooo, steals)` deltas attributable to this call
     pub elastic: (u64, u64, u64),
+    /// `Some(delta)` when the execution ran in a shard worker with its
+    /// own tracer: the worker-measured [`PhaseTotals`] for exactly this
+    /// call (Execute time + elastic counters), for the coordinator's
+    /// tracer to fold. `None` for in-process execution, where the
+    /// coordinator brackets the call itself.
+    pub trace: Option<PhaseTotals>,
+}
+
+/// One shard worker's health as the supervisor sees it, surfaced into
+/// the metrics snapshot.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardLiveness {
+    /// shard index (stable across respawns)
+    pub shard: usize,
+    /// false = down and the respawn failed too
+    pub up: bool,
+    /// milliseconds since the last frame this worker generation answered
+    pub last_frame_age_ms: u64,
+    /// frames written to the worker that have not been answered yet
+    pub inflight: u64,
 }
 
 /// Executor-side observability, polled at snapshot time.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct ExecGauges {
     pub sched_blocks: u64,
     pub sched_cut: u64,
@@ -89,6 +109,13 @@ pub struct ExecGauges {
     pub shard_crashes: u64,
     pub shard_respawns: u64,
     pub shard_reregistered: u64,
+    /// per-shard health (empty for the in-process tier)
+    pub shard_liveness: Vec<ShardLiveness>,
+    /// cumulative per-matrix worker-side trace totals (Execute time and
+    /// elastic counters measured inside shard workers), monotone across
+    /// respawns via the same retirement discipline as the counters
+    /// above; empty for the in-process tier
+    pub trace_totals: Vec<(String, PhaseTotals)>,
 }
 
 /// Where a prepared analysis runs. Implementations own the prepared-state

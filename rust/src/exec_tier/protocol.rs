@@ -18,7 +18,7 @@ use crate::analysis::BuildCounters;
 use crate::coordinator::{AnalysisSource, RegisterInfo};
 use crate::error::ServiceError;
 use crate::sparse::Csr;
-use crate::trace::PhaseTimes;
+use crate::trace::{PhaseTimes, PhaseTotals};
 use crate::util::json::Json;
 
 use super::{ExecGauges, RegisterOutcome, SolveOutcome};
@@ -294,6 +294,7 @@ pub fn solve_response(out: &SolveOutcome) -> Json {
             "elastic",
             u64_arr(&[out.elastic.0, out.elastic.1, out.elastic.2]),
         ),
+        ("trace", opt_totals(&out.trace)),
     ])
 }
 
@@ -314,6 +315,7 @@ pub fn solve_from_response(j: &Json) -> Result<SolveOutcome, String> {
         xs,
         batched,
         elastic: (e[0], e[1], e[2]),
+        trace: totals_from(j.get("trace")),
     })
 }
 
@@ -329,6 +331,15 @@ pub fn gauges_response(g: &ExecGauges) -> Json {
             u64_arr(&[g.elastic_waits, g.elastic_ooo, g.elastic_steals]),
         ),
         ("rebuilds", counters_arr(g.rebuilds)),
+        (
+            "trace",
+            Json::Obj(
+                g.trace_totals
+                    .iter()
+                    .map(|(id, t)| (id.clone(), u64_arr(&t.to_array())))
+                    .collect(),
+            ),
+        ),
     ])
 }
 
@@ -337,6 +348,14 @@ pub fn gauges_from_response(j: &Json) -> Result<ExecGauges, String> {
     if e.len() != 3 {
         return Err("elastic must have 3 entries".to_string());
     }
+    let mut trace_totals = Vec::new();
+    if let Some(Json::Obj(map)) = j.get("trace") {
+        for (id, arr) in map {
+            let t = totals_from(Some(arr))
+                .ok_or_else(|| format!("gauges trace for '{id}' is malformed"))?;
+            trace_totals.push((id.clone(), t));
+        }
+    }
     Ok(ExecGauges {
         sched_blocks: get_u64(j, "sched_blocks")?,
         sched_cut: get_u64(j, "sched_cut")?,
@@ -344,6 +363,7 @@ pub fn gauges_from_response(j: &Json) -> Result<ExecGauges, String> {
         elastic_ooo: e[1],
         elastic_steals: e[2],
         rebuilds: counters_from(j.get("rebuilds")).ok_or("response missing rebuilds")?,
+        trace_totals,
         ..ExecGauges::default()
     })
 }
@@ -385,6 +405,21 @@ fn counters_from(j: Option<&Json>) -> Option<BuildCounters> {
         placement_passes: v[2],
         renumeric_passes: v[3],
     })
+}
+
+fn opt_totals(t: &Option<PhaseTotals>) -> Json {
+    match t {
+        Some(t) => u64_arr(&t.to_array()),
+        None => Json::Null,
+    }
+}
+
+/// Decode a [`PhaseTotals`] wire array; absent/null/malformed = `None`
+/// (older workers simply do not send trace payloads).
+fn totals_from(j: Option<&Json>) -> Option<PhaseTotals> {
+    let v = u64_vec(j)?;
+    let arr: [u64; PhaseTotals::WIRE_LEN] = v.try_into().ok()?;
+    Some(PhaseTotals::from_array(arr))
 }
 
 fn opt_bool(b: Option<bool>) -> Json {
@@ -479,11 +514,27 @@ mod tests {
             xs: vec![vec![1.0, 2.0], vec![-0.5, 1e-9]],
             batched: true,
             elastic: (7, 3, 2),
+            trace: Some(PhaseTotals {
+                execute_us: 340,
+                spans: 1,
+                elastic_waits: 7,
+                elastic_ooo: 3,
+                elastic_steals: 2,
+                ..Default::default()
+            }),
         };
         let back = solve_from_response(&solve_response(&out)).unwrap();
         assert_eq!(back.xs, out.xs);
         assert!(back.batched);
         assert_eq!(back.elastic, (7, 3, 2));
+        assert_eq!(back.trace, out.trace, "worker trace delta crosses the wire");
+        // A trace-less solve (in-process, or tracing off) stays None.
+        let plain = SolveOutcome {
+            trace: None,
+            ..out.clone()
+        };
+        let back = solve_from_response(&solve_response(&plain)).unwrap();
+        assert_eq!(back.trace, None);
 
         let g = ExecGauges {
             sched_blocks: 12,
@@ -497,6 +548,15 @@ mod tests {
                 placement_passes: 1,
                 renumeric_passes: 3,
             },
+            trace_totals: vec![(
+                "m1".to_string(),
+                PhaseTotals {
+                    execute_us: 900,
+                    spans: 4,
+                    elastic_waits: 9,
+                    ..Default::default()
+                },
+            )],
             ..ExecGauges::default()
         };
         let back = gauges_from_response(&gauges_response(&g)).unwrap();
@@ -509,6 +569,7 @@ mod tests {
         assert_eq!(back.rebuilds.coarsen_passes, 1);
         assert_eq!(back.rebuilds.renumeric_passes, 3);
         assert_eq!(back.shard_crashes, 0, "shard health is supervisor-side");
+        assert_eq!(back.trace_totals, g.trace_totals, "per-matrix totals survive");
     }
 
     fn tiny() -> Csr {

@@ -29,16 +29,19 @@ use std::io::BufReader;
 use std::process::{Child, ChildStdin, Command, Stdio};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::config::Config;
 use crate::error::ServiceError;
 use crate::sparse::Csr;
+use crate::trace::PhaseTotals;
 use crate::transform::PlanSpec;
 use crate::tuner::Fingerprint;
 use crate::util::json::Json;
 
-use super::{protocol, rendezvous, ExecGauges, Executor, RegisterOutcome, SolveOutcome};
+use super::{
+    protocol, rendezvous, ExecGauges, Executor, RegisterOutcome, ShardLiveness, SolveOutcome,
+};
 
 struct Shard {
     child: Child,
@@ -49,6 +52,13 @@ struct Shard {
     /// last-seen cumulative counters for this worker generation
     last_rebuilds: crate::analysis::BuildCounters,
     last_elastic: (u64, u64, u64),
+    /// last-seen cumulative per-matrix trace totals for this generation
+    last_trace: BTreeMap<String, PhaseTotals>,
+    /// when this generation last answered a frame (spawn time until then)
+    last_reply: Instant,
+    /// frames written but not yet answered (sticks at 1 on a hang until
+    /// the crash path retires the generation)
+    inflight: u64,
 }
 
 struct RosterEntry {
@@ -71,6 +81,10 @@ pub struct ShardPoolExecutor {
     /// counters retired from dead worker generations
     retired_rebuilds: crate::analysis::BuildCounters,
     retired_elastic: (u64, u64, u64),
+    /// per-matrix trace totals retired from dead worker generations, so
+    /// the cumulative totals handed to the coordinator never move
+    /// backwards across a respawn
+    retired_trace: BTreeMap<String, PhaseTotals>,
     /// solves left before the chaos hook kills the routed shard
     chaos_countdown: Option<usize>,
 }
@@ -103,6 +117,7 @@ impl ShardPoolExecutor {
             reregistered: 0,
             retired_rebuilds: Default::default(),
             retired_elastic: (0, 0, 0),
+            retired_trace: BTreeMap::new(),
             chaos_countdown,
         })
     }
@@ -118,8 +133,13 @@ impl ShardPoolExecutor {
         if let Err(e) = protocol::write_frame(&mut shard.stdin, req) {
             return Err(format!("shard {k} write failed: {e}"));
         }
+        shard.inflight += 1;
         match shard.rx.recv_timeout(timeout) {
-            Ok(Ok(frame)) => Ok(frame),
+            Ok(Ok(frame)) => {
+                shard.inflight = shard.inflight.saturating_sub(1);
+                shard.last_reply = Instant::now();
+                Ok(frame)
+            }
             Ok(Err(e)) => Err(format!("shard {k} stream error: {e}")),
             Err(RecvTimeoutError::Timeout) => Err(format!(
                 "shard {k} unresponsive after {}ms",
@@ -155,6 +175,10 @@ impl ShardPoolExecutor {
             self.retired_elastic.0 += s.last_elastic.0;
             self.retired_elastic.1 += s.last_elastic.1;
             self.retired_elastic.2 += s.last_elastic.2;
+            for (id, t) in s.last_trace {
+                let agg = self.retired_trace.entry(id).or_default();
+                *agg = *agg + t;
+            }
         }
     }
 
@@ -298,6 +322,7 @@ impl Executor for ShardPoolExecutor {
                                 s.last_rebuilds = sg.rebuilds;
                                 s.last_elastic =
                                     (sg.elastic_waits, sg.elastic_ooo, sg.elastic_steals);
+                                s.last_trace = sg.trace_totals.into_iter().collect();
                             }
                         }
                         Err(e) => eprintln!("warning: shard {k} gauges: {e}"),
@@ -312,18 +337,40 @@ impl Executor for ShardPoolExecutor {
         }
         g.rebuilds = self.retired_rebuilds;
         let (mut w, mut o, mut st) = self.retired_elastic;
+        let mut trace: BTreeMap<String, PhaseTotals> = self.retired_trace.clone();
         for s in self.shards.iter().flatten() {
             g.rebuilds = g.rebuilds + s.last_rebuilds;
             w += s.last_elastic.0;
             o += s.last_elastic.1;
             st += s.last_elastic.2;
+            for (id, t) in &s.last_trace {
+                let agg = trace.entry(id.clone()).or_default();
+                *agg = *agg + *t;
+            }
         }
         g.elastic_waits = w;
         g.elastic_ooo = o;
         g.elastic_steals = st;
+        g.trace_totals = trace.into_iter().collect();
         g.shard_crashes = self.crashes;
         g.shard_respawns = self.respawns;
         g.shard_reregistered = self.reregistered;
+        g.shard_liveness = (0..self.nshards)
+            .map(|k| match &self.shards[k] {
+                Some(s) => ShardLiveness {
+                    shard: k,
+                    up: true,
+                    last_frame_age_ms: s.last_reply.elapsed().as_millis() as u64,
+                    inflight: s.inflight,
+                },
+                None => ShardLiveness {
+                    shard: k,
+                    up: false,
+                    last_frame_age_ms: 0,
+                    inflight: 0,
+                },
+            })
+            .collect();
         g
     }
 
@@ -367,6 +414,10 @@ fn spawn_shard(cfg: &Config, k: usize) -> std::io::Result<Shard> {
         .arg(cfg.seed.to_string())
         .arg("--use-xla")
         .arg(if cfg.use_xla { "true" } else { "false" })
+        // Tracing crosses the process boundary: a traced coordinator
+        // needs traced workers or trace_report is blind under sharding.
+        .arg("--trace-enabled")
+        .arg(if cfg.trace_enabled { "true" } else { "false" })
         .arg("--sched-block-target")
         .arg(cfg.sched_block_target.to_string())
         .arg("--sched-stale-window")
@@ -426,5 +477,8 @@ fn spawn_shard(cfg: &Config, k: usize) -> std::io::Result<Shard> {
         rx,
         last_rebuilds: Default::default(),
         last_elastic: (0, 0, 0),
+        last_trace: BTreeMap::new(),
+        last_reply: Instant::now(),
+        inflight: 0,
     })
 }

@@ -6,13 +6,22 @@
 //! register, solve, error paths, gauges, shutdown — unit-tests over
 //! in-memory buffers without spawning a process.
 //!
+//! When the parent's tracing is on (`--trace-enabled`, forwarded by the
+//! supervisor), the worker runs its own [`Tracer`]: every solve records
+//! an Execute span plus the elastic counters into it, the per-solve
+//! delta rides the solve response, and the cumulative per-matrix totals
+//! ride every gauges response — so the coordinator's `trace_report`
+//! attributes worker-side execution correctly in `sharded:N` mode.
+//!
 //! Nothing here may print to stdout: that stream carries frames. All
 //! diagnostics go to stderr (inherited from the supervisor).
 
 use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::time::Instant;
 
 use crate::config::Config;
 use crate::error::ServiceError;
+use crate::trace::{Phase, PhaseTotals, Tracer, DEFAULT_RING_CAPACITY};
 use crate::transform::PlanSpec;
 use crate::util::json::Json;
 
@@ -23,17 +32,19 @@ use super::Executor;
 /// Serve frames on this process's stdin/stdout until shutdown or EOF
 /// (the supervisor closing our stdin is a normal exit).
 pub fn serve(cfg: Config) -> io::Result<()> {
+    let tracer = Tracer::new(cfg.trace_enabled, DEFAULT_RING_CAPACITY);
     let mut exec = InProcessExecutor::new(cfg);
     let stdin = io::stdin();
     let stdout = io::stdout();
     let mut r = BufReader::new(stdin.lock());
     let mut w = BufWriter::new(stdout.lock());
-    run_loop(&mut exec, &mut r, &mut w)
+    run_loop(&mut exec, &tracer, &mut r, &mut w)
 }
 
 /// One worker session: read a frame, apply it to the executor, answer.
 pub fn run_loop<R: Read, W: Write>(
     exec: &mut InProcessExecutor,
+    tracer: &Tracer,
     r: &mut R,
     w: &mut W,
 ) -> io::Result<()> {
@@ -44,8 +55,12 @@ pub fn run_loop<R: Read, W: Write>(
         let op = req.get("op").and_then(Json::as_str).unwrap_or("");
         let resp = match op {
             "register" | "update" => handle_register(exec, &req, op),
-            "solve" => handle_solve(exec, &req),
-            "gauges" => protocol::gauges_response(&exec.gauges()),
+            "solve" => handle_solve(exec, tracer, &req),
+            "gauges" => {
+                let mut g = exec.gauges();
+                g.trace_totals = tracer.report().matrices;
+                protocol::gauges_response(&g)
+            }
             "shutdown" => {
                 protocol::write_frame(w, &protocol::ok_response())?;
                 return Ok(());
@@ -86,7 +101,7 @@ fn handle_register(exec: &mut InProcessExecutor, req: &Json, op: &str) -> Json {
     }
 }
 
-fn handle_solve(exec: &mut InProcessExecutor, req: &Json) -> Json {
+fn handle_solve(exec: &mut InProcessExecutor, tracer: &Tracer, req: &Json) -> Json {
     let Some(id) = req.get("id").and_then(Json::as_str) else {
         return invalid("solve without id".to_string());
     };
@@ -98,8 +113,25 @@ fn handle_solve(exec: &mut InProcessExecutor, req: &Json) -> Json {
     let Some(rhs) = rhs else {
         return invalid(format!("solve '{id}' with malformed rhs"));
     };
+    let start = Instant::now();
     match exec.solve_block(id, &rhs) {
-        Ok(out) => protocol::solve_response(&out),
+        Ok(mut out) => {
+            if tracer.enabled() {
+                let dur = start.elapsed();
+                tracer.record(id, Phase::Execute, dur);
+                let (w, o, s) = out.elastic;
+                tracer.record_elastic(id, w, o, s);
+                out.trace = Some(PhaseTotals {
+                    execute_us: dur.as_micros() as u64,
+                    spans: 1,
+                    elastic_waits: w,
+                    elastic_ooo: o,
+                    elastic_steals: s,
+                    ..Default::default()
+                });
+            }
+            protocol::solve_response(&out)
+        }
         Err(e) => protocol::err_response(&e),
     }
 }
@@ -131,8 +163,9 @@ mod tests {
             use_xla: false,
             ..Default::default()
         });
+        let tracer = Tracer::new(true, DEFAULT_RING_CAPACITY);
         let mut out = Vec::new();
-        run_loop(&mut exec, &mut Cursor::new(reqs), &mut out).unwrap();
+        run_loop(&mut exec, &tracer, &mut Cursor::new(reqs), &mut out).unwrap();
 
         let mut r = Cursor::new(out);
         let mut next = || protocol::read_frame(&mut r).unwrap();
@@ -148,6 +181,9 @@ mod tests {
         let sol = protocol::solve_from_response(&sol).unwrap();
         assert_eq!(sol.xs.len(), 2);
         assert!(m.residual_inf(&sol.xs[0], &b) < 1e-9);
+        // With tracing on, the worker embeds its measured Execute delta.
+        let delta = sol.trace.expect("traced worker sends a solve delta");
+        assert_eq!(delta.spans, 1);
 
         let ghost = next().expect("error response");
         assert!(matches!(
@@ -164,9 +200,42 @@ mod tests {
         let gauges = next().expect("gauges response");
         let g = protocol::gauges_from_response(&gauges).unwrap();
         assert_eq!(g.rebuilds.rewrite_passes, 1);
+        // The cumulative per-matrix totals cover the one solve above.
+        let (id, totals) = &g.trace_totals[0];
+        assert_eq!(id, "a");
+        assert_eq!(totals.spans, 1);
 
         assert!(protocol::is_ok(&next().expect("shutdown ack")));
         assert_eq!(next(), None, "loop ended at shutdown");
+    }
+
+    #[test]
+    fn untraced_worker_sends_no_trace_payloads() {
+        let m = generate::tridiagonal(30, &Default::default());
+        let b = vec![1.0; 30];
+        let mut reqs = Vec::new();
+        for frame in [
+            protocol::register_req("register", "t", &m, "none"),
+            protocol::solve_req("t", &[b.clone()]),
+            protocol::gauges_req(),
+        ] {
+            protocol::write_frame(&mut reqs, &frame).unwrap();
+        }
+        let mut exec = InProcessExecutor::new(Config {
+            workers: 1,
+            use_xla: false,
+            ..Default::default()
+        });
+        let tracer = Tracer::new(false, DEFAULT_RING_CAPACITY);
+        let mut out = Vec::new();
+        run_loop(&mut exec, &tracer, &mut Cursor::new(reqs), &mut out).unwrap();
+        let mut r = Cursor::new(out);
+        let mut next = || protocol::read_frame(&mut r).unwrap().unwrap();
+        let _reg = next();
+        let sol = protocol::solve_from_response(&next()).unwrap();
+        assert_eq!(sol.trace, None, "tracing off: no delta on the wire");
+        let g = protocol::gauges_from_response(&next()).unwrap();
+        assert!(g.trace_totals.is_empty());
     }
 
     #[test]
@@ -176,8 +245,9 @@ mod tests {
             use_xla: false,
             ..Default::default()
         });
+        let tracer = Tracer::new(false, DEFAULT_RING_CAPACITY);
         let mut out = Vec::new();
-        run_loop(&mut exec, &mut Cursor::new(Vec::new()), &mut out).unwrap();
+        run_loop(&mut exec, &tracer, &mut Cursor::new(Vec::new()), &mut out).unwrap();
         assert!(out.is_empty());
     }
 }

@@ -254,8 +254,10 @@
 //! `shard_worker_bin`, `shard_timeout_ms` (supervisor reply timeout),
 //! `chaos_kill_shard_after` (fault-injection drill, 0 = off),
 //! `trace_enabled` (record per-solve phase spans, see Observability
-//! below), `bench_out_dir` and `bench_requests` (the `sptrsv bench`
-//! output directory and request-count override).
+//! below), `journal_enabled` and `journal_path` (append live traffic to
+//! a replayable JSONL journal, see Observability below),
+//! `bench_out_dir` and `bench_requests` (the `sptrsv bench` output
+//! directory and request-count override).
 //!
 //! ## Scheduling
 //!
@@ -353,17 +355,23 @@
 //!
 //! ## Observability
 //!
-//! Three layers, cheapest first:
+//! One pipeline — metrics → tracing → journal → trajectory → trend —
+//! each stage feeding the next, cheapest first:
 //!
 //! * **Metrics** — the service's always-on counters and per-lane log2
 //!   latency histograms. [`coordinator::SolveHandle::metrics`] returns a
 //!   serializable [`coordinator::Snapshot`] (combined *and* per-lane
-//!   p50/p95/p99 via [`coordinator::LaneLatency`]); `sptrsv serve
-//!   --metrics-json FILE` and `sptrsv bench --metrics-json FILE` dump it
-//!   as JSON. The observed elastic wait/out-of-order counters also feed
-//!   back into the tuner's cost model after each snapshot (the
-//!   calibration hook), so `auto` decisions price synchronization by what
-//!   this machine measured rather than by static constants.
+//!   p50/p95/p99 via [`coordinator::LaneLatency`], the raw per-lane
+//!   bucket counts as [`coordinator::Snapshot::lane_hist`], and — under
+//!   `sharded:N` — per-shard liveness via
+//!   [`coordinator::metrics::ShardHealth`]: up/down, ms since the last
+//!   answered frame, frames in flight); `sptrsv serve --metrics-json
+//!   FILE` and `sptrsv bench --metrics-json FILE` dump it as JSON,
+//!   written atomically (temp file + rename, never a torn read). The
+//!   observed elastic wait/out-of-order counters also feed back into the
+//!   tuner's cost model after each snapshot (the calibration hook), so
+//!   `auto` decisions price synchronization by what this machine
+//!   measured rather than by static constants.
 //! * **Phase tracing** — with the `trace_enabled` config key, the service
 //!   records per-solve and per-registration spans ([`trace`]): the
 //!   analyze split (rewrite / coarsen / placement / renumeric, carried on
@@ -371,17 +379,39 @@
 //!   the batcher wait, execution, and the elastic stall counters — folded
 //!   into per-matrix aggregates behind a fixed-size ring, drained with
 //!   [`coordinator::SolveHandle::trace_report`]. Off (the default) it
-//!   costs one relaxed atomic load per record site.
-//! * **Bench trajectories** — `sptrsv bench --scenario FILE.json` replays
-//!   a deterministic workload manifest ([`bench::Scenario`]: matrix mix,
-//!   lane mix, deadline distribution, arrival pattern, value-refresh
-//!   cadence) through the coordinator with tracing forced on, and emits a
-//!   `BENCH_<name>.json` stamped with [`bench::BENCH_SCHEMA_VERSION`]
-//!   (pinned by `scenarios/BENCH_SCHEMA`; CI fails on drift without a
-//!   bump): throughput, per-lane latency percentiles, deadline-miss rate,
-//!   cache hit rates, elastic counters and the per-phase time breakdown.
-//!   `scenarios/smoke.json` is the CI smoke scenario and the manifest
-//!   format's reference example.
+//!   costs one relaxed atomic load per record site. Tracing is
+//!   **cross-shard**: under `sharded:N` each worker process runs its own
+//!   tracer, measures Execute where it actually happens, and sends the
+//!   per-solve delta back on the solve response (with cumulative
+//!   per-matrix totals riding every gauges frame as a crash-safe
+//!   reconciliation channel), so `trace_report` attributes Execute/Wait
+//!   per matrix identically in both tiers — and loses no spans across a
+//!   worker respawn.
+//! * **Traffic journal** — with `journal_enabled`, the service appends
+//!   every shaping-relevant request to the `journal_path` JSONL file
+//!   ([`telemetry::journal`]; schema-stamped, bounded background writer
+//!   that drops under pressure rather than blocking a solve). `sptrsv
+//!   replay --journal FILE` lifts a capture back into a
+//!   [`bench::Scenario`] ([`telemetry::replay`]) and runs it through the
+//!   bench harness — production traffic becomes a repeatable benchmark.
+//! * **Bench trajectories** — `sptrsv bench --scenario FILE.json` (and
+//!   `sptrsv replay`) replays a deterministic workload manifest
+//!   ([`bench::Scenario`]: matrix mix, lane mix, deadline distribution,
+//!   arrival pattern, value-refresh cadence) through the coordinator
+//!   with tracing forced on, and emits a `BENCH_<name>.json` stamped
+//!   with [`bench::BENCH_SCHEMA_VERSION`] (pinned by
+//!   `scenarios/BENCH_SCHEMA`; CI fails on drift without a bump):
+//!   throughput, per-lane latency percentiles *and* raw log2 histogram
+//!   buckets, deadline-miss rate, cache hit rates, elastic counters and
+//!   the per-phase time breakdown. `scenarios/smoke.json` is the CI
+//!   smoke scenario and the manifest format's reference example.
+//! * **Trend gating** — `sptrsv bench --compare BASE.json NEW.json
+//!   [--p95-tolerance PCT]` diffs two trajectories
+//!   ([`telemetry::trend`]): throughput, per-lane p50/p95/p99,
+//!   deadline-miss rate and elastic counters are reported, and the
+//!   per-lane p95 gates — the command exits nonzero when it degraded
+//!   beyond tolerance. CI compares every smoke run against the
+//!   checked-in `scenarios/BASELINE_smoke.json`.
 
 pub mod analysis;
 pub mod bench;
@@ -396,6 +426,7 @@ pub mod runtime;
 pub mod sched;
 pub mod solver;
 pub mod sparse;
+pub mod telemetry;
 pub mod trace;
 pub mod transform;
 pub mod tuner;

@@ -12,7 +12,10 @@
 //!   xla        check the AOT artifact registry and run an XLA solve
 //!   serve      start the coordinator and run a demo workload against it
 //!   bench      replay a scenario manifest through the coordinator and
-//!              emit a schema-stamped BENCH_*.json trajectory
+//!              emit a schema-stamped BENCH_*.json trajectory, or diff
+//!              two trajectories with --compare (trend regression gate)
+//!   replay     lift a captured traffic journal (journal_enabled) into a
+//!              scenario and run it through the bench harness
 
 use std::path::Path;
 
@@ -43,6 +46,7 @@ fn main() {
         "xla" => cmd_xla(&args),
         "serve" => cmd_serve(&args),
         "bench" => cmd_bench(&args),
+        "replay" => cmd_replay(&args),
         // Hidden: the child process the sharded executor spawns. Speaks
         // length-prefixed JSON frames on stdin/stdout; not in HELP.
         "shard-worker" => cmd_shard_worker(&args),
@@ -92,6 +96,9 @@ USAGE: sptrsv <subcommand> [flags]
             [--analysis-cache DIR]   # persisted analyses: re-registering
             # a known structure skips coarsening + placement
             [--metrics-json FILE]   # also dump the final metrics snapshot
+            [--journal-enabled true --journal-path FILE.jsonl]   # append
+            # live traffic (register/solve/update/cancel shape) to a
+            # replayable JSONL journal; `sptrsv replay` consumes it
             # demo workload: mixed interactive/batch lanes, one multi-RHS
             # block, and a value refresh through the coordinator, then
             # the metrics snapshot
@@ -101,6 +108,15 @@ USAGE: sptrsv <subcommand> [flags]
             # pattern, value refreshes) through the coordinator with phase
             # tracing forced on; emits DIR/BENCH_<name>.json stamped with
             # the schema version pinned in scenarios/BENCH_SCHEMA
+  bench     --compare BASE.json NEW.json [--p95-tolerance PCT]
+            # trend gate: diff two BENCH trajectories (throughput, per-lane
+            # p50/p95/p99, deadline misses, elastic counters) and exit
+            # nonzero when a lane's p95 regressed beyond PCT (default 50)
+  replay    --journal FILE.jsonl [--name NAME] [--bench-out-dir DIR]
+            [--metrics-json FILE] [--config FILE] [--workers W]
+            # rebuild a scenario from a traffic journal (captured with
+            # journal_enabled) and run it through the bench harness;
+            # emits a standard BENCH_<NAME>.json trajectory
 
 PLANS (-P): REWRITE+EXEC, e.g. avgcost+scheduled, guarded:5+syncfree,
   manual:4+reorder — REWRITE in none|avgcost|manual[:d]|guarded[:d[:m]],
@@ -738,7 +754,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let snap = h.metrics()?;
     println!("metrics: {snap}");
     if let Some(path) = args.flag("metrics-json") {
-        std::fs::write(path, format!("{}\n", snap.to_json()))
+        sptrsv_gt::util::fs::write_atomic(Path::new(path), &format!("{}\n", snap.to_json()))
             .with_context(|| format!("writing --metrics-json {path}"))?;
         println!("metrics snapshot written to {path}");
     }
@@ -759,6 +775,29 @@ fn cmd_shard_worker(args: &Args) -> Result<()> {
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
+    // `--compare BASE NEW` is the trend gate: no replay, just a diff of
+    // two trajectories. (The parser makes BASE the flag's value and NEW
+    // the first positional.)
+    if let Some(base_path) = args.flag("compare") {
+        let new_path = args
+            .positionals
+            .first()
+            .context("bench --compare needs two files: BASE.json NEW.json")?;
+        let load = |p: &str| -> Result<sptrsv_gt::util::json::Json> {
+            let text = std::fs::read_to_string(p)
+                .with_context(|| format!("reading trajectory {p}"))?;
+            sptrsv_gt::util::json::Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("parsing trajectory {p}: {e}"))
+        };
+        let (base, new) = (load(base_path)?, load(new_path)?);
+        let tolerance = args.f64_flag("p95-tolerance", 50.0)?;
+        let report = sptrsv_gt::telemetry::trend::compare(&base, &new, tolerance)?;
+        print!("{report}");
+        if report.regressed {
+            std::process::exit(1);
+        }
+        return Ok(());
+    }
     let mut cfg = Config::default();
     if let Some(path) = args.flag("config") {
         cfg = Config::from_file(Path::new(path))?;
@@ -792,8 +831,44 @@ fn cmd_bench(args: &Args) -> Result<()> {
         snap.deadline_misses, snap.rejections, snap.interactive.p99_us, snap.batch.p99_us
     );
     if let Some(mpath) = args.flag("metrics-json") {
-        std::fs::write(mpath, format!("{}\n", snap.to_json()))
+        sptrsv_gt::util::fs::write_atomic(Path::new(mpath), &format!("{}\n", snap.to_json()))
             .with_context(|| format!("writing --metrics-json {mpath}"))?;
+    }
+    println!("BENCH trajectory written to {}", out.path.display());
+    Ok(())
+}
+
+fn cmd_replay(args: &Args) -> Result<()> {
+    let mut cfg = Config::default();
+    if let Some(path) = args.flag("config") {
+        cfg = Config::from_file(Path::new(path))?;
+    }
+    cfg.merge_args(args)?;
+    let jpath = args
+        .flag("journal")
+        .context("replay needs --journal FILE.jsonl (capture one with journal_enabled)")?;
+    let name = args.flag_or("name", "replay");
+    let sc = sptrsv_gt::telemetry::scenario_from_journal(Path::new(jpath), &name)?;
+    println!(
+        "replaying journal {jpath} as '{}': {} requests over {} matrices \
+         (interactive {:.0}%, deadlines {:.0}%, block {}, refresh every {}), workers={}",
+        sc.name,
+        sc.requests,
+        sc.matrices.len(),
+        100.0 * sc.interactive_fraction,
+        100.0 * sc.deadline_fraction,
+        sc.block_size,
+        sc.refresh_every,
+        cfg.workers,
+    );
+    let out = bench::run(&sc, &cfg)?;
+    println!("bench metrics: {}", out.snapshot);
+    if let Some(mpath) = args.flag("metrics-json") {
+        sptrsv_gt::util::fs::write_atomic(
+            Path::new(mpath),
+            &format!("{}\n", out.snapshot.to_json()),
+        )
+        .with_context(|| format!("writing --metrics-json {mpath}"))?;
     }
     println!("BENCH trajectory written to {}", out.path.display());
     Ok(())

@@ -1,0 +1,361 @@
+//! Live-traffic journal: every shaping-relevant request the service
+//! loop sees — register / solve / solve_many / update_values / cancel
+//! sweeps — appended as one JSONL event with its arrival offset.
+//!
+//! The journal must never add latency to the service loop, so
+//! [`Journal::record`] only stamps the arrival offset and `try_send`s
+//! the event to a dedicated writer thread over a **bounded** channel;
+//! when the writer falls behind, events are dropped and counted
+//! ([`Journal::dropped`]) rather than ever blocking a solve. The first
+//! line of every journal is a header record carrying
+//! [`JOURNAL_SCHEMA_VERSION`]; [`read`] refuses files whose header
+//! disagrees, so replay never misinterprets an old capture.
+//!
+//! `sptrsv replay --journal FILE` turns a capture back into offered
+//! load (see [`crate::telemetry::replay`]).
+
+use std::io::{BufWriter, Write as _};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::config::Config;
+use crate::error::Error;
+use crate::util::json::Json;
+
+/// Stamped into the journal's header line; bump on any event-shape
+/// change so old captures fail loudly instead of replaying nonsense.
+pub const JOURNAL_SCHEMA_VERSION: u64 = 1;
+
+const KIND: &str = "sptrsv-journal";
+
+/// Bounded depth of the writer channel: deep enough to absorb a burst,
+/// small enough that a stuck disk costs memory, not the service loop.
+const CHANNEL_DEPTH: usize = 4096;
+
+/// One journaled service event. `kind` is the wire tag (`register`,
+/// `solve`, `solve_many`, `update_values`, `cancel`); the remaining
+/// fields are meaningful per kind and default-empty otherwise.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Event {
+    pub kind: String,
+    /// matrix id (`register`/`solve*`/`update_values`)
+    pub id: String,
+    /// matrix shape at registration, enough for replay to size a
+    /// structurally comparable generator
+    pub nrows: usize,
+    pub nnz: usize,
+    /// resolved plan name the registration prepared with
+    pub plan: String,
+    /// right-hand sides in the request (`solve*`)
+    pub block: usize,
+    /// whether the request rode the interactive lane (`solve*`)
+    pub interactive: bool,
+    /// deadline budget relative to submission, when the request had one
+    pub deadline_us: Option<u64>,
+    /// tenant the request named explicitly, when it did
+    pub tenant: Option<String>,
+}
+
+impl Event {
+    pub fn register(id: &str, nrows: usize, nnz: usize, plan: &str) -> Event {
+        Event {
+            kind: "register".to_string(),
+            id: id.to_string(),
+            nrows,
+            nnz,
+            plan: plan.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// A solve request: single-RHS submissions journal as `solve`,
+    /// multi-RHS blocks as `solve_many`.
+    pub fn solve(
+        id: &str,
+        block: usize,
+        interactive: bool,
+        deadline_us: Option<u64>,
+        tenant: Option<&str>,
+    ) -> Event {
+        Event {
+            kind: if block > 1 { "solve_many" } else { "solve" }.to_string(),
+            id: id.to_string(),
+            block: block.max(1),
+            interactive,
+            deadline_us,
+            tenant: tenant.map(str::to_string),
+            ..Default::default()
+        }
+    }
+
+    pub fn update(id: &str) -> Event {
+        Event {
+            kind: "update_values".to_string(),
+            id: id.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// A cancellation wakeup swept the queues.
+    pub fn cancel() -> Event {
+        Event {
+            kind: "cancel".to_string(),
+            ..Default::default()
+        }
+    }
+
+    fn to_json(&self, t_us: u64) -> Json {
+        let mut fields = vec![
+            ("t_us", Json::Num(t_us as f64)),
+            ("ev", Json::Str(self.kind.clone())),
+        ];
+        if !self.id.is_empty() {
+            fields.push(("id", Json::Str(self.id.clone())));
+        }
+        if self.kind == "register" {
+            fields.push(("nrows", Json::Num(self.nrows as f64)));
+            fields.push(("nnz", Json::Num(self.nnz as f64)));
+            fields.push(("plan", Json::Str(self.plan.clone())));
+        }
+        if self.kind.starts_with("solve") {
+            fields.push(("block", Json::Num(self.block as f64)));
+            let lane = if self.interactive { "interactive" } else { "batch" };
+            fields.push(("lane", Json::Str(lane.to_string())));
+            if let Some(d) = self.deadline_us {
+                fields.push(("deadline_us", Json::Num(d as f64)));
+            }
+            if let Some(t) = &self.tenant {
+                fields.push(("tenant", Json::Str(t.clone())));
+            }
+        }
+        Json::obj(fields)
+    }
+
+    fn from_json(j: &Json) -> Option<Event> {
+        let kind = j.get("ev").and_then(Json::as_str)?.to_string();
+        Some(Event {
+            kind,
+            id: j.get("id").and_then(Json::as_str).unwrap_or("").to_string(),
+            nrows: j.get("nrows").and_then(Json::as_usize).unwrap_or(0),
+            nnz: j.get("nnz").and_then(Json::as_usize).unwrap_or(0),
+            plan: j.get("plan").and_then(Json::as_str).unwrap_or("").to_string(),
+            block: j.get("block").and_then(Json::as_usize).unwrap_or(0),
+            interactive: j.get("lane").and_then(Json::as_str) == Some("interactive"),
+            deadline_us: j
+                .get("deadline_us")
+                .and_then(Json::as_f64)
+                .map(|d| d as u64),
+            tenant: j
+                .get("tenant")
+                .and_then(Json::as_str)
+                .map(str::to_string),
+        })
+    }
+}
+
+/// One line of a parsed journal: the event plus its arrival offset from
+/// the journal's start.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Record {
+    pub t_us: u64,
+    pub ev: Event,
+}
+
+/// The recording half: owned by the service loop, writes happen on a
+/// background thread. Dropping the journal closes the channel and joins
+/// the writer, flushing everything already enqueued.
+pub struct Journal {
+    tx: Option<SyncSender<(u64, Event)>>,
+    dropped: Arc<AtomicU64>,
+    join: Option<JoinHandle<()>>,
+    start: Instant,
+}
+
+impl Journal {
+    /// The service-side constructor: `None` unless `journal_enabled`
+    /// (an unwritable path logs to stderr and disables journaling
+    /// rather than failing service startup).
+    pub fn from_config(cfg: &Config) -> Option<Journal> {
+        if !cfg.journal_enabled || cfg.journal_path.is_empty() {
+            return None;
+        }
+        match Journal::create(Path::new(&cfg.journal_path)) {
+            Ok(j) => Some(j),
+            Err(e) => {
+                eprintln!("journal disabled: {e}");
+                None
+            }
+        }
+    }
+
+    /// Start a journal at `path` (truncating — a journal file is one
+    /// capture) and spawn its writer thread.
+    pub fn create(path: &Path) -> Result<Journal, Error> {
+        let file = std::fs::File::create(path)
+            .map_err(|e| Error::Io(format!("journal {}: {e}", path.display())))?;
+        let (tx, rx) = mpsc::sync_channel::<(u64, Event)>(CHANNEL_DEPTH);
+        let join = std::thread::Builder::new()
+            .name("sptrsv-journal".into())
+            .spawn(move || {
+                let mut w = BufWriter::new(file);
+                let header = Json::obj(vec![
+                    ("journal_schema_version", Json::Num(JOURNAL_SCHEMA_VERSION as f64)),
+                    ("kind", Json::Str(KIND.to_string())),
+                ]);
+                let _ = writeln!(w, "{header}");
+                while let Ok((t_us, ev)) = rx.recv() {
+                    let _ = writeln!(w, "{}", ev.to_json(t_us));
+                }
+                let _ = w.flush();
+            })
+            .map_err(|e| Error::Io(format!("journal writer thread: {e}")))?;
+        Ok(Journal {
+            tx: Some(tx),
+            dropped: Arc::new(AtomicU64::new(0)),
+            join: Some(join),
+            start: Instant::now(),
+        })
+    }
+
+    /// Enqueue one event, stamped with its arrival offset. Never blocks:
+    /// a full channel drops the event and counts it instead.
+    pub fn record(&self, ev: Event) {
+        let t_us = self.start.elapsed().as_micros() as u64;
+        if let Some(tx) = &self.tx {
+            match tx.try_send((t_us, ev)) {
+                Ok(()) => {}
+                Err(TrySendError::Full(_)) => {
+                    self.dropped.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(TrySendError::Disconnected(_)) => {}
+            }
+        }
+    }
+
+    /// Events dropped because the writer could not keep up.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for Journal {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel: the writer drains and exits
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Parse a journal file back into records. The header line must carry
+/// the current [`JOURNAL_SCHEMA_VERSION`].
+pub fn read(path: &Path) -> Result<Vec<Record>, Error> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Io(format!("read {}: {e}", path.display())))?;
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header = lines
+        .next()
+        .ok_or_else(|| Error::Invalid(format!("{}: empty journal", path.display())))?;
+    let hj = Json::parse(header)
+        .map_err(|e| Error::Invalid(format!("{}: bad header: {e}", path.display())))?;
+    let version = hj
+        .get("journal_schema_version")
+        .and_then(Json::as_f64)
+        .map(|v| v as u64);
+    if version != Some(JOURNAL_SCHEMA_VERSION) {
+        return Err(Error::Invalid(format!(
+            "{}: journal schema {:?}, this build reads {}",
+            path.display(),
+            version,
+            JOURNAL_SCHEMA_VERSION
+        )));
+    }
+    let mut records = Vec::new();
+    for (i, line) in lines.enumerate() {
+        let j = Json::parse(line)
+            .map_err(|e| Error::Invalid(format!("{}:{}: bad event: {e}", path.display(), i + 2)))?;
+        let t_us = j.get("t_us").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        let ev = Event::from_json(&j).ok_or_else(|| {
+            Error::Invalid(format!("{}:{}: event without 'ev'", path.display(), i + 2))
+        })?;
+        records.push(Record { t_us, ev });
+    }
+    Ok(records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("sptrsv_journal_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn journal_roundtrips_through_the_reader() {
+        let p = tmp("rt.jsonl");
+        let j = Journal::create(&p).unwrap();
+        j.record(Event::register("m", 120, 456, "avgcost"));
+        j.record(Event::solve("m", 1, true, Some(5_000), None));
+        j.record(Event::solve("m", 4, false, None, Some("acme")));
+        j.record(Event::update("m"));
+        j.record(Event::cancel());
+        assert_eq!(j.dropped(), 0);
+        drop(j); // flush
+
+        let recs = read(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(recs.len(), 5);
+        assert_eq!(recs[0].ev, Event::register("m", 120, 456, "avgcost"));
+        assert_eq!(recs[1].ev.kind, "solve");
+        assert!(recs[1].ev.interactive);
+        assert_eq!(recs[1].ev.deadline_us, Some(5_000));
+        assert_eq!(recs[1].ev.block, 1);
+        // Multi-RHS submissions journal as solve_many with their tenant.
+        assert_eq!(recs[2].ev.kind, "solve_many");
+        assert_eq!(recs[2].ev.block, 4);
+        assert!(!recs[2].ev.interactive);
+        assert_eq!(recs[2].ev.tenant.as_deref(), Some("acme"));
+        assert_eq!(recs[3].ev.kind, "update_values");
+        assert_eq!(recs[4].ev.kind, "cancel");
+        // Arrival offsets are monotone.
+        assert!(recs.windows(2).all(|w| w[0].t_us <= w[1].t_us));
+    }
+
+    #[test]
+    fn reader_rejects_wrong_schema_and_garbage() {
+        let p = tmp("bad.jsonl");
+        std::fs::write(&p, "{\"journal_schema_version\": 99}\n").unwrap();
+        assert!(read(&p).is_err(), "future schema refused");
+        std::fs::write(&p, "").unwrap();
+        assert!(read(&p).is_err(), "empty journal refused");
+        std::fs::write(
+            &p,
+            format!("{{\"journal_schema_version\": {JOURNAL_SCHEMA_VERSION}}}\nnot json\n"),
+        )
+        .unwrap();
+        assert!(read(&p).is_err(), "garbage event line refused");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn journal_from_config_respects_the_enable_gate() {
+        let cfg = Config::default();
+        assert!(Journal::from_config(&cfg).is_none(), "off by default");
+        let p = tmp("cfg.jsonl");
+        let cfg = Config {
+            journal_enabled: true,
+            journal_path: p.to_str().unwrap().to_string(),
+            ..Default::default()
+        };
+        let j = Journal::from_config(&cfg).expect("enabled journal opens");
+        j.record(Event::cancel());
+        drop(j);
+        assert_eq!(read(&p).unwrap().len(), 1);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,30 @@
+//! The telemetry plane: capture live traffic, replay it as a benchmark,
+//! and gate on the trend between runs.
+//!
+//! Three legs, wired end to end:
+//!
+//! 1. **[`journal`]** — with `journal_enabled`, the service appends
+//!    every shaping-relevant request (register / solve / solve_many /
+//!    update_values / cancel sweeps) to a schema-stamped JSONL file at
+//!    `journal_path`, via a bounded background writer that drops under
+//!    pressure instead of ever blocking the service loop.
+//! 2. **[`replay`]** — `sptrsv replay --journal FILE` turns a capture
+//!    back into a [`crate::bench::Scenario`] (matrices rebuilt at the
+//!    journaled dimensions, traffic shape lifted from the events) and
+//!    runs it through the standard bench harness, emitting a normal
+//!    `BENCH_*.json` trajectory.
+//! 3. **[`trend`]** — `sptrsv bench --compare BASE.json NEW.json`
+//!    diffs two trajectories (throughput, per-lane percentiles,
+//!    deadline misses, elastic counters) and exits nonzero when a
+//!    lane's p95 regressed beyond `--p95-tolerance`.
+//!
+//! Together: production traffic becomes a repeatable benchmark, and the
+//! benchmark's history becomes a regression gate.
+
+pub mod journal;
+pub mod replay;
+pub mod trend;
+
+pub use journal::{Event, Journal, Record, JOURNAL_SCHEMA_VERSION};
+pub use replay::scenario_from_journal;
+pub use trend::{compare, TrendReport};

@@ -1,0 +1,264 @@
+//! Journal → scenario: turn a captured traffic journal back into a
+//! [`Scenario`] the bench harness can replay, so a production traffic
+//! shape becomes a repeatable benchmark (`sptrsv replay --journal FILE`
+//! emits a standard `BENCH_*.json` through the same [`crate::bench`]
+//! path as a hand-written scenario).
+//!
+//! The journal records request *shape*, not matrix payloads — shipping
+//! every registered matrix would make journaling unaffordable on the
+//! hot path. Replay therefore rebuilds each registered matrix as a
+//! `random` generator of the journaled dimensions (rows, and a
+//! dependency budget from the journaled nnz), keeps the journaled plan,
+//! and weights each matrix by its observed share of solve traffic. Lane
+//! mix, deadline distribution, block size, refresh cadence and mean
+//! arrival gap are all lifted from the event stream, so the replayed
+//! load exercises the same serving policies the live traffic did.
+
+use std::path::Path;
+
+use crate::bench::{MatrixSpec, Scenario};
+use crate::error::Error;
+use crate::telemetry::journal::{self, Record};
+
+/// Replayed scenarios get deterministic matrices from this fixed seed;
+/// two replays of the same journal are identical runs.
+const REPLAY_SEED: u64 = 0x5EED;
+
+/// Build a [`Scenario`] named `name` from the journal at `path`.
+pub fn scenario_from_journal(path: &Path, name: &str) -> Result<Scenario, Error> {
+    let records = journal::read(path)?;
+    scenario_from_records(&records, name, path)
+}
+
+fn scenario_from_records(records: &[Record], name: &str, path: &Path) -> Result<Scenario, Error> {
+    if name.is_empty()
+        || !name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+    {
+        return Err(Error::Invalid(format!(
+            "replay: name '{name}' must be non-empty [A-Za-z0-9_-]"
+        )));
+    }
+
+    let mut matrices: Vec<MatrixSpec> = Vec::new();
+    let mut solves = 0usize;
+    let mut interactive = 0usize;
+    let mut with_deadline = 0usize;
+    let mut deadline_min = u64::MAX;
+    let mut deadline_max = 0u64;
+    let mut block_size = 1usize;
+    let mut updates = 0usize;
+    let mut arrivals: Vec<u64> = Vec::new();
+
+    for r in records {
+        match r.ev.kind.as_str() {
+            "register" => {
+                if matrices.iter().any(|m| m.id == r.ev.id) {
+                    continue; // re-registration: keep the first shape
+                }
+                let n = r.ev.nrows.max(1);
+                // Average sub-diagonal entries per row → the `random`
+                // generator's dependency budget (minus the diagonal).
+                let deps = (r.ev.nnz / n).saturating_sub(1).clamp(1, 16);
+                matrices.push(MatrixSpec {
+                    id: r.ev.id.clone(),
+                    kind: "random".to_string(),
+                    n,
+                    scale: 0.02,
+                    bandwidth: 8,
+                    max_deps: deps,
+                    plan: r.ev.plan.clone(),
+                    weight: 0.0, // filled from solve traffic below
+                });
+            }
+            "solve" | "solve_many" => {
+                solves += 1;
+                arrivals.push(r.t_us);
+                if r.ev.interactive {
+                    interactive += 1;
+                }
+                if let Some(d) = r.ev.deadline_us {
+                    with_deadline += 1;
+                    deadline_min = deadline_min.min(d);
+                    deadline_max = deadline_max.max(d);
+                }
+                block_size = block_size.max(r.ev.block);
+                if let Some(m) = matrices.iter_mut().find(|m| m.id == r.ev.id) {
+                    m.weight += 1.0;
+                }
+            }
+            "update_values" => updates += 1,
+            _ => {} // cancel sweeps and future kinds shape nothing here
+        }
+    }
+
+    if matrices.is_empty() {
+        return Err(Error::Invalid(format!("replay: no registrations in {}", path.display())));
+    }
+    if solves == 0 {
+        return Err(Error::Invalid(format!("replay: no solve traffic in {}", path.display())));
+    }
+    // A registered matrix that saw no traffic still replays (weight 1),
+    // matching how it occupied the live service.
+    for m in &mut matrices {
+        if m.weight == 0.0 {
+            m.weight = 1.0;
+        }
+    }
+
+    let span_us = arrivals.last().copied().unwrap_or(0)
+        - arrivals.first().copied().unwrap_or(0);
+    let gap_us = if solves > 1 { span_us / (solves as u64 - 1) } else { 0 };
+
+    let sc = Scenario {
+        name: name.to_string(),
+        seed: REPLAY_SEED,
+        requests: solves,
+        matrices,
+        interactive_fraction: interactive as f64 / solves as f64,
+        deadline_fraction: with_deadline as f64 / solves as f64,
+        deadline_min_us: if with_deadline > 0 { deadline_min } else { 1_000 },
+        deadline_max_us: if with_deadline > 0 {
+            deadline_max.max(deadline_min)
+        } else {
+            100_000
+        },
+        gap_us,
+        burst: 1,
+        block_size,
+        refresh_every: if updates > 0 {
+            (solves / updates).max(1)
+        } else {
+            0
+        },
+    };
+    Ok(sc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::journal::{Event, Journal};
+
+    fn capture(name: &str, events: &[Event]) -> std::path::PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("sptrsv_replay_{}_{name}.jsonl", std::process::id()));
+        let j = Journal::create(&p).unwrap();
+        for ev in events {
+            j.record(ev.clone());
+        }
+        drop(j);
+        p
+    }
+
+    #[test]
+    fn journal_maps_onto_a_faithful_scenario() {
+        let p = capture(
+            "map",
+            &[
+                Event::register("hot", 200, 760, "avgcost"),
+                Event::register("cold", 80, 200, "none"),
+                Event::solve("hot", 1, true, Some(4_000), None),
+                Event::solve("hot", 1, false, Some(9_000), None),
+                Event::solve("hot", 2, false, None, Some("acme")),
+                Event::update("hot"),
+                Event::solve("cold", 1, true, None, None),
+                Event::cancel(),
+            ],
+        );
+        let sc = scenario_from_journal(&p, "replayed").unwrap();
+        std::fs::remove_file(&p).ok();
+
+        assert_eq!(sc.name, "replayed");
+        assert_eq!(sc.requests, 4, "one request per journaled solve event");
+        assert_eq!(sc.matrices.len(), 2);
+        let hot = &sc.matrices[0];
+        assert_eq!(hot.id, "hot");
+        assert_eq!(hot.kind, "random");
+        assert_eq!(hot.n, 200);
+        // 760 nnz over 200 rows ≈ 3.8/row → 2 sub-diagonal deps.
+        assert_eq!(hot.max_deps, 2);
+        assert_eq!(hot.plan, "avgcost");
+        assert_eq!(hot.weight, 3.0, "weighted by observed traffic");
+        assert_eq!(sc.matrices[1].weight, 1.0);
+        // Lane / deadline / block / refresh shape lifted from events.
+        assert_eq!(sc.interactive_fraction, 0.5);
+        assert_eq!(sc.deadline_fraction, 0.5);
+        assert_eq!((sc.deadline_min_us, sc.deadline_max_us), (4_000, 9_000));
+        assert_eq!(sc.block_size, 2);
+        assert_eq!(sc.refresh_every, 4);
+        assert_eq!(sc.burst, 1);
+    }
+
+    #[test]
+    fn rejects_journals_replay_cannot_drive() {
+        let p = capture("noreg", &[Event::solve("ghost", 1, false, None, None)]);
+        assert!(scenario_from_journal(&p, "x").is_err());
+        std::fs::remove_file(&p).ok();
+
+        let p = capture("nosolve", &[Event::register("m", 10, 10, "none")]);
+        assert!(scenario_from_journal(&p, "x").is_err());
+        std::fs::remove_file(&p).ok();
+
+        let p = capture(
+            "badname",
+            &[
+                Event::register("m", 10, 10, "none"),
+                Event::solve("m", 1, false, None, None),
+            ],
+        );
+        assert!(scenario_from_journal(&p, "bad name!").is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn replayed_scenario_runs_deterministically_through_bench() {
+        // The record→replay determinism criterion: the same journal,
+        // replayed twice with the same seed and no deadlines, yields
+        // identical ticket-outcome tallies and lane mixes. (Deadline
+        // misses are wall-clock dependent, so the capture uses none.)
+        let p = capture(
+            "det",
+            &[
+                Event::register("a", 60, 170, "none"),
+                Event::solve("a", 1, true, None, None),
+                Event::solve("a", 1, false, None, None),
+                Event::solve("a", 2, false, None, None),
+                Event::solve("a", 1, true, None, None),
+            ],
+        );
+        let sc = scenario_from_journal(&p, "det").unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(sc.requests, 4);
+
+        let dir = std::env::temp_dir().join(format!("sptrsv_replay_bench_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = crate::config::Config {
+            workers: 2,
+            use_xla: false,
+            bench_out_dir: dir.to_str().unwrap().to_string(),
+            ..Default::default()
+        };
+        let one = crate::bench::run(&sc, &cfg).unwrap();
+        let two = crate::bench::run(&sc, &cfg).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        for r in [&one.report, &two.report] {
+            assert_eq!(r.get("requests").and_then(crate::util::json::Json::as_f64), Some(4.0));
+        }
+        // Identical outcome tallies: every replayed ticket resolved Ok
+        // both times (no deadlines → nothing wall-clock dependent).
+        for out in [&one, &two] {
+            let tickets = out.report.get("tickets").unwrap();
+            assert_eq!(tickets.get("ok").and_then(crate::util::json::Json::as_f64), Some(4.0));
+        }
+        // And the rng-driven lane split is identical run to run.
+        assert_eq!(one.snapshot.interactive.solves, two.snapshot.interactive.solves);
+        assert_eq!(one.snapshot.batch.solves, two.snapshot.batch.solves);
+        assert_eq!(
+            one.snapshot.interactive.solves + one.snapshot.batch.solves,
+            8,
+            "4 requests × block_size 2 right-hand sides"
+        );
+    }
+}

@@ -1,0 +1,225 @@
+//! Trend regression gating: diff two `BENCH_*.json` trajectories and
+//! decide whether the new run regressed. `sptrsv bench --compare
+//! BASE.json NEW.json [--p95-tolerance PCT]` prints the report and
+//! exits nonzero when a gated lane's p95 degraded beyond tolerance —
+//! the CI hook that turns the archived trajectory from a curiosity
+//! into a gate.
+//!
+//! Only per-lane p95 latency gates: it is the serving SLO, and the
+//! log2-bucketed histograms make it stable enough to compare (a p95
+//! can only move in power-of-two steps, so a generous tolerance —
+//! CI uses several hundred percent — separates noise from a real
+//! cliff). Throughput, p50/p99, the deadline-miss rate and the elastic
+//! counters are reported for eyes, not gated: they swing too wildly on
+//! shared CI runners to fail a build over.
+
+use crate::error::Error;
+use crate::util::json::Json;
+
+/// The outcome of one comparison: human-readable lines plus the gate
+/// verdict.
+#[derive(Debug, Clone)]
+pub struct TrendReport {
+    pub lines: Vec<String>,
+    /// true when any gated lane's p95 degraded beyond tolerance
+    pub regressed: bool,
+}
+
+impl std::fmt::Display for TrendReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for l in &self.lines {
+            writeln!(f, "{l}")?;
+        }
+        Ok(())
+    }
+}
+
+fn num(j: &Json, key: &str) -> f64 {
+    j.get(key).and_then(Json::as_f64).unwrap_or(0.0)
+}
+
+fn lane<'a>(report: &'a Json, name: &str) -> Option<&'a Json> {
+    report.get("latency_us").and_then(|l| l.get(name))
+}
+
+fn pct_change(base: f64, new: f64) -> f64 {
+    if base == 0.0 {
+        0.0
+    } else {
+        (new - base) / base * 100.0
+    }
+}
+
+/// Compare two bench reports. `p95_tolerance_pct` is how much worse the
+/// new p95 may be, per lane, before the comparison counts as a
+/// regression (e.g. `50.0` allows up to +50%).
+pub fn compare(base: &Json, new: &Json, p95_tolerance_pct: f64) -> Result<TrendReport, Error> {
+    for (which, j) in [("base", base), ("new", new)] {
+        if j.get("kind").and_then(Json::as_str) != Some("sptrsv-bench") {
+            return Err(Error::Invalid(format!(
+                "compare: {which} report is not a sptrsv-bench trajectory"
+            )));
+        }
+    }
+    let mut lines = Vec::new();
+    let (bv, nv) = (num(base, "schema_version"), num(new, "schema_version"));
+    lines.push(format!(
+        "trend: {} (schema {}) -> {} (schema {}), p95 tolerance +{:.0}%",
+        base.get("scenario").and_then(Json::as_str).unwrap_or("?"),
+        bv,
+        new.get("scenario").and_then(Json::as_str).unwrap_or("?"),
+        nv,
+        p95_tolerance_pct
+    ));
+    if bv != nv {
+        lines.push(format!(
+            "  note: schema versions differ ({bv} vs {nv}); comparing shared fields"
+        ));
+    }
+
+    let (bt, nt) = (num(base, "throughput_rps"), num(new, "throughput_rps"));
+    lines.push(format!("  throughput_rps {bt:.1} -> {nt:.1} ({:+.1}%)", pct_change(bt, nt)));
+    let (bm, nm) = (num(base, "deadline_miss_rate"), num(new, "deadline_miss_rate"));
+    lines.push(format!("  deadline_miss_rate {bm:.4} -> {nm:.4}"));
+
+    let mut regressed = false;
+    for name in ["interactive", "batch", "combined"] {
+        let (Some(b), Some(n)) = (lane(base, name), lane(new, name)) else {
+            lines.push(format!("  {name}: missing in one report, skipped"));
+            continue;
+        };
+        let (bs, ns) = (num(b, "solves"), num(n, "solves"));
+        if bs == 0.0 || ns == 0.0 {
+            lines.push(format!(
+                "  {name}: no traffic in {} run, not gated",
+                if bs == 0.0 { "base" } else { "new" }
+            ));
+            continue;
+        }
+        let (bp95, np95) = (num(b, "p95_us"), num(n, "p95_us"));
+        let delta = pct_change(bp95, np95);
+        let gate_fails = bp95 > 0.0 && delta > p95_tolerance_pct;
+        lines.push(format!(
+            "  {name}: p50 {:.0}->{:.0}us  p95 {bp95:.0}->{np95:.0}us ({delta:+.1}%){}  p99 {:.0}->{:.0}us",
+            num(b, "p50_us"),
+            num(n, "p50_us"),
+            if gate_fails { "  REGRESSED" } else { "" },
+            num(b, "p99_us"),
+            num(n, "p99_us"),
+        ));
+        regressed |= gate_fails;
+    }
+
+    if let (Some(be), Some(ne)) = (base.get("elastic"), new.get("elastic")) {
+        lines.push(format!(
+            "  elastic waits {:.0}->{:.0} ooo {:.0}->{:.0} steals {:.0}->{:.0}",
+            num(be, "waits"),
+            num(ne, "waits"),
+            num(be, "ooo"),
+            num(ne, "ooo"),
+            num(be, "steals"),
+            num(ne, "steals"),
+        ));
+    }
+    lines.push(if regressed {
+        "  verdict: REGRESSED (p95 beyond tolerance)".to_string()
+    } else {
+        "  verdict: ok".to_string()
+    });
+    Ok(TrendReport { lines, regressed })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(p95_interactive: f64, p95_batch: f64, throughput: f64) -> Json {
+        let lane = |p95: f64| {
+            Json::obj(vec![
+                ("solves", Json::Num(10.0)),
+                ("mean_us", Json::Num(p95 / 2.0)),
+                ("p50_us", Json::Num(p95 / 2.0)),
+                ("p95_us", Json::Num(p95)),
+                ("p99_us", Json::Num(p95 * 2.0)),
+            ])
+        };
+        Json::obj(vec![
+            ("schema_version", Json::Num(3.0)),
+            ("kind", Json::Str("sptrsv-bench".to_string())),
+            ("scenario", Json::Str("unit".to_string())),
+            ("throughput_rps", Json::Num(throughput)),
+            ("deadline_miss_rate", Json::Num(0.0)),
+            (
+                "latency_us",
+                Json::obj(vec![
+                    ("interactive", lane(p95_interactive)),
+                    ("batch", lane(p95_batch)),
+                    ("combined", lane(p95_interactive.max(p95_batch))),
+                ]),
+            ),
+            (
+                "elastic",
+                Json::obj(vec![
+                    ("waits", Json::Num(1.0)),
+                    ("ooo", Json::Num(2.0)),
+                    ("steals", Json::Num(3.0)),
+                ]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn equal_runs_pass_the_gate() {
+        let base = report(128.0, 4096.0, 100.0);
+        let t = compare(&base, &base, 50.0).unwrap();
+        assert!(!t.regressed, "{t}");
+        assert!(t.to_string().contains("verdict: ok"), "{t}");
+    }
+
+    #[test]
+    fn p95_beyond_tolerance_regresses_and_within_passes() {
+        let base = report(128.0, 4096.0, 100.0);
+        // Interactive p95 doubled: +100% > 50% tolerance.
+        let worse = report(256.0, 4096.0, 90.0);
+        let t = compare(&base, &worse, 50.0).unwrap();
+        assert!(t.regressed, "{t}");
+        assert!(t.to_string().contains("REGRESSED"), "{t}");
+        // The same doubling passes a 150% tolerance.
+        let t = compare(&base, &worse, 150.0).unwrap();
+        assert!(!t.regressed, "{t}");
+        // An improvement is never a regression.
+        let better = report(64.0, 2048.0, 140.0);
+        let t = compare(&base, &better, 0.0).unwrap();
+        assert!(!t.regressed, "{t}");
+    }
+
+    #[test]
+    fn empty_lanes_and_throughput_are_not_gated() {
+        let mut_lane_zero = |mut j: Json, name: &str| {
+            if let Json::Obj(ref mut o) = j {
+                if let Some(Json::Obj(lat)) = o.get_mut("latency_us") {
+                    if let Some(Json::Obj(l)) = lat.get_mut(name) {
+                        l.insert("solves".to_string(), Json::Num(0.0));
+                        l.insert("p95_us".to_string(), Json::Num(0.0));
+                    }
+                }
+            }
+            j
+        };
+        let base = mut_lane_zero(report(128.0, 4096.0, 100.0), "interactive");
+        let new = mut_lane_zero(report(999_999.0, 4096.0, 1.0), "interactive");
+        // Interactive lane empty in base → skipped; throughput collapse
+        // alone (100 → 1 rps) is informational, never a gate.
+        let t = compare(&base, &new, 50.0).unwrap();
+        assert!(!t.regressed, "{t}");
+        assert!(t.to_string().contains("not gated"), "{t}");
+    }
+
+    #[test]
+    fn refuses_non_bench_files() {
+        let base = report(128.0, 4096.0, 100.0);
+        let junk = Json::obj(vec![("kind", Json::Str("something".to_string()))]);
+        assert!(compare(&base, &junk, 50.0).is_err());
+        assert!(compare(&junk, &base, 50.0).is_err());
+    }
+}

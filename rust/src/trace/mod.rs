@@ -109,6 +109,66 @@ pub struct PhaseTotals {
 }
 
 impl PhaseTotals {
+    /// Field count of the wire array ([`Self::to_array`]).
+    pub const WIRE_LEN: usize = 10;
+
+    /// Flatten into the fixed-order array the shard protocol ships:
+    /// six phase microsecond sums, the span count, then the three
+    /// elastic counters.
+    pub fn to_array(&self) -> [u64; Self::WIRE_LEN] {
+        [
+            self.rewrite_us,
+            self.coarsen_us,
+            self.placement_us,
+            self.renumeric_us,
+            self.execute_us,
+            self.wait_us,
+            self.spans,
+            self.elastic_waits,
+            self.elastic_ooo,
+            self.elastic_steals,
+        ]
+    }
+
+    /// Inverse of [`Self::to_array`].
+    pub fn from_array(a: [u64; Self::WIRE_LEN]) -> PhaseTotals {
+        PhaseTotals {
+            rewrite_us: a[0],
+            coarsen_us: a[1],
+            placement_us: a[2],
+            renumeric_us: a[3],
+            execute_us: a[4],
+            wait_us: a[5],
+            spans: a[6],
+            elastic_waits: a[7],
+            elastic_ooo: a[8],
+            elastic_steals: a[9],
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        *self == PhaseTotals::default()
+    }
+
+    /// Field-wise `self - o`, clamped at zero. Used to turn cumulative
+    /// per-matrix totals polled from a shard into fold-once increments:
+    /// a fresh worker generation restarts from zero, so a plain
+    /// subtraction could underflow right after a respawn.
+    pub fn saturating_sub(&self, o: &PhaseTotals) -> PhaseTotals {
+        PhaseTotals {
+            rewrite_us: self.rewrite_us.saturating_sub(o.rewrite_us),
+            coarsen_us: self.coarsen_us.saturating_sub(o.coarsen_us),
+            placement_us: self.placement_us.saturating_sub(o.placement_us),
+            renumeric_us: self.renumeric_us.saturating_sub(o.renumeric_us),
+            execute_us: self.execute_us.saturating_sub(o.execute_us),
+            wait_us: self.wait_us.saturating_sub(o.wait_us),
+            spans: self.spans.saturating_sub(o.spans),
+            elastic_waits: self.elastic_waits.saturating_sub(o.elastic_waits),
+            elastic_ooo: self.elastic_ooo.saturating_sub(o.elastic_ooo),
+            elastic_steals: self.elastic_steals.saturating_sub(o.elastic_steals),
+        }
+    }
+
     fn add_span(&mut self, phase: Phase, dur: Duration) {
         let us = dur.as_micros() as u64;
         match phase {
@@ -293,6 +353,19 @@ impl Tracer {
         agg.elastic_steals += steals;
     }
 
+    /// Fold a whole pre-aggregated [`PhaseTotals`] delta into `matrix`'s
+    /// aggregate. This is how spans measured in a shard worker's own
+    /// tracer cross back into the coordinator's: the wire carries the
+    /// totals, not the individual spans.
+    pub fn fold_totals(&self, matrix: &str, delta: PhaseTotals) {
+        if !self.enabled() || delta.is_zero() {
+            return;
+        }
+        let mut ring = self.ring.lock().unwrap_or_else(|p| p.into_inner());
+        let agg = ring.aggregates.entry(matrix.to_string()).or_default();
+        *agg = *agg + delta;
+    }
+
     /// Fold buffered spans into the aggregates. The service calls this
     /// after each message; push also folds on overflow.
     pub fn drain(&self) {
@@ -428,6 +501,46 @@ mod tests {
             );
         }
         assert_eq!(r.totals().spans, 1600);
+    }
+
+    #[test]
+    fn wire_array_roundtrips_and_fold_totals_accumulates() {
+        let t = Tracer::new(true, 16);
+        let delta = PhaseTotals {
+            execute_us: 120,
+            wait_us: 7,
+            spans: 2,
+            elastic_waits: 3,
+            elastic_steals: 1,
+            ..Default::default()
+        };
+        assert_eq!(PhaseTotals::from_array(delta.to_array()), delta);
+        t.record("m", Phase::Execute, Duration::from_micros(10));
+        t.fold_totals("m", delta);
+        t.fold_totals("m", delta);
+        // A zero delta is a no-op, not an empty aggregate entry.
+        t.fold_totals("ghost", PhaseTotals::default());
+        let r = t.report();
+        let m = r.get("m").unwrap();
+        assert_eq!(m.execute_us, 250);
+        assert_eq!(m.spans, 5);
+        assert_eq!(m.elastic_waits, 6);
+        assert!(r.get("ghost").is_none());
+        // saturating_sub clamps per field (a respawned worker restarts
+        // its cumulative totals from zero).
+        let older = PhaseTotals {
+            execute_us: 500,
+            spans: 9,
+            ..Default::default()
+        };
+        let inc = delta.saturating_sub(&older);
+        assert_eq!(inc.execute_us, 0);
+        assert_eq!(inc.spans, 0);
+        assert_eq!(inc.elastic_waits, 3);
+        // Disabled tracer ignores folds entirely.
+        let off = Tracer::new(false, 16);
+        off.fold_totals("m", delta);
+        assert!(off.report().matrices.is_empty());
     }
 
     #[test]

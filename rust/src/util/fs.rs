@@ -1,0 +1,70 @@
+//! Filesystem helpers for observability artifacts.
+//!
+//! The serving loop and the bench harness both publish JSON files that
+//! other processes tail concurrently (`--metrics-json` is re-written on
+//! every snapshot while a dashboard polls it; CI reads `BENCH_*.json`
+//! the moment the bench exits). A plain `fs::write` truncates first and
+//! fills in later, so a reader can observe an empty or half-written
+//! file. [`write_atomic`] closes that window: write to a temp file in
+//! the same directory, then `rename` over the target — readers see
+//! either the old complete file or the new complete file, never a torn
+//! one.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Atomically replace `path` with `contents`.
+///
+/// Writes `<path>.tmp.<pid>` in the same directory (rename is only
+/// atomic within a filesystem) and renames it over `path`. The temp
+/// file is removed on any failure.
+pub fn write_atomic(path: &Path, contents: &str) -> std::io::Result<()> {
+    let Some(file_name) = path.file_name().and_then(|n| n.to_str()) else {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!("write_atomic: no file name in {}", path.display()),
+        ));
+    };
+    let tmp = path.with_file_name(format!("{file_name}.tmp.{}", std::process::id()));
+    let res = (|| {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(contents.as_bytes())?;
+        f.sync_all()?;
+        std::fs::rename(&tmp, path)
+    })();
+    if res.is_err() {
+        std::fs::remove_file(&tmp).ok();
+    }
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_atomic_replaces_content_and_leaves_no_temp() {
+        let dir = std::env::temp_dir().join(format!("sptrsv_atomic_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let target = dir.join("out.json");
+
+        write_atomic(&target, "{\"v\":1}\n").unwrap();
+        assert_eq!(std::fs::read_to_string(&target).unwrap(), "{\"v\":1}\n");
+        // Overwrite: readers polling this path never see a truncated file.
+        write_atomic(&target, "{\"v\":2}\n").unwrap();
+        assert_eq!(std::fs::read_to_string(&target).unwrap(), "{\"v\":2}\n");
+
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files must not survive");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn write_atomic_rejects_pathless_targets() {
+        assert!(write_atomic(Path::new(".."), "x").is_err());
+    }
+}

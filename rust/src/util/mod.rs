@@ -9,8 +9,10 @@
 //! * [`timer`] — measurement harness used by `cargo bench` benches
 //! * [`prop`]  — tiny property-based-testing runner (seeded case sweeps)
 //! * [`cli`]   — flag/positional argument parser for the `sptrsv` binary
+//! * [`fs`]    — atomic file publication for metrics/bench artifacts
 
 pub mod cli;
+pub mod fs;
 pub mod json;
 pub mod prop;
 pub mod rng;

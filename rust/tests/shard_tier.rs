@@ -142,6 +142,64 @@ fn killed_worker_resolves_tickets_respawns_once_and_reregisters_warm() {
 }
 
 #[test]
+fn sharded_trace_report_carries_worker_execute_across_respawn() {
+    let cfg = Config {
+        trace_enabled: true,
+        // Kill the routed worker right before the third solve dispatch:
+        // two solves land pre-crash, the rest after the respawn.
+        chaos_kill_shard_after: 3,
+        ..sharded_cfg()
+    };
+    let svc = Service::start(cfg);
+    let h = svc.handle();
+
+    let a = generate::lung2_like(&GenOptions::with_scale(0.03));
+    let b = generate::tridiagonal(3000, &Default::default());
+    let (na, nb) = (a.nrows, b.nrows);
+    let ha = h.register("a", a, spec("avgcost")).unwrap();
+    let hb = h.register("b", b, spec("none")).unwrap();
+
+    ha.solve(vec![1.0; na]).unwrap();
+    hb.solve(vec![1.0; nb]).unwrap();
+
+    let before = h.trace_report().unwrap();
+    let (ba, bb) = (*before.get("a").unwrap(), *before.get("b").unwrap());
+    // Execute is measured inside the worker process and carried back on
+    // the solve response; a coordinator that never folded worker deltas
+    // would report flat zero-execute totals here.
+    assert!(ba.execute_us > 0, "worker-sourced execute for 'a': {ba:?}");
+    assert!(bb.execute_us > 0, "worker-sourced execute for 'b': {bb:?}");
+    assert!(ba.spans >= 1 && bb.spans >= 1, "per-matrix spans attributed");
+
+    // The third dispatch hits the chaos hook; its ticket resolves as a
+    // typed Backend failure while the supervisor respawns the shard.
+    match ha.solve(vec![1.0; na]) {
+        Err(ServiceError::Backend(_)) => {}
+        other => panic!("expected Backend failure from the killed shard, got {other:?}"),
+    }
+
+    // Post-respawn traffic lands on a fresh worker whose own cumulative
+    // counters restart at zero; the supervisor's retirement bookkeeping
+    // must keep the folded report monotone — pre-crash spans stay
+    // counted, new worker deltas keep accumulating.
+    for _ in 0..3 {
+        ha.solve(vec![1.0; na]).unwrap();
+        hb.solve(vec![1.0; nb]).unwrap();
+    }
+    let after = h.trace_report().unwrap();
+    let (aa, ab) = (*after.get("a").unwrap(), *after.get("b").unwrap());
+    assert!(aa.execute_us > ba.execute_us, "'a' execute grew past the respawn");
+    assert!(ab.execute_us > bb.execute_us, "'b' execute grew past the respawn");
+    assert!(aa.spans >= ba.spans + 3, "no 'a' spans lost across the respawn");
+    assert!(ab.spans >= bb.spans + 3, "no 'b' spans lost across the respawn");
+
+    let snap = h.metrics().unwrap();
+    assert_eq!(snap.shard_crashes, 1, "exactly one chaos crash");
+    assert_eq!(snap.shard_respawns, 1, "exactly one respawn");
+    svc.shutdown();
+}
+
+#[test]
 fn unstartable_pool_degrades_to_in_process_serving() {
     let cfg = Config {
         shard_worker_bin: "/nonexistent/sptrsv-worker".to_string(),
