@@ -1,0 +1,30 @@
+# Convenience wrappers for the multi-step flows CI runs. The workspace
+# itself builds with plain cargo; nothing here is required for `cargo
+# build` / `cargo test`.
+
+CARGO ?= cargo
+BIN   := target/release/sptrsv
+
+.PHONY: build test bench-smoke bench-precond refresh-baseline
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+bench-smoke: build
+	$(BIN) bench --scenario scenarios/smoke.json --bench-out-dir bench-out
+
+bench-precond: build
+	$(BIN) bench --scenario scenarios/precond_serving.json --bench-out-dir bench-out
+
+# Re-capture the checked-in trend baseline from a fresh smoke run on
+# THIS machine. The baseline is the reference shape for the trend gate
+# (`sptrsv bench --compare`), so refresh it deliberately — on a quiet
+# machine — and commit the diff this produces. CI exposes the same flow
+# behind a manual workflow_dispatch run.
+refresh-baseline: build
+	$(BIN) bench --scenario scenarios/smoke.json --bench-out-dir bench-out
+	cp bench-out/BENCH_smoke.json scenarios/BASELINE_smoke.json
+	@echo "scenarios/BASELINE_smoke.json refreshed; review and commit the diff"

@@ -18,7 +18,10 @@
 //! cancellations, cancel wakeups, deadline misses and value refreshes
 //! are all visible.
 //!
-//! Two further tours follow the in-process one: the **sharded executor**
+//! Three further tours follow the in-process one: the **inexact solve
+//! tier** (jacobi plans serving toleranced requests with certified
+//! residuals, sweep escalation, exact fallback, and the typed
+//! `AccuracyUnsatisfiable` rejection), the **sharded executor**
 //! (`executor = "sharded:2"`) serving the same client API from a pool of
 //! shard worker processes (skipped with a note when the `sptrsv` CLI is
 //! not built yet — run `cargo build --release` first), and **tenant
@@ -172,8 +175,76 @@ fn main() -> anyhow::Result<()> {
     println!("metrics: {}", h.metrics()?);
     svc.shutdown();
 
+    inexact_tour()?;
     sharded_tour()?;
     quota_tour()?;
+    Ok(())
+}
+
+/// Accuracy as a request property: toleranced solves served by an
+/// inexact jacobi plan, certified against `‖Lx−b‖∞/‖b‖∞`, with the
+/// exact tier as the safety net.
+///
+/// A request states its bound (`SolveOptions::tolerance`), a matrix
+/// states a default for requests that do not
+/// (`RegisterOptions::default_tolerance`), and `default_tolerance` in
+/// the config backstops both. A request with no bound anywhere demands
+/// exactness — on a jacobi plan that means an automatic fallback to the
+/// exact tier, counted in the metrics. Unsatisfiable bounds come back as
+/// the typed `ServiceError::AccuracyUnsatisfiable` instead of silently
+/// returning a residual that misses.
+fn inexact_tour() -> anyhow::Result<()> {
+    println!("\n-- inexact solve tier (jacobi plans + tolerances) --");
+    let cfg = Config {
+        workers: 2,
+        use_xla: false,
+        ..Default::default()
+    };
+    let svc = Service::start(cfg);
+    let h = svc.handle();
+
+    // An ILU(0)-like lower factor served by four Jacobi sweeps over the
+    // rewritten system; registration pins the matrix-level default
+    // bound, so plain solve() calls inherit 1e-8.
+    let m = generate::poisson2d_ilu(24, 24, &Default::default());
+    let handle = h.register_with(
+        "precond",
+        m.clone(),
+        RegisterOptions::new()
+            .plan(PlanSpec::parse("none+jacobi:4").map_err(anyhow::Error::msg)?)
+            .default_tolerance(1e-8),
+    )?;
+    println!("registered precond (plan={})", handle.plan);
+
+    let b = vec![1.0; m.nrows];
+    let x = handle.solve(b.clone())?;
+    let achieved = m.residual_inf(&x, &b);
+    println!("matrix-default tolerance 1e-8: achieved residual {achieved:.3e}");
+    anyhow::ensure!(achieved <= 1e-8, "certified bound violated");
+
+    // A per-request bound overrides the matrix default. The service
+    // escalates sweeps (up to jacobi_max_sweeps) until the tighter bound
+    // certifies, and remembers the escalated budget for this matrix.
+    let x = handle.solve_with(b.clone(), SolveOptions::new().tolerance(1e-12))?;
+    println!(
+        "per-request tolerance 1e-12: achieved residual {:.3e}",
+        m.residual_inf(&x, &b)
+    );
+
+    // Impossible bounds fail typed, not silently loose.
+    match handle.solve_with(b.clone(), SolveOptions::new().tolerance(1e-300)) {
+        Err(ServiceError::AccuracyUnsatisfiable(why)) => {
+            println!("tolerance 1e-300 rejected: {why}");
+        }
+        other => println!("unexpectedly satisfiable: {:?}", other.map(|x| x.len())),
+    }
+
+    let snap = h.metrics()?;
+    println!(
+        "accuracy ledger: certified={} worst={:.3e} fallbacks={} escalations={}",
+        snap.residual_solves, snap.residual_max, snap.fallbacks_to_exact, snap.sweep_escalations
+    );
+    svc.shutdown();
     Ok(())
 }
 

@@ -634,6 +634,31 @@ mod tests {
     }
 
     #[test]
+    fn jacobi_exec_flows_through_analysis_and_refresh() {
+        // The iterative backends ride the same analyze/refresh lifecycle
+        // as every exact exec: no schedule is built, the rewrite still
+        // applies, and a value refresh replays numerics without
+        // structural passes.
+        let m = generate::tridiagonal(120, &Default::default());
+        let mut a = analyze(&m, &PlanSpec::parse("manual:5+jacobi:4").unwrap(), &opts()).unwrap();
+        assert!(a.schedule().is_none());
+        assert_eq!(a.rebuilds().coarsen_passes, 0);
+        let b = vec![1.0; m.nrows];
+        let j = a.solver().jacobi().unwrap();
+        let mut x = vec![0.0; m.nrows];
+        // At the nilpotency index the iteration is exact.
+        j.solve_with_sweeps(&b, j.exact_sweeps(), &mut x);
+        assert!(m.residual_inf(&x, &b) < 1e-9);
+        let m2 = perturb(&m, 5);
+        a.refresh_values(&m2).unwrap();
+        assert_eq!(a.rebuilds().renumeric_passes, 1);
+        let j = a.solver().jacobi().unwrap();
+        let mut x2 = vec![0.0; m.nrows];
+        j.solve_with_sweeps(&b, j.exact_sweeps(), &mut x2);
+        assert!(m2.residual_inf(&x2, &b) < 1e-9);
+    }
+
+    #[test]
     fn every_exec_axis_refreshes() {
         let m = generate::lung2_like(&GenOptions::with_scale(0.03));
         let mut rng = Rng::new(11);

@@ -54,7 +54,13 @@ pub use scenario::{MatrixSpec, Scenario};
 ///   trajectories carry the full latency distribution rather than just
 ///   three percentiles; the embedded `metrics` snapshot gains
 ///   `shard_health` and `lane_hist`.
-pub const BENCH_SCHEMA_VERSION: u64 = 3;
+/// * 4 — scenarios gain a `tolerance` distribution (share of requests
+///   carrying an accuracy bound) and the report gains the matching
+///   `accuracy` object: `residual_solves` / `residual_max` /
+///   `fallbacks_to_exact` / `sweep_escalations` from the inexact solve
+///   tier; the embedded `metrics` snapshot gains `residual_hist` and the
+///   same accuracy counters.
+pub const BENCH_SCHEMA_VERSION: u64 = 4;
 
 const KIND: &str = "sptrsv-bench";
 
@@ -164,6 +170,9 @@ pub fn run(sc: &Scenario, cfg: &Config) -> Result<BenchOutcome, Error> {
         let mut opts = SolveOptions::new();
         if rng.chance(sc.interactive_fraction) {
             opts = opts.priority(crate::coordinator::Lane::Interactive);
+        }
+        if rng.chance(sc.tolerance_fraction) {
+            opts = opts.tolerance(sc.tolerance);
         }
         if rng.chance(sc.deadline_fraction) {
             let us = rng.uniform(sc.deadline_min_us as f64, sc.deadline_max_us as f64);
@@ -356,6 +365,24 @@ fn build_report(
                 ("reregistered", Json::Num(snap.shard_reregistered as f64)),
             ]),
         ),
+        // Schema 4: the inexact solve tier's accuracy ledger. Every
+        // toleranced solve either certified its residual (counted here
+        // with the worst bound achieved) or fell back to exact.
+        (
+            "accuracy",
+            Json::obj(vec![
+                ("residual_solves", Json::Num(snap.residual_solves as f64)),
+                ("residual_max", Json::Num(snap.residual_max)),
+                (
+                    "fallbacks_to_exact",
+                    Json::Num(snap.fallbacks_to_exact as f64),
+                ),
+                (
+                    "sweep_escalations",
+                    Json::Num(snap.sweep_escalations as f64),
+                ),
+            ]),
+        ),
         ("phases_us", phases),
         ("trace", trace.to_json()),
         ("metrics", snap.to_json()),
@@ -400,6 +427,31 @@ mod tests {
     }
 
     #[test]
+    fn precond_scenario_file_mixes_exact_and_inexact_traffic() {
+        let sc = Scenario::load(std::path::Path::new(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/scenarios/precond_serving.json"
+        )))
+        .unwrap();
+        assert_eq!(sc.name, "precond_serving");
+        assert!(sc.requests <= 128, "precond smoke must stay CI-fast");
+        assert!(
+            sc.tolerance_fraction > 0.0 && sc.tolerance_fraction < 1.0,
+            "the scenario mixes toleranced and exact-only requests"
+        );
+        assert!(sc.tolerance > 0.0);
+        assert!(
+            sc.matrices.iter().any(|m| m.plan.contains("jacobi")),
+            "at least one matrix serves from an iterative plan"
+        );
+        assert!(
+            sc.matrices.iter().any(|m| !m.plan.is_empty() && !m.plan.contains("jacobi")),
+            "at least one matrix stays on an exact plan"
+        );
+        assert!(sc.refresh_every > 0, "refreshes exercise iterative renumeric");
+    }
+
+    #[test]
     fn replay_emits_a_schema_stamped_report() {
         let sc = Scenario::parse(
             r#"{
@@ -407,11 +459,12 @@ mod tests {
                 "seed": 3,
                 "requests": 10,
                 "matrices": [
-                    {"id": "tri", "kind": "tridiagonal", "n": 60, "plan": "none"},
+                    {"id": "tri", "kind": "tridiagonal", "n": 60, "plan": "none+jacobi:2"},
                     {"id": "sch", "kind": "lung2", "scale": 0.02,
                      "plan": "avgcost+scheduled", "weight": 2}
                 ],
                 "interactive_fraction": 0.5,
+                "tolerance": {"fraction": 1.0, "bound": 1e-6},
                 "refresh_every": 5
             }"#,
         )
@@ -469,6 +522,17 @@ mod tests {
             let buckets = hist.get(lane).and_then(Json::as_arr).unwrap();
             let total: f64 = buckets.iter().filter_map(Json::as_f64).sum();
             assert_eq!(total, solves as f64, "{lane} histogram mass");
+        }
+        // Schema-4 addition: the accuracy ledger. Every request above
+        // carries a 1e-6 bound, so residuals were certified (inexact or
+        // exact path) and the worst one observed stayed under the bound.
+        let acc = j.get("accuracy").unwrap();
+        let certified = acc.get("residual_solves").and_then(Json::as_f64).unwrap();
+        assert!(certified > 0.0, "toleranced traffic certifies residuals");
+        let worst = acc.get("residual_max").and_then(Json::as_f64).unwrap();
+        assert!(worst <= 1e-6, "worst residual {worst:.3e} over the bound");
+        for k in ["fallbacks_to_exact", "sweep_escalations"] {
+            assert!(acc.get(k).and_then(Json::as_f64).is_some(), "{k}");
         }
         // The replay actually drove solves through both the trace and the
         // metrics: 10 requests, all delivered.

@@ -19,6 +19,7 @@
 //!     {"id": "tri", "kind": "tridiagonal", "n": 200, "plan": "none"}
 //!   ],
 //!   "interactive_fraction": 0.25,
+//!   "tolerance": {"fraction": 0.5, "bound": 1e-8},
 //!   "deadline": {"fraction": 0.5, "min_us": 2000, "max_us": 50000},
 //!   "arrival": {"gap_us": 100, "burst": 4},
 //!   "block_size": 1,
@@ -95,6 +96,12 @@ pub struct Scenario {
     pub matrices: Vec<MatrixSpec>,
     /// share of requests riding the interactive lane, in `[0, 1]`
     pub interactive_fraction: f64,
+    /// share of requests carrying an accuracy tolerance, in `[0, 1]` —
+    /// these may be served by inexact (iterative) plans as long as the
+    /// certified residual stays under [`Scenario::tolerance`]
+    pub tolerance_fraction: f64,
+    /// the relative-residual bound toleranced requests carry
+    pub tolerance: f64,
     /// share of requests carrying a deadline, in `[0, 1]`
     pub deadline_fraction: f64,
     /// deadline budgets drawn uniformly from `[min_us, max_us]`
@@ -182,6 +189,7 @@ impl Scenario {
         }
         let deadline = root.get("deadline").cloned().unwrap_or(Json::Null);
         let arrival = root.get("arrival").cloned().unwrap_or(Json::Null);
+        let tolerance = root.get("tolerance").cloned().unwrap_or(Json::Null);
         let sc = Scenario {
             name,
             seed: f64_or(&root, "seed", 0x5EED as f64) as u64,
@@ -189,6 +197,8 @@ impl Scenario {
             matrices,
             interactive_fraction: f64_or(&root, "interactive_fraction", 0.0)
                 .clamp(0.0, 1.0),
+            tolerance_fraction: f64_or(&tolerance, "fraction", 0.0).clamp(0.0, 1.0),
+            tolerance: f64_or(&tolerance, "bound", 1e-8),
             deadline_fraction: f64_or(&deadline, "fraction", 0.0).clamp(0.0, 1.0),
             deadline_min_us: f64_or(&deadline, "min_us", 1_000.0) as u64,
             deadline_max_us: f64_or(&deadline, "max_us", 100_000.0) as u64,
@@ -201,6 +211,13 @@ impl Scenario {
             return Err(Error::Invalid(format!(
                 "scenario: deadline max_us {} < min_us {}",
                 sc.deadline_max_us, sc.deadline_min_us
+            )));
+        }
+        if sc.tolerance <= 0.0 || !sc.tolerance.is_finite() {
+            return Err(Error::Invalid(format!(
+                "scenario: tolerance bound {} must be a positive finite \
+                 relative residual",
+                sc.tolerance
             )));
         }
         Ok(sc)
@@ -227,6 +244,7 @@ mod tests {
             {"id": "b", "kind": "lung2", "scale": 0.02, "plan": "avgcost+scheduled"}
         ],
         "interactive_fraction": 0.5,
+        "tolerance": {"fraction": 0.4, "bound": 1e-6},
         "deadline": {"fraction": 0.25, "min_us": 500, "max_us": 2000},
         "arrival": {"gap_us": 10, "burst": 2},
         "block_size": 2,
@@ -245,6 +263,8 @@ mod tests {
         assert_eq!(sc.matrices[0].weight, 3.0);
         assert_eq!(sc.matrices[1].weight, 1.0, "weight defaults to 1");
         assert_eq!(sc.interactive_fraction, 0.5);
+        assert_eq!(sc.tolerance_fraction, 0.4);
+        assert_eq!(sc.tolerance, 1e-6);
         assert_eq!(sc.deadline_fraction, 0.25);
         assert_eq!((sc.deadline_min_us, sc.deadline_max_us), (500, 2000));
         assert_eq!((sc.gap_us, sc.burst), (10, 2));
@@ -261,6 +281,8 @@ mod tests {
         assert_eq!(sc.requests, 64);
         assert_eq!(sc.matrices[0].kind, "lung2");
         assert_eq!(sc.interactive_fraction, 0.0);
+        assert_eq!(sc.tolerance_fraction, 0.0, "exact-only by default");
+        assert_eq!(sc.tolerance, 1e-8);
         assert_eq!(sc.deadline_fraction, 0.0);
         assert_eq!(sc.burst, 1);
         assert_eq!(sc.block_size, 1);
@@ -284,6 +306,11 @@ mod tests {
         assert!(Scenario::parse(
             r#"{"name": "x", "matrices": [{"id": "m"}],
                 "deadline": {"min_us": 100, "max_us": 5}}"#
+        )
+        .is_err());
+        assert!(Scenario::parse(
+            r#"{"name": "x", "matrices": [{"id": "m"}],
+                "tolerance": {"fraction": 0.5, "bound": 0.0}}"#
         )
         .is_err());
     }

@@ -89,6 +89,19 @@ pub struct Config {
     pub bench_out_dir: String,
     /// override the scenario's request count (0 = use the scenario value)
     pub bench_requests: usize,
+    /// service-wide default relative-residual tolerance applied to solves
+    /// that specify none (0.0 = unset: no tolerance unless the request or
+    /// the matrix registration carries one)
+    pub default_tolerance: f64,
+    /// compute the achieved relative residual after every toleranced solve
+    /// and run the accuracy fallback ladder on a miss (default on; when
+    /// off, toleranced requests on iterative plans go straight to the
+    /// exact fallback because nothing can certify them)
+    pub residual_check: bool,
+    /// cap for per-matrix Jacobi sweep auto-escalation: sweeps double on a
+    /// tolerance miss until they reach this bound, then the exact fallback
+    /// takes over
+    pub jacobi_max_sweeps: usize,
     /// any further key=value pairs (kept for extensions/ablations)
     pub extra: BTreeMap<String, String>,
 }
@@ -125,6 +138,9 @@ impl Default for Config {
             journal_path: "sptrsv-journal.jsonl".to_string(),
             bench_out_dir: "bench-out".to_string(),
             bench_requests: 0,
+            default_tolerance: 0.0,
+            residual_check: true,
+            jacobi_max_sweeps: crate::iterative::DEFAULT_MAX_SWEEPS,
             extra: BTreeMap::new(),
         }
     }
@@ -196,6 +212,7 @@ impl Config {
                     | "shard-worker-bin" | "shard-timeout-ms"
                     | "chaos-kill-shard-after" | "trace-enabled" | "journal-enabled"
                     | "journal-path" | "bench-out-dir" | "bench-requests"
+                    | "default-tolerance" | "residual-check" | "jacobi-max-sweeps"
             ) {
                 self.set(&k.replace('-', "_"), v)?;
             }
@@ -281,6 +298,21 @@ impl Config {
             "bench_out_dir" => self.bench_out_dir = val.to_string(),
             "bench_requests" => {
                 self.bench_requests = val.parse().map_err(|_| bad(key, val))?
+            }
+            "default_tolerance" => {
+                let t: f64 = val.parse().map_err(|_| bad(key, val))?;
+                if !t.is_finite() || t < 0.0 {
+                    return Err(bad(key, val));
+                }
+                self.default_tolerance = t;
+            }
+            "residual_check" => self.residual_check = matches!(val, "true" | "1" | "yes"),
+            "jacobi_max_sweeps" => {
+                let s: usize = val.parse().map_err(|_| bad(key, val))?;
+                if s == 0 {
+                    return Err(bad(key, val));
+                }
+                self.jacobi_max_sweeps = s;
             }
             other => {
                 self.extra.insert(other.to_string(), val.to_string());
@@ -544,6 +576,35 @@ mod tests {
         c.merge_args(&args).unwrap();
         assert_eq!(c.analysis_cache_cap, 4);
         assert_eq!(c.analysis_cache_ttl, 60);
+    }
+
+    #[test]
+    fn accuracy_keys_parse_and_merge() {
+        let mut c = Config::default();
+        assert_eq!(c.default_tolerance, 0.0, "no tolerance unless asked");
+        assert!(c.residual_check, "residual checking is on by default");
+        assert_eq!(c.jacobi_max_sweeps, crate::iterative::DEFAULT_MAX_SWEEPS);
+        c.set("default_tolerance", "1e-8").unwrap();
+        c.set("residual_check", "false").unwrap();
+        c.set("jacobi_max_sweeps", "64").unwrap();
+        assert_eq!(c.default_tolerance, 1e-8);
+        assert!(!c.residual_check);
+        assert_eq!(c.jacobi_max_sweeps, 64);
+        assert!(c.set("default_tolerance", "-1e-8").is_err());
+        assert!(c.set("default_tolerance", "NaN").is_err());
+        assert!(c.set("jacobi_max_sweeps", "0").is_err());
+        let args = Args::parse(
+            [
+                "serve", "--default-tolerance", "1e-6", "--residual-check", "true",
+                "--jacobi-max-sweeps", "32",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        c.merge_args(&args).unwrap();
+        assert_eq!(c.default_tolerance, 1e-6);
+        assert!(c.residual_check);
+        assert_eq!(c.jacobi_max_sweeps, 32);
     }
 
     #[test]

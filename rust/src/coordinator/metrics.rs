@@ -19,6 +19,11 @@ use crate::util::json::Json;
 
 const BUCKETS: usize = 40; // 2^0 .. 2^39 microseconds
 const LANES: usize = 2;
+/// Residual histogram: bucket `k` counts batches whose worst achieved
+/// relative residual landed in `[10^-(k+1), 10^-k)`; the last bucket
+/// absorbs everything at or below `10^-RES_BUCKETS` (including exact
+/// zeros).
+const RES_BUCKETS: usize = 20;
 
 fn lane_idx(lane: Lane) -> usize {
     match lane {
@@ -97,6 +102,18 @@ pub struct Metrics {
     shard_crashes: AtomicU64,
     /// gauge: matrices re-registered onto a respawned shard
     shard_reregistered: AtomicU64,
+    /// log10 histogram of worst achieved relative residuals, one entry
+    /// per certified (toleranced) batch
+    residual_hist: [AtomicU64; RES_BUCKETS],
+    /// worst (largest) achieved residual so far, stored as f64 bits —
+    /// valid because certified residuals are non-negative finite floats,
+    /// whose IEEE-754 bit patterns order like the values themselves
+    residual_max_bits: AtomicU64,
+    /// right-hand sides served by the exact backend because an iterative
+    /// plan could not certify the requested tolerance
+    fallbacks_to_exact: AtomicU64,
+    /// sweep-budget doublings paid by the accuracy ladder
+    sweep_escalations: AtomicU64,
     /// per-shard worker health, mirrored from the sharded executor at
     /// snapshot time (empty under the in-process executor)
     shard_health: Mutex<Vec<ShardHealth>>,
@@ -147,6 +164,10 @@ impl Metrics {
             shard_respawns: AtomicU64::new(0),
             shard_crashes: AtomicU64::new(0),
             shard_reregistered: AtomicU64::new(0),
+            residual_hist: std::array::from_fn(|_| AtomicU64::new(0)),
+            residual_max_bits: AtomicU64::new(0),
+            fallbacks_to_exact: AtomicU64::new(0),
+            sweep_escalations: AtomicU64::new(0),
             shard_health: Mutex::new(Vec::new()),
             plan_wins: Mutex::new(BTreeMap::new()),
             matrix_rejections: Mutex::new(BTreeMap::new()),
@@ -244,6 +265,37 @@ impl Metrics {
         self.batches.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one certified batch's worst achieved relative residual
+    /// (only toleranced batches measure one).
+    pub fn record_residual(&self, r: f64) {
+        let bucket = if r <= 0.0 || !r.is_finite() {
+            // Exactly zero (or degenerate input): better than anything
+            // the histogram resolves.
+            RES_BUCKETS - 1
+        } else {
+            (-r.log10()).floor().max(0.0) as usize
+        }
+        .min(RES_BUCKETS - 1);
+        self.residual_hist[bucket].fetch_add(1, Ordering::Relaxed);
+        let bits = r.max(0.0).to_bits();
+        let _ = self.residual_max_bits.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |cur| (bits > cur).then_some(bits),
+        );
+    }
+
+    /// Accuracy-ladder outcomes for one dispatched batch: right-hand
+    /// sides that fell back to the exact path, and sweep doublings paid.
+    pub fn record_accuracy(&self, fallbacks: u64, escalations: u64) {
+        if fallbacks > 0 {
+            self.fallbacks_to_exact.fetch_add(fallbacks, Ordering::Relaxed);
+        }
+        if escalations > 0 {
+            self.sweep_escalations.fetch_add(escalations, Ordering::Relaxed);
+        }
+    }
+
     pub fn record_error(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
@@ -295,6 +347,12 @@ impl Metrics {
             .map(|b| lane_hist.iter().map(|h| h[b]).sum())
             .collect();
         let combined = LaneLatency::from_hist(&combined_hist, lane_total.iter().sum());
+        let residual_hist: Vec<u64> = self
+            .residual_hist
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let residual_solves = residual_hist.iter().sum();
         Snapshot {
             solves: self.solves.load(Ordering::Relaxed),
             batched_solves: self.batched_solves.load(Ordering::Relaxed),
@@ -344,6 +402,11 @@ impl Metrics {
                 .iter()
                 .map(|(k, v)| (k.clone(), *v))
                 .collect(),
+            residual_hist,
+            residual_solves,
+            residual_max: f64::from_bits(self.residual_max_bits.load(Ordering::Relaxed)),
+            fallbacks_to_exact: self.fallbacks_to_exact.load(Ordering::Relaxed),
+            sweep_escalations: self.sweep_escalations.load(Ordering::Relaxed),
             shard_health: self.shard_health.lock().unwrap().clone(),
             interactive: lane(lane_idx(Lane::Interactive)),
             batch: lane(lane_idx(Lane::Batch)),
@@ -466,6 +529,20 @@ pub struct Snapshot {
     pub rejections_by_matrix: Vec<(String, u64)>,
     /// (tenant, quota rejections charged to it), sorted by tenant
     pub rejections_by_tenant: Vec<(String, u64)>,
+    /// log10 histogram of worst achieved relative residuals across
+    /// certified batches: entry `k` counts batches landing in
+    /// `[10^-(k+1), 10^-k)`, last entry absorbs everything tighter
+    pub residual_hist: Vec<u64>,
+    /// certified (toleranced) batches measured into `residual_hist`
+    pub residual_solves: u64,
+    /// worst achieved relative residual across certified batches (0.0
+    /// when nothing was measured)
+    pub residual_max: f64,
+    /// right-hand sides served by the exact fallback because an
+    /// iterative plan could not certify the requested tolerance
+    pub fallbacks_to_exact: u64,
+    /// sweep-budget doublings paid by the accuracy ladder
+    pub sweep_escalations: u64,
     /// per-shard worker liveness, indexed by shard (empty in-process)
     pub shard_health: Vec<ShardHealth>,
     /// interactive-lane latency summary
@@ -540,6 +617,22 @@ impl Snapshot {
             ("coarsen_passes", Json::Num(self.coarsen_passes as f64)),
             ("placement_passes", Json::Num(self.placement_passes as f64)),
             ("renumeric_passes", Json::Num(self.renumeric_passes as f64)),
+            (
+                "residual_hist",
+                Json::Arr(
+                    self.residual_hist
+                        .iter()
+                        .map(|&c| Json::Num(c as f64))
+                        .collect(),
+                ),
+            ),
+            ("residual_solves", Json::Num(self.residual_solves as f64)),
+            ("residual_max", Json::Num(self.residual_max)),
+            (
+                "fallbacks_to_exact",
+                Json::Num(self.fallbacks_to_exact as f64),
+            ),
+            ("sweep_escalations", Json::Num(self.sweep_escalations as f64)),
             ("plan_wins", counts(&self.plan_wins)),
             ("rejections_by_matrix", counts(&self.rejections_by_matrix)),
             ("rejections_by_tenant", counts(&self.rejections_by_tenant)),
@@ -666,6 +759,17 @@ impl std::fmt::Display for Snapshot {
                 write!(f, "{id}={n}")?;
             }
             write!(f, "]")?;
+        }
+        if self.residual_solves + self.fallbacks_to_exact + self.sweep_escalations > 0 {
+            write!(
+                f,
+                ", accuracy certified={} worst_residual={:.1e} \
+                 fallbacks={} escalations={}",
+                self.residual_solves,
+                self.residual_max,
+                self.fallbacks_to_exact,
+                self.sweep_escalations
+            )?;
         }
         if self.sched_blocks > 0 {
             write!(
@@ -990,6 +1094,51 @@ mod tests {
         // Gauges overwrite rather than accumulate.
         m.set_rebuilds(0, 0, 0, 0);
         assert_eq!(m.snapshot().coarsen_passes, 0);
+    }
+
+    #[test]
+    fn residual_accounting_buckets_and_monotone_max() {
+        let m = Metrics::new();
+        // No accuracy activity: the rendering and histogram stay silent.
+        let s = m.snapshot();
+        assert_eq!(s.residual_solves, 0);
+        assert_eq!(s.residual_max, 0.0);
+        assert!(!s.to_string().contains("accuracy"));
+
+        m.record_residual(3.2e-9); // [1e-9, 1e-8) -> bucket 8
+        m.record_residual(5e-5); // [1e-5, 1e-4) -> bucket 4
+        m.record_residual(0.0); // perfect -> last bucket
+        m.record_residual(2.5); // worse than 1 -> bucket 0
+        m.record_accuracy(3, 2);
+        m.record_accuracy(0, 0); // zeros must not disturb anything
+        let s = m.snapshot();
+        assert_eq!(s.residual_solves, 4);
+        assert_eq!(s.residual_hist.len(), RES_BUCKETS);
+        assert_eq!(s.residual_hist[8], 1);
+        assert_eq!(s.residual_hist[4], 1);
+        assert_eq!(s.residual_hist[RES_BUCKETS - 1], 1);
+        assert_eq!(s.residual_hist[0], 1);
+        assert_eq!(s.residual_max, 2.5, "max tracks the worst, monotone");
+        m.record_residual(1e-12);
+        assert_eq!(m.snapshot().residual_max, 2.5, "a better residual never lowers it");
+        assert_eq!(s.fallbacks_to_exact, 3);
+        assert_eq!(s.sweep_escalations, 2);
+        let text = s.to_string();
+        assert!(
+            text.contains("accuracy certified=4 worst_residual=2.5e0 fallbacks=3 escalations=2"),
+            "{text}"
+        );
+        let j = s.to_json();
+        assert_eq!(j.get("residual_solves").unwrap().as_f64(), Some(4.0));
+        assert_eq!(j.get("residual_max").unwrap().as_f64(), Some(2.5));
+        assert_eq!(j.get("fallbacks_to_exact").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("sweep_escalations").unwrap().as_f64(), Some(2.0));
+        let hist = match j.get("residual_hist").unwrap() {
+            Json::Arr(a) => a,
+            other => panic!("expected array, got {other:?}"),
+        };
+        assert_eq!(hist.len(), RES_BUCKETS);
+        assert_eq!(hist[8].as_f64(), Some(1.0));
     }
 
     #[test]

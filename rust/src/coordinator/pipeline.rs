@@ -157,6 +157,9 @@ impl Pipeline {
             // Race on the serving pool: a cache miss must not pay (or be
             // skewed by) spawning a throwaway thread pool.
             pool: Some(Arc::clone(&pool)),
+            // Iterative candidates may only enter the race when the
+            // deployment states an accuracy budget they must certify.
+            tolerance: (cfg.default_tolerance > 0.0).then_some(cfg.default_tolerance),
             ..Default::default()
         });
         // The registry is optional: without artifacts the coordinator

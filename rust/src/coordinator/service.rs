@@ -29,7 +29,7 @@ use crate::coordinator::pipeline::AnalysisSource;
 use crate::error::ServiceError;
 use crate::exec_tier::{self, ExecGauges, Executor};
 use crate::sparse::Csr;
-use crate::telemetry::journal::{Event, Journal};
+use crate::telemetry::journal::{matrix_digest, structure_digest, Event, Journal};
 use crate::trace::{Phase, PhaseTotals, TraceReport, Tracer, DEFAULT_RING_CAPACITY};
 use crate::transform::PlanSpec;
 
@@ -41,7 +41,8 @@ use crate::transform::PlanSpec;
 ///
 /// let opts = SolveOptions::new()
 ///     .deadline(Duration::from_millis(20))
-///     .priority(Lane::Interactive);
+///     .priority(Lane::Interactive)
+///     .tolerance(1e-8);
 /// # let _ = opts;
 /// ```
 #[derive(Debug, Clone, Default)]
@@ -56,6 +57,17 @@ pub struct SolveOptions {
     /// unset. Quota rejections under `tenant_max_pending` are reported
     /// per tenant in the metrics snapshot.
     pub tenant: Option<String>,
+    /// relative-residual bound (`‖Lx−b‖∞/‖b‖∞`) this request will accept.
+    /// Unset falls back to the matrix's registered
+    /// [`RegisterOptions::default_tolerance`], then the service-wide
+    /// `default_tolerance` config key; unset everywhere means the request
+    /// demands the exact path. A stated tolerance lets an iterative plan
+    /// serve the request, but the service *certifies* it: the achieved
+    /// residual is measured, sweep budgets escalate when it misses, and
+    /// the exact backend takes over if the ladder cannot deliver —
+    /// [`ServiceError::AccuracyUnsatisfiable`] only when even the exact
+    /// solve misses the bound.
+    pub tolerance: Option<f64>,
 }
 
 impl SolveOptions {
@@ -84,6 +96,13 @@ impl SolveOptions {
     /// matrix's registered tenant, if any).
     pub fn tenant(mut self, tenant: &str) -> SolveOptions {
         self.tenant = Some(tenant.to_string());
+        self
+    }
+
+    /// Accept any answer whose relative residual is within `tol`
+    /// (overriding the matrix and service defaults).
+    pub fn tolerance(mut self, tol: f64) -> SolveOptions {
+        self.tolerance = Some(tol);
         self
     }
 }
@@ -247,6 +266,10 @@ pub struct RegisterOptions {
     /// are charged to by default; a request's own
     /// [`SolveOptions::tenant`] overrides it
     pub tenant: Option<String>,
+    /// default relative-residual bound for this matrix's requests; a
+    /// request's own [`SolveOptions::tolerance`] overrides it, and the
+    /// service-wide `default_tolerance` config key backstops both
+    pub default_tolerance: Option<f64>,
 }
 
 impl RegisterOptions {
@@ -277,6 +300,12 @@ impl RegisterOptions {
         self.tenant = Some(tenant.to_string());
         self
     }
+
+    /// Default accuracy bound for this matrix's requests.
+    pub fn default_tolerance(mut self, tol: f64) -> RegisterOptions {
+        self.default_tolerance = Some(tol);
+        self
+    }
 }
 
 enum Request {
@@ -303,6 +332,7 @@ enum Request {
         lane: Lane,
         cancelled: Arc<AtomicBool>,
         tenant: Option<String>,
+        tolerance: Option<f64>,
     },
     /// a ticket was cancelled: sweep the queues now so capacity frees up
     /// immediately instead of at the next flush
@@ -539,6 +569,7 @@ impl SolveHandle {
                 lane: opts.lane,
                 cancelled: Arc::clone(&cancelled),
                 tenant: opts.tenant.clone(),
+                tolerance: opts.tolerance,
             })
             .map_err(|_| ServiceError::Shutdown)?;
         Ok((cancelled, submitted))
@@ -610,6 +641,9 @@ struct Waiting {
     /// effective tenant this request's queue usage is charged to
     /// (request override, else the matrix's registered tenant)
     tenant: Option<String>,
+    /// effective accuracy bound, resolved at admission (request, else
+    /// matrix default, else service default); `None` = exact demanded
+    tolerance: Option<f64>,
 }
 
 /// The service loop's per-matrix bookkeeping: the executor owns the
@@ -622,6 +656,8 @@ struct MatrixMeta {
     shed: ShedPolicy,
     /// default tenant for this matrix's requests
     tenant: Option<String>,
+    /// default accuracy bound for this matrix's requests
+    tolerance: Option<f64>,
 }
 
 /// Return `n` queued right-hand sides' worth of quota to `tenant`.
@@ -639,6 +675,9 @@ fn release_tenant(tp: &mut BTreeMap<String, usize>, tenant: &Option<String>, n: 
 fn service_loop(cfg: Config, rx: Receiver<Request>) {
     let max_pending = cfg.max_pending;
     let tenant_cap = cfg.tenant_max_pending;
+    // Service-wide accuracy backstop: 0.0 (the default) means "exact
+    // unless a request or registration says otherwise".
+    let cfg_tolerance = (cfg.default_tolerance > 0.0).then_some(cfg.default_tolerance);
     let sharded = cfg.shard_count().is_some();
     let tracer = Tracer::new(cfg.trace_enabled, DEFAULT_RING_CAPACITY);
     let metrics = Arc::new(Metrics::new());
@@ -698,6 +737,11 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
             }) => {
                 let fresh = !matrices.contains_key(&id);
                 let (nrows, nnz) = (matrix.nrows, matrix.nnz());
+                // Hash the payload before `register` consumes it; replay
+                // uses the digests to flag structural divergence.
+                let hashed = journal
+                    .as_ref()
+                    .map(|_| (matrix_digest(&matrix), structure_digest(&matrix)));
                 let res = executor.register(&id, *matrix, &opts.plan).map(|out| {
                     if let Some((plan, hit)) = &out.tuned {
                         metrics.record_tuner_choice(plan, *hit);
@@ -719,6 +763,7 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                         cap: None,
                         shed: ShedPolicy::RejectNewest,
                         tenant: None,
+                        tolerance: None,
                     });
                     meta.nrows = out.nrows;
                     match (opts.max_pending, fresh) {
@@ -731,11 +776,20 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                         (None, true) => meta.tenant = None,
                         (None, false) => {}
                     }
+                    match (opts.default_tolerance, fresh) {
+                        (Some(t), _) => meta.tolerance = Some(t),
+                        (None, true) => meta.tolerance = None,
+                        (None, false) => {}
+                    }
                     meta.shed = opts.shed_policy;
                     out.info
                 });
                 if let (Some(j), Ok(info)) = (&journal, &res) {
-                    j.record(Event::register(&id, nrows, nnz, &info.plan));
+                    let mut ev = Event::register(&id, nrows, nnz, &info.plan);
+                    if let Some((d, s)) = hashed {
+                        (ev.digest, ev.sdigest) = (Some(d), Some(s));
+                    }
+                    j.record(ev);
                 }
                 let _ = reply.send(res);
             }
@@ -761,6 +815,9 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                             &mut trace_seen,
                         );
                     }
+                    let hashed = journal
+                        .as_ref()
+                        .map(|_| (matrix_digest(&matrix), structure_digest(&matrix)));
                     let res = executor.update_values(&id, *matrix).map(|out| {
                         metrics.record_value_refresh();
                         tracer.record_phases(&id, out.phase_times);
@@ -770,7 +827,11 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                         out.info
                     });
                     if let (Some(j), Ok(_)) = (&journal, &res) {
-                        j.record(Event::update(&id));
+                        let mut ev = Event::update(&id);
+                        if let Some((d, s)) = hashed {
+                            (ev.digest, ev.sdigest) = (Some(d), Some(s));
+                        }
+                        j.record(ev);
                     }
                     let _ = reply.send(res);
                 }
@@ -784,6 +845,7 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                 lane,
                 cancelled,
                 tenant,
+                tolerance,
             }) => {
                 // Journal the offered load as it arrives (before any
                 // admission decision): replay reproduces what clients
@@ -924,6 +986,9 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                                             submitted,
                                             cancelled,
                                             tenant: eff,
+                                            tolerance: tolerance
+                                                .or(meta.tolerance)
+                                                .or(cfg_tolerance),
                                         },
                                     );
                                 }
@@ -945,6 +1010,7 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                                 submitted,
                                 cancelled,
                                 tenant: eff,
+                                tolerance: tolerance.or(meta.tolerance).or(cfg_tolerance),
                             },
                         );
                     }
@@ -1148,10 +1214,27 @@ fn dispatch(
     }
     let exec_start = Instant::now();
 
+    // The batch's accuracy bound is the strictest any member carries —
+    // and one member demanding the exact path (no tolerance) makes the
+    // whole batch exact, since every member is served from the same
+    // dispatched block.
+    let tolerance = live
+        .iter()
+        .map(|q| q.token.tolerance)
+        .reduce(|a, b| match (a, b) {
+            (Some(x), Some(y)) => Some(x.min(y)),
+            _ => None,
+        })
+        .flatten();
+
     let rhs: Vec<Vec<f64>> = live.iter().flat_map(|q| q.rhs.iter().cloned()).collect();
-    match executor.solve_block(id, &rhs) {
+    match executor.solve_block(id, &rhs, tolerance) {
         Ok(out) => {
             metrics.record_batch();
+            if let Some(r) = out.residual {
+                metrics.record_residual(r);
+            }
+            metrics.record_accuracy(out.fallbacks_to_exact, out.sweep_escalations);
             let mut xs = out.xs.into_iter();
             for q in live {
                 let k = q.rhs.len();
@@ -1171,6 +1254,13 @@ fn dispatch(
                     // In-process: the coordinator's bracket IS execution.
                     None => {
                         tracer.record(id, Phase::Execute, exec_start.elapsed());
+                        if out.residual_us > 0 {
+                            tracer.record(
+                                id,
+                                Phase::Residual,
+                                Duration::from_micros(out.residual_us),
+                            );
+                        }
                         let (w, o, s) = out.elastic;
                         tracer.record_elastic(id, w, o, s);
                     }
@@ -1241,6 +1331,72 @@ mod tests {
         assert!(m.residual_inf(&x, &b) < 1e-9);
         let snap = h.metrics().unwrap();
         assert_eq!(snap.solves, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn toleranced_solves_certify_inexact_plans_and_report_residuals() {
+        let svc = Service::start(test_cfg());
+        let h = svc.handle();
+        let m = generate::random_lower(150, 3, 0.8, &Default::default());
+        let handle = h
+            .register("inexact", m.clone(), spec("none+jacobi:2"))
+            .unwrap();
+        assert_eq!(handle.plan, "none+jacobi:2");
+        let b = vec![1.0; 150];
+        // A toleranced request may be served iteratively — but certified:
+        // the answer's residual is within the bound, whatever ladder
+        // escalations or fallbacks that took.
+        let x = handle
+            .solve_with(b.clone(), SolveOptions::new().tolerance(1e-8))
+            .unwrap();
+        // ‖b‖∞ = 1 here, so the absolute residual IS the relative one.
+        assert!(m.residual_inf(&x, &b) <= 1e-8);
+        let snap = h.metrics().unwrap();
+        assert_eq!(snap.solves, 1);
+        assert_eq!(snap.residual_solves, 1, "certified batch measured");
+        assert!(snap.residual_max <= 1e-8);
+        assert!(snap.to_string().contains("accuracy certified=1"));
+
+        // No tolerance anywhere = the exact path is demanded: the
+        // iterative plan falls back and the fallback is observable.
+        let x = handle.solve(b.clone()).unwrap();
+        assert!(m.residual_inf(&x, &b) < 1e-12);
+        let snap = h.metrics().unwrap();
+        assert_eq!(snap.solves, 2);
+        assert_eq!(snap.fallbacks_to_exact, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn registration_default_tolerance_applies_and_impossible_bounds_are_typed() {
+        let svc = Service::start(test_cfg());
+        let h = svc.handle();
+        let m = generate::random_lower(100, 3, 0.8, &Default::default());
+        let handle = h
+            .register_with(
+                "acc",
+                m.clone(),
+                RegisterOptions::new()
+                    .plan(spec("none+jacobi:2"))
+                    .default_tolerance(1e-8),
+            )
+            .unwrap();
+        // Plain solve inherits the registration's bound — served and
+        // certified without the request saying anything.
+        let b = vec![1.0; 100];
+        let x = handle.solve(b.clone()).unwrap();
+        assert!(m.residual_inf(&x, &b) <= 1e-8);
+        let snap = h.metrics().unwrap();
+        assert_eq!(snap.residual_solves, 1);
+        // A bound below what f64 arithmetic can deliver is a typed
+        // failure — after the exact fallback also missed it.
+        assert!(matches!(
+            handle.solve_with(b.clone(), SolveOptions::new().tolerance(1e-300)),
+            Err(ServiceError::AccuracyUnsatisfiable(_))
+        ));
+        let snap = h.metrics().unwrap();
+        assert_eq!(snap.errors, 1);
         svc.shutdown();
     }
 

@@ -50,6 +50,13 @@ pub enum ServiceError {
     /// the backend failed to prepare or solve
     #[error("backend failure: {0}")]
     Backend(String),
+    /// the requested relative-residual tolerance could not be certified
+    /// by any backend on the fallback ladder (iterative sweeps at the
+    /// escalation cap, then the exact fallback) — the request states an
+    /// accuracy no solve can deliver. The message carries the matrix id,
+    /// the requested tolerance and the best residual achieved.
+    #[error("accuracy unsatisfiable: {0}")]
+    AccuracyUnsatisfiable(String),
     /// the service thread has stopped
     #[error("service stopped")]
     Shutdown,

@@ -8,6 +8,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::analysis::BuildCounters;
 use crate::config::Config;
@@ -20,10 +21,24 @@ use crate::transform::PlanSpec;
 
 use super::{ExecGauges, Executor, RegisterOutcome, SolveOutcome};
 
+/// Accuracy bookkeeping one solve accrues (residual checks, ladder
+/// escalations, exact fallbacks).
+#[derive(Debug, Clone, Copy, Default)]
+struct Accuracy {
+    residual: Option<f64>,
+    fallbacks: u64,
+    escalations: u64,
+    residual_us: u64,
+}
+
 pub struct InProcessExecutor {
     pipeline: Pipeline,
     xla: Option<XlaSolver>,
     prepared: BTreeMap<String, Arc<Prepared>>,
+    /// sticky per-matrix sweep budgets: once the accuracy ladder had to
+    /// escalate a matrix, future solves start at the certified budget
+    /// instead of re-climbing from the plan's sweep count
+    escalated: BTreeMap<String, usize>,
 }
 
 impl InProcessExecutor {
@@ -34,6 +49,7 @@ impl InProcessExecutor {
             pipeline,
             xla,
             prepared: BTreeMap::new(),
+            escalated: BTreeMap::new(),
         }
     }
 
@@ -92,10 +108,16 @@ impl Executor for InProcessExecutor {
         Ok(self.outcome(&p, false, AnalysisSource::Refreshed))
     }
 
-    fn solve_block(&mut self, id: &str, rhs: &[Vec<f64>]) -> Result<SolveOutcome, ServiceError> {
+    fn solve_block(
+        &mut self,
+        id: &str,
+        rhs: &[Vec<f64>],
+        tolerance: Option<f64>,
+    ) -> Result<SolveOutcome, ServiceError> {
         let p = self
             .prepared
             .get(id)
+            .map(Arc::clone)
             .ok_or_else(|| ServiceError::NotRegistered(id.to_string()))?;
         // Sample the elastic counters around the block so the stalls it
         // caused are attributable to this matrix.
@@ -115,9 +137,39 @@ impl Executor for InProcessExecutor {
             }
         }
         let batched = served.is_some();
-        let xs = served.unwrap_or_else(|| {
-            rhs.iter().map(|b| solve_rhs(p, &self.xla, b)).collect()
-        });
+        let mut acc = Accuracy::default();
+        let xs = match served {
+            Some(xs) => xs,
+            None if p.native().jacobi().is_some() => {
+                let (xs, a) = solve_inexact(
+                    &mut self.escalated,
+                    &self.pipeline.cfg,
+                    &p,
+                    id,
+                    rhs,
+                    tolerance,
+                )?;
+                acc = a;
+                xs
+            }
+            None => rhs.iter().map(|b| solve_rhs(&p, &self.xla, b)).collect(),
+        };
+        // Exact paths certify too when asked: the achieved residual is
+        // reported, and a tolerance even the exact solve misses is a
+        // typed failure, not a silently wrong answer.
+        if acc.residual.is_none() && self.pipeline.cfg.residual_check {
+            if let Some(tol) = tolerance {
+                let t0 = Instant::now();
+                let worst = worst_residual(p.m(), &xs, rhs);
+                acc.residual_us += t0.elapsed().as_micros() as u64;
+                acc.residual = Some(worst);
+                if worst > tol {
+                    return Err(ServiceError::AccuracyUnsatisfiable(format!(
+                        "'{id}': requested tolerance {tol:.3e}, exact backend achieved {worst:.3e}"
+                    )));
+                }
+            }
+        }
 
         let elastic = match (p.native().scheduled(), elastic_before) {
             (Some(s), Some((w0, o0, s0))) => {
@@ -137,6 +189,10 @@ impl Executor for InProcessExecutor {
             batched,
             elastic,
             trace: None,
+            residual: acc.residual,
+            fallbacks_to_exact: acc.fallbacks,
+            sweep_escalations: acc.escalations,
+            residual_us: acc.residual_us,
         })
     }
 
@@ -167,6 +223,88 @@ impl Executor for InProcessExecutor {
     }
 
     fn shutdown(&mut self) {}
+}
+
+/// Worst relative residual across a solved batch, against the original
+/// system.
+fn worst_residual(m: &Csr, xs: &[Vec<f64>], rhs: &[Vec<f64>]) -> f64 {
+    xs.iter()
+        .zip(rhs)
+        .map(|(x, b)| crate::iterative::relative_residual(m, x, b))
+        .fold(0.0, f64::max)
+}
+
+/// The accuracy ladder for an iterative backend: solve at the sticky
+/// sweep budget, double it (capped at `jacobi_max_sweeps`) until the
+/// tolerance certifies, and serve the batch via the exact serial solve
+/// of the original system when it never does — or immediately, when
+/// there is no tolerance (or no residual checking) to certify with. A
+/// tolerance not even the exact fallback meets is
+/// [`ServiceError::AccuracyUnsatisfiable`].
+fn solve_inexact(
+    escalated: &mut BTreeMap<String, usize>,
+    cfg: &Config,
+    p: &Prepared,
+    id: &str,
+    rhs: &[Vec<f64>],
+    tolerance: Option<f64>,
+) -> Result<(Vec<Vec<f64>>, Accuracy), ServiceError> {
+    let j = p.native().jacobi().expect("iterative backend");
+    let m = p.m();
+    let mut acc = Accuracy::default();
+    let (Some(tol), true) = (tolerance, cfg.residual_check) else {
+        // An inexact answer nobody can certify is not servable: the
+        // request gets the exact solve it implicitly asked for.
+        acc.fallbacks = rhs.len() as u64;
+        let xs = rhs.iter().map(|b| crate::solver::serial::solve(m, b)).collect();
+        return Ok((xs, acc));
+    };
+    let max_sweeps = cfg.jacobi_max_sweeps.max(1);
+    let mut sweeps = escalated
+        .get(id)
+        .copied()
+        .unwrap_or_else(|| j.sweeps())
+        .clamp(1, max_sweeps);
+    let mut xs: Vec<Vec<f64>>;
+    let mut worst: f64;
+    loop {
+        xs = rhs
+            .iter()
+            .map(|b| {
+                let mut x = vec![0.0; m.nrows];
+                j.solve_with_sweeps(b, sweeps, &mut x);
+                x
+            })
+            .collect();
+        let t0 = Instant::now();
+        worst = worst_residual(m, &xs, rhs);
+        acc.residual_us += t0.elapsed().as_micros() as u64;
+        if worst <= tol || sweeps >= max_sweeps {
+            break;
+        }
+        sweeps = (sweeps * 2).min(max_sweeps);
+        acc.escalations += 1;
+    }
+    if worst <= tol {
+        acc.residual = Some(worst);
+        if sweeps > j.sweeps() {
+            escalated.insert(id.to_string(), sweeps);
+        }
+        return Ok((xs, acc));
+    }
+    // The ladder topped out below the tolerance: serve exactly.
+    acc.fallbacks = rhs.len() as u64;
+    let xs: Vec<Vec<f64>> = rhs.iter().map(|b| crate::solver::serial::solve(m, b)).collect();
+    let t0 = Instant::now();
+    let worst = worst_residual(m, &xs, rhs);
+    acc.residual_us += t0.elapsed().as_micros() as u64;
+    if worst > tol {
+        return Err(ServiceError::AccuracyUnsatisfiable(format!(
+            "'{id}': requested tolerance {tol:.3e}, best residual {worst:.3e} after exact fallback"
+        )));
+    }
+    acc.residual = Some(worst);
+    Ok((xs, acc))
 }
 
 /// One right-hand side on the prepared backend (XLA staged with native
@@ -227,10 +365,12 @@ mod tests {
         assert!(out.analysis_cache_hit.is_none(), "no cache configured");
 
         let b = vec![1.0; 120];
-        let sol = ex.solve_block("m", &[b.clone(), b.clone()]).unwrap();
+        let sol = ex.solve_block("m", &[b.clone(), b.clone()], None).unwrap();
         assert_eq!(sol.xs.len(), 2);
         assert!(!sol.batched, "native path");
         assert!(m.residual_inf(&sol.xs[0], &b) < 1e-9);
+        assert_eq!(sol.residual, None, "no tolerance, no residual check");
+        assert_eq!(sol.fallbacks_to_exact, 0);
 
         // Same-id re-registration is memoized, not a fresh tuner call.
         let again = ex
@@ -248,11 +388,11 @@ mod tests {
         let up = ex.update_values("m", m2.clone()).unwrap();
         assert_eq!(up.info.source, AnalysisSource::Refreshed);
         assert_eq!(ex.rebuild_counters().renumeric_passes, before + 1);
-        let sol = ex.solve_block("m", &[b.clone()]).unwrap();
+        let sol = ex.solve_block("m", &[b.clone()], None).unwrap();
         assert!(m2.residual_inf(&sol.xs[0], &b) < 1e-9);
 
         assert!(matches!(
-            ex.solve_block("nope", &[b]),
+            ex.solve_block("nope", &[b], None),
             Err(ServiceError::NotRegistered(_))
         ));
         assert!(matches!(
@@ -268,10 +408,89 @@ mod tests {
         ex.register("s", m.clone(), &PlanSpec::parse("avgcost+scheduled").unwrap())
             .unwrap();
         let b = vec![1.0; m.nrows];
-        ex.solve_block("s", &[b]).unwrap();
+        ex.solve_block("s", &[b], None).unwrap();
         let g = ex.gauges();
         assert!(g.sched_blocks > 0);
         assert_eq!(g.shard_respawns, 0);
         assert!(g.rebuilds.rewrite_passes >= 1);
+    }
+
+    #[test]
+    fn accuracy_ladder_escalates_sticky_then_serves() {
+        // 1 starting sweep on a 60-level chain: the ladder must climb to
+        // certify, and the certified budget sticks for the next solve.
+        let mut ex = InProcessExecutor::new(cfg());
+        let m = generate::tridiagonal(120, &Default::default()); // 120-level chain
+        ex.register("j", m.clone(), &PlanSpec::parse("none+jacobi:1").unwrap())
+            .unwrap();
+        let b = vec![1.0; 120];
+        let sol = ex.solve_block("j", &[b.clone()], Some(1e-10)).unwrap();
+        let r = sol.residual.expect("toleranced solve reports its residual");
+        assert!(r <= 1e-10, "certified residual {r:.3e}");
+        assert!(m.residual_inf(&sol.xs[0], &b) < 1e-8);
+        assert!(sol.sweep_escalations > 0, "1 sweep cannot certify 120 levels");
+        assert_eq!(sol.fallbacks_to_exact, 0, "the ladder certified in-budget");
+        // Second solve starts at the sticky budget: zero new escalations.
+        let again = ex.solve_block("j", &[b.clone()], Some(1e-10)).unwrap();
+        assert_eq!(again.sweep_escalations, 0, "budget is sticky per matrix");
+        assert!(again.residual.unwrap() <= 1e-10);
+        // No tolerance = no certification = exact fallback, still correct.
+        let exact = ex.solve_block("j", &[b.clone()], None).unwrap();
+        assert_eq!(exact.fallbacks_to_exact, 1);
+        assert_eq!(exact.residual, None);
+        assert!(m.residual_inf(&exact.xs[0], &b) < 1e-12);
+    }
+
+    #[test]
+    fn capped_ladder_falls_back_to_exact() {
+        // Cap the budget below the nilpotency index: the ladder cannot
+        // certify and must serve the batch via the exact fallback.
+        let mut ex = InProcessExecutor::new(Config {
+            jacobi_max_sweeps: 2,
+            ..cfg()
+        });
+        let m = generate::tridiagonal(200, &Default::default());
+        ex.register("j", m.clone(), &PlanSpec::parse("none+jacobi:1").unwrap())
+            .unwrap();
+        let b = vec![1.0; 200];
+        let sol = ex
+            .solve_block("j", &[b.clone(), b.clone()], Some(1e-12))
+            .unwrap();
+        assert_eq!(sol.fallbacks_to_exact, 2, "both right-hand sides fell back");
+        assert!(sol.residual.unwrap() <= 1e-12, "exact fallback certifies");
+        for x in &sol.xs {
+            assert!(m.residual_inf(x, &b) < 1e-12);
+        }
+        // residual_check off: toleranced iterative solves skip straight
+        // to the exact fallback instead of serving uncertified answers.
+        let mut ex = InProcessExecutor::new(Config {
+            residual_check: false,
+            ..cfg()
+        });
+        ex.register("j", m.clone(), &PlanSpec::parse("none+jacobi:1").unwrap())
+            .unwrap();
+        let sol = ex.solve_block("j", &[b.clone()], Some(1e-8)).unwrap();
+        assert_eq!(sol.fallbacks_to_exact, 1);
+        assert_eq!(sol.residual, None, "nothing was measured");
+        assert!(m.residual_inf(&sol.xs[0], &b) < 1e-12);
+    }
+
+    #[test]
+    fn exact_backend_certifies_or_rejects_tolerance() {
+        let mut ex = InProcessExecutor::new(cfg());
+        let m = generate::random_lower(100, 3, 0.8, &Default::default());
+        ex.register("e", m.clone(), &PlanSpec::parse("avgcost").unwrap())
+            .unwrap();
+        let b = vec![1.0; 100];
+        let sol = ex.solve_block("e", &[b.clone()], Some(1e-8)).unwrap();
+        assert!(sol.residual.unwrap() <= 1e-8, "exact path reports residual");
+        assert_eq!(sol.fallbacks_to_exact, 0);
+        assert_eq!(sol.sweep_escalations, 0);
+        // A tolerance below what f64 arithmetic can deliver is a typed
+        // failure, not a silently wrong answer.
+        assert!(matches!(
+            ex.solve_block("e", &[b.clone()], Some(1e-300)),
+            Err(ServiceError::AccuracyUnsatisfiable(_))
+        ));
     }
 }

@@ -78,6 +78,35 @@ pub struct SolveOutcome {
     /// tracer to fold. `None` for in-process execution, where the
     /// coordinator brackets the call itself.
     pub trace: Option<PhaseTotals>,
+    /// worst achieved relative residual `‖Lx−b‖∞/‖b‖∞` across the batch,
+    /// measured against the **original** system. `Some` only when the
+    /// call carried a tolerance and residual checking is on.
+    pub residual: Option<f64>,
+    /// right-hand sides this call served via the exact fallback because
+    /// the iterative backend could not certify the tolerance (or there
+    /// was no tolerance to certify against)
+    pub fallbacks_to_exact: u64,
+    /// sweep-budget doublings the accuracy ladder paid during this call
+    pub sweep_escalations: u64,
+    /// wall-clock spent computing residuals (and ladder re-solves) for
+    /// this call, for the [`crate::trace::Phase::Residual`] span
+    pub residual_us: u64,
+}
+
+impl SolveOutcome {
+    /// An outcome with no accuracy bookkeeping (exact path, no tolerance).
+    pub fn plain(xs: Vec<Vec<f64>>, batched: bool, elastic: (u64, u64, u64)) -> SolveOutcome {
+        SolveOutcome {
+            xs,
+            batched,
+            elastic,
+            trace: None,
+            residual: None,
+            fallbacks_to_exact: 0,
+            sweep_escalations: 0,
+            residual_us: 0,
+        }
+    }
 }
 
 /// One shard worker's health as the supervisor sees it, surfaced into
@@ -136,7 +165,20 @@ pub trait Executor: Send {
     /// prepared analysis. An error applies to the whole batch (the
     /// service replies it to every ticket — a dead shard must resolve
     /// tickets, never hang them).
-    fn solve_block(&mut self, id: &str, rhs: &[Vec<f64>]) -> Result<SolveOutcome, ServiceError>;
+    ///
+    /// `tolerance` is the strictest relative-residual bound any request
+    /// in the batch carries (`None` = the batch demands the exact path).
+    /// An iterative backend must certify it — escalating its sweep
+    /// budget and falling back to the exact solve when it cannot — and
+    /// reports the achieved residual in the outcome; a batch whose
+    /// tolerance not even the exact solve meets fails with
+    /// [`ServiceError::AccuracyUnsatisfiable`].
+    fn solve_block(
+        &mut self,
+        id: &str,
+        rhs: &[Vec<f64>],
+        tolerance: Option<f64>,
+    ) -> Result<SolveOutcome, ServiceError>;
 
     /// Fold executor-side gauges (schedule stats, elastic counters,
     /// structural-pass totals, shard health) for the metrics snapshot.

@@ -77,11 +77,18 @@ pub fn register_req(op: &str, id: &str, m: &Csr, plan: &str) -> Json {
     ])
 }
 
-pub fn solve_req(id: &str, rhs: &[Vec<f64>]) -> Json {
+pub fn solve_req(id: &str, rhs: &[Vec<f64>], tolerance: Option<f64>) -> Json {
     Json::obj(vec![
         ("op", Json::Str("solve".to_string())),
         ("id", Json::Str(id.to_string())),
         ("rhs", Json::Arr(rhs.iter().map(|b| num_arr(b)).collect())),
+        (
+            "tol",
+            match tolerance {
+                Some(t) => Json::Num(t),
+                None => Json::Null,
+            },
+        ),
     ])
 }
 
@@ -141,10 +148,12 @@ pub fn err_response(e: &ServiceError) -> Json {
     let kind = match e {
         ServiceError::NotRegistered(_) => "not_registered",
         ServiceError::InvalidRequest(_) => "invalid",
+        ServiceError::AccuracyUnsatisfiable(_) => "accuracy",
         _ => "backend",
     };
     let msg = match e {
         ServiceError::NotRegistered(id) => id.clone(),
+        ServiceError::AccuracyUnsatisfiable(m) => m.clone(),
         other => other.to_string(),
     };
     Json::obj(vec![
@@ -164,6 +173,7 @@ pub fn response_error(j: &Json) -> ServiceError {
     match j.get("kind").and_then(Json::as_str) {
         Some("not_registered") => ServiceError::NotRegistered(msg),
         Some("invalid") => ServiceError::InvalidRequest(msg),
+        Some("accuracy") => ServiceError::AccuracyUnsatisfiable(msg),
         _ => ServiceError::Backend(msg),
     }
 }
@@ -295,6 +305,21 @@ pub fn solve_response(out: &SolveOutcome) -> Json {
             u64_arr(&[out.elastic.0, out.elastic.1, out.elastic.2]),
         ),
         ("trace", opt_totals(&out.trace)),
+        (
+            "residual",
+            match out.residual {
+                Some(r) => Json::Num(r),
+                None => Json::Null,
+            },
+        ),
+        (
+            "accuracy",
+            u64_arr(&[
+                out.fallbacks_to_exact,
+                out.sweep_escalations,
+                out.residual_us,
+            ]),
+        ),
     ])
 }
 
@@ -311,11 +336,19 @@ pub fn solve_from_response(j: &Json) -> Result<SolveOutcome, String> {
     if e.len() != 3 {
         return Err("elastic must have 3 entries".to_string());
     }
+    // Accuracy fields default to "nothing measured" so frames from a
+    // worker predating the inexact tier still decode.
+    let acc = u64_vec(j.get("accuracy")).unwrap_or_default();
+    let acc3 = |i: usize| acc.get(i).copied().unwrap_or(0);
     Ok(SolveOutcome {
         xs,
         batched,
         elastic: (e[0], e[1], e[2]),
         trace: totals_from(j.get("trace")),
+        residual: j.get("residual").and_then(Json::as_f64),
+        fallbacks_to_exact: acc3(0),
+        sweep_escalations: acc3(1),
+        residual_us: acc3(2),
     })
 }
 
@@ -466,7 +499,7 @@ mod tests {
     fn frames_roundtrip_and_eof_is_clean() {
         let mut buf = Vec::new();
         let a = register_req("register", "m1", &tiny(), "auto");
-        let b = solve_req("m1", &[vec![1.0, 2.5], vec![3.0, -4.0]]);
+        let b = solve_req("m1", &[vec![1.0, 2.5], vec![3.0, -4.0]], Some(1e-8));
         write_frame(&mut buf, &a).unwrap();
         write_frame(&mut buf, &b).unwrap();
         let mut r = Cursor::new(buf);
@@ -497,6 +530,7 @@ mod tests {
         for e in [
             ServiceError::NotRegistered("m9".to_string()),
             ServiceError::InvalidRequest("bad rhs".to_string()),
+            ServiceError::AccuracyUnsatisfiable("tol 1e-12, got 3e-9".to_string()),
             ServiceError::Backend("boom".to_string()),
         ] {
             let j = err_response(&e);
@@ -522,19 +556,39 @@ mod tests {
                 elastic_steals: 2,
                 ..Default::default()
             }),
+            residual: Some(4.2e-11),
+            fallbacks_to_exact: 1,
+            sweep_escalations: 3,
+            residual_us: 55,
         };
         let back = solve_from_response(&solve_response(&out)).unwrap();
         assert_eq!(back.xs, out.xs);
         assert!(back.batched);
         assert_eq!(back.elastic, (7, 3, 2));
         assert_eq!(back.trace, out.trace, "worker trace delta crosses the wire");
+        assert_eq!(back.residual, Some(4.2e-11), "residual crosses the wire");
+        assert_eq!(back.fallbacks_to_exact, 1);
+        assert_eq!(back.sweep_escalations, 3);
+        assert_eq!(back.residual_us, 55);
         // A trace-less solve (in-process, or tracing off) stays None.
         let plain = SolveOutcome {
             trace: None,
+            residual: None,
             ..out.clone()
         };
         let back = solve_from_response(&solve_response(&plain)).unwrap();
         assert_eq!(back.trace, None);
+        assert_eq!(back.residual, None);
+        // Frames from a pre-inexact worker (no accuracy keys) decode to
+        // "nothing measured" instead of erroring.
+        let mut legacy = solve_response(&plain);
+        if let Json::Obj(map) = &mut legacy {
+            map.retain(|(k, _)| k != "accuracy" && k != "residual");
+        }
+        let back = solve_from_response(&legacy).unwrap();
+        assert_eq!(back.residual, None);
+        assert_eq!(back.fallbacks_to_exact, 0);
+        assert_eq!(back.residual_us, 0);
 
         let g = ExecGauges {
             sched_blocks: 12,

@@ -284,7 +284,12 @@ impl Executor for ShardPoolExecutor {
         Ok(out)
     }
 
-    fn solve_block(&mut self, id: &str, rhs: &[Vec<f64>]) -> Result<SolveOutcome, ServiceError> {
+    fn solve_block(
+        &mut self,
+        id: &str,
+        rhs: &[Vec<f64>],
+        tolerance: Option<f64>,
+    ) -> Result<SolveOutcome, ServiceError> {
         let Some(k) = self.roster.get(id).map(|e| e.shard) else {
             return Err(ServiceError::NotRegistered(id.to_string()));
         };
@@ -301,7 +306,7 @@ impl Executor for ShardPoolExecutor {
                 self.chaos_countdown = Some(n - 1);
             }
         }
-        let req = protocol::solve_req(id, rhs);
+        let req = protocol::solve_req(id, rhs, tolerance);
         let resp = self.request(k, &req, "solve")?;
         protocol::solve_from_response(&resp).map_err(ServiceError::Backend)
     }
@@ -427,7 +432,16 @@ fn spawn_shard(cfg: &Config, k: usize) -> std::io::Result<Shard> {
         .arg("--tuner-race-solves")
         .arg(cfg.tuner_race_solves.to_string())
         .arg("--tuner-cache-ttl")
-        .arg(cfg.tuner_cache_ttl.to_string());
+        .arg(cfg.tuner_cache_ttl.to_string())
+        // Accuracy policy crosses the process boundary too: the worker's
+        // executor runs the sweep ladder, so it needs the same budget
+        // caps and certification toggles the coordinator was given.
+        .arg("--default-tolerance")
+        .arg(cfg.default_tolerance.to_string())
+        .arg("--residual-check")
+        .arg(if cfg.residual_check { "true" } else { "false" })
+        .arg("--jacobi-max-sweeps")
+        .arg(cfg.jacobi_max_sweeps.to_string());
     if !cfg.artifacts_dir.is_empty() {
         cmd.arg("--artifacts-dir").arg(&cfg.artifacts_dir);
     }

@@ -113,17 +113,26 @@ fn handle_solve(exec: &mut InProcessExecutor, tracer: &Tracer, req: &Json) -> Js
     let Some(rhs) = rhs else {
         return invalid(format!("solve '{id}' with malformed rhs"));
     };
+    let tol = req.get("tol").and_then(Json::as_f64);
     let start = Instant::now();
-    match exec.solve_block(id, &rhs) {
+    match exec.solve_block(id, &rhs, tol) {
         Ok(mut out) => {
             if tracer.enabled() {
                 let dur = start.elapsed();
                 tracer.record(id, Phase::Execute, dur);
+                if out.residual_us > 0 {
+                    tracer.record(
+                        id,
+                        Phase::Residual,
+                        std::time::Duration::from_micros(out.residual_us),
+                    );
+                }
                 let (w, o, s) = out.elastic;
                 tracer.record_elastic(id, w, o, s);
                 out.trace = Some(PhaseTotals {
                     execute_us: dur.as_micros() as u64,
-                    spans: 1,
+                    residual_us: out.residual_us,
+                    spans: 1 + u64::from(out.residual_us > 0),
                     elastic_waits: w,
                     elastic_ooo: o,
                     elastic_steals: s,
@@ -149,8 +158,9 @@ mod tests {
         let mut reqs = Vec::new();
         for frame in [
             protocol::register_req("register", "a", &m, "avgcost"),
-            protocol::solve_req("a", &[b.clone(), b.clone()]),
-            protocol::solve_req("ghost", &[b.clone()]),
+            protocol::solve_req("a", &[b.clone(), b.clone()], None),
+            protocol::solve_req("a", &[b.clone()], Some(1e-8)),
+            protocol::solve_req("ghost", &[b.clone()], None),
             Json::obj(vec![("op", Json::Str("launder".into()))]),
             protocol::gauges_req(),
             protocol::shutdown_req(),
@@ -184,6 +194,15 @@ mod tests {
         // With tracing on, the worker embeds its measured Execute delta.
         let delta = sol.trace.expect("traced worker sends a solve delta");
         assert_eq!(delta.spans, 1);
+        assert_eq!(sol.residual, None, "no tolerance on the frame");
+
+        // A toleranced frame certifies on the exact path and reports the
+        // achieved residual plus the Residual span in its trace delta.
+        let toleranced = protocol::solve_from_response(&next().expect("toleranced")).unwrap();
+        let r = toleranced.residual.expect("tolerance measured");
+        assert!(r <= 1e-8, "residual {r:.3e}");
+        let delta = toleranced.trace.expect("trace delta");
+        assert_eq!(delta.residual_us, toleranced.residual_us);
 
         let ghost = next().expect("error response");
         assert!(matches!(
@@ -200,10 +219,10 @@ mod tests {
         let gauges = next().expect("gauges response");
         let g = protocol::gauges_from_response(&gauges).unwrap();
         assert_eq!(g.rebuilds.rewrite_passes, 1);
-        // The cumulative per-matrix totals cover the one solve above.
+        // The cumulative per-matrix totals cover both solves above.
         let (id, totals) = &g.trace_totals[0];
         assert_eq!(id, "a");
-        assert_eq!(totals.spans, 1);
+        assert!(totals.spans >= 2, "one Execute span per traced solve");
 
         assert!(protocol::is_ok(&next().expect("shutdown ack")));
         assert_eq!(next(), None, "loop ended at shutdown");
@@ -216,7 +235,7 @@ mod tests {
         let mut reqs = Vec::new();
         for frame in [
             protocol::register_req("register", "t", &m, "none"),
-            protocol::solve_req("t", &[b.clone()]),
+            protocol::solve_req("t", &[b.clone()], None),
             protocol::gauges_req(),
         ] {
             protocol::write_frame(&mut reqs, &frame).unwrap();

@@ -1,0 +1,436 @@
+//! Inexact triangular solves: Jacobi-sweep approximation of SpTRSV.
+//!
+//! The paper's transformation buys parallelism by *rewriting* the
+//! dependency graph; this module sidesteps the graph entirely. Splitting
+//! the (transformed) lower-triangular system `L′ = D + N` (diagonal +
+//! strictly lower part), the fixed-point iteration
+//!
+//! ```text
+//! x_{k+1} = D⁻¹ (c − N x_k),     c = W b
+//! ```
+//!
+//! touches every row independently per sweep — no level barriers, no
+//! dependency counters, parallelism bounded only by `nrows`. Because
+//! `D⁻¹N` is strictly lower triangular it is **nilpotent**: the
+//! iteration is *exact* after `levels(L′)` sweeps, and far earlier when
+//! the solve is a preconditioner application served against a request
+//! tolerance (Li, "On Parallel Solution of Sparse Triangular Linear
+//! Systems in CUDA", arXiv:1710.04985). That is the serving contract:
+//! an inexact backend may only answer a request that states how wrong
+//! it is allowed to be, and the achieved residual is measured, not
+//! assumed (see `SolveOptions::tolerance` and the coordinator's
+//! fallback ladder).
+//!
+//! Two backends share the machinery:
+//!
+//! * [`Exec::Jacobi`](crate::transform::Exec) — f64 sweeps.
+//! * [`Exec::JacobiMixed`](crate::transform::Exec) — all but the last
+//!   sweep in f32 (half the sweep bandwidth), then one f64 correction
+//!   sweep so the reported residual is full precision.
+//!
+//! Both run over the *transformed* system like every other exec
+//! backend, so they compose with the whole `Rewrite` axis — a rewrite
+//! that deletes levels also lowers the sweep count at which the
+//! iteration turns exact.
+
+use std::sync::Arc;
+
+use crate::error::Error;
+use crate::solver::levelset::SharedVec;
+use crate::solver::pool::Pool;
+use crate::sparse::Csr;
+use crate::transform::TransformResult;
+
+/// Below this row count a sweep runs inline on the submitting thread —
+/// a pool rendezvous per sweep costs more than the rows themselves.
+const INLINE_ROWS: usize = 4096;
+
+/// Default ceiling for per-matrix sweep auto-escalation (the
+/// `jacobi_max_sweeps` config key): on a tolerance miss the executor
+/// doubles the sweep count up to this bound before falling back to the
+/// exact backend.
+pub const DEFAULT_MAX_SWEEPS: usize = 128;
+
+/// `SharedVec`'s f32 sibling for the mixed-precision sweep buffers.
+/// Same safety argument: within a sweep every row is written by exactly
+/// one worker and only the *other* buffer is read.
+struct SharedF32(*mut f32, usize);
+unsafe impl Send for SharedF32 {}
+unsafe impl Sync for SharedF32 {}
+
+impl SharedF32 {
+    #[inline]
+    unsafe fn slice(&self) -> &mut [f32] {
+        std::slice::from_raw_parts_mut(self.0, self.1)
+    }
+}
+
+/// Relative achieved residual ‖Lx − b‖∞ / ‖b‖∞ — the quantity request
+/// tolerances are stated in. A zero right-hand side falls back to the
+/// absolute norm (the relative one is undefined).
+pub fn relative_residual(m: &Csr, x: &[f64], b: &[f64]) -> f64 {
+    let bn = b.iter().fold(0.0f64, |a, &v| a.max(v.abs()));
+    let r = m.residual_inf(x, b);
+    if bn > 0.0 {
+        r / bn
+    } else {
+        r
+    }
+}
+
+/// A built Jacobi-sweep backend for one prepared `(matrix, transform)`:
+/// the transformed system is materialized once, sweeps are re-run per
+/// right-hand side. Cheap to build (no level analysis, no schedule) and
+/// reusable across solves like every other [`crate::solver::ExecSolver`]
+/// arm.
+pub struct JacobiSolver {
+    /// the system the sweeps iterate over: L′ when the rewrite axis
+    /// transformed, the original matrix otherwise
+    pub m: Arc<Csr>,
+    /// kept for the `W b` fold (identity rewrites skip it)
+    t: Arc<TransformResult>,
+    has_rewrites: bool,
+    inv_diag: Vec<f64>,
+    /// configured sweep budget (the plan's `jacobi:S`); escalation asks
+    /// for more via [`JacobiSolver::solve_with_sweeps`]
+    sweeps: usize,
+    /// f32 sweep storage + f64 correction sweep
+    mixed: bool,
+    pool: Arc<Pool>,
+}
+
+impl JacobiSolver {
+    pub fn build(
+        m: &Arc<Csr>,
+        t: Arc<TransformResult>,
+        pool: Arc<Pool>,
+        sweeps: usize,
+        mixed: bool,
+    ) -> Result<JacobiSolver, Error> {
+        if sweeps == 0 {
+            return Err(Error::Invalid("jacobi sweep count must be >= 1".into()));
+        }
+        let has_rewrites = t.stats.rows_rewritten > 0;
+        let lm = if has_rewrites {
+            Arc::new(t.to_matrix(m))
+        } else {
+            Arc::clone(m)
+        };
+        let mut inv_diag = Vec::with_capacity(lm.nrows);
+        for i in 0..lm.nrows {
+            let d = lm.diag(i);
+            if d == 0.0 || !d.is_finite() {
+                return Err(Error::Invalid(format!(
+                    "jacobi: row {i} has unusable diagonal {d}"
+                )));
+            }
+            inv_diag.push(1.0 / d);
+        }
+        Ok(JacobiSolver {
+            m: lm,
+            t,
+            has_rewrites,
+            inv_diag,
+            sweeps,
+            mixed,
+            pool,
+        })
+    }
+
+    /// The plan's configured sweep budget.
+    pub fn sweeps(&self) -> usize {
+        self.sweeps
+    }
+
+    /// Sweeps at which the iteration is exact (up to roundoff): the
+    /// nilpotency index of `D⁻¹N`, i.e. the transformed level count.
+    pub fn exact_sweeps(&self) -> usize {
+        self.t.num_levels()
+    }
+
+    pub fn solve_into(&self, b: &[f64], x: &mut [f64]) {
+        self.solve_with_sweeps(b, self.sweeps, x);
+    }
+
+    /// Run the iteration with an explicit sweep budget (the per-matrix
+    /// escalation path re-solves here without rebuilding anything).
+    pub fn solve_with_sweeps(&self, b: &[f64], sweeps: usize, x: &mut [f64]) {
+        assert_eq!(b.len(), self.m.nrows);
+        assert_eq!(x.len(), self.m.nrows);
+        let sweeps = sweeps.max(1);
+        // c = W b; identity rewrites alias the input.
+        let folded;
+        let c: &[f64] = if self.has_rewrites {
+            folded = self.t.apply_rhs(b);
+            &folded
+        } else {
+            b
+        };
+        if self.mixed {
+            self.sweeps_mixed(c, sweeps, x);
+        } else {
+            self.sweeps_f64(c, sweeps, x);
+        }
+    }
+
+    /// f64 ping-pong sweeps; the final state lands in `x`.
+    fn sweeps_f64(&self, c: &[f64], sweeps: usize, x: &mut [f64]) {
+        let n = self.m.nrows;
+        let mut a = vec![0.0f64; n];
+        let mut bbuf = vec![0.0f64; n];
+        let serial = n < INLINE_ROWS || self.pool.len() == 1;
+        if serial {
+            for k in 0..sweeps {
+                let (src, dst) = if k % 2 == 0 {
+                    (&a, &mut bbuf)
+                } else {
+                    (&bbuf, &mut a)
+                };
+                sweep_f64(&self.m, &self.inv_diag, c, src, dst, 0..n);
+            }
+        } else {
+            let c: Arc<Vec<f64>> = Arc::new(c.to_vec());
+            let sa = Arc::new(SharedVec(a.as_mut_ptr(), n));
+            let sb = Arc::new(SharedVec(bbuf.as_mut_ptr(), n));
+            for k in 0..sweeps {
+                let (src, dst) = if k % 2 == 0 {
+                    (Arc::clone(&sa), Arc::clone(&sb))
+                } else {
+                    (Arc::clone(&sb), Arc::clone(&sa))
+                };
+                let m = Arc::clone(&self.m);
+                let inv = self.inv_diag.clone();
+                let cc = Arc::clone(&c);
+                self.pool.run(move |id, nw| {
+                    // src is read-only this sweep; dst rows are disjoint
+                    // per worker — see the SharedVec safety argument.
+                    let src = unsafe { src.slice() };
+                    let dst = unsafe { dst.slice() };
+                    sweep_f64(&m, &inv, &cc, src, dst, Pool::chunk(n, id, nw));
+                });
+            }
+        }
+        let result = if sweeps % 2 == 1 { &bbuf } else { &a };
+        x.copy_from_slice(result);
+    }
+
+    /// `sweeps − 1` f32 sweeps, then one f64 correction sweep into `x`.
+    fn sweeps_mixed(&self, c: &[f64], sweeps: usize, x: &mut [f64]) {
+        let n = self.m.nrows;
+        let inv32: Vec<f32> = self.inv_diag.iter().map(|&v| v as f32).collect();
+        let c32: Vec<f32> = c.iter().map(|&v| v as f32).collect();
+        let mut a = vec![0.0f32; n];
+        let mut bbuf = vec![0.0f32; n];
+        let f32_sweeps = sweeps - 1;
+        let serial = n < INLINE_ROWS || self.pool.len() == 1;
+        if serial {
+            for k in 0..f32_sweeps {
+                let (src, dst) = if k % 2 == 0 {
+                    (&a, &mut bbuf)
+                } else {
+                    (&bbuf, &mut a)
+                };
+                sweep_f32(&self.m, &inv32, &c32, src, dst, 0..n);
+            }
+        } else if f32_sweeps > 0 {
+            let m = Arc::clone(&self.m);
+            let inv32 = Arc::new(inv32);
+            let c32 = Arc::new(c32);
+            let sa = Arc::new(SharedF32(a.as_mut_ptr(), n));
+            let sb = Arc::new(SharedF32(bbuf.as_mut_ptr(), n));
+            for k in 0..f32_sweeps {
+                let (src, dst) = if k % 2 == 0 {
+                    (Arc::clone(&sa), Arc::clone(&sb))
+                } else {
+                    (Arc::clone(&sb), Arc::clone(&sa))
+                };
+                let m = Arc::clone(&m);
+                let inv = Arc::clone(&inv32);
+                let cc = Arc::clone(&c32);
+                self.pool.run(move |id, nw| {
+                    let src = unsafe { src.slice() };
+                    let dst = unsafe { dst.slice() };
+                    sweep_f32(&m, &inv, &cc, src, dst, Pool::chunk(n, id, nw));
+                });
+            }
+        }
+        // Correction sweep in full precision: read the f32 state, write
+        // the f64 answer (and with it, a full-precision residual).
+        let last = if f32_sweeps % 2 == 1 { &bbuf } else { &a };
+        for i in 0..n {
+            let lo = self.m.indptr[i];
+            let hi = self.m.indptr[i + 1];
+            let mut s = 0.0f64;
+            for k in lo..hi - 1 {
+                s += self.m.data[k] * last[self.m.indices[k] as usize] as f64;
+            }
+            x[i] = (c[i] - s) * self.inv_diag[i];
+        }
+    }
+}
+
+#[inline]
+fn sweep_f64(
+    m: &Csr,
+    inv_diag: &[f64],
+    c: &[f64],
+    src: &[f64],
+    dst: &mut [f64],
+    rows: std::ops::Range<usize>,
+) {
+    for i in rows {
+        let lo = m.indptr[i];
+        let hi = m.indptr[i + 1];
+        let mut s = 0.0;
+        for k in lo..hi - 1 {
+            s += m.data[k] * src[m.indices[k] as usize];
+        }
+        dst[i] = (c[i] - s) * inv_diag[i];
+    }
+}
+
+#[inline]
+fn sweep_f32(
+    m: &Csr,
+    inv_diag: &[f32],
+    c: &[f32],
+    src: &[f32],
+    dst: &mut [f32],
+    rows: std::ops::Range<usize>,
+) {
+    for i in rows {
+        let lo = m.indptr[i];
+        let hi = m.indptr[i + 1];
+        let mut s = 0.0f32;
+        for k in lo..hi - 1 {
+            s += m.data[k] as f32 * src[m.indices[k] as usize];
+        }
+        dst[i] = (c[i] - s) * inv_diag[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate;
+    use crate::transform::SolvePlan;
+    use crate::util::rng::Rng;
+
+    fn build(plan: &str, m: &Arc<Csr>, sweeps: usize, mixed: bool) -> JacobiSolver {
+        let t = SolvePlan::parse(plan).unwrap().apply(m);
+        JacobiSolver::build(m, Arc::new(t), Arc::new(Pool::new(2)), sweeps, mixed).unwrap()
+    }
+
+    fn rhs(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.uniform(-3.0, 3.0)).collect()
+    }
+
+    #[test]
+    fn exact_after_nilpotency_index_sweeps() {
+        // D⁻¹N is nilpotent with index = level count, so `levels` sweeps
+        // reproduce the serial solution to roundoff — on the raw system
+        // and under every rewrite.
+        for plan in ["none+jacobi", "avgcost+jacobi", "manual:5+jacobi"] {
+            let m = Arc::new(generate::lung2_like(&generate::GenOptions::with_scale(0.03)));
+            let s = build(plan, &m, 1, false);
+            let b = rhs(m.nrows, 7);
+            let mut x = vec![0.0; m.nrows];
+            s.solve_with_sweeps(&b, s.exact_sweeps(), &mut x);
+            assert!(
+                relative_residual(&m, &x, &b) < 1e-10,
+                "{plan}: residual {}",
+                relative_residual(&m, &x, &b)
+            );
+        }
+    }
+
+    #[test]
+    fn residual_decreases_with_sweeps() {
+        let m = Arc::new(generate::lung2_like(&generate::GenOptions::with_scale(0.03)));
+        let s = build("none+jacobi", &m, 1, false);
+        let b = rhs(m.nrows, 11);
+        let mut x = vec![0.0; m.nrows];
+        let mut last = f64::INFINITY;
+        for sweeps in [1, 4, 16, s.exact_sweeps()] {
+            s.solve_with_sweeps(&b, sweeps, &mut x);
+            let r = relative_residual(&m, &x, &b);
+            assert!(
+                r <= last * 1.001,
+                "residual rose from {last} to {r} at {sweeps} sweeps"
+            );
+            last = r;
+        }
+        assert!(last < 1e-10);
+    }
+
+    #[test]
+    fn mixed_correction_sweep_restores_precision() {
+        let m = Arc::new(generate::lung2_like(&generate::GenOptions::with_scale(0.03)));
+        let b = rhs(m.nrows, 13);
+        let full = build("none+jacobi", &m, 1, false);
+        let mixed = build("none+jacobi-mixed", &m, 1, true);
+        let sweeps = full.exact_sweeps() + 4;
+        let mut xf = vec![0.0; m.nrows];
+        let mut xm = vec![0.0; m.nrows];
+        full.solve_with_sweeps(&b, sweeps, &mut xf);
+        mixed.solve_with_sweeps(&b, sweeps, &mut xm);
+        // The f32 state is only ~1e-7 accurate, but the f64 correction
+        // sweep recovers several digits on top of it.
+        let rm = relative_residual(&m, &xm, &b);
+        assert!(rm < 1e-5, "mixed residual {rm}");
+        assert!(relative_residual(&m, &xf, &b) < 1e-10);
+    }
+
+    #[test]
+    fn rewritten_system_converges_faster_in_sweeps() {
+        // A rewrite that deletes levels lowers the sweep count at which
+        // the iteration is exact: manual:5 on a chain cuts levels 5x.
+        let m = Arc::new(generate::tridiagonal(200, &Default::default()));
+        let raw = build("none+jacobi", &m, 1, false);
+        let rewritten = build("manual:5+jacobi", &m, 1, false);
+        assert!(rewritten.exact_sweeps() < raw.exact_sweeps());
+        let b = rhs(200, 17);
+        let mut x = vec![0.0; 200];
+        rewritten.solve_with_sweeps(&b, rewritten.exact_sweeps(), &mut x);
+        assert!(relative_residual(&m, &x, &b) < 1e-10);
+    }
+
+    #[test]
+    fn parallel_and_serial_paths_agree() {
+        // Cross the INLINE_ROWS threshold so the pool path actually runs,
+        // and compare against a 1-worker (forced-serial) build.
+        let n = INLINE_ROWS + 500;
+        let m = Arc::new(generate::random_lower(
+            n,
+            4,
+            0.9,
+            &generate::GenOptions::default(),
+        ));
+        let t = Arc::new(SolvePlan::parse("none+jacobi").unwrap().apply(&m));
+        let par =
+            JacobiSolver::build(&m, Arc::clone(&t), Arc::new(Pool::new(4)), 6, false).unwrap();
+        let ser = JacobiSolver::build(&m, t, Arc::new(Pool::new(1)), 6, false).unwrap();
+        let b = rhs(n, 23);
+        let mut xp = vec![0.0; n];
+        let mut xs = vec![0.0; n];
+        par.solve_into(&b, &mut xp);
+        ser.solve_into(&b, &mut xs);
+        // Jacobi sweeps are deterministic regardless of row partition:
+        // every row reads only the previous sweep's buffer.
+        assert_eq!(xp, xs);
+    }
+
+    #[test]
+    fn zero_rhs_residual_is_absolute() {
+        let m = generate::tridiagonal(10, &Default::default());
+        assert_eq!(relative_residual(&m, &[0.0; 10], &[0.0; 10]), 0.0);
+    }
+
+    #[test]
+    fn rejects_zero_sweeps() {
+        let m = Arc::new(generate::tridiagonal(10, &Default::default()));
+        let t = Arc::new(TransformResult::identity(&m));
+        assert!(JacobiSolver::build(&m, t, Arc::new(Pool::new(1)), 0, false).is_err());
+    }
+}

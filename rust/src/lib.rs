@@ -40,7 +40,9 @@
 //! * **[`transform::Exec`]** (how the result is consumed): `levelset`
 //!   barriers, `scheduled[:t[:w]]` (coarsened static schedule + elastic
 //!   waits), `syncfree` (atomic dependency counters), `reorder`
-//!   (level-sorted permutation for locality).
+//!   (level-sorted permutation for locality), and the **inexact**
+//!   `jacobi[:s]` / `jacobi-mixed[:s]` sweep backends (see Inexact
+//!   solves below).
 //!
 //! The plan grammar joins them with `+`: `avgcost+scheduled` schedules
 //! the rewritten system, `guarded:5+syncfree` runs the guarded rewrite on
@@ -257,7 +259,58 @@
 //! below), `journal_enabled` and `journal_path` (append live traffic to
 //! a replayable JSONL journal, see Observability below),
 //! `bench_out_dir` and `bench_requests` (the `sptrsv bench` output
-//! directory and request-count override).
+//! directory and request-count override), `default_tolerance`
+//! (service-wide relative-residual tolerance, 0 = unset),
+//! `residual_check` (measure achieved residuals on toleranced solves,
+//! default on) and `jacobi_max_sweeps` (sweep-escalation cap for the
+//! iterative backends — see Inexact solves below).
+//!
+//! ## Inexact solves
+//!
+//! When the triangular solve is a **preconditioner application** inside
+//! an outer iterative method (CG, GMRES), the answer only needs to be
+//! right to the outer method's tolerance — and an approximate solve at
+//! far higher parallelism wins (Li, arXiv:1710.04985). The [`iterative`]
+//! module adds two exec backends on that premise: `jacobi:s` runs `s`
+//! Jacobi sweeps `x ← D⁻¹(b − Nx)` over the *transformed* system (every
+//! row independent per sweep — no level barriers at all), and
+//! `jacobi-mixed:s` does the same with f32 sweep storage plus one final
+//! f64 correction sweep. Because `D⁻¹N` is nilpotent the iteration is
+//! exact after `levels` sweeps, so a rewrite that merges levels also
+//! accelerates convergence — the axes compose.
+//!
+//! **Tolerance semantics.** Accuracy is a first-class request property:
+//! [`coordinator::SolveOptions::tolerance`] states the relative residual
+//! `‖Lx−b‖∞/‖b‖∞` a request will accept,
+//! [`coordinator::RegisterOptions::default_tolerance`] sets a per-matrix
+//! default, and the `default_tolerance` config key a service-wide one.
+//! An **iterative plan refuses to serve a request with no tolerance** —
+//! there is no accuracy contract to certify against — and requests on
+//! exact plans simply ignore it (they are certified trivially).
+//!
+//! **The fallback ladder.** Every inexact solve is measured, not
+//! trusted: with `residual_check` on (the default) the executor computes
+//! the achieved residual after each iterative solve ([`trace::Phase::Residual`]
+//! spans time it). A miss escalates the matrix's sweep budget
+//! (doubling, capped by `jacobi_max_sweeps`) and re-solves; the
+//! escalated budget **sticks** for the matrix, so the next request
+//! starts where this one ended. Still missing at the cap, the solve
+//! falls back to the exact serial reference
+//! (`fallbacks_to_exact` counts it) — and only when even the exact
+//! answer cannot meet the tolerance does the request fail, typed, as
+//! [`error::ServiceError::AccuracyUnsatisfiable`]. With
+//! `residual_check` off an iterative plan cannot certify anything, so
+//! toleranced requests go straight to the exact fallback.
+//!
+//! **When iterative wins.** Structures that stay stubbornly serial under
+//! every rewrite (long dependency chains, thin levels throughout) and a
+//! workload that tolerates 1e-4…1e-8: sweeps cost `s·nnz` with perfect
+//! parallelism, while the exact backends pay the dependency chain. The
+//! tuner knows this trade-off: under `auto` with a tolerance in scope,
+//! iterative candidates join the race but are **disqualified** (not just
+//! slow) when their achieved residual misses the tolerance, and the plan
+//! cache records the tolerance each winner was certified at.
+//! `scenarios/precond_serving.json` exercises the whole tier end to end.
 //!
 //! ## Scheduling
 //!
@@ -421,6 +474,7 @@ pub mod coordinator;
 pub mod error;
 pub mod exec_tier;
 pub mod graph;
+pub mod iterative;
 pub mod report;
 pub mod runtime;
 pub mod sched;

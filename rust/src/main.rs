@@ -28,7 +28,7 @@ use sptrsv_gt::graph::{analyze::LevelStats, Levels};
 use sptrsv_gt::report::{figures, table1};
 use sptrsv_gt::runtime::{PaddedSystem, Registry, XlaSolver};
 use sptrsv_gt::sparse::{generate, matrix_market, Csr};
-use sptrsv_gt::transform::{Exec, PlanSpec, SolvePlan};
+use sptrsv_gt::transform::{Exec, PlanSpec, SolvePlan, DEFAULT_JACOBI_SWEEPS};
 use sptrsv_gt::util::cli::Args;
 use sptrsv_gt::util::rng::Rng;
 
@@ -77,7 +77,9 @@ USAGE: sptrsv <subcommand> [flags]
             # (plan + transform + schedule); `solve --analysis` reloads it
   transform (--matrix|--kind...) [--plan P]   # rewrite axis of the plan
   solve     (--matrix|--kind...) [--plan P] [--backend serial|plan|
-            transformed|levelset|syncfree|scheduled|reorder|xla]
+            transformed|levelset|syncfree|scheduled|reorder|xla|
+            jacobi|jacobi-mixed] [--sweeps N]   # inexact backends report
+            # the achieved residual; --check still demands exactness
             [--analysis FILE.json]   # reuse a saved analysis: skips
             # rewrite analysis, coarsening and placement entirely
             [--workers W] [--repeat R] [--check] [--sched-block-target T]
@@ -97,8 +99,15 @@ USAGE: sptrsv <subcommand> [flags]
             # a known structure skips coarsening + placement
             [--metrics-json FILE]   # also dump the final metrics snapshot
             [--journal-enabled true --journal-path FILE.jsonl]   # append
-            # live traffic (register/solve/update/cancel shape) to a
-            # replayable JSONL journal; `sptrsv replay` consumes it
+            # live traffic (register/solve/update/cancel shape, matrix
+            # payload digests) to a replayable JSONL journal; `sptrsv
+            # replay` consumes it
+            [--default-tolerance F]   # relative-residual bound requests
+            # inherit when they state none (0 = exact solves only);
+            # toleranced requests may be served by jacobi plans that
+            # certify the bound, escalating sweeps or falling back to
+            # the exact tier when they cannot
+            [--residual-check true|false] [--jacobi-max-sweeps N]
             # demo workload: mixed interactive/batch lanes, one multi-RHS
             # block, and a value refresh through the coordinator, then
             # the metrics snapshot
@@ -119,12 +128,16 @@ USAGE: sptrsv <subcommand> [flags]
             # emits a standard BENCH_<NAME>.json trajectory
 
 PLANS (-P): REWRITE+EXEC, e.g. avgcost+scheduled, guarded:5+syncfree,
-  manual:4+reorder — REWRITE in none|avgcost|manual[:d]|guarded[:d[:m]],
-  EXEC in levelset|scheduled[:t[:w]]|syncfree|reorder. Legacy single names
-  still parse (avgcost = avgcost+levelset, scheduled = none+scheduled, ...)
-  and `auto` asks the tuner. --strategy stays as an alias for --plan;
-  `solve --backend levelset|syncfree|scheduled|reorder` overrides only the
-  exec axis (the --plan rewrite still applies; --plan none for raw runs).
+  manual:4+reorder, none+jacobi:4 — REWRITE in none|avgcost|manual[:d]|
+  guarded[:d[:m]], EXEC in levelset|scheduled[:t[:w]]|syncfree|reorder|
+  jacobi[:s]|jacobi-mixed[:s] (jacobi execs are INEXACT: s sweeps of the
+  iteration, exact only once s reaches the level count — pair them with a
+  solve tolerance so the service certifies the residual). Legacy single
+  names still parse (avgcost = avgcost+levelset, scheduled =
+  none+scheduled, ...) and `auto` asks the tuner. --strategy stays as an
+  alias for --plan; `solve --backend levelset|syncfree|scheduled|reorder|
+  jacobi|jacobi-mixed` overrides only the exec axis (the --plan rewrite
+  still applies; --plan none for raw runs).
 ";
 
 /// Scheduling knobs from the CLI: unset flags stay `None` so the crate
@@ -418,13 +431,21 @@ fn cmd_solve(args: &Args) -> Result<()> {
         // rewritten system and `--backend levelset` runs the rewritten
         // system on level-set barriers (use `--plan none` for the raw
         // baseline).
-        "plan" | "transformed" | "levelset" | "syncfree" | "scheduled" | "reorder" => {
+        "plan" | "transformed" | "levelset" | "syncfree" | "scheduled" | "reorder" | "jacobi"
+        | "jacobi-mixed" => {
             let (resolved_name, mut plan, t) = resolve_plan(&spec, &m, Some(workers));
+            let sweeps = args.usize_flag("sweeps", DEFAULT_JACOBI_SWEEPS)?;
             match backend.as_str() {
                 "levelset" => plan.exec = Exec::Levelset,
                 "syncfree" => plan.exec = Exec::Syncfree,
                 "reorder" => plan.exec = Exec::Reorder,
                 "scheduled" => plan.exec = Exec::Scheduled(sched_flags(args)?),
+                // Inexact overrides: the reported residual shows what
+                // the chosen sweep count actually achieved (--check
+                // still demands exact-tier agreement and will fail a
+                // sweep count that has not converged).
+                "jacobi" => plan.exec = Exec::Jacobi { sweeps },
+                "jacobi-mixed" => plan.exec = Exec::JacobiMixed { sweeps },
                 _ => {}
             }
             plan_label = format!("{resolved_name} [{}]", plan.exec);

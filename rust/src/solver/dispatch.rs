@@ -18,10 +18,15 @@
 //! * `reorder`   — [`ReorderedSolver`]: level-sorted symmetric
 //!   permutation of the *rewritten* system for locality, level-set
 //!   execution over the permuted system, solutions mapped back.
+//! * `jacobi` / `jacobi-mixed` — [`JacobiSolver`]: **inexact**
+//!   fixed-sweep iteration over the transformed system, no dependency
+//!   chain at all (see [`crate::iterative`]); only servable against a
+//!   request tolerance.
 
 use std::sync::Arc;
 
 use crate::error::Error;
+use crate::iterative::JacobiSolver;
 use crate::sched::{SchedOptions, ScheduledSolver};
 use crate::solver::executor::TransformedSolver;
 use crate::solver::pool::Pool;
@@ -100,6 +105,7 @@ pub enum ExecSolver {
     Scheduled(ScheduledSolver),
     SyncFree(SyncFreeSolver),
     Reordered(ReorderedSolver),
+    Jacobi(JacobiSolver),
 }
 
 impl ExecSolver {
@@ -142,6 +148,12 @@ impl ExecSolver {
             }
             Exec::Syncfree => ExecSolver::SyncFree(SyncFreeSolver::new(m, t, pool)),
             Exec::Reorder => ExecSolver::Reordered(ReorderedSolver::build(&m, t, pool)?),
+            Exec::Jacobi { sweeps } => {
+                ExecSolver::Jacobi(JacobiSolver::build(&m, t, pool, *sweeps, false)?)
+            }
+            Exec::JacobiMixed { sweeps } => {
+                ExecSolver::Jacobi(JacobiSolver::build(&m, t, pool, *sweeps, true)?)
+            }
         })
     }
 
@@ -151,6 +163,7 @@ impl ExecSolver {
             ExecSolver::Scheduled(s) => s.solve_into(b, x),
             ExecSolver::SyncFree(s) => s.solve_into(b, x),
             ExecSolver::Reordered(s) => s.solve_into(b, x),
+            ExecSolver::Jacobi(s) => s.solve_into(b, x),
         }
     }
 
@@ -160,6 +173,7 @@ impl ExecSolver {
             ExecSolver::Scheduled(s) => s.m.nrows,
             ExecSolver::SyncFree(s) => s.m.nrows,
             ExecSolver::Reordered(s) => s.perm.perm.len(),
+            ExecSolver::Jacobi(s) => s.m.nrows,
         };
         let mut x = vec![0.0; n];
         self.solve_into(b, &mut x);
@@ -173,6 +187,7 @@ impl ExecSolver {
             ExecSolver::Scheduled(_) => "scheduled",
             ExecSolver::SyncFree(_) => "syncfree",
             ExecSolver::Reordered(_) => "reordered",
+            ExecSolver::Jacobi(_) => "jacobi",
         }
     }
 
@@ -181,6 +196,15 @@ impl ExecSolver {
     pub fn scheduled(&self) -> Option<&ScheduledSolver> {
         match self {
             ExecSolver::Scheduled(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The inexact backend, when that is what this is (the executor's
+    /// sweep-escalation path re-solves through it with a larger budget).
+    pub fn jacobi(&self) -> Option<&JacobiSolver> {
+        match self {
+            ExecSolver::Jacobi(s) => Some(s),
             _ => None,
         }
     }
@@ -237,6 +261,34 @@ mod tests {
     }
 
     #[test]
+    fn jacobi_exec_converges_through_the_dispatch_surface() {
+        let m = Arc::new(generate::lung2_like(&generate::GenOptions::with_scale(0.04)));
+        let plan = SolvePlan::parse("avgcost+jacobi:2").unwrap();
+        let t = Arc::new(plan.apply(&m));
+        let s = ExecSolver::build(
+            Arc::clone(&m),
+            t,
+            &plan.exec,
+            Arc::new(Pool::new(3)),
+            SchedOptions::default(),
+        )
+        .unwrap();
+        let mut rng = Rng::new(42);
+        let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        // Two sweeps are inexact; the escalation accessor re-solves with
+        // the nilpotency-index budget and lands on the serial answer.
+        let coarse = s.solve(&b);
+        let j = s.jacobi().expect("jacobi arm");
+        let mut fine = vec![0.0; m.nrows];
+        j.solve_with_sweeps(&b, j.exact_sweeps(), &mut fine);
+        let x_ref = crate::solver::serial::solve(&m, &b);
+        assert_allclose(&fine, &x_ref, 1e-9, 1e-11).unwrap();
+        let r_coarse = crate::iterative::relative_residual(&m, &coarse, &b);
+        let r_fine = crate::iterative::relative_residual(&m, &fine, &b);
+        assert!(r_fine <= r_coarse);
+    }
+
+    #[test]
     fn reorder_permutes_the_rewritten_levels() {
         // After an avgcost rewrite the reorder backend must sort by the
         // *transformed* levels: the permuted system has as many levels as
@@ -266,6 +318,7 @@ mod tests {
             ("scheduled", "scheduled"),
             ("syncfree", "syncfree"),
             ("reorder", "reordered"),
+            ("none+jacobi:2", "jacobi"),
         ] {
             let plan = SolvePlan::parse(name).unwrap();
             let t = Arc::new(plan.apply(&m));

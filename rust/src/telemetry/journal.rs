@@ -24,11 +24,56 @@ use std::time::Instant;
 
 use crate::config::Config;
 use crate::error::Error;
+use crate::sparse::Csr;
 use crate::util::json::Json;
 
 /// Stamped into the journal's header line; bump on any event-shape
 /// change so old captures fail loudly instead of replaying nonsense.
+/// (Purely additive optional fields — like the `digest` on matrix
+/// events — do not bump: old captures still replay correctly, they
+/// just carry less information.)
 pub const JOURNAL_SCHEMA_VERSION: u64 = 1;
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = (h ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn digest_of(m: &Csr, with_values: bool) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    h = fnv1a(h, &(m.nrows as u64).to_le_bytes());
+    h = fnv1a(h, &(m.ncols as u64).to_le_bytes());
+    for &p in &m.indptr {
+        h = fnv1a(h, &(p as u64).to_le_bytes());
+    }
+    for &c in &m.indices {
+        h = fnv1a(h, &c.to_le_bytes());
+    }
+    if with_values {
+        for &v in &m.data {
+            h = fnv1a(h, &v.to_bits().to_le_bytes());
+        }
+    }
+    h
+}
+
+/// 64-bit FNV-1a digest of a CSR payload: shape, both structure arrays,
+/// and the bit patterns of the values. Journaled with `register` and
+/// `update_values` events so replay can tell when a capture's matrices
+/// structurally diverged mid-stream (a re-registration that swapped the
+/// sparsity pattern) versus merely refreshing numerics.
+pub fn matrix_digest(m: &Csr) -> u64 {
+    digest_of(m, true)
+}
+
+/// The structure-only half of [`matrix_digest`]: same FNV-1a stream
+/// minus the value bits, so refreshed numerics hash equal while a
+/// swapped sparsity pattern does not.
+pub fn structure_digest(m: &Csr) -> u64 {
+    digest_of(m, false)
+}
 
 const KIND: &str = "sptrsv-journal";
 
@@ -58,6 +103,10 @@ pub struct Event {
     pub deadline_us: Option<u64>,
     /// tenant the request named explicitly, when it did
     pub tenant: Option<String>,
+    /// [`matrix_digest`] of the payload (`register`/`update_values`)
+    pub digest: Option<u64>,
+    /// [`structure_digest`] of the payload (`register`/`update_values`)
+    pub sdigest: Option<u64>,
 }
 
 impl Event {
@@ -100,6 +149,16 @@ impl Event {
         }
     }
 
+    /// Attach the payload digests of the matrix this event carried.
+    /// Hashing happens on the caller's thread (the service loop), but an
+    /// FNV pass over the CSR arrays is linear and branch-free — noise
+    /// next to the preparation the same payload just paid for.
+    pub fn with_matrix(mut self, m: &Csr) -> Event {
+        self.digest = Some(matrix_digest(m));
+        self.sdigest = Some(structure_digest(m));
+        self
+    }
+
     /// A cancellation wakeup swept the queues.
     pub fn cancel() -> Event {
         Event {
@@ -132,6 +191,14 @@ impl Event {
                 fields.push(("tenant", Json::Str(t.clone())));
             }
         }
+        // Digests print as fixed-width hex strings: a u64 does not
+        // survive a round-trip through a JSON f64.
+        if let Some(d) = self.digest {
+            fields.push(("digest", Json::Str(format!("{d:016x}"))));
+        }
+        if let Some(d) = self.sdigest {
+            fields.push(("sdigest", Json::Str(format!("{d:016x}"))));
+        }
         Json::obj(fields)
     }
 
@@ -153,8 +220,15 @@ impl Event {
                 .get("tenant")
                 .and_then(Json::as_str)
                 .map(str::to_string),
+            digest: hex_u64(j.get("digest")),
+            sdigest: hex_u64(j.get("sdigest")),
         })
     }
+}
+
+fn hex_u64(j: Option<&Json>) -> Option<u64> {
+    j.and_then(Json::as_str)
+        .and_then(|s| u64::from_str_radix(s, 16).ok())
 }
 
 /// One line of a parsed journal: the event plus its arrival offset from
@@ -324,6 +398,35 @@ mod tests {
         assert_eq!(recs[4].ev.kind, "cancel");
         // Arrival offsets are monotone.
         assert!(recs.windows(2).all(|w| w[0].t_us <= w[1].t_us));
+    }
+
+    #[test]
+    fn matrix_digests_separate_value_refreshes_from_structure_swaps() {
+        use crate::sparse::generate;
+        let m = generate::random_lower(80, 3, 0.8, &Default::default());
+        // A value refresh moves the payload digest but not the
+        // structural one; a different sparsity pattern moves both.
+        let mut refreshed = m.clone();
+        for v in &mut refreshed.data {
+            *v *= 1.01;
+        }
+        let swapped = generate::random_lower(80, 4, 0.8, &Default::default());
+        assert_ne!(matrix_digest(&m), matrix_digest(&refreshed));
+        assert_eq!(structure_digest(&m), structure_digest(&refreshed));
+        assert_ne!(structure_digest(&m), structure_digest(&swapped));
+
+        // Digests survive the JSONL round-trip as full-width u64s.
+        let p = tmp("digest.jsonl");
+        let j = Journal::create(&p).unwrap();
+        j.record(Event::register("m", m.nrows, m.nnz(), "none").with_matrix(&m));
+        j.record(Event::update("m").with_matrix(&refreshed));
+        drop(j);
+        let recs = read(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(recs[0].ev.digest, Some(matrix_digest(&m)));
+        assert_eq!(recs[0].ev.sdigest, Some(structure_digest(&m)));
+        assert_eq!(recs[1].ev.digest, Some(matrix_digest(&refreshed)));
+        assert_eq!(recs[1].ev.sdigest, Some(structure_digest(&m)));
     }
 
     #[test]

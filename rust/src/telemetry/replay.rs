@@ -30,6 +30,28 @@ pub fn scenario_from_journal(path: &Path, name: &str) -> Result<Scenario, Error>
     scenario_from_records(&records, name, path)
 }
 
+/// Ids whose journaled payload digests show the sparsity pattern
+/// changing mid-capture: a re-registration or value update whose
+/// structure digest differs from the digest the id first registered
+/// with. Replay keeps each id's first shape, so these matrices are
+/// approximated more loosely than the rest — worth a warning, not an
+/// error. Captures from builds without digests report nothing.
+pub fn structural_divergence(records: &[Record]) -> Vec<String> {
+    let mut first: std::collections::BTreeMap<&str, u64> = std::collections::BTreeMap::new();
+    let mut divergent: Vec<String> = Vec::new();
+    for r in records {
+        if r.ev.kind != "register" && r.ev.kind != "update_values" {
+            continue;
+        }
+        let Some(s) = r.ev.sdigest else { continue };
+        let seen = *first.entry(r.ev.id.as_str()).or_insert(s);
+        if seen != s && !divergent.iter().any(|d| d == &r.ev.id) {
+            divergent.push(r.ev.id.clone());
+        }
+    }
+    divergent
+}
+
 fn scenario_from_records(records: &[Record], name: &str, path: &Path) -> Result<Scenario, Error> {
     if name.is_empty()
         || !name
@@ -93,6 +115,14 @@ fn scenario_from_records(records: &[Record], name: &str, path: &Path) -> Result<
         }
     }
 
+    for id in structural_divergence(records) {
+        eprintln!(
+            "replay: warning: '{id}' changed sparsity structure mid-capture \
+             in {}; replaying its first registered shape only",
+            path.display()
+        );
+    }
+
     if matrices.is_empty() {
         return Err(Error::Invalid(format!("replay: no registrations in {}", path.display())));
     }
@@ -117,6 +147,10 @@ fn scenario_from_records(records: &[Record], name: &str, path: &Path) -> Result<
         requests: solves,
         matrices,
         interactive_fraction: interactive as f64 / solves as f64,
+        // The journal does not record per-request accuracy bounds, so
+        // reconstructed scenarios replay exact-only traffic.
+        tolerance_fraction: 0.0,
+        tolerance: 1e-8,
         deadline_fraction: with_deadline as f64 / solves as f64,
         deadline_min_us: if with_deadline > 0 { deadline_min } else { 1_000 },
         deadline_max_us: if with_deadline > 0 {
@@ -189,6 +223,39 @@ mod tests {
         assert_eq!(sc.block_size, 2);
         assert_eq!(sc.refresh_every, 4);
         assert_eq!(sc.burst, 1);
+    }
+
+    #[test]
+    fn digests_flag_structural_divergence_across_a_capture() {
+        use crate::sparse::generate;
+        let m1 = generate::random_lower(60, 2, 0.8, &Default::default());
+        let mut refreshed = m1.clone();
+        for v in &mut refreshed.data {
+            *v *= 1.1;
+        }
+        let m2 = generate::random_lower(60, 4, 0.8, &Default::default());
+        let p = capture(
+            "diverge",
+            &[
+                Event::register("stable", 60, m1.nnz(), "none").with_matrix(&m1),
+                // Same pattern, new numerics: NOT a divergence.
+                Event::update("stable").with_matrix(&refreshed),
+                Event::register("swapped", 60, m1.nnz(), "none").with_matrix(&m1),
+                // Re-registration with a different sparsity pattern: is.
+                Event::register("swapped", 60, m2.nnz(), "none").with_matrix(&m2),
+                // Digest-less legacy events flag nothing.
+                Event::register("legacy", 10, 10, "none"),
+                Event::register("legacy", 99, 300, "none"),
+                Event::solve("stable", 1, false, None, None),
+            ],
+        );
+        let records = crate::telemetry::journal::read(&p).unwrap();
+        assert_eq!(structural_divergence(&records), vec!["swapped".to_string()]);
+        // The warning path is non-fatal: the scenario still builds, on
+        // the first registered shape.
+        let sc = scenario_from_journal(&p, "diverge").unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(sc.matrices.iter().filter(|m| m.id == "swapped").count(), 1);
     }
 
     #[test]

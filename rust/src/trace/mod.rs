@@ -35,7 +35,9 @@ pub const DEFAULT_RING_CAPACITY: usize = 4096;
 /// A traced lifecycle phase. The first four are analyze-side passes
 /// (mirroring [`crate::analysis::BuildCounters`]); `Wait` is the batcher
 /// queue wait from admission to dispatch; `Execute` is dispatch to done
-/// (including the pool rendezvous and the numeric solve).
+/// (including the pool rendezvous and the numeric solve); `Residual` is
+/// the post-solve achieved-residual check toleranced requests pay on top
+/// of the solve itself.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Phase {
     Rewrite,
@@ -44,6 +46,7 @@ pub enum Phase {
     Renumeric,
     Execute,
     Wait,
+    Residual,
 }
 
 impl Phase {
@@ -55,6 +58,7 @@ impl Phase {
             Phase::Renumeric => "renumeric",
             Phase::Execute => "execute",
             Phase::Wait => "wait",
+            Phase::Residual => "residual",
         }
     }
 }
@@ -98,6 +102,8 @@ pub struct PhaseTotals {
     pub renumeric_us: u64,
     pub execute_us: u64,
     pub wait_us: u64,
+    /// time spent computing achieved residuals for toleranced solves
+    pub residual_us: u64,
     /// spans folded into this aggregate
     pub spans: u64,
     /// elastic frontier stalls attributed to this matrix's solves
@@ -109,11 +115,13 @@ pub struct PhaseTotals {
 }
 
 impl PhaseTotals {
-    /// Field count of the wire array ([`Self::to_array`]).
-    pub const WIRE_LEN: usize = 10;
+    /// Field count of the wire array ([`Self::to_array`]). Bumped from 10
+    /// when the residual phase was added; a decoder seeing the wrong
+    /// length degrades to no trace rather than misreading fields.
+    pub const WIRE_LEN: usize = 11;
 
     /// Flatten into the fixed-order array the shard protocol ships:
-    /// six phase microsecond sums, the span count, then the three
+    /// seven phase microsecond sums, the span count, then the three
     /// elastic counters.
     pub fn to_array(&self) -> [u64; Self::WIRE_LEN] {
         [
@@ -123,6 +131,7 @@ impl PhaseTotals {
             self.renumeric_us,
             self.execute_us,
             self.wait_us,
+            self.residual_us,
             self.spans,
             self.elastic_waits,
             self.elastic_ooo,
@@ -139,10 +148,11 @@ impl PhaseTotals {
             renumeric_us: a[3],
             execute_us: a[4],
             wait_us: a[5],
-            spans: a[6],
-            elastic_waits: a[7],
-            elastic_ooo: a[8],
-            elastic_steals: a[9],
+            residual_us: a[6],
+            spans: a[7],
+            elastic_waits: a[8],
+            elastic_ooo: a[9],
+            elastic_steals: a[10],
         }
     }
 
@@ -162,6 +172,7 @@ impl PhaseTotals {
             renumeric_us: self.renumeric_us.saturating_sub(o.renumeric_us),
             execute_us: self.execute_us.saturating_sub(o.execute_us),
             wait_us: self.wait_us.saturating_sub(o.wait_us),
+            residual_us: self.residual_us.saturating_sub(o.residual_us),
             spans: self.spans.saturating_sub(o.spans),
             elastic_waits: self.elastic_waits.saturating_sub(o.elastic_waits),
             elastic_ooo: self.elastic_ooo.saturating_sub(o.elastic_ooo),
@@ -178,12 +189,13 @@ impl PhaseTotals {
             Phase::Renumeric => self.renumeric_us += us,
             Phase::Execute => self.execute_us += us,
             Phase::Wait => self.wait_us += us,
+            Phase::Residual => self.residual_us += us,
         }
         self.spans += 1;
     }
 
     /// Phase microseconds as `(phase, us)` pairs in breakdown order.
-    pub fn phases_us(&self) -> [(Phase, u64); 6] {
+    pub fn phases_us(&self) -> [(Phase, u64); 7] {
         [
             (Phase::Rewrite, self.rewrite_us),
             (Phase::Coarsen, self.coarsen_us),
@@ -191,6 +203,7 @@ impl PhaseTotals {
             (Phase::Renumeric, self.renumeric_us),
             (Phase::Execute, self.execute_us),
             (Phase::Wait, self.wait_us),
+            (Phase::Residual, self.residual_us),
         ]
     }
 
@@ -218,6 +231,7 @@ impl std::ops::Add for PhaseTotals {
             renumeric_us: self.renumeric_us + o.renumeric_us,
             execute_us: self.execute_us + o.execute_us,
             wait_us: self.wait_us + o.wait_us,
+            residual_us: self.residual_us + o.residual_us,
             spans: self.spans + o.spans,
             elastic_waits: self.elastic_waits + o.elastic_waits,
             elastic_ooo: self.elastic_ooo + o.elastic_ooo,
@@ -541,6 +555,27 @@ mod tests {
         let off = Tracer::new(false, 16);
         off.fold_totals("m", delta);
         assert!(off.report().matrices.is_empty());
+    }
+
+    #[test]
+    fn residual_phase_aggregates_and_rides_the_wire() {
+        let t = Tracer::new(true, 16);
+        t.record("m", Phase::Residual, Duration::from_micros(9));
+        t.record("m", Phase::Residual, Duration::from_micros(4));
+        t.record("m", Phase::Execute, Duration::from_micros(50));
+        let r = t.report();
+        let m = r.get("m").unwrap();
+        assert_eq!(m.residual_us, 13);
+        assert_eq!(m.spans, 3);
+        // The wire array carries the new field and round-trips.
+        assert_eq!(PhaseTotals::from_array(m.to_array()), *m);
+        assert_eq!(m.to_array().len(), PhaseTotals::WIRE_LEN);
+        // JSON report exposes it under the phase name.
+        let j = r.to_json();
+        assert_eq!(
+            j.get("totals").unwrap().get("residual").unwrap().as_f64(),
+            Some(13.0)
+        );
     }
 
     #[test]

@@ -28,7 +28,7 @@ pub mod solve_plan;
 
 pub use equation::Equation;
 pub use plan::{TransformResult, TransformStats};
-pub use solve_plan::{Exec, PlanSpec, ResolvedPlan, Rewrite, SolvePlan};
+pub use solve_plan::{Exec, PlanSpec, ResolvedPlan, Rewrite, SolvePlan, DEFAULT_JACOBI_SWEEPS};
 
 /// Renamed to [`PlanSpec`] when the strategy surface split into the
 /// rewrite × exec axes; the alias keeps `StrategySpec`-era call sites

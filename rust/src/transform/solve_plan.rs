@@ -172,7 +172,20 @@ pub enum Exec {
     /// level-sorted symmetric permutation of the rewritten system for
     /// locality; level-set execution over the permuted system
     Reorder,
+    /// inexact Jacobi-sweep solve (Li, arXiv:1710.04985): `sweeps`
+    /// fixed-point iterations x ← D⁻¹(b − Nx) over the transformed
+    /// system — no dependency chain at all, every row in parallel.
+    /// Exact after `levels` sweeps; useful far earlier when the solve
+    /// is a preconditioner application with a request tolerance.
+    Jacobi { sweeps: usize },
+    /// [`Exec::Jacobi`] with f32 sweep storage and a final f64
+    /// correction sweep: half the sweep bandwidth, full-precision
+    /// residual at the end
+    JacobiMixed { sweeps: usize },
 }
+
+/// Sweep count `jacobi` / `jacobi-mixed` parse to when none is given.
+pub const DEFAULT_JACOBI_SWEEPS: usize = 8;
 
 impl Exec {
     /// Parse one execution name:
@@ -188,6 +201,19 @@ impl Exec {
         }
         if s.eq_ignore_ascii_case("reorder") || s.eq_ignore_ascii_case("level-sort") {
             return Ok(Exec::Reorder);
+        }
+        if let Some(rest) = s
+            .strip_prefix("jacobi-mixed")
+            .or_else(|| s.strip_prefix("jacobimixed"))
+        {
+            let rest = rest.strip_prefix(':').unwrap_or(rest);
+            let sweeps = parse_sweeps(rest)?;
+            return Ok(Exec::JacobiMixed { sweeps });
+        }
+        if let Some(rest) = s.strip_prefix("jacobi") {
+            let rest = rest.strip_prefix(':').unwrap_or(rest);
+            let sweeps = parse_sweeps(rest)?;
+            return Ok(Exec::Jacobi { sweeps });
         }
         if let Some(rest) = s.strip_prefix("scheduled").or_else(|| s.strip_prefix("sched")) {
             // Strip exactly one separating colon: `scheduled::3` means
@@ -218,7 +244,8 @@ impl Exec {
             }));
         }
         Err(format!(
-            "unknown exec '{s}' (expected levelset | scheduled[:t[:w]] | syncfree | reorder)"
+            "unknown exec '{s}' (expected levelset | scheduled[:t[:w]] | syncfree | reorder \
+             | jacobi[:s] | jacobi-mixed[:s])"
         ))
     }
 
@@ -229,8 +256,49 @@ impl Exec {
             Exec::Scheduled(_) => "scheduled",
             Exec::Syncfree => "syncfree",
             Exec::Reorder => "reorder",
+            Exec::Jacobi { .. } => "jacobi",
+            Exec::JacobiMixed { .. } => "jacobi-mixed",
         }
     }
+
+    /// Whether this execution discipline is inexact: the solve is a
+    /// fixed sweep budget, not an exact substitution, so it can only be
+    /// served against a request tolerance (and certified by a residual
+    /// check).
+    pub fn is_iterative(&self) -> bool {
+        matches!(self, Exec::Jacobi { .. } | Exec::JacobiMixed { .. })
+    }
+
+    /// Sweep budget of an iterative exec (`None` for exact backends).
+    pub fn sweeps(&self) -> Option<usize> {
+        match self {
+            Exec::Jacobi { sweeps } | Exec::JacobiMixed { sweeps } => Some(*sweeps),
+            _ => None,
+        }
+    }
+
+    /// The same discipline with a different sweep budget (identity on
+    /// exact backends) — the currency of per-matrix sweep escalation.
+    pub fn with_sweeps(&self, sweeps: usize) -> Exec {
+        match self {
+            Exec::Jacobi { .. } => Exec::Jacobi { sweeps },
+            Exec::JacobiMixed { .. } => Exec::JacobiMixed { sweeps },
+            other => *other,
+        }
+    }
+}
+
+fn parse_sweeps(rest: &str) -> Result<usize, String> {
+    if rest.is_empty() {
+        return Ok(DEFAULT_JACOBI_SWEEPS);
+    }
+    let sweeps = rest
+        .parse::<usize>()
+        .map_err(|_| format!("bad jacobi sweep count '{rest}'"))?;
+    if sweeps == 0 {
+        return Err("jacobi sweep count must be >= 1".to_string());
+    }
+    Ok(sweeps)
 }
 
 impl std::fmt::Display for Exec {
@@ -246,6 +314,8 @@ impl std::fmt::Display for Exec {
                 (Some(t), Some(w)) => write!(f, "scheduled:{t}:{w}"),
                 (None, Some(w)) => write!(f, "scheduled::{w}"),
             },
+            Exec::Jacobi { sweeps } => write!(f, "jacobi:{sweeps}"),
+            Exec::JacobiMixed { sweeps } => write!(f, "jacobi-mixed:{sweeps}"),
         }
     }
 }
@@ -328,8 +398,8 @@ impl SolvePlan {
         Err(format!(
             "unknown plan '{s}' (expected REWRITE+EXEC with rewrite in \
              none | avgcost | manual[:d] | guarded[:d[:m]] and exec in \
-             levelset | scheduled[:t[:w]] | syncfree | reorder, or a legacy \
-             single name from either axis)"
+             levelset | scheduled[:t[:w]] | syncfree | reorder | jacobi[:s] \
+             | jacobi-mixed[:s], or a legacy single name from either axis)"
         ))
     }
 }
@@ -526,6 +596,49 @@ mod tests {
     }
 
     #[test]
+    fn parse_jacobi_execs() {
+        assert_eq!(
+            Exec::parse("jacobi").unwrap(),
+            Exec::Jacobi {
+                sweeps: DEFAULT_JACOBI_SWEEPS
+            }
+        );
+        assert_eq!(Exec::parse("jacobi:12").unwrap(), Exec::Jacobi { sweeps: 12 });
+        assert_eq!(
+            Exec::parse("jacobi-mixed").unwrap(),
+            Exec::JacobiMixed {
+                sweeps: DEFAULT_JACOBI_SWEEPS
+            }
+        );
+        assert_eq!(
+            Exec::parse("jacobi-mixed:3").unwrap(),
+            Exec::JacobiMixed { sweeps: 3 }
+        );
+        assert!(Exec::parse("jacobi:0").is_err(), "zero sweeps is no solve");
+        assert!(Exec::parse("jacobi:x").is_err());
+        assert!(Exec::parse("jacobi-mixed:-1").is_err());
+        // Axis helpers used by escalation and the tuner constraint.
+        assert!(Exec::parse("jacobi").unwrap().is_iterative());
+        assert!(!Exec::parse("syncfree").unwrap().is_iterative());
+        assert_eq!(Exec::parse("jacobi:4").unwrap().sweeps(), Some(4));
+        assert_eq!(Exec::parse("levelset").unwrap().sweeps(), None);
+        assert_eq!(
+            Exec::parse("jacobi:4").unwrap().with_sweeps(16),
+            Exec::Jacobi { sweeps: 16 }
+        );
+        assert_eq!(
+            Exec::parse("reorder").unwrap().with_sweeps(16),
+            Exec::Reorder
+        );
+        // Jacobi composes with every rewrite through the grammar.
+        let p = SolvePlan::parse("avgcost+jacobi:6").unwrap();
+        assert!(matches!(p.rewrite, Rewrite::AvgLevelCost(_)));
+        assert_eq!(p.exec, Exec::Jacobi { sweeps: 6 });
+        let p = SolvePlan::parse("guarded:5+jacobi-mixed:2").unwrap();
+        assert_eq!(p.exec, Exec::JacobiMixed { sweeps: 2 });
+    }
+
+    #[test]
     fn parse_composed_plans() {
         let p = SolvePlan::parse("avgcost+scheduled").unwrap();
         assert!(matches!(p.rewrite, Rewrite::AvgLevelCost(_)));
@@ -602,6 +715,9 @@ mod tests {
             "guarded:5:1000000+syncfree",
             "none+scheduled::3",
             "avgcost+reorder",
+            "none+jacobi:8",
+            "avgcost+jacobi:4",
+            "manual:3+jacobi-mixed:16",
         ] {
             let p = SolvePlan::parse(s).unwrap();
             assert_eq!(p.to_string(), s);

@@ -49,6 +49,11 @@ pub const PERM_COST: f64 = 0.5;
 /// locality gain of contiguous levels).
 pub const REORDER_LOCALITY: f64 = 0.97;
 
+/// Per-sweep work discount of the mixed-precision Jacobi backend: f32
+/// sweeps halve the value bandwidth but the index structure stays full
+/// width, so the saving is less than half.
+pub const MIXED_SWEEP_DISCOUNT: f64 = 0.6;
+
 /// Estimated shape of a transformed system (the rewrite axis's output).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PlanEstimate {
@@ -68,8 +73,15 @@ pub fn plan_cost(levels: usize, work: f64, nrows: usize, workers: usize) -> f64 
 
 pub struct CostModel {
     pub workers: usize,
-    /// per-plan EWMA of measured/predicted (1.0 = model exact)
-    calibration: BTreeMap<String, f64>,
+    /// per-rewrite-axis EWMA error term: how far the rewrite *shape*
+    /// estimate is off, shared by every plan using that rewrite (keyed by
+    /// the rewrite's canonical name, e.g. `avgcost`, `manual:10`)
+    rewrite_calibration: BTreeMap<String, f64>,
+    /// per-exec-axis EWMA error term: how far the execution *cost* model
+    /// is off, shared by every plan on that backend (keyed by the exec
+    /// category name, e.g. `scheduled`, `jacobi` — knob-free so a
+    /// `scheduled:64` race also refines `scheduled:256` predictions)
+    exec_calibration: BTreeMap<String, f64>,
     /// effective per-wait cost of scheduled execution; starts at
     /// [`WAIT_COST`] and tracks observed elastic stall rates
     /// ([`Self::calibrate_sched`])
@@ -79,11 +91,23 @@ pub struct CostModel {
     block_cost: f64,
 }
 
+/// Prefix of persisted rewrite-axis calibration keys.
+const REWRITE_KEY: &str = "rewrite:";
+/// Prefix of persisted exec-axis calibration keys.
+const EXEC_KEY: &str = "exec:";
+
+/// The two axis keys a plan's measured error folds into.
+fn axis_keys(plan: &str) -> Option<(String, String)> {
+    let p = SolvePlan::parse(plan).ok()?;
+    Some((p.rewrite.to_string(), p.exec.name().to_string()))
+}
+
 impl CostModel {
     pub fn new(workers: usize) -> CostModel {
         CostModel {
             workers: workers.max(1),
-            calibration: BTreeMap::new(),
+            rewrite_calibration: BTreeMap::new(),
+            exec_calibration: BTreeMap::new(),
             wait_cost: WAIT_COST,
             block_cost: BLOCK_COST,
         }
@@ -210,6 +234,22 @@ impl CostModel {
                     self.workers,
                 ) + f.nrows as f64 * PERM_COST
             }
+            // Sweep-count × nnz pricing: every Jacobi sweep streams the
+            // whole transformed system, but rows are independent within a
+            // sweep, so the parallelism is NOT capped by level width —
+            // that is the iterative backends' whole appeal on
+            // barrier-bound systems. One pool rendezvous per sweep plays
+            // the role the level barrier plays for level-set execution.
+            Exec::Jacobi { sweeps } => {
+                let s = (*sweeps).max(1) as f64;
+                s * est.work / self.workers as f64 + s * SYNC_COST
+            }
+            Exec::JacobiMixed { sweeps } => {
+                let s = (*sweeps).max(1) as f64;
+                // all but the final (f64 correction) sweep run in f32
+                let effective = (s - 1.0) * MIXED_SWEEP_DISCOUNT + 1.0;
+                effective * est.work / self.workers as f64 + s * SYNC_COST
+            }
         })
     }
 
@@ -231,34 +271,73 @@ impl CostModel {
         out
     }
 
-    /// Fold a measured timing back into the per-plan calibration.
+    /// Fold a measured timing back into the per-axis calibration.
     /// `predicted` must be the UNCALIBRATED prediction ([`Self::predict_raw`]);
     /// `measured` may be in any fixed unit (the race reports µs) — only
     /// the measured/predicted ratio matters and it cancels across plans.
+    ///
+    /// The error splits evenly (in log space) between the plan's rewrite
+    /// and exec axis terms: each EWMA tracks √(measured/predicted), and
+    /// [`Self::calibration`] multiplies the two back together. A constant
+    /// model error converges to the true ratio exactly as the old
+    /// per-plan table did, but the axis terms are *shared* — racing
+    /// `avgcost+scheduled` also refines `avgcost+syncfree` (same rewrite
+    /// shape) and `none+scheduled` (same exec cost model), so a fresh
+    /// pairing of known axes starts calibrated instead of cold.
     pub fn record(&mut self, plan: &str, predicted: f64, measured: f64) {
         if predicted <= 0.0 || measured <= 0.0 || !predicted.is_finite() || !measured.is_finite() {
             return;
         }
-        let ratio = (measured / predicted).clamp(1e-6, 1e6);
-        let m = self.calibration.entry(plan.to_string()).or_insert(ratio);
-        *m = 0.7 * *m + 0.3 * ratio;
+        let Some((rw, ex)) = axis_keys(plan) else {
+            return;
+        };
+        let half = (measured / predicted).clamp(1e-6, 1e6).sqrt();
+        for (map, key) in [
+            (&mut self.rewrite_calibration, rw),
+            (&mut self.exec_calibration, ex),
+        ] {
+            let m = map.entry(key).or_insert(half);
+            *m = 0.7 * *m + 0.3 * half;
+        }
     }
 
+    /// Combined calibration multiplier for a plan: the product of its
+    /// rewrite-axis and exec-axis error terms (1.0 for unknown axes or
+    /// unparseable names).
     pub fn calibration(&self, plan: &str) -> f64 {
-        self.calibration.get(plan).copied().unwrap_or(1.0)
+        let Some((rw, ex)) = axis_keys(plan) else {
+            return 1.0;
+        };
+        self.rewrite_calibration.get(&rw).copied().unwrap_or(1.0)
+            * self.exec_calibration.get(&ex).copied().unwrap_or(1.0)
     }
 
-    /// The full calibration table (plan name -> EWMA multiplier), for
-    /// persistence alongside the plan cache.
-    pub fn calibration_table(&self) -> &BTreeMap<String, f64> {
-        &self.calibration
+    /// The full calibration table for persistence alongside the plan
+    /// cache: axis terms under namespaced keys (`rewrite:avgcost`,
+    /// `exec:scheduled`).
+    pub fn calibration_table(&self) -> BTreeMap<String, f64> {
+        let mut out = BTreeMap::new();
+        for (k, v) in &self.rewrite_calibration {
+            out.insert(format!("{REWRITE_KEY}{k}"), *v);
+        }
+        for (k, v) in &self.exec_calibration {
+            out.insert(format!("{EXEC_KEY}{k}"), *v);
+        }
+        out
     }
 
     /// Seed one calibration multiplier (restoring a persisted table).
-    /// Non-finite or non-positive multipliers are ignored.
-    pub fn set_calibration(&mut self, plan: &str, multiplier: f64) {
-        if multiplier.is_finite() && multiplier > 0.0 {
-            self.calibration.insert(plan.to_string(), multiplier);
+    /// Keys use the [`Self::calibration_table`] namespacing; entries with
+    /// an unknown prefix (including pre-split whole-plan keys) are
+    /// ignored, as are non-finite or non-positive multipliers.
+    pub fn set_calibration(&mut self, key: &str, multiplier: f64) {
+        if !multiplier.is_finite() || multiplier <= 0.0 {
+            return;
+        }
+        if let Some(k) = key.strip_prefix(REWRITE_KEY) {
+            self.rewrite_calibration.insert(k.to_string(), multiplier);
+        } else if let Some(k) = key.strip_prefix(EXEC_KEY) {
+            self.exec_calibration.insert(k.to_string(), multiplier);
         }
     }
 
@@ -371,14 +450,69 @@ mod tests {
         cm.record("none", 0.0, 1.0);
         cm.record("none", 1.0, -5.0);
         // The table round-trips through set_calibration (persistence).
-        let table = cm.calibration_table().clone();
+        let table = cm.calibration_table();
         let mut cm2 = CostModel::new(2);
         for (plan, mult) in &table {
             cm2.set_calibration(plan, *mult);
         }
         assert_eq!(cm2.predict(&f, "none").unwrap(), after);
-        cm2.set_calibration("none", f64::NAN); // ignored
+        cm2.set_calibration("rewrite:none", f64::NAN); // ignored
         assert_eq!(cm2.predict(&f, "none").unwrap(), after);
+        // Pre-split whole-plan keys from old spill files are ignored too.
+        cm2.set_calibration("avgcost+scheduled", 5.0);
+        assert_eq!(cm2.calibration("avgcost+scheduled"), 1.0);
+    }
+
+    #[test]
+    fn calibration_error_is_shared_per_axis() {
+        let f = feats(&generate::lung2_like(&GenOptions::with_scale(0.05)));
+        let mut cm = CostModel::new(4);
+        let raw = cm.predict_raw(&f, "avgcost+syncfree").unwrap();
+        for _ in 0..30 {
+            cm.record("avgcost+syncfree", raw, raw * 9.0);
+        }
+        // The raced plan itself converges to the full ratio...
+        let own = cm.calibration("avgcost+syncfree");
+        assert!((own - 9.0).abs() < 0.5, "own calibration {own}, want ~9");
+        // ...while plans sharing exactly ONE axis inherit its √ term.
+        let rw_shared = cm.calibration("avgcost+levelset");
+        let ex_shared = cm.calibration("none+syncfree");
+        assert!((rw_shared - 3.0).abs() < 0.3, "rewrite share {rw_shared}");
+        assert!((ex_shared - 3.0).abs() < 0.3, "exec share {ex_shared}");
+        // Plans sharing neither axis stay at the closed-form seed.
+        assert_eq!(cm.calibration("none+levelset"), 1.0);
+        // Exec knobs calibrate per category: racing one scheduled shape
+        // refines every scheduled shape.
+        cm.record("none+scheduled:64:2", 100.0, 400.0);
+        assert_eq!(
+            cm.calibration("none+scheduled:64:2"),
+            cm.calibration("none+scheduled:256:4")
+        );
+    }
+
+    #[test]
+    fn jacobi_pricing_scales_with_sweeps() {
+        let f = feats(&generate::lung2_like(&GenOptions::with_scale(0.05)));
+        let cm = CostModel::new(4);
+        let j4 = cm.predict(&f, "none+jacobi:4").unwrap();
+        let j8 = cm.predict(&f, "none+jacobi:8").unwrap();
+        assert!(j8 > j4, "sweeps must price in: {j4} vs {j8}");
+        // Mixed precision discounts the f32 sweeps at equal sweep count.
+        let m8 = cm.predict(&f, "none+jacobi-mixed:8").unwrap();
+        assert!(m8 < j8, "mixed {m8} not below full {j8}");
+        // Every iterative composition is priceable and finite.
+        for plan in [
+            "avgcost+jacobi:8",
+            "manual:10+jacobi-mixed:4",
+            "guarded:20+jacobi:2",
+        ] {
+            assert!(cm.predict(&f, plan).unwrap().is_finite(), "{plan}");
+        }
+        // A rewrite that merges levels lowers the iterative price too
+        // (fewer sweeps needed is priced by the caller; here the work
+        // term stays comparable while the estimate shape shifts).
+        let est = cm.estimate(&f, "avgcost+jacobi:8").unwrap();
+        assert!(est.levels < f.num_levels);
     }
 
     #[test]

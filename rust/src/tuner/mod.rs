@@ -56,6 +56,11 @@ pub const DEFAULT_REWRITES: [&str; 4] = ["none", "avgcost", "manual:10", "guarde
 /// Exec-axis members of the default portfolio.
 pub const DEFAULT_EXECS: [&str; 4] = ["levelset", "scheduled", "syncfree", "reorder"];
 
+/// Iterative exec-axis members, raced only when an accuracy tolerance is
+/// in scope (an inexact backend may not answer a request that never said
+/// how wrong it is allowed to be).
+pub const ITERATIVE_EXECS: [&str; 2] = ["jacobi:8", "jacobi-mixed:8"];
+
 /// The default candidate portfolio: the full rewrite × exec cross
 /// product, in canonical `rewrite+exec` names. The cost model prunes this
 /// to `top_k` lanes before anything is raced.
@@ -63,6 +68,20 @@ pub fn default_candidates() -> Vec<String> {
     let mut out = Vec::with_capacity(DEFAULT_REWRITES.len() * DEFAULT_EXECS.len());
     for rw in DEFAULT_REWRITES {
         for ex in DEFAULT_EXECS {
+            out.push(format!("{rw}+{ex}"));
+        }
+    }
+    out
+}
+
+/// The accuracy-gated extension of the portfolio: every rewrite paired
+/// with the iterative exec backends. Joined to the candidate set only
+/// when the tuner runs under a tolerance ([`TunerOptions::tolerance`]) —
+/// the race then disqualifies any lane whose achieved residual misses it.
+pub fn iterative_candidates() -> Vec<String> {
+    let mut out = Vec::with_capacity(DEFAULT_REWRITES.len() * ITERATIVE_EXECS.len());
+    for rw in DEFAULT_REWRITES {
+        for ex in ITERATIVE_EXECS {
             out.push(format!("{rw}+{ex}"));
         }
     }
@@ -164,6 +183,12 @@ pub struct TunerOptions {
     /// worker pool shared with the caller (the serving pipeline threads
     /// its own pool through here); None spawns a throwaway pool per race
     pub pool: Option<Arc<Pool>>,
+    /// accuracy constraint for tuning decisions: when set, the iterative
+    /// candidates ([`iterative_candidates`]) join the portfolio and every
+    /// raced lane must achieve this relative residual or be disqualified;
+    /// a cached iterative decision is only reused when its certified
+    /// tolerance covers this one. None keeps the portfolio exact.
+    pub tolerance: Option<f64>,
 }
 
 impl Default for TunerOptions {
@@ -185,6 +210,7 @@ impl Default for TunerOptions {
             sched: Default::default(),
             seed: 0x7E57,
             pool: None,
+            tolerance: None,
         }
     }
 }
@@ -338,10 +364,22 @@ impl Tuner {
     /// Plan-cache lookup. An unparseable cached plan (stale format,
     /// hand-edited file) must not brick its fingerprint: warn, return
     /// None so the caller re-tunes, and let the fresh put() overwrite it.
+    /// An iterative decision additionally requires its certified
+    /// tolerance to cover the current constraint — a `jacobi:8` winner
+    /// certified at 1e-6 must not serve a 1e-9 request on cache trust.
     fn try_cached(&mut self, fingerprint: Fingerprint, m: &Csr) -> Option<TunedPlan> {
         let cached = self.cache.get(fingerprint)?;
         match SolvePlan::parse(&cached.plan) {
             Ok(plan) => {
+                if plan.exec.is_iterative() {
+                    let covered = self
+                        .opts
+                        .tolerance
+                        .is_some_and(|tol| cached.tolerance > 0.0 && cached.tolerance <= tol);
+                    if !covered {
+                        return None; // re-tune; the fresh put overwrites
+                    }
+                }
                 let transform = Arc::new(plan.apply(m));
                 Some(TunedPlan {
                     fingerprint,
@@ -375,7 +413,20 @@ impl Tuner {
     /// same rewrite under *different* backends always keeps both lanes.
     fn tune(&mut self, m: &Arc<Csr>, fingerprint: Fingerprint) -> Result<TunedPlan, Error> {
         let features = MatrixFeatures::of(m);
-        let predictions = self.model.rank(&features, &self.opts.candidates);
+        // Under a tolerance the iterative backends join the portfolio;
+        // without one they never race (nothing could certify them).
+        let candidates = if self.opts.tolerance.is_some() {
+            let mut c = self.opts.candidates.clone();
+            for extra in iterative_candidates() {
+                if !c.contains(&extra) {
+                    c.push(extra);
+                }
+            }
+            c
+        } else {
+            self.opts.candidates.clone()
+        };
+        let predictions = self.model.rank(&features, &candidates);
         if predictions.is_empty() {
             return Err(Error::Invalid(
                 "tuner: no usable candidate plans".to_string(),
@@ -412,6 +463,7 @@ impl Tuner {
             seed: self.opts.seed,
             sched: self.opts.sched,
             pool: self.opts.pool.clone(),
+            tolerance: self.opts.tolerance,
         };
         let mut outcome = race::race(m, &shortlist, &race_opts).map_err(Error::Runtime)?;
 
@@ -450,6 +502,13 @@ impl Tuner {
                     .collect(),
                 nrows: m.nrows,
                 created_unix: plan_cache::now_unix(),
+                // An iterative winner is certified at the tolerance it
+                // raced under; exact winners certify unconditionally.
+                tolerance: if plan.exec.is_iterative() {
+                    self.opts.tolerance.unwrap_or(0.0)
+                } else {
+                    0.0
+                },
             },
         );
 
@@ -615,6 +674,7 @@ mod tests {
                 timings: Vec::new(),
                 nrows: 80,
                 created_unix: plan_cache::now_unix(),
+                tolerance: 0.0,
             },
         );
         // The poisoned entry must not brick `auto`: choose re-races and
@@ -694,24 +754,103 @@ mod tests {
             let p = tuner.choose(&m).unwrap();
             assert_eq!(p.source, PlanSource::Raced);
             assert!(calib_path.exists(), "calibration not spilled");
-            tuner.model.calibration_table().clone()
+            tuner.model.calibration_table()
         };
         assert!(!expected.is_empty(), "race recorded no calibration");
+        // The split keys are per axis, not per plan.
+        assert!(
+            expected.keys().all(|k| k.starts_with("rewrite:") || k.starts_with("exec:")),
+            "unexpected calibration keys: {:?}",
+            expected.keys().collect::<Vec<_>>()
+        );
         // A fresh tuner (fresh process, same spill dir) starts with the
         // refined coefficients, not the closed-form seeds.
         let tuner2 = Tuner::new(TunerOptions {
             cache_path: Some(cache_path.clone()),
             ..quick_opts()
         });
-        for (plan, mult) in &expected {
-            assert_eq!(
-                tuner2.model.calibration(plan),
-                *mult,
-                "calibration for {plan} not restored"
-            );
-        }
+        assert_eq!(
+            tuner2.model.calibration_table(),
+            expected,
+            "calibration table not restored"
+        );
         std::fs::remove_file(&cache_path).ok();
         std::fs::remove_file(&calib_path).ok();
+    }
+
+    #[test]
+    fn tolerance_admits_iterative_candidates_and_gates_cache_reuse() {
+        let m = generate::tridiagonal(200, &Default::default());
+        // Without a tolerance the iterative backends never enter the
+        // portfolio: no raced lane may be a jacobi plan.
+        let mut exact = Tuner::new(quick_opts());
+        let p = exact.choose(&m).unwrap();
+        for lane in &p.race.as_ref().unwrap().lanes {
+            let plan = SolvePlan::parse(&lane.plan).unwrap();
+            assert!(!plan.exec.is_iterative(), "{} raced without tolerance", lane.plan);
+        }
+
+        // Under a tolerance they join, and whatever wins is cached with
+        // its certified tolerance.
+        let mut tuner = Tuner::new(TunerOptions {
+            tolerance: Some(1e-8),
+            top_k: 3,
+            ..quick_opts()
+        });
+        let p1 = tuner.choose(&m).unwrap();
+        assert_eq!(p1.source, PlanSource::Raced);
+        // Every qualified lane certified the tolerance; the winner is
+        // qualified (exact lanes guarantee at least one qualifies).
+        let out = p1.race.as_ref().unwrap();
+        assert!(out.winner_lane().qualified);
+        let cached = tuner.cache.peek(p1.fingerprint).unwrap();
+        if p1.plan.exec.is_iterative() {
+            assert_eq!(cached.tolerance, 1e-8);
+        } else {
+            assert_eq!(cached.tolerance, 0.0);
+        }
+
+        // Same tolerance: the cached decision is reusable.
+        let p2 = tuner.choose(&m).unwrap();
+        assert_eq!(p2.source, PlanSource::CacheHit);
+
+        // Force an iterative cached decision and tighten the constraint:
+        // the cache must NOT serve it — the tuner re-races.
+        tuner.cache.put(
+            p1.fingerprint,
+            CachedPlan {
+                plan: "none+jacobi:8".to_string(),
+                solve_us: 1.0,
+                timings: Vec::new(),
+                nrows: m.nrows,
+                created_unix: plan_cache::now_unix(),
+                tolerance: 1e-6,
+            },
+        );
+        tuner.opts.tolerance = Some(1e-12);
+        let p3 = tuner.choose(&m).unwrap();
+        assert_eq!(
+            p3.source,
+            PlanSource::Raced,
+            "a 1e-6-certified jacobi plan served a 1e-12 constraint"
+        );
+        // And with no tolerance at all, an iterative cached plan is
+        // likewise refused.
+        tuner.cache.put(
+            p1.fingerprint,
+            CachedPlan {
+                plan: "none+jacobi:8".to_string(),
+                solve_us: 1.0,
+                timings: Vec::new(),
+                nrows: m.nrows,
+                created_unix: plan_cache::now_unix(),
+                tolerance: 1e-6,
+            },
+        );
+        tuner.opts.tolerance = None;
+        let p4 = tuner.choose(&m).unwrap();
+        assert_eq!(p4.source, PlanSource::Raced);
+        assert!(!p4.plan.exec.is_iterative());
     }
 
     #[test]

@@ -22,8 +22,10 @@ use crate::util::json::Json;
 /// whenever the solver, executor or plan semantics change in a way that
 /// invalidates previously cached winners. v3: decisions are two-axis
 /// solve plans (`rewrite+exec` grammar); v2-era single-strategy entries
-/// are dropped.
-pub const PLAN_SCHEMA_VERSION: u64 = 3;
+/// are dropped. v4: entries carry the certified tolerance of iterative
+/// (Jacobi) winners and the calibration table is keyed per axis —
+/// v3-era entries and calibrations are dropped.
+pub const PLAN_SCHEMA_VERSION: u64 = 4;
 
 /// A tuning decision worth remembering.
 #[derive(Debug, Clone, PartialEq)]
@@ -39,6 +41,11 @@ pub struct CachedPlan {
     /// wall-clock seconds (unix) when the plan was raced; drives the
     /// `tuner_cache_ttl` age expiry on load
     pub created_unix: u64,
+    /// relative-residual tolerance the race certified an iterative
+    /// winner under (0.0 for exact plans, which certify unconditionally).
+    /// A cached iterative decision may only serve requests whose
+    /// tolerance is at least this loose.
+    pub tolerance: f64,
 }
 
 /// Current wall-clock as unix seconds (0 if the clock is before the
@@ -205,6 +212,7 @@ impl PlanCache {
                 ("stamp", Json::Num(*stamp as f64)),
                 ("schema", Json::Num(PLAN_SCHEMA_VERSION as f64)),
                 ("created", Json::Num(plan.created_unix as f64)),
+                ("tolerance", Json::Num(plan.tolerance)),
                 ("timings", Json::Arr(timings)),
             ]));
         }
@@ -265,6 +273,7 @@ fn load_entries(path: &Path) -> Result<BTreeMap<u64, (u64, CachedPlan)>, Error> 
         let nrows = item.get("nrows").and_then(Json::as_usize).unwrap_or(0);
         let stamp = item.get("stamp").and_then(Json::as_f64).unwrap_or(0.0) as u64;
         let created_unix = item.get("created").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        let tolerance = item.get("tolerance").and_then(Json::as_f64).unwrap_or(0.0);
         let mut timings = Vec::new();
         if let Some(arr) = item.get("timings").and_then(Json::as_arr) {
             for pair in arr {
@@ -287,6 +296,7 @@ fn load_entries(path: &Path) -> Result<BTreeMap<u64, (u64, CachedPlan)>, Error> 
                     timings,
                     nrows,
                     created_unix,
+                    tolerance,
                 },
             ),
         );
@@ -305,6 +315,7 @@ mod tests {
             timings: vec![("none+levelset".into(), us * 2.0), (winner.to_string(), us)],
             nrows: 100,
             created_unix: now_unix(),
+            tolerance: 0.0,
         }
     }
 
@@ -347,7 +358,9 @@ mod tests {
         {
             let mut c = PlanCache::with_disk(8, &path);
             c.put(fp(0xDEAD), plan("manual:10+scheduled", 42.5));
-            c.put(fp(0xBEEF), plan("avgcost+levelset", 7.25));
+            let mut inexact = plan("avgcost+jacobi:8", 7.25);
+            inexact.tolerance = 1e-6;
+            c.put(fp(0xBEEF), inexact);
         }
         let mut c2 = PlanCache::with_disk(8, &path);
         assert_eq!(c2.len(), 2);
@@ -356,6 +369,11 @@ mod tests {
         assert_eq!(got.solve_us, 42.5);
         assert_eq!(got.timings.len(), 2);
         assert_eq!(got.nrows, 100);
+        assert_eq!(got.tolerance, 0.0, "exact plans certify unconditionally");
+        // The certified tolerance of an iterative decision survives disk.
+        let inexact = c2.get(fp(0xBEEF)).unwrap();
+        assert_eq!(inexact.plan, "avgcost+jacobi:8");
+        assert_eq!(inexact.tolerance, 1e-6);
         std::fs::remove_file(&path).ok();
     }
 

@@ -32,6 +32,10 @@ pub struct RaceOptions {
     /// run raced solves on this shared pool (the serving pipeline's) so a
     /// plan-cache miss pays no thread spawn/teardown cost
     pub pool: Option<Arc<Pool>>,
+    /// accuracy constraint: a lane whose achieved relative residual
+    /// exceeds this tolerance is disqualified from winning, however fast
+    /// it raced (None = speed alone decides — exact backends only)
+    pub tolerance: Option<f64>,
 }
 
 impl Default for RaceOptions {
@@ -42,6 +46,7 @@ impl Default for RaceOptions {
             seed: 0x7E57,
             sched: SchedOptions::default(),
             pool: None,
+            tolerance: None,
         }
     }
 }
@@ -54,6 +59,12 @@ pub struct Lane {
     pub transform_ms: f64,
     /// best-of-N per-solve time, microseconds
     pub solve_us: f64,
+    /// achieved relative residual of the lane's last raced solve against
+    /// the ORIGINAL system (what a request tolerance is stated in)
+    pub residual: f64,
+    /// false when a tolerance was in force and this lane missed it: the
+    /// lane still reports its timing but can no longer win
+    pub qualified: bool,
     pub levels_after: usize,
     pub total_cost_after: u64,
     /// the applied transform, shared with the lane's solver
@@ -129,10 +140,18 @@ pub fn race(m: &Arc<Csr>, candidates: &[String], opts: &RaceOptions) -> Result<R
             solver.solve_into(&b, &mut x);
             best = best.min(s0.elapsed().as_secs_f64() * 1e6);
         }
+        // The accuracy gate: measured against the original system, which
+        // is what a request tolerance promises about. Exact lanes sit at
+        // rounding error and sail through; an iterative lane whose sweep
+        // budget undershoots is disqualified no matter how fast it was.
+        let residual = crate::iterative::relative_residual(m, &x, &b);
+        let qualified = opts.tolerance.is_none_or(|tol| residual <= tol);
         lanes.push(Lane {
             plan: name.clone(),
             transform_ms,
             solve_us: best,
+            residual,
+            qualified,
             levels_after,
             total_cost_after,
             transform: t_arc,
@@ -142,13 +161,25 @@ pub fn race(m: &Arc<Csr>, candidates: &[String], opts: &RaceOptions) -> Result<R
     if lanes.is_empty() {
         return Err("no raceable candidate plans".to_string());
     }
+    // Fastest qualified lane wins; if the tolerance disqualified every
+    // lane, the most accurate one wins as a best effort (the serving
+    // layer's fallback ladder owns the hard accuracy guarantee).
+    let candidates_ord = |a: &Lane, b: &Lane| {
+        a.solve_us
+            .partial_cmp(&b.solve_us)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    };
     let winner = lanes
         .iter()
         .enumerate()
-        .min_by(|a, b| {
-            a.1.solve_us
-                .partial_cmp(&b.1.solve_us)
-                .unwrap_or(std::cmp::Ordering::Equal)
+        .filter(|(_, l)| l.qualified)
+        .min_by(|a, b| candidates_ord(a.1, b.1))
+        .or_else(|| {
+            lanes.iter().enumerate().min_by(|a, b| {
+                a.1.residual
+                    .partial_cmp(&b.1.residual)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
         })
         .map(|(i, _)| i)
         .unwrap_or(0);
@@ -248,6 +279,54 @@ mod tests {
             assert_eq!(lane.transform.stats.rows_rewritten, 0);
             lane.transform.validate(&m).unwrap();
         }
+    }
+
+    #[test]
+    fn tolerance_disqualifies_inaccurate_lanes() {
+        // One Jacobi sweep on a long chain is x = D⁻¹b — fast and very
+        // wrong. Under a tolerance it must lose to the exact lane even
+        // when its clock is better; without one it may win on speed.
+        let m = Arc::new(generate::tridiagonal(3000, &Default::default()));
+        let opts = RaceOptions {
+            solves: 1,
+            workers: 2,
+            tolerance: Some(1e-10),
+            ..Default::default()
+        };
+        let out = race(&m, &names(&["none+jacobi:1", "none+levelset"]), &opts).unwrap();
+        assert_eq!(out.lanes.len(), 2);
+        let jac = out.lanes.iter().find(|l| l.plan == "none+jacobi:1").unwrap();
+        let exact = out.lanes.iter().find(|l| l.plan == "none+levelset").unwrap();
+        assert!(!jac.qualified, "1 sweep cannot certify 1e-10: {}", jac.residual);
+        assert!(jac.residual > 1e-10);
+        assert!(exact.qualified, "exact lane at {}", exact.residual);
+        assert_eq!(out.winner_lane().plan, "none+levelset");
+        // Enough sweeps for nilpotency-index exactness qualifies: on a
+        // rewritten chain the level count (and so the needed sweep
+        // budget) drops with the rewrite.
+        let opts_ok = RaceOptions {
+            solves: 1,
+            workers: 2,
+            tolerance: Some(1e-10),
+            ..Default::default()
+        };
+        let m2 = Arc::new(generate::tridiagonal(40, &Default::default()));
+        let out2 = race(&m2, &names(&["manual:5+jacobi:16", "none+levelset"]), &opts_ok).unwrap();
+        for lane in &out2.lanes {
+            assert!(lane.qualified, "{}: residual {}", lane.plan, lane.residual);
+        }
+        // Without a tolerance nothing is disqualified.
+        let free = race(
+            &m2,
+            &names(&["none+jacobi:1", "none+levelset"]),
+            &RaceOptions {
+                solves: 1,
+                workers: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(free.lanes.iter().all(|l| l.qualified));
     }
 
     #[test]

@@ -529,6 +529,57 @@ fn prop_analysis_save_load_roundtrip_deterministic() {
 /// a shard only pulls keys onto the newcomer, removing the last shard
 /// only evicts its own keys, and every route is a pure function of
 /// `(fingerprint, nshards)`.
+/// Inexact tier semantics, swept across rewrite compositions: running
+/// the Jacobi iteration for the transformed level count reproduces the
+/// serial solution (the iteration matrix is nilpotent), so the relative
+/// residual against the ORIGINAL system certifies tight tolerances.
+/// This is the invariant the serving tier's accuracy ladder leans on
+/// when it escalates sweeps toward `exact_sweeps`. Mixed precision gets
+/// the same sweep budget but a looser bound: its f32 state caps what
+/// the f64 correction sweep can recover.
+#[test]
+fn prop_jacobi_exact_sweeps_certify_tolerance_across_rewrites() {
+    use sptrsv_gt::iterative::{relative_residual, JacobiSolver};
+    use std::sync::Arc;
+
+    check("jacobi-exact-sweeps-certify", 30, |rng, case| {
+        let m = random_matrix(rng, case);
+        let rw = ["none", "avgcost", "manual:4", "guarded:5"][rng.below(4)];
+        let plan = SolvePlan::parse(&format!("{rw}+jacobi:1")).map_err(|e| e.to_string())?;
+        let t = plan.apply(&m);
+        let ma = Arc::new(m);
+        let pool = Arc::new(sptrsv_gt::solver::pool::Pool::new(1 + rng.below(4)));
+        let mixed = rng.below(2) == 1;
+        let s = JacobiSolver::build(&ma, Arc::new(t), pool, 1, mixed).map_err(|e| e.to_string())?;
+        let b: Vec<f64> = (0..ma.nrows).map(|_| rng.uniform(-3.0, 3.0)).collect();
+
+        let mut x = vec![0.0; ma.nrows];
+        s.solve_with_sweeps(&b, s.exact_sweeps(), &mut x);
+        let r = relative_residual(&ma, &x, &b);
+        let bound = if mixed { 1e-4 } else { 1e-8 };
+        if r > bound || !r.is_finite() {
+            return Err(format!(
+                "{rw}+jacobi (mixed={mixed}): exact-sweep residual {r:.3e} over {bound:.0e}"
+            ));
+        }
+        if !mixed {
+            let x_ref = sptrsv_gt::solver::serial::solve(&ma, &b);
+            assert_allclose(&x, &x_ref, 1e-7, 1e-9)?;
+        }
+
+        // An under-budgeted run may be inexact, but its residual is
+        // still a finite, honest certificate — exactly what the ladder
+        // compares against the request tolerance before escalating.
+        let mut x1 = vec![0.0; ma.nrows];
+        s.solve_with_sweeps(&b, 1, &mut x1);
+        let r1 = relative_residual(&ma, &x1, &b);
+        if !r1.is_finite() {
+            return Err(format!("{rw}+jacobi: 1-sweep residual not finite"));
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_rendezvous_routing_stable_under_pool_resize() {
     use sptrsv_gt::exec_tier::rendezvous::route;

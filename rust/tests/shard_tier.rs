@@ -11,7 +11,7 @@
 use std::time::Duration;
 
 use sptrsv_gt::config::Config;
-use sptrsv_gt::coordinator::{Service, SolveOptions};
+use sptrsv_gt::coordinator::{RegisterOptions, Service, SolveOptions};
 use sptrsv_gt::error::ServiceError;
 use sptrsv_gt::sparse::generate::{self, GenOptions};
 use sptrsv_gt::transform::PlanSpec;
@@ -196,6 +196,59 @@ fn sharded_trace_report_carries_worker_execute_across_respawn() {
     let snap = h.metrics().unwrap();
     assert_eq!(snap.shard_crashes, 1, "exactly one chaos crash");
     assert_eq!(snap.shard_respawns, 1, "exactly one respawn");
+    svc.shutdown();
+}
+
+#[test]
+fn residual_certificates_survive_the_shard_wire() {
+    let svc = Service::start(sharded_cfg());
+    let h = svc.handle();
+
+    let m = generate::random_lower(120, 3, 0.8, &Default::default());
+    let handle = h
+        .register_with(
+            "pc",
+            m.clone(),
+            RegisterOptions::new()
+                .plan(spec("none+jacobi:2"))
+                .default_tolerance(1e-8),
+        )
+        .unwrap();
+
+    // A toleranced solve through a real worker process: the worker's
+    // accuracy ladder certifies the answer, and the achieved residual
+    // rides back on the solve response frame into the coordinator's
+    // accuracy ledger — a coordinator that dropped the frame's accuracy
+    // fields would report zero residual solves here.
+    let b = vec![1.0; 120];
+    let x = handle.solve(b.clone()).unwrap();
+    assert!(m.residual_inf(&x, &b) <= 1e-8);
+    let snap = h.metrics().unwrap();
+    assert!(snap.residual_solves >= 1, "certified solve counted");
+    assert!(
+        snap.residual_max <= 1e-8,
+        "worst certified residual {:.3e} over the registered bound",
+        snap.residual_max
+    );
+
+    // A per-request bound tighter than the registered default drives
+    // the ladder (escalation or exact fallback) inside the worker; the
+    // certificate still crosses back under the tighter bound.
+    let x2 = handle
+        .solve_with(b.clone(), SolveOptions::new().tolerance(1e-10))
+        .unwrap();
+    assert!(m.residual_inf(&x2, &b) <= 1e-10);
+    let snap2 = h.metrics().unwrap();
+    assert!(snap2.residual_solves >= 2, "both certificates counted");
+
+    // An impossible bound comes back as the typed accuracy rejection —
+    // the protocol preserves the variant, not a stringly Backend error.
+    match handle.solve_with(b.clone(), SolveOptions::new().tolerance(1e-300)) {
+        Err(ServiceError::AccuracyUnsatisfiable(why)) => {
+            assert!(why.contains("tolerance"), "{why}");
+        }
+        other => panic!("expected AccuracyUnsatisfiable over the wire, got {other:?}"),
+    }
     svc.shutdown();
 }
 
