@@ -5,7 +5,7 @@
 CARGO ?= cargo
 BIN   := target/release/sptrsv
 
-.PHONY: build test bench-smoke bench-precond refresh-baseline
+.PHONY: build test bench-smoke bench-precond artifacts refresh-baseline
 
 build:
 	$(CARGO) build --release
@@ -18,6 +18,19 @@ bench-smoke: build
 
 bench-precond: build
 	$(BIN) bench --scenario scenarios/precond_serving.json --bench-out-dir bench-out
+
+# The binary artifact round trip: persist an analysis as a `.spa`
+# container, inspect and verify it (sections, CRCs, stored placements),
+# then warm-start a checked solve from it. Finishes with the warm-start
+# bench in smoke mode (informational timings, no ratio gate).
+artifacts: build
+	mkdir -p bench-out
+	$(BIN) gen --kind lung2 --scale 0.05 --out bench-out/lung2.mtx
+	$(BIN) analyze --matrix bench-out/lung2.mtx --plan avgcost+scheduled --save bench-out/lung2.spa
+	$(BIN) artifact inspect bench-out/lung2.spa
+	$(BIN) artifact verify bench-out/lung2.spa
+	$(BIN) solve --matrix bench-out/lung2.mtx --analysis bench-out/lung2.spa --check
+	SPTRSV_ARTIFACT_SMOKE=1 $(CARGO) bench --bench artifact_perf
 
 # Re-capture the checked-in trend baseline from a fresh smoke run on
 # THIS machine. The baseline is the reference shape for the trend gate

@@ -1,0 +1,120 @@
+//! Bench: the warm-start story for persisted analyses — what restoring
+//! one from disk costs in the binary `.spa` container versus the legacy
+//! JSON format. The binary path exists to make cache hits and shard
+//! re-registration near-free, so this bench gates the load-time ratio:
+//!
+//!     cargo bench --bench artifact_perf
+//!     SPTRSV_ARTIFACT_SMOKE=1 cargo bench --bench artifact_perf   # CI: tiny, no gate
+//!
+//! Full mode requires the binary load to be at least 5x faster than the
+//! JSON load on every matrix/plan pair (median of repeated loads, so a
+//! single slow page-in does not fail the run); smoke mode reports the
+//! sizes and timings without gating. Both modes always assert that the
+//! loads skip the structural passes and solve correctly — speed that
+//! re-analyzes would be cheating.
+
+use std::time::Instant;
+
+use sptrsv_gt::analysis::{analyze, Analysis, AnalysisFormat, AnalyzeOptions};
+use sptrsv_gt::sparse::generate::{self, GenOptions};
+use sptrsv_gt::transform::PlanSpec;
+use sptrsv_gt::util::rng::Rng;
+
+/// Median wall time of `reps` loads, in milliseconds.
+fn median_load_ms(
+    path: &std::path::Path,
+    m: &sptrsv_gt::sparse::Csr,
+    opts: &AnalyzeOptions,
+    reps: usize,
+) -> f64 {
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let a = Analysis::load(path, m, opts).unwrap();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+        let c = a.rebuilds();
+        assert_eq!(c.coarsen_passes, 0, "load re-ran coarsening");
+        assert_eq!(c.placement_passes, 0, "load re-ran placement");
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+fn main() {
+    let smoke = std::env::var("SPTRSV_ARTIFACT_SMOKE").is_ok_and(|v| v != "0");
+    let scale: f64 = std::env::var("SPTRSV_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if smoke { 0.03 } else { 0.3 });
+    let workers: usize = std::env::var("SPTRSV_BENCH_WORKERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let reps = if smoke { 3 } else { 9 };
+    let opts = AnalyzeOptions {
+        workers,
+        ..Default::default()
+    };
+    println!("artifact warm start (scale {scale}, {workers} workers, smoke={smoke})");
+    println!(
+        "{:<28} {:>10} {:>10} {:>10} {:>10} {:>8}",
+        "matrix/plan", "json KiB", "spa KiB", "json ms", "spa ms", "ratio"
+    );
+
+    let mats = [
+        ("lung2-like", generate::lung2_like(&GenOptions::with_scale(scale))),
+        ("torso2-like", generate::torso2_like(&GenOptions::with_scale(scale))),
+    ];
+    let mut failures = Vec::new();
+    for (mname, m) in &mats {
+        for plan in ["avgcost+levelset", "avgcost+scheduled"] {
+            let a = analyze(m, &PlanSpec::parse(plan).unwrap(), &opts).unwrap();
+            let pid = std::process::id();
+            let pj = std::env::temp_dir().join(format!("sptrsv_bench_art_{pid}.analysis.json"));
+            let pb = std::env::temp_dir().join(format!("sptrsv_bench_art_{pid}.spa"));
+            a.save_format(&pj, AnalysisFormat::Json).unwrap();
+            a.save_format(&pb, AnalysisFormat::Binary).unwrap();
+            let json_kib = std::fs::metadata(&pj).unwrap().len() as f64 / 1024.0;
+            let spa_kib = std::fs::metadata(&pb).unwrap().len() as f64 / 1024.0;
+
+            let json_ms = median_load_ms(&pj, m, &opts, reps);
+            let spa_ms = median_load_ms(&pb, m, &opts, reps);
+            let ratio = json_ms / spa_ms.max(1e-6);
+
+            // Either restored analysis must still solve; take the binary one.
+            let loaded = Analysis::load(&pb, m, &opts).unwrap();
+            let mut rng = Rng::new(11);
+            let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            assert!(
+                m.residual_inf(&loaded.solve(&b), &b) < 1e-8,
+                "{mname}/{plan}: binary-loaded solve inaccurate"
+            );
+            std::fs::remove_file(&pj).ok();
+            std::fs::remove_file(&pb).ok();
+
+            println!(
+                "{:<28} {:>10.1} {:>10.1} {:>10.2} {:>10.2} {:>7.1}x",
+                format!("{mname}/{plan}"),
+                json_kib,
+                spa_kib,
+                json_ms,
+                spa_ms,
+                ratio
+            );
+            if !smoke && ratio < 5.0 {
+                failures.push(format!(
+                    "{mname}/{plan}: binary load only {ratio:.1}x faster \
+                     (json {json_ms:.2}ms vs spa {spa_ms:.2}ms; need 5x)"
+                ));
+            }
+        }
+    }
+    if failures.is_empty() {
+        println!("artifact bench OK");
+    } else {
+        for f in &failures {
+            eprintln!("FAIL: {f}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,552 @@
+//! The `Analysis` <-> binary artifact bridge: encodes the structural
+//! artifacts into the `.spa` container (`crate::artifact`) and decodes
+//! them back by viewing mapped sections — the JSON path's semantics
+//! (fingerprint check, renumeric replay, guard-cap re-check, identity
+//! plan rejection) with none of its parse cost.
+//!
+//! One artifact stores the block schedule for **several worker counts**
+//! (the serving pool's size, one less, half, and 1), each as its own
+//! `SCHEDULE` section. A load picks the largest stored count that fits
+//! the pool it is given, so a shrunken pool adopts a stored placement
+//! instead of re-running coarsening + ETF — and since a one-worker
+//! schedule is always stored, a binary load never rebuilds.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::artifact::container::{
+    ArtifactWriter, SEC_CSR, SEC_LEVELS, SEC_PLAN, SEC_REWRITE, SEC_SCHEDULE,
+};
+use crate::artifact::pack::{
+    put_f64, put_monotone, put_u32s, put_u64, put_varint, Cursor,
+};
+use crate::artifact::{ArtifactError, ArtifactReader};
+use crate::error::Error;
+use crate::sched::schedule::{Schedule, ScheduleStats};
+use crate::sched::Block;
+use crate::solver::dispatch::ExecSolver;
+use crate::sparse::Csr;
+use crate::trace::PhaseTimes;
+use crate::transform::rewrite::RewriteRecord;
+use crate::transform::{Exec, Rewrite, SolvePlan};
+use crate::tuner::Fingerprint;
+
+use super::renumeric::{renumeric, StructuralTransform};
+use super::{Analysis, AnalyzeOptions, BuildCounters};
+
+fn malformed(what: impl Into<String>) -> Error {
+    Error::Artifact(ArtifactError::Malformed(what.into()))
+}
+
+/// Worker counts persisted alongside the analysis' own: one smaller (a
+/// pool that lost a worker), half (a heavily shrunken pool), and 1 (the
+/// floor that makes every load adoptable). Deduplicated, descending.
+fn stored_worker_counts(w: usize) -> Vec<usize> {
+    let mut counts = vec![w, w.saturating_sub(1).max(1), (w / 2).max(1), 1];
+    counts.sort_unstable_by(|a, b| b.cmp(a));
+    counts.dedup();
+    counts
+}
+
+/// Serialize `a`'s structural artifacts as a binary container at `path`.
+pub(super) fn save(a: &Analysis, path: &Path) -> Result<(), Error> {
+    let t = &a.t;
+    let mut w = ArtifactWriter::new(a.fingerprint.0, a.m.nrows as u64);
+
+    // PLAN: pre-transform stats + the plan strings.
+    let mut plan = Vec::new();
+    put_u64(&mut plan, t.stats.levels_before as u64);
+    put_f64(&mut plan, t.stats.avg_level_cost_before);
+    put_u64(&mut plan, t.stats.total_level_cost_before);
+    let ps = a.plan.to_string();
+    put_varint(&mut plan, ps.len() as u64);
+    plan.extend_from_slice(ps.as_bytes());
+    put_varint(&mut plan, a.plan_name.len() as u64);
+    plan.extend_from_slice(a.plan_name.as_bytes());
+    w.section(SEC_PLAN, plan);
+
+    // CSR: the sparsity structure itself (indptr delta-packed, indices
+    // raw). The fingerprint already guards reuse; the explicit structure
+    // makes the artifact self-describing for `artifact inspect` and lets
+    // a load cross-check beyond the hash.
+    let mut csr = Vec::new();
+    put_u64(&mut csr, a.m.ncols as u64);
+    let indptr: Vec<u64> = a.m.indptr.iter().map(|&p| p as u64).collect();
+    put_monotone(&mut csr, &indptr).map_err(Error::Artifact)?;
+    put_u32s(&mut csr, &a.m.indices);
+    w.section(SEC_CSR, csr);
+
+    // LEVELS: level_ptr delta-packed + the rows of every level, flat.
+    let mut lv = Vec::new();
+    let mut level_ptr = Vec::with_capacity(t.levels.len() + 1);
+    let mut acc = 0u64;
+    level_ptr.push(0);
+    for l in &t.levels {
+        acc += l.len() as u64;
+        level_ptr.push(acc);
+    }
+    put_monotone(&mut lv, &level_ptr).map_err(Error::Artifact)?;
+    let flat: Vec<u32> = t.levels.iter().flat_map(|l| l.iter().copied()).collect();
+    put_u32s(&mut lv, &flat);
+    w.section(SEC_LEVELS, lv);
+
+    // REWRITE: which rows carry folded equations + the decision log.
+    let mut rw = Vec::new();
+    let rewritten: Vec<u64> = (0..t.equations.len() as u64)
+        .filter(|&i| t.equations[i as usize].is_some())
+        .collect();
+    put_monotone(&mut rw, &rewritten).map_err(Error::Artifact)?;
+    put_varint(&mut rw, t.log.len() as u64);
+    for r in &t.log {
+        put_varint(&mut rw, r.row as u64);
+        put_varint(&mut rw, r.from_level as u64);
+        put_varint(&mut rw, r.to_level as u64);
+        put_varint(&mut rw, r.substitutions as u64);
+    }
+    w.section(SEC_REWRITE, rw);
+
+    // SCHEDULE x stored worker counts. The analysis' own schedule is
+    // emitted as-is; the extra counts are built here, once, at save time
+    // — that is the whole point: pay placement offline so no future
+    // load, on any plausible pool size, re-places.
+    if let Some(own) = &a.schedule {
+        let block_target = match &a.plan.exec {
+            Exec::Scheduled(o) => o.or(a.sched).block_target(),
+            _ => crate::sched::DEFAULT_BLOCK_TARGET,
+        };
+        for count in stored_worker_counts(own.nworkers) {
+            let built;
+            let s: &Schedule = if count == own.nworkers {
+                own
+            } else {
+                built = Schedule::build(&a.m, t, count, block_target);
+                &built
+            };
+            w.section(SEC_SCHEDULE, encode_schedule(s)?);
+        }
+    }
+
+    w.write(path).map_err(Error::Artifact)
+}
+
+fn encode_schedule(s: &Schedule) -> Result<Vec<u8>, Error> {
+    let mut out = Vec::new();
+    put_u64(&mut out, s.nworkers as u64);
+    let st = &s.stats;
+    put_u64(&mut out, st.num_blocks as u64);
+    put_u64(&mut out, st.chain_blocks as u64);
+    put_u64(&mut out, st.cut_edges as u64);
+    put_u64(&mut out, st.max_worker_load);
+    put_u64(&mut out, st.total_cost);
+    put_u64(&mut out, st.levelset_barriers as u64);
+    put_u64(&mut out, st.workers as u64);
+
+    let mut block_ptr = Vec::with_capacity(s.blocks.len() + 1);
+    let mut acc = 0u64;
+    block_ptr.push(0);
+    for b in &s.blocks {
+        acc += b.rows.len() as u64;
+        block_ptr.push(acc);
+    }
+    put_monotone(&mut out, &block_ptr).map_err(Error::Artifact)?;
+    for b in &s.blocks {
+        put_varint(&mut out, b.cost);
+    }
+    // Blocks sit in (head level, head row) topological order, so their
+    // levels are non-decreasing — delta-packable like an offset array.
+    let levels: Vec<u64> = s.blocks.iter().map(|b| b.level as u64).collect();
+    put_monotone(&mut out, &levels).map_err(Error::Artifact)?;
+    put_u32s(&mut out, &s.worker_of);
+    let pred_ptr: Vec<u64> = s.pred_ptr.iter().map(|&p| p as u64).collect();
+    put_monotone(&mut out, &pred_ptr).map_err(Error::Artifact)?;
+    put_u32s(&mut out, &s.preds);
+    let rows_flat: Vec<u32> = s
+        .blocks
+        .iter()
+        .flat_map(|b| b.rows.iter().copied())
+        .collect();
+    put_u32s(&mut out, &rows_flat);
+    Ok(out)
+}
+
+fn decode_schedule(payload: &[u8]) -> Result<Schedule, ArtifactError> {
+    let mut cur = Cursor::new(payload);
+    let nworkers = (cur.u64()? as usize).max(1);
+    let stats = ScheduleStats {
+        num_blocks: cur.u64()? as usize,
+        chain_blocks: cur.u64()? as usize,
+        cut_edges: cur.u64()? as usize,
+        max_worker_load: cur.u64()?,
+        total_cost: cur.u64()?,
+        levelset_barriers: cur.u64()? as usize,
+        workers: cur.u64()? as usize,
+    };
+    let block_ptr = cur.monotone()?;
+    if block_ptr.is_empty() {
+        return Err(ArtifactError::Malformed("schedule without block_ptr".into()));
+    }
+    let nblocks = block_ptr.len() - 1;
+    let mut costs = Vec::with_capacity(nblocks);
+    for _ in 0..nblocks {
+        costs.push(cur.varint()?);
+    }
+    let levels = cur.monotone()?;
+    let worker_of = cur.u32s()?.into_owned();
+    let pred_ptr_u64 = cur.monotone()?;
+    let preds = cur.u32s()?.into_owned();
+    let rows_flat = cur.u32s()?;
+    if levels.len() != nblocks
+        || worker_of.len() != nblocks
+        || pred_ptr_u64.len() != nblocks + 1
+        || pred_ptr_u64.last().copied().unwrap_or(0) as usize != preds.len()
+        || *block_ptr.last().unwrap() as usize != rows_flat.len()
+        || worker_of.iter().any(|&w| w as usize >= nworkers)
+    {
+        return Err(ArtifactError::Malformed(
+            "schedule arrays inconsistent".into(),
+        ));
+    }
+    let blocks: Vec<Block> = (0..nblocks)
+        .map(|b| Block {
+            rows: rows_flat[block_ptr[b] as usize..block_ptr[b + 1] as usize].to_vec(),
+            cost: costs[b],
+            level: levels[b] as u32,
+        })
+        .collect();
+    let mut worker_lists: Vec<Vec<u32>> = vec![Vec::new(); nworkers];
+    for (b, &w) in worker_of.iter().enumerate() {
+        worker_lists[w as usize].push(b as u32);
+    }
+    Ok(Schedule {
+        nworkers,
+        blocks,
+        worker_of,
+        worker_lists,
+        pred_ptr: pred_ptr_u64.into_iter().map(|p| p as usize).collect(),
+        preds,
+        stats,
+    })
+}
+
+/// Worker count of a `SCHEDULE` section without decoding it.
+fn peek_nworkers(payload: &[u8]) -> Result<usize, ArtifactError> {
+    Cursor::new(payload).u64().map(|w| w as usize)
+}
+
+/// Restore an analysis from a binary artifact for `m`. Mirrors the JSON
+/// loader's checks exactly; adopts the **largest stored placement that
+/// fits the pool** instead of ever re-placing.
+pub(super) fn load(path: &Path, m: Arc<Csr>, opts: &AnalyzeOptions) -> Result<Analysis, Error> {
+    let start = Instant::now();
+    let r = ArtifactReader::open(path).map_err(Error::Artifact)?;
+
+    let fingerprint = Fingerprint(r.fingerprint());
+    let actual = Fingerprint::of(&m);
+    if fingerprint != actual {
+        return Err(Error::Invalid(format!(
+            "analysis was saved for structure {fingerprint}, matrix has {actual}"
+        )));
+    }
+    if r.nrows() as usize != m.nrows {
+        return Err(Error::Invalid(format!(
+            "analysis was saved for {} rows, matrix has {}",
+            r.nrows(),
+            m.nrows
+        )));
+    }
+
+    // PLAN.
+    let pb = r.section(SEC_PLAN).ok_or_else(|| malformed("missing PLAN section"))?;
+    let mut cur = Cursor::new(pb);
+    let (levels_before, avg_before, total_before) = (|| -> Result<_, ArtifactError> {
+        Ok((cur.u64()? as usize, cur.f64()?, cur.u64()?))
+    })()
+    .map_err(Error::Artifact)?;
+    let plan_str = read_str(&mut cur, pb.len()).map_err(Error::Artifact)?;
+    let plan_name = read_str(&mut cur, pb.len()).map_err(Error::Artifact)?;
+    let plan = SolvePlan::parse(&plan_str).map_err(Error::Invalid)?;
+    let plan_name = if plan_name.is_empty() { plan_str } else { plan_name };
+
+    // CSR cross-check: the fingerprint already hashed the structure, but
+    // the explicit arrays are stored — verify them (a cheap memcmp-scale
+    // scan next to the renumeric pass that follows).
+    if let Some(cb) = r.section(SEC_CSR) {
+        let mut cur = Cursor::new(cb);
+        let check = (|| -> Result<bool, ArtifactError> {
+            let ncols = cur.u64()? as usize;
+            let indptr = cur.monotone()?;
+            let indices = cur.u32s()?;
+            Ok(ncols == m.ncols
+                && indptr.len() == m.indptr.len()
+                && indptr.iter().zip(&m.indptr).all(|(&a, &b)| a as usize == b)
+                && indices.as_ref() == &m.indices[..])
+        })()
+        .map_err(Error::Artifact)?;
+        if !check {
+            return Err(malformed(
+                "stored CSR structure does not match the matrix (fingerprint collision or \
+                 corrupt section)",
+            ));
+        }
+    }
+
+    // LEVELS -> levels + level_of, with the same coverage checks the
+    // JSON loader runs.
+    let lb = r
+        .section(SEC_LEVELS)
+        .ok_or_else(|| malformed("missing LEVELS section"))?;
+    let mut cur = Cursor::new(lb);
+    let (level_ptr, flat) = (|| -> Result<_, ArtifactError> {
+        Ok((cur.monotone()?, cur.u32s()?))
+    })()
+    .map_err(Error::Artifact)?;
+    if level_ptr.first().copied().unwrap_or(1) != 0
+        || level_ptr.last().copied().unwrap_or(0) as usize != flat.len()
+    {
+        return Err(malformed("LEVELS pointers inconsistent"));
+    }
+    let levels: Vec<Vec<u32>> = level_ptr
+        .windows(2)
+        .map(|w| flat[w[0] as usize..w[1] as usize].to_vec())
+        .collect();
+    let mut level_of = vec![u32::MAX; m.nrows];
+    for (lvl, rows) in levels.iter().enumerate() {
+        for &row in rows {
+            let ru = row as usize;
+            if ru >= m.nrows || level_of[ru] != u32::MAX {
+                return Err(malformed(format!(
+                    "row {row} out of range or in two levels"
+                )));
+            }
+            level_of[ru] = lvl as u32;
+        }
+    }
+    if level_of.iter().any(|&l| l == u32::MAX) {
+        return Err(malformed("levels do not cover all rows"));
+    }
+
+    // REWRITE.
+    let wb = r
+        .section(SEC_REWRITE)
+        .ok_or_else(|| malformed("missing REWRITE section"))?;
+    let mut cur = Cursor::new(wb);
+    let mut rewritten = vec![false; m.nrows];
+    let log = (|| -> Result<Vec<RewriteRecord>, ArtifactError> {
+        for row in cur.monotone()? {
+            let ru = row as usize;
+            if ru >= m.nrows {
+                return Err(ArtifactError::Malformed(format!(
+                    "rewritten row {row} out of range"
+                )));
+            }
+            rewritten[ru] = true;
+        }
+        let n = cur.varint()? as usize;
+        let mut log = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            log.push(RewriteRecord {
+                row: cur.varint()? as u32,
+                from_level: cur.varint()? as u32,
+                to_level: cur.varint()? as u32,
+                substitutions: cur.varint()? as u32,
+            });
+        }
+        Ok(log)
+    })()
+    .map_err(Error::Artifact)?;
+
+    let skeleton = StructuralTransform {
+        levels,
+        level_of,
+        rewritten,
+        log,
+        levels_before,
+        avg_level_cost_before: avg_before,
+        total_level_cost_before: total_before,
+    };
+    let t0 = Instant::now();
+    let t = Arc::new(renumeric(&m, &skeleton).map_err(Error::Invalid)?);
+    let phase_times = PhaseTimes {
+        renumeric_us: t0.elapsed().as_micros() as u64,
+        ..Default::default()
+    };
+    t.validate(&m)
+        .map_err(|e| malformed(format!("replayed transform invalid: {e}")))?;
+    super::check_guard_cap(&plan, &t)?;
+    if plan.rewrite == Rewrite::None && t.stats.rows_rewritten > 0 {
+        return Err(malformed("identity plan but rewritten rows recorded"));
+    }
+
+    let pool = opts.resolve_pool();
+    let counters = BuildCounters {
+        renumeric_passes: 1,
+        ..Default::default()
+    };
+    let schedule = match &plan.exec {
+        Exec::Scheduled(_) => {
+            // Nearest fit: the largest stored worker count this pool can
+            // run. A 1-worker schedule is always stored, so a binary
+            // load never pays coarsening or placement again.
+            let mut best: Option<(usize, &[u8])> = None;
+            for payload in r.sections_of(SEC_SCHEDULE) {
+                let w = peek_nworkers(payload).map_err(Error::Artifact)?;
+                if w <= pool.len() && w > best.map(|(bw, _)| bw).unwrap_or(0) {
+                    best = Some((w, payload));
+                }
+            }
+            let (_, payload) = best.ok_or_else(|| {
+                malformed(format!(
+                    "no stored placement fits a {}-worker pool",
+                    pool.len()
+                ))
+            })?;
+            let s = decode_schedule(payload).map_err(Error::Artifact)?;
+            s.validate(&m, &t)
+                .map_err(|e| malformed(format!("persisted schedule invalid: {e}")))?;
+            Some(Arc::new(s))
+        }
+        _ => None,
+    };
+    let solver = ExecSolver::build_with(
+        Arc::clone(&m),
+        Arc::clone(&t),
+        &plan.exec,
+        Arc::clone(&pool),
+        opts.sched,
+        schedule.clone(),
+    )?;
+    Ok(Analysis {
+        m,
+        plan,
+        plan_name,
+        fingerprint: actual,
+        t,
+        schedule,
+        solver,
+        pool,
+        sched: opts.sched,
+        counters,
+        prepare_time: start.elapsed(),
+        phase_times,
+    })
+}
+
+fn read_str(cur: &mut Cursor<'_>, cap: usize) -> Result<String, ArtifactError> {
+    let n = cur.varint()? as usize;
+    if n > cap {
+        return Err(ArtifactError::Malformed(format!(
+            "string length {n} exceeds section"
+        )));
+    }
+    let bytes = cur.bytes(n)?;
+    String::from_utf8(bytes.to_vec())
+        .map_err(|_| ArtifactError::Malformed("string is not UTF-8".into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::generate::{self, GenOptions};
+    use crate::transform::PlanSpec;
+    use crate::util::prop::assert_allclose;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("sptrsv_{name}_{}.spa", std::process::id()))
+    }
+
+    fn opts(workers: usize) -> AnalyzeOptions {
+        AnalyzeOptions {
+            workers,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn binary_roundtrip_flat_counters_and_identical_solves() {
+        let path = tmp("bin_roundtrip");
+        let m = generate::lung2_like(&GenOptions::with_scale(0.04));
+        let a = super::super::analyze(
+            &m,
+            &PlanSpec::parse("avgcost+scheduled").unwrap(),
+            &opts(2),
+        )
+        .unwrap();
+        save(&a, &path).unwrap();
+        let loaded = load(&path, Arc::new(m.clone()), &opts(2)).unwrap();
+        let c = loaded.rebuilds();
+        assert_eq!(c.coarsen_passes, 0, "coarsening re-ran on binary load");
+        assert_eq!(c.placement_passes, 0, "placement re-ran on binary load");
+        assert_eq!(c.rewrite_passes, 0);
+        assert_eq!(c.renumeric_passes, 1);
+        assert_eq!(loaded.plan_name(), a.plan_name());
+        assert_eq!(loaded.schedule().unwrap().stats, a.schedule().unwrap().stats);
+        let mut rng = Rng::new(5);
+        let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        assert_allclose(&loaded.solve(&b), &a.solve(&b), 1e-12, 1e-12).unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn shrunken_pool_adopts_a_stored_placement() {
+        let path = tmp("bin_shrunk");
+        let m = generate::lung2_like(&GenOptions::with_scale(0.04));
+        let a = super::super::analyze(
+            &m,
+            &PlanSpec::parse("avgcost+scheduled").unwrap(),
+            &opts(4),
+        )
+        .unwrap();
+        assert_eq!(a.schedule().unwrap().nworkers, 4);
+        save(&a, &path).unwrap();
+        // W-1: the artifact holds a 3-worker placement; the load adopts
+        // it with ZERO structural passes.
+        for w in [3usize, 2, 1] {
+            let loaded = load(&path, Arc::new(m.clone()), &opts(w)).unwrap();
+            let c = loaded.rebuilds();
+            assert_eq!(c.coarsen_passes, 0, "pool {w}: coarsening re-ran");
+            assert_eq!(c.placement_passes, 0, "pool {w}: placement re-ran");
+            assert_eq!(loaded.schedule().unwrap().nworkers, w);
+            let b = vec![1.0; m.nrows];
+            assert!(m.residual_inf(&loaded.solve(&b), &b) < 1e-9);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn stored_worker_counts_dedup_descending() {
+        assert_eq!(stored_worker_counts(8), vec![8, 7, 4, 1]);
+        assert_eq!(stored_worker_counts(4), vec![4, 3, 2, 1]);
+        assert_eq!(stored_worker_counts(2), vec![2, 1]);
+        assert_eq!(stored_worker_counts(1), vec![1]);
+    }
+
+    #[test]
+    fn binary_load_renumerics_against_new_values() {
+        let path = tmp("bin_newvals");
+        let m = generate::lung2_like(&GenOptions::with_scale(0.04));
+        let a = super::super::analyze(&m, &PlanSpec::parse("avgcost").unwrap(), &opts(2)).unwrap();
+        save(&a, &path).unwrap();
+        let mut m2 = m.clone();
+        let mut rng = Rng::new(9);
+        for v in &mut m2.data {
+            *v *= 1.0 + 0.2 * rng.uniform(-1.0, 1.0);
+        }
+        let loaded = load(&path, Arc::new(m2.clone()), &opts(2)).unwrap();
+        let b = vec![1.0; m2.nrows];
+        assert!(m2.residual_inf(&loaded.solve(&b), &b) < 1e-9);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn binary_load_rejects_mismatched_structure() {
+        let path = tmp("bin_reject");
+        let m = generate::tridiagonal(40, &Default::default());
+        let a = super::super::analyze(&m, &PlanSpec::parse("manual:5").unwrap(), &opts(2)).unwrap();
+        save(&a, &path).unwrap();
+        let other = generate::tridiagonal(41, &Default::default());
+        assert!(load(&path, Arc::new(other), &opts(2)).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

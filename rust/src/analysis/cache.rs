@@ -4,17 +4,26 @@
 //! volume — re-registers known structures without re-running rewrite
 //! analysis, coarsening or ETF placement.
 //!
-//! Filenames embed both key halves (`<fingerprint>.<plan>.analysis.json`
-//! with non-filename-safe plan characters mapped to `_`); since distinct
-//! plans can collide after sanitization, the load path re-verifies the
-//! plan string recorded *inside* the file before trusting it.
+//! Entries are binary `.spa` artifacts by default (mmap-validated on
+//! load, see [`crate::artifact`]); `analysis_format = json` keeps the
+//! legacy schema-stamped JSON for one release. Filenames embed both key
+//! halves (`<fingerprint>.<plan>.spa`, legacy
+//! `<fingerprint>.<plan>.analysis.json`, with non-filename-safe plan
+//! characters mapped to `_`); since distinct plans can collide after
+//! sanitization, the load path re-verifies the plan string recorded
+//! *inside* the file before trusting it. Loads sniff the file content,
+//! so a cache switched to `binary` still reads entries written by an
+//! older JSON-configured replica (and vice versa) — the configured
+//! format only governs what new saves write.
 //!
 //! The directory can be bounded ([`AnalysisCache::with_limits`], wired to
 //! the `analysis_cache_cap` / `analysis_cache_ttl` config keys): every
 //! save first drops entries older than the TTL, then evicts
 //! least-recently-used entries beyond the cap. Recency is the file mtime
 //! — a successful load *touches* its entry, so hot analyses survive the
-//! LRU scan without any sidecar index.
+//! LRU scan without any sidecar index. [`AnalysisCache::usage`] reports
+//! the index the limits operate over: live entries and their real
+//! on-disk bytes.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -26,7 +35,7 @@ use crate::sparse::Csr;
 use crate::transform::SolvePlan;
 use crate::tuner::Fingerprint;
 
-use super::{persist, Analysis, AnalyzeOptions};
+use super::{Analysis, AnalysisFormat, AnalyzeOptions};
 use crate::sched::SchedOptions;
 
 pub struct AnalysisCache {
@@ -35,6 +44,8 @@ pub struct AnalysisCache {
     cap: usize,
     /// maximum entry age kept after a save (None = never expires)
     ttl: Option<Duration>,
+    /// on-disk format for new saves; loads sniff and accept either
+    format: AnalysisFormat,
 }
 
 impl AnalysisCache {
@@ -43,6 +54,7 @@ impl AnalysisCache {
             dir: dir.to_path_buf(),
             cap: 0,
             ttl: None,
+            format: AnalysisFormat::default(),
         }
     }
 
@@ -53,15 +65,37 @@ impl AnalysisCache {
             dir: dir.to_path_buf(),
             cap,
             ttl: (!ttl.is_zero()).then_some(ttl),
+            format: AnalysisFormat::default(),
         }
+    }
+
+    /// Override the on-disk format for new saves (the `analysis_format`
+    /// config key). Loads are format-agnostic either way.
+    pub fn with_format(mut self, format: AnalysisFormat) -> AnalysisCache {
+        self.format = format;
+        self
     }
 
     pub fn dir(&self) -> &Path {
         &self.dir
     }
 
-    /// Cache file for one `(fingerprint, plan)` key.
+    pub fn format(&self) -> AnalysisFormat {
+        self.format
+    }
+
+    /// Cache file for one `(fingerprint, plan)` key in the configured
+    /// format.
     pub fn path_for(&self, fp: Fingerprint, plan: &SolvePlan) -> PathBuf {
+        self.path_for_format(fp, plan, self.format)
+    }
+
+    fn path_for_format(
+        &self,
+        fp: Fingerprint,
+        plan: &SolvePlan,
+        format: AnalysisFormat,
+    ) -> PathBuf {
         let sanitized: String = plan
             .to_string()
             .chars()
@@ -73,14 +107,19 @@ impl AnalysisCache {
                 }
             })
             .collect();
-        self.dir.join(format!("{fp}.{sanitized}.analysis.json"))
+        self.dir
+            .join(format!("{fp}.{sanitized}.{}", format.suffix()))
     }
 
     /// Try to restore a persisted analysis for `(m, plan)`, where `fp`
-    /// is `m`'s (caller-computed) structural fingerprint. Returns None
-    /// on any miss — absent file, schema/fingerprint mismatch, or a
-    /// sanitization collision where the file's recorded plan differs —
-    /// warning only when a present file is unusable.
+    /// is `m`'s (caller-computed) structural fingerprint. Probes the
+    /// configured-format path first, then the other format's suffix, so
+    /// entries written before an `analysis_format` switch keep hitting.
+    /// Returns None on any miss — absent file, corrupt/truncated
+    /// artifact, schema/fingerprint mismatch, or a sanitization
+    /// collision where the file's recorded plan differs — warning only
+    /// when a present file is unusable (callers then fall back to a
+    /// fresh analysis).
     pub fn load(
         &self,
         m: Arc<Csr>,
@@ -89,16 +128,20 @@ impl AnalysisCache {
         pool: &Arc<Pool>,
         sched: SchedOptions,
     ) -> Option<Analysis> {
-        let path = self.path_for(fp, plan);
-        if !path.exists() {
-            return None;
-        }
+        let alternate = match self.format {
+            AnalysisFormat::Binary => AnalysisFormat::Json,
+            AnalysisFormat::Json => AnalysisFormat::Binary,
+        };
+        let path = [self.format, alternate]
+            .into_iter()
+            .map(|f| self.path_for_format(fp, plan, f))
+            .find(|p| p.exists())?;
         let opts = AnalyzeOptions {
             workers: pool.len(),
             pool: Some(Arc::clone(pool)),
             sched,
         };
-        match persist::load(&path, m, &opts) {
+        match Analysis::load_arc(&path, m, &opts) {
             Ok(a) if a.plan() == plan => {
                 // LRU touch: bump the entry's mtime so hot analyses
                 // outlive colder ones in the eviction scan.
@@ -123,13 +166,33 @@ impl AnalysisCache {
         }
     }
 
-    /// Persist `a` under its `(fingerprint, plan)` key, then enforce the
-    /// TTL and LRU cap over the whole directory. The just-written entry
-    /// carries the newest mtime, so it always survives its own save.
+    /// Persist `a` under its `(fingerprint, plan)` key in the configured
+    /// format, then enforce the TTL and LRU cap over the whole
+    /// directory. The just-written entry carries the newest mtime, so it
+    /// always survives its own save.
     pub fn save(&self, a: &Analysis) -> Result<(), Error> {
-        persist::save(a, &self.path_for(a.fingerprint(), a.plan()))?;
+        a.save_format(&self.path_for(a.fingerprint(), a.plan()), self.format)?;
         self.enforce_limits();
         Ok(())
+    }
+
+    /// The cache's live index: `(entries, on_disk_bytes)` summed over
+    /// both formats' entries. Bytes are real file sizes — for binary
+    /// artifacts that is exactly what a warm start will mmap.
+    pub fn usage(&self) -> (usize, u64) {
+        let Ok(entries) = std::fs::read_dir(&self.dir) else {
+            return (0, 0);
+        };
+        entries
+            .flatten()
+            .filter(|e| {
+                e.file_name()
+                    .to_str()
+                    .is_some_and(is_cache_entry_name)
+            })
+            .fold((0, 0), |(n, bytes), e| {
+                (n + 1, bytes + e.metadata().map(|m| m.len()).unwrap_or(0))
+            })
     }
 
     /// Drop TTL-expired entries, then the least-recently-used entries
@@ -150,7 +213,7 @@ impl AnalysisCache {
                 if !path
                     .file_name()
                     .and_then(|n| n.to_str())
-                    .is_some_and(|n| n.ends_with(".analysis.json"))
+                    .is_some_and(is_cache_entry_name)
                 {
                     return None;
                 }
@@ -180,8 +243,16 @@ impl AnalysisCache {
     }
 }
 
+/// A directory entry this cache owns — either format's suffix. Limits
+/// and usage accounting only ever consider these, so a tuner plan cache
+/// sharing the directory is untouched.
+fn is_cache_entry_name(name: &str) -> bool {
+    name.ends_with(".spa") || name.ends_with(".analysis.json")
+}
+
 /// Best-effort mtime bump without platform-specific utimes: rewrite the
-/// file's first byte in place.
+/// file's first byte in place. (Rewriting the byte unchanged keeps
+/// binary artifacts' checksums valid.)
 fn touch(path: &Path) {
     use std::io::{Read, Seek, SeekFrom, Write};
     let Ok(mut f) = std::fs::OpenOptions::new().read(true).write(true).open(path) else {
@@ -253,7 +324,7 @@ mod tests {
                     .filter(|e| {
                         e.file_name()
                             .to_str()
-                            .is_some_and(|n| n.ends_with(".analysis.json"))
+                            .is_some_and(is_cache_entry_name)
                     })
                     .count()
             })
@@ -310,6 +381,69 @@ mod tests {
         assert!(cache.path_for(a2.fingerprint(), &plan).exists(), "touched entry survives");
         assert!(!cache.path_for(a3.fingerprint(), &plan).exists(), "untouched entry evicted");
         assert!(cache.path_for(a4.fingerprint(), &plan).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn binary_default_with_legacy_json_fallback_and_usage() {
+        let dir = std::env::temp_dir().join(format!("sptrsv_acache_fmt_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let pool = Arc::new(Pool::new(2));
+        let plan = SolvePlan::parse("avgcost+scheduled").unwrap();
+        let m = Arc::new(generate::lung2_like(&GenOptions::with_scale(0.03)));
+        let fp = Fingerprint::of(&m);
+        let a = super::super::analyze_arc(
+            Arc::clone(&m),
+            &PlanSpec::parse("avgcost+scheduled").unwrap(),
+            &super::super::AnalyzeOptions {
+                pool: Some(Arc::clone(&pool)),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+
+        // Default cache writes a binary .spa artifact and tracks its
+        // real on-disk bytes.
+        let cache = AnalysisCache::new(&dir);
+        assert_eq!(cache.format(), AnalysisFormat::Binary);
+        cache.save(&a).unwrap();
+        let spa = cache.path_for(fp, &plan);
+        assert!(spa.extension().is_some_and(|e| e == "spa"));
+        assert!(spa.exists());
+        let (n, bytes) = cache.usage();
+        assert_eq!(n, 1);
+        assert_eq!(bytes, std::fs::metadata(&spa).unwrap().len());
+        let warm = cache
+            .load(Arc::clone(&m), fp, &plan, &pool, SchedOptions::default())
+            .expect("binary cache hit");
+        assert_eq!(warm.rebuilds().coarsen_passes, 0);
+        assert_eq!(warm.rebuilds().placement_passes, 0);
+
+        // An entry written by a JSON-configured replica still hits a
+        // binary-configured cache (and vice versa): loads probe the
+        // alternate suffix and sniff content.
+        std::fs::remove_file(&spa).unwrap();
+        AnalysisCache::new(&dir)
+            .with_format(AnalysisFormat::Json)
+            .save(&a)
+            .unwrap();
+        assert!(!spa.exists());
+        let legacy = cache
+            .load(Arc::clone(&m), fp, &plan, &pool, SchedOptions::default())
+            .expect("legacy json entry hit from binary-configured cache");
+        assert_eq!(legacy.rebuilds().coarsen_passes, 0);
+        let b = vec![1.0; m.nrows];
+        assert!(m.residual_inf(&legacy.solve(&b), &b) < 1e-9);
+
+        // A corrupt binary entry is a miss, not an error.
+        cache.save(&a).unwrap();
+        let len = std::fs::metadata(&spa).unwrap().len();
+        let data = std::fs::read(&spa).unwrap();
+        std::fs::write(&spa, &data[..len as usize / 2]).unwrap();
+        std::fs::remove_file(cache.path_for_format(fp, &plan, AnalysisFormat::Json)).unwrap();
+        assert!(cache
+            .load(Arc::clone(&m), fp, &plan, &pool, SchedOptions::default())
+            .is_none());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -29,12 +29,16 @@
 //!   [`renumeric`] replay and rebuilds the numeric solver **without**
 //!   re-running rewrite analysis, coarsening or ETF placement (the
 //!   [`BuildCounters`] expose exactly which passes ran).
-//! * [`Analysis::save`] / [`Analysis::load`] — schema-stamped
-//!   persistence of the structural artifacts (plan + transform skeleton +
-//!   schedule); loading re-numerics against the given matrix, so a known
-//!   structure skips coarsening and placement entirely — even across
-//!   processes.
+//! * [`Analysis::save`] / [`Analysis::load`] — persistence of the
+//!   structural artifacts (plan + transform skeleton + schedule
+//!   placements). The default format is the binary mmap-able `.spa`
+//!   container ([`crate::artifact`]); loads sniff the format and
+//!   re-numeric against the given matrix, so a known structure skips
+//!   coarsening and placement entirely — even across processes, and
+//!   even on a pool smaller than the one the analysis was placed for
+//!   (the binary artifact stores placements for several worker counts).
 
+pub mod binary;
 pub mod cache;
 pub mod persist;
 pub mod renumeric;
@@ -54,6 +58,55 @@ use crate::tuner::{Fingerprint, TunedPlan, Tuner, TunerOptions};
 
 pub use cache::AnalysisCache;
 pub use renumeric::StructuralTransform;
+
+/// On-disk representation for persisted analyses. Binary (the `.spa`
+/// container, `crate::artifact`) is the default: it loads by mmap +
+/// validate instead of a JSON parse + rebuild, and stores placements for
+/// several worker counts. JSON remains readable for migration — loads
+/// sniff the file content, so the knob only governs what `save` writes —
+/// and its write path is kept one release behind the `analysis_format`
+/// config key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AnalysisFormat {
+    /// schema-stamped JSON (`analysis/persist.rs`), the legacy format
+    Json,
+    /// binary section container with per-worker-count placements
+    #[default]
+    Binary,
+}
+
+impl AnalysisFormat {
+    pub fn parse(s: &str) -> Result<AnalysisFormat, String> {
+        match s {
+            "json" => Ok(AnalysisFormat::Json),
+            "binary" | "spa" => Ok(AnalysisFormat::Binary),
+            other => Err(format!(
+                "unknown analysis format '{other}' (expected json or binary)"
+            )),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AnalysisFormat::Json => "json",
+            AnalysisFormat::Binary => "binary",
+        }
+    }
+
+    /// Filename suffix the analysis cache uses for this format.
+    pub fn suffix(self) -> &'static str {
+        match self {
+            AnalysisFormat::Json => "analysis.json",
+            AnalysisFormat::Binary => "spa",
+        }
+    }
+}
+
+impl std::fmt::Display for AnalysisFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
 
 /// Knobs for [`analyze`]: the parallel substrate and the scheduling
 /// fallbacks. Callers embedded in the coordinator pass the serving pool
@@ -484,25 +537,53 @@ impl Analysis {
     }
 
     /// Persist the structural artifacts (plan + transform skeleton +
-    /// schedule) as schema-stamped JSON. Values are **not** stored — a
-    /// load re-numerics against whatever same-pattern matrix it is given,
-    /// so one file serves every refactorization of the structure.
+    /// schedule placements) in the default format — the binary `.spa`
+    /// container (see [`AnalysisFormat`]). Values are **not** stored — a
+    /// load re-numerics against whatever same-pattern matrix it is
+    /// given, so one file serves every refactorization of the structure.
     pub fn save(&self, path: &Path) -> Result<(), Error> {
-        persist::save(self, path)
+        self.save_format(path, AnalysisFormat::default())
+    }
+
+    /// [`Analysis::save`] with an explicit format (the `analysis_format`
+    /// config key / `--analysis-format` flag; JSON is kept for one
+    /// release as a migration path).
+    pub fn save_format(&self, path: &Path, format: AnalysisFormat) -> Result<(), Error> {
+        match format {
+            AnalysisFormat::Json => persist::save(self, path),
+            AnalysisFormat::Binary => binary::save(self, path),
+        }
     }
 
     /// Restore an analysis from [`Analysis::save`] output for `m`, which
     /// must have the same sparsity structure (fingerprint-checked). The
     /// rewrite analysis, coarsening and ETF placement are all skipped;
-    /// only the [`renumeric`] value replay runs.
+    /// only the [`renumeric`] value replay runs. The format is sniffed
+    /// from the file itself (binary magic vs JSON), so both formats stay
+    /// loadable regardless of the configured write format.
     pub fn load(path: &Path, m: &Csr, opts: &AnalyzeOptions) -> Result<Analysis, Error> {
-        persist::load(path, Arc::new(m.clone()), opts)
+        Self::load_arc(path, Arc::new(m.clone()), opts)
     }
 
     /// [`Analysis::load`] without the matrix copy.
     pub fn load_arc(path: &Path, m: Arc<Csr>, opts: &AnalyzeOptions) -> Result<Analysis, Error> {
-        persist::load(path, m, opts)
+        if sniff_binary(path) {
+            binary::load(path, m, opts)
+        } else {
+            persist::load(path, m, opts)
+        }
     }
+}
+
+/// True when `path` starts with the binary artifact magic. Unreadable
+/// files report false; the JSON loader then produces the actual error.
+fn sniff_binary(path: &Path) -> bool {
+    use std::io::Read;
+    let Ok(mut f) = std::fs::File::open(path) else {
+        return false;
+    };
+    let mut head = [0u8; 8];
+    f.read_exact(&mut head).is_ok() && head == crate::artifact::MAGIC
 }
 
 #[cfg(test)]
@@ -526,6 +607,47 @@ mod tests {
             workers: 2,
             ..Default::default()
         }
+    }
+
+    #[test]
+    fn save_formats_sniffed_on_load_and_agree() {
+        let m = generate::lung2_like(&GenOptions::with_scale(0.04));
+        let a = analyze(&m, &PlanSpec::parse("avgcost+scheduled").unwrap(), &opts()).unwrap();
+        let dir = std::env::temp_dir();
+        let pj = dir.join(format!("sptrsv_fmt_{}.json", std::process::id()));
+        let pb = dir.join(format!("sptrsv_fmt_{}.spa", std::process::id()));
+        a.save_format(&pj, AnalysisFormat::Json).unwrap();
+        a.save_format(&pb, AnalysisFormat::Binary).unwrap();
+        // The JSON file is text, the binary one leads with the magic.
+        let jb = std::fs::read(&pj).unwrap();
+        assert_eq!(jb.first(), Some(&b'{'));
+        let bb = std::fs::read(&pb).unwrap();
+        assert_eq!(&bb[..8], &crate::artifact::MAGIC);
+        assert!(!sniff_binary(&pj));
+        assert!(sniff_binary(&pb));
+        // Both load through the same sniffing entry point, both pay zero
+        // structural passes, and both solve identically.
+        let from_json = Analysis::load(&pj, &m, &opts()).unwrap();
+        let from_bin = Analysis::load(&pb, &m, &opts()).unwrap();
+        for l in [&from_json, &from_bin] {
+            assert_eq!(l.rebuilds().coarsen_passes, 0);
+            assert_eq!(l.rebuilds().placement_passes, 0);
+            assert_eq!(l.rebuilds().renumeric_passes, 1);
+        }
+        let b = vec![1.0; m.nrows];
+        assert_eq!(from_json.solve(&b), from_bin.solve(&b));
+        std::fs::remove_file(&pj).ok();
+        std::fs::remove_file(&pb).ok();
+    }
+
+    #[test]
+    fn analysis_format_parses() {
+        assert_eq!(AnalysisFormat::parse("json"), Ok(AnalysisFormat::Json));
+        assert_eq!(AnalysisFormat::parse("binary"), Ok(AnalysisFormat::Binary));
+        assert_eq!(AnalysisFormat::default(), AnalysisFormat::Binary);
+        assert!(AnalysisFormat::parse("yaml").is_err());
+        assert_eq!(AnalysisFormat::Binary.suffix(), "spa");
+        assert_eq!(AnalysisFormat::Json.suffix(), "analysis.json");
     }
 
     #[test]

@@ -1,0 +1,426 @@
+//! The section container itself: header, section table, per-section
+//! CRC-32, 8-byte payload alignment, and the mmap-backed reader.
+//!
+//! File layout (all integers little-endian):
+//!
+//! ```text
+//! offset  size  field
+//!      0     8  magic  "SPTRSVA\0"
+//!      8     4  format version (u32)
+//!     12     4  section count  (u32)
+//!     16     8  structural fingerprint (u64, FNV-1a of the sparsity)
+//!     24     8  nrows (u64)
+//!     32     8  section table offset (u64; 64 in this version)
+//!     40     8  total file length (u64; truncation guard)
+//!     48    16  reserved, zero
+//!     64   32*n section table entries:
+//!               kind u32 | reserved u32 | offset u64 | len u64 |
+//!               crc32 u32 | reserved u32
+//!      -     -  payload sections, each starting on an 8-byte boundary
+//! ```
+//!
+//! Multiple sections may share a kind (one `SCHEDULE` section per stored
+//! worker count); readers iterate [`ArtifactReader::sections_of`].
+
+use std::path::Path;
+
+use super::mmap::Mapped;
+use super::ArtifactError;
+
+pub const MAGIC: [u8; 8] = *b"SPTRSVA\0";
+pub const FORMAT_VERSION: u32 = 1;
+pub const HEADER_LEN: usize = 64;
+pub const SECTION_ENTRY_LEN: usize = 32;
+
+/// Section kinds. Payload encodings live with the analysis bridge
+/// (`analysis/binary.rs`); the container treats payloads as bytes.
+pub const SEC_PLAN: u32 = 1;
+pub const SEC_CSR: u32 = 2;
+pub const SEC_LEVELS: u32 = 3;
+pub const SEC_REWRITE: u32 = 4;
+pub const SEC_SCHEDULE: u32 = 5;
+
+/// Human name for a section kind (CLI `artifact inspect`).
+pub fn section_kind_name(kind: u32) -> &'static str {
+    match kind {
+        SEC_PLAN => "PLAN",
+        SEC_CSR => "CSR",
+        SEC_LEVELS => "LEVELS",
+        SEC_REWRITE => "REWRITE",
+        SEC_SCHEDULE => "SCHEDULE",
+        _ => "UNKNOWN",
+    }
+}
+
+/// CRC-32 (IEEE 802.3, the zlib polynomial), table-driven; the table is
+/// computed at compile time.
+const CRC_TABLE: [u32; 256] = crc_table();
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 {
+                0xedb8_8320 ^ (c >> 1)
+            } else {
+                c >> 1
+            };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xffff_ffffu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    c ^ 0xffff_ffff
+}
+
+/// One section table entry, as read.
+#[derive(Debug, Clone, Copy)]
+pub struct SectionInfo {
+    pub kind: u32,
+    pub offset: u64,
+    pub len: u64,
+    pub crc: u32,
+}
+
+/// Assembles a container in memory, then publishes it atomically.
+pub struct ArtifactWriter {
+    fingerprint: u64,
+    nrows: u64,
+    sections: Vec<(u32, Vec<u8>)>,
+}
+
+impl ArtifactWriter {
+    pub fn new(fingerprint: u64, nrows: u64) -> ArtifactWriter {
+        ArtifactWriter {
+            fingerprint,
+            nrows,
+            sections: Vec::new(),
+        }
+    }
+
+    pub fn section(&mut self, kind: u32, payload: Vec<u8>) {
+        self.sections.push((kind, payload));
+    }
+
+    /// Lay out header + table + 8-aligned payloads and compute CRCs.
+    pub fn finish(&self) -> Vec<u8> {
+        let table_len = self.sections.len() * SECTION_ENTRY_LEN;
+        let mut payload_off = HEADER_LEN + table_len;
+        payload_off += (8 - payload_off % 8) % 8;
+
+        let mut entries = Vec::with_capacity(self.sections.len());
+        let mut off = payload_off;
+        for (kind, payload) in &self.sections {
+            entries.push(SectionInfo {
+                kind: *kind,
+                offset: off as u64,
+                len: payload.len() as u64,
+                crc: crc32(payload),
+            });
+            off += payload.len();
+            off += (8 - off % 8) % 8;
+        }
+        let total_len = off;
+
+        let mut out = Vec::with_capacity(total_len);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.fingerprint.to_le_bytes());
+        out.extend_from_slice(&self.nrows.to_le_bytes());
+        out.extend_from_slice(&(HEADER_LEN as u64).to_le_bytes());
+        out.extend_from_slice(&(total_len as u64).to_le_bytes());
+        out.resize(HEADER_LEN, 0);
+        for e in &entries {
+            out.extend_from_slice(&e.kind.to_le_bytes());
+            out.extend_from_slice(&0u32.to_le_bytes());
+            out.extend_from_slice(&e.offset.to_le_bytes());
+            out.extend_from_slice(&e.len.to_le_bytes());
+            out.extend_from_slice(&e.crc.to_le_bytes());
+            out.extend_from_slice(&0u32.to_le_bytes());
+        }
+        for ((_, payload), e) in self.sections.iter().zip(&entries) {
+            out.resize(e.offset as usize, 0);
+            out.extend_from_slice(payload);
+        }
+        out.resize(total_len, 0);
+        out
+    }
+
+    /// Write the finished container to `path` (temp + rename, so a
+    /// concurrent reader never maps a half-written file).
+    pub fn write(&self, path: &Path) -> Result<(), ArtifactError> {
+        let bytes = self.finish();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .map_err(|e| ArtifactError::Io(format!("create {}: {e}", dir.display())))?;
+            }
+        }
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(format!(".tmp.{}", std::process::id()));
+        let tmp = std::path::PathBuf::from(tmp);
+        std::fs::write(&tmp, &bytes)
+            .map_err(|e| ArtifactError::Io(format!("write {}: {e}", tmp.display())))?;
+        std::fs::rename(&tmp, path).map_err(|e| {
+            std::fs::remove_file(&tmp).ok();
+            ArtifactError::Io(format!("rename {} -> {}: {e}", tmp.display(), path.display()))
+        })
+    }
+}
+
+/// A validated, mapped container. Construction checks magic, version,
+/// the truncation guard, section bounds/alignment and every checksum;
+/// afterwards section access is a bounds-checked slice, nothing more.
+pub struct ArtifactReader {
+    data: Mapped,
+    fingerprint: u64,
+    nrows: u64,
+    version: u32,
+    sections: Vec<SectionInfo>,
+}
+
+fn le_u32(b: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(b[off..off + 4].try_into().unwrap())
+}
+
+fn le_u64(b: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(b[off..off + 8].try_into().unwrap())
+}
+
+impl ArtifactReader {
+    /// Map and validate `path`.
+    pub fn open(path: &Path) -> Result<ArtifactReader, ArtifactError> {
+        Self::from_mapped(Mapped::open(path)?)
+    }
+
+    /// Validate an in-memory container (tests, corruption probes).
+    pub fn from_bytes(bytes: &[u8]) -> Result<ArtifactReader, ArtifactError> {
+        Self::from_mapped(Mapped::from_bytes(bytes))
+    }
+
+    fn from_mapped(data: Mapped) -> Result<ArtifactReader, ArtifactError> {
+        let b: &[u8] = &data;
+        if b.len() < HEADER_LEN {
+            return Err(ArtifactError::Truncated(format!(
+                "{} bytes, header is {HEADER_LEN}",
+                b.len()
+            )));
+        }
+        if b[..8] != MAGIC {
+            return Err(ArtifactError::BadMagic);
+        }
+        let version = le_u32(b, 8);
+        if version != FORMAT_VERSION {
+            return Err(ArtifactError::BadVersion {
+                found: version,
+                expected: FORMAT_VERSION,
+            });
+        }
+        let nsections = le_u32(b, 12) as usize;
+        let fingerprint = le_u64(b, 16);
+        let nrows = le_u64(b, 24);
+        let table_off = le_u64(b, 32) as usize;
+        let total_len = le_u64(b, 40) as usize;
+        if total_len > b.len() {
+            return Err(ArtifactError::Truncated(format!(
+                "header promises {total_len} bytes, file has {}",
+                b.len()
+            )));
+        }
+        let table_end = table_off
+            .checked_add(nsections.saturating_mul(SECTION_ENTRY_LEN))
+            .filter(|&e| e <= total_len && table_off >= HEADER_LEN)
+            .ok_or_else(|| {
+                ArtifactError::Malformed(format!(
+                    "section table ({nsections} entries at {table_off}) outside the file"
+                ))
+            })?;
+        let mut sections = Vec::with_capacity(nsections);
+        for i in 0..nsections {
+            let e = table_off + i * SECTION_ENTRY_LEN;
+            let info = SectionInfo {
+                kind: le_u32(b, e),
+                offset: le_u64(b, e + 8),
+                len: le_u64(b, e + 16),
+                crc: le_u32(b, e + 24),
+            };
+            let end = info.offset.checked_add(info.len);
+            let in_bounds = end.is_some_and(|end| {
+                info.offset as usize >= table_end && end as usize <= total_len
+            });
+            if !in_bounds || info.offset % 8 != 0 {
+                return Err(ArtifactError::Misaligned {
+                    section: i as u32,
+                    offset: info.offset,
+                    len: info.len,
+                });
+            }
+            let payload = &b[info.offset as usize..(info.offset + info.len) as usize];
+            let computed = crc32(payload);
+            if computed != info.crc {
+                return Err(ArtifactError::BadChecksum {
+                    section: i as u32,
+                    stored: info.crc,
+                    computed,
+                });
+            }
+            sections.push(info);
+        }
+        Ok(ArtifactReader {
+            data,
+            fingerprint,
+            nrows,
+            version,
+            sections,
+        })
+    }
+
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    pub fn nrows(&self) -> u64 {
+        self.nrows
+    }
+
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn sections(&self) -> &[SectionInfo] {
+        &self.sections
+    }
+
+    /// Payload bytes of the first section of `kind`.
+    pub fn section(&self, kind: u32) -> Option<&[u8]> {
+        self.sections_of(kind).next()
+    }
+
+    /// Payloads of every section of `kind`, in file order.
+    pub fn sections_of(&self, kind: u32) -> impl Iterator<Item = &[u8]> {
+        self.sections
+            .iter()
+            .filter(move |s| s.kind == kind)
+            .map(|s| &self.data[s.offset as usize..(s.offset + s.len) as usize])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<u8> {
+        let mut w = ArtifactWriter::new(0xdead_beef_cafe_f00d, 42);
+        w.section(SEC_PLAN, b"avgcost+scheduled".to_vec());
+        w.section(SEC_LEVELS, vec![1, 2, 3, 4, 5]);
+        w.section(SEC_SCHEDULE, vec![9; 100]);
+        w.section(SEC_SCHEDULE, vec![7; 50]);
+        w.finish()
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard IEEE CRC-32 check values.
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+    }
+
+    #[test]
+    fn roundtrip_sections_aligned_and_typed() {
+        let bytes = sample();
+        let r = ArtifactReader::from_bytes(&bytes).unwrap();
+        assert_eq!(r.fingerprint(), 0xdead_beef_cafe_f00d);
+        assert_eq!(r.nrows(), 42);
+        assert_eq!(r.version(), FORMAT_VERSION);
+        assert_eq!(r.sections().len(), 4);
+        for s in r.sections() {
+            assert_eq!(s.offset % 8, 0, "section not 8-aligned");
+        }
+        assert_eq!(r.section(SEC_PLAN).unwrap(), b"avgcost+scheduled");
+        assert_eq!(r.section(SEC_LEVELS).unwrap(), &[1, 2, 3, 4, 5]);
+        assert_eq!(r.sections_of(SEC_SCHEDULE).count(), 2);
+        assert!(r.section(SEC_REWRITE).is_none());
+    }
+
+    #[test]
+    fn write_then_open_maps_identically() {
+        let path = std::env::temp_dir().join(format!("sptrsv_art_{}.spa", std::process::id()));
+        let mut w = ArtifactWriter::new(7, 3);
+        w.section(SEC_CSR, (0..200u8).collect());
+        w.write(&path).unwrap();
+        let r = ArtifactReader::open(&path).unwrap();
+        assert_eq!(r.fingerprint(), 7);
+        assert_eq!(r.section(SEC_CSR).unwrap().len(), 200);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corruption_is_typed() {
+        let bytes = sample();
+
+        // Truncation: drop the tail.
+        let cut = &bytes[..bytes.len() - 40];
+        assert!(matches!(
+            ArtifactReader::from_bytes(cut),
+            Err(ArtifactError::Truncated(_))
+        ));
+        assert!(matches!(
+            ArtifactReader::from_bytes(&bytes[..10]),
+            Err(ArtifactError::Truncated(_))
+        ));
+
+        // Stale magic.
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(matches!(
+            ArtifactReader::from_bytes(&bad),
+            Err(ArtifactError::BadMagic)
+        ));
+
+        // Future version.
+        let mut bad = bytes.clone();
+        bad[8] = 99;
+        assert!(matches!(
+            ArtifactReader::from_bytes(&bad),
+            Err(ArtifactError::BadVersion { found: 99, .. })
+        ));
+
+        // Flip one payload byte: that section's CRC must catch it.
+        let r = ArtifactReader::from_bytes(&bytes).unwrap();
+        let off = r.sections()[2].offset as usize;
+        drop(r);
+        let mut bad = bytes.clone();
+        bad[off] ^= 0x01;
+        assert!(matches!(
+            ArtifactReader::from_bytes(&bad),
+            Err(ArtifactError::BadChecksum { section: 2, .. })
+        ));
+
+        // Knock a section offset off the alignment grid.
+        let entry = HEADER_LEN + 8; // first entry's offset field
+        let mut bad = bytes.clone();
+        let mut off = le_u64(&bad, entry);
+        off += 4;
+        bad[entry..entry + 8].copy_from_slice(&off.to_le_bytes());
+        assert!(matches!(
+            ArtifactReader::from_bytes(&bad),
+            Err(ArtifactError::Misaligned { section: 0, .. })
+        ));
+    }
+}

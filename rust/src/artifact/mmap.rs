@@ -1,0 +1,194 @@
+//! Getting artifact bytes into the address space: `mmap` on unix, an
+//! owned read everywhere else. Both arms hand out an 8-byte-aligned base
+//! address — page alignment from the kernel, or a `u64`-backed buffer
+//! for the owned copy — which is what lets the section cursors view raw
+//! `u32` arrays in place instead of decoding them.
+//!
+//! The crate carries no libc dependency, so the two syscall wrappers are
+//! declared directly; they are the stable POSIX ABI.
+
+use std::ops::Deref;
+use std::path::Path;
+
+use super::ArtifactError;
+
+#[cfg(unix)]
+mod sys {
+    use core::ffi::c_void;
+
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+}
+
+/// A read-only byte region backed by a file mapping or an owned,
+/// 8-byte-aligned buffer. Derefs to `&[u8]`.
+pub enum Mapped {
+    #[cfg(unix)]
+    Mmap {
+        ptr: *mut core::ffi::c_void,
+        len: usize,
+    },
+    Owned {
+        /// backing store; `u64` words so the base address is 8-aligned
+        buf: Vec<u64>,
+        len: usize,
+    },
+}
+
+// SAFETY: the mapping is PROT_READ/MAP_PRIVATE and never mutated after
+// construction; sharing immutable bytes across threads is sound.
+unsafe impl Send for Mapped {}
+unsafe impl Sync for Mapped {}
+
+impl Mapped {
+    /// Copy `bytes` into an owned, 8-byte-aligned buffer.
+    pub fn from_bytes(bytes: &[u8]) -> Mapped {
+        let words = bytes.len().div_ceil(8);
+        let mut buf = vec![0u64; words];
+        if !bytes.is_empty() {
+            // SAFETY: buf holds words*8 >= bytes.len() writable bytes and
+            // the two allocations cannot overlap.
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    bytes.as_ptr(),
+                    buf.as_mut_ptr() as *mut u8,
+                    bytes.len(),
+                );
+            }
+        }
+        Mapped::Owned {
+            buf,
+            len: bytes.len(),
+        }
+    }
+
+    /// Map `path` read-only (unix), or read it into an aligned buffer.
+    pub fn open(path: &Path) -> Result<Mapped, ArtifactError> {
+        #[cfg(unix)]
+        {
+            match Self::map_unix(path) {
+                Ok(m) => return Ok(m),
+                Err(MapFail::Io(e)) => return Err(e),
+                // Mapping refused (weird filesystem): fall through to read.
+                Err(MapFail::Unsupported) => {}
+            }
+        }
+        let bytes = std::fs::read(path)
+            .map_err(|e| ArtifactError::Io(format!("read {}: {e}", path.display())))?;
+        Ok(Mapped::from_bytes(&bytes))
+    }
+
+    #[cfg(unix)]
+    fn map_unix(path: &Path) -> Result<Mapped, MapFail> {
+        use std::os::unix::io::AsRawFd;
+        let f = std::fs::File::open(path)
+            .map_err(|e| MapFail::Io(ArtifactError::Io(format!("open {}: {e}", path.display()))))?;
+        let len = f
+            .metadata()
+            .map_err(|e| MapFail::Io(ArtifactError::Io(format!("stat {}: {e}", path.display()))))?
+            .len() as usize;
+        if len == 0 {
+            // mmap(len = 0) is EINVAL; an empty file has nothing to map.
+            return Ok(Mapped::from_bytes(&[]));
+        }
+        // SAFETY: fd is open for the duration of the call; the kernel
+        // validates every argument and returns MAP_FAILED on error.
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            return Err(MapFail::Unsupported);
+        }
+        Ok(Mapped::Mmap { ptr, len })
+    }
+}
+
+#[cfg(unix)]
+enum MapFail {
+    Io(ArtifactError),
+    Unsupported,
+}
+
+impl Deref for Mapped {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        match self {
+            #[cfg(unix)]
+            // SAFETY: the mapping covers exactly `len` readable bytes and
+            // lives until Drop.
+            Mapped::Mmap { ptr, len } => unsafe {
+                std::slice::from_raw_parts(*ptr as *const u8, *len)
+            },
+            Mapped::Owned { buf, len } => {
+                // SAFETY: buf owns >= len bytes.
+                unsafe { std::slice::from_raw_parts(buf.as_ptr() as *const u8, *len) }
+            }
+        }
+    }
+}
+
+impl Drop for Mapped {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Mapped::Mmap { ptr, len } = self {
+            // SAFETY: exactly the region mmap returned.
+            unsafe {
+                sys::munmap(*ptr, *len);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owned_buffer_is_aligned_and_exact() {
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 1000] {
+            let bytes: Vec<u8> = (0..n).map(|i| (i % 251) as u8).collect();
+            let m = Mapped::from_bytes(&bytes);
+            assert_eq!(&*m, &bytes[..]);
+            if n > 0 {
+                assert_eq!(m.as_ptr() as usize % 8, 0, "base not 8-aligned");
+            }
+        }
+    }
+
+    #[test]
+    fn open_maps_file_contents() {
+        let path = std::env::temp_dir().join(format!("sptrsv_mmap_{}.bin", std::process::id()));
+        let bytes: Vec<u8> = (0..4096u32).flat_map(|i| i.to_le_bytes()).collect();
+        std::fs::write(&path, &bytes).unwrap();
+        let m = Mapped::open(&path).unwrap();
+        assert_eq!(&*m, &bytes[..]);
+        assert_eq!(m.as_ptr() as usize % 8, 0);
+        drop(m);
+        // Empty files fall back to an owned empty buffer.
+        std::fs::write(&path, b"").unwrap();
+        let m = Mapped::open(&path).unwrap();
+        assert!(m.is_empty());
+        std::fs::remove_file(&path).ok();
+        assert!(Mapped::open(Path::new("/nonexistent/sptrsv.spa")).is_err());
+    }
+}

@@ -1,0 +1,80 @@
+//! Binary, mmap-able analysis artifacts (`.spa`): the on-disk format
+//! behind the warm-start path.
+//!
+//! The JSON persistence (`analysis/persist.rs`) is greppable but pays a
+//! full parse + array rebuild on every load; at the million-row scale
+//! the ROADMAP targets that parse dominates warm registration. This
+//! module is the replacement: a versioned, little-endian, section-based
+//! container that loads by **mapping**, not parsing —
+//!
+//! ```text
+//! +--------------------------------------------------------------+
+//! | magic "SPTRSVA\0"  | version | nsections | fingerprint | ... |  64 B header
+//! +--------------------------------------------------------------+
+//! | section table: (kind, offset, len, crc32) x nsections        |  32 B each
+//! +--------------------------------------------------------------+
+//! | payload sections, each 8-byte aligned, CRC-32 guarded        |
+//! |   PLAN      plan string + pre-transform stats                |
+//! |   CSR       indptr (delta-varint) + indices (raw u32 LE)     |
+//! |   LEVELS    level_ptr (delta-varint) + rows (raw u32 LE)     |
+//! |   REWRITE   rewritten rows (delta-varint) + rewrite log      |
+//! |   SCHEDULE  one per stored worker count: blocks + placement  |
+//! +--------------------------------------------------------------+
+//! ```
+//!
+//! Monotone offset arrays (CSR `indptr`, level and block pointers) are
+//! delta + varint packed; bulk index arrays are raw little-endian `u32`
+//! laid out 4/8-byte aligned so a reader on a little-endian target views
+//! them in place ([`container::Section::u32s`] is zero-copy there, a
+//! copying decode elsewhere). [`container::ArtifactReader::open`] maps
+//! the file on unix (read-to-memory fallback everywhere else), validates
+//! magic, version, bounds, alignment and every section checksum, and
+//! hands out typed views — no parse, no rebuild.
+//!
+//! This module knows nothing about [`crate::analysis::Analysis`]; the
+//! bridge that encodes/decodes an analysis lives in `analysis/binary.rs`.
+
+pub mod container;
+pub mod mmap;
+pub mod pack;
+
+pub use container::{ArtifactReader, ArtifactWriter, SectionInfo, FORMAT_VERSION, MAGIC};
+
+/// Everything that can make a binary artifact unusable. Loaders match on
+/// the class (a `BadChecksum` on a cache entry means "fall back to fresh
+/// analysis", not "crash the service"); the CLI `artifact verify`
+/// subcommand prints them verbatim.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum ArtifactError {
+    /// the file ends before the bytes its header promises
+    #[error("artifact truncated: {0}")]
+    Truncated(String),
+    /// the leading magic is not `SPTRSVA\0`
+    #[error("not an sptrsv artifact (bad magic)")]
+    BadMagic,
+    /// written under a different format version than this build reads
+    #[error("artifact format v{found}, this build reads v{expected}")]
+    BadVersion { found: u32, expected: u32 },
+    /// a section's stored CRC-32 does not match its bytes
+    #[error(
+        "section {section} checksum mismatch (stored {stored:#010x}, computed {computed:#010x})"
+    )]
+    BadChecksum {
+        section: u32,
+        stored: u32,
+        computed: u32,
+    },
+    /// a section table entry points outside the file or off the 8-byte
+    /// alignment grid the zero-copy views require
+    #[error("section {section} misaligned or out of bounds (offset {offset}, len {len})")]
+    Misaligned {
+        section: u32,
+        offset: u64,
+        len: u64,
+    },
+    /// structurally valid container, semantically bad payload
+    #[error("malformed artifact: {0}")]
+    Malformed(String),
+    #[error("artifact io: {0}")]
+    Io(String),
+}

@@ -1,0 +1,263 @@
+//! Byte-level codecs for artifact section payloads: LEB128 varints,
+//! delta packing for monotone offset arrays, and an alignment-tracking
+//! writer/cursor pair so raw `u32` arrays land on addresses the
+//! zero-copy views can use.
+
+use std::borrow::Cow;
+
+use super::ArtifactError;
+
+/// Append `v` as an LEB128 varint (7 bits per byte, high bit = more).
+pub fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Append a monotone non-decreasing sequence as `count` + first value +
+/// successive deltas, all varints. The classic trick for CSR-style
+/// offset arrays: deltas are row lengths, almost always one byte.
+pub fn put_monotone(out: &mut Vec<u8>, vals: &[u64]) -> Result<(), ArtifactError> {
+    put_varint(out, vals.len() as u64);
+    let mut prev = 0u64;
+    for (i, &v) in vals.iter().enumerate() {
+        if i == 0 {
+            put_varint(out, v);
+        } else {
+            let d = v.checked_sub(prev).ok_or_else(|| {
+                ArtifactError::Malformed(format!("monotone sequence decreases at index {i}"))
+            })?;
+            put_varint(out, d);
+        }
+        prev = v;
+    }
+    Ok(())
+}
+
+/// Pad `out` with zero bytes until its length is a multiple of `align`.
+pub fn pad_to(out: &mut Vec<u8>, align: usize) {
+    while out.len() % align != 0 {
+        out.push(0);
+    }
+}
+
+/// Append a `u32` slice as raw little-endian words, 4-byte aligned
+/// (count first, as a varint, then padding, then the words).
+pub fn put_u32s(out: &mut Vec<u8>, vals: &[u32]) {
+    put_varint(out, vals.len() as u64);
+    pad_to(out, 4);
+    for &v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Forward-only reader over a section payload. Positions are relative to
+/// the payload start; payloads themselves sit on 8-byte file offsets and
+/// the mapping base is 8-byte aligned, so payload-relative alignment is
+/// address alignment.
+pub struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn short(&self, what: &str) -> ArtifactError {
+        ArtifactError::Malformed(format!(
+            "payload ends inside {what} (offset {} of {})",
+            self.pos,
+            self.buf.len()
+        ))
+    }
+
+    pub fn varint(&mut self) -> Result<u64, ArtifactError> {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let &b = self
+                .buf
+                .get(self.pos)
+                .ok_or_else(|| self.short("varint"))?;
+            self.pos += 1;
+            if shift >= 64 {
+                return Err(ArtifactError::Malformed("varint overflows u64".into()));
+            }
+            v |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    /// Read `n` raw bytes.
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8], ArtifactError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| self.short("byte run"))?;
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    pub fn u64(&mut self) -> Result<u64, ArtifactError> {
+        let end = self.pos + 8;
+        let bytes = self
+            .buf
+            .get(self.pos..end)
+            .ok_or_else(|| self.short("u64"))?;
+        self.pos = end;
+        Ok(u64::from_le_bytes(bytes.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, ArtifactError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Decode a [`put_monotone`] sequence.
+    pub fn monotone(&mut self) -> Result<Vec<u64>, ArtifactError> {
+        let n = self.varint()? as usize;
+        if n > self.remaining().saturating_mul(8) + 1 {
+            // A delta stream spends at least one byte per element; a
+            // count beyond that is corruption, not data.
+            return Err(ArtifactError::Malformed(format!(
+                "monotone count {n} exceeds remaining payload"
+            )));
+        }
+        let mut out = Vec::with_capacity(n);
+        let mut acc = 0u64;
+        for i in 0..n {
+            let d = self.varint()?;
+            acc = if i == 0 {
+                d
+            } else {
+                acc.checked_add(d).ok_or_else(|| {
+                    ArtifactError::Malformed("monotone sequence overflows u64".into())
+                })?
+            };
+            out.push(acc);
+        }
+        Ok(out)
+    }
+
+    /// Decode a [`put_u32s`] array. Zero-copy on little-endian targets
+    /// (the words are viewed in place); a copying decode elsewhere.
+    pub fn u32s(&mut self) -> Result<Cow<'a, [u32]>, ArtifactError> {
+        let n = self.varint()? as usize;
+        while self.pos % 4 != 0 {
+            if self.pos >= self.buf.len() {
+                return Err(self.short("u32 padding"));
+            }
+            self.pos += 1;
+        }
+        let bytes_len = n
+            .checked_mul(4)
+            .ok_or_else(|| ArtifactError::Malformed("u32 array length overflows".into()))?;
+        let end = self
+            .pos
+            .checked_add(bytes_len)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| self.short("u32 array"))?;
+        let bytes = &self.buf[self.pos..end];
+        self.pos = end;
+        #[cfg(target_endian = "little")]
+        {
+            debug_assert_eq!(bytes.as_ptr() as usize % 4, 0, "u32 view misaligned");
+            if bytes.as_ptr() as usize % 4 == 0 {
+                // SAFETY: the region is in bounds, 4-byte aligned (just
+                // checked) and u32 has no invalid bit patterns.
+                let words =
+                    unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const u32, n) };
+                return Ok(Cow::Borrowed(words));
+            }
+        }
+        Ok(Cow::Owned(
+            bytes
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+        ))
+    }
+}
+
+/// Fixed-width u64 append (header fields, float bits).
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_roundtrip_boundaries() {
+        let mut buf = Vec::new();
+        let vals = [0u64, 1, 127, 128, 16_383, 16_384, u32::MAX as u64, u64::MAX];
+        for &v in &vals {
+            put_varint(&mut buf, v);
+        }
+        let mut cur = Cursor::new(&buf);
+        for &v in &vals {
+            assert_eq!(cur.varint().unwrap(), v);
+        }
+        assert_eq!(cur.remaining(), 0);
+    }
+
+    #[test]
+    fn monotone_roundtrip_and_rejects_decrease() {
+        let vals: Vec<u64> = vec![0, 0, 3, 7, 7, 100, 1_000_000];
+        let mut buf = Vec::new();
+        put_monotone(&mut buf, &vals).unwrap();
+        // Delta coding keeps this tiny: 7 entries in well under 7*8 bytes.
+        assert!(buf.len() < 16, "monotone encoding too large: {}", buf.len());
+        let mut cur = Cursor::new(&buf);
+        assert_eq!(cur.monotone().unwrap(), vals);
+
+        let mut bad = Vec::new();
+        assert!(put_monotone(&mut bad, &[5, 3]).is_err());
+    }
+
+    #[test]
+    fn u32s_roundtrip_at_odd_start() {
+        let vals: Vec<u32> = (0..37).map(|i| i * 17 + 3).collect();
+        let mut buf = Vec::new();
+        put_varint(&mut buf, 9); // leave the cursor at an odd offset
+        put_u32s(&mut buf, &vals);
+        let mut cur = Cursor::new(&buf);
+        assert_eq!(cur.varint().unwrap(), 9);
+        assert_eq!(cur.u32s().unwrap().as_ref(), &vals[..]);
+        assert_eq!(cur.remaining(), 0);
+    }
+
+    #[test]
+    fn truncated_streams_error_not_panic() {
+        let mut buf = Vec::new();
+        put_u32s(&mut buf, &[1, 2, 3, 4]);
+        for cut in 0..buf.len() {
+            let mut cur = Cursor::new(&buf[..cut]);
+            let r = cur.u32s();
+            assert!(r.is_err() || r.unwrap().len() < 4);
+        }
+        let mut cur = Cursor::new(&[0x80, 0x80]);
+        assert!(cur.varint().is_err(), "unterminated varint");
+    }
+}

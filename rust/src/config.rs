@@ -6,6 +6,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
+use crate::analysis::AnalysisFormat;
 use crate::error::Error;
 use crate::transform::PlanSpec;
 use crate::util::cli::Args;
@@ -58,6 +59,11 @@ pub struct Config {
     /// analysis-cache entry TTL in seconds; older entries are dropped at
     /// the next save (0 = never expire by age)
     pub analysis_cache_ttl: u64,
+    /// on-disk format for persisted analyses: `binary` (mmap-able `.spa`
+    /// artifacts, the default) or `json` (the legacy schema, kept one
+    /// release for migration). Governs writes only — loads sniff the
+    /// file content and accept either.
+    pub analysis_format: AnalysisFormat,
     /// which executor tier serves prepared analyses: `inprocess` (the
     /// default single-process pipeline) or `sharded:N` (N child worker
     /// processes, matrices routed by structural fingerprint)
@@ -128,6 +134,7 @@ impl Default for Config {
             sched_stale_window: crate::sched::DEFAULT_STALE_WINDOW,
             analysis_cache_cap: 0,
             analysis_cache_ttl: 0,
+            analysis_format: AnalysisFormat::default(),
             executor: "inprocess".to_string(),
             tenant_max_pending: 0,
             shard_worker_bin: String::new(),
@@ -208,7 +215,8 @@ impl Config {
                     | "tuner-cache" | "analysis-cache" | "tuner-top-k"
                     | "tuner-race-solves" | "tuner-cache-ttl" | "sched-block-target"
                     | "sched-stale-window" | "analysis-cache-cap"
-                    | "analysis-cache-ttl" | "executor" | "tenant-max-pending"
+                    | "analysis-cache-ttl" | "analysis-format" | "executor"
+                    | "tenant-max-pending"
                     | "shard-worker-bin" | "shard-timeout-ms"
                     | "chaos-kill-shard-after" | "trace-enabled" | "journal-enabled"
                     | "journal-path" | "bench-out-dir" | "bench-requests"
@@ -264,6 +272,12 @@ impl Config {
             }
             "analysis_cache_ttl" => {
                 self.analysis_cache_ttl = val.parse().map_err(|_| bad(key, val))?
+            }
+            // Validated at config time like `plan`: a typo must fail
+            // here, not when the first analysis is persisted.
+            "analysis_format" => {
+                self.analysis_format =
+                    AnalysisFormat::parse(val).map_err(Error::Invalid)?
             }
             "executor" => {
                 // Validate at config time like `plan`: a typo must fail
@@ -576,6 +590,25 @@ mod tests {
         c.merge_args(&args).unwrap();
         assert_eq!(c.analysis_cache_cap, 4);
         assert_eq!(c.analysis_cache_ttl, 60);
+    }
+
+    #[test]
+    fn analysis_format_parses_and_merges() {
+        let mut c = Config::default();
+        assert_eq!(c.analysis_format, AnalysisFormat::Binary, "binary by default");
+        c.set("analysis_format", "json").unwrap();
+        assert_eq!(c.analysis_format, AnalysisFormat::Json);
+        c.set("analysis_format", "binary").unwrap();
+        assert_eq!(c.analysis_format, AnalysisFormat::Binary);
+        // Typos fail at config time, like a bad plan.
+        assert!(c.set("analysis_format", "yaml").is_err());
+        let args = Args::parse(
+            ["serve", "--analysis-format", "json"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        c.merge_args(&args).unwrap();
+        assert_eq!(c.analysis_format, AnalysisFormat::Json);
     }
 
     #[test]

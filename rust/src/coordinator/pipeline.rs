@@ -160,6 +160,9 @@ impl Pipeline {
             // Iterative candidates may only enter the race when the
             // deployment states an accuracy budget they must certify.
             tolerance: (cfg.default_tolerance > 0.0).then_some(cfg.default_tolerance),
+            // Race lanes time a batch_size-wide RHS block: candidates are
+            // ranked under the load the batcher will actually present.
+            batch: cfg.batch_size.max(1),
             ..Default::default()
         });
         // The registry is optional: without artifacts the coordinator
@@ -180,11 +183,14 @@ impl Pipeline {
         let analysis_cache = if cfg.analysis_cache.is_empty() {
             None
         } else {
-            Some(AnalysisCache::with_limits(
-                Path::new(&cfg.analysis_cache),
-                cfg.analysis_cache_cap,
-                std::time::Duration::from_secs(cfg.analysis_cache_ttl),
-            ))
+            Some(
+                AnalysisCache::with_limits(
+                    Path::new(&cfg.analysis_cache),
+                    cfg.analysis_cache_cap,
+                    std::time::Duration::from_secs(cfg.analysis_cache_ttl),
+                )
+                .with_format(cfg.analysis_format),
+            )
         };
         Pipeline {
             cfg,

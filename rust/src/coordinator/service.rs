@@ -852,13 +852,16 @@ fn service_loop(cfg: Config, rx: Receiver<Request>) {
                 // asked for, not what this run happened to admit.
                 if let Some(j) = &journal {
                     let wait = deadline.map(|d| d.saturating_duration_since(submitted));
-                    j.record(Event::solve(
-                        &id,
-                        rhs.len(),
-                        matches!(lane, Lane::Interactive),
-                        wait.map(|w| w.as_micros() as u64),
-                        tenant.as_deref(),
-                    ));
+                    j.record(
+                        Event::solve(
+                            &id,
+                            rhs.len(),
+                            matches!(lane, Lane::Interactive),
+                            wait.map(|w| w.as_micros() as u64),
+                            tenant.as_deref(),
+                        )
+                        .with_tolerance(tolerance),
+                    );
                 }
                 let pending = batcher.pending();
                 match matrices.get(&id) {

@@ -18,6 +18,12 @@ pub enum Error {
     /// Typed failure from the serving coordinator (see [`ServiceError`]).
     #[error("service error: {0}")]
     Service(#[from] ServiceError),
+    /// A binary analysis artifact failed to validate (truncated, bad
+    /// magic/version, checksum or alignment violation — see
+    /// [`crate::artifact::ArtifactError`]). Cache loaders treat this as
+    /// a miss and fall back to a fresh analysis.
+    #[error("artifact error: {0}")]
+    Artifact(#[from] crate::artifact::ArtifactError),
 }
 
 /// Everything that can go wrong between a `SolveHandle` and the service

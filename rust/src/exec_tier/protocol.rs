@@ -405,8 +405,21 @@ pub fn ok_response() -> Json {
     Json::obj(vec![("ok", Json::Bool(true))])
 }
 
+/// The worker's final frame: acknowledges a `shutdown` request after all
+/// earlier requests have been answered, right before the worker exits.
+/// The `bye` marker distinguishes it from in-flight solve/gauges replies
+/// so the supervisor can drain the reply stream up to exactly this frame.
+pub fn bye_response() -> Json {
+    Json::obj(vec![("ok", Json::Bool(true)), ("bye", Json::Bool(true))])
+}
+
 pub fn is_ok(j: &Json) -> bool {
     matches!(j.get("ok"), Some(Json::Bool(true)))
+}
+
+/// Is this frame the worker's shutdown bye-ack?
+pub fn is_bye(j: &Json) -> bool {
+    is_ok(j) && matches!(j.get("bye"), Some(Json::Bool(true)))
 }
 
 // ---------------------------------------------------------------------
@@ -540,6 +553,27 @@ mod tests {
         // Untyped errors collapse to Backend with their display text.
         let j = err_response(&ServiceError::Shutdown);
         assert!(matches!(response_error(&j), ServiceError::Backend(_)));
+    }
+
+    #[test]
+    fn bye_ack_is_distinguishable_from_ordinary_replies() {
+        assert!(is_ok(&bye_response()));
+        assert!(is_bye(&bye_response()));
+        // Ordinary ok replies — including a solve response — are not byes,
+        // so the supervisor's drain loop skips past them.
+        assert!(!is_bye(&ok_response()));
+        let solve = solve_response(&SolveOutcome {
+            xs: vec![vec![1.0]],
+            batched: false,
+            elastic: (0, 0, 0),
+            trace: None,
+            residual: None,
+            fallbacks_to_exact: 0,
+            sweep_escalations: 0,
+            residual_us: 0,
+        });
+        assert!(is_ok(&solve) && !is_bye(&solve));
+        assert!(!is_bye(&err_response(&ServiceError::Shutdown)));
     }
 
     #[test]

@@ -15,6 +15,10 @@
 //!   configured, so the respawn pays zero structural passes. The failed
 //!   in-flight request surfaces as [`ServiceError::Backend`]; nothing
 //!   ever hangs on a dead shard.
+//! * **Planned shutdown drains** — `shutdown()` sends each worker the
+//!   shutdown frame and reads replies until its bye-ack (in-flight work
+//!   finishes first), bounded by `shard_timeout_ms`; a drained worker
+//!   gets a clean `wait()`, only a deadline overrun is killed.
 //! * **Monotone counters** — structural-pass and elastic counters are
 //!   cumulative *per worker generation*; the supervisor retires a dead
 //!   generation's last-seen values into running totals so the metrics
@@ -380,16 +384,41 @@ impl Executor for ShardPoolExecutor {
     }
 
     fn shutdown(&mut self) {
+        // Planned shutdown drains instead of killing: write the shutdown
+        // frame, then keep reading replies — in-flight solves answer
+        // first on the same channel, the worker's bye-ack is the final
+        // frame — bounded by the same `shard_timeout_ms` deadline as any
+        // other round trip. A worker that acks (or closes its stream) is
+        // reaped with a clean `wait()`; only a deadline overrun is killed.
+        let timeout = Duration::from_millis(self.cfg.shard_timeout_ms.max(1));
         for k in 0..self.nshards {
-            if let Some(shard) = self.shards[k].as_mut() {
-                // Best effort: ask politely, then reap. The worker exits
-                // on shutdown or when its stdin closes.
-                let _ = protocol::write_frame(&mut shard.stdin, &protocol::shutdown_req());
+            let Some(mut s) = self.shards[k].take() else {
+                continue;
+            };
+            let asked = protocol::write_frame(&mut s.stdin, &protocol::shutdown_req()).is_ok();
+            let deadline = Instant::now() + timeout;
+            let mut drained = false;
+            while asked && !drained {
+                let left = deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    break;
+                }
+                match s.rx.recv_timeout(left) {
+                    // In-flight replies drain past; the bye-ack ends it.
+                    Ok(Ok(frame)) => drained = protocol::is_bye(&frame),
+                    // EOF without a bye still means the worker is gone.
+                    Ok(Err(_)) | Err(RecvTimeoutError::Disconnected) => drained = true,
+                    Err(RecvTimeoutError::Timeout) => break,
+                }
             }
-            if let Some(mut s) = self.shards[k].take() {
+            if !drained {
+                eprintln!(
+                    "warning: shard {k} did not drain within {}ms; killing",
+                    timeout.as_millis()
+                );
                 let _ = s.child.kill();
-                let _ = s.child.wait();
             }
+            let _ = s.child.wait();
         }
     }
 }
@@ -455,7 +484,12 @@ fn spawn_shard(cfg: &Config, k: usize) -> std::io::Result<Shard> {
             .arg("--analysis-cache-cap")
             .arg(cfg.analysis_cache_cap.to_string())
             .arg("--analysis-cache-ttl")
-            .arg(cfg.analysis_cache_ttl.to_string());
+            .arg(cfg.analysis_cache_ttl.to_string())
+            // The artifact format crosses the boundary too, so every
+            // shard's cache subdirectory writes the same format the
+            // coordinator was configured with.
+            .arg("--analysis-format")
+            .arg(cfg.analysis_format.as_str());
     }
     let mut child = cmd
         .stdin(Stdio::piped())

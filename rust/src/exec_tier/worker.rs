@@ -62,7 +62,11 @@ pub fn run_loop<R: Read, W: Write>(
                 protocol::gauges_response(&g)
             }
             "shutdown" => {
-                protocol::write_frame(w, &protocol::ok_response())?;
+                // The bye-ack is the last frame on the stream: everything
+                // in flight was answered above, so the supervisor can
+                // drain replies up to this marker and then wait() instead
+                // of killing a worker that is still writing results.
+                protocol::write_frame(w, &protocol::bye_response())?;
                 return Ok(());
             }
             other => invalid(format!("unknown op '{other}'")),
@@ -224,7 +228,12 @@ mod tests {
         assert_eq!(id, "a");
         assert!(totals.spans >= 2, "one Execute span per traced solve");
 
-        assert!(protocol::is_ok(&next().expect("shutdown ack")));
+        let bye = next().expect("shutdown ack");
+        assert!(protocol::is_ok(&bye));
+        assert!(
+            protocol::is_bye(&bye),
+            "shutdown ack carries the bye marker so the supervisor's drain knows it is the final frame"
+        );
         assert_eq!(next(), None, "loop ended at shutdown");
     }
 

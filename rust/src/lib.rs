@@ -91,13 +91,40 @@
 //!   never re-run. [`analysis::Analysis::rebuilds`] exposes the pass
 //!   counters that prove it.
 //! * **Persist** — [`analysis::Analysis::save`] /
-//!   [`analysis::Analysis::load`] serialize the *structural* artifacts
-//!   (schema-stamped JSON; values are re-derived from the matrix given
-//!   at load), so a known structure skips all structural work even
-//!   across processes. The coordinator does this automatically when the
-//!   `analysis_cache` config key names a directory (kept next to the
-//!   tuner's plan cache), and `sptrsv analyze --save` /
-//!   `sptrsv solve --analysis FILE` expose it from the CLI.
+//!   [`analysis::Analysis::load`] serialize the *structural* artifacts;
+//!   values are re-derived from the matrix given at load, so a known
+//!   structure skips all structural work even across processes. The
+//!   default on-disk form is the **binary `.spa` container**
+//!   ([`artifact`]) — versioned, little-endian, section-based, loaded by
+//!   mmap + checksum validation instead of a parse + rebuild:
+//!
+//!   ```text
+//!   +------------------------------------------------------------+
+//!   | magic "SPTRSVA\0" | version | fingerprint | nrows | ...    | 64 B
+//!   | section table: (kind, offset, len, crc32) per section      |
+//!   | PLAN     plan string + pre-transform stats                 |
+//!   | CSR      indptr delta-varint + indices raw u32 LE          |
+//!   | LEVELS   level_ptr delta-varint + level rows raw u32 LE    |
+//!   | REWRITE  rewritten rows delta-varint + decision log        |
+//!   | SCHEDULE one per stored worker count (W, W-1, W/2, 1):     |
+//!   |          blocks + costs + placement + block preds          |
+//!   +------------------------------------------------------------+
+//!   ```
+//!
+//!   Offset arrays are delta+varint packed; bulk index arrays are raw
+//!   little-endian `u32`, 8-byte aligned for in-place views. Because
+//!   placements for **several worker counts** ride in one artifact, a
+//!   load on a smaller pool adopts the nearest stored placement instead
+//!   of re-running coarsening/ETF — a binary load never rebuilds. The
+//!   `analysis_format` config key (`binary` default, `json` for the
+//!   legacy schema-stamped JSON, kept readable for migration) governs
+//!   what `save` writes; loads sniff the file content, so both formats
+//!   always load. The coordinator persists automatically when the
+//!   `analysis_cache` config key names a directory — entries are keyed
+//!   `<fingerprint>.<plan>.spa` (legacy `.analysis.json` entries remain
+//!   readable) — and `sptrsv analyze --save` / `sptrsv solve --analysis
+//!   FILE` / `sptrsv artifact inspect|verify FILE` expose the same
+//!   artifacts from the CLI.
 //!
 //! ```no_run
 //! use sptrsv_gt::analysis::{analyze, AnalyzeOptions};
@@ -115,8 +142,8 @@
 //! a.refresh_values(&m2).unwrap();
 //! assert_eq!(a.rebuilds().coarsen_passes, 1, "coarsened once, ever");
 //!
-//! // Persist for the next process.
-//! a.save(std::path::Path::new("lung2.analysis.json")).unwrap();
+//! // Persist for the next process (binary .spa container by default).
+//! a.save(std::path::Path::new("lung2.spa")).unwrap();
 //! # let _ = x;
 //! ```
 //!
@@ -251,6 +278,8 @@
 //! `sched_block_target`, `sched_stale_window` (see Scheduling below),
 //! `analysis_cache_cap` and `analysis_cache_ttl` (LRU entry cap and
 //! max age in seconds for the analysis cache, 0 = unbounded/never),
+//! `analysis_format` (`binary` writes mmap-able `.spa` artifacts — the
+//! default — `json` the legacy schema; both always load),
 //! `executor` (`inprocess` or `sharded:N`, see Sharded serving above),
 //! `tenant_max_pending` (per-tenant admission quota, 0 = unbounded),
 //! `shard_worker_bin`, `shard_timeout_ms` (supervisor reply timeout),
@@ -467,6 +496,7 @@
 //!   checked-in `scenarios/BASELINE_smoke.json`.
 
 pub mod analysis;
+pub mod artifact;
 pub mod bench;
 pub mod codegen;
 pub mod config;

@@ -9,6 +9,7 @@
 //!   codegen    emit the specialized C code (Fig 3 / Fig 4)
 //!   table1     reproduce Table I on the lung2/torso2 analogs
 //!   figures    emit the Fig 5 / Fig 6 per-level cost CSVs
+//!   artifact   inspect or verify a binary `.spa` analysis artifact
 //!   xla        check the AOT artifact registry and run an XLA solve
 //!   serve      start the coordinator and run a demo workload against it
 //!   bench      replay a scenario manifest through the coordinator and
@@ -43,6 +44,7 @@ fn main() {
         "codegen" => cmd_codegen(&args),
         "table1" => cmd_table1(&args),
         "figures" => cmd_figures(&args),
+        "artifact" => cmd_artifact(&args),
         "xla" => cmd_xla(&args),
         "serve" => cmd_serve(&args),
         "bench" => cmd_bench(&args),
@@ -73,15 +75,20 @@ USAGE: sptrsv <subcommand> [flags]
   gen       --kind lung2|torso2|tridiagonal|banded|random [--scale F] [--n N]
             [--seed S] [--ill-scaled] --out FILE.mtx
   analyze   (--matrix FILE.mtx | --kind ... [--scale F])
-            [--plan P --save FILE.json]   # persist the full analysis
-            # (plan + transform + schedule); `solve --analysis` reloads it
+            [--plan P --save FILE.spa]   # persist the full analysis
+            # (plan + transform + schedule, placements for several worker
+            # counts); `solve --analysis` reloads it
+            [--analysis-format binary|json]   # binary (default) is the
+            # mmap-able .spa container; json is the legacy text format
+            # (kept one release; loads sniff the format either way)
   transform (--matrix|--kind...) [--plan P]   # rewrite axis of the plan
   solve     (--matrix|--kind...) [--plan P] [--backend serial|plan|
             transformed|levelset|syncfree|scheduled|reorder|xla|
             jacobi|jacobi-mixed] [--sweeps N]   # inexact backends report
             # the achieved residual; --check still demands exactness
-            [--analysis FILE.json]   # reuse a saved analysis: skips
-            # rewrite analysis, coarsening and placement entirely
+            [--analysis FILE.spa]   # reuse a saved analysis (binary or
+            # json, sniffed): skips rewrite analysis, coarsening and
+            # placement entirely
             [--workers W] [--repeat R] [--check] [--sched-block-target T]
             [--sched-stale-window W]
   tune      (--matrix|--kind...) [--top-k K] [--race-solves N] [--workers W]
@@ -90,6 +97,11 @@ USAGE: sptrsv <subcommand> [flags]
             [--head N] [--out FILE.c]
   table1    [--scale F] [--no-codegen]
   figures   [--scale F] [--out-dir DIR]
+  artifact  inspect FILE.spa   # header, section table, per-section CRCs
+            # and the worker count of every stored placement
+  artifact  verify FILE.spa   # full validation (magic, version, bounds,
+            # alignment, every checksum); exit 1 with the typed error on
+            # any corruption
   xla       [--artifacts-dir DIR]   # registry check + XLA-vs-native solve
   serve     [--requests N] [--batch-size B] [--max-pending P] [--use-xla]
             [--executor inprocess|sharded:N]   # process-per-shard serving
@@ -97,6 +109,8 @@ USAGE: sptrsv <subcommand> [flags]
             # containment (--tenant-max-pending caps each tenant's queue)
             [--analysis-cache DIR]   # persisted analyses: re-registering
             # a known structure skips coarsening + placement
+            [--analysis-format binary|json]   # what the cache writes
+            # (binary .spa by default; loads sniff both formats)
             [--metrics-json FILE]   # also dump the final metrics snapshot
             [--journal-enabled true --journal-path FILE.jsonl]   # append
             # live traffic (register/solve/update/cancel shape, matrix
@@ -258,6 +272,10 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     // artifacts; `solve --analysis FILE` then skips all of it.
     if let Some(out) = args.flag("save") {
         let spec = plan_flag(args, "avgcost")?;
+        let format = match args.flag("analysis-format") {
+            Some(f) => sptrsv_gt::analysis::AnalysisFormat::parse(f).map_err(anyhow::Error::msg)?,
+            None => sptrsv_gt::analysis::AnalysisFormat::default(),
+        };
         let opts = sptrsv_gt::analysis::AnalyzeOptions {
             workers: args.usize_flag("workers", 4)?,
             sched: sched_flags(args)?,
@@ -266,7 +284,7 @@ fn cmd_analyze(args: &Args) -> Result<()> {
         let start = std::time::Instant::now();
         let a = sptrsv_gt::analysis::analyze(&m, &spec, &opts)?;
         let dt = start.elapsed();
-        a.save(Path::new(out))?;
+        a.save_format(Path::new(out), format)?;
         let st = &a.transform().stats;
         println!(
             "analyzed {name}: plan={} levels {} -> {}, {} rows rewritten, analysis {dt:?}",
@@ -282,7 +300,7 @@ fn cmd_analyze(args: &Args) -> Result<()> {
             );
         }
         println!(
-            "saved analysis (fingerprint {}) -> {out}",
+            "saved {format} analysis (fingerprint {}) -> {out}",
             a.fingerprint()
         );
         return Ok(());
@@ -649,6 +667,76 @@ fn cmd_figures(args: &Args) -> Result<()> {
                 figures::sparkline(&s.level_costs, 80, log, clip)
             );
         }
+    }
+    Ok(())
+}
+
+fn cmd_artifact(args: &Args) -> Result<()> {
+    use sptrsv_gt::artifact::{container, ArtifactReader};
+    let usage = "usage: sptrsv artifact inspect|verify FILE.spa";
+    let action = args.positionals.first().map(String::as_str).unwrap_or("");
+    let file = args
+        .positionals
+        .get(1)
+        .map(String::as_str)
+        .or_else(|| args.flag("file"))
+        .with_context(|| usage.to_string())?;
+    match action {
+        "inspect" => {
+            let r = ArtifactReader::open(Path::new(file))?;
+            println!(
+                "{file}: format v{}, fingerprint {:016x}, {} rows, {} sections, {} bytes",
+                r.version(),
+                r.fingerprint(),
+                r.nrows(),
+                r.sections().len(),
+                r.total_len()
+            );
+            println!("  idx kind      offset      len        crc32     detail");
+            // SCHEDULE payloads lead with their worker count (raw
+            // little-endian u64) — surface it so an inspect shows which
+            // pool sizes warm-start without re-placing. sections_of
+            // yields payloads in file order, matching the table walk.
+            let mut placements = r.sections_of(container::SEC_SCHEDULE);
+            for (i, s) in r.sections().iter().enumerate() {
+                let detail = if s.kind == container::SEC_SCHEDULE {
+                    match placements.next().and_then(|p| p.get(..8)) {
+                        Some(head) => format!(
+                            "placement for {} workers",
+                            u64::from_le_bytes(head.try_into().unwrap())
+                        ),
+                        None => "placement (short payload)".to_string(),
+                    }
+                } else {
+                    String::new()
+                };
+                println!(
+                    "  [{i}] {:<9} {:>10} {:>10} {:#010x} {detail}",
+                    container::section_kind_name(s.kind),
+                    s.offset,
+                    s.len,
+                    s.crc
+                );
+            }
+        }
+        "verify" => {
+            // open() already validates everything the format guards:
+            // magic, version, the truncation guard, section bounds and
+            // alignment, and every section's CRC-32.
+            match ArtifactReader::open(Path::new(file)) {
+                Ok(r) => println!(
+                    "{file}: OK ({} sections, {} bytes, fingerprint {:016x})",
+                    r.sections().len(),
+                    r.total_len(),
+                    r.fingerprint()
+                ),
+                Err(e) => {
+                    eprintln!("{file}: FAILED: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        other => bail!("unknown artifact action '{other}'\n{usage}"),
     }
     Ok(())
 }

@@ -101,6 +101,9 @@ pub struct Event {
     pub interactive: bool,
     /// deadline budget relative to submission, when the request had one
     pub deadline_us: Option<u64>,
+    /// relative-residual tolerance the request stated, when it did
+    /// (`solve*`; additive field, schema stays at version 1)
+    pub tol: Option<f64>,
     /// tenant the request named explicitly, when it did
     pub tenant: Option<String>,
     /// [`matrix_digest`] of the payload (`register`/`update_values`)
@@ -149,6 +152,14 @@ impl Event {
         }
     }
 
+    /// Attach the tolerance a solve request stated, so replay can
+    /// regenerate toleranced traffic instead of flattening every capture
+    /// to exact solves.
+    pub fn with_tolerance(mut self, tol: Option<f64>) -> Event {
+        self.tol = tol.filter(|t| *t > 0.0);
+        self
+    }
+
     /// Attach the payload digests of the matrix this event carried.
     /// Hashing happens on the caller's thread (the service loop), but an
     /// FNV pass over the CSR arrays is linear and branch-free — noise
@@ -187,6 +198,9 @@ impl Event {
             if let Some(d) = self.deadline_us {
                 fields.push(("deadline_us", Json::Num(d as f64)));
             }
+            if let Some(t) = self.tol {
+                fields.push(("tol", Json::Num(t)));
+            }
             if let Some(t) = &self.tenant {
                 fields.push(("tenant", Json::Str(t.clone())));
             }
@@ -216,6 +230,7 @@ impl Event {
                 .get("deadline_us")
                 .and_then(Json::as_f64)
                 .map(|d| d as u64),
+            tol: j.get("tol").and_then(Json::as_f64).filter(|t| *t > 0.0),
             tenant: j
                 .get("tenant")
                 .and_then(Json::as_str)
@@ -374,7 +389,7 @@ mod tests {
         let p = tmp("rt.jsonl");
         let j = Journal::create(&p).unwrap();
         j.record(Event::register("m", 120, 456, "avgcost"));
-        j.record(Event::solve("m", 1, true, Some(5_000), None));
+        j.record(Event::solve("m", 1, true, Some(5_000), None).with_tolerance(Some(1e-6)));
         j.record(Event::solve("m", 4, false, None, Some("acme")));
         j.record(Event::update("m"));
         j.record(Event::cancel());
@@ -389,11 +404,15 @@ mod tests {
         assert!(recs[1].ev.interactive);
         assert_eq!(recs[1].ev.deadline_us, Some(5_000));
         assert_eq!(recs[1].ev.block, 1);
+        // The stated tolerance rides along; requests without one carry
+        // no `tol` field at all.
+        assert_eq!(recs[1].ev.tol, Some(1e-6));
         // Multi-RHS submissions journal as solve_many with their tenant.
         assert_eq!(recs[2].ev.kind, "solve_many");
         assert_eq!(recs[2].ev.block, 4);
         assert!(!recs[2].ev.interactive);
         assert_eq!(recs[2].ev.tenant.as_deref(), Some("acme"));
+        assert_eq!(recs[2].ev.tol, None);
         assert_eq!(recs[3].ev.kind, "update_values");
         assert_eq!(recs[4].ev.kind, "cancel");
         // Arrival offsets are monotone.

@@ -10,9 +10,10 @@
 //! `random` generator of the journaled dimensions (rows, and a
 //! dependency budget from the journaled nnz), keeps the journaled plan,
 //! and weights each matrix by its observed share of solve traffic. Lane
-//! mix, deadline distribution, block size, refresh cadence and mean
-//! arrival gap are all lifted from the event stream, so the replayed
-//! load exercises the same serving policies the live traffic did.
+//! mix, deadline distribution, tolerance mix, block size, refresh
+//! cadence and mean arrival gap are all lifted from the event stream, so
+//! the replayed load exercises the same serving policies the live
+//! traffic did.
 
 use std::path::Path;
 
@@ -72,6 +73,8 @@ fn scenario_from_records(records: &[Record], name: &str, path: &Path) -> Result<
     let mut block_size = 1usize;
     let mut updates = 0usize;
     let mut arrivals: Vec<u64> = Vec::new();
+    let mut with_tolerance = 0usize;
+    let mut tolerance_min = f64::INFINITY;
 
     for r in records {
         match r.ev.kind.as_str() {
@@ -104,6 +107,10 @@ fn scenario_from_records(records: &[Record], name: &str, path: &Path) -> Result<
                     with_deadline += 1;
                     deadline_min = deadline_min.min(d);
                     deadline_max = deadline_max.max(d);
+                }
+                if let Some(t) = r.ev.tol {
+                    with_tolerance += 1;
+                    tolerance_min = tolerance_min.min(t);
                 }
                 block_size = block_size.max(r.ev.block);
                 if let Some(m) = matrices.iter_mut().find(|m| m.id == r.ev.id) {
@@ -147,10 +154,14 @@ fn scenario_from_records(records: &[Record], name: &str, path: &Path) -> Result<
         requests: solves,
         matrices,
         interactive_fraction: interactive as f64 / solves as f64,
-        // The journal does not record per-request accuracy bounds, so
-        // reconstructed scenarios replay exact-only traffic.
-        tolerance_fraction: 0.0,
-        tolerance: 1e-8,
+        // Per-request accuracy bounds ride the journal's `tol` field:
+        // the replayed traffic states tolerances at the captured rate,
+        // bounded by the tightest tolerance any request stated (so the
+        // replay's accuracy ladder is stressed at least as hard as the
+        // live traffic stressed it). Captures from builds without the
+        // field — and exact-only traffic — replay with no tolerances.
+        tolerance_fraction: with_tolerance as f64 / solves as f64,
+        tolerance: if with_tolerance > 0 { tolerance_min } else { 1e-8 },
         deadline_fraction: with_deadline as f64 / solves as f64,
         deadline_min_us: if with_deadline > 0 { deadline_min } else { 1_000 },
         deadline_max_us: if with_deadline > 0 {
@@ -193,9 +204,9 @@ mod tests {
             &[
                 Event::register("hot", 200, 760, "avgcost"),
                 Event::register("cold", 80, 200, "none"),
-                Event::solve("hot", 1, true, Some(4_000), None),
+                Event::solve("hot", 1, true, Some(4_000), None).with_tolerance(Some(1e-6)),
                 Event::solve("hot", 1, false, Some(9_000), None),
-                Event::solve("hot", 2, false, None, Some("acme")),
+                Event::solve("hot", 2, false, None, Some("acme")).with_tolerance(Some(1e-9)),
                 Event::update("hot"),
                 Event::solve("cold", 1, true, None, None),
                 Event::cancel(),
@@ -223,6 +234,24 @@ mod tests {
         assert_eq!(sc.block_size, 2);
         assert_eq!(sc.refresh_every, 4);
         assert_eq!(sc.burst, 1);
+        // Toleranced traffic regenerates at the captured rate, at the
+        // tightest captured bound.
+        assert_eq!(sc.tolerance_fraction, 0.5);
+        assert_eq!(sc.tolerance, 1e-9);
+    }
+
+    #[test]
+    fn exact_only_captures_replay_without_tolerances() {
+        let p = capture(
+            "exact",
+            &[
+                Event::register("m", 40, 100, "none"),
+                Event::solve("m", 1, false, None, None),
+            ],
+        );
+        let sc = scenario_from_journal(&p, "exact").unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(sc.tolerance_fraction, 0.0);
     }
 
     #[test]

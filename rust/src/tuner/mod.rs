@@ -189,6 +189,10 @@ pub struct TunerOptions {
     /// a cached iterative decision is only reused when its certified
     /// tolerance covers this one. None keeps the portfolio exact.
     pub tolerance: Option<f64>,
+    /// right-hand sides per timed race iteration — the coordinator passes
+    /// its `batch_size` so candidates are ranked under the RHS block the
+    /// serving batcher actually presents
+    pub batch: usize,
 }
 
 impl Default for TunerOptions {
@@ -211,6 +215,7 @@ impl Default for TunerOptions {
             seed: 0x7E57,
             pool: None,
             tolerance: None,
+            batch: 1,
         }
     }
 }
@@ -464,6 +469,7 @@ impl Tuner {
             sched: self.opts.sched,
             pool: self.opts.pool.clone(),
             tolerance: self.opts.tolerance,
+            batch: self.opts.batch,
         };
         let mut outcome = race::race(m, &shortlist, &race_opts).map_err(Error::Runtime)?;
 

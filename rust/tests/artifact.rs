@@ -1,0 +1,236 @@
+//! Integration tests for the binary analysis artifact (`.spa`): the
+//! corruption ladder must surface *typed* [`ArtifactError`]s (and the
+//! analysis cache must treat every one of them as a miss, falling back
+//! to a fresh analysis — never an error), saved artifacts must solve
+//! bitwise-identically to the JSON persistence path, and a pool smaller
+//! than the one the analysis was placed for must adopt a stored
+//! placement instead of re-running coarsening or ETF placement.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use sptrsv_gt::analysis::{analyze, Analysis, AnalysisCache, AnalysisFormat, AnalyzeOptions};
+use sptrsv_gt::artifact::{container, ArtifactError, ArtifactReader, FORMAT_VERSION, MAGIC};
+use sptrsv_gt::error::Error;
+use sptrsv_gt::sched::SchedOptions;
+use sptrsv_gt::solver::pool::Pool;
+use sptrsv_gt::sparse::generate::{self, GenOptions};
+use sptrsv_gt::transform::PlanSpec;
+use sptrsv_gt::tuner::Fingerprint;
+use sptrsv_gt::util::rng::Rng;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("sptrsv_it_{name}_{}.spa", std::process::id()))
+}
+
+fn opts(workers: usize) -> AnalyzeOptions {
+    AnalyzeOptions {
+        workers,
+        ..Default::default()
+    }
+}
+
+/// A saved artifact plus the matrix it was analyzed from.
+fn saved(name: &str, plan: &str, workers: usize) -> (PathBuf, sptrsv_gt::sparse::Csr) {
+    let m = generate::lung2_like(&GenOptions::with_scale(0.04));
+    let a = analyze(&m, &PlanSpec::parse(plan).unwrap(), &opts(workers)).unwrap();
+    let path = tmp(name);
+    a.save_format(&path, AnalysisFormat::Binary).unwrap();
+    (path, m)
+}
+
+#[test]
+fn corruption_surfaces_typed_errors() {
+    let (path, m) = saved("corrupt", "avgcost+scheduled", 2);
+    let bytes = std::fs::read(&path).unwrap();
+
+    // Truncation: the header's total-length guard catches a short file.
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    match Analysis::load(&path, &m, &opts(2)) {
+        Err(Error::Artifact(ArtifactError::Truncated(_))) => {}
+        other => panic!("expected typed Truncated, got {other:?}", other = other.err()),
+    }
+
+    // A flipped payload byte: that section's CRC-32 must catch it. The
+    // first section's payload starts at its table offset.
+    let r = ArtifactReader::from_bytes(&bytes).unwrap();
+    let payload_off = r.sections()[0].offset as usize;
+    drop(r);
+    let mut bad = bytes.clone();
+    bad[payload_off] ^= 0x40;
+    std::fs::write(&path, &bad).unwrap();
+    match Analysis::load(&path, &m, &opts(2)) {
+        Err(Error::Artifact(ArtifactError::BadChecksum { .. })) => {}
+        other => panic!("expected typed BadChecksum, got {other:?}", other = other.err()),
+    }
+
+    // A future format version is refused before any payload is read.
+    let mut bad = bytes.clone();
+    bad[8] = FORMAT_VERSION as u8 + 9;
+    std::fs::write(&path, &bad).unwrap();
+    match Analysis::load(&path, &m, &opts(2)) {
+        Err(Error::Artifact(ArtifactError::BadVersion { expected, .. })) => {
+            assert_eq!(expected, FORMAT_VERSION);
+        }
+        other => panic!("expected typed BadVersion, got {other:?}", other = other.err()),
+    }
+
+    // Stale magic: the reader reports it as not-an-artifact. (The
+    // sniffing Analysis::load would route such a file to the JSON
+    // loader, so the typed check drives the reader directly — the path
+    // `artifact verify` takes.)
+    let mut bad = bytes.clone();
+    bad[..8].copy_from_slice(b"NOTSPTRS");
+    assert!(matches!(
+        ArtifactReader::from_bytes(&bad),
+        Err(ArtifactError::BadMagic)
+    ));
+    assert_ne!(&bad[..8], &MAGIC);
+
+    // A section offset knocked off the 8-byte grid the zero-copy views
+    // require (the table is not CRC'd — alignment is its own check).
+    let mut bad = bytes.clone();
+    let entry_off = container::HEADER_LEN + 8;
+    let mut off = u64::from_le_bytes(bad[entry_off..entry_off + 8].try_into().unwrap());
+    off += 4;
+    bad[entry_off..entry_off + 8].copy_from_slice(&off.to_le_bytes());
+    std::fs::write(&path, &bad).unwrap();
+    match Analysis::load(&path, &m, &opts(2)) {
+        Err(Error::Artifact(ArtifactError::Misaligned { section: 0, .. })) => {}
+        other => panic!("expected typed Misaligned, got {other:?}", other = other.err()),
+    }
+
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn cache_treats_corrupt_artifacts_as_misses_and_falls_back_fresh() {
+    let dir = std::env::temp_dir().join(format!("sptrsv_it_acache_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let cache = AnalysisCache::new(&dir);
+    let pool = Arc::new(Pool::new(2));
+    let m = Arc::new(generate::lung2_like(&GenOptions::with_scale(0.04)));
+    let fp = Fingerprint::of(&m);
+    let plan = sptrsv_gt::transform::SolvePlan::parse("avgcost+scheduled").unwrap();
+
+    let a = analyze(&m, &PlanSpec::parse("avgcost+scheduled").unwrap(), &opts(2)).unwrap();
+    cache.save(&a).unwrap();
+    let entry = cache.path_for(fp, &plan);
+    assert!(entry.exists());
+
+    // Corrupt the cached artifact in every class the reader types; a
+    // load must come back None (fall back to fresh analysis), never Err
+    // and never a panic.
+    let good = std::fs::read(&entry).unwrap();
+    // First section's payload offset: a guaranteed-checksummed byte (the
+    // file's very last bytes may be alignment padding, which no CRC
+    // covers).
+    let payload_off = ArtifactReader::from_bytes(&good).unwrap().sections()[0].offset as usize;
+    let corruptions: Vec<Vec<u8>> = vec![
+        // truncated
+        good[..good.len() / 3].to_vec(),
+        // future version
+        {
+            let mut b = good.clone();
+            b[8] = 77;
+            b
+        },
+        // payload bit rot
+        {
+            let mut b = good.clone();
+            b[payload_off] ^= 0xff;
+            b
+        },
+        // magic only, no header
+        b"SPTRSVA\0".to_vec(),
+    ];
+    for (i, bad) in corruptions.iter().enumerate() {
+        std::fs::write(&entry, bad).unwrap();
+        assert!(
+            cache
+                .load(Arc::clone(&m), fp, &plan, &pool, SchedOptions::default())
+                .is_none(),
+            "corruption {i} should be a miss"
+        );
+        // The fallback: a fresh analysis still serves and re-saving
+        // repairs the cache entry.
+        let fresh = analyze(&m, &PlanSpec::parse("avgcost+scheduled").unwrap(), &opts(2)).unwrap();
+        cache.save(&fresh).unwrap();
+        assert!(
+            cache
+                .load(Arc::clone(&m), fp, &plan, &pool, SchedOptions::default())
+                .is_some(),
+            "re-saved entry should hit again after corruption {i}"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn binary_load_solves_bitwise_like_the_json_path() {
+    // Property-style sweep: across structures and plans, a binary
+    // save->load must produce solutions bitwise identical to a JSON
+    // save->load of the same analysis (both replay the same skeleton
+    // through the same renumeric pass), with zero structural passes.
+    let dir = std::env::temp_dir();
+    for (i, (kind, plan)) in [
+        ("lung2", "avgcost+scheduled"),
+        ("lung2", "avgcost+levelset"),
+        ("torso2", "guarded:8+syncfree"),
+        ("tri", "manual:4+reorder"),
+        ("tri", "none"),
+    ]
+    .iter()
+    .enumerate()
+    {
+        let g = GenOptions::with_scale(0.03);
+        let m = match *kind {
+            "lung2" => generate::lung2_like(&g),
+            "torso2" => generate::torso2_like(&g),
+            _ => generate::tridiagonal(300, &Default::default()),
+        };
+        let a = analyze(&m, &PlanSpec::parse(plan).unwrap(), &opts(2)).unwrap();
+        let pj = dir.join(format!("sptrsv_it_eq_{i}_{}.analysis.json", std::process::id()));
+        let pb = dir.join(format!("sptrsv_it_eq_{i}_{}.spa", std::process::id()));
+        a.save_format(&pj, AnalysisFormat::Json).unwrap();
+        a.save_format(&pb, AnalysisFormat::Binary).unwrap();
+        let from_json = Analysis::load(&pj, &m, &opts(2)).unwrap();
+        let from_bin = Analysis::load(&pb, &m, &opts(2)).unwrap();
+        for (label, l) in [("json", &from_json), ("binary", &from_bin)] {
+            let c = l.rebuilds();
+            assert_eq!(c.rewrite_passes, 0, "{kind}+{plan} {label}: rewrite re-ran");
+            assert_eq!(c.coarsen_passes, 0, "{kind}+{plan} {label}: coarsen re-ran");
+            assert_eq!(c.placement_passes, 0, "{kind}+{plan} {label}: placement re-ran");
+            assert_eq!(c.renumeric_passes, 1, "{kind}+{plan} {label}: exactly one replay");
+        }
+        let mut rng = Rng::new(17 + i as u64);
+        for _ in 0..3 {
+            let b: Vec<f64> = (0..m.nrows).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let xb = from_bin.solve(&b);
+            assert_eq!(xb, from_json.solve(&b), "{kind}+{plan}: formats diverge");
+            assert!(m.residual_inf(&xb, &b) < 1e-9, "{kind}+{plan}");
+        }
+        std::fs::remove_file(&pj).ok();
+        std::fs::remove_file(&pb).ok();
+    }
+}
+
+#[test]
+fn smaller_pool_adopts_a_stored_placement_without_replacing() {
+    // The acceptance path: an artifact placed for W workers warm-starts
+    // a W-1 pool from the stored W-1 placement — zero coarsening, zero
+    // placement, and the adopted schedule actually runs at W-1.
+    let (path, m) = saved("shrink", "avgcost+scheduled", 4);
+    let r = ArtifactReader::open(&path).unwrap();
+    // One SCHEDULE section per stored worker count: 4, 3, 2, 1.
+    assert_eq!(r.sections_of(container::SEC_SCHEDULE).count(), 4);
+    drop(r);
+    let loaded = Analysis::load(&path, &m, &opts(3)).unwrap();
+    let c = loaded.rebuilds();
+    assert_eq!(c.coarsen_passes, 0, "W-1 load re-ran coarsening");
+    assert_eq!(c.placement_passes, 0, "W-1 load re-ran placement");
+    assert_eq!(loaded.schedule().unwrap().nworkers, 3);
+    let b = vec![1.0; m.nrows];
+    assert!(m.residual_inf(&loaded.solve(&b), &b) < 1e-9);
+    std::fs::remove_file(&path).ok();
+}

@@ -8,7 +8,7 @@
 //! the shard's analysis-cache subdirectory — observable as flat
 //! coarsen/placement counters across the crash.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use sptrsv_gt::config::Config;
 use sptrsv_gt::coordinator::{RegisterOptions, Service, SolveOptions};
@@ -250,6 +250,34 @@ fn residual_certificates_survive_the_shard_wire() {
         other => panic!("expected AccuracyUnsatisfiable over the wire, got {other:?}"),
     }
     svc.shutdown();
+}
+
+#[test]
+fn planned_shutdown_drains_workers_without_burning_the_deadline() {
+    use sptrsv_gt::exec_tier::{Executor, ShardPoolExecutor};
+    let cfg = sharded_cfg();
+    let timeout_ms = cfg.shard_timeout_ms;
+    let mut pool = ShardPoolExecutor::start(cfg, 2).unwrap();
+    let m = generate::random_lower(60, 2, 0.8, &Default::default());
+    let b = vec![1.0; 60];
+    pool.register("d", m.clone(), &spec("none")).unwrap();
+    let out = pool.solve_block("d", &[b.clone()], None).unwrap();
+    assert!(m.residual_inf(&out.xs[0], &b) < 1e-9);
+
+    // Drain-based shutdown ends on each worker's bye-ack, so it returns
+    // far inside the per-shard `shard_timeout_ms` deadline. A supervisor
+    // that never recognized the ack would sit out the full deadline per
+    // shard (2 x 20s here) before killing.
+    let t = Instant::now();
+    pool.shutdown();
+    let elapsed = t.elapsed();
+    assert!(
+        elapsed < Duration::from_millis(timeout_ms / 2),
+        "drained shutdown took {elapsed:?}, suspiciously close to the {timeout_ms}ms deadline"
+    );
+    // Idempotent: a second shutdown (and the eventual Drop) finds every
+    // slot already reaped and returns immediately.
+    pool.shutdown();
 }
 
 #[test]
